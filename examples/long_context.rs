@@ -1,0 +1,108 @@
+//! Long-context scenario: what INT8 caching buys as sequences grow.
+//!
+//! Walks the Table-1 memory model across context lengths, then drives the
+//! paged cache manager through a grow-until-full + admission-control
+//! episode, including a prefix-shared fork (parallel sampling).
+//!
+//! ```text
+//! cargo run --release --example long_context
+//! ```
+
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+use kvq::kvcache::{MemoryModel, Precision};
+use kvq::quant::Fp32Matrix;
+use kvq::util::harness::Table;
+use kvq::util::stats::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Context-length sweep on the Table-1 model.
+    let mut t = Table::new(
+        "KV cache size vs context length (L=32 H=32 d=128)",
+        &["T", "fp32", "fp16", "int8", "int4", "int8 fits 16GB?"],
+    );
+    for tl in [4096usize, 16384, 32768, 131_072, 524_288, 1_048_576] {
+        let base = MemoryModel { seq_len: tl, ..MemoryModel::table1_example() };
+        let int8 = MemoryModel { precision: Precision::Int8, ..base };
+        let int4 = MemoryModel { precision: Precision::Int4, ..base };
+        t.row(&[
+            tl.to_string(),
+            fmt_bytes(base.total_bytes() as f64),
+            fmt_bytes((base.elements() * 2) as f64),
+            fmt_bytes(int8.total_bytes() as f64),
+            fmt_bytes(int4.total_bytes() as f64),
+            if int8.total_bytes() <= 16 << 30 { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.print();
+
+    // 2. Live paged cache: admit sequences until the watermark bites.
+    let cfg = CacheConfig {
+        layers: 4,
+        heads: 8,
+        head_dim: 32,
+        max_seq: 512,
+        block_size: 16,
+        num_blocks: 512,
+        precision: Precision::Int8,
+        scale_margin: 1.0,
+    };
+    let mut mgr = KvCacheManager::new(cfg);
+    println!(
+        "\npool: {} blocks ({}), {} blocks per full sequence",
+        cfg.num_blocks,
+        fmt_bytes(mgr.storage_bytes() as f64),
+        cfg.blocks_for_tokens(cfg.max_seq)
+    );
+
+    let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
+    let kc = Fp32Matrix::random_normal(1, n, 1.0, 1).data;
+    let vc = Fp32Matrix::random_normal(1, n, 1.0, 2).data;
+    let mut admitted = Vec::new();
+    let prompt_len = 400;
+    loop {
+        if !mgr.can_admit(prompt_len) {
+            println!(
+                "admission stops at {} sequences ({:.0}% utilization) — backpressure engages",
+                admitted.len(),
+                mgr.utilization() * 100.0
+            );
+            break;
+        }
+        let id = mgr.new_sequence();
+        mgr.set_prefill(id, &kc, &vc, prompt_len)?;
+        admitted.push(id);
+    }
+
+    // 3. Prefix sharing: fork the first sequence 3 ways (costs ~0 blocks
+    //    until the forks diverge).
+    let free_before = mgr.free_blocks();
+    let forks: Vec<_> = (0..3).map(|_| mgr.fork(admitted[0]).unwrap()).collect();
+    println!(
+        "forked 3 continuations off seq {}: {} blocks consumed (copy-on-write)",
+        admitted[0],
+        free_before - mgr.free_blocks()
+    );
+    // Diverge one fork: appends trigger COW on the tail block only.
+    let row = vec![0.1f32; cfg.layers * cfg.heads * cfg.head_dim];
+    mgr.append_row(forks[0], &row, &row)?;
+    println!(
+        "after 1 divergent token on fork 0: {} blocks consumed",
+        free_before - mgr.free_blocks()
+    );
+
+    // 4. Finish a request -> blocks return -> next admission succeeds.
+    mgr.free(admitted.pop().unwrap());
+    println!(
+        "freed one sequence -> can_admit({prompt_len}) = {}",
+        mgr.can_admit(prompt_len)
+    );
+    for id in admitted {
+        mgr.free(id);
+    }
+    for id in forks {
+        mgr.free(id);
+    }
+    assert_eq!(mgr.free_blocks(), cfg.num_blocks);
+    println!("all sequences freed; pool fully recovered ✓");
+    Ok(())
+}

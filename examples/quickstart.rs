@@ -1,0 +1,72 @@
+//! Quickstart: the kvq library in 60 seconds.
+//!
+//! Quantize a synthetic KV matrix, inspect the paper's three error
+//! metrics, check the memory saving, and round-trip through the paged
+//! cache manager. Run with:
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+use kvq::kvcache::{MemoryModel, Precision};
+use kvq::quant::{self, Fp32Matrix};
+use kvq::util::stats::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A synthetic key matrix: 4096 cached tokens, head dim 256,
+    //    values in U(-1, 1) like the paper's benchmarks.
+    let k = Fp32Matrix::random_uniform(4096, 256, -1.0, 1.0, 42);
+    println!("K: {}x{} ({})", k.rows, k.cols, fmt_bytes(k.size_bytes() as f64));
+
+    // 2. Per-channel INT8 quantization (eq. 6 + eq. 7 in one call).
+    let q = quant::quantize_fused(&k);
+    println!(
+        "quantized: {} (payload {:.2}x smaller)",
+        fmt_bytes(q.size_bytes() as f64),
+        q.compression_ratio()
+    );
+
+    // 3. The paper's three error metrics (§7.2, §7.3).
+    let rec = quant::dequantize(&q);
+    let queries = Fp32Matrix::random_uniform(64, 256, -1.0, 1.0, 7);
+    println!("max abs error   : {:.5}  (paper: ≈0.00394 for U(-1,1))",
+        quant::max_abs_error(&k, &rec));
+    println!("L2 error        : {:.3}", quant::l2_error(&k, &rec));
+    println!("attention error : {:.5}  (paper: <0.1 up to D=8192)",
+        quant::attention_score_error(&queries, &k, &rec));
+
+    // 4. What this buys at LLM scale — the Table-1 memory model.
+    let fp32 = MemoryModel::table1_example();
+    let int8 = MemoryModel { precision: Precision::Int8, ..fp32 };
+    println!("\nTable-1 model (L=32 H=32 d=128 T=131072):");
+    println!("  fp32 cache: {}", fmt_bytes(fp32.total_bytes() as f64));
+    println!("  int8 cache: {} ({:.2}x)", fmt_bytes(int8.total_bytes() as f64),
+        int8.compression_vs_fp32());
+
+    // 5. The serving-side cache: paged, INT8, frozen prefill scales.
+    let cfg = CacheConfig {
+        layers: 2,
+        heads: 4,
+        head_dim: 64,
+        max_seq: 128,
+        block_size: 16,
+        num_blocks: 256,
+        precision: Precision::Int8,
+        scale_margin: 1.0,
+    };
+    let mut mgr = KvCacheManager::new(cfg);
+    let id = mgr.new_sequence();
+    let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
+    let kc = Fp32Matrix::random_normal(1, n, 1.0, 1).data;
+    let vc = Fp32Matrix::random_normal(1, n, 1.0, 2).data;
+    mgr.set_prefill(id, &kc, &vc, 100)?;
+    println!(
+        "\npaged cache: seq of 100 tokens -> {} blocks used, {:.1}% utilization",
+        cfg.num_blocks - mgr.free_blocks(),
+        mgr.utilization() * 100.0
+    );
+    mgr.free(id);
+    println!("freed -> {} blocks free", mgr.free_blocks());
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! **The end-to-end driver** (DESIGN.md §e2e): bring up the full serving
+//! stack — AOT artifacts via PJRT, paged INT8 KV cache, continuous
+//! batcher, HTTP front end — serve a batch of real HTTP requests, and
+//! report latency/throughput, comparing INT8 against the FP32-cache
+//! baseline engine behind the same router.
+//!
+//! ```text
+//! cargo run --release --example serve_demo            # kvq-3m
+//! cargo run --release --example serve_demo -- --model kvq-25m --requests 12
+//! ```
+//!
+//! Requires `make artifacts`. Results are recorded in EXPERIMENTS.md §E2E.
+
+use kvq::coordinator::batcher::BatcherConfig;
+use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::kvcache::Precision;
+use kvq::model::runner::{DecodeKernel, PjrtBackend};
+use kvq::runtime::Runtime;
+use kvq::server::http::{http_request, HttpServer};
+use kvq::server::KvqService;
+use kvq::util::args::Args;
+use kvq::util::json::Json;
+use kvq::util::stats::Summary;
+use std::rc::Rc;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let model = args.str_or("model", "kvq-3m");
+    let n_requests = args.usize_or("requests", 8);
+    let max_new = args.usize_or("max-new", 32);
+
+    println!("== kvq serve_demo: model={model}, {n_requests} HTTP requests, {max_new} tokens each ==\n");
+
+    // Two engines behind one router: INT8 cache vs FP32 cache.
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    let mut handles = Vec::new();
+    for precision in [Precision::Int8, Precision::Fp32] {
+        let dir = kvq::runtime::default_artifact_dir();
+        let m = model.clone();
+        let (h, join) = engine::spawn(
+            EngineConfig {
+                precision,
+                batcher: BatcherConfig { max_prefills_per_step: 2, ..Default::default() },
+                ..Default::default()
+            },
+            move || {
+                let rt = Rc::new(Runtime::new(&dir)?);
+                Ok(Box::new(PjrtBackend::new(rt, &m, 0xA11CE, DecodeKernel::PlainXla)?)
+                    as Box<dyn kvq::model::LmBackend>)
+            },
+        );
+        router.add_engine(precision.name(), h.clone());
+        handles.push((h, join));
+    }
+
+    // HTTP server on an ephemeral port.
+    let service = Arc::new(KvqService::new(Arc::new(router)));
+    let server = HttpServer::bind(0)?;
+    let port = server.local_port();
+    let stop = server.shutdown_handle();
+    let svc = service.clone();
+    let server_thread = std::thread::spawn(move || server.serve(move |req| svc.handle(req)));
+    println!("HTTP server on 127.0.0.1:{port}");
+
+    let prompts = [
+        "the key value cache grows linearly with sequence length",
+        "quantization maps floating point values to integers",
+        "per channel scales preserve precision across dimensions",
+        "memory bandwidth dominates elementwise kernels",
+        "vectorized loads improve effective throughput",
+        "paged attention reduces memory fragmentation",
+        "int8 compression yields four times smaller caches",
+        "attention scores are robust to small key perturbations",
+    ];
+
+    let mut report = Vec::new();
+    for engine_name in ["int8", "fp32"] {
+        let t0 = Instant::now();
+        let mut threads = Vec::new();
+        for i in 0..n_requests {
+            let prompt = prompts[i % prompts.len()].to_string();
+            let en = engine_name.to_string();
+            threads.push(std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt":"{prompt}","max_new_tokens":{max_new},"engine":"{en}"}}"#
+                );
+                let t = Instant::now();
+                let (status, resp) =
+                    http_request(port, "POST", "/generate", Some(&body)).expect("http");
+                (status, resp, t.elapsed().as_secs_f64())
+            }));
+        }
+        let mut lat = Summary::new();
+        let mut ttft = Summary::new();
+        let mut tokens_total = 0usize;
+        let mut sample_text = String::new();
+        for th in threads {
+            let (status, resp, secs) = th.join().unwrap();
+            assert_eq!(status, 200, "bad response: {resp}");
+            let j = Json::parse(&resp).expect("json");
+            tokens_total += j.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
+            ttft.add(j.get("ttft_s").as_f64().unwrap_or(0.0));
+            lat.add(secs);
+            if sample_text.is_empty() {
+                sample_text = j.get("text").as_str().unwrap_or("").chars().take(40).collect();
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let thpt = tokens_total as f64 / wall;
+        println!(
+            "\n[{engine_name}] {} tokens in {:.2}s -> {:.1} tok/s | \
+             latency p50 {:.0}ms p99 {:.0}ms | ttft p50 {:.0}ms",
+            tokens_total,
+            wall,
+            thpt,
+            lat.percentile(50.0) * 1e3,
+            lat.percentile(99.0) * 1e3,
+            ttft.percentile(50.0) * 1e3,
+        );
+        println!("[{engine_name}] sample output: {sample_text:?}");
+        report.push((engine_name, thpt, tokens_total));
+    }
+
+    // Metrics endpoint exercise.
+    let (status, metrics) = http_request(port, "GET", "/metrics", None)?;
+    assert_eq!(status, 200);
+    let j = Json::parse(&metrics)?;
+    println!("\n/metrics: {} engines reporting", j.get("engines").as_arr().unwrap().len());
+    for e in j.get("engines").as_arr().unwrap() {
+        println!(
+            "  {}: steps={} finished={} tok/s={:.1} cache_util={:.2}",
+            e.get("engine").as_str().unwrap_or("?"),
+            e.get("engine_steps").as_usize().unwrap_or(0),
+            e.get("requests_finished").as_usize().unwrap_or(0),
+            e.get("tokens_per_sec").as_f64().unwrap_or(0.0),
+            e.get("cache_utilization").as_f64().unwrap_or(0.0),
+        );
+    }
+
+    println!(
+        "\nINT8 vs FP32 throughput: {:.1} vs {:.1} tok/s (identical math modulo cache \
+         precision; INT8 additionally holds a 4x smaller cache — see `kvq memory`)",
+        report[0].1, report[1].1
+    );
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    server_thread.join().ok();
+    for (h, join) in handles {
+        h.drain();
+        join.join().ok();
+    }
+    println!("\nserve_demo complete ✓");
+    Ok(())
+}

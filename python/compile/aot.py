@@ -1,0 +1,263 @@
+"""AOT lowering: jax/Pallas entry points → artifacts/*.hlo.txt + manifest.
+
+The interchange format is **HLO text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. Lowering goes through
+stablehlo → XlaComputation with ``return_tuple=True``; the Rust side
+unwraps with ``decompose_tuple``.
+
+Entry points:
+
+* per bench shape (configs/bench_shapes.json, ci + paper):
+  ``scales``, ``quantize_{naive,tiled,coarsened,vectorized}``,
+  ``dequantize_{...}``, ``quantize_fused`` (single-pass Pallas),
+  ``quantize_ref`` (pure-jnp, XLA-codegen ablation baseline),
+  ``attnerr`` (Fig-4 attention-score-error probe, token-subsampled).
+* per model config: ``prefill``, ``decode`` (plain-XLA history attention)
+  and ``decode_pallas`` (fused Pallas dequant-attention history).
+
+The manifest (artifacts/manifest.json) records every entry's input/output
+dtypes+shapes plus the model param ABI so the Rust runtime can validate
+literals before execution.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--shapes ci|paper|all]
+        [--models kvq-3m,kvq-25m] [--quick]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .kernels import quant as kernels
+from .kernels import ref
+
+# Number of query rows for the attention-error probe (Fig 4 right panel).
+ATTNERR_QUERIES = 64
+# Token-row cap for the probe: qK^T at full T=131072, D=8192 is ~68 GFLOP —
+# minutes on this 1-core box. The metric is a mean over (query, token)
+# pairs, so a uniform row subsample is an unbiased estimator of it.
+ATTNERR_MAX_TOKENS = 8192
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    return [{"dtype": str(a.dtype), "shape": list(a.shape)} for a in avals]
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, fn, arg_specs, kind: str, meta=None):
+        """Lower ``fn`` at ``arg_specs`` (ShapeDtypeStructs) and record it."""
+        path = f"{name}.hlo.txt"
+        full = os.path.join(self.out_dir, path)
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        out_avals = jax.eval_shape(fn, *arg_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        text = to_hlo_text(lowered)
+        with open(full, "w") as f:
+            f.write(text)
+        self.entries.append(
+            {
+                "name": name,
+                "path": path,
+                "kind": kind,
+                "inputs": _sig(arg_specs),
+                "outputs": _sig(out_avals),
+                "meta": meta or {},
+            }
+        )
+        print(f"  lowered {name:42s} {time.time() - t0:6.2f}s "
+              f"({len(text) // 1024} KiB)", flush=True)
+
+    def write_manifest(self, extra):
+        man = {"version": 1, "entries": self.entries}
+        man.update(extra)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(man, f, indent=1)
+        print(f"manifest: {len(self.entries)} entries")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_shape_entries(b: Builder, t: int, d: int, tag: str):
+    """All kernel entry points for one (T, D) bench shape."""
+    b.add(f"scales_{tag}", kernels.compute_scales, [f32(t, d)],
+          "scales", {"tokens": t, "dim": d})
+    for variant, (qf, df) in kernels.VARIANTS.items():
+        b.add(f"quantize_{variant}_{tag}", qf, [f32(t, d), f32(d)],
+              "quantize", {"variant": variant, "tokens": t, "dim": d})
+        b.add(f"dequantize_{variant}_{tag}", df, [i8(t, d), f32(d)],
+              "dequantize", {"variant": variant, "tokens": t, "dim": d})
+    b.add(f"quantize_fused_{tag}", kernels.quantize_fused, [f32(t, d)],
+          "quantize_fused", {"tokens": t, "dim": d})
+    b.add(f"quantize_ref_{tag}", ref.quantize_fused, [f32(t, d)],
+          "quantize_ref", {"tokens": t, "dim": d})
+    tsub = min(t, ATTNERR_MAX_TOKENS)
+    b.add(
+        f"attnerr_{tag}",
+        model_mod.attention_error_probe,
+        [f32(ATTNERR_QUERIES, d), f32(tsub, d), i8(tsub, d), f32(d)],
+        "attnerr",
+        {"tokens": t, "dim": d, "probe_tokens": tsub,
+         "queries": ATTNERR_QUERIES},
+    )
+
+
+def build_model_entries(b: Builder, spec: model_mod.ModelSpec):
+    """prefill / decode / decode_pallas for one model config."""
+    pspecs = [f32(*shape) for _, shape in spec.param_specs()]
+    s, l_, h, dh = spec.max_seq, spec.layers, spec.heads, spec.head_dim
+    v = spec.vocab
+    meta = {
+        "model": spec.name,
+        "vocab": v, "layers": l_, "heads": h, "head_dim": dh,
+        "d_ff": spec.d_ff, "max_seq": s, "block_size": spec.block_size,
+        "params": [{"name": n, "shape": list(sh)}
+                   for n, sh in spec.param_specs()],
+    }
+    b.add(
+        f"prefill_{spec.name}",
+        lambda *a: model_mod.prefill(spec, a[:-2], a[-2], a[-1]),
+        pspecs + [i32(s), i32()],
+        "prefill",
+        meta,
+    )
+    # Bucketed prefill variants: prompts are padded to the smallest bucket
+    # >= len instead of max_seq, cutting O(S²) prefill cost for short
+    # prompts (the L3 perf pass's TTFT optimization — EXPERIMENTS.md §Perf).
+    bucket = 64
+    while bucket < s:
+        b.add(
+            f"prefill_{spec.name}_s{bucket}",
+            lambda *a, bk=bucket: model_mod.prefill(spec, a[:-2], a[-2], a[-1]),
+            pspecs + [i32(bucket), i32()],
+            "prefill_bucket",
+            {**meta, "bucket": bucket},
+        )
+        bucket *= 2
+    cache = [i8(l_, h, s, dh), f32(l_, h, dh), i8(l_, h, s, dh), f32(l_, h, dh)]
+    b.add(
+        f"decode_{spec.name}",
+        lambda *a: model_mod.decode_step(spec, a[:-6], a[-6], a[-5],
+                                         a[-4], a[-3], a[-2], a[-1]),
+        pspecs + [i32(), i32()] + cache,
+        "decode",
+        meta,
+    )
+    b.add(
+        f"decode_pallas_{spec.name}",
+        lambda *a: model_mod.decode_step_pallas(spec, a[:-6], a[-6], a[-5],
+                                                a[-4], a[-3], a[-2], a[-1]),
+        pspecs + [i32(), i32()] + cache,
+        "decode_pallas",
+        meta,
+    )
+    cache32 = [f32(l_, h, s, dh), f32(l_, h, s, dh)]
+    b.add(
+        f"decode_fp32_{spec.name}",
+        lambda *a: model_mod.decode_step_fp32(spec, a[:-4], a[-4], a[-3],
+                                              a[-2], a[-1]),
+        pspecs + [i32(), i32()] + cache32,
+        "decode_fp32",
+        meta,
+    )
+
+
+def load_shapes_config():
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "..", "..", "configs", "bench_shapes.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--shapes", default="all", choices=["ci", "paper", "all"])
+    p.add_argument("--models", default="kvq-3m,kvq-25m")
+    p.add_argument("--quick", action="store_true",
+                   help="single small shape + tiny model (test runs)")
+    args = p.parse_args(argv)
+
+    cfg = load_shapes_config()
+    b = Builder(args.out_dir)
+
+    shape_sets = []
+    if args.quick:
+        shape_sets = [("ci", [cfg["ci"][0]])]
+        model_names = ["kvq-3m"]
+    else:
+        if args.shapes in ("ci", "all"):
+            shape_sets.append(("ci", cfg["ci"]))
+        if args.shapes in ("paper", "all"):
+            shape_sets.append(("paper", cfg["paper"]))
+        model_names = [m for m in args.models.split(",") if m]
+
+    seen = set()
+    shape_index = []
+    for setname, shapes in shape_sets:
+        for sh in shapes:
+            t, d = sh["tokens"], sh["dim"]
+            tag = f"{t}x{d}"
+            shape_index.append(
+                {"set": setname, "name": sh["name"], "tokens": t,
+                 "dim": d, "tag": tag, "desc": sh.get("desc", "")})
+            if tag in seen:
+                continue
+            seen.add(tag)
+            print(f"[shape {tag}]", flush=True)
+            build_shape_entries(b, t, d, tag)
+
+    models_meta = []
+    for mc in cfg["models"]:
+        if mc["name"] not in model_names:
+            continue
+        spec = model_mod.ModelSpec(
+            name=mc["name"], vocab=mc["vocab"], layers=mc["layers"],
+            heads=mc["heads"], head_dim=mc["head_dim"], d_ff=mc["d_ff"],
+            max_seq=mc["max_seq"], block_size=mc["block_size"])
+        print(f"[model {spec.name}]", flush=True)
+        build_model_entries(b, spec)
+        models_meta.append(mc)
+
+    b.write_manifest({"shapes": shape_index, "models": models_meta})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

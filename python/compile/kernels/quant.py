@@ -1,0 +1,409 @@
+"""Pallas kernels for per-channel INT8 KV-cache quantization.
+
+The paper implements four CUDA kernel variants — naive, tiled, coarsened,
+vectorized — distinguished by how they map work onto the GPU memory
+hierarchy. On TPU-shaped hardware the analogous levers are the Pallas grid
+and BlockSpecs (the HBM↔VMEM schedule), so each variant here re-expresses
+the same insight (DESIGN.md §Hardware-Adaptation):
+
+* ``quantize_naive``      — small (Rt, Dt) blocks on a 2-D grid, and the
+  *full* scales row shipped to VMEM on every grid step: the analog of every
+  CUDA thread redundantly loading scales from global memory.
+* ``quantize_tiled``      — same 2-D grid, but scales get their own (1, Dt)
+  BlockSpec whose index map depends only on the column coordinate: the tile
+  is staged once per column strip and reused across the row dimension —
+  the shared-memory staging analog.
+* ``quantize_coarsened``  — 1-D grid over column strips; each step owns the
+  whole (T, Dt) strip: one scale fetch amortized over many rows, the
+  thread-coarsening analog.
+* ``quantize_vectorized`` — 1-D grid over row strips with full-width
+  (Rt, D) lane-aligned blocks: the widest legal memory transactions, the
+  float4/char4 analog.
+
+All kernels are lowered with ``interpret=True`` so they become plain HLO and
+run on any PJRT backend (the CPU plugin cannot execute Mosaic custom-calls);
+real-TPU performance is estimated in DESIGN.md §Perf from VMEM footprints.
+
+Rounding is half-away-from-zero (see ref.py) and results are clamped to
+[-127, 127]; zero-scale (all-zero) columns quantize to 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QMAX = 127.0
+
+# Variant registry: name -> (quantize_fn, dequantize_fn). Populated at the
+# bottom of this module; aot.py and the tests iterate over it.
+VARIANTS = {}
+
+
+def _round_half_away(x):
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def _quant_block(vals, scales):
+    """Shared per-block math: divide, round, clamp, zero-scale guard."""
+    vals = vals.astype(jnp.float32)
+    safe = jnp.where(scales > 0.0, scales, 1.0)
+    q = _round_half_away(vals / safe)
+    q = jnp.clip(q, -QMAX, QMAX)
+    q = jnp.where(scales > 0.0, q, 0.0)
+    return q.astype(jnp.int8)
+
+
+def _pick_tile(n, target):
+    """Largest divisor of ``n`` that is <= target (>=1). Keeps blocks legal
+    for arbitrary shapes without masking logic in every kernel."""
+    t = min(n, target)
+    while n % t:
+        t -= 1
+    return t
+
+
+def _grid_tile(n, parts, floor):
+    """Tile size that splits ``n`` into about ``parts`` grid steps, but
+    never below ``floor`` elements per tile.
+
+    Substrate note (DESIGN.md §Hardware-Adaptation): on a real GPU the
+    paper's naive kernel launches T·D threads that run *in parallel*; under
+    interpret-mode lowering the grid becomes a **sequential** XLA while
+    loop whose per-step cost includes a full output-buffer carry. Keeping
+    the step count bounded (≈``parts``² for 2-D grids) preserves each
+    variant's relative granularity — naive/tiled still take ~16× more grid
+    steps and re-fetch scales redundantly compared to vectorized — without
+    the O(steps × T × D) blow-up that a thread-per-element grid would cost
+    on this substrate.
+    """
+    return _pick_tile(n, max(floor, -(-n // parts)))
+
+
+# ---------------------------------------------------------------------------
+# Scale computation — one pass of column-wise abs-max (Algorithm 1).
+# ---------------------------------------------------------------------------
+
+
+def compute_scales(k, *, row_parts=16, col_parts=4):
+    """Per-channel scales via a tiled abs-max reduction.
+
+    Grid is (column strips, row strips) with rows innermost so each column
+    strip's running max accumulates in its VMEM-resident output block — the
+    Pallas analog of the paper's suggested ``__shfl_down_sync`` reduction
+    tree (future work §8.2), expressed as a block-level reduction instead.
+    """
+    t, d = k.shape
+    rt = _grid_tile(t, row_parts, 256)
+    dt = _grid_tile(d, col_parts, 128)
+
+    def kernel(k_ref, out_ref):
+        r = pl.program_id(1)
+        block_max = jnp.max(jnp.abs(k_ref[...].astype(jnp.float32)), axis=0)
+
+        @pl.when(r == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        out_ref[...] = jnp.maximum(out_ref[...], block_max[None, :])
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(d // dt, t // rt),
+        in_specs=[pl.BlockSpec((rt, dt), lambda c, r: (r, c))],
+        out_specs=pl.BlockSpec((1, dt), lambda c, r: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=True,
+    )(k)
+    return out[0] / QMAX
+
+
+# ---------------------------------------------------------------------------
+# Quantize variants.
+# ---------------------------------------------------------------------------
+
+
+def quantize_naive(k, scales, *, row_parts=16, col_parts=16):
+    """2-D grid of small blocks; full scales row refetched every step."""
+    t, d = k.shape
+    rt = _grid_tile(t, row_parts, 8)
+    dt = _grid_tile(d, col_parts, 128)
+
+    def kernel(k_ref, s_ref, o_ref):
+        c = pl.program_id(1)
+        # The whole (1, D) scales row is resident; slice out our strip —
+        # the redundant-load pattern of the paper's naive kernel.
+        s = jax.lax.dynamic_slice(s_ref[...], (0, c * dt), (1, dt))
+        o_ref[...] = _quant_block(k_ref[...], s)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(t // rt, d // dt),
+        in_specs=[
+            pl.BlockSpec((rt, dt), lambda r, c: (r, c)),
+            pl.BlockSpec((1, d), lambda r, c: (0, 0)),  # full row, every step
+        ],
+        out_specs=pl.BlockSpec((rt, dt), lambda r, c: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.int8),
+        interpret=True,
+    )(k, scales.reshape(1, d))
+
+
+def quantize_tiled(k, scales, *, row_parts=16, col_parts=16):
+    """2-D grid; scales tile staged per column strip and reused across rows."""
+    t, d = k.shape
+    rt = _grid_tile(t, row_parts, 8)
+    dt = _grid_tile(d, col_parts, 128)
+
+    def kernel(k_ref, s_ref, o_ref):
+        o_ref[...] = _quant_block(k_ref[...], s_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(d // dt, t // rt),  # rows innermost: scale tile reused in VMEM
+        in_specs=[
+            pl.BlockSpec((rt, dt), lambda c, r: (r, c)),
+            pl.BlockSpec((1, dt), lambda c, r: (0, c)),  # staged per strip
+        ],
+        out_specs=pl.BlockSpec((rt, dt), lambda c, r: (r, c)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.int8),
+        interpret=True,
+    )(k, scales.reshape(1, d))
+
+
+def quantize_coarsened(k, scales, *, col_parts=8):
+    """1-D grid over column strips; each step owns the whole strip."""
+    t, d = k.shape
+    dt = _grid_tile(d, col_parts, 128)
+
+    def kernel(k_ref, s_ref, o_ref):
+        o_ref[...] = _quant_block(k_ref[...], s_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(d // dt,),
+        in_specs=[
+            pl.BlockSpec((t, dt), lambda c: (0, c)),
+            pl.BlockSpec((1, dt), lambda c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((t, dt), lambda c: (0, c)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.int8),
+        interpret=True,
+    )(k, scales.reshape(1, d))
+
+
+def quantize_vectorized(k, scales, *, row_parts=1):
+    """1-D grid over row strips with full-width lane-aligned blocks."""
+    t, d = k.shape
+    rt = _grid_tile(t, row_parts, 8)
+
+    def kernel(k_ref, s_ref, o_ref):
+        o_ref[...] = _quant_block(k_ref[...], s_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=(t // rt,),
+        in_specs=[
+            pl.BlockSpec((rt, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rt, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.int8),
+        interpret=True,
+    )(k, scales.reshape(1, d))
+
+
+# ---------------------------------------------------------------------------
+# Dequantize variants (mirrors of the above; naive + vectorized cover the
+# paper's measured dequant path, coarsened/tiled included for symmetry).
+# ---------------------------------------------------------------------------
+
+
+def _dequant_call(k8, scales, grid, in_specs, out_specs):
+    t, d = k8.shape
+
+    def kernel(q_ref, s_ref, o_ref):
+        o_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(k8, scales.reshape(1, d))
+
+
+def dequantize_naive(k8, scales, *, row_parts=16, col_parts=16):
+    t, d = k8.shape
+    rt, dt = _grid_tile(t, row_parts, 8), _grid_tile(d, col_parts, 128)
+    return _dequant_call(
+        k8,
+        scales,
+        (t // rt, d // dt),
+        [
+            pl.BlockSpec((rt, dt), lambda r, c: (r, c)),
+            pl.BlockSpec((1, dt), lambda r, c: (0, c)),
+        ],
+        pl.BlockSpec((rt, dt), lambda r, c: (r, c)),
+    )
+
+
+def dequantize_tiled(k8, scales, *, row_parts=16, col_parts=16):
+    t, d = k8.shape
+    rt, dt = _grid_tile(t, row_parts, 8), _grid_tile(d, col_parts, 128)
+    return _dequant_call(
+        k8,
+        scales,
+        (d // dt, t // rt),
+        [
+            pl.BlockSpec((rt, dt), lambda c, r: (r, c)),
+            pl.BlockSpec((1, dt), lambda c, r: (0, c)),
+        ],
+        pl.BlockSpec((rt, dt), lambda c, r: (r, c)),
+    )
+
+
+def dequantize_coarsened(k8, scales, *, col_parts=8):
+    t, d = k8.shape
+    dt = _grid_tile(d, col_parts, 128)
+    return _dequant_call(
+        k8,
+        scales,
+        (d // dt,),
+        [
+            pl.BlockSpec((t, dt), lambda c: (0, c)),
+            pl.BlockSpec((1, dt), lambda c: (0, c)),
+        ],
+        pl.BlockSpec((t, dt), lambda c: (0, c)),
+    )
+
+
+def dequantize_vectorized(k8, scales, *, row_parts=1):
+    t, d = k8.shape
+    rt = _grid_tile(t, row_parts, 8)
+    return _dequant_call(
+        k8,
+        scales,
+        (t // rt,),
+        [
+            pl.BlockSpec((rt, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, d), lambda r: (0, 0)),
+        ],
+        pl.BlockSpec((rt, d), lambda r: (r, 0)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fused scales + quantize — the production cache-writer path: one HBM read
+# of K produces both the scales and the INT8 matrix.
+# ---------------------------------------------------------------------------
+
+
+def quantize_fused(k, *, col_parts=8):
+    """Single pallas_call emitting (K_int8, scales).
+
+    Grid over column strips; each step reduces its (T, Dt) strip to scales
+    then quantizes it while the strip is still VMEM-resident — the paper's
+    two passes (Algorithm 1 + eq. 7) collapsed into one HBM traversal.
+    """
+    t, d = k.shape
+    dt = _grid_tile(d, col_parts, 128)
+
+    def kernel(k_ref, q_ref, s_ref):
+        vals = k_ref[...].astype(jnp.float32)
+        s = jnp.max(jnp.abs(vals), axis=0, keepdims=True) / QMAX
+        s_ref[...] = s
+        q_ref[...] = _quant_block(vals, s)
+
+    kq, s = pl.pallas_call(
+        kernel,
+        grid=(d // dt,),
+        in_specs=[pl.BlockSpec((t, dt), lambda c: (0, c))],
+        out_specs=[
+            pl.BlockSpec((t, dt), lambda c: (0, c)),
+            pl.BlockSpec((1, dt), lambda c: (0, c)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, d), jnp.int8),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(k)
+    return kq, s[0]
+
+
+# ---------------------------------------------------------------------------
+# Fused dequant + attention — the decode hot path: read the INT8 cache,
+# dequantize in VMEM, and run single-query attention without ever
+# materializing the FP32 cache in HBM. This is the kernel the paper's
+# future-work section says a serving integration needs.
+# ---------------------------------------------------------------------------
+
+
+def dequant_attention_decode(q, kq, k_scales, vq, v_scales, length):
+    """Single-token attention over a quantized (H, T, d) cache.
+
+    q: (H, d) f32; kq/vq: (H, T, d) int8; *_scales: (H, d) f32;
+    length: int32 scalar — number of valid cache rows. Returns (H, d).
+
+    Grid over heads; each step stages one head's INT8 K and V strips plus
+    its scales, dequantizes in VMEM, computes masked softmax(qKᵀ/√d)·V.
+    INT8 staging means the HBM traffic is 4× smaller than an FP32 cache —
+    the end-to-end benefit the paper's §8.2 integration asks for.
+    """
+    h, t, d = kq.shape
+
+    def kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref):
+        n = len_ref[0]
+        k = kq_ref[0].astype(jnp.float32) * ks_ref[...]  # (T, d)
+        v = vq_ref[0].astype(jnp.float32) * vs_ref[...]
+        qv = q_ref[...]  # (1, d)
+        scores = (qv @ k.T) / jnp.sqrt(jnp.float32(d))  # (1, T)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+        scores = jnp.where(idx < n, scores, -1e30)
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        w = e / jnp.sum(e, axis=-1, keepdims=True)
+        o_ref[...] = w @ v  # (1, d)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        interpret=True,
+    )(length.reshape(1), q, kq, k_scales, vq, v_scales)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+VARIANTS.update(
+    {
+        "naive": (quantize_naive, dequantize_naive),
+        "tiled": (quantize_tiled, dequantize_tiled),
+        "coarsened": (quantize_coarsened, dequantize_coarsened),
+        "vectorized": (quantize_vectorized, dequantize_vectorized),
+    }
+)
+
+
+def quantize(k, scales, variant="vectorized", **kw):
+    """Dispatch helper used by model.py and aot.py."""
+    return VARIANTS[variant][0](k, scales, **kw)
+
+
+def dequantize(k8, scales, variant="vectorized", **kw):
+    return VARIANTS[variant][1](k8, scales, **kw)

@@ -1,0 +1,128 @@
+"""Pure-jnp reference oracle for the INT8 KV-cache quantization kernels.
+
+This module is the correctness ground truth for every Pallas kernel in
+`quant.py` and for the Rust CPU implementation (which mirrors the paper's C
+listings). All functions operate on a key/value matrix ``K`` of shape
+``(T, D)`` — ``T`` cached tokens by ``D`` head-dimension channels — and use
+**per-channel** scales: one scale per column ``d``, eq. (5)/(6) of the paper:
+
+    s_d = max_t |K[t, d]| / 127
+
+Quantization (eq. 7) uses round-half-away-from-zero: the paper's CPU
+baseline uses C ``roundf`` (half away from zero) while its GPU kernels use
+``__float2int_rn`` (half to even), reconciled there with a ±1 tolerance.
+We standardize every implementation in this repo (Pallas + Rust) on
+half-away-from-zero and hold them to exact agreement instead.
+Dequantization (eq. 8) is ``x_q * s_d``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# INT8 symmetric range used throughout the paper: [-127, 127] (not -128,
+# keeping the grid symmetric so dequantization has zero bias at 0).
+QMAX = 127.0
+
+
+def round_half_away(x):
+    """Round half away from zero, matching C's roundf / Rust's f32::round."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def compute_scales(k):
+    """Per-channel scales, eq. (6): s_d = max_t |K[t,d]| / 127.
+
+    Zero columns get scale 0; `quantize` special-cases them (the paper's C
+    divides by the scale unguarded — we define 0/0 → 0 instead of NaN).
+    """
+    return jnp.max(jnp.abs(k), axis=0) / QMAX
+
+
+def quantize(k, scales):
+    """Quantize eq. (7): round(K[t,d] / s_d) clamped to [-127, 127].
+
+    Columns whose scale is 0 (all-zero columns) quantize to 0.
+    """
+    safe = jnp.where(scales > 0.0, scales, 1.0)
+    q = round_half_away(k / safe)
+    q = jnp.clip(q, -QMAX, QMAX)
+    q = jnp.where(scales > 0.0, q, 0.0)
+    return q.astype(jnp.int8)
+
+
+def dequantize(kq, scales):
+    """Dequantize eq. (8): x̂ = x_q * s_d."""
+    return kq.astype(jnp.float32) * scales
+
+
+def quantize_fused(k):
+    """Single-pass scales + quantize (what a production cache writer runs)."""
+    scales = compute_scales(k)
+    return quantize(k, scales), scales
+
+
+def roundtrip(k):
+    """quantize → dequantize; the reconstruction K̂ the error metrics use."""
+    kq, scales = quantize_fused(k)
+    return dequantize(kq, scales)
+
+
+# ---------------------------------------------------------------------------
+# Error metrics — §7.2/7.3 of the paper.
+# ---------------------------------------------------------------------------
+
+
+def l2_error(a, b):
+    """Frobenius/L2 error: sqrt(sum((a-b)^2)). Grows with matrix size."""
+    d = (a - b).astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(d * d))
+
+
+def max_abs_error(a, b):
+    """Max per-element error; bounded by s_d/2 ≈ 1/(2·127) for U(-1,1)."""
+    return jnp.max(jnp.abs(a - b))
+
+
+def attention_score_error(q, k, k_hat):
+    """Mean |q·k - q·k̂| over all (query, token) attention dot products.
+
+    q: (Nq, D) query rows; k, k_hat: (T, D). The paper reports the mean
+    absolute difference of the pre-softmax scores (no 1/sqrt(d) factor —
+    matching the paper's 'attention dot products').
+    """
+    s = q @ k.T
+    s_hat = q @ k_hat.T
+    return jnp.mean(jnp.abs(s - s_hat))
+
+
+# ---------------------------------------------------------------------------
+# Attention reference — used by the fused dequant-attention kernel and the
+# L2 model decode step.
+# ---------------------------------------------------------------------------
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention_decode(q, kq, k_scales, vq, v_scales, length=None):
+    """Single-token decode attention over a quantized cache.
+
+    q: (H, d) one query per head; kq/vq: (H, T, d) int8; scales: (H, d).
+    ``length``: optional valid-prefix length (int scalar); positions >= length
+    are masked out (the cache is allocated to capacity T but only partially
+    filled during generation). Returns (H, d) attention output.
+    """
+    k = kq.astype(jnp.float32) * k_scales[:, None, :]
+    v = vq.astype(jnp.float32) * v_scales[:, None, :]
+    d = q.shape[-1]
+    scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(d))
+    if length is not None:
+        t = kq.shape[1]
+        mask = jnp.arange(t)[None, :] < length
+        scores = jnp.where(mask, scores, -1e30)
+    w = softmax(scores)
+    return jnp.einsum("ht,htd->hd", w, v)

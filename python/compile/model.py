@@ -1,0 +1,298 @@
+"""L2: JAX transformer with an INT8-quantized KV cache.
+
+This is the compute graph the Rust coordinator serves. Two entry points are
+AOT-lowered per model config (see aot.py):
+
+* ``prefill``     — full-sequence forward over a padded prompt. Emits the
+  next-token logits at the last valid position plus the FP32 K/V tensors for
+  every layer; the Rust side quantizes them (per-channel, per head) into its
+  paged INT8 cache and freezes the resulting scales for decode.
+* ``decode_step`` — single-token forward over the quantized cache. Attention
+  runs over the INT8 history (dequantize-in-graph — never materializing an
+  FP32 cache in HBM), which is the integration the paper's future-work
+  section calls for. A ``decode_step_pallas`` variant routes the history
+  attention through the fused Pallas dequant-attention kernel.
+  Both emit next-token logits and the new token's FP32 K/V rows for the
+  Rust side to quantize and append.
+
+Weights are *runtime inputs* (the Rust side generates seeded synthetic
+weights with the same layout — see rust/src/model/weights.rs and the
+param manifest emitted by aot.py). Architecture: pre-RMSNorm GPT with tied
+embedding/LM-head, GELU MLP, rotary positions, byte-level vocab.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quant as kernels
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture hyper-parameters. Mirrors configs/bench_shapes.json."""
+
+    name: str
+    vocab: int
+    layers: int
+    heads: int
+    head_dim: int
+    d_ff: int
+    max_seq: int
+    block_size: int = 16
+
+    @property
+    def d_model(self) -> int:
+        return self.heads * self.head_dim
+
+    def param_specs(self) -> List[tuple]:
+        """(name, shape) for every parameter, in the flat argument order
+        shared with the Rust weight generator. Keep this list append-only —
+        it is the ABI between L2 and L3."""
+        m, f = self.d_model, self.d_ff
+        specs = [("embedding", (self.vocab, m))]
+        for i in range(self.layers):
+            specs += [
+                (f"l{i}.ln1", (m,)),
+                (f"l{i}.wq", (m, m)),
+                (f"l{i}.wk", (m, m)),
+                (f"l{i}.wv", (m, m)),
+                (f"l{i}.wo", (m, m)),
+                (f"l{i}.ln2", (m,)),
+                (f"l{i}.w1", (m, f)),
+                (f"l{i}.w2", (f, m)),
+            ]
+        specs.append(("ln_f", (m,)))
+        return specs
+
+    def unflatten(self, flat):
+        """Group the flat param list into (embedding, per-layer dicts, ln_f)."""
+        names = [n for n, _ in self.param_specs()]
+        params = dict(zip(names, flat))
+        layers = []
+        for i in range(self.layers):
+            layers.append({k: params[f"l{i}.{k}"] for k in
+                           ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")})
+        return params["embedding"], layers, params["ln_f"]
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def _split_heads(x, heads, head_dim):
+    # (T, M) -> (H, T, d)
+    t = x.shape[0]
+    return x.reshape(t, heads, head_dim).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    # (H, T, d) -> (T, M)
+    h, t, d = x.shape
+    return x.transpose(1, 0, 2).reshape(t, h * d)
+
+
+def _rope(x, positions):
+    """Rotary position embedding over the head dimension.
+
+    x: (H, T, d); positions: (T,) int32. Standard theta=10000 pairing of
+    low/high halves — cheap, and keeps K statistics roughly stationary per
+    channel, which is what makes frozen-scale INT8 decode viable
+    (DESIGN.md §Hardware-Adaptation)."""
+    h, t, d = x.shape
+    half = d // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def prefill(spec: ModelSpec, flat_params, tokens, length):
+    """Padded-prompt forward pass.
+
+    tokens: (S,) int32 padded to spec.max_seq; length: () int32 valid count.
+    Returns (logits_last (V,), k_cache (L, H, S, d) f32, v_cache idem).
+    """
+    emb, layers, ln_f = spec.unflatten(flat_params)
+    s = tokens.shape[0]
+    h, d = spec.heads, spec.head_dim
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = emb[tokens]  # (S, M)
+
+    valid = positions[None, :] < length  # (1, S)
+    causal = positions[None, :] <= positions[:, None]  # (S, S)
+    mask = causal & valid  # (S, S)
+
+    ks, vs = [], []
+    for lp in layers:
+        xn = rmsnorm(x, lp["ln1"])
+        q = _rope(_split_heads(xn @ lp["wq"], h, d), positions)
+        k = _rope(_split_heads(xn @ lp["wk"], h, d), positions)
+        v = _split_heads(xn @ lp["wv"], h, d)
+        ks.append(k)
+        vs.append(v)
+        scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+        w = ref.softmax(scores)
+        attn = jnp.einsum("hqk,hkd->hqd", w, v)
+        x = x + _merge_heads(attn) @ lp["wo"]
+        xn = rmsnorm(x, lp["ln2"])
+        x = x + gelu(xn @ lp["w1"]) @ lp["w2"]
+
+    x = rmsnorm(x, ln_f)
+    last = jnp.take(x, length - 1, axis=0)  # (M,)
+    logits = last @ emb.T  # tied LM head, (V,)
+    k_cache = jnp.stack(ks)  # (L, H, S, d)
+    v_cache = jnp.stack(vs)
+    return logits, k_cache, v_cache
+
+
+def _attended_history(q, kq, k_scales, vq, v_scales, length):
+    """Masked attention over the quantized history, returning the pieces
+    needed for a streaming-softmax merge with the current token.
+
+    q: (H, d); kq/vq: (H, S, d) int8; scales (H, d); length () int32.
+    Returns (attn (H, d) — softmax-normalized over history only,
+             denom (H,) — softmax partition over history,
+             mx (H,) — max score over history, floored at -1e29).
+    Empty history (length==0) yields denom=0 so the merge reduces to the
+    current token alone.
+    """
+    h, s, d = kq.shape
+    k = kq.astype(jnp.float32) * k_scales[:, None, :]
+    v = vq.astype(jnp.float32) * v_scales[:, None, :]
+    scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(d))
+    idx = jax.lax.broadcasted_iota(jnp.int32, (h, s), 1)
+    scores = jnp.where(idx < length, scores, jnp.float32(-1e30))
+    mx = jnp.max(scores, axis=-1)  # (H,)  == -1e30 when empty
+    mx_safe = jnp.maximum(mx, -1e29)
+    e = jnp.exp(scores - mx_safe[:, None])
+    e = jnp.where(idx < length, e, 0.0)
+    denom = jnp.sum(e, axis=-1)  # (H,)
+    denom_safe = jnp.where(denom > 0, denom, 1.0)
+    attn = jnp.einsum("ht,htd->hd", e, v) / denom_safe[:, None]
+    return attn, denom, mx_safe
+
+
+def _decode_core(spec: ModelSpec, flat_params, token, pos,
+                 kq, k_scales, vq, v_scales, history_attention):
+    """Shared decode-step body; `history_attention` computes the masked
+    attention over the INT8 history (plain-XLA or Pallas-fused)."""
+    emb, layers, ln_f = spec.unflatten(flat_params)
+    h, d = spec.heads, spec.head_dim
+    x = emb[token]  # (M,)
+    pos1 = pos.reshape(1)
+
+    k_news, v_news = [], []
+    for i, lp in enumerate(layers):
+        xn = rmsnorm(x, lp["ln1"])
+        q = _rope((xn @ lp["wq"]).reshape(1, h, d).transpose(1, 0, 2), pos1)
+        k_new = _rope((xn @ lp["wk"]).reshape(1, h, d).transpose(1, 0, 2), pos1)
+        v_new = (xn @ lp["wv"]).reshape(1, h, d).transpose(1, 0, 2)
+        k_news.append(k_new[:, 0, :])  # (H, d)
+        v_news.append(v_new[:, 0, :])
+
+        qh = q[:, 0, :]
+        ks_i = None if k_scales is None else k_scales[i]
+        vs_i = None if v_scales is None else v_scales[i]
+        attn_hist, denom_hist, max_hist = history_attention(
+            qh, kq[i], ks_i, vq[i], vs_i, pos)
+        # Streaming-softmax merge of the history with the current token
+        # (the current token's K/V are still FP32 — they are quantized by
+        # the Rust cache manager *after* this step).
+        s_cur = jnp.einsum("hd,hd->h", qh, k_new[:, 0, :])
+        s_cur = s_cur / jnp.sqrt(jnp.float32(d))  # (H,)
+        m = jnp.maximum(max_hist, s_cur)
+        w_hist = jnp.exp(max_hist - m)[:, None]
+        w_cur = jnp.exp(s_cur - m)[:, None]
+        num = attn_hist * denom_hist[:, None] * w_hist + w_cur * v_new[:, 0, :]
+        den = denom_hist[:, None] * w_hist + w_cur
+        attn = num / den  # (H, d)
+
+        x = x + attn.reshape(-1) @ lp["wo"]
+        xn = rmsnorm(x, lp["ln2"])
+        x = x + gelu(xn @ lp["w1"]) @ lp["w2"]
+
+    x = rmsnorm(x, ln_f)
+    logits = x @ emb.T
+    return logits, jnp.stack(k_news), jnp.stack(v_news)
+
+
+def decode_step(spec: ModelSpec, flat_params, token, pos,
+                kq, k_scales, vq, v_scales):
+    """Single-token forward over the INT8 cache (plain-XLA history attn).
+
+    token: () int32; pos: () int32 — index this token will occupy (== number
+    of valid cache rows). kq/vq: (L, H, S, d) int8; scales: (L, H, d) f32.
+    Returns (logits (V,), k_new (L, H, d) f32, v_new (L, H, d) f32).
+
+    The cache is *not* updated here: quantize-and-append is owned by the
+    Rust cache manager (frozen prefill scales, clamped), keeping this
+    artifact free of scatter ops and the paged layout opaque to XLA.
+    """
+    return _decode_core(spec, flat_params, token, pos,
+                        kq, k_scales, vq, v_scales, _attended_history)
+
+
+def decode_step_pallas(spec: ModelSpec, flat_params, token, pos,
+                       kq, k_scales, vq, v_scales):
+    """decode_step whose history attention runs through the fused Pallas
+    dequant-attention kernel. The kernel returns the normalized history
+    attention; denom/max for the streaming merge come from the shared
+    score row, which XLA CSEs with the kernel's own computation."""
+
+    def hist(qh, kqi, ksi, vqi, vsi, length):
+        attn = kernels.dequant_attention_decode(qh, kqi, ksi, vqi, vsi, length)
+        _, denom, mx = _attended_history(qh, kqi, ksi, vqi, vsi, length)
+        return attn, denom, mx
+
+    return _decode_core(spec, flat_params, token, pos,
+                        kq, k_scales, vq, v_scales, hist)
+
+
+def decode_step_fp32(spec: ModelSpec, flat_params, token, pos,
+                     k_cache, v_cache):
+    """FP32-cache decode baseline (no quantization): same signature shape
+    as `decode_step` but with f32 (L, H, S, d) caches and no scales. This
+    is the serving bench's apples-to-apples comparison point — 4× the
+    cache traffic and memory of the INT8 path."""
+
+    def hist(qh, ki, _ks, vi, _vs, length):
+        h, s, d = ki.shape
+        scores = jnp.einsum("hd,htd->ht", qh, ki) / jnp.sqrt(jnp.float32(d))
+        idx = jax.lax.broadcasted_iota(jnp.int32, (h, s), 1)
+        scores = jnp.where(idx < length, scores, jnp.float32(-1e30))
+        mx = jnp.max(scores, axis=-1)
+        mx_safe = jnp.maximum(mx, -1e29)
+        e = jnp.exp(scores - mx_safe[:, None])
+        e = jnp.where(idx < length, e, 0.0)
+        denom = jnp.sum(e, axis=-1)
+        denom_safe = jnp.where(denom > 0, denom, 1.0)
+        attn = jnp.einsum("ht,htd->hd", e, vi) / denom_safe[:, None]
+        return attn, denom, mx_safe
+
+    return _decode_core(spec, flat_params, token, pos,
+                        k_cache, None, v_cache, None, hist)
+
+
+def attention_error_probe(q, k, kq, scales):
+    """Fig-4 right panel: mean |qK^T − qK̂^T| over sampled queries.
+
+    q: (Nq, D) f32; k: (T, D) f32 original; kq: (T, D) int8; scales: (D,).
+    Lowered per bench shape so the Rust harness can run it via PJRT.
+    """
+    k_hat = kq.astype(jnp.float32) * scales
+    s = q @ k.T
+    s_hat = q @ k_hat.T
+    return jnp.mean(jnp.abs(s - s_hat))

@@ -1,0 +1,100 @@
+"""AOT pipeline: lowering produces parseable HLO text and a manifest whose
+signatures match what the Rust runtime will feed each executable."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def quick_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.main(["--out-dir", str(out), "--quick"])
+    return out
+
+
+class TestManifest:
+    def test_manifest_exists_and_parses(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        assert man["version"] == 1
+        assert len(man["entries"]) >= 14
+        names = {e["name"] for e in man["entries"]}
+        assert "quantize_vectorized_2048x128" in names
+        assert "prefill_kvq-3m" in names
+        assert "decode_kvq-3m" in names
+
+    def test_every_entry_file_exists_nonempty(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        for e in man["entries"]:
+            p = quick_artifacts / e["path"]
+            assert p.exists(), e["name"]
+            text = p.read_text()
+            assert text.startswith("HloModule"), e["name"]
+            assert "ENTRY" in text
+
+    def test_quantize_signature(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        e = {x["name"]: x for x in man["entries"]}["quantize_vectorized_2048x128"]
+        assert e["inputs"] == [
+            {"dtype": "float32", "shape": [2048, 128]},
+            {"dtype": "float32", "shape": [128]},
+        ]
+        assert e["outputs"] == [{"dtype": "int8", "shape": [2048, 128]}]
+
+    def test_decode_signature_shapes(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        e = {x["name"]: x for x in man["entries"]}["decode_kvq-3m"]
+        meta = e["meta"]
+        l_, h, s, d = meta["layers"], meta["heads"], meta["max_seq"], meta["head_dim"]
+        n_params = len(meta["params"])
+        assert len(e["inputs"]) == n_params + 2 + 4
+        # Cache tensors come last: kq, ks, vq, vs.
+        assert e["inputs"][-4] == {"dtype": "int8", "shape": [l_, h, s, d]}
+        assert e["inputs"][-3] == {"dtype": "float32", "shape": [l_, h, d]}
+        assert e["outputs"][0] == {"dtype": "float32", "shape": [meta["vocab"]]}
+        assert e["outputs"][1] == {"dtype": "float32", "shape": [l_, h, d]}
+
+    def test_param_abi_recorded(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        e = {x["name"]: x for x in man["entries"]}["prefill_kvq-3m"]
+        params = e["meta"]["params"]
+        assert params[0]["name"] == "embedding"
+        assert params[-1]["name"] == "ln_f"
+        # Input list begins with exactly these params, in order.
+        for i, p in enumerate(params):
+            assert e["inputs"][i]["shape"] == p["shape"]
+
+    def test_shape_index_covers_sets(self, quick_artifacts):
+        with open(quick_artifacts / "manifest.json") as f:
+            man = json.load(f)
+        assert man["shapes"][0]["tag"] == "2048x128"
+        assert man["models"][0]["name"] == "kvq-3m"
+
+
+class TestShapesConfig:
+    def test_paper_table3_is_faithful(self):
+        """The 'paper' set must be exactly Table 3 of the paper."""
+        cfg = aot.load_shapes_config()
+        rows = [(s["tokens"], s["dim"]) for s in cfg["paper"]]
+        assert rows == [
+            (2048, 128), (16384, 256), (65536, 256), (131072, 256),
+            (131072, 1024), (131072, 2048), (131072, 4096), (131072, 8192),
+        ]
+
+    def test_ci_set_preserves_d_sweep(self):
+        cfg = aot.load_shapes_config()
+        dims = [s["dim"] for s in cfg["ci"]]
+        assert dims == [d for d in (128, 256, 256, 256, 1024, 2048, 4096, 8192)]
+
+    def test_models_present(self):
+        cfg = aot.load_shapes_config()
+        names = {m["name"] for m in cfg["models"]}
+        assert {"kvq-3m", "kvq-25m"} <= names

@@ -1,0 +1,130 @@
+"""Fused dequant-attention kernel vs the pure-jnp reference, plus the
+paper's error-law claims (§7.2/§7.3, Fig 4)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant, ref
+
+
+def _cache(h, t, d, seed=0):
+    rng = np.random.default_rng(seed)
+    k = rng.normal(size=(h, t, d)).astype(np.float32)
+    v = rng.normal(size=(h, t, d)).astype(np.float32)
+    ks = np.stack([np.asarray(ref.compute_scales(k[i])) for i in range(h)])
+    vs = np.stack([np.asarray(ref.compute_scales(v[i])) for i in range(h)])
+    k8 = np.stack([np.asarray(ref.quantize(k[i], ks[i])) for i in range(h)])
+    v8 = np.stack([np.asarray(ref.quantize(v[i], vs[i])) for i in range(h)])
+    q = rng.normal(size=(h, d)).astype(np.float32)
+    return q, k, v, k8, ks, v8, vs
+
+
+class TestDequantAttention:
+    @pytest.mark.parametrize("length", [1, 7, 16, 32])
+    def test_matches_ref(self, length):
+        q, _, _, k8, ks, v8, vs = _cache(4, 32, 64, seed=length)
+        got = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(length))))
+        want = np.asarray(ref.attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), length=length))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_full_length(self):
+        q, _, _, k8, ks, v8, vs = _cache(2, 24, 32, seed=99)
+        got = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(24))))
+        want = np.asarray(ref.attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), length=24))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_masked_rows_do_not_leak(self):
+        """Garbage beyond `length` must not change the output."""
+        q, _, _, k8, ks, v8, vs = _cache(2, 16, 32, seed=1)
+        out1 = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(8))))
+        k8b, v8b = k8.copy(), v8.copy()
+        k8b[:, 8:, :] = 127
+        v8b[:, 8:, :] = -127
+        out2 = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8b), jnp.asarray(ks),
+            jnp.asarray(v8b), jnp.asarray(vs), jnp.asarray(np.int32(8))))
+        np.testing.assert_allclose(out1, out2, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(h=st.integers(1, 4), t=st.integers(2, 24), d=st.integers(2, 48),
+           seed=st.integers(0, 10_000))
+    def test_matches_ref_hypothesis(self, h, t, d, seed):
+        q, _, _, k8, ks, v8, vs = _cache(h, t, d, seed=seed)
+        length = 1 + seed % t
+        got = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(length))))
+        want = np.asarray(ref.attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), length=length))
+        np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+class TestErrorLaws:
+    """The substrate-independent numbers the paper reports in §7.2/7.3."""
+
+    def test_max_abs_error_00394(self):
+        """U(-1,1) inputs: max error ≈ 1/(2·127) ≈ 0.00394 (Fig 4 left)."""
+        rng = np.random.default_rng(0)
+        k = rng.uniform(-1, 1, size=(4096, 256)).astype(np.float32)
+        deq = np.asarray(ref.roundtrip(k))
+        err = float(np.abs(k - deq).max())
+        assert 0.0035 <= err <= 1.0 / (2 * 127) + 1e-6
+
+    def test_identity_errors_are_zero(self):
+        """Paper §7.5: every metric is 0 comparing a matrix to itself."""
+        k = np.random.default_rng(1).normal(size=(64, 64)).astype(np.float32)
+        assert float(ref.l2_error(k, k)) == 0.0
+        assert float(ref.max_abs_error(k, k)) == 0.0
+        q = np.random.default_rng(2).normal(size=(8, 64)).astype(np.float32)
+        assert float(ref.attention_score_error(q, k, k)) == 0.0
+
+    def test_l2_error_grows_with_size(self):
+        rng = np.random.default_rng(3)
+        errs = []
+        for t in [256, 1024, 4096]:
+            k = rng.uniform(-1, 1, size=(t, 128)).astype(np.float32)
+            errs.append(float(ref.l2_error(k, np.asarray(ref.roundtrip(k)))))
+        assert errs[0] < errs[1] < errs[2]
+
+    def test_attention_error_scales_sqrt_d(self):
+        """Fig 4 right: mean |q·k − q·k̂| grows ~√D with head dimension."""
+        rng = np.random.default_rng(4)
+        t, nq = 2048, 32
+        errs = {}
+        for d in [64, 256, 1024]:
+            k = rng.uniform(-1, 1, size=(t, d)).astype(np.float32)
+            q = rng.uniform(-1, 1, size=(nq, d)).astype(np.float32)
+            k_hat = np.asarray(ref.roundtrip(k))
+            errs[d] = float(ref.attention_score_error(q, k, k_hat))
+        # Monotone growth and ratio ≈ sqrt(4)=2 per 4x D step (loose band).
+        assert errs[64] < errs[256] < errs[1024]
+        r1 = errs[256] / errs[64]
+        r2 = errs[1024] / errs[256]
+        assert 1.3 < r1 < 3.0 and 1.3 < r2 < 3.0
+
+    def test_per_channel_beats_per_tensor(self):
+        """The reason the paper uses per-channel scales: mixed-range columns."""
+        rng = np.random.default_rng(5)
+        k = rng.uniform(-1, 1, size=(512, 64)).astype(np.float32)
+        k[:, 0] *= 100.0  # one hot column blows up a global scale
+        # per-channel
+        pc = np.asarray(ref.roundtrip(k))
+        # per-tensor: single global scale
+        s = np.abs(k).max() / 127.0
+        pt = np.clip(np.round(k / s), -127, 127) * s
+        err_pc = np.abs(k - pc)[:, 1:].max()  # error on the normal columns
+        err_pt = np.abs(k - pt)[:, 1:].max()
+        assert err_pc < err_pt / 10.0

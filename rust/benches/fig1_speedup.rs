@@ -1,0 +1,29 @@
+//! Figure 1 — GPU kernel speedup over the CPU baseline, all Table-3
+//! configurations, all four kernel variants.
+//!
+//! Default: CI-scaled shapes. `--full` / KVQ_BENCH_FULL=1: the paper's
+//! exact sizes (up to 1B elements; several GB RAM and minutes of CPU
+//! baseline — the paper's own CPU column took 79 s at the top size).
+
+use kvq::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = figures::FigCtx::from_env()?;
+    println!(
+        "[fig1] shapes={} set={} (pass --full for paper sizes)",
+        ctx.shapes.len(),
+        if ctx.full { "paper" } else { "ci" }
+    );
+    let rows = figures::measure_speedups(&ctx)?;
+    figures::emit(&figures::fig1_table(&rows), "fig1_speedup");
+
+    // The paper's headline ordering: vectorized best-or-tied, tiled ≈ naive.
+    if let Some(last) = rows.last() {
+        println!(
+            "\n[fig1] largest config: vectorized {:.1}x vs naive {:.1}x vs cpu 1.0x",
+            last.speedup("vectorized"),
+            last.speedup("naive")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Figure 2 — absolute execution time, CPU vs GPU-analog, across problem
+//! sizes (the paper plots this log-log; the emitted CSV carries the raw
+//! series).
+
+use kvq::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = figures::FigCtx::from_env()?;
+    let rows = figures::measure_speedups_cached(&ctx)?;
+    figures::emit(&figures::fig2_table(&rows), "fig2_exec_time");
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Figure 3 — GPU kernel time on the realistic LLM workloads (D ≥ 1024).
+//! The paper reports a 6–58 ms band on a T4 at the full sizes.
+
+use kvq::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = figures::FigCtx::from_env()?;
+    let rows = figures::measure_speedups_cached(&ctx)?;
+    figures::emit(&figures::fig3_table(&rows), "fig3_realistic");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Figure 4 — reconstruction error (max-abs, L2) and attention-score
+//! error across configurations. These numbers are substrate-independent:
+//! max-abs ≈ 0.00394 for U(-1,1) inputs, attention error ∝ √D.
+
+use kvq::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = figures::FigCtx::from_env()?;
+    let t = figures::fig4_table(&ctx)?;
+    figures::emit(&t, "fig4_error");
+    Ok(())
+}

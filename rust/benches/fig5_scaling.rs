@@ -1,0 +1,11 @@
+//! Figure 5 — speedup vs problem size: the series form of Fig 1, sorted by
+//! element count, showing where each variant's speedup plateaus.
+
+use kvq::bench::figures;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = figures::FigCtx::from_env()?;
+    let rows = figures::measure_speedups_cached(&ctx)?;
+    figures::emit(&figures::fig5_table(&rows), "fig5_scaling");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Table 1 — the KV-cache memory model (and the paper's Table-3 workload
+//! registry for reference).
+
+use kvq::bench::figures;
+use kvq::config::shapes::ShapeRegistry;
+use kvq::util::harness::Table;
+
+fn main() -> anyhow::Result<()> {
+    figures::emit(&figures::table1(), "table1_memory");
+
+    // Table 3: the benchmark configurations (paper set).
+    let reg = ShapeRegistry::load_default()?;
+    let mut t = Table::new(
+        "Table 3 — Test configurations",
+        &["name", "tokens (T)", "head dim (D)", "elements", "description"],
+    );
+    for s in &reg.paper {
+        t.row(&[
+            s.name.clone(),
+            s.tokens.to_string(),
+            s.dim.to_string(),
+            s.elements().to_string(),
+            s.desc.clone(),
+        ]);
+    }
+    figures::emit(&t, "table3_configs");
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Benchmark support library: workload generation and the shared drivers
+//! the `cargo bench` targets (rust/benches/*.rs) call into.
+//!
+//! Each paper table/figure has a driver in [`figures`] that produces a
+//! [`crate::util::harness::Table`] with the same rows/series the paper
+//! reports; the bench binaries print it and write CSV to bench_results/.
+
+pub mod figures;
+pub mod workload;
+
+pub use workload::Workload;

@@ -1,0 +1,98 @@
+//! Workload generation for the kernel benches and the serving bench.
+
+use crate::config::shapes::BenchShape;
+use crate::quant::Fp32Matrix;
+use crate::util::rng::Rng;
+
+/// A materialized kernel workload: the K matrix for one bench shape.
+pub struct Workload {
+    pub shape: BenchShape,
+    pub k: Fp32Matrix,
+}
+
+impl Workload {
+    /// The paper's randomized matrices: U(-1, 1) (which pins max-abs error
+    /// at ≈0.00394, §7.2).
+    pub fn uniform(shape: &BenchShape, seed: u64) -> Workload {
+        Workload {
+            shape: shape.clone(),
+            k: Fp32Matrix::random_uniform(shape.tokens, shape.dim, -1.0, 1.0, seed),
+        }
+    }
+
+    /// Normal-distributed variant (closer to real K/V statistics).
+    pub fn normal(shape: &BenchShape, seed: u64) -> Workload {
+        Workload {
+            shape: shape.clone(),
+            k: Fp32Matrix::random_normal(shape.tokens, shape.dim, 1.0, seed),
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.k.elements()
+    }
+}
+
+/// Serving workload: Poisson arrivals of prompts with bounded lengths.
+pub struct ServingWorkload {
+    pub prompts: Vec<Vec<i32>>,
+    /// Arrival offsets in seconds from t0.
+    pub arrivals: Vec<f64>,
+    pub max_new_tokens: usize,
+}
+
+impl ServingWorkload {
+    pub fn poisson(
+        n_requests: usize,
+        rate_per_sec: f64,
+        prompt_len: (usize, usize),
+        max_new_tokens: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> ServingWorkload {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut prompts = Vec::new();
+        let mut arrivals = Vec::new();
+        for _ in 0..n_requests {
+            t += rng.exponential(rate_per_sec);
+            arrivals.push(t);
+            let len = rng.range(prompt_len.0 as i64, prompt_len.1 as i64) as usize;
+            prompts.push((0..len).map(|_| rng.below(vocab as u64) as i32).collect());
+        }
+        ServingWorkload { prompts, arrivals, max_new_tokens }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::shapes::ShapeRegistry;
+
+    #[test]
+    fn workload_matches_shape() {
+        let r = ShapeRegistry::load_default().unwrap();
+        let w = Workload::uniform(&r.ci[0], 1);
+        assert_eq!(w.elements(), r.ci[0].elements());
+        assert!(w.k.data.iter().all(|v| (-1.0..1.0).contains(v)));
+    }
+
+    #[test]
+    fn workloads_deterministic() {
+        let r = ShapeRegistry::load_default().unwrap();
+        let a = Workload::uniform(&r.ci[0], 7);
+        let b = Workload::uniform(&r.ci[0], 7);
+        assert_eq!(a.k.data, b.k.data);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone() {
+        let w = ServingWorkload::poisson(50, 10.0, (4, 16), 8, 256, 3);
+        assert_eq!(w.prompts.len(), 50);
+        assert!(w.arrivals.windows(2).all(|p| p[0] <= p[1]));
+        assert!(w.prompts.iter().all(|p| (4..=16).contains(&p.len())));
+        // Mean inter-arrival ≈ 1/rate.
+        let mean = w.arrivals.last().unwrap() / 50.0;
+        assert!((mean - 0.1).abs() < 0.05, "mean gap {mean}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Typed configuration: JSON files + CLI overrides.
+//!
+//! Two config surfaces:
+//! * [`ServeConfig`] — everything the `kvq serve`/`serve_demo` path needs
+//!   (model, precision, cache sizing, batching, HTTP port). Loadable from
+//!   a JSON file (`--config path`) with CLI flags taking precedence.
+//! * [`shapes`] — the shared bench-shape registry
+//!   (`configs/bench_shapes.json`), the same file aot.py lowers from, so
+//!   Rust benches and Python artifacts can never drift apart.
+
+pub mod shapes;
+
+use crate::coordinator::admission::AdmissionConfig;
+use crate::coordinator::batcher::BatcherConfig;
+use crate::kvcache::Precision;
+use crate::model::runner::DecodeKernel;
+use crate::util::args::Args;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+/// Which backend executes the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT artifacts via PJRT (production path).
+    Pjrt,
+    /// Pure-Rust oracle (no artifacts needed; slow but dependency-free).
+    CpuRef,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        Some(match s {
+            "pjrt" => Backend::Pjrt,
+            "cpu" | "cpu-ref" => Backend::CpuRef,
+            _ => return None,
+        })
+    }
+}
+
+/// Full serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub model: String,
+    pub backend: Backend,
+    pub precision: Precision,
+    pub decode_kernel: DecodeKernel,
+    pub artifact_dir: String,
+    pub weight_seed: u64,
+    pub num_blocks: Option<usize>,
+    pub expected_concurrency: usize,
+    pub scale_margin: f32,
+    pub batcher: BatcherConfig,
+    pub port: u16,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "kvq-3m".into(),
+            backend: Backend::Pjrt,
+            precision: Precision::Int8,
+            decode_kernel: DecodeKernel::PlainXla,
+            artifact_dir: crate::runtime::default_artifact_dir(),
+            weight_seed: 0xA11CE,
+            num_blocks: None,
+            expected_concurrency: 8,
+            scale_margin: 1.0,
+            batcher: BatcherConfig::default(),
+            port: 8080,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Load from a JSON file (missing keys keep defaults).
+    pub fn from_file(path: &str) -> Result<ServeConfig> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing config {path}"))?;
+        let mut c = ServeConfig::default();
+        c.apply_json(&j)?;
+        Ok(c)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("model").as_str() {
+            self.model = v.to_string();
+        }
+        if let Some(v) = j.get("backend").as_str() {
+            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad backend {v:?}"))?;
+        }
+        if let Some(v) = j.get("precision").as_str() {
+            self.precision = Precision::parse(v).ok_or_else(|| anyhow!("bad precision {v:?}"))?;
+        }
+        if let Some(v) = j.get("decode_kernel").as_str() {
+            self.decode_kernel = match v {
+                "plain" | "xla" => DecodeKernel::PlainXla,
+                "pallas" => DecodeKernel::Pallas,
+                _ => return Err(anyhow!("bad decode_kernel {v:?}")),
+            };
+        }
+        if let Some(v) = j.get("artifact_dir").as_str() {
+            self.artifact_dir = v.to_string();
+        }
+        if let Some(v) = j.get("weight_seed").as_usize() {
+            self.weight_seed = v as u64;
+        }
+        if let Some(v) = j.get("num_blocks").as_usize() {
+            self.num_blocks = Some(v);
+        }
+        if let Some(v) = j.get("expected_concurrency").as_usize() {
+            self.expected_concurrency = v;
+        }
+        if let Some(v) = j.get("scale_margin").as_f64() {
+            self.scale_margin = v as f32;
+        }
+        if let Some(v) = j.get("port").as_usize() {
+            self.port = v as u16;
+        }
+        if let Some(v) = j.get("max_running").as_usize() {
+            self.batcher.admission.max_running = v;
+        }
+        if let Some(v) = j.get("max_waiting").as_usize() {
+            self.batcher.admission.max_waiting = v;
+        }
+        if let Some(v) = j.get("watermark").as_f64() {
+            self.batcher.admission.watermark = v;
+        }
+        if let Some(v) = j.get("max_prefills_per_step").as_usize() {
+            self.batcher.max_prefills_per_step = v;
+        }
+        if let Some(v) = j.get("max_decode_batch").as_usize() {
+            self.batcher.max_decode_batch = v;
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (flags win over file values).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("model") {
+            self.model = v.to_string();
+        }
+        if let Some(v) = args.get("backend") {
+            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad --backend {v:?}"))?;
+        }
+        if let Some(v) = args.get("precision") {
+            self.precision =
+                Precision::parse(v).ok_or_else(|| anyhow!("bad --precision {v:?}"))?;
+        }
+        if let Some(v) = args.get("decode-kernel") {
+            self.decode_kernel = match v {
+                "plain" | "xla" => DecodeKernel::PlainXla,
+                "pallas" => DecodeKernel::Pallas,
+                _ => return Err(anyhow!("bad --decode-kernel {v:?}")),
+            };
+        }
+        if let Some(v) = args.get("artifacts") {
+            self.artifact_dir = v.to_string();
+        }
+        if args.has("num-blocks") {
+            self.num_blocks = Some(args.usize_or("num-blocks", 0));
+        }
+        self.weight_seed = args.u64_or("weight-seed", self.weight_seed);
+        self.expected_concurrency =
+            args.usize_or("concurrency", self.expected_concurrency);
+        self.scale_margin = args.f64_or("scale-margin", self.scale_margin as f64) as f32;
+        self.port = args.usize_or("port", self.port as usize) as u16;
+        self.batcher.admission.max_running =
+            args.usize_or("max-running", self.batcher.admission.max_running);
+        self.batcher.max_prefills_per_step =
+            args.usize_or("max-prefills", self.batcher.max_prefills_per_step);
+        self.batcher.max_decode_batch =
+            args.usize_or("max-decode-batch", self.batcher.max_decode_batch);
+        Ok(())
+    }
+
+    /// Engine config slice of this serve config.
+    pub fn engine_config(&self) -> crate::coordinator::EngineConfig {
+        crate::coordinator::EngineConfig {
+            precision: self.precision,
+            num_blocks: self.num_blocks,
+            expected_concurrency: self.expected_concurrency,
+            scale_margin: self.scale_margin,
+            batcher: self.batcher,
+            seed: self.weight_seed,
+        }
+    }
+
+    pub fn admission(&self) -> &AdmissionConfig {
+        &self.batcher.admission
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = ServeConfig::default();
+        assert_eq!(c.precision, Precision::Int8);
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert_eq!(c.port, 8080);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = ServeConfig::default();
+        let j = Json::parse(
+            r#"{"model":"kvq-25m","precision":"fp32","port":9000,
+                "max_running":4,"decode_kernel":"pallas","backend":"cpu"}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.model, "kvq-25m");
+        assert_eq!(c.precision, Precision::Fp32);
+        assert_eq!(c.port, 9000);
+        assert_eq!(c.batcher.admission.max_running, 4);
+        assert_eq!(c.decode_kernel, DecodeKernel::Pallas);
+        assert_eq!(c.backend, Backend::CpuRef);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let mut c = ServeConfig::default();
+        assert!(c.apply_json(&Json::parse(r#"{"precision":"int99"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"backend":"tpu"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn args_override_file() {
+        let mut c = ServeConfig::default();
+        c.apply_json(&Json::parse(r#"{"port":9000}"#).unwrap()).unwrap();
+        let args = Args::parse_from(
+            ["--port", "9100", "--precision", "fp32"].iter().map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.port, 9100);
+        assert_eq!(c.precision, Precision::Fp32);
+    }
+}

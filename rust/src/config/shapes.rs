@@ -1,0 +1,115 @@
+//! The bench-shape registry — Table 3 of the paper plus the CI-scaled
+//! set, loaded from `configs/bench_shapes.json` (the same file aot.py
+//! lowers artifacts from).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BenchShape {
+    pub name: String,
+    pub tokens: usize,
+    pub dim: usize,
+    pub desc: String,
+}
+
+impl BenchShape {
+    pub fn elements(&self) -> usize {
+        self.tokens * self.dim
+    }
+
+    pub fn tag(&self) -> String {
+        format!("{}x{}", self.tokens, self.dim)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ShapeRegistry {
+    pub paper: Vec<BenchShape>,
+    pub ci: Vec<BenchShape>,
+}
+
+impl ShapeRegistry {
+    /// Locate configs/bench_shapes.json relative to the repo root (works
+    /// from `cargo test`/`bench` cwd and from target/ binaries).
+    pub fn load_default() -> Result<ShapeRegistry> {
+        for base in ["configs", "../configs", "../../configs"] {
+            let p = format!("{base}/bench_shapes.json");
+            if std::path::Path::new(&p).exists() {
+                return Self::load(&p);
+            }
+        }
+        Err(anyhow!("configs/bench_shapes.json not found from cwd"))
+    }
+
+    pub fn load(path: &str) -> Result<ShapeRegistry> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).context("parsing bench_shapes.json")?;
+        Ok(ShapeRegistry { paper: parse_set(&j, "paper")?, ci: parse_set(&j, "ci")? })
+    }
+
+    /// The set to run: paper when `full`, ci otherwise.
+    pub fn active(&self, full: bool) -> &[BenchShape] {
+        if full {
+            &self.paper
+        } else {
+            &self.ci
+        }
+    }
+}
+
+fn parse_set(j: &Json, key: &str) -> Result<Vec<BenchShape>> {
+    j.get(key)
+        .as_arr()
+        .ok_or_else(|| anyhow!("missing {key} set"))?
+        .iter()
+        .map(|s| {
+            Ok(BenchShape {
+                name: s.get("name").as_str().unwrap_or("").to_string(),
+                tokens: s.get("tokens").as_usize().ok_or_else(|| anyhow!("tokens"))?,
+                dim: s.get("dim").as_usize().ok_or_else(|| anyhow!("dim"))?,
+                desc: s.get("desc").as_str().unwrap_or("").to_string(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_repo_registry() {
+        let r = ShapeRegistry::load_default().unwrap();
+        assert_eq!(r.paper.len(), 8);
+        assert_eq!(r.ci.len(), 8);
+        // Table 3 exact rows.
+        assert_eq!(r.paper[0].tokens, 2048);
+        assert_eq!(r.paper[0].dim, 128);
+        assert_eq!(r.paper[7].tokens, 131_072);
+        assert_eq!(r.paper[7].dim, 8192);
+        assert_eq!(r.paper[7].elements(), 1_073_741_824); // the "1B elements"
+    }
+
+    #[test]
+    fn ci_set_is_smaller_but_keeps_d_sweep() {
+        let r = ShapeRegistry::load_default().unwrap();
+        for (p, c) in r.paper.iter().zip(&r.ci) {
+            assert!(c.elements() <= p.elements());
+            assert_eq!(p.dim, c.dim, "D sweep preserved for error figures");
+        }
+    }
+
+    #[test]
+    fn active_switches_sets() {
+        let r = ShapeRegistry::load_default().unwrap();
+        assert_eq!(r.active(true).len(), 8);
+        assert!(r.active(false)[3].elements() < r.active(true)[3].elements());
+    }
+
+    #[test]
+    fn tags_match_artifact_names() {
+        let r = ShapeRegistry::load_default().unwrap();
+        assert_eq!(r.paper[0].tag(), "2048x128");
+    }
+}

@@ -1,0 +1,168 @@
+//! Admission control: decide whether a request may enter the running set.
+//!
+//! Policy: a request is admitted only if (a) the cache can hold its entire
+//! worst-case footprint (prompt + max_new_tokens — no mid-flight
+//! preemption in this engine, so admission must be conservative), (b) the
+//! running set is below `max_running`, and (c) its prompt fits the model.
+//! Backpressure: the scheduler keeps non-admissible requests queued; the
+//! queue itself is bounded (`max_waiting`) after which requests are
+//! rejected outright — the "reject fast under overload" discipline.
+
+use super::request::Request;
+use crate::kvcache::KvCacheManager;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Max concurrently running sequences.
+    pub max_running: usize,
+    /// Max queued (not yet admitted) requests before hard rejection.
+    pub max_waiting: usize,
+    /// Keep this fraction of cache blocks free as headroom (watermark);
+    /// admission pretends the pool is smaller by this factor.
+    pub watermark: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_running: 8, max_waiting: 256, watermark: 0.05 }
+    }
+}
+
+/// Admission verdicts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Verdict {
+    Admit,
+    /// Keep waiting (would fit eventually).
+    Defer,
+    /// Will never fit / queue overflow: reject with cause.
+    Reject(String),
+}
+
+pub fn check(
+    cfg: &AdmissionConfig,
+    req: &Request,
+    cache: &KvCacheManager,
+    running: usize,
+    waiting: usize,
+) -> Verdict {
+    let total = req.max_total_tokens();
+    let cache_cfg = cache.config();
+    if req.prompt.is_empty() {
+        return Verdict::Reject("empty prompt".into());
+    }
+    if total > cache_cfg.max_seq {
+        return Verdict::Reject(format!(
+            "prompt+max_new = {total} exceeds model max_seq {}",
+            cache_cfg.max_seq
+        ));
+    }
+    // Worst-case block need vs the whole pool (minus watermark): if it can
+    // never fit, reject now rather than deadlock the queue.
+    let need = cache_cfg.blocks_for_tokens(total);
+    let pool = cache_cfg.num_blocks;
+    let usable = pool - ((pool as f64 * cfg.watermark) as usize);
+    if need > usable {
+        return Verdict::Reject(format!("needs {need} blocks, pool has {usable} usable"));
+    }
+    if waiting >= cfg.max_waiting {
+        return Verdict::Reject(format!("queue full ({waiting})"));
+    }
+    if running >= cfg.max_running {
+        return Verdict::Defer;
+    }
+    // Current free-space check (+ watermark headroom).
+    let headroom = (pool as f64 * cfg.watermark) as usize;
+    if need + headroom > cache.free_blocks() {
+        return Verdict::Defer;
+    }
+    Verdict::Admit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::CacheConfig;
+    use crate::kvcache::Precision;
+
+    fn cache(num_blocks: usize) -> KvCacheManager {
+        KvCacheManager::new(CacheConfig {
+            layers: 2,
+            heads: 2,
+            head_dim: 8,
+            max_seq: 64,
+            block_size: 4,
+            num_blocks,
+            precision: Precision::Int8,
+            scale_margin: 1.0,
+        })
+    }
+
+    fn req(prompt: usize, max_new: usize) -> Request {
+        Request::new(1, vec![0; prompt], max_new)
+    }
+
+    #[test]
+    fn admits_when_roomy() {
+        let c = cache(1024);
+        let v = check(&AdmissionConfig::default(), &req(8, 8), &c, 0, 0);
+        assert_eq!(v, Verdict::Admit);
+    }
+
+    #[test]
+    fn rejects_empty_prompt() {
+        let c = cache(1024);
+        assert!(matches!(
+            check(&AdmissionConfig::default(), &req(0, 8), &c, 0, 0),
+            Verdict::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn rejects_over_max_seq() {
+        let c = cache(1024);
+        assert!(matches!(
+            check(&AdmissionConfig::default(), &req(60, 10), &c, 0, 0),
+            Verdict::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn rejects_never_fitting() {
+        let c = cache(8); // tiny pool
+        // 33 tokens -> ceil(33/4)=9 blocks x 2 layers x2 = 36 > 8.
+        assert!(matches!(
+            check(&AdmissionConfig::default(), &req(30, 3), &c, 0, 0),
+            Verdict::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn defers_at_max_running() {
+        let c = cache(1024);
+        let cfg = AdmissionConfig { max_running: 2, ..Default::default() };
+        assert_eq!(check(&cfg, &req(4, 4), &c, 2, 0), Verdict::Defer);
+    }
+
+    #[test]
+    fn defers_when_pool_temporarily_full() {
+        let mut c = cache(16);
+        // Occupy most of the pool with a live sequence.
+        let id = c.new_sequence();
+        let cfgc = *c.config();
+        let n = cfgc.layers * cfgc.heads * cfgc.max_seq * cfgc.head_dim;
+        let k = vec![0.1f32; n];
+        let v = vec![0.1f32; n];
+        c.set_prefill(id, &k, &v, 12).unwrap(); // 3 blocks x 4 streams = 12
+        let verdict = check(&AdmissionConfig::default(), &req(8, 8), &c, 1, 0);
+        assert_eq!(verdict, Verdict::Defer);
+        c.free(id);
+        assert_eq!(check(&AdmissionConfig::default(), &req(8, 8), &c, 0, 0), Verdict::Admit);
+    }
+
+    #[test]
+    fn queue_overflow_rejects() {
+        let c = cache(1024);
+        let cfg = AdmissionConfig { max_waiting: 4, ..Default::default() };
+        assert!(matches!(check(&cfg, &req(4, 4), &c, 0, 4), Verdict::Reject(_)));
+    }
+}

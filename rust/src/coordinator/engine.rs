@@ -1,0 +1,408 @@
+//! The engine: owns a model backend + KV-cache manager on a dedicated
+//! thread and runs the continuous-batching step loop.
+//!
+//! Thread model: the PJRT runtime is not `Send`, so the backend is
+//! constructed *inside* the engine thread from a `Send` factory closure.
+//! The [`EngineHandle`] is cheap to clone and freely shareable (mpsc
+//! sender + metrics handle).
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{EventTx, FinishReason, Request, TokenEvent};
+use super::scheduler::{Running, Scheduler};
+use crate::kvcache::manager::{CacheConfig, KvCacheManager};
+use crate::kvcache::Precision;
+use crate::model::sample;
+use crate::model::LmBackend;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Engine configuration (cache + batching policy).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub precision: Precision,
+    /// Cache pool size in blocks; None = size for `expected_concurrency`
+    /// full-length sequences.
+    pub num_blocks: Option<usize>,
+    pub expected_concurrency: usize,
+    pub scale_margin: f32,
+    pub batcher: BatcherConfig,
+    /// RNG seed space for per-request sampling.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            precision: Precision::Int8,
+            num_blocks: None,
+            expected_concurrency: 8,
+            scale_margin: 1.0,
+            batcher: BatcherConfig::default(),
+            seed: 0,
+        }
+    }
+}
+
+enum EngineCmd {
+    Submit(Request, EventTx),
+    /// Stop accepting, drain all work, then exit.
+    Drain,
+    /// Exit immediately after the current step.
+    Shutdown,
+}
+
+/// Cloneable handle to a running engine.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineCmd>,
+    pub metrics: Metrics,
+}
+
+impl EngineHandle {
+    pub fn submit(&self, req: Request, events: EventTx) -> Result<()> {
+        self.metrics.on_submit();
+        self.tx
+            .send(EngineCmd::Submit(req, events))
+            .map_err(|_| anyhow::anyhow!("engine is down"))
+    }
+
+    /// Stop accepting and finish all queued/running work.
+    pub fn drain(&self) {
+        let _ = self.tx.send(EngineCmd::Drain);
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineCmd::Shutdown);
+    }
+}
+
+/// Spawn an engine thread. `backend_factory` runs on the engine thread
+/// (PJRT clients are thread-confined). Returns (handle, join handle).
+pub fn spawn<F>(
+    cfg: EngineConfig,
+    backend_factory: F,
+) -> (EngineHandle, std::thread::JoinHandle<()>)
+where
+    F: FnOnce() -> Result<Box<dyn LmBackend>> + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let metrics = Metrics::new();
+    let m2 = metrics.clone();
+    let join = std::thread::Builder::new()
+        .name("kvq-engine".into())
+        .spawn(move || match backend_factory() {
+            Ok(backend) => Engine::new(cfg, backend, m2).run(rx),
+            Err(e) => {
+                crate::error!("engine backend init failed: {e:#}");
+                // Reject everything that arrives.
+                while let Ok(cmd) = rx.recv() {
+                    if let EngineCmd::Submit(_req, events) = cmd {
+                        let _ = events.send(TokenEvent::Finished {
+                            reason: FinishReason::Rejected(format!("backend init failed: {e}")),
+                            tokens: 0,
+                            elapsed: 0.0,
+                        });
+                    } else {
+                        break;
+                    }
+                }
+            }
+        })
+        .expect("spawn engine thread");
+    (EngineHandle { tx, metrics }, join)
+}
+
+struct Engine {
+    backend: Box<dyn LmBackend>,
+    cache: KvCacheManager,
+    sched: Scheduler,
+    batcher: Batcher,
+    cfg: EngineConfig,
+    metrics: Metrics,
+    // Reused staging buffers (decode hot path — no allocation per step).
+    kq: Vec<i8>,
+    vq: Vec<i8>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    k32: Vec<f32>,
+    v32: Vec<f32>,
+    rng: Rng,
+}
+
+impl Engine {
+    fn new(cfg: EngineConfig, backend: Box<dyn LmBackend>, metrics: Metrics) -> Engine {
+        let spec = backend.spec().clone();
+        let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
+        let num_blocks =
+            cfg.num_blocks.unwrap_or(blocks_per_seq * cfg.expected_concurrency.max(1));
+        let cache = KvCacheManager::new(CacheConfig {
+            layers: spec.layers,
+            heads: spec.heads,
+            head_dim: spec.head_dim,
+            max_seq: spec.max_seq,
+            block_size: spec.block_size,
+            num_blocks,
+            precision: cfg.precision,
+            scale_margin: cfg.scale_margin,
+        });
+        let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
+        let ns = spec.layers * spec.heads * spec.head_dim;
+        let is_int8 = cfg.precision == Precision::Int8;
+        crate::info!(
+            "engine up: model={} precision={} blocks={} cache={:.1} MiB",
+            spec.name,
+            cfg.precision.name(),
+            num_blocks,
+            cache.storage_bytes() as f64 / (1024.0 * 1024.0)
+        );
+        Engine {
+            backend,
+            cache,
+            sched: Scheduler::new(),
+            batcher: Batcher::new(),
+            rng: Rng::new(cfg.seed ^ 0xE46),
+            metrics,
+            kq: if is_int8 { vec![0; n] } else { Vec::new() },
+            vq: if is_int8 { vec![0; n] } else { Vec::new() },
+            ks: vec![0.0; ns],
+            vs: vec![0.0; ns],
+            k32: if is_int8 { Vec::new() } else { vec![0.0; n] },
+            v32: if is_int8 { Vec::new() } else { vec![0.0; n] },
+            cfg,
+        }
+    }
+
+    fn run(mut self, rx: mpsc::Receiver<EngineCmd>) {
+        let mut draining = false;
+        loop {
+            // Ingest commands: block when idle (nothing to step), else drain
+            // whatever has arrived without blocking.
+            if self.sched.is_idle() {
+                if draining {
+                    break;
+                }
+                match rx.recv() {
+                    Ok(cmd) => {
+                        if self.handle(cmd, &mut draining) {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            let mut hard_stop = false;
+            while let Ok(cmd) = rx.try_recv() {
+                if self.handle(cmd, &mut draining) {
+                    hard_stop = true;
+                    break;
+                }
+            }
+            if hard_stop {
+                break;
+            }
+            if !self.sched.is_idle() {
+                self.step();
+            }
+        }
+        crate::info!("engine exiting ({} steps)", self.metrics.snapshot().engine_steps);
+    }
+
+    /// Returns true on hard shutdown.
+    fn handle(&mut self, cmd: EngineCmd, draining: &mut bool) -> bool {
+        match cmd {
+            EngineCmd::Submit(req, events) => {
+                if *draining {
+                    self.metrics.on_reject();
+                    let _ = events.send(TokenEvent::Finished {
+                        reason: FinishReason::Rejected("engine draining".into()),
+                        tokens: 0,
+                        elapsed: 0.0,
+                    });
+                } else {
+                    self.sched.enqueue(req, events);
+                }
+                false
+            }
+            EngineCmd::Drain => {
+                *draining = true;
+                false
+            }
+            EngineCmd::Shutdown => true,
+        }
+    }
+
+    fn step(&mut self) {
+        let t0 = Instant::now();
+        let plan = self.batcher.plan(&self.cfg.batcher, &mut self.sched, &self.cache);
+
+        for (req, events, cause) in plan.rejections {
+            self.metrics.on_reject();
+            crate::debug!("reject {}: {}", req.id, cause);
+            let _ = events.send(TokenEvent::Finished {
+                reason: FinishReason::Rejected(cause),
+                tokens: 0,
+                elapsed: req.arrival.elapsed().as_secs_f64(),
+            });
+        }
+
+        for (req, events) in plan.prefills {
+            if let Err(e) = self.prefill(req, events) {
+                crate::error!("prefill failed: {e:#}");
+            }
+        }
+
+        // Decode pass. Indices were computed against the pre-prefill
+        // running set; re-plan decodes as "all running" for simplicity and
+        // fairness is preserved by the batcher cursor across steps.
+        let ids: Vec<u64> = plan
+            .decodes
+            .iter()
+            .filter_map(|&i| self.sched.running.get(i).map(|r| r.req.id))
+            .collect();
+        for id in ids {
+            if let Err(e) = self.decode_one(id) {
+                crate::error!("decode failed for {id}: {e:#}");
+                if let Some(run) = self.sched.finish(id) {
+                    self.cache.free(run.seq);
+                    let _ = run.events.send(TokenEvent::Finished {
+                        reason: FinishReason::Error(format!("{e}")),
+                        tokens: run.generated,
+                        elapsed: run.req.arrival.elapsed().as_secs_f64(),
+                    });
+                }
+            }
+        }
+
+        self.metrics.on_step(
+            t0.elapsed().as_secs_f64(),
+            self.sched.running_len(),
+            self.sched.waiting_len(),
+            self.cache.utilization(),
+        );
+    }
+
+    fn prefill(&mut self, req: Request, events: EventTx) -> Result<()> {
+        // Vocabulary validation (the admission layer has no model spec).
+        let vocab = self.backend.spec().vocab as i32;
+        if let Some(&bad) = req.prompt.iter().find(|&&t| t < 0 || t >= vocab) {
+            self.metrics.on_reject();
+            let _ = events.send(TokenEvent::Finished {
+                reason: FinishReason::Rejected(format!("token {bad} outside vocab {vocab}")),
+                tokens: 0,
+                elapsed: req.arrival.elapsed().as_secs_f64(),
+            });
+            return Ok(());
+        }
+        let len = req.prompt.len();
+        let pre = self.backend.prefill(&req.prompt, len)?;
+        let seq = self.cache.new_sequence();
+        if let Err(e) = self.cache.set_prefill(seq, &pre.k, &pre.v, len) {
+            self.cache.free(seq);
+            return Err(e);
+        }
+        let mut rng = self.rng.fork(req.id ^ req.sampling.seed);
+        let token = sample::sample(&pre.logits, &req.sampling, &mut rng);
+        let ttft = req.arrival.elapsed().as_secs_f64();
+        self.metrics.on_first_token(ttft, len);
+        let _ = events.send(TokenEvent::First { token, ttft });
+
+        let mut running = Running {
+            req,
+            seq,
+            last_token: token,
+            generated: 1,
+            rng,
+            first_token_at: Some(Instant::now()),
+            events,
+        };
+        if let Some(reason) = finish_reason(&running, self.cache.config().max_seq) {
+            self.finalize(&mut running, reason);
+            self.cache.free(seq);
+            return Ok(());
+        }
+        self.sched.start(running);
+        Ok(())
+    }
+
+    fn decode_one(&mut self, id: u64) -> Result<()> {
+        let t0 = Instant::now();
+        let spec = self.backend.spec().clone();
+        let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+        let (seq, token, pos) = {
+            let run = self
+                .sched
+                .running
+                .iter()
+                .find(|r| r.req.id == id)
+                .ok_or_else(|| anyhow::anyhow!("request {id} not running"))?;
+            (run.seq, run.last_token, self.cache.seq_len(run.seq).unwrap())
+        };
+
+        let dec = match self.cfg.precision {
+            Precision::Int8 => {
+                for li in 0..l {
+                    let span = li * h * s * d..(li + 1) * h * s * d;
+                    self.cache.gather_i8(seq, li, 0, &mut self.kq[span.clone()])?;
+                    self.cache.gather_i8(seq, li, 1, &mut self.vq[span])?;
+                    let sspan = li * h * d..(li + 1) * h * d;
+                    self.ks[sspan.clone()].copy_from_slice(self.cache.scales(seq, li, 0)?);
+                    self.vs[sspan].copy_from_slice(self.cache.scales(seq, li, 1)?);
+                }
+                self.backend.decode_i8(token, pos, &self.kq, &self.ks, &self.vq, &self.vs)?
+            }
+            Precision::Fp32 => {
+                for li in 0..l {
+                    let span = li * h * s * d..(li + 1) * h * s * d;
+                    self.cache.gather_f32(seq, li, 0, &mut self.k32[span.clone()])?;
+                    self.cache.gather_f32(seq, li, 1, &mut self.v32[span])?;
+                }
+                self.backend.decode_f32(token, pos, &self.k32, &self.v32)?
+            }
+            Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+        };
+        self.cache.append_row(seq, &dec.k_new, &dec.v_new)?;
+
+        let run = self.sched.running.iter_mut().find(|r| r.req.id == id).unwrap();
+        let next = sample::sample(&dec.logits, &run.req.sampling, &mut run.rng);
+        run.last_token = next;
+        run.generated += 1;
+        self.metrics.on_token(t0.elapsed().as_secs_f64());
+        let _ = run.events.send(TokenEvent::Token(next));
+
+        if let Some(reason) = finish_reason(run, s) {
+            let mut run = self.sched.finish(id).unwrap();
+            self.cache.free(run.seq);
+            self.finalize(&mut run, reason);
+        }
+        Ok(())
+    }
+
+    fn finalize(&self, run: &mut Running, reason: FinishReason) {
+        let elapsed = run.req.arrival.elapsed().as_secs_f64();
+        self.metrics.on_finish(elapsed);
+        let _ = run.events.send(TokenEvent::Finished {
+            reason,
+            tokens: run.generated,
+            elapsed,
+        });
+    }
+}
+
+fn finish_reason(run: &Running, max_seq: usize) -> Option<FinishReason> {
+    if Some(run.last_token) == run.req.stop_token {
+        return Some(FinishReason::Stop);
+    }
+    if run.generated >= run.req.max_new_tokens {
+        return Some(FinishReason::Length);
+    }
+    if run.req.prompt.len() + run.generated >= max_seq {
+        return Some(FinishReason::CapacityExhausted);
+    }
+    None
+}
+
+// Engine behaviour is covered by rust/tests/serving_integration.rs (CPU
+// backend) and the e2e bench (PJRT backend).

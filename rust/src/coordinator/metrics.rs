@@ -1,0 +1,207 @@
+//! Serving metrics: counters + latency histograms, shared via a mutex
+//! (engine thread writes, router/HTTP threads read snapshots).
+
+use crate::util::stats::LogHistogram;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Debug)]
+struct Inner {
+    started: Instant,
+    requests_submitted: u64,
+    requests_finished: u64,
+    requests_rejected: u64,
+    tokens_generated: u64,
+    prefill_tokens: u64,
+    engine_steps: u64,
+    ttft: LogHistogram,
+    tpot: LogHistogram,
+    e2e: LogHistogram,
+    step_time: LogHistogram,
+    cache_utilization: f64,
+    running: usize,
+    waiting: usize,
+}
+
+/// Cloneable handle.
+#[derive(Clone)]
+pub struct Metrics(Arc<Mutex<Inner>>);
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics(Arc::new(Mutex::new(Inner {
+            started: Instant::now(),
+            requests_submitted: 0,
+            requests_finished: 0,
+            requests_rejected: 0,
+            tokens_generated: 0,
+            prefill_tokens: 0,
+            engine_steps: 0,
+            ttft: LogHistogram::latency(),
+            tpot: LogHistogram::latency(),
+            e2e: LogHistogram::latency(),
+            step_time: LogHistogram::latency(),
+            cache_utilization: 0.0,
+            running: 0,
+            waiting: 0,
+        })))
+    }
+
+    pub fn on_submit(&self) {
+        self.0.lock().unwrap().requests_submitted += 1;
+    }
+
+    pub fn on_reject(&self) {
+        self.0.lock().unwrap().requests_rejected += 1;
+    }
+
+    pub fn on_first_token(&self, ttft: f64, prefill_tokens: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.ttft.record(ttft);
+        m.prefill_tokens += prefill_tokens as u64;
+        m.tokens_generated += 1;
+    }
+
+    pub fn on_token(&self, tpot: f64) {
+        let mut m = self.0.lock().unwrap();
+        m.tpot.record(tpot);
+        m.tokens_generated += 1;
+    }
+
+    pub fn on_finish(&self, e2e: f64) {
+        let mut m = self.0.lock().unwrap();
+        m.e2e.record(e2e);
+        m.requests_finished += 1;
+    }
+
+    pub fn on_step(&self, secs: f64, running: usize, waiting: usize, cache_util: f64) {
+        let mut m = self.0.lock().unwrap();
+        m.engine_steps += 1;
+        m.step_time.record(secs);
+        m.running = running;
+        m.waiting = waiting;
+        m.cache_utilization = cache_util;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.0.lock().unwrap();
+        let uptime = m.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            uptime,
+            requests_submitted: m.requests_submitted,
+            requests_finished: m.requests_finished,
+            requests_rejected: m.requests_rejected,
+            tokens_generated: m.tokens_generated,
+            prefill_tokens: m.prefill_tokens,
+            engine_steps: m.engine_steps,
+            tokens_per_sec: m.tokens_generated as f64 / uptime.max(1e-9),
+            ttft_p50: m.ttft.quantile(0.5),
+            ttft_p99: m.ttft.quantile(0.99),
+            tpot_p50: m.tpot.quantile(0.5),
+            tpot_p99: m.tpot.quantile(0.99),
+            e2e_p50: m.e2e.quantile(0.5),
+            e2e_p99: m.e2e.quantile(0.99),
+            step_p50: m.step_time.quantile(0.5),
+            cache_utilization: m.cache_utilization,
+            running: m.running,
+            waiting: m.waiting,
+        }
+    }
+}
+
+/// Point-in-time view (JSON-serializable for the /metrics endpoint).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub uptime: f64,
+    pub requests_submitted: u64,
+    pub requests_finished: u64,
+    pub requests_rejected: u64,
+    pub tokens_generated: u64,
+    pub prefill_tokens: u64,
+    pub engine_steps: u64,
+    pub tokens_per_sec: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub tpot_p50: f64,
+    pub tpot_p99: f64,
+    pub e2e_p50: f64,
+    pub e2e_p99: f64,
+    pub step_p50: f64,
+    pub cache_utilization: f64,
+    pub running: usize,
+    pub waiting: usize,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::obj;
+        obj([
+            ("uptime_s", self.uptime.into()),
+            ("requests_submitted", (self.requests_submitted as usize).into()),
+            ("requests_finished", (self.requests_finished as usize).into()),
+            ("requests_rejected", (self.requests_rejected as usize).into()),
+            ("tokens_generated", (self.tokens_generated as usize).into()),
+            ("prefill_tokens", (self.prefill_tokens as usize).into()),
+            ("engine_steps", (self.engine_steps as usize).into()),
+            ("tokens_per_sec", self.tokens_per_sec.into()),
+            ("ttft_p50_s", self.ttft_p50.into()),
+            ("ttft_p99_s", self.ttft_p99.into()),
+            ("tpot_p50_s", self.tpot_p50.into()),
+            ("tpot_p99_s", self.tpot_p99.into()),
+            ("e2e_p50_s", self.e2e_p50.into()),
+            ("e2e_p99_s", self.e2e_p99.into()),
+            ("step_p50_s", self.step_p50.into()),
+            ("cache_utilization", self.cache_utilization.into()),
+            ("running", self.running.into()),
+            ("waiting", self.waiting.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_first_token(0.1, 8);
+        m.on_token(0.02);
+        m.on_token(0.03);
+        m.on_finish(0.5);
+        let s = m.snapshot();
+        assert_eq!(s.requests_submitted, 2);
+        assert_eq!(s.requests_rejected, 1);
+        assert_eq!(s.requests_finished, 1);
+        assert_eq!(s.tokens_generated, 3);
+        assert_eq!(s.prefill_tokens, 8);
+        assert!(s.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn snapshot_serializes() {
+        let m = Metrics::new();
+        m.on_step(0.01, 2, 3, 0.4);
+        let j = m.snapshot().to_json();
+        assert_eq!(j.get("running").as_usize(), Some(2));
+        assert_eq!(j.get("waiting").as_usize(), Some(3));
+        assert!(j.get("cache_utilization").as_f64().unwrap() > 0.39);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m2.on_submit();
+        assert_eq!(m.snapshot().requests_submitted, 1);
+    }
+}

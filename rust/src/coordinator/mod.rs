@@ -1,0 +1,36 @@
+//! The serving coordinator — the L3 system the paper's future-work section
+//! calls for: a vLLM-style framework with the INT8 KV cache as a
+//! first-class feature.
+//!
+//! Architecture (single-process, channel-wired):
+//!
+//! ```text
+//! clients → Router (ids, validation, dispatch)
+//!             │ mpsc
+//!             ▼
+//!          Engine thread (owns Runtime/backend + KvCacheManager)
+//!             │  step loop:
+//!             │    admit (admission control, memory watermark)
+//!             │    plan  (continuous batcher: prefill + decode sets)
+//!             │    run   (prefill artifacts / decode artifacts / CPU ref)
+//!             ▼
+//!          per-request token streams → clients, Metrics
+//! ```
+//!
+//! The PJRT runtime is not `Send`, so each engine owns its backend on a
+//! dedicated thread; the router holds only channel handles and is freely
+//! shareable. Multiple engines (e.g. INT8 + FP32 side-by-side) can run
+//! under one router for A/B serving.
+
+pub mod admission;
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+
+pub use engine::{EngineConfig, EngineHandle};
+pub use metrics::MetricsSnapshot;
+pub use request::{FinishReason, Request, RequestId, TokenEvent};
+pub use router::Router;

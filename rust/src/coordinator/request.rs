@@ -1,0 +1,144 @@
+//! Request/response types and per-request lifecycle state.
+
+use crate::model::sample::SamplingParams;
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// Priority class: within a class, FCFS; across classes, higher first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Batch = 0,
+    Normal = 1,
+    Interactive = 2,
+}
+
+/// A generation request as submitted to the router.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub priority: Priority,
+    /// Stop generation when this token is produced (e.g. b'\n'); None = run
+    /// to max_new_tokens.
+    pub stop_token: Option<i32>,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            priority: Priority::Normal,
+            stop_token: None,
+            arrival: Instant::now(),
+        }
+    }
+
+    /// Total tokens this request may occupy in the cache.
+    pub fn max_total_tokens(&self) -> usize {
+        self.prompt.len() + self.max_new_tokens
+    }
+}
+
+/// Why a request finished.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit max_new_tokens.
+    Length,
+    /// Produced the stop token.
+    Stop,
+    /// Hit the model's max sequence length.
+    CapacityExhausted,
+    /// Rejected before any compute (admission/validation), with cause.
+    Rejected(String),
+    /// Engine error mid-generation.
+    Error(String),
+}
+
+/// Streamed events for one request.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// First token (prefill output): carries time-to-first-token.
+    First { token: i32, ttft: f64 },
+    Token(i32),
+    Finished { reason: FinishReason, tokens: usize, elapsed: f64 },
+}
+
+/// Sending side of a request's event stream.
+pub type EventTx = mpsc::Sender<TokenEvent>;
+/// Receiving side handed back to the submitter.
+pub type EventRx = mpsc::Receiver<TokenEvent>;
+
+/// Collect a full response from an event stream (blocking helper used by
+/// examples/tests and the HTTP layer's non-streaming mode).
+pub fn collect_response(rx: &EventRx) -> (Vec<i32>, FinishReason, f64, f64) {
+    let mut tokens = Vec::new();
+    let mut ttft = 0.0;
+    loop {
+        match rx.recv() {
+            Ok(TokenEvent::First { token, ttft: t }) => {
+                ttft = t;
+                tokens.push(token);
+            }
+            Ok(TokenEvent::Token(t)) => tokens.push(t),
+            Ok(TokenEvent::Finished { reason, elapsed, .. }) => {
+                return (tokens, reason, ttft, elapsed)
+            }
+            Err(_) => {
+                return (tokens, FinishReason::Error("stream dropped".into()), ttft, 0.0)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_token_budget() {
+        let r = Request::new(1, vec![1, 2, 3], 10);
+        assert_eq!(r.max_total_tokens(), 13);
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(Priority::Interactive > Priority::Normal);
+        assert!(Priority::Normal > Priority::Batch);
+    }
+
+    #[test]
+    fn collect_response_drains_stream() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(TokenEvent::First { token: 5, ttft: 0.1 }).unwrap();
+        tx.send(TokenEvent::Token(6)).unwrap();
+        tx.send(TokenEvent::Finished {
+            reason: FinishReason::Length,
+            tokens: 2,
+            elapsed: 0.5,
+        })
+        .unwrap();
+        let (tokens, reason, ttft, elapsed) = collect_response(&rx);
+        assert_eq!(tokens, vec![5, 6]);
+        assert_eq!(reason, FinishReason::Length);
+        assert_eq!(ttft, 0.1);
+        assert_eq!(elapsed, 0.5);
+    }
+
+    #[test]
+    fn collect_response_handles_dropped_stream() {
+        let (tx, rx) = mpsc::channel::<TokenEvent>();
+        tx.send(TokenEvent::Token(1)).unwrap();
+        drop(tx);
+        let (tokens, reason, _, _) = collect_response(&rx);
+        assert_eq!(tokens, vec![1]);
+        assert!(matches!(reason, FinishReason::Error(_)));
+    }
+}

@@ -1,0 +1,159 @@
+//! Waiting-queue + running-set bookkeeping.
+//!
+//! Policy: priority classes with FCFS inside each class (stable order);
+//! the batcher decides how many waiting requests to prefill per step and
+//! the admission module decides whether they fit. No preemption: once
+//! running, a sequence keeps its cache blocks until it finishes (admission
+//! is conservative to make this deadlock-free).
+
+use super::request::{Priority, Request, RequestId};
+use std::collections::VecDeque;
+
+/// A running sequence's generation state.
+#[derive(Debug)]
+pub struct Running {
+    pub req: Request,
+    pub seq: crate::kvcache::manager::SeqId,
+    /// Last token fed/produced (input of the next decode step).
+    pub last_token: i32,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Per-request sampling RNG.
+    pub rng: crate::util::rng::Rng,
+    /// Time of first token (set after prefill).
+    pub first_token_at: Option<std::time::Instant>,
+    pub events: super::request::EventTx,
+}
+
+/// The scheduler state.
+#[derive(Default)]
+pub struct Scheduler {
+    /// One FCFS queue per priority class (index = Priority as usize).
+    waiting: [VecDeque<(Request, super::request::EventTx)>; 3],
+    pub running: Vec<Running>,
+}
+
+impl Scheduler {
+    pub fn new() -> Scheduler {
+        Scheduler::default()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.waiting_len() == 0 && self.running.is_empty()
+    }
+
+    pub fn enqueue(&mut self, req: Request, events: super::request::EventTx) {
+        self.waiting[req.priority as usize].push_back((req, events));
+    }
+
+    /// Next waiting request in scheduling order (highest class first,
+    /// FCFS within class), without removing it.
+    pub fn peek_waiting(&self) -> Option<&Request> {
+        for class in [Priority::Interactive, Priority::Normal, Priority::Batch] {
+            if let Some((req, _)) = self.waiting[class as usize].front() {
+                return Some(req);
+            }
+        }
+        None
+    }
+
+    /// Pop the request returned by `peek_waiting`.
+    pub fn pop_waiting(&mut self) -> Option<(Request, super::request::EventTx)> {
+        for class in [Priority::Interactive, Priority::Normal, Priority::Batch] {
+            if let Some(item) = self.waiting[class as usize].pop_front() {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Move a request into the running set.
+    pub fn start(&mut self, running: Running) {
+        self.running.push(running);
+    }
+
+    /// Remove a finished sequence; returns it for cleanup.
+    pub fn finish(&mut self, id: RequestId) -> Option<Running> {
+        let idx = self.running.iter().position(|r| r.req.id == id)?;
+        Some(self.running.swap_remove(idx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: RequestId, prio: Priority) -> (Request, super::super::request::EventTx) {
+        let mut r = Request::new(id, vec![1], 4);
+        r.priority = prio;
+        let (tx, _rx) = mpsc::channel();
+        // Leak the receiver for test simplicity: sender stays usable.
+        std::mem::forget(_rx);
+        (r, tx)
+    }
+
+    #[test]
+    fn fcfs_within_class() {
+        let mut s = Scheduler::new();
+        for id in 1..=3 {
+            let (r, tx) = req(id, Priority::Normal);
+            s.enqueue(r, tx);
+        }
+        assert_eq!(s.pop_waiting().unwrap().0.id, 1);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 2);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 3);
+    }
+
+    #[test]
+    fn higher_priority_jumps_queue() {
+        let mut s = Scheduler::new();
+        let (r1, t1) = req(1, Priority::Batch);
+        let (r2, t2) = req(2, Priority::Interactive);
+        let (r3, t3) = req(3, Priority::Normal);
+        s.enqueue(r1, t1);
+        s.enqueue(r2, t2);
+        s.enqueue(r3, t3);
+        assert_eq!(s.peek_waiting().unwrap().id, 2);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 2);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 3);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 1);
+    }
+
+    #[test]
+    fn counts_track_state() {
+        let mut s = Scheduler::new();
+        assert!(s.is_idle());
+        let (r, tx) = req(1, Priority::Normal);
+        s.enqueue(r, tx);
+        assert_eq!(s.waiting_len(), 1);
+        assert!(!s.is_idle());
+    }
+
+    #[test]
+    fn finish_removes_from_running() {
+        let mut s = Scheduler::new();
+        let (r, tx) = req(9, Priority::Normal);
+        s.start(Running {
+            req: r,
+            seq: 1,
+            last_token: 0,
+            generated: 0,
+            rng: crate::util::rng::Rng::new(0),
+            first_token_at: None,
+            events: tx,
+        });
+        assert_eq!(s.running_len(), 1);
+        assert!(s.finish(9).is_some());
+        assert_eq!(s.running_len(), 0);
+        assert!(s.finish(9).is_none());
+    }
+}

@@ -1,0 +1,599 @@
+//! Engine-facing KV-cache manager.
+//!
+//! Owns one [`BlockPool`] shared by all sequences and all layers. Each
+//! sequence has 2·L block tables (K and V per layer) plus — for INT8
+//! caches — frozen per-channel scales computed at prefill time (one f32
+//! per layer × head × channel × {K,V}).
+//!
+//! **Frozen-scale decode.** The paper quantizes a complete cache post-hoc
+//! with per-channel scales (eq. 6). In streaming generation the column max
+//! isn't known up front, so this manager freezes the scales measured over
+//! the prompt (optionally inflated by `scale_margin`) and clamps later
+//! tokens into them — the error of this policy vs full requantization is
+//! measured by the ablation bench (`cargo bench --bench ablations`) and
+//! bounded in practice by RoPE keeping per-channel K statistics stationary
+//! (DESIGN.md §Hardware-Adaptation).
+
+use super::pool::{BlockPool, BlockShape};
+use super::table::BlockTable;
+use super::Precision;
+use crate::quant::quantize::quantize_one;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// Sequence handle.
+pub type SeqId = u64;
+
+/// Geometry of the cached model.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Maximum tokens per sequence (the decode artifact's S).
+    pub max_seq: usize,
+    /// Tokens per block.
+    pub block_size: usize,
+    /// Total blocks in the pool.
+    pub num_blocks: usize,
+    pub precision: Precision,
+    /// Scale inflation at prefill (headroom for out-of-range decode K/V).
+    pub scale_margin: f32,
+}
+
+impl CacheConfig {
+    /// Blocks required to hold `tokens` rows of one sequence across all
+    /// layer/K/V streams.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        BlockTable::blocks_for(tokens, self.block_size) * 2 * self.layers
+    }
+}
+
+/// Per-sequence cache state.
+pub struct SequenceCache {
+    pub id: SeqId,
+    pub len: usize,
+    /// tables[layer][0]=K, tables[layer][1]=V.
+    tables: Vec<[BlockTable; 2]>,
+    /// Frozen per-channel scales, `[layer][kv][heads*head_dim]`.
+    scales: Vec<[Vec<f32>; 2]>,
+}
+
+/// The manager.
+pub struct KvCacheManager {
+    cfg: CacheConfig,
+    pool: BlockPool,
+    seqs: HashMap<SeqId, SequenceCache>,
+    next_id: SeqId,
+}
+
+impl KvCacheManager {
+    pub fn new(cfg: CacheConfig) -> KvCacheManager {
+        let shape =
+            BlockShape { block_size: cfg.block_size, heads: cfg.heads, head_dim: cfg.head_dim };
+        KvCacheManager {
+            pool: BlockPool::new(cfg.num_blocks, shape, cfg.precision),
+            cfg,
+            seqs: HashMap::new(),
+            next_id: 1,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.pool.storage_bytes()
+    }
+
+    pub fn live_sequences(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Can a sequence of `tokens` total length be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.cfg.blocks_for_tokens(tokens) <= self.pool.free_blocks()
+    }
+
+    pub fn new_sequence(&mut self) -> SeqId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let hd = self.cfg.heads * self.cfg.head_dim;
+        let seq = SequenceCache {
+            id,
+            len: 0,
+            tables: (0..self.cfg.layers).map(|_| [BlockTable::new(), BlockTable::new()]).collect(),
+            scales: (0..self.cfg.layers).map(|_| [vec![0.0; hd], vec![0.0; hd]]).collect(),
+        };
+        self.seqs.insert(id, seq);
+        id
+    }
+
+    /// Fork a sequence: shares all current blocks copy-on-write (prefix
+    /// sharing for e.g. parallel sampling from one prompt).
+    pub fn fork(&mut self, src: SeqId) -> Result<SeqId> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let src_seq = self.seqs.get(&src).ok_or_else(|| anyhow!("fork of unknown seq {src}"))?;
+        let tables: Vec<[BlockTable; 2]> = src_seq
+            .tables
+            .iter()
+            .map(|pair| [pair[0].clone(), pair[1].clone()])
+            .collect();
+        let new = SequenceCache {
+            id,
+            len: src_seq.len,
+            scales: src_seq.scales.clone(),
+            tables,
+        };
+        for pair in &new.tables {
+            for t in pair {
+                for &b in t.blocks() {
+                    self.pool.retain(b);
+                }
+            }
+        }
+        self.seqs.insert(id, new);
+        Ok(id)
+    }
+
+    /// Release all blocks of a sequence.
+    pub fn free(&mut self, id: SeqId) {
+        if let Some(mut seq) = self.seqs.remove(&id) {
+            for pair in &mut seq.tables {
+                for t in pair {
+                    for b in t.drain() {
+                        self.pool.release(b);
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn seq_len(&self, id: SeqId) -> Option<usize> {
+        self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Frozen scales of one (layer, K|V) stream, length heads·head_dim.
+    pub fn scales(&self, id: SeqId, layer: usize, kv: usize) -> Result<&[f32]> {
+        Ok(&self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?.scales[layer][kv])
+    }
+
+    /// Write the prefill K/V for a sequence and freeze its scales.
+    ///
+    /// `k`/`v` are the prefill artifact outputs, layout `(L, H, S, d)`
+    /// flattened with only the first `len` token rows valid, where S is
+    /// inferred from the tensor size (bucketed prefill artifacts emit
+    /// S < max_seq; see EXPERIMENTS.md §Perf).
+    pub fn set_prefill(&mut self, id: SeqId, k: &[f32], v: &[f32], len: usize) -> Result<()> {
+        let (l, h, d) = (self.cfg.layers, self.cfg.heads, self.cfg.head_dim);
+        if k.len() % (l * h * d) != 0 || v.len() != k.len() {
+            bail!("prefill tensor size mismatch: {} not a multiple of {}", k.len(), l * h * d);
+        }
+        let s = k.len() / (l * h * d); // source sequence stride (bucket)
+        if len > s || len > self.cfg.max_seq {
+            bail!("prefill len {len} > stride {s} or max_seq {}", self.cfg.max_seq);
+        }
+        let seq = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+        if seq.len != 0 {
+            bail!("set_prefill on non-empty sequence {id}");
+        }
+        // Freeze scales: per (layer, kv, head, channel) abs-max over rows
+        // 0..len, divided by 127, inflated by the margin.
+        let margin = self.cfg.scale_margin;
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                let sc = &mut seq.scales[layer][kv];
+                for head in 0..h {
+                    let base = ((layer * h) + head) * s * d;
+                    for ch in 0..d {
+                        let mut m = 0.0f32;
+                        for t in 0..len {
+                            let val = data[base + t * d + ch].abs();
+                            if val > m {
+                                m = val;
+                            }
+                        }
+                        sc[head * d + ch] = m * margin / crate::QMAX;
+                    }
+                }
+            }
+        }
+        // Allocate blocks and write the rows.
+        let need = BlockTable::blocks_for(len, self.cfg.block_size);
+        for layer in 0..l {
+            for kv in 0..2 {
+                for _ in 0..need {
+                    let b = self.pool.alloc()?;
+                    self.seqs.get_mut(&id).unwrap().tables[layer][kv].push(b);
+                }
+            }
+        }
+        for pos in 0..len {
+            self.write_row_at(id, k, v, s, pos, pos)?;
+        }
+        self.seqs.get_mut(&id).unwrap().len = len;
+        Ok(())
+    }
+
+    /// Append one decode-step K/V row (layout `(L, H, d)` flattened).
+    pub fn append_row(&mut self, id: SeqId, k_new: &[f32], v_new: &[f32]) -> Result<()> {
+        let (l, h, d) = (self.cfg.layers, self.cfg.heads, self.cfg.head_dim);
+        if k_new.len() != l * h * d || v_new.len() != k_new.len() {
+            bail!("row tensor size mismatch");
+        }
+        let (pos, need_block) = {
+            let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+            if seq.len >= self.cfg.max_seq {
+                bail!("sequence {id} at capacity {}", self.cfg.max_seq);
+            }
+            (seq.len, seq.len % self.cfg.block_size == 0)
+        };
+        if need_block {
+            for layer in 0..l {
+                for kv in 0..2 {
+                    let b = self.pool.alloc()?;
+                    self.seqs.get_mut(&id).unwrap().tables[layer][kv].push(b);
+                }
+            }
+        }
+        // Copy-on-write the tail block if shared (forked sequences).
+        let tail_idx = pos / self.cfg.block_size;
+        for layer in 0..l {
+            for kv in 0..2 {
+                let cur = self.seqs[&id].tables[layer][kv].blocks()[tail_idx];
+                let uniq = self.pool.ensure_unique(cur)?;
+                if uniq != cur {
+                    self.seqs.get_mut(&id).unwrap().tables[layer][kv].replace(tail_idx, uniq);
+                }
+            }
+        }
+        for layer in 0..l {
+            for (kv, data) in [k_new, v_new].into_iter().enumerate() {
+                let row = &data[layer * h * d..(layer + 1) * h * d];
+                self.write_one_row(id, layer, kv, pos, row)?;
+            }
+        }
+        self.seqs.get_mut(&id).unwrap().len = pos + 1;
+        Ok(())
+    }
+
+    /// Write row `pos` of every layer/kv from (L,H,S,d)-shaped tensors
+    /// (prefill path; blocks must already exist). `s` is the source
+    /// sequence stride (may be a bucket < max_seq).
+    fn write_row_at(&mut self, id: SeqId, k: &[f32], v: &[f32], s: usize, src_row: usize, pos: usize) -> Result<()> {
+        let (l, h, d) = (self.cfg.layers, self.cfg.heads, self.cfg.head_dim);
+        let mut row = vec![0.0f32; h * d];
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                for head in 0..h {
+                    let base = ((layer * h) + head) * s * d + src_row * d;
+                    row[head * d..(head + 1) * d].copy_from_slice(&data[base..base + d]);
+                }
+                self.write_one_row(id, layer, kv, pos, &row)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Quantize (or copy) one (H, d) row into its block.
+    fn write_one_row(&mut self, id: SeqId, layer: usize, kv: usize, pos: usize, row: &[f32]) -> Result<()> {
+        let (h, d, bs) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
+        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+        let (block, in_row) = seq.tables[layer][kv].locate(pos, bs);
+        match self.cfg.precision {
+            Precision::Int8 => {
+                // Copy scales out to satisfy the borrow checker cheaply
+                // relative to the quantize loop below.
+                let scales = seq.scales[layer][kv].clone();
+                let blk = self.pool.block_i8_mut(block);
+                for head in 0..h {
+                    let off = (head * bs + in_row) * d;
+                    let src = &row[head * d..(head + 1) * d];
+                    let sc = &scales[head * d..(head + 1) * d];
+                    for i in 0..d {
+                        blk[off + i] = quantize_one(src[i], sc[i]);
+                    }
+                }
+            }
+            Precision::Fp32 => {
+                let blk = self.pool.block_f32_mut(block);
+                for head in 0..h {
+                    let off = (head * bs + in_row) * d;
+                    blk[off..off + d].copy_from_slice(&row[head * d..(head + 1) * d]);
+                }
+            }
+            Precision::Int4 => bail!("int4 serving path not implemented (bench-only precision)"),
+        }
+        Ok(())
+    }
+
+    /// Gather one (layer, K|V) stream into contiguous `(H, max_seq, d)`
+    /// staging (i8) — the decode artifact's cache input layout. Only the
+    /// first `len` rows are written; the artifact masks the rest by `pos`.
+    pub fn gather_i8(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [i8]) -> Result<usize> {
+        let (h, s, d, bs) =
+            (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
+        if dst.len() != h * s * d {
+            bail!("staging size mismatch: {} vs {}", dst.len(), h * s * d);
+        }
+        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+        let table = &seq.tables[layer][kv];
+        for (bi, &block) in table.blocks().iter().enumerate() {
+            let rows_here = bs.min(seq.len.saturating_sub(bi * bs));
+            if rows_here == 0 {
+                break;
+            }
+            let blk = self.pool.block_i8(block);
+            for head in 0..h {
+                let src = &blk[head * bs * d..(head * bs + rows_here) * d];
+                let doff = head * s * d + bi * bs * d;
+                dst[doff..doff + rows_here * d].copy_from_slice(src);
+            }
+        }
+        Ok(seq.len)
+    }
+
+    /// FP32 variant of [`Self::gather_i8`].
+    pub fn gather_f32(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [f32]) -> Result<usize> {
+        let (h, s, d, bs) =
+            (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
+        if dst.len() != h * s * d {
+            bail!("staging size mismatch");
+        }
+        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+        let table = &seq.tables[layer][kv];
+        for (bi, &block) in table.blocks().iter().enumerate() {
+            let rows_here = bs.min(seq.len.saturating_sub(bi * bs));
+            if rows_here == 0 {
+                break;
+            }
+            let blk = self.pool.block_f32(block);
+            for head in 0..h {
+                let src = &blk[head * bs * d..(head * bs + rows_here) * d];
+                let doff = head * s * d + bi * bs * d;
+                dst[doff..doff + rows_here * d].copy_from_slice(src);
+            }
+        }
+        Ok(seq.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(precision: Precision) -> CacheConfig {
+        CacheConfig {
+            layers: 2,
+            heads: 2,
+            head_dim: 8,
+            max_seq: 32,
+            block_size: 4,
+            num_blocks: 128,
+            precision,
+            scale_margin: 1.0,
+        }
+    }
+
+    fn prefill_tensors(c: &CacheConfig, len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let n = c.layers * c.heads * c.max_seq * c.head_dim;
+        let mut k = vec![0.0; n];
+        let mut v = vec![0.0; n];
+        let mut rng = Rng::new(seed);
+        // Fill only valid rows; leave padding as garbage-ish constants to
+        // verify it is never read.
+        for layer in 0..c.layers {
+            for head in 0..c.heads {
+                for t in 0..c.max_seq {
+                    for ch in 0..c.head_dim {
+                        let i = ((layer * c.heads + head) * c.max_seq + t) * c.head_dim + ch;
+                        if t < len {
+                            k[i] = rng.uniform(-1.0, 1.0);
+                            v[i] = rng.uniform(-1.0, 1.0);
+                        } else {
+                            k[i] = 99.0;
+                            v[i] = -99.0;
+                        }
+                    }
+                }
+            }
+        }
+        (k, v)
+    }
+
+    #[test]
+    fn prefill_roundtrip_within_quant_bound() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let len = 10;
+        let (k, v) = prefill_tensors(&c, len, 1);
+        m.set_prefill(id, &k, &v, len).unwrap();
+        assert_eq!(m.seq_len(id), Some(len));
+
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        let n = m.gather_i8(id, 1, 0, &mut staging).unwrap();
+        assert_eq!(n, len);
+        let scales = m.scales(id, 1, 0).unwrap().to_vec();
+        // Dequantize and compare against the original K rows of layer 1.
+        for head in 0..c.heads {
+            for t in 0..len {
+                for ch in 0..c.head_dim {
+                    let q = staging[(head * c.max_seq + t) * c.head_dim + ch];
+                    let s = scales[head * c.head_dim + ch];
+                    let got = q as f32 * s;
+                    let want = k[((1 * c.heads + head) * c.max_seq + t) * c.head_dim + ch];
+                    assert!(
+                        (got - want).abs() <= s / 2.0 + 1e-7,
+                        "t={t} ch={ch}: {got} vs {want} (s={s})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_then_gather_sees_new_rows() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 2);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+
+        let hd = c.layers * c.heads * c.head_dim;
+        let mut rng = Rng::new(3);
+        let mut k_new = vec![0.0f32; hd];
+        let mut v_new = vec![0.0f32; hd];
+        rng.fill_uniform(&mut k_new, -0.5, 0.5);
+        rng.fill_uniform(&mut v_new, -0.5, 0.5);
+        m.append_row(id, &k_new, &v_new).unwrap();
+        assert_eq!(m.seq_len(id), Some(5));
+
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        m.gather_i8(id, 0, 1, &mut staging).unwrap(); // layer 0, V
+        let scales = m.scales(id, 0, 1).unwrap();
+        for head in 0..c.heads {
+            for ch in 0..c.head_dim {
+                let q = staging[(head * c.max_seq + 4) * c.head_dim + ch];
+                let s = scales[head * c.head_dim + ch];
+                let want = v_new[head * c.head_dim + ch]; // layer 0
+                assert!((q as f32 * s - want).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn append_clamps_to_frozen_scales() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 4);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        // New row 100x outside the prefill range must clamp, not wrap.
+        let hd = c.layers * c.heads * c.head_dim;
+        let k_new = vec![100.0f32; hd];
+        let v_new = vec![-100.0f32; hd];
+        m.append_row(id, &k_new, &v_new).unwrap();
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        m.gather_i8(id, 0, 0, &mut staging).unwrap();
+        for head in 0..c.heads {
+            for ch in 0..c.head_dim {
+                let q = staging[(head * c.max_seq + 4) * c.head_dim + ch];
+                assert_eq!(q, 127, "clamped to +127");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_and_admission() {
+        let c = CacheConfig { num_blocks: 2 * 2 * 2, ..cfg(Precision::Int8) }; // 8 blocks
+        let mut m = KvCacheManager::new(c);
+        // One sequence of <=4 tokens needs 1 block x 2 layers x 2 (K,V) = 4.
+        assert!(m.can_admit(4));
+        assert!(m.can_admit(8)); // 8 blocks exactly
+        assert!(!m.can_admit(9));
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 5);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        assert_eq!(m.free_blocks(), 4);
+        assert!(!m.can_admit(8));
+        m.free(id);
+        assert_eq!(m.free_blocks(), 8);
+        assert_eq!(m.live_sequences(), 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_surfaces_as_error() {
+        let c = CacheConfig { num_blocks: 4, ..cfg(Precision::Int8) };
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 8, 6); // needs 2 blocks x4 streams = 8
+        assert!(m.set_prefill(id, &k, &v, 8).is_err());
+    }
+
+    #[test]
+    fn fp32_mode_roundtrips_exactly() {
+        let c = cfg(Precision::Fp32);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let len = 6;
+        let (k, v) = prefill_tensors(&c, len, 7);
+        m.set_prefill(id, &k, &v, len).unwrap();
+        let mut staging = vec![0f32; c.heads * c.max_seq * c.head_dim];
+        m.gather_f32(id, 0, 0, &mut staging).unwrap();
+        for head in 0..c.heads {
+            for t in 0..len {
+                for ch in 0..c.head_dim {
+                    let got = staging[(head * c.max_seq + t) * c.head_dim + ch];
+                    let want = k[((head) * c.max_seq + t) * c.head_dim + ch];
+                    assert_eq!(got, want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fork_shares_then_diverges() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let a = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 8);
+        m.set_prefill(a, &k, &v, 4).unwrap();
+        let used_before = c.num_blocks - m.free_blocks();
+        let b = m.fork(a).unwrap();
+        // Fork allocates nothing.
+        assert_eq!(c.num_blocks - m.free_blocks(), used_before);
+        // Appending to the fork triggers COW, not corruption of `a`.
+        let hd = c.layers * c.heads * c.head_dim;
+        m.append_row(b, &vec![0.25; hd], &vec![0.25; hd]).unwrap();
+        assert_eq!(m.seq_len(a), Some(4));
+        assert_eq!(m.seq_len(b), Some(5));
+        let mut sa = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        let mut sb = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        m.gather_i8(a, 0, 0, &mut sa).unwrap();
+        m.gather_i8(b, 0, 0, &mut sb).unwrap();
+        // Shared prefix identical.
+        for head in 0..c.heads {
+            for t in 0..4 {
+                for ch in 0..c.head_dim {
+                    let i = (head * c.max_seq + t) * c.head_dim + ch;
+                    assert_eq!(sa[i], sb[i]);
+                }
+            }
+        }
+        m.free(a);
+        m.free(b);
+        assert_eq!(m.free_blocks(), c.num_blocks, "all blocks returned");
+    }
+
+    #[test]
+    fn gather_rejects_bad_staging() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let mut tiny = vec![0i8; 3];
+        assert!(m.gather_i8(id, 0, 0, &mut tiny).is_err());
+    }
+
+    #[test]
+    fn sequence_at_capacity_errors() {
+        let c = CacheConfig { max_seq: 4, ..cfg(Precision::Int8) };
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 9);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        let hd = c.layers * c.heads * c.head_dim;
+        assert!(m.append_row(id, &vec![0.0; hd], &vec![0.0; hd]).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! Closed-form KV-cache memory model — Table 1 of the paper.
+//!
+//! `size = 2 × L × H × d × T × bytes_per_element` (eq. 2), plus — for
+//! quantized caches — the per-channel scale overhead the paper calls
+//! "negligible" (and this model makes precise: 2·L·H·d f32 per sequence).
+
+use super::Precision;
+use crate::util::stats::fmt_bytes;
+
+/// Model/cache dimensions for the memory calculation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryModel {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub seq_len: usize,
+    pub precision: Precision,
+}
+
+impl MemoryModel {
+    /// The paper's Table-1 example: L=32, H=32, d=128, T=131072, FP32.
+    pub fn table1_example() -> MemoryModel {
+        MemoryModel {
+            layers: 32,
+            heads: 32,
+            head_dim: 128,
+            seq_len: 131_072,
+            precision: Precision::Fp32,
+        }
+    }
+
+    /// Total cached elements: 2 (K and V) × L × H × d × T.
+    pub fn elements(&self) -> u64 {
+        2 * self.layers as u64
+            * self.heads as u64
+            * self.head_dim as u64
+            * self.seq_len as u64
+    }
+
+    /// Payload bytes (eq. 2).
+    pub fn payload_bytes(&self) -> u64 {
+        let per_token = 2 * self.layers * self.heads * self.head_dim;
+        self.seq_len as u64 * self.precision.bytes_for(per_token) as u64
+    }
+
+    /// Per-channel scale overhead for quantized caches: one f32 per
+    /// (K|V, layer, head, channel) — independent of T.
+    pub fn scale_overhead_bytes(&self) -> u64 {
+        match self.precision {
+            Precision::Fp32 => 0,
+            _ => (2 * self.layers * self.heads * self.head_dim * 4) as u64,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.payload_bytes() + self.scale_overhead_bytes()
+    }
+
+    /// Memory ratio vs an FP32 cache of the same dimensions.
+    pub fn compression_vs_fp32(&self) -> f64 {
+        let fp32 = MemoryModel { precision: Precision::Fp32, ..*self };
+        fp32.total_bytes() as f64 / self.total_bytes() as f64
+    }
+
+    /// With a fixed memory budget, the max sequence length this cache
+    /// supports (the "longer context windows" claim, §8 Conclusion).
+    pub fn max_seq_for_budget(&self, budget_bytes: u64) -> usize {
+        let per_token =
+            self.precision.bytes_for(2 * self.layers * self.heads * self.head_dim) as u64;
+        ((budget_bytes.saturating_sub(self.scale_overhead_bytes())) / per_token) as usize
+    }
+
+    /// With a fixed memory budget and this sequence length, how many
+    /// concurrent sequences fit (the "larger batch sizes" claim).
+    pub fn max_batch_for_budget(&self, budget_bytes: u64) -> usize {
+        let per_seq = self.total_bytes();
+        if per_seq == 0 {
+            return 0;
+        }
+        (budget_bytes / per_seq) as usize
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "L={} H={} d={} T={} {} -> {}",
+            self.layers,
+            self.heads,
+            self.head_dim,
+            self.seq_len,
+            self.precision.name(),
+            fmt_bytes(self.total_bytes() as f64)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reproduces_137gb() {
+        // Paper Table 1: ≈137 GB for the FP32 example.
+        let m = MemoryModel::table1_example();
+        let gb = m.total_bytes() as f64 / (1024.0 * 1024.0 * 1024.0);
+        assert!((gb - 128.0).abs() < 1.0 || (gb - 137.4).abs() < 1.0,
+            "paper says ≈137 GB (decimal GB) = 128 GiB; got {gb} GiB");
+        // In decimal gigabytes (the paper's unit):
+        let gb_dec = m.total_bytes() as f64 / 1e9;
+        assert!((gb_dec - 137.4).abs() < 0.1, "decimal GB {gb_dec}");
+    }
+
+    #[test]
+    fn fp16_is_half() {
+        // Paper: "Even with FP16, this is nearly 70 GB."
+        let m = MemoryModel::table1_example();
+        let fp16_bytes = m.elements() * 2;
+        assert!((fp16_bytes as f64 / 1e9 - 68.7).abs() < 0.1);
+    }
+
+    #[test]
+    fn int8_is_quarter_plus_scales() {
+        let m = MemoryModel { precision: Precision::Int8, ..MemoryModel::table1_example() };
+        let r = m.compression_vs_fp32();
+        assert!(r > 3.999 && r <= 4.0, "compression {r}");
+        // Scale overhead truly negligible at this scale: < 0.01%.
+        assert!((m.scale_overhead_bytes() as f64) < m.payload_bytes() as f64 * 1e-4);
+    }
+
+    #[test]
+    fn int4_is_eighth() {
+        let m = MemoryModel { precision: Precision::Int4, ..MemoryModel::table1_example() };
+        assert!(m.compression_vs_fp32() > 7.99);
+    }
+
+    #[test]
+    fn budget_inversions() {
+        let m = MemoryModel { precision: Precision::Int8, ..MemoryModel::table1_example() };
+        let budget = 16u64 * 1024 * 1024 * 1024; // a T4's 16 GB
+        let t_int8 = m.max_seq_for_budget(budget);
+        let t_fp32 = MemoryModel::table1_example().max_seq_for_budget(budget);
+        // ~4x longer context at int8; the per-channel scale overhead costs
+        // a handful of tokens off the exact 4x.
+        assert!(t_int8 <= t_fp32 * 4 && t_int8 >= t_fp32 * 4 - 16, "{t_int8} vs {}", t_fp32 * 4);
+        assert!(m.max_batch_for_budget(budget) < t_int8); // sanity
+    }
+
+    #[test]
+    fn batch_budget_scales_with_precision() {
+        let fp32 = MemoryModel { seq_len: 4096, ..MemoryModel::table1_example() };
+        let int8 = MemoryModel { precision: Precision::Int8, ..fp32 };
+        let budget = 64u64 << 30;
+        let b_fp32 = fp32.max_batch_for_budget(budget);
+        let b_int8 = int8.max_batch_for_budget(budget);
+        assert!(b_int8 >= b_fp32 * 3, "{b_int8} vs {b_fp32}"); // ≈4x
+    }
+
+    #[test]
+    fn describe_is_humane() {
+        let d = MemoryModel::table1_example().describe();
+        assert!(d.contains("T=131072") && d.contains("GiB"), "{d}");
+    }
+}

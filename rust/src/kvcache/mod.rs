@@ -1,0 +1,94 @@
+//! Paged KV cache with first-class INT8 (and INT4) pages.
+//!
+//! The paper's technique — per-channel INT8 quantization of cached K/V —
+//! embedded in a vLLM-style paged allocator:
+//!
+//! * [`pool`]: a preallocated slab of fixed-size blocks with a free list
+//!   and reference counts (refcounts enable prefix sharing / fork).
+//! * [`table`]: per-sequence block tables mapping token positions to
+//!   blocks, one table per (layer, K|V) stream.
+//! * [`manager`]: the engine-facing API — create/fork/free sequences,
+//!   quantize-and-append K/V rows (frozen prefill scales, clamped),
+//!   gather a sequence's stream into the contiguous staging layout the
+//!   decode artifact consumes, watermark admission queries.
+//! * [`memory_model`]: the closed-form Table-1 calculator.
+//!
+//! Precision is a per-cache config ([`Precision`]); FP32 and INT8 caches
+//! run through identical paths so the serving benches compare them
+//! apples-to-apples.
+
+pub mod manager;
+pub mod memory_model;
+pub mod pool;
+pub mod table;
+
+pub use manager::{KvCacheManager, SequenceCache};
+pub use memory_model::MemoryModel;
+pub use pool::{BlockId, BlockPool};
+
+/// Storage precision of cache pages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    Fp32,
+    Int8,
+    Int4,
+}
+
+impl Precision {
+    /// Payload bytes for `n` elements.
+    pub fn bytes_for(self, n: usize) -> usize {
+        match self {
+            Precision::Fp32 => n * 4,
+            Precision::Int8 => n,
+            Precision::Int4 => n.div_ceil(2),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s {
+            "fp32" | "f32" => Precision::Fp32,
+            "int8" | "i8" => Precision::Int8,
+            "int4" | "i4" => Precision::Int4,
+            _ => return None,
+        })
+    }
+
+    /// Compression vs FP32 payload (4x / 8x — §5.1, §8.1).
+    pub fn compression(self) -> f64 {
+        4.0 / (self.bytes_for(1024) as f64 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_sizes() {
+        assert_eq!(Precision::Fp32.bytes_for(10), 40);
+        assert_eq!(Precision::Int8.bytes_for(10), 10);
+        assert_eq!(Precision::Int4.bytes_for(10), 5);
+        assert_eq!(Precision::Int4.bytes_for(11), 6);
+    }
+
+    #[test]
+    fn precision_compression() {
+        assert_eq!(Precision::Fp32.compression(), 1.0);
+        assert_eq!(Precision::Int8.compression(), 4.0);
+        assert_eq!(Precision::Int4.compression(), 8.0);
+    }
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(Precision::parse("int8"), Some(Precision::Int8));
+        assert_eq!(Precision::parse("nope"), None);
+    }
+}

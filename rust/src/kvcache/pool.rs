@@ -1,0 +1,287 @@
+//! Block pool: a preallocated slab of fixed-size pages with a free list
+//! and reference counts.
+//!
+//! One pool backs every sequence's K and V streams across all layers.
+//! A block holds `block_size` token rows of one (layer, K|V) stream in
+//! `[heads][block_size][head_dim]` layout (head-major so gathers copy one
+//! contiguous `block_size × head_dim` slab per head).
+//!
+//! Refcounts implement copy-on-write prefix sharing: `fork` bumps counts;
+//! writers call `ensure_unique` (copy-on-write) before mutating.
+
+use super::Precision;
+use anyhow::{bail, Result};
+
+/// Index of a block in the pool.
+pub type BlockId = u32;
+
+/// Geometry of one block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockShape {
+    pub block_size: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+impl BlockShape {
+    pub fn elements(&self) -> usize {
+        self.block_size * self.heads * self.head_dim
+    }
+}
+
+/// Fixed-capacity page allocator. Payload is stored as raw bytes sized by
+/// the pool's precision; accessors expose typed views.
+pub struct BlockPool {
+    shape: BlockShape,
+    precision: Precision,
+    block_bytes: usize,
+    storage: Vec<u8>,
+    refcounts: Vec<u32>,
+    free: Vec<BlockId>,
+    num_blocks: usize,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize, shape: BlockShape, precision: Precision) -> BlockPool {
+        let block_bytes = precision.bytes_for(shape.elements());
+        BlockPool {
+            shape,
+            precision,
+            block_bytes,
+            storage: vec![0u8; num_blocks * block_bytes],
+            refcounts: vec![0; num_blocks],
+            free: (0..num_blocks as BlockId).rev().collect(),
+            num_blocks,
+        }
+    }
+
+    pub fn shape(&self) -> BlockShape {
+        self.shape
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.num_blocks - self.free.len()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.num_blocks.max(1) as f64
+    }
+
+    /// Bytes of payload memory held by this pool.
+    pub fn storage_bytes(&self) -> usize {
+        self.storage.len()
+    }
+
+    /// Allocate one block (refcount 1, zeroed).
+    pub fn alloc(&mut self) -> Result<BlockId> {
+        let Some(id) = self.free.pop() else {
+            bail!("block pool exhausted ({} blocks)", self.num_blocks)
+        };
+        debug_assert_eq!(self.refcounts[id as usize], 0);
+        self.refcounts[id as usize] = 1;
+        self.block_mut_raw(id).fill(0);
+        Ok(id)
+    }
+
+    /// Increment a block's refcount (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.refcounts[id as usize] > 0, "retain of free block {id}");
+        self.refcounts[id as usize] += 1;
+    }
+
+    /// Decrement; returns the block to the free list at zero.
+    pub fn release(&mut self, id: BlockId) {
+        let rc = &mut self.refcounts[id as usize];
+        assert!(*rc > 0, "release of free block {id}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn refcount(&self, id: BlockId) -> u32 {
+        self.refcounts[id as usize]
+    }
+
+    /// Copy-on-write: if `id` is shared, copy its payload into a fresh
+    /// block, release the original, and return the new id; otherwise
+    /// return `id` unchanged.
+    pub fn ensure_unique(&mut self, id: BlockId) -> Result<BlockId> {
+        if self.refcounts[id as usize] <= 1 {
+            return Ok(id);
+        }
+        let new = self.alloc()?;
+        let (src_range, dst_range) = (self.range(id), self.range(new));
+        // Split borrows: ranges are disjoint (different blocks).
+        let (a, b) = if src_range.start < dst_range.start {
+            let (lo, hi) = self.storage.split_at_mut(dst_range.start);
+            (&lo[src_range.clone()], &mut hi[..self.block_bytes])
+        } else {
+            let (lo, hi) = self.storage.split_at_mut(src_range.start);
+            (&hi[..self.block_bytes], &mut lo[dst_range.clone()])
+        };
+        b.copy_from_slice(a);
+        self.release(id);
+        Ok(new)
+    }
+
+    fn range(&self, id: BlockId) -> std::ops::Range<usize> {
+        let s = id as usize * self.block_bytes;
+        s..s + self.block_bytes
+    }
+
+    /// Raw byte view of a block.
+    pub fn block_raw(&self, id: BlockId) -> &[u8] {
+        &self.storage[self.range(id)]
+    }
+
+    pub fn block_mut_raw(&mut self, id: BlockId) -> &mut [u8] {
+        let r = self.range(id);
+        &mut self.storage[r]
+    }
+
+    /// Typed i8 view (Int8 pools).
+    pub fn block_i8(&self, id: BlockId) -> &[i8] {
+        assert_eq!(self.precision, Precision::Int8);
+        let raw = self.block_raw(id);
+        unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len()) }
+    }
+
+    pub fn block_i8_mut(&mut self, id: BlockId) -> &mut [i8] {
+        assert_eq!(self.precision, Precision::Int8);
+        let raw = self.block_mut_raw(id);
+        unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut i8, raw.len()) }
+    }
+
+    /// Typed f32 view (Fp32 pools).
+    pub fn block_f32(&self, id: BlockId) -> &[f32] {
+        assert_eq!(self.precision, Precision::Fp32);
+        let raw = self.block_raw(id);
+        unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4) }
+    }
+
+    pub fn block_f32_mut(&mut self, id: BlockId) -> &mut [f32] {
+        assert_eq!(self.precision, Precision::Fp32);
+        let raw = self.block_mut_raw(id);
+        unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut f32, raw.len() / 4) }
+    }
+
+    /// Element offset of (head, row) within a block (precision-agnostic,
+    /// in elements not bytes).
+    pub fn slot(&self, head: usize, row: usize) -> usize {
+        debug_assert!(head < self.shape.heads && row < self.shape.block_size);
+        (head * self.shape.block_size + row) * self.shape.head_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> BlockShape {
+        BlockShape { block_size: 4, heads: 2, head_dim: 8 }
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut p = BlockPool::new(3, shape(), Precision::Int8);
+        assert_eq!(p.free_blocks(), 3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.used_blocks(), 2);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 2);
+        let c = p.alloc().unwrap();
+        assert_eq!(c, a, "freed block is reused");
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let _a = p.alloc().unwrap();
+        assert!(p.alloc().is_err());
+    }
+
+    #[test]
+    fn alloc_zeroes_payload() {
+        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let a = p.alloc().unwrap();
+        p.block_i8_mut(a).fill(7);
+        p.release(a);
+        let b = p.alloc().unwrap();
+        assert!(p.block_i8(b).iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn refcounting() {
+        let mut p = BlockPool::new(2, shape(), Precision::Int8);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        assert_eq!(p.refcount(a), 2);
+        p.release(a);
+        assert_eq!(p.free_blocks(), 1, "still held");
+        p.release(a);
+        assert_eq!(p.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of free block")]
+    fn double_free_panics() {
+        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    fn cow_copies_shared_blocks() {
+        let mut p = BlockPool::new(2, shape(), Precision::Int8);
+        let a = p.alloc().unwrap();
+        p.block_i8_mut(a)[0] = 42;
+        p.retain(a); // shared twice
+        let b = p.ensure_unique(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.block_i8(b)[0], 42, "payload copied");
+        assert_eq!(p.refcount(a), 1, "original released once");
+        // Unshared block is returned as-is.
+        let c = p.ensure_unique(b).unwrap();
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn fp32_views() {
+        let mut p = BlockPool::new(1, shape(), Precision::Fp32);
+        let a = p.alloc().unwrap();
+        p.block_f32_mut(a)[5] = 1.5;
+        assert_eq!(p.block_f32(a)[5], 1.5);
+        assert_eq!(p.block_f32(a).len(), shape().elements());
+    }
+
+    #[test]
+    fn slot_layout_head_major() {
+        let p = BlockPool::new(1, shape(), Precision::Int8);
+        assert_eq!(p.slot(0, 0), 0);
+        assert_eq!(p.slot(0, 1), 8);
+        assert_eq!(p.slot(1, 0), 4 * 8);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let p8 = BlockPool::new(10, shape(), Precision::Int8);
+        let p32 = BlockPool::new(10, shape(), Precision::Fp32);
+        assert_eq!(p32.storage_bytes(), p8.storage_bytes() * 4);
+    }
+}

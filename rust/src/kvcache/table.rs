@@ -1,0 +1,92 @@
+//! Per-sequence block tables: position → block mapping for one
+//! (layer, K|V) stream.
+
+use super::pool::BlockId;
+
+/// Ordered list of blocks backing one stream of one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+}
+
+impl BlockTable {
+    pub fn new() -> BlockTable {
+        BlockTable::default()
+    }
+
+    pub fn push(&mut self, id: BlockId) {
+        self.blocks.push(id);
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    pub fn len(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Block + in-block row for a token position.
+    pub fn locate(&self, pos: usize, block_size: usize) -> (BlockId, usize) {
+        let b = pos / block_size;
+        assert!(b < self.blocks.len(), "position {pos} beyond table ({} blocks)", self.blocks.len());
+        (self.blocks[b], pos % block_size)
+    }
+
+    /// Number of blocks needed to hold `len` tokens.
+    pub fn blocks_for(len: usize, block_size: usize) -> usize {
+        len.div_ceil(block_size)
+    }
+
+    /// Replace a block id (after copy-on-write).
+    pub fn replace(&mut self, idx: usize, id: BlockId) {
+        self.blocks[idx] = id;
+    }
+
+    pub fn drain(&mut self) -> Vec<BlockId> {
+        std::mem::take(&mut self.blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_maps_positions() {
+        let mut t = BlockTable::new();
+        t.push(7);
+        t.push(3);
+        assert_eq!(t.locate(0, 4), (7, 0));
+        assert_eq!(t.locate(3, 4), (7, 3));
+        assert_eq!(t.locate(4, 4), (3, 0));
+        assert_eq!(t.locate(6, 4), (3, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond table")]
+    fn locate_past_end_panics() {
+        let t = BlockTable::new();
+        t.locate(0, 4);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        assert_eq!(BlockTable::blocks_for(0, 16), 0);
+        assert_eq!(BlockTable::blocks_for(1, 16), 1);
+        assert_eq!(BlockTable::blocks_for(16, 16), 1);
+        assert_eq!(BlockTable::blocks_for(17, 16), 2);
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut t = BlockTable::new();
+        t.push(1);
+        assert_eq!(t.drain(), vec![1]);
+        assert!(t.is_empty());
+    }
+}

@@ -1,0 +1,39 @@
+//! # kvq — INT8 KV-cache quantization serving stack
+//!
+//! Reproduction of *"GPU-Accelerated INT8 Quantization for KV Cache
+//! Compression in Large Language Models"* as a three-layer Rust + JAX +
+//! Pallas system (see DESIGN.md):
+//!
+//! * [`quant`] — the paper's core algorithm in pure Rust: per-channel
+//!   scale computation, the four kernel-optimization strategies (naive,
+//!   tiled, coarsened, vectorized), dequantization, and the paper's three
+//!   error metrics. This doubles as the CPU baseline for every figure.
+//! * [`runtime`] — PJRT bridge: loads the AOT-lowered Pallas/JAX artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them from the hot path.
+//! * [`kvcache`] — paged KV-cache manager with first-class INT8 pages and
+//!   the Table-1 memory model.
+//! * [`coordinator`] — the serving framework: request router, continuous
+//!   batcher, prefill/decode scheduler, engine loop, metrics.
+//! * [`model`] — token-level LM runner (specs, synthetic weights, byte
+//!   tokenizer, generation loop) over the AOT artifacts.
+//! * [`server`] — std-only HTTP/1.1 front end.
+//! * [`bench`] — workload generators and the harness that regenerates
+//!   every table and figure in the paper.
+//! * [`config`] — typed configuration system (JSON + CLI overrides).
+//! * [`util`] — from-scratch substrates (JSON, CLI args, RNG, thread
+//!   pool, stats, logging, property testing) — the offline environment
+//!   provides no crates beyond `xla`/`anyhow` (DESIGN.md §3).
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod kvcache;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+/// Symmetric INT8 quantization bound used throughout the paper: values are
+/// clamped to `[-QMAX, QMAX]` (−128 is unused, keeping the grid symmetric).
+pub const QMAX: f32 = 127.0;

@@ -1,0 +1,306 @@
+//! `kvq` — the CLI entrypoint.
+//!
+//! Subcommands:
+//!   serve      start the HTTP serving stack (INT8 KV cache by default)
+//!   generate   one-shot generation from the command line
+//!   quantize   quantize a synthetic matrix and report errors/timings
+//!   memory     the Table-1 memory model calculator
+//!   validate   run the artifact-vs-CPU cross checks
+//!   report     print engine metrics from a running server
+
+use anyhow::{bail, Result};
+use kvq::config::{Backend, ServeConfig};
+use kvq::coordinator::engine;
+use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::model::runner::{CpuBackend, PjrtBackend};
+use kvq::model::weights::Weights;
+use kvq::model::{ByteTokenizer, ModelSpec};
+use kvq::runtime::Runtime;
+use kvq::server::http::{http_request, HttpServer};
+use kvq::server::KvqService;
+use kvq::util::args::Args;
+use std::rc::Rc;
+use std::sync::Arc;
+
+fn main() {
+    let mut args = Args::parse();
+    let cmd = args.subcommand().unwrap_or_else(|| "help".to_string());
+    let code = match run(&cmd, args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: Args) -> Result<()> {
+    match cmd {
+        "serve" => serve(args),
+        "generate" => generate(args),
+        "quantize" => quantize(args),
+        "memory" => memory(args),
+        "validate" => validate(args),
+        "report" => report(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `kvq help`"),
+    }
+}
+
+const HELP: &str = "\
+kvq — INT8 KV-cache quantization serving stack
+
+USAGE: kvq <command> [flags]
+
+COMMANDS:
+  serve      start the HTTP server
+             --model kvq-3m|kvq-25m --precision int8|fp32 --port 8080
+             --backend pjrt|cpu --decode-kernel plain|pallas
+             --config file.json (flags override file)
+  generate   one-shot generation
+             --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
+  quantize   quantize a synthetic (T, D) matrix, report errors + timings
+             --tokens 4096 --dim 256 --variant vectorized|all
+  memory     Table-1 memory calculator
+             --layers 32 --heads 32 --head-dim 128 --seq-len 131072
+  validate   cross-check artifacts vs the Rust CPU oracle
+  report     fetch /metrics from a running server (--port 8080)
+";
+
+fn build_serve_config(args: &Args) -> Result<ServeConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(path)?,
+        None => ServeConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+/// Spawn an engine per the config (factory closures own the thread-local
+/// PJRT state).
+fn spawn_engine(cfg: &ServeConfig) -> (kvq::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
+    let ecfg = cfg.engine_config();
+    match cfg.backend {
+        Backend::Pjrt => {
+            let model = cfg.model.clone();
+            let dir = cfg.artifact_dir.clone();
+            let seed = cfg.weight_seed;
+            let kernel = cfg.decode_kernel;
+            engine::spawn(ecfg, move || {
+                let rt = Rc::new(Runtime::new(&dir)?);
+                Ok(Box::new(PjrtBackend::new(rt, &model, seed, kernel)?)
+                    as Box<dyn kvq::model::LmBackend>)
+            })
+        }
+        Backend::CpuRef => {
+            let model = cfg.model.clone();
+            let dir = cfg.artifact_dir.clone();
+            let seed = cfg.weight_seed;
+            engine::spawn(ecfg, move || {
+                let spec = load_spec(&dir, &model)?;
+                let w = Weights::synthetic(&spec, seed);
+                Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+            })
+        }
+    }
+}
+
+/// Model spec from the manifest (so CPU mode matches artifact geometry),
+/// falling back to test_tiny when artifacts are absent.
+fn load_spec(dir: &str, model: &str) -> Result<ModelSpec> {
+    let path = std::path::Path::new(dir).join("manifest.json");
+    if path.exists() {
+        let manifest = kvq::runtime::Manifest::load(dir)?;
+        for m in &manifest.models {
+            if m.get("name").as_str() == Some(model) {
+                return ModelSpec::from_json(m);
+            }
+        }
+        bail!("model {model:?} not in manifest");
+    }
+    Ok(ModelSpec::test_tiny())
+}
+
+fn serve(args: Args) -> Result<()> {
+    let cfg = build_serve_config(&args)?;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let (handle, _join) = spawn_engine(&cfg);
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine(cfg.precision.name(), handle.clone());
+    let service = Arc::new(KvqService::new(Arc::new(router)));
+    let server = HttpServer::bind(cfg.port)?;
+    println!(
+        "kvq serving on http://127.0.0.1:{} (model={} precision={} backend={:?})",
+        server.local_port(),
+        cfg.model,
+        cfg.precision.name(),
+        cfg.backend
+    );
+    let svc = service.clone();
+    server.serve(move |req| svc.handle(req));
+    Ok(())
+}
+
+fn generate(args: Args) -> Result<()> {
+    let cfg = build_serve_config(&args)?;
+    let prompt_text = args.str_or("prompt", "Hello, world");
+    let max_new = args.usize_or("max-new", 32);
+    let temperature = args.f64_or("temperature", 0.0) as f32;
+    let sampling = kvq::model::sample::SamplingParams {
+        temperature,
+        top_k: args.usize_or("top-k", 0),
+        seed: args.u64_or("seed", 0),
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let (handle, join) = spawn_engine(&cfg);
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("main", handle.clone());
+
+    let tok = ByteTokenizer::new();
+    let (_, rx) = router.submit(tok.encode(&prompt_text), max_new, sampling)?;
+    let (tokens, reason, ttft, elapsed) = kvq::coordinator::request::collect_response(&rx);
+    println!("prompt : {prompt_text:?}");
+    println!("output : {:?}", tok.decode(&tokens));
+    println!(
+        "tokens : {}  finish: {reason:?}  ttft: {:.1}ms  total: {:.1}ms  ({:.1} tok/s)",
+        tokens.len(),
+        ttft * 1e3,
+        elapsed * 1e3,
+        tokens.len() as f64 / elapsed.max(1e-9)
+    );
+    handle.drain();
+    join.join().ok();
+    Ok(())
+}
+
+fn quantize(args: Args) -> Result<()> {
+    use kvq::quant::{self, Variant};
+    let t = args.usize_or("tokens", 4096);
+    let d = args.usize_or("dim", 256);
+    let variant = args.str_or("variant", "all");
+    let seed = args.u64_or("seed", 0xF00D);
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+
+    let k = kvq::quant::Fp32Matrix::random_uniform(t, d, -1.0, 1.0, seed);
+    let scales = quant::compute_scales(&k);
+    let variants: Vec<Variant> = if variant == "all" {
+        Variant::ALL.to_vec()
+    } else {
+        vec![Variant::from_name(&variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant:?}"))?]
+    };
+
+    println!(
+        "matrix {t}x{d} ({} elements, {:.1} MiB fp32)",
+        t * d,
+        (t * d * 4) as f64 / 1048576.0
+    );
+    let bencher = kvq::util::harness::Bencher::default();
+    for v in variants {
+        let mut out = kvq::quant::Int8Matrix::zeros(t, d);
+        let m = bencher.measure(v.name(), || {
+            quant::quantize::quantize_variant(v, &k, &scales, &mut out);
+        });
+        let rec = quant::dequantize(&out);
+        println!(
+            "  {:<11} {:>10}  max_err={:.5}  l2={:.3}  ratio={:.2}x",
+            v.name(),
+            kvq::util::stats::fmt_duration(m.median()),
+            quant::max_abs_error(&k, &rec),
+            quant::l2_error(&k, &rec),
+            out.compression_ratio(),
+        );
+    }
+    Ok(())
+}
+
+fn memory(args: Args) -> Result<()> {
+    use kvq::kvcache::{MemoryModel, Precision};
+    let m = MemoryModel {
+        layers: args.usize_or("layers", 32),
+        heads: args.usize_or("heads", 32),
+        head_dim: args.usize_or("head-dim", 128),
+        seq_len: args.usize_or("seq-len", 131_072),
+        precision: Precision::parse(&args.str_or("precision", "fp32"))
+            .ok_or_else(|| anyhow::anyhow!("bad precision"))?,
+    };
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    println!("{}", m.describe());
+    println!("  elements      : {}", m.elements());
+    println!("  payload       : {}", kvq::util::stats::fmt_bytes(m.payload_bytes() as f64));
+    println!(
+        "  scale overhead: {}",
+        kvq::util::stats::fmt_bytes(m.scale_overhead_bytes() as f64)
+    );
+    println!("  vs fp32       : {:.2}x smaller", m.compression_vs_fp32());
+    Ok(())
+}
+
+fn validate(args: Args) -> Result<()> {
+    let dir = args.str_or("artifacts", &kvq::runtime::default_artifact_dir());
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let rt = Rc::new(Runtime::new(&dir)?);
+
+    // Kernel cross-check on the smallest shape.
+    let (t, d, tag) = (2048usize, 128usize, "2048x128");
+    let k = kvq::quant::Fp32Matrix::random_uniform(t, d, -1.0, 1.0, 0xC4EC);
+    let scales = kvq::quant::compute_scales(&k);
+    let mut cpu = kvq::quant::Int8Matrix::zeros(t, d);
+    kvq::quant::quantize::quantize_naive(&k, &scales, &mut cpu);
+    for v in kvq::quant::Variant::ALL {
+        let out = rt.run(
+            &format!("quantize_{}_{tag}", v.name()),
+            &[
+                kvq::runtime::HostTensor::f32(k.data.clone(), &[t, d]),
+                kvq::runtime::HostTensor::f32(scales.clone(), &[d]),
+            ],
+        )?;
+        let ok = out[0].as_i8()? == cpu.data.as_slice();
+        println!("quantize_{:<11} vs CPU: {}", v.name(), if ok { "OK" } else { "MISMATCH" });
+        if !ok {
+            bail!("artifact mismatch for {}", v.name());
+        }
+    }
+
+    // Model cross-check.
+    let pjrt = PjrtBackend::new(
+        rt.clone(),
+        "kvq-3m",
+        0xA11CE,
+        kvq::model::runner::DecodeKernel::PlainXla,
+    )?;
+    let spec = pjrt.spec().clone();
+    let cpu_model = CpuBackend::new(spec.clone(), Weights::synthetic(&spec, 0xA11CE));
+    use kvq::model::LmBackend;
+    let tokens: Vec<i32> = "validation".bytes().map(|b| b as i32).collect();
+    let a = pjrt.prefill(&tokens, tokens.len())?;
+    let b = cpu_model.prefill(&tokens, tokens.len())?;
+    let diff = a
+        .logits
+        .iter()
+        .zip(&b.logits)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    println!("prefill kvq-3m PJRT vs CPU oracle: max|Δlogit| = {diff:.2e}");
+    if diff > 5e-3 {
+        bail!("model parity failure");
+    }
+    println!("validate: all checks passed");
+    Ok(())
+}
+
+fn report(args: Args) -> Result<()> {
+    let port = args.usize_or("port", 8080) as u16;
+    args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    let (status, body) = http_request(port, "GET", "/metrics", None)?;
+    if status != 200 {
+        bail!("/metrics returned {status}");
+    }
+    println!("{body}");
+    Ok(())
+}

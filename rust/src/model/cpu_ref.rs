@@ -1,0 +1,455 @@
+//! Pure-Rust transformer oracle.
+//!
+//! Implements *exactly* the math of `python/compile/model.py` (pre-RMSNorm
+//! GPT, tanh-GELU, RoPE, tied LM head, streaming-softmax decode over an
+//! INT8 cache with frozen scales) so that:
+//!
+//! 1. the engine can run without PJRT (unit/integration tests, fallback),
+//! 2. PJRT artifact numerics can be cross-validated from Rust
+//!    (rust/tests/engine_e2e.rs asserts logits agreement),
+//! 3. the serving benches have a host-compute baseline.
+//!
+//! Layouts match the artifacts: caches `(L, H, S, d)`, scales `(L, H, d)`,
+//! new rows `(L, H, d)`, all flattened row-major.
+
+use super::spec::ModelSpec;
+use super::weights::Weights;
+
+/// y += x @ w, where x: (m,), w: (m, n) row-major, y: (n,).
+fn matvec_acc(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
+    debug_assert_eq!(y.len(), n);
+    debug_assert_eq!(w.len(), x.len() * n);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (yj, wj) in y.iter_mut().zip(row) {
+            *yj += xi * wj;
+        }
+    }
+}
+
+fn matvec(x: &[f32], w: &[f32], n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; n];
+    matvec_acc(x, w, n, &mut y);
+    y
+}
+
+fn rmsnorm(x: &[f32], w: &[f32]) -> Vec<f32> {
+    let var = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (var + 1e-5).sqrt();
+    x.iter().zip(w).map(|(v, g)| v * r * g).collect()
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// RoPE over one (d,)-sized head row at position `pos` (low/high halves).
+fn rope(row: &mut [f32], pos: usize) {
+    let d = row.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = (10000.0f32).powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (row[i], row[half + i]);
+        row[i] = a * cos - b * sin;
+        row[half + i] = a * sin + b * cos;
+    }
+}
+
+/// Outputs of a prefill pass: logits at position len-1 plus the full FP32
+/// caches in artifact layout.
+pub struct CpuPrefill {
+    pub logits: Vec<f32>,
+    /// (L, H, S, d) with rows >= len zeroed.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// The oracle model.
+pub struct CpuModel {
+    pub spec: ModelSpec,
+    pub weights: Weights,
+}
+
+impl CpuModel {
+    pub fn new(spec: ModelSpec, weights: Weights) -> CpuModel {
+        CpuModel { spec, weights }
+    }
+
+    fn layer_param(&self, layer: usize, name: &str) -> &[f32] {
+        self.weights.param(&format!("l{layer}.{name}"))
+    }
+
+    /// Full-sequence forward over `tokens[..len]`.
+    pub fn prefill(&self, tokens: &[i32], len: usize) -> CpuPrefill {
+        let sp = &self.spec;
+        let (l, h, d, m, smax) = (sp.layers, sp.heads, sp.head_dim, sp.d_model(), sp.max_seq);
+        assert!(len >= 1 && len <= smax && tokens.len() >= len);
+        let emb = self.weights.param("embedding");
+
+        // Residual stream for each position.
+        let mut xs: Vec<Vec<f32>> = (0..len)
+            .map(|t| {
+                let id = tokens[t] as usize;
+                emb[id * m..(id + 1) * m].to_vec()
+            })
+            .collect();
+
+        let mut k_cache = vec![0.0f32; l * h * smax * d];
+        let mut v_cache = vec![0.0f32; l * h * smax * d];
+
+        for layer in 0..l {
+            let (wq, wk, wv, wo) = (
+                self.layer_param(layer, "wq"),
+                self.layer_param(layer, "wk"),
+                self.layer_param(layer, "wv"),
+                self.layer_param(layer, "wo"),
+            );
+            let (ln1, ln2) = (self.layer_param(layer, "ln1"), self.layer_param(layer, "ln2"));
+            let (w1, w2) = (self.layer_param(layer, "w1"), self.layer_param(layer, "w2"));
+
+            // Projections for all positions (with RoPE on q, k).
+            let mut qs = vec![vec![0.0f32; m]; len];
+            for t in 0..len {
+                let xn = rmsnorm(&xs[t], ln1);
+                let q = matvec(&xn, wq, m);
+                let k = matvec(&xn, wk, m);
+                let v = matvec(&xn, wv, m);
+                for head in 0..h {
+                    let mut qh = q[head * d..(head + 1) * d].to_vec();
+                    let mut kh = k[head * d..(head + 1) * d].to_vec();
+                    rope(&mut qh, t);
+                    rope(&mut kh, t);
+                    qs[t][head * d..(head + 1) * d].copy_from_slice(&qh);
+                    let base = ((layer * h + head) * smax + t) * d;
+                    k_cache[base..base + d].copy_from_slice(&kh);
+                    v_cache[base..base + d]
+                        .copy_from_slice(&v[head * d..(head + 1) * d]);
+                }
+            }
+
+            // Causal attention + MLP per position.
+            for t in 0..len {
+                let mut attn_out = vec![0.0f32; m];
+                for head in 0..h {
+                    let qh = &qs[t][head * d..(head + 1) * d];
+                    // scores over 0..=t
+                    let mut scores = Vec::with_capacity(t + 1);
+                    for u in 0..=t {
+                        let base = ((layer * h + head) * smax + u) * d;
+                        let kh = &k_cache[base..base + d];
+                        let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
+                        scores.push(dot / (d as f32).sqrt());
+                    }
+                    let mx = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let mut denom = 0.0f32;
+                    let mut acc = vec![0.0f32; d];
+                    for (u, &sc) in scores.iter().enumerate() {
+                        let w = (sc - mx).exp();
+                        denom += w;
+                        let base = ((layer * h + head) * smax + u) * d;
+                        let vh = &v_cache[base..base + d];
+                        for (a, b) in acc.iter_mut().zip(vh) {
+                            *a += w * b;
+                        }
+                    }
+                    for (o, a) in attn_out[head * d..(head + 1) * d].iter_mut().zip(&acc) {
+                        *o = a / denom;
+                    }
+                }
+                matvec_acc(&attn_out, wo, m, &mut xs[t]);
+                let xn = rmsnorm(&xs[t], ln2);
+                let hidden: Vec<f32> =
+                    matvec(&xn, w1, sp.d_ff).into_iter().map(gelu).collect();
+                matvec_acc(&hidden, w2, m, &mut xs[t]);
+            }
+        }
+
+        // Final norm + tied LM head at the last valid position.
+        let xf = rmsnorm(&xs[len - 1], self.weights.param("ln_f"));
+        let logits = self.lm_head(&xf);
+        CpuPrefill { logits, k: k_cache, v: v_cache }
+    }
+
+    fn lm_head(&self, x: &[f32]) -> Vec<f32> {
+        let sp = &self.spec;
+        let m = sp.d_model();
+        let emb = self.weights.param("embedding");
+        (0..sp.vocab)
+            .map(|vtok| {
+                let row = &emb[vtok * m..(vtok + 1) * m];
+                x.iter().zip(row).map(|(a, b)| a * b).sum()
+            })
+            .collect()
+    }
+
+    /// Single-token decode over an INT8 cache (artifact layouts; see
+    /// module docs). `pos` = number of valid cache rows = this token's
+    /// position. Returns (logits, k_new (L,H,d), v_new (L,H,d)).
+    pub fn decode_i8(
+        &self,
+        token: i32,
+        pos: usize,
+        kq: &[i8],
+        k_scales: &[f32],
+        vq: &[i8],
+        v_scales: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.decode_impl(token, pos, |layer, head, t, ch, kv| {
+            let sp = &self.spec;
+            let (h, smax, d) = (sp.heads, sp.max_seq, sp.head_dim);
+            let base = ((layer * h + head) * smax + t) * d + ch;
+            let sidx = (layer * h + head) * d + ch;
+            match kv {
+                0 => kq[base] as f32 * k_scales[sidx],
+                _ => vq[base] as f32 * v_scales[sidx],
+            }
+        })
+    }
+
+    /// Single-token decode over an FP32 cache.
+    pub fn decode_f32(
+        &self,
+        token: i32,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        self.decode_impl(token, pos, |layer, head, t, ch, kv| {
+            let sp = &self.spec;
+            let (h, smax, d) = (sp.heads, sp.max_seq, sp.head_dim);
+            let base = ((layer * h + head) * smax + t) * d + ch;
+            match kv {
+                0 => k[base],
+                _ => v[base],
+            }
+        })
+    }
+
+    fn decode_impl(
+        &self,
+        token: i32,
+        pos: usize,
+        cache_at: impl Fn(usize, usize, usize, usize, usize) -> f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let sp = &self.spec;
+        let (l, h, d, m) = (sp.layers, sp.heads, sp.head_dim, sp.d_model());
+        let emb = self.weights.param("embedding");
+        let mut x = emb[token as usize * m..(token as usize + 1) * m].to_vec();
+        let mut k_news = vec![0.0f32; l * h * d];
+        let mut v_news = vec![0.0f32; l * h * d];
+
+        for layer in 0..l {
+            let (wq, wk, wv, wo) = (
+                self.layer_param(layer, "wq"),
+                self.layer_param(layer, "wk"),
+                self.layer_param(layer, "wv"),
+                self.layer_param(layer, "wo"),
+            );
+            let (ln1, ln2) = (self.layer_param(layer, "ln1"), self.layer_param(layer, "ln2"));
+            let (w1, w2) = (self.layer_param(layer, "w1"), self.layer_param(layer, "w2"));
+
+            let xn = rmsnorm(&x, ln1);
+            let q = matvec(&xn, wq, m);
+            let k_new = matvec(&xn, wk, m);
+            let v_new = matvec(&xn, wv, m);
+
+            let mut attn_out = vec![0.0f32; m];
+            for head in 0..h {
+                let mut qh = q[head * d..(head + 1) * d].to_vec();
+                let mut kh = k_new[head * d..(head + 1) * d].to_vec();
+                rope(&mut qh, pos);
+                rope(&mut kh, pos);
+                let vh = &v_new[head * d..(head + 1) * d];
+                k_news[(layer * h + head) * d..(layer * h + head + 1) * d]
+                    .copy_from_slice(&kh);
+                v_news[(layer * h + head) * d..(layer * h + head + 1) * d]
+                    .copy_from_slice(vh);
+
+                // History scores (0..pos) + current token's score.
+                let mut mx = f32::NEG_INFINITY;
+                let mut scores = Vec::with_capacity(pos + 1);
+                for t in 0..pos {
+                    let mut dot = 0.0f32;
+                    for ch in 0..d {
+                        dot += qh[ch] * cache_at(layer, head, t, ch, 0);
+                    }
+                    let sc = dot / (d as f32).sqrt();
+                    mx = mx.max(sc);
+                    scores.push(sc);
+                }
+                let s_cur: f32 =
+                    qh.iter().zip(&kh).map(|(a, b)| a * b).sum::<f32>() / (d as f32).sqrt();
+                mx = mx.max(s_cur);
+
+                let mut denom = 0.0f32;
+                let mut acc = vec![0.0f32; d];
+                for (t, &sc) in scores.iter().enumerate() {
+                    let w = (sc - mx).exp();
+                    denom += w;
+                    for ch in 0..d {
+                        acc[ch] += w * cache_at(layer, head, t, ch, 1);
+                    }
+                }
+                let w_cur = (s_cur - mx).exp();
+                denom += w_cur;
+                for (a, b) in acc.iter_mut().zip(vh) {
+                    *a += w_cur * b;
+                }
+                for (o, a) in attn_out[head * d..(head + 1) * d].iter_mut().zip(&acc) {
+                    *o = a / denom;
+                }
+            }
+            matvec_acc(&attn_out, wo, m, &mut x);
+            let xn = rmsnorm(&x, ln2);
+            let hidden: Vec<f32> = matvec(&xn, w1, sp.d_ff).into_iter().map(gelu).collect();
+            matvec_acc(&hidden, w2, m, &mut x);
+        }
+
+        let xf = rmsnorm(&x, self.weights.param("ln_f"));
+        (self.lm_head(&xf), k_news, v_news)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize::quantize_one;
+    use crate::util::rng::Rng;
+
+    fn model() -> CpuModel {
+        let spec = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&spec, 42);
+        CpuModel::new(spec, w)
+    }
+
+    fn quantize_cache(
+        spec: &ModelSpec,
+        cache: &[f32],
+        len: usize,
+    ) -> (Vec<i8>, Vec<f32>) {
+        let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+        let mut q = vec![0i8; l * h * s * d];
+        let mut scales = vec![0.0f32; l * h * d];
+        for li in 0..l {
+            for hi in 0..h {
+                for ch in 0..d {
+                    let mut m = 0.0f32;
+                    for t in 0..len {
+                        m = m.max(cache[((li * h + hi) * s + t) * d + ch].abs());
+                    }
+                    scales[(li * h + hi) * d + ch] = m / crate::QMAX;
+                }
+                for t in 0..len {
+                    for ch in 0..d {
+                        let i = ((li * h + hi) * s + t) * d + ch;
+                        q[i] = quantize_one(cache[i], scales[(li * h + hi) * d + ch]);
+                    }
+                }
+            }
+        }
+        (q, scales)
+    }
+
+    #[test]
+    fn prefill_shapes_and_determinism() {
+        let m = model();
+        let tokens: Vec<i32> = (0..10).map(|i| i % 64).collect();
+        let a = m.prefill(&tokens, 8);
+        let b = m.prefill(&tokens, 8);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.logits.len(), m.spec.vocab);
+        assert_eq!(a.k.len(), m.spec.layers * m.spec.heads * m.spec.max_seq * m.spec.head_dim);
+        // Rows beyond len stay zero.
+        let base = m.spec.max_seq - 1;
+        for li in 0..m.spec.layers {
+            let idx = ((li * m.spec.heads) * m.spec.max_seq + base) * m.spec.head_dim;
+            assert_eq!(a.k[idx], 0.0);
+        }
+    }
+
+    #[test]
+    fn logits_are_finite_and_varied() {
+        let m = model();
+        let tokens: Vec<i32> = vec![1, 2, 3, 4, 5];
+        let p = m.prefill(&tokens, 5);
+        assert!(p.logits.iter().all(|v| v.is_finite()));
+        let mx = p.logits.iter().cloned().fold(f32::MIN, f32::max);
+        let mn = p.logits.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(mx > mn, "degenerate logits");
+    }
+
+    #[test]
+    fn incremental_decode_matches_full_prefill() {
+        // decode(token n | quantized cache of 0..n-1) ≈ prefill(0..n):
+        // the Rust twin of python/tests/test_model.py.
+        let m = model();
+        let mut rng = Rng::new(5);
+        let tokens: Vec<i32> = (0..12).map(|_| rng.below(64) as i32).collect();
+        for n in [1usize, 4, 9] {
+            let full = m.prefill(&tokens, n + 1);
+            let pre = m.prefill(&tokens, n);
+            let (kq, ks) = quantize_cache(&m.spec, &pre.k, n);
+            let (vq, vs) = quantize_cache(&m.spec, &pre.v, n);
+            let (logits, _, _) = m.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs);
+            let argmax_full =
+                full.logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+            let argmax_dec =
+                logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+            assert_eq!(argmax_dec, argmax_full, "greedy token diverged at n={n}");
+            let max_diff = logits
+                .iter()
+                .zip(&full.logits)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 0.2, "logits diff {max_diff} at n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_fp32_matches_prefill_tightly() {
+        let m = model();
+        let mut rng = Rng::new(6);
+        let tokens: Vec<i32> = (0..8).map(|_| rng.below(64) as i32).collect();
+        let n = 6;
+        let full = m.prefill(&tokens, n + 1);
+        let pre = m.prefill(&tokens, n);
+        let (logits, _, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v);
+        let max_diff = logits
+            .iter()
+            .zip(&full.logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-4, "fp32 decode should be near-exact, diff {max_diff}");
+    }
+
+    #[test]
+    fn decode_emits_same_kv_row_as_prefill() {
+        let m = model();
+        let tokens: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let n = 5;
+        let full = m.prefill(&tokens, n + 1);
+        let pre = m.prefill(&tokens, n);
+        let (_, k_new, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v);
+        // Layer-0 K row at position n matches (deeper layers see residual
+        // differences only via cache precision — fp32 here, so all match).
+        let sp = &m.spec;
+        for li in 0..sp.layers {
+            for hi in 0..sp.heads {
+                for ch in 0..sp.head_dim {
+                    let got = k_new[(li * sp.heads + hi) * sp.head_dim + ch];
+                    let want =
+                        full.k[((li * sp.heads + hi) * sp.max_seq + n) * sp.head_dim + ch];
+                    assert!(
+                        (got - want).abs() < 5e-4,
+                        "layer {li} head {hi} ch {ch}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Token-level language model over the AOT artifacts.
+//!
+//! * [`spec`] — architecture hyper-parameters (mirrors the Python
+//!   `ModelSpec`; parsed from the artifact manifest, which records the
+//!   param ABI).
+//! * [`weights`] — deterministic synthetic weight generation (the repo has
+//!   no network access for real checkpoints; DESIGN.md §Substitutions).
+//! * [`tokenizer`] — byte-level tokenizer (vocab 256).
+//! * [`cpu_ref`] — pure-Rust transformer oracle implementing exactly the
+//!   same math as `python/compile/model.py`; used as a PJRT-free backend
+//!   for engine tests and to cross-validate artifact numerics.
+//! * [`runner`] — the [`runner::LmBackend`] trait + PJRT-backed
+//!   implementation (params staged on device once, executed per step).
+//! * [`sample`] — greedy / temperature / top-k sampling.
+
+pub mod cpu_ref;
+pub mod runner;
+pub mod sample;
+pub mod spec;
+pub mod tokenizer;
+pub mod weights;
+
+pub use runner::{DecodeResult, LmBackend, PjrtBackend, PrefillResult};
+pub use spec::ModelSpec;
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,265 @@
+//! The engine-facing model backend trait and its two implementations.
+//!
+//! * [`PjrtBackend`] — the production path: prefill/decode artifacts
+//!   executed via PJRT, with model weights staged on the device once at
+//!   construction (per-step inputs are the token/pos scalars and the
+//!   gathered cache staging buffers).
+//! * [`CpuBackend`] — the pure-Rust oracle ([`super::cpu_ref::CpuModel`])
+//!   behind the same trait, used for tests and PJRT-free operation.
+
+use super::cpu_ref::CpuModel;
+use super::spec::ModelSpec;
+use super::weights::Weights;
+use crate::runtime::{HostTensor, Runtime};
+use anyhow::{anyhow, Context, Result};
+use std::rc::Rc;
+
+/// Prefill output: last-position logits + FP32 caches `(L, H, S, d)`.
+pub struct PrefillResult {
+    pub logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Decode output: logits + the new token's K/V rows `(L, H, d)`.
+pub struct DecodeResult {
+    pub logits: Vec<f32>,
+    pub k_new: Vec<f32>,
+    pub v_new: Vec<f32>,
+}
+
+/// What the engine needs from a model implementation.
+pub trait LmBackend {
+    fn spec(&self) -> &ModelSpec;
+
+    /// Forward over `tokens[..len]` (tokens may be shorter than max_seq;
+    /// implementations pad).
+    fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult>;
+
+    /// Single-token decode over the INT8 cache (artifact layouts).
+    fn decode_i8(
+        &self,
+        token: i32,
+        pos: usize,
+        kq: &[i8],
+        k_scales: &[f32],
+        vq: &[i8],
+        v_scales: &[f32],
+    ) -> Result<DecodeResult>;
+
+    /// Single-token decode over the FP32 cache (baseline path).
+    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult>;
+}
+
+// ---------------------------------------------------------------------------
+// CPU oracle backend.
+// ---------------------------------------------------------------------------
+
+pub struct CpuBackend {
+    model: CpuModel,
+}
+
+impl CpuBackend {
+    pub fn new(spec: ModelSpec, weights: Weights) -> CpuBackend {
+        CpuBackend { model: CpuModel::new(spec, weights) }
+    }
+}
+
+impl LmBackend for CpuBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.model.spec
+    }
+
+    fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult> {
+        let out = self.model.prefill(tokens, len);
+        Ok(PrefillResult { logits: out.logits, k: out.k, v: out.v })
+    }
+
+    fn decode_i8(
+        &self,
+        token: i32,
+        pos: usize,
+        kq: &[i8],
+        k_scales: &[f32],
+        vq: &[i8],
+        v_scales: &[f32],
+    ) -> Result<DecodeResult> {
+        let (logits, k_new, v_new) = self.model.decode_i8(token, pos, kq, k_scales, vq, v_scales);
+        Ok(DecodeResult { logits, k_new, v_new })
+    }
+
+    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult> {
+        let (logits, k_new, v_new) = self.model.decode_f32(token, pos, k, v);
+        Ok(DecodeResult { logits, k_new, v_new })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend.
+// ---------------------------------------------------------------------------
+
+/// Which decode artifact the PJRT backend uses for the INT8 path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeKernel {
+    /// `decode_<model>`: plain-XLA history attention.
+    PlainXla,
+    /// `decode_pallas_<model>`: fused Pallas dequant-attention kernel.
+    Pallas,
+}
+
+pub struct PjrtBackend {
+    rt: Rc<Runtime>,
+    spec: ModelSpec,
+    /// Weights staged on device, in artifact argument order.
+    param_buffers: Vec<xla::PjRtBuffer>,
+    decode_kernel: DecodeKernel,
+    /// Available prefill bucket sizes (sorted ascending, ending with
+    /// max_seq). Prompts run in the smallest bucket that fits, cutting
+    /// the O(S²) prefill cost for short prompts.
+    prefill_buckets: Vec<usize>,
+}
+
+impl PjrtBackend {
+    /// Build a backend for `model` (e.g. "kvq-3m"), staging its synthetic
+    /// weights on the device. Validates the param ABI against the manifest.
+    pub fn new(
+        rt: Rc<Runtime>,
+        model: &str,
+        seed: u64,
+        decode_kernel: DecodeKernel,
+    ) -> Result<PjrtBackend> {
+        let mj = rt
+            .manifest
+            .models
+            .iter()
+            .find(|m| m.get("name").as_str() == Some(model))
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?;
+        let spec = ModelSpec::from_json(mj)?;
+        // Cross-check the ABI recorded by aot.py.
+        let entry = rt.manifest.entry(&format!("decode_{model}"))?;
+        if let Some(params) = entry.meta.get("params").as_arr() {
+            spec.check_abi(params).context("param ABI drift between aot.py and spec.rs")?;
+        }
+        let weights = Weights::synthetic(&spec, seed);
+        let mut param_buffers = Vec::with_capacity(weights.params.len());
+        for (p, shape) in weights.params.iter().zip(&weights.shapes) {
+            param_buffers.push(rt.stage_f32(p, shape)?);
+        }
+        // Discover bucketed prefill artifacts (prefill_<model>_s<N>).
+        let prefix = format!("prefill_{model}_s");
+        let mut prefill_buckets: Vec<usize> = rt
+            .manifest
+            .entries
+            .keys()
+            .filter_map(|n| n.strip_prefix(&prefix).and_then(|s| s.parse().ok()))
+            .collect();
+        prefill_buckets.push(spec.max_seq);
+        prefill_buckets.sort_unstable();
+        prefill_buckets.dedup();
+        crate::info!(
+            "staged {} params ({:.1} MiB) for {model}; prefill buckets {:?}",
+            param_buffers.len(),
+            weights.total_bytes() as f64 / (1024.0 * 1024.0),
+            prefill_buckets
+        );
+        Ok(PjrtBackend { rt, spec, param_buffers, decode_kernel, prefill_buckets })
+    }
+
+    fn run_with_params(&self, name: &str, extra: &[xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let exe = self.rt.load(name)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + extra.len());
+        args.extend(self.param_buffers.iter());
+        args.extend(extra.iter());
+        exe.run_b(&args)
+    }
+}
+
+impl LmBackend for PjrtBackend {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult> {
+        // Smallest bucket that fits the prompt (last bucket == max_seq).
+        let s = *self
+            .prefill_buckets
+            .iter()
+            .find(|&&b| b >= len)
+            .unwrap_or(&self.spec.max_seq);
+        let mut padded = vec![0i32; s];
+        padded[..tokens.len().min(s)].copy_from_slice(&tokens[..tokens.len().min(s)]);
+        let extra = vec![
+            self.rt.stage_i32(&padded, &[s])?,
+            self.rt.stage_i32(&[len as i32], &[])?,
+        ];
+        let name = if s == self.spec.max_seq {
+            format!("prefill_{}", self.spec.name)
+        } else {
+            format!("prefill_{}_s{s}", self.spec.name)
+        };
+        let mut out = self.run_with_params(&name, &extra)?;
+        if out.len() != 3 {
+            anyhow::bail!("prefill returned {} outputs", out.len());
+        }
+        let v = out.pop().unwrap().into_f32()?;
+        let k = out.pop().unwrap().into_f32()?;
+        let logits = out.pop().unwrap().into_f32()?;
+        Ok(PrefillResult { logits, k, v })
+    }
+
+    fn decode_i8(
+        &self,
+        token: i32,
+        pos: usize,
+        kq: &[i8],
+        k_scales: &[f32],
+        vq: &[i8],
+        v_scales: &[f32],
+    ) -> Result<DecodeResult> {
+        let sp = &self.spec;
+        let (l, h, s, d) = (sp.layers, sp.heads, sp.max_seq, sp.head_dim);
+        let extra = vec![
+            self.rt.stage_i32(&[token], &[])?,
+            self.rt.stage_i32(&[pos as i32], &[])?,
+            self.rt.stage_i8(kq, &[l, h, s, d])?,
+            self.rt.stage_f32(k_scales, &[l, h, d])?,
+            self.rt.stage_i8(vq, &[l, h, s, d])?,
+            self.rt.stage_f32(v_scales, &[l, h, d])?,
+        ];
+        let name = match self.decode_kernel {
+            DecodeKernel::PlainXla => format!("decode_{}", sp.name),
+            DecodeKernel::Pallas => format!("decode_pallas_{}", sp.name),
+        };
+        let mut out = self.run_with_params(&name, &extra)?;
+        if out.len() != 3 {
+            anyhow::bail!("decode returned {} outputs", out.len());
+        }
+        let v_new = out.pop().unwrap().into_f32()?;
+        let k_new = out.pop().unwrap().into_f32()?;
+        let logits = out.pop().unwrap().into_f32()?;
+        Ok(DecodeResult { logits, k_new, v_new })
+    }
+
+    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult> {
+        let sp = &self.spec;
+        let (l, h, s, d) = (sp.layers, sp.heads, sp.max_seq, sp.head_dim);
+        let extra = vec![
+            self.rt.stage_i32(&[token], &[])?,
+            self.rt.stage_i32(&[pos as i32], &[])?,
+            self.rt.stage_f32(k, &[l, h, s, d])?,
+            self.rt.stage_f32(v, &[l, h, s, d])?,
+        ];
+        let name = format!("decode_fp32_{}", sp.name);
+        let mut out = self.run_with_params(&name, &extra)?;
+        if out.len() != 3 {
+            anyhow::bail!("decode_fp32 returned {} outputs", out.len());
+        }
+        let v_new = out.pop().unwrap().into_f32()?;
+        let k_new = out.pop().unwrap().into_f32()?;
+        let logits = out.pop().unwrap().into_f32()?;
+        Ok(DecodeResult { logits, k_new, v_new })
+    }
+}
+
+// PJRT-dependent tests live in rust/tests/engine_e2e.rs; CpuBackend is
+// exercised through cpu_ref's own tests and the engine tests.

@@ -1,0 +1,111 @@
+//! Token sampling policies.
+
+use crate::util::rng::Rng;
+
+/// Sampling configuration carried by each request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// 0 = no top-k restriction.
+    pub top_k: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, seed: 0 }
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i as i32)
+        .unwrap_or(0)
+}
+
+/// Sample a token id. Greedy when temperature == 0.
+pub fn sample(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> i32 {
+    if params.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // Collect candidate (index, logit) pairs, optionally top-k-restricted.
+    let mut cands: Vec<(usize, f32)> = logits.iter().copied().enumerate().collect();
+    if params.top_k > 0 && params.top_k < cands.len() {
+        cands.sort_by(|a, b| b.1.total_cmp(&a.1));
+        cands.truncate(params.top_k);
+    }
+    let inv_t = 1.0 / params.temperature;
+    let mx = cands.iter().map(|c| c.1).fold(f32::NEG_INFINITY, f32::max);
+    let mut weights: Vec<f32> = cands.iter().map(|c| ((c.1 - mx) * inv_t).exp()).collect();
+    let total: f32 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= total;
+    }
+    let mut u = rng.next_f32();
+    for (c, w) in cands.iter().zip(&weights) {
+        if u < *w {
+            return c.0 as i32;
+        }
+        u -= w;
+    }
+    cands.last().map(|c| c.0 as i32).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 3.0, -1.0, 2.9];
+        assert_eq!(argmax(&logits), 1);
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&logits, &SamplingParams::default(), &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_zero_is_deterministic() {
+        let logits = vec![0.0, 1.0, 0.5];
+        let p = SamplingParams { temperature: 0.0, top_k: 0, seed: 1 };
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            assert_eq!(sample(&logits, &p, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = vec![10.0, 9.0, -50.0, -50.0];
+        let p = SamplingParams { temperature: 1.0, top_k: 2, seed: 0 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let t = sample(&logits, &p, &mut rng);
+            assert!(t == 0 || t == 1, "sampled outside top-k: {t}");
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = vec![1.0, 0.0, 0.0, 0.0];
+        let p = SamplingParams { temperature: 100.0, top_k: 0, seed: 0 };
+        let mut rng = Rng::new(4);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[sample(&logits, &p, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "high temperature should reach all tokens");
+    }
+
+    #[test]
+    fn sharp_distribution_prefers_max() {
+        let logits = vec![5.0, 0.0];
+        let p = SamplingParams { temperature: 0.5, top_k: 0, seed: 0 };
+        let mut rng = Rng::new(5);
+        let hits = (0..200).filter(|_| sample(&logits, &p, &mut rng) == 0).count();
+        assert!(hits > 190, "{hits}/200");
+    }
+}

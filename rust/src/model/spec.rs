@@ -1,0 +1,165 @@
+//! Model architecture spec — the L2↔L3 ABI.
+//!
+//! Mirrors `python/compile/model.py::ModelSpec`. `param_specs()` must stay
+//! in lockstep with the Python list (it defines the flat argument order of
+//! the prefill/decode artifacts); the manifest's recorded ABI is used to
+//! cross-check at load time.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub block_size: usize,
+}
+
+impl ModelSpec {
+    pub fn d_model(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Tiny spec for unit tests (matches python/tests/test_model.py).
+    pub fn test_tiny() -> ModelSpec {
+        ModelSpec {
+            name: "test-tiny".into(),
+            vocab: 64,
+            layers: 2,
+            heads: 2,
+            head_dim: 16,
+            d_ff: 64,
+            max_seq: 32,
+            block_size: 8,
+        }
+    }
+
+    /// Parse from a manifest `models` entry (or an artifact entry's meta).
+    pub fn from_json(j: &Json) -> Result<ModelSpec> {
+        let get = |k: &str| {
+            j.get(k).as_usize().ok_or_else(|| anyhow!("model spec missing field {k:?}"))
+        };
+        Ok(ModelSpec {
+            name: j
+                .get("name")
+                .as_str()
+                .or_else(|| j.get("model").as_str())
+                .ok_or_else(|| anyhow!("model spec missing name"))?
+                .to_string(),
+            vocab: get("vocab")?,
+            layers: get("layers")?,
+            heads: get("heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            block_size: get("block_size")?,
+        })
+    }
+
+    /// `(name, shape)` for every parameter, in artifact argument order.
+    /// KEEP IN SYNC with python/compile/model.py::ModelSpec.param_specs.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let m = self.d_model();
+        let f = self.d_ff;
+        let mut out = vec![("embedding".to_string(), vec![self.vocab, m])];
+        for i in 0..self.layers {
+            out.push((format!("l{i}.ln1"), vec![m]));
+            out.push((format!("l{i}.wq"), vec![m, m]));
+            out.push((format!("l{i}.wk"), vec![m, m]));
+            out.push((format!("l{i}.wv"), vec![m, m]));
+            out.push((format!("l{i}.wo"), vec![m, m]));
+            out.push((format!("l{i}.ln2"), vec![m]));
+            out.push((format!("l{i}.w1"), vec![m, f]));
+            out.push((format!("l{i}.w2"), vec![f, m]));
+        }
+        out.push(("ln_f".to_string(), vec![m]));
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_specs().iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+
+    /// Validate this spec against the manifest-recorded param ABI.
+    pub fn check_abi(&self, manifest_params: &[Json]) -> Result<()> {
+        let ours = self.param_specs();
+        if ours.len() != manifest_params.len() {
+            return Err(anyhow!(
+                "param count mismatch: rust {} vs manifest {}",
+                ours.len(),
+                manifest_params.len()
+            ));
+        }
+        for (i, ((name, shape), mj)) in ours.iter().zip(manifest_params).enumerate() {
+            let mname = mj.get("name").as_str().unwrap_or("");
+            let mshape: Vec<usize> =
+                mj.get("shape").as_arr().unwrap_or(&[]).iter().filter_map(|v| v.as_usize()).collect();
+            if mname != name || &mshape != shape {
+                return Err(anyhow!(
+                    "param {i} ABI mismatch: rust {name}{shape:?} vs manifest {mname}{mshape:?}"
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_specs_structure() {
+        let s = ModelSpec::test_tiny();
+        let p = s.param_specs();
+        assert_eq!(p.len(), 1 + s.layers * 8 + 1);
+        assert_eq!(p[0], ("embedding".to_string(), vec![64, 32]));
+        assert_eq!(p.last().unwrap().0, "ln_f");
+    }
+
+    #[test]
+    fn param_count_tiny() {
+        let s = ModelSpec::test_tiny();
+        // emb 64*32 + 2 layers * (32 + 4*32*32 + 32 + 32*64 + 64*32) + 32
+        let expect = 64 * 32 + 2 * (32 + 4 * 32 * 32 + 32 + 2 * 32 * 64) + 32;
+        assert_eq!(s.param_count(), expect);
+    }
+
+    #[test]
+    fn from_json_parses_manifest_shape() {
+        let j = Json::parse(
+            r#"{"name":"kvq-3m","vocab":256,"layers":4,"heads":8,
+                "head_dim":32,"d_ff":1024,"max_seq":512,"block_size":16}"#,
+        )
+        .unwrap();
+        let s = ModelSpec::from_json(&j).unwrap();
+        assert_eq!(s.d_model(), 256);
+        assert_eq!(s.max_seq, 512);
+    }
+
+    #[test]
+    fn abi_check_catches_drift() {
+        let s = ModelSpec::test_tiny();
+        let good: Vec<Json> = s
+            .param_specs()
+            .iter()
+            .map(|(n, sh)| {
+                Json::parse(&format!(
+                    r#"{{"name":"{n}","shape":[{}]}}"#,
+                    sh.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+                ))
+                .unwrap()
+            })
+            .collect();
+        assert!(s.check_abi(&good).is_ok());
+        let mut bad = good.clone();
+        bad[1] = Json::parse(r#"{"name":"l0.WRONG","shape":[32]}"#).unwrap();
+        assert!(s.check_abi(&bad).is_err());
+        assert!(s.check_abi(&good[..3]).is_err());
+    }
+}

@@ -1,0 +1,62 @@
+//! Byte-level tokenizer: token id == byte value (vocab 256).
+//!
+//! Deliberately trivial — the serving stack's correctness story lives in
+//! the cache/quantization path, not tokenization — but implements the same
+//! interface a real BPE tokenizer would slot into.
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> ByteTokenizer {
+        ByteTokenizer
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode("hello kvq!");
+        assert_eq!(ids.len(), 10);
+        assert_eq!(t.decode(&ids), "hello kvq!");
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer::new();
+        let s = "héllo ≈ 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn out_of_range_ids_clamp() {
+        let t = ByteTokenizer::new();
+        let s = t.decode(&[72, 105, 999, -5]);
+        assert!(s.starts_with("Hi"));
+    }
+
+    #[test]
+    fn all_bytes_are_valid_tokens() {
+        let t = ByteTokenizer::new();
+        for b in 0..=255i32 {
+            assert!((0..t.vocab_size() as i32).contains(&b));
+        }
+    }
+}

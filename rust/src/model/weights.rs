@@ -1,0 +1,112 @@
+//! Deterministic synthetic weights.
+//!
+//! No network access → no real checkpoints; we generate seeded weights with
+//! the standard 1/√fan_in scaling (norm gains = 1), which yields a model
+//! whose activation statistics are realistic enough to exercise the entire
+//! serving path (prefill → quantize → paged cache → dequant-attend →
+//! logits). See DESIGN.md §Substitutions.
+
+use super::spec::ModelSpec;
+use crate::util::rng::Rng;
+
+/// Flat parameter list in artifact argument order.
+pub struct Weights {
+    pub spec: ModelSpec,
+    /// One Vec<f32> per parameter, matching `spec.param_specs()` order.
+    pub params: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+}
+
+impl Weights {
+    /// Generate seeded weights for a spec.
+    pub fn synthetic(spec: &ModelSpec, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let mut params = Vec::new();
+        let mut shapes = Vec::new();
+        for (name, shape) in spec.param_specs() {
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0.0f32; n];
+            if name.ends_with("ln1") || name.ends_with("ln2") || name == "ln_f" {
+                buf.fill(1.0);
+            } else {
+                let fan_in = if shape.len() > 1 { shape[0] } else { 1 };
+                let sigma = 1.0 / (fan_in as f32).sqrt();
+                let mut child = rng.fork(hash_name(&name));
+                child.fill_normal(&mut buf, sigma);
+            }
+            params.push(buf);
+            shapes.push(shape);
+        }
+        Weights { spec: spec.clone(), params, shapes }
+    }
+
+    pub fn param(&self, name: &str) -> &[f32] {
+        let idx = self
+            .spec
+            .param_specs()
+            .iter()
+            .position(|(n, _)| n == name)
+            .unwrap_or_else(|| panic!("unknown param {name}"));
+        &self.params[idx]
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.len() * 4).sum()
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable across runs/platforms.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = ModelSpec::test_tiny();
+        let a = Weights::synthetic(&s, 42);
+        let b = Weights::synthetic(&s, 42);
+        assert_eq!(a.params, b.params);
+        let c = Weights::synthetic(&s, 43);
+        assert_ne!(a.params[0], c.params[0]);
+    }
+
+    #[test]
+    fn shapes_match_spec() {
+        let s = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&s, 1);
+        for ((_, shape), p) in s.param_specs().iter().zip(&w.params) {
+            assert_eq!(p.len(), shape.iter().product::<usize>());
+        }
+        assert_eq!(w.total_bytes(), s.param_count() * 4);
+    }
+
+    #[test]
+    fn norms_are_ones_matrices_are_scaled() {
+        let s = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&s, 7);
+        assert!(w.param("ln_f").iter().all(|&v| v == 1.0));
+        assert!(w.param("l0.ln1").iter().all(|&v| v == 1.0));
+        // Matrix stddev ≈ 1/sqrt(fan_in).
+        let wq = w.param("l0.wq");
+        let m = s.d_model() as f32;
+        let var: f32 = wq.iter().map(|v| v * v).sum::<f32>() / wq.len() as f32;
+        let expect = 1.0 / m;
+        assert!((var / expect - 1.0).abs() < 0.2, "var {var} vs {expect}");
+    }
+
+    #[test]
+    fn param_lookup_by_name() {
+        let s = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&s, 3);
+        assert_eq!(w.param("embedding").len(), s.vocab * s.d_model());
+    }
+}

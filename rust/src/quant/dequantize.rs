@@ -1,0 +1,95 @@
+//! Dequantization — eq. (8): `x̂ = x_q · s_d` (paper Listing 4).
+
+use super::matrix::{Fp32Matrix, Int8Matrix};
+
+/// Dequantize into a preallocated matrix (hot-path form).
+pub fn dequantize_into(q: &Int8Matrix, out: &mut Fp32Matrix) {
+    assert_eq!((out.rows, out.cols), (q.rows, q.cols), "out shape mismatch");
+    let cols = q.cols;
+    for t in 0..q.rows {
+        let src = &q.data[t * cols..(t + 1) * cols];
+        let dst = &mut out.data[t * cols..(t + 1) * cols];
+        for ((o, &v), &s) in dst.iter_mut().zip(src).zip(&q.scales) {
+            *o = v as f32 * s;
+        }
+    }
+}
+
+/// Allocate-and-dequantize convenience.
+pub fn dequantize(q: &Int8Matrix) -> Fp32Matrix {
+    let mut out = Fp32Matrix::zeros(q.rows, q.cols);
+    dequantize_into(q, &mut out);
+    out
+}
+
+/// Dequantize a single row (serving gather path).
+#[inline]
+pub fn dequantize_row_into(row: &[i8], scales: &[f32], out: &mut [f32]) {
+    for ((o, &v), &s) in out.iter_mut().zip(row).zip(scales) {
+        *o = v as f32 * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize::quantize_fused;
+
+    #[test]
+    fn dequantize_hand_values() {
+        let q = Int8Matrix {
+            rows: 2,
+            cols: 2,
+            data: vec![127, -64, 0, 1],
+            scales: vec![0.01, 2.0],
+        };
+        let out = dequantize(&q);
+        assert_eq!(out.data, vec![1.27, -128.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_scale() {
+        // eq. (9): |x - x̂| <= s/2.
+        let k = Fp32Matrix::random_uniform(256, 64, -1.0, 1.0, 3);
+        let q = quantize_fused(&k);
+        let r = dequantize(&q);
+        for t in 0..k.rows {
+            for d in 0..k.cols {
+                let err = (k.at(t, d) - r.at(t, d)).abs();
+                assert!(
+                    err <= q.scales[d] / 2.0 + 1e-7,
+                    "err {err} > s/2 {} at ({t},{d})",
+                    q.scales[d] / 2.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_roundtrip_exactly() {
+        let k = Fp32Matrix::zeros(8, 8);
+        let q = quantize_fused(&k);
+        let r = dequantize(&q);
+        assert_eq!(r.data, k.data);
+    }
+
+    #[test]
+    fn column_extremes_roundtrip_exactly() {
+        // The per-column abs max quantizes to ±127 and dequantizes to
+        // exactly ±max (s = max/127, 127*s = max up to fp rounding).
+        let k = Fp32Matrix::from_vec(2, 1, vec![0.75, -0.375]);
+        let q = quantize_fused(&k);
+        let r = dequantize(&q);
+        assert!((r.at(0, 0) - 0.75).abs() < 1e-7);
+    }
+
+    #[test]
+    fn row_form_matches_matrix_form() {
+        let k = Fp32Matrix::random_normal(16, 12, 1.0, 8);
+        let q = quantize_fused(&k);
+        let full = dequantize(&q);
+        let mut row = vec![0.0f32; 12];
+        dequantize_row_into(q.row(5), &q.scales, &mut row);
+        assert_eq!(row, full.row(5));
+    }
+}

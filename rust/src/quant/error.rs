@@ -1,0 +1,135 @@
+//! The paper's three error metrics (§6 "we measure", §7.2, §7.3):
+//! L2 (Frobenius) reconstruction error, max absolute error, and the
+//! attention-score error |qK^T − qK̂^T| averaged over (query, token) pairs.
+
+use super::matrix::Fp32Matrix;
+
+/// sqrt(sum((a-b)^2)) in f64 accumulation.
+pub fn l2_error(a: &Fp32Matrix, b: &Fp32Matrix) -> f64 {
+    assert_shapes(a, b);
+    let mut acc = 0.0f64;
+    for (x, y) in a.data.iter().zip(&b.data) {
+        let d = (*x - *y) as f64;
+        acc += d * d;
+    }
+    acc.sqrt()
+}
+
+/// max |a - b| per element.
+pub fn max_abs_error(a: &Fp32Matrix, b: &Fp32Matrix) -> f64 {
+    assert_shapes(a, b);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| ((*x - *y) as f64).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Mean |q·k − q·k̂| over all (query row, token row) pairs.
+///
+/// `queries`: (Nq, D); `k`, `k_hat`: (T, D). No 1/sqrt(D) factor — the
+/// paper measures raw attention dot products. Blocked matmul keeps this
+/// usable at bench sizes; f64 accumulation keeps it stable.
+pub fn attention_score_error(queries: &Fp32Matrix, k: &Fp32Matrix, k_hat: &Fp32Matrix) -> f64 {
+    assert_shapes(k, k_hat);
+    assert_eq!(queries.cols, k.cols, "query/key dim mismatch");
+    let (nq, t, d) = (queries.rows, k.rows, k.cols);
+    let mut acc = 0.0f64;
+    // For each (query, token): |q · (k - k_hat)|. Computing the diff row
+    // once per token and dotting against all queries is O(T·D + T·Nq·D)
+    // same as two matmuls but with half the memory traffic.
+    let mut diff = vec![0.0f32; d];
+    for ti in 0..t {
+        let kr = k.row(ti);
+        let khr = k_hat.row(ti);
+        for ((df, &x), &y) in diff.iter_mut().zip(kr).zip(khr) {
+            *df = x - y;
+        }
+        for qi in 0..nq {
+            let q = queries.row(qi);
+            let mut dot = 0.0f64;
+            for (a, b) in q.iter().zip(&diff) {
+                dot += (*a as f64) * (*b as f64);
+            }
+            acc += dot.abs();
+        }
+    }
+    acc / (nq as f64 * t as f64)
+}
+
+fn assert_shapes(a: &Fp32Matrix, b: &Fp32Matrix) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "shape mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dequantize::dequantize;
+    use crate::quant::quantize::quantize_fused;
+
+    #[test]
+    fn identity_errors_are_zero() {
+        // Paper §7.5: all metrics evaluate to zero against self.
+        let k = Fp32Matrix::random_normal(32, 16, 1.0, 1);
+        let q = Fp32Matrix::random_normal(4, 16, 1.0, 2);
+        assert_eq!(l2_error(&k, &k), 0.0);
+        assert_eq!(max_abs_error(&k, &k), 0.0);
+        assert_eq!(attention_score_error(&q, &k, &k), 0.0);
+    }
+
+    #[test]
+    fn l2_hand_computed() {
+        let a = Fp32Matrix::from_vec(1, 2, vec![0.0, 0.0]);
+        let b = Fp32Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((l2_error(&a, &b) - 5.0).abs() < 1e-12);
+        assert_eq!(max_abs_error(&a, &b), 4.0);
+    }
+
+    #[test]
+    fn attention_error_hand_computed() {
+        // q = [1, 1]; k - k_hat = [0.5, -0.25] -> |dot| = 0.25.
+        let q = Fp32Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        let k = Fp32Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        let kh = Fp32Matrix::from_vec(1, 2, vec![0.5, 1.25]);
+        assert!((attention_score_error(&q, &k, &kh) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn uniform_inputs_hit_paper_max_error() {
+        // §7.2: U(-1,1) -> max abs error ≈ 1/(2·127) = 0.003937.
+        let k = Fp32Matrix::random_uniform(4096, 128, -1.0, 1.0, 7);
+        let r = dequantize(&quantize_fused(&k));
+        let e = max_abs_error(&k, &r);
+        assert!(e <= 1.0 / 254.0 + 1e-7, "max err {e}");
+        assert!(e >= 0.0035, "max err suspiciously small: {e}");
+    }
+
+    #[test]
+    fn l2_grows_with_matrix_size() {
+        let mut prev = 0.0;
+        for t in [256usize, 1024, 4096] {
+            let k = Fp32Matrix::random_uniform(t, 64, -1.0, 1.0, t as u64);
+            let r = dequantize(&quantize_fused(&k));
+            let e = l2_error(&k, &r);
+            assert!(e > prev, "L2 {e} did not grow at T={t}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn attention_error_grows_sqrt_d() {
+        // §7.3: error scales ~sqrt(D).
+        let mut errs = Vec::new();
+        for d in [64usize, 256, 1024] {
+            let k = Fp32Matrix::random_uniform(512, d, -1.0, 1.0, d as u64);
+            let q = Fp32Matrix::random_uniform(8, d, -1.0, 1.0, 99);
+            let r = dequantize(&quantize_fused(&k));
+            errs.push(attention_score_error(&q, &k, &r));
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2]);
+        let r1 = errs[1] / errs[0];
+        let r2 = errs[2] / errs[1];
+        assert!(r1 > 1.3 && r1 < 3.0, "ratio {r1}");
+        assert!(r2 > 1.3 && r2 < 3.0, "ratio {r2}");
+    }
+}

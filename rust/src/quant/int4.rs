@@ -1,0 +1,172 @@
+//! INT4 quantization — the paper's §8.1 "lower bit-widths" extension.
+//!
+//! Symmetric per-channel 4-bit quantization: values clamp to [-7, 7]
+//! (s_d = max|K[:,d]| / 7), two nibbles packed per byte → 8× compression
+//! of the payload vs FP32. The ablation bench compares error and speed
+//! against INT8 (expected: ~16× larger max error, same memory-bound speed).
+
+use super::matrix::Fp32Matrix;
+
+/// 4-bit symmetric bound.
+pub const Q4MAX: f32 = 7.0;
+
+/// Packed INT4 matrix: two values per byte, row-major, rows padded to an
+/// even column count in storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int4Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// ceil(cols/2) bytes per row.
+    pub data: Vec<u8>,
+    pub scales: Vec<f32>,
+}
+
+impl Int4Matrix {
+    pub fn bytes_per_row(cols: usize) -> usize {
+        cols.div_ceil(2)
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Int4Matrix {
+            rows,
+            cols,
+            data: vec![0; rows * Self::bytes_per_row(cols)],
+            scales: vec![0.0; cols],
+        }
+    }
+
+    /// Signed nibble at (t, d) in [-8, 7] (we only produce [-7, 7]).
+    #[inline]
+    pub fn at(&self, t: usize, d: usize) -> i8 {
+        let byte = self.data[t * Self::bytes_per_row(self.cols) + d / 2];
+        let nib = if d % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        // sign-extend 4-bit two's complement
+        ((nib << 4) as i8) >> 4
+    }
+
+    #[inline]
+    fn set(&mut self, t: usize, d: usize, v: i8) {
+        let idx = t * Self::bytes_per_row(self.cols) + d / 2;
+        let nib = (v as u8) & 0x0F;
+        if d % 2 == 0 {
+            self.data[idx] = (self.data[idx] & 0xF0) | nib;
+        } else {
+            self.data[idx] = (self.data[idx] & 0x0F) | (nib << 4);
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() + self.scales.len() * 4
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        (self.rows * self.cols * 4) as f64 / self.size_bytes() as f64
+    }
+}
+
+/// Per-channel INT4 scales: s_d = max_t |K[t,d]| / 7.
+pub fn compute_scales4(k: &Fp32Matrix) -> Vec<f32> {
+    let mut maxima = vec![0.0f32; k.cols];
+    for t in 0..k.rows {
+        for (m, v) in maxima.iter_mut().zip(k.row(t)) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    maxima.iter().map(|m| m / Q4MAX).collect()
+}
+
+pub fn quantize4(k: &Fp32Matrix) -> Int4Matrix {
+    let scales = compute_scales4(k);
+    let mut out = Int4Matrix::zeros(k.rows, k.cols);
+    for t in 0..k.rows {
+        for d in 0..k.cols {
+            let s = scales[d];
+            let q = if s <= 0.0 {
+                0
+            } else {
+                (k.at(t, d) / s).round().clamp(-Q4MAX, Q4MAX) as i8
+            };
+            out.set(t, d, q);
+        }
+    }
+    out.scales = scales;
+    out
+}
+
+pub fn dequantize4(q: &Int4Matrix) -> Fp32Matrix {
+    let mut out = Fp32Matrix::zeros(q.rows, q.cols);
+    for t in 0..q.rows {
+        for d in 0..q.cols {
+            out.data[t * q.cols + d] = q.at(t, d) as f32 * q.scales[d];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error::max_abs_error;
+
+    #[test]
+    fn nibble_roundtrip_all_values() {
+        let mut m = Int4Matrix::zeros(1, 15);
+        for (d, v) in (-7..=7).enumerate() {
+            m.set(0, d, v);
+        }
+        for (d, v) in (-7..=7).enumerate() {
+            assert_eq!(m.at(0, d), v, "nibble {d}");
+        }
+    }
+
+    #[test]
+    fn error_bounded_by_half_scale() {
+        let k = Fp32Matrix::random_uniform(128, 32, -1.0, 1.0, 4);
+        let q = quantize4(&k);
+        let r = dequantize4(&q);
+        for t in 0..k.rows {
+            for d in 0..k.cols {
+                let err = (k.at(t, d) - r.at(t, d)).abs();
+                assert!(err <= q.scales[d] / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn int4_error_roughly_16x_int8() {
+        use crate::quant::{dequantize::dequantize, quantize::quantize_fused};
+        let k = Fp32Matrix::random_uniform(2048, 64, -1.0, 1.0, 5);
+        let e8 = max_abs_error(&k, &dequantize(&quantize_fused(&k)));
+        let e4 = max_abs_error(&k, &dequantize4(&quantize4(&k)));
+        let ratio = e4 / e8;
+        // 1/(2·7) vs 1/(2·127): ratio ≈ 18.1 in the saturated-max limit.
+        assert!(ratio > 10.0 && ratio < 25.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn compression_approaches_8x() {
+        let q = Int4Matrix::zeros(131072, 1024);
+        let r = q.compression_ratio();
+        assert!(r > 7.9 && r <= 8.0, "ratio {r}");
+    }
+
+    #[test]
+    fn odd_column_count_packs() {
+        let k = Fp32Matrix::random_uniform(4, 5, -1.0, 1.0, 6);
+        let q = quantize4(&k);
+        assert_eq!(q.data.len(), 4 * 3);
+        let r = dequantize4(&q);
+        assert_eq!(r.cols, 5);
+        assert!(max_abs_error(&k, &r) <= 1.0 / 14.0 + 1e-6);
+    }
+
+    #[test]
+    fn zeros_quantize_to_zeros() {
+        let k = Fp32Matrix::zeros(4, 4);
+        let q = quantize4(&k);
+        assert!(q.data.iter().all(|&b| b == 0));
+    }
+}

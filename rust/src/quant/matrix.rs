@@ -1,0 +1,153 @@
+//! Matrix containers — the paper's §5.1 data structures.
+//!
+//! Row-major dense matrices: `Fp32Matrix` holds the original K/V data,
+//! `Int8Matrix` holds the quantized payload plus its per-channel scales
+//! (D f32 values — negligible next to T×D payload, eq. 5 discussion).
+
+use crate::util::rng::Rng;
+
+/// Dense row-major FP32 matrix of shape (rows=T, cols=D).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fp32Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Fp32Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Fp32Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Fp32Matrix { rows, cols, data }
+    }
+
+    /// Seeded U(lo, hi) fill — the paper's randomized test matrices.
+    pub fn random_uniform(rows: usize, cols: usize, lo: f32, hi: f32, seed: u64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        Rng::new(seed).fill_uniform(&mut m.data, lo, hi);
+        m
+    }
+
+    /// Seeded N(0, sigma) fill.
+    pub fn random_normal(rows: usize, cols: usize, sigma: f32, seed: u64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        Rng::new(seed).fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, d: usize) -> f32 {
+        self.data[t * self.cols + d]
+    }
+
+    #[inline]
+    pub fn row(&self, t: usize) -> &[f32] {
+        &self.data[t * self.cols..(t + 1) * self.cols]
+    }
+
+    pub fn elements(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Quantized INT8 matrix + per-channel scales. 4x smaller payload than the
+/// FP32 original (§5.1: "The quantized matrix uses 4× less memory").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Int8Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+    /// Per-channel scales, one per column (eq. 5).
+    pub scales: Vec<f32>,
+}
+
+impl Int8Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Int8Matrix { rows, cols, data: vec![0; rows * cols], scales: vec![0.0; cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, d: usize) -> i8 {
+        self.data[t * self.cols + d]
+    }
+
+    #[inline]
+    pub fn row(&self, t: usize) -> &[i8] {
+        &self.data[t * self.cols..(t + 1) * self.cols]
+    }
+
+    pub fn elements(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Payload + scales, in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.elements() + self.scales.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Memory saving vs the FP32 original (≈4x for realistic shapes).
+    pub fn compression_ratio(&self) -> f64 {
+        (self.elements() * 4) as f64 / self.size_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shapes() {
+        let m = Fp32Matrix::zeros(3, 5);
+        assert_eq!((m.rows, m.cols, m.data.len()), (3, 5, 15));
+        let q = Int8Matrix::zeros(3, 5);
+        assert_eq!(q.scales.len(), 5);
+    }
+
+    #[test]
+    fn random_fill_within_bounds() {
+        // Paper §7.5: "Randomized fill routines are validated to ensure
+        // values remain within specified bounds."
+        let m = Fp32Matrix::random_uniform(64, 32, -1.0, 1.0, 7);
+        assert!(m.data.iter().all(|v| (-1.0..1.0).contains(v)));
+        // Deterministic per seed.
+        let m2 = Fp32Matrix::random_uniform(64, 32, -1.0, 1.0, 7);
+        assert_eq!(m.data, m2.data);
+    }
+
+    #[test]
+    fn indexing_is_row_major() {
+        let m = Fp32Matrix::from_vec(2, 3, vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(m.at(0, 2), 2.0);
+        assert_eq!(m.at(1, 0), 3.0);
+        assert_eq!(m.row(1), &[3., 4., 5.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_validates() {
+        Fp32Matrix::from_vec(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn compression_ratio_approaches_4x() {
+        let q = Int8Matrix::zeros(131072, 1024);
+        let r = q.compression_ratio();
+        assert!(r > 3.99 && r <= 4.0, "ratio {r}");
+        // Tiny matrices amortize scales poorly.
+        let q = Int8Matrix::zeros(1, 8);
+        assert!(q.compression_ratio() < 1.0);
+    }
+
+    #[test]
+    fn size_bytes_counts_scales() {
+        let q = Int8Matrix::zeros(10, 4);
+        assert_eq!(q.size_bytes(), 40 + 16);
+    }
+}

@@ -1,0 +1,80 @@
+//! Per-channel INT8 quantization for KV caches — the paper's core
+//! algorithm, in pure Rust.
+//!
+//! This module serves three roles:
+//!
+//! 1. **CPU baseline**: [`quantize::quantize_naive`] and
+//!    [`scales::compute_scales`] are faithful ports of the paper's C
+//!    listings (same loop nests, same `roundf`/clamp semantics) — the
+//!    denominator of every speedup figure.
+//! 2. **Kernel-variant story on the CPU substrate**: the same four
+//!    optimization strategies the paper explores on GPU (naive, tiled,
+//!    coarsened, vectorized) are implemented as CPU variants, so Fig 1/5
+//!    can show the variant ordering on this testbed alongside the
+//!    XLA-executed Pallas artifacts.
+//! 3. **Production cache writer**: the serving engine quantizes new K/V
+//!    rows on the host via [`quantize::quantize_row_into`] (a (1, D) row
+//!    is far below the size where offloading to the accelerator pays —
+//!    measured in the ablation bench).
+//!
+//! Conventions (shared with `python/compile/kernels/ref.py`):
+//! round-half-away-from-zero (`f32::round`), clamp to `[-127, 127]`,
+//! zero-scale columns quantize to 0.
+
+pub mod dequantize;
+pub mod error;
+pub mod int4;
+pub mod matrix;
+pub mod quantize;
+pub mod scales;
+pub mod tensorwise;
+
+pub use dequantize::{dequantize, dequantize_into};
+pub use error::{attention_score_error, l2_error, max_abs_error};
+pub use matrix::{Fp32Matrix, Int8Matrix};
+pub use quantize::{quantize, quantize_fused, quantize_row_into};
+pub use scales::compute_scales;
+
+/// The four kernel-optimization strategies from the paper, §5.3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// One element at a time, scale loaded per element (paper Listing 5).
+    Naive,
+    /// Scales staged into a local block before the inner loop (Listing 6).
+    Tiled,
+    /// Column-major: one scale load amortized over a whole column (Listing 7).
+    Coarsened,
+    /// Chunk-of-4 processing encouraging SIMD codegen (Listing 8).
+    Vectorized,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] =
+        [Variant::Naive, Variant::Tiled, Variant::Coarsened, Variant::Vectorized];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Naive => "naive",
+            Variant::Tiled => "tiled",
+            Variant::Coarsened => "coarsened",
+            Variant::Vectorized => "vectorized",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Variant> {
+        Self::ALL.into_iter().find(|v| v.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_names_roundtrip() {
+        for v in Variant::ALL {
+            assert_eq!(Variant::from_name(v.name()), Some(v));
+        }
+        assert_eq!(Variant::from_name("bogus"), None);
+    }
+}

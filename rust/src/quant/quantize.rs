@@ -1,0 +1,301 @@
+//! Quantization — eq. (7) — in the paper's four kernel-optimization
+//! flavors, as CPU implementations (DESIGN.md §Hardware-Adaptation maps
+//! these to the Pallas BlockSpec variants executed via PJRT).
+//!
+//! All variants produce **identical** outputs (asserted by tests and by
+//! the paper's §7.5 cross-kernel consistency check); they differ only in
+//! memory-access structure:
+//!
+//! * `quantize_naive`      — element loop, scale indexed per element
+//!   (faithful port of Listing 3 / Listing 5's access pattern).
+//! * `quantize_tiled`      — scales staged into a fixed local tile before
+//!   the inner loop (shared-memory analog of Listing 6).
+//! * `quantize_coarsened`  — column-outer loop, one scale register per
+//!   column amortized over T elements (Listing 7).
+//! * `quantize_vectorized` — chunk-of-4 row processing structured for
+//!   SIMD codegen (float4/char4 analog of Listing 8).
+//! * `quantize_parallel`   — row-partitioned multi-threaded vectorized.
+
+use super::matrix::{Fp32Matrix, Int8Matrix};
+use super::scales;
+use super::Variant;
+use crate::util::pool;
+use crate::QMAX;
+
+/// Quantize one value: round-half-away (f32::round), clamp, zero-scale → 0.
+#[inline(always)]
+pub fn quantize_one(val: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let q = (val / scale).round();
+    q.clamp(-QMAX, QMAX) as i8
+}
+
+/// Paper Listing 3: row-outer, column-inner, scale loaded per element.
+pub fn quantize_naive(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    check_shapes(k, scales, out);
+    for t in 0..k.rows {
+        for d in 0..k.cols {
+            let val = k.data[t * k.cols + d];
+            out.data[t * k.cols + d] = quantize_one(val, scales[d]);
+        }
+    }
+    out.scales.copy_from_slice(scales);
+}
+
+/// Paper-methodology CPU baseline: the same Listing-3 loop nest with
+/// per-element volatile loads/stores, which forbids the autovectorization
+/// rustc would otherwise apply.
+///
+/// Why this exists: the paper's CPU column (79 s for 1B elements ≈ 74
+/// ns/element) is only reachable by an *unoptimized* scalar build — an
+/// -O3 C/Rust loop runs this memory-bound kernel ~30-50× faster. To
+/// reproduce Figure 1's methodology we need a comparable denominator;
+/// `quantize_naive` (which rustc vectorizes) is reported alongside as the
+/// honest optimized-CPU reference. See EXPERIMENTS.md Fig-1 discussion.
+pub fn quantize_naive_unopt(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    check_shapes(k, scales, out);
+    for t in 0..k.rows {
+        for d in 0..k.cols {
+            // SAFETY: indices are in bounds by the loop ranges; volatile
+            // is used purely as an optimization barrier.
+            unsafe {
+                let val = std::ptr::read_volatile(k.data.as_ptr().add(t * k.cols + d));
+                let s = std::ptr::read_volatile(scales.as_ptr().add(d));
+                let q = quantize_one(val, s);
+                std::ptr::write_volatile(out.data.as_mut_ptr().add(t * k.cols + d), q);
+            }
+        }
+    }
+    out.scales.copy_from_slice(scales);
+}
+
+/// Tile width for the scale-staging variant (mirrors TILE_DIM in Listing 6).
+pub const TILE_DIM: usize = 32;
+
+/// Listing 6 analog: copy a TILE_DIM-wide strip of scales into a local
+/// buffer, then sweep all rows of that strip reusing the staged scales.
+pub fn quantize_tiled(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    check_shapes(k, scales, out);
+    let mut s_tile = [0.0f32; TILE_DIM];
+    let mut d0 = 0;
+    while d0 < k.cols {
+        let w = TILE_DIM.min(k.cols - d0);
+        s_tile[..w].copy_from_slice(&scales[d0..d0 + w]);
+        for t in 0..k.rows {
+            let base = t * k.cols + d0;
+            for i in 0..w {
+                out.data[base + i] = quantize_one(k.data[base + i], s_tile[i]);
+            }
+        }
+        d0 += w;
+    }
+    out.scales.copy_from_slice(scales);
+}
+
+/// Listing 7 analog: column-outer loop; one scale held in a register for
+/// the whole column (strided T-element walk).
+pub fn quantize_coarsened(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    check_shapes(k, scales, out);
+    for d in 0..k.cols {
+        let s = scales[d];
+        for t in 0..k.rows {
+            let idx = t * k.cols + d;
+            out.data[idx] = quantize_one(k.data[idx], s);
+        }
+    }
+    out.scales.copy_from_slice(scales);
+}
+
+/// Listing 8 analog: process rows in chunks of 4 with array temporaries so
+/// the autovectorizer emits SIMD loads/divides/stores; remainder handled
+/// scalar (the paper's "requires D divisible by 4" caveat, fixed).
+pub fn quantize_vectorized(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    check_shapes(k, scales, out);
+    for t in 0..k.rows {
+        let row_in = &k.data[t * k.cols..(t + 1) * k.cols];
+        let row_out = &mut out.data[t * k.cols..(t + 1) * k.cols];
+        quantize_row_into(row_in, scales, row_out);
+    }
+    out.scales.copy_from_slice(scales);
+}
+
+/// Vectorized quantization of a single row — also the serving engine's
+/// cache-writer hot path (new K/V rows are quantized host-side).
+#[inline]
+pub fn quantize_row_into(row: &[f32], scales: &[f32], out: &mut [i8]) {
+    let n = row.len();
+    let chunks = n / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        // Array temporaries keep this branch-light; quantize_one's
+        // zero-scale guard compiles to a select.
+        let vals = [row[i], row[i + 1], row[i + 2], row[i + 3]];
+        let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
+        out[i] = quantize_one(vals[0], ss[0]);
+        out[i + 1] = quantize_one(vals[1], ss[1]);
+        out[i + 2] = quantize_one(vals[2], ss[2]);
+        out[i + 3] = quantize_one(vals[3], ss[3]);
+    }
+    for i in chunks * 4..n {
+        out[i] = quantize_one(row[i], scales[i]);
+    }
+}
+
+/// Multi-threaded vectorized quantization, row-partitioned.
+pub fn quantize_parallel(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix, threads: usize) {
+    check_shapes(k, scales, out);
+    let cols = k.cols;
+    // Partition output rows across workers; each worker owns disjoint rows.
+    let rows: Vec<usize> = (0..k.rows).collect();
+    let out_ptr = SyncPtr(out.data.as_mut_ptr());
+    pool::parallel_chunks(rows.len(), 256, threads, |lo, hi| {
+        for &t in &rows[lo..hi] {
+            let row_in = &k.data[t * cols..(t + 1) * cols];
+            // SAFETY: each row index appears in exactly one chunk, so the
+            // mutable row slices are disjoint across workers.
+            let row_out = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.at(t * cols), cols)
+            };
+            quantize_row_into(row_in, scales, row_out);
+        }
+    });
+    out.scales.copy_from_slice(scales);
+}
+
+struct SyncPtr(*mut i8);
+unsafe impl Sync for SyncPtr {}
+impl SyncPtr {
+    /// Offset accessor; keeping the raw pointer behind a method makes the
+    /// closure capture the (Sync) wrapper struct, not the bare pointer.
+    fn at(&self, off: usize) -> *mut i8 {
+        unsafe { self.0.add(off) }
+    }
+}
+
+/// Dispatch by [`Variant`].
+pub fn quantize_variant(v: Variant, k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix) {
+    match v {
+        Variant::Naive => quantize_naive(k, scales, out),
+        Variant::Tiled => quantize_tiled(k, scales, out),
+        Variant::Coarsened => quantize_coarsened(k, scales, out),
+        Variant::Vectorized => quantize_vectorized(k, scales, out),
+    }
+}
+
+/// Scales + quantize in one call (two passes, cache-blocked by column
+/// strips so the strip stays resident between the passes).
+pub fn quantize_fused(k: &Fp32Matrix) -> Int8Matrix {
+    let mut out = Int8Matrix::zeros(k.rows, k.cols);
+    let s = scales::compute_scales(k);
+    quantize_vectorized(k, &s, &mut out);
+    out
+}
+
+/// Convenience: compute scales then quantize with the given variant.
+pub fn quantize(k: &Fp32Matrix, v: Variant) -> Int8Matrix {
+    let s = scales::compute_scales(k);
+    let mut out = Int8Matrix::zeros(k.rows, k.cols);
+    quantize_variant(v, k, &s, &mut out);
+    out
+}
+
+fn check_shapes(k: &Fp32Matrix, scales: &[f32], out: &Int8Matrix) {
+    assert_eq!(scales.len(), k.cols, "scales/cols mismatch");
+    assert_eq!((out.rows, out.cols), (k.rows, k.cols), "out shape mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(seed: u64) -> (Fp32Matrix, Vec<f32>) {
+        let k = Fp32Matrix::random_normal(97, 53, 1.0, seed); // odd shape
+        let s = scales::compute_scales(&k);
+        (k, s)
+    }
+
+    #[test]
+    fn rounding_is_half_away_from_zero() {
+        assert_eq!(quantize_one(0.5, 1.0), 1);
+        assert_eq!(quantize_one(-0.5, 1.0), -1);
+        assert_eq!(quantize_one(1.5, 1.0), 2);
+        assert_eq!(quantize_one(-1.5, 1.0), -2);
+        assert_eq!(quantize_one(0.49, 1.0), 0);
+    }
+
+    #[test]
+    fn clamping() {
+        assert_eq!(quantize_one(1e9, 1.0), 127);
+        assert_eq!(quantize_one(-1e9, 1.0), -127);
+        assert_eq!(quantize_one(f32::INFINITY, 1.0), 127);
+        assert_eq!(quantize_one(f32::NEG_INFINITY, 1.0), -127);
+    }
+
+    #[test]
+    fn zero_scale_quantizes_to_zero() {
+        assert_eq!(quantize_one(123.0, 0.0), 0);
+        assert_eq!(quantize_one(123.0, -1.0), 0);
+    }
+
+    #[test]
+    fn all_variants_identical() {
+        // Paper §7.5 cross-kernel consistency, plus the parallel variant.
+        let (k, s) = sample(5);
+        let mut base = Int8Matrix::zeros(k.rows, k.cols);
+        quantize_naive(&k, &s, &mut base);
+        for v in [Variant::Tiled, Variant::Coarsened, Variant::Vectorized] {
+            let mut out = Int8Matrix::zeros(k.rows, k.cols);
+            quantize_variant(v, &k, &s, &mut out);
+            assert_eq!(out.data, base.data, "variant {:?}", v);
+        }
+        let mut par = Int8Matrix::zeros(k.rows, k.cols);
+        quantize_parallel(&k, &s, &mut par, 4);
+        assert_eq!(par.data, base.data);
+    }
+
+    #[test]
+    fn hand_constructed_values() {
+        // K = [[1, -2], [0.5, 2]], col maxima [1, 2] -> scales [1/127, 2/127]
+        let k = Fp32Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.5, 2.0]);
+        let q = quantize_fused(&k);
+        assert_eq!(q.data, vec![127, -127, 64, 127]); // 0.5/(1/127)=63.5 -> 64
+    }
+
+    #[test]
+    fn abs_max_never_overflows() {
+        // Values exactly at the column max hit ±127 exactly.
+        let (k, s) = sample(11);
+        let q = quantize_fused(&k);
+        assert!(q.data.iter().all(|&v| (-127..=127).contains(&(v as i32))));
+        let _ = s;
+    }
+
+    #[test]
+    fn remainder_columns_handled() {
+        // cols=5: one chunk of 4 + remainder 1.
+        let k = Fp32Matrix::random_uniform(3, 5, -1.0, 1.0, 9);
+        let s = scales::compute_scales(&k);
+        let mut a = Int8Matrix::zeros(3, 5);
+        let mut b = Int8Matrix::zeros(3, 5);
+        quantize_naive(&k, &s, &mut a);
+        quantize_vectorized(&k, &s, &mut b);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn one_by_one_matrix() {
+        let k = Fp32Matrix::from_vec(1, 1, vec![0.5]);
+        let q = quantize_fused(&k);
+        assert_eq!(q.data, vec![127]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scales/cols mismatch")]
+    fn shape_validation() {
+        let k = Fp32Matrix::zeros(2, 3);
+        let mut out = Int8Matrix::zeros(2, 3);
+        quantize_naive(&k, &[0.0; 2], &mut out);
+    }
+}

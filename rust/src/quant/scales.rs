@@ -1,0 +1,158 @@
+//! Per-channel scale computation — Algorithm 1 of the paper.
+//!
+//! `s_d = max_t |K[t,d]| / 127`. The naive port walks each column with a
+//! stride-D access pattern exactly like the paper's C (Listing 2); the
+//! row-sweep variant is the cache-friendly rewrite (one sequential pass,
+//! maintaining all D running maxima) that the optimized quantizers use.
+
+use super::matrix::Fp32Matrix;
+use crate::util::pool;
+use crate::QMAX;
+
+/// Paper Listing 2, verbatim structure: column-outer, row-inner (stride-D
+/// loads). O(T·D) with poor locality — kept as the faithful CPU baseline.
+pub fn compute_scales_naive(k: &Fp32Matrix, scales: &mut [f32]) {
+    assert_eq!(scales.len(), k.cols);
+    for d in 0..k.cols {
+        let mut max_abs = 0.0f32;
+        for t in 0..k.rows {
+            let val = k.data[t * k.cols + d].abs();
+            if val > max_abs {
+                max_abs = val;
+            }
+        }
+        scales[d] = max_abs / QMAX;
+    }
+}
+
+/// Cache-friendly single sequential pass: maintain all D running maxima
+/// while sweeping rows. Same result, ~D-way better locality.
+pub fn compute_scales_rowsweep(k: &Fp32Matrix, scales: &mut [f32]) {
+    assert_eq!(scales.len(), k.cols);
+    let mut maxima = vec![0.0f32; k.cols];
+    for t in 0..k.rows {
+        let row = k.row(t);
+        for (m, v) in maxima.iter_mut().zip(row) {
+            let a = v.abs();
+            if a > *m {
+                *m = a;
+            }
+        }
+    }
+    for (s, m) in scales.iter_mut().zip(&maxima) {
+        *s = m / QMAX;
+    }
+}
+
+/// Multi-threaded row-sweep: each worker reduces a row range, then maxima
+/// are merged. Degrades to `compute_scales_rowsweep` on 1 thread.
+pub fn compute_scales_parallel(k: &Fp32Matrix, scales: &mut [f32], threads: usize) {
+    assert_eq!(scales.len(), k.cols);
+    let threads = threads.max(1);
+    if threads == 1 || k.rows < 2 * threads {
+        return compute_scales_rowsweep(k, scales);
+    }
+    let per = k.rows.div_ceil(threads);
+    let partials: Vec<Vec<f32>> = pool::parallel_map(
+        &(0..threads).collect::<Vec<_>>(),
+        threads,
+        |&w| {
+            let lo = w * per;
+            let hi = ((w + 1) * per).min(k.rows);
+            let mut maxima = vec![0.0f32; k.cols];
+            for t in lo..hi {
+                for (m, v) in maxima.iter_mut().zip(k.row(t)) {
+                    let a = v.abs();
+                    if a > *m {
+                        *m = a;
+                    }
+                }
+            }
+            maxima
+        },
+    );
+    let mut maxima = vec![0.0f32; k.cols];
+    for p in &partials {
+        for (m, v) in maxima.iter_mut().zip(p) {
+            if v > m {
+                *m = *v;
+            }
+        }
+    }
+    for (s, m) in scales.iter_mut().zip(&maxima) {
+        *s = m / QMAX;
+    }
+}
+
+/// Default entry point (row-sweep).
+pub fn compute_scales(k: &Fp32Matrix) -> Vec<f32> {
+    let mut scales = vec![0.0; k.cols];
+    compute_scales_rowsweep(k, &mut scales);
+    scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Fp32Matrix {
+        Fp32Matrix::random_normal(128, 48, 1.0, 42)
+    }
+
+    #[test]
+    fn naive_matches_hand_computed() {
+        // Column maxima 127 and 254 -> scales exactly 1 and 2 (paper §7.5
+        // "deterministic tests validate scale computation").
+        let k = Fp32Matrix::from_vec(2, 2, vec![127.0, -254.0, -1.0, 2.0]);
+        let mut s = vec![0.0; 2];
+        compute_scales_naive(&k, &mut s);
+        assert_eq!(s, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn all_variants_agree() {
+        let k = sample();
+        let mut a = vec![0.0; k.cols];
+        let mut b = vec![0.0; k.cols];
+        let mut c = vec![0.0; k.cols];
+        compute_scales_naive(&k, &mut a);
+        compute_scales_rowsweep(&k, &mut b);
+        compute_scales_parallel(&k, &mut c, 4);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn zero_column_zero_scale() {
+        let mut k = Fp32Matrix::zeros(16, 4);
+        k.data[3] = 5.0; // only column 3 nonzero
+        let s = compute_scales(&k);
+        assert_eq!(s[0], 0.0);
+        assert!((s[3] - 5.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_values_count_via_abs() {
+        let k = Fp32Matrix::from_vec(2, 1, vec![-10.0, 5.0]);
+        let s = compute_scales(&k);
+        assert!((s[0] - 10.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_row_matrix() {
+        let k = Fp32Matrix::from_vec(1, 3, vec![0.5, -0.25, 0.0]);
+        let s = compute_scales(&k);
+        assert!((s[0] - 0.5 / 127.0).abs() < 1e-9);
+        assert_eq!(s[2], 0.0);
+    }
+
+    #[test]
+    fn parallel_small_matrix_falls_back() {
+        let k = Fp32Matrix::random_uniform(3, 8, -1.0, 1.0, 1);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        compute_scales_parallel(&k, &mut a, 8);
+        compute_scales_rowsweep(&k, &mut b);
+        assert_eq!(a, b);
+    }
+}

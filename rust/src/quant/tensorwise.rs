@@ -1,0 +1,79 @@
+//! Per-tensor (single global scale) quantization — the ablation baseline
+//! that motivates the paper's per-channel choice (§3.3: "improving
+//! precision compared to a single global scale").
+
+use super::matrix::{Fp32Matrix, Int8Matrix};
+use crate::QMAX;
+
+/// Single global scale: s = max|K| / 127 (stored replicated across the
+/// scales vector so `Int8Matrix` consumers work unchanged).
+pub fn quantize_tensorwise(k: &Fp32Matrix) -> Int8Matrix {
+    let mut max_abs = 0.0f32;
+    for v in &k.data {
+        let a = v.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    let s = max_abs / QMAX;
+    let mut out = Int8Matrix::zeros(k.rows, k.cols);
+    if s > 0.0 {
+        for (o, &v) in out.data.iter_mut().zip(&k.data) {
+            *o = (v / s).round().clamp(-QMAX, QMAX) as i8;
+        }
+    }
+    out.scales.fill(s);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::dequantize::dequantize;
+    use crate::quant::error::max_abs_error;
+    use crate::quant::quantize::quantize_fused;
+
+    #[test]
+    fn uniform_scale_replicated() {
+        let k = Fp32Matrix::random_uniform(32, 8, -2.0, 2.0, 1);
+        let q = quantize_tensorwise(&k);
+        assert!(q.scales.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn per_channel_wins_on_mixed_ranges() {
+        // One hot column inflates the global scale; per-channel shrugs.
+        let mut k = Fp32Matrix::random_uniform(256, 16, -1.0, 1.0, 2);
+        for t in 0..k.rows {
+            k.data[t * k.cols] *= 100.0;
+        }
+        let pc = dequantize(&quantize_fused(&k));
+        let pt = dequantize(&quantize_tensorwise(&k));
+        // Compare error on the *normal* columns only.
+        let mut err_pc = 0.0f64;
+        let mut err_pt = 0.0f64;
+        for t in 0..k.rows {
+            for d in 1..k.cols {
+                err_pc = err_pc.max((k.at(t, d) - pc.at(t, d)).abs() as f64);
+                err_pt = err_pt.max((k.at(t, d) - pt.at(t, d)).abs() as f64);
+            }
+        }
+        assert!(err_pc * 10.0 < err_pt, "pc {err_pc} vs pt {err_pt}");
+    }
+
+    #[test]
+    fn equal_ranges_match_per_channel_bound() {
+        // With homogeneous columns the two schemes are equivalent-ish.
+        let k = Fp32Matrix::random_uniform(512, 32, -1.0, 1.0, 3);
+        let pt = dequantize(&quantize_tensorwise(&k));
+        assert!(max_abs_error(&k, &pt) <= 1.0 / 254.0 + 1e-6);
+    }
+
+    #[test]
+    fn zero_matrix_safe() {
+        let k = Fp32Matrix::zeros(4, 4);
+        let q = quantize_tensorwise(&k);
+        assert!(q.data.iter().all(|&v| v == 0));
+        assert!(q.scales.iter().all(|&s| s == 0.0));
+    }
+}

@@ -1,0 +1,222 @@
+//! Artifact manifest: the ABI between `python -m compile.aot` and the
+//! Rust runtime. Parsed with the in-repo JSON parser.
+
+use super::tensor::DType;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// dtype + shape of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = DType::parse(j.get("dtype").as_str().ok_or_else(|| anyhow!("missing dtype"))?)?;
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSpec { dtype, shape })
+    }
+}
+
+/// One AOT-lowered executable.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    /// Path of the HLO text file, relative to the artifact dir.
+    pub path: String,
+    /// Entry kind: quantize / dequantize / scales / quantize_fused /
+    /// quantize_ref / attnerr / prefill / decode / decode_pallas.
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// A bench shape recorded by aot.py (Table-3 row, ci or paper set).
+#[derive(Debug, Clone)]
+pub struct ShapeInfo {
+    pub set: String,
+    pub name: String,
+    pub tokens: usize,
+    pub dim: usize,
+    pub tag: String,
+    pub desc: String,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub entries: BTreeMap<String, ManifestEntry>,
+    pub shapes: Vec<ShapeInfo>,
+    /// Model configs as raw JSON (decoded further by `model::spec`).
+    pub models: Vec<Json>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`?)", path.display()))?;
+        Self::parse(&text, root)
+    }
+
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let version = j.get("version").as_usize().unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = BTreeMap::new();
+        for e in j.get("entries").as_arr().unwrap_or(&[]) {
+            let name = e
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let entry = ManifestEntry {
+                name: name.clone(),
+                path: e.get("path").as_str().ok_or_else(|| anyhow!("missing path"))?.to_string(),
+                kind: e.get("kind").as_str().unwrap_or("").to_string(),
+                inputs: e
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("entry {name}: inputs"))?,
+                outputs: e
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()
+                    .with_context(|| format!("entry {name}: outputs"))?,
+                meta: e.get("meta").clone(),
+            };
+            entries.insert(name, entry);
+        }
+        let shapes = j
+            .get("shapes")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| {
+                Ok(ShapeInfo {
+                    set: s.get("set").as_str().unwrap_or("").to_string(),
+                    name: s.get("name").as_str().unwrap_or("").to_string(),
+                    tokens: s.get("tokens").as_usize().ok_or_else(|| anyhow!("shape tokens"))?,
+                    dim: s.get("dim").as_usize().ok_or_else(|| anyhow!("shape dim"))?,
+                    tag: s.get("tag").as_str().unwrap_or("").to_string(),
+                    desc: s.get("desc").as_str().unwrap_or("").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let models = j.get("models").as_arr().unwrap_or(&[]).to_vec();
+        Ok(Manifest { root, entries, shapes, models })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} entries)", self.entries.len()))
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ManifestEntry) -> PathBuf {
+        self.root.join(&entry.path)
+    }
+
+    /// Shapes in a given set ("ci" or "paper"), in manifest order.
+    pub fn shape_set(&self, set: &str) -> Vec<&ShapeInfo> {
+        self.shapes.iter().filter(|s| s.set == set).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "quantize_naive_8x4", "path": "q.hlo.txt", "kind": "quantize",
+         "inputs": [{"dtype": "float32", "shape": [8, 4]},
+                    {"dtype": "float32", "shape": [4]}],
+         "outputs": [{"dtype": "int8", "shape": [8, 4]}],
+         "meta": {"variant": "naive", "tokens": 8, "dim": 4}}
+      ],
+      "shapes": [{"set": "ci", "name": "small", "tokens": 8, "dim": 4,
+                  "tag": "8x4", "desc": "d"}],
+      "models": [{"name": "kvq-3m"}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let e = m.entry("quantize_naive_8x4").unwrap();
+        assert_eq!(e.kind, "quantize");
+        assert_eq!(e.inputs[0].shape, vec![8, 4]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.outputs[0].dtype, DType::I8);
+        assert_eq!(e.meta.get("variant").as_str(), Some("naive"));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/q.hlo.txt"));
+        assert_eq!(m.shape_set("ci").len(), 1);
+        assert_eq!(m.shape_set("paper").len(), 0);
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn tensor_spec_sizes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let e = m.entry("quantize_naive_8x4").unwrap();
+        assert_eq!(e.inputs[0].elements(), 32);
+        assert_eq!(e.inputs[0].size_bytes(), 128);
+        assert_eq!(e.outputs[0].size_bytes(), 32);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Exercises the real artifacts/ when built (skips otherwise so
+        // unit tests don't depend on `make artifacts`).
+        let dir = crate::runtime::default_artifact_dir();
+        if !std::path::Path::new(&dir).join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.entries.len() >= 10);
+        assert!(!m.shape_set("ci").is_empty());
+    }
+}

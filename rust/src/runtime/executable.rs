@@ -1,0 +1,176 @@
+//! Compile-once executable cache over the PJRT CPU client.
+
+use super::artifacts::{Manifest, ManifestEntry};
+use super::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A compiled artifact: manifest entry + PJRT executable.
+pub struct Compiled {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    /// Validate inputs against the manifest signature, execute, and return
+    /// the decomposed tuple outputs as host tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.validate(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t.to_literal().with_context(|| format!("input {i}")))
+            .collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.entry.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.entry.name))?;
+        // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+        let parts = tuple.decompose_tuple().context("decomposing output tuple")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.iter().enumerate() {
+            out.push(HostTensor::from_literal(lit).with_context(|| format!("output {i}"))?);
+        }
+        if out.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.entry.name,
+                self.entry.outputs.len(),
+                out.len()
+            );
+        }
+        Ok(out)
+    }
+
+    /// Buffer-based execution: callers stage large, reused inputs (e.g.
+    /// model weights) on the device once and pass cheap references per
+    /// step. No signature validation here — the caller owns the staging.
+    pub fn run_b(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .with_context(|| format!("executing (buffers) {}", self.entry.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.entry.name))?;
+        let parts = tuple.decompose_tuple().context("decomposing output tuple")?;
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, lit)| HostTensor::from_literal(lit).with_context(|| format!("output {i}")))
+            .collect()
+    }
+
+    fn validate(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if t.dtype() != spec.dtype {
+                bail!(
+                    "{} input {i}: dtype {} != manifest {}",
+                    self.entry.name,
+                    t.dtype().name(),
+                    spec.dtype.name()
+                );
+            }
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{} input {i}: shape {:?} != manifest {:?}",
+                    self.entry.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The runtime: PJRT CPU client + manifest + compiled-executable cache.
+///
+/// Not `Send`/`Sync` (the xla crate wraps raw pointers); confine to one
+/// thread — the coordinator gives the engine its own thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "runtime up: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.entries.len()
+        );
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let entry = self.manifest.entry(name)?.clone();
+        let path = self.manifest.hlo_path(&entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", name))?;
+        crate::debug!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64());
+        let compiled = Rc::new(Compiled { entry, exe });
+        self.cache.borrow_mut().insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Stage an f32 host buffer on the device (for reused inputs).
+    pub fn stage_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("staging f32 buffer")
+    }
+
+    /// Stage an i8 host buffer on the device.
+    pub fn stage_i8(&self, data: &[i8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("staging i8 buffer")
+    }
+
+    /// Stage an i32 host buffer on the device.
+    pub fn stage_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).context("staging i32 buffer")
+    }
+}
+
+// Unit tests for validation logic are in rust/tests/runtime_artifacts.rs
+// (they need real artifacts + libxla; `Manifest`-level parsing is unit
+// tested in artifacts.rs).

@@ -1,0 +1,30 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format (xla_extension 0.5.1 rejects
+//! jax≥0.5 serialized protos — 64-bit instruction ids).
+//!
+//! Python never runs at serve time: `artifacts/manifest.json` (written by
+//! `python -m compile.aot`) describes every executable's input/output
+//! signature, and [`Runtime`] validates host tensors against it before
+//! execution. Executables are compiled once and cached for the process
+//! lifetime.
+//!
+//! Threading: the underlying `xla` crate wraps raw pointers without
+//! `Send`/`Sync`, so a [`Runtime`] is confined to the thread that created
+//! it. The coordinator runs the engine (and thus the runtime) on a single
+//! dedicated thread and communicates via channels.
+
+pub mod artifacts;
+pub mod executable;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ManifestEntry, TensorSpec};
+pub use executable::Runtime;
+pub use tensor::{DType, HostTensor};
+
+/// Default artifact directory (overridable via `KVQ_ARTIFACTS` or CLI).
+pub fn default_artifact_dir() -> String {
+    std::env::var("KVQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

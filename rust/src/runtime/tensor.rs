@@ -1,0 +1,231 @@
+//! Host-side tensors and their conversion to/from XLA literals.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element dtypes used by the artifact ABI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int8" | "i8" => DType::I8,
+            "int32" | "i32" => DType::I32,
+            _ => bail!("unsupported dtype {s:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::I8 => "int8",
+            DType::I32 => "int32",
+        }
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I8 => xla::ElementType::S8,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// A host tensor: typed buffer + shape. The only data type that crosses
+/// the coordinator ↔ runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I8(Vec<i8>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn scalar_i32(v: i32) -> HostTensor {
+        HostTensor::I32(vec![v], vec![])
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i8(data: Vec<i8>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::I8(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I8(..) => DType::I8,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I8(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I8(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype().name())),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            HostTensor::I8(d, _) => Ok(d),
+            other => Err(anyhow!("expected i8 tensor, got {}", other.dtype().name())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            other => Err(anyhow!("expected i32 tensor, got {}", other.dtype().name())),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            other => Err(anyhow!("expected f32 tensor, got {}", other.dtype().name())),
+        }
+    }
+
+    pub fn into_i8(self) -> Result<Vec<i8>> {
+        match self {
+            HostTensor::I8(d, _) => Ok(d),
+            other => Err(anyhow!("expected i8 tensor, got {}", other.dtype().name())),
+        }
+    }
+
+    /// Bytes view of the payload (for literal construction).
+    fn bytes(&self) -> &[u8] {
+        match self {
+            HostTensor::F32(d, _) => unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4)
+            },
+            HostTensor::I8(d, _) => unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len())
+            },
+            HostTensor::I32(d, _) => unsafe {
+                std::slice::from_raw_parts(d.as_ptr() as *const u8, d.len() * 4)
+            },
+        }
+    }
+
+    /// Convert to an XLA literal (copies once).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            self.shape(),
+            self.bytes(),
+        )
+        .context("creating literal")
+    }
+
+    /// Convert an XLA literal back to a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().context("literal array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let n: usize = dims.iter().product();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let mut data = vec![0.0f32; n];
+                lit.copy_raw_to(&mut data).context("copy f32")?;
+                Ok(HostTensor::F32(data, dims))
+            }
+            xla::ElementType::S8 => {
+                let mut data = vec![0i8; n];
+                lit.copy_raw_to(&mut data).context("copy i8")?;
+                Ok(HostTensor::I8(data, dims))
+            }
+            xla::ElementType::S32 => {
+                let mut data = vec![0i32; n];
+                lit.copy_raw_to(&mut data).context("copy i32")?;
+                Ok(HostTensor::I32(data, dims))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        for (s, d) in [("float32", DType::F32), ("int8", DType::I8), ("int32", DType::I32)] {
+            assert_eq!(DType::parse(s).unwrap(), d);
+            assert_eq!(DType::parse(d.name()).unwrap(), d);
+        }
+        assert!(DType::parse("float64").is_err());
+    }
+
+    #[test]
+    fn constructors_validate_shape() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn constructor_rejects_bad_shape() {
+        HostTensor::f32(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn accessors_enforce_dtype() {
+        let t = HostTensor::i8(vec![1, 2], &[2]);
+        assert!(t.as_i8().is_ok());
+        assert!(t.as_f32().is_err());
+    }
+
+    #[test]
+    fn scalar_shape_is_rank0() {
+        let t = HostTensor::scalar_i32(7);
+        assert!(t.shape().is_empty());
+        assert_eq!(t.len(), 1);
+    }
+
+    // Literal round-trips are covered by the integration test
+    // (rust/tests/runtime_artifacts.rs) since they need libxla at runtime.
+}

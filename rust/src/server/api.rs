@@ -1,0 +1,104 @@
+//! JSON API shapes for the HTTP endpoints.
+
+use crate::model::sample::SamplingParams;
+use crate::util::json::{obj, Json};
+use anyhow::{anyhow, Result};
+
+/// POST /generate body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenerateRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+    pub top_k: usize,
+    pub seed: u64,
+    /// Optional engine name (A/B routing); None = router policy.
+    pub engine: Option<String>,
+}
+
+impl GenerateRequest {
+    pub fn parse(body: &str) -> Result<GenerateRequest> {
+        let j = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
+        let prompt = j
+            .get("prompt")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing 'prompt' (string)"))?
+            .to_string();
+        Ok(GenerateRequest {
+            prompt,
+            max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(16),
+            temperature: j.get("temperature").as_f64().unwrap_or(0.0) as f32,
+            top_k: j.get("top_k").as_usize().unwrap_or(0),
+            seed: j.get("seed").as_usize().unwrap_or(0) as u64,
+            engine: j.get("engine").as_str().map(String::from),
+        })
+    }
+
+    pub fn sampling(&self) -> SamplingParams {
+        SamplingParams { temperature: self.temperature, top_k: self.top_k, seed: self.seed }
+    }
+}
+
+/// /generate response body.
+pub fn generate_response(
+    id: u64,
+    text: &str,
+    tokens: &[i32],
+    finish: &str,
+    ttft: f64,
+    elapsed: f64,
+) -> Json {
+    obj([
+        ("id", (id as usize).into()),
+        ("text", text.into()),
+        ("tokens", tokens.iter().map(|&t| Json::Num(t as f64)).collect::<Vec<_>>().into()),
+        ("finish_reason", finish.into()),
+        ("ttft_s", ttft.into()),
+        ("elapsed_s", elapsed.into()),
+    ])
+}
+
+pub fn error_response(msg: &str) -> Json {
+    obj([("error", msg.into())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_request() {
+        let r = GenerateRequest::parse(r#"{"prompt":"hi"}"#).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new_tokens, 16);
+        assert_eq!(r.temperature, 0.0);
+        assert!(r.engine.is_none());
+    }
+
+    #[test]
+    fn parses_full_request() {
+        let r = GenerateRequest::parse(
+            r#"{"prompt":"x","max_new_tokens":4,"temperature":0.7,
+                "top_k":40,"seed":9,"engine":"fp32"}"#,
+        )
+        .unwrap();
+        assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.top_k, 40);
+        assert_eq!(r.engine.as_deref(), Some("fp32"));
+        assert_eq!(r.sampling().seed, 9);
+    }
+
+    #[test]
+    fn rejects_missing_prompt() {
+        assert!(GenerateRequest::parse(r#"{"max_new_tokens":4}"#).is_err());
+        assert!(GenerateRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn response_shape() {
+        let j = generate_response(3, "out", &[1, 2], "length", 0.1, 0.2);
+        assert_eq!(j.get("id").as_usize(), Some(3));
+        assert_eq!(j.get("tokens").at(1).as_f64(), Some(2.0));
+        assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+    }
+}

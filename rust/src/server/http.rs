@@ -1,0 +1,281 @@
+//! Minimal HTTP/1.1 server on std::net (hyper/axum substitute).
+//!
+//! Supports: GET/POST, headers, Content-Length bodies (no chunked
+//! requests), keep-alive off (Connection: close on every response —
+//! simple and correct). Thread-per-connection with a connection cap.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Parsed request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("non-utf8 body")
+    }
+}
+
+/// Response under construction.
+#[derive(Debug, Clone)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json".into(),
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> HttpResponse {
+        HttpResponse { status, content_type: "text/plain".into(), body: body.as_bytes().to_vec() }
+    }
+
+    fn reason(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "",
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.reason(),
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Parse one request from a stream (bounded body size).
+pub fn parse_request(stream: &mut TcpStream, max_body: usize) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().ok_or_else(|| anyhow!("missing method"))?.to_string();
+    let path = parts.next().ok_or_else(|| anyhow!("missing path"))?.to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported version {version:?}");
+    }
+
+    let mut headers = BTreeMap::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("header line")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers.get("content-length").and_then(|v| v.parse().ok()).unwrap_or(0);
+    if len > max_body {
+        bail!("body too large: {len}");
+    }
+    let mut body = vec![0u8; len];
+    if len > 0 {
+        reader.read_exact(&mut body).context("body")?;
+    }
+    Ok(HttpRequest { method, path, headers, body })
+}
+
+/// The server: accepts connections and dispatches to a handler.
+pub struct HttpServer {
+    listener: TcpListener,
+    max_connections: usize,
+    max_body: usize,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind to `127.0.0.1:port` (port 0 = ephemeral; see `local_port`).
+    pub fn bind(port: u16) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("bind :{port}"))?;
+        Ok(HttpServer {
+            listener,
+            max_connections: 64,
+            max_body: 1 << 20,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// Handle used to stop `serve` from another thread.
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Serve until the shutdown flag flips. Handler runs per connection
+    /// on its own thread (bounded by `max_connections`).
+    pub fn serve<F>(&self, handler: F)
+    where
+        F: Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        let handler = Arc::new(handler);
+        let live = Arc::new(AtomicUsize::new(0));
+        self.listener.set_nonblocking(true).ok();
+        while !self.shutdown.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((mut stream, _addr)) => {
+                    stream.set_nonblocking(false).ok();
+                    if live.load(Ordering::Relaxed) >= self.max_connections {
+                        let _ = HttpResponse::text(503, "overloaded").write_to(&mut stream);
+                        continue;
+                    }
+                    let h = handler.clone();
+                    let live2 = live.clone();
+                    let max_body = self.max_body;
+                    live.fetch_add(1, Ordering::Relaxed);
+                    std::thread::spawn(move || {
+                        let resp = match parse_request(&mut stream, max_body) {
+                            Ok(req) => h(req),
+                            Err(e) => HttpResponse::text(400, &format!("bad request: {e}")),
+                        };
+                        let _ = resp.write_to(&mut stream);
+                        live2.fetch_sub(1, Ordering::Relaxed);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    crate::warn!("accept error: {e}");
+                }
+            }
+        }
+    }
+}
+
+/// Tiny blocking HTTP client for tests/examples (same subset).
+pub fn http_request(
+    port: u16,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream =
+        TcpStream::connect(("127.0.0.1", port)).with_context(|| format!("connect :{port}"))?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf)?;
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad response: {buf:?}"))?;
+    let payload = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Ok((status, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn spawn_server<F>(handler: F) -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>)
+    where
+        F: Fn(HttpRequest) -> HttpResponse + Send + Sync + 'static,
+    {
+        let server = HttpServer::bind(0).unwrap();
+        let port = server.local_port();
+        let stop = server.shutdown_handle();
+        let join = std::thread::spawn(move || server.serve(handler));
+        (port, stop, join)
+    }
+
+    #[test]
+    fn serves_get_and_post() {
+        let (port, stop, join) = spawn_server(|req| match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => HttpResponse::text(200, "ok"),
+            ("POST", "/echo") => HttpResponse {
+                status: 200,
+                content_type: "text/plain".into(),
+                body: req.body,
+            },
+            _ => HttpResponse::text(404, "nope"),
+        });
+
+        let (code, body) = http_request(port, "GET", "/health", None).unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok"));
+
+        let (code, body) = http_request(port, "POST", "/echo", Some("payload123")).unwrap();
+        assert_eq!((code, body.as_str()), (200, "payload123"));
+
+        let (code, _) = http_request(port, "GET", "/missing", None).unwrap();
+        assert_eq!(code, 404);
+
+        stop.store(true, Ordering::Relaxed);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        let (port, stop, join) = spawn_server(|_req| HttpResponse::text(200, "ok"));
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream.write_all(b"GARBAGE\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 400"), "{buf}");
+        stop.store(true, Ordering::Relaxed);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn parallel_requests_are_served() {
+        let (port, stop, join) = spawn_server(|_req| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            HttpResponse::text(200, "slow")
+        });
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || http_request(port, "GET", "/x", None).unwrap().0)
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 200);
+        }
+        stop.store(true, Ordering::Relaxed);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! std-only HTTP front end for the serving stack.
+//!
+//! * [`http`] — minimal HTTP/1.1 server (request-line + headers +
+//!   content-length bodies, thread-per-connection) over `std::net`.
+//! * [`api`] — JSON request/response shapes for `/generate`, `/metrics`,
+//!   `/health`.
+//! * [`service`] — wires the router + tokenizer behind the HTTP handlers.
+
+pub mod api;
+pub mod http;
+pub mod service;
+
+pub use http::{HttpRequest, HttpResponse, HttpServer};
+pub use service::KvqService;

@@ -1,0 +1,177 @@
+//! The HTTP service: router + tokenizer behind request handlers.
+
+use super::api::{error_response, generate_response, GenerateRequest};
+use super::http::{HttpRequest, HttpResponse};
+use crate::coordinator::request::{collect_response, FinishReason};
+use crate::coordinator::Router;
+use crate::model::ByteTokenizer;
+use crate::util::json::{obj, Json};
+use std::sync::Arc;
+
+/// Shareable service state.
+pub struct KvqService {
+    pub router: Arc<Router>,
+    pub tokenizer: ByteTokenizer,
+}
+
+impl KvqService {
+    pub fn new(router: Arc<Router>) -> KvqService {
+        KvqService { router, tokenizer: ByteTokenizer::new() }
+    }
+
+    /// Top-level request dispatch.
+    pub fn handle(&self, req: HttpRequest) -> HttpResponse {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/health") => HttpResponse::json(200, &obj([("status", "ok".into())])),
+            ("GET", "/metrics") => self.metrics(),
+            ("POST", "/generate") => self.generate(&req),
+            ("GET", _) | ("POST", _) => {
+                HttpResponse::json(404, &error_response("unknown endpoint"))
+            }
+            _ => HttpResponse::json(405, &error_response("method not allowed")),
+        }
+    }
+
+    fn metrics(&self) -> HttpResponse {
+        let mut engines = Vec::new();
+        for name in self.router.engine_names() {
+            let snap = self.router.engine(name).unwrap().metrics.snapshot();
+            let mut j = snap.to_json();
+            if let Json::Obj(ref mut o) = j {
+                o.insert("engine".into(), Json::Str(name.to_string()));
+            }
+            engines.push(j);
+        }
+        HttpResponse::json(200, &obj([("engines", Json::Arr(engines))]))
+    }
+
+    fn generate(&self, req: &HttpRequest) -> HttpResponse {
+        let body = match req.body_str() {
+            Ok(b) => b,
+            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+        };
+        let greq = match GenerateRequest::parse(body) {
+            Ok(r) => r,
+            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+        };
+        let prompt = self.tokenizer.encode(&greq.prompt);
+        let submit = match &greq.engine {
+            Some(name) => self.router.submit_to(
+                name,
+                prompt,
+                greq.max_new_tokens,
+                greq.sampling(),
+            ),
+            None => self.router.submit(prompt, greq.max_new_tokens, greq.sampling()),
+        };
+        let (id, rx) = match submit {
+            Ok(x) => x,
+            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+        };
+        let (tokens, reason, ttft, elapsed) = collect_response(&rx);
+        let (status, reason_str) = match &reason {
+            FinishReason::Length => (200, "length".to_string()),
+            FinishReason::Stop => (200, "stop".to_string()),
+            FinishReason::CapacityExhausted => (200, "capacity".to_string()),
+            FinishReason::Rejected(c) => (429, format!("rejected: {c}")),
+            FinishReason::Error(c) => (500, format!("error: {c}")),
+        };
+        let text = self.tokenizer.decode(&tokens);
+        HttpResponse::json(
+            status,
+            &generate_response(id, &text, &tokens, &reason_str, ttft, elapsed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{self, EngineConfig};
+    use crate::coordinator::router::RoutePolicy;
+    use crate::kvcache::Precision;
+    use crate::model::runner::CpuBackend;
+    use crate::model::weights::Weights;
+    use crate::model::ModelSpec;
+
+    fn service() -> (KvqService, crate::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
+        let (h, join) = engine::spawn(
+            EngineConfig { precision: Precision::Int8, ..Default::default() },
+            || {
+                let spec = ModelSpec::test_tiny();
+                let w = Weights::synthetic(&spec, 7);
+                Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn crate::model::LmBackend>)
+            },
+        );
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", h.clone());
+        (KvqService::new(Arc::new(router)), h, join)
+    }
+
+    fn post(svc: &KvqService, path: &str, body: &str) -> HttpResponse {
+        svc.handle(HttpRequest {
+            method: "POST".into(),
+            path: path.into(),
+            headers: Default::default(),
+            body: body.as_bytes().to_vec(),
+        })
+    }
+
+    fn get(svc: &KvqService, path: &str) -> HttpResponse {
+        svc.handle(HttpRequest {
+            method: "GET".into(),
+            path: path.into(),
+            headers: Default::default(),
+            body: vec![],
+        })
+    }
+
+    #[test]
+    fn health_and_metrics() {
+        let (svc, h, join) = service();
+        assert_eq!(get(&svc, "/health").status, 200);
+        let m = get(&svc, "/metrics");
+        assert_eq!(m.status, 200);
+        let j = Json::parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(j.get("engines").at(0).get("engine").as_str(), Some("int8"));
+        h.drain();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn generate_roundtrip() {
+        let (svc, h, join) = service();
+        // vocab is 64 in test-tiny: use low-byte prompt chars (so ids < 64).
+        let resp = post(&svc, "/generate", r#"{"prompt":"","max_new_tokens":3}"#);
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("finish_reason").as_str(), Some("length"));
+        assert_eq!(j.get("tokens").as_arr().unwrap().len(), 3);
+        h.drain();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn bad_requests_are_4xx() {
+        let (svc, h, join) = service();
+        assert_eq!(post(&svc, "/generate", "not json").status, 400);
+        assert_eq!(post(&svc, "/generate", r#"{"nope":1}"#).status, 400);
+        assert_eq!(get(&svc, "/bogus").status, 404);
+        h.drain();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_request_is_429() {
+        let (svc, h, join) = service();
+        let long = "\u{1}".repeat(30);
+        let resp = post(
+            &svc,
+            "/generate",
+            &format!(r#"{{"prompt":"{long}","max_new_tokens":30}}"#),
+        );
+        assert_eq!(resp.status, 429);
+        h.drain();
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,202 @@
+//! Tiny CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands. Typed accessors with defaults; unknown-flag detection
+//! via [`Args::finish`].
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    /// value + whether it was greedily taken from the following token
+    /// (as opposed to `--k=v` or a bare `--flag`).
+    flags: BTreeMap<String, (String, bool)>,
+    consumed: std::cell::RefCell<Vec<String>>,
+    /// Tokens stolen by a `--flag tok` pair that `bool_or` later decided
+    /// were positionals after all (boolean flag followed by a positional).
+    restored: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) — `--k v`, `--k=v`, `--flag`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let toks: Vec<String> = it.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), (v.to_string(), false));
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    flags.insert(body.to_string(), (toks[i + 1].clone(), true));
+                    i += 1;
+                } else {
+                    flags.insert(body.to_string(), ("true".to_string(), false));
+                }
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags, consumed: Default::default(), restored: Default::default() }
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// First positional argument = subcommand; the rest shift down.
+    pub fn subcommand(&mut self) -> Option<String> {
+        if self.positional.is_empty() {
+            None
+        } else {
+            Some(self.positional.remove(0))
+        }
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|(s, _)| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| bad(key, v))).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| bad(key, v))).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().unwrap_or_else(|_| bad(key, v))).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => default,
+            Some((v, _)) if matches!(v.as_str(), "true" | "1" | "yes") => true,
+            Some((v, _)) if matches!(v.as_str(), "false" | "0" | "no") => false,
+            // `--flag positional`: the greedy parser stole a positional
+            // token; give it back and treat the flag as present.
+            Some((v, true)) => {
+                self.restored.borrow_mut().push(v.clone());
+                true
+            }
+            Some((v, false)) => bad(key, v),
+        }
+    }
+
+    /// Positionals reclaimed by `bool_or` (call after flag parsing).
+    pub fn take_restored(&self) -> Vec<String> {
+        std::mem::take(&mut *self.restored.borrow_mut())
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error out on any flag that no accessor ever looked at (catches typos
+    /// like `--ful` for `--full`).
+    pub fn finish(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.iter().any(|s| s == *k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flag(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")))
+        }
+    }
+}
+
+fn bad(key: &str, v: &str) -> ! {
+    eprintln!("invalid value for --{key}: {v:?}");
+    std::process::exit(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args("--n 5 --mode=fast --verbose pos1 pos2");
+        assert_eq!(a.usize_or("n", 0), 5);
+        assert_eq!(a.str_or("mode", ""), "fast");
+        // `--verbose pos1`: the parser greedily pairs them; bool_or
+        // resolves the ambiguity and restores pos1.
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional, vec!["pos2"]);
+        assert_eq!(a.take_restored(), vec!["pos1"]);
+    }
+
+    #[test]
+    fn subcommand_shifts() {
+        let mut a = args("serve --port 8080");
+        assert_eq!(a.subcommand().as_deref(), Some("serve"));
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "x"), "x");
+        assert!(!a.bool_or("missing", false));
+    }
+
+    #[test]
+    fn list_values() {
+        let a = args("--variants naive,tiled");
+        assert_eq!(a.list_or("variants", &[]), vec!["naive", "tiled"]);
+        assert_eq!(a.list_or("other", &["a"]), vec!["a"]);
+    }
+
+    #[test]
+    fn finish_catches_unknown() {
+        let a = args("--known 1 --typo 2");
+        let _ = a.usize_or("known", 0);
+        let err = a.finish().unwrap_err();
+        assert!(err.contains("--typo"), "{err}");
+    }
+
+    #[test]
+    fn finish_ok_when_all_consumed() {
+        let a = args("--x 1");
+        let _ = a.usize_or("x", 0);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("--offset=-3");
+        assert_eq!(a.f64_or("offset", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Benchmark harness (criterion substitute).
+//!
+//! Warmup + timed repetitions with median/mean/min reporting, adaptive
+//! repetition count targeting a wall-clock budget, and aligned-table /
+//! CSV emission so each `cargo bench` target prints the same rows as the
+//! corresponding paper table or figure.
+
+use super::stats::{fmt_duration, Summary};
+use std::time::Instant;
+
+/// One measured cell: repeated timings of a closure.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub reps: usize,
+    pub secs: Summary,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        self.secs.median()
+    }
+    pub fn mean(&self) -> f64 {
+        self.secs.mean()
+    }
+    pub fn min(&self) -> f64 {
+        self.secs.min()
+    }
+}
+
+/// Timing policy.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Minimum repetitions regardless of budget.
+    pub min_reps: usize,
+    /// Maximum repetitions.
+    pub max_reps: usize,
+    /// Wall-clock budget per measurement (seconds).
+    pub budget: f64,
+    /// Warmup runs (not recorded).
+    pub warmup: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { min_reps: 3, max_reps: 30, budget: 2.0, warmup: 1 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { min_reps: 2, max_reps: 5, budget: 0.5, warmup: 1 }
+    }
+
+    /// Measure `f`, which performs one full operation per call.
+    pub fn measure<F: FnMut()>(&self, label: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut secs = Summary::new();
+        let start = Instant::now();
+        let mut reps = 0;
+        while reps < self.min_reps
+            || (reps < self.max_reps && start.elapsed().as_secs_f64() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            secs.add(t0.elapsed().as_secs_f64());
+            reps += 1;
+        }
+        Measurement { label: label.to_string(), reps, secs }
+    }
+}
+
+/// Aligned-column text table, emitted to stdout and optionally CSV.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}", w = w))
+            .collect();
+        println!("{}", hdr.join("  "));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let line: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}", w = w)).collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write CSV alongside the printed table (for plotting).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            let esc: Vec<String> = row
+                .iter()
+                .map(|c| {
+                    if c.contains(',') || c.contains('"') {
+                        format!("\"{}\"", c.replace('"', "\"\""))
+                    } else {
+                        c.clone()
+                    }
+                })
+                .collect();
+            writeln!(f, "{}", esc.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Convenience cell formatters.
+pub fn cell_time(secs: f64) -> String {
+    fmt_duration(secs)
+}
+
+pub fn cell_speedup(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}x")
+    } else {
+        format!("{x:.2}x")
+    }
+}
+
+pub fn cell_f(x: f64, prec: usize) -> String {
+    format!("{x:.prec$}")
+}
+
+/// Whether benches should run paper-size workloads (`KVQ_BENCH_FULL=1` or
+/// `--full` handled by callers).
+pub fn full_mode() -> bool {
+    std::env::var("KVQ_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_at_least_min_reps() {
+        let b = Bencher { min_reps: 4, max_reps: 10, budget: 0.0, warmup: 0 };
+        let mut n = 0;
+        let m = b.measure("x", || n += 1);
+        assert_eq!(m.reps, 4);
+        assert_eq!(n, 4);
+        assert!(m.median() >= 0.0);
+    }
+
+    #[test]
+    fn measure_respects_budget_cap() {
+        let b = Bencher { min_reps: 1, max_reps: 3, budget: 60.0, warmup: 0 };
+        let m = b.measure("sleepy", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(m.reps <= 3);
+    }
+
+    #[test]
+    fn table_prints_and_csvs() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "x,y".into()]);
+        t.print();
+        let path = std::env::temp_dir().join("kvq_table_test.csv");
+        t.write_csv(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("a,b"));
+        assert!(body.contains("\"x,y\""));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("t", &["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(cell_speedup(1694.2), "1694x");
+        assert_eq!(cell_speedup(3.5), "3.50x");
+        assert_eq!(cell_f(0.00394, 5), "0.00394");
+    }
+}

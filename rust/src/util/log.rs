@@ -1,0 +1,126 @@
+//! Leveled stderr logger (env_logger substitute).
+//!
+//! Level comes from `KVQ_LOG` (error|warn|info|debug|trace, default info)
+//! or [`set_level`]. Timestamps are seconds since process start — stable
+//! across runs, cheap, and adequate for a single-process server.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return v;
+    }
+    let init = std::env::var("KVQ_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(init, Ordering::Relaxed);
+    init
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+pub fn log(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{t:9.3} {} {target}] {msg}", l.tag());
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("nope"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default-ish for other tests
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        set_level(Level::Error);
+        crate::info!("not shown {}", 1);
+        crate::error!("shown {}", 2);
+        set_level(Level::Info);
+    }
+}

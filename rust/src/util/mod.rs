@@ -1,0 +1,15 @@
+//! From-scratch substrates.
+//!
+//! The offline build environment provides no general-purpose crates
+//! (no serde/clap/rand/rayon/tokio/criterion/proptest), so this module
+//! implements the small, well-understood subset of each that the rest of
+//! the stack needs. Each submodule is independently unit-tested.
+
+pub mod args;
+pub mod harness;
+pub mod json;
+pub mod log;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,124 @@
+//! Scoped thread pool + parallel-for (rayon substitute).
+//!
+//! `scope_chunks` splits an index range across worker threads using
+//! `std::thread::scope`, so borrows of stack data work without `Arc`.
+//! On this testbed (1 core) it degrades gracefully to sequential execution;
+//! the quantizer's `parallel` variants route through it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (available parallelism,
+/// overridable via `KVQ_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("KVQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` in parallel over `0..n` split into
+/// contiguous chunks, one logical chunk stream per worker (work-stealing
+/// via an atomic cursor, chunk size `chunk`).
+pub fn parallel_chunks<F>(n: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= chunk {
+        let mut i = 0;
+        while i < n {
+            f(i, (i + chunk).min(n));
+            i += chunk;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start, (start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// Parallel map over a slice of items producing a Vec of results in order.
+/// Static partition: each worker owns a contiguous (items, out) pair.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync + Send,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    let mut out = vec![R::default(); n];
+    if threads <= 1 {
+        for (o, it) in out.iter_mut().zip(items) {
+            *o = f(it);
+        }
+        return out;
+    }
+    let per = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ichunk, ochunk) in items.chunks(per).zip(out.chunks_mut(per)) {
+            s.spawn(move || {
+                for (o, it) in ochunk.iter_mut().zip(ichunk) {
+                    *o = f(it);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(n, 64, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(100, 7, 1, |s, e| {
+            sum.fetch_add((s..e).map(|i| i as u64).sum(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        parallel_chunks(0, 16, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 4, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

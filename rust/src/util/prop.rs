@@ -1,0 +1,197 @@
+//! Mini property-testing framework (proptest substitute).
+//!
+//! A property is a closure over a [`Gen`] (seeded RNG wrapper with size
+//! hints). The runner executes N cases with growing size; on failure it
+//! re-runs with shrunken size parameters to report a smaller counterexample
+//! seed, then panics with a reproduction line.
+//!
+//! ```ignore
+//! check("quantize roundtrip bound", 200, |g| {
+//!     let m = g.matrix(1..64, 1..64, -1.0..1.0);
+//!     // ... assert invariant, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Test-case generator: an RNG plus the current size budget.
+pub struct Gen {
+    pub rng: Rng,
+    /// Grows from 0.1→1.0 across the run; generators scale ranges by it so
+    /// early cases are small and failures shrink naturally.
+    pub size: f64,
+    pub case: usize,
+}
+
+impl Gen {
+    fn scaled(&self, r: &Range<usize>) -> usize {
+        let span = (r.end - r.start).max(1);
+        let hi = r.start + ((span as f64 * self.size).ceil() as usize).clamp(1, span);
+        r.start + (hi - r.start).max(1) - 1
+    }
+
+    /// Integer in `[r.start, r.end)`, biased small early in the run.
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        let hi = self.scaled(&r).max(r.start);
+        self.rng.range(r.start as i64, hi as i64) as usize
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        assert!(r.start < r.end);
+        self.rng.range(r.start, r.end - 1)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        self.rng.uniform(r.start, r.end)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Pick one of the provided choices.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// A (rows, cols, data) matrix with values drawn from one of several
+    /// distributions (uniform / normal / outlier-heavy / constant / zeros).
+    pub fn matrix(&mut self, rows: Range<usize>, cols: Range<usize>, mag: f32) -> (usize, usize, Vec<f32>) {
+        let t = self.usize_in(rows);
+        let d = self.usize_in(cols);
+        let mut data = vec![0.0f32; t * d];
+        match self.rng.below(5) {
+            0 => self.rng.fill_uniform(&mut data, -mag, mag),
+            1 => self.rng.fill_normal(&mut data, mag / 2.0),
+            2 => {
+                self.rng.fill_normal(&mut data, mag / 2.0);
+                // 1% outliers at 100x
+                let n = (t * d / 100).max(1);
+                for _ in 0..n {
+                    let i = self.rng.below((t * d) as u64) as usize;
+                    data[i] *= 100.0;
+                }
+            }
+            3 => {
+                let c = self.rng.uniform(-mag, mag);
+                data.fill(c);
+            }
+            _ => { /* zeros */ }
+        }
+        (t, d, data)
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with a seed-reproduction
+/// message on the first failure (after size-shrinking retries).
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("KVQ_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("KVQ_PROP_SEED must be u64"),
+        Err(_) => 0xC0FFEE,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 0.1 + 0.9 * (case as f64 + 1.0) / cases as f64;
+        let mut g = Gen { rng: Rng::new(seed), size, case };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry the failing seed at smaller sizes to find the
+            // smallest size that still fails (generators honor g.size).
+            let mut smallest = (size, msg.clone());
+            let mut lo = 0.05;
+            let mut hi = size;
+            for _ in 0..8 {
+                let mid = (lo + hi) / 2.0;
+                let mut g2 = Gen { rng: Rng::new(seed), size: mid, case };
+                match prop(&mut g2) {
+                    Err(m) => {
+                        smallest = (mid, m);
+                        hi = mid;
+                    }
+                    Ok(()) => lo = mid,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, size {:.2}): {}\n\
+                 reproduce with: KVQ_PROP_SEED={seed} (case will differ; seed pins the stream)",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning `Result` for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::RefCell::new(&mut count);
+        check("always ok", 50, |g| {
+            let _ = g.usize_in(1..10);
+            **counter.borrow_mut() += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_g| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 100, |g| {
+            let v = g.usize_in(3..17);
+            ensure((3..17).contains(&v), format!("usize_in out of range: {v}"))?;
+            let f = g.f32_in(-2.0..2.0);
+            ensure((-2.0..2.0).contains(&f), "f32_in out of range")?;
+            let (t, d, data) = g.matrix(1..8, 1..8, 1.0);
+            ensure(data.len() == t * d, "matrix size")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_grow_across_run() {
+        let mut maxes = Vec::new();
+        let collector = std::cell::RefCell::new(&mut maxes);
+        check("size growth", 100, |g| {
+            collector.borrow_mut().push(g.size);
+            Ok(())
+        });
+        assert!(maxes.first().unwrap() < maxes.last().unwrap());
+        assert!((maxes.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ensure_close_tolerance() {
+        assert!(ensure_close(1.0, 1.0005, 0.001, "x").is_ok());
+        assert!(ensure_close(1.0, 1.1, 0.001, "x").is_err());
+    }
+}

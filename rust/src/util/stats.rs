@@ -1,0 +1,280 @@
+//! Summary statistics and latency histograms for benches and metrics.
+
+/// Online summary of a stream of samples (Welford mean/variance + exact
+/// percentiles from a retained sorted copy — fine at bench scale).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Exact percentile by linear interpolation (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        let rank = (p / 100.0) * (s.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Fixed-bucket log-scale histogram for latency tracking in the serving
+/// metrics path (no per-sample retention, O(1) record).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Bucket i counts samples in [base * ratio^i, base * ratio^(i+1)).
+    counts: Vec<u64>,
+    base: f64,
+    log_ratio: f64,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// `base`: lower bound of bucket 0 (e.g. 1 µs); `ratio`: bucket growth
+    /// (e.g. 1.3 → ~9% worst-case quantile error); `buckets`: count.
+    pub fn new(base: f64, ratio: f64, buckets: usize) -> Self {
+        assert!(base > 0.0 && ratio > 1.0 && buckets > 0);
+        Self {
+            counts: vec![0; buckets],
+            base,
+            log_ratio: ratio.ln(),
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Default latency histogram: 1 µs .. ~17 min in seconds.
+    pub fn latency() -> Self {
+        Self::new(1e-6, 1.3, 80)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.base {
+            self.underflow += 1;
+            return;
+        }
+        let idx = ((x / self.base).ln() / self.log_ratio) as usize;
+        let idx = idx.min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Approximate quantile (upper bound of the bucket containing it).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = self.underflow;
+        if acc >= target {
+            return self.base;
+        }
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * ((i + 1) as f64 * self.log_ratio).exp();
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.underflow += other.underflow;
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Format seconds in engineering units for reports.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// Format byte counts.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{v:.0}{}", UNITS[u])
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentile_interpolates() {
+        let mut s = Summary::new();
+        for x in [0.0, 10.0] {
+            s.add(x);
+        }
+        assert_eq!(s.percentile(25.0), 2.5);
+        assert_eq!(s.percentile(100.0), 10.0);
+        assert_eq!(s.percentile(0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_empty_is_safe() {
+        let s = Summary::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_truth() {
+        let mut h = LogHistogram::latency();
+        // 1000 samples uniform in [1ms, 2ms].
+        let mut rng = crate::util::rng::Rng::new(1);
+        for _ in 0..1000 {
+            h.record(rng.uniform(1e-3, 2e-3) as f64);
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 1.0e-3 && p50 < 2.2e-3, "p50 {p50}");
+        assert_eq!(h.count(), 1000);
+        assert!(h.mean() > 1.2e-3 && h.mean() < 1.8e-3);
+    }
+
+    #[test]
+    fn histogram_underflow_and_max() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4);
+        h.record(0.5); // underflow
+        h.record(100.0); // clamps to last bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.quantile(0.01), 1.0); // underflow reports base
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LogHistogram::latency();
+        let mut b = LogHistogram::latency();
+        a.record(1e-3);
+        b.record(2e-3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.mean() > 1e-3 && a.mean() < 2e-3);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(0.0035), "3.50ms");
+        assert_eq!(fmt_duration(2.0), "2.00s");
+        assert_eq!(fmt_bytes(1536.0), "1.50KiB");
+        assert_eq!(fmt_bytes(137.0 * 1024.0 * 1024.0 * 1024.0), "137.00GiB");
+    }
+}

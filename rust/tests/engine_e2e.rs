@@ -1,0 +1,247 @@
+//! Cross-language model parity + full-stack generation.
+//!
+//! The strongest correctness signal in the repo: the pure-Rust transformer
+//! oracle (cpu_ref) and the jax-authored, AOT-compiled artifacts must
+//! produce matching logits for the same synthetic weights, through prefill
+//! AND through INT8-cache decode — proving L1 (Pallas kernels), L2 (jax
+//! graph), and L3 (Rust cache manager + runtime) implement the same model.
+
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+use kvq::kvcache::Precision;
+use kvq::model::runner::{CpuBackend, DecodeKernel};
+use kvq::model::weights::Weights;
+use kvq::model::{LmBackend, PjrtBackend};
+use kvq::runtime::Runtime;
+use std::rc::Rc;
+
+const SEED: u64 = 0xA11CE;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = kvq::runtime::default_artifact_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(&dir).expect("runtime")))
+}
+
+fn backends(rt: &Rc<Runtime>, kernel: DecodeKernel) -> (PjrtBackend, CpuBackend) {
+    let pjrt = PjrtBackend::new(rt.clone(), "kvq-3m", SEED, kernel).expect("pjrt backend");
+    let spec = pjrt.spec().clone();
+    let cpu = CpuBackend::new(spec.clone(), Weights::synthetic(&spec, SEED));
+    (pjrt, cpu)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+}
+
+#[test]
+fn prefill_logits_match_cpu_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (pjrt, cpu) = backends(&rt, DecodeKernel::PlainXla);
+    let tokens: Vec<i32> = "the quick brown fox".bytes().map(|b| b as i32).collect();
+    let a = pjrt.prefill(&tokens, tokens.len()).unwrap();
+    let b = cpu.prefill(&tokens, tokens.len()).unwrap();
+    let d = max_abs_diff(&a.logits, &b.logits);
+    assert!(d < 5e-3, "prefill logits diverge: {d}");
+    assert_eq!(argmax(&a.logits), argmax(&b.logits));
+    // Caches agree too (valid rows). The PJRT backend may return a
+    // bucketed stride (S < max_seq); the CPU oracle always uses max_seq.
+    let spec = pjrt.spec();
+    let (l, h, dd) = (spec.layers, spec.heads, spec.head_dim);
+    let sa = a.k.len() / (l * h * dd);
+    let sb = b.k.len() / (l * h * dd);
+    for li in 0..l {
+        for hi in 0..h {
+            for t in 0..tokens.len() {
+                let ba = ((li * h + hi) * sa + t) * dd;
+                let bb = ((li * h + hi) * sb + t) * dd;
+                let dk = max_abs_diff(&a.k[ba..ba + dd], &b.k[bb..bb + dd]);
+                assert!(dk < 1e-3, "K cache diverges at l{li} h{hi} t{t}: {dk}");
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_decode_matches_cpu_oracle() {
+    let Some(rt) = runtime() else { return };
+    let (pjrt, cpu) = backends(&rt, DecodeKernel::PlainXla);
+    let spec = pjrt.spec().clone();
+    let tokens: Vec<i32> = (0..9).map(|i| (i * 31 + 7) % 256).collect();
+    let n = 8;
+
+    // Prefill via the artifact, quantize into the paged cache manager.
+    let pre = pjrt.prefill(&tokens[..n], n).unwrap();
+    let cfg = CacheConfig {
+        layers: spec.layers,
+        heads: spec.heads,
+        head_dim: spec.head_dim,
+        max_seq: spec.max_seq,
+        block_size: spec.block_size,
+        num_blocks: 4096,
+        precision: Precision::Int8,
+        scale_margin: 1.0,
+    };
+    let mut mgr = KvCacheManager::new(cfg);
+    let id = mgr.new_sequence();
+    mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
+
+    // Gather staging exactly as the engine does.
+    let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+    let mut kq = vec![0i8; l * h * s * d];
+    let mut vq = vec![0i8; l * h * s * d];
+    let mut ks = vec![0f32; l * h * d];
+    let mut vs = vec![0f32; l * h * d];
+    for li in 0..l {
+        mgr.gather_i8(id, li, 0, &mut kq[li * h * s * d..(li + 1) * h * s * d]).unwrap();
+        mgr.gather_i8(id, li, 1, &mut vq[li * h * s * d..(li + 1) * h * s * d]).unwrap();
+        ks[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 0).unwrap());
+        vs[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 1).unwrap());
+    }
+
+    let a = pjrt.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let b = cpu.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let dl = max_abs_diff(&a.logits, &b.logits);
+    assert!(dl < 5e-3, "decode logits diverge: {dl}");
+    assert_eq!(argmax(&a.logits), argmax(&b.logits));
+    let dk = max_abs_diff(&a.k_new, &b.k_new);
+    assert!(dk < 1e-3, "k_new diverges: {dk}");
+}
+
+#[test]
+fn pallas_decode_matches_plain_xla_decode() {
+    let Some(rt) = runtime() else { return };
+    let (plain, _) = backends(&rt, DecodeKernel::PlainXla);
+    let pallas = PjrtBackend::new(rt.clone(), "kvq-3m", SEED, DecodeKernel::Pallas).unwrap();
+    let spec = plain.spec().clone();
+    let tokens: Vec<i32> = (0..6).map(|i| (i * 17 + 3) % 256).collect();
+    let n = 5;
+    let pre = plain.prefill(&tokens[..n], n).unwrap();
+
+    // Quantize per-(layer,head) on host (engine-equivalent, simple form).
+    // The prefill output may use a bucketed stride s_src < max_seq; the
+    // decode artifact expects max_seq-strided caches.
+    let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+    let s_src = pre.k.len() / (l * h * d);
+    let mut kq = vec![0i8; l * h * s * d];
+    let mut vq = vec![0i8; l * h * s * d];
+    let mut ks = vec![0f32; l * h * d];
+    let mut vs = vec![0f32; l * h * d];
+    for (src, dst_q, dst_s) in
+        [(&pre.k, &mut kq, &mut ks), (&pre.v, &mut vq, &mut vs)]
+    {
+        for li in 0..l {
+            for hi in 0..h {
+                for ch in 0..d {
+                    let mut m = 0.0f32;
+                    for t in 0..n {
+                        m = m.max(src[((li * h + hi) * s_src + t) * d + ch].abs());
+                    }
+                    dst_s[(li * h + hi) * d + ch] = m / 127.0;
+                }
+                for t in 0..n {
+                    for ch in 0..d {
+                        let i_src = ((li * h + hi) * s_src + t) * d + ch;
+                        let i_dst = ((li * h + hi) * s + t) * d + ch;
+                        dst_q[i_dst] = kvq::quant::quantize::quantize_one(
+                            src[i_src],
+                            dst_s[(li * h + hi) * d + ch],
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    let a = plain.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let b = pallas.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let dl = max_abs_diff(&a.logits, &b.logits);
+    assert!(dl < 1e-3, "pallas vs plain decode: {dl}");
+}
+
+#[test]
+fn fp32_decode_baseline_matches_cpu() {
+    let Some(rt) = runtime() else { return };
+    let (pjrt, cpu) = backends(&rt, DecodeKernel::PlainXla);
+    let tokens: Vec<i32> = (0..7).map(|i| (i * 13 + 1) % 256).collect();
+    let n = 6;
+    let pre = pjrt.prefill(&tokens[..n], n).unwrap();
+    // Re-stride the bucketed prefill cache to the decode artifact's
+    // (L, H, max_seq, d) layout.
+    let spec = pjrt.spec().clone();
+    let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+    let s_src = pre.k.len() / (l * h * d);
+    let mut k = vec![0f32; l * h * s * d];
+    let mut v = vec![0f32; l * h * s * d];
+    for lh in 0..l * h {
+        for t in 0..n {
+            let src = (lh * s_src + t) * d;
+            let dst = (lh * s + t) * d;
+            k[dst..dst + d].copy_from_slice(&pre.k[src..src + d]);
+            v[dst..dst + d].copy_from_slice(&pre.v[src..src + d]);
+        }
+    }
+    let a = pjrt.decode_f32(tokens[n], n, &k, &v).unwrap();
+    let b = cpu.decode_f32(tokens[n], n, &k, &v).unwrap();
+    let dl = max_abs_diff(&a.logits, &b.logits);
+    assert!(dl < 5e-3, "fp32 decode diverges: {dl}");
+}
+
+#[test]
+fn greedy_generation_trajectories_agree() {
+    // Multi-step: generate 6 tokens with both backends through the real
+    // cache manager; trajectories must be identical (greedy).
+    let Some(rt) = runtime() else { return };
+    let (pjrt, cpu) = backends(&rt, DecodeKernel::PlainXla);
+    let spec = pjrt.spec().clone();
+
+    let gen = |backend: &dyn LmBackend| -> Vec<i32> {
+        let prompt: Vec<i32> = "kv".bytes().map(|b| b as i32).collect();
+        let cfg = CacheConfig {
+            layers: spec.layers,
+            heads: spec.heads,
+            head_dim: spec.head_dim,
+            max_seq: spec.max_seq,
+            block_size: spec.block_size,
+            num_blocks: 4096,
+            precision: Precision::Int8,
+            scale_margin: 1.0,
+        };
+        let mut mgr = KvCacheManager::new(cfg);
+        let id = mgr.new_sequence();
+        let pre = backend.prefill(&prompt, prompt.len()).unwrap();
+        mgr.set_prefill(id, &pre.k, &pre.v, prompt.len()).unwrap();
+        let mut out = Vec::new();
+        let mut token = argmax(&pre.logits) as i32;
+        out.push(token);
+        let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+        let mut kq = vec![0i8; l * h * s * d];
+        let mut vq = vec![0i8; l * h * s * d];
+        let mut ks = vec![0f32; l * h * d];
+        let mut vs = vec![0f32; l * h * d];
+        for step in 0..5 {
+            let pos = prompt.len() + step;
+            for li in 0..l {
+                mgr.gather_i8(id, li, 0, &mut kq[li * h * s * d..(li + 1) * h * s * d]).unwrap();
+                mgr.gather_i8(id, li, 1, &mut vq[li * h * s * d..(li + 1) * h * s * d]).unwrap();
+                ks[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 0).unwrap());
+                vs[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 1).unwrap());
+            }
+            let dec = backend.decode_i8(token, pos, &kq, &ks, &vq, &vs).unwrap();
+            mgr.append_row(id, &dec.k_new, &dec.v_new).unwrap();
+            token = argmax(&dec.logits) as i32;
+            out.push(token);
+        }
+        out
+    };
+
+    let a = gen(&pjrt);
+    let b = gen(&cpu);
+    assert_eq!(a, b, "greedy trajectories diverged: {a:?} vs {b:?}");
+}

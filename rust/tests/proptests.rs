@@ -1,0 +1,314 @@
+//! Cross-module property tests (util::prop mini-framework).
+//!
+//! Each property runs hundreds of randomized cases with growing size;
+//! failures shrink and report a reproduction seed (KVQ_PROP_SEED).
+
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+use kvq::kvcache::Precision;
+use kvq::quant::{self, Fp32Matrix, Int8Matrix, Variant};
+use kvq::util::json::Json;
+use kvq::util::prop::{check, ensure, ensure_close};
+
+fn matrix_from(g: &mut kvq::util::prop::Gen) -> Fp32Matrix {
+    let (t, d, data) = g.matrix(1..96, 1..96, 2.0);
+    Fp32Matrix::from_vec(t, d, data)
+}
+
+#[test]
+fn prop_roundtrip_error_bounded() {
+    // eq. (9): |x - x̂| <= s_d/2 everywhere, for every distribution.
+    check("roundtrip bound", 300, |g| {
+        let k = matrix_from(g);
+        let q = quant::quantize_fused(&k);
+        let r = quant::dequantize(&q);
+        for t in 0..k.rows {
+            for d in 0..k.cols {
+                let err = (k.at(t, d) - r.at(t, d)).abs();
+                let bound = q.scales[d] / 2.0 + 1e-6 + q.scales[d].abs() * 1e-5;
+                ensure(err <= bound, format!("err {err} > bound {bound} at ({t},{d})"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_variants_identical() {
+    // Paper §7.5 cross-kernel consistency, for arbitrary shapes/data.
+    check("variant consistency", 200, |g| {
+        let k = matrix_from(g);
+        let scales = quant::compute_scales(&k);
+        let mut base = Int8Matrix::zeros(k.rows, k.cols);
+        quant::quantize::quantize_naive(&k, &scales, &mut base);
+        for v in [Variant::Tiled, Variant::Coarsened, Variant::Vectorized] {
+            let mut out = Int8Matrix::zeros(k.rows, k.cols);
+            quant::quantize::quantize_variant(v, &k, &scales, &mut out);
+            ensure(out.data == base.data, format!("{v:?} diverged"))?;
+        }
+        let mut par = Int8Matrix::zeros(k.rows, k.cols);
+        quant::quantize::quantize_parallel(&k, &scales, &mut par, 4);
+        ensure(par.data == base.data, "parallel diverged")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scales_properties() {
+    check("scales", 200, |g| {
+        let k = matrix_from(g);
+        let s = quant::compute_scales(&k);
+        // Non-negative; 127*s == column abs max.
+        for d in 0..k.cols {
+            ensure(s[d] >= 0.0, "negative scale")?;
+            let col_max = (0..k.rows).map(|t| k.at(t, d).abs()).fold(0.0f32, f32::max);
+            ensure_close(
+                s[d] as f64 * 127.0,
+                col_max as f64,
+                1e-4 * col_max.max(1.0) as f64,
+                "s*127 == colmax",
+            )?;
+        }
+        // Parallel agrees exactly.
+        let mut sp = vec![0.0; k.cols];
+        quant::scales::compute_scales_parallel(&k, &mut sp, 3);
+        ensure(sp == s, "parallel scales diverged")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_values_in_range() {
+    check("int8 range", 200, |g| {
+        let k = matrix_from(g);
+        let q = quant::quantize_fused(&k);
+        ensure(
+            q.data.iter().all(|&v| (-127..=127).contains(&(v as i32))),
+            "value outside [-127, 127]",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_int4_roundtrip_bound() {
+    check("int4 bound", 150, |g| {
+        let k = matrix_from(g);
+        let q = quant::int4::quantize4(&k);
+        let r = quant::int4::dequantize4(&q);
+        for t in 0..k.rows {
+            for d in 0..k.cols {
+                let err = (k.at(t, d) - r.at(t, d)).abs();
+                let bound = q.scales[d] / 2.0 + 1e-6 + q.scales[d].abs() * 1e-5;
+                ensure(err <= bound, format!("int4 err {err} > {bound}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_metric_identities() {
+    check("metric identities", 100, |g| {
+        let k = matrix_from(g);
+        ensure(quant::l2_error(&k, &k) == 0.0, "l2 self")?;
+        ensure(quant::max_abs_error(&k, &k) == 0.0, "maxabs self")?;
+        // Symmetry of l2/max-abs.
+        let k2 = Fp32Matrix::random_normal(k.rows, k.cols, 1.0, g.rng.next_u64());
+        ensure_close(quant::l2_error(&k, &k2), quant::l2_error(&k2, &k), 1e-9, "l2 sym")?;
+        ensure_close(
+            quant::max_abs_error(&k, &k2),
+            quant::max_abs_error(&k2, &k),
+            1e-12,
+            "maxabs sym",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvcache_block_conservation() {
+    // Random op sequences (new/prefill/append/fork/free) never leak or
+    // double-free blocks; freeing everything restores the full pool.
+    check("kvcache conservation", 60, |g| {
+        let cfg = CacheConfig {
+            layers: 1 + g.usize_in(1..3),
+            heads: 1 + g.usize_in(1..3),
+            head_dim: 4 * (1 + g.usize_in(1..4)),
+            max_seq: 32,
+            block_size: [4, 8, 16][g.usize_in(0..3)],
+            num_blocks: 512,
+            precision: if g.bool() { Precision::Int8 } else { Precision::Fp32 },
+            scale_margin: 1.0,
+        };
+        let mut mgr = KvCacheManager::new(cfg);
+        let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
+        let kc: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+        let row = vec![0.5f32; cfg.layers * cfg.heads * cfg.head_dim];
+        let mut live: Vec<u64> = Vec::new();
+
+        for _ in 0..g.usize_in(5..40) {
+            match g.usize_in(0..4) {
+                0 => {
+                    let len = 1 + g.usize_in(0..16);
+                    if mgr.can_admit(len) {
+                        let id = mgr.new_sequence();
+                        mgr.set_prefill(id, &kc, &kc, len).map_err(|e| e.to_string())?;
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.last() {
+                        if mgr.seq_len(id).unwrap() < cfg.max_seq
+                            && mgr.free_blocks() > 2 * cfg.layers
+                        {
+                            mgr.append_row(id, &row, &row).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+                2 => {
+                    if !live.is_empty() && mgr.free_blocks() > 0 {
+                        let idx = g.usize_in(0..live.len().max(1)) % live.len();
+                        let id = mgr.fork(live[idx]).map_err(|e| e.to_string())?;
+                        live.push(id);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let idx = g.usize_in(0..live.len().max(1)) % live.len();
+                        mgr.free(live.swap_remove(idx));
+                    }
+                }
+            }
+            ensure(mgr.free_blocks() <= cfg.num_blocks, "free > pool")?;
+        }
+        for id in live {
+            mgr.free(id);
+        }
+        ensure(
+            mgr.free_blocks() == cfg.num_blocks,
+            format!("leak: {}/{} free after freeing all", mgr.free_blocks(), cfg.num_blocks),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fork_prefix_immutability() {
+    // Writes to a fork never alter the parent's visible cache content.
+    check("fork isolation", 40, |g| {
+        let cfg = CacheConfig {
+            layers: 2,
+            heads: 2,
+            head_dim: 8,
+            max_seq: 32,
+            block_size: 4,
+            num_blocks: 256,
+            precision: Precision::Int8,
+            scale_margin: 1.0,
+        };
+        let mut mgr = KvCacheManager::new(cfg);
+        let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
+        let kc: Vec<f32> = (0..n).map(|i| (((i * 31) % 17) as f32 - 8.0) / 8.0).collect();
+        let len = 1 + g.usize_in(0..20);
+        let parent = mgr.new_sequence();
+        mgr.set_prefill(parent, &kc, &kc, len).map_err(|e| e.to_string())?;
+
+        let hsd = cfg.heads * cfg.max_seq * cfg.head_dim;
+        let mut before = vec![0i8; hsd];
+        mgr.gather_i8(parent, 0, 0, &mut before).map_err(|e| e.to_string())?;
+
+        let fork = mgr.fork(parent).map_err(|e| e.to_string())?;
+        let row = vec![9.0f32; cfg.layers * cfg.heads * cfg.head_dim];
+        for _ in 0..g.usize_in(1..8) {
+            if mgr.seq_len(fork).unwrap() >= cfg.max_seq {
+                break;
+            }
+            mgr.append_row(fork, &row, &row).map_err(|e| e.to_string())?;
+        }
+        let mut after = vec![0i8; hsd];
+        mgr.gather_i8(parent, 0, 0, &mut after).map_err(|e| e.to_string())?;
+        ensure(before == after, "parent cache mutated by fork writes")?;
+        mgr.free(parent);
+        mgr.free(fork);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // Random JSON trees survive write→parse exactly.
+    check("json roundtrip", 300, |g| {
+        fn gen_json(g: &mut kvq::util::prop::Gen, depth: usize) -> Json {
+            match if depth == 0 { g.usize_in(0..4) } else { g.usize_in(0..6) } {
+                0 => Json::Null,
+                1 => Json::Bool(g.bool()),
+                2 => Json::Num((g.i64_in(-1_000_000..1_000_000)) as f64),
+                3 => {
+                    let n = g.usize_in(0..12);
+                    Json::Str(
+                        (0..n)
+                            .map(|_| *g.choice(&['a', 'Z', '0', ' ', '"', '\\', '\n', '≈', '😀']))
+                            .collect(),
+                    )
+                }
+                4 => Json::Arr((0..g.usize_in(0..5)).map(|_| gen_json(g, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..g.usize_in(0..5))
+                        .map(|i| (format!("k{i}"), gen_json(g, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("{e} on {text:?}"))?;
+        ensure(back == v, format!("roundtrip mismatch: {text}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bracket_samples() {
+    check("histogram quantiles", 100, |g| {
+        let mut h = kvq::util::stats::LogHistogram::latency();
+        let n = 50 + g.usize_in(0..500);
+        let lo = g.f32_in(1e-5..1e-2) as f64;
+        let hi = lo * (1.0 + g.f32_in(0.1..10.0) as f64);
+        for _ in 0..n {
+            h.record(lo + (hi - lo) * g.rng.next_f64());
+        }
+        let p50 = h.quantile(0.5);
+        // Log-bucket error is bounded by one bucket ratio (1.3x).
+        ensure(p50 >= lo / 1.3 && p50 <= hi * 1.3, format!("p50 {p50} outside [{lo},{hi}]"))?;
+        ensure(h.quantile(1.0) <= hi * 1.3 + 1e-12, "p100 above max")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_channel_bound_dominates_per_tensor_bound() {
+    // The *bounds* ordering that motivates eq. (6): every per-channel
+    // scale is <= the global scale, so the per-channel worst case s_d/2
+    // is column-wise tighter. (Realized errors can flip by rounding luck
+    // on individual elements, so we assert the bound, not the sample.)
+    check("per-channel bound dominance", 100, |g| {
+        let k = matrix_from(g);
+        let pc = quant::quantize_fused(&k);
+        let pt = quant::tensorwise::quantize_tensorwise(&k);
+        let s_global = pt.scales[0];
+        for (d, &s) in pc.scales.iter().enumerate() {
+            ensure(
+                s <= s_global * (1.0 + 1e-6) + 1e-12,
+                format!("channel {d}: per-channel scale {s} > global {s_global}"),
+            )?;
+        }
+        // And the realized per-channel error respects the global bound.
+        let rec = quant::dequantize(&pc);
+        let e_pc = quant::max_abs_error(&k, &rec);
+        ensure(
+            e_pc <= (s_global / 2.0 + 1e-6 + s_global.abs() * 1e-5) as f64,
+            format!("pc err {e_pc} above global bound {}", s_global / 2.0),
+        )?;
+        Ok(())
+    });
+}

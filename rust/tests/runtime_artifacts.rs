@@ -1,0 +1,168 @@
+//! Integration: PJRT runtime × AOT artifacts × Rust CPU oracle.
+//!
+//! Requires `make artifacts` (skips with a note if absent). Every kernel
+//! artifact must agree with the pure-Rust quantizer — the same contract
+//! the Python suite enforces against the jnp oracle, now across the
+//! language boundary.
+
+use kvq::quant::{self, Fp32Matrix, Int8Matrix};
+use kvq::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    let dir = kvq::runtime::default_artifact_dir();
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir}; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+const T: usize = 2048;
+const D: usize = 128;
+const TAG: &str = "2048x128";
+
+fn sample() -> (Fp32Matrix, Vec<f32>) {
+    let k = Fp32Matrix::random_uniform(T, D, -1.0, 1.0, 0xBEEF);
+    let s = quant::compute_scales(&k);
+    (k, s)
+}
+
+#[test]
+fn scales_artifact_matches_cpu() {
+    let Some(rt) = runtime() else { return };
+    let (k, s) = sample();
+    let out = rt
+        .run(&format!("scales_{TAG}"), &[HostTensor::f32(k.data.clone(), &[T, D])])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(got.len(), D);
+    for (a, b) in got.iter().zip(&s) {
+        assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-6), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn quantize_artifacts_match_cpu_all_variants() {
+    let Some(rt) = runtime() else { return };
+    let (k, s) = sample();
+    let mut cpu = Int8Matrix::zeros(T, D);
+    quant::quantize::quantize_naive(&k, &s, &mut cpu);
+    for variant in ["naive", "tiled", "coarsened", "vectorized"] {
+        let out = rt
+            .run(
+                &format!("quantize_{variant}_{TAG}"),
+                &[HostTensor::f32(k.data.clone(), &[T, D]), HostTensor::f32(s.clone(), &[D])],
+            )
+            .unwrap();
+        let got = out[0].as_i8().unwrap();
+        assert_eq!(got, cpu.data.as_slice(), "variant {variant} diverged from CPU");
+    }
+}
+
+#[test]
+fn dequantize_artifact_matches_cpu() {
+    let Some(rt) = runtime() else { return };
+    let (k, s) = sample();
+    let mut q = Int8Matrix::zeros(T, D);
+    quant::quantize::quantize_vectorized(&k, &s, &mut q);
+    let cpu = quant::dequantize(&q);
+    let out = rt
+        .run(
+            &format!("dequantize_vectorized_{TAG}"),
+            &[HostTensor::i8(q.data.clone(), &[T, D]), HostTensor::f32(s.clone(), &[D])],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for (a, b) in got.iter().zip(&cpu.data) {
+        assert!((a - b).abs() <= 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_artifact_matches_cpu_within_ulp() {
+    let Some(rt) = runtime() else { return };
+    let (k, _) = sample();
+    let cpu = quant::quantize_fused(&k);
+    let out = rt
+        .run(&format!("quantize_fused_{TAG}"), &[HostTensor::f32(k.data.clone(), &[T, D])])
+        .unwrap();
+    let got_q = out[0].as_i8().unwrap();
+    let got_s = out[1].as_f32().unwrap();
+    for (a, b) in got_s.iter().zip(&cpu.scales) {
+        assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-9), "scale {a} vs {b}");
+    }
+    // XLA may fold /127 into *(1/127): allow ±1 on rounding boundaries.
+    let mismatches = got_q
+        .iter()
+        .zip(&cpu.data)
+        .filter(|(a, b)| a != b)
+        .inspect(|(a, b)| assert!((**a as i32 - **b as i32).abs() <= 1, "{a} vs {b}"))
+        .count();
+    assert!(mismatches as f64 / cpu.data.len() as f64 <= 0.01, "{mismatches} mismatches");
+}
+
+#[test]
+fn quantize_ref_artifact_agrees() {
+    let Some(rt) = runtime() else { return };
+    let (k, _) = sample();
+    let cpu = quant::quantize_fused(&k);
+    let out = rt
+        .run(&format!("quantize_ref_{TAG}"), &[HostTensor::f32(k.data.clone(), &[T, D])])
+        .unwrap();
+    let got_q = out[0].as_i8().unwrap();
+    let diff = got_q.iter().zip(&cpu.data).filter(|(a, b)| a != b).count();
+    assert!(diff as f64 / cpu.data.len() as f64 <= 0.01, "{diff} mismatches");
+}
+
+#[test]
+fn attnerr_artifact_matches_cpu_metric() {
+    let Some(rt) = runtime() else { return };
+    let (k, s) = sample();
+    let mut q = Int8Matrix::zeros(T, D);
+    quant::quantize::quantize_vectorized(&k, &s, &mut q);
+    let k_hat = quant::dequantize(&q);
+    let nq = 64;
+    let queries = Fp32Matrix::random_uniform(nq, D, -1.0, 1.0, 77);
+    let cpu = quant::attention_score_error(&queries, &k, &k_hat);
+    let out = rt
+        .run(
+            &format!("attnerr_{TAG}"),
+            &[
+                HostTensor::f32(queries.data.clone(), &[nq, D]),
+                HostTensor::f32(k.data.clone(), &[T, D]),
+                HostTensor::i8(q.data.clone(), &[T, D]),
+                HostTensor::f32(s.clone(), &[D]),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap()[0] as f64;
+    assert!((got - cpu).abs() <= 1e-4 * cpu.max(1e-9), "{got} vs {cpu}");
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt
+        .run(&format!("scales_{TAG}"), &[HostTensor::f32(vec![0.0; 4], &[2, 2])])
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shape"), "unexpected error: {msg}");
+    let err = rt
+        .run(
+            &format!("quantize_naive_{TAG}"),
+            &[HostTensor::i8(vec![0; T * D], &[T, D]), HostTensor::f32(vec![0.0; D], &[D])],
+        )
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("dtype"));
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let name = format!("scales_{TAG}");
+    let a = rt.load(&name).unwrap();
+    let n = rt.compiled_count();
+    let b = rt.load(&name).unwrap();
+    assert_eq!(rt.compiled_count(), n);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
