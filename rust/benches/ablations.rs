@@ -3,28 +3,50 @@
 //! A1. per-channel vs per-tensor scales (why eq. 6 is per-column)
 //! A2. frozen-prefill scales vs post-hoc requantization (serving policy)
 //! A3. scale-computation algorithms (paper's strided loop vs row-sweep vs
-//!     threaded)
-//! A4. CPU quantize variants + the multi-threaded variant
+//!     threaded), swept over the {1, 2, N_phys} thread set
+//! A4. CPU quantize variants + the multi-threaded variant per thread count
 //! A5. Pallas vectorized artifact vs plain-XLA `quantize_ref` codegen
 //! A6. INT4 vs INT8: error/memory trade (paper §8.1)
 //! A7. host-side row quantization vs offloading a (1, D) row to PJRT
 //!     (why the cache writer runs on the host)
+//! A8. dequantize: serial vs the parallel runtime per thread count
+//!
+//! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
+//! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
+//! and writes `BENCH_smoke.json` instead — the CI bench-smoke job uploads
+//! that artifact so perf is visible PR-over-PR.
 
 use kvq::bench::workload::Workload;
+use kvq::bench::BenchReport;
 use kvq::config::shapes::ShapeRegistry;
+use kvq::parallel;
 use kvq::quant::{self, Fp32Matrix, Int8Matrix, Variant};
 use kvq::runtime::Runtime;
 use kvq::util::harness::{cell_f, cell_time, Bencher, Table};
+use kvq::util::json::Json;
 use std::rc::Rc;
 
 fn main() -> anyhow::Result<()> {
+    let args = kvq::util::args::Args::parse();
+    let smoke = args.bool_or("smoke", false);
     let reg = ShapeRegistry::load_default()?;
-    let shape = reg.ci[4].clone(); // real_small scaled: 8192x1024
+    // Smoke: smallest CI shape + quick timing policy so the job stays
+    // cheap; full: the scaled realistic shape.
+    let shape = if smoke { reg.ci[0].clone() } else { reg.ci[4].clone() };
     let wl = Workload::uniform(&shape, 0xAB1);
-    let bencher = Bencher::default();
+    let bencher = if smoke { Bencher::quick() } else { Bencher::default() };
+    let sweep = parallel::bench_thread_sweep();
+
+    let mut report = BenchReport::new(if smoke { "smoke" } else { "ablations" });
+    report.env("smoke", Json::Bool(smoke));
+    report.env("shape", shape.tag().as_str().into());
+    report.env(
+        "thread_sweep",
+        Json::Arr(sweep.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
 
     // A1: per-channel vs per-tensor on outlier-bearing data.
-    {
+    if !smoke {
         let mut k = Fp32Matrix::random_uniform(4096, 256, -1.0, 1.0, 0xA1);
         for t in 0..k.rows {
             k.data[t * k.cols] *= 100.0; // one hot channel
@@ -44,21 +66,27 @@ fn main() -> anyhow::Result<()> {
             }
             e
         };
-        t1.row(&[
-            "per-channel".into(),
-            cell_f(err_on_normal(&pc), 6),
-            cell_f(quant::l2_error(&k, &pc), 3),
-        ]);
-        t1.row(&[
-            "per-tensor".into(),
-            cell_f(err_on_normal(&pt), 6),
-            cell_f(quant::l2_error(&k, &pt), 3),
-        ]);
+        for (name, rec) in [("per-channel", &pc), ("per-tensor", &pt)] {
+            t1.row(&[
+                name.into(),
+                cell_f(err_on_normal(rec), 6),
+                cell_f(quant::l2_error(&k, rec), 3),
+            ]);
+            report.add(
+                "a1_scales_granularity",
+                name,
+                None,
+                &[
+                    ("max_abs_err_normal_cols", Json::Num(err_on_normal(rec))),
+                    ("l2_err", Json::Num(quant::l2_error(&k, rec))),
+                ],
+            );
+        }
         kvq::bench::figures::emit(&t1, "ablation_a1_scales_granularity");
     }
 
     // A2: frozen-scale streaming vs post-hoc requantization.
-    {
+    if !smoke {
         // Simulate decode: scales frozen on the first half ("prompt"),
         // second half ("generated") quantized with frozen vs exact scales.
         let k = Fp32Matrix::random_normal(4096, 256, 1.0, 0xA2);
@@ -84,11 +112,21 @@ fn main() -> anyhow::Result<()> {
                 cell_f(quant::l2_error(&k, rec), 3),
                 cell_f(quant::attention_score_error(&q, &k, rec), 5),
             ]);
+            report.add(
+                "a2_frozen_scales",
+                name,
+                None,
+                &[
+                    ("max_abs_err", Json::Num(quant::max_abs_error(&k, rec))),
+                    ("l2_err", Json::Num(quant::l2_error(&k, rec))),
+                    ("attn_err", Json::Num(quant::attention_score_error(&q, &k, rec))),
+                ],
+            );
         }
         kvq::bench::figures::emit(&t2, "ablation_a2_frozen_scales");
     }
 
-    // A3: scale computation algorithms.
+    // A3: scale computation algorithms, parallel swept over thread counts.
     {
         let mut t3 = Table::new(
             &format!("A3 — scale computation on {} ({} elements)", shape.tag(), wl.elements()),
@@ -101,17 +139,26 @@ fn main() -> anyhow::Result<()> {
         let m2 = bencher.measure("rowsweep", || {
             quant::scales::compute_scales_rowsweep(&wl.k, &mut scales)
         });
-        let threads = kvq::util::pool::default_threads();
-        let m3 = bencher.measure("parallel", || {
-            quant::scales::compute_scales_parallel(&wl.k, &mut scales, threads)
-        });
         t3.row(&["naive (paper Listing 2, strided)".into(), cell_time(m1.median())]);
         t3.row(&["row-sweep (cache-friendly)".into(), cell_time(m2.median())]);
-        t3.row(&[format!("row-sweep x{threads} threads"), cell_time(m3.median())]);
+        report.add("a3_scales_algo", "naive_strided", Some(m1.median()), &[]);
+        report.add("a3_scales_algo", "rowsweep", Some(m2.median()), &[]);
+        for &threads in &sweep {
+            let m = bencher.measure("parallel", || {
+                quant::scales::compute_scales_parallel(&wl.k, &mut scales, threads)
+            });
+            t3.row(&[format!("row-sweep x{threads} threads"), cell_time(m.median())]);
+            report.add(
+                "a3_scales_algo",
+                "rowsweep_parallel",
+                Some(m.median()),
+                &[("threads", Json::Num(threads as f64))],
+            );
+        }
         kvq::bench::figures::emit(&t3, "ablation_a3_scales_algo");
     }
 
-    // A4: CPU quantize variants.
+    // A4: CPU quantize variants + the parallel variant per thread count.
     {
         let scales = quant::compute_scales(&wl.k);
         let mut out = Int8Matrix::zeros(wl.k.rows, wl.k.cols);
@@ -133,23 +180,59 @@ fn main() -> anyhow::Result<()> {
                 cell_time(m.median()),
                 format!("{:.2}x", base / m.median()),
             ]);
+            report.add("a4_quantize_variants", v.name(), Some(m.median()), &[]);
         }
-        let threads = kvq::util::pool::default_threads();
-        let mp = bencher.measure("parallel", || {
-            quant::quantize::quantize_parallel(&wl.k, &scales, &mut out, threads)
-        });
-        t4.row([
-            format!("vectorized x{threads} threads"),
-            cell_time(mp.median()),
-            format!("{:.2}x", base / mp.median()),
-        ]
-        .as_ref());
+        for &threads in &sweep {
+            let mp = bencher.measure("parallel", || {
+                quant::quantize_parallel(&wl.k, &scales, &mut out, threads)
+            });
+            t4.row([
+                format!("vectorized x{threads} threads"),
+                cell_time(mp.median()),
+                format!("{:.2}x", base / mp.median()),
+            ]
+            .as_ref());
+            report.add(
+                "a4_quantize_variants",
+                "vectorized_parallel",
+                Some(mp.median()),
+                &[("threads", Json::Num(threads as f64))],
+            );
+        }
         kvq::bench::figures::emit(&t4, "ablation_a4_cpu_variants");
+    }
+
+    // A8: dequantize — serial vs the shared parallel runtime.
+    {
+        let q = quant::quantize_fused(&wl.k);
+        let mut rec = Fp32Matrix::zeros(q.rows, q.cols);
+        let mut t8 = Table::new(
+            &format!("A8 — dequantize serial vs parallel on {}", shape.tag()),
+            &["path", "median"],
+        );
+        let ms = bencher.measure("serial", || quant::dequantize_into(&q, &mut rec));
+        t8.row(&["serial".into(), cell_time(ms.median())]);
+        report.add("a8_dequantize", "serial", Some(ms.median()), &[]);
+        for &threads in &sweep {
+            let m = bencher.measure("parallel", || {
+                quant::dequantize_parallel(&q, &mut rec, threads)
+            });
+            t8.row(&[format!("parallel x{threads} threads"), cell_time(m.median())]);
+            report.add(
+                "a8_dequantize",
+                "parallel",
+                Some(m.median()),
+                &[("threads", Json::Num(threads as f64))],
+            );
+        }
+        kvq::bench::figures::emit(&t8, "ablation_a8_dequantize_parallel");
     }
 
     // A5 + A7 need the runtime.
     let dir = kvq::runtime::default_artifact_dir();
-    if std::path::Path::new(&dir).join("manifest.json").exists() {
+    if smoke {
+        // Smoke keeps CI cheap: skip artifact-dependent sections.
+    } else if std::path::Path::new(&dir).join("manifest.json").exists() {
         let rt = Rc::new(Runtime::new(&dir)?);
 
         // A5: Pallas-scheduled vectorized kernel vs XLA's own fusion of
@@ -177,6 +260,9 @@ fn main() -> anyhow::Result<()> {
             t5.row(&["pallas vectorized (scales given)".into(), cell_time(mp.median())]);
             t5.row(&["pallas fused (scales+quant, 1 pass)".into(), cell_time(mf.median())]);
             t5.row(&["plain-XLA jnp reference (scales+quant)".into(), cell_time(mr.median())]);
+            report.add("a5_pallas_vs_xla", "pallas_vectorized", Some(mp.median()), &[]);
+            report.add("a5_pallas_vs_xla", "pallas_fused", Some(mf.median()), &[]);
+            report.add("a5_pallas_vs_xla", "xla_ref", Some(mr.median()), &[]);
             kvq::bench::figures::emit(&t5, "ablation_a5_pallas_vs_xla");
         }
 
@@ -187,7 +273,7 @@ fn main() -> anyhow::Result<()> {
             let scales = quant::compute_scales(&row);
             let mut out_row = vec![0i8; d];
             let mh = bencher.measure("host row", || {
-                quant::quantize::quantize_row_into(&row.data, &scales, &mut out_row);
+                quant::quantize_row_into(&row.data, &scales, &mut out_row);
             });
             // Closest artifact: the smallest quantize at 2048x128 is still
             // ~256k elements; time the *call overhead* by running it on a
@@ -216,6 +302,8 @@ fn main() -> anyhow::Result<()> {
                 cell_time(md.median()),
                 "includes dispatch+readback".into(),
             ]);
+            report.add("a7_writer_placement", "host_row", Some(mh.median()), &[]);
+            report.add("a7_writer_placement", "pjrt_dispatch", Some(md.median()), &[]);
             kvq::bench::figures::emit(&t7, "ablation_a7_writer_placement");
         }
     } else {
@@ -224,7 +312,8 @@ fn main() -> anyhow::Result<()> {
 
     // A6: INT4 vs INT8.
     {
-        let k = Fp32Matrix::random_uniform(4096, 256, -1.0, 1.0, 0xA6);
+        let (rows, cols) = if smoke { (512, 64) } else { (4096, 256) };
+        let k = Fp32Matrix::random_uniform(rows, cols, -1.0, 1.0, 0xA6);
         let q8 = quant::quantize_fused(&k);
         let q4 = quant::int4::quantize4(&k);
         let r8 = quant::dequantize(&q8);
@@ -233,20 +322,31 @@ fn main() -> anyhow::Result<()> {
             "A6 — INT8 vs INT4 (paper §8.1 extension)",
             &["format", "max_abs_err", "l2_err", "payload ratio vs fp32"],
         );
-        t6.row(&[
-            "int8".into(),
-            cell_f(quant::max_abs_error(&k, &r8), 5),
-            cell_f(quant::l2_error(&k, &r8), 3),
-            format!("{:.2}x", q8.compression_ratio()),
-        ]);
-        t6.row(&[
-            "int4".into(),
-            cell_f(quant::max_abs_error(&k, &r4), 5),
-            cell_f(quant::l2_error(&k, &r4), 3),
-            format!("{:.2}x", q4.compression_ratio()),
-        ]);
+        for (name, err_rec, ratio) in [
+            ("int8", &r8, q8.compression_ratio()),
+            ("int4", &r4, q4.compression_ratio()),
+        ] {
+            t6.row(&[
+                name.into(),
+                cell_f(quant::max_abs_error(&k, err_rec), 5),
+                cell_f(quant::l2_error(&k, err_rec), 3),
+                format!("{ratio:.2}x"),
+            ]);
+            report.add(
+                "a6_int4",
+                name,
+                None,
+                &[
+                    ("max_abs_err", Json::Num(quant::max_abs_error(&k, err_rec))),
+                    ("l2_err", Json::Num(quant::l2_error(&k, err_rec))),
+                    ("compression_ratio", Json::Num(ratio)),
+                ],
+            );
+        }
         kvq::bench::figures::emit(&t6, "ablation_a6_int4");
     }
 
+    let path = report.write()?;
+    println!("[json] {path}");
     Ok(())
 }

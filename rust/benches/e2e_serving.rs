@@ -3,10 +3,16 @@
 //!
 //! The measurement the paper's future-work §8.2 asks for: token
 //! throughput, TTFT, TPOT, and cache memory, with quantization as the
-//! only variable. Flags: --model kvq-3m|kvq-25m --requests N --max-new N
-//! --concurrency N.
+//! only variable — now also swept over the parallel-runtime worker count
+//! (decode-wave gathers + prefill quantization fan-out).
+//!
+//! Flags: --model kvq-3m|kvq-25m --requests N --max-new N --concurrency N
+//!        --threads N (skip the sweep, run one worker count)
+//!
+//! Emits `bench_results/BENCH_e2e_serving.json` (schema kvq-bench-v1).
 
 use kvq::bench::workload::ServingWorkload;
+use kvq::bench::BenchReport;
 use kvq::coordinator::batcher::BatcherConfig;
 use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::collect_response;
@@ -17,6 +23,7 @@ use kvq::model::sample::SamplingParams;
 use kvq::runtime::Runtime;
 use kvq::util::args::Args;
 use kvq::util::harness::{cell_f, cell_time, Table};
+use kvq::util::json::Json;
 use kvq::util::stats::Summary;
 use std::rc::Rc;
 use std::time::Instant;
@@ -29,110 +36,145 @@ fn main() -> anyhow::Result<()> {
     let concurrency = args.usize_or("concurrency", 4);
     let prompt_lo = args.usize_or("prompt-min", 16);
     let prompt_hi = args.usize_or("prompt-max", 64);
+    let thread_sweep: Vec<usize> = if args.has("threads") {
+        vec![args.usize_or("threads", 1)]
+    } else {
+        kvq::parallel::bench_thread_sweep()
+    };
 
     let mut table = Table::new(
-        &format!("E2E serving: INT8 vs FP32 cache ({model}, {n_requests} reqs, {max_new} new tokens)"),
+        &format!(
+            "E2E serving: INT8 vs FP32 cache ({model}, {n_requests} reqs, {max_new} new tokens)"
+        ),
         &[
-            "precision", "cache MiB", "tok/s", "ttft p50", "ttft p99", "tpot p50",
+            "precision", "threads", "cache MiB", "tok/s", "ttft p50", "ttft p99", "tpot p50",
             "e2e p50", "finished", "rejected",
         ],
     );
+    let mut report = BenchReport::new("e2e_serving");
+    report.env("model", model.as_str().into());
+    report.env("requests", Json::Num(n_requests as f64));
+    report.env("max_new", Json::Num(max_new as f64));
 
-    for precision in [Precision::Fp32, Precision::Int8] {
-        let dir = kvq::runtime::default_artifact_dir();
-        let m = model.clone();
-        let ecfg = EngineConfig {
-            precision,
-            expected_concurrency: concurrency,
-            batcher: BatcherConfig {
-                max_prefills_per_step: 2,
+    for &threads in &thread_sweep {
+        for precision in [Precision::Fp32, Precision::Int8] {
+            let dir = kvq::runtime::default_artifact_dir();
+            let m = model.clone();
+            let ecfg = EngineConfig {
+                precision,
+                expected_concurrency: concurrency,
+                parallelism: threads,
+                batcher: BatcherConfig {
+                    max_prefills_per_step: 2,
+                    ..Default::default()
+                },
                 ..Default::default()
-            },
-            ..Default::default()
-        };
-        let (h, join) = engine::spawn(ecfg, move || {
-            let rt = Rc::new(Runtime::new(&dir)?);
-            Ok(Box::new(PjrtBackend::new(rt, &m, 0xA11CE, DecodeKernel::PlainXla)?)
-                as Box<dyn kvq::model::LmBackend>)
-        });
-        let mut router = Router::new(RoutePolicy::RoundRobin);
-        router.add_engine(precision.name(), h.clone());
+            };
+            let (h, join) = engine::spawn(ecfg, move || {
+                let rt = Rc::new(Runtime::new(&dir)?);
+                Ok(Box::new(PjrtBackend::new(rt, &m, 0xA11CE, DecodeKernel::PlainXla)?)
+                    as Box<dyn kvq::model::LmBackend>)
+            });
+            let mut router = Router::new(RoutePolicy::RoundRobin);
+            router.add_engine(precision.name(), h.clone());
 
-        // Deterministic Poisson workload; same seed for both precisions.
-        let wl = ServingWorkload::poisson(
-            n_requests,
-            1000.0, // effectively open-loop burst
-            (prompt_lo, prompt_hi),
-            max_new,
-            256,
-            42,
-        );
+            // Deterministic Poisson workload; same seed for every cell.
+            let wl = ServingWorkload::poisson(
+                n_requests,
+                1000.0, // effectively open-loop burst
+                (prompt_lo, prompt_hi),
+                max_new,
+                256,
+                42,
+            );
 
-        let t0 = Instant::now();
-        let mut streams = Vec::new();
-        for prompt in wl.prompts.iter() {
-            let (_, rx) =
-                router.submit(prompt.clone(), max_new, SamplingParams::default())?;
-            streams.push(rx);
-        }
-        let mut ttfts = Summary::new();
-        let mut e2es = Summary::new();
-        let mut tokens_total = 0usize;
-        let mut finished = 0usize;
-        let mut rejected = 0usize;
-        for rx in &streams {
-            let (tokens, reason, ttft, elapsed) = collect_response(rx);
-            match reason {
-                kvq::coordinator::FinishReason::Rejected(_) => rejected += 1,
-                _ => {
-                    finished += 1;
-                    tokens_total += tokens.len();
-                    ttfts.add(ttft);
-                    e2es.add(elapsed);
+            let t0 = Instant::now();
+            let mut streams = Vec::new();
+            for prompt in wl.prompts.iter() {
+                let (_, rx) =
+                    router.submit(prompt.clone(), max_new, SamplingParams::default())?;
+                streams.push(rx);
+            }
+            let mut ttfts = Summary::new();
+            let mut e2es = Summary::new();
+            let mut tokens_total = 0usize;
+            let mut finished = 0usize;
+            let mut rejected = 0usize;
+            for rx in &streams {
+                let (tokens, reason, ttft, elapsed) = collect_response(rx);
+                match reason {
+                    kvq::coordinator::FinishReason::Rejected(_) => rejected += 1,
+                    _ => {
+                        finished += 1;
+                        tokens_total += tokens.len();
+                        ttfts.add(ttft);
+                        e2es.add(elapsed);
+                    }
                 }
             }
+            let wall = t0.elapsed().as_secs_f64();
+            let snap = h.metrics.snapshot();
+            // Cache memory from the engine's pool config.
+            let cache_mib = {
+                // recompute the default sizing for reporting
+                let manifest =
+                    kvq::runtime::Manifest::load(&kvq::runtime::default_artifact_dir())?;
+                let mj = manifest
+                    .models
+                    .iter()
+                    .find(|mj| mj.get("name").as_str() == Some(model.as_str()))
+                    .unwrap();
+                let spec = kvq::model::ModelSpec::from_json(mj)?;
+                let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
+                let total = blocks_per_seq * concurrency;
+                let per_block = precision
+                    .bytes_for(spec.block_size * spec.heads * spec.head_dim);
+                (total * per_block) as f64 / (1024.0 * 1024.0)
+            };
+            let tok_s = tokens_total as f64 / wall;
+
+            table.row(&[
+                precision.name().to_string(),
+                threads.to_string(),
+                format!("{cache_mib:.1}"),
+                cell_f(tok_s, 1),
+                cell_time(ttfts.percentile(50.0)),
+                cell_time(ttfts.percentile(99.0)),
+                cell_time(snap.tpot_p50),
+                cell_time(e2es.percentile(50.0)),
+                finished.to_string(),
+                rejected.to_string(),
+            ]);
+            report.add(
+                "e2e_serving",
+                precision.name(),
+                None,
+                &[
+                    ("threads", Json::Num(threads as f64)),
+                    ("cache_mib", Json::Num(cache_mib)),
+                    ("tok_per_s", Json::Num(tok_s)),
+                    ("ttft_p50_s", Json::Num(ttfts.percentile(50.0))),
+                    ("ttft_p99_s", Json::Num(ttfts.percentile(99.0))),
+                    ("tpot_p50_s", Json::Num(snap.tpot_p50)),
+                    ("e2e_p50_s", Json::Num(e2es.percentile(50.0))),
+                    ("finished", Json::Num(finished as f64)),
+                    ("rejected", Json::Num(rejected as f64)),
+                ],
+            );
+
+            h.drain();
+            join.join().ok();
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let snap = h.metrics.snapshot();
-        // Cache memory from the engine's pool config.
-        let spec_blocks = {
-            // recompute the default sizing for reporting
-            let manifest = kvq::runtime::Manifest::load(&kvq::runtime::default_artifact_dir())?;
-            let mj = manifest
-                .models
-                .iter()
-                .find(|mj| mj.get("name").as_str() == Some(model.as_str()))
-                .unwrap();
-            let spec = kvq::model::ModelSpec::from_json(mj)?;
-            let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
-            let total = blocks_per_seq * concurrency;
-            let per_block = precision
-                .bytes_for(spec.block_size * spec.heads * spec.head_dim);
-            (total * per_block) as f64 / (1024.0 * 1024.0)
-        };
-
-        table.row(&[
-            precision.name().to_string(),
-            format!("{spec_blocks:.1}"),
-            cell_f(tokens_total as f64 / wall, 1),
-            cell_time(ttfts.percentile(50.0)),
-            cell_time(ttfts.percentile(99.0)),
-            cell_time(snap.tpot_p50),
-            cell_time(e2es.percentile(50.0)),
-            finished.to_string(),
-            rejected.to_string(),
-        ]);
-
-        h.drain();
-        join.join().ok();
     }
 
     table.print();
     table.write_csv("bench_results/e2e_serving.csv").ok();
     println!("[csv] bench_results/e2e_serving.csv");
+    let path = report.write()?;
+    println!("[json] {path}");
     println!(
         "\nNote: identical decode math modulo cache precision; INT8's win is 4x cache \
-         memory (column 2) at equal-or-better throughput — the paper's deployment claim."
+         memory (column 3) at equal-or-better throughput — the paper's deployment claim."
     );
     Ok(())
 }

@@ -6,6 +6,8 @@
 //! reports; the bench binaries print it and write CSV to bench_results/.
 
 pub mod figures;
+pub mod report;
 pub mod workload;
 
+pub use report::BenchReport;
 pub use workload::Workload;

@@ -1,0 +1,150 @@
+//! Machine-readable bench artifacts: `bench_results/BENCH_<name>.json`.
+//!
+//! Every bench binary emits one report next to its printed tables so CI
+//! can archive results and perf regressions become visible PR-over-PR.
+//! Schema (`kvq-bench-v1`, documented in rust/README.md):
+//!
+//! ```text
+//! {
+//!   "schema": "kvq-bench-v1",
+//!   "name": "<report name>",
+//!   "created_unix_s": <seconds since epoch>,
+//!   "env": { "<key>": <value>, ... },          // e.g. threads_auto
+//!   "entries": [
+//!     { "section": "<table/figure id>",
+//!       "label":   "<row label>",
+//!       "median_s": <seconds, may be null for non-timing rows>,
+//!       "params":  { "<key>": <value>, ... } }, // e.g. threads, shape
+//!     ...
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+
+/// Accumulates bench entries and writes `BENCH_<name>.json`.
+pub struct BenchReport {
+    name: String,
+    env: BTreeMap<String, Json>,
+    entries: Vec<Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        let mut env = BTreeMap::new();
+        env.insert(
+            "threads_auto".to_string(),
+            Json::Num(crate::parallel::default_threads() as f64),
+        );
+        BenchReport { name: name.to_string(), env, entries: Vec::new() }
+    }
+
+    /// Record an environment fact (mode flags, workload sizes, ...).
+    pub fn env(&mut self, key: &str, value: Json) {
+        self.env.insert(key.to_string(), value);
+    }
+
+    /// Record one measured row. `median_s = None` marks non-timing rows
+    /// (error metrics, memory figures) whose value lives in `params`.
+    pub fn add(
+        &mut self,
+        section: &str,
+        label: &str,
+        median_s: Option<f64>,
+        params: &[(&str, Json)],
+    ) {
+        self.entries.push(obj([
+            ("section", section.into()),
+            ("label", label.into()),
+            (
+                "median_s",
+                match median_s {
+                    Some(s) => Json::Num(s),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "params",
+                Json::Obj(params.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()),
+            ),
+        ]));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        obj([
+            ("schema", "kvq-bench-v1".into()),
+            ("name", self.name.as_str().into()),
+            ("created_unix_s", Json::Num(created)),
+            ("env", Json::Obj(self.env.clone())),
+            ("entries", Json::Arr(self.entries.clone())),
+        ])
+    }
+
+    /// Write to an explicit path (tests use a temp dir).
+    pub fn write_to(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Write to the conventional `bench_results/BENCH_<name>.json` and
+    /// return the path.
+    pub fn write(&self) -> std::io::Result<String> {
+        let path = format!("bench_results/BENCH_{}.json", self.name);
+        self.write_to(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips_through_json() {
+        let mut r = BenchReport::new("unit");
+        r.env("full", Json::Bool(false));
+        r.add(
+            "a4_quantize",
+            "vectorized",
+            Some(0.25),
+            &[("threads", Json::Num(2.0)), ("shape", "2048x128".into())],
+        );
+        r.add("a6_int4", "int4", None, &[("l2_err", Json::Num(1.5))]);
+        assert_eq!(r.len(), 2);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").as_str(), Some("kvq-bench-v1"));
+        assert_eq!(j.get("name").as_str(), Some("unit"));
+        assert!(j.get("env").get("threads_auto").as_usize().unwrap() >= 1);
+        let e0 = j.get("entries").at(0);
+        assert_eq!(e0.get("section").as_str(), Some("a4_quantize"));
+        assert_eq!(e0.get("median_s").as_f64(), Some(0.25));
+        assert_eq!(e0.get("params").get("threads").as_usize(), Some(2));
+        assert_eq!(j.get("entries").at(1).get("median_s"), &Json::Null);
+    }
+
+    #[test]
+    fn writes_to_disk() {
+        let mut r = BenchReport::new("unit_write");
+        r.add("s", "l", Some(1.0), &[]);
+        let path = std::env::temp_dir().join("kvq_bench_report_test.json");
+        r.write_to(path.to_str().unwrap()).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("kvq-bench-v1"));
+        let _ = std::fs::remove_file(path);
+    }
+}

@@ -51,6 +51,9 @@ pub struct ServeConfig {
     pub scale_margin: f32,
     pub batcher: BatcherConfig,
     pub port: u16,
+    /// Worker count for the parallel quantization runtime (0 = auto:
+    /// available parallelism, `KVQ_THREADS` override).
+    pub parallelism: usize,
 }
 
 impl Default for ServeConfig {
@@ -67,6 +70,7 @@ impl Default for ServeConfig {
             scale_margin: 1.0,
             batcher: BatcherConfig::default(),
             port: 8080,
+            parallelism: 0,
         }
     }
 }
@@ -117,6 +121,9 @@ impl ServeConfig {
         if let Some(v) = j.get("port").as_usize() {
             self.port = v as u16;
         }
+        if let Some(v) = j.get("parallelism").as_usize() {
+            self.parallelism = v;
+        }
         if let Some(v) = j.get("max_running").as_usize() {
             self.batcher.admission.max_running = v;
         }
@@ -165,6 +172,7 @@ impl ServeConfig {
             args.usize_or("concurrency", self.expected_concurrency);
         self.scale_margin = args.f64_or("scale-margin", self.scale_margin as f64) as f32;
         self.port = args.usize_or("port", self.port as usize) as u16;
+        self.parallelism = args.usize_or("threads", self.parallelism);
         self.batcher.admission.max_running =
             args.usize_or("max-running", self.batcher.admission.max_running);
         self.batcher.max_prefills_per_step =
@@ -183,6 +191,7 @@ impl ServeConfig {
             scale_margin: self.scale_margin,
             batcher: self.batcher,
             seed: self.weight_seed,
+            parallelism: self.parallelism,
         }
     }
 
@@ -208,7 +217,8 @@ mod tests {
         let mut c = ServeConfig::default();
         let j = Json::parse(
             r#"{"model":"kvq-25m","precision":"fp32","port":9000,
-                "max_running":4,"decode_kernel":"pallas","backend":"cpu"}"#,
+                "max_running":4,"decode_kernel":"pallas","backend":"cpu",
+                "parallelism":3}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -218,6 +228,8 @@ mod tests {
         assert_eq!(c.batcher.admission.max_running, 4);
         assert_eq!(c.decode_kernel, DecodeKernel::Pallas);
         assert_eq!(c.backend, Backend::CpuRef);
+        assert_eq!(c.parallelism, 3);
+        assert_eq!(c.engine_config().parallelism, 3);
     }
 
     #[test]
@@ -232,10 +244,13 @@ mod tests {
         let mut c = ServeConfig::default();
         c.apply_json(&Json::parse(r#"{"port":9000}"#).unwrap()).unwrap();
         let args = Args::parse_from(
-            ["--port", "9100", "--precision", "fp32"].iter().map(|s| s.to_string()),
+            ["--port", "9100", "--precision", "fp32", "--threads", "2"]
+                .iter()
+                .map(|s| s.to_string()),
         );
         c.apply_args(&args).unwrap();
         assert_eq!(c.port, 9100);
         assert_eq!(c.precision, Precision::Fp32);
+        assert_eq!(c.parallelism, 2);
     }
 }

@@ -5,15 +5,25 @@
 //! constructed *inside* the engine thread from a `Send` factory closure.
 //! The [`EngineHandle`] is cheap to clone and freely shareable (mpsc
 //! sender + metrics handle).
+//!
+//! **Decode waves.** With `parallelism > 1` the engine processes the
+//! decode batch in waves: up to `parallelism` concurrent sequences have
+//! their caches gathered into per-sequence staging slots *in parallel*
+//! (the cache side of a decode step), then the backend — which is
+//! thread-confined — consumes the slots serially. The cache manager's own
+//! prefill/gather fan-out uses the same knob. Parallelism never changes
+//! generated tokens: gathers are read-only and bit-deterministic, and the
+//! backend execution order is unchanged.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{EventTx, FinishReason, Request, TokenEvent};
 use super::scheduler::{Running, Scheduler};
-use crate::kvcache::manager::{CacheConfig, KvCacheManager};
+use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
 use crate::kvcache::Precision;
 use crate::model::sample;
 use crate::model::LmBackend;
+use crate::parallel;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::mpsc;
@@ -31,6 +41,10 @@ pub struct EngineConfig {
     pub batcher: BatcherConfig,
     /// RNG seed space for per-request sampling.
     pub seed: u64,
+    /// Worker count for the parallel quantization runtime (decode-wave
+    /// gathers + cache prefill/gather fan-out). 0 = auto
+    /// (`available_parallelism`, `KVQ_THREADS` override).
+    pub parallelism: usize,
 }
 
 impl Default for EngineConfig {
@@ -42,6 +56,7 @@ impl Default for EngineConfig {
             scale_margin: 1.0,
             batcher: BatcherConfig::default(),
             seed: 0,
+            parallelism: 0,
         }
     }
 }
@@ -115,6 +130,75 @@ where
     (EngineHandle { tx, metrics }, join)
 }
 
+/// Per-sequence decode staging: one slot per concurrently gathered
+/// sequence in a decode wave. Reused across steps (no allocation on the
+/// decode hot path once the wave width is reached).
+struct StagingSlot {
+    kq: Vec<i8>,
+    vq: Vec<i8>,
+    ks: Vec<f32>,
+    vs: Vec<f32>,
+    k32: Vec<f32>,
+    v32: Vec<f32>,
+    /// Wall-clock seconds this slot's gather took (parallel phase), so
+    /// per-token (TPOT) metrics keep including the cache-read cost.
+    gather_secs: f64,
+    /// Gather error carried from the parallel phase into the serial one.
+    err: Option<String>,
+}
+
+impl StagingSlot {
+    fn new(precision: Precision, n: usize, ns: usize) -> StagingSlot {
+        let is_int8 = precision == Precision::Int8;
+        StagingSlot {
+            kq: if is_int8 { vec![0; n] } else { Vec::new() },
+            vq: if is_int8 { vec![0; n] } else { Vec::new() },
+            ks: vec![0.0; ns],
+            vs: vec![0.0; ns],
+            k32: if is_int8 { Vec::new() } else { vec![0.0; n] },
+            v32: if is_int8 { Vec::new() } else { vec![0.0; n] },
+            gather_secs: 0.0,
+            err: None,
+        }
+    }
+}
+
+/// Gather one sequence's full cache (+ scales) into a staging slot.
+/// `inner_threads` bounds the manager's own fan-out: waves wider than one
+/// sequence pass 1 here so the two parallelism levels never multiply
+/// (threads² oversubscription).
+fn gather_sequence(
+    cache: &KvCacheManager,
+    precision: Precision,
+    seq: SeqId,
+    slot: &mut StagingSlot,
+    inner_threads: usize,
+) -> Result<()> {
+    let c = cache.config();
+    let (l, h, s, d) = (c.layers, c.heads, c.max_seq, c.head_dim);
+    match precision {
+        Precision::Int8 => {
+            for li in 0..l {
+                let span = li * h * s * d..(li + 1) * h * s * d;
+                cache.gather_i8_with(seq, li, 0, &mut slot.kq[span.clone()], inner_threads)?;
+                cache.gather_i8_with(seq, li, 1, &mut slot.vq[span], inner_threads)?;
+                let sspan = li * h * d..(li + 1) * h * d;
+                slot.ks[sspan.clone()].copy_from_slice(cache.scales(seq, li, 0)?);
+                slot.vs[sspan].copy_from_slice(cache.scales(seq, li, 1)?);
+            }
+        }
+        Precision::Fp32 => {
+            for li in 0..l {
+                let span = li * h * s * d..(li + 1) * h * s * d;
+                cache.gather_f32_with(seq, li, 0, &mut slot.k32[span.clone()], inner_threads)?;
+                cache.gather_f32_with(seq, li, 1, &mut slot.v32[span], inner_threads)?;
+            }
+        }
+        Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+    }
+    Ok(())
+}
+
 struct Engine {
     backend: Box<dyn LmBackend>,
     cache: KvCacheManager,
@@ -122,13 +206,10 @@ struct Engine {
     batcher: Batcher,
     cfg: EngineConfig,
     metrics: Metrics,
-    // Reused staging buffers (decode hot path — no allocation per step).
-    kq: Vec<i8>,
-    vq: Vec<i8>,
-    ks: Vec<f32>,
-    vs: Vec<f32>,
-    k32: Vec<f32>,
-    v32: Vec<f32>,
+    /// Resolved worker count (>= 1) = decode wave width.
+    threads: usize,
+    /// Staging slots; grows lazily up to `threads` entries.
+    staging: Vec<StagingSlot>,
     rng: Rng,
 }
 
@@ -138,7 +219,7 @@ impl Engine {
         let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
         let num_blocks =
             cfg.num_blocks.unwrap_or(blocks_per_seq * cfg.expected_concurrency.max(1));
-        let cache = KvCacheManager::new(CacheConfig {
+        let mut cache = KvCacheManager::new(CacheConfig {
             layers: spec.layers,
             heads: spec.heads,
             head_dim: spec.head_dim,
@@ -148,15 +229,17 @@ impl Engine {
             precision: cfg.precision,
             scale_margin: cfg.scale_margin,
         });
+        let threads = parallel::resolve(cfg.parallelism);
+        cache.set_parallelism(threads);
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
-        let is_int8 = cfg.precision == Precision::Int8;
         crate::info!(
-            "engine up: model={} precision={} blocks={} cache={:.1} MiB",
+            "engine up: model={} precision={} blocks={} cache={:.1} MiB threads={}",
             spec.name,
             cfg.precision.name(),
             num_blocks,
-            cache.storage_bytes() as f64 / (1024.0 * 1024.0)
+            cache.storage_bytes() as f64 / (1024.0 * 1024.0),
+            threads
         );
         Engine {
             backend,
@@ -165,12 +248,8 @@ impl Engine {
             batcher: Batcher::new(),
             rng: Rng::new(cfg.seed ^ 0xE46),
             metrics,
-            kq: if is_int8 { vec![0; n] } else { Vec::new() },
-            vq: if is_int8 { vec![0; n] } else { Vec::new() },
-            ks: vec![0.0; ns],
-            vs: vec![0.0; ns],
-            k32: if is_int8 { Vec::new() } else { vec![0.0; n] },
-            v32: if is_int8 { Vec::new() } else { vec![0.0; n] },
+            threads,
+            staging: vec![StagingSlot::new(cfg.precision, n, ns)],
             cfg,
         }
     }
@@ -257,23 +336,16 @@ impl Engine {
         // Decode pass. Indices were computed against the pre-prefill
         // running set; re-plan decodes as "all running" for simplicity and
         // fairness is preserved by the batcher cursor across steps.
+        // Sequences are processed in waves of `threads`: cache gathers run
+        // in parallel across the wave, backend execution stays serial (the
+        // PJRT runtime is thread-confined).
         let ids: Vec<u64> = plan
             .decodes
             .iter()
             .filter_map(|&i| self.sched.running.get(i).map(|r| r.req.id))
             .collect();
-        for id in ids {
-            if let Err(e) = self.decode_one(id) {
-                crate::error!("decode failed for {id}: {e:#}");
-                if let Some(run) = self.sched.finish(id) {
-                    self.cache.free(run.seq);
-                    let _ = run.events.send(TokenEvent::Finished {
-                        reason: FinishReason::Error(format!("{e}")),
-                        tokens: run.generated,
-                        elapsed: run.req.arrival.elapsed().as_secs_f64(),
-                    });
-                }
-            }
+        for wave in ids.chunks(self.threads.max(1)) {
+            self.decode_wave(wave);
         }
 
         self.metrics.on_step(
@@ -327,52 +399,100 @@ impl Engine {
         Ok(())
     }
 
-    fn decode_one(&mut self, id: u64) -> Result<()> {
-        let t0 = Instant::now();
-        let spec = self.backend.spec().clone();
-        let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
-        let (seq, token, pos) = {
-            let run = self
-                .sched
-                .running
-                .iter()
-                .find(|r| r.req.id == id)
-                .ok_or_else(|| anyhow::anyhow!("request {id} not running"))?;
-            (run.seq, run.last_token, self.cache.seq_len(run.seq).unwrap())
-        };
+    /// Decode a wave of concurrent sequences: parallel gather phase into
+    /// per-sequence staging slots, then serial backend execution.
+    fn decode_wave(&mut self, wave: &[u64]) {
+        // Resolve (id, seq, token, pos) for every still-running member.
+        let metas: Vec<(u64, SeqId, i32, usize)> = wave
+            .iter()
+            .filter_map(|&id| {
+                self.sched.running.iter().find(|r| r.req.id == id).map(|r| {
+                    (id, r.seq, r.last_token, self.cache.seq_len(r.seq).unwrap_or(0))
+                })
+            })
+            .collect();
+        if metas.is_empty() {
+            return;
+        }
+        {
+            let spec = self.backend.spec();
+            let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
+            let ns = spec.layers * spec.heads * spec.head_dim;
+            while self.staging.len() < metas.len() {
+                self.staging.push(StagingSlot::new(self.cfg.precision, n, ns));
+            }
+        }
+        // Parallel gather phase: cache reads + staging writes are
+        // per-sequence disjoint; the manager is only read. Single-member
+        // waves keep the manager's intra-gather fan-out instead.
+        {
+            let cache = &self.cache;
+            let precision = self.cfg.precision;
+            let inner_threads = if metas.len() > 1 { 1 } else { self.threads };
+            let slots = &mut self.staging[..metas.len()];
+            parallel::parallel_zip(&metas, slots, self.threads, |_, &(_, seq, _, _), slot| {
+                let t0 = Instant::now();
+                slot.err = None;
+                if let Err(e) = gather_sequence(cache, precision, seq, slot, inner_threads) {
+                    slot.err = Some(format!("{e:#}"));
+                }
+                slot.gather_secs = t0.elapsed().as_secs_f64();
+            });
+        }
+        // Serial phase: backend decode, cache append, sampling, events.
+        for (i, &(id, seq, token, pos)) in metas.iter().enumerate() {
+            if let Err(e) = self.decode_with_slot(id, seq, token, pos, i) {
+                crate::error!("decode failed for {id}: {e:#}");
+                if let Some(run) = self.sched.finish(id) {
+                    self.cache.free(run.seq);
+                    let _ = run.events.send(TokenEvent::Finished {
+                        reason: FinishReason::Error(format!("{e}")),
+                        tokens: run.generated,
+                        elapsed: run.req.arrival.elapsed().as_secs_f64(),
+                    });
+                }
+            }
+        }
+    }
 
+    /// Consume staging slot `i` (already gathered) for one decode step.
+    fn decode_with_slot(
+        &mut self,
+        id: u64,
+        seq: SeqId,
+        token: i32,
+        pos: usize,
+        i: usize,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let gather_secs = self.staging[i].gather_secs;
+        if let Some(e) = self.staging[i].err.take() {
+            anyhow::bail!("gather failed: {e}");
+        }
         let dec = match self.cfg.precision {
             Precision::Int8 => {
-                for li in 0..l {
-                    let span = li * h * s * d..(li + 1) * h * s * d;
-                    self.cache.gather_i8(seq, li, 0, &mut self.kq[span.clone()])?;
-                    self.cache.gather_i8(seq, li, 1, &mut self.vq[span])?;
-                    let sspan = li * h * d..(li + 1) * h * d;
-                    self.ks[sspan.clone()].copy_from_slice(self.cache.scales(seq, li, 0)?);
-                    self.vs[sspan].copy_from_slice(self.cache.scales(seq, li, 1)?);
-                }
-                self.backend.decode_i8(token, pos, &self.kq, &self.ks, &self.vq, &self.vs)?
+                let st = &self.staging[i];
+                self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
             }
             Precision::Fp32 => {
-                for li in 0..l {
-                    let span = li * h * s * d..(li + 1) * h * s * d;
-                    self.cache.gather_f32(seq, li, 0, &mut self.k32[span.clone()])?;
-                    self.cache.gather_f32(seq, li, 1, &mut self.v32[span])?;
-                }
-                self.backend.decode_f32(token, pos, &self.k32, &self.v32)?
+                let st = &self.staging[i];
+                self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
             }
             Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
         };
         self.cache.append_row(seq, &dec.k_new, &dec.v_new)?;
 
+        let max_seq = self.cache.config().max_seq;
         let run = self.sched.running.iter_mut().find(|r| r.req.id == id).unwrap();
         let next = sample::sample(&dec.logits, &run.req.sampling, &mut run.rng);
         run.last_token = next;
         run.generated += 1;
-        self.metrics.on_token(t0.elapsed().as_secs_f64());
+        // TPOT includes this sequence's own gather cost (measured in the
+        // parallel phase) — same semantics as the pre-wave serial path.
+        self.metrics.on_token(gather_secs + t0.elapsed().as_secs_f64());
         let _ = run.events.send(TokenEvent::Token(next));
 
-        if let Some(reason) = finish_reason(run, s) {
+        if let Some(reason) = finish_reason(run, max_seq) {
             let mut run = self.sched.finish(id).unwrap();
             self.cache.free(run.seq);
             self.finalize(&mut run, reason);

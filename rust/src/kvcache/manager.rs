@@ -13,13 +13,27 @@
 //! measured by the ablation bench (`cargo bench --bench ablations`) and
 //! bounded in practice by RoPE keeping per-channel K statistics stationary
 //! (DESIGN.md §Hardware-Adaptation).
+//!
+//! **Parallelism.** Prefill scale-freezing/quantization and the decode
+//! gathers are batched over the shared [`crate::parallel`] runtime
+//! ([`KvCacheManager::set_parallelism`]); workers own disjoint streams,
+//! blocks, or staging ranges, so the stored and gathered bytes are
+//! identical at every worker count (asserted by
+//! `tests/parallel_consistency.rs`).
 
 use super::pool::{BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
-use crate::quant::quantize::quantize_one;
+use crate::parallel::{self, SendPtr};
+use crate::quant::quantize::{quantize_one, quantize_row_into};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+
+/// Minimum elements of per-sequence work before the batched prefill /
+/// gather paths fan out to the shared parallel runtime; below this the
+/// scoped-thread overhead dominates. Overridable for tests/benches via
+/// [`KvCacheManager::set_parallel_threshold`].
+const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Sequence handle.
 pub type SeqId = u64;
@@ -65,6 +79,11 @@ pub struct KvCacheManager {
     pool: BlockPool,
     seqs: HashMap<SeqId, SequenceCache>,
     next_id: SeqId,
+    /// Worker count for the batched prefill-quantize and gather paths
+    /// (1 = serial; the default). Parallelism never changes output bits.
+    threads: usize,
+    /// Work-size floor before fanning out (see [`PAR_MIN_ELEMS`]).
+    par_min: usize,
 }
 
 impl KvCacheManager {
@@ -76,6 +95,39 @@ impl KvCacheManager {
             cfg,
             seqs: HashMap::new(),
             next_id: 1,
+            threads: 1,
+            par_min: PAR_MIN_ELEMS,
+        }
+    }
+
+    /// Set the worker count used by batched quantize/gather (0 = auto via
+    /// the shared [`crate::parallel`] runtime knob).
+    pub fn set_parallelism(&mut self, threads: usize) {
+        self.threads = parallel::resolve(threads);
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the minimum work size before parallel fan-out (tests and
+    /// benches use 0 to force the parallel path on small inputs).
+    pub fn set_parallel_threshold(&mut self, elems: usize) {
+        self.par_min = elems;
+    }
+
+    /// Worker count for a unit of `work` total elements.
+    fn threads_for(&self, work: usize) -> usize {
+        self.threads_capped(work, self.threads)
+    }
+
+    /// Like [`Self::threads_for`] with an explicit cap (callers already
+    /// running inside a parallel region pass 1 to avoid nested fan-out).
+    fn threads_capped(&self, work: usize, cap: usize) -> usize {
+        if cap > 1 && work >= self.par_min {
+            cap
+        } else {
+            1
         }
     }
 
@@ -174,6 +226,11 @@ impl KvCacheManager {
     /// flattened with only the first `len` token rows valid, where S is
     /// inferred from the tensor size (bucketed prefill artifacts emit
     /// S < max_seq; see EXPERIMENTS.md §Perf).
+    ///
+    /// Both the scale freeze and the block quantize/copy are batched and
+    /// run on the shared parallel runtime for long prompts (disjoint
+    /// streams / blocks per worker — output bits never depend on the
+    /// worker count).
     pub fn set_prefill(&mut self, id: SeqId, k: &[f32], v: &[f32], len: usize) -> Result<()> {
         let (l, h, d) = (self.cfg.layers, self.cfg.heads, self.cfg.head_dim);
         if k.len() % (l * h * d) != 0 || v.len() != k.len() {
@@ -183,32 +240,47 @@ impl KvCacheManager {
         if len > s || len > self.cfg.max_seq {
             bail!("prefill len {len} > stride {s} or max_seq {}", self.cfg.max_seq);
         }
-        let seq = self.seqs.get_mut(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
-        if seq.len != 0 {
-            bail!("set_prefill on non-empty sequence {id}");
+        if self.cfg.precision == Precision::Int4 {
+            bail!("int4 serving path not implemented (bench-only precision)");
         }
-        // Freeze scales: per (layer, kv, head, channel) abs-max over rows
-        // 0..len, divided by 127, inflated by the margin.
-        let margin = self.cfg.scale_margin;
-        for layer in 0..l {
-            for (kv, data) in [k, v].into_iter().enumerate() {
-                let sc = &mut seq.scales[layer][kv];
-                for head in 0..h {
-                    let base = ((layer * h) + head) * s * d;
-                    for ch in 0..d {
-                        let mut m = 0.0f32;
-                        for t in 0..len {
-                            let val = data[base + t * d + ch].abs();
-                            if val > m {
-                                m = val;
-                            }
-                        }
-                        sc[head * d + ch] = m * margin / crate::QMAX;
-                    }
-                }
+        {
+            let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+            if seq.len != 0 {
+                bail!("set_prefill on non-empty sequence {id}");
             }
         }
-        // Allocate blocks and write the rows.
+        // Freeze scales: per (layer, kv, head, channel) abs-max over rows
+        // 0..len, divided by 127, inflated by the margin. One worker per
+        // (layer, K|V) stream.
+        let margin = self.cfg.scale_margin;
+        let threads = self.threads_for(2 * l * h * d * len);
+        let streams: Vec<(usize, usize)> =
+            (0..l).flat_map(|layer| [(layer, 0), (layer, 1)]).collect();
+        let frozen: Vec<Vec<f32>> = parallel::parallel_map(&streams, threads, |&(layer, kv)| {
+            let data = if kv == 0 { k } else { v };
+            let mut sc = vec![0.0f32; h * d];
+            for head in 0..h {
+                let base = ((layer * h) + head) * s * d;
+                for ch in 0..d {
+                    let mut m = 0.0f32;
+                    for t in 0..len {
+                        let val = data[base + t * d + ch].abs();
+                        if val > m {
+                            m = val;
+                        }
+                    }
+                    sc[head * d + ch] = m * margin / crate::QMAX;
+                }
+            }
+            sc
+        });
+        {
+            let seq = self.seqs.get_mut(&id).unwrap();
+            for (&(layer, kv), sc) in streams.iter().zip(frozen) {
+                seq.scales[layer][kv] = sc;
+            }
+        }
+        // Allocate blocks and write the rows, one worker per block.
         let need = BlockTable::blocks_for(len, self.cfg.block_size);
         for layer in 0..l {
             for kv in 0..2 {
@@ -218,11 +290,98 @@ impl KvCacheManager {
                 }
             }
         }
-        for pos in 0..len {
-            self.write_row_at(id, k, v, s, pos, pos)?;
+        match self.cfg.precision {
+            Precision::Int8 => self.prefill_write_i8(id, k, v, s, len, threads),
+            Precision::Fp32 => self.prefill_write_f32(id, k, v, s, len, threads),
+            Precision::Int4 => unreachable!("rejected above"),
         }
         self.seqs.get_mut(&id).unwrap().len = len;
         Ok(())
+    }
+
+    /// Batched prefill quantization: quantize all `len` rows of every
+    /// (layer, K|V) stream directly into their blocks. Freshly allocated
+    /// blocks are unique (refcount 1), so per-block writes are disjoint
+    /// and fan out across workers.
+    fn prefill_write_i8(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        s: usize,
+        len: usize,
+        threads: usize,
+    ) {
+        let (l, h, d, bs) =
+            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
+        let nblocks = BlockTable::blocks_for(len, bs);
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                let scales = self.seqs[&id].scales[layer][kv].clone();
+                let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
+                let ptrs: Vec<SendPtr<i8>> =
+                    self.pool.block_i8_ptrs(&blocks).into_iter().map(SendPtr::new).collect();
+                parallel::parallel_chunks(nblocks, 1, threads, |blo, bhi| {
+                    for bi in blo..bhi {
+                        let rows_here = bs.min(len - bi * bs);
+                        // SAFETY: distinct block ids → disjoint payloads.
+                        let blk = unsafe {
+                            std::slice::from_raw_parts_mut(ptrs[bi].add(0), h * bs * d)
+                        };
+                        for head in 0..h {
+                            let base = ((layer * h) + head) * s * d;
+                            let sc = &scales[head * d..(head + 1) * d];
+                            for r in 0..rows_here {
+                                let pos = bi * bs + r;
+                                let src = &data[base + pos * d..base + (pos + 1) * d];
+                                let off = (head * bs + r) * d;
+                                quantize_row_into(src, sc, &mut blk[off..off + d]);
+                            }
+                        }
+                    }
+                });
+            }
+        }
+    }
+
+    /// FP32 variant of [`Self::prefill_write_i8`] (plain copies).
+    fn prefill_write_f32(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        s: usize,
+        len: usize,
+        threads: usize,
+    ) {
+        let (l, h, d, bs) =
+            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
+        let nblocks = BlockTable::blocks_for(len, bs);
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
+                let ptrs: Vec<SendPtr<f32>> =
+                    self.pool.block_f32_ptrs(&blocks).into_iter().map(SendPtr::new).collect();
+                parallel::parallel_chunks(nblocks, 1, threads, |blo, bhi| {
+                    for bi in blo..bhi {
+                        let rows_here = bs.min(len - bi * bs);
+                        // SAFETY: distinct block ids → disjoint payloads.
+                        let blk = unsafe {
+                            std::slice::from_raw_parts_mut(ptrs[bi].add(0), h * bs * d)
+                        };
+                        for head in 0..h {
+                            let base = ((layer * h) + head) * s * d;
+                            for r in 0..rows_here {
+                                let pos = bi * bs + r;
+                                let src = &data[base + pos * d..base + (pos + 1) * d];
+                                let off = (head * bs + r) * d;
+                                blk[off..off + d].copy_from_slice(src);
+                            }
+                        }
+                    }
+                });
+            }
+        }
     }
 
     /// Append one decode-step K/V row (layout `(L, H, d)` flattened).
@@ -267,26 +426,16 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Write row `pos` of every layer/kv from (L,H,S,d)-shaped tensors
-    /// (prefill path; blocks must already exist). `s` is the source
-    /// sequence stride (may be a bucket < max_seq).
-    fn write_row_at(&mut self, id: SeqId, k: &[f32], v: &[f32], s: usize, src_row: usize, pos: usize) -> Result<()> {
-        let (l, h, d) = (self.cfg.layers, self.cfg.heads, self.cfg.head_dim);
-        let mut row = vec![0.0f32; h * d];
-        for layer in 0..l {
-            for (kv, data) in [k, v].into_iter().enumerate() {
-                for head in 0..h {
-                    let base = ((layer * h) + head) * s * d + src_row * d;
-                    row[head * d..(head + 1) * d].copy_from_slice(&data[base..base + d]);
-                }
-                self.write_one_row(id, layer, kv, pos, &row)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// Quantize (or copy) one (H, d) row into its block.
-    fn write_one_row(&mut self, id: SeqId, layer: usize, kv: usize, pos: usize, row: &[f32]) -> Result<()> {
+    /// Quantize (or copy) one (H, d) row into its block (decode append
+    /// path; the prefill path uses the batched writers above).
+    fn write_one_row(
+        &mut self,
+        id: SeqId,
+        layer: usize,
+        kv: usize,
+        pos: usize,
+        row: &[f32],
+    ) -> Result<()> {
         let (h, d, bs) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         let (block, in_row) = seq.tables[layer][kv].locate(pos, bs);
@@ -320,7 +469,22 @@ impl KvCacheManager {
     /// Gather one (layer, K|V) stream into contiguous `(H, max_seq, d)`
     /// staging (i8) — the decode artifact's cache input layout. Only the
     /// first `len` rows are written; the artifact masks the rest by `pos`.
+    /// Long sequences fan out across workers, one block per unit (all
+    /// (head, block) destination ranges are disjoint).
     pub fn gather_i8(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [i8]) -> Result<usize> {
+        self.gather_i8_with(id, layer, kv, dst, self.threads)
+    }
+
+    /// [`Self::gather_i8`] with an explicit worker cap — the engine's
+    /// decode waves pass 1 when the call already runs on a wave worker.
+    pub fn gather_i8_with(
+        &self,
+        id: SeqId,
+        layer: usize,
+        kv: usize,
+        dst: &mut [i8],
+        max_threads: usize,
+    ) -> Result<usize> {
         let (h, s, d, bs) =
             (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
         if dst.len() != h * s * d {
@@ -328,23 +492,44 @@ impl KvCacheManager {
         }
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         let table = &seq.tables[layer][kv];
-        for (bi, &block) in table.blocks().iter().enumerate() {
-            let rows_here = bs.min(seq.len.saturating_sub(bi * bs));
-            if rows_here == 0 {
-                break;
+        let len = seq.len;
+        let used = BlockTable::blocks_for(len, bs).min(table.blocks().len());
+        let blocks = &table.blocks()[..used];
+        let threads = self.threads_capped(len * h * d, max_threads.min(self.threads));
+        let dstp = SendPtr::new(dst.as_mut_ptr());
+        parallel::parallel_chunks(used, 1, threads, |lo, hi| {
+            for bi in lo..hi {
+                let rows_here = bs.min(len.saturating_sub(bi * bs));
+                let blk = self.pool.block_i8(blocks[bi]);
+                for head in 0..h {
+                    let src = &blk[head * bs * d..(head * bs + rows_here) * d];
+                    let doff = head * s * d + bi * bs * d;
+                    // SAFETY: (head, block) ranges are disjoint across
+                    // workers and in bounds of dst (checked above).
+                    let dslice =
+                        unsafe { std::slice::from_raw_parts_mut(dstp.add(doff), rows_here * d) };
+                    dslice.copy_from_slice(src);
+                }
             }
-            let blk = self.pool.block_i8(block);
-            for head in 0..h {
-                let src = &blk[head * bs * d..(head * bs + rows_here) * d];
-                let doff = head * s * d + bi * bs * d;
-                dst[doff..doff + rows_here * d].copy_from_slice(src);
-            }
-        }
-        Ok(seq.len)
+        });
+        Ok(len)
     }
 
     /// FP32 variant of [`Self::gather_i8`].
     pub fn gather_f32(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [f32]) -> Result<usize> {
+        self.gather_f32_with(id, layer, kv, dst, self.threads)
+    }
+
+    /// [`Self::gather_f32`] with an explicit worker cap (see
+    /// [`Self::gather_i8_with`]).
+    pub fn gather_f32_with(
+        &self,
+        id: SeqId,
+        layer: usize,
+        kv: usize,
+        dst: &mut [f32],
+        max_threads: usize,
+    ) -> Result<usize> {
         let (h, s, d, bs) =
             (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
         if dst.len() != h * s * d {
@@ -352,19 +537,27 @@ impl KvCacheManager {
         }
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         let table = &seq.tables[layer][kv];
-        for (bi, &block) in table.blocks().iter().enumerate() {
-            let rows_here = bs.min(seq.len.saturating_sub(bi * bs));
-            if rows_here == 0 {
-                break;
+        let len = seq.len;
+        let used = BlockTable::blocks_for(len, bs).min(table.blocks().len());
+        let blocks = &table.blocks()[..used];
+        let threads = self.threads_capped(len * h * d, max_threads.min(self.threads));
+        let dstp = SendPtr::new(dst.as_mut_ptr());
+        parallel::parallel_chunks(used, 1, threads, |lo, hi| {
+            for bi in lo..hi {
+                let rows_here = bs.min(len.saturating_sub(bi * bs));
+                let blk = self.pool.block_f32(blocks[bi]);
+                for head in 0..h {
+                    let src = &blk[head * bs * d..(head * bs + rows_here) * d];
+                    let doff = head * s * d + bi * bs * d;
+                    // SAFETY: (head, block) ranges are disjoint across
+                    // workers and in bounds of dst (checked above).
+                    let dslice =
+                        unsafe { std::slice::from_raw_parts_mut(dstp.add(doff), rows_here * d) };
+                    dslice.copy_from_slice(src);
+                }
             }
-            let blk = self.pool.block_f32(block);
-            for head in 0..h {
-                let src = &blk[head * bs * d..(head * bs + rows_here) * d];
-                let doff = head * s * d + bi * bs * d;
-                dst[doff..doff + rows_here * d].copy_from_slice(src);
-            }
-        }
-        Ok(seq.len)
+        });
+        Ok(len)
     }
 }
 
@@ -575,6 +768,53 @@ mod tests {
         m.free(a);
         m.free(b);
         assert_eq!(m.free_blocks(), c.num_blocks, "all blocks returned");
+    }
+
+    #[test]
+    fn parallel_paths_bit_identical_to_serial() {
+        // Prefill + gather through the parallel runtime must store and
+        // return exactly the bytes the serial path does.
+        for precision in [Precision::Int8, Precision::Fp32] {
+            let c = cfg(precision);
+            let len = 23; // crosses block boundaries, partial tail block
+            let (k, v) = prefill_tensors(&c, len, 42);
+
+            let mut serial = KvCacheManager::new(c);
+            let sid = serial.new_sequence();
+            serial.set_prefill(sid, &k, &v, len).unwrap();
+
+            let mut par = KvCacheManager::new(c);
+            par.set_parallelism(8);
+            par.set_parallel_threshold(0); // force fan-out on small input
+            let pid = par.new_sequence();
+            par.set_prefill(pid, &k, &v, len).unwrap();
+
+            let n = c.heads * c.max_seq * c.head_dim;
+            for layer in 0..c.layers {
+                for kv in 0..2 {
+                    assert_eq!(
+                        serial.scales(sid, layer, kv).unwrap(),
+                        par.scales(pid, layer, kv).unwrap(),
+                        "scales diverged at layer {layer} kv {kv}"
+                    );
+                    if precision == Precision::Int8 {
+                        let mut a = vec![0i8; n];
+                        let mut b = vec![0i8; n];
+                        serial.gather_i8(sid, layer, kv, &mut a).unwrap();
+                        par.gather_i8(pid, layer, kv, &mut b).unwrap();
+                        assert_eq!(a, b, "i8 payload diverged at layer {layer} kv {kv}");
+                    } else {
+                        let mut a = vec![0f32; n];
+                        let mut b = vec![0f32; n];
+                        serial.gather_f32(sid, layer, kv, &mut a).unwrap();
+                        par.gather_f32(pid, layer, kv, &mut b).unwrap();
+                        let bits =
+                            |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                        assert_eq!(bits(&a), bits(&b), "f32 payload diverged");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -178,6 +178,26 @@ impl BlockPool {
         unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut f32, raw.len() / 4) }
     }
 
+    /// Raw i8 payload pointers for a set of blocks, all derived from one
+    /// mutable borrow of the storage (clean provenance for parallel
+    /// writers). Callers guarantee the ids are distinct and own the
+    /// disjointness of concurrent writes.
+    pub fn block_i8_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut i8> {
+        assert_eq!(self.precision, Precision::Int8);
+        let base = self.storage.as_mut_ptr() as *mut i8;
+        // SAFETY: every id indexes a whole block inside `storage`.
+        ids.iter().map(|&id| unsafe { base.add(id as usize * self.block_bytes) }).collect()
+    }
+
+    /// FP32 variant of [`Self::block_i8_ptrs`].
+    pub fn block_f32_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut f32> {
+        assert_eq!(self.precision, Precision::Fp32);
+        let base = self.storage.as_mut_ptr() as *mut f32;
+        // SAFETY: every id indexes a whole block inside `storage`;
+        // block_bytes is a multiple of 4 for Fp32 pools.
+        ids.iter().map(|&id| unsafe { base.add(id as usize * self.block_bytes / 4) }).collect()
+    }
+
     /// Element offset of (head, row) within a block (precision-agnostic,
     /// in elements not bytes).
     pub fn slot(&self, head: usize, row: usize) -> usize {

@@ -17,18 +17,23 @@
 //! * [`model`] — token-level LM runner (specs, synthetic weights, byte
 //!   tokenizer, generation loop) over the AOT artifacts.
 //! * [`server`] — std-only HTTP/1.1 front end.
+//! * [`parallel`] — the shared thread-pool runtime: one `parallelism`
+//!   knob (0 = auto, `KVQ_THREADS` override) feeding the parallel
+//!   quantize/dequantize/gather/prefill hot paths; bit-deterministic at
+//!   any worker count.
 //! * [`bench`] — workload generators and the harness that regenerates
 //!   every table and figure in the paper.
 //! * [`config`] — typed configuration system (JSON + CLI overrides).
-//! * [`util`] — from-scratch substrates (JSON, CLI args, RNG, thread
-//!   pool, stats, logging, property testing) — the offline environment
-//!   provides no crates beyond `xla`/`anyhow` (DESIGN.md §3).
+//! * [`util`] — from-scratch substrates (JSON, CLI args, RNG, stats,
+//!   logging, property testing) — the offline environment provides no
+//!   crates beyond `xla`/`anyhow` (DESIGN.md §3).
 
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod kvcache;
 pub mod model;
+pub mod parallel;
 pub mod quant;
 pub mod runtime;
 pub mod server;

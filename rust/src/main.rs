@@ -60,6 +60,7 @@ COMMANDS:
   serve      start the HTTP server
              --model kvq-3m|kvq-25m --precision int8|fp32 --port 8080
              --backend pjrt|cpu --decode-kernel plain|pallas
+             --threads N (0 = auto; parallel quantization runtime)
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -82,7 +83,9 @@ fn build_serve_config(args: &Args) -> Result<ServeConfig> {
 
 /// Spawn an engine per the config (factory closures own the thread-local
 /// PJRT state).
-fn spawn_engine(cfg: &ServeConfig) -> (kvq::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
+fn spawn_engine(
+    cfg: &ServeConfig,
+) -> (kvq::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
     let ecfg = cfg.engine_config();
     match cfg.backend {
         Backend::Pjrt => {
@@ -131,14 +134,25 @@ fn serve(args: Args) -> Result<()> {
     let (handle, _join) = spawn_engine(&cfg);
     let mut router = Router::new(RoutePolicy::RoundRobin);
     router.add_engine(cfg.precision.name(), handle.clone());
-    let service = Arc::new(KvqService::new(Arc::new(router)));
+    let threads = kvq::parallel::resolve(cfg.parallelism);
     let server = HttpServer::bind(cfg.port)?;
+    // Build the /config payload after bind so it reports the actually
+    // bound port (cfg.port may be 0 = ephemeral).
+    let info = kvq::server::api::config_response(
+        &cfg.model,
+        cfg.precision.name(),
+        if cfg.backend == Backend::Pjrt { "pjrt" } else { "cpu" },
+        threads,
+        server.local_port(),
+    );
+    let service = Arc::new(KvqService::with_info(Arc::new(router), info));
     println!(
-        "kvq serving on http://127.0.0.1:{} (model={} precision={} backend={:?})",
+        "kvq serving on http://127.0.0.1:{} (model={} precision={} backend={:?} threads={})",
         server.local_port(),
         cfg.model,
         cfg.precision.name(),
-        cfg.backend
+        cfg.backend,
+        threads
     );
     let svc = service.clone();
     server.serve(move |req| svc.handle(req));

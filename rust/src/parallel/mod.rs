@@ -1,0 +1,264 @@
+//! Shared parallel runtime — the thread-pool substrate every
+//! quantization-family hot path routes through (rayon substitute, built on
+//! `std::thread::scope`).
+//!
+//! Promoted from `util::pool` so the quant, kvcache, coordinator, server,
+//! and bench layers share one parallelism knob instead of each inventing
+//! its own:
+//!
+//! * knob value `0` = auto: `std::thread::available_parallelism()`,
+//!   overridable via the `KVQ_THREADS` env var — see [`resolve`];
+//! * knob value `n >= 1` = exactly `n` workers.
+//!
+//! Every entry point here is **bit-deterministic**: workers own disjoint
+//! output regions and no floating-point reduction order depends on the
+//! thread count, so the cross-variant consistency tests
+//! (`all_variants_identical`, `tests/parallel_consistency.rs`) can assert
+//! exact equality between serial and parallel paths at any worker count.
+//! On a 1-core testbed everything degrades gracefully to sequential
+//! execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default (available parallelism,
+/// overridable via `KVQ_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("KVQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a configuration knob: `0` means auto ([`default_threads`]),
+/// any other value is clamped to at least one worker.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    }
+}
+
+/// The thread sweep the benches report: {1, 2, N_phys}, deduplicated.
+pub fn bench_thread_sweep() -> Vec<usize> {
+    let mut sweep = vec![1, 2, default_threads()];
+    sweep.sort_unstable();
+    sweep.dedup();
+    sweep
+}
+
+/// Run `f(chunk_start, chunk_end)` in parallel over `0..n` split into
+/// contiguous chunks, one logical chunk stream per worker (work-stealing
+/// via an atomic cursor, chunk size `chunk`).
+pub fn parallel_chunks<F>(n: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || n <= chunk {
+        let mut i = 0;
+        while i < n {
+            f(i, (i + chunk).min(n));
+            i += chunk;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start, (start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// Parallel map over a slice of items producing a Vec of results in order.
+/// Static partition: each worker owns a contiguous (items, out) pair.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Default + Clone,
+    F: Fn(&T) -> R + Sync + Send,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    let mut out = vec![R::default(); n];
+    if threads <= 1 {
+        for (o, it) in out.iter_mut().zip(items) {
+            *o = f(it);
+        }
+        return out;
+    }
+    let per = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ichunk, ochunk) in items.chunks(per).zip(out.chunks_mut(per)) {
+            s.spawn(move || {
+                for (o, it) in ochunk.iter_mut().zip(ichunk) {
+                    *o = f(it);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Parallel zip: `f(i, &items[i], &mut outs[i])` across workers, static
+/// partition. The coordinator's decode waves use this to gather several
+/// sequences' caches into per-sequence staging slots concurrently.
+pub fn parallel_zip<T, U, F>(items: &[T], outs: &mut [U], threads: usize, f: F)
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T, &mut U) + Sync,
+{
+    assert_eq!(items.len(), outs.len(), "parallel_zip length mismatch");
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        for (i, (it, o)) in items.iter().zip(outs.iter_mut()).enumerate() {
+            f(i, it, o);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ci, (ichunk, ochunk)) in items.chunks(per).zip(outs.chunks_mut(per)).enumerate() {
+            s.spawn(move || {
+                for (j, (it, o)) in ichunk.iter().zip(ochunk.iter_mut()).enumerate() {
+                    f(ci * per + j, it, o);
+                }
+            });
+        }
+    });
+}
+
+/// Raw-pointer wrapper so workers can write **disjoint** regions of one
+/// output buffer from a `Fn` closure. Keeping the pointer behind a method
+/// makes closures capture the (Send+Sync) wrapper, not the bare pointer.
+///
+/// Safety contract: callers must guarantee that concurrently-derived
+/// regions never overlap and stay in bounds of the original allocation.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(ptr: *mut T) -> SendPtr<T> {
+        SendPtr(ptr)
+    }
+
+    /// Offset pointer. Callers build slices with `from_raw_parts_mut` and
+    /// own the disjointness proof at the call site.
+    ///
+    /// # Safety
+    /// `off` must be in bounds of the allocation behind the wrapped
+    /// pointer.
+    pub unsafe fn add(self, off: usize) -> *mut T {
+        self.0.add(off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(n, 64, 4, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_chunks(100, 7, 1, |s, e| {
+            sum.fetch_add((s..e).map(|i| i as u64).sum(), Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        parallel_chunks(0, 16, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, 4, |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_zip_indices_and_outputs() {
+        let items: Vec<usize> = (0..57).collect();
+        for threads in [1, 2, 8] {
+            let mut outs = vec![0usize; items.len()];
+            parallel_zip(&items, &mut outs, threads, |i, &it, o| {
+                assert_eq!(i, it);
+                *o = it * 3 + 1;
+            });
+            assert_eq!(outs, (0..57).map(|x| x * 3 + 1).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn parallel_zip_rejects_mismatched_lengths() {
+        let mut outs = vec![0u8; 2];
+        parallel_zip(&[1u8; 3], &mut outs, 2, |_, _, _| {});
+    }
+
+    #[test]
+    fn default_threads_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn resolve_zero_is_auto() {
+        assert_eq!(resolve(0), default_threads());
+        assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn sweep_contains_one_and_is_sorted_unique() {
+        let s = bench_thread_sweep();
+        assert!(s.contains(&1));
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(s, sorted);
+    }
+
+    #[test]
+    fn send_ptr_disjoint_writes() {
+        let mut buf = vec![0u32; 1024];
+        let p = SendPtr::new(buf.as_mut_ptr());
+        parallel_chunks(1024, 64, 4, |lo, hi| {
+            // SAFETY: [lo, hi) chunks are disjoint across workers.
+            let s = unsafe { std::slice::from_raw_parts_mut(p.add(lo), hi - lo) };
+            for (k, v) in s.iter_mut().enumerate() {
+                *v = (lo + k) as u32;
+            }
+        });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as u32));
+    }
+}

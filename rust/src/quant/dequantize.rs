@@ -1,6 +1,8 @@
 //! Dequantization — eq. (8): `x̂ = x_q · s_d` (paper Listing 4).
 
 use super::matrix::{Fp32Matrix, Int8Matrix};
+use super::quantize::ROW_CHUNK;
+use crate::parallel::{self, SendPtr};
 
 /// Dequantize into a preallocated matrix (hot-path form).
 pub fn dequantize_into(q: &Int8Matrix, out: &mut Fp32Matrix) {
@@ -28,6 +30,24 @@ pub fn dequantize_row_into(row: &[i8], scales: &[f32], out: &mut [f32]) {
     for ((o, &v), &s) in out.iter_mut().zip(row).zip(scales) {
         *o = v as f32 * s;
     }
+}
+
+/// Multi-threaded dequantization, row-partitioned through the shared
+/// [`crate::parallel`] runtime. Bit-identical to [`dequantize_into`] at
+/// any thread count (same per-element multiply; workers own disjoint
+/// rows).
+pub fn dequantize_parallel(q: &Int8Matrix, out: &mut Fp32Matrix, threads: usize) {
+    assert_eq!((out.rows, out.cols), (q.rows, q.cols), "out shape mismatch");
+    let cols = q.cols;
+    let out_ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel::parallel_chunks(q.rows, ROW_CHUNK, threads, |lo, hi| {
+        for t in lo..hi {
+            let src = &q.data[t * cols..(t + 1) * cols];
+            // SAFETY: row ranges [lo, hi) are disjoint across workers.
+            let dst = unsafe { std::slice::from_raw_parts_mut(out_ptr.add(t * cols), cols) };
+            dequantize_row_into(src, &q.scales, dst);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -81,6 +101,23 @@ mod tests {
         let q = quantize_fused(&k);
         let r = dequantize(&q);
         assert!((r.at(0, 0) - 0.75).abs() < 1e-7);
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        // The cross-variant consistency contract extended to the parallel
+        // path: exact equality across the CI thread sweep {1, 2, 8}.
+        let k = Fp32Matrix::random_normal(97, 53, 1.0, 21); // odd shape
+        let q = quantize_fused(&k);
+        let serial = dequantize(&q);
+        for threads in [1, 2, 8] {
+            let mut par = Fp32Matrix::zeros(q.rows, q.cols);
+            dequantize_parallel(&q, &mut par, threads);
+            assert!(
+                par.data.iter().zip(&serial.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "dequantize_parallel x{threads} diverged"
+            );
+        }
     }
 
     #[test]

@@ -164,6 +164,78 @@ mod tests {
     }
 
     #[test]
+    fn single_column_matrix_packs_one_nibble_per_row() {
+        // cols = 1: each row occupies one byte with only the low nibble
+        // used; negative values must sign-extend correctly.
+        let k = Fp32Matrix::from_vec(3, 1, vec![1.0, -1.0, 0.5]);
+        let q = quantize4(&k);
+        assert_eq!(Int4Matrix::bytes_per_row(1), 1);
+        assert_eq!(q.data.len(), 3);
+        assert_eq!(q.at(0, 0), 7);
+        assert_eq!(q.at(1, 0), -7);
+        assert_eq!(q.at(2, 0), 4, "0.5/(1/7) = 3.5 rounds half-away to 4");
+        // The unused high nibble of each byte stays clear.
+        assert!(q.data.iter().all(|&b| b >> 4 == 0), "padding nibble written");
+    }
+
+    #[test]
+    fn odd_tail_nibble_isolated_from_neighbors() {
+        // cols = 7: the last (odd) nibble of each row shares no byte with
+        // the next row; writing extreme values at the tail must not bleed.
+        let mut m = Int4Matrix::zeros(2, 7);
+        m.set(0, 6, -7);
+        m.set(1, 0, 7);
+        assert_eq!(m.at(0, 6), -7);
+        assert_eq!(m.at(1, 0), 7);
+        // Everything else still zero.
+        for t in 0..2 {
+            for d in 0..7 {
+                if (t, d) != (0, 6) && (t, d) != (1, 0) {
+                    assert_eq!(m.at(t, d), 0, "bleed at ({t},{d})");
+                }
+            }
+        }
+        // Overwriting a low nibble preserves its high-nibble neighbor.
+        m.set(0, 5, 3);
+        assert_eq!(m.at(0, 6), -7);
+        assert_eq!(m.at(0, 5), 3);
+    }
+
+    #[test]
+    fn exhaustive_pack_unpack_odd_widths() {
+        // Every (row, col) position round-trips every representable value
+        // for a sweep of odd column counts.
+        for cols in [1usize, 3, 5, 9] {
+            let mut m = Int4Matrix::zeros(2, cols);
+            for t in 0..2 {
+                for d in 0..cols {
+                    for v in -7i8..=7 {
+                        m.set(t, d, v);
+                        assert_eq!(m.at(t, d), v, "cols={cols} ({t},{d}) value {v}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_width_quantize_matches_per_element_reference() {
+        let k = Fp32Matrix::random_uniform(9, 7, -2.0, 2.0, 0x0DD);
+        let q = quantize4(&k);
+        let s = compute_scales4(&k);
+        for t in 0..k.rows {
+            for d in 0..k.cols {
+                let expect = if s[d] <= 0.0 {
+                    0
+                } else {
+                    (k.at(t, d) / s[d]).round().clamp(-Q4MAX, Q4MAX) as i8
+                };
+                assert_eq!(q.at(t, d), expect, "({t},{d})");
+            }
+        }
+    }
+
+    #[test]
     fn zeros_quantize_to_zeros() {
         let k = Fp32Matrix::zeros(4, 4);
         let q = quantize4(&k);

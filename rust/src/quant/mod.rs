@@ -29,10 +29,10 @@ pub mod quantize;
 pub mod scales;
 pub mod tensorwise;
 
-pub use dequantize::{dequantize, dequantize_into};
+pub use dequantize::{dequantize, dequantize_into, dequantize_parallel};
 pub use error::{attention_score_error, l2_error, max_abs_error};
 pub use matrix::{Fp32Matrix, Int8Matrix};
-pub use quantize::{quantize, quantize_fused, quantize_row_into};
+pub use quantize::{quantize, quantize_fused, quantize_parallel, quantize_row_into};
 pub use scales::compute_scales;
 
 /// The four kernel-optimization strategies from the paper, §5.3.

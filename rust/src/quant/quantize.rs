@@ -19,16 +19,24 @@
 use super::matrix::{Fp32Matrix, Int8Matrix};
 use super::scales;
 use super::Variant;
-use crate::util::pool;
+use crate::parallel::{self, SendPtr};
 use crate::QMAX;
 
 /// Quantize one value: round-half-away (f32::round), clamp, zero-scale → 0.
+///
+/// Non-finite handling is pinned (see `nan_inputs_quantize_to_zero`):
+/// a NaN value — or a NaN scale, for which the `<= 0.0` guard is false —
+/// produces a NaN quotient, which maps to 0 rather than flowing through
+/// `clamp` into an unspecified-looking `as` cast. ±∞ saturates to ±127.
 #[inline(always)]
 pub fn quantize_one(val: f32, scale: f32) -> i8 {
     if scale <= 0.0 {
         return 0;
     }
     let q = (val / scale).round();
+    if q.is_nan() {
+        return 0;
+    }
     q.clamp(-QMAX, QMAX) as i8
 }
 
@@ -143,35 +151,27 @@ pub fn quantize_row_into(row: &[f32], scales: &[f32], out: &mut [i8]) {
     }
 }
 
-/// Multi-threaded vectorized quantization, row-partitioned.
+/// Row chunk granularity for the parallel quantize/dequantize paths.
+pub(crate) const ROW_CHUNK: usize = 256;
+
+/// Multi-threaded vectorized quantization, row-partitioned through the
+/// shared [`crate::parallel`] runtime. Bit-identical to the serial
+/// variants at any thread count (each element is quantized by the same
+/// `quantize_one` call; workers own disjoint rows).
 pub fn quantize_parallel(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix, threads: usize) {
     check_shapes(k, scales, out);
     let cols = k.cols;
-    // Partition output rows across workers; each worker owns disjoint rows.
-    let rows: Vec<usize> = (0..k.rows).collect();
-    let out_ptr = SyncPtr(out.data.as_mut_ptr());
-    pool::parallel_chunks(rows.len(), 256, threads, |lo, hi| {
-        for &t in &rows[lo..hi] {
+    let out_ptr = SendPtr::new(out.data.as_mut_ptr());
+    parallel::parallel_chunks(k.rows, ROW_CHUNK, threads, |lo, hi| {
+        for t in lo..hi {
             let row_in = &k.data[t * cols..(t + 1) * cols];
-            // SAFETY: each row index appears in exactly one chunk, so the
-            // mutable row slices are disjoint across workers.
-            let row_out = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.at(t * cols), cols)
-            };
+            // SAFETY: row ranges [lo, hi) are disjoint across workers, so
+            // the mutable row slices never overlap.
+            let row_out = unsafe { std::slice::from_raw_parts_mut(out_ptr.add(t * cols), cols) };
             quantize_row_into(row_in, scales, row_out);
         }
     });
     out.scales.copy_from_slice(scales);
-}
-
-struct SyncPtr(*mut i8);
-unsafe impl Sync for SyncPtr {}
-impl SyncPtr {
-    /// Offset accessor; keeping the raw pointer behind a method makes the
-    /// closure capture the (Sync) wrapper struct, not the bare pointer.
-    fn at(&self, off: usize) -> *mut i8 {
-        unsafe { self.0.add(off) }
-    }
 }
 
 /// Dispatch by [`Variant`].
@@ -240,8 +240,43 @@ mod tests {
     }
 
     #[test]
+    fn nan_inputs_quantize_to_zero() {
+        // Pinned behavior (latent-bug audit): NaN must not flow through
+        // round().clamp() into the final cast — it maps to 0, on every
+        // variant, at every thread count.
+        assert_eq!(quantize_one(f32::NAN, 1.0), 0);
+        assert_eq!(quantize_one(-f32::NAN, 1.0), 0);
+        assert_eq!(quantize_one(1.0, f32::NAN), 0);
+        assert_eq!(quantize_one(f32::NAN, f32::NAN), 0);
+        // Infinities still saturate.
+        assert_eq!(quantize_one(f32::INFINITY, 2.0), 127);
+        assert_eq!(quantize_one(f32::NEG_INFINITY, 2.0), -127);
+
+        let mut k = Fp32Matrix::random_uniform(33, 9, -1.0, 1.0, 77);
+        k.data[5] = f32::NAN;
+        k.data[40] = f32::NAN;
+        let s = scales::compute_scales(&k);
+        assert!(s.iter().all(|v| v.is_finite()), "NaN must not poison scales");
+        let mut base = Int8Matrix::zeros(k.rows, k.cols);
+        quantize_naive(&k, &s, &mut base);
+        assert_eq!(base.data[5], 0);
+        assert_eq!(base.data[40], 0);
+        for v in Variant::ALL {
+            let mut out = Int8Matrix::zeros(k.rows, k.cols);
+            quantize_variant(v, &k, &s, &mut out);
+            assert_eq!(out.data, base.data, "variant {v:?} diverged on NaN input");
+        }
+        for threads in [1, 2, 8] {
+            let mut par = Int8Matrix::zeros(k.rows, k.cols);
+            quantize_parallel(&k, &s, &mut par, threads);
+            assert_eq!(par.data, base.data, "parallel x{threads} diverged on NaN input");
+        }
+    }
+
+    #[test]
     fn all_variants_identical() {
-        // Paper §7.5 cross-kernel consistency, plus the parallel variant.
+        // Paper §7.5 cross-kernel consistency, plus the parallel variant
+        // across the CI thread sweep {1, 2, 8}.
         let (k, s) = sample(5);
         let mut base = Int8Matrix::zeros(k.rows, k.cols);
         quantize_naive(&k, &s, &mut base);
@@ -250,9 +285,11 @@ mod tests {
             quantize_variant(v, &k, &s, &mut out);
             assert_eq!(out.data, base.data, "variant {:?}", v);
         }
-        let mut par = Int8Matrix::zeros(k.rows, k.cols);
-        quantize_parallel(&k, &s, &mut par, 4);
-        assert_eq!(par.data, base.data);
+        for threads in [1, 2, 8] {
+            let mut par = Int8Matrix::zeros(k.rows, k.cols);
+            quantize_parallel(&k, &s, &mut par, threads);
+            assert_eq!(par.data, base.data, "parallel x{threads} diverged");
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! maintaining all D running maxima) that the optimized quantizers use.
 
 use super::matrix::Fp32Matrix;
-use crate::util::pool;
+use crate::parallel as pool;
 use crate::QMAX;
 
 /// Paper Listing 2, verbatim structure: column-outer, row-inner (stride-D

@@ -62,6 +62,24 @@ pub fn error_response(msg: &str) -> Json {
     obj([("error", msg.into())])
 }
 
+/// `GET /config` body: the effective serving configuration, including the
+/// resolved `parallelism` worker count of the quantization runtime.
+pub fn config_response(
+    model: &str,
+    precision: &str,
+    backend: &str,
+    parallelism: usize,
+    port: u16,
+) -> Json {
+    obj([
+        ("model", model.into()),
+        ("precision", precision.into()),
+        ("backend", backend.into()),
+        ("parallelism", parallelism.into()),
+        ("port", (port as usize).into()),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +110,14 @@ mod tests {
     fn rejects_missing_prompt() {
         assert!(GenerateRequest::parse(r#"{"max_new_tokens":4}"#).is_err());
         assert!(GenerateRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn config_response_shape() {
+        let j = config_response("kvq-3m", "int8", "cpu", 4, 8080);
+        assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
+        assert_eq!(j.get("parallelism").as_usize(), Some(4));
+        assert_eq!(j.get("port").as_usize(), Some(8080));
     }
 
     #[test]

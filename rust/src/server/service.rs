@@ -12,11 +12,19 @@ use std::sync::Arc;
 pub struct KvqService {
     pub router: Arc<Router>,
     pub tokenizer: ByteTokenizer,
+    /// Effective serving configuration served at `GET /config`
+    /// (see [`crate::server::api::config_response`]).
+    pub info: Json,
 }
 
 impl KvqService {
     pub fn new(router: Arc<Router>) -> KvqService {
-        KvqService { router, tokenizer: ByteTokenizer::new() }
+        KvqService { router, tokenizer: ByteTokenizer::new(), info: Json::Null }
+    }
+
+    /// Like [`KvqService::new`], with a `/config` payload.
+    pub fn with_info(router: Arc<Router>, info: Json) -> KvqService {
+        KvqService { router, tokenizer: ByteTokenizer::new(), info }
     }
 
     /// Top-level request dispatch.
@@ -24,6 +32,7 @@ impl KvqService {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/health") => HttpResponse::json(200, &obj([("status", "ok".into())])),
             ("GET", "/metrics") => self.metrics(),
+            ("GET", "/config") => HttpResponse::json(200, &self.info),
             ("POST", "/generate") => self.generate(&req),
             ("GET", _) | ("POST", _) => {
                 HttpResponse::json(404, &error_response("unknown endpoint"))
@@ -147,6 +156,18 @@ mod tests {
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("finish_reason").as_str(), Some("length"));
         assert_eq!(j.get("tokens").as_arr().unwrap().len(), 3);
+        h.drain();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn config_endpoint_serves_info() {
+        let (mut svc, h, join) = service();
+        svc.info = crate::server::api::config_response("test-tiny", "int8", "cpu", 2, 0);
+        let resp = get(&svc, "/config");
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("parallelism").as_usize(), Some(2));
         h.drain();
         join.join().unwrap();
     }

@@ -4,12 +4,14 @@
 //! (no serde/clap/rand/rayon/tokio/criterion/proptest), so this module
 //! implements the small, well-understood subset of each that the rest of
 //! the stack needs. Each submodule is independently unit-tested.
+//!
+//! The thread-pool substrate (formerly `util::pool`) was promoted to
+//! [`crate::parallel`].
 
 pub mod args;
 pub mod harness;
 pub mod json;
 pub mod log;
-pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

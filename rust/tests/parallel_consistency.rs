@@ -1,0 +1,206 @@
+//! Parallelism never changes bits — the contract of the shared parallel
+//! runtime (`kvq::parallel`), asserted end-to-end:
+//!
+//! * quantize/dequantize/scales: parallel == serial, exactly, across the
+//!   thread sweep {1, 2, 8} (including NaN-bearing inputs);
+//! * KvCacheManager: parallel prefill + gather store/return exactly the
+//!   serial bytes, with the fan-out threshold forced to 0 so the parallel
+//!   code path actually runs on test-sized inputs;
+//! * Engine: greedy generations are identical at parallelism 1 and 8
+//!   (decode waves reorder gathers, never outputs).
+
+use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::request::collect_response;
+use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+use kvq::kvcache::Precision;
+use kvq::model::runner::CpuBackend;
+use kvq::model::sample::SamplingParams;
+use kvq::model::weights::Weights;
+use kvq::model::ModelSpec;
+use kvq::quant::{self, Fp32Matrix, Int8Matrix};
+
+const SWEEP: [usize; 3] = [1, 2, 8];
+
+#[test]
+fn quantize_parallel_matches_serial_across_threads() {
+    // Odd shapes exercise remainder rows/chunks.
+    for (rows, cols, seed) in [(1, 1, 1u64), (7, 5, 2), (97, 53, 3), (513, 129, 4)] {
+        let k = Fp32Matrix::random_normal(rows, cols, 1.0, seed);
+        let s = quant::compute_scales(&k);
+        let mut base = Int8Matrix::zeros(rows, cols);
+        quant::quantize::quantize_naive(&k, &s, &mut base);
+        for threads in SWEEP {
+            let mut par = Int8Matrix::zeros(rows, cols);
+            quant::quantize_parallel(&k, &s, &mut par, threads);
+            assert_eq!(par.data, base.data, "{rows}x{cols} x{threads}");
+            assert_eq!(par.scales, base.scales);
+        }
+    }
+}
+
+#[test]
+fn dequantize_parallel_matches_serial_across_threads() {
+    for (rows, cols, seed) in [(1, 3, 5u64), (64, 16, 6), (301, 41, 7)] {
+        let k = Fp32Matrix::random_uniform(rows, cols, -2.0, 2.0, seed);
+        let q = quant::quantize_fused(&k);
+        let serial = quant::dequantize(&q);
+        for threads in SWEEP {
+            let mut par = Fp32Matrix::zeros(rows, cols);
+            quant::dequantize_parallel(&q, &mut par, threads);
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&par.data), bits(&serial.data), "{rows}x{cols} x{threads}");
+        }
+    }
+}
+
+#[test]
+fn scales_parallel_matches_serial_across_threads() {
+    let k = Fp32Matrix::random_normal(257, 63, 1.0, 8);
+    let mut serial = vec![0.0f32; k.cols];
+    quant::scales::compute_scales_rowsweep(&k, &mut serial);
+    for threads in SWEEP {
+        let mut par = vec![0.0f32; k.cols];
+        quant::scales::compute_scales_parallel(&k, &mut par, threads);
+        assert_eq!(par, serial, "x{threads}");
+    }
+}
+
+#[test]
+fn nan_inputs_identical_across_all_paths() {
+    // The pinned NaN→0 behavior must hold on the parallel paths too.
+    let mut k = Fp32Matrix::random_uniform(65, 19, -1.0, 1.0, 9);
+    k.data[0] = f32::NAN;
+    k.data[700] = f32::NAN;
+    let s = quant::compute_scales(&k);
+    assert!(s.iter().all(|v| v.is_finite()));
+    let mut base = Int8Matrix::zeros(k.rows, k.cols);
+    quant::quantize::quantize_naive(&k, &s, &mut base);
+    assert_eq!(base.data[0], 0);
+    assert_eq!(base.data[700], 0);
+    for threads in SWEEP {
+        let mut par = Int8Matrix::zeros(k.rows, k.cols);
+        quant::quantize_parallel(&k, &s, &mut par, threads);
+        assert_eq!(par.data, base.data, "x{threads}");
+    }
+}
+
+fn cache_cfg(precision: Precision) -> CacheConfig {
+    CacheConfig {
+        layers: 3,
+        heads: 2,
+        head_dim: 8,
+        max_seq: 48,
+        block_size: 4,
+        num_blocks: 512,
+        precision,
+        scale_margin: 1.0,
+    }
+}
+
+fn prefill_tensors(c: &CacheConfig, len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let n = c.layers * c.heads * c.max_seq * c.head_dim;
+    let mut rng = kvq::util::rng::Rng::new(seed);
+    let mut k = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    for layer in 0..c.layers {
+        for head in 0..c.heads {
+            for t in 0..len {
+                for ch in 0..c.head_dim {
+                    let i = ((layer * c.heads + head) * c.max_seq + t) * c.head_dim + ch;
+                    k[i] = rng.uniform(-1.0, 1.0);
+                    v[i] = rng.uniform(-1.0, 1.0);
+                }
+            }
+        }
+    }
+    (k, v)
+}
+
+#[test]
+fn cache_manager_parallel_prefill_gather_identical() {
+    for precision in [Precision::Int8, Precision::Fp32] {
+        // Lengths covering: one block, partial tail, exact block multiple.
+        for len in [3usize, 17, 32] {
+            let c = cache_cfg(precision);
+            let (k, v) = prefill_tensors(&c, len, 0xC0FE ^ len as u64);
+
+            let mut serial = KvCacheManager::new(c);
+            let sid = serial.new_sequence();
+            serial.set_prefill(sid, &k, &v, len).unwrap();
+
+            for threads in SWEEP {
+                let mut par = KvCacheManager::new(c);
+                par.set_parallelism(threads);
+                par.set_parallel_threshold(0); // force fan-out at test size
+                let pid = par.new_sequence();
+                par.set_prefill(pid, &k, &v, len).unwrap();
+
+                let n = c.heads * c.max_seq * c.head_dim;
+                for layer in 0..c.layers {
+                    for kv in 0..2 {
+                        assert_eq!(
+                            serial.scales(sid, layer, kv).unwrap(),
+                            par.scales(pid, layer, kv).unwrap(),
+                            "scales len={len} x{threads} layer={layer} kv={kv}"
+                        );
+                        if precision == Precision::Int8 {
+                            let mut a = vec![0i8; n];
+                            let mut b = vec![0i8; n];
+                            serial.gather_i8(sid, layer, kv, &mut a).unwrap();
+                            par.gather_i8(pid, layer, kv, &mut b).unwrap();
+                            assert_eq!(a, b, "i8 len={len} x{threads} l={layer} kv={kv}");
+                        } else {
+                            let mut a = vec![0f32; n];
+                            let mut b = vec![0f32; n];
+                            serial.gather_f32(sid, layer, kv, &mut a).unwrap();
+                            par.gather_f32(pid, layer, kv, &mut b).unwrap();
+                            let bits =
+                                |x: &[f32]| x.iter().map(|y| y.to_bits()).collect::<Vec<_>>();
+                            assert_eq!(bits(&a), bits(&b), "f32 len={len} x{threads}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn cpu_factory() -> impl FnOnce() -> anyhow::Result<Box<dyn kvq::model::LmBackend>> + Send {
+    || {
+        let spec = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&spec, 7);
+        Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+    }
+}
+
+#[test]
+fn engine_generations_identical_across_parallelism() {
+    // Same prompts, greedy sampling: the token streams must match between
+    // a serial engine and one running decode waves with 8 workers.
+    let gen_tokens = |parallelism: usize| -> Vec<Vec<i32>> {
+        let cfg = EngineConfig {
+            precision: Precision::Int8,
+            parallelism,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(cfg, cpu_factory());
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", h.clone());
+        let mut streams = Vec::new();
+        for i in 0..5 {
+            let prompt = vec![i as i32 + 1, 7, 9, 2];
+            let (_, rx) = router.submit(prompt, 6, SamplingParams::default()).unwrap();
+            streams.push(rx);
+        }
+        let out: Vec<Vec<i32>> =
+            streams.iter().map(|rx| collect_response(rx).0).collect();
+        h.drain();
+        join.join().unwrap();
+        out
+    };
+    let serial = gen_tokens(1);
+    let parallel = gen_tokens(8);
+    assert_eq!(serial, parallel, "decode waves changed generated tokens");
+    assert!(serial.iter().all(|t| t.len() == 6));
+}

@@ -34,7 +34,9 @@ fn prop_roundtrip_error_bounded() {
 
 #[test]
 fn prop_all_variants_identical() {
-    // Paper §7.5 cross-kernel consistency, for arbitrary shapes/data.
+    // Paper §7.5 cross-kernel consistency, for arbitrary shapes/data —
+    // including the parallel quantize/dequantize paths across the thread
+    // sweep {1, 2, 8}.
     check("variant consistency", 200, |g| {
         let k = matrix_from(g);
         let scales = quant::compute_scales(&k);
@@ -45,9 +47,21 @@ fn prop_all_variants_identical() {
             quant::quantize::quantize_variant(v, &k, &scales, &mut out);
             ensure(out.data == base.data, format!("{v:?} diverged"))?;
         }
-        let mut par = Int8Matrix::zeros(k.rows, k.cols);
-        quant::quantize::quantize_parallel(&k, &scales, &mut par, 4);
-        ensure(par.data == base.data, "parallel diverged")?;
+        let rec = quant::dequantize(&base);
+        for threads in [1usize, 2, 8] {
+            let mut par = Int8Matrix::zeros(k.rows, k.cols);
+            quant::quantize_parallel(&k, &scales, &mut par, threads);
+            ensure(par.data == base.data, format!("parallel quantize x{threads} diverged"))?;
+            let mut prec = Fp32Matrix::zeros(k.rows, k.cols);
+            quant::dequantize_parallel(&base, &mut prec, threads);
+            ensure(
+                prec.data
+                    .iter()
+                    .zip(&rec.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                format!("parallel dequantize x{threads} diverged"),
+            )?;
+        }
         Ok(())
     });
 }

@@ -1,0 +1,226 @@
+//! Minimal offline substitute for the `anyhow` crate.
+//!
+//! Implements the subset the kvq stack uses: [`Error`] (context chain,
+//! `{:#}` alternate formatting), [`Result`], the [`Context`] extension
+//! trait on `Result` and `Option`, and the `anyhow!` / `bail!` macros.
+//! No downcasting, no backtraces.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error: a chain of context frames, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context frame (the `Context` trait calls this).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn full(&self) -> String {
+        self.chain.join(": ")
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` the full `a: b: c` chain.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.full())
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.full())
+    }
+}
+
+// Like real anyhow: Error deliberately does NOT implement std::error::Error,
+// which is what makes this blanket From legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Conversion into [`Error`] for both std errors and `Error` itself —
+/// the (sealed) trick that lets `.context()` apply to `anyhow::Result`
+/// as well as `Result<_, E: std::error::Error>`, like real anyhow.
+mod ext {
+    use super::{Error, StdError};
+
+    pub trait IntoError {
+        fn into_err(self) -> Error;
+    }
+
+    impl<E: StdError + Send + Sync + 'static> IntoError for E {
+        fn into_err(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_err(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_err().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_err().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(..))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// `if !cond { bail!(..) }`.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading x").unwrap_err();
+        assert_eq!(format!("{e}"), "reading x");
+        assert_eq!(format!("{e:#}"), "reading x: gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let r2: Result<()> = Err(anyhow!("deep"));
+        let e2 = r2.with_context(|| "mid").unwrap_err();
+        let e2 = Err::<(), _>(e2).context("top").unwrap_err();
+        assert_eq!(format!("{e2:#}"), "top: mid: deep");
+    }
+
+    #[test]
+    fn with_context_and_option() {
+        let e = None::<u32>.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "missing 7");
+        let ok = Some(3u32).context("unused").unwrap();
+        assert_eq!(ok, 3);
+    }
+
+    #[test]
+    fn macros() {
+        let x = 4;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 4");
+        fn f() -> Result<()> {
+            bail!("nope {}", 1)
+        }
+        assert_eq!(format!("{:#}", f().unwrap_err()), "nope 1");
+        fn g(ok: bool) -> Result<u8> {
+            ensure!(ok, "not ok");
+            Ok(1)
+        }
+        assert!(g(true).is_ok());
+        assert!(g(false).is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/ever")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}

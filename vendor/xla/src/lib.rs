@@ -1,0 +1,318 @@
+//! Offline API-compatible stub of the `xla_extension` bindings.
+//!
+//! Mirrors the exact call surface `kvq`'s runtime layer uses. Host-side
+//! types ([`Literal`], [`ArrayShape`], dtypes) are fully functional so
+//! literal round-trips and validation logic work; device-side operations
+//! ([`PjRtClient::cpu`], `compile`, `execute*`) return a descriptive
+//! [`Error`] — callers treat this exactly like a machine without libxla,
+//! and every PJRT-dependent test/bench in the repo already skips or
+//! degrades gracefully on that path.
+
+use std::fmt;
+
+/// Stub error type (message only).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} unavailable: built against the offline `xla` stub crate \
+         (vendor/xla); link the real xla_extension bindings for PJRT execution"
+    ))
+}
+
+/// XLA element types (subset + room for growth; non-exhaustive like the
+/// real bindings so downstream matches keep a wildcard arm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[non_exhaustive]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host-native scalar types usable with buffers/literals.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+impl NativeType for i8 {
+    const TY: ElementType = ElementType::S8;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+}
+
+/// Shape of an array literal: element type + dimensions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Array { shape: ArrayShape, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: fully functional in the stub.
+#[derive(Debug, Clone)]
+pub struct Literal(Repr);
+
+impl Literal {
+    /// Build an array literal from raw bytes (copies once).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.size() {
+            return Err(Error(format!(
+                "literal byte size {} != {} elements x {} bytes",
+                data.len(),
+                n,
+                ty.size()
+            )));
+        }
+        Ok(Literal(Repr::Array {
+            shape: ArrayShape { ty, dims: dims.iter().map(|&d| d as i64).collect() },
+            data: data.to_vec(),
+        }))
+    }
+
+    /// Wrap literals into a tuple (mirrors return_tuple=True outputs).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal(Repr::Tuple(parts))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { shape, .. } => Ok(shape.clone()),
+            Repr::Tuple(_) => Err(Error("array_shape of tuple literal".into())),
+        }
+    }
+
+    /// Copy the payload into a typed host slice.
+    pub fn copy_raw_to<T: NativeType>(&self, dst: &mut [T]) -> Result<()> {
+        let Repr::Array { shape, data } = &self.0 else {
+            return Err(Error("copy_raw_to on tuple literal".into()));
+        };
+        if shape.ty() != T::TY {
+            return Err(Error(format!("dtype mismatch: {:?} vs {:?}", shape.ty(), T::TY)));
+        }
+        if dst.len() * std::mem::size_of::<T>() != data.len() {
+            return Err(Error(format!(
+                "copy_raw_to size mismatch: {} bytes into {} elements",
+                data.len(),
+                dst.len()
+            )));
+        }
+        // SAFETY: lengths checked above; T is a plain scalar.
+        unsafe {
+            std::ptr::copy_nonoverlapping(data.as_ptr(), dst.as_mut_ptr() as *mut u8, data.len());
+        }
+        Ok(())
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.0, Repr::Tuple(Vec::new())) {
+            Repr::Tuple(parts) => Ok(parts),
+            arr @ Repr::Array { .. } => {
+                // Single-output executables may return a bare array.
+                self.0 = Repr::Tuple(Vec::new());
+                Ok(vec![Literal(arr)])
+            }
+        }
+    }
+}
+
+/// Device buffer handle (stub: cannot be materialized).
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A device placement handle (stub).
+#[derive(Debug)]
+pub struct PjRtDevice {}
+
+/// A compiled executable (stub: cannot be constructed via compile()).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b<B: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[B],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client (stub: construction reports PJRT as unavailable).
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Parsed HLO module (stub: existence-checked, not parsed).
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path).map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto {})
+    }
+}
+
+/// An XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25, 0.0];
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 16) };
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], bytes).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[2, 2]);
+        let mut out = [0.0f32; 4];
+        lit.copy_raw_to(&mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn literal_size_validation() {
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 4])
+            .is_err());
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S8, &[2], &[1u8, 2]).unwrap();
+        let mut wrong = [0.0f32; 2];
+        assert!(lit.copy_raw_to(&mut wrong).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let a = Literal::create_from_shape_and_untyped_data(ElementType::S8, &[1], &[7u8]).unwrap();
+        let mut t = Literal::tuple(vec![a.clone(), a]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+    }
+
+    #[test]
+    fn device_paths_report_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
