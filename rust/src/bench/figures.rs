@@ -345,7 +345,15 @@ pub fn table1() -> Table {
     let base = MemoryModel::table1_example();
     let mut t = Table::new(
         "Table 1 — KV cache memory (L=32 H=32 d=128 T=131072)",
-        &["precision", "payload", "scales", "total", "vs fp32", "max T @16GB", "max batch(T=4096) @64GB"],
+        &[
+            "precision",
+            "payload",
+            "scales",
+            "total",
+            "vs fp32",
+            "max T @16GB",
+            "max batch(T=4096) @64GB",
+        ],
     );
     for p in [Precision::Fp32, Precision::Int8, Precision::Int4] {
         let m = MemoryModel { precision: p, ..base };

@@ -10,7 +10,7 @@
 
 pub mod shapes;
 
-use crate::coordinator::admission::AdmissionConfig;
+use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::kvcache::Precision;
 use crate::model::runner::DecodeKernel;
@@ -54,6 +54,10 @@ pub struct ServeConfig {
     /// Worker count for the parallel quantization runtime (0 = auto:
     /// available parallelism, `KVQ_THREADS` override).
     pub parallelism: usize,
+    /// Logical block budget of the cross-request prefix cache (repeated
+    /// prompts fork cached INT8 blocks instead of re-prefilling). 0
+    /// disables sharing.
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for ServeConfig {
@@ -71,6 +75,7 @@ impl Default for ServeConfig {
             batcher: BatcherConfig::default(),
             port: 8080,
             parallelism: 0,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -124,6 +129,13 @@ impl ServeConfig {
         if let Some(v) = j.get("parallelism").as_usize() {
             self.parallelism = v;
         }
+        if let Some(v) = j.get("admission_mode").as_str() {
+            self.batcher.admission.mode =
+                AdmissionMode::parse(v).ok_or_else(|| anyhow!("bad admission_mode {v:?}"))?;
+        }
+        if let Some(v) = j.get("prefix_cache_blocks").as_usize() {
+            self.prefix_cache_blocks = v;
+        }
         if let Some(v) = j.get("max_running").as_usize() {
             self.batcher.admission.max_running = v;
         }
@@ -173,6 +185,12 @@ impl ServeConfig {
         self.scale_margin = args.f64_or("scale-margin", self.scale_margin as f64) as f32;
         self.port = args.usize_or("port", self.port as usize) as u16;
         self.parallelism = args.usize_or("threads", self.parallelism);
+        if let Some(v) = args.get("admission-mode") {
+            self.batcher.admission.mode =
+                AdmissionMode::parse(v).ok_or_else(|| anyhow!("bad --admission-mode {v:?}"))?;
+        }
+        self.prefix_cache_blocks =
+            args.usize_or("prefix-cache-blocks", self.prefix_cache_blocks);
         self.batcher.admission.max_running =
             args.usize_or("max-running", self.batcher.admission.max_running);
         self.batcher.max_prefills_per_step =
@@ -192,6 +210,7 @@ impl ServeConfig {
             batcher: self.batcher,
             seed: self.weight_seed,
             parallelism: self.parallelism,
+            prefix_cache_blocks: self.prefix_cache_blocks,
         }
     }
 
@@ -218,7 +237,8 @@ mod tests {
         let j = Json::parse(
             r#"{"model":"kvq-25m","precision":"fp32","port":9000,
                 "max_running":4,"decode_kernel":"pallas","backend":"cpu",
-                "parallelism":3}"#,
+                "parallelism":3,"admission_mode":"worst_case",
+                "prefix_cache_blocks":256}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -230,6 +250,16 @@ mod tests {
         assert_eq!(c.backend, Backend::CpuRef);
         assert_eq!(c.parallelism, 3);
         assert_eq!(c.engine_config().parallelism, 3);
+        assert_eq!(c.batcher.admission.mode, AdmissionMode::WorstCase);
+        assert_eq!(c.prefix_cache_blocks, 256);
+        assert_eq!(c.engine_config().prefix_cache_blocks, 256);
+    }
+
+    #[test]
+    fn defaults_admit_optimistically_without_prefix_cache() {
+        let c = ServeConfig::default();
+        assert_eq!(c.batcher.admission.mode, AdmissionMode::Optimistic);
+        assert_eq!(c.prefix_cache_blocks, 0);
     }
 
     #[test]
@@ -237,6 +267,7 @@ mod tests {
         let mut c = ServeConfig::default();
         assert!(c.apply_json(&Json::parse(r#"{"precision":"int99"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"backend":"tpu"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"admission_mode":"psychic"}"#).unwrap()).is_err());
     }
 
     #[test]
@@ -244,13 +275,18 @@ mod tests {
         let mut c = ServeConfig::default();
         c.apply_json(&Json::parse(r#"{"port":9000}"#).unwrap()).unwrap();
         let args = Args::parse_from(
-            ["--port", "9100", "--precision", "fp32", "--threads", "2"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--port", "9100", "--precision", "fp32", "--threads", "2",
+                "--admission-mode", "worst-case", "--prefix-cache-blocks", "128",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         c.apply_args(&args).unwrap();
         assert_eq!(c.port, 9100);
         assert_eq!(c.precision, Precision::Fp32);
         assert_eq!(c.parallelism, 2);
+        assert_eq!(c.batcher.admission.mode, AdmissionMode::WorstCase);
+        assert_eq!(c.prefix_cache_blocks, 128);
     }
 }

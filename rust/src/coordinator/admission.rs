@@ -1,15 +1,53 @@
 //! Admission control: decide whether a request may enter the running set.
 //!
-//! Policy: a request is admitted only if (a) the cache can hold its entire
-//! worst-case footprint (prompt + max_new_tokens — no mid-flight
-//! preemption in this engine, so admission must be conservative), (b) the
-//! running set is below `max_running`, and (c) its prompt fits the model.
-//! Backpressure: the scheduler keeps non-admissible requests queued; the
-//! queue itself is bounded (`max_waiting`) after which requests are
-//! rejected outright — the "reject fast under overload" discipline.
+//! Two policies ([`AdmissionMode`], the `admission_mode` serve knob):
+//!
+//! * **Optimistic** (default): admit when the *prompt* fits plus the
+//!   watermark headroom. Decode growth is not reserved — the scheduler
+//!   preempts victims (recompute-on-readmission) when the pool later runs
+//!   dry, so the pool runs near-full instead of half-empty on worst-case
+//!   reservations. The watermark doubles as the preemption trigger
+//!   margin: keeping a slice of the pool free absorbs one step of decode
+//!   growth before victims must be named.
+//! * **WorstCase**: the conservative legacy policy — admit only when the
+//!   full worst-case footprint (prompt + max_new_tokens) fits *and* every
+//!   already-running request's unrealized worst-case growth is reserved.
+//!   Never needs preemption; wastes capacity under realistic traffic.
+//!
+//! Shared gates: the running set is bounded by `max_running`, prompts
+//! must fit the model, and the waiting queue is bounded (`max_waiting`)
+//! after which requests are rejected outright — the "reject fast under
+//! overload" discipline.
 
 use super::request::Request;
 use crate::kvcache::KvCacheManager;
+
+/// How much of a request's footprint admission demands up front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionMode {
+    /// Prompt-only check; preemption handles overcommit.
+    #[default]
+    Optimistic,
+    /// Full prompt + max_new_tokens reservation; no preemption needed.
+    WorstCase,
+}
+
+impl AdmissionMode {
+    pub fn parse(s: &str) -> Option<AdmissionMode> {
+        Some(match s {
+            "optimistic" => AdmissionMode::Optimistic,
+            "worst_case" | "worst-case" | "worstcase" => AdmissionMode::WorstCase,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionMode::Optimistic => "optimistic",
+            AdmissionMode::WorstCase => "worst_case",
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct AdmissionConfig {
@@ -18,13 +56,21 @@ pub struct AdmissionConfig {
     /// Max queued (not yet admitted) requests before hard rejection.
     pub max_waiting: usize,
     /// Keep this fraction of cache blocks free as headroom (watermark);
-    /// admission pretends the pool is smaller by this factor.
+    /// admission pretends the pool is smaller by this factor. Under
+    /// optimistic admission this is the preemption trigger margin.
     pub watermark: f64,
+    /// Optimistic (prompt-fits) vs worst-case (full-footprint) policy.
+    pub mode: AdmissionMode,
 }
 
 impl Default for AdmissionConfig {
     fn default() -> Self {
-        AdmissionConfig { max_running: 8, max_waiting: 256, watermark: 0.05 }
+        AdmissionConfig {
+            max_running: 8,
+            max_waiting: 256,
+            watermark: 0.05,
+            mode: AdmissionMode::default(),
+        }
     }
 }
 
@@ -38,12 +84,17 @@ pub enum Verdict {
     Reject(String),
 }
 
+/// Check one waiting request. `reserved` is blocks already spoken for by
+/// this step's earlier plan decisions (resumes and prefills planned ahead
+/// of this request, plus — in worst-case mode — the unrealized growth of
+/// the running set); admission sees `free_blocks - reserved`.
 pub fn check(
     cfg: &AdmissionConfig,
     req: &Request,
     cache: &KvCacheManager,
     running: usize,
     waiting: usize,
+    reserved: usize,
 ) -> Verdict {
     let total = req.max_total_tokens();
     let cache_cfg = cache.config();
@@ -56,13 +107,36 @@ pub fn check(
             cache_cfg.max_seq
         ));
     }
-    // Worst-case block need vs the whole pool (minus watermark): if it can
-    // never fit, reject now rather than deadlock the queue.
-    let need = cache_cfg.blocks_for_tokens(total);
     let pool = cache_cfg.num_blocks;
-    let usable = pool - ((pool as f64 * cfg.watermark) as usize);
-    if need > usable {
-        return Verdict::Reject(format!("needs {need} blocks, pool has {usable} usable"));
+    let headroom = (pool as f64 * cfg.watermark) as usize;
+    let usable = pool - headroom;
+    // "Can it ever fit" gate: reject now rather than deadlock the queue.
+    // Worst-case mode demands the full footprint inside the watermarked
+    // pool; optimistic mode only needs the whole pool to cover the
+    // worst case when the request eventually runs alone (preemption can
+    // clear everything else, but not grow the pool).
+    let need_total = cache_cfg.blocks_for_tokens(total);
+    match cfg.mode {
+        AdmissionMode::WorstCase => {
+            if need_total > usable {
+                return Verdict::Reject(format!(
+                    "needs {need_total} blocks, pool has {usable} usable"
+                ));
+            }
+        }
+        AdmissionMode::Optimistic => {
+            if need_total > pool {
+                return Verdict::Reject(format!(
+                    "worst case {need_total} blocks exceeds whole pool {pool}"
+                ));
+            }
+            let need_prompt = cache_cfg.blocks_for_tokens(req.prompt.len());
+            if need_prompt > usable {
+                return Verdict::Reject(format!(
+                    "prompt alone needs {need_prompt} blocks, pool has {usable} usable"
+                ));
+            }
+        }
     }
     if waiting >= cfg.max_waiting {
         return Verdict::Reject(format!("queue full ({waiting})"));
@@ -71,8 +145,36 @@ pub fn check(
         return Verdict::Defer;
     }
     // Current free-space check (+ watermark headroom).
-    let headroom = (pool as f64 * cfg.watermark) as usize;
-    if need + headroom > cache.free_blocks() {
+    let need = match cfg.mode {
+        AdmissionMode::WorstCase => need_total,
+        AdmissionMode::Optimistic => cache_cfg.blocks_for_tokens(req.prompt.len()),
+    };
+    if need + headroom > cache.free_blocks().saturating_sub(reserved) {
+        return Verdict::Defer;
+    }
+    Verdict::Admit
+}
+
+/// Readmission check for a preempted request: `rebuild_tokens` rows of
+/// cache must be rematerialized (prompt + already-generated tokens). No
+/// watermark here — preempted requests hold live client streams and beat
+/// fresh work back into the pool; the absolute-fit gate already ran at
+/// first admission. `reclaimable` is credit the caller can free on
+/// demand (prefix-cache evictions): cached prefixes never starve a
+/// preempted request's readmission.
+pub fn check_resume(
+    cfg: &AdmissionConfig,
+    rebuild_tokens: usize,
+    cache: &KvCacheManager,
+    running: usize,
+    reserved: usize,
+    reclaimable: usize,
+) -> Verdict {
+    if running >= cfg.max_running {
+        return Verdict::Defer;
+    }
+    let need = cache.config().blocks_for_tokens(rebuild_tokens);
+    if need > (cache.free_blocks() + reclaimable).saturating_sub(reserved) {
         return Verdict::Defer;
     }
     Verdict::Admit
@@ -101,18 +203,23 @@ mod tests {
         Request::new(1, vec![0; prompt], max_new)
     }
 
+    fn worst_case() -> AdmissionConfig {
+        AdmissionConfig { mode: AdmissionMode::WorstCase, ..Default::default() }
+    }
+
     #[test]
     fn admits_when_roomy() {
         let c = cache(1024);
-        let v = check(&AdmissionConfig::default(), &req(8, 8), &c, 0, 0);
-        assert_eq!(v, Verdict::Admit);
+        for cfg in [AdmissionConfig::default(), worst_case()] {
+            assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 0), Verdict::Admit);
+        }
     }
 
     #[test]
     fn rejects_empty_prompt() {
         let c = cache(1024);
         assert!(matches!(
-            check(&AdmissionConfig::default(), &req(0, 8), &c, 0, 0),
+            check(&AdmissionConfig::default(), &req(0, 8), &c, 0, 0, 0),
             Verdict::Reject(_)
         ));
     }
@@ -121,7 +228,7 @@ mod tests {
     fn rejects_over_max_seq() {
         let c = cache(1024);
         assert!(matches!(
-            check(&AdmissionConfig::default(), &req(60, 10), &c, 0, 0),
+            check(&AdmissionConfig::default(), &req(60, 10), &c, 0, 0, 0),
             Verdict::Reject(_)
         ));
     }
@@ -129,18 +236,31 @@ mod tests {
     #[test]
     fn rejects_never_fitting() {
         let c = cache(8); // tiny pool
-        // 33 tokens -> ceil(33/4)=9 blocks x 2 layers x2 = 36 > 8.
-        assert!(matches!(
-            check(&AdmissionConfig::default(), &req(30, 3), &c, 0, 0),
-            Verdict::Reject(_)
-        ));
+        // 33 tokens -> ceil(33/4)=9 blocks x 2 layers x2 = 36 > 8, in
+        // either mode (even alone the worst case exceeds the whole pool).
+        for cfg in [AdmissionConfig::default(), worst_case()] {
+            assert!(matches!(check(&cfg, &req(30, 3), &c, 0, 0, 0), Verdict::Reject(_)));
+        }
+    }
+
+    #[test]
+    fn optimistic_admits_what_worst_case_defers() {
+        // Pool 32; request worst case = 16 tokens -> 4 blocks x4 = 16;
+        // two running requests' growth reservations exhaust worst-case
+        // capacity but the 1-block prompt sails through optimistically.
+        let c = cache(32);
+        let opt = AdmissionConfig::default();
+        let wc = worst_case();
+        assert_eq!(check(&opt, &req(4, 12), &c, 2, 0, 0), Verdict::Admit);
+        // Worst-case with 28 blocks reserved for running growth: defer.
+        assert_eq!(check(&wc, &req(4, 12), &c, 2, 0, 28), Verdict::Defer);
     }
 
     #[test]
     fn defers_at_max_running() {
         let c = cache(1024);
         let cfg = AdmissionConfig { max_running: 2, ..Default::default() };
-        assert_eq!(check(&cfg, &req(4, 4), &c, 2, 0), Verdict::Defer);
+        assert_eq!(check(&cfg, &req(4, 4), &c, 2, 0, 0), Verdict::Defer);
     }
 
     #[test]
@@ -153,16 +273,50 @@ mod tests {
         let k = vec![0.1f32; n];
         let v = vec![0.1f32; n];
         c.set_prefill(id, &k, &v, 12).unwrap(); // 3 blocks x 4 streams = 12
-        let verdict = check(&AdmissionConfig::default(), &req(8, 8), &c, 1, 0);
-        assert_eq!(verdict, Verdict::Defer);
+        for cfg in [AdmissionConfig::default(), worst_case()] {
+            assert_eq!(check(&cfg, &req(8, 8), &c, 1, 0, 0), Verdict::Defer);
+        }
         c.free(id);
-        assert_eq!(check(&AdmissionConfig::default(), &req(8, 8), &c, 0, 0), Verdict::Admit);
+        assert_eq!(check(&AdmissionConfig::default(), &req(8, 8), &c, 0, 0, 0), Verdict::Admit);
+    }
+
+    #[test]
+    fn reserved_blocks_shrink_effective_free() {
+        let c = cache(32);
+        let cfg = AdmissionConfig::default();
+        // Prompt 8 -> 8 blocks (+1 headroom); free 32.
+        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 0), Verdict::Admit);
+        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 24), Verdict::Defer);
     }
 
     #[test]
     fn queue_overflow_rejects() {
         let c = cache(1024);
         let cfg = AdmissionConfig { max_waiting: 4, ..Default::default() };
-        assert!(matches!(check(&cfg, &req(4, 4), &c, 0, 4), Verdict::Reject(_)));
+        assert!(matches!(check(&cfg, &req(4, 4), &c, 0, 4, 0), Verdict::Reject(_)));
+    }
+
+    #[test]
+    fn resume_skips_watermark_but_respects_free() {
+        let c = cache(16);
+        let cfg = AdmissionConfig::default();
+        // Rebuild 16 tokens -> 16 blocks == whole pool: admissible only
+        // because resume ignores the watermark.
+        assert_eq!(check_resume(&cfg, 16, &c, 0, 0, 0), Verdict::Admit);
+        assert_eq!(check_resume(&cfg, 16, &c, 0, 4, 0), Verdict::Defer);
+        // Prefix-cache reclaim credit closes the same gap.
+        assert_eq!(check_resume(&cfg, 16, &c, 0, 4, 4), Verdict::Admit);
+        let capped = AdmissionConfig { max_running: 1, ..Default::default() };
+        assert_eq!(check_resume(&capped, 4, &c, 1, 0, 0), Verdict::Defer);
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(AdmissionMode::parse("optimistic"), Some(AdmissionMode::Optimistic));
+        assert_eq!(AdmissionMode::parse("worst_case"), Some(AdmissionMode::WorstCase));
+        assert_eq!(AdmissionMode::parse("worst-case"), Some(AdmissionMode::WorstCase));
+        assert_eq!(AdmissionMode::parse("nope"), None);
+        assert_eq!(AdmissionMode::Optimistic.name(), "optimistic");
+        assert_eq!(AdmissionMode::WorstCase.name(), "worst_case");
     }
 }

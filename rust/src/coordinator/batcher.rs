@@ -1,17 +1,28 @@
 //! Continuous batcher: decides what one engine iteration executes.
 //!
-//! vLLM/Orca-style iteration-level scheduling: every step may mix newly
-//! admitted prefills with decode steps for all running sequences. Limits:
+//! vLLM/Orca-style iteration-level scheduling: every step may mix
+//! readmitted (previously preempted) requests, newly admitted prefills,
+//! decode steps for the running set, and — under pool pressure —
+//! preemptions. Limits:
 //!
 //! * `max_prefills_per_step` — prefill is long (O(S²) attention), so cap
-//!   how many are folded into one iteration to protect decode latency
-//!   (TPOT) of already-running requests.
+//!   how many resumes+prefills are folded into one iteration to protect
+//!   decode latency (TPOT) of already-running requests.
 //! * `max_decode_batch` — cap the decode set per iteration; the rest run
 //!   next iteration (round-robin fairness via rotation).
+//!
+//! **Memory planning.** The plan tracks the blocks each decision commits
+//! (resume rebuilds, prefill prompts, decode appends including COW
+//! copies) against the pool's free list. When this step's decode appends
+//! cannot be covered, the plan first budgets prefix-cache evictions
+//! (`want_free`), then names preemption victims — lowest priority class,
+//! most-recently-admitted first — whose refcount-aware reclaimable
+//! blocks close the gap. Victims drop out of the decode set and re-enter
+//! via the preempted queue.
 
-use super::admission::{self, AdmissionConfig, Verdict};
-use super::request::Request;
-use super::scheduler::Scheduler;
+use super::admission::{self, AdmissionConfig, AdmissionMode, Verdict};
+use super::request::{Request, RequestId};
+use super::scheduler::{Running, Scheduler};
 use crate::kvcache::KvCacheManager;
 
 #[derive(Debug, Clone, Copy)]
@@ -31,13 +42,20 @@ impl Default for BatcherConfig {
     }
 }
 
-/// What one engine iteration should do.
+/// What one engine iteration should do, in execution order.
 #[derive(Debug, Default)]
 pub struct StepPlan {
+    /// Free-block target the engine should reach by evicting prefix-cache
+    /// entries before anything else runs (0 = no eviction needed).
+    pub want_free: usize,
+    /// Victims to preempt before decoding: free their blocks, park them.
+    pub preemptions: Vec<RequestId>,
+    /// Preempted requests to readmit (rebuild cache + replay) this step.
+    pub resumes: Vec<Running>,
     /// Requests to prefill this step (already admission-checked).
     pub prefills: Vec<(Request, super::request::EventTx)>,
-    /// Indices into `scheduler.running` to decode this step.
-    pub decodes: Vec<usize>,
+    /// Request ids to decode this step (victims already excluded).
+    pub decodes: Vec<RequestId>,
     /// Requests rejected by admission (with cause) — emit and drop.
     pub rejections: Vec<(Request, super::request::EventTx, String)>,
 }
@@ -53,27 +71,95 @@ impl Batcher {
         Batcher::default()
     }
 
+    /// Plan one iteration. `prefix_evictable` is the pool-block credit
+    /// the engine's prefix cache could free on demand (its reclaimable
+    /// blocks); the plan spends it — via `want_free` — before naming
+    /// preemption victims, and resumes may draw on it too (cached
+    /// prefixes never starve in-flight requests).
     pub fn plan(
         &mut self,
         cfg: &BatcherConfig,
         sched: &mut Scheduler,
         cache: &KvCacheManager,
+        prefix_evictable: usize,
     ) -> StepPlan {
         let mut plan = StepPlan::default();
+        let ccfg = *cache.config();
+        let free = cache.free_blocks();
+        // Blocks committed to planned resumes + prefills this step. All
+        // spending draws on one pot — `free + prefix_evictable` — so the
+        // credit cannot be double-counted across decisions.
+        let mut committed = 0usize;
 
-        // Admit up to max_prefills_per_step waiting requests.
-        while plan.prefills.len() < cfg.max_prefills_per_step {
+        // Worst-case mode reserves every running request's unrealized
+        // growth so admission never overcommits (and preemption is never
+        // needed). Optimistic mode reserves nothing — that is the point.
+        let outstanding: usize = match cfg.admission.mode {
+            AdmissionMode::WorstCase => sched
+                .running
+                .iter()
+                .map(|r| {
+                    ccfg.blocks_for_tokens(r.req.max_total_tokens())
+                        .saturating_sub(cache.seq_blocks(r.seq))
+                })
+                .sum(),
+            AdmissionMode::Optimistic => 0,
+        };
+
+        // Readmit preempted requests first (FCFS): they hold live client
+        // streams and already passed full admission once.
+        while plan.resumes.len() + plan.prefills.len() < cfg.max_prefills_per_step {
+            let Some(front) = sched.preempted.front() else { break };
+            let rebuild_tokens = match cfg.admission.mode {
+                // Cache rows to rematerialize (prompt + generated rows
+                // already appended before preemption) **plus the row the
+                // next decode step appends** — sizing only the rebuild
+                // would readmit a boundary-aligned sequence straight into
+                // an unfulfillable append, and the most-recently-admitted
+                // victim policy would re-preempt it before it generates
+                // anything (resume/preempt thrash).
+                AdmissionMode::Optimistic => {
+                    front.req.prompt.len() + front.generated.saturating_sub(1) + 1
+                }
+                AdmissionMode::WorstCase => front.req.max_total_tokens(),
+            };
+            let verdict = admission::check_resume(
+                &cfg.admission,
+                rebuild_tokens,
+                cache,
+                sched.running_len() + plan.resumes.len() + plan.prefills.len(),
+                committed + outstanding,
+                prefix_evictable,
+            );
+            match verdict {
+                Verdict::Admit => {
+                    committed += ccfg.blocks_for_tokens(rebuild_tokens);
+                    plan.resumes.push(sched.preempted.pop_front().unwrap());
+                }
+                _ => break, // FCFS head-of-line within the preempted queue
+            }
+        }
+
+        // Admit up to the remaining prefill budget from the waiting queue.
+        while plan.resumes.len() + plan.prefills.len() < cfg.max_prefills_per_step {
             let Some(head) = sched.peek_waiting() else { break };
             let verdict = admission::check(
                 &cfg.admission,
                 head,
                 cache,
-                sched.running_len() + plan.prefills.len(),
+                sched.running_len() + plan.resumes.len() + plan.prefills.len(),
                 sched.waiting_len().saturating_sub(1),
+                committed + outstanding,
             );
             match verdict {
                 Verdict::Admit => {
                     let (req, tx) = sched.pop_waiting().unwrap();
+                    committed += match cfg.admission.mode {
+                        AdmissionMode::Optimistic => ccfg.blocks_for_tokens(req.prompt.len()),
+                        AdmissionMode::WorstCase => {
+                            ccfg.blocks_for_tokens(req.max_total_tokens())
+                        }
+                    };
                     plan.prefills.push((req, tx));
                 }
                 Verdict::Defer => break, // FCFS head-of-line blocks its class
@@ -90,9 +176,60 @@ impl Batcher {
             let take = n.min(cfg.max_decode_batch);
             self.decode_cursor %= n;
             for i in 0..take {
-                plan.decodes.push((self.decode_cursor + i) % n);
+                let r = &sched.running[(self.decode_cursor + i) % n];
+                plan.decodes.push(r.req.id);
             }
             self.decode_cursor = (self.decode_cursor + take) % n;
+        }
+
+        // Pool-pressure resolution for this step's decode appends: spend
+        // the prefix-cache credit first, then preempt victims until the
+        // remaining appends are covered (or nobody is left to evict).
+        let mut decode_need: usize = plan
+            .decodes
+            .iter()
+            .filter_map(|id| sched.running.iter().find(|r| r.req.id == *id))
+            .map(|r| cache.append_need_blocks(r.seq))
+            .sum();
+        let total_need = committed + decode_need;
+        if total_need > free {
+            plan.want_free = total_need.min(free + prefix_evictable);
+        }
+        let mut avail = (free + prefix_evictable).saturating_sub(committed);
+        while decode_need > avail {
+            let Some(vid) = sched.select_victim(&plan.preemptions) else { break };
+            let victim = sched.running.iter().find(|r| r.req.id == vid).unwrap();
+            avail += cache.seq_reclaimable_blocks(victim.seq);
+            if let Some(pos) = plan.decodes.iter().position(|&d| d == vid) {
+                decode_need -= cache.append_need_blocks(victim.seq);
+                plan.decodes.remove(pos);
+            }
+            plan.preemptions.push(vid);
+        }
+
+        // Liveness valve: nothing planned, nothing running to free blocks
+        // organically, but work is waiting — the pool must be pinned by
+        // prefix-cache entries. Evict toward the head request's need so
+        // the next step can admit it (a cache serving nobody is worthless
+        // next to a stalled queue).
+        if plan.resumes.is_empty()
+            && plan.prefills.is_empty()
+            && plan.decodes.is_empty()
+            && plan.preemptions.is_empty()
+            && sched.running.is_empty()
+            && prefix_evictable > 0
+        {
+            if let Some(head) = sched.peek_waiting() {
+                let headroom = (ccfg.num_blocks as f64 * cfg.admission.watermark) as usize;
+                let need = match cfg.admission.mode {
+                    AdmissionMode::Optimistic => ccfg.blocks_for_tokens(head.prompt.len()),
+                    AdmissionMode::WorstCase => {
+                        ccfg.blocks_for_tokens(head.max_total_tokens())
+                    }
+                };
+                plan.want_free =
+                    plan.want_free.max((need + headroom).min(free + prefix_evictable));
+            }
         }
         plan
     }
@@ -105,23 +242,49 @@ mod tests {
     use crate::kvcache::Precision;
     use std::sync::mpsc;
 
-    fn cache() -> KvCacheManager {
+    fn cache_with(num_blocks: usize) -> KvCacheManager {
         KvCacheManager::new(CacheConfig {
             layers: 2,
             heads: 2,
             head_dim: 8,
             max_seq: 64,
             block_size: 4,
-            num_blocks: 64,
+            num_blocks,
             precision: Precision::Int8,
             scale_margin: 1.0,
         })
+    }
+
+    fn cache() -> KvCacheManager {
+        cache_with(64)
     }
 
     fn enqueue(s: &mut Scheduler, id: u64, prompt: usize, max_new: usize) {
         let (tx, rx) = mpsc::channel();
         std::mem::forget(rx);
         s.enqueue(Request::new(id, vec![0; prompt], max_new), tx);
+    }
+
+    /// Prefill a real sequence and register it as running.
+    fn start_running(s: &mut Scheduler, c: &mut KvCacheManager, id: u64, tokens: usize) {
+        let ccfg = *c.config();
+        let n = ccfg.layers * ccfg.heads * ccfg.max_seq * ccfg.head_dim;
+        let seq = c.new_sequence();
+        c.set_prefill(seq, &vec![0.1; n], &vec![0.1; n], tokens).unwrap();
+        let (tx, rx) = mpsc::channel();
+        std::mem::forget(rx);
+        let admitted_seq = s.next_admission_stamp();
+        s.start(Running {
+            req: Request::new(id, vec![0; tokens], 32),
+            seq,
+            last_token: 0,
+            generated: 1,
+            tokens: vec![0],
+            rng: crate::util::rng::Rng::new(id),
+            first_token_at: None,
+            admitted_seq,
+            events: tx,
+        });
     }
 
     #[test]
@@ -133,10 +296,12 @@ mod tests {
         let c = cache();
         let mut b = Batcher::new();
         let cfg = BatcherConfig { max_prefills_per_step: 2, ..Default::default() };
-        let plan = b.plan(&cfg, &mut s, &c);
+        let plan = b.plan(&cfg, &mut s, &c, 0);
         assert_eq!(plan.prefills.len(), 2);
         assert_eq!(s.waiting_len(), 1);
         assert!(plan.rejections.is_empty());
+        assert!(plan.preemptions.is_empty());
+        assert_eq!(plan.want_free, 0);
     }
 
     #[test]
@@ -146,7 +311,7 @@ mod tests {
         enqueue(&mut s, 2, 4, 4); // fine
         let c = cache();
         let mut b = Batcher::new();
-        let plan = b.plan(&BatcherConfig::default(), &mut s, &c);
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 0);
         assert_eq!(plan.rejections.len(), 1);
         assert_eq!(plan.rejections[0].0.id, 1);
         assert_eq!(plan.prefills.len(), 1);
@@ -156,38 +321,104 @@ mod tests {
     #[test]
     fn decode_round_robin_rotates() {
         let mut s = Scheduler::new();
-        let c = cache();
-        // Fake 3 running entries.
+        let mut c = cache();
         for id in 1..=3 {
-            let (tx, rx) = mpsc::channel();
-            std::mem::forget(rx);
-            s.start(super::super::scheduler::Running {
-                req: Request::new(id, vec![0; 2], 8),
-                seq: id,
-                last_token: 0,
-                generated: 0,
-                rng: crate::util::rng::Rng::new(id),
-                first_token_at: None,
-                events: tx,
-            });
+            start_running(&mut s, &mut c, id, 2);
         }
         let mut b = Batcher::new();
         let cfg = BatcherConfig { max_decode_batch: 2, ..Default::default() };
-        let p1 = b.plan(&cfg, &mut s, &c);
-        let p2 = b.plan(&cfg, &mut s, &c);
-        assert_eq!(p1.decodes, vec![0, 1]);
-        assert_eq!(p2.decodes, vec![2, 0], "cursor rotated");
+        let p1 = b.plan(&cfg, &mut s, &c, 0);
+        let p2 = b.plan(&cfg, &mut s, &c, 0);
+        assert_eq!(p1.decodes, vec![1, 2]);
+        assert_eq!(p2.decodes, vec![3, 1], "cursor rotated");
     }
 
     #[test]
     fn defer_blocks_head_of_line_only_within_step() {
-        // Fill the cache so admission defers; plan must not spin forever.
+        // A request at the edge of the pool: worst-case mode rejects it,
+        // optimistic mode admits it (prompt fits; preemption covers the
+        // rest). Either way the plan must terminate.
         let mut s = Scheduler::new();
-        enqueue(&mut s, 1, 60, 4); // needs 15 blocks x4 =60 > pool(64)-wm… defer/reject path
+        enqueue(&mut s, 1, 60, 4);
         let c = cache();
         let mut b = Batcher::new();
-        let plan = b.plan(&BatcherConfig::default(), &mut s, &c);
-        // 64 tokens = 16 blocks x 4 streams = 64 blocks > usable (60) -> reject.
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 0);
         assert_eq!(plan.prefills.len() + plan.rejections.len(), 1);
+    }
+
+    #[test]
+    fn worst_case_mode_reserves_running_growth() {
+        // Pool 64. One running seq at 4 tokens of a (4 + 44 = 48)-token
+        // worst case: 48 tokens -> 12 blocks x4 = 48; holds 4 -> reserve
+        // 44. A newcomer with worst case 16 blocks sees 64 - 44 = 20 free
+        // minus its own 16 + headroom 3 -> defers; optimistic admits.
+        let mut s = Scheduler::new();
+        let mut c = cache();
+        start_running(&mut s, &mut c, 1, 4);
+        s.running[0].req.max_new_tokens = 44;
+        enqueue(&mut s, 2, 8, 8);
+        let mut b = Batcher::new();
+        let wc = BatcherConfig {
+            admission: AdmissionConfig {
+                mode: AdmissionMode::WorstCase,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let plan = b.plan(&wc, &mut s, &c, 0);
+        assert!(plan.prefills.is_empty(), "worst-case defers behind growth reserve");
+        let mut b2 = Batcher::new();
+        let plan = b2.plan(&BatcherConfig::default(), &mut s, &c, 0);
+        assert_eq!(plan.prefills.len(), 1, "optimistic admits the prompt");
+    }
+
+    #[test]
+    fn names_victims_when_decode_cannot_allocate() {
+        // Pool 16, two running seqs each holding 8 blocks (8 tokens, at a
+        // block boundary): both decodes want 2L=4 fresh blocks, free = 0.
+        // The most recently admitted is preempted; its reclaim (8) covers
+        // the survivor's append.
+        let mut s = Scheduler::new();
+        let mut c = cache_with(16);
+        start_running(&mut s, &mut c, 1, 8);
+        start_running(&mut s, &mut c, 2, 8);
+        assert_eq!(c.free_blocks(), 0);
+        let mut b = Batcher::new();
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 0);
+        assert_eq!(plan.preemptions, vec![2], "most recent admit is the victim");
+        assert_eq!(plan.decodes, vec![1], "victim dropped from the decode set");
+    }
+
+    #[test]
+    fn prefix_credit_spends_before_preempting() {
+        // Same pressure as above, but 8 evictable prefix blocks cover the
+        // two appends (4 + 4): no victims, want_free demands the eviction.
+        let mut s = Scheduler::new();
+        let mut c = cache_with(16);
+        start_running(&mut s, &mut c, 1, 8);
+        start_running(&mut s, &mut c, 2, 8);
+        let mut b = Batcher::new();
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 8);
+        assert!(plan.preemptions.is_empty(), "prefix eviction covers the step");
+        assert_eq!(plan.decodes, vec![1, 2]);
+        assert_eq!(plan.want_free, 8);
+    }
+
+    #[test]
+    fn resumes_run_before_new_prefills() {
+        let mut s = Scheduler::new();
+        let mut c = cache();
+        start_running(&mut s, &mut c, 1, 4);
+        let mut run = s.finish(1).unwrap();
+        c.free(run.seq);
+        run.seq = 0;
+        s.park_preempted(run);
+        enqueue(&mut s, 2, 4, 4);
+        let mut b = Batcher::new();
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 0);
+        assert_eq!(plan.resumes.len(), 1, "preempted request readmits first");
+        assert_eq!(plan.resumes[0].req.id, 1);
+        assert!(plan.prefills.is_empty(), "prefill budget spent on the resume");
+        assert_eq!(s.preempted_len(), 0);
     }
 }

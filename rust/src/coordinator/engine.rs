@@ -14,13 +14,30 @@
 //! prefill/gather fan-out uses the same knob. Parallelism never changes
 //! generated tokens: gathers are read-only and bit-deterministic, and the
 //! backend execution order is unchanged.
+//!
+//! **Preemption + recompute.** Under optimistic admission the pool may
+//! run dry mid-decode. The batcher names victims; the engine frees their
+//! blocks and parks their full generation state (tokens, RNG, client
+//! stream) on the preempted queue. Readmission rebuilds the cache by
+//! re-running prefill on the prompt and *replaying* the already-generated
+//! tokens through decode steps — scales are re-frozen over the identical
+//! prompt and every replayed step is deterministic, so the rebuilt cache
+//! and all subsequent tokens are bit-identical to an uncontended run
+//! (asserted by `tests/preemption.rs`). A decode append that still fails
+//! (plan raced reality) falls back in order: evict prefix-cache entries,
+//! preempt a victim, finally preempt the appending sequence itself.
+//!
+//! **Prefix cache.** With `prefix_cache_blocks > 0`, finished prefills
+//! are registered in a [`PrefixCache`]; an identical prompt later forks
+//! the cached blocks (refcount bump, no re-quantization, no backend
+//! prefill) and decodes from the stored first-token logits.
 
-use super::batcher::{Batcher, BatcherConfig};
-use super::metrics::Metrics;
-use super::request::{EventTx, FinishReason, Request, TokenEvent};
+use super::batcher::{Batcher, BatcherConfig, StepPlan};
+use super::metrics::{Metrics, StepGauges};
+use super::request::{EventTx, FinishReason, Request, RequestId, TokenEvent};
 use super::scheduler::{Running, Scheduler};
 use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
-use crate::kvcache::Precision;
+use crate::kvcache::{Precision, PrefixCache};
 use crate::model::sample;
 use crate::model::LmBackend;
 use crate::parallel;
@@ -45,6 +62,9 @@ pub struct EngineConfig {
     /// gathers + cache prefill/gather fan-out). 0 = auto
     /// (`available_parallelism`, `KVQ_THREADS` override).
     pub parallelism: usize,
+    /// Logical block budget of the cross-request prefix cache
+    /// (`0` disables prompt sharing — the default).
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for EngineConfig {
@@ -57,6 +77,7 @@ impl Default for EngineConfig {
             batcher: BatcherConfig::default(),
             seed: 0,
             parallelism: 0,
+            prefix_cache_blocks: 0,
         }
     }
 }
@@ -202,6 +223,7 @@ fn gather_sequence(
 struct Engine {
     backend: Box<dyn LmBackend>,
     cache: KvCacheManager,
+    prefix: PrefixCache,
     sched: Scheduler,
     batcher: Batcher,
     cfg: EngineConfig,
@@ -234,16 +256,20 @@ impl Engine {
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
         crate::info!(
-            "engine up: model={} precision={} blocks={} cache={:.1} MiB threads={}",
+            "engine up: model={} precision={} blocks={} cache={:.1} MiB threads={} \
+             admission={} prefix_cache_blocks={}",
             spec.name,
             cfg.precision.name(),
             num_blocks,
             cache.storage_bytes() as f64 / (1024.0 * 1024.0),
-            threads
+            threads,
+            cfg.batcher.admission.mode.name(),
+            cfg.prefix_cache_blocks
         );
         Engine {
             backend,
             cache,
+            prefix: PrefixCache::new(cfg.prefix_cache_blocks),
             sched: Scheduler::new(),
             batcher: Batcher::new(),
             rng: Rng::new(cfg.seed ^ 0xE46),
@@ -315,7 +341,9 @@ impl Engine {
 
     fn step(&mut self) {
         let t0 = Instant::now();
-        let plan = self.batcher.plan(&self.cfg.batcher, &mut self.sched, &self.cache);
+        let prefix_evictable = self.prefix.evictable_blocks(&self.cache);
+        let plan: StepPlan =
+            self.batcher.plan(&self.cfg.batcher, &mut self.sched, &self.cache, prefix_evictable);
 
         for (req, events, cause) in plan.rejections {
             self.metrics.on_reject();
@@ -327,33 +355,70 @@ impl Engine {
             });
         }
 
+        // Reclaim in plan order: prefix-cache evictions are cheap (no
+        // recompute), preemptions cost their victims a replay.
+        if plan.want_free > 0 {
+            self.prefix.evict_for(&mut self.cache, plan.want_free);
+        }
+        for id in plan.preemptions {
+            self.preempt_request(id);
+        }
+
+        for run in plan.resumes {
+            self.resume(run);
+        }
+
         for (req, events) in plan.prefills {
             if let Err(e) = self.prefill(req, events) {
                 crate::error!("prefill failed: {e:#}");
             }
         }
 
-        // Decode pass. Indices were computed against the pre-prefill
-        // running set; re-plan decodes as "all running" for simplicity and
-        // fairness is preserved by the batcher cursor across steps.
-        // Sequences are processed in waves of `threads`: cache gathers run
-        // in parallel across the wave, backend execution stays serial (the
-        // PJRT runtime is thread-confined).
-        let ids: Vec<u64> = plan
-            .decodes
-            .iter()
-            .filter_map(|&i| self.sched.running.get(i).map(|r| r.req.id))
-            .collect();
+        // Decode pass, in waves of `threads`: cache gathers run in
+        // parallel across the wave, backend execution stays serial (the
+        // PJRT runtime is thread-confined). Ids preempted mid-step drop
+        // out via the by-id lookup inside the wave.
+        let ids = plan.decodes;
         for wave in ids.chunks(self.threads.max(1)) {
             self.decode_wave(wave);
         }
 
+        let pstats = self.prefix.stats();
         self.metrics.on_step(
             t0.elapsed().as_secs_f64(),
-            self.sched.running_len(),
-            self.sched.waiting_len(),
-            self.cache.utilization(),
+            StepGauges {
+                running: self.sched.running_len(),
+                waiting: self.sched.waiting_len(),
+                preempted: self.sched.preempted_len(),
+                cache_utilization: self.cache.utilization(),
+                pool_used_blocks: self.cache.used_blocks(),
+                pool_total_blocks: self.cache.num_blocks(),
+                pool_logical_blocks: self.cache.logical_blocks(),
+                prefix_cache_blocks: self.prefix.pinned_blocks(),
+                prefix_lookups: pstats.lookups,
+                prefix_hits: pstats.hits,
+            },
         );
+    }
+
+    /// Materialize a prompt in the cache: prefix-cache hit (fork shared
+    /// blocks, no backend compute) or full prefill + cache registration.
+    /// Returns the sequence, the last-position logits, and whether the
+    /// prompt was served from the prefix cache (hits cost the backend
+    /// nothing — callers must not book prefill/recompute work for them).
+    fn materialize_prompt(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>, bool)> {
+        if let Some((seq, logits)) = self.prefix.lookup(&mut self.cache, prompt) {
+            return Ok((seq, logits, true));
+        }
+        let len = prompt.len();
+        let pre = self.backend.prefill(prompt, len)?;
+        let seq = self.cache.new_sequence();
+        if let Err(e) = self.cache.set_prefill(seq, &pre.k, &pre.v, len) {
+            self.cache.free(seq);
+            return Err(e);
+        }
+        self.prefix.insert(&mut self.cache, seq, prompt, &pre.logits);
+        Ok((seq, pre.logits, false))
     }
 
     fn prefill(&mut self, req: Request, events: EventTx) -> Result<()> {
@@ -369,25 +434,25 @@ impl Engine {
             return Ok(());
         }
         let len = req.prompt.len();
-        let pre = self.backend.prefill(&req.prompt, len)?;
-        let seq = self.cache.new_sequence();
-        if let Err(e) = self.cache.set_prefill(seq, &pre.k, &pre.v, len) {
-            self.cache.free(seq);
-            return Err(e);
-        }
+        let prompt = req.prompt.clone();
+        let (seq, logits, hit) = self.materialize_prompt(&prompt)?;
         let mut rng = self.rng.fork(req.id ^ req.sampling.seed);
-        let token = sample::sample(&pre.logits, &req.sampling, &mut rng);
+        let token = sample::sample(&logits, &req.sampling, &mut rng);
         let ttft = req.arrival.elapsed().as_secs_f64();
-        self.metrics.on_first_token(ttft, len);
+        // prefill_tokens counts backend prefill work; a prefix hit did none.
+        self.metrics.on_first_token(ttft, if hit { 0 } else { len });
         let _ = events.send(TokenEvent::First { token, ttft });
 
+        let admitted_seq = self.sched.next_admission_stamp();
         let mut running = Running {
             req,
             seq,
             last_token: token,
             generated: 1,
+            tokens: vec![token],
             rng,
             first_token_at: Some(Instant::now()),
+            admitted_seq,
             events,
         };
         if let Some(reason) = finish_reason(&running, self.cache.config().max_seq) {
@@ -397,6 +462,82 @@ impl Engine {
         }
         self.sched.start(running);
         Ok(())
+    }
+
+    /// Preempt a running request: free its cache blocks and park its
+    /// generation state for recompute-on-readmission.
+    fn preempt_request(&mut self, id: RequestId) {
+        if let Some(mut run) = self.sched.finish(id) {
+            crate::debug!(
+                "preempt {} (generated {}, freeing {} blocks)",
+                id,
+                run.generated,
+                self.cache.seq_reclaimable_blocks(run.seq)
+            );
+            self.cache.free(run.seq);
+            run.seq = 0; // stale until readmission
+            self.metrics.on_preempt();
+            self.sched.park_preempted(run);
+        }
+    }
+
+    /// Readmit a preempted request: rebuild the prompt cache (prefix hit
+    /// or full prefill — identical scales either way), then replay the
+    /// generated-token trail through decode steps. Every replayed step
+    /// recreates the exact bytes of the original run; its logits are
+    /// discarded (those tokens were already sampled and streamed).
+    fn resume(&mut self, mut run: Running) {
+        let prompt = run.req.prompt.clone();
+        let (seq, _logits, hit) = match self.materialize_prompt(&prompt) {
+            Ok(x) => x,
+            Err(e) => {
+                crate::error!("resume prefill failed for {}: {e:#}", run.req.id);
+                self.finalize(&mut run, FinishReason::Error(format!("resume failed: {e}")));
+                return;
+            }
+        };
+        let replay: Vec<i32> = run.tokens[..run.generated - 1].to_vec();
+        for (i, &tok) in replay.iter().enumerate() {
+            let pos = prompt.len() + i;
+            if let Err(e) = self.replay_one(seq, tok, pos) {
+                // Raced another allocator — back on the preempted queue
+                // with state intact; a later step retries.
+                crate::debug!("resume replay deferred for {}: {e:#}", run.req.id);
+                self.cache.free(seq);
+                self.sched.preempted.push_front(run);
+                return;
+            }
+        }
+        // recompute_tokens = rows actually re-materialized by the backend:
+        // a prefix-hit prompt cost nothing, replayed rows always do.
+        self.metrics.on_resume(if hit { 0 } else { prompt.len() } + replay.len());
+        run.seq = seq;
+        run.admitted_seq = self.sched.next_admission_stamp();
+        self.sched.start(run);
+    }
+
+    /// One replayed decode step: gather, execute with the known next
+    /// token, append its K/V row. Uses staging slot 0 (replay runs in the
+    /// serial phase, never concurrently with a wave).
+    fn replay_one(&mut self, seq: SeqId, token: i32, pos: usize) -> Result<()> {
+        let precision = self.cfg.precision;
+        {
+            let slot = &mut self.staging[0];
+            slot.err = None;
+            gather_sequence(&self.cache, precision, seq, slot, self.threads)?;
+        }
+        let dec = match precision {
+            Precision::Int8 => {
+                let st = &self.staging[0];
+                self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
+            }
+            Precision::Fp32 => {
+                let st = &self.staging[0];
+                self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
+            }
+            Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+        };
+        self.cache.append_row(seq, &dec.k_new, &dec.v_new)
     }
 
     /// Decode a wave of concurrent sequences: parallel gather phase into
@@ -465,6 +606,11 @@ impl Engine {
         i: usize,
     ) -> Result<()> {
         let t0 = Instant::now();
+        // A reclaim earlier in this wave may have preempted this member
+        // after its gather: its state is parked, the slot is stale.
+        if !self.sched.running.iter().any(|r| r.req.id == id) {
+            return Ok(());
+        }
         let gather_secs = self.staging[i].gather_secs;
         if let Some(e) = self.staging[i].err.take() {
             anyhow::bail!("gather failed: {e}");
@@ -480,13 +626,25 @@ impl Engine {
             }
             Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
         };
-        self.cache.append_row(seq, &dec.k_new, &dec.v_new)?;
+        if self.cache.append_row(seq, &dec.k_new, &dec.v_new).is_err() {
+            // The plan's accounting raced reality (another sequence's COW,
+            // a resume, an unevictable prefix entry). Reclaim and retry;
+            // if this sequence itself must yield, park it — the append
+            // simply never happened, so its state is already consistent.
+            if !self.reclaim_for_append(seq, id) {
+                crate::debug!("self-preempting {id}: pool dry after reclaim");
+                self.preempt_request(id);
+                return Ok(());
+            }
+            self.cache.append_row(seq, &dec.k_new, &dec.v_new)?;
+        }
 
         let max_seq = self.cache.config().max_seq;
         let run = self.sched.running.iter_mut().find(|r| r.req.id == id).unwrap();
         let next = sample::sample(&dec.logits, &run.req.sampling, &mut run.rng);
         run.last_token = next;
         run.generated += 1;
+        run.tokens.push(next);
         // TPOT includes this sequence's own gather cost (measured in the
         // parallel phase) — same semantics as the pre-wave serial path.
         self.metrics.on_token(gather_secs + t0.elapsed().as_secs_f64());
@@ -498,6 +656,25 @@ impl Engine {
             self.finalize(&mut run, reason);
         }
         Ok(())
+    }
+
+    /// Free blocks until `seq` can append one row: prefix-cache evictions
+    /// first, then preemption victims (never `exclude` itself). Returns
+    /// false when the pool still cannot cover the append.
+    fn reclaim_for_append(&mut self, seq: SeqId, exclude: RequestId) -> bool {
+        loop {
+            let need = self.cache.append_need_blocks(seq);
+            if need <= self.cache.free_blocks() {
+                return true;
+            }
+            if self.prefix.evict_reclaimable_lru(&mut self.cache) {
+                continue;
+            }
+            let Some(victim) = self.sched.select_victim(&[exclude]) else {
+                return false;
+            };
+            self.preempt_request(victim);
+        }
     }
 
     fn finalize(&self, run: &mut Running, reason: FinishReason) {

@@ -1,9 +1,37 @@
 //! Serving metrics: counters + latency histograms, shared via a mutex
 //! (engine thread writes, router/HTTP threads read snapshots).
+//!
+//! Beyond the classic latency set (TTFT/TPOT/e2e), the scheduler's
+//! memory behavior is first-class: preemption and recompute counters,
+//! prefix-cache hit rate, and true (refcount-aware) pool occupancy, so
+//! `GET /metrics` answers "how full is the pool really and what did
+//! optimistic admission cost us" directly.
 
 use crate::util::stats::LogHistogram;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Point-in-time scheduler/pool gauges recorded each engine step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepGauges {
+    pub running: usize,
+    pub waiting: usize,
+    pub preempted: usize,
+    /// True pool utilization: shared blocks counted once.
+    pub cache_utilization: f64,
+    pub pool_used_blocks: usize,
+    pub pool_total_blocks: usize,
+    /// Sum of per-sequence footprints (shared blocks counted per holder);
+    /// `pool_logical_blocks - pool_used_blocks` = blocks COW sharing saves.
+    pub pool_logical_blocks: usize,
+    /// Logical blocks pinned by the prefix cache.
+    pub prefix_cache_blocks: usize,
+    /// Cumulative prefix-cache lookups/hits, read straight from
+    /// [`crate::kvcache::PrefixStats`] — the cache's own counters are the
+    /// single source of truth (no parallel bookkeeping to drift).
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
+}
 
 #[derive(Debug)]
 struct Inner {
@@ -14,13 +42,17 @@ struct Inner {
     tokens_generated: u64,
     prefill_tokens: u64,
     engine_steps: u64,
+    preemptions: u64,
+    resumes: u64,
+    /// Tokens re-materialized by readmissions (prompt + replayed trail).
+    recompute_tokens: u64,
     ttft: LogHistogram,
     tpot: LogHistogram,
     e2e: LogHistogram,
     step_time: LogHistogram,
-    cache_utilization: f64,
-    running: usize,
-    waiting: usize,
+    gauges: StepGauges,
+    /// High-water mark of concurrently running sequences.
+    running_peak: usize,
 }
 
 /// Cloneable handle.
@@ -43,13 +75,15 @@ impl Metrics {
             tokens_generated: 0,
             prefill_tokens: 0,
             engine_steps: 0,
+            preemptions: 0,
+            resumes: 0,
+            recompute_tokens: 0,
             ttft: LogHistogram::latency(),
             tpot: LogHistogram::latency(),
             e2e: LogHistogram::latency(),
             step_time: LogHistogram::latency(),
-            cache_utilization: 0.0,
-            running: 0,
-            waiting: 0,
+            gauges: StepGauges::default(),
+            running_peak: 0,
         })))
     }
 
@@ -80,13 +114,25 @@ impl Metrics {
         m.requests_finished += 1;
     }
 
-    pub fn on_step(&self, secs: f64, running: usize, waiting: usize, cache_util: f64) {
+    /// A running request was preempted (blocks freed, state parked).
+    pub fn on_preempt(&self) {
+        self.0.lock().unwrap().preemptions += 1;
+    }
+
+    /// A preempted request was readmitted after re-materializing
+    /// `recompute_tokens` cache rows (prompt + replayed generations).
+    pub fn on_resume(&self, recompute_tokens: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.resumes += 1;
+        m.recompute_tokens += recompute_tokens as u64;
+    }
+
+    pub fn on_step(&self, secs: f64, gauges: StepGauges) {
         let mut m = self.0.lock().unwrap();
         m.engine_steps += 1;
         m.step_time.record(secs);
-        m.running = running;
-        m.waiting = waiting;
-        m.cache_utilization = cache_util;
+        m.running_peak = m.running_peak.max(gauges.running);
+        m.gauges = gauges;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -100,6 +146,11 @@ impl Metrics {
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
             engine_steps: m.engine_steps,
+            preemptions: m.preemptions,
+            resumes: m.resumes,
+            recompute_tokens: m.recompute_tokens,
+            prefix_lookups: m.gauges.prefix_lookups,
+            prefix_hits: m.gauges.prefix_hits,
             tokens_per_sec: m.tokens_generated as f64 / uptime.max(1e-9),
             ttft_p50: m.ttft.quantile(0.5),
             ttft_p99: m.ttft.quantile(0.99),
@@ -108,9 +159,15 @@ impl Metrics {
             e2e_p50: m.e2e.quantile(0.5),
             e2e_p99: m.e2e.quantile(0.99),
             step_p50: m.step_time.quantile(0.5),
-            cache_utilization: m.cache_utilization,
-            running: m.running,
-            waiting: m.waiting,
+            cache_utilization: m.gauges.cache_utilization,
+            pool_used_blocks: m.gauges.pool_used_blocks,
+            pool_total_blocks: m.gauges.pool_total_blocks,
+            pool_logical_blocks: m.gauges.pool_logical_blocks,
+            prefix_cache_blocks: m.gauges.prefix_cache_blocks,
+            running: m.gauges.running,
+            running_peak: m.running_peak,
+            waiting: m.gauges.waiting,
+            preempted: m.gauges.preempted,
         }
     }
 }
@@ -125,6 +182,11 @@ pub struct MetricsSnapshot {
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub engine_steps: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub recompute_tokens: u64,
+    pub prefix_lookups: u64,
+    pub prefix_hits: u64,
     pub tokens_per_sec: f64,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
@@ -134,11 +196,23 @@ pub struct MetricsSnapshot {
     pub e2e_p99: f64,
     pub step_p50: f64,
     pub cache_utilization: f64,
+    pub pool_used_blocks: usize,
+    pub pool_total_blocks: usize,
+    pub pool_logical_blocks: usize,
+    pub prefix_cache_blocks: usize,
     pub running: usize,
+    pub running_peak: usize,
     pub waiting: usize,
+    pub preempted: usize,
 }
 
 impl MetricsSnapshot {
+    /// Prefix-cache hit rate over the engine's lifetime (0 when the cache
+    /// is disabled or untouched).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.prefix_hits as f64 / self.prefix_lookups.max(1) as f64
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::obj;
         obj([
@@ -149,6 +223,12 @@ impl MetricsSnapshot {
             ("tokens_generated", (self.tokens_generated as usize).into()),
             ("prefill_tokens", (self.prefill_tokens as usize).into()),
             ("engine_steps", (self.engine_steps as usize).into()),
+            ("preemptions", (self.preemptions as usize).into()),
+            ("resumes", (self.resumes as usize).into()),
+            ("recompute_tokens", (self.recompute_tokens as usize).into()),
+            ("prefix_lookups", (self.prefix_lookups as usize).into()),
+            ("prefix_hits", (self.prefix_hits as usize).into()),
+            ("prefix_hit_rate", self.prefix_hit_rate().into()),
             ("tokens_per_sec", self.tokens_per_sec.into()),
             ("ttft_p50_s", self.ttft_p50.into()),
             ("ttft_p99_s", self.ttft_p99.into()),
@@ -158,8 +238,14 @@ impl MetricsSnapshot {
             ("e2e_p99_s", self.e2e_p99.into()),
             ("step_p50_s", self.step_p50.into()),
             ("cache_utilization", self.cache_utilization.into()),
+            ("pool_used_blocks", self.pool_used_blocks.into()),
+            ("pool_total_blocks", self.pool_total_blocks.into()),
+            ("pool_logical_blocks", self.pool_logical_blocks.into()),
+            ("prefix_cache_blocks", self.prefix_cache_blocks.into()),
             ("running", self.running.into()),
+            ("running_peak", self.running_peak.into()),
             ("waiting", self.waiting.into()),
+            ("preempted", self.preempted.into()),
         ])
     }
 }
@@ -188,13 +274,66 @@ mod tests {
     }
 
     #[test]
+    fn preemption_and_prefix_counters() {
+        let m = Metrics::new();
+        m.on_preempt();
+        m.on_preempt();
+        m.on_resume(12);
+        // Prefix counters ride on the step gauges (the cache's own
+        // cumulative stats are the single source of truth).
+        m.on_step(
+            0.01,
+            StepGauges { prefix_lookups: 3, prefix_hits: 2, ..Default::default() },
+        );
+        let s = m.snapshot();
+        assert_eq!(s.preemptions, 2);
+        assert_eq!(s.resumes, 1);
+        assert_eq!(s.recompute_tokens, 12);
+        assert_eq!(s.prefix_lookups, 3);
+        assert_eq!(s.prefix_hits, 2);
+        assert!((s.prefix_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_peak_is_high_water_mark() {
+        let m = Metrics::new();
+        let g = |running| StepGauges { running, ..Default::default() };
+        m.on_step(0.01, g(3));
+        m.on_step(0.01, g(7));
+        m.on_step(0.01, g(2));
+        let s = m.snapshot();
+        assert_eq!(s.running, 2, "gauge is last step");
+        assert_eq!(s.running_peak, 7, "peak sticks");
+    }
+
+    #[test]
     fn snapshot_serializes() {
         let m = Metrics::new();
-        m.on_step(0.01, 2, 3, 0.4);
+        m.on_step(
+            0.01,
+            StepGauges {
+                running: 2,
+                waiting: 3,
+                preempted: 1,
+                cache_utilization: 0.4,
+                pool_used_blocks: 40,
+                pool_total_blocks: 100,
+                pool_logical_blocks: 52,
+                prefix_cache_blocks: 8,
+                ..Default::default()
+            },
+        );
         let j = m.snapshot().to_json();
         assert_eq!(j.get("running").as_usize(), Some(2));
         assert_eq!(j.get("waiting").as_usize(), Some(3));
+        assert_eq!(j.get("preempted").as_usize(), Some(1));
+        assert_eq!(j.get("pool_used_blocks").as_usize(), Some(40));
+        assert_eq!(j.get("pool_total_blocks").as_usize(), Some(100));
+        assert_eq!(j.get("pool_logical_blocks").as_usize(), Some(52));
+        assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(8));
+        assert_eq!(j.get("running_peak").as_usize(), Some(2));
         assert!(j.get("cache_utilization").as_f64().unwrap() > 0.39);
+        assert!(j.get("prefix_hit_rate").as_f64().is_some());
     }
 
     #[test]

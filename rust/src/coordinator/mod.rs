@@ -8,11 +8,15 @@
 //! clients → Router (ids, validation, dispatch)
 //!             │ mpsc
 //!             ▼
-//!          Engine thread (owns Runtime/backend + KvCacheManager)
+//!          Engine thread (owns Runtime/backend + KvCacheManager
+//!             │           + PrefixCache)
 //!             │  step loop:
-//!             │    admit (admission control, memory watermark)
-//!             │    plan  (continuous batcher: prefill + decode sets)
-//!             │    run   (prefill artifacts / decode artifacts / CPU ref)
+//!             │    admit (optimistic prompt-fit or worst-case reserve)
+//!             │    plan  (continuous batcher: resumes + prefills +
+//!             │           decode sets + preemption victims)
+//!             │    run   (prefix-hit forks / prefill artifacts / decode
+//!             │           artifacts / CPU ref; preempt + replay under
+//!             │           pool pressure)
 //!             ▼
 //!          per-request token streams → clients, Metrics
 //! ```
@@ -30,6 +34,7 @@ pub mod request;
 pub mod router;
 pub mod scheduler;
 
+pub use admission::AdmissionMode;
 pub use engine::{EngineConfig, EngineHandle};
 pub use metrics::MetricsSnapshot;
 pub use request::{FinishReason, Request, RequestId, TokenEvent};

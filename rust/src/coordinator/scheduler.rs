@@ -1,10 +1,16 @@
-//! Waiting-queue + running-set bookkeeping.
+//! Waiting-queue / running-set / preempted-set bookkeeping.
 //!
 //! Policy: priority classes with FCFS inside each class (stable order);
 //! the batcher decides how many waiting requests to prefill per step and
-//! the admission module decides whether they fit. No preemption: once
-//! running, a sequence keeps its cache blocks until it finishes (admission
-//! is conservative to make this deadlock-free).
+//! the admission module decides whether they fit. Running sequences are
+//! **preemptible**: when a decode step cannot allocate its next block,
+//! the batcher names victims — lowest priority class first, then
+//! most-recently-admitted within the class — which free their cache
+//! blocks and move to the preempted queue. Preempted requests keep their
+//! full generation state (tokens, sampling RNG, client stream) and are
+//! readmitted ahead of fresh work, rebuilding their cache by re-running
+//! prefill and replaying their generated tokens (recompute — bit
+//! identical to an uncontended run since every step is deterministic).
 
 use super::request::{Priority, Request, RequestId};
 use std::collections::VecDeque;
@@ -18,10 +24,16 @@ pub struct Running {
     pub last_token: i32,
     /// Tokens generated so far.
     pub generated: usize,
+    /// Every generated token in order (`tokens.len() == generated`).
+    /// Needed to replay the decode trail on readmission after preemption.
+    pub tokens: Vec<i32>,
     /// Per-request sampling RNG.
     pub rng: crate::util::rng::Rng,
     /// Time of first token (set after prefill).
     pub first_token_at: Option<std::time::Instant>,
+    /// Monotone admission stamp (victim tie-break: highest = most
+    /// recently admitted; refreshed on readmission).
+    pub admitted_seq: u64,
     pub events: super::request::EventTx,
 }
 
@@ -31,6 +43,11 @@ pub struct Scheduler {
     /// One FCFS queue per priority class (index = Priority as usize).
     waiting: [VecDeque<(Request, super::request::EventTx)>; 3],
     pub running: Vec<Running>,
+    /// Preempted mid-flight, awaiting readmission (FCFS). The `seq` field
+    /// of entries here is stale — their cache blocks are already freed.
+    pub preempted: VecDeque<Running>,
+    /// Source of `admitted_seq` stamps.
+    next_admission: u64,
 }
 
 impl Scheduler {
@@ -46,8 +63,12 @@ impl Scheduler {
         self.running.len()
     }
 
+    pub fn preempted_len(&self) -> usize {
+        self.preempted.len()
+    }
+
     pub fn is_idle(&self) -> bool {
-        self.waiting_len() == 0 && self.running.is_empty()
+        self.waiting_len() == 0 && self.running.is_empty() && self.preempted.is_empty()
     }
 
     pub fn enqueue(&mut self, req: Request, events: super::request::EventTx) {
@@ -75,6 +96,12 @@ impl Scheduler {
         None
     }
 
+    /// Fresh admission stamp for a sequence entering the running set.
+    pub fn next_admission_stamp(&mut self) -> u64 {
+        self.next_admission += 1;
+        self.next_admission
+    }
+
     /// Move a request into the running set.
     pub fn start(&mut self, running: Running) {
         self.running.push(running);
@@ -84,6 +111,24 @@ impl Scheduler {
     pub fn finish(&mut self, id: RequestId) -> Option<Running> {
         let idx = self.running.iter().position(|r| r.req.id == id)?;
         Some(self.running.swap_remove(idx))
+    }
+
+    /// Park a (already cache-freed) running state for readmission.
+    pub fn park_preempted(&mut self, run: Running) {
+        self.preempted.push_back(run);
+    }
+
+    /// Preemption victim among the running set, excluding `exclude`:
+    /// lowest priority class first, most-recently-admitted within it.
+    /// Rationale: recent admits have the least sunk decode work to
+    /// recompute, and older requests (closest to finishing and releasing
+    /// everything) keep their blocks.
+    pub fn select_victim(&self, exclude: &[RequestId]) -> Option<RequestId> {
+        self.running
+            .iter()
+            .filter(|r| !exclude.contains(&r.req.id))
+            .min_by_key(|r| (r.req.priority, std::cmp::Reverse(r.admitted_seq)))
+            .map(|r| r.req.id)
     }
 }
 
@@ -99,6 +144,21 @@ mod tests {
         // Leak the receiver for test simplicity: sender stays usable.
         std::mem::forget(_rx);
         (r, tx)
+    }
+
+    fn running(s: &mut Scheduler, id: RequestId, prio: Priority) -> Running {
+        let (r, tx) = req(id, prio);
+        Running {
+            req: r,
+            seq: id,
+            last_token: 0,
+            generated: 0,
+            tokens: Vec::new(),
+            rng: crate::util::rng::Rng::new(id),
+            first_token_at: None,
+            admitted_seq: s.next_admission_stamp(),
+            events: tx,
+        }
     }
 
     #[test]
@@ -141,19 +201,46 @@ mod tests {
     #[test]
     fn finish_removes_from_running() {
         let mut s = Scheduler::new();
-        let (r, tx) = req(9, Priority::Normal);
-        s.start(Running {
-            req: r,
-            seq: 1,
-            last_token: 0,
-            generated: 0,
-            rng: crate::util::rng::Rng::new(0),
-            first_token_at: None,
-            events: tx,
-        });
+        let run = running(&mut s, 9, Priority::Normal);
+        s.start(run);
         assert_eq!(s.running_len(), 1);
         assert!(s.finish(9).is_some());
         assert_eq!(s.running_len(), 0);
         assert!(s.finish(9).is_none());
+    }
+
+    #[test]
+    fn victim_is_lowest_priority_then_most_recent() {
+        let mut s = Scheduler::new();
+        for (id, prio) in [
+            (1, Priority::Interactive),
+            (2, Priority::Batch),
+            (3, Priority::Normal),
+            (4, Priority::Batch), // same class as 2, admitted later
+        ] {
+            let run = running(&mut s, id, prio);
+            s.start(run);
+        }
+        assert_eq!(s.select_victim(&[]), Some(4), "batch class, most recent");
+        assert_eq!(s.select_victim(&[4]), Some(2), "then the older batch");
+        assert_eq!(s.select_victim(&[4, 2]), Some(3), "then normal");
+        assert_eq!(s.select_victim(&[4, 2, 3]), Some(1));
+        assert_eq!(s.select_victim(&[4, 2, 3, 1]), None);
+    }
+
+    #[test]
+    fn preempted_parks_and_counts() {
+        let mut s = Scheduler::new();
+        let run = running(&mut s, 5, Priority::Normal);
+        s.start(run);
+        assert!(!s.is_idle());
+        let run = s.finish(5).unwrap();
+        s.park_preempted(run);
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.preempted_len(), 1);
+        assert!(!s.is_idle(), "preempted work keeps the engine awake");
+        let back = s.preempted.pop_front().unwrap();
+        assert_eq!(back.req.id, 5);
+        assert!(s.is_idle());
     }
 }

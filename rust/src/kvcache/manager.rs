@@ -5,6 +5,19 @@
 //! caches — frozen per-channel scales computed at prefill time (one f32
 //! per layer × head × channel × {K,V}).
 //!
+//! **Mid-flight lifecycle.** Sequences are first-class preemption
+//! citizens: [`KvCacheManager::free`] releases a sequence's blocks at any
+//! point of its life (the coordinator preempts victims under pool
+//! pressure and recomputes them on readmission), [`KvCacheManager::fork`]
+//! shares all current blocks copy-on-write (cross-request prefix sharing
+//! via [`super::prefix::PrefixCache`]), and [`Self::append_row`] is
+//! atomic — it either appends the row or fails without mutating the
+//! sequence, so a failed allocation can be retried after the coordinator
+//! reclaims blocks (prefix-cache eviction, then preemption). Free
+//! accounting is refcount-aware throughout: a block shared by N sequences
+//! occupies one pool slot and is returned to the free list only by its
+//! last holder.
+//!
 //! **Frozen-scale decode.** The paper quantizes a complete cache post-hoc
 //! with per-channel scales (eq. 6). In streaming generation the column max
 //! isn't known up front, so this manager freezes the scales measured over
@@ -21,7 +34,7 @@
 //! identical at every worker count (asserted by
 //! `tests/parallel_consistency.rs`).
 
-use super::pool::{BlockPool, BlockShape};
+use super::pool::{BlockId, BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
 use crate::parallel::{self, SendPtr};
@@ -139,6 +152,27 @@ impl KvCacheManager {
         self.pool.free_blocks()
     }
 
+    /// Physically occupied blocks (shared blocks counted once).
+    pub fn used_blocks(&self) -> usize {
+        self.pool.used_blocks()
+    }
+
+    /// Total blocks in the pool.
+    pub fn num_blocks(&self) -> usize {
+        self.cfg.num_blocks
+    }
+
+    /// Blocks held by more than one sequence (prefix sharing / COW).
+    pub fn shared_blocks(&self) -> usize {
+        self.pool.shared_blocks()
+    }
+
+    /// Sum of per-sequence footprints (shared blocks counted per holder);
+    /// `logical - used` is the memory prefix sharing is saving.
+    pub fn logical_blocks(&self) -> usize {
+        self.pool.logical_used_blocks()
+    }
+
     pub fn utilization(&self) -> f64 {
         self.pool.utilization()
     }
@@ -198,7 +232,10 @@ impl KvCacheManager {
         Ok(id)
     }
 
-    /// Release all blocks of a sequence.
+    /// Release all blocks of a sequence — legal at any point of its life
+    /// (mid-flight preemption included). Refcount-aware: blocks shared
+    /// with other sequences stay resident; only last-holder blocks return
+    /// to the free list.
     pub fn free(&mut self, id: SeqId) {
         if let Some(mut seq) = self.seqs.remove(&id) {
             for pair in &mut seq.tables {
@@ -213,6 +250,72 @@ impl KvCacheManager {
 
     pub fn seq_len(&self, id: SeqId) -> Option<usize> {
         self.seqs.get(&id).map(|s| s.len)
+    }
+
+    /// Blocks this sequence holds across all streams (logical footprint —
+    /// shared blocks count here even though they occupy one pool slot).
+    pub fn seq_blocks(&self, id: SeqId) -> usize {
+        self.seqs
+            .get(&id)
+            .map(|s| s.tables.iter().map(|pair| pair[0].len() + pair[1].len()).sum())
+            .unwrap_or(0)
+    }
+
+    /// Blocks that would return to the free list if this sequence were
+    /// freed right now: only its refcount-1 blocks. Shared blocks (prefix
+    /// cache / forks) stay resident for their other holders, so preemption
+    /// planning must not count them as reclaimable.
+    pub fn seq_reclaimable_blocks(&self, id: SeqId) -> usize {
+        self.seqs
+            .get(&id)
+            .map(|s| {
+                s.tables
+                    .iter()
+                    .flat_map(|pair| pair.iter())
+                    .flat_map(|t| t.blocks())
+                    .filter(|&&b| self.pool.refcount(b) == 1)
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Blocks a one-row [`Self::append_row`] on this sequence will take
+    /// from the free list: 2·L fresh blocks at a block boundary, otherwise
+    /// one per shared tail block that copy-on-write must duplicate.
+    pub fn append_need_blocks(&self, id: SeqId) -> usize {
+        let Some(seq) = self.seqs.get(&id) else { return 0 };
+        if seq.len % self.cfg.block_size == 0 {
+            return 2 * self.cfg.layers;
+        }
+        let tail_idx = (seq.len - 1) / self.cfg.block_size;
+        seq.tables
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .filter(|t| self.pool.refcount(t.blocks()[tail_idx]) > 1)
+            .count()
+    }
+
+    /// Verify pool refcounts exactly match the live block tables: every
+    /// used block is reachable, every reference is counted once, and
+    /// nothing is leaked. O(blocks); debug/test aid, also run on drop.
+    pub fn assert_refcounts_consistent(&self) {
+        let mut counted = vec![0u32; self.cfg.num_blocks];
+        for seq in self.seqs.values() {
+            for pair in &seq.tables {
+                for t in pair {
+                    for &b in t.blocks() {
+                        counted[b as usize] += 1;
+                    }
+                }
+            }
+        }
+        for (i, &c) in counted.iter().enumerate() {
+            let rc = self.pool.refcount(i as BlockId);
+            assert_eq!(
+                c, rc,
+                "block {i}: {rc} pool refs vs {c} table refs (leak or double-hold)"
+            );
+        }
     }
 
     /// Frozen scales of one (layer, K|V) stream, length heads·head_dim.
@@ -397,6 +500,17 @@ impl KvCacheManager {
             }
             (seq.len, seq.len % self.cfg.block_size == 0)
         };
+        // Atomicity: fail before touching the tables if the pool cannot
+        // cover this append (fresh blocks and/or COW copies), so a caller
+        // can reclaim blocks (evict prefix cache, preempt a victim) and
+        // retry without leaking half-allocated streams.
+        let need = self.append_need_blocks(id);
+        if need > self.pool.free_blocks() {
+            bail!(
+                "block pool exhausted: append needs {need} blocks, {} free",
+                self.pool.free_blocks()
+            );
+        }
         if need_block {
             for layer in 0..l {
                 for kv in 0..2 {
@@ -558,6 +672,18 @@ impl KvCacheManager {
             }
         });
         Ok(len)
+    }
+}
+
+impl Drop for KvCacheManager {
+    /// Double-free / leak guard: when a manager goes away, its pool
+    /// refcounts must still exactly match the live block tables. Debug
+    /// builds only (tier-1 tests run debug); skipped mid-panic so a
+    /// failing test reports its own assertion, not a drop cascade.
+    fn drop(&mut self) {
+        if cfg!(debug_assertions) && !std::thread::panicking() {
+            self.assert_refcounts_consistent();
+        }
     }
 }
 
@@ -815,6 +941,72 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn shared_blocks_reported_once_and_reclaim_is_refcount_aware() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let a = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 8, 21); // 2 blocks x 4 streams = 8
+        m.set_prefill(a, &k, &v, 8).unwrap();
+        let used = m.used_blocks();
+        assert_eq!(used, 8);
+        let b = m.fork(a).unwrap();
+        // Physical occupancy unchanged; all 8 blocks now shared.
+        assert_eq!(m.used_blocks(), used, "fork allocates nothing");
+        assert_eq!(m.shared_blocks(), 8);
+        assert_eq!(m.seq_blocks(b), 8, "logical footprint");
+        assert_eq!(m.seq_reclaimable_blocks(b), 0, "all shared — freeing b reclaims none");
+        m.assert_refcounts_consistent();
+        m.free(b);
+        assert_eq!(m.used_blocks(), used, "a still holds everything");
+        assert_eq!(m.seq_reclaimable_blocks(a), 8);
+        m.free(a);
+        assert_eq!(m.free_blocks(), c.num_blocks);
+        m.assert_refcounts_consistent(); // and again via Drop
+    }
+
+    #[test]
+    fn append_need_accounts_boundaries_and_cow() {
+        let c = cfg(Precision::Int8); // layers=2, block_size=4
+        let mut m = KvCacheManager::new(c);
+        let a = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 22); // exactly one full block
+        m.set_prefill(a, &k, &v, 4).unwrap();
+        // len % block_size == 0: next append opens a block per stream.
+        assert_eq!(m.append_need_blocks(a), 2 * c.layers);
+        let hd = c.layers * c.heads * c.head_dim;
+        m.append_row(a, &vec![0.1; hd], &vec![0.1; hd]).unwrap();
+        // Mid-block, unshared: append allocates nothing.
+        assert_eq!(m.append_need_blocks(a), 0);
+        // Fork shares the (partial) tail block: COW needs one per stream.
+        let b = m.fork(a).unwrap();
+        assert_eq!(m.append_need_blocks(b), 2 * c.layers);
+        m.free(a);
+        m.free(b);
+    }
+
+    #[test]
+    fn failed_append_leaves_sequence_untouched() {
+        // Pool sized so the prefill fits but the block-boundary append
+        // cannot: the append must fail atomically and stay retryable.
+        let c = CacheConfig { num_blocks: 4, ..cfg(Precision::Int8) };
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 23); // 1 block x 4 streams = 4
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        assert_eq!(m.free_blocks(), 0);
+        let hd = c.layers * c.heads * c.head_dim;
+        let before = m.seq_blocks(id);
+        assert!(m.append_row(id, &vec![0.2; hd], &vec![0.2; hd]).is_err());
+        assert_eq!(m.seq_blocks(id), before, "no partial allocation");
+        assert_eq!(m.seq_len(id), Some(4));
+        m.assert_refcounts_consistent();
+        m.free(id);
+        // Retry path: blocks are back, the same append now succeeds on a
+        // fresh sequence.
+        assert_eq!(m.free_blocks(), 4);
     }
 
     #[test]

@@ -7,10 +7,15 @@
 //!   and reference counts (refcounts enable prefix sharing / fork).
 //! * [`table`]: per-sequence block tables mapping token positions to
 //!   blocks, one table per (layer, K|V) stream.
-//! * [`manager`]: the engine-facing API — create/fork/free sequences,
-//!   quantize-and-append K/V rows (frozen prefill scales, clamped),
-//!   gather a sequence's stream into the contiguous staging layout the
-//!   decode artifact consumes, watermark admission queries.
+//! * [`manager`]: the engine-facing API — create/fork/free sequences
+//!   (mid-flight free powers preemption), quantize-and-append K/V rows
+//!   (frozen prefill scales, clamped; appends are atomic and retryable
+//!   after reclaim), gather a sequence's stream into the contiguous
+//!   staging layout the decode artifact consumes, refcount-aware free
+//!   accounting for admission and preemption planning.
+//! * [`prefix`]: the cross-request prefix cache — exact-prompt entries
+//!   fork their cached sequence so repeated prompts skip prefill and
+//!   re-quantization entirely (bit-identical shared blocks).
 //! * [`memory_model`]: the closed-form Table-1 calculator.
 //!
 //! Precision is a per-cache config ([`Precision`]); FP32 and INT8 caches
@@ -20,11 +25,13 @@
 pub mod manager;
 pub mod memory_model;
 pub mod pool;
+pub mod prefix;
 pub mod table;
 
 pub use manager::{KvCacheManager, SequenceCache};
 pub use memory_model::MemoryModel;
 pub use pool::{BlockId, BlockPool};
+pub use prefix::{PrefixCache, PrefixStats};
 
 /// Storage precision of cache pages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

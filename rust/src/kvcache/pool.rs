@@ -71,10 +71,26 @@ impl BlockPool {
         self.free.len()
     }
 
+    /// Physically occupied blocks. A block shared by N sequences (COW /
+    /// prefix sharing) is counted **once** — this is true pool pressure,
+    /// not the sum of per-sequence footprints.
     pub fn used_blocks(&self) -> usize {
         self.num_blocks - self.free.len()
     }
 
+    /// Sum of refcounts: the per-sequence ("logical") footprint. With
+    /// prefix sharing this exceeds [`Self::used_blocks`]; the difference
+    /// is memory the COW machinery is saving.
+    pub fn logical_used_blocks(&self) -> usize {
+        self.refcounts.iter().map(|&rc| rc as usize).sum()
+    }
+
+    /// Blocks held by more than one sequence (refcount > 1).
+    pub fn shared_blocks(&self) -> usize {
+        self.refcounts.iter().filter(|&&rc| rc > 1).count()
+    }
+
+    /// True physical utilization (shared blocks counted once).
     pub fn utilization(&self) -> f64 {
         self.used_blocks() as f64 / self.num_blocks.max(1) as f64
     }
@@ -255,6 +271,23 @@ mod tests {
         assert_eq!(p.free_blocks(), 1, "still held");
         p.release(a);
         assert_eq!(p.free_blocks(), 2);
+    }
+
+    #[test]
+    fn shared_blocks_count_once_physically() {
+        let mut p = BlockPool::new(4, shape(), Precision::Int8);
+        let a = p.alloc().unwrap();
+        let _b = p.alloc().unwrap();
+        p.retain(a); // a now shared by two logical holders
+        p.retain(a); // and a third
+        assert_eq!(p.used_blocks(), 2, "physical: shared block counted once");
+        assert_eq!(p.logical_used_blocks(), 4, "logical: 3 holds of a + 1 of b");
+        assert_eq!(p.shared_blocks(), 1);
+        assert_eq!(p.free_blocks(), 2, "free list unaffected by retains");
+        p.release(a);
+        p.release(a);
+        assert_eq!(p.shared_blocks(), 0);
+        assert_eq!(p.used_blocks(), 2, "a still held once");
     }
 
     #[test]

@@ -1,0 +1,387 @@
+//! Cross-request prefix cache over the COW block pool.
+//!
+//! Serving traffic repeats prompts — system preambles, few-shot headers,
+//! retry storms. This cache keeps the quantized prompt blocks of recently
+//! prefilled sequences alive (as cache-owned forks inside the
+//! [`KvCacheManager`]) so an identical prompt is admitted by
+//! reference-bumping those blocks instead of re-running prefill and
+//! re-quantizing: the hit path is a [`KvCacheManager::fork`] plus a clone
+//! of the stored last-position logits (for first-token sampling), zero
+//! backend compute.
+//!
+//! **Bit-exactness policy.** Matching is at block granularity over prompt
+//! tokens, but a *usable* hit requires the stored prompt to equal the
+//! query prompt exactly. INT8 scales are frozen per sequence over its
+//! whole prompt (eq. 6 applied at prefill), so a partial-prefix reuse
+//! would inherit scales frozen over a *different* token set and the
+//! decode trajectory could diverge from an uncontended run. Exact-match
+//! sharing inherits exactly the scales the query's own prefill would have
+//! frozen — shared blocks, scales, and therefore generated tokens are
+//! bit-identical to the unshared baseline (asserted by
+//! `tests/preemption.rs`). Partial-prefix reuse stays future work gated
+//! on per-block scale storage.
+//!
+//! **Budget + eviction.** The cache pins at most `capacity_blocks`
+//! logical blocks (`0` disables it, the default). Insertion and the
+//! coordinator's pool-pressure path evict LRU entries; freeing an entry
+//! releases its fork, which returns only last-holder blocks to the pool —
+//! entries whose blocks are still shared with running sequences cost
+//! nothing extra to keep and nothing to drop.
+
+use super::manager::{KvCacheManager, SeqId};
+use std::collections::HashMap;
+
+/// One cached prompt: a manager-owned fork of the sequence that prefilled
+/// it, plus everything needed to skip that prefill next time.
+struct Entry {
+    /// Cache-owned sequence holding the prompt blocks alive.
+    seq: SeqId,
+    /// Last-position prefill logits (first-token sampling input).
+    logits: Vec<f32>,
+    /// Logical blocks this entry pins (budget accounting).
+    blocks: usize,
+    /// LRU tick of the last hit/insert.
+    last_used: u64,
+}
+
+/// Counters for `/metrics` and the bench report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl PrefixStats {
+    pub fn hit_rate(&self) -> f64 {
+        self.hits as f64 / (self.lookups.max(1)) as f64
+    }
+}
+
+/// The cache. Owned by the engine next to its [`KvCacheManager`]; every
+/// mutating call takes the manager so entry lifetimes and pool refcounts
+/// move together.
+pub struct PrefixCache {
+    /// Max logical blocks pinned; 0 disables the cache entirely.
+    capacity_blocks: usize,
+    entries: HashMap<Vec<i32>, Entry>,
+    pinned: usize,
+    tick: u64,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(capacity_blocks: usize) -> PrefixCache {
+        PrefixCache {
+            capacity_blocks,
+            entries: HashMap::new(),
+            pinned: 0,
+            tick: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_blocks > 0
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    /// Logical blocks currently pinned by cache entries.
+    pub fn pinned_blocks(&self) -> usize {
+        self.pinned
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Look up a prompt. On a hit, returns a **fresh fork** of the cached
+    /// sequence (caller owns it) and the stored first-token logits; the
+    /// shared prompt blocks are reference-bumped, never copied or
+    /// re-quantized.
+    pub fn lookup(
+        &mut self,
+        mgr: &mut KvCacheManager,
+        prompt: &[i32],
+    ) -> Option<(SeqId, Vec<f32>)> {
+        if !self.enabled() {
+            return None;
+        }
+        self.stats.lookups += 1;
+        self.tick += 1;
+        let entry = self.entries.get_mut(prompt)?;
+        let fork = match mgr.fork(entry.seq) {
+            Ok(id) => id,
+            Err(_) => return None, // cached seq vanished — treat as miss
+        };
+        entry.last_used = self.tick;
+        self.stats.hits += 1;
+        Some((fork, entry.logits.clone()))
+    }
+
+    /// Cache a freshly prefilled sequence: forks `src` (the live request's
+    /// sequence) into a cache-owned sequence, evicting LRU entries to
+    /// respect the block budget. No-ops when disabled, when the prompt is
+    /// already cached, or when the entry alone exceeds the whole budget.
+    pub fn insert(
+        &mut self,
+        mgr: &mut KvCacheManager,
+        src: SeqId,
+        prompt: &[i32],
+        logits: &[f32],
+    ) {
+        if !self.enabled() || self.entries.contains_key(prompt) {
+            return;
+        }
+        let blocks = mgr.config().blocks_for_tokens(prompt.len());
+        if blocks > self.capacity_blocks {
+            return;
+        }
+        while self.pinned + blocks > self.capacity_blocks {
+            if !self.evict_lru(mgr) {
+                return; // nothing left to evict, budget still blown
+            }
+        }
+        let Ok(seq) = mgr.fork(src) else { return };
+        self.tick += 1;
+        self.pinned += blocks;
+        self.stats.insertions += 1;
+        self.entries.insert(
+            prompt.to_vec(),
+            Entry { seq, logits: logits.to_vec(), blocks, last_used: self.tick },
+        );
+    }
+
+    /// Remove one entry and release its fork.
+    fn evict_entry(&mut self, key: &[i32], mgr: &mut KvCacheManager) {
+        let entry = self.entries.remove(key).unwrap();
+        self.pinned -= entry.blocks;
+        self.stats.evictions += 1;
+        mgr.free(entry.seq);
+    }
+
+    /// Drop the least-recently-used entry; returns false when empty.
+    /// Budget-driven eviction: every entry counts against the logical
+    /// pin budget, shared or not, so plain LRU order is correct here.
+    pub fn evict_lru(&mut self, mgr: &mut KvCacheManager) -> bool {
+        let Some(key) = self
+            .entries
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())
+        else {
+            return false;
+        };
+        self.evict_entry(&key, mgr);
+        true
+    }
+
+    /// Drop the LRU entry **among those whose eviction returns blocks to
+    /// the pool right now** (refcount-1 holders); returns false when no
+    /// entry can reclaim anything. Pool-pressure eviction must use this,
+    /// not plain LRU: dropping a fully-shared entry frees nothing yet
+    /// forfeits its future hits.
+    pub fn evict_reclaimable_lru(&mut self, mgr: &mut KvCacheManager) -> bool {
+        let Some(key) = self
+            .entries
+            .iter()
+            .filter(|(_, e)| mgr.seq_reclaimable_blocks(e.seq) > 0)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())
+        else {
+            return false;
+        };
+        self.evict_entry(&key, mgr);
+        true
+    }
+
+    /// Evict reclaimable entries (LRU-first) until at least `want_free`
+    /// pool blocks are free or nothing evictable remains. The
+    /// pool-pressure valve: the coordinator drains cached prefixes before
+    /// preempting running requests. Entries fully shared with live
+    /// sequences are skipped — freeing them returns nothing and keeping
+    /// them costs the pool nothing.
+    pub fn evict_for(&mut self, mgr: &mut KvCacheManager, want_free: usize) {
+        while mgr.free_blocks() < want_free && self.evict_reclaimable_lru(mgr) {}
+    }
+
+    /// Drop everything (engine shutdown / reconfiguration).
+    pub fn clear(&mut self, mgr: &mut KvCacheManager) {
+        while self.evict_lru(mgr) {}
+    }
+
+    /// Upper bound on pool blocks an eviction sweep could return right
+    /// now: the pinned blocks that are *not* shared with anyone else.
+    pub fn evictable_blocks(&self, mgr: &KvCacheManager) -> usize {
+        self.entries.values().map(|e| mgr.seq_reclaimable_blocks(e.seq)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::CacheConfig;
+    use crate::kvcache::Precision;
+
+    fn cfg(num_blocks: usize) -> CacheConfig {
+        CacheConfig {
+            layers: 2,
+            heads: 2,
+            head_dim: 8,
+            max_seq: 32,
+            block_size: 4,
+            num_blocks,
+            precision: Precision::Int8,
+            scale_margin: 1.0,
+        }
+    }
+
+    fn prefill(mgr: &mut KvCacheManager, len: usize, seed: u64) -> SeqId {
+        let c = *mgr.config();
+        let n = c.layers * c.heads * c.max_seq * c.head_dim;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform(&mut k, -1.0, 1.0);
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        let id = mgr.new_sequence();
+        mgr.set_prefill(id, &k, &v, len).unwrap();
+        id
+    }
+
+    #[test]
+    fn disabled_cache_never_hits_or_pins() {
+        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut pc = PrefixCache::new(0);
+        let src = prefill(&mut mgr, 8, 1);
+        pc.insert(&mut mgr, src, &[1, 2, 3], &[0.0; 4]);
+        assert!(pc.lookup(&mut mgr, &[1, 2, 3]).is_none());
+        assert_eq!(pc.pinned_blocks(), 0);
+        assert_eq!(pc.stats(), PrefixStats::default());
+        mgr.free(src);
+    }
+
+    #[test]
+    fn hit_forks_without_allocating() {
+        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut pc = PrefixCache::new(64);
+        let prompt = vec![5i32; 8];
+        let src = prefill(&mut mgr, 8, 2);
+        pc.insert(&mut mgr, src, &prompt, &[1.0, 2.0]);
+        mgr.free(src); // request finished; cache keeps the blocks alive
+        let used = mgr.used_blocks();
+        let (fork, logits) = pc.lookup(&mut mgr, &prompt).unwrap();
+        assert_eq!(logits, vec![1.0, 2.0]);
+        assert_eq!(mgr.used_blocks(), used, "hit reference-bumps, allocates nothing");
+        assert_eq!(mgr.seq_len(fork), Some(8));
+        assert_eq!(pc.stats().hits, 1);
+        assert_eq!(pc.stats().lookups, 1);
+        assert!((pc.stats().hit_rate() - 1.0).abs() < 1e-12);
+        mgr.free(fork);
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+    }
+
+    #[test]
+    fn exact_match_only() {
+        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut pc = PrefixCache::new(64);
+        let src = prefill(&mut mgr, 8, 3);
+        pc.insert(&mut mgr, src, &[7i32; 8], &[0.0]);
+        // Same leading blocks, longer prompt: not bit-exact to reuse.
+        assert!(pc.lookup(&mut mgr, &[7i32; 12]).is_none());
+        assert!(pc.lookup(&mut mgr, &[7i32; 4]).is_none());
+        assert_eq!(pc.stats().hits, 0);
+        assert_eq!(pc.stats().lookups, 2);
+        mgr.free(src);
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        let mut mgr = KvCacheManager::new(cfg(128));
+        // 8 tokens -> 2 blocks x 4 streams = 8 logical blocks per entry.
+        let mut pc = PrefixCache::new(16);
+        let a = prefill(&mut mgr, 8, 4);
+        let b = prefill(&mut mgr, 8, 5);
+        let c = prefill(&mut mgr, 8, 6);
+        pc.insert(&mut mgr, a, &[1i32; 8], &[0.0]);
+        pc.insert(&mut mgr, b, &[2i32; 8], &[0.0]);
+        assert_eq!(pc.pinned_blocks(), 16);
+        // Touch entry 1 so entry 2 is LRU.
+        let touch = pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 cached");
+        mgr.free(touch.0);
+        pc.insert(&mut mgr, c, &[3i32; 8], &[0.0]);
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.stats().evictions, 1);
+        assert!(pc.lookup(&mut mgr, &[2i32; 8]).is_none(), "LRU entry evicted");
+        let again = pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 survived");
+        mgr.free(again.0);
+        for s in [a, b, c] {
+            mgr.free(s);
+        }
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks, "no leaks");
+    }
+
+    #[test]
+    fn oversized_entry_is_not_cached() {
+        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut pc = PrefixCache::new(4); // one 8-token entry needs 8
+        let src = prefill(&mut mgr, 8, 7);
+        pc.insert(&mut mgr, src, &[9i32; 8], &[0.0]);
+        assert!(pc.is_empty());
+        assert_eq!(pc.stats().insertions, 0);
+        mgr.free(src);
+    }
+
+    #[test]
+    fn pool_pressure_eviction_skips_fully_shared_entries() {
+        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut pc = PrefixCache::new(32);
+        // Entry A (older) stays shared with a live sequence; entry B
+        // (newer) is the only holder of its blocks.
+        let a = prefill(&mut mgr, 8, 11);
+        pc.insert(&mut mgr, a, &[1i32; 8], &[0.0]); // a keeps its fork alive
+        let b = prefill(&mut mgr, 8, 12);
+        pc.insert(&mut mgr, b, &[2i32; 8], &[0.0]);
+        mgr.free(b); // only the cache holds B's blocks now
+        let free_before = mgr.free_blocks();
+        pc.evict_for(&mut mgr, free_before + 8);
+        assert_eq!(mgr.free_blocks(), free_before + 8, "B's blocks reclaimed");
+        assert!(
+            pc.lookup(&mut mgr, &[2i32; 8]).is_none(),
+            "reclaimable entry B evicted"
+        );
+        let hit = pc.lookup(&mut mgr, &[1i32; 8]).expect("shared entry A survives");
+        mgr.free(hit.0);
+        mgr.free(a);
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn evict_for_frees_pool_pressure() {
+        let mut mgr = KvCacheManager::new(cfg(16));
+        let mut pc = PrefixCache::new(16);
+        let src = prefill(&mut mgr, 8, 8); // 8 blocks
+        pc.insert(&mut mgr, src, &[4i32; 8], &[0.0]);
+        mgr.free(src); // only the cache holds them now
+        assert_eq!(mgr.free_blocks(), 8);
+        assert_eq!(pc.evictable_blocks(&mgr), 8);
+        pc.evict_for(&mut mgr, 12);
+        assert!(mgr.free_blocks() >= 12);
+        assert!(pc.is_empty());
+    }
+}

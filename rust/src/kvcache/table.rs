@@ -33,7 +33,11 @@ impl BlockTable {
     /// Block + in-block row for a token position.
     pub fn locate(&self, pos: usize, block_size: usize) -> (BlockId, usize) {
         let b = pos / block_size;
-        assert!(b < self.blocks.len(), "position {pos} beyond table ({} blocks)", self.blocks.len());
+        assert!(
+            b < self.blocks.len(),
+            "position {pos} beyond table ({} blocks)",
+            self.blocks.len()
+        );
         (self.blocks[b], pos % block_size)
     }
 

@@ -61,6 +61,10 @@ COMMANDS:
              --model kvq-3m|kvq-25m --precision int8|fp32 --port 8080
              --backend pjrt|cpu --decode-kernel plain|pallas
              --threads N (0 = auto; parallel quantization runtime)
+             --admission-mode optimistic|worst-case (preemptive vs
+               conservative scheduling; default optimistic)
+             --prefix-cache-blocks N (cross-request prompt sharing
+               budget in cache blocks; 0 = off)
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -143,6 +147,8 @@ fn serve(args: Args) -> Result<()> {
         cfg.precision.name(),
         if cfg.backend == Backend::Pjrt { "pjrt" } else { "cpu" },
         threads,
+        cfg.batcher.admission.mode.name(),
+        cfg.prefix_cache_blocks,
         server.local_port(),
     );
     let service = Arc::new(KvqService::with_info(Arc::new(router), info));

@@ -167,7 +167,8 @@ impl PjrtBackend {
 
     fn run_with_params(&self, name: &str, extra: &[xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
         let exe = self.rt.load(name)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(self.param_buffers.len() + extra.len());
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.param_buffers.len() + extra.len());
         args.extend(self.param_buffers.iter());
         args.extend(extra.iter());
         exe.run_b(&args)

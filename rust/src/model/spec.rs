@@ -97,8 +97,13 @@ impl ModelSpec {
         }
         for (i, ((name, shape), mj)) in ours.iter().zip(manifest_params).enumerate() {
             let mname = mj.get("name").as_str().unwrap_or("");
-            let mshape: Vec<usize> =
-                mj.get("shape").as_arr().unwrap_or(&[]).iter().filter_map(|v| v.as_usize()).collect();
+            let mshape: Vec<usize> = mj
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
             if mname != name || &mshape != shape {
                 return Err(anyhow!(
                     "param {i} ABI mismatch: rust {name}{shape:?} vs manifest {mname}{mshape:?}"

@@ -140,7 +140,9 @@ impl Manifest {
     pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
         self.entries
             .get(name)
-            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} entries)", self.entries.len()))
+            .ok_or_else(|| {
+                anyhow!("artifact {name:?} not in manifest ({} entries)", self.entries.len())
+            })
     }
 
     /// Absolute path of an entry's HLO file.

@@ -62,13 +62,16 @@ pub fn error_response(msg: &str) -> Json {
     obj([("error", msg.into())])
 }
 
-/// `GET /config` body: the effective serving configuration, including the
-/// resolved `parallelism` worker count of the quantization runtime.
+/// `GET /config` body: the effective serving configuration — the resolved
+/// `parallelism` worker count of the quantization runtime plus the
+/// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`).
 pub fn config_response(
     model: &str,
     precision: &str,
     backend: &str,
     parallelism: usize,
+    admission_mode: &str,
+    prefix_cache_blocks: usize,
     port: u16,
 ) -> Json {
     obj([
@@ -76,6 +79,8 @@ pub fn config_response(
         ("precision", precision.into()),
         ("backend", backend.into()),
         ("parallelism", parallelism.into()),
+        ("admission_mode", admission_mode.into()),
+        ("prefix_cache_blocks", prefix_cache_blocks.into()),
         ("port", (port as usize).into()),
     ])
 }
@@ -114,9 +119,11 @@ mod tests {
 
     #[test]
     fn config_response_shape() {
-        let j = config_response("kvq-3m", "int8", "cpu", 4, 8080);
+        let j = config_response("kvq-3m", "int8", "cpu", 4, "optimistic", 512, 8080);
         assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
         assert_eq!(j.get("parallelism").as_usize(), Some(4));
+        assert_eq!(j.get("admission_mode").as_str(), Some("optimistic"));
+        assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(512));
         assert_eq!(j.get("port").as_usize(), Some(8080));
     }
 

@@ -126,7 +126,10 @@ impl Args {
         if unknown.is_empty() {
             Ok(())
         } else {
-            Err(format!("unknown flag(s): {}", unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")))
+            Err(format!(
+                "unknown flag(s): {}",
+                unknown.iter().map(|s| format!("--{s}")).collect::<Vec<_>>().join(", ")
+            ))
         }
     }
 }

@@ -59,7 +59,12 @@ impl Gen {
 
     /// A (rows, cols, data) matrix with values drawn from one of several
     /// distributions (uniform / normal / outlier-heavy / constant / zeros).
-    pub fn matrix(&mut self, rows: Range<usize>, cols: Range<usize>, mag: f32) -> (usize, usize, Vec<f32>) {
+    pub fn matrix(
+        &mut self,
+        rows: Range<usize>,
+        cols: Range<usize>,
+        mag: f32,
+    ) -> (usize, usize, Vec<f32>) {
         let t = self.usize_in(rows);
         let d = self.usize_in(cols);
         let mut data = vec![0.0f32; t * d];

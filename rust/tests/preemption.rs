@@ -1,0 +1,226 @@
+//! Fork/COW through the *serving* path: optimistic admission, preemption
+//! with recompute-on-readmission, and cross-request prefix sharing must
+//! never change generated tokens — an overloaded pool only changes *when*
+//! work runs, not *what* it computes.
+//!
+//! Uses the CPU oracle backend (test-tiny: layers=2, heads=2, block=8,
+//! max_seq=32, vocab=64), so every step is deterministic and byte-exact
+//! comparisons are meaningful.
+
+use kvq::coordinator::admission::{AdmissionConfig, AdmissionMode};
+use kvq::coordinator::batcher::BatcherConfig;
+use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::request::{collect_response, FinishReason};
+use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::coordinator::{EngineHandle, MetricsSnapshot};
+use kvq::kvcache::Precision;
+use kvq::model::runner::CpuBackend;
+use kvq::model::sample::SamplingParams;
+use kvq::model::weights::Weights;
+use kvq::model::ModelSpec;
+
+fn cpu_factory() -> impl FnOnce() -> anyhow::Result<Box<dyn kvq::model::LmBackend>> + Send {
+    || {
+        let spec = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&spec, 7);
+        Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+    }
+}
+
+/// Engine with an explicit pool size / admission mode / prefix budget.
+fn engine_with(
+    num_blocks: Option<usize>,
+    mode: AdmissionMode,
+    prefix_cache_blocks: usize,
+    max_prefills: usize,
+) -> (EngineHandle, std::thread::JoinHandle<()>) {
+    let cfg = EngineConfig {
+        precision: Precision::Int8,
+        num_blocks,
+        prefix_cache_blocks,
+        batcher: BatcherConfig {
+            max_prefills_per_step: max_prefills,
+            admission: AdmissionConfig { mode, max_running: 8, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    engine::spawn(cfg, cpu_factory())
+}
+
+/// Distinct, vocab-safe prompts (test-tiny vocab = 64).
+fn prompts() -> Vec<Vec<i32>> {
+    (0..6u8)
+        .map(|i| {
+            let len = if i == 1 { 10 } else { 8 }; // one unaligned prompt (COW tail)
+            (0..len).map(|j| ((i as i32 + 2) * 7 + j as i32) % 64).collect()
+        })
+        .collect()
+}
+
+/// Run every prompt through an engine, one at a time (uncontended), and
+/// return the token streams.
+fn run_requests(
+    h: &EngineHandle,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    concurrent: bool,
+) -> Vec<Vec<i32>> {
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("e", h.clone());
+    if concurrent {
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        streams
+            .iter()
+            .map(|rx| {
+                let (tokens, reason, ..) = collect_response(rx);
+                assert_eq!(reason, FinishReason::Length, "request must finish");
+                tokens
+            })
+            .collect()
+    } else {
+        prompts
+            .iter()
+            .map(|p| {
+                let (_, rx) =
+                    router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+                let (tokens, reason, ..) = collect_response(&rx);
+                assert_eq!(reason, FinishReason::Length);
+                tokens
+            })
+            .collect()
+    }
+}
+
+fn drain(h: EngineHandle, join: std::thread::JoinHandle<()>) -> MetricsSnapshot {
+    h.drain();
+    join.join().unwrap();
+    h.metrics.snapshot()
+}
+
+/// Uncontended reference outputs: huge pool, sequential submission.
+fn baseline(max_new: usize) -> Vec<Vec<i32>> {
+    let (h, join) = engine_with(None, AdmissionMode::Optimistic, 0, 1);
+    let out = run_requests(&h, &prompts(), max_new, false);
+    let m = drain(h, join);
+    assert_eq!(m.preemptions, 0, "baseline must be uncontended");
+    out
+}
+
+#[test]
+fn overload_preempts_then_finishes_bit_identical() {
+    let max_new = 16;
+    let expect = baseline(max_new);
+
+    // Pool of 24 blocks: each request's worst case is 12–16 blocks, so
+    // six concurrent requests overload the pool ~3x. Optimistic admission
+    // lets them in on prompt footprints; decode growth must then preempt.
+    let (h, join) = engine_with(Some(24), AdmissionMode::Optimistic, 0, 6);
+    let got = run_requests(&h, &prompts(), max_new, true);
+    let m = drain(h, join);
+
+    assert_eq!(got, expect, "preempted runs must be byte-identical to uncontended runs");
+    assert_eq!(m.requests_finished, 6);
+    assert!(m.preemptions > 0, "overload must actually preempt (got {})", m.preemptions);
+    assert_eq!(m.resumes, m.preemptions, "every victim is readmitted exactly once");
+    assert!(m.recompute_tokens > 0, "readmission recomputes prompt + trail");
+    assert_eq!(m.preempted, 0, "nothing left parked after drain");
+    assert_eq!(m.pool_total_blocks, 24);
+}
+
+#[test]
+fn optimistic_sustains_more_concurrency_than_worst_case() {
+    let max_new = 16;
+    let expect = baseline(max_new);
+
+    let run_mode = |mode: AdmissionMode| {
+        let (h, join) = engine_with(Some(24), mode, 0, 6);
+        let got = run_requests(&h, &prompts(), max_new, true);
+        (got, drain(h, join))
+    };
+    let (got_wc, m_wc) = run_mode(AdmissionMode::WorstCase);
+    let (got_opt, m_opt) = run_mode(AdmissionMode::Optimistic);
+
+    assert_eq!(got_wc, expect, "worst-case admission changes nothing about outputs");
+    assert_eq!(got_opt, expect, "optimistic admission changes nothing about outputs");
+    assert_eq!(m_wc.preemptions, 0, "full reservation never needs preemption");
+    assert!(
+        m_opt.running_peak > m_wc.running_peak,
+        "optimistic admission must sustain strictly more concurrent sequences \
+         ({} vs {})",
+        m_opt.running_peak,
+        m_wc.running_peak
+    );
+}
+
+#[test]
+fn shared_prompt_prefix_is_bit_identical_and_hits() {
+    let max_new = 8;
+    let prompt: Vec<i32> = (0..8).map(|j| (j * 5 + 3) % 64).collect();
+    let workload = vec![prompt.clone(), prompt.clone(), prompt];
+
+    // Unshared reference: prefix cache disabled.
+    let (h, join) = engine_with(None, AdmissionMode::Optimistic, 0, 1);
+    let expect = run_requests(&h, &workload, max_new, false);
+    let m = drain(h, join);
+    assert_eq!(m.prefix_lookups, 0, "disabled cache never counts lookups");
+
+    // Shared: second and third submissions fork the cached prompt blocks.
+    let (h, join) = engine_with(None, AdmissionMode::Optimistic, 64, 1);
+    let got = run_requests(&h, &workload, max_new, false);
+    let m = drain(h, join);
+    assert_eq!(got, expect, "prefix-shared runs must be byte-identical to unshared runs");
+    assert_eq!(m.prefix_lookups, 3);
+    assert!(m.prefix_hits >= 2, "repeat prompts must hit (got {})", m.prefix_hits);
+    assert!(m.prefix_hit_rate() > 0.0);
+    assert!(m.prefix_cache_blocks > 0, "entries stay pinned while budget allows");
+}
+
+#[test]
+fn preemption_and_prefix_sharing_compose() {
+    // 6 requests over 2 distinct prompts on an overloaded pool with a
+    // prefix budget: hits, preemptions, and recompute all interleave and
+    // the outputs still match the uncontended baseline exactly.
+    let max_new = 16;
+    let two: Vec<Vec<i32>> = vec![prompts()[0].clone(), prompts()[2].clone()];
+    let workload: Vec<Vec<i32>> =
+        (0..6).map(|i| two[i % 2].clone()).collect();
+
+    let (h, join) = engine_with(None, AdmissionMode::Optimistic, 0, 1);
+    let expect = run_requests(&h, &workload, max_new, false);
+    drain(h, join);
+
+    let (h, join) = engine_with(Some(24), AdmissionMode::Optimistic, 8, 6);
+    let got = run_requests(&h, &workload, max_new, true);
+    let m = drain(h, join);
+    assert_eq!(got, expect, "sharing + preemption must not change outputs");
+    assert_eq!(m.requests_finished, 6);
+    assert!(m.prefix_hits > 0, "repeated prompts should hit (got {})", m.prefix_hits);
+    assert!(m.preemptions > 0, "pool is 3x oversubscribed (got {})", m.preemptions);
+}
+
+#[test]
+fn preempted_requests_survive_queue_and_stream_tokens_incrementally() {
+    // A preempted request's client stream stays live across the park /
+    // readmit cycle: it sees First + every Token + Finished, in order.
+    let max_new = 12;
+    let (h, join) = engine_with(Some(16), AdmissionMode::Optimistic, 0, 4);
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("e", h.clone());
+    let streams: Vec<_> = prompts()[..4]
+        .iter()
+        .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+        .collect();
+    for rx in &streams {
+        let (tokens, reason, ttft, elapsed) = collect_response(rx);
+        assert_eq!(reason, FinishReason::Length);
+        assert_eq!(tokens.len(), max_new);
+        assert!(ttft > 0.0 && elapsed >= ttft);
+    }
+    let m = drain(h, join);
+    assert_eq!(m.requests_finished, 4);
+    assert!(m.preemptions > 0, "16-block pool must preempt 4 growing sequences");
+}

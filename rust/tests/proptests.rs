@@ -261,7 +261,9 @@ fn prop_json_roundtrip() {
                     let n = g.usize_in(0..12);
                     Json::Str(
                         (0..n)
-                            .map(|_| *g.choice(&['a', 'Z', '0', ' ', '"', '\\', '\n', '≈', '😀']))
+                            .map(|_| {
+                                *g.choice(&['a', 'Z', '0', ' ', '"', '\\', '\n', '≈', '😀'])
+                            })
                             .collect(),
                     )
                 }
