@@ -10,6 +10,10 @@
 //! A7. host-side row quantization vs offloading a (1, D) row to PJRT
 //!     (why the cache writer runs on the host)
 //! A8. dequantize: serial vs the parallel runtime per thread count
+//! A9. fused INT8 attention: dequant·dot fused into the score pass
+//!     (zero-copy paged decode) vs dequantize-then-dot, across the four
+//!     kernel variants (runs in --smoke: the CI artifact carries the
+//!     kernel sweep)
 //!
 //! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
 //! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
@@ -226,6 +230,73 @@ fn main() -> anyhow::Result<()> {
             );
         }
         kvq::bench::figures::emit(&t8, "ablation_a8_dequantize_parallel");
+    }
+
+    // A9: fused INT8 attention kernels — the zero-copy decode hot loop.
+    // Score pass (q·K̂ over T rows) and softmax·V accumulation, fused
+    // dequantization vs the dequantize-into-staging-then-dot baseline.
+    // Runs in --smoke so BENCH_smoke.json carries the kernel sweep.
+    {
+        let (t, d) = if smoke { (512, 64) } else { (4096, 128) };
+        let kmat = Fp32Matrix::random_normal(t, d, 1.0, 0xA9);
+        let q8 = quant::quantize_fused(&kmat);
+        let mut qrow = vec![0.0f32; d];
+        let mut w = vec![0.0f32; t];
+        {
+            let mut rng = kvq::util::rng::Rng::new(0x4A9);
+            rng.fill_uniform(&mut qrow, -1.0, 1.0);
+            rng.fill_uniform(&mut w, 0.0, 1.0 / t as f32);
+        }
+        let mut scores = vec![0.0f32; t];
+        let mut acc = vec![0.0f32; d];
+        let mut t9 = Table::new(
+            &format!("A9 — fused INT8 attention over {t}x{d} (score pass + softmax·V)"),
+            &["kernel", "score median", "accumulate median"],
+        );
+        // Baseline: materialize the dequantized copy, then attend on f32
+        // (what the staged decode path pays per token).
+        let mut staging = Fp32Matrix::zeros(t, d);
+        let mb = bencher.measure("dequant_then_dot", || {
+            quant::dequantize_into(&q8, &mut staging);
+            quant::attn::dot_rows_f32(&qrow, &staging.data, &mut scores);
+        });
+        let mba = bencher.measure("dequant_then_accumulate", || {
+            quant::dequantize_into(&q8, &mut staging);
+            acc.fill(0.0);
+            quant::attn::accumulate_rows_f32(&w, &staging.data, &mut acc);
+        });
+        t9.row(&[
+            "dequantize-then-dot (staged)".into(),
+            cell_time(mb.median()),
+            cell_time(mba.median()),
+        ]);
+        report.add(
+            "a9_fused_attention",
+            "dequant_then_dot",
+            Some(mb.median()),
+            &[("accumulate_median_s", Json::Num(mba.median()))],
+        );
+        for v in Variant::ALL {
+            let ms = bencher.measure(v.name(), || {
+                quant::attn::dot_rows_i8(v, &qrow, &q8.data, &q8.scales, &mut scores);
+            });
+            let ma = bencher.measure(v.name(), || {
+                acc.fill(0.0);
+                quant::attn::accumulate_rows_i8(v, &w, &q8.data, &q8.scales, &mut acc);
+            });
+            t9.row(&[
+                format!("fused {}", v.name()),
+                cell_time(ms.median()),
+                cell_time(ma.median()),
+            ]);
+            report.add(
+                "a9_fused_attention",
+                v.name(),
+                Some(ms.median()),
+                &[("accumulate_median_s", Json::Num(ma.median()))],
+            );
+        }
+        kvq::bench::figures::emit(&t9, "ablation_a9_fused_attention");
     }
 
     // A5 + A7 need the runtime.

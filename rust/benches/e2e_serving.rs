@@ -8,7 +8,10 @@
 //! prompts on a deliberately undersized pool) comparing optimistic
 //! admission (preemption + recompute + prefix cache) against worst-case
 //! reservation on throughput, sustained concurrency, preemption count,
-//! and prefix hit rate.
+//! and prefix hit rate — plus the **decode-path scenario** (section
+//! `decode_path`): staged gather-into-staging vs zero-copy block-native
+//! fused attention, reporting decode ns/token and cache bytes/token and
+//! asserting the two paths emit identical tokens.
 //!
 //! Flags: --model kvq-3m|kvq-25m --requests N --max-new N --concurrency N
 //!        --threads N (skip the sweep, run one worker count)
@@ -191,6 +194,69 @@ fn overload_scenario(
     Ok(())
 }
 
+/// Staged vs zero-copy paged decode on the CPU oracle backend: identical
+/// workload and (asserted) identical tokens; the contrast is decode
+/// ns/token and cache bytes touched per token — the "before/after" of the
+/// block-native fused attention refactor (section `decode_path`).
+fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::Result<()> {
+    let spec = ModelSpec::test_tiny();
+    let prompt_len = spec.block_size;
+    let max_new = (spec.max_seq - prompt_len) / 2;
+    let wl = ServingWorkload::poisson(
+        n_requests,
+        1000.0,
+        (prompt_len, prompt_len),
+        max_new,
+        spec.vocab.min(256),
+        11,
+    );
+    let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
+    for (label, paged) in [("staged", false), ("paged", true)] {
+        let ecfg = EngineConfig {
+            precision: Precision::Int8,
+            paged_decode: paged,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", h.clone());
+        let streams: Vec<_> = wl
+            .prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        let tokens: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+        h.drain();
+        join.join().ok();
+        let snap = h.metrics.snapshot();
+        report.add(
+            "decode_path",
+            label,
+            None,
+            &[
+                ("decode_ns_per_token", Json::Num(snap.decode_ns_per_token())),
+                ("gather_secs", Json::Num(snap.gather_secs)),
+                ("attend_secs", Json::Num(snap.attend_secs)),
+                ("cache_bytes_per_token", Json::Num(snap.cache_bytes_per_token())),
+                ("decode_steps", Json::Num(snap.decode_steps as f64)),
+                ("tokens", Json::Num(snap.tokens_generated as f64)),
+            ],
+        );
+        println!(
+            "[decode_path/{label}] {:.0} ns/token decode ({:.0} gathered + {:.0} attended µs \
+             total), {:.0} cache bytes/token",
+            snap.decode_ns_per_token(),
+            snap.gather_secs * 1e6,
+            snap.attend_secs * 1e6,
+            snap.cache_bytes_per_token()
+        );
+        outputs.push(tokens);
+    }
+    assert_eq!(outputs[0], outputs[1], "paged decode must be bit-identical to the staged path");
+    println!("[decode_path] staged and paged token streams identical ✓");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let smoke = args.has("smoke");
@@ -326,6 +392,10 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
+
+    // Decode data-path contrast: staged copies vs zero-copy block-native
+    // fused attention (CPU backend; runs in --smoke for the CI artifact).
+    decode_path_scenario(&mut report, args.usize_or("decode-path-requests", 6))?;
 
     // Scheduler scenario: optimistic admission + preemption + prefix
     // sharing vs worst-case reservation, same pool, same workload.

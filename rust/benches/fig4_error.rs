@@ -1,6 +1,9 @@
-//! Figure 4 — reconstruction error (max-abs, L2) and attention-score
-//! error across configurations. These numbers are substrate-independent:
-//! max-abs ≈ 0.00394 for U(-1,1) inputs, attention error ∝ √D.
+//! Figure 4 — reconstruction error (max-abs, L2), K-side attention-score
+//! error, and the value/output-side error |PV − PV̂| across
+//! configurations. These numbers are substrate-independent: max-abs ≈
+//! 0.00394 for U(-1,1) inputs, attention error ∝ √D, and the softmax
+//! averaging drives the V-side output error well below the per-element
+//! bound.
 
 use kvq::bench::figures;
 

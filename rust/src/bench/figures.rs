@@ -288,12 +288,35 @@ pub fn fig5_table(rows: &[SpeedupRow]) -> Table {
     t
 }
 
-/// Figure 4: reconstruction + attention-score error per config.
-/// Errors are computed by the XLA artifacts and cross-checked on CPU.
+/// Row-wise softmax (f32, max-subtracted) — attention weights for the
+/// value/output-side error probe below.
+fn softmax_rows(scores: &Fp32Matrix) -> Fp32Matrix {
+    let mut out = Fp32Matrix::zeros(scores.rows, scores.cols);
+    for r in 0..scores.rows {
+        let row = scores.row(r);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        let dst = &mut out.data[r * scores.cols..(r + 1) * scores.cols];
+        for (o, &s) in dst.iter_mut().zip(row) {
+            *o = (s - mx).exp();
+            denom += *o;
+        }
+        for o in dst.iter_mut() {
+            *o /= denom;
+        }
+    }
+    out
+}
+
+/// Figure 4: reconstruction + attention-score error per config, plus the
+/// value/output-side error |PV − PV̂| (softmaxed random queries over a
+/// quantized V — what V-quantization does to the attention *output*).
+/// K-side attention error is computed by the XLA artifacts and
+/// cross-checked on CPU; the V-side probe is substrate-independent.
 pub fn fig4_table(ctx: &FigCtx) -> Result<Table> {
     let mut t = Table::new(
         "Figure 4 — Reconstruction & attention-score error",
-        &["config", "T", "D", "max_abs_err", "l2_err", "attn_err", "attn_err/sqrt(D)"],
+        &["config", "T", "D", "max_abs_err", "l2_err", "attn_err", "attn_err/sqrt(D)", "vout_err"],
     );
     for shape in &ctx.shapes {
         let wl = super::workload::Workload::uniform(shape, 0xE44);
@@ -301,6 +324,17 @@ pub fn fig4_table(ctx: &FigCtx) -> Result<Table> {
         let rec = quant::dequantize(&q);
         let max_abs = quant::max_abs_error(&wl.k, &rec);
         let l2 = quant::l2_error(&wl.k, &rec);
+
+        // Value/output-side error on a token subsample: softmaxed random
+        // scores as attention weights over a quantized V matrix.
+        let vout_err = {
+            let tsub = shape.tokens.min(2048);
+            let v = Fp32Matrix::random_uniform(tsub, shape.dim, -1.0, 1.0, 0xE45);
+            let vq = quant::quantize_fused(&v);
+            let vrec = quant::dequantize(&vq);
+            let probs = softmax_rows(&Fp32Matrix::random_normal(16, tsub, 1.0, 0xE46));
+            quant::value_output_error(&probs, &v, &vrec)
+        };
 
         // Attention error via the lowered probe (token-subsampled per the
         // manifest's probe_tokens).
@@ -333,6 +367,7 @@ pub fn fig4_table(ctx: &FigCtx) -> Result<Table> {
             cell_f(l2, 2),
             cell_f(attn_err, 5),
             cell_f(attn_err / (shape.dim as f64).sqrt(), 7),
+            cell_f(vout_err, 7),
         ]);
     }
     Ok(t)

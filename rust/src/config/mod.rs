@@ -14,6 +14,7 @@ use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::kvcache::Precision;
 use crate::model::runner::DecodeKernel;
+use crate::quant::Variant;
 use crate::util::args::Args;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
@@ -58,6 +59,14 @@ pub struct ServeConfig {
     /// prompts fork cached INT8 blocks instead of re-prefilling). 0
     /// disables sharing.
     pub prefix_cache_blocks: usize,
+    /// Fused dequant-attention kernel variant for the zero-copy paged
+    /// decode path (naive|tiled|coarsened|vectorized). Access pattern
+    /// only — outputs are bit-identical across variants.
+    pub attention_kernel: Variant,
+    /// Attend directly over the paged cache when the backend supports it
+    /// (default true; PJRT always stages regardless). `false` forces the
+    /// legacy gather-into-staging decode.
+    pub paged_decode: bool,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +85,8 @@ impl Default for ServeConfig {
             port: 8080,
             parallelism: 0,
             prefix_cache_blocks: 0,
+            attention_kernel: Variant::Vectorized,
+            paged_decode: true,
         }
     }
 }
@@ -136,6 +147,13 @@ impl ServeConfig {
         if let Some(v) = j.get("prefix_cache_blocks").as_usize() {
             self.prefix_cache_blocks = v;
         }
+        if let Some(v) = j.get("attention_kernel").as_str() {
+            self.attention_kernel =
+                Variant::from_name(v).ok_or_else(|| anyhow!("bad attention_kernel {v:?}"))?;
+        }
+        if let Some(v) = j.get("paged_decode").as_bool() {
+            self.paged_decode = v;
+        }
         if let Some(v) = j.get("max_running").as_usize() {
             self.batcher.admission.max_running = v;
         }
@@ -191,6 +209,17 @@ impl ServeConfig {
         }
         self.prefix_cache_blocks =
             args.usize_or("prefix-cache-blocks", self.prefix_cache_blocks);
+        if let Some(v) = args.get("attention-kernel") {
+            self.attention_kernel =
+                Variant::from_name(v).ok_or_else(|| anyhow!("bad --attention-kernel {v:?}"))?;
+        }
+        if let Some(v) = args.get("paged-decode") {
+            self.paged_decode = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                _ => return Err(anyhow!("bad --paged-decode {v:?} (true|false)")),
+            };
+        }
         self.batcher.admission.max_running =
             args.usize_or("max-running", self.batcher.admission.max_running);
         self.batcher.max_prefills_per_step =
@@ -211,6 +240,8 @@ impl ServeConfig {
             seed: self.weight_seed,
             parallelism: self.parallelism,
             prefix_cache_blocks: self.prefix_cache_blocks,
+            attention_kernel: self.attention_kernel,
+            paged_decode: self.paged_decode,
         }
     }
 
@@ -268,6 +299,33 @@ mod tests {
         assert!(c.apply_json(&Json::parse(r#"{"precision":"int99"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"backend":"tpu"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"admission_mode":"psychic"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"attention_kernel":"warp"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn attention_kernel_and_paged_decode_knobs() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.attention_kernel, Variant::Vectorized);
+        assert!(c.paged_decode);
+        c.apply_json(
+            &Json::parse(r#"{"attention_kernel":"coarsened","paged_decode":false}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.attention_kernel, Variant::Coarsened);
+        assert!(!c.paged_decode);
+        assert_eq!(c.engine_config().attention_kernel, Variant::Coarsened);
+        assert!(!c.engine_config().paged_decode);
+        // CLI wins over the file.
+        let args = Args::parse_from(
+            ["--attention-kernel", "tiled", "--paged-decode", "true"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.attention_kernel, Variant::Tiled);
+        assert!(c.paged_decode);
+        let bad = Args::parse_from(["--attention-kernel", "warp"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

@@ -6,14 +6,28 @@
 //! The [`EngineHandle`] is cheap to clone and freely shareable (mpsc
 //! sender + metrics handle).
 //!
+//! **Zero-copy paged decode.** Backends that support it (the CPU oracle;
+//! PJRT artifacts consume dense buffers and cannot) decode straight over
+//! a borrow-based [`crate::kvcache::CacheView`]: no per-token
+//! materialization of the sequence's cache, dequantization fused into the
+//! attention kernels (`attention_kernel` knob selects the access-pattern
+//! variant — outputs are bit-identical across variants and vs the staged
+//! path). Per-token cache traffic drops from O(L·H·max_seq·d) staging
+//! copies to O(L·H·len·d) in-place reads, surfaced at `GET /metrics` as
+//! `gather_secs`/`attend_secs`/`cache_bytes_read`. `paged_decode: false`
+//! forces the legacy staged path (the e2e bench uses it for the
+//! before/after decode ns/token comparison).
+//!
 //! **Decode waves.** With `parallelism > 1` the engine processes the
 //! decode batch in waves: up to `parallelism` concurrent sequences have
 //! their caches gathered into per-sequence staging slots *in parallel*
-//! (the cache side of a decode step), then the backend — which is
+//! (the cache side of a staged decode step), then the backend — which is
 //! thread-confined — consumes the slots serially. The cache manager's own
 //! prefill/gather fan-out uses the same knob. Parallelism never changes
 //! generated tokens: gathers are read-only and bit-deterministic, and the
-//! backend execution order is unchanged.
+//! backend execution order is unchanged. On the paged path the gather
+//! phase is empty (there is nothing to copy), so waves reduce to the
+//! serial backend loop.
 //!
 //! **Preemption + recompute.** Under optimistic admission the pool may
 //! run dry mid-decode. The batcher names victims; the engine frees their
@@ -41,6 +55,7 @@ use crate::kvcache::{Precision, PrefixCache};
 use crate::model::sample;
 use crate::model::LmBackend;
 use crate::parallel;
+use crate::quant::Variant;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::sync::mpsc;
@@ -65,6 +80,15 @@ pub struct EngineConfig {
     /// Logical block budget of the cross-request prefix cache
     /// (`0` disables prompt sharing — the default).
     pub prefix_cache_blocks: usize,
+    /// Fused dequant-attention kernel for the paged decode path
+    /// (naive|tiled|coarsened|vectorized). Never changes outputs — all
+    /// variants are bit-identical; it only selects the access pattern.
+    pub attention_kernel: Variant,
+    /// Attend directly over the paged cache when the backend supports it
+    /// (default). `false` forces the legacy gather-into-staging path —
+    /// kept for PJRT (which requires it regardless) and for before/after
+    /// benchmarking.
+    pub paged_decode: bool,
 }
 
 impl Default for EngineConfig {
@@ -78,6 +102,8 @@ impl Default for EngineConfig {
             seed: 0,
             parallelism: 0,
             prefix_cache_blocks: 0,
+            attention_kernel: Variant::Vectorized,
+            paged_decode: true,
         }
     }
 }
@@ -129,20 +155,38 @@ where
     let m2 = metrics.clone();
     let join = std::thread::Builder::new()
         .name("kvq-engine".into())
-        .spawn(move || match backend_factory() {
-            Ok(backend) => Engine::new(cfg, backend, m2).run(rx),
-            Err(e) => {
-                crate::error!("engine backend init failed: {e:#}");
-                // Reject everything that arrives.
-                while let Ok(cmd) = rx.recv() {
-                    if let EngineCmd::Submit(_req, events) = cmd {
-                        let _ = events.send(TokenEvent::Finished {
-                            reason: FinishReason::Rejected(format!("backend init failed: {e}")),
-                            tokens: 0,
-                            elapsed: 0.0,
-                        });
-                    } else {
-                        break;
+        .spawn(move || {
+            // Fail fast: INT4 has no dense staging layout, so it can only
+            // serve through paged decode — reject the configuration here
+            // instead of failing every request at its first decode step.
+            let init = backend_factory().and_then(|b| {
+                if cfg.precision == Precision::Int4
+                    && !(cfg.paged_decode && b.supports_paged_decode())
+                {
+                    anyhow::bail!(
+                        "int4 serving requires a paged-decode-capable backend (cpu) \
+                         with paged_decode enabled"
+                    );
+                }
+                Ok(b)
+            });
+            match init {
+                Ok(backend) => Engine::new(cfg, backend, m2).run(rx),
+                Err(e) => {
+                    crate::error!("engine backend init failed: {e:#}");
+                    // Reject everything that arrives.
+                    while let Ok(cmd) = rx.recv() {
+                        if let EngineCmd::Submit(_req, events) = cmd {
+                            let _ = events.send(TokenEvent::Finished {
+                                reason: FinishReason::Rejected(format!(
+                                    "backend init failed: {e}"
+                                )),
+                                tokens: 0,
+                                elapsed: 0.0,
+                            });
+                        } else {
+                            break;
+                        }
                     }
                 }
             }
@@ -215,7 +259,9 @@ fn gather_sequence(
                 cache.gather_f32_with(seq, li, 1, &mut slot.v32[span], inner_threads)?;
             }
         }
-        Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+        // INT4 has no dense staging layout — it serves through the
+        // zero-copy paged path only.
+        Precision::Int4 => anyhow::bail!("int4 serving requires a paged-decode backend"),
     }
     Ok(())
 }
@@ -230,8 +276,14 @@ struct Engine {
     metrics: Metrics,
     /// Resolved worker count (>= 1) = decode wave width.
     threads: usize,
-    /// Staging slots; grows lazily up to `threads` entries.
+    /// Staging slots; grows lazily up to `threads` entries. Empty on the
+    /// paged path — zero-copy decode needs no staging.
     staging: Vec<StagingSlot>,
+    /// Zero-copy paged decode resolved against the backend's capability.
+    paged: bool,
+    /// Bytes one staged decode copies out of the pool (payload + scales)
+    /// — the O(max_seq) volume the paged path eliminates.
+    staged_cache_bytes: usize,
     rng: Rng,
 }
 
@@ -255,16 +307,22 @@ impl Engine {
         cache.set_parallelism(threads);
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
+        let paged = cfg.paged_decode && backend.supports_paged_decode();
+        // Bytes one staged decode step copies: both K and V payloads at
+        // full max_seq stride plus both scale tensors.
+        let staged_cache_bytes = 2 * cfg.precision.bytes_for(n) + 2 * ns * 4;
         crate::info!(
             "engine up: model={} precision={} blocks={} cache={:.1} MiB threads={} \
-             admission={} prefix_cache_blocks={}",
+             admission={} prefix_cache_blocks={} decode={} kernel={}",
             spec.name,
             cfg.precision.name(),
             num_blocks,
             cache.storage_bytes() as f64 / (1024.0 * 1024.0),
             threads,
             cfg.batcher.admission.mode.name(),
-            cfg.prefix_cache_blocks
+            cfg.prefix_cache_blocks,
+            if paged { "paged" } else { "staged" },
+            cfg.attention_kernel.name()
         );
         Engine {
             backend,
@@ -275,7 +333,15 @@ impl Engine {
             rng: Rng::new(cfg.seed ^ 0xE46),
             metrics,
             threads,
-            staging: vec![StagingSlot::new(cfg.precision, n, ns)],
+            // Paged decode reads blocks in place; only the staged path
+            // preallocates dense staging.
+            staging: if paged {
+                Vec::new()
+            } else {
+                vec![StagingSlot::new(cfg.precision, n, ns)]
+            },
+            paged,
+            staged_cache_bytes,
             cfg,
         }
     }
@@ -516,16 +582,30 @@ impl Engine {
         self.sched.start(run);
     }
 
-    /// One replayed decode step: gather, execute with the known next
-    /// token, append its K/V row. Uses staging slot 0 (replay runs in the
-    /// serial phase, never concurrently with a wave).
+    /// One replayed decode step: execute with the known next token,
+    /// append its K/V row. Paged backends attend in place; the staged
+    /// path uses staging slot 0 (replay runs in the serial phase, never
+    /// concurrently with a wave). Cache I/O is booked like any decode.
     fn replay_one(&mut self, seq: SeqId, token: i32, pos: usize) -> Result<()> {
         let precision = self.cfg.precision;
+        if self.paged {
+            let attend_t0 = Instant::now();
+            let (dec, bytes) = {
+                let view = self.cache.view(seq)?;
+                let bytes = view.attention_bytes();
+                (self.backend.decode_paged(token, pos, &view, self.cfg.attention_kernel)?, bytes)
+            };
+            self.metrics.on_decode(0.0, attend_t0.elapsed().as_secs_f64(), bytes);
+            return self.cache.append_row(seq, &dec.k_new, &dec.v_new);
+        }
+        let gather_t0 = Instant::now();
         {
             let slot = &mut self.staging[0];
             slot.err = None;
             gather_sequence(&self.cache, precision, seq, slot, self.threads)?;
         }
+        let gather_secs = gather_t0.elapsed().as_secs_f64();
+        let attend_t0 = Instant::now();
         let dec = match precision {
             Precision::Int8 => {
                 let st = &self.staging[0];
@@ -535,13 +615,20 @@ impl Engine {
                 let st = &self.staging[0];
                 self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
             }
-            Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+            Precision::Int4 => anyhow::bail!("int4 serving requires a paged-decode backend"),
         };
+        self.metrics.on_decode(
+            gather_secs,
+            attend_t0.elapsed().as_secs_f64(),
+            self.staged_cache_bytes,
+        );
         self.cache.append_row(seq, &dec.k_new, &dec.v_new)
     }
 
-    /// Decode a wave of concurrent sequences: parallel gather phase into
-    /// per-sequence staging slots, then serial backend execution.
+    /// Decode a wave of concurrent sequences. Staged path: parallel
+    /// gather phase into per-sequence staging slots, then serial backend
+    /// execution. Paged path: no gather phase at all — the backend
+    /// attends over each sequence's blocks in place, serially.
     fn decode_wave(&mut self, wave: &[u64]) {
         // Resolve (id, seq, token, pos) for every still-running member.
         let metas: Vec<(u64, SeqId, i32, usize)> = wave
@@ -553,6 +640,14 @@ impl Engine {
             })
             .collect();
         if metas.is_empty() {
+            return;
+        }
+        if self.paged {
+            for &(id, seq, token, pos) in &metas {
+                if let Err(e) = self.decode_one(id, seq, token, pos, None) {
+                    self.fail_decode(id, e);
+                }
+            }
             return;
         }
         {
@@ -582,28 +677,35 @@ impl Engine {
         }
         // Serial phase: backend decode, cache append, sampling, events.
         for (i, &(id, seq, token, pos)) in metas.iter().enumerate() {
-            if let Err(e) = self.decode_with_slot(id, seq, token, pos, i) {
-                crate::error!("decode failed for {id}: {e:#}");
-                if let Some(run) = self.sched.finish(id) {
-                    self.cache.free(run.seq);
-                    let _ = run.events.send(TokenEvent::Finished {
-                        reason: FinishReason::Error(format!("{e}")),
-                        tokens: run.generated,
-                        elapsed: run.req.arrival.elapsed().as_secs_f64(),
-                    });
-                }
+            if let Err(e) = self.decode_one(id, seq, token, pos, Some(i)) {
+                self.fail_decode(id, e);
             }
         }
     }
 
-    /// Consume staging slot `i` (already gathered) for one decode step.
-    fn decode_with_slot(
+    /// Tear down a request whose decode step errored.
+    fn fail_decode(&mut self, id: RequestId, e: anyhow::Error) {
+        crate::error!("decode failed for {id}: {e:#}");
+        if let Some(run) = self.sched.finish(id) {
+            self.cache.free(run.seq);
+            let _ = run.events.send(TokenEvent::Finished {
+                reason: FinishReason::Error(format!("{e}")),
+                tokens: run.generated,
+                elapsed: run.req.arrival.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    /// One decode step: `slot = Some(i)` consumes pre-gathered staging
+    /// slot `i` (legacy path); `slot = None` attends zero-copy over the
+    /// paged cache view.
+    fn decode_one(
         &mut self,
         id: u64,
         seq: SeqId,
         token: i32,
         pos: usize,
-        i: usize,
+        slot: Option<usize>,
     ) -> Result<()> {
         let t0 = Instant::now();
         // A reclaim earlier in this wave may have preempted this member
@@ -611,21 +713,41 @@ impl Engine {
         if !self.sched.running.iter().any(|r| r.req.id == id) {
             return Ok(());
         }
-        let gather_secs = self.staging[i].gather_secs;
-        if let Some(e) = self.staging[i].err.take() {
-            anyhow::bail!("gather failed: {e}");
-        }
-        let dec = match self.cfg.precision {
-            Precision::Int8 => {
-                let st = &self.staging[i];
-                self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
+        let gather_secs = match slot {
+            Some(i) => {
+                if let Some(e) = self.staging[i].err.take() {
+                    anyhow::bail!("gather failed: {e}");
+                }
+                self.staging[i].gather_secs
             }
-            Precision::Fp32 => {
-                let st = &self.staging[i];
-                self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
-            }
-            Precision::Int4 => anyhow::bail!("int4 serving not implemented"),
+            None => 0.0,
         };
+        let attend_t0 = Instant::now();
+        let (dec, cache_bytes) = match slot {
+            None => {
+                let view = self.cache.view(seq)?;
+                let bytes = view.attention_bytes();
+                let dec = self.backend.decode_paged(token, pos, &view, self.cfg.attention_kernel)?;
+                (dec, bytes)
+            }
+            Some(i) => {
+                let dec = match self.cfg.precision {
+                    Precision::Int8 => {
+                        let st = &self.staging[i];
+                        self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
+                    }
+                    Precision::Fp32 => {
+                        let st = &self.staging[i];
+                        self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
+                    }
+                    Precision::Int4 => {
+                        anyhow::bail!("int4 serving requires a paged-decode backend")
+                    }
+                };
+                (dec, self.staged_cache_bytes)
+            }
+        };
+        self.metrics.on_decode(gather_secs, attend_t0.elapsed().as_secs_f64(), cache_bytes);
         if self.cache.append_row(seq, &dec.k_new, &dec.v_new).is_err() {
             // The plan's accounting raced reality (another sequence's COW,
             // a resume, an unevictable prefix entry). Reclaim and retry;

@@ -46,6 +46,17 @@ struct Inner {
     resumes: u64,
     /// Tokens re-materialized by readmissions (prompt + replayed trail).
     recompute_tokens: u64,
+    /// Decode steps that reported cache-I/O accounting (incl. replays).
+    decode_steps: u64,
+    /// Cumulative seconds spent copying caches into staging (zero on the
+    /// zero-copy paged path).
+    gather_secs: f64,
+    /// Cumulative seconds in the backend's attention/decode execution.
+    attend_secs: f64,
+    /// Cumulative cache payload+scale bytes a decode step touched: the
+    /// staging copy volume (O(max_seq)) on the legacy path, the valid
+    /// rows actually read in place (O(len)) on the paged path.
+    cache_bytes_read: u64,
     ttft: LogHistogram,
     tpot: LogHistogram,
     e2e: LogHistogram,
@@ -78,6 +89,10 @@ impl Metrics {
             preemptions: 0,
             resumes: 0,
             recompute_tokens: 0,
+            decode_steps: 0,
+            gather_secs: 0.0,
+            attend_secs: 0.0,
+            cache_bytes_read: 0,
             ttft: LogHistogram::latency(),
             tpot: LogHistogram::latency(),
             e2e: LogHistogram::latency(),
@@ -112,6 +127,18 @@ impl Metrics {
         let mut m = self.0.lock().unwrap();
         m.e2e.record(e2e);
         m.requests_finished += 1;
+    }
+
+    /// Cache-I/O accounting for one decode step (replays included):
+    /// seconds gathering into staging, seconds in the backend's fused
+    /// attention/decode, and cache bytes touched (see
+    /// [`MetricsSnapshot::cache_bytes_read`] semantics).
+    pub fn on_decode(&self, gather_secs: f64, attend_secs: f64, cache_bytes: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.decode_steps += 1;
+        m.gather_secs += gather_secs;
+        m.attend_secs += attend_secs;
+        m.cache_bytes_read += cache_bytes as u64;
     }
 
     /// A running request was preempted (blocks freed, state parked).
@@ -149,6 +176,10 @@ impl Metrics {
             preemptions: m.preemptions,
             resumes: m.resumes,
             recompute_tokens: m.recompute_tokens,
+            decode_steps: m.decode_steps,
+            gather_secs: m.gather_secs,
+            attend_secs: m.attend_secs,
+            cache_bytes_read: m.cache_bytes_read,
             prefix_lookups: m.gauges.prefix_lookups,
             prefix_hits: m.gauges.prefix_hits,
             tokens_per_sec: m.tokens_generated as f64 / uptime.max(1e-9),
@@ -185,6 +216,15 @@ pub struct MetricsSnapshot {
     pub preemptions: u64,
     pub resumes: u64,
     pub recompute_tokens: u64,
+    pub decode_steps: u64,
+    /// Cumulative staging-copy seconds (zero-copy paged decode books 0).
+    pub gather_secs: f64,
+    /// Cumulative backend attention/decode seconds.
+    pub attend_secs: f64,
+    /// Cumulative cache bytes a decode step touched: O(max_seq) staging
+    /// copies on the legacy path vs O(len) in-place reads on the paged
+    /// path — the zero-copy win, numerically.
+    pub cache_bytes_read: u64,
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
     pub tokens_per_sec: f64,
@@ -213,6 +253,17 @@ impl MetricsSnapshot {
         self.prefix_hits as f64 / self.prefix_lookups.max(1) as f64
     }
 
+    /// Mean cache bytes touched per decode step.
+    pub fn cache_bytes_per_token(&self) -> f64 {
+        self.cache_bytes_read as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// Mean decode nanoseconds per token over the cache read + attention
+    /// execution (the hot path the zero-copy refactor targets).
+    pub fn decode_ns_per_token(&self) -> f64 {
+        (self.gather_secs + self.attend_secs) * 1e9 / self.decode_steps.max(1) as f64
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::obj;
         obj([
@@ -226,6 +277,12 @@ impl MetricsSnapshot {
             ("preemptions", (self.preemptions as usize).into()),
             ("resumes", (self.resumes as usize).into()),
             ("recompute_tokens", (self.recompute_tokens as usize).into()),
+            ("decode_steps", (self.decode_steps as usize).into()),
+            ("gather_secs", self.gather_secs.into()),
+            ("attend_secs", self.attend_secs.into()),
+            ("cache_bytes_read", (self.cache_bytes_read as usize).into()),
+            ("cache_bytes_per_token", self.cache_bytes_per_token().into()),
+            ("decode_ns_per_token", self.decode_ns_per_token().into()),
             ("prefix_lookups", (self.prefix_lookups as usize).into()),
             ("prefix_hits", (self.prefix_hits as usize).into()),
             ("prefix_hit_rate", self.prefix_hit_rate().into()),
@@ -292,6 +349,25 @@ mod tests {
         assert_eq!(s.prefix_lookups, 3);
         assert_eq!(s.prefix_hits, 2);
         assert!((s.prefix_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_io_accounting_accumulates() {
+        let m = Metrics::new();
+        m.on_decode(0.010, 0.002, 1000);
+        m.on_decode(0.0, 0.004, 500);
+        let s = m.snapshot();
+        assert_eq!(s.decode_steps, 2);
+        assert!((s.gather_secs - 0.010).abs() < 1e-12);
+        assert!((s.attend_secs - 0.006).abs() < 1e-12);
+        assert_eq!(s.cache_bytes_read, 1500);
+        assert!((s.cache_bytes_per_token() - 750.0).abs() < 1e-9);
+        assert!((s.decode_ns_per_token() - 8e6).abs() < 1.0);
+        let j = s.to_json();
+        assert_eq!(j.get("decode_steps").as_usize(), Some(2));
+        assert_eq!(j.get("cache_bytes_read").as_usize(), Some(1500));
+        assert!(j.get("attend_secs").as_f64().unwrap() > 0.0);
+        assert!(j.get("decode_ns_per_token").as_f64().is_some());
     }
 
     #[test]

@@ -33,11 +33,19 @@
 //! blocks, or staging ranges, so the stored and gathered bytes are
 //! identical at every worker count (asserted by
 //! `tests/parallel_consistency.rs`).
+//!
+//! **Zero-copy reads.** [`KvCacheManager::view`] hands out a borrow-based
+//! [`CacheView`] over a sequence's blocks and frozen scales so fused
+//! decode attends over the paged INT8/INT4/FP32 layout *in place* — no
+//! per-token materialization of the whole cache. The copying
+//! `gather_i8`/`gather_f32` staging path is kept for the PJRT backend
+//! (whose artifacts consume dense buffers) and for parity tests.
 
 use super::pool::{BlockId, BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
 use crate::parallel::{self, SendPtr};
+use crate::quant::int4::{quantize4_row_into, Q4MAX};
 use crate::quant::quantize::{quantize_one, quantize_row_into};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -343,8 +351,8 @@ impl KvCacheManager {
         if len > s || len > self.cfg.max_seq {
             bail!("prefill len {len} > stride {s} or max_seq {}", self.cfg.max_seq);
         }
-        if self.cfg.precision == Precision::Int4 {
-            bail!("int4 serving path not implemented (bench-only precision)");
+        if self.cfg.precision == Precision::Int4 && d % 2 != 0 {
+            bail!("int4 serving requires an even head_dim (rows must be nibble-aligned)");
         }
         {
             let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
@@ -353,8 +361,13 @@ impl KvCacheManager {
             }
         }
         // Freeze scales: per (layer, kv, head, channel) abs-max over rows
-        // 0..len, divided by 127, inflated by the margin. One worker per
+        // 0..len, divided by the precision's symmetric bound (127 for
+        // INT8, 7 for INT4), inflated by the margin. One worker per
         // (layer, K|V) stream.
+        let qdiv = match self.cfg.precision {
+            Precision::Int4 => Q4MAX,
+            _ => crate::QMAX,
+        };
         let margin = self.cfg.scale_margin;
         let threads = self.threads_for(2 * l * h * d * len);
         let streams: Vec<(usize, usize)> =
@@ -372,7 +385,7 @@ impl KvCacheManager {
                             m = val;
                         }
                     }
-                    sc[head * d + ch] = m * margin / crate::QMAX;
+                    sc[head * d + ch] = m * margin / qdiv;
                 }
             }
             sc
@@ -396,7 +409,7 @@ impl KvCacheManager {
         match self.cfg.precision {
             Precision::Int8 => self.prefill_write_i8(id, k, v, s, len, threads),
             Precision::Fp32 => self.prefill_write_f32(id, k, v, s, len, threads),
-            Precision::Int4 => unreachable!("rejected above"),
+            Precision::Int4 => self.prefill_write_i4(id, k, v, s, len),
         }
         self.seqs.get_mut(&id).unwrap().len = len;
         Ok(())
@@ -483,6 +496,36 @@ impl KvCacheManager {
                         }
                     }
                 });
+            }
+        }
+    }
+
+    /// INT4 variant of [`Self::prefill_write_i8`]: quantize each row to
+    /// packed nibbles (even `head_dim` guarantees every row is
+    /// byte-aligned inside its head slab). Serial — INT4 writes half the
+    /// bytes of INT8 and the paged decode path never gathers them back.
+    fn prefill_write_i4(&mut self, id: SeqId, k: &[f32], v: &[f32], s: usize, len: usize) {
+        let (l, h, d, bs) =
+            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
+        let nblocks = BlockTable::blocks_for(len, bs);
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                let scales = self.seqs[&id].scales[layer][kv].clone();
+                let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
+                for (bi, &b) in blocks.iter().enumerate() {
+                    let rows_here = bs.min(len - bi * bs);
+                    let blk = self.pool.block_i4_mut(b);
+                    for head in 0..h {
+                        let base = ((layer * h) + head) * s * d;
+                        let sc = &scales[head * d..(head + 1) * d];
+                        for r in 0..rows_here {
+                            let pos = bi * bs + r;
+                            let src = &data[base + pos * d..base + (pos + 1) * d];
+                            let off = (head * bs + r) * d / 2;
+                            quantize4_row_into(src, sc, &mut blk[off..off + d / 2]);
+                        }
+                    }
+                }
             }
         }
     }
@@ -575,7 +618,16 @@ impl KvCacheManager {
                     blk[off..off + d].copy_from_slice(&row[head * d..(head + 1) * d]);
                 }
             }
-            Precision::Int4 => bail!("int4 serving path not implemented (bench-only precision)"),
+            Precision::Int4 => {
+                let scales = seq.scales[layer][kv].clone();
+                let blk = self.pool.block_i4_mut(block);
+                for head in 0..h {
+                    let off = (head * bs + in_row) * d / 2;
+                    let src = &row[head * d..(head + 1) * d];
+                    let sc = &scales[head * d..(head + 1) * d];
+                    quantize4_row_into(src, sc, &mut blk[off..off + d / 2]);
+                }
+            }
         }
         Ok(())
     }
@@ -672,6 +724,150 @@ impl KvCacheManager {
             }
         });
         Ok(len)
+    }
+
+    /// Zero-copy view of one sequence's cache: per-(layer, K|V) block
+    /// slices plus frozen scales, borrowed straight from the pool. The
+    /// fused paged decode path attends over this in place — nothing is
+    /// materialized per token (contrast [`Self::gather_i8`]).
+    pub fn view(&self, id: SeqId) -> Result<CacheView<'_>> {
+        let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+        Ok(CacheView { pool: &self.pool, seq, cfg: &self.cfg })
+    }
+}
+
+/// Borrow-based, read-only view of one sequence's paged cache (see
+/// [`KvCacheManager::view`]). Holding a view borrows the manager
+/// immutably, so appends/frees cannot invalidate it mid-read.
+pub struct CacheView<'a> {
+    pool: &'a BlockPool,
+    seq: &'a SequenceCache,
+    cfg: &'a CacheConfig,
+}
+
+impl<'a> CacheView<'a> {
+    /// Valid token rows (the decode `pos`).
+    pub fn len(&self) -> usize {
+        self.seq.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seq.len == 0
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.cfg.precision
+    }
+
+    pub fn layers(&self) -> usize {
+        self.cfg.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.cfg.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg.head_dim
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Frozen scales of one (layer, K|V) stream, length `heads·head_dim`.
+    pub fn scales(&self, layer: usize, kv: usize) -> &'a [f32] {
+        &self.seq.scales[layer][kv]
+    }
+
+    /// Per-stream block view (kv: 0 = K, 1 = V).
+    pub fn stream(&self, layer: usize, kv: usize) -> StreamView<'a> {
+        let table = &self.seq.tables[layer][kv];
+        let used = BlockTable::blocks_for(self.seq.len, self.cfg.block_size)
+            .min(table.blocks().len());
+        StreamView {
+            pool: self.pool,
+            blocks: &table.blocks()[..used],
+            scales: &self.seq.scales[layer][kv],
+            len: self.seq.len,
+            block_size: self.cfg.block_size,
+            head_dim: self.cfg.head_dim,
+        }
+    }
+
+    /// Payload + scale bytes one full attention pass over this view reads
+    /// (valid rows of K and V across all layers/heads). This is the
+    /// per-token cache traffic of the zero-copy path — O(len), not
+    /// O(max_seq) — surfaced at `GET /metrics` as `cache_bytes_read`.
+    pub fn attention_bytes(&self) -> usize {
+        let c = self.cfg;
+        let payload = c.precision.bytes_for(c.heads * self.seq.len * c.head_dim);
+        let scale_bytes = c.heads * c.head_dim * 4;
+        2 * c.layers * (payload + scale_bytes)
+    }
+}
+
+/// One (layer, K|V) stream of a [`CacheView`]: ordered blocks + frozen
+/// scales. Accessors return per-(block, head) row slabs borrowed from the
+/// pool — `rows_in_block(bi) × head_dim` contiguous elements, ready for
+/// the fused [`crate::quant::attn`] kernels.
+pub struct StreamView<'a> {
+    pool: &'a BlockPool,
+    blocks: &'a [BlockId],
+    scales: &'a [f32],
+    len: usize,
+    block_size: usize,
+    head_dim: usize,
+}
+
+impl<'a> StreamView<'a> {
+    /// Valid token rows in the stream.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks holding valid rows.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Valid rows inside block `bi` (the tail block may be partial).
+    pub fn rows_in_block(&self, bi: usize) -> usize {
+        self.block_size.min(self.len.saturating_sub(bi * self.block_size))
+    }
+
+    /// Frozen scales of one head (length `head_dim`).
+    pub fn head_scales(&self, head: usize) -> &'a [f32] {
+        &self.scales[head * self.head_dim..(head + 1) * self.head_dim]
+    }
+
+    /// The valid rows of `head` in block `bi`: `rows_in_block(bi) ×
+    /// head_dim` contiguous int8 values, in place in the pool.
+    pub fn head_rows_i8(&self, bi: usize, head: usize) -> &'a [i8] {
+        let (bs, d) = (self.block_size, self.head_dim);
+        let blk = self.pool.block_i8(self.blocks[bi]);
+        &blk[head * bs * d..(head * bs + self.rows_in_block(bi)) * d]
+    }
+
+    /// FP32 variant of [`Self::head_rows_i8`].
+    pub fn head_rows_f32(&self, bi: usize, head: usize) -> &'a [f32] {
+        let (bs, d) = (self.block_size, self.head_dim);
+        let blk = self.pool.block_f32(self.blocks[bi]);
+        &blk[head * bs * d..(head * bs + self.rows_in_block(bi)) * d]
+    }
+
+    /// INT4 variant: `rows_in_block(bi) × head_dim / 2` nibble-packed
+    /// bytes (rows are byte-aligned — the manager rejects odd `head_dim`
+    /// for INT4 pools). Unpack per row with
+    /// [`crate::quant::int4::dequantize4_row_into`].
+    pub fn head_rows_i4(&self, bi: usize, head: usize) -> &'a [u8] {
+        let (bs, d) = (self.block_size, self.head_dim);
+        let blk = self.pool.block_i4(self.blocks[bi]);
+        &blk[head * bs * d / 2..(head * bs + self.rows_in_block(bi)) * d / 2]
     }
 }
 
@@ -1007,6 +1203,167 @@ mod tests {
         // Retry path: blocks are back, the same append now succeeds on a
         // fresh sequence.
         assert_eq!(m.free_blocks(), 4);
+    }
+
+    #[test]
+    fn view_exposes_exact_pool_bytes() {
+        // The zero-copy view must show byte-for-byte what gather copies.
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let len = 11; // partial tail block
+        let (k, v) = prefill_tensors(&c, len, 31);
+        m.set_prefill(id, &k, &v, len).unwrap();
+        let hd = c.layers * c.heads * c.head_dim;
+        let mut rng = Rng::new(32);
+        let mut k_new = vec![0.0f32; hd];
+        let mut v_new = vec![0.0f32; hd];
+        rng.fill_uniform(&mut k_new, -0.5, 0.5);
+        rng.fill_uniform(&mut v_new, -0.5, 0.5);
+        m.append_row(id, &k_new, &v_new).unwrap();
+
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        for layer in 0..c.layers {
+            for kv in 0..2 {
+                m.gather_i8(id, layer, kv, &mut staging).unwrap();
+                let view = m.view(id).unwrap();
+                assert_eq!(view.len(), len + 1);
+                let stream = view.stream(layer, kv);
+                assert_eq!(stream.len(), len + 1);
+                assert_eq!(view.scales(layer, kv), m.scales(id, layer, kv).unwrap());
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    for head in 0..c.heads {
+                        let slab = stream.head_rows_i8(bi, head);
+                        assert_eq!(slab.len(), rows * c.head_dim);
+                        for r in 0..rows {
+                            let off = (head * c.max_seq + t0 + r) * c.head_dim;
+                            let srow = &staging[off..off + c.head_dim];
+                            assert_eq!(
+                                &slab[r * c.head_dim..(r + 1) * c.head_dim],
+                                srow,
+                                "bytes diverged at block {bi} head {head} row {r}"
+                            );
+                        }
+                    }
+                    t0 += rows;
+                }
+                assert_eq!(t0, len + 1, "view covered all valid rows");
+            }
+        }
+    }
+
+    #[test]
+    fn view_attention_bytes_scales_with_len_not_max_seq() {
+        let c = cfg(Precision::Int8);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 33);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        let per_row = 2 * c.layers * c.heads * c.head_dim; // K+V payload/row (i8)
+        let scale_bytes = 2 * c.layers * c.heads * c.head_dim * 4;
+        assert_eq!(m.view(id).unwrap().attention_bytes(), 4 * per_row + scale_bytes);
+        let hd = c.layers * c.heads * c.head_dim;
+        m.append_row(id, &vec![0.1; hd], &vec![0.1; hd]).unwrap();
+        assert_eq!(m.view(id).unwrap().attention_bytes(), 5 * per_row + scale_bytes);
+    }
+
+    #[test]
+    fn int4_prefill_and_append_roundtrip_within_bound() {
+        use crate::quant::int4::dequantize4_row_into;
+        let c = cfg(Precision::Int4);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let len = 6;
+        let (k, v) = prefill_tensors(&c, len, 34);
+        m.set_prefill(id, &k, &v, len).unwrap();
+        // Append one row (exercises the nibble-packed writer mid-block).
+        let hd = c.layers * c.heads * c.head_dim;
+        let mut rng = Rng::new(35);
+        let mut k_new = vec![0.0f32; hd];
+        let mut v_new = vec![0.0f32; hd];
+        // Keep the appended row well inside every frozen per-channel range
+        // so the tight (un-clamped) bound applies below.
+        rng.fill_uniform(&mut k_new, -0.05, 0.05);
+        rng.fill_uniform(&mut v_new, -0.05, 0.05);
+        m.append_row(id, &k_new, &v_new).unwrap();
+
+        let view = m.view(id).unwrap();
+        let (layer, kv) = (1, 0);
+        let stream = view.stream(layer, kv);
+        let mut row = vec![0.0f32; c.head_dim];
+        let mut t0 = 0;
+        for bi in 0..stream.num_blocks() {
+            let rows = stream.rows_in_block(bi);
+            for head in 0..c.heads {
+                let slab = stream.head_rows_i4(bi, head);
+                let sc = stream.head_scales(head);
+                for r in 0..rows {
+                    let t = t0 + r;
+                    dequantize4_row_into(
+                        &slab[r * c.head_dim / 2..(r + 1) * c.head_dim / 2],
+                        sc,
+                        &mut row,
+                    );
+                    for ch in 0..c.head_dim {
+                        let want = if t < len {
+                            k[((layer * c.heads + head) * c.max_seq + t) * c.head_dim + ch]
+                        } else {
+                            k_new[(layer * c.heads + head) * c.head_dim + ch]
+                        };
+                        // eq. (9) with the 4-bit grid: |x - x̂| <= s/2
+                        // (appended rows clamp into frozen scales — the
+                        // test row stays inside the prefill range).
+                        assert!(
+                            (row[ch] - want).abs() <= sc[ch] / 2.0 + 1e-6,
+                            "t={t} ch={ch}: {} vs {want} (s={})",
+                            row[ch],
+                            sc[ch]
+                        );
+                    }
+                }
+            }
+            t0 += rows;
+        }
+        assert_eq!(t0, len + 1);
+    }
+
+    #[test]
+    fn int4_rejects_odd_head_dim() {
+        let c = CacheConfig { head_dim: 7, ..cfg(Precision::Int4) };
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 36);
+        let err = m.set_prefill(id, &k, &v, 4).unwrap_err();
+        assert!(err.to_string().contains("even head_dim"), "{err}");
+    }
+
+    #[test]
+    fn int4_scales_freeze_on_the_4bit_grid() {
+        // Frozen INT4 scales divide by 7, not 127: the column abs-max must
+        // quantize to ±7 exactly.
+        let c = cfg(Precision::Int4);
+        let mut m = KvCacheManager::new(c);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 37);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        for (kv, data) in [&k, &v].into_iter().enumerate() {
+            let sc = m.scales(id, 0, kv).unwrap();
+            for head in 0..c.heads {
+                for ch in 0..c.head_dim {
+                    let mut mx = 0.0f32;
+                    for t in 0..4 {
+                        let i = ((head) * c.max_seq + t) * c.head_dim + ch; // layer 0
+                        mx = mx.max(data[i].abs());
+                    }
+                    assert!(
+                        (sc[head * c.head_dim + ch] * 7.0 - mx).abs() <= 1e-6,
+                        "scale not on the 4-bit grid"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

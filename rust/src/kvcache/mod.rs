@@ -10,7 +10,8 @@
 //! * [`manager`]: the engine-facing API — create/fork/free sequences
 //!   (mid-flight free powers preemption), quantize-and-append K/V rows
 //!   (frozen prefill scales, clamped; appends are atomic and retryable
-//!   after reclaim), gather a sequence's stream into the contiguous
+//!   after reclaim), zero-copy [`manager::CacheView`]s for block-native
+//!   fused decode, gather a sequence's stream into the contiguous
 //!   staging layout the decode artifact consumes, refcount-aware free
 //!   accounting for admission and preemption planning.
 //! * [`prefix`]: the cross-request prefix cache — exact-prompt entries
@@ -28,7 +29,7 @@ pub mod pool;
 pub mod prefix;
 pub mod table;
 
-pub use manager::{KvCacheManager, SequenceCache};
+pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView};
 pub use memory_model::MemoryModel;
 pub use pool::{BlockId, BlockPool};
 pub use prefix::{PrefixCache, PrefixStats};

@@ -194,6 +194,18 @@ impl BlockPool {
         unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut f32, raw.len() / 4) }
     }
 
+    /// Nibble-packed view (Int4 pools): two values per byte, element `e`
+    /// at byte `e/2`, low nibble first (the `quant::int4` convention).
+    pub fn block_i4(&self, id: BlockId) -> &[u8] {
+        assert_eq!(self.precision, Precision::Int4);
+        self.block_raw(id)
+    }
+
+    pub fn block_i4_mut(&mut self, id: BlockId) -> &mut [u8] {
+        assert_eq!(self.precision, Precision::Int4);
+        self.block_mut_raw(id)
+    }
+
     /// Raw i8 payload pointers for a set of blocks, all derived from one
     /// mutable borrow of the storage (clean provenance for parallel
     /// writers). Callers guarantee the ids are distinct and own the
@@ -321,6 +333,15 @@ mod tests {
         p.block_f32_mut(a)[5] = 1.5;
         assert_eq!(p.block_f32(a)[5], 1.5);
         assert_eq!(p.block_f32(a).len(), shape().elements());
+    }
+
+    #[test]
+    fn int4_views_pack_two_per_byte() {
+        let mut p = BlockPool::new(1, shape(), Precision::Int4);
+        let a = p.alloc().unwrap();
+        assert_eq!(p.block_i4(a).len(), shape().elements() / 2);
+        p.block_i4_mut(a)[3] = 0xAB;
+        assert_eq!(p.block_i4(a)[3], 0xAB);
     }
 
     #[test]

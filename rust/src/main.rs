@@ -58,13 +58,18 @@ USAGE: kvq <command> [flags]
 
 COMMANDS:
   serve      start the HTTP server
-             --model kvq-3m|kvq-25m --precision int8|fp32 --port 8080
+             --model kvq-3m|kvq-25m --precision int8|fp32|int4 --port 8080
              --backend pjrt|cpu --decode-kernel plain|pallas
              --threads N (0 = auto; parallel quantization runtime)
              --admission-mode optimistic|worst-case (preemptive vs
                conservative scheduling; default optimistic)
              --prefix-cache-blocks N (cross-request prompt sharing
                budget in cache blocks; 0 = off)
+             --attention-kernel naive|tiled|coarsened|vectorized (fused
+               paged-decode kernel variant; outputs identical)
+             --paged-decode true|false (zero-copy block-native decode
+               when the backend supports it; default true. int4 serving
+               requires it + --backend cpu)
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -149,6 +154,8 @@ fn serve(args: Args) -> Result<()> {
         threads,
         cfg.batcher.admission.mode.name(),
         cfg.prefix_cache_blocks,
+        cfg.attention_kernel.name(),
+        cfg.paged_decode,
         server.local_port(),
     );
     let service = Arc::new(KvqService::with_info(Arc::new(router), info));

@@ -11,9 +11,21 @@
 //!
 //! Layouts match the artifacts: caches `(L, H, S, d)`, scales `(L, H, d)`,
 //! new rows `(L, H, d)`, all flattened row-major.
+//!
+//! Decode reads its K/V history through the [`CacheAccess`] strategy
+//! trait: [`StagedI8Cache`]/[`StagedF32Cache`] walk the dense artifact
+//! layout (the legacy gather-into-staging path), [`PagedCache`] walks the
+//! block pool **in place** through a zero-copy
+//! [`crate::kvcache::manager::CacheView`] with dequantization fused into
+//! the attention kernels ([`crate::quant::attn`]). All strategies are
+//! bit-identical (see the trait docs), so the serving engine can attend
+//! block-natively without any numerical drift vs the staged path.
 
 use super::spec::ModelSpec;
 use super::weights::Weights;
+use crate::kvcache::manager::CacheView;
+use crate::kvcache::Precision;
+use crate::quant::{attn, int4, Variant};
 
 /// y += x @ w, where x: (m,), w: (m, n) row-major, y: (n,).
 fn matvec_acc(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
@@ -190,6 +202,9 @@ impl CpuModel {
     /// Single-token decode over an INT8 cache (artifact layouts; see
     /// module docs). `pos` = number of valid cache rows = this token's
     /// position. Returns (logits, k_new (L,H,d), v_new (L,H,d)).
+    ///
+    /// Thin adapter over [`Self::decode_cached`] with a dense staged
+    /// cache; the paged path ([`Self::decode_paged`]) is bit-identical.
     pub fn decode_i8(
         &self,
         token: i32,
@@ -199,16 +214,18 @@ impl CpuModel {
         vq: &[i8],
         v_scales: &[f32],
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        self.decode_impl(token, pos, |layer, head, t, ch, kv| {
-            let sp = &self.spec;
-            let (h, smax, d) = (sp.heads, sp.max_seq, sp.head_dim);
-            let base = ((layer * h + head) * smax + t) * d + ch;
-            let sidx = (layer * h + head) * d + ch;
-            match kv {
-                0 => kq[base] as f32 * k_scales[sidx],
-                _ => vq[base] as f32 * v_scales[sidx],
-            }
-        })
+        let sp = &self.spec;
+        let cache = StagedI8Cache {
+            kq,
+            k_scales,
+            vq,
+            v_scales,
+            heads: sp.heads,
+            max_seq: sp.max_seq,
+            head_dim: sp.head_dim,
+            variant: Variant::Naive,
+        };
+        self.decode_cached(token, pos, &cache)
     }
 
     /// Single-token decode over an FP32 cache.
@@ -219,22 +236,48 @@ impl CpuModel {
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        self.decode_impl(token, pos, |layer, head, t, ch, kv| {
-            let sp = &self.spec;
-            let (h, smax, d) = (sp.heads, sp.max_seq, sp.head_dim);
-            let base = ((layer * h + head) * smax + t) * d + ch;
-            match kv {
-                0 => k[base],
-                _ => v[base],
-            }
-        })
+        let sp = &self.spec;
+        let cache =
+            StagedF32Cache { k, v, heads: sp.heads, max_seq: sp.max_seq, head_dim: sp.head_dim };
+        self.decode_cached(token, pos, &cache)
     }
 
-    fn decode_impl(
+    /// Single-token decode directly over the paged block pool — the
+    /// zero-copy serving path. Attends in place via the fused
+    /// [`crate::quant::attn`] kernels (`variant` selects the access
+    /// pattern; outputs are bit-identical across variants and to the
+    /// staged [`Self::decode_i8`] path for INT8 caches).
+    pub fn decode_paged(
         &self,
         token: i32,
         pos: usize,
-        cache_at: impl Fn(usize, usize, usize, usize, usize) -> f32,
+        view: &CacheView,
+        variant: Variant,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let sp = &self.spec;
+        anyhow::ensure!(
+            view.len() == pos,
+            "paged decode pos {pos} != cache len {}",
+            view.len()
+        );
+        anyhow::ensure!(
+            view.layers() == sp.layers
+                && view.heads() == sp.heads
+                && view.head_dim() == sp.head_dim,
+            "cache geometry does not match model spec"
+        );
+        Ok(self.decode_cached(token, pos, &PagedCache::new(view, variant)))
+    }
+
+    /// The decode core: one transformer step whose attention reads K/V
+    /// history through a [`CacheAccess`] — dense staging and the paged
+    /// pool run the *same* math here (same expressions, same order), so
+    /// every access strategy is bit-identical.
+    pub fn decode_cached(
+        &self,
+        token: i32,
+        pos: usize,
+        cache: &impl CacheAccess,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let sp = &self.spec;
         let (l, h, d, m) = (sp.layers, sp.heads, sp.head_dim, sp.d_model());
@@ -242,6 +285,10 @@ impl CpuModel {
         let mut x = emb[token as usize * m..(token as usize + 1) * m].to_vec();
         let mut k_news = vec![0.0f32; l * h * d];
         let mut v_news = vec![0.0f32; l * h * d];
+        // Per-token scratch: O(pos) score/weight rows + an O(d)
+        // accumulator — the only per-step buffers the zero-copy path needs.
+        let mut scores = vec![0.0f32; pos];
+        let mut weights = vec![0.0f32; pos];
 
         for layer in 0..l {
             let (wq, wk, wv, wo) = (
@@ -271,30 +318,24 @@ impl CpuModel {
                     .copy_from_slice(vh);
 
                 // History scores (0..pos) + current token's score.
+                cache.key_dots(layer, head, &qh, &mut scores);
+                let sqrt_d = (d as f32).sqrt();
                 let mut mx = f32::NEG_INFINITY;
-                let mut scores = Vec::with_capacity(pos + 1);
-                for t in 0..pos {
-                    let mut dot = 0.0f32;
-                    for ch in 0..d {
-                        dot += qh[ch] * cache_at(layer, head, t, ch, 0);
-                    }
-                    let sc = dot / (d as f32).sqrt();
-                    mx = mx.max(sc);
-                    scores.push(sc);
+                for sc in scores.iter_mut() {
+                    *sc /= sqrt_d;
+                    mx = mx.max(*sc);
                 }
-                let s_cur: f32 =
-                    qh.iter().zip(&kh).map(|(a, b)| a * b).sum::<f32>() / (d as f32).sqrt();
+                let s_cur: f32 = qh.iter().zip(&kh).map(|(a, b)| a * b).sum::<f32>() / sqrt_d;
                 mx = mx.max(s_cur);
 
                 let mut denom = 0.0f32;
-                let mut acc = vec![0.0f32; d];
-                for (t, &sc) in scores.iter().enumerate() {
-                    let w = (sc - mx).exp();
-                    denom += w;
-                    for ch in 0..d {
-                        acc[ch] += w * cache_at(layer, head, t, ch, 1);
-                    }
+                for (w, &sc) in weights.iter_mut().zip(scores.iter()) {
+                    let e = (sc - mx).exp();
+                    denom += e;
+                    *w = e;
                 }
+                let mut acc = vec![0.0f32; d];
+                cache.value_accumulate(layer, head, &weights, &mut acc);
                 let w_cur = (s_cur - mx).exp();
                 denom += w_cur;
                 for (a, b) in acc.iter_mut().zip(vh) {
@@ -312,6 +353,215 @@ impl CpuModel {
 
         let xf = rmsnorm(&x, self.weights.param("ln_f"));
         (self.lm_head(&xf), k_news, v_news)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache access strategies.
+// ---------------------------------------------------------------------------
+
+/// How decode attention reads the K/V history.
+///
+/// Contract (bit-stability): `key_dots` fills `scores[t] = Σ_ch q[ch] ·
+/// K̂[t,ch]` accumulated in ascending channel order, and
+/// `value_accumulate` adds `acc[ch] += Σ_t w[t] · V̂[t,ch]` with tokens in
+/// ascending order per channel, where the dequantized element is computed
+/// as `q_val as f32 * scale`. Every implementation that honors this
+/// produces identical bits, so staged and paged decode can be swapped
+/// freely (asserted by `tests/parallel_consistency.rs`).
+pub trait CacheAccess {
+    /// Raw dot products of `q` against K rows `0..scores.len()` of
+    /// (layer, head). No 1/√d scaling — the caller applies it.
+    fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]);
+
+    /// `acc[ch] += Σ_t w[t] · V̂[t,ch]` over V rows `0..w.len()`.
+    fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]);
+}
+
+/// Dense staged INT8 cache in artifact layout: `kq`/`vq` are `(L, H, S,
+/// d)`, scales `(L, H, d)` — what the gather path materializes and the
+/// PJRT decode artifacts consume.
+pub struct StagedI8Cache<'a> {
+    pub kq: &'a [i8],
+    pub k_scales: &'a [f32],
+    pub vq: &'a [i8],
+    pub v_scales: &'a [f32],
+    pub heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+    pub variant: Variant,
+}
+
+impl StagedI8Cache<'_> {
+    #[inline]
+    fn slab<'b>(&self, data: &'b [i8], layer: usize, head: usize, rows: usize) -> &'b [i8] {
+        let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
+        let base = (layer * h + head) * s * d;
+        &data[base..base + rows * d]
+    }
+
+    #[inline]
+    fn head_scales<'b>(&self, scales: &'b [f32], layer: usize, head: usize) -> &'b [f32] {
+        let (h, d) = (self.heads, self.head_dim);
+        &scales[(layer * h + head) * d..(layer * h + head + 1) * d]
+    }
+}
+
+impl CacheAccess for StagedI8Cache<'_> {
+    fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
+        let slab = self.slab(self.kq, layer, head, scores.len());
+        let sc = self.head_scales(self.k_scales, layer, head);
+        attn::dot_rows_i8(self.variant, q, slab, sc, scores);
+    }
+
+    fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
+        let slab = self.slab(self.vq, layer, head, w.len());
+        let sc = self.head_scales(self.v_scales, layer, head);
+        attn::accumulate_rows_i8(self.variant, w, slab, sc, acc);
+    }
+}
+
+/// Dense staged FP32 cache (baseline precision), artifact layout.
+pub struct StagedF32Cache<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub heads: usize,
+    pub max_seq: usize,
+    pub head_dim: usize,
+}
+
+impl CacheAccess for StagedF32Cache<'_> {
+    fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
+        let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
+        let base = (layer * h + head) * s * d;
+        attn::dot_rows_f32(q, &self.k[base..base + scores.len() * d], scores);
+    }
+
+    fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
+        let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
+        let base = (layer * h + head) * s * d;
+        attn::accumulate_rows_f32(w, &self.v[base..base + w.len() * d], acc);
+    }
+}
+
+/// Block-native paged cache: walks the pool's blocks in place through a
+/// zero-copy [`CacheView`] — the serving decode hot path. INT8 and FP32
+/// run the fused slab kernels per (block, head); INT4 unpacks one row at
+/// a time into an O(d) scratch (`dequantize4_row_into`) — still O(len)
+/// traffic, never an O(max_seq) staging copy.
+pub struct PagedCache<'a> {
+    view: &'a CacheView<'a>,
+    variant: Variant,
+    /// O(d) row scratch for the INT4 unpack path, allocated once per
+    /// decode step and reused across every (layer, head) call (empty for
+    /// other precisions). `CacheAccess` reads are `&self` on one thread,
+    /// so a `RefCell` suffices.
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+impl<'a> PagedCache<'a> {
+    pub fn new(view: &'a CacheView<'a>, variant: Variant) -> PagedCache<'a> {
+        let scratch_len = match view.precision() {
+            Precision::Int4 => view.head_dim(),
+            _ => 0,
+        };
+        PagedCache { view, variant, scratch: std::cell::RefCell::new(vec![0.0; scratch_len]) }
+    }
+}
+
+impl CacheAccess for PagedCache<'_> {
+    fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
+        let stream = self.view.stream(layer, 0);
+        debug_assert_eq!(scores.len(), stream.len(), "score buffer vs history len");
+        let sc = stream.head_scales(head);
+        let d = q.len();
+        match self.view.precision() {
+            Precision::Int8 => {
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_i8(bi, head);
+                    attn::dot_rows_i8(self.variant, q, slab, sc, &mut scores[t0..t0 + rows]);
+                    t0 += rows;
+                }
+            }
+            Precision::Fp32 => {
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_f32(bi, head);
+                    attn::dot_rows_f32(q, slab, &mut scores[t0..t0 + rows]);
+                    t0 += rows;
+                }
+            }
+            Precision::Int4 => {
+                let mut scratch = self.scratch.borrow_mut();
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_i4(bi, head);
+                    for r in 0..rows {
+                        int4::dequantize4_row_into(
+                            &slab[r * d / 2..(r + 1) * d / 2],
+                            sc,
+                            &mut scratch,
+                        );
+                        let mut dot = 0.0f32;
+                        for ch in 0..d {
+                            dot += q[ch] * scratch[ch];
+                        }
+                        scores[t0 + r] = dot;
+                    }
+                    t0 += rows;
+                }
+            }
+        }
+    }
+
+    fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
+        let stream = self.view.stream(layer, 1);
+        let sc = stream.head_scales(head);
+        let d = acc.len();
+        match self.view.precision() {
+            Precision::Int8 => {
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_i8(bi, head);
+                    attn::accumulate_rows_i8(self.variant, &w[t0..t0 + rows], slab, sc, acc);
+                    t0 += rows;
+                }
+            }
+            Precision::Fp32 => {
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_f32(bi, head);
+                    attn::accumulate_rows_f32(&w[t0..t0 + rows], slab, acc);
+                    t0 += rows;
+                }
+            }
+            Precision::Int4 => {
+                let mut scratch = self.scratch.borrow_mut();
+                let mut t0 = 0;
+                for bi in 0..stream.num_blocks() {
+                    let rows = stream.rows_in_block(bi);
+                    let slab = stream.head_rows_i4(bi, head);
+                    for r in 0..rows {
+                        int4::dequantize4_row_into(
+                            &slab[r * d / 2..(r + 1) * d / 2],
+                            sc,
+                            &mut scratch,
+                        );
+                        let wr = w[t0 + r];
+                        for ch in 0..d {
+                            acc[ch] += wr * scratch[ch];
+                        }
+                    }
+                    t0 += rows;
+                }
+            }
+        }
     }
 }
 

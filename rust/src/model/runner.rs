@@ -10,8 +10,10 @@
 use super::cpu_ref::CpuModel;
 use super::spec::ModelSpec;
 use super::weights::Weights;
+use crate::kvcache::manager::CacheView;
+use crate::quant::Variant;
 use crate::runtime::{HostTensor, Runtime};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::rc::Rc;
 
 /// Prefill output: last-position logits + FP32 caches `(L, H, S, d)`.
@@ -49,6 +51,27 @@ pub trait LmBackend {
 
     /// Single-token decode over the FP32 cache (baseline path).
     fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult>;
+
+    /// Can this backend attend directly over the paged cache
+    /// ([`Self::decode_paged`])? Backends that can't — the PJRT artifacts
+    /// consume dense staging buffers — keep the gather-into-staging path.
+    fn supports_paged_decode(&self) -> bool {
+        false
+    }
+
+    /// Single-token decode over a zero-copy [`CacheView`] (no staging
+    /// materialization). `kernel` selects the fused dequant-attention
+    /// access pattern; outputs never depend on it (bit-identical
+    /// variants). Only called when [`Self::supports_paged_decode`].
+    fn decode_paged(
+        &self,
+        _token: i32,
+        _pos: usize,
+        _view: &CacheView,
+        _kernel: Variant,
+    ) -> Result<DecodeResult> {
+        bail!("backend does not support paged decode")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -90,6 +113,21 @@ impl LmBackend for CpuBackend {
 
     fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult> {
         let (logits, k_new, v_new) = self.model.decode_f32(token, pos, k, v);
+        Ok(DecodeResult { logits, k_new, v_new })
+    }
+
+    fn supports_paged_decode(&self) -> bool {
+        true
+    }
+
+    fn decode_paged(
+        &self,
+        token: i32,
+        pos: usize,
+        view: &CacheView,
+        kernel: Variant,
+    ) -> Result<DecodeResult> {
+        let (logits, k_new, v_new) = self.model.decode_paged(token, pos, view, kernel)?;
         Ok(DecodeResult { logits, k_new, v_new })
     }
 }

@@ -1,0 +1,325 @@
+//! Fused dequantize–attention kernels — the decode hot loop of the
+//! zero-copy paged path.
+//!
+//! The paper's §5 argument is that INT8 KV compression buys memory
+//! *bandwidth*; serving only collects that win if attention reads the
+//! quantized rows **in place**, with dequantization fused into the dot
+//! product, instead of materializing an FP32 copy first. These kernels do
+//! exactly that over a contiguous slab of token rows (one head's slice of
+//! a cache block, or a whole gathered history), in the same four
+//! optimization flavors as the quantize kernels (Listings 3–8):
+//!
+//! * [`Variant::Naive`]      — row-outer element loop, scale loaded per
+//!   element (Listing 5's access pattern).
+//! * [`Variant::Tiled`]      — scales staged into a local
+//!   [`TILE_DIM`]-wide tile before the row sweep (Listing 6).
+//! * [`Variant::Coarsened`]  — channel-outer loop: one scale (and one
+//!   query element) held in registers, amortized over all rows of the
+//!   slab (Listing 7; this is the "scale hoisted out of the inner loop"
+//!   form).
+//! * [`Variant::Vectorized`] — chunk-of-4 channel processing with array
+//!   temporaries for SIMD codegen (Listing 8).
+//!
+//! **Bit-stability contract.** All variants compute, for every output,
+//! the *identical* float expression in the *identical* order: a score is
+//! `Σ_ch q[ch] · (row[ch] as f32 · s[ch])` accumulated in ascending
+//! channel order, and a value accumulation adds rows in ascending token
+//! order per channel. That makes every variant bit-identical to the
+//! legacy staged decode (`model::cpu_ref::decode_i8`), which is asserted
+//! by `tests/parallel_consistency.rs` and the §7.5-style proptests —
+//! the kernel knob can never change generated tokens.
+
+use super::quantize::TILE_DIM;
+use super::Variant;
+
+/// Fused dequant·dot of one query against one quantized row:
+/// `Σ_ch q[ch] · (row[ch] · s[ch])`, accumulated in channel order.
+#[inline]
+pub fn dot_i8(variant: Variant, q: &[f32], row: &[i8], scales: &[f32]) -> f32 {
+    let mut out = [0.0f32];
+    dot_rows_i8(variant, q, row, scales, &mut out);
+    out[0]
+}
+
+/// Fused dequant·dot of `q` against `out.len()` consecutive token rows
+/// stored contiguously in `blk` (`out.len() × q.len()` int8 values):
+/// `out[r] = Σ_ch q[ch] · (blk[r·d + ch] · s[ch])`.
+///
+/// `blk` is read in place — no dequantized copy is materialized. All
+/// variants are bit-identical (module docs).
+pub fn dot_rows_i8(variant: Variant, q: &[f32], blk: &[i8], scales: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    let rows = out.len();
+    debug_assert_eq!(blk.len(), rows * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    match variant {
+        Variant::Naive => {
+            for r in 0..rows {
+                let row = &blk[r * d..(r + 1) * d];
+                let mut acc = 0.0f32;
+                for ch in 0..d {
+                    acc += q[ch] * (row[ch] as f32 * scales[ch]);
+                }
+                out[r] = acc;
+            }
+        }
+        Variant::Tiled => {
+            out[..rows].fill(0.0);
+            let mut s_tile = [0.0f32; TILE_DIM];
+            let mut d0 = 0;
+            while d0 < d {
+                let w = TILE_DIM.min(d - d0);
+                s_tile[..w].copy_from_slice(&scales[d0..d0 + w]);
+                for r in 0..rows {
+                    let row = &blk[r * d + d0..r * d + d0 + w];
+                    let mut acc = out[r];
+                    for i in 0..w {
+                        acc += q[d0 + i] * (row[i] as f32 * s_tile[i]);
+                    }
+                    out[r] = acc;
+                }
+                d0 += w;
+            }
+        }
+        Variant::Coarsened => {
+            out[..rows].fill(0.0);
+            for ch in 0..d {
+                let s = scales[ch];
+                let qc = q[ch];
+                for r in 0..rows {
+                    out[r] += qc * (blk[r * d + ch] as f32 * s);
+                }
+            }
+        }
+        Variant::Vectorized => {
+            let chunks = d / 4;
+            for r in 0..rows {
+                let row = &blk[r * d..(r + 1) * d];
+                let mut acc = 0.0f32;
+                for c in 0..chunks {
+                    let i = c * 4;
+                    let vals = [
+                        row[i] as f32,
+                        row[i + 1] as f32,
+                        row[i + 2] as f32,
+                        row[i + 3] as f32,
+                    ];
+                    let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
+                    // Serial adds keep the sum order identical to naive
+                    // (bit-stability contract); the array temporaries
+                    // still let the compiler vectorize the products.
+                    acc += q[i] * (vals[0] * ss[0]);
+                    acc += q[i + 1] * (vals[1] * ss[1]);
+                    acc += q[i + 2] * (vals[2] * ss[2]);
+                    acc += q[i + 3] * (vals[3] * ss[3]);
+                }
+                for ch in chunks * 4..d {
+                    acc += q[ch] * (row[ch] as f32 * scales[ch]);
+                }
+                out[r] = acc;
+            }
+        }
+    }
+}
+
+/// Fused softmax·V accumulation over a quantized slab:
+/// `acc[ch] += Σ_r w[r] · (blk[r·d + ch] · s[ch])`, rows added in
+/// ascending order per channel (bit-stability contract).
+pub fn accumulate_rows_i8(
+    variant: Variant,
+    w: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    acc: &mut [f32],
+) {
+    let d = acc.len();
+    let rows = w.len();
+    debug_assert_eq!(blk.len(), rows * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    match variant {
+        Variant::Naive => {
+            for r in 0..rows {
+                let row = &blk[r * d..(r + 1) * d];
+                let wr = w[r];
+                for ch in 0..d {
+                    acc[ch] += wr * (row[ch] as f32 * scales[ch]);
+                }
+            }
+        }
+        Variant::Tiled => {
+            let mut s_tile = [0.0f32; TILE_DIM];
+            let mut d0 = 0;
+            while d0 < d {
+                let width = TILE_DIM.min(d - d0);
+                s_tile[..width].copy_from_slice(&scales[d0..d0 + width]);
+                for r in 0..rows {
+                    let row = &blk[r * d + d0..r * d + d0 + width];
+                    let wr = w[r];
+                    for i in 0..width {
+                        acc[d0 + i] += wr * (row[i] as f32 * s_tile[i]);
+                    }
+                }
+                d0 += width;
+            }
+        }
+        Variant::Coarsened => {
+            for ch in 0..d {
+                let s = scales[ch];
+                let mut a = acc[ch];
+                for r in 0..rows {
+                    a += w[r] * (blk[r * d + ch] as f32 * s);
+                }
+                acc[ch] = a;
+            }
+        }
+        Variant::Vectorized => {
+            let chunks = d / 4;
+            for r in 0..rows {
+                let row = &blk[r * d..(r + 1) * d];
+                let wr = w[r];
+                for c in 0..chunks {
+                    let i = c * 4;
+                    let vals = [
+                        row[i] as f32,
+                        row[i + 1] as f32,
+                        row[i + 2] as f32,
+                        row[i + 3] as f32,
+                    ];
+                    let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
+                    acc[i] += wr * (vals[0] * ss[0]);
+                    acc[i + 1] += wr * (vals[1] * ss[1]);
+                    acc[i + 2] += wr * (vals[2] * ss[2]);
+                    acc[i + 3] += wr * (vals[3] * ss[3]);
+                }
+                for ch in chunks * 4..d {
+                    acc[ch] += wr * (row[ch] as f32 * scales[ch]);
+                }
+            }
+        }
+    }
+}
+
+/// FP32 twin of [`dot_rows_i8`] (baseline cache precision — no scales,
+/// no variants: there is nothing to fuse).
+pub fn dot_rows_f32(q: &[f32], blk: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let mut acc = 0.0f32;
+        for ch in 0..d {
+            acc += q[ch] * row[ch];
+        }
+        *o = acc;
+    }
+}
+
+/// FP32 twin of [`accumulate_rows_i8`].
+pub fn accumulate_rows_f32(w: &[f32], blk: &[f32], acc: &mut [f32]) {
+    let d = acc.len();
+    debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");
+    for (r, &wr) in w.iter().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        for ch in 0..d {
+            acc[ch] += wr * row[ch];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::matrix::Fp32Matrix;
+    use crate::quant::quantize::quantize_fused;
+    use crate::util::rng::Rng;
+
+    fn slab(rows: usize, d: usize, seed: u64) -> (Vec<i8>, Vec<f32>, Vec<f32>) {
+        let k = Fp32Matrix::random_normal(rows, d, 1.0, seed);
+        let q8 = quantize_fused(&k);
+        let mut rng = Rng::new(seed ^ 0x51AB);
+        let mut q = vec![0.0f32; d];
+        rng.fill_uniform(&mut q, -1.0, 1.0);
+        (q8.data, q8.scales, q)
+    }
+
+    #[test]
+    fn all_variants_bit_identical_scores() {
+        for (rows, d) in [(1usize, 1usize), (3, 5), (7, 16), (12, 33)] {
+            let (blk, scales, q) = slab(rows, d, (rows * 131 + d) as u64);
+            let mut base = vec![0.0f32; rows];
+            dot_rows_i8(Variant::Naive, &q, &blk, &scales, &mut base);
+            for v in Variant::ALL {
+                let mut out = vec![7.7f32; rows]; // poisoned: must be overwritten
+                dot_rows_i8(v, &q, &blk, &scales, &mut out);
+                let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&out), bits(&base), "{v:?} diverged at {rows}x{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_variants_bit_identical_accumulation() {
+        for (rows, d) in [(1usize, 4usize), (5, 9), (11, 32)] {
+            let (blk, scales, _) = slab(rows, d, (rows * 17 + d) as u64);
+            let mut rng = Rng::new(99);
+            let mut w = vec![0.0f32; rows];
+            rng.fill_uniform(&mut w, 0.0, 1.0);
+            let mut init = vec![0.0f32; d];
+            rng.fill_uniform(&mut init, -0.5, 0.5);
+            let mut base = init.clone();
+            accumulate_rows_i8(Variant::Naive, &w, &blk, &scales, &mut base);
+            for v in Variant::ALL {
+                let mut acc = init.clone();
+                accumulate_rows_i8(v, &w, &blk, &scales, &mut acc);
+                let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&acc), bits(&base), "{v:?} diverged at {rows}x{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_dequantize_then_dot() {
+        // The fused kernel computes exactly q·(row·s): dequantizing to a
+        // staging copy first and dotting gives the same bits (same
+        // expression, same order) — the zero-copy path loses nothing.
+        let (blk, scales, q) = slab(9, 24, 4);
+        let mut fused = vec![0.0f32; 9];
+        dot_rows_i8(Variant::Vectorized, &q, &blk, &scales, &mut fused);
+        let mut staged = vec![0.0f32; 9 * 24];
+        for r in 0..9 {
+            for ch in 0..24 {
+                staged[r * 24 + ch] = blk[r * 24 + ch] as f32 * scales[ch];
+            }
+        }
+        let mut dense = vec![0.0f32; 9];
+        dot_rows_f32(&q, &staged, &mut dense);
+        assert_eq!(
+            fused.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            dense.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn dot_i8_hand_computed() {
+        // q=[1,2], row=[10,-20], s=[0.1, 0.5] -> 1*1 + 2*(-10) = -19.
+        let q = [1.0f32, 2.0];
+        let row = [10i8, -20];
+        let s = [0.1f32, 0.5];
+        for v in Variant::ALL {
+            let got = dot_i8(v, &q, &row, &s);
+            assert!((got - -19.0).abs() < 1e-6, "{v:?}: {got}");
+        }
+    }
+
+    #[test]
+    fn f32_twins_hand_computed() {
+        let q = [1.0f32, -1.0];
+        let blk = [2.0f32, 3.0, 5.0, 7.0]; // two rows
+        let mut out = [0.0f32; 2];
+        dot_rows_f32(&q, &blk, &mut out);
+        assert_eq!(out, [-1.0, -2.0]);
+        let mut acc = [0.0f32; 2];
+        accumulate_rows_f32(&[1.0, 2.0], &blk, &mut acc);
+        assert_eq!(acc, [12.0, 17.0]);
+    }
+}

@@ -1,6 +1,9 @@
 //! The paper's three error metrics (§6 "we measure", §7.2, §7.3):
 //! L2 (Frobenius) reconstruction error, max absolute error, and the
-//! attention-score error |qK^T − qK̂^T| averaged over (query, token) pairs.
+//! attention-score error |qK^T − qK̂^T| averaged over (query, token)
+//! pairs — plus the value/output-side twin |PV − PV̂| (the K-side metric
+//! alone says nothing about the second half of the fused attention read,
+//! the softmax·V accumulation).
 
 use super::matrix::Fp32Matrix;
 
@@ -57,6 +60,41 @@ pub fn attention_score_error(queries: &Fp32Matrix, k: &Fp32Matrix, k_hat: &Fp32M
     acc / (nq as f64 * t as f64)
 }
 
+/// Mean |(P·V)[q,ch] − (P·V̂)[q,ch]| over all (query row, channel) pairs
+/// — the value/output-side twin of [`attention_score_error`].
+///
+/// `probs`: (Nq, T) attention weights (softmax rows, but any weights
+/// work); `v`, `v_hat`: (T, D). This measures what V-quantization does to
+/// the attention *output* — the half of the error story the K-side metric
+/// can't see. f64 accumulation keeps it stable at bench sizes.
+pub fn value_output_error(probs: &Fp32Matrix, v: &Fp32Matrix, v_hat: &Fp32Matrix) -> f64 {
+    assert_shapes(v, v_hat);
+    assert_eq!(probs.cols, v.rows, "probs/value token-count mismatch");
+    let (nq, t, d) = (probs.rows, v.rows, v.cols);
+    // Accumulate P·(V − V̂) row-by-row over tokens: O(T·D + T·Nq·D), one
+    // diff row resident at a time (same structure as the K-side metric).
+    let mut acc = vec![0.0f64; nq * d];
+    let mut diff = vec![0.0f64; d];
+    for ti in 0..t {
+        let vr = v.row(ti);
+        let vhr = v_hat.row(ti);
+        for ((df, &x), &y) in diff.iter_mut().zip(vr).zip(vhr) {
+            *df = (x - y) as f64;
+        }
+        for qi in 0..nq {
+            let p = probs.at(qi, ti) as f64;
+            if p == 0.0 {
+                continue;
+            }
+            let out = &mut acc[qi * d..(qi + 1) * d];
+            for (o, &df) in out.iter_mut().zip(&diff) {
+                *o += p * df;
+            }
+        }
+    }
+    acc.iter().map(|x| x.abs()).sum::<f64>() / (nq as f64 * d as f64)
+}
+
 fn assert_shapes(a: &Fp32Matrix, b: &Fp32Matrix) {
     assert_eq!((a.rows, a.cols), (b.rows, b.cols), "shape mismatch");
 }
@@ -92,6 +130,31 @@ mod tests {
         let k = Fp32Matrix::from_vec(1, 2, vec![1.0, 1.0]);
         let kh = Fp32Matrix::from_vec(1, 2, vec![0.5, 1.25]);
         assert!((attention_score_error(&q, &k, &kh) - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn value_output_error_hand_computed() {
+        // p = [0.5, 0.5]; v - v_hat rows = [2, 0], [0, -4]
+        // P·diff = [1, -2] -> mean abs = 1.5.
+        let p = Fp32Matrix::from_vec(1, 2, vec![0.5, 0.5]);
+        let v = Fp32Matrix::from_vec(2, 2, vec![2.0, 0.0, 0.0, 0.0]);
+        let vh = Fp32Matrix::from_vec(2, 2, vec![0.0, 0.0, 0.0, 4.0]);
+        assert!((value_output_error(&p, &v, &vh) - 1.5).abs() < 1e-9);
+        assert_eq!(value_output_error(&p, &v, &v), 0.0);
+    }
+
+    #[test]
+    fn value_output_error_bounded_by_quant_step() {
+        // Uniform attention weights over T tokens average out the
+        // per-element quantization noise: the output error must land far
+        // below the raw per-element bound s/2.
+        let t = 512;
+        let v = Fp32Matrix::random_uniform(t, 32, -1.0, 1.0, 11);
+        let rec = dequantize(&quantize_fused(&v));
+        let p = Fp32Matrix::from_vec(4, t, vec![1.0 / t as f32; 4 * t]);
+        let e = value_output_error(&p, &v, &rec);
+        assert!(e > 0.0, "quantization noise must register");
+        assert!(e < 1.0 / 254.0, "averaged output error {e} above per-element bound");
     }
 
     #[test]

@@ -64,6 +64,53 @@ impl Int4Matrix {
     }
 }
 
+/// Quantize one value to a signed 4-bit code in `[-7, 7]`.
+///
+/// Mirrors [`crate::quant::quantize::quantize_one`]'s pinned edge-case
+/// semantics (the serving cache writer routes through this): zero/negative
+/// scale → 0, NaN value or NaN quotient → 0, ±∞ saturates to ±7.
+#[inline(always)]
+pub fn quantize_one4(val: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let q = (val / scale).round();
+    if q.is_nan() {
+        return 0;
+    }
+    q.clamp(-Q4MAX, Q4MAX) as i8
+}
+
+/// Quantize a row of `2·out.len()` values into packed nibbles (even
+/// channel in the low nibble — the [`Int4Matrix`] convention). The row
+/// length must be even; the paged INT4 cache guarantees this by requiring
+/// an even `head_dim`.
+pub fn quantize4_row_into(row: &[f32], scales: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(row.len() % 2, 0, "int4 rows must have even length");
+    debug_assert_eq!(row.len(), scales.len());
+    debug_assert_eq!(out.len() * 2, row.len());
+    for (i, byte) in out.iter_mut().enumerate() {
+        let lo = quantize_one4(row[2 * i], scales[2 * i]) as u8 & 0x0F;
+        let hi = quantize_one4(row[2 * i + 1], scales[2 * i + 1]) as u8 & 0x0F;
+        *byte = lo | (hi << 4);
+    }
+}
+
+/// Unpack + dequantize a nibble-packed row (`bytes.len()·2` values) into
+/// `out` — the per-block read primitive of the paged INT4 decode path.
+#[inline]
+pub fn dequantize4_row_into(bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    debug_assert_eq!(scales.len(), out.len());
+    for (i, &byte) in bytes.iter().enumerate() {
+        // sign-extend each 4-bit two's-complement nibble
+        let lo = ((byte << 4) as i8) >> 4;
+        let hi = (byte as i8) >> 4;
+        out[2 * i] = lo as f32 * scales[2 * i];
+        out[2 * i + 1] = hi as f32 * scales[2 * i + 1];
+    }
+}
+
 /// Per-channel INT4 scales: s_d = max_t |K[t,d]| / 7.
 pub fn compute_scales4(k: &Fp32Matrix) -> Vec<f32> {
     let mut maxima = vec![0.0f32; k.cols];
@@ -83,13 +130,7 @@ pub fn quantize4(k: &Fp32Matrix) -> Int4Matrix {
     let mut out = Int4Matrix::zeros(k.rows, k.cols);
     for t in 0..k.rows {
         for d in 0..k.cols {
-            let s = scales[d];
-            let q = if s <= 0.0 {
-                0
-            } else {
-                (k.at(t, d) / s).round().clamp(-Q4MAX, Q4MAX) as i8
-            };
-            out.set(t, d, q);
+            out.set(t, d, quantize_one4(k.at(t, d), scales[d]));
         }
     }
     out.scales = scales;
@@ -233,6 +274,41 @@ mod tests {
                 assert_eq!(q.at(t, d), expect, "({t},{d})");
             }
         }
+    }
+
+    #[test]
+    fn row_pack_unpack_roundtrips_against_matrix_form() {
+        // The serving row helpers must agree exactly with the matrix-form
+        // quantize4/dequantize4 (same nibble convention, same rounding).
+        let d = 10;
+        let k = Fp32Matrix::random_uniform(4, d, -2.0, 2.0, 0x40);
+        let q = quantize4(&k);
+        for t in 0..k.rows {
+            let mut packed = vec![0u8; d / 2];
+            quantize4_row_into(k.row(t), &q.scales, &mut packed);
+            assert_eq!(
+                packed,
+                q.data[t * Int4Matrix::bytes_per_row(d)..(t + 1) * Int4Matrix::bytes_per_row(d)],
+                "row {t} packed bytes diverged"
+            );
+            let mut unpacked = vec![0.0f32; d];
+            dequantize4_row_into(&packed, &q.scales, &mut unpacked);
+            let reference = dequantize4(&q);
+            for ch in 0..d {
+                assert_eq!(unpacked[ch].to_bits(), reference.at(t, ch).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_one4_edge_cases() {
+        assert_eq!(quantize_one4(0.5, 1.0), 1, "half rounds away from zero");
+        assert_eq!(quantize_one4(1e9, 1.0), 7);
+        assert_eq!(quantize_one4(-1e9, 1.0), -7);
+        assert_eq!(quantize_one4(f32::INFINITY, 1.0), 7);
+        assert_eq!(quantize_one4(1.0, 0.0), 0);
+        assert_eq!(quantize_one4(f32::NAN, 1.0), 0);
+        assert_eq!(quantize_one4(1.0, f32::NAN), 0);
     }
 
     #[test]

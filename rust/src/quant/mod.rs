@@ -16,11 +16,16 @@
 //!    rows on the host via [`quantize::quantize_row_into`] (a (1, D) row
 //!    is far below the size where offloading to the accelerator pays —
 //!    measured in the ablation bench).
+//! 4. **Fused attention reader**: [`attn`] fuses dequantization into the
+//!    attention dot product and softmax·V accumulation so the zero-copy
+//!    paged decode path attends directly over INT8 blocks, in the same
+//!    four kernel variants (all bit-identical).
 //!
 //! Conventions (shared with `python/compile/kernels/ref.py`):
 //! round-half-away-from-zero (`f32::round`), clamp to `[-127, 127]`,
 //! zero-scale columns quantize to 0.
 
+pub mod attn;
 pub mod dequantize;
 pub mod error;
 pub mod int4;
@@ -29,8 +34,9 @@ pub mod quantize;
 pub mod scales;
 pub mod tensorwise;
 
+pub use attn::{accumulate_rows_i8, dot_i8, dot_rows_i8};
 pub use dequantize::{dequantize, dequantize_into, dequantize_parallel};
-pub use error::{attention_score_error, l2_error, max_abs_error};
+pub use error::{attention_score_error, l2_error, max_abs_error, value_output_error};
 pub use matrix::{Fp32Matrix, Int8Matrix};
 pub use quantize::{quantize, quantize_fused, quantize_parallel, quantize_row_into};
 pub use scales::compute_scales;

@@ -63,8 +63,10 @@ pub fn error_response(msg: &str) -> Json {
 }
 
 /// `GET /config` body: the effective serving configuration — the resolved
-/// `parallelism` worker count of the quantization runtime plus the
-/// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`).
+/// `parallelism` worker count of the quantization runtime, the
+/// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`),
+/// and the decode data path (`attention_kernel` fused-kernel variant +
+/// whether zero-copy `paged_decode` is active).
 pub fn config_response(
     model: &str,
     precision: &str,
@@ -72,6 +74,8 @@ pub fn config_response(
     parallelism: usize,
     admission_mode: &str,
     prefix_cache_blocks: usize,
+    attention_kernel: &str,
+    paged_decode: bool,
     port: u16,
 ) -> Json {
     obj([
@@ -81,6 +85,8 @@ pub fn config_response(
         ("parallelism", parallelism.into()),
         ("admission_mode", admission_mode.into()),
         ("prefix_cache_blocks", prefix_cache_blocks.into()),
+        ("attention_kernel", attention_kernel.into()),
+        ("paged_decode", Json::Bool(paged_decode)),
         ("port", (port as usize).into()),
     ])
 }
@@ -119,11 +125,23 @@ mod tests {
 
     #[test]
     fn config_response_shape() {
-        let j = config_response("kvq-3m", "int8", "cpu", 4, "optimistic", 512, 8080);
+        let j = config_response(
+            "kvq-3m",
+            "int8",
+            "cpu",
+            4,
+            "optimistic",
+            512,
+            "vectorized",
+            true,
+            8080,
+        );
         assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
         assert_eq!(j.get("parallelism").as_usize(), Some(4));
         assert_eq!(j.get("admission_mode").as_str(), Some("optimistic"));
         assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(512));
+        assert_eq!(j.get("attention_kernel").as_str(), Some("vectorized"));
+        assert_eq!(j.get("paged_decode").as_bool(), Some(true));
         assert_eq!(j.get("port").as_usize(), Some(8080));
     }
 

@@ -163,8 +163,17 @@ mod tests {
     #[test]
     fn config_endpoint_serves_info() {
         let (mut svc, h, join) = service();
-        svc.info =
-            crate::server::api::config_response("test-tiny", "int8", "cpu", 2, "optimistic", 0, 0);
+        svc.info = crate::server::api::config_response(
+            "test-tiny",
+            "int8",
+            "cpu",
+            2,
+            "optimistic",
+            0,
+            "vectorized",
+            true,
+            0,
+        );
         let resp = get(&svc, "/config");
         assert_eq!(resp.status, 200);
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();

@@ -7,7 +7,11 @@
 //!   serial bytes, with the fan-out threshold forced to 0 so the parallel
 //!   code path actually runs on test-sized inputs;
 //! * Engine: greedy generations are identical at parallelism 1 and 8
-//!   (decode waves reorder gathers, never outputs).
+//!   (decode waves reorder gathers, never outputs);
+//! * Paged fused decode: bit-identical to the staged `decode_i8` path
+//!   across all four attention-kernel variants and thread counts 1/2/8
+//!   (the §7.5 cross-kernel consistency check, extended to the zero-copy
+//!   serving path).
 
 use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::collect_response;
@@ -17,8 +21,8 @@ use kvq::kvcache::Precision;
 use kvq::model::runner::CpuBackend;
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
-use kvq::model::ModelSpec;
-use kvq::quant::{self, Fp32Matrix, Int8Matrix};
+use kvq::model::{CpuModel, ModelSpec};
+use kvq::quant::{self, Fp32Matrix, Int8Matrix, Variant};
 
 const SWEEP: [usize; 3] = [1, 2, 8];
 
@@ -203,4 +207,104 @@ fn engine_generations_identical_across_parallelism() {
     let parallel = gen_tokens(8);
     assert_eq!(serial, parallel, "decode waves changed generated tokens");
     assert!(serial.iter().all(|t| t.len() == 6));
+}
+
+#[test]
+fn paged_decode_bit_identical_to_staged_across_variants_and_threads() {
+    // Same model, same prompt: decode one token over (a) the legacy dense
+    // staging gathered out of the cache and (b) the zero-copy paged view,
+    // across every attention-kernel variant and manager thread count.
+    // Logits and K/V rows must match bit-for-bit.
+    let spec = ModelSpec::test_tiny();
+    let model = CpuModel::new(spec.clone(), Weights::synthetic(&spec, 7));
+    let mut rng = kvq::util::rng::Rng::new(13);
+    let tokens: Vec<i32> = (0..20).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+    let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+
+    // Lengths covering a partial tail block and an exact block multiple.
+    for n in [5usize, 16] {
+        let pre = model.prefill(&tokens, n);
+        for threads in SWEEP {
+            let cfg = CacheConfig {
+                layers: l,
+                heads: h,
+                head_dim: d,
+                max_seq: s,
+                block_size: spec.block_size,
+                num_blocks: 256,
+                precision: Precision::Int8,
+                scale_margin: 1.0,
+            };
+            let mut mgr = KvCacheManager::new(cfg);
+            mgr.set_parallelism(threads);
+            mgr.set_parallel_threshold(0);
+            let id = mgr.new_sequence();
+            mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
+
+            // Staged path: gather the full dense staging + scales.
+            let mut kq = vec![0i8; l * h * s * d];
+            let mut vq = vec![0i8; l * h * s * d];
+            let mut ks = vec![0.0f32; l * h * d];
+            let mut vs = vec![0.0f32; l * h * d];
+            for layer in 0..l {
+                let span = layer * h * s * d..(layer + 1) * h * s * d;
+                mgr.gather_i8(id, layer, 0, &mut kq[span.clone()]).unwrap();
+                mgr.gather_i8(id, layer, 1, &mut vq[span]).unwrap();
+                let sspan = layer * h * d..(layer + 1) * h * d;
+                ks[sspan.clone()].copy_from_slice(mgr.scales(id, layer, 0).unwrap());
+                vs[sspan].copy_from_slice(mgr.scales(id, layer, 1).unwrap());
+            }
+            let (sl, sk, sv) = model.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs);
+
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            for variant in Variant::ALL {
+                let view = mgr.view(id).unwrap();
+                let (pl, pk, pv) = model.decode_paged(tokens[n], n, &view, variant).unwrap();
+                assert_eq!(bits(&pl), bits(&sl), "logits diverged: n={n} x{threads} {variant:?}");
+                assert_eq!(bits(&pk), bits(&sk), "k_new diverged: n={n} {variant:?}");
+                assert_eq!(bits(&pv), bits(&sv), "v_new diverged: n={n} {variant:?}");
+            }
+            mgr.free(id);
+        }
+    }
+}
+
+#[test]
+fn engine_paged_and_staged_generations_identical() {
+    // Full engine runs: the zero-copy paged data path (every kernel
+    // variant) must emit exactly the token streams of the staged path,
+    // at thread counts 1/2/8.
+    let gen_tokens = |paged: bool, kernel: Variant, parallelism: usize| -> Vec<Vec<i32>> {
+        let cfg = EngineConfig {
+            precision: Precision::Int8,
+            parallelism,
+            paged_decode: paged,
+            attention_kernel: kernel,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(cfg, cpu_factory());
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", h.clone());
+        let mut streams = Vec::new();
+        for i in 0..4 {
+            let prompt = vec![i as i32 + 1, 11, 3, 5];
+            let (_, rx) = router.submit(prompt, 5, SamplingParams::default()).unwrap();
+            streams.push(rx);
+        }
+        let out: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+        h.drain();
+        join.join().unwrap();
+        out
+    };
+    let staged = gen_tokens(false, Variant::Vectorized, 1);
+    for threads in SWEEP {
+        for kernel in Variant::ALL {
+            let paged = gen_tokens(true, kernel, threads);
+            assert_eq!(
+                staged, paged,
+                "paged decode changed generated tokens ({kernel:?} x{threads})"
+            );
+        }
+    }
+    assert!(staged.iter().all(|t| t.len() == 5));
 }

@@ -67,6 +67,82 @@ fn prop_all_variants_identical() {
 }
 
 #[test]
+fn prop_fused_attention_variants_bit_identical() {
+    // The zero-copy decode contract (paper §7.5 extended to attention):
+    // every dot_i8 / accumulate_rows_i8 variant produces the same bits,
+    // for arbitrary slabs, and matches the f64 dequantize-then-dot
+    // reference within a stated f32 accumulation tolerance.
+    check("fused attention consistency", 200, |g| {
+        let k = matrix_from(g);
+        let (rows, d) = (k.rows, k.cols);
+        let q8 = quant::quantize_fused(&k);
+        let mut qrow = vec![0.0f32; d];
+        let mut w = vec![0.0f32; rows];
+        for v in qrow.iter_mut() {
+            *v = g.f32_in(-1.0..1.0);
+        }
+        for v in w.iter_mut() {
+            *v = g.f32_in(0.0..1.0);
+        }
+
+        // Score pass.
+        let mut base = vec![0.0f32; rows];
+        quant::attn::dot_rows_i8(Variant::Naive, &qrow, &q8.data, &q8.scales, &mut base);
+        for v in [Variant::Tiled, Variant::Coarsened, Variant::Vectorized] {
+            let mut out = vec![0.0f32; rows];
+            quant::attn::dot_rows_i8(v, &qrow, &q8.data, &q8.scales, &mut out);
+            ensure(
+                out.iter().zip(&base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                format!("dot {v:?} diverged"),
+            )?;
+        }
+        // f64 dequantize-then-dot reference with a serial-f32-sum bound:
+        // |err| <= n·eps·Σ|terms| (+ a tiny absolute floor).
+        for r in 0..rows {
+            let mut reference = 0.0f64;
+            let mut magnitude = 0.0f64;
+            for ch in 0..d {
+                let term = qrow[ch] as f64 * (q8.data[r * d + ch] as f64 * q8.scales[ch] as f64);
+                reference += term;
+                magnitude += term.abs();
+            }
+            let tol = 1e-5 * (d as f64) * magnitude + 1e-6;
+            ensure(
+                (base[r] as f64 - reference).abs() <= tol,
+                format!("row {r}: fused {} vs dequant-then-dot {reference}", base[r]),
+            )?;
+        }
+
+        // Softmax·V accumulation pass.
+        let mut acc_base = vec![0.0f32; d];
+        quant::attn::accumulate_rows_i8(Variant::Naive, &w, &q8.data, &q8.scales, &mut acc_base);
+        for v in [Variant::Tiled, Variant::Coarsened, Variant::Vectorized] {
+            let mut acc = vec![0.0f32; d];
+            quant::attn::accumulate_rows_i8(v, &w, &q8.data, &q8.scales, &mut acc);
+            ensure(
+                acc.iter().zip(&acc_base).all(|(a, b)| a.to_bits() == b.to_bits()),
+                format!("accumulate {v:?} diverged"),
+            )?;
+        }
+        for ch in 0..d {
+            let mut reference = 0.0f64;
+            let mut magnitude = 0.0f64;
+            for r in 0..rows {
+                let term = w[r] as f64 * (q8.data[r * d + ch] as f64 * q8.scales[ch] as f64);
+                reference += term;
+                magnitude += term.abs();
+            }
+            let tol = 1e-5 * (rows as f64) * magnitude + 1e-6;
+            ensure(
+                (acc_base[ch] as f64 - reference).abs() <= tol,
+                format!("ch {ch}: fused {} vs dequant ref {reference}", acc_base[ch]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_scales_properties() {
     check("scales", 200, |g| {
         let k = matrix_from(g);

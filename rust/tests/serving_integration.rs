@@ -114,6 +114,106 @@ fn fp32_and_int8_engines_agree_on_greedy_tokens() {
 }
 
 #[test]
+fn int4_engine_serves_requests_end_to_end() {
+    // The INT4 serving path (paper §8.1, 8x compression) runs through the
+    // zero-copy paged decode — no dense staging layout exists for packed
+    // nibbles. Requests must complete normally.
+    let (h, join) = engine::spawn(default_engine(Precision::Int4), cpu_factory());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("int4", h.clone());
+    let mut streams = Vec::new();
+    for i in 0..3 {
+        let (_, rx) = router.submit(vec![i + 1, 8, 4], 4, SamplingParams::default()).unwrap();
+        streams.push(rx);
+    }
+    for rx in &streams {
+        let (tokens, reason, ..) = collect_response(rx);
+        assert_eq!(reason, FinishReason::Length, "int4 decode failed");
+        assert_eq!(tokens.len(), 4);
+    }
+    h.drain();
+    join.join().unwrap();
+    assert_eq!(h.metrics.snapshot().requests_finished, 3);
+
+    // And it must be deterministic: same prompt, same greedy tokens.
+    let (h2, j2) = engine::spawn(default_engine(Precision::Int4), cpu_factory());
+    let mut r2 = Router::new(RoutePolicy::RoundRobin);
+    r2.add_engine("int4", h2.clone());
+    let (_, rxa) = r2.submit(vec![1, 8, 4], 4, SamplingParams::default()).unwrap();
+    let (ta, ..) = collect_response(&rxa);
+    let (_, rxb) = r2.submit(vec![1, 8, 4], 4, SamplingParams::default()).unwrap();
+    let (tb, ..) = collect_response(&rxb);
+    assert_eq!(ta, tb);
+    h2.drain();
+    j2.join().unwrap();
+}
+
+#[test]
+fn int4_without_paged_decode_is_rejected_at_startup() {
+    // INT4 has no dense staging layout: an engine configured for int4
+    // with paged decode disabled must fail fast at init (every request
+    // rejected), not burn prefills and die at the first decode step.
+    let cfg = EngineConfig { paged_decode: false, ..default_engine(Precision::Int4) };
+    let (h, join) = engine::spawn(cfg, cpu_factory());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("int4", h.clone());
+    let (_, rx) = router.submit(vec![1, 2], 2, SamplingParams::default()).unwrap();
+    let (tokens, reason, ..) = collect_response(&rx);
+    assert!(tokens.is_empty());
+    assert!(matches!(reason, FinishReason::Rejected(_)), "{reason:?}");
+    h.drain();
+    join.join().unwrap();
+}
+
+#[test]
+fn int4_decode_error_tracks_fp32_within_paper_bound() {
+    // Paper-style §8.1 error bound, self-calibrated: the 4-bit grid is
+    // (1/14)/(1/254) ≈ 18x coarser than INT8, so INT4 decode logits may
+    // drift from the FP32 oracle by at most ~that factor of the measured
+    // INT8 drift (generous margin for softmax/layer amplification).
+    use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+    use kvq::model::CpuModel;
+    use kvq::model::ModelSpec as Spec;
+    use kvq::quant::Variant;
+
+    let spec = Spec::test_tiny();
+    let model = CpuModel::new(spec.clone(), kvq::model::weights::Weights::synthetic(&spec, 7));
+    let tokens: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
+    let n = 8;
+    let pre = model.prefill(&tokens, n);
+    let (l32, ..) = model.decode_f32(tokens[n], n, &pre.k, &pre.v);
+
+    let decode_at = |precision: Precision| -> Vec<f32> {
+        let cfg = CacheConfig {
+            layers: spec.layers,
+            heads: spec.heads,
+            head_dim: spec.head_dim,
+            max_seq: spec.max_seq,
+            block_size: spec.block_size,
+            num_blocks: 256,
+            precision,
+            scale_margin: 1.0,
+        };
+        let mut mgr = KvCacheManager::new(cfg);
+        let id = mgr.new_sequence();
+        mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
+        let view = mgr.view(id).unwrap();
+        let (logits, ..) = model.decode_paged(tokens[n], n, &view, Variant::Vectorized).unwrap();
+        logits
+    };
+    let max_diff = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+    };
+    let diff8 = max_diff(&decode_at(Precision::Int8), &l32);
+    let diff4 = max_diff(&decode_at(Precision::Int4), &l32);
+    assert!(diff4 > 0.0, "int4 quantization noise must register");
+    assert!(
+        diff4 <= 40.0 * diff8.max(1e-4) + 0.1,
+        "int4 drift {diff4} exceeds the paper-style bound (int8 drift {diff8})"
+    );
+}
+
+#[test]
 fn oversized_request_is_rejected_cleanly() {
     let (h, join) = engine::spawn(default_engine(Precision::Int8), cpu_factory());
     let mut router = Router::new(RoutePolicy::RoundRobin);
