@@ -9,7 +9,7 @@
 //! ```
 
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
-use kvq::kvcache::{MemoryModel, Precision};
+use kvq::kvcache::{MemoryModel, Precision, QuantPolicy};
 use kvq::quant::Fp32Matrix;
 use kvq::util::harness::Table;
 use kvq::util::stats::fmt_bytes;
@@ -43,10 +43,10 @@ fn main() -> anyhow::Result<()> {
         max_seq: 512,
         block_size: 16,
         num_blocks: 512,
-        precision: Precision::Int8,
         scale_margin: 1.0,
     };
-    let mut mgr = KvCacheManager::new(cfg);
+    let mut mgr =
+        KvCacheManager::new(cfg, QuantPolicy::uniform(Precision::Int8, cfg.layers, cfg.heads));
     println!(
         "\npool: {} blocks ({}), {} blocks per full sequence",
         cfg.num_blocks,

@@ -9,7 +9,7 @@
 //! ```
 
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
-use kvq::kvcache::{MemoryModel, Precision};
+use kvq::kvcache::{MemoryModel, Precision, QuantPolicy};
 use kvq::quant::{self, Fp32Matrix};
 use kvq::util::stats::fmt_bytes;
 
@@ -52,10 +52,10 @@ fn main() -> anyhow::Result<()> {
         max_seq: 128,
         block_size: 16,
         num_blocks: 256,
-        precision: Precision::Int8,
         scale_margin: 1.0,
     };
-    let mut mgr = KvCacheManager::new(cfg);
+    let mut mgr =
+        KvCacheManager::new(cfg, QuantPolicy::uniform(Precision::Int8, cfg.layers, cfg.heads));
     let id = mgr.new_sequence();
     let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
     let kc = Fp32Matrix::random_normal(1, n, 1.0, 1).data;

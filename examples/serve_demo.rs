@@ -14,7 +14,7 @@
 use kvq::coordinator::batcher::BatcherConfig;
 use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::router::{RoutePolicy, Router};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{PolicySpec, Precision};
 use kvq::model::runner::{DecodeKernel, PjrtBackend};
 use kvq::runtime::Runtime;
 use kvq::server::http::{http_request, HttpServer};
@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         let m = model.clone();
         let (h, join) = engine::spawn(
             EngineConfig {
-                precision,
+                quant_policy: PolicySpec::uniform(precision),
                 batcher: BatcherConfig { max_prefills_per_step: 2, ..Default::default() },
                 ..Default::default()
             },

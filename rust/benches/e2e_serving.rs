@@ -27,7 +27,7 @@ use kvq::coordinator::batcher::BatcherConfig;
 use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::collect_response;
 use kvq::coordinator::router::{RoutePolicy, Router};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{PolicySpec, Precision};
 use kvq::model::runner::{CpuBackend, DecodeKernel, PjrtBackend};
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
@@ -107,7 +107,7 @@ fn overload_scenario(
 
     for mode in [AdmissionMode::WorstCase, AdmissionMode::Optimistic] {
         let ecfg = EngineConfig {
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(Precision::Int8),
             num_blocks: Some(num_blocks),
             // Prefix sharing only helps the optimistic run: the contrast
             // below is "old scheduler" vs "new scheduler", not one knob.
@@ -213,7 +213,7 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
     let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
     for (label, paged) in [("staged", false), ("paged", true)] {
         let ecfg = EngineConfig {
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(Precision::Int8),
             paged_decode: paged,
             ..Default::default()
         };
@@ -257,6 +257,80 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
     Ok(())
 }
 
+/// Policy sweep on the CPU oracle: serve the same workload under each
+/// named quantization policy (`uniform:int8`, `uniform:int4`, `k8v4`,
+/// `sink8`) and record throughput, decode ns/token, cache bytes/token,
+/// and the per-precision cache byte split from `GET /metrics`. Mixed
+/// policies and INT4 ride the zero-copy paged path; runs in `--smoke`
+/// so CI's `BENCH_e2e_smoke.json` carries a `policy_sweep` section.
+fn policy_sweep_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::Result<()> {
+    let spec = ModelSpec::test_tiny();
+    let prompt_len = spec.block_size;
+    let max_new = (spec.max_seq - prompt_len) / 2;
+    let wl = ServingWorkload::poisson(
+        n_requests,
+        1000.0,
+        (prompt_len, prompt_len),
+        max_new,
+        spec.vocab.min(256),
+        13,
+    );
+    for policy in [
+        PolicySpec::Uniform(Precision::Int8),
+        PolicySpec::Uniform(Precision::Int4),
+        PolicySpec::K8V4,
+        PolicySpec::Sink8 { sink_layers: 1 },
+    ] {
+        let label = policy.name();
+        // Per-precision cache footprint of one full sequence under this
+        // policy (closed-form: the engine's end-of-run gauges read 0 —
+        // finished sequences are freed before the final step books them).
+        let resolved = policy.resolve(spec.layers, spec.heads, spec.head_dim)?;
+        let seq_bytes =
+            resolved.payload_bytes_by_precision(spec.head_dim, prompt_len + max_new);
+        let ecfg = EngineConfig { quant_policy: policy, ..Default::default() };
+        let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("sweep", h.clone());
+        let t0 = Instant::now();
+        let streams: Vec<_> = wl
+            .prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        let mut tokens_total = 0usize;
+        for rx in &streams {
+            tokens_total += collect_response(rx).0.len();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        h.drain();
+        join.join().ok();
+        let snap = h.metrics.snapshot();
+        report.add(
+            "policy_sweep",
+            &label,
+            None,
+            &[
+                ("tok_per_s", Json::Num(tokens_total as f64 / wall)),
+                ("decode_ns_per_token", Json::Num(snap.decode_ns_per_token())),
+                ("cache_bytes_per_token", Json::Num(snap.cache_bytes_per_token())),
+                ("seq_cache_bytes_fp32", Json::Num(seq_bytes[0] as f64)),
+                ("seq_cache_bytes_int8", Json::Num(seq_bytes[1] as f64)),
+                ("seq_cache_bytes_int4", Json::Num(seq_bytes[2] as f64)),
+                ("tokens", Json::Num(snap.tokens_generated as f64)),
+            ],
+        );
+        println!(
+            "[policy_sweep/{label}] {:.1} tok/s, {:.0} ns/token decode, \
+             {:.0} cache bytes/token",
+            tokens_total as f64 / wall,
+            snap.decode_ns_per_token(),
+            snap.cache_bytes_per_token()
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
     let smoke = args.has("smoke");
@@ -297,7 +371,7 @@ fn main() -> anyhow::Result<()> {
             for precision in [Precision::Fp32, Precision::Int8] {
                 let m = model.clone();
                 let ecfg = EngineConfig {
-                    precision,
+                    quant_policy: PolicySpec::uniform(precision),
                     expected_concurrency: concurrency,
                     parallelism: threads,
                     batcher: BatcherConfig {
@@ -396,6 +470,9 @@ fn main() -> anyhow::Result<()> {
     // Decode data-path contrast: staged copies vs zero-copy block-native
     // fused attention (CPU backend; runs in --smoke for the CI artifact).
     decode_path_scenario(&mut report, args.usize_or("decode-path-requests", 6))?;
+
+    // Quantization-policy sweep (CPU backend; runs in --smoke too).
+    policy_sweep_scenario(&mut report, args.usize_or("policy-sweep-requests", 4))?;
 
     // Scheduler scenario: optimistic admission + preemption + prefix
     // sharing vs worst-case reservation, same pool, same workload.

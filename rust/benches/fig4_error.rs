@@ -4,12 +4,29 @@
 //! 0.00394 for U(-1,1) inputs, attention error ∝ √D, and the softmax
 //! averaging drives the V-side output error well below the per-element
 //! bound.
+//!
+//! Also emits the **policy sweep** (fig4b): per-policy
+//! key/attention/value-output error columns for `uniform:int8`,
+//! `uniform:int4`, `k8v4`, and `sink8` — the error half of the
+//! non-uniform accuracy/memory frontier. The policy sweep needs no PJRT
+//! artifacts, so it always runs; the artifact-backed per-shape table is
+//! skipped (with a warning) when the runtime is unavailable.
 
 use kvq::bench::figures;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = figures::FigCtx::from_env()?;
-    let t = figures::fig4_table(&ctx)?;
-    figures::emit(&t, "fig4_error");
+    // Policy sweep first: pure-CPU, always available.
+    figures::emit(&figures::fig4_policy_table(), "fig4_policy_error");
+
+    // Artifact-backed per-shape sweep (attnerr probes run via PJRT).
+    match figures::FigCtx::from_env() {
+        Ok(ctx) => {
+            let t = figures::fig4_table(&ctx)?;
+            figures::emit(&t, "fig4_error");
+        }
+        Err(e) => {
+            eprintln!("[fig4] skipping artifact-backed table (no PJRT runtime): {e:#}");
+        }
+    }
     Ok(())
 }

@@ -7,6 +7,9 @@ use kvq::util::harness::Table;
 
 fn main() -> anyhow::Result<()> {
     figures::emit(&figures::table1(), "table1_memory");
+    // Policy sweep: per-policy compression on the same geometry (k8v4
+    // lands between uniform int8 and int4; sink8 just under int8).
+    figures::emit(&figures::table1_policies(), "table1_policies");
 
     // Table 3: the benchmark configurations (paper set).
     let reg = ShapeRegistry::load_default()?;

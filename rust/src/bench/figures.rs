@@ -373,6 +373,99 @@ pub fn fig4_table(ctx: &FigCtx) -> Result<Table> {
     Ok(t)
 }
 
+/// The named policies every policy sweep reports (uniform presets plus
+/// the mixed-precision ones the related work motivates).
+pub fn sweep_policies() -> Vec<crate::kvcache::PolicySpec> {
+    use crate::kvcache::{PolicySpec, Precision};
+    vec![
+        PolicySpec::Uniform(Precision::Int8),
+        PolicySpec::Uniform(Precision::Int4),
+        PolicySpec::K8V4,
+        PolicySpec::Sink8 { sink_layers: 1 },
+    ]
+}
+
+/// Quantize-and-reconstruct a matrix at one precision (the closed-loop
+/// error probe used by the policy sweep).
+fn reconstruct(p: crate::kvcache::Precision, m: &Fp32Matrix) -> Fp32Matrix {
+    use crate::kvcache::Precision;
+    use crate::quant::int4;
+    match p {
+        Precision::Fp32 => m.clone(),
+        Precision::Int8 => quant::dequantize(&quant::quantize_fused(m)),
+        Precision::Int4 => int4::dequantize4(&int4::quantize4(m)),
+    }
+}
+
+/// Figure 4 policy sweep: per-policy key/attention/value-output error on
+/// a synthetic multi-layer cache, with the policy's payload compression.
+/// Substrate-independent (no PJRT needed) — this is the error side of
+/// the non-uniform accuracy/memory frontier the mixed policies target:
+/// `k8v4` keeps the K-side (attention-score) error at INT8 level while
+/// taking the V side to INT4, and `sink8` zeroes layer-0 error entirely.
+pub fn fig4_policy_table() -> Table {
+    use crate::kvcache::PolicyMemory;
+    let (layers, tokens, dim, queries) = (4usize, 2048usize, 64usize, 16usize);
+    let mut t = Table::new(
+        "Figure 4b — error by quantization policy (L=4, T=2048, D=64)",
+        &["policy", "key_max_abs", "attn_err", "vout_err", "payload_vs_fp32"],
+    );
+    let q = Fp32Matrix::random_uniform(queries, dim, -1.0, 1.0, 0x9E44);
+    for spec in sweep_policies() {
+        let policy = spec.resolve(layers, 1, dim).expect("sweep policies resolve");
+        let (mut key_max, mut attn_sum, mut vout_sum) = (0.0f64, 0.0f64, 0.0f64);
+        for layer in 0..layers {
+            let seed = 0xE44 + layer as u64;
+            let k = Fp32Matrix::random_uniform(tokens, dim, -1.0, 1.0, seed);
+            let v = Fp32Matrix::random_uniform(tokens, dim, -1.0, 1.0, seed ^ 0x5A5A);
+            let k_hat = reconstruct(policy.precision(layer, 0, 0), &k);
+            let v_hat = reconstruct(policy.precision(layer, 1, 0), &v);
+            key_max = key_max.max(quant::max_abs_error(&k, &k_hat));
+            attn_sum += quant::attention_score_error(&q, &k, &k_hat);
+            let probs = softmax_rows(&Fp32Matrix::random_normal(queries, tokens, 1.0, seed ^ 1));
+            vout_sum += quant::value_output_error(&probs, &v, &v_hat);
+        }
+        let mem = PolicyMemory::new(&policy, dim, tokens);
+        // fp32 payload of the sweep geometry: 2 sides × L × H=1 rows.
+        let fp32_payload = (2 * layers * tokens * dim * 4) as u64;
+        t.row(&[
+            spec.name(),
+            cell_f(key_max, 5),
+            cell_f(attn_sum / layers as f64, 5),
+            cell_f(vout_sum / layers as f64, 7),
+            format!("{:.2}x", fp32_payload as f64 / mem.payload_bytes() as f64),
+        ]);
+    }
+    t
+}
+
+/// Table 1 policy sweep: the closed-form memory model under each named
+/// policy on the paper's Table-1 geometry. `k8v4` must land between the
+/// uniform int8 (4x) and int4 (8x) caches (≈5.3x).
+pub fn table1_policies() -> Table {
+    use crate::kvcache::{MemoryModel, PolicyMemory};
+    use crate::util::stats::fmt_bytes;
+    let base = MemoryModel::table1_example();
+    let mut t = Table::new(
+        "Table 1b — KV cache memory by quantization policy (L=32 H=32 d=128 T=131072)",
+        &["policy", "payload", "scales", "total", "vs fp32"],
+    );
+    for spec in sweep_policies() {
+        let policy = spec
+            .resolve(base.layers, base.heads, base.head_dim)
+            .expect("sweep policies resolve");
+        let m = PolicyMemory::new(&policy, base.head_dim, base.seq_len);
+        t.row(&[
+            spec.name(),
+            fmt_bytes(m.payload_bytes() as f64),
+            fmt_bytes(m.scale_overhead_bytes() as f64),
+            fmt_bytes(m.total_bytes() as f64),
+            format!("{:.2}x", m.compression_vs_fp32()),
+        ]);
+    }
+    t
+}
+
 /// Table 1: the closed-form memory model across precisions.
 pub fn table1() -> Table {
     use crate::kvcache::{MemoryModel, Precision};

@@ -12,7 +12,7 @@ pub mod shapes;
 
 use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
-use crate::kvcache::Precision;
+use crate::kvcache::{PolicySpec, Precision};
 use crate::model::runner::DecodeKernel;
 use crate::quant::Variant;
 use crate::util::args::Args;
@@ -43,7 +43,13 @@ impl Backend {
 pub struct ServeConfig {
     pub model: String,
     pub backend: Backend,
-    pub precision: Precision,
+    /// Cache quantization policy. The legacy `--precision X` /
+    /// `"precision"` knobs map to `uniform:X`; `--quant-policy` /
+    /// `"quant_policy"` additionally accept `k8v4`, `sink8[:N]`, and
+    /// paths to JSON per-layer tables (see `configs/`). Non-staging
+    /// policies (mixed precision, INT4 anywhere) require `--backend cpu`
+    /// with paged decode on.
+    pub quant_policy: PolicySpec,
     pub decode_kernel: DecodeKernel,
     pub artifact_dir: String,
     pub weight_seed: u64,
@@ -74,7 +80,7 @@ impl Default for ServeConfig {
         ServeConfig {
             model: "kvq-3m".into(),
             backend: Backend::Pjrt,
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(Precision::Int8),
             decode_kernel: DecodeKernel::PlainXla,
             artifact_dir: crate::runtime::default_artifact_dir(),
             weight_seed: 0xA11CE,
@@ -110,7 +116,12 @@ impl ServeConfig {
             self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad backend {v:?}"))?;
         }
         if let Some(v) = j.get("precision").as_str() {
-            self.precision = Precision::parse(v).ok_or_else(|| anyhow!("bad precision {v:?}"))?;
+            let p = Precision::parse(v).ok_or_else(|| anyhow!("bad precision {v:?}"))?;
+            self.quant_policy = PolicySpec::uniform(p);
+        }
+        if let Some(v) = j.get("quant_policy").as_str() {
+            self.quant_policy =
+                PolicySpec::parse(v).with_context(|| format!("bad quant_policy {v:?}"))?;
         }
         if let Some(v) = j.get("decode_kernel").as_str() {
             self.decode_kernel = match v {
@@ -181,8 +192,12 @@ impl ServeConfig {
             self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad --backend {v:?}"))?;
         }
         if let Some(v) = args.get("precision") {
-            self.precision =
-                Precision::parse(v).ok_or_else(|| anyhow!("bad --precision {v:?}"))?;
+            let p = Precision::parse(v).ok_or_else(|| anyhow!("bad --precision {v:?}"))?;
+            self.quant_policy = PolicySpec::uniform(p);
+        }
+        if let Some(v) = args.get("quant-policy") {
+            self.quant_policy =
+                PolicySpec::parse(v).with_context(|| format!("bad --quant-policy {v:?}"))?;
         }
         if let Some(v) = args.get("decode-kernel") {
             self.decode_kernel = match v {
@@ -232,7 +247,7 @@ impl ServeConfig {
     /// Engine config slice of this serve config.
     pub fn engine_config(&self) -> crate::coordinator::EngineConfig {
         crate::coordinator::EngineConfig {
-            precision: self.precision,
+            quant_policy: self.quant_policy.clone(),
             num_blocks: self.num_blocks,
             expected_concurrency: self.expected_concurrency,
             scale_margin: self.scale_margin,
@@ -257,7 +272,7 @@ mod tests {
     #[test]
     fn defaults_are_sane() {
         let c = ServeConfig::default();
-        assert_eq!(c.precision, Precision::Int8);
+        assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Int8));
         assert_eq!(c.backend, Backend::Pjrt);
         assert_eq!(c.port, 8080);
     }
@@ -274,7 +289,7 @@ mod tests {
         .unwrap();
         c.apply_json(&j).unwrap();
         assert_eq!(c.model, "kvq-25m");
-        assert_eq!(c.precision, Precision::Fp32);
+        assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Fp32));
         assert_eq!(c.port, 9000);
         assert_eq!(c.batcher.admission.max_running, 4);
         assert_eq!(c.decode_kernel, DecodeKernel::Pallas);
@@ -291,6 +306,59 @@ mod tests {
         let c = ServeConfig::default();
         assert_eq!(c.batcher.admission.mode, AdmissionMode::Optimistic);
         assert_eq!(c.prefix_cache_blocks, 0);
+    }
+
+    #[test]
+    fn quant_policy_knob_round_trips() {
+        // JSON key: presets parse, legacy "precision" still works, and
+        // the later key wins.
+        let mut c = ServeConfig::default();
+        c.apply_json(&Json::parse(r#"{"quant_policy":"k8v4"}"#).unwrap()).unwrap();
+        assert_eq!(c.quant_policy, PolicySpec::K8V4);
+        assert_eq!(c.engine_config().quant_policy, PolicySpec::K8V4);
+        c.apply_json(&Json::parse(r#"{"quant_policy":"sink8:2"}"#).unwrap()).unwrap();
+        assert_eq!(c.quant_policy, PolicySpec::Sink8 { sink_layers: 2 });
+        // Legacy precision spelling maps onto the uniform preset...
+        c.apply_json(&Json::parse(r#"{"precision":"int4"}"#).unwrap()).unwrap();
+        assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Int4));
+        // ...and an explicit quant_policy in the same document wins.
+        c.apply_json(&Json::parse(r#"{"precision":"int8","quant_policy":"k8v4"}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.quant_policy, PolicySpec::K8V4);
+        // CLI flags: --quant-policy beats --precision; bad values error.
+        let args = Args::parse_from(
+            ["--precision", "fp32", "--quant-policy", "uniform:int8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Int8));
+        assert_eq!(c.quant_policy.engine_label(), "int8");
+        let bad = Args::parse_from(["--quant-policy", "sink8:x"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+        assert!(ServeConfig::default()
+            .apply_json(&Json::parse(r#"{"quant_policy":"warp"}"#).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn quant_policy_loads_json_tables_from_disk() {
+        // The shipped example table under configs/ parses through the
+        // same --quant-policy path the CLI uses.
+        for base in ["configs", "../configs", "../../configs"] {
+            let path = format!("{base}/policy_sink_mixed.json");
+            if std::path::Path::new(&path).exists() {
+                let mut c = ServeConfig::default();
+                let args = Args::parse_from(["--quant-policy".to_string(), path.clone()]);
+                c.apply_args(&args).unwrap();
+                let PolicySpec::Table(t) = &c.quant_policy else {
+                    panic!("expected a table policy")
+                };
+                assert_eq!(t.name, c.quant_policy.name());
+                return;
+            }
+        }
+        panic!("configs/policy_sink_mixed.json not found from cwd");
     }
 
     #[test]
@@ -342,7 +410,7 @@ mod tests {
         );
         c.apply_args(&args).unwrap();
         assert_eq!(c.port, 9100);
-        assert_eq!(c.precision, Precision::Fp32);
+        assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Fp32));
         assert_eq!(c.parallelism, 2);
         assert_eq!(c.batcher.admission.mode, AdmissionMode::WorstCase);
         assert_eq!(c.prefix_cache_blocks, 128);

@@ -184,19 +184,21 @@ pub fn check_resume(
 mod tests {
     use super::*;
     use crate::kvcache::manager::CacheConfig;
-    use crate::kvcache::Precision;
+    use crate::kvcache::{Precision, QuantPolicy};
 
     fn cache(num_blocks: usize) -> KvCacheManager {
-        KvCacheManager::new(CacheConfig {
-            layers: 2,
-            heads: 2,
-            head_dim: 8,
-            max_seq: 64,
-            block_size: 4,
-            num_blocks,
-            precision: Precision::Int8,
-            scale_margin: 1.0,
-        })
+        KvCacheManager::new(
+            CacheConfig {
+                layers: 2,
+                heads: 2,
+                head_dim: 8,
+                max_seq: 64,
+                block_size: 4,
+                num_blocks,
+                scale_margin: 1.0,
+            },
+            QuantPolicy::uniform(Precision::Int8, 2, 2),
+        )
     }
 
     fn req(prompt: usize, max_new: usize) -> Request {

@@ -51,7 +51,7 @@ use super::metrics::{Metrics, StepGauges};
 use super::request::{EventTx, FinishReason, Request, RequestId, TokenEvent};
 use super::scheduler::{Running, Scheduler};
 use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
-use crate::kvcache::{Precision, PrefixCache};
+use crate::kvcache::{PolicySpec, PrefixCache, QuantPolicy, StagedKind};
 use crate::model::sample;
 use crate::model::LmBackend;
 use crate::parallel;
@@ -64,7 +64,12 @@ use std::time::Instant;
 /// Engine configuration (cache + batching policy).
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
-    pub precision: Precision,
+    /// Cache storage precision policy: a uniform preset (the legacy
+    /// `--precision` behavior), `k8v4`, `sink8[:N]`, or a JSON per-layer
+    /// table. Resolved against the backend's model spec at init; any
+    /// policy without a dense staging ABI (mixed precision, or INT4
+    /// anywhere) requires a paged-decode-capable backend.
+    pub quant_policy: PolicySpec,
     /// Cache pool size in blocks; None = size for `expected_concurrency`
     /// full-length sequences.
     pub num_blocks: Option<usize>,
@@ -94,7 +99,7 @@ pub struct EngineConfig {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(crate::kvcache::Precision::Int8),
             num_blocks: None,
             expected_concurrency: 8,
             scale_margin: 1.0,
@@ -156,22 +161,28 @@ where
     let join = std::thread::Builder::new()
         .name("kvq-engine".into())
         .spawn(move || {
-            // Fail fast: INT4 has no dense staging layout, so it can only
-            // serve through paged decode — reject the configuration here
-            // instead of failing every request at its first decode step.
+            // Fail fast: resolve the quantization policy against the
+            // model spec and reject impossible configurations here instead
+            // of failing every request at its first decode step. Only the
+            // uniform int8/fp32 policies have a dense staging ABI — every
+            // other policy (mixed precision, or INT4 anywhere) can only
+            // serve through paged decode.
             let init = backend_factory().and_then(|b| {
-                if cfg.precision == Precision::Int4
-                    && !(cfg.paged_decode && b.supports_paged_decode())
+                let spec = b.spec();
+                let policy =
+                    cfg.quant_policy.resolve(spec.layers, spec.heads, spec.head_dim)?;
+                if policy.staged().is_none() && !(cfg.paged_decode && b.supports_paged_decode())
                 {
                     anyhow::bail!(
-                        "int4 serving requires a paged-decode-capable backend (cpu) \
-                         with paged_decode enabled"
+                        "quant policy {} has no dense staging layout and requires a \
+                         paged-decode-capable backend (cpu) with paged_decode enabled",
+                        policy.name()
                     );
                 }
-                Ok(b)
+                Ok((b, policy))
             });
             match init {
-                Ok(backend) => Engine::new(cfg, backend, m2).run(rx),
+                Ok((backend, policy)) => Engine::new(cfg, policy, backend, m2).run(rx),
                 Err(e) => {
                     crate::error!("engine backend init failed: {e:#}");
                     // Reject everything that arrives.
@@ -213,8 +224,8 @@ struct StagingSlot {
 }
 
 impl StagingSlot {
-    fn new(precision: Precision, n: usize, ns: usize) -> StagingSlot {
-        let is_int8 = precision == Precision::Int8;
+    fn new(kind: StagedKind, n: usize, ns: usize) -> StagingSlot {
+        let is_int8 = kind == StagedKind::I8;
         StagingSlot {
             kq: if is_int8 { vec![0; n] } else { Vec::new() },
             vq: if is_int8 { vec![0; n] } else { Vec::new() },
@@ -234,15 +245,15 @@ impl StagingSlot {
 /// (threads² oversubscription).
 fn gather_sequence(
     cache: &KvCacheManager,
-    precision: Precision,
+    kind: StagedKind,
     seq: SeqId,
     slot: &mut StagingSlot,
     inner_threads: usize,
 ) -> Result<()> {
     let c = cache.config();
     let (l, h, s, d) = (c.layers, c.heads, c.max_seq, c.head_dim);
-    match precision {
-        Precision::Int8 => {
+    match kind {
+        StagedKind::I8 => {
             for li in 0..l {
                 let span = li * h * s * d..(li + 1) * h * s * d;
                 cache.gather_i8_with(seq, li, 0, &mut slot.kq[span.clone()], inner_threads)?;
@@ -252,16 +263,13 @@ fn gather_sequence(
                 slot.vs[sspan].copy_from_slice(cache.scales(seq, li, 1)?);
             }
         }
-        Precision::Fp32 => {
+        StagedKind::F32 => {
             for li in 0..l {
                 let span = li * h * s * d..(li + 1) * h * s * d;
                 cache.gather_f32_with(seq, li, 0, &mut slot.k32[span.clone()], inner_threads)?;
                 cache.gather_f32_with(seq, li, 1, &mut slot.v32[span], inner_threads)?;
             }
         }
-        // INT4 has no dense staging layout — it serves through the
-        // zero-copy paged path only.
-        Precision::Int4 => anyhow::bail!("int4 serving requires a paged-decode backend"),
     }
     Ok(())
 }
@@ -269,6 +277,10 @@ fn gather_sequence(
 struct Engine {
     backend: Box<dyn LmBackend>,
     cache: KvCacheManager,
+    /// Dense staging ABI the policy is compatible with (None ⇒ the
+    /// policy can only decode over the paged layout; spawn() guarantees
+    /// a paged-capable backend in that case).
+    staged_kind: Option<StagedKind>,
     prefix: PrefixCache,
     sched: Scheduler,
     batcher: Batcher,
@@ -288,34 +300,48 @@ struct Engine {
 }
 
 impl Engine {
-    fn new(cfg: EngineConfig, backend: Box<dyn LmBackend>, metrics: Metrics) -> Engine {
+    fn new(
+        cfg: EngineConfig,
+        policy: QuantPolicy,
+        backend: Box<dyn LmBackend>,
+        metrics: Metrics,
+    ) -> Engine {
         let spec = backend.spec().clone();
         let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
         let num_blocks =
             cfg.num_blocks.unwrap_or(blocks_per_seq * cfg.expected_concurrency.max(1));
-        let mut cache = KvCacheManager::new(CacheConfig {
-            layers: spec.layers,
-            heads: spec.heads,
-            head_dim: spec.head_dim,
-            max_seq: spec.max_seq,
-            block_size: spec.block_size,
-            num_blocks,
-            precision: cfg.precision,
-            scale_margin: cfg.scale_margin,
-        });
+        let staged_kind = policy.staged();
+        // Bytes one staged decode step copies: both K and V payloads at
+        // full max_seq stride plus both scale tensors (per-row accounting
+        // through the policy — identical to the legacy per-precision
+        // formula for the uniform staging-capable policies).
+        let staged_cache_bytes = (policy.payload_bytes(spec.head_dim, spec.max_seq)
+            + 2 * (spec.layers * spec.heads * spec.head_dim * 4) as u64)
+            as usize;
+        let policy_name = policy.name().to_string();
+        let mut cache = KvCacheManager::new(
+            CacheConfig {
+                layers: spec.layers,
+                heads: spec.heads,
+                head_dim: spec.head_dim,
+                max_seq: spec.max_seq,
+                block_size: spec.block_size,
+                num_blocks,
+                scale_margin: cfg.scale_margin,
+            },
+            policy,
+        );
         let threads = parallel::resolve(cfg.parallelism);
         cache.set_parallelism(threads);
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
         let paged = cfg.paged_decode && backend.supports_paged_decode();
-        // Bytes one staged decode step copies: both K and V payloads at
-        // full max_seq stride plus both scale tensors.
-        let staged_cache_bytes = 2 * cfg.precision.bytes_for(n) + 2 * ns * 4;
+        metrics.set_policy(&policy_name);
         crate::info!(
-            "engine up: model={} precision={} blocks={} cache={:.1} MiB threads={} \
+            "engine up: model={} policy={} blocks={} cache={:.1} MiB threads={} \
              admission={} prefix_cache_blocks={} decode={} kernel={}",
             spec.name,
-            cfg.precision.name(),
+            policy_name,
             num_blocks,
             cache.storage_bytes() as f64 / (1024.0 * 1024.0),
             threads,
@@ -327,6 +353,7 @@ impl Engine {
         Engine {
             backend,
             cache,
+            staged_kind,
             prefix: PrefixCache::new(cfg.prefix_cache_blocks),
             sched: Scheduler::new(),
             batcher: Batcher::new(),
@@ -334,11 +361,11 @@ impl Engine {
             metrics,
             threads,
             // Paged decode reads blocks in place; only the staged path
-            // preallocates dense staging.
-            staging: if paged {
-                Vec::new()
-            } else {
-                vec![StagingSlot::new(cfg.precision, n, ns)]
+            // preallocates dense staging (spawn() guarantees staged_kind
+            // exists whenever paged decode is unavailable).
+            staging: match (paged, staged_kind) {
+                (false, Some(kind)) => vec![StagingSlot::new(kind, n, ns)],
+                _ => Vec::new(),
             },
             paged,
             staged_cache_bytes,
@@ -463,6 +490,7 @@ impl Engine {
                 prefix_cache_blocks: self.prefix.pinned_blocks(),
                 prefix_lookups: pstats.lookups,
                 prefix_hits: pstats.hits,
+                cache_payload_bytes: self.cache.payload_bytes_by_precision(),
             },
         );
     }
@@ -587,7 +615,6 @@ impl Engine {
     /// path uses staging slot 0 (replay runs in the serial phase, never
     /// concurrently with a wave). Cache I/O is booked like any decode.
     fn replay_one(&mut self, seq: SeqId, token: i32, pos: usize) -> Result<()> {
-        let precision = self.cfg.precision;
         if self.paged {
             let attend_t0 = Instant::now();
             let (dec, bytes) = {
@@ -598,24 +625,24 @@ impl Engine {
             self.metrics.on_decode(0.0, attend_t0.elapsed().as_secs_f64(), bytes);
             return self.cache.append_row(seq, &dec.k_new, &dec.v_new);
         }
+        let kind = self.staged_kind.expect("staged decode without a dense staging ABI");
         let gather_t0 = Instant::now();
         {
             let slot = &mut self.staging[0];
             slot.err = None;
-            gather_sequence(&self.cache, precision, seq, slot, self.threads)?;
+            gather_sequence(&self.cache, kind, seq, slot, self.threads)?;
         }
         let gather_secs = gather_t0.elapsed().as_secs_f64();
         let attend_t0 = Instant::now();
-        let dec = match precision {
-            Precision::Int8 => {
+        let dec = match kind {
+            StagedKind::I8 => {
                 let st = &self.staging[0];
                 self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
             }
-            Precision::Fp32 => {
+            StagedKind::F32 => {
                 let st = &self.staging[0];
                 self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
             }
-            Precision::Int4 => anyhow::bail!("int4 serving requires a paged-decode backend"),
         };
         self.metrics.on_decode(
             gather_secs,
@@ -650,12 +677,13 @@ impl Engine {
             }
             return;
         }
+        let kind = self.staged_kind.expect("staged decode without a dense staging ABI");
         {
             let spec = self.backend.spec();
             let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
             let ns = spec.layers * spec.heads * spec.head_dim;
             while self.staging.len() < metas.len() {
-                self.staging.push(StagingSlot::new(self.cfg.precision, n, ns));
+                self.staging.push(StagingSlot::new(kind, n, ns));
             }
         }
         // Parallel gather phase: cache reads + staging writes are
@@ -663,13 +691,12 @@ impl Engine {
         // waves keep the manager's intra-gather fan-out instead.
         {
             let cache = &self.cache;
-            let precision = self.cfg.precision;
             let inner_threads = if metas.len() > 1 { 1 } else { self.threads };
             let slots = &mut self.staging[..metas.len()];
             parallel::parallel_zip(&metas, slots, self.threads, |_, &(_, seq, _, _), slot| {
                 let t0 = Instant::now();
                 slot.err = None;
-                if let Err(e) = gather_sequence(cache, precision, seq, slot, inner_threads) {
+                if let Err(e) = gather_sequence(cache, kind, seq, slot, inner_threads) {
                     slot.err = Some(format!("{e:#}"));
                 }
                 slot.gather_secs = t0.elapsed().as_secs_f64();
@@ -731,17 +758,16 @@ impl Engine {
                 (dec, bytes)
             }
             Some(i) => {
-                let dec = match self.cfg.precision {
-                    Precision::Int8 => {
+                let kind =
+                    self.staged_kind.expect("staged decode without a dense staging ABI");
+                let dec = match kind {
+                    StagedKind::I8 => {
                         let st = &self.staging[i];
                         self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
                     }
-                    Precision::Fp32 => {
+                    StagedKind::F32 => {
                         let st = &self.staging[i];
                         self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
-                    }
-                    Precision::Int4 => {
-                        anyhow::bail!("int4 serving requires a paged-decode backend")
                     }
                 };
                 (dec, self.staged_cache_bytes)

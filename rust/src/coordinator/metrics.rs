@@ -31,6 +31,11 @@ pub struct StepGauges {
     /// single source of truth (no parallel bookkeeping to drift).
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
+    /// Logical payload bytes of live sequences' valid cache rows, broken
+    /// down by storage precision (`[fp32, int8, int4]`) — the policy-aware
+    /// occupancy view from
+    /// [`crate::kvcache::KvCacheManager::payload_bytes_by_precision`].
+    pub cache_payload_bytes: [u64; 3],
 }
 
 #[derive(Debug)]
@@ -64,6 +69,8 @@ struct Inner {
     gauges: StepGauges,
     /// High-water mark of concurrently running sequences.
     running_peak: usize,
+    /// Active quantization policy name (set once at engine init).
+    policy: String,
 }
 
 /// Cloneable handle.
@@ -99,7 +106,13 @@ impl Metrics {
             step_time: LogHistogram::latency(),
             gauges: StepGauges::default(),
             running_peak: 0,
+            policy: String::new(),
         })))
+    }
+
+    /// Record the engine's quantization policy (shown at `GET /metrics`).
+    pub fn set_policy(&self, name: &str) {
+        self.0.lock().unwrap().policy = name.to_string();
     }
 
     pub fn on_submit(&self) {
@@ -199,6 +212,8 @@ impl Metrics {
             running_peak: m.running_peak,
             waiting: m.gauges.waiting,
             preempted: m.gauges.preempted,
+            cache_payload_bytes: m.gauges.cache_payload_bytes,
+            policy: m.policy.clone(),
         }
     }
 }
@@ -244,6 +259,10 @@ pub struct MetricsSnapshot {
     pub running_peak: usize,
     pub waiting: usize,
     pub preempted: usize,
+    /// Live cache payload bytes by precision (`[fp32, int8, int4]`).
+    pub cache_payload_bytes: [u64; 3],
+    /// Active quantization policy name.
+    pub policy: String,
 }
 
 impl MetricsSnapshot {
@@ -303,6 +322,10 @@ impl MetricsSnapshot {
             ("running_peak", self.running_peak.into()),
             ("waiting", self.waiting.into()),
             ("preempted", self.preempted.into()),
+            ("quant_policy", self.policy.as_str().into()),
+            ("cache_bytes_fp32", (self.cache_payload_bytes[0] as usize).into()),
+            ("cache_bytes_int8", (self.cache_payload_bytes[1] as usize).into()),
+            ("cache_bytes_int4", (self.cache_payload_bytes[2] as usize).into()),
         ])
     }
 }
@@ -385,6 +408,7 @@ mod tests {
     #[test]
     fn snapshot_serializes() {
         let m = Metrics::new();
+        m.set_policy("k8v4");
         m.on_step(
             0.01,
             StepGauges {
@@ -396,10 +420,15 @@ mod tests {
                 pool_total_blocks: 100,
                 pool_logical_blocks: 52,
                 prefix_cache_blocks: 8,
+                cache_payload_bytes: [0, 4096, 2048],
                 ..Default::default()
             },
         );
         let j = m.snapshot().to_json();
+        assert_eq!(j.get("quant_policy").as_str(), Some("k8v4"));
+        assert_eq!(j.get("cache_bytes_fp32").as_usize(), Some(0));
+        assert_eq!(j.get("cache_bytes_int8").as_usize(), Some(4096));
+        assert_eq!(j.get("cache_bytes_int4").as_usize(), Some(2048));
         assert_eq!(j.get("running").as_usize(), Some(2));
         assert_eq!(j.get("waiting").as_usize(), Some(3));
         assert_eq!(j.get("preempted").as_usize(), Some(1));

@@ -1,9 +1,23 @@
 //! Engine-facing KV-cache manager.
 //!
 //! Owns one [`BlockPool`] shared by all sequences and all layers. Each
-//! sequence has 2·L block tables (K and V per layer) plus — for INT8
-//! caches — frozen per-channel scales computed at prefill time (one f32
-//! per layer × head × channel × {K,V}).
+//! sequence has 2·L block tables (K and V per layer) plus frozen
+//! per-channel scales computed at prefill time (one f32 per layer × head
+//! × channel × {K,V}; FP32 streams carry them too — on the same grid the
+//! legacy paths froze — but never read them).
+//!
+//! **Quantization policy.** Storage precision is a per-cache
+//! [`QuantPolicy`] mapping `(layer, head, K|V side) → Precision`; every
+//! write and read dispatches through the stream's
+//! [`crate::quant::Codec`]. The uniform policies are bit-identical to
+//! the old single-`Precision` paths (same codecs, same scale grids, same
+//! block layouts); mixed policies (`k8v4`, `sink8`, JSON tables) differ
+//! only in which codec each stream uses. Blocks stay fungible: the pool's
+//! byte width is sized for the policy's widest stream, so the
+//! scheduler's block accounting is policy-independent, while the byte
+//! accounting ([`CacheView::attention_bytes`],
+//! [`KvCacheManager::payload_bytes_by_precision`]) reports true per-row
+//! per-codec footprints.
 //!
 //! **Mid-flight lifecycle.** Sequences are first-class preemption
 //! citizens: [`KvCacheManager::free`] releases a sequence's blocks at any
@@ -25,7 +39,9 @@
 //! tokens into them — the error of this policy vs full requantization is
 //! measured by the ablation bench (`cargo bench --bench ablations`) and
 //! bounded in practice by RoPE keeping per-channel K statistics stationary
-//! (DESIGN.md §Hardware-Adaptation).
+//! (DESIGN.md §Hardware-Adaptation). Each stream's scale grid divisor is
+//! its codec's [`crate::quant::Codec::qmax`] — no call site re-derives a
+//! grid.
 //!
 //! **Parallelism.** Prefill scale-freezing/quantization and the decode
 //! gathers are batched over the shared [`crate::parallel`] runtime
@@ -36,17 +52,18 @@
 //!
 //! **Zero-copy reads.** [`KvCacheManager::view`] hands out a borrow-based
 //! [`CacheView`] over a sequence's blocks and frozen scales so fused
-//! decode attends over the paged INT8/INT4/FP32 layout *in place* — no
-//! per-token materialization of the whole cache. The copying
+//! decode attends over the paged layout *in place* — no per-token
+//! materialization of the whole cache. The copying
 //! `gather_i8`/`gather_f32` staging path is kept for the PJRT backend
-//! (whose artifacts consume dense buffers) and for parity tests.
+//! (whose artifacts consume dense buffers) and for parity tests; it only
+//! exists for streams whose policy is uniform int8/fp32 (the two dense
+//! staging ABIs).
 
+use super::policy::{QuantPolicy, StreamLayout};
 use super::pool::{BlockId, BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
 use crate::parallel::{self, SendPtr};
-use crate::quant::int4::{quantize4_row_into, Q4MAX};
-use crate::quant::quantize::{quantize_one, quantize_row_into};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
@@ -59,7 +76,8 @@ const PAR_MIN_ELEMS: usize = 1 << 15;
 /// Sequence handle.
 pub type SeqId = u64;
 
-/// Geometry of the cached model.
+/// Geometry of the cached model (precision lives in the cache's
+/// [`QuantPolicy`], not here).
 #[derive(Debug, Clone, Copy)]
 pub struct CacheConfig {
     pub layers: usize,
@@ -71,7 +89,6 @@ pub struct CacheConfig {
     pub block_size: usize,
     /// Total blocks in the pool.
     pub num_blocks: usize,
-    pub precision: Precision,
     /// Scale inflation at prefill (headroom for out-of-range decode K/V).
     pub scale_margin: f32,
 }
@@ -97,6 +114,12 @@ pub struct SequenceCache {
 /// The manager.
 pub struct KvCacheManager {
     cfg: CacheConfig,
+    policy: QuantPolicy,
+    /// Precomputed byte layout of each (layer, K|V) stream's blocks.
+    layouts: Vec<[StreamLayout; 2]>,
+    /// Per-token payload bytes by precision (`[fp32, int8, int4]`),
+    /// precomputed — sequence-independent under a fixed policy.
+    token_bytes_by_precision: [u64; 3],
     pool: BlockPool,
     seqs: HashMap<SeqId, SequenceCache>,
     next_id: SeqId,
@@ -108,12 +131,31 @@ pub struct KvCacheManager {
 }
 
 impl KvCacheManager {
-    pub fn new(cfg: CacheConfig) -> KvCacheManager {
+    pub fn new(cfg: CacheConfig, policy: QuantPolicy) -> KvCacheManager {
+        assert_eq!(policy.layers(), cfg.layers, "policy/cache layer count mismatch");
+        assert_eq!(policy.heads(), cfg.heads, "policy/cache head count mismatch");
         let shape =
             BlockShape { block_size: cfg.block_size, heads: cfg.heads, head_dim: cfg.head_dim };
+        let layouts: Vec<[StreamLayout; 2]> = (0..cfg.layers)
+            .map(|l| {
+                [
+                    policy.stream_layout(l, 0, cfg.block_size, cfg.head_dim),
+                    policy.stream_layout(l, 1, cfg.block_size, cfg.head_dim),
+                ]
+            })
+            .collect();
+        // Blocks stay fungible across streams: size them for the widest
+        // stream the policy produces (uniform policies get exactly the
+        // legacy per-precision width), alignment-padded so every block
+        // base supports in-place fp32 reads.
+        let block_bytes = policy.max_block_bytes(cfg.block_size, cfg.head_dim);
+        let token_bytes_by_precision = policy.payload_bytes_by_precision(cfg.head_dim, 1);
         KvCacheManager {
-            pool: BlockPool::new(cfg.num_blocks, shape, cfg.precision),
+            pool: BlockPool::new(cfg.num_blocks, shape, block_bytes),
             cfg,
+            policy,
+            layouts,
+            token_bytes_by_precision,
             seqs: HashMap::new(),
             next_id: 1,
             threads: 1,
@@ -156,6 +198,11 @@ impl KvCacheManager {
         &self.cfg
     }
 
+    /// The cache's quantization policy.
+    pub fn policy(&self) -> &QuantPolicy {
+        &self.policy
+    }
+
     pub fn free_blocks(&self) -> usize {
         self.pool.free_blocks()
     }
@@ -187,6 +234,24 @@ impl KvCacheManager {
 
     pub fn storage_bytes(&self) -> usize {
         self.pool.storage_bytes()
+    }
+
+    /// Logical payload bytes of all live sequences' valid rows, broken
+    /// down by storage precision (`[fp32, int8, int4]`) — the
+    /// `GET /metrics` per-precision cache occupancy. Per-row per-codec
+    /// accounting; shared blocks are counted per holder (this is a
+    /// logical measure, like `seq_blocks`). O(live sequences): the
+    /// per-token split is precomputed at construction (it is
+    /// sequence-independent), so the engine can book this gauge every
+    /// step without rescanning the policy map.
+    pub fn payload_bytes_by_precision(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for seq in self.seqs.values() {
+            for (o, b) in out.iter_mut().zip(self.token_bytes_by_precision) {
+                *o += b * seq.len as u64;
+            }
+        }
+        out
     }
 
     pub fn live_sequences(&self) -> usize {
@@ -351,8 +416,8 @@ impl KvCacheManager {
         if len > s || len > self.cfg.max_seq {
             bail!("prefill len {len} > stride {s} or max_seq {}", self.cfg.max_seq);
         }
-        if self.cfg.precision == Precision::Int4 && d % 2 != 0 {
-            bail!("int4 serving requires an even head_dim (rows must be nibble-aligned)");
+        if self.policy.uses(Precision::Int4) && d % 2 != 0 {
+            bail!("int4 streams require an even head_dim (rows must be nibble-aligned)");
         }
         {
             let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
@@ -361,21 +426,20 @@ impl KvCacheManager {
             }
         }
         // Freeze scales: per (layer, kv, head, channel) abs-max over rows
-        // 0..len, divided by the precision's symmetric bound (127 for
-        // INT8, 7 for INT4), inflated by the margin. One worker per
-        // (layer, K|V) stream.
-        let qdiv = match self.cfg.precision {
-            Precision::Int4 => Q4MAX,
-            _ => crate::QMAX,
-        };
+        // 0..len, divided by each head codec's symmetric bound (127 for
+        // FP32/INT8, 7 for INT4 — `Codec::qmax` owns the grid), inflated
+        // by the margin. One worker per (layer, K|V) stream.
         let margin = self.cfg.scale_margin;
         let threads = self.threads_for(2 * l * h * d * len);
         let streams: Vec<(usize, usize)> =
             (0..l).flat_map(|layer| [(layer, 0), (layer, 1)]).collect();
+        let layouts = &self.layouts;
         let frozen: Vec<Vec<f32>> = parallel::parallel_map(&streams, threads, |&(layer, kv)| {
             let data = if kv == 0 { k } else { v };
+            let layout = &layouts[layer][kv];
             let mut sc = vec![0.0f32; h * d];
             for head in 0..h {
+                let qdiv = layout.head_codec(head).qmax();
                 let base = ((layer * h) + head) * s * d;
                 for ch in 0..d {
                     let mut m = 0.0f32;
@@ -406,20 +470,17 @@ impl KvCacheManager {
                 }
             }
         }
-        match self.cfg.precision {
-            Precision::Int8 => self.prefill_write_i8(id, k, v, s, len, threads),
-            Precision::Fp32 => self.prefill_write_f32(id, k, v, s, len, threads),
-            Precision::Int4 => self.prefill_write_i4(id, k, v, s, len),
-        }
+        self.prefill_write(id, k, v, s, len, threads);
         self.seqs.get_mut(&id).unwrap().len = len;
         Ok(())
     }
 
-    /// Batched prefill quantization: quantize all `len` rows of every
-    /// (layer, K|V) stream directly into their blocks. Freshly allocated
-    /// blocks are unique (refcount 1), so per-block writes are disjoint
-    /// and fan out across workers.
-    fn prefill_write_i8(
+    /// Batched prefill write: encode all `len` rows of every (layer, K|V)
+    /// stream directly into their blocks through each head's codec
+    /// (quantize for INT8/INT4, bit-exact copy for FP32). Freshly
+    /// allocated blocks are unique (refcount 1), so per-block writes are
+    /// disjoint and fan out across workers.
+    fn prefill_write(
         &mut self,
         id: SeqId,
         k: &[f32],
@@ -433,99 +494,30 @@ impl KvCacheManager {
         let nblocks = BlockTable::blocks_for(len, bs);
         for layer in 0..l {
             for (kv, data) in [k, v].into_iter().enumerate() {
+                let layout = self.layouts[layer][kv].clone();
                 let scales = self.seqs[&id].scales[layer][kv].clone();
                 let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
-                let ptrs: Vec<SendPtr<i8>> =
-                    self.pool.block_i8_ptrs(&blocks).into_iter().map(SendPtr::new).collect();
+                let ptrs: Vec<SendPtr<u8>> =
+                    self.pool.block_raw_ptrs(&blocks).into_iter().map(SendPtr::new).collect();
+                let payload = layout.block_bytes;
                 parallel::parallel_chunks(nblocks, 1, threads, |blo, bhi| {
                     for bi in blo..bhi {
                         let rows_here = bs.min(len - bi * bs);
                         // SAFETY: distinct block ids → disjoint payloads.
-                        let blk = unsafe {
-                            std::slice::from_raw_parts_mut(ptrs[bi].add(0), h * bs * d)
-                        };
+                        let blk =
+                            unsafe { std::slice::from_raw_parts_mut(ptrs[bi].add(0), payload) };
                         for head in 0..h {
+                            let codec = layout.head_codec(head);
                             let base = ((layer * h) + head) * s * d;
                             let sc = &scales[head * d..(head + 1) * d];
                             for r in 0..rows_here {
                                 let pos = bi * bs + r;
                                 let src = &data[base + pos * d..base + (pos + 1) * d];
-                                let off = (head * bs + r) * d;
-                                quantize_row_into(src, sc, &mut blk[off..off + d]);
+                                codec.encode_row(src, sc, &mut blk[layout.row_range(head, r)]);
                             }
                         }
                     }
                 });
-            }
-        }
-    }
-
-    /// FP32 variant of [`Self::prefill_write_i8`] (plain copies).
-    fn prefill_write_f32(
-        &mut self,
-        id: SeqId,
-        k: &[f32],
-        v: &[f32],
-        s: usize,
-        len: usize,
-        threads: usize,
-    ) {
-        let (l, h, d, bs) =
-            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
-        let nblocks = BlockTable::blocks_for(len, bs);
-        for layer in 0..l {
-            for (kv, data) in [k, v].into_iter().enumerate() {
-                let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
-                let ptrs: Vec<SendPtr<f32>> =
-                    self.pool.block_f32_ptrs(&blocks).into_iter().map(SendPtr::new).collect();
-                parallel::parallel_chunks(nblocks, 1, threads, |blo, bhi| {
-                    for bi in blo..bhi {
-                        let rows_here = bs.min(len - bi * bs);
-                        // SAFETY: distinct block ids → disjoint payloads.
-                        let blk = unsafe {
-                            std::slice::from_raw_parts_mut(ptrs[bi].add(0), h * bs * d)
-                        };
-                        for head in 0..h {
-                            let base = ((layer * h) + head) * s * d;
-                            for r in 0..rows_here {
-                                let pos = bi * bs + r;
-                                let src = &data[base + pos * d..base + (pos + 1) * d];
-                                let off = (head * bs + r) * d;
-                                blk[off..off + d].copy_from_slice(src);
-                            }
-                        }
-                    }
-                });
-            }
-        }
-    }
-
-    /// INT4 variant of [`Self::prefill_write_i8`]: quantize each row to
-    /// packed nibbles (even `head_dim` guarantees every row is
-    /// byte-aligned inside its head slab). Serial — INT4 writes half the
-    /// bytes of INT8 and the paged decode path never gathers them back.
-    fn prefill_write_i4(&mut self, id: SeqId, k: &[f32], v: &[f32], s: usize, len: usize) {
-        let (l, h, d, bs) =
-            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
-        let nblocks = BlockTable::blocks_for(len, bs);
-        for layer in 0..l {
-            for (kv, data) in [k, v].into_iter().enumerate() {
-                let scales = self.seqs[&id].scales[layer][kv].clone();
-                let blocks = self.seqs[&id].tables[layer][kv].blocks()[..nblocks].to_vec();
-                for (bi, &b) in blocks.iter().enumerate() {
-                    let rows_here = bs.min(len - bi * bs);
-                    let blk = self.pool.block_i4_mut(b);
-                    for head in 0..h {
-                        let base = ((layer * h) + head) * s * d;
-                        let sc = &scales[head * d..(head + 1) * d];
-                        for r in 0..rows_here {
-                            let pos = bi * bs + r;
-                            let src = &data[base + pos * d..base + (pos + 1) * d];
-                            let off = (head * bs + r) * d / 2;
-                            quantize4_row_into(src, sc, &mut blk[off..off + d / 2]);
-                        }
-                    }
-                }
             }
         }
     }
@@ -583,8 +575,8 @@ impl KvCacheManager {
         Ok(())
     }
 
-    /// Quantize (or copy) one (H, d) row into its block (decode append
-    /// path; the prefill path uses the batched writers above).
+    /// Encode one (H, d) row into its block through each head's codec
+    /// (decode append path; the prefill path uses the batched writer).
     fn write_one_row(
         &mut self,
         id: SeqId,
@@ -596,47 +588,25 @@ impl KvCacheManager {
         let (h, d, bs) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         let (block, in_row) = seq.tables[layer][kv].locate(pos, bs);
-        match self.cfg.precision {
-            Precision::Int8 => {
-                // Copy scales out to satisfy the borrow checker cheaply
-                // relative to the quantize loop below.
-                let scales = seq.scales[layer][kv].clone();
-                let blk = self.pool.block_i8_mut(block);
-                for head in 0..h {
-                    let off = (head * bs + in_row) * d;
-                    let src = &row[head * d..(head + 1) * d];
-                    let sc = &scales[head * d..(head + 1) * d];
-                    for i in 0..d {
-                        blk[off + i] = quantize_one(src[i], sc[i]);
-                    }
-                }
-            }
-            Precision::Fp32 => {
-                let blk = self.pool.block_f32_mut(block);
-                for head in 0..h {
-                    let off = (head * bs + in_row) * d;
-                    blk[off..off + d].copy_from_slice(&row[head * d..(head + 1) * d]);
-                }
-            }
-            Precision::Int4 => {
-                let scales = seq.scales[layer][kv].clone();
-                let blk = self.pool.block_i4_mut(block);
-                for head in 0..h {
-                    let off = (head * bs + in_row) * d / 2;
-                    let src = &row[head * d..(head + 1) * d];
-                    let sc = &scales[head * d..(head + 1) * d];
-                    quantize4_row_into(src, sc, &mut blk[off..off + d / 2]);
-                }
-            }
+        let scales = &seq.scales[layer][kv];
+        let layout = &self.layouts[layer][kv];
+        let blk = self.pool.block_mut_raw(block);
+        for head in 0..h {
+            let codec = layout.head_codec(head);
+            let src = &row[head * d..(head + 1) * d];
+            let sc = &scales[head * d..(head + 1) * d];
+            codec.encode_row(src, sc, &mut blk[layout.row_range(head, in_row)]);
         }
         Ok(())
     }
 
     /// Gather one (layer, K|V) stream into contiguous `(H, max_seq, d)`
-    /// staging (i8) — the decode artifact's cache input layout. Only the
-    /// first `len` rows are written; the artifact masks the rest by `pos`.
-    /// Long sequences fan out across workers, one block per unit (all
-    /// (head, block) destination ranges are disjoint).
+    /// i8 staging — the decode artifact's cache input layout. Only valid
+    /// for uniform-INT8 streams (the dense ABI); every other policy
+    /// decodes through the paged [`CacheView`]. Only the first `len` rows
+    /// are written; the artifact masks the rest by `pos`. Long sequences
+    /// fan out across workers, one block per unit (all (head, block)
+    /// destination ranges are disjoint).
     pub fn gather_i8(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [i8]) -> Result<usize> {
         self.gather_i8_with(id, layer, kv, dst, self.threads)
     }
@@ -651,6 +621,12 @@ impl KvCacheManager {
         dst: &mut [i8],
         max_threads: usize,
     ) -> Result<usize> {
+        if self.layouts[layer][kv].uniform != Some(Precision::Int8) {
+            bail!(
+                "staged i8 gather needs a uniform int8 stream (policy {})",
+                self.policy.name()
+            );
+        }
         let (h, s, d, bs) =
             (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
         if dst.len() != h * s * d {
@@ -662,12 +638,13 @@ impl KvCacheManager {
         let used = BlockTable::blocks_for(len, bs).min(table.blocks().len());
         let blocks = &table.blocks()[..used];
         let threads = self.threads_capped(len * h * d, max_threads.min(self.threads));
-        let dstp = SendPtr::new(dst.as_mut_ptr());
+        let dstp = SendPtr::new(dst.as_mut_ptr() as *mut u8);
         parallel::parallel_chunks(used, 1, threads, |lo, hi| {
             for bi in lo..hi {
                 let rows_here = bs.min(len.saturating_sub(bi * bs));
-                let blk = self.pool.block_i8(blocks[bi]);
+                let blk = self.pool.block_raw(blocks[bi]);
                 for head in 0..h {
+                    // Uniform int8: one byte per element, head-major.
                     let src = &blk[head * bs * d..(head * bs + rows_here) * d];
                     let doff = head * s * d + bi * bs * d;
                     // SAFETY: (head, block) ranges are disjoint across
@@ -681,7 +658,7 @@ impl KvCacheManager {
         Ok(len)
     }
 
-    /// FP32 variant of [`Self::gather_i8`].
+    /// FP32 variant of [`Self::gather_i8`] (uniform-FP32 streams only).
     pub fn gather_f32(&self, id: SeqId, layer: usize, kv: usize, dst: &mut [f32]) -> Result<usize> {
         self.gather_f32_with(id, layer, kv, dst, self.threads)
     }
@@ -696,6 +673,12 @@ impl KvCacheManager {
         dst: &mut [f32],
         max_threads: usize,
     ) -> Result<usize> {
+        if self.layouts[layer][kv].uniform != Some(Precision::Fp32) {
+            bail!(
+                "staged f32 gather needs a uniform fp32 stream (policy {})",
+                self.policy.name()
+            );
+        }
         let (h, s, d, bs) =
             (self.cfg.heads, self.cfg.max_seq, self.cfg.head_dim, self.cfg.block_size);
         if dst.len() != h * s * d {
@@ -707,18 +690,21 @@ impl KvCacheManager {
         let used = BlockTable::blocks_for(len, bs).min(table.blocks().len());
         let blocks = &table.blocks()[..used];
         let threads = self.threads_capped(len * h * d, max_threads.min(self.threads));
-        let dstp = SendPtr::new(dst.as_mut_ptr());
+        let dstp = SendPtr::new(dst.as_mut_ptr() as *mut u8);
         parallel::parallel_chunks(used, 1, threads, |lo, hi| {
             for bi in lo..hi {
                 let rows_here = bs.min(len.saturating_sub(bi * bs));
-                let blk = self.pool.block_f32(blocks[bi]);
+                let blk = self.pool.block_raw(blocks[bi]);
                 for head in 0..h {
-                    let src = &blk[head * bs * d..(head * bs + rows_here) * d];
-                    let doff = head * s * d + bi * bs * d;
-                    // SAFETY: (head, block) ranges are disjoint across
-                    // workers and in bounds of dst (checked above).
-                    let dslice =
-                        unsafe { std::slice::from_raw_parts_mut(dstp.add(doff), rows_here * d) };
+                    // Uniform fp32: 4 bytes per element, head-major.
+                    let src = &blk[head * bs * d * 4..(head * bs + rows_here) * d * 4];
+                    let doff = (head * s * d + bi * bs * d) * 4;
+                    // SAFETY: (head, block) byte ranges are disjoint
+                    // across workers and in bounds of dst (checked above);
+                    // a bit-exact byte copy of f32 payloads.
+                    let dslice = unsafe {
+                        std::slice::from_raw_parts_mut(dstp.add(doff), rows_here * d * 4)
+                    };
                     dslice.copy_from_slice(src);
                 }
             }
@@ -727,12 +713,13 @@ impl KvCacheManager {
     }
 
     /// Zero-copy view of one sequence's cache: per-(layer, K|V) block
-    /// slices plus frozen scales, borrowed straight from the pool. The
-    /// fused paged decode path attends over this in place — nothing is
-    /// materialized per token (contrast [`Self::gather_i8`]).
+    /// slices plus frozen scales and per-head codecs, borrowed straight
+    /// from the pool. The fused paged decode path attends over this in
+    /// place — nothing is materialized per token (contrast
+    /// [`Self::gather_i8`]).
     pub fn view(&self, id: SeqId) -> Result<CacheView<'_>> {
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
-        Ok(CacheView { pool: &self.pool, seq, cfg: &self.cfg })
+        Ok(CacheView { pool: &self.pool, seq, cfg: &self.cfg, layouts: &self.layouts })
     }
 }
 
@@ -743,6 +730,7 @@ pub struct CacheView<'a> {
     pool: &'a BlockPool,
     seq: &'a SequenceCache,
     cfg: &'a CacheConfig,
+    layouts: &'a [[StreamLayout; 2]],
 }
 
 impl<'a> CacheView<'a> {
@@ -753,10 +741,6 @@ impl<'a> CacheView<'a> {
 
     pub fn is_empty(&self) -> bool {
         self.seq.len == 0
-    }
-
-    pub fn precision(&self) -> Precision {
-        self.cfg.precision
     }
 
     pub fn layers(&self) -> usize {
@@ -789,6 +773,7 @@ impl<'a> CacheView<'a> {
             pool: self.pool,
             blocks: &table.blocks()[..used],
             scales: &self.seq.scales[layer][kv],
+            layout: &self.layouts[layer][kv],
             len: self.seq.len,
             block_size: self.cfg.block_size,
             head_dim: self.cfg.head_dim,
@@ -796,25 +781,39 @@ impl<'a> CacheView<'a> {
     }
 
     /// Payload + scale bytes one full attention pass over this view reads
-    /// (valid rows of K and V across all layers/heads). This is the
-    /// per-token cache traffic of the zero-copy path — O(len), not
-    /// O(max_seq) — surfaced at `GET /metrics` as `cache_bytes_read`.
+    /// (valid rows of K and V across all layers/heads, each at its own
+    /// codec's per-row width). This is the per-token cache traffic of the
+    /// zero-copy path — O(len), not O(max_seq) — surfaced at
+    /// `GET /metrics` as `cache_bytes_read`.
+    ///
+    /// Scale bytes are counted for **every** stream, fp32 included (whose
+    /// codec never reads them) — deliberately: that is the pre-policy
+    /// metric's convention, and the uniform presets must report byte
+    /// counts identical to the legacy `--precision` paths. The
+    /// memory-footprint accounting ([`QuantPolicy::scale_overhead_bytes`])
+    /// uses the opposite convention (fp32 streams store no *useful*
+    /// scales); the two measure different things — traffic vs footprint.
     pub fn attention_bytes(&self) -> usize {
         let c = self.cfg;
-        let payload = c.precision.bytes_for(c.heads * self.seq.len * c.head_dim);
         let scale_bytes = c.heads * c.head_dim * 4;
-        2 * c.layers * (payload + scale_bytes)
+        self.layouts
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .map(|l| l.payload_bytes(self.seq.len) + scale_bytes)
+            .sum()
     }
 }
 
 /// One (layer, K|V) stream of a [`CacheView`]: ordered blocks + frozen
-/// scales. Accessors return per-(block, head) row slabs borrowed from the
-/// pool — `rows_in_block(bi) × head_dim` contiguous elements, ready for
-/// the fused [`crate::quant::attn`] kernels.
+/// scales + the stream's byte [`StreamLayout`]. Accessors return
+/// per-(block, head) row slabs borrowed from the pool —
+/// `rows_in_block(bi)` rows at the head codec's row width, ready for the
+/// fused [`crate::quant::Codec`] kernels.
 pub struct StreamView<'a> {
     pool: &'a BlockPool,
     blocks: &'a [BlockId],
     scales: &'a [f32],
+    layout: &'a StreamLayout,
     len: usize,
     block_size: usize,
     head_dim: usize,
@@ -845,29 +844,39 @@ impl<'a> StreamView<'a> {
         &self.scales[head * self.head_dim..(head + 1) * self.head_dim]
     }
 
-    /// The valid rows of `head` in block `bi`: `rows_in_block(bi) ×
-    /// head_dim` contiguous int8 values, in place in the pool.
+    /// This head's storage codec under the cache's policy.
+    pub fn head_codec(&self, head: usize) -> &'static dyn crate::quant::Codec {
+        self.layout.head_codec(head)
+    }
+
+    /// The valid rows of `head` in block `bi` as raw page bytes —
+    /// `rows_in_block(bi) × head_codec(head).bytes_per_row(d)` bytes, in
+    /// place in the pool. Feed straight into the codec's fused kernels.
+    pub fn head_rows_raw(&self, bi: usize, head: usize) -> &'a [u8] {
+        let blk = self.pool.block_raw(self.blocks[bi]);
+        &blk[self.layout.head_slab(head, self.rows_in_block(bi))]
+    }
+
+    /// Typed i8 view of [`Self::head_rows_raw`] (INT8 heads only).
     pub fn head_rows_i8(&self, bi: usize, head: usize) -> &'a [i8] {
-        let (bs, d) = (self.block_size, self.head_dim);
-        let blk = self.pool.block_i8(self.blocks[bi]);
-        &blk[head * bs * d..(head * bs + self.rows_in_block(bi)) * d]
+        debug_assert_eq!(self.head_codec(head).name(), "int8");
+        crate::quant::codec::as_i8(self.head_rows_raw(bi, head))
     }
 
-    /// FP32 variant of [`Self::head_rows_i8`].
+    /// Typed f32 view of [`Self::head_rows_raw`] (FP32 heads only; slabs
+    /// are 4-byte aligned by the stream layout).
     pub fn head_rows_f32(&self, bi: usize, head: usize) -> &'a [f32] {
-        let (bs, d) = (self.block_size, self.head_dim);
-        let blk = self.pool.block_f32(self.blocks[bi]);
-        &blk[head * bs * d..(head * bs + self.rows_in_block(bi)) * d]
+        debug_assert_eq!(self.head_codec(head).name(), "fp32");
+        crate::quant::codec::as_f32(self.head_rows_raw(bi, head))
     }
 
-    /// INT4 variant: `rows_in_block(bi) × head_dim / 2` nibble-packed
-    /// bytes (rows are byte-aligned — the manager rejects odd `head_dim`
-    /// for INT4 pools). Unpack per row with
+    /// Nibble-packed view (INT4 heads): `rows_in_block(bi) × head_dim/2`
+    /// bytes (rows are byte-aligned — int4 streams require an even
+    /// `head_dim`). Unpack per row with
     /// [`crate::quant::int4::dequantize4_row_into`].
     pub fn head_rows_i4(&self, bi: usize, head: usize) -> &'a [u8] {
-        let (bs, d) = (self.block_size, self.head_dim);
-        let blk = self.pool.block_i4(self.blocks[bi]);
-        &blk[head * bs * d / 2..(head * bs + self.rows_in_block(bi)) * d / 2]
+        debug_assert_eq!(self.head_codec(head).name(), "int4");
+        self.head_rows_raw(bi, head)
     }
 }
 
@@ -886,9 +895,10 @@ impl Drop for KvCacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::policy::PolicySpec;
     use crate::util::rng::Rng;
 
-    fn cfg(precision: Precision) -> CacheConfig {
+    fn cfg() -> CacheConfig {
         CacheConfig {
             layers: 2,
             heads: 2,
@@ -896,9 +906,12 @@ mod tests {
             max_seq: 32,
             block_size: 4,
             num_blocks: 128,
-            precision,
             scale_margin: 1.0,
         }
+    }
+
+    fn mgr(c: CacheConfig, precision: Precision) -> KvCacheManager {
+        KvCacheManager::new(c, QuantPolicy::uniform(precision, c.layers, c.heads))
     }
 
     fn prefill_tensors(c: &CacheConfig, len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -929,8 +942,8 @@ mod tests {
 
     #[test]
     fn prefill_roundtrip_within_quant_bound() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let len = 10;
         let (k, v) = prefill_tensors(&c, len, 1);
@@ -960,8 +973,8 @@ mod tests {
 
     #[test]
     fn append_then_gather_sees_new_rows() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 2);
         m.set_prefill(id, &k, &v, 4).unwrap();
@@ -990,8 +1003,8 @@ mod tests {
 
     #[test]
     fn append_clamps_to_frozen_scales() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 4);
         m.set_prefill(id, &k, &v, 4).unwrap();
@@ -1012,8 +1025,8 @@ mod tests {
 
     #[test]
     fn capacity_and_admission() {
-        let c = CacheConfig { num_blocks: 2 * 2 * 2, ..cfg(Precision::Int8) }; // 8 blocks
-        let mut m = KvCacheManager::new(c);
+        let c = CacheConfig { num_blocks: 2 * 2 * 2, ..cfg() }; // 8 blocks
+        let mut m = mgr(c, Precision::Int8);
         // One sequence of <=4 tokens needs 1 block x 2 layers x 2 (K,V) = 4.
         assert!(m.can_admit(4));
         assert!(m.can_admit(8)); // 8 blocks exactly
@@ -1030,8 +1043,8 @@ mod tests {
 
     #[test]
     fn pool_exhaustion_surfaces_as_error() {
-        let c = CacheConfig { num_blocks: 4, ..cfg(Precision::Int8) };
-        let mut m = KvCacheManager::new(c);
+        let c = CacheConfig { num_blocks: 4, ..cfg() };
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 8, 6); // needs 2 blocks x4 streams = 8
         assert!(m.set_prefill(id, &k, &v, 8).is_err());
@@ -1039,8 +1052,8 @@ mod tests {
 
     #[test]
     fn fp32_mode_roundtrips_exactly() {
-        let c = cfg(Precision::Fp32);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Fp32);
         let id = m.new_sequence();
         let len = 6;
         let (k, v) = prefill_tensors(&c, len, 7);
@@ -1060,8 +1073,8 @@ mod tests {
 
     #[test]
     fn fork_shares_then_diverges() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let a = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 8);
         m.set_prefill(a, &k, &v, 4).unwrap();
@@ -1097,15 +1110,15 @@ mod tests {
         // Prefill + gather through the parallel runtime must store and
         // return exactly the bytes the serial path does.
         for precision in [Precision::Int8, Precision::Fp32] {
-            let c = cfg(precision);
+            let c = cfg();
             let len = 23; // crosses block boundaries, partial tail block
             let (k, v) = prefill_tensors(&c, len, 42);
 
-            let mut serial = KvCacheManager::new(c);
+            let mut serial = mgr(c, precision);
             let sid = serial.new_sequence();
             serial.set_prefill(sid, &k, &v, len).unwrap();
 
-            let mut par = KvCacheManager::new(c);
+            let mut par = mgr(c, precision);
             par.set_parallelism(8);
             par.set_parallel_threshold(0); // force fan-out on small input
             let pid = par.new_sequence();
@@ -1141,8 +1154,8 @@ mod tests {
 
     #[test]
     fn shared_blocks_reported_once_and_reclaim_is_refcount_aware() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let a = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 8, 21); // 2 blocks x 4 streams = 8
         m.set_prefill(a, &k, &v, 8).unwrap();
@@ -1165,8 +1178,8 @@ mod tests {
 
     #[test]
     fn append_need_accounts_boundaries_and_cow() {
-        let c = cfg(Precision::Int8); // layers=2, block_size=4
-        let mut m = KvCacheManager::new(c);
+        let c = cfg(); // layers=2, block_size=4
+        let mut m = mgr(c, Precision::Int8);
         let a = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 22); // exactly one full block
         m.set_prefill(a, &k, &v, 4).unwrap();
@@ -1187,8 +1200,8 @@ mod tests {
     fn failed_append_leaves_sequence_untouched() {
         // Pool sized so the prefill fits but the block-boundary append
         // cannot: the append must fail atomically and stay retryable.
-        let c = CacheConfig { num_blocks: 4, ..cfg(Precision::Int8) };
-        let mut m = KvCacheManager::new(c);
+        let c = CacheConfig { num_blocks: 4, ..cfg() };
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 23); // 1 block x 4 streams = 4
         m.set_prefill(id, &k, &v, 4).unwrap();
@@ -1208,8 +1221,8 @@ mod tests {
     #[test]
     fn view_exposes_exact_pool_bytes() {
         // The zero-copy view must show byte-for-byte what gather copies.
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let len = 11; // partial tail block
         let (k, v) = prefill_tensors(&c, len, 31);
@@ -1235,6 +1248,7 @@ mod tests {
                 for bi in 0..stream.num_blocks() {
                     let rows = stream.rows_in_block(bi);
                     for head in 0..c.heads {
+                        assert_eq!(stream.head_codec(head).name(), "int8");
                         let slab = stream.head_rows_i8(bi, head);
                         assert_eq!(slab.len(), rows * c.head_dim);
                         for r in 0..rows {
@@ -1256,8 +1270,8 @@ mod tests {
 
     #[test]
     fn view_attention_bytes_scales_with_len_not_max_seq() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 33);
         m.set_prefill(id, &k, &v, 4).unwrap();
@@ -1272,8 +1286,8 @@ mod tests {
     #[test]
     fn int4_prefill_and_append_roundtrip_within_bound() {
         use crate::quant::int4::dequantize4_row_into;
-        let c = cfg(Precision::Int4);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int4);
         let id = m.new_sequence();
         let len = 6;
         let (k, v) = prefill_tensors(&c, len, 34);
@@ -1331,8 +1345,8 @@ mod tests {
 
     #[test]
     fn int4_rejects_odd_head_dim() {
-        let c = CacheConfig { head_dim: 7, ..cfg(Precision::Int4) };
-        let mut m = KvCacheManager::new(c);
+        let c = CacheConfig { head_dim: 7, ..cfg() };
+        let mut m = mgr(c, Precision::Int4);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 36);
         let err = m.set_prefill(id, &k, &v, 4).unwrap_err();
@@ -1341,10 +1355,10 @@ mod tests {
 
     #[test]
     fn int4_scales_freeze_on_the_4bit_grid() {
-        // Frozen INT4 scales divide by 7, not 127: the column abs-max must
-        // quantize to ±7 exactly.
-        let c = cfg(Precision::Int4);
-        let mut m = KvCacheManager::new(c);
+        // Frozen INT4 scales divide by the codec's qmax (7, not 127): the
+        // column abs-max must quantize to ±7 exactly.
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int4);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 37);
         m.set_prefill(id, &k, &v, 4).unwrap();
@@ -1367,9 +1381,88 @@ mod tests {
     }
 
     #[test]
+    fn k8v4_policy_splits_sides_in_one_cache() {
+        // Keys INT8, values INT4 — both sides round-trip within their own
+        // codec's bound, and the staged gather only exists for the K side.
+        use crate::quant::int4::dequantize4_row_into;
+        let c = cfg();
+        let policy = PolicySpec::K8V4.resolve(c.layers, c.heads, c.head_dim).unwrap();
+        let mut m = KvCacheManager::new(c, policy);
+        let id = m.new_sequence();
+        let len = 6;
+        let (k, v) = prefill_tensors(&c, len, 51);
+        m.set_prefill(id, &k, &v, len).unwrap();
+
+        // K side: staged gather works (uniform int8 stream).
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        m.gather_i8(id, 0, 0, &mut staging).unwrap();
+        let ks = m.scales(id, 0, 0).unwrap().to_vec();
+        for head in 0..c.heads {
+            for t in 0..len {
+                for ch in 0..c.head_dim {
+                    let q = staging[(head * c.max_seq + t) * c.head_dim + ch];
+                    let s = ks[head * c.head_dim + ch];
+                    let want = k[((head) * c.max_seq + t) * c.head_dim + ch]; // layer 0
+                    assert!((q as f32 * s - want).abs() <= s / 2.0 + 1e-6);
+                }
+            }
+        }
+        // V side: no staged ABI — int8 gather must refuse.
+        let err = m.gather_i8(id, 0, 1, &mut staging).unwrap_err();
+        assert!(err.to_string().contains("uniform int8"), "{err}");
+        // V side reads in place through the int4 codec.
+        let view = m.view(id).unwrap();
+        let stream = view.stream(0, 1);
+        assert_eq!(stream.head_codec(0).name(), "int4");
+        let mut row = vec![0.0f32; c.head_dim];
+        let sc = stream.head_scales(0);
+        let slab = stream.head_rows_i4(0, 0);
+        dequantize4_row_into(&slab[..c.head_dim / 2], sc, &mut row);
+        for ch in 0..c.head_dim {
+            let want = v[ch]; // layer 0, head 0, t 0
+            assert!((row[ch] - want).abs() <= sc[ch] / 2.0 + 1e-6, "{} vs {want}", row[ch]);
+        }
+        // Byte accounting: K rows cost d bytes, V rows d/2, per head.
+        let view = m.view(id).unwrap();
+        let payload = 2 * c.heads * len * c.head_dim + 2 * c.heads * len * (c.head_dim / 2);
+        let scale_bytes = 2 * c.layers * c.heads * c.head_dim * 4;
+        assert_eq!(view.attention_bytes(), payload + scale_bytes);
+        let by = m.payload_bytes_by_precision();
+        assert_eq!(by[Precision::Int8 as usize], (2 * c.heads * len * c.head_dim) as u64);
+        assert_eq!(by[Precision::Int4 as usize], (c.heads * len * c.head_dim) as u64);
+        assert_eq!(by[Precision::Fp32 as usize], 0);
+    }
+
+    #[test]
+    fn mixed_policy_scale_grids_follow_each_side() {
+        // k8v4: K scales freeze on /127, V scales on /7 — per stream, in
+        // the same prefill pass.
+        let c = cfg();
+        let policy = PolicySpec::K8V4.resolve(c.layers, c.heads, c.head_dim).unwrap();
+        let mut m = KvCacheManager::new(c, policy);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 52);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        let abs_max = |data: &[f32], head: usize, ch: usize| {
+            (0..4)
+                .map(|t| data[((head) * c.max_seq + t) * c.head_dim + ch].abs())
+                .fold(0.0f32, f32::max)
+        };
+        let ks = m.scales(id, 0, 0).unwrap();
+        let vs = m.scales(id, 0, 1).unwrap();
+        for head in 0..c.heads {
+            for ch in 0..c.head_dim {
+                let i = head * c.head_dim + ch;
+                assert!((ks[i] * 127.0 - abs_max(&k, head, ch)).abs() <= 1e-5, "K on /127");
+                assert!((vs[i] * 7.0 - abs_max(&v, head, ch)).abs() <= 1e-6, "V on /7");
+            }
+        }
+    }
+
+    #[test]
     fn gather_rejects_bad_staging() {
-        let c = cfg(Precision::Int8);
-        let mut m = KvCacheManager::new(c);
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let mut tiny = vec![0i8; 3];
         assert!(m.gather_i8(id, 0, 0, &mut tiny).is_err());
@@ -1377,8 +1470,8 @@ mod tests {
 
     #[test]
     fn sequence_at_capacity_errors() {
-        let c = CacheConfig { max_seq: 4, ..cfg(Precision::Int8) };
-        let mut m = KvCacheManager::new(c);
+        let c = CacheConfig { max_seq: 4, ..cfg() };
+        let mut m = mgr(c, Precision::Int8);
         let id = m.new_sequence();
         let (k, v) = prefill_tensors(&c, 4, 9);
         m.set_prefill(id, &k, &v, 4).unwrap();

@@ -1,9 +1,16 @@
 //! Closed-form KV-cache memory model — Table 1 of the paper.
 //!
-//! `size = 2 × L × H × d × T × bytes_per_element` (eq. 2), plus — for
+//! `size = 2 × L × H × T × bytes_per_row(d)` (eq. 2, accounted per-row so
+//! INT4's padding nibble at odd `d` is not undercounted), plus — for
 //! quantized caches — the per-channel scale overhead the paper calls
 //! "negligible" (and this model makes precise: 2·L·H·d f32 per sequence).
+//!
+//! [`PolicyMemory`] is the mixed-precision generalization: the same
+//! closed form evaluated under a [`QuantPolicy`], so `k8v4`/`sink8`/table
+//! policies get honest per-stream byte accounting and a compression
+//! ratio vs the FP32 baseline (`table1_memory` sweeps these).
 
+use super::policy::QuantPolicy;
 use super::Precision;
 use crate::util::stats::fmt_bytes;
 
@@ -37,10 +44,11 @@ impl MemoryModel {
             * self.seq_len as u64
     }
 
-    /// Payload bytes (eq. 2).
+    /// Payload bytes (eq. 2), accounted per `(head, token)` row so INT4
+    /// packing pads each row independently (`bytes_for_rows`).
     pub fn payload_bytes(&self) -> u64 {
-        let per_token = 2 * self.layers * self.heads * self.head_dim;
-        self.seq_len as u64 * self.precision.bytes_for(per_token) as u64
+        let rows = 2 * self.layers * self.heads * self.seq_len;
+        self.precision.bytes_for_rows(rows, self.head_dim) as u64
     }
 
     /// Per-channel scale overhead for quantized caches: one f32 per
@@ -66,7 +74,7 @@ impl MemoryModel {
     /// supports (the "longer context windows" claim, §8 Conclusion).
     pub fn max_seq_for_budget(&self, budget_bytes: u64) -> usize {
         let per_token =
-            self.precision.bytes_for(2 * self.layers * self.heads * self.head_dim) as u64;
+            self.precision.bytes_for_rows(2 * self.layers * self.heads, self.head_dim) as u64;
         ((budget_bytes.saturating_sub(self.scale_overhead_bytes())) / per_token) as usize
     }
 
@@ -93,9 +101,56 @@ impl MemoryModel {
     }
 }
 
+/// The closed-form model evaluated under a (possibly mixed-precision)
+/// [`QuantPolicy`]: per-stream per-row byte accounting across all
+/// `(layer, K|V, head)` streams.
+pub struct PolicyMemory<'a> {
+    pub policy: &'a QuantPolicy,
+    pub head_dim: usize,
+    pub seq_len: usize,
+}
+
+impl<'a> PolicyMemory<'a> {
+    pub fn new(policy: &'a QuantPolicy, head_dim: usize, seq_len: usize) -> PolicyMemory<'a> {
+        PolicyMemory { policy, head_dim, seq_len }
+    }
+
+    pub fn payload_bytes(&self) -> u64 {
+        self.policy.payload_bytes(self.head_dim, self.seq_len)
+    }
+
+    /// One f32 per quantized (layer, K|V, head, channel); FP32 streams
+    /// carry none.
+    pub fn scale_overhead_bytes(&self) -> u64 {
+        self.policy.scale_overhead_bytes(self.head_dim)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.payload_bytes() + self.scale_overhead_bytes()
+    }
+
+    /// Payload bytes broken down by precision (`[fp32, int8, int4]`).
+    pub fn payload_by_precision(&self) -> [u64; 3] {
+        self.policy.payload_bytes_by_precision(self.head_dim, self.seq_len)
+    }
+
+    /// Compression vs a uniform-FP32 cache of the same geometry.
+    pub fn compression_vs_fp32(&self) -> f64 {
+        let fp32 = MemoryModel {
+            layers: self.policy.layers(),
+            heads: self.policy.heads(),
+            head_dim: self.head_dim,
+            seq_len: self.seq_len,
+            precision: Precision::Fp32,
+        };
+        fp32.total_bytes() as f64 / self.total_bytes() as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::policy::PolicySpec;
 
     #[test]
     fn table1_reproduces_137gb() {
@@ -133,6 +188,26 @@ mod tests {
     }
 
     #[test]
+    fn int4_odd_head_dim_accounts_per_row() {
+        // Regression (per-row packing): d=7 INT4 rows occupy 4 bytes each,
+        // never the flattened ceil(rows*7/2). 2·L·H·T rows of 4 bytes.
+        let m = MemoryModel {
+            layers: 2,
+            heads: 3,
+            head_dim: 7,
+            seq_len: 5,
+            precision: Precision::Int4,
+        };
+        let rows = 2 * 2 * 3 * 5;
+        assert_eq!(m.payload_bytes(), (rows * 4) as u64);
+        let flattened = Precision::Int4.bytes_for(rows * 7) as u64;
+        assert!(m.payload_bytes() > flattened, "per-row padding must be counted");
+        // Budget inversion uses the same per-row cost.
+        let per_token = (2 * 2 * 3 * 4) as u64;
+        assert_eq!(m.max_seq_for_budget(per_token * 10 + m.scale_overhead_bytes()), 10);
+    }
+
+    #[test]
     fn budget_inversions() {
         let m = MemoryModel { precision: Precision::Int8, ..MemoryModel::table1_example() };
         let budget = 16u64 * 1024 * 1024 * 1024; // a T4's 16 GB
@@ -152,6 +227,53 @@ mod tests {
         let b_fp32 = fp32.max_batch_for_budget(budget);
         let b_int8 = int8.max_batch_for_budget(budget);
         assert!(b_int8 >= b_fp32 * 3, "{b_int8} vs {b_fp32}"); // ≈4x
+    }
+
+    #[test]
+    fn k8v4_lands_between_uniform_int8_and_int4() {
+        // The acceptance bar for the mixed preset: memory footprint
+        // strictly between the two uniform quantized caches, compression
+        // between 4x and 8x (≈5.3x: K at 1 byte + V at half a byte per
+        // element vs 8 bytes fp32 per K+V element pair).
+        let base = MemoryModel::table1_example();
+        let (l, h, d, t) = (base.layers, base.heads, base.head_dim, base.seq_len);
+        let k8v4 = PolicySpec::K8V4.resolve(l, h, d).unwrap();
+        let pm = PolicyMemory::new(&k8v4, d, t);
+        let int8 = MemoryModel { precision: Precision::Int8, ..base };
+        let int4 = MemoryModel { precision: Precision::Int4, ..base };
+        assert!(pm.total_bytes() < int8.total_bytes());
+        assert!(pm.total_bytes() > int4.total_bytes());
+        let c = pm.compression_vs_fp32();
+        assert!(c > 4.0 && c < 8.0, "k8v4 compression {c}");
+        assert!((c - 16.0 / 3.0).abs() < 0.01, "≈5.33x expected, got {c}");
+        let by = pm.payload_by_precision();
+        assert_eq!(by[Precision::Int8 as usize], 2 * by[Precision::Int4 as usize]);
+    }
+
+    #[test]
+    fn sink8_costs_slightly_more_than_uniform_int8() {
+        let base = MemoryModel::table1_example();
+        let (l, h, d, t) = (base.layers, base.heads, base.head_dim, base.seq_len);
+        let sink = PolicySpec::Sink8 { sink_layers: 1 }.resolve(l, h, d).unwrap();
+        let pm = PolicyMemory::new(&sink, d, t);
+        let int8 = MemoryModel { precision: Precision::Int8, ..base };
+        assert!(pm.total_bytes() > int8.total_bytes(), "one fp32 layer costs extra");
+        assert!(pm.total_bytes() < base.total_bytes(), "still far below fp32");
+        let c = pm.compression_vs_fp32();
+        assert!(c > 3.0 && c < 4.0, "sink8 compression {c}");
+    }
+
+    #[test]
+    fn uniform_policy_memory_matches_the_scalar_model() {
+        let base = MemoryModel { precision: Precision::Int8, ..MemoryModel::table1_example() };
+        let p = PolicySpec::Uniform(Precision::Int8)
+            .resolve(base.layers, base.heads, base.head_dim)
+            .unwrap();
+        let pm = PolicyMemory::new(&p, base.head_dim, base.seq_len);
+        assert_eq!(pm.payload_bytes(), base.payload_bytes());
+        assert_eq!(pm.scale_overhead_bytes(), base.scale_overhead_bytes());
+        assert_eq!(pm.total_bytes(), base.total_bytes());
+        assert!((pm.compression_vs_fp32() - base.compression_vs_fp32()).abs() < 1e-12);
     }
 
     #[test]

@@ -17,20 +17,27 @@
 //! * [`prefix`]: the cross-request prefix cache — exact-prompt entries
 //!   fork their cached sequence so repeated prompts skip prefill and
 //!   re-quantization entirely (bit-identical shared blocks).
-//! * [`memory_model`]: the closed-form Table-1 calculator.
+//! * [`policy`]: quantization policies — `(layer, head, K|V side) →
+//!   Precision` maps (uniform presets, `k8v4`, `sink8`, JSON per-layer
+//!   tables) resolved into per-stream [`policy::StreamLayout`]s.
+//! * [`memory_model`]: the closed-form Table-1 calculator (policy-aware).
 //!
-//! Precision is a per-cache config ([`Precision`]); FP32 and INT8 caches
-//! run through identical paths so the serving benches compare them
-//! apples-to-apples.
+//! Storage precision is a [`QuantPolicy`] (the legacy single
+//! [`Precision`] knob is the `uniform:*` preset family); every policy
+//! runs through identical code paths — the manager and decode kernels
+//! dispatch per stream through [`crate::quant::Codec`] — so the serving
+//! benches compare configurations apples-to-apples.
 
 pub mod manager;
 pub mod memory_model;
+pub mod policy;
 pub mod pool;
 pub mod prefix;
 pub mod table;
 
 pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView};
-pub use memory_model::MemoryModel;
+pub use memory_model::{MemoryModel, PolicyMemory};
+pub use policy::{PolicySpec, PolicyTable, QuantPolicy, StagedKind};
 pub use pool::{BlockId, BlockPool};
 pub use prefix::{PrefixCache, PrefixStats};
 
@@ -43,13 +50,32 @@ pub enum Precision {
 }
 
 impl Precision {
-    /// Payload bytes for `n` elements.
+    /// Payload bytes for `n` elements of one contiguous run (a flat
+    /// buffer or a single packed row). **Do not use this for multi-row
+    /// slabs**: INT4 pads every row to a whole byte, so slab accounting
+    /// must go per-row through [`Precision::bytes_for_rows`] /
+    /// [`Precision::bytes_per_row`] — flattening first undercounts odd
+    /// rows.
     pub fn bytes_for(self, n: usize) -> usize {
         match self {
             Precision::Fp32 => n * 4,
             Precision::Int8 => n,
             Precision::Int4 => n.div_ceil(2),
         }
+    }
+
+    /// Payload bytes of one `d`-channel row (INT4 rows pad to
+    /// `ceil(d/2)` bytes). Delegates to the codec, the layout's single
+    /// source of truth.
+    pub fn bytes_per_row(self, d: usize) -> usize {
+        policy::codec_for(self).bytes_per_row(d)
+    }
+
+    /// Payload bytes of `rows` rows of `d` channels, accounted per-row.
+    /// For INT4 at odd `d` this exceeds `bytes_for(rows * d)` — each row
+    /// carries its own padding nibble.
+    pub fn bytes_for_rows(self, rows: usize, d: usize) -> usize {
+        rows * self.bytes_per_row(d)
     }
 
     pub fn name(self) -> &'static str {
@@ -85,6 +111,21 @@ mod tests {
         assert_eq!(Precision::Int8.bytes_for(10), 10);
         assert_eq!(Precision::Int4.bytes_for(10), 5);
         assert_eq!(Precision::Int4.bytes_for(11), 6);
+    }
+
+    #[test]
+    fn int4_row_accounting_pads_each_odd_row() {
+        // Regression: 3 rows of 7 channels are 3 x ceil(7/2) = 12 packed
+        // bytes in storage — flattening to bytes_for(21) = 11 undercounts
+        // the per-row padding nibble. Per-row accounting must be used for
+        // every slab-shaped byte count (MemoryModel, cache_bytes_read).
+        assert_eq!(Precision::Int4.bytes_per_row(7), 4);
+        assert_eq!(Precision::Int4.bytes_for_rows(3, 7), 12);
+        assert_eq!(Precision::Int4.bytes_for(3 * 7), 11, "flat count is smaller");
+        // Even rows agree with the flat count.
+        assert_eq!(Precision::Int4.bytes_for_rows(3, 8), Precision::Int4.bytes_for(24));
+        assert_eq!(Precision::Fp32.bytes_for_rows(3, 7), 84);
+        assert_eq!(Precision::Int8.bytes_for_rows(3, 7), 21);
     }
 
     #[test]

@@ -1,0 +1,839 @@
+//! Quantization policies: `(layer, head, K|V side) → Precision`.
+//!
+//! The paper quantizes the whole cache uniformly, but the accuracy/memory
+//! frontier is non-uniform: keys are markedly more quantization-sensitive
+//! than values (KVQuant, arXiv:2401.18079), and early/"sink" layers repay
+//! higher precision while the rest tolerate aggressive bits (Cache Me If
+//! You Must, arXiv:2501.19392). This module makes that a configuration
+//! table instead of a refactor:
+//!
+//! * [`PolicySpec`] — the geometry-independent config surface
+//!   (`--quant-policy`, `"quant_policy"` JSON key): named presets
+//!   (`uniform:{fp32,int8,int4}`, `k8v4`, `sink8[:N]`) or a JSON
+//!   per-layer table loaded from `configs/` (see [`PolicyTable`]).
+//! * [`QuantPolicy`] — the spec resolved against a concrete model
+//!   (layers × heads × head_dim), validated (bounds, unknown precisions,
+//!   the even-`head_dim` guard for any INT4 side), mapping every
+//!   `(layer, kv, head)` to a [`Codec`].
+//! * [`StreamLayout`] — the byte layout one `(layer, K|V)` stream's
+//!   blocks take under the policy: per-head codecs, per-head slab byte
+//!   offsets (heads may differ in width), and the block payload size.
+//! * [`StagedKind`] — which dense staging ABI (if any) the policy is
+//!   compatible with. Only `uniform:int8` and `uniform:fp32` have a
+//!   dense `(L, H, S, d)` artifact layout; **every other policy requires
+//!   a paged-decode-capable backend** — the generalization of the old
+//!   INT4-only fail-fast.
+//!
+//! The uniform presets are bit-identical to the legacy `--precision`
+//! paths (same codecs, same grids, same layouts) — that equivalence is
+//! the refactor's safety net, asserted by `tests/parallel_consistency.rs`.
+
+use super::Precision;
+use crate::quant::codec::{self, Codec};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Dense staging ABIs a policy can be compatible with (the staged decode
+/// path and the PJRT artifacts consume these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StagedKind {
+    /// `(L, H, S, d)` i8 payloads + `(L, H, d)` f32 scales.
+    I8,
+    /// `(L, H, S, d)` f32 payloads.
+    F32,
+}
+
+/// The canonical codec for a storage precision.
+pub fn codec_for(p: Precision) -> &'static dyn Codec {
+    match p {
+        Precision::Fp32 => &codec::FP32,
+        Precision::Int8 => &codec::INT8,
+        Precision::Int4 => &codec::INT4,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PolicySpec — the config surface.
+// ---------------------------------------------------------------------------
+
+/// Geometry-independent policy description. Resolved against a model's
+/// (layers, heads, head_dim) at engine/cache construction via
+/// [`PolicySpec::resolve`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// One precision everywhere — the legacy `--precision` behavior.
+    Uniform(Precision),
+    /// Keys INT8, values INT4 on every layer (keys are the
+    /// quantization-sensitive side).
+    K8V4,
+    /// First `sink_layers` layers FP32 (attention-sink protection), the
+    /// rest INT8.
+    Sink8 { sink_layers: usize },
+    /// Explicit per-layer table (JSON under `configs/`).
+    Table(PolicyTable),
+}
+
+impl PolicySpec {
+    pub fn uniform(p: Precision) -> PolicySpec {
+        PolicySpec::Uniform(p)
+    }
+
+    /// Parse a `--quant-policy` value: a preset name, a bare precision
+    /// (legacy spelling), or a path to a policy JSON (`*.json`).
+    pub fn parse(s: &str) -> Result<PolicySpec> {
+        if let Some(rest) = s.strip_prefix("uniform:") {
+            let p = Precision::parse(rest)
+                .ok_or_else(|| anyhow!("unknown precision {rest:?} in policy {s:?}"))?;
+            return Ok(PolicySpec::Uniform(p));
+        }
+        if let Some(p) = Precision::parse(s) {
+            return Ok(PolicySpec::Uniform(p));
+        }
+        if s == "k8v4" {
+            return Ok(PolicySpec::K8V4);
+        }
+        if s == "sink8" {
+            return Ok(PolicySpec::Sink8 { sink_layers: 1 });
+        }
+        if let Some(n) = s.strip_prefix("sink8:") {
+            let sink_layers: usize =
+                n.parse().map_err(|_| anyhow!("bad sink layer count in {s:?}"))?;
+            return Ok(PolicySpec::Sink8 { sink_layers });
+        }
+        if s.ends_with(".json") {
+            return Ok(PolicySpec::Table(PolicyTable::load(s)?));
+        }
+        bail!(
+            "unknown quant policy {s:?} (expected uniform:fp32|int8|int4, k8v4, \
+             sink8[:N], or a policy .json path)"
+        )
+    }
+
+    /// Canonical display name (`uniform:int8`, `k8v4`, `sink8:1`, or the
+    /// table's declared name).
+    pub fn name(&self) -> String {
+        match self {
+            PolicySpec::Uniform(p) => format!("uniform:{}", p.name()),
+            PolicySpec::K8V4 => "k8v4".into(),
+            PolicySpec::Sink8 { sink_layers } => format!("sink8:{sink_layers}"),
+            PolicySpec::Table(t) => t.name.clone(),
+        }
+    }
+
+    /// Router/engine label: uniform policies keep the legacy precision
+    /// name (`int8`), everything else uses the policy name.
+    pub fn engine_label(&self) -> String {
+        match self {
+            PolicySpec::Uniform(p) => p.name().to_string(),
+            other => other.name(),
+        }
+    }
+
+    /// Resolve against a concrete model geometry, validating bounds and
+    /// the even-`head_dim` requirement for any INT4 side.
+    pub fn resolve(&self, layers: usize, heads: usize, head_dim: usize) -> Result<QuantPolicy> {
+        let mut map: Vec<[Vec<Precision>; 2]> = match self {
+            PolicySpec::Uniform(p) => {
+                (0..layers).map(|_| [vec![*p; heads], vec![*p; heads]]).collect()
+            }
+            PolicySpec::K8V4 => (0..layers)
+                .map(|_| [vec![Precision::Int8; heads], vec![Precision::Int4; heads]])
+                .collect(),
+            PolicySpec::Sink8 { sink_layers } => (0..layers)
+                .map(|l| {
+                    let p = if l < *sink_layers { Precision::Fp32 } else { Precision::Int8 };
+                    [vec![p; heads], vec![p; heads]]
+                })
+                .collect(),
+            PolicySpec::Table(t) => t.resolve_map(layers, heads)?,
+        };
+        if map.is_empty() || heads == 0 {
+            bail!("policy resolved over zero layers/heads");
+        }
+        let has_int4 = map
+            .iter()
+            .flat_map(|pair| pair.iter().flatten())
+            .any(|&p| p == Precision::Int4);
+        if has_int4 && head_dim % 2 != 0 {
+            bail!(
+                "policy {:?} puts INT4 on a stream but head_dim {head_dim} is odd \
+                 (int4 rows must be nibble-aligned: even head_dim required)",
+                self.name()
+            );
+        }
+        // Shrink-to-fit so equality between identically resolved policies
+        // is structural.
+        for pair in &mut map {
+            pair[0].shrink_to_fit();
+            pair[1].shrink_to_fit();
+        }
+        Ok(QuantPolicy { name: self.name(), map, heads })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PolicyTable — the JSON per-layer table.
+// ---------------------------------------------------------------------------
+
+/// A per-(head, side) override inside one layer's table row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeadOverride {
+    pub head: usize,
+    /// 0 = K, 1 = V.
+    pub kv: usize,
+    pub precision: Precision,
+}
+
+/// One layer's row: optional per-side precisions plus head overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyRule {
+    pub layer: usize,
+    pub k: Option<Precision>,
+    pub v: Option<Precision>,
+    pub heads: Vec<HeadOverride>,
+}
+
+/// Parsed JSON policy table. Schema (see `rust/README.md`):
+///
+/// ```json
+/// {
+///   "name": "sink-mixed",
+///   "layers": 2, "heads": 2,
+///   "default": {"k": "int8", "v": "int4"},
+///   "table": [
+///     {"layer": 0, "k": "fp32", "v": "fp32"},
+///     {"layer": 1, "heads": [{"head": 1, "side": "v", "precision": "int8"}]}
+///   ]
+/// }
+/// ```
+///
+/// `default` may also be a bare string applying to both sides. The
+/// declared `layers`/`heads` geometry is mandatory for files shipped
+/// under `configs/` (the validation test resolves each file against its
+/// own declaration); at serve time the declared geometry must match the
+/// model's.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyTable {
+    pub name: String,
+    /// Declared geometry (validated against the model at resolve time).
+    pub layers: Option<usize>,
+    pub heads: Option<usize>,
+    /// Per-side default `[K, V]`.
+    pub default: [Precision; 2],
+    pub rules: Vec<PolicyRule>,
+}
+
+fn parse_precision(j: &Json, what: &str) -> Result<Precision> {
+    let s = j.as_str().ok_or_else(|| anyhow!("{what}: expected a precision string"))?;
+    Precision::parse(s).ok_or_else(|| anyhow!("{what}: unknown precision {s:?}"))
+}
+
+impl PolicyTable {
+    pub fn load(path: &str) -> Result<PolicyTable> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy table {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing policy table {path}"))?;
+        Self::from_json(&j).with_context(|| format!("in policy table {path}"))
+    }
+
+    pub fn from_json(j: &Json) -> Result<PolicyTable> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("policy table missing \"name\""))?
+            .to_string();
+        let default = match j.get("default") {
+            Json::Null => [Precision::Int8; 2],
+            d @ Json::Str(_) => [parse_precision(d, "default")?; 2],
+            d => [
+                parse_precision(d.get("k"), "default.k")?,
+                parse_precision(d.get("v"), "default.v")?,
+            ],
+        };
+        let mut rules = Vec::new();
+        if let Some(arr) = j.get("table").as_arr() {
+            for (i, row) in arr.iter().enumerate() {
+                let layer = row
+                    .get("layer")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("table[{i}] missing \"layer\""))?;
+                let side = |key: &str| -> Result<Option<Precision>> {
+                    match row.get(key) {
+                        Json::Null => Ok(None),
+                        p => Ok(Some(parse_precision(p, &format!("table[{i}].{key}"))?)),
+                    }
+                };
+                let mut heads = Vec::new();
+                if let Some(hs) = row.get("heads").as_arr() {
+                    for (hi, h) in hs.iter().enumerate() {
+                        let head = h
+                            .get("head")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("table[{i}].heads[{hi}] missing \"head\""))?;
+                        let kv = match h.get("side").as_str() {
+                            Some("k") => 0,
+                            Some("v") => 1,
+                            other => bail!(
+                                "table[{i}].heads[{hi}].side must be \"k\" or \"v\", got {other:?}"
+                            ),
+                        };
+                        let precision = parse_precision(
+                            h.get("precision"),
+                            &format!("table[{i}].heads[{hi}].precision"),
+                        )?;
+                        heads.push(HeadOverride { head, kv, precision });
+                    }
+                }
+                rules.push(PolicyRule { layer, k: side("k")?, v: side("v")?, heads });
+            }
+        }
+        Ok(PolicyTable {
+            name,
+            layers: j.get("layers").as_usize(),
+            heads: j.get("heads").as_usize(),
+            default,
+            rules,
+        })
+    }
+
+    /// Expand into the per-(layer, kv, head) map, bounds-checking every
+    /// rule against the target geometry.
+    fn resolve_map(&self, layers: usize, heads: usize) -> Result<Vec<[Vec<Precision>; 2]>> {
+        if let Some(dl) = self.layers {
+            if dl != layers {
+                bail!(
+                    "policy {:?} declares {dl} layers but the model has {layers}",
+                    self.name
+                );
+            }
+        }
+        if let Some(dh) = self.heads {
+            if dh != heads {
+                bail!("policy {:?} declares {dh} heads but the model has {heads}", self.name);
+            }
+        }
+        let mut map: Vec<[Vec<Precision>; 2]> = (0..layers)
+            .map(|_| [vec![self.default[0]; heads], vec![self.default[1]; heads]])
+            .collect();
+        for rule in &self.rules {
+            if rule.layer >= layers {
+                bail!(
+                    "policy {:?}: rule layer {} out of bounds for {layers}-layer model",
+                    self.name,
+                    rule.layer
+                );
+            }
+            if let Some(p) = rule.k {
+                map[rule.layer][0] = vec![p; heads];
+            }
+            if let Some(p) = rule.v {
+                map[rule.layer][1] = vec![p; heads];
+            }
+            for h in &rule.heads {
+                if h.head >= heads {
+                    bail!(
+                        "policy {:?}: layer {} head override {} out of bounds for {heads} heads",
+                        self.name,
+                        rule.layer,
+                        h.head
+                    );
+                }
+                map[rule.layer][h.kv][h.head] = h.precision;
+            }
+        }
+        Ok(map)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantPolicy — the resolved map.
+// ---------------------------------------------------------------------------
+
+/// A [`PolicySpec`] resolved against one model geometry: every
+/// `(layer, kv, head)` has a precision, and derived views (codecs,
+/// stream layouts, byte accounting) hang off it.
+#[derive(Clone)]
+pub struct QuantPolicy {
+    name: String,
+    /// `map[layer][kv][head]`.
+    map: Vec<[Vec<Precision>; 2]>,
+    heads: usize,
+}
+
+impl std::fmt::Debug for QuantPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QuantPolicy({}, {}L x {}H)", self.name, self.map.len(), self.heads)
+    }
+}
+
+impl QuantPolicy {
+    /// Uniform policy without going through a spec — the test/bench
+    /// shorthand equivalent of the legacy per-cache `precision` knob.
+    pub fn uniform(p: Precision, layers: usize, heads: usize) -> QuantPolicy {
+        PolicySpec::Uniform(p)
+            .resolve(layers, heads, 2) // head_dim only gates int4 oddness
+            .expect("uniform policies always resolve")
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn layers(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn precision(&self, layer: usize, kv: usize, head: usize) -> Precision {
+        self.map[layer][kv][head]
+    }
+
+    pub fn codec(&self, layer: usize, kv: usize, head: usize) -> &'static dyn Codec {
+        codec_for(self.precision(layer, kv, head))
+    }
+
+    /// The single precision used everywhere, if the policy is uniform.
+    pub fn as_uniform(&self) -> Option<Precision> {
+        let first = self.map[0][0][0];
+        self.map
+            .iter()
+            .flat_map(|pair| pair.iter().flatten())
+            .all(|&p| p == first)
+            .then_some(first)
+    }
+
+    /// Does any stream use `p`?
+    pub fn uses(&self, p: Precision) -> bool {
+        self.map.iter().flat_map(|pair| pair.iter().flatten()).any(|&q| q == p)
+    }
+
+    /// The dense staging ABI this policy is compatible with, if any.
+    /// Only uniform policies whose codec has a dense layout
+    /// ([`Codec::supports_staged`] — int8/fp32 today) qualify; every
+    /// other policy (mixed, or INT4 anywhere) must decode over the paged
+    /// layout.
+    pub fn staged(&self) -> Option<StagedKind> {
+        let p = self.as_uniform()?;
+        if !codec_for(p).supports_staged() {
+            return None;
+        }
+        match p {
+            Precision::Int8 => Some(StagedKind::I8),
+            Precision::Fp32 => Some(StagedKind::F32),
+            // supports_staged() is the codec's authority; a staging-
+            // capable codec without an ABI mapping here is a bug.
+            Precision::Int4 => unreachable!("int4 has no dense staging ABI"),
+        }
+    }
+
+    /// Byte layout of one `(layer, kv)` stream's blocks.
+    pub fn stream_layout(
+        &self,
+        layer: usize,
+        kv: usize,
+        block_size: usize,
+        head_dim: usize,
+    ) -> StreamLayout {
+        StreamLayout::new(&self.map[layer][kv], block_size, head_dim)
+    }
+
+    /// Largest per-block payload across all streams — the pool's block
+    /// size. Uniform policies get exactly the legacy per-precision block
+    /// bytes; mixed policies pad narrower streams to the widest (the
+    /// logical byte accounting below still reports true per-precision
+    /// footprints). Rounded up to the strictest codec alignment in the
+    /// policy so *every* block's base stays aligned for in-place fp32
+    /// reads, not just block 0 (uniform int8/int4 policies have align 1
+    /// and uniform fp32 is naturally 4-aligned — no padding, so the
+    /// legacy widths are preserved bit-for-bit).
+    pub fn max_block_bytes(&self, block_size: usize, head_dim: usize) -> usize {
+        let align = self
+            .map
+            .iter()
+            .flat_map(|pair| pair.iter().flatten())
+            .map(|&p| codec_for(p).row_align())
+            .max()
+            .unwrap_or(1);
+        (0..self.layers())
+            .flat_map(|l| (0..2).map(move |kv| (l, kv)))
+            .map(|(l, kv)| self.stream_layout(l, kv, block_size, head_dim).block_bytes)
+            .max()
+            .unwrap_or(0)
+            .next_multiple_of(align)
+    }
+
+    /// Payload bytes of `seq_len` cached tokens under this policy
+    /// (per-row accounting, all layers/sides/heads).
+    pub fn payload_bytes(&self, head_dim: usize, seq_len: usize) -> u64 {
+        self.map
+            .iter()
+            .flat_map(|pair| pair.iter().flatten())
+            .map(|&p| (seq_len * codec_for(p).bytes_per_row(head_dim)) as u64)
+            .sum()
+    }
+
+    /// Per-channel frozen-scale overhead: one f32 per quantized
+    /// (layer, kv, head, channel); FP32 streams carry none.
+    pub fn scale_overhead_bytes(&self, head_dim: usize) -> u64 {
+        self.map
+            .iter()
+            .flat_map(|pair| pair.iter().flatten())
+            .filter(|&&p| p != Precision::Fp32)
+            .map(|_| (head_dim * 4) as u64)
+            .sum()
+    }
+
+    /// Payload bytes of `seq_len` tokens broken down by precision,
+    /// indexed `[fp32, int8, int4]` — the `GET /metrics` breakdown.
+    pub fn payload_bytes_by_precision(&self, head_dim: usize, seq_len: usize) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for &p in self.map.iter().flat_map(|pair| pair.iter().flatten()) {
+            out[p as usize] += (seq_len * codec_for(p).bytes_per_row(head_dim)) as u64;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamLayout — block byte layout of one (layer, K|V) stream.
+// ---------------------------------------------------------------------------
+
+/// How one `(layer, kv)` stream's rows pack into a block: head-major
+/// slabs of `block_size` rows each, where each head's row width comes
+/// from its codec. For uniform streams this is exactly the legacy
+/// `[heads][block_size][head_dim]` layout.
+#[derive(Clone)]
+pub struct StreamLayout {
+    codecs: Vec<&'static dyn Codec>,
+    /// Byte offset of each head's slab within a block.
+    offsets: Vec<usize>,
+    /// Payload bytes per row of each head.
+    row_bytes: Vec<usize>,
+    /// Total payload bytes of one block of this stream.
+    pub block_bytes: usize,
+    /// The stream's single precision, when all heads agree.
+    pub uniform: Option<Precision>,
+    block_size: usize,
+}
+
+impl StreamLayout {
+    pub fn new(precisions: &[Precision], block_size: usize, head_dim: usize) -> StreamLayout {
+        let codecs: Vec<&'static dyn Codec> =
+            precisions.iter().map(|&p| codec_for(p)).collect();
+        let row_bytes: Vec<usize> = codecs.iter().map(|c| c.bytes_per_row(head_dim)).collect();
+        let mut offsets = Vec::with_capacity(codecs.len());
+        let mut off = 0usize;
+        for (c, &rb) in codecs.iter().zip(&row_bytes) {
+            // Mixed-head streams: pad so e.g. an fp32 slab after an int4
+            // one stays 4-byte aligned (uniform streams never pad — their
+            // natural offsets already satisfy their own alignment).
+            off = off.next_multiple_of(c.row_align());
+            offsets.push(off);
+            off += block_size * rb;
+        }
+        let uniform = precisions
+            .iter()
+            .all(|&p| p == precisions[0])
+            .then_some(precisions[0]);
+        StreamLayout { codecs, offsets, row_bytes, block_bytes: off, uniform, block_size }
+    }
+
+    pub fn heads(&self) -> usize {
+        self.codecs.len()
+    }
+
+    pub fn head_codec(&self, head: usize) -> &'static dyn Codec {
+        self.codecs[head]
+    }
+
+    /// Payload bytes of one row of `head`.
+    pub fn head_row_bytes(&self, head: usize) -> usize {
+        self.row_bytes[head]
+    }
+
+    /// Byte range of `rows` valid rows of `head` within a block.
+    pub fn head_slab(&self, head: usize, rows: usize) -> std::ops::Range<usize> {
+        debug_assert!(rows <= self.block_size);
+        let start = self.offsets[head];
+        start..start + rows * self.row_bytes[head]
+    }
+
+    /// Byte range of row `row` of `head` within a block.
+    pub fn row_range(&self, head: usize, row: usize) -> std::ops::Range<usize> {
+        debug_assert!(row < self.block_size);
+        let start = self.offsets[head] + row * self.row_bytes[head];
+        start..start + self.row_bytes[head]
+    }
+
+    /// Payload bytes `len` valid rows of this stream occupy (per-row
+    /// accounting across all heads).
+    pub fn payload_bytes(&self, len: usize) -> usize {
+        self.row_bytes.iter().map(|rb| rb * len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_parse_and_name_roundtrip() {
+        assert_eq!(PolicySpec::parse("int8").unwrap(), PolicySpec::Uniform(Precision::Int8));
+        assert_eq!(
+            PolicySpec::parse("uniform:fp32").unwrap(),
+            PolicySpec::Uniform(Precision::Fp32)
+        );
+        assert_eq!(PolicySpec::parse("k8v4").unwrap(), PolicySpec::K8V4);
+        assert_eq!(PolicySpec::parse("sink8").unwrap(), PolicySpec::Sink8 { sink_layers: 1 });
+        assert_eq!(
+            PolicySpec::parse("sink8:3").unwrap(),
+            PolicySpec::Sink8 { sink_layers: 3 }
+        );
+        assert!(PolicySpec::parse("int99").is_err());
+        assert!(PolicySpec::parse("sink8:x").is_err());
+        assert_eq!(PolicySpec::parse("k8v4").unwrap().name(), "k8v4");
+        assert_eq!(PolicySpec::Uniform(Precision::Int4).name(), "uniform:int4");
+        assert_eq!(PolicySpec::Uniform(Precision::Int4).engine_label(), "int4");
+        assert_eq!(PolicySpec::K8V4.engine_label(), "k8v4");
+    }
+
+    #[test]
+    fn uniform_resolution_covers_every_stream() {
+        let p = PolicySpec::Uniform(Precision::Int8).resolve(3, 2, 8).unwrap();
+        assert_eq!(p.as_uniform(), Some(Precision::Int8));
+        assert_eq!(p.staged(), Some(StagedKind::I8));
+        for l in 0..3 {
+            for kv in 0..2 {
+                for h in 0..2 {
+                    assert_eq!(p.precision(l, kv, h), Precision::Int8);
+                }
+            }
+        }
+        assert_eq!(
+            PolicySpec::Uniform(Precision::Fp32).resolve(1, 1, 4).unwrap().staged(),
+            Some(StagedKind::F32)
+        );
+        assert_eq!(
+            PolicySpec::Uniform(Precision::Int4).resolve(1, 1, 4).unwrap().staged(),
+            None,
+            "int4 has no dense staging ABI"
+        );
+    }
+
+    #[test]
+    fn k8v4_splits_sides_and_requires_paged() {
+        let p = PolicySpec::K8V4.resolve(2, 2, 8).unwrap();
+        assert_eq!(p.precision(1, 0, 1), Precision::Int8, "keys int8");
+        assert_eq!(p.precision(1, 1, 0), Precision::Int4, "values int4");
+        assert_eq!(p.as_uniform(), None);
+        assert_eq!(p.staged(), None);
+        assert!(p.uses(Precision::Int4) && p.uses(Precision::Int8));
+        assert!(!p.uses(Precision::Fp32));
+    }
+
+    #[test]
+    fn sink8_keeps_early_layers_fp32() {
+        let p = PolicySpec::Sink8 { sink_layers: 2 }.resolve(4, 1, 8).unwrap();
+        assert_eq!(p.precision(0, 0, 0), Precision::Fp32);
+        assert_eq!(p.precision(1, 1, 0), Precision::Fp32);
+        assert_eq!(p.precision(2, 0, 0), Precision::Int8);
+        assert_eq!(p.staged(), None, "mixed precision needs the paged path");
+        // Sink count >= layers degenerates to uniform fp32 (and may stage).
+        let all = PolicySpec::Sink8 { sink_layers: 9 }.resolve(4, 1, 8).unwrap();
+        assert_eq!(all.as_uniform(), Some(Precision::Fp32));
+    }
+
+    #[test]
+    fn int4_policies_reject_odd_head_dim() {
+        for spec in [
+            PolicySpec::Uniform(Precision::Int4),
+            PolicySpec::K8V4,
+        ] {
+            let err = spec.resolve(2, 2, 7).unwrap_err();
+            assert!(err.to_string().contains("even head_dim"), "{err}");
+        }
+        // No int4 side: odd head_dim is fine.
+        PolicySpec::Sink8 { sink_layers: 1 }.resolve(2, 2, 7).unwrap();
+    }
+
+    #[test]
+    fn table_from_json_with_head_overrides() {
+        let j = Json::parse(
+            r#"{
+                "name": "sink-mixed", "layers": 2, "heads": 2,
+                "default": {"k": "int8", "v": "int4"},
+                "table": [
+                    {"layer": 0, "k": "fp32", "v": "fp32"},
+                    {"layer": 1, "heads": [{"head": 1, "side": "v", "precision": "int8"}]}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let t = PolicyTable::from_json(&j).unwrap();
+        let p = PolicySpec::Table(t).resolve(2, 2, 8).unwrap();
+        assert_eq!(p.name(), "sink-mixed");
+        assert_eq!(p.precision(0, 0, 0), Precision::Fp32);
+        assert_eq!(p.precision(0, 1, 1), Precision::Fp32);
+        assert_eq!(p.precision(1, 0, 0), Precision::Int8, "default K");
+        assert_eq!(p.precision(1, 1, 0), Precision::Int4, "default V");
+        assert_eq!(p.precision(1, 1, 1), Precision::Int8, "head override");
+    }
+
+    #[test]
+    fn table_validation_rejects_bad_inputs() {
+        let parse = |s: &str| PolicyTable::from_json(&Json::parse(s).unwrap());
+        assert!(parse(r#"{"default": "int8"}"#).is_err(), "missing name");
+        assert!(
+            parse(r#"{"name": "x", "default": "int9"}"#).is_err(),
+            "unknown precision rejected"
+        );
+        assert!(
+            parse(r#"{"name":"x","table":[{"k":"int8"}]}"#).is_err(),
+            "rule without layer"
+        );
+        assert!(
+            parse(r#"{"name":"x","table":[{"layer":0,"heads":[{"head":0,"side":"q",
+                    "precision":"int8"}]}]}"#)
+                .is_err(),
+            "bad side"
+        );
+        // Out-of-bounds rules surface at resolution.
+        let t = parse(r#"{"name":"x","table":[{"layer":5,"k":"int4"}]}"#).unwrap();
+        assert!(PolicySpec::Table(t).resolve(2, 2, 8).is_err());
+        let t = parse(
+            r#"{"name":"x","table":[{"layer":0,"heads":[{"head":7,"side":"k",
+                "precision":"int8"}]}]}"#,
+        )
+        .unwrap();
+        assert!(PolicySpec::Table(t).resolve(2, 2, 8).is_err());
+        // Declared geometry must match the model.
+        let t = parse(r#"{"name":"x","layers":8,"default":"int8"}"#).unwrap();
+        assert!(PolicySpec::Table(t).resolve(2, 2, 8).is_err());
+    }
+
+    #[test]
+    fn every_shipped_policy_json_validates() {
+        // CI gate for the configs/ policy tables: each file must parse,
+        // declare its geometry, and resolve cleanly against it (bounds
+        // checks, known precisions, even-head_dim for any INT4 side —
+        // resolution is tried at head_dim 8). Unknown precisions or
+        // out-of-range layer/head indices fail this test.
+        let dir = ["configs", "../configs", "../../configs"]
+            .iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.exists())
+            .expect("configs/ not found from cwd");
+        let mut checked = 0;
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let path = entry.unwrap().path();
+            let name = path.file_name().unwrap().to_string_lossy().to_string();
+            if !name.starts_with("policy_") || !name.ends_with(".json") {
+                continue;
+            }
+            let table = PolicyTable::load(path.to_str().unwrap())
+                .unwrap_or_else(|e| panic!("{name} failed to parse: {e:#}"));
+            let layers = table.layers.unwrap_or_else(|| {
+                panic!("{name} must declare \"layers\" (validation geometry)")
+            });
+            let heads = table
+                .heads
+                .unwrap_or_else(|| panic!("{name} must declare \"heads\""));
+            PolicySpec::Table(table)
+                .resolve(layers, heads, 8)
+                .unwrap_or_else(|e| panic!("{name} failed to resolve: {e:#}"));
+            checked += 1;
+        }
+        assert!(checked >= 2, "expected the shipped policy tables, found {checked}");
+    }
+
+    #[test]
+    fn stream_layout_offsets_match_legacy_for_uniform() {
+        // Uniform int8, bs=4, d=8: head h at byte h*4*8 — the legacy
+        // [heads][block_size][head_dim] layout.
+        let l = StreamLayout::new(&[Precision::Int8; 2], 4, 8);
+        assert_eq!(l.block_bytes, 2 * 4 * 8);
+        assert_eq!(l.head_slab(1, 3), 32..32 + 24);
+        assert_eq!(l.row_range(0, 2), 16..24);
+        assert_eq!(l.uniform, Some(Precision::Int8));
+        assert_eq!(l.payload_bytes(5), 2 * 5 * 8);
+        // fp32: 4x.
+        let lf = StreamLayout::new(&[Precision::Fp32; 2], 4, 8);
+        assert_eq!(lf.block_bytes, 2 * 4 * 8 * 4);
+        // int4: half, nibble-packed.
+        let l4 = StreamLayout::new(&[Precision::Int4; 2], 4, 8);
+        assert_eq!(l4.block_bytes, 2 * 4 * 4);
+        assert_eq!(l4.row_range(1, 0), 16..20);
+    }
+
+    #[test]
+    fn mixed_head_layout_uses_prefix_offsets() {
+        let l = StreamLayout::new(&[Precision::Fp32, Precision::Int4], 2, 8);
+        assert_eq!(l.head_slab(0, 2), 0..64, "fp32 head first");
+        assert_eq!(l.head_slab(1, 2), 64..64 + 8, "int4 head after it");
+        assert_eq!(l.uniform, None);
+        assert_eq!(l.payload_bytes(3), 3 * 32 + 3 * 4);
+    }
+
+    #[test]
+    fn byte_accounting_is_policy_aware() {
+        // 2 layers, 2 heads, d=8, 10 tokens.
+        let int8 = QuantPolicy::uniform(Precision::Int8, 2, 2);
+        assert_eq!(int8.payload_bytes(8, 10), 2 * 2 * 2 * 10 * 8);
+        assert_eq!(int8.scale_overhead_bytes(8), 2 * 2 * 2 * 8 * 4);
+        let fp32 = QuantPolicy::uniform(Precision::Fp32, 2, 2);
+        assert_eq!(fp32.payload_bytes(8, 10), 4 * int8.payload_bytes(8, 10));
+        assert_eq!(fp32.scale_overhead_bytes(8), 0);
+        let k8v4 = PolicySpec::K8V4.resolve(2, 2, 8).unwrap();
+        let by = k8v4.payload_bytes_by_precision(8, 10);
+        assert_eq!(by[Precision::Fp32 as usize], 0);
+        assert_eq!(by[Precision::Int8 as usize], 2 * 2 * 10 * 8, "K streams");
+        assert_eq!(by[Precision::Int4 as usize], 2 * 2 * 10 * 4, "V streams");
+        assert_eq!(
+            k8v4.payload_bytes(8, 10),
+            by.iter().sum::<u64>(),
+            "breakdown sums to the total"
+        );
+        // k8v4 lands strictly between uniform int8 and uniform int4.
+        let int4 = QuantPolicy::uniform(Precision::Int4, 2, 2);
+        assert!(k8v4.payload_bytes(8, 10) < int8.payload_bytes(8, 10));
+        assert!(k8v4.payload_bytes(8, 10) > int4.payload_bytes(8, 10));
+    }
+
+    #[test]
+    fn max_block_bytes_pads_to_the_widest_stream() {
+        let k8v4 = PolicySpec::K8V4.resolve(2, 2, 8).unwrap();
+        // Widest stream is the int8 K side: 2 heads x 4 rows x 8 bytes.
+        assert_eq!(k8v4.max_block_bytes(4, 8), 2 * 4 * 8);
+        let sink = PolicySpec::Sink8 { sink_layers: 1 }.resolve(2, 2, 8).unwrap();
+        assert_eq!(sink.max_block_bytes(4, 8), 2 * 4 * 8 * 4, "fp32 sink sets the width");
+    }
+
+    #[test]
+    fn max_block_bytes_keeps_every_fp32_block_base_aligned() {
+        // Mixed-head stream [fp32, int8] at head_dim 5, block_size 2:
+        // the widest stream is 2*5*4 + 2*5 = 50 raw bytes. Without
+        // rounding, block 1 would start at byte 50 (2 mod 4) and the
+        // fp32 slab read would be misaligned — the policy must pad the
+        // block width to the strictest codec alignment (4 here).
+        let t = PolicyTable {
+            name: "mixed-head".into(),
+            layers: Some(1),
+            heads: Some(2),
+            default: [Precision::Int8; 2],
+            rules: vec![PolicyRule {
+                layer: 0,
+                k: None,
+                v: None,
+                heads: vec![HeadOverride { head: 0, kv: 0, precision: Precision::Fp32 }],
+            }],
+        };
+        let p = PolicySpec::Table(t).resolve(1, 2, 5).unwrap();
+        assert_eq!(p.max_block_bytes(2, 5), 52, "50 raw bytes padded to 4-byte multiple");
+        // Pure-int policies keep their legacy (unpadded) widths.
+        let int4 = QuantPolicy::uniform(Precision::Int4, 1, 1);
+        assert_eq!(int4.max_block_bytes(3, 6), 9, "align-1 codecs never pad");
+    }
+}

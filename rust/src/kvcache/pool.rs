@@ -2,20 +2,25 @@
 //! and reference counts.
 //!
 //! One pool backs every sequence's K and V streams across all layers.
-//! A block holds `block_size` token rows of one (layer, K|V) stream in
-//! `[heads][block_size][head_dim]` layout (head-major so gathers copy one
-//! contiguous `block_size × head_dim` slab per head).
+//! A block holds `block_size` token rows of one (layer, K|V) stream; the
+//! *byte* layout of those rows is owned by the stream's
+//! [`crate::kvcache::policy::StreamLayout`] (head-major slabs whose row
+//! width comes from each head's [`crate::quant::Codec`]). The pool itself
+//! is precision-agnostic: it deals in raw bytes, sized at construction
+//! for the widest stream the active policy produces, so one pool can back
+//! mixed-precision caches with fungible blocks (the scheduler's block
+//! accounting never needs to know which stream a block serves).
 //!
 //! Refcounts implement copy-on-write prefix sharing: `fork` bumps counts;
 //! writers call `ensure_unique` (copy-on-write) before mutating.
 
-use super::Precision;
 use anyhow::{bail, Result};
 
 /// Index of a block in the pool.
 pub type BlockId = u32;
 
-/// Geometry of one block.
+/// Geometry of one block (rows × heads × channels; bytes come from the
+/// per-stream codecs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockShape {
     pub block_size: usize,
@@ -29,11 +34,9 @@ impl BlockShape {
     }
 }
 
-/// Fixed-capacity page allocator. Payload is stored as raw bytes sized by
-/// the pool's precision; accessors expose typed views.
+/// Fixed-capacity page allocator over raw bytes.
 pub struct BlockPool {
     shape: BlockShape,
-    precision: Precision,
     block_bytes: usize,
     storage: Vec<u8>,
     refcounts: Vec<u32>,
@@ -42,11 +45,9 @@ pub struct BlockPool {
 }
 
 impl BlockPool {
-    pub fn new(num_blocks: usize, shape: BlockShape, precision: Precision) -> BlockPool {
-        let block_bytes = precision.bytes_for(shape.elements());
+    pub fn new(num_blocks: usize, shape: BlockShape, block_bytes: usize) -> BlockPool {
         BlockPool {
             shape,
-            precision,
             block_bytes,
             storage: vec![0u8; num_blocks * block_bytes],
             refcounts: vec![0; num_blocks],
@@ -59,8 +60,9 @@ impl BlockPool {
         self.shape
     }
 
-    pub fn precision(&self) -> Precision {
-        self.precision
+    /// Payload bytes of one block.
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -158,7 +160,7 @@ impl BlockPool {
         s..s + self.block_bytes
     }
 
-    /// Raw byte view of a block.
+    /// Raw byte view of a block's payload.
     pub fn block_raw(&self, id: BlockId) -> &[u8] {
         &self.storage[self.range(id)]
     }
@@ -168,69 +170,14 @@ impl BlockPool {
         &mut self.storage[r]
     }
 
-    /// Typed i8 view (Int8 pools).
-    pub fn block_i8(&self, id: BlockId) -> &[i8] {
-        assert_eq!(self.precision, Precision::Int8);
-        let raw = self.block_raw(id);
-        unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len()) }
-    }
-
-    pub fn block_i8_mut(&mut self, id: BlockId) -> &mut [i8] {
-        assert_eq!(self.precision, Precision::Int8);
-        let raw = self.block_mut_raw(id);
-        unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut i8, raw.len()) }
-    }
-
-    /// Typed f32 view (Fp32 pools).
-    pub fn block_f32(&self, id: BlockId) -> &[f32] {
-        assert_eq!(self.precision, Precision::Fp32);
-        let raw = self.block_raw(id);
-        unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4) }
-    }
-
-    pub fn block_f32_mut(&mut self, id: BlockId) -> &mut [f32] {
-        assert_eq!(self.precision, Precision::Fp32);
-        let raw = self.block_mut_raw(id);
-        unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut f32, raw.len() / 4) }
-    }
-
-    /// Nibble-packed view (Int4 pools): two values per byte, element `e`
-    /// at byte `e/2`, low nibble first (the `quant::int4` convention).
-    pub fn block_i4(&self, id: BlockId) -> &[u8] {
-        assert_eq!(self.precision, Precision::Int4);
-        self.block_raw(id)
-    }
-
-    pub fn block_i4_mut(&mut self, id: BlockId) -> &mut [u8] {
-        assert_eq!(self.precision, Precision::Int4);
-        self.block_mut_raw(id)
-    }
-
-    /// Raw i8 payload pointers for a set of blocks, all derived from one
+    /// Raw payload pointers for a set of blocks, all derived from one
     /// mutable borrow of the storage (clean provenance for parallel
     /// writers). Callers guarantee the ids are distinct and own the
     /// disjointness of concurrent writes.
-    pub fn block_i8_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut i8> {
-        assert_eq!(self.precision, Precision::Int8);
-        let base = self.storage.as_mut_ptr() as *mut i8;
+    pub fn block_raw_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut u8> {
+        let base = self.storage.as_mut_ptr();
         // SAFETY: every id indexes a whole block inside `storage`.
         ids.iter().map(|&id| unsafe { base.add(id as usize * self.block_bytes) }).collect()
-    }
-
-    /// FP32 variant of [`Self::block_i8_ptrs`].
-    pub fn block_f32_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut f32> {
-        assert_eq!(self.precision, Precision::Fp32);
-        let base = self.storage.as_mut_ptr() as *mut f32;
-        // SAFETY: every id indexes a whole block inside `storage`;
-        // block_bytes is a multiple of 4 for Fp32 pools.
-        ids.iter().map(|&id| unsafe { base.add(id as usize * self.block_bytes / 4) }).collect()
-    }
-
-    /// Element offset of (head, row) within a block (precision-agnostic,
-    /// in elements not bytes).
-    pub fn slot(&self, head: usize, row: usize) -> usize {
-        debug_assert!(head < self.shape.heads && row < self.shape.block_size);
-        (head * self.shape.block_size + row) * self.shape.head_dim
     }
 }
 
@@ -242,9 +189,14 @@ mod tests {
         BlockShape { block_size: 4, heads: 2, head_dim: 8 }
     }
 
+    fn pool(n: usize) -> BlockPool {
+        // int8-width blocks: 1 byte per element.
+        BlockPool::new(n, shape(), shape().elements())
+    }
+
     #[test]
     fn alloc_free_cycle() {
-        let mut p = BlockPool::new(3, shape(), Precision::Int8);
+        let mut p = pool(3);
         assert_eq!(p.free_blocks(), 3);
         let a = p.alloc().unwrap();
         let b = p.alloc().unwrap();
@@ -258,24 +210,24 @@ mod tests {
 
     #[test]
     fn exhaustion_errors() {
-        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let mut p = pool(1);
         let _a = p.alloc().unwrap();
         assert!(p.alloc().is_err());
     }
 
     #[test]
     fn alloc_zeroes_payload() {
-        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let mut p = pool(1);
         let a = p.alloc().unwrap();
-        p.block_i8_mut(a).fill(7);
+        p.block_mut_raw(a).fill(7);
         p.release(a);
         let b = p.alloc().unwrap();
-        assert!(p.block_i8(b).iter().all(|&v| v == 0));
+        assert!(p.block_raw(b).iter().all(|&v| v == 0));
     }
 
     #[test]
     fn refcounting() {
-        let mut p = BlockPool::new(2, shape(), Precision::Int8);
+        let mut p = pool(2);
         let a = p.alloc().unwrap();
         p.retain(a);
         assert_eq!(p.refcount(a), 2);
@@ -287,7 +239,7 @@ mod tests {
 
     #[test]
     fn shared_blocks_count_once_physically() {
-        let mut p = BlockPool::new(4, shape(), Precision::Int8);
+        let mut p = pool(4);
         let a = p.alloc().unwrap();
         let _b = p.alloc().unwrap();
         p.retain(a); // a now shared by two logical holders
@@ -305,7 +257,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "release of free block")]
     fn double_free_panics() {
-        let mut p = BlockPool::new(1, shape(), Precision::Int8);
+        let mut p = pool(1);
         let a = p.alloc().unwrap();
         p.release(a);
         p.release(a);
@@ -313,13 +265,13 @@ mod tests {
 
     #[test]
     fn cow_copies_shared_blocks() {
-        let mut p = BlockPool::new(2, shape(), Precision::Int8);
+        let mut p = pool(2);
         let a = p.alloc().unwrap();
-        p.block_i8_mut(a)[0] = 42;
+        p.block_mut_raw(a)[0] = 42;
         p.retain(a); // shared twice
         let b = p.ensure_unique(a).unwrap();
         assert_ne!(a, b);
-        assert_eq!(p.block_i8(b)[0], 42, "payload copied");
+        assert_eq!(p.block_raw(b)[0], 42, "payload copied");
         assert_eq!(p.refcount(a), 1, "original released once");
         // Unshared block is returned as-is.
         let c = p.ensure_unique(b).unwrap();
@@ -327,35 +279,28 @@ mod tests {
     }
 
     #[test]
-    fn fp32_views() {
-        let mut p = BlockPool::new(1, shape(), Precision::Fp32);
-        let a = p.alloc().unwrap();
-        p.block_f32_mut(a)[5] = 1.5;
-        assert_eq!(p.block_f32(a)[5], 1.5);
-        assert_eq!(p.block_f32(a).len(), shape().elements());
-    }
-
-    #[test]
-    fn int4_views_pack_two_per_byte() {
-        let mut p = BlockPool::new(1, shape(), Precision::Int4);
-        let a = p.alloc().unwrap();
-        assert_eq!(p.block_i4(a).len(), shape().elements() / 2);
-        p.block_i4_mut(a)[3] = 0xAB;
-        assert_eq!(p.block_i4(a)[3], 0xAB);
-    }
-
-    #[test]
-    fn slot_layout_head_major() {
-        let p = BlockPool::new(1, shape(), Precision::Int8);
-        assert_eq!(p.slot(0, 0), 0);
-        assert_eq!(p.slot(0, 1), 8);
-        assert_eq!(p.slot(1, 0), 4 * 8);
-    }
-
-    #[test]
-    fn storage_accounting() {
-        let p8 = BlockPool::new(10, shape(), Precision::Int8);
-        let p32 = BlockPool::new(10, shape(), Precision::Fp32);
+    fn byte_width_is_caller_defined() {
+        // fp32-width blocks: 4 bytes per element; int4-width: half a byte.
+        let p32 = BlockPool::new(10, shape(), shape().elements() * 4);
+        let p8 = pool(10);
+        let p4 = BlockPool::new(10, shape(), shape().elements() / 2);
         assert_eq!(p32.storage_bytes(), p8.storage_bytes() * 4);
+        assert_eq!(p4.storage_bytes() * 2, p8.storage_bytes());
+        assert_eq!(p32.block_bytes(), shape().elements() * 4);
+    }
+
+    #[test]
+    fn raw_ptrs_index_whole_blocks() {
+        let mut p = pool(3);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        let ptrs = p.block_raw_ptrs(&[a, b]);
+        // SAFETY: test-only — blocks are distinct and in bounds.
+        unsafe {
+            *ptrs[0] = 11;
+            *ptrs[1] = 22;
+        }
+        assert_eq!(p.block_raw(a)[0], 11);
+        assert_eq!(p.block_raw(b)[0], 22);
     }
 }

@@ -233,7 +233,7 @@ impl PrefixCache {
 mod tests {
     use super::*;
     use crate::kvcache::manager::CacheConfig;
-    use crate::kvcache::Precision;
+    use crate::kvcache::{Precision, QuantPolicy};
 
     fn cfg(num_blocks: usize) -> CacheConfig {
         CacheConfig {
@@ -243,9 +243,13 @@ mod tests {
             max_seq: 32,
             block_size: 4,
             num_blocks,
-            precision: Precision::Int8,
             scale_margin: 1.0,
         }
+    }
+
+    fn manager(num_blocks: usize) -> KvCacheManager {
+        let c = cfg(num_blocks);
+        KvCacheManager::new(c, QuantPolicy::uniform(Precision::Int8, c.layers, c.heads))
     }
 
     fn prefill(mgr: &mut KvCacheManager, len: usize, seed: u64) -> SeqId {
@@ -263,7 +267,7 @@ mod tests {
 
     #[test]
     fn disabled_cache_never_hits_or_pins() {
-        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut mgr = manager(64);
         let mut pc = PrefixCache::new(0);
         let src = prefill(&mut mgr, 8, 1);
         pc.insert(&mut mgr, src, &[1, 2, 3], &[0.0; 4]);
@@ -275,7 +279,7 @@ mod tests {
 
     #[test]
     fn hit_forks_without_allocating() {
-        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut mgr = manager(64);
         let mut pc = PrefixCache::new(64);
         let prompt = vec![5i32; 8];
         let src = prefill(&mut mgr, 8, 2);
@@ -296,7 +300,7 @@ mod tests {
 
     #[test]
     fn exact_match_only() {
-        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut mgr = manager(64);
         let mut pc = PrefixCache::new(64);
         let src = prefill(&mut mgr, 8, 3);
         pc.insert(&mut mgr, src, &[7i32; 8], &[0.0]);
@@ -311,7 +315,7 @@ mod tests {
 
     #[test]
     fn lru_eviction_respects_budget() {
-        let mut mgr = KvCacheManager::new(cfg(128));
+        let mut mgr = manager(128);
         // 8 tokens -> 2 blocks x 4 streams = 8 logical blocks per entry.
         let mut pc = PrefixCache::new(16);
         let a = prefill(&mut mgr, 8, 4);
@@ -338,7 +342,7 @@ mod tests {
 
     #[test]
     fn oversized_entry_is_not_cached() {
-        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut mgr = manager(64);
         let mut pc = PrefixCache::new(4); // one 8-token entry needs 8
         let src = prefill(&mut mgr, 8, 7);
         pc.insert(&mut mgr, src, &[9i32; 8], &[0.0]);
@@ -349,7 +353,7 @@ mod tests {
 
     #[test]
     fn pool_pressure_eviction_skips_fully_shared_entries() {
-        let mut mgr = KvCacheManager::new(cfg(64));
+        let mut mgr = manager(64);
         let mut pc = PrefixCache::new(32);
         // Entry A (older) stays shared with a live sequence; entry B
         // (newer) is the only holder of its blocks.
@@ -373,7 +377,7 @@ mod tests {
 
     #[test]
     fn evict_for_frees_pool_pressure() {
-        let mut mgr = KvCacheManager::new(cfg(16));
+        let mut mgr = manager(16);
         let mut pc = PrefixCache::new(16);
         let src = prefill(&mut mgr, 8, 8); // 8 blocks
         pc.insert(&mut mgr, src, &[4i32; 8], &[0.0]);

@@ -59,6 +59,10 @@ USAGE: kvq <command> [flags]
 COMMANDS:
   serve      start the HTTP server
              --model kvq-3m|kvq-25m --precision int8|fp32|int4 --port 8080
+             --quant-policy uniform:int8|k8v4|sink8[:N]|<table.json>
+               (per-(layer,head,K/V) precision policy; --precision P is
+               shorthand for uniform:P. Mixed policies and int4 need
+               --backend cpu with paged decode on)
              --backend pjrt|cpu --decode-kernel plain|pallas
              --threads N (0 = auto; parallel quantization runtime)
              --admission-mode optimistic|worst-case (preemptive vs
@@ -142,14 +146,19 @@ fn serve(args: Args) -> Result<()> {
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
     let (handle, _join) = spawn_engine(&cfg);
     let mut router = Router::new(RoutePolicy::RoundRobin);
-    router.add_engine(cfg.precision.name(), handle.clone());
+    router.add_engine(&cfg.quant_policy.engine_label(), handle.clone());
     let threads = kvq::parallel::resolve(cfg.parallelism);
     let server = HttpServer::bind(cfg.port)?;
     // Build the /config payload after bind so it reports the actually
     // bound port (cfg.port may be 0 = ephemeral).
+    let precision_label = match &cfg.quant_policy {
+        kvq::kvcache::PolicySpec::Uniform(p) => p.name().to_string(),
+        _ => "mixed".to_string(),
+    };
     let info = kvq::server::api::config_response(
         &cfg.model,
-        cfg.precision.name(),
+        &cfg.quant_policy.name(),
+        &precision_label,
         if cfg.backend == Backend::Pjrt { "pjrt" } else { "cpu" },
         threads,
         cfg.batcher.admission.mode.name(),
@@ -160,10 +169,10 @@ fn serve(args: Args) -> Result<()> {
     );
     let service = Arc::new(KvqService::with_info(Arc::new(router), info));
     println!(
-        "kvq serving on http://127.0.0.1:{} (model={} precision={} backend={:?} threads={})",
+        "kvq serving on http://127.0.0.1:{} (model={} policy={} backend={:?} threads={})",
         server.local_port(),
         cfg.model,
-        cfg.precision.name(),
+        cfg.quant_policy.name(),
         cfg.backend,
         threads
     );

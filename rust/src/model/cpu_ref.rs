@@ -24,8 +24,7 @@
 use super::spec::ModelSpec;
 use super::weights::Weights;
 use crate::kvcache::manager::CacheView;
-use crate::kvcache::Precision;
-use crate::quant::{attn, int4, Variant};
+use crate::quant::{attn, Variant};
 
 /// y += x @ w, where x: (m,), w: (m, n) row-major, y: (n,).
 fn matvec_acc(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
@@ -445,27 +444,26 @@ impl CacheAccess for StagedF32Cache<'_> {
 }
 
 /// Block-native paged cache: walks the pool's blocks in place through a
-/// zero-copy [`CacheView`] — the serving decode hot path. INT8 and FP32
-/// run the fused slab kernels per (block, head); INT4 unpacks one row at
-/// a time into an O(d) scratch (`dequantize4_row_into`) — still O(len)
-/// traffic, never an O(max_seq) staging copy.
+/// zero-copy [`CacheView`] — the serving decode hot path. Every
+/// `(layer, head, K|V)` slab is read through its policy-assigned
+/// [`crate::quant::Codec`]: INT8 and FP32 run the fused slab kernels per
+/// (block, head); INT4 unpacks one row at a time into an O(d) scratch —
+/// still O(len) traffic, never an O(max_seq) staging copy. Mixed
+/// policies (`k8v4`, `sink8`, per-layer tables) need no special cases
+/// here — precision is resolved per stream by the codec lookup.
 pub struct PagedCache<'a> {
     view: &'a CacheView<'a>,
     variant: Variant,
-    /// O(d) row scratch for the INT4 unpack path, allocated once per
-    /// decode step and reused across every (layer, head) call (empty for
-    /// other precisions). `CacheAccess` reads are `&self` on one thread,
-    /// so a `RefCell` suffices.
+    /// O(d) row scratch for codecs that unpack before dotting (INT4),
+    /// grown on first use and reused across every (layer, head) call.
+    /// `CacheAccess` reads are `&self` on one thread, so a `RefCell`
+    /// suffices.
     scratch: std::cell::RefCell<Vec<f32>>,
 }
 
 impl<'a> PagedCache<'a> {
     pub fn new(view: &'a CacheView<'a>, variant: Variant) -> PagedCache<'a> {
-        let scratch_len = match view.precision() {
-            Precision::Int4 => view.head_dim(),
-            _ => 0,
-        };
-        PagedCache { view, variant, scratch: std::cell::RefCell::new(vec![0.0; scratch_len]) }
+        PagedCache { view, variant, scratch: std::cell::RefCell::new(Vec::new()) }
     }
 }
 
@@ -474,93 +472,28 @@ impl CacheAccess for PagedCache<'_> {
         let stream = self.view.stream(layer, 0);
         debug_assert_eq!(scores.len(), stream.len(), "score buffer vs history len");
         let sc = stream.head_scales(head);
-        let d = q.len();
-        match self.view.precision() {
-            Precision::Int8 => {
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_i8(bi, head);
-                    attn::dot_rows_i8(self.variant, q, slab, sc, &mut scores[t0..t0 + rows]);
-                    t0 += rows;
-                }
-            }
-            Precision::Fp32 => {
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_f32(bi, head);
-                    attn::dot_rows_f32(q, slab, &mut scores[t0..t0 + rows]);
-                    t0 += rows;
-                }
-            }
-            Precision::Int4 => {
-                let mut scratch = self.scratch.borrow_mut();
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_i4(bi, head);
-                    for r in 0..rows {
-                        int4::dequantize4_row_into(
-                            &slab[r * d / 2..(r + 1) * d / 2],
-                            sc,
-                            &mut scratch,
-                        );
-                        let mut dot = 0.0f32;
-                        for ch in 0..d {
-                            dot += q[ch] * scratch[ch];
-                        }
-                        scores[t0 + r] = dot;
-                    }
-                    t0 += rows;
-                }
-            }
+        let codec = stream.head_codec(head);
+        let mut scratch = self.scratch.borrow_mut();
+        let mut t0 = 0;
+        for bi in 0..stream.num_blocks() {
+            let rows = stream.rows_in_block(bi);
+            let slab = stream.head_rows_raw(bi, head);
+            codec.dot_rows(self.variant, q, slab, sc, &mut scratch, &mut scores[t0..t0 + rows]);
+            t0 += rows;
         }
     }
 
     fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
         let stream = self.view.stream(layer, 1);
         let sc = stream.head_scales(head);
-        let d = acc.len();
-        match self.view.precision() {
-            Precision::Int8 => {
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_i8(bi, head);
-                    attn::accumulate_rows_i8(self.variant, &w[t0..t0 + rows], slab, sc, acc);
-                    t0 += rows;
-                }
-            }
-            Precision::Fp32 => {
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_f32(bi, head);
-                    attn::accumulate_rows_f32(&w[t0..t0 + rows], slab, acc);
-                    t0 += rows;
-                }
-            }
-            Precision::Int4 => {
-                let mut scratch = self.scratch.borrow_mut();
-                let mut t0 = 0;
-                for bi in 0..stream.num_blocks() {
-                    let rows = stream.rows_in_block(bi);
-                    let slab = stream.head_rows_i4(bi, head);
-                    for r in 0..rows {
-                        int4::dequantize4_row_into(
-                            &slab[r * d / 2..(r + 1) * d / 2],
-                            sc,
-                            &mut scratch,
-                        );
-                        let wr = w[t0 + r];
-                        for ch in 0..d {
-                            acc[ch] += wr * scratch[ch];
-                        }
-                    }
-                    t0 += rows;
-                }
-            }
+        let codec = stream.head_codec(head);
+        let mut scratch = self.scratch.borrow_mut();
+        let mut t0 = 0;
+        for bi in 0..stream.num_blocks() {
+            let rows = stream.rows_in_block(bi);
+            let slab = stream.head_rows_raw(bi, head);
+            codec.accumulate_rows(self.variant, &w[t0..t0 + rows], slab, sc, &mut scratch, acc);
+            t0 += rows;
         }
     }
 }

@@ -1,0 +1,484 @@
+//! Storage codecs — the per-precision encode/decode/fused-read strategy
+//! behind every cache page.
+//!
+//! Before this layer existed, each precision was a `match` arm scattered
+//! across the cache manager (three prefill writers, a per-row append
+//! writer), the engine (staging layout, INT4 special cases), and the
+//! paged decode path (three slab-read arms). A [`Codec`] collapses all of
+//! that into one object per precision:
+//!
+//! * **byte layout** — [`Codec::bytes_per_row`] is the single source of
+//!   truth for row packing (INT4's `ceil(d/2)` nibble rows included), and
+//!   [`Codec::qmax`] owns the symmetric scale grid (127 vs 7) that
+//!   `kvcache/manager.rs` used to re-derive by hand;
+//! * **writers** — [`Codec::encode_row`] quantizes (or copies) one
+//!   `(d,)` row into raw page bytes; prefill and decode-append both
+//!   route through it;
+//! * **readers** — [`Codec::decode_row`] unpacks one row, and the fused
+//!   [`Codec::dot_rows`]/[`Codec::accumulate_rows`] attend over a raw
+//!   slab **in place** in the paper's four kernel variants, delegating to
+//!   [`super::attn`] so every dispatch is bit-identical to the
+//!   pre-codec per-precision arms.
+//!
+//! Codecs are stateless: the canonical instances live in statics and are
+//! handed around as `&'static dyn Codec` (see
+//! `kvcache::policy::codec_for`). Precision policies
+//! (`kvcache/policy.rs`) map `(layer, head, K|V side) → codec`, which is
+//! what makes mixed-precision caches (keys INT8 / values INT4, FP32 sink
+//! layers, …) a table lookup instead of a cross-cutting refactor.
+
+use super::attn;
+use super::int4::{dequantize4_row_into, quantize4_row_into, Q4MAX};
+use super::quantize::quantize_row_into;
+use super::Variant;
+use crate::QMAX;
+
+/// One storage precision's full strategy: byte layout, scale grid,
+/// row encode/decode, and fused in-place attention reads.
+///
+/// **Bit-stability contract.** `dot_rows`/`accumulate_rows` must compute
+/// the identical float expressions in the identical order as the
+/// [`super::attn`] kernels (INT8), the dense f32 twins (FP32), or the
+/// row-unpack loop (INT4) — swapping a cache between staged and paged
+/// access, or between codec dispatch and the old hand-written arms, can
+/// never change an output bit. Asserted by this module's tests and
+/// `tests/parallel_consistency.rs`.
+pub trait Codec: Sync {
+    /// Short name ("fp32" | "int8" | "int4").
+    fn name(&self) -> &'static str;
+
+    /// Symmetric quantization bound — the divisor of the frozen-scale
+    /// grid (`scale = abs_max · margin / qmax`). FP32 pages keep the
+    /// INT8 grid so their (unused) frozen scales stay bit-identical to
+    /// the pre-codec paths.
+    fn qmax(&self) -> f32;
+
+    /// Payload bytes of one `d`-channel row. Per-row, not per-slab: an
+    /// INT4 row is `ceil(d/2)` bytes even when `d` is odd, so slab
+    /// accounting must multiply rows by this instead of flattening the
+    /// element count first.
+    fn bytes_per_row(&self, d: usize) -> usize;
+
+    /// Whether a dense `(L, H, S, d)` staging layout exists for this
+    /// encoding (the artifact/staged-decode ABI). Packed nibbles have
+    /// none, which is why any policy touching INT4 needs a paged-capable
+    /// backend.
+    fn supports_staged(&self) -> bool {
+        true
+    }
+
+    /// Byte alignment this codec's slabs need inside a block (FP32 reads
+    /// its payload as `&[f32]` in place, so mixed-precision stream
+    /// layouts must start its head slabs on 4-byte boundaries).
+    fn row_align(&self) -> usize {
+        1
+    }
+
+    /// Encode one row into `bytes_per_row(row.len())` raw page bytes
+    /// (quantize for integer codecs, bit-exact copy for FP32).
+    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]);
+
+    /// Decode one row of raw page bytes back to f32.
+    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]);
+
+    /// Fused dequant·dot of `q` against `out.len()` consecutive rows
+    /// stored raw in `blk`: `out[r] = Σ_ch q[ch] · roŵ[r][ch]`, channels
+    /// ascending. `scratch` is a reusable O(d) buffer for codecs that
+    /// must unpack a row before dotting (INT4); others ignore it.
+    fn dot_rows(
+        &self,
+        variant: Variant,
+        q: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        scratch: &mut Vec<f32>,
+        out: &mut [f32],
+    );
+
+    /// Fused softmax·V accumulation over `w.len()` raw rows:
+    /// `acc[ch] += Σ_r w[r] · roŵ[r][ch]`, rows ascending per channel.
+    fn accumulate_rows(
+        &self,
+        variant: Variant,
+        w: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        scratch: &mut Vec<f32>,
+        acc: &mut [f32],
+    );
+}
+
+/// FP32 passthrough codec (baseline precision; 4 bytes/element).
+pub struct Fp32Codec;
+/// Per-channel symmetric INT8 (the paper's core algorithm).
+pub struct Int8Codec;
+/// Per-channel symmetric INT4, two nibbles per byte (§8.1 extension).
+pub struct Int4Codec;
+
+/// The canonical codec instances (stateless — share freely).
+pub static FP32: Fp32Codec = Fp32Codec;
+pub static INT8: Int8Codec = Int8Codec;
+pub static INT4: Int4Codec = Int4Codec;
+
+/// Reinterpret raw page bytes as i8 (alignment-free). Shared with the
+/// cache's typed `StreamView` accessors so the unsafe reinterpret logic
+/// lives in exactly one place.
+#[inline]
+pub(crate) fn as_i8(raw: &[u8]) -> &[i8] {
+    // SAFETY: i8 and u8 have identical layout and 1-byte alignment.
+    unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const i8, raw.len()) }
+}
+
+#[inline]
+fn as_i8_mut(raw: &mut [u8]) -> &mut [i8] {
+    // SAFETY: as above.
+    unsafe { std::slice::from_raw_parts_mut(raw.as_mut_ptr() as *mut i8, raw.len()) }
+}
+
+/// Reinterpret raw page bytes as f32 rows. Pool blocks are 4-byte
+/// multiples for FP32 streams and the slab base comes from a `Vec<u8>`
+/// heap allocation, so the pointer is f32-aligned in practice; the
+/// debug assert pins that assumption.
+#[inline]
+pub(crate) fn as_f32(raw: &[u8]) -> &[f32] {
+    debug_assert_eq!(raw.len() % 4, 0);
+    debug_assert_eq!(raw.as_ptr() as usize % std::mem::align_of::<f32>(), 0);
+    // SAFETY: length and alignment checked above; any bit pattern is a
+    // valid f32.
+    unsafe { std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4) }
+}
+
+impl Codec for Fp32Codec {
+    fn name(&self) -> &'static str {
+        "fp32"
+    }
+
+    fn qmax(&self) -> f32 {
+        QMAX
+    }
+
+    fn bytes_per_row(&self, d: usize) -> usize {
+        d * 4
+    }
+
+    fn row_align(&self) -> usize {
+        4
+    }
+
+    fn encode_row(&self, row: &[f32], _scales: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(out.len(), row.len() * 4);
+        for (dst, v) in out.chunks_exact_mut(4).zip(row) {
+            dst.copy_from_slice(&v.to_ne_bytes());
+        }
+    }
+
+    fn decode_row(&self, bytes: &[u8], _scales: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(bytes.len(), out.len() * 4);
+        for (src, v) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+            *v = f32::from_ne_bytes([src[0], src[1], src[2], src[3]]);
+        }
+    }
+
+    fn dot_rows(
+        &self,
+        _variant: Variant,
+        q: &[f32],
+        blk: &[u8],
+        _scales: &[f32],
+        _scratch: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        attn::dot_rows_f32(q, as_f32(blk), out);
+    }
+
+    fn accumulate_rows(
+        &self,
+        _variant: Variant,
+        w: &[f32],
+        blk: &[u8],
+        _scales: &[f32],
+        _scratch: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        attn::accumulate_rows_f32(w, as_f32(blk), acc);
+    }
+}
+
+impl Codec for Int8Codec {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn qmax(&self) -> f32 {
+        QMAX
+    }
+
+    fn bytes_per_row(&self, d: usize) -> usize {
+        d
+    }
+
+    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]) {
+        quantize_row_into(row, scales, as_i8_mut(out));
+    }
+
+    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+        for ((o, &b), &s) in out.iter_mut().zip(as_i8(bytes)).zip(scales) {
+            *o = b as f32 * s;
+        }
+    }
+
+    fn dot_rows(
+        &self,
+        variant: Variant,
+        q: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        _scratch: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        attn::dot_rows_i8(variant, q, as_i8(blk), scales, out);
+    }
+
+    fn accumulate_rows(
+        &self,
+        variant: Variant,
+        w: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        _scratch: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        attn::accumulate_rows_i8(variant, w, as_i8(blk), scales, acc);
+    }
+}
+
+impl Int4Codec {
+    #[inline]
+    fn ensure_scratch(scratch: &mut Vec<f32>, d: usize) {
+        if scratch.len() < d {
+            scratch.resize(d, 0.0);
+        }
+    }
+}
+
+impl Codec for Int4Codec {
+    fn name(&self) -> &'static str {
+        "int4"
+    }
+
+    fn qmax(&self) -> f32 {
+        Q4MAX
+    }
+
+    fn bytes_per_row(&self, d: usize) -> usize {
+        d.div_ceil(2)
+    }
+
+    fn supports_staged(&self) -> bool {
+        false
+    }
+
+    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]) {
+        quantize4_row_into(row, scales, out);
+    }
+
+    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+        dequantize4_row_into(bytes, scales, out);
+    }
+
+    fn dot_rows(
+        &self,
+        _variant: Variant,
+        q: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        scratch: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
+        let d = q.len();
+        let bpr = self.bytes_per_row(d);
+        debug_assert_eq!(blk.len(), out.len() * bpr, "slab shape mismatch");
+        Self::ensure_scratch(scratch, d);
+        for (r, o) in out.iter_mut().enumerate() {
+            dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+            let mut dot = 0.0f32;
+            for ch in 0..d {
+                dot += q[ch] * scratch[ch];
+            }
+            *o = dot;
+        }
+    }
+
+    fn accumulate_rows(
+        &self,
+        _variant: Variant,
+        w: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        scratch: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        let d = acc.len();
+        let bpr = self.bytes_per_row(d);
+        debug_assert_eq!(blk.len(), w.len() * bpr, "slab shape mismatch");
+        Self::ensure_scratch(scratch, d);
+        for (r, &wr) in w.iter().enumerate() {
+            dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+            for ch in 0..d {
+                acc[ch] += wr * scratch[ch];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::matrix::Fp32Matrix;
+    use crate::quant::quantize::quantize_fused;
+    use crate::quant::{int4, scales};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_and_layout_are_the_canonical_constants() {
+        assert_eq!(INT8.qmax(), crate::QMAX);
+        assert_eq!(INT4.qmax(), int4::Q4MAX);
+        assert_eq!(FP32.qmax(), crate::QMAX, "fp32 keeps the legacy scale grid");
+        assert_eq!(FP32.bytes_per_row(9), 36);
+        assert_eq!(INT8.bytes_per_row(9), 9);
+        assert_eq!(INT4.bytes_per_row(9), 5, "odd rows pad to a whole byte");
+        assert_eq!(INT4.bytes_per_row(8), 4);
+        assert!(FP32.supports_staged() && INT8.supports_staged());
+        assert!(!INT4.supports_staged(), "packed nibbles have no dense staging ABI");
+    }
+
+    #[test]
+    fn int8_encode_matches_quantize_row_into() {
+        let k = Fp32Matrix::random_uniform(4, 11, -2.0, 2.0, 0xC0);
+        let s = scales::compute_scales(&k);
+        for t in 0..k.rows {
+            let mut raw = vec![0u8; 11];
+            INT8.encode_row(k.row(t), &s, &mut raw);
+            let mut want = vec![0i8; 11];
+            crate::quant::quantize_row_into(k.row(t), &s, &mut want);
+            assert_eq!(as_i8(&raw), &want[..]);
+            // Round-trip through decode_row hits the same grid.
+            let mut rec = vec![0.0f32; 11];
+            INT8.decode_row(&raw, &s, &mut rec);
+            for (ch, &r) in rec.iter().enumerate() {
+                assert_eq!(r.to_bits(), (want[ch] as f32 * s[ch]).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fp32_encode_decode_is_bit_exact() {
+        let mut rng = Rng::new(9);
+        let mut row = vec![0.0f32; 7];
+        rng.fill_uniform(&mut row, -10.0, 10.0);
+        row[3] = -0.0;
+        let mut raw = vec![0u8; 28];
+        FP32.encode_row(&row, &[], &mut raw);
+        let mut back = vec![0.0f32; 7];
+        FP32.decode_row(&raw, &[], &mut back);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&row), bits(&back));
+    }
+
+    #[test]
+    fn int4_encode_decode_round_trips_the_nibble_grid() {
+        let k = Fp32Matrix::random_uniform(3, 10, -1.0, 1.0, 0x41);
+        let q = int4::quantize4(&k);
+        for t in 0..k.rows {
+            let mut raw = vec![0u8; 5];
+            INT4.encode_row(k.row(t), &q.scales, &mut raw);
+            assert_eq!(&raw[..], &q.data[t * 5..(t + 1) * 5], "row {t} packed bytes");
+            let mut rec = vec![0.0f32; 10];
+            INT4.decode_row(&raw, &q.scales, &mut rec);
+            for ch in 0..10 {
+                assert!((rec[ch] - k.at(t, ch)).abs() <= q.scales[ch] / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn codec_dot_rows_bit_identical_to_attn_kernels() {
+        // The dyn dispatch must be a pure delegation: same bits as calling
+        // the fused kernels (INT8), the f32 twins, or a decode-then-dot
+        // (INT4) directly.
+        let (rows, d) = (6usize, 16usize);
+        let k = Fp32Matrix::random_normal(rows, d, 1.0, 77);
+        let q8 = quantize_fused(&k);
+        let mut rng = Rng::new(78);
+        let mut q = vec![0.0f32; d];
+        rng.fill_uniform(&mut q, -1.0, 1.0);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let raw8: Vec<u8> = q8.data.iter().map(|&v| v as u8).collect();
+        let mut scratch = Vec::new();
+        for v in Variant::ALL {
+            let mut want = vec![0.0f32; rows];
+            attn::dot_rows_i8(v, &q, &q8.data, &q8.scales, &mut want);
+            let mut got = vec![0.0f32; rows];
+            INT8.dot_rows(v, &q, &raw8, &q8.scales, &mut scratch, &mut got);
+            assert_eq!(bits(&got), bits(&want), "int8 {v:?}");
+        }
+
+        let mut w = vec![0.0f32; rows];
+        rng.fill_uniform(&mut w, 0.0, 1.0);
+        let mut want_acc = vec![0.0f32; d];
+        attn::accumulate_rows_i8(Variant::Vectorized, &w, &q8.data, &q8.scales, &mut want_acc);
+        let mut got_acc = vec![0.0f32; d];
+        INT8.accumulate_rows(
+            Variant::Vectorized,
+            &w,
+            &raw8,
+            &q8.scales,
+            &mut scratch,
+            &mut got_acc,
+        );
+        assert_eq!(bits(&got_acc), bits(&want_acc));
+
+        // FP32: raw bytes of the float slab.
+        let raw32: Vec<u8> = k.data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let mut want32 = vec![0.0f32; rows];
+        attn::dot_rows_f32(&q, &k.data, &mut want32);
+        let mut got32 = vec![0.0f32; rows];
+        FP32.dot_rows(Variant::Naive, &q, &raw32, &[], &mut scratch, &mut got32);
+        assert_eq!(bits(&got32), bits(&want32));
+
+        // INT4: fused == decode_row-then-dot, channel order preserved.
+        let q4 = int4::quantize4(&k);
+        let mut got4 = vec![0.0f32; rows];
+        INT4.dot_rows(Variant::Naive, &q, &q4.data, &q4.scales, &mut scratch, &mut got4);
+        let mut row = vec![0.0f32; d];
+        for r in 0..rows {
+            int4::dequantize4_row_into(&q4.data[r * d / 2..(r + 1) * d / 2], &q4.scales, &mut row);
+            let mut dot = 0.0f32;
+            for ch in 0..d {
+                dot += q[ch] * row[ch];
+            }
+            assert_eq!(got4[r].to_bits(), dot.to_bits(), "int4 row {r}");
+        }
+    }
+
+    #[test]
+    fn int4_scratch_grows_on_demand_and_is_reusable() {
+        let k = Fp32Matrix::random_uniform(2, 8, -1.0, 1.0, 5);
+        let q4 = int4::quantize4(&k);
+        let mut scratch = Vec::new(); // deliberately unsized
+        let mut out = vec![0.0f32; 2];
+        INT4.dot_rows(Variant::Naive, &[1.0; 8], &q4.data, &q4.scales, &mut scratch, &mut out);
+        assert!(scratch.len() >= 8);
+        let mut acc = vec![0.0f32; 8];
+        INT4.accumulate_rows(
+            Variant::Naive,
+            &[0.5, 0.5],
+            &q4.data,
+            &q4.scales,
+            &mut scratch,
+            &mut acc,
+        );
+        assert!(acc.iter().any(|&v| v != 0.0));
+    }
+}

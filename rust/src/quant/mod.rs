@@ -26,6 +26,7 @@
 //! zero-scale columns quantize to 0.
 
 pub mod attn;
+pub mod codec;
 pub mod dequantize;
 pub mod error;
 pub mod int4;
@@ -35,6 +36,7 @@ pub mod scales;
 pub mod tensorwise;
 
 pub use attn::{accumulate_rows_i8, dot_i8, dot_rows_i8};
+pub use codec::Codec;
 pub use dequantize::{dequantize, dequantize_into, dequantize_parallel};
 pub use error::{attention_score_error, l2_error, max_abs_error, value_output_error};
 pub use matrix::{Fp32Matrix, Int8Matrix};

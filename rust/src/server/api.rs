@@ -62,13 +62,17 @@ pub fn error_response(msg: &str) -> Json {
     obj([("error", msg.into())])
 }
 
-/// `GET /config` body: the effective serving configuration — the resolved
+/// `GET /config` body: the effective serving configuration — the cache
+/// quantization policy (`quant_policy`; `precision` keeps the legacy
+/// shorthand: the uniform precision name, or "mixed"), the resolved
 /// `parallelism` worker count of the quantization runtime, the
 /// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`),
 /// and the decode data path (`attention_kernel` fused-kernel variant +
 /// whether zero-copy `paged_decode` is active).
+#[allow(clippy::too_many_arguments)]
 pub fn config_response(
     model: &str,
+    quant_policy: &str,
     precision: &str,
     backend: &str,
     parallelism: usize,
@@ -80,6 +84,7 @@ pub fn config_response(
 ) -> Json {
     obj([
         ("model", model.into()),
+        ("quant_policy", quant_policy.into()),
         ("precision", precision.into()),
         ("backend", backend.into()),
         ("parallelism", parallelism.into()),
@@ -127,7 +132,8 @@ mod tests {
     fn config_response_shape() {
         let j = config_response(
             "kvq-3m",
-            "int8",
+            "k8v4",
+            "mixed",
             "cpu",
             4,
             "optimistic",
@@ -137,6 +143,8 @@ mod tests {
             8080,
         );
         assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
+        assert_eq!(j.get("quant_policy").as_str(), Some("k8v4"));
+        assert_eq!(j.get("precision").as_str(), Some("mixed"));
         assert_eq!(j.get("parallelism").as_usize(), Some(4));
         assert_eq!(j.get("admission_mode").as_str(), Some("optimistic"));
         assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(512));

@@ -98,14 +98,17 @@ mod tests {
     use super::*;
     use crate::coordinator::engine::{self, EngineConfig};
     use crate::coordinator::router::RoutePolicy;
-    use crate::kvcache::Precision;
+    use crate::kvcache::{PolicySpec, Precision};
     use crate::model::runner::CpuBackend;
     use crate::model::weights::Weights;
     use crate::model::ModelSpec;
 
     fn service() -> (KvqService, crate::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
         let (h, join) = engine::spawn(
-            EngineConfig { precision: Precision::Int8, ..Default::default() },
+            EngineConfig {
+                quant_policy: PolicySpec::uniform(Precision::Int8),
+                ..Default::default()
+            },
             || {
                 let spec = ModelSpec::test_tiny();
                 let w = Weights::synthetic(&spec, 7);
@@ -165,6 +168,7 @@ mod tests {
         let (mut svc, h, join) = service();
         svc.info = crate::server::api::config_response(
             "test-tiny",
+            "uniform:int8",
             "int8",
             "cpu",
             2,

@@ -7,7 +7,7 @@
 //! graph), and L3 (Rust cache manager + runtime) implement the same model.
 
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{Precision, QuantPolicy};
 use kvq::model::runner::{CpuBackend, DecodeKernel};
 use kvq::model::weights::Weights;
 use kvq::model::{LmBackend, PjrtBackend};
@@ -85,10 +85,10 @@ fn int8_decode_matches_cpu_oracle() {
         max_seq: spec.max_seq,
         block_size: spec.block_size,
         num_blocks: 4096,
-        precision: Precision::Int8,
         scale_margin: 1.0,
     };
-    let mut mgr = KvCacheManager::new(cfg);
+    let mut mgr =
+        KvCacheManager::new(cfg, QuantPolicy::uniform(Precision::Int8, cfg.layers, cfg.heads));
     let id = mgr.new_sequence();
     mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
 
@@ -210,10 +210,12 @@ fn greedy_generation_trajectories_agree() {
             max_seq: spec.max_seq,
             block_size: spec.block_size,
             num_blocks: 4096,
-            precision: Precision::Int8,
             scale_margin: 1.0,
         };
-        let mut mgr = KvCacheManager::new(cfg);
+        let mut mgr = KvCacheManager::new(
+            cfg,
+            QuantPolicy::uniform(Precision::Int8, cfg.layers, cfg.heads),
+        );
         let id = mgr.new_sequence();
         let pre = backend.prefill(&prompt, prompt.len()).unwrap();
         mgr.set_prefill(id, &pre.k, &pre.v, prompt.len()).unwrap();

@@ -17,7 +17,7 @@ use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::collect_response;
 use kvq::coordinator::router::{RoutePolicy, Router};
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{PolicySpec, Precision, QuantPolicy};
 use kvq::model::runner::CpuBackend;
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
@@ -89,7 +89,7 @@ fn nan_inputs_identical_across_all_paths() {
     }
 }
 
-fn cache_cfg(precision: Precision) -> CacheConfig {
+fn cache_cfg() -> CacheConfig {
     CacheConfig {
         layers: 3,
         heads: 2,
@@ -97,9 +97,12 @@ fn cache_cfg(precision: Precision) -> CacheConfig {
         max_seq: 48,
         block_size: 4,
         num_blocks: 512,
-        precision,
         scale_margin: 1.0,
     }
+}
+
+fn cache_mgr(c: CacheConfig, precision: Precision) -> KvCacheManager {
+    KvCacheManager::new(c, QuantPolicy::uniform(precision, c.layers, c.heads))
 }
 
 fn prefill_tensors(c: &CacheConfig, len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
@@ -126,15 +129,15 @@ fn cache_manager_parallel_prefill_gather_identical() {
     for precision in [Precision::Int8, Precision::Fp32] {
         // Lengths covering: one block, partial tail, exact block multiple.
         for len in [3usize, 17, 32] {
-            let c = cache_cfg(precision);
+            let c = cache_cfg();
             let (k, v) = prefill_tensors(&c, len, 0xC0FE ^ len as u64);
 
-            let mut serial = KvCacheManager::new(c);
+            let mut serial = cache_mgr(c, precision);
             let sid = serial.new_sequence();
             serial.set_prefill(sid, &k, &v, len).unwrap();
 
             for threads in SWEEP {
-                let mut par = KvCacheManager::new(c);
+                let mut par = cache_mgr(c, precision);
                 par.set_parallelism(threads);
                 par.set_parallel_threshold(0); // force fan-out at test size
                 let pid = par.new_sequence();
@@ -184,7 +187,7 @@ fn engine_generations_identical_across_parallelism() {
     // a serial engine and one running decode waves with 8 workers.
     let gen_tokens = |parallelism: usize| -> Vec<Vec<i32>> {
         let cfg = EngineConfig {
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(Precision::Int8),
             parallelism,
             ..Default::default()
         };
@@ -232,10 +235,9 @@ fn paged_decode_bit_identical_to_staged_across_variants_and_threads() {
                 max_seq: s,
                 block_size: spec.block_size,
                 num_blocks: 256,
-                precision: Precision::Int8,
                 scale_margin: 1.0,
             };
-            let mut mgr = KvCacheManager::new(cfg);
+            let mut mgr = cache_mgr(cfg, Precision::Int8);
             mgr.set_parallelism(threads);
             mgr.set_parallel_threshold(0);
             let id = mgr.new_sequence();
@@ -276,7 +278,7 @@ fn engine_paged_and_staged_generations_identical() {
     // at thread counts 1/2/8.
     let gen_tokens = |paged: bool, kernel: Variant, parallelism: usize| -> Vec<Vec<i32>> {
         let cfg = EngineConfig {
-            precision: Precision::Int8,
+            quant_policy: PolicySpec::uniform(Precision::Int8),
             parallelism,
             paged_decode: paged,
             attention_kernel: kernel,
@@ -307,4 +309,131 @@ fn engine_paged_and_staged_generations_identical() {
         }
     }
     assert!(staged.iter().all(|t| t.len() == 5));
+}
+
+#[test]
+fn uniform_policy_presets_bit_identical_across_kernels_and_threads() {
+    // The uniform:* presets ARE the legacy --precision paths. For each of
+    // fp32/int8/int4, engines must emit identical token streams across
+    // all four attention kernels and threads {1, 2, 8}; the staging-
+    // capable presets (fp32/int8) must also match their legacy staged
+    // (dense artifact-layout) path bit-for-bit.
+    let run = |policy: PolicySpec, paged: bool, kernel: Variant, threads: usize| {
+        let cfg = EngineConfig {
+            quant_policy: policy,
+            paged_decode: paged,
+            attention_kernel: kernel,
+            parallelism: threads,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(cfg, cpu_factory());
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("eng", h.clone());
+        let mut streams = Vec::new();
+        for i in 0..3 {
+            let prompt = vec![i as i32 + 2, 9, 4];
+            let (_, rx) = router.submit(prompt, 4, SamplingParams::default()).unwrap();
+            streams.push(rx);
+        }
+        let out: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+        h.drain();
+        join.join().unwrap();
+        out
+    };
+    for precision in [Precision::Fp32, Precision::Int8, Precision::Int4] {
+        let policy = PolicySpec::uniform(precision);
+        let reference = run(policy.clone(), true, Variant::Vectorized, 1);
+        assert!(reference.iter().all(|t| t.len() == 4), "{precision:?} runs end-to-end");
+        for threads in SWEEP {
+            for kernel in Variant::ALL {
+                assert_eq!(
+                    run(policy.clone(), true, kernel, threads),
+                    reference,
+                    "uniform:{precision:?} diverged ({kernel:?} x{threads})"
+                );
+            }
+        }
+        if precision != Precision::Int4 {
+            assert_eq!(
+                run(policy.clone(), false, Variant::Vectorized, 1),
+                reference,
+                "uniform:{precision:?} staged path diverged from paged"
+            );
+        }
+    }
+}
+
+#[test]
+fn uniform_policy_metrics_pin_the_legacy_cache_byte_formulas() {
+    // `GET /metrics` cache byte counts for the uniform presets must equal
+    // the pre-refactor closed forms: a staged decode step books
+    // 2·bytes(L·H·S·d) payload + 2·L·H·d·4 scale bytes; a paged step
+    // books the O(len) in-place read volume. One deterministic request
+    // (prompt 3, max_new 4 → decode steps at pos 3, 4, 5) pins both.
+    let spec = ModelSpec::test_tiny();
+    let (l, h, d, s) = (spec.layers, spec.heads, spec.head_dim, spec.max_seq);
+    let run = |paged: bool| {
+        let cfg = EngineConfig {
+            quant_policy: PolicySpec::uniform(Precision::Int8),
+            paged_decode: paged,
+            ..Default::default()
+        };
+        let (hdl, join) = engine::spawn(cfg, cpu_factory());
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", hdl.clone());
+        let (_, rx) = router.submit(vec![1, 2, 3], 4, SamplingParams::default()).unwrap();
+        let (tokens, ..) = collect_response(&rx);
+        assert_eq!(tokens.len(), 4);
+        hdl.drain();
+        join.join().unwrap();
+        hdl.metrics.snapshot()
+    };
+
+    let staged = run(false);
+    assert_eq!(staged.decode_steps, 3);
+    let staged_step = 2 * (l * h * s * d) + 2 * (l * h * d * 4);
+    assert_eq!(staged.cache_bytes_read, (3 * staged_step) as u64, "staged formula");
+
+    let paged = run(true);
+    assert_eq!(paged.decode_steps, 3);
+    assert_eq!(paged.policy, "uniform:int8", "policy name surfaces in metrics");
+    let per_pos = |pos: usize| 2 * l * (h * pos * d + h * d * 4);
+    let want: usize = [3usize, 4, 5].iter().map(|&p| per_pos(p)).sum();
+    assert_eq!(paged.cache_bytes_read, want as u64, "paged O(len) formula");
+}
+
+#[test]
+fn mixed_policy_generations_deterministic_across_kernels_and_threads() {
+    // k8v4 and sink8 have no legacy twin, but the same invariant must
+    // hold: kernel variant and parallelism never change generated tokens.
+    for policy in [PolicySpec::K8V4, PolicySpec::Sink8 { sink_layers: 1 }] {
+        let run = |kernel: Variant, threads: usize| {
+            let cfg = EngineConfig {
+                quant_policy: policy.clone(),
+                parallelism: threads,
+                attention_kernel: kernel,
+                ..Default::default()
+            };
+            let (h, join) = engine::spawn(cfg, cpu_factory());
+            let mut router = Router::new(RoutePolicy::RoundRobin);
+            router.add_engine("eng", h.clone());
+            let (_, rx) = router.submit(vec![5, 1, 7], 5, SamplingParams::default()).unwrap();
+            let out = collect_response(&rx).0;
+            h.drain();
+            join.join().unwrap();
+            out
+        };
+        let reference = run(Variant::Vectorized, 1);
+        assert_eq!(reference.len(), 5, "{} serves end-to-end", policy.name());
+        for threads in SWEEP {
+            for kernel in Variant::ALL {
+                assert_eq!(
+                    run(kernel, threads),
+                    reference,
+                    "{} diverged ({kernel:?} x{threads})",
+                    policy.name()
+                );
+            }
+        }
+    }
 }

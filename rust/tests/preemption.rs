@@ -13,7 +13,7 @@ use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::{collect_response, FinishReason};
 use kvq::coordinator::router::{RoutePolicy, Router};
 use kvq::coordinator::{EngineHandle, MetricsSnapshot};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{PolicySpec, Precision};
 use kvq::model::runner::CpuBackend;
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
@@ -35,7 +35,7 @@ fn engine_with(
     max_prefills: usize,
 ) -> (EngineHandle, std::thread::JoinHandle<()>) {
     let cfg = EngineConfig {
-        precision: Precision::Int8,
+        quant_policy: PolicySpec::uniform(Precision::Int8),
         num_blocks,
         prefix_cache_blocks,
         batcher: BatcherConfig {

@@ -4,7 +4,7 @@
 //! failures shrink and report a reproduction seed (KVQ_PROP_SEED).
 
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{Precision, QuantPolicy};
 use kvq::quant::{self, Fp32Matrix, Int8Matrix, Variant};
 use kvq::util::json::Json;
 use kvq::util::prop::{check, ensure, ensure_close};
@@ -227,10 +227,11 @@ fn prop_kvcache_block_conservation() {
             max_seq: 32,
             block_size: [4, 8, 16][g.usize_in(0..3)],
             num_blocks: 512,
-            precision: if g.bool() { Precision::Int8 } else { Precision::Fp32 },
             scale_margin: 1.0,
         };
-        let mut mgr = KvCacheManager::new(cfg);
+        let precision = if g.bool() { Precision::Int8 } else { Precision::Fp32 };
+        let mut mgr =
+            KvCacheManager::new(cfg, QuantPolicy::uniform(precision, cfg.layers, cfg.heads));
         let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
         let kc: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
         let row = vec![0.5f32; cfg.layers * cfg.heads * cfg.head_dim];
@@ -293,10 +294,10 @@ fn prop_fork_prefix_immutability() {
             max_seq: 32,
             block_size: 4,
             num_blocks: 256,
-            precision: Precision::Int8,
             scale_margin: 1.0,
         };
-        let mut mgr = KvCacheManager::new(cfg);
+        let mut mgr =
+            KvCacheManager::new(cfg, QuantPolicy::uniform(Precision::Int8, cfg.layers, cfg.heads));
         let n = cfg.layers * cfg.heads * cfg.max_seq * cfg.head_dim;
         let kc: Vec<f32> = (0..n).map(|i| (((i * 31) % 17) as f32 - 8.0) / 8.0).collect();
         let len = 1 + g.usize_in(0..20);

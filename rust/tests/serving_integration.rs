@@ -5,7 +5,7 @@ use kvq::coordinator::batcher::BatcherConfig;
 use kvq::coordinator::engine::{self, EngineConfig};
 use kvq::coordinator::request::{collect_response, FinishReason};
 use kvq::coordinator::router::{RoutePolicy, Router};
-use kvq::kvcache::Precision;
+use kvq::kvcache::{PolicySpec, Precision};
 use kvq::model::runner::CpuBackend;
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
@@ -20,7 +20,11 @@ fn cpu_factory() -> impl FnOnce() -> anyhow::Result<Box<dyn kvq::model::LmBacken
 }
 
 fn default_engine(precision: Precision) -> EngineConfig {
-    EngineConfig { precision, ..Default::default() }
+    EngineConfig { quant_policy: PolicySpec::uniform(precision), ..Default::default() }
+}
+
+fn policy_engine(policy: PolicySpec) -> EngineConfig {
+    EngineConfig { quant_policy: policy, ..Default::default() }
 }
 
 #[test]
@@ -171,6 +175,10 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
     // (1/14)/(1/254) ≈ 18x coarser than INT8, so INT4 decode logits may
     // drift from the FP32 oracle by at most ~that factor of the measured
     // INT8 drift (generous margin for softmax/layer amplification).
+    // The mixed policies must land inside the same frontier: k8v4 keeps
+    // keys at INT8 so its drift sits at or below the uniform-int4 bound,
+    // and sink8's fp32 sink layer keeps it at or below uniform int8's
+    // error scale.
     use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
     use kvq::model::CpuModel;
     use kvq::model::ModelSpec as Spec;
@@ -183,7 +191,7 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
     let pre = model.prefill(&tokens, n);
     let (l32, ..) = model.decode_f32(tokens[n], n, &pre.k, &pre.v);
 
-    let decode_at = |precision: Precision| -> Vec<f32> {
+    let decode_at = |policy: PolicySpec| -> Vec<f32> {
         let cfg = CacheConfig {
             layers: spec.layers,
             heads: spec.heads,
@@ -191,10 +199,10 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
             max_seq: spec.max_seq,
             block_size: spec.block_size,
             num_blocks: 256,
-            precision,
             scale_margin: 1.0,
         };
-        let mut mgr = KvCacheManager::new(cfg);
+        let resolved = policy.resolve(cfg.layers, cfg.heads, cfg.head_dim).unwrap();
+        let mut mgr = KvCacheManager::new(cfg, resolved);
         let id = mgr.new_sequence();
         mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
         let view = mgr.view(id).unwrap();
@@ -204,13 +212,87 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
     let max_diff = |a: &[f32], b: &[f32]| {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
     };
-    let diff8 = max_diff(&decode_at(Precision::Int8), &l32);
-    let diff4 = max_diff(&decode_at(Precision::Int4), &l32);
+    let diff8 = max_diff(&decode_at(PolicySpec::Uniform(Precision::Int8)), &l32);
+    let diff4 = max_diff(&decode_at(PolicySpec::Uniform(Precision::Int4)), &l32);
     assert!(diff4 > 0.0, "int4 quantization noise must register");
     assert!(
         diff4 <= 40.0 * diff8.max(1e-4) + 0.1,
         "int4 drift {diff4} exceeds the paper-style bound (int8 drift {diff8})"
     );
+    // k8v4: value-output error from the INT4 V side, attention scores
+    // still INT8-grade — bounded by the uniform int4 frontier.
+    let diffk = max_diff(&decode_at(PolicySpec::K8V4), &l32);
+    assert!(diffk > 0.0, "k8v4 quantization noise must register");
+    assert!(
+        diffk <= 40.0 * diff8.max(1e-4) + 0.1,
+        "k8v4 drift {diffk} exceeds the paper-style fp32-relative bound"
+    );
+    assert!(
+        diffk <= diff4 * 1.5 + 1e-3,
+        "k8v4 ({diffk}) should not be materially worse than uniform int4 ({diff4})"
+    );
+    // sink8 on a 2-layer model keeps layer 0 exact: drift comes from
+    // layer 1's INT8 cache only.
+    let diffs = max_diff(&decode_at(PolicySpec::Sink8 { sink_layers: 1 }), &l32);
+    assert!(
+        diffs <= diff8 * 1.5 + 1e-3,
+        "sink8 ({diffs}) should track the int8 error scale ({diff8})"
+    );
+}
+
+#[test]
+fn k8v4_policy_serves_end_to_end() {
+    // The headline mixed policy (keys INT8 / values INT4) must serve
+    // through the paged path: requests complete, generation is
+    // deterministic, and the per-precision cache byte split shows both
+    // codecs live in one cache.
+    let (h, join) = engine::spawn(policy_engine(PolicySpec::K8V4), cpu_factory());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("k8v4", h.clone());
+    let mut streams = Vec::new();
+    for i in 0..3 {
+        let (_, rx) = router.submit(vec![i + 2, 6, 1], 4, SamplingParams::default()).unwrap();
+        streams.push(rx);
+    }
+    for rx in &streams {
+        let (tokens, reason, ..) = collect_response(rx);
+        assert_eq!(reason, FinishReason::Length, "k8v4 decode failed");
+        assert_eq!(tokens.len(), 4);
+    }
+    h.drain();
+    join.join().unwrap();
+    let snap = h.metrics.snapshot();
+    assert_eq!(snap.requests_finished, 3);
+    assert_eq!(snap.policy, "k8v4");
+
+    // Determinism: same prompt, same greedy tokens, twice.
+    let (h2, j2) = engine::spawn(policy_engine(PolicySpec::K8V4), cpu_factory());
+    let mut r2 = Router::new(RoutePolicy::RoundRobin);
+    r2.add_engine("k8v4", h2.clone());
+    let (_, rxa) = r2.submit(vec![2, 6, 1], 4, SamplingParams::default()).unwrap();
+    let (ta, ..) = collect_response(&rxa);
+    let (_, rxb) = r2.submit(vec![2, 6, 1], 4, SamplingParams::default()).unwrap();
+    let (tb, ..) = collect_response(&rxb);
+    assert_eq!(ta, tb);
+    h2.drain();
+    j2.join().unwrap();
+}
+
+#[test]
+fn non_staging_policies_require_paged_decode() {
+    // The generalized fail-fast: any policy without a dense staging ABI
+    // (k8v4 here) is rejected at engine init when paged decode is off —
+    // same contract the INT4-only special case used to enforce.
+    let cfg = EngineConfig { paged_decode: false, ..policy_engine(PolicySpec::K8V4) };
+    let (h, join) = engine::spawn(cfg, cpu_factory());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("k8v4", h.clone());
+    let (_, rx) = router.submit(vec![1, 2], 2, SamplingParams::default()).unwrap();
+    let (tokens, reason, ..) = collect_response(&rx);
+    assert!(tokens.is_empty());
+    assert!(matches!(reason, FinishReason::Rejected(_)), "{reason:?}");
+    h.drain();
+    join.join().unwrap();
 }
 
 #[test]
