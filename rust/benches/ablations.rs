@@ -14,6 +14,10 @@
 //!     (zero-copy paged decode) vs dequantize-then-dot, across the four
 //!     kernel variants (runs in --smoke: the CI artifact carries the
 //!     kernel sweep)
+//! A10. kernel_backend: the runtime-dispatched SIMD backend (AVX2/NEON)
+//!     vs the four scalar variants on the fused INT8 dot + softmax·V
+//!     accumulation at d ∈ {64, 128, 4096} (runs in --smoke — the perf
+//!     trajectory records real numbers per push)
 //!
 //! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
 //! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
@@ -297,6 +301,127 @@ fn main() -> anyhow::Result<()> {
             );
         }
         kvq::bench::figures::emit(&t9, "ablation_a9_fused_attention");
+    }
+
+    // A10: kernel backend — runtime-dispatched SIMD vs the four scalar
+    // variants on the fused INT8 dot and softmax·V accumulation. The
+    // scalar rows dispatch through the same layer with Isa::Scalar, so
+    // the contrast isolates the backend, not the call path.
+    {
+        use kvq::quant::simd::{self, Isa, KernelBackend};
+        let simd_isa = KernelBackend::Simd.resolve();
+        report.env("kernel_isa", simd_isa.name().into());
+        let mut t10 = Table::new(
+            "A10 — kernel_backend: scalar variants vs runtime-dispatched SIMD (fused INT8)",
+            &["d", "kernel", "score median", "accumulate median", "vs scalar vectorized"],
+        );
+        for d in [64usize, 128, 4096] {
+            let rows = match (d, smoke) {
+                (4096, true) => 64,
+                (4096, false) => 256,
+                (_, true) => 512,
+                (_, false) => 2048,
+            };
+            let kmat = Fp32Matrix::random_normal(rows, d, 1.0, 0xA10 ^ d as u64);
+            let q8 = quant::quantize_fused(&kmat);
+            let mut qrow = vec![0.0f32; d];
+            let mut w = vec![0.0f32; rows];
+            {
+                let mut rng = kvq::util::rng::Rng::new(0x10A ^ d as u64);
+                rng.fill_uniform(&mut qrow, -1.0, 1.0);
+                rng.fill_uniform(&mut w, 0.0, 1.0 / rows as f32);
+            }
+            let mut scores = vec![0.0f32; rows];
+            let mut acc = vec![0.0f32; d];
+            let mut base_vectorized = 0.0f64;
+            for v in Variant::ALL {
+                let ms = bencher.measure(v.name(), || {
+                    simd::dot_rows_i8(
+                        Isa::Scalar,
+                        v,
+                        &qrow,
+                        &q8.data,
+                        &q8.scales,
+                        &mut scores,
+                    );
+                });
+                let ma = bencher.measure(v.name(), || {
+                    acc.fill(0.0);
+                    simd::accumulate_rows_i8(
+                        Isa::Scalar,
+                        v,
+                        &w,
+                        &q8.data,
+                        &q8.scales,
+                        &mut acc,
+                    );
+                });
+                if v == Variant::Vectorized {
+                    base_vectorized = ms.median();
+                }
+                t10.row(&[
+                    d.to_string(),
+                    format!("scalar {}", v.name()),
+                    cell_time(ms.median()),
+                    cell_time(ma.median()),
+                    "-".into(),
+                ]);
+                report.add(
+                    "a10_kernel_backend",
+                    &format!("scalar_{}", v.name()),
+                    Some(ms.median()),
+                    &[
+                        ("d", Json::Num(d as f64)),
+                        ("rows", Json::Num(rows as f64)),
+                        ("accumulate_median_s", Json::Num(ma.median())),
+                    ],
+                );
+            }
+            let ms = bencher.measure("simd", || {
+                simd::dot_rows_i8(
+                    simd_isa,
+                    Variant::Vectorized,
+                    &qrow,
+                    &q8.data,
+                    &q8.scales,
+                    &mut scores,
+                );
+            });
+            let ma = bencher.measure("simd", || {
+                acc.fill(0.0);
+                simd::accumulate_rows_i8(
+                    simd_isa,
+                    Variant::Vectorized,
+                    &w,
+                    &q8.data,
+                    &q8.scales,
+                    &mut acc,
+                );
+            });
+            t10.row(&[
+                d.to_string(),
+                format!("simd ({})", simd_isa.name()),
+                cell_time(ms.median()),
+                cell_time(ma.median()),
+                format!("{:.2}x", base_vectorized / ms.median()),
+            ]);
+            report.add(
+                "a10_kernel_backend",
+                "simd",
+                Some(ms.median()),
+                &[
+                    ("d", Json::Num(d as f64)),
+                    ("rows", Json::Num(rows as f64)),
+                    ("isa", simd_isa.name().into()),
+                    ("accumulate_median_s", Json::Num(ma.median())),
+                    (
+                        "speedup_vs_scalar_vectorized",
+                        Json::Num(base_vectorized / ms.median()),
+                    ),
+                ],
+            );
+        }
+        kvq::bench::figures::emit(&t10, "ablation_a10_kernel_backend");
     }
 
     // A5 + A7 need the runtime.

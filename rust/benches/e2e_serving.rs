@@ -32,6 +32,7 @@ use kvq::model::runner::{CpuBackend, DecodeKernel, PjrtBackend};
 use kvq::model::sample::SamplingParams;
 use kvq::model::weights::Weights;
 use kvq::model::ModelSpec;
+use kvq::quant::simd::KernelBackend;
 use kvq::runtime::Runtime;
 use kvq::util::args::Args;
 use kvq::util::harness::{cell_f, cell_time, Table};
@@ -194,10 +195,12 @@ fn overload_scenario(
     Ok(())
 }
 
-/// Staged vs zero-copy paged decode on the CPU oracle backend: identical
-/// workload and (asserted) identical tokens; the contrast is decode
-/// ns/token and cache bytes touched per token — the "before/after" of the
-/// block-native fused attention refactor (section `decode_path`).
+/// Staged vs zero-copy paged decode on the CPU oracle backend, plus the
+/// kernel-backend contrast: the scalar pair pins the pre-SIMD data path
+/// (asserted bit-identical tokens), the simd pair demonstrates the
+/// per-backend determinism contract (byte-identical across reruns) and
+/// records the SIMD decode ns/token. Every `decode_path` entry carries
+/// `kernel_backend` (the knob) and `kernel_isa` (what it resolved to).
 fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::Result<()> {
     let spec = ModelSpec::test_tiny();
     let prompt_len = spec.block_size;
@@ -211,10 +214,17 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
         11,
     );
     let mut outputs: Vec<Vec<Vec<i32>>> = Vec::new();
-    for (label, paged) in [("staged", false), ("paged", true)] {
+    let runs = [
+        ("staged", false, KernelBackend::Scalar),
+        ("paged", true, KernelBackend::Scalar),
+        ("paged_simd", true, KernelBackend::Simd),
+        ("paged_simd_rerun", true, KernelBackend::Simd),
+    ];
+    for (label, paged, kb) in runs {
         let ecfg = EngineConfig {
             quant_policy: PolicySpec::uniform(Precision::Int8),
             paged_decode: paged,
+            kernel_backend: kb,
             ..Default::default()
         };
         let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
@@ -234,6 +244,8 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
             label,
             None,
             &[
+                ("kernel_backend", kb.name().into()),
+                ("kernel_isa", kb.resolve().name().into()),
                 ("decode_ns_per_token", Json::Num(snap.decode_ns_per_token())),
                 ("gather_secs", Json::Num(snap.gather_secs)),
                 ("attend_secs", Json::Num(snap.attend_secs)),
@@ -243,8 +255,9 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
             ],
         );
         println!(
-            "[decode_path/{label}] {:.0} ns/token decode ({:.0} gathered + {:.0} attended µs \
-             total), {:.0} cache bytes/token",
+            "[decode_path/{label}:{}] {:.0} ns/token decode ({:.0} gathered + {:.0} attended \
+             µs total), {:.0} cache bytes/token",
+            kb.name(),
             snap.decode_ns_per_token(),
             snap.gather_secs * 1e6,
             snap.attend_secs * 1e6,
@@ -252,8 +265,15 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
         );
         outputs.push(tokens);
     }
-    assert_eq!(outputs[0], outputs[1], "paged decode must be bit-identical to the staged path");
-    println!("[decode_path] staged and paged token streams identical ✓");
+    assert_eq!(
+        outputs[0], outputs[1],
+        "scalar paged decode must be bit-identical to the scalar staged path (pre-SIMD bytes)"
+    );
+    assert_eq!(
+        outputs[2], outputs[3],
+        "simd decode must be byte-identical across reruns (per-backend contract)"
+    );
+    println!("[decode_path] scalar staged==paged and simd rerun identity hold ✓");
     Ok(())
 }
 

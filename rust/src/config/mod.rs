@@ -14,6 +14,7 @@ use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::kvcache::{PolicySpec, Precision};
 use crate::model::runner::DecodeKernel;
+use crate::quant::simd::KernelBackend;
 use crate::quant::Variant;
 use crate::util::args::Args;
 use crate::util::json::Json;
@@ -73,6 +74,12 @@ pub struct ServeConfig {
     /// (default true; PJRT always stages regardless). `false` forces the
     /// legacy gather-into-staging decode.
     pub paged_decode: bool,
+    /// Kernel backend for the host-side hot loops (`auto|scalar|simd`,
+    /// `KVQ_KERNEL_BACKEND` env override). `auto` dispatches to the best
+    /// ISA the CPU reports (AVX2 on x86_64, NEON on aarch64); `scalar`
+    /// reproduces legacy bytes exactly. The selected ISA shows up at
+    /// `GET /metrics` as `kernel_isa`.
+    pub kernel_backend: KernelBackend,
 }
 
 impl Default for ServeConfig {
@@ -93,6 +100,7 @@ impl Default for ServeConfig {
             prefix_cache_blocks: 0,
             attention_kernel: Variant::Vectorized,
             paged_decode: true,
+            kernel_backend: KernelBackend::Auto,
         }
     }
 }
@@ -165,6 +173,10 @@ impl ServeConfig {
         if let Some(v) = j.get("paged_decode").as_bool() {
             self.paged_decode = v;
         }
+        if let Some(v) = j.get("kernel_backend").as_str() {
+            self.kernel_backend = KernelBackend::parse(v)
+                .ok_or_else(|| anyhow!("bad kernel_backend {v:?} (auto|scalar|simd)"))?;
+        }
         if let Some(v) = j.get("max_running").as_usize() {
             self.batcher.admission.max_running = v;
         }
@@ -235,6 +247,10 @@ impl ServeConfig {
                 _ => return Err(anyhow!("bad --paged-decode {v:?} (true|false)")),
             };
         }
+        if let Some(v) = args.get("kernel-backend") {
+            self.kernel_backend = KernelBackend::parse(v)
+                .ok_or_else(|| anyhow!("bad --kernel-backend {v:?} (auto|scalar|simd)"))?;
+        }
         self.batcher.admission.max_running =
             args.usize_or("max-running", self.batcher.admission.max_running);
         self.batcher.max_prefills_per_step =
@@ -257,6 +273,7 @@ impl ServeConfig {
             prefix_cache_blocks: self.prefix_cache_blocks,
             attention_kernel: self.attention_kernel,
             paged_decode: self.paged_decode,
+            kernel_backend: self.kernel_backend,
         }
     }
 
@@ -368,6 +385,22 @@ mod tests {
         assert!(c.apply_json(&Json::parse(r#"{"backend":"tpu"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"admission_mode":"psychic"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"attention_kernel":"warp"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"kernel_backend":"warp"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn kernel_backend_knob_round_trips() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.kernel_backend, KernelBackend::Auto, "auto is the default");
+        c.apply_json(&Json::parse(r#"{"kernel_backend":"scalar"}"#).unwrap()).unwrap();
+        assert_eq!(c.kernel_backend, KernelBackend::Scalar);
+        assert_eq!(c.engine_config().kernel_backend, KernelBackend::Scalar);
+        // CLI wins over the file.
+        let args = Args::parse_from(["--kernel-backend", "simd"].iter().map(|s| s.to_string()));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.kernel_backend, KernelBackend::Simd);
+        let bad = Args::parse_from(["--kernel-backend", "avx9"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use crate::kvcache::{PolicySpec, PrefixCache, QuantPolicy, StagedKind};
 use crate::model::sample;
 use crate::model::LmBackend;
 use crate::parallel;
+use crate::quant::simd::{Isa, KernelBackend};
 use crate::quant::Variant;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -94,6 +95,16 @@ pub struct EngineConfig {
     /// kept for PJRT (which requires it regardless) and for before/after
     /// benchmarking.
     pub paged_decode: bool,
+    /// Kernel backend for the host-side fused attention and cache
+    /// encode/decode hot loops: `auto` (default) picks the best ISA the
+    /// CPU reports (AVX2 / NEON), `scalar` forces the legacy kernels
+    /// (bit-identical to pre-backend outputs), `simd` requests SIMD and
+    /// degrades to scalar when the host has none. Resolved once at init;
+    /// the selected ISA is reported at `GET /metrics` (`kernel_isa`).
+    /// Same backend + same threads ⇒ byte-identical tokens; scalar vs
+    /// SIMD may differ within f32 accumulation error (score-pass sum
+    /// order — see `quant::simd`).
+    pub kernel_backend: KernelBackend,
 }
 
 impl Default for EngineConfig {
@@ -109,6 +120,7 @@ impl Default for EngineConfig {
             prefix_cache_blocks: 0,
             attention_kernel: Variant::Vectorized,
             paged_decode: true,
+            kernel_backend: KernelBackend::Auto,
         }
     }
 }
@@ -296,6 +308,9 @@ struct Engine {
     /// Bytes one staged decode copies out of the pool (payload + scales)
     /// — the O(max_seq) volume the paged path eliminates.
     staged_cache_bytes: usize,
+    /// Resolved kernel ISA (`cfg.kernel_backend` + `KVQ_KERNEL_BACKEND`
+    /// env override against the host's CPU features).
+    isa: Isa,
     rng: Rng,
 }
 
@@ -333,13 +348,16 @@ impl Engine {
         );
         let threads = parallel::resolve(cfg.parallelism);
         cache.set_parallelism(threads);
+        let isa = cfg.kernel_backend.resolve();
+        cache.set_kernel_isa(isa);
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
         let paged = cfg.paged_decode && backend.supports_paged_decode();
         metrics.set_policy(&policy_name);
+        metrics.set_kernel_isa(isa.name());
         crate::info!(
             "engine up: model={} policy={} blocks={} cache={:.1} MiB threads={} \
-             admission={} prefix_cache_blocks={} decode={} kernel={}",
+             admission={} prefix_cache_blocks={} decode={} kernel={} backend={} isa={}",
             spec.name,
             policy_name,
             num_blocks,
@@ -348,7 +366,9 @@ impl Engine {
             cfg.batcher.admission.mode.name(),
             cfg.prefix_cache_blocks,
             if paged { "paged" } else { "staged" },
-            cfg.attention_kernel.name()
+            cfg.attention_kernel.name(),
+            cfg.kernel_backend.name(),
+            isa.name()
         );
         Engine {
             backend,
@@ -369,6 +389,7 @@ impl Engine {
             },
             paged,
             staged_cache_bytes,
+            isa,
             cfg,
         }
     }
@@ -620,7 +641,16 @@ impl Engine {
             let (dec, bytes) = {
                 let view = self.cache.view(seq)?;
                 let bytes = view.attention_bytes();
-                (self.backend.decode_paged(token, pos, &view, self.cfg.attention_kernel)?, bytes)
+                (
+                    self.backend.decode_paged(
+                        token,
+                        pos,
+                        &view,
+                        self.cfg.attention_kernel,
+                        self.isa,
+                    )?,
+                    bytes,
+                )
             };
             self.metrics.on_decode(0.0, attend_t0.elapsed().as_secs_f64(), bytes);
             return self.cache.append_row(seq, &dec.k_new, &dec.v_new);
@@ -637,11 +667,11 @@ impl Engine {
         let dec = match kind {
             StagedKind::I8 => {
                 let st = &self.staging[0];
-                self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
+                self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs, self.isa)?
             }
             StagedKind::F32 => {
                 let st = &self.staging[0];
-                self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
+                self.backend.decode_f32(token, pos, &st.k32, &st.v32, self.isa)?
             }
         };
         self.metrics.on_decode(
@@ -754,7 +784,13 @@ impl Engine {
             None => {
                 let view = self.cache.view(seq)?;
                 let bytes = view.attention_bytes();
-                let dec = self.backend.decode_paged(token, pos, &view, self.cfg.attention_kernel)?;
+                let dec = self.backend.decode_paged(
+                    token,
+                    pos,
+                    &view,
+                    self.cfg.attention_kernel,
+                    self.isa,
+                )?;
                 (dec, bytes)
             }
             Some(i) => {
@@ -763,11 +799,12 @@ impl Engine {
                 let dec = match kind {
                     StagedKind::I8 => {
                         let st = &self.staging[i];
-                        self.backend.decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs)?
+                        self.backend
+                            .decode_i8(token, pos, &st.kq, &st.ks, &st.vq, &st.vs, self.isa)?
                     }
                     StagedKind::F32 => {
                         let st = &self.staging[i];
-                        self.backend.decode_f32(token, pos, &st.k32, &st.v32)?
+                        self.backend.decode_f32(token, pos, &st.k32, &st.v32, self.isa)?
                     }
                 };
                 (dec, self.staged_cache_bytes)

@@ -71,6 +71,9 @@ struct Inner {
     running_peak: usize,
     /// Active quantization policy name (set once at engine init).
     policy: String,
+    /// Resolved kernel ISA name (set once at engine init: the concrete
+    /// instruction set the `kernel_backend` knob dispatched to).
+    kernel_isa: String,
 }
 
 /// Cloneable handle.
@@ -107,12 +110,20 @@ impl Metrics {
             gauges: StepGauges::default(),
             running_peak: 0,
             policy: String::new(),
+            kernel_isa: String::new(),
         })))
     }
 
     /// Record the engine's quantization policy (shown at `GET /metrics`).
     pub fn set_policy(&self, name: &str) {
         self.0.lock().unwrap().policy = name.to_string();
+    }
+
+    /// Record the resolved kernel ISA (shown at `GET /metrics` as
+    /// `kernel_isa` — which instruction set the `kernel_backend` knob
+    /// actually selected on this host).
+    pub fn set_kernel_isa(&self, name: &str) {
+        self.0.lock().unwrap().kernel_isa = name.to_string();
     }
 
     pub fn on_submit(&self) {
@@ -214,6 +225,7 @@ impl Metrics {
             preempted: m.gauges.preempted,
             cache_payload_bytes: m.gauges.cache_payload_bytes,
             policy: m.policy.clone(),
+            kernel_isa: m.kernel_isa.clone(),
         }
     }
 }
@@ -263,6 +275,8 @@ pub struct MetricsSnapshot {
     pub cache_payload_bytes: [u64; 3],
     /// Active quantization policy name.
     pub policy: String,
+    /// Resolved kernel ISA name (`scalar` | `avx2` | `neon`).
+    pub kernel_isa: String,
 }
 
 impl MetricsSnapshot {
@@ -323,6 +337,7 @@ impl MetricsSnapshot {
             ("waiting", self.waiting.into()),
             ("preempted", self.preempted.into()),
             ("quant_policy", self.policy.as_str().into()),
+            ("kernel_isa", self.kernel_isa.as_str().into()),
             ("cache_bytes_fp32", (self.cache_payload_bytes[0] as usize).into()),
             ("cache_bytes_int8", (self.cache_payload_bytes[1] as usize).into()),
             ("cache_bytes_int4", (self.cache_payload_bytes[2] as usize).into()),
@@ -409,6 +424,7 @@ mod tests {
     fn snapshot_serializes() {
         let m = Metrics::new();
         m.set_policy("k8v4");
+        m.set_kernel_isa("avx2");
         m.on_step(
             0.01,
             StepGauges {
@@ -426,6 +442,7 @@ mod tests {
         );
         let j = m.snapshot().to_json();
         assert_eq!(j.get("quant_policy").as_str(), Some("k8v4"));
+        assert_eq!(j.get("kernel_isa").as_str(), Some("avx2"));
         assert_eq!(j.get("cache_bytes_fp32").as_usize(), Some(0));
         assert_eq!(j.get("cache_bytes_int8").as_usize(), Some(4096));
         assert_eq!(j.get("cache_bytes_int4").as_usize(), Some(2048));

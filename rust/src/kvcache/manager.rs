@@ -64,6 +64,7 @@ use super::pool::{BlockId, BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
 use crate::parallel::{self, SendPtr};
+use crate::quant::simd::{self, Isa};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
@@ -128,6 +129,11 @@ pub struct KvCacheManager {
     threads: usize,
     /// Work-size floor before fanning out (see [`PAR_MIN_ELEMS`]).
     par_min: usize,
+    /// Resolved kernel ISA for the row encode (cache-writer) paths.
+    /// Encoded bytes are bit-identical across backends (the SIMD writers
+    /// keep the scalar rounding semantics — `quant::simd` module docs),
+    /// so this only affects speed, never stored content.
+    isa: Isa,
 }
 
 impl KvCacheManager {
@@ -160,6 +166,7 @@ impl KvCacheManager {
             next_id: 1,
             threads: 1,
             par_min: PAR_MIN_ELEMS,
+            isa: simd::default_isa(),
         }
     }
 
@@ -171,6 +178,18 @@ impl KvCacheManager {
 
     pub fn parallelism(&self) -> usize {
         self.threads
+    }
+
+    /// Set the resolved kernel ISA for the encode paths (the engine
+    /// resolves its `kernel_backend` knob and pushes it here; direct
+    /// constructions default to `KernelBackend::Auto` via
+    /// [`simd::default_isa`]).
+    pub fn set_kernel_isa(&mut self, isa: Isa) {
+        self.isa = isa;
+    }
+
+    pub fn kernel_isa(&self) -> Isa {
+        self.isa
     }
 
     /// Override the minimum work size before parallel fan-out (tests and
@@ -492,6 +511,7 @@ impl KvCacheManager {
         let (l, h, d, bs) =
             (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
         let nblocks = BlockTable::blocks_for(len, bs);
+        let isa = self.isa;
         for layer in 0..l {
             for (kv, data) in [k, v].into_iter().enumerate() {
                 let layout = self.layouts[layer][kv].clone();
@@ -513,7 +533,7 @@ impl KvCacheManager {
                             for r in 0..rows_here {
                                 let pos = bi * bs + r;
                                 let src = &data[base + pos * d..base + (pos + 1) * d];
-                                codec.encode_row(src, sc, &mut blk[layout.row_range(head, r)]);
+                                codec.encode_row(isa, src, sc, &mut blk[layout.row_range(head, r)]);
                             }
                         }
                     }
@@ -595,7 +615,7 @@ impl KvCacheManager {
             let codec = layout.head_codec(head);
             let src = &row[head * d..(head + 1) * d];
             let sc = &scales[head * d..(head + 1) * d];
-            codec.encode_row(src, sc, &mut blk[layout.row_range(head, in_row)]);
+            codec.encode_row(self.isa, src, sc, &mut blk[layout.row_range(head, in_row)]);
         }
         Ok(())
     }

@@ -74,6 +74,11 @@ COMMANDS:
              --paged-decode true|false (zero-copy block-native decode
                when the backend supports it; default true. int4 serving
                requires it + --backend cpu)
+             --kernel-backend auto|scalar|simd (SIMD kernel backend for
+               the fused attention + cache encode hot loops; auto picks
+               AVX2/NEON at runtime, scalar reproduces legacy bytes.
+               KVQ_KERNEL_BACKEND env overrides; selected ISA at
+               GET /metrics \"kernel_isa\")
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -165,6 +170,7 @@ fn serve(args: Args) -> Result<()> {
         cfg.prefix_cache_blocks,
         cfg.attention_kernel.name(),
         cfg.paged_decode,
+        cfg.kernel_backend.name(),
         server.local_port(),
     );
     let service = Arc::new(KvqService::with_info(Arc::new(router), info));

@@ -24,7 +24,8 @@
 use super::spec::ModelSpec;
 use super::weights::Weights;
 use crate::kvcache::manager::CacheView;
-use crate::quant::{attn, Variant};
+use crate::quant::simd::{self, Isa};
+use crate::quant::Variant;
 
 /// y += x @ w, where x: (m,), w: (m, n) row-major, y: (n,).
 fn matvec_acc(x: &[f32], w: &[f32], n: usize, y: &mut [f32]) {
@@ -212,6 +213,7 @@ impl CpuModel {
         k_scales: &[f32],
         vq: &[i8],
         v_scales: &[f32],
+        isa: Isa,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let sp = &self.spec;
         let cache = StagedI8Cache {
@@ -223,6 +225,7 @@ impl CpuModel {
             max_seq: sp.max_seq,
             head_dim: sp.head_dim,
             variant: Variant::Naive,
+            isa,
         };
         self.decode_cached(token, pos, &cache)
     }
@@ -234,10 +237,17 @@ impl CpuModel {
         pos: usize,
         k: &[f32],
         v: &[f32],
+        isa: Isa,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let sp = &self.spec;
-        let cache =
-            StagedF32Cache { k, v, heads: sp.heads, max_seq: sp.max_seq, head_dim: sp.head_dim };
+        let cache = StagedF32Cache {
+            k,
+            v,
+            heads: sp.heads,
+            max_seq: sp.max_seq,
+            head_dim: sp.head_dim,
+            isa,
+        };
         self.decode_cached(token, pos, &cache)
     }
 
@@ -252,6 +262,7 @@ impl CpuModel {
         pos: usize,
         view: &CacheView,
         variant: Variant,
+        isa: Isa,
     ) -> anyhow::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
         let sp = &self.spec;
         anyhow::ensure!(
@@ -265,7 +276,7 @@ impl CpuModel {
                 && view.head_dim() == sp.head_dim,
             "cache geometry does not match model spec"
         );
-        Ok(self.decode_cached(token, pos, &PagedCache::new(view, variant)))
+        Ok(self.decode_cached(token, pos, &PagedCache::new(view, variant, isa)))
     }
 
     /// The decode core: one transformer step whose attention reads K/V
@@ -389,6 +400,8 @@ pub struct StagedI8Cache<'a> {
     pub max_seq: usize,
     pub head_dim: usize,
     pub variant: Variant,
+    /// Resolved kernel backend (scalar variants or explicit SIMD).
+    pub isa: Isa,
 }
 
 impl StagedI8Cache<'_> {
@@ -410,13 +423,13 @@ impl CacheAccess for StagedI8Cache<'_> {
     fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
         let slab = self.slab(self.kq, layer, head, scores.len());
         let sc = self.head_scales(self.k_scales, layer, head);
-        attn::dot_rows_i8(self.variant, q, slab, sc, scores);
+        simd::dot_rows_i8(self.isa, self.variant, q, slab, sc, scores);
     }
 
     fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
         let slab = self.slab(self.vq, layer, head, w.len());
         let sc = self.head_scales(self.v_scales, layer, head);
-        attn::accumulate_rows_i8(self.variant, w, slab, sc, acc);
+        simd::accumulate_rows_i8(self.isa, self.variant, w, slab, sc, acc);
     }
 }
 
@@ -427,19 +440,21 @@ pub struct StagedF32Cache<'a> {
     pub heads: usize,
     pub max_seq: usize,
     pub head_dim: usize,
+    /// Resolved kernel backend.
+    pub isa: Isa,
 }
 
 impl CacheAccess for StagedF32Cache<'_> {
     fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
         let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
         let base = (layer * h + head) * s * d;
-        attn::dot_rows_f32(q, &self.k[base..base + scores.len() * d], scores);
+        simd::dot_rows_f32(self.isa, q, &self.k[base..base + scores.len() * d], scores);
     }
 
     fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
         let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
         let base = (layer * h + head) * s * d;
-        attn::accumulate_rows_f32(w, &self.v[base..base + w.len() * d], acc);
+        simd::accumulate_rows_f32(self.isa, w, &self.v[base..base + w.len() * d], acc);
     }
 }
 
@@ -454,6 +469,7 @@ impl CacheAccess for StagedF32Cache<'_> {
 pub struct PagedCache<'a> {
     view: &'a CacheView<'a>,
     variant: Variant,
+    isa: Isa,
     /// O(d) row scratch for codecs that unpack before dotting (INT4),
     /// grown on first use and reused across every (layer, head) call.
     /// `CacheAccess` reads are `&self` on one thread, so a `RefCell`
@@ -462,8 +478,8 @@ pub struct PagedCache<'a> {
 }
 
 impl<'a> PagedCache<'a> {
-    pub fn new(view: &'a CacheView<'a>, variant: Variant) -> PagedCache<'a> {
-        PagedCache { view, variant, scratch: std::cell::RefCell::new(Vec::new()) }
+    pub fn new(view: &'a CacheView<'a>, variant: Variant, isa: Isa) -> PagedCache<'a> {
+        PagedCache { view, variant, isa, scratch: std::cell::RefCell::new(Vec::new()) }
     }
 }
 
@@ -478,7 +494,15 @@ impl CacheAccess for PagedCache<'_> {
         for bi in 0..stream.num_blocks() {
             let rows = stream.rows_in_block(bi);
             let slab = stream.head_rows_raw(bi, head);
-            codec.dot_rows(self.variant, q, slab, sc, &mut scratch, &mut scores[t0..t0 + rows]);
+            codec.dot_rows(
+                self.isa,
+                self.variant,
+                q,
+                slab,
+                sc,
+                &mut scratch,
+                &mut scores[t0..t0 + rows],
+            );
             t0 += rows;
         }
     }
@@ -492,7 +516,15 @@ impl CacheAccess for PagedCache<'_> {
         for bi in 0..stream.num_blocks() {
             let rows = stream.rows_in_block(bi);
             let slab = stream.head_rows_raw(bi, head);
-            codec.accumulate_rows(self.variant, &w[t0..t0 + rows], slab, sc, &mut scratch, acc);
+            codec.accumulate_rows(
+                self.isa,
+                self.variant,
+                &w[t0..t0 + rows],
+                slab,
+                sc,
+                &mut scratch,
+                acc,
+            );
             t0 += rows;
         }
     }
@@ -578,7 +610,8 @@ mod tests {
             let pre = m.prefill(&tokens, n);
             let (kq, ks) = quantize_cache(&m.spec, &pre.k, n);
             let (vq, vs) = quantize_cache(&m.spec, &pre.v, n);
-            let (logits, _, _) = m.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs);
+            let (logits, _, _) =
+                m.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs, simd::default_isa());
             let argmax_full =
                 full.logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
             let argmax_dec =
@@ -601,7 +634,7 @@ mod tests {
         let n = 6;
         let full = m.prefill(&tokens, n + 1);
         let pre = m.prefill(&tokens, n);
-        let (logits, _, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v);
+        let (logits, _, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v, simd::default_isa());
         let max_diff = logits
             .iter()
             .zip(&full.logits)
@@ -617,7 +650,7 @@ mod tests {
         let n = 5;
         let full = m.prefill(&tokens, n + 1);
         let pre = m.prefill(&tokens, n);
-        let (_, k_new, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v);
+        let (_, k_new, _) = m.decode_f32(tokens[n], n, &pre.k, &pre.v, simd::default_isa());
         // Layer-0 K row at position n matches (deeper layers see residual
         // differences only via cache precision — fp32 here, so all match).
         let sp = &m.spec;

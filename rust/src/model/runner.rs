@@ -11,6 +11,7 @@ use super::cpu_ref::CpuModel;
 use super::spec::ModelSpec;
 use super::weights::Weights;
 use crate::kvcache::manager::CacheView;
+use crate::quant::simd::Isa;
 use crate::quant::Variant;
 use crate::runtime::{HostTensor, Runtime};
 use anyhow::{anyhow, bail, Context, Result};
@@ -39,6 +40,9 @@ pub trait LmBackend {
     fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult>;
 
     /// Single-token decode over the INT8 cache (artifact layouts).
+    /// `isa` is the resolved kernel backend for host-side attention
+    /// kernels; device backends (PJRT) ignore it.
+    #[allow(clippy::too_many_arguments)]
     fn decode_i8(
         &self,
         token: i32,
@@ -47,10 +51,18 @@ pub trait LmBackend {
         k_scales: &[f32],
         vq: &[i8],
         v_scales: &[f32],
+        isa: Isa,
     ) -> Result<DecodeResult>;
 
     /// Single-token decode over the FP32 cache (baseline path).
-    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult>;
+    fn decode_f32(
+        &self,
+        token: i32,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+        isa: Isa,
+    ) -> Result<DecodeResult>;
 
     /// Can this backend attend directly over the paged cache
     /// ([`Self::decode_paged`])? Backends that can't — the PJRT artifacts
@@ -69,6 +81,7 @@ pub trait LmBackend {
         _pos: usize,
         _view: &CacheView,
         _kernel: Variant,
+        _isa: Isa,
     ) -> Result<DecodeResult> {
         bail!("backend does not support paged decode")
     }
@@ -106,13 +119,22 @@ impl LmBackend for CpuBackend {
         k_scales: &[f32],
         vq: &[i8],
         v_scales: &[f32],
+        isa: Isa,
     ) -> Result<DecodeResult> {
-        let (logits, k_new, v_new) = self.model.decode_i8(token, pos, kq, k_scales, vq, v_scales);
+        let (logits, k_new, v_new) =
+            self.model.decode_i8(token, pos, kq, k_scales, vq, v_scales, isa);
         Ok(DecodeResult { logits, k_new, v_new })
     }
 
-    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult> {
-        let (logits, k_new, v_new) = self.model.decode_f32(token, pos, k, v);
+    fn decode_f32(
+        &self,
+        token: i32,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+        isa: Isa,
+    ) -> Result<DecodeResult> {
+        let (logits, k_new, v_new) = self.model.decode_f32(token, pos, k, v, isa);
         Ok(DecodeResult { logits, k_new, v_new })
     }
 
@@ -126,8 +148,9 @@ impl LmBackend for CpuBackend {
         pos: usize,
         view: &CacheView,
         kernel: Variant,
+        isa: Isa,
     ) -> Result<DecodeResult> {
-        let (logits, k_new, v_new) = self.model.decode_paged(token, pos, view, kernel)?;
+        let (logits, k_new, v_new) = self.model.decode_paged(token, pos, view, kernel, isa)?;
         Ok(DecodeResult { logits, k_new, v_new })
     }
 }
@@ -254,6 +277,7 @@ impl LmBackend for PjrtBackend {
         k_scales: &[f32],
         vq: &[i8],
         v_scales: &[f32],
+        _isa: Isa,
     ) -> Result<DecodeResult> {
         let sp = &self.spec;
         let (l, h, s, d) = (sp.layers, sp.heads, sp.max_seq, sp.head_dim);
@@ -279,7 +303,14 @@ impl LmBackend for PjrtBackend {
         Ok(DecodeResult { logits, k_new, v_new })
     }
 
-    fn decode_f32(&self, token: i32, pos: usize, k: &[f32], v: &[f32]) -> Result<DecodeResult> {
+    fn decode_f32(
+        &self,
+        token: i32,
+        pos: usize,
+        k: &[f32],
+        v: &[f32],
+        _isa: Isa,
+    ) -> Result<DecodeResult> {
         let sp = &self.spec;
         let (l, h, s, d) = (sp.layers, sp.heads, sp.max_seq, sp.head_dim);
         let extra = vec![

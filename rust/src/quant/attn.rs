@@ -28,6 +28,13 @@
 //! legacy staged decode (`model::cpu_ref::decode_i8`), which is asserted
 //! by `tests/parallel_consistency.rs` and the §7.5-style proptests —
 //! the kernel knob can never change generated tokens.
+//!
+//! These are the **scalar** kernels — also the bit-identical fallback of
+//! the runtime-dispatched SIMD backend ([`super::simd`], the
+//! `kernel_backend` knob). The serial-order contract above is exactly
+//! what stops the autovectorizer from using packed sums here; the
+//! explicit AVX2/NEON kernels lift it (per-backend contract in the
+//! `simd` module docs).
 
 use super::quantize::TILE_DIM;
 use super::Variant;
@@ -46,21 +53,27 @@ pub fn dot_i8(variant: Variant, q: &[f32], row: &[i8], scales: &[f32]) -> f32 {
 /// `out[r] = Σ_ch q[ch] · (blk[r·d + ch] · s[ch])`.
 ///
 /// `blk` is read in place — no dequantized copy is materialized. All
-/// variants are bit-identical (module docs).
+/// variants are bit-identical (module docs). `#[inline]` so the codec
+/// layer's dyn dispatch doesn't block inlining of the inner loops.
+#[inline]
 pub fn dot_rows_i8(variant: Variant, q: &[f32], blk: &[i8], scales: &[f32], out: &mut [f32]) {
     let d = q.len();
     let rows = out.len();
-    debug_assert_eq!(blk.len(), rows * d, "slab shape mismatch");
+    // Hard assert (one compare per call): the chunks_exact row walk would
+    // silently truncate on a short slab where the old indexing panicked.
+    assert_eq!(blk.len(), rows * d, "slab shape mismatch");
     debug_assert_eq!(scales.len(), d, "scales shape mismatch");
     match variant {
         Variant::Naive => {
-            for r in 0..rows {
-                let row = &blk[r * d..(r + 1) * d];
+            // The row slice is hoisted (one bounds check per row); the
+            // scale stays a per-element load — that access pattern *is*
+            // Listing 5, so the paper listing permits no further hoist.
+            for (row, o) in blk.chunks_exact(d).zip(out.iter_mut()) {
                 let mut acc = 0.0f32;
                 for ch in 0..d {
                     acc += q[ch] * (row[ch] as f32 * scales[ch]);
                 }
-                out[r] = acc;
+                *o = acc;
             }
         }
         Variant::Tiled => {
@@ -92,31 +105,30 @@ pub fn dot_rows_i8(variant: Variant, q: &[f32], blk: &[i8], scales: &[f32], out:
             }
         }
         Variant::Vectorized => {
-            let chunks = d / 4;
-            for r in 0..rows {
-                let row = &blk[r * d..(r + 1) * d];
+            // chunks_exact slices instead of manual indexing: every
+            // bounds check vanishes and the products autovectorize.
+            // Serial adds keep the sum order identical to naive
+            // (bit-stability contract).
+            let tail = d / 4 * 4;
+            for (row, o) in blk.chunks_exact(d).zip(out.iter_mut()) {
                 let mut acc = 0.0f32;
-                for c in 0..chunks {
-                    let i = c * 4;
-                    let vals = [
-                        row[i] as f32,
-                        row[i + 1] as f32,
-                        row[i + 2] as f32,
-                        row[i + 3] as f32,
-                    ];
-                    let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
-                    // Serial adds keep the sum order identical to naive
-                    // (bit-stability contract); the array temporaries
-                    // still let the compiler vectorize the products.
-                    acc += q[i] * (vals[0] * ss[0]);
-                    acc += q[i + 1] * (vals[1] * ss[1]);
-                    acc += q[i + 2] * (vals[2] * ss[2]);
-                    acc += q[i + 3] * (vals[3] * ss[3]);
+                for ((r4, s4), q4) in row
+                    .chunks_exact(4)
+                    .zip(scales.chunks_exact(4))
+                    .zip(q.chunks_exact(4))
+                {
+                    let vals = [r4[0] as f32, r4[1] as f32, r4[2] as f32, r4[3] as f32];
+                    acc += q4[0] * (vals[0] * s4[0]);
+                    acc += q4[1] * (vals[1] * s4[1]);
+                    acc += q4[2] * (vals[2] * s4[2]);
+                    acc += q4[3] * (vals[3] * s4[3]);
                 }
-                for ch in chunks * 4..d {
-                    acc += q[ch] * (row[ch] as f32 * scales[ch]);
+                for ((&r, &s), &qv) in
+                    row[tail..].iter().zip(&scales[tail..]).zip(&q[tail..])
+                {
+                    acc += qv * (r as f32 * s);
                 }
-                out[r] = acc;
+                *o = acc;
             }
         }
     }
@@ -125,6 +137,7 @@ pub fn dot_rows_i8(variant: Variant, q: &[f32], blk: &[i8], scales: &[f32], out:
 /// Fused softmax·V accumulation over a quantized slab:
 /// `acc[ch] += Σ_r w[r] · (blk[r·d + ch] · s[ch])`, rows added in
 /// ascending order per channel (bit-stability contract).
+#[inline]
 pub fn accumulate_rows_i8(
     variant: Variant,
     w: &[f32],
@@ -134,7 +147,8 @@ pub fn accumulate_rows_i8(
 ) {
     let d = acc.len();
     let rows = w.len();
-    debug_assert_eq!(blk.len(), rows * d, "slab shape mismatch");
+    // Hard assert: see dot_rows_i8 (chunks_exact must not truncate).
+    assert_eq!(blk.len(), rows * d, "slab shape mismatch");
     debug_assert_eq!(scales.len(), d, "scales shape mismatch");
     match variant {
         Variant::Naive => {
@@ -173,26 +187,25 @@ pub fn accumulate_rows_i8(
             }
         }
         Variant::Vectorized => {
-            let chunks = d / 4;
-            for r in 0..rows {
-                let row = &blk[r * d..(r + 1) * d];
-                let wr = w[r];
-                for c in 0..chunks {
-                    let i = c * 4;
-                    let vals = [
-                        row[i] as f32,
-                        row[i + 1] as f32,
-                        row[i + 2] as f32,
-                        row[i + 3] as f32,
-                    ];
-                    let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
-                    acc[i] += wr * (vals[0] * ss[0]);
-                    acc[i + 1] += wr * (vals[1] * ss[1]);
-                    acc[i + 2] += wr * (vals[2] * ss[2]);
-                    acc[i + 3] += wr * (vals[3] * ss[3]);
+            // chunks_exact slices (see dot_rows_i8): bounds checks gone,
+            // per-channel adds independent — free to autovectorize.
+            let tail = d / 4 * 4;
+            for (row, &wr) in blk.chunks_exact(d).zip(w.iter()) {
+                for ((a4, r4), s4) in acc
+                    .chunks_exact_mut(4)
+                    .zip(row.chunks_exact(4))
+                    .zip(scales.chunks_exact(4))
+                {
+                    let vals = [r4[0] as f32, r4[1] as f32, r4[2] as f32, r4[3] as f32];
+                    a4[0] += wr * (vals[0] * s4[0]);
+                    a4[1] += wr * (vals[1] * s4[1]);
+                    a4[2] += wr * (vals[2] * s4[2]);
+                    a4[3] += wr * (vals[3] * s4[3]);
                 }
-                for ch in chunks * 4..d {
-                    acc[ch] += wr * (row[ch] as f32 * scales[ch]);
+                for ((a, &r), &s) in
+                    acc[tail..].iter_mut().zip(&row[tail..]).zip(&scales[tail..])
+                {
+                    *a += wr * (r as f32 * s);
                 }
             }
         }
@@ -201,6 +214,7 @@ pub fn accumulate_rows_i8(
 
 /// FP32 twin of [`dot_rows_i8`] (baseline cache precision — no scales,
 /// no variants: there is nothing to fuse).
+#[inline]
 pub fn dot_rows_f32(q: &[f32], blk: &[f32], out: &mut [f32]) {
     let d = q.len();
     debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
@@ -215,6 +229,7 @@ pub fn dot_rows_f32(q: &[f32], blk: &[f32], out: &mut [f32]) {
 }
 
 /// FP32 twin of [`accumulate_rows_i8`].
+#[inline]
 pub fn accumulate_rows_f32(w: &[f32], blk: &[f32], acc: &mut [f32]) {
     let d = acc.len();
     debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");

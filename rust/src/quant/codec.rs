@@ -16,9 +16,10 @@
 //!   route through it;
 //! * **readers** — [`Codec::decode_row`] unpacks one row, and the fused
 //!   [`Codec::dot_rows`]/[`Codec::accumulate_rows`] attend over a raw
-//!   slab **in place** in the paper's four kernel variants, delegating to
-//!   [`super::attn`] so every dispatch is bit-identical to the
-//!   pre-codec per-precision arms.
+//!   slab **in place**, delegating to the [`super::simd`] dispatch layer
+//!   (scalar fallback = the paper's four [`super::attn`] kernel
+//!   variants, bit-identical to the pre-codec per-precision arms; AVX2 /
+//!   NEON when the resolved `kernel_backend` selects them).
 //!
 //! Codecs are stateless: the canonical instances live in statics and are
 //! handed around as `&'static dyn Codec` (see
@@ -27,21 +28,27 @@
 //! what makes mixed-precision caches (keys INT8 / values INT4, FP32 sink
 //! layers, …) a table lookup instead of a cross-cutting refactor.
 
-use super::attn;
-use super::int4::{dequantize4_row_into, quantize4_row_into, Q4MAX};
-use super::quantize::quantize_row_into;
+use super::int4::Q4MAX;
+use super::simd::{self, Isa};
 use super::Variant;
 use crate::QMAX;
 
 /// One storage precision's full strategy: byte layout, scale grid,
 /// row encode/decode, and fused in-place attention reads.
 ///
-/// **Bit-stability contract.** `dot_rows`/`accumulate_rows` must compute
-/// the identical float expressions in the identical order as the
-/// [`super::attn`] kernels (INT8), the dense f32 twins (FP32), or the
-/// row-unpack loop (INT4) — swapping a cache between staged and paged
-/// access, or between codec dispatch and the old hand-written arms, can
-/// never change an output bit. Asserted by this module's tests and
+/// Every method takes the resolved kernel [`Isa`] and dispatches through
+/// [`super::simd`] — `Isa::Scalar` is the pre-backend code path, bit for
+/// bit.
+///
+/// **Bit-stability contract (per backend).** Under `Isa::Scalar`,
+/// `dot_rows`/`accumulate_rows` compute the identical float expressions
+/// in the identical order as the [`super::attn`] kernels (INT8), the
+/// dense f32 twins (FP32), or the row-unpack loop (INT4) — swapping a
+/// cache between staged and paged access, or between codec dispatch and
+/// the old hand-written arms, can never change an output bit. The SIMD
+/// backends keep encode/decode/accumulate bit-identical to scalar and
+/// reassociate only the score-pass dot (see the [`super::simd`] module
+/// docs). Asserted by this module's tests and
 /// `tests/parallel_consistency.rs`.
 pub trait Codec: Sync {
     /// Short name ("fp32" | "int8" | "int4").
@@ -76,10 +83,13 @@ pub trait Codec: Sync {
 
     /// Encode one row into `bytes_per_row(row.len())` raw page bytes
     /// (quantize for integer codecs, bit-exact copy for FP32).
-    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]);
+    /// The emitted bytes never depend on `isa` (per-backend contract:
+    /// encode is bit-identical across kernel backends).
+    fn encode_row(&self, isa: Isa, row: &[f32], scales: &[f32], out: &mut [u8]);
 
     /// Decode one row of raw page bytes back to f32.
-    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]);
+    /// Bit-identical across kernel backends.
+    fn decode_row(&self, isa: Isa, bytes: &[u8], scales: &[f32], out: &mut [f32]);
 
     /// Fused dequant·dot of `q` against `out.len()` consecutive rows
     /// stored raw in `blk`: `out[r] = Σ_ch q[ch] · roŵ[r][ch]`, channels
@@ -87,6 +97,7 @@ pub trait Codec: Sync {
     /// must unpack a row before dotting (INT4); others ignore it.
     fn dot_rows(
         &self,
+        isa: Isa,
         variant: Variant,
         q: &[f32],
         blk: &[u8],
@@ -99,6 +110,7 @@ pub trait Codec: Sync {
     /// `acc[ch] += Σ_r w[r] · roŵ[r][ch]`, rows ascending per channel.
     fn accumulate_rows(
         &self,
+        isa: Isa,
         variant: Variant,
         w: &[f32],
         blk: &[u8],
@@ -165,14 +177,14 @@ impl Codec for Fp32Codec {
         4
     }
 
-    fn encode_row(&self, row: &[f32], _scales: &[f32], out: &mut [u8]) {
+    fn encode_row(&self, _isa: Isa, row: &[f32], _scales: &[f32], out: &mut [u8]) {
         debug_assert_eq!(out.len(), row.len() * 4);
         for (dst, v) in out.chunks_exact_mut(4).zip(row) {
             dst.copy_from_slice(&v.to_ne_bytes());
         }
     }
 
-    fn decode_row(&self, bytes: &[u8], _scales: &[f32], out: &mut [f32]) {
+    fn decode_row(&self, _isa: Isa, bytes: &[u8], _scales: &[f32], out: &mut [f32]) {
         debug_assert_eq!(bytes.len(), out.len() * 4);
         for (src, v) in bytes.chunks_exact(4).zip(out.iter_mut()) {
             *v = f32::from_ne_bytes([src[0], src[1], src[2], src[3]]);
@@ -181,6 +193,7 @@ impl Codec for Fp32Codec {
 
     fn dot_rows(
         &self,
+        isa: Isa,
         _variant: Variant,
         q: &[f32],
         blk: &[u8],
@@ -188,11 +201,12 @@ impl Codec for Fp32Codec {
         _scratch: &mut Vec<f32>,
         out: &mut [f32],
     ) {
-        attn::dot_rows_f32(q, as_f32(blk), out);
+        simd::dot_rows_f32(isa, q, as_f32(blk), out);
     }
 
     fn accumulate_rows(
         &self,
+        isa: Isa,
         _variant: Variant,
         w: &[f32],
         blk: &[u8],
@@ -200,7 +214,7 @@ impl Codec for Fp32Codec {
         _scratch: &mut Vec<f32>,
         acc: &mut [f32],
     ) {
-        attn::accumulate_rows_f32(w, as_f32(blk), acc);
+        simd::accumulate_rows_f32(isa, w, as_f32(blk), acc);
     }
 }
 
@@ -217,18 +231,17 @@ impl Codec for Int8Codec {
         d
     }
 
-    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]) {
-        quantize_row_into(row, scales, as_i8_mut(out));
+    fn encode_row(&self, isa: Isa, row: &[f32], scales: &[f32], out: &mut [u8]) {
+        simd::quantize_row_into(isa, row, scales, as_i8_mut(out));
     }
 
-    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
-        for ((o, &b), &s) in out.iter_mut().zip(as_i8(bytes)).zip(scales) {
-            *o = b as f32 * s;
-        }
+    fn decode_row(&self, isa: Isa, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+        simd::dequantize_row_into(isa, as_i8(bytes), scales, out);
     }
 
     fn dot_rows(
         &self,
+        isa: Isa,
         variant: Variant,
         q: &[f32],
         blk: &[u8],
@@ -236,11 +249,12 @@ impl Codec for Int8Codec {
         _scratch: &mut Vec<f32>,
         out: &mut [f32],
     ) {
-        attn::dot_rows_i8(variant, q, as_i8(blk), scales, out);
+        simd::dot_rows_i8(isa, variant, q, as_i8(blk), scales, out);
     }
 
     fn accumulate_rows(
         &self,
+        isa: Isa,
         variant: Variant,
         w: &[f32],
         blk: &[u8],
@@ -248,16 +262,7 @@ impl Codec for Int8Codec {
         _scratch: &mut Vec<f32>,
         acc: &mut [f32],
     ) {
-        attn::accumulate_rows_i8(variant, w, as_i8(blk), scales, acc);
-    }
-}
-
-impl Int4Codec {
-    #[inline]
-    fn ensure_scratch(scratch: &mut Vec<f32>, d: usize) {
-        if scratch.len() < d {
-            scratch.resize(d, 0.0);
-        }
+        simd::accumulate_rows_i8(isa, variant, w, as_i8(blk), scales, acc);
     }
 }
 
@@ -278,16 +283,17 @@ impl Codec for Int4Codec {
         false
     }
 
-    fn encode_row(&self, row: &[f32], scales: &[f32], out: &mut [u8]) {
-        quantize4_row_into(row, scales, out);
+    fn encode_row(&self, isa: Isa, row: &[f32], scales: &[f32], out: &mut [u8]) {
+        simd::quantize4_row_into(isa, row, scales, out);
     }
 
-    fn decode_row(&self, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
-        dequantize4_row_into(bytes, scales, out);
+    fn decode_row(&self, isa: Isa, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+        simd::dequantize4_row_into(isa, bytes, scales, out);
     }
 
     fn dot_rows(
         &self,
+        isa: Isa,
         _variant: Variant,
         q: &[f32],
         blk: &[u8],
@@ -295,22 +301,12 @@ impl Codec for Int4Codec {
         scratch: &mut Vec<f32>,
         out: &mut [f32],
     ) {
-        let d = q.len();
-        let bpr = self.bytes_per_row(d);
-        debug_assert_eq!(blk.len(), out.len() * bpr, "slab shape mismatch");
-        Self::ensure_scratch(scratch, d);
-        for (r, o) in out.iter_mut().enumerate() {
-            dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
-            let mut dot = 0.0f32;
-            for ch in 0..d {
-                dot += q[ch] * scratch[ch];
-            }
-            *o = dot;
-        }
+        simd::dot_rows_i4(isa, q, blk, scales, scratch, out);
     }
 
     fn accumulate_rows(
         &self,
+        isa: Isa,
         _variant: Variant,
         w: &[f32],
         blk: &[u8],
@@ -318,22 +314,14 @@ impl Codec for Int4Codec {
         scratch: &mut Vec<f32>,
         acc: &mut [f32],
     ) {
-        let d = acc.len();
-        let bpr = self.bytes_per_row(d);
-        debug_assert_eq!(blk.len(), w.len() * bpr, "slab shape mismatch");
-        Self::ensure_scratch(scratch, d);
-        for (r, &wr) in w.iter().enumerate() {
-            dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
-            for ch in 0..d {
-                acc[ch] += wr * scratch[ch];
-            }
-        }
+        simd::accumulate_rows_i4(isa, w, blk, scales, scratch, acc);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::attn;
     use crate::quant::matrix::Fp32Matrix;
     use crate::quant::quantize::quantize_fused;
     use crate::quant::{int4, scales};
@@ -358,13 +346,13 @@ mod tests {
         let s = scales::compute_scales(&k);
         for t in 0..k.rows {
             let mut raw = vec![0u8; 11];
-            INT8.encode_row(k.row(t), &s, &mut raw);
+            INT8.encode_row(Isa::Scalar, k.row(t), &s, &mut raw);
             let mut want = vec![0i8; 11];
             crate::quant::quantize_row_into(k.row(t), &s, &mut want);
             assert_eq!(as_i8(&raw), &want[..]);
             // Round-trip through decode_row hits the same grid.
             let mut rec = vec![0.0f32; 11];
-            INT8.decode_row(&raw, &s, &mut rec);
+            INT8.decode_row(Isa::Scalar, &raw, &s, &mut rec);
             for (ch, &r) in rec.iter().enumerate() {
                 assert_eq!(r.to_bits(), (want[ch] as f32 * s[ch]).to_bits());
             }
@@ -378,9 +366,9 @@ mod tests {
         rng.fill_uniform(&mut row, -10.0, 10.0);
         row[3] = -0.0;
         let mut raw = vec![0u8; 28];
-        FP32.encode_row(&row, &[], &mut raw);
+        FP32.encode_row(Isa::Scalar, &row, &[], &mut raw);
         let mut back = vec![0.0f32; 7];
-        FP32.decode_row(&raw, &[], &mut back);
+        FP32.decode_row(Isa::Scalar, &raw, &[], &mut back);
         let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&row), bits(&back));
     }
@@ -391,10 +379,10 @@ mod tests {
         let q = int4::quantize4(&k);
         for t in 0..k.rows {
             let mut raw = vec![0u8; 5];
-            INT4.encode_row(k.row(t), &q.scales, &mut raw);
+            INT4.encode_row(Isa::Scalar, k.row(t), &q.scales, &mut raw);
             assert_eq!(&raw[..], &q.data[t * 5..(t + 1) * 5], "row {t} packed bytes");
             let mut rec = vec![0.0f32; 10];
-            INT4.decode_row(&raw, &q.scales, &mut rec);
+            INT4.decode_row(Isa::Scalar, &raw, &q.scales, &mut rec);
             for ch in 0..10 {
                 assert!((rec[ch] - k.at(t, ch)).abs() <= q.scales[ch] / 2.0 + 1e-6);
             }
@@ -420,7 +408,7 @@ mod tests {
             let mut want = vec![0.0f32; rows];
             attn::dot_rows_i8(v, &q, &q8.data, &q8.scales, &mut want);
             let mut got = vec![0.0f32; rows];
-            INT8.dot_rows(v, &q, &raw8, &q8.scales, &mut scratch, &mut got);
+            INT8.dot_rows(Isa::Scalar, v, &q, &raw8, &q8.scales, &mut scratch, &mut got);
             assert_eq!(bits(&got), bits(&want), "int8 {v:?}");
         }
 
@@ -430,6 +418,7 @@ mod tests {
         attn::accumulate_rows_i8(Variant::Vectorized, &w, &q8.data, &q8.scales, &mut want_acc);
         let mut got_acc = vec![0.0f32; d];
         INT8.accumulate_rows(
+            Isa::Scalar,
             Variant::Vectorized,
             &w,
             &raw8,
@@ -444,13 +433,21 @@ mod tests {
         let mut want32 = vec![0.0f32; rows];
         attn::dot_rows_f32(&q, &k.data, &mut want32);
         let mut got32 = vec![0.0f32; rows];
-        FP32.dot_rows(Variant::Naive, &q, &raw32, &[], &mut scratch, &mut got32);
+        FP32.dot_rows(Isa::Scalar, Variant::Naive, &q, &raw32, &[], &mut scratch, &mut got32);
         assert_eq!(bits(&got32), bits(&want32));
 
         // INT4: fused == decode_row-then-dot, channel order preserved.
         let q4 = int4::quantize4(&k);
         let mut got4 = vec![0.0f32; rows];
-        INT4.dot_rows(Variant::Naive, &q, &q4.data, &q4.scales, &mut scratch, &mut got4);
+        INT4.dot_rows(
+            Isa::Scalar,
+            Variant::Naive,
+            &q,
+            &q4.data,
+            &q4.scales,
+            &mut scratch,
+            &mut got4,
+        );
         let mut row = vec![0.0f32; d];
         for r in 0..rows {
             int4::dequantize4_row_into(&q4.data[r * d / 2..(r + 1) * d / 2], &q4.scales, &mut row);
@@ -468,10 +465,19 @@ mod tests {
         let q4 = int4::quantize4(&k);
         let mut scratch = Vec::new(); // deliberately unsized
         let mut out = vec![0.0f32; 2];
-        INT4.dot_rows(Variant::Naive, &[1.0; 8], &q4.data, &q4.scales, &mut scratch, &mut out);
+        INT4.dot_rows(
+            Isa::Scalar,
+            Variant::Naive,
+            &[1.0; 8],
+            &q4.data,
+            &q4.scales,
+            &mut scratch,
+            &mut out,
+        );
         assert!(scratch.len() >= 8);
         let mut acc = vec![0.0f32; 8];
         INT4.accumulate_rows(
+            Isa::Scalar,
             Variant::Naive,
             &[0.5, 0.5],
             &q4.data,

@@ -85,6 +85,7 @@ pub fn quantize_one4(val: f32, scale: f32) -> i8 {
 /// channel in the low nibble — the [`Int4Matrix`] convention). The row
 /// length must be even; the paged INT4 cache guarantees this by requiring
 /// an even `head_dim`.
+#[inline]
 pub fn quantize4_row_into(row: &[f32], scales: &[f32], out: &mut [u8]) {
     debug_assert_eq!(row.len() % 2, 0, "int4 rows must have even length");
     debug_assert_eq!(row.len(), scales.len());

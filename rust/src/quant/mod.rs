@@ -20,6 +20,10 @@
 //!    attention dot product and softmax·V accumulation so the zero-copy
 //!    paged decode path attends directly over INT8 blocks, in the same
 //!    four kernel variants (all bit-identical).
+//! 5. **SIMD kernel backend**: [`simd`] adds explicit AVX2/NEON
+//!    implementations of the fused attention and row encode/decode hot
+//!    loops behind runtime CPU-feature dispatch (`kernel_backend` knob),
+//!    with the scalar kernels above as the bit-identical fallback.
 //!
 //! Conventions (shared with `python/compile/kernels/ref.py`):
 //! round-half-away-from-zero (`f32::round`), clamp to `[-127, 127]`,
@@ -33,10 +37,12 @@ pub mod int4;
 pub mod matrix;
 pub mod quantize;
 pub mod scales;
+pub mod simd;
 pub mod tensorwise;
 
 pub use attn::{accumulate_rows_i8, dot_i8, dot_rows_i8};
 pub use codec::Codec;
+pub use simd::{Isa, KernelBackend};
 pub use dequantize::{dequantize, dequantize_into, dequantize_parallel};
 pub use error::{attention_score_error, l2_error, max_abs_error, value_output_error};
 pub use matrix::{Fp32Matrix, Int8Matrix};

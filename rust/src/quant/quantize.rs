@@ -131,23 +131,31 @@ pub fn quantize_vectorized(k: &Fp32Matrix, scales: &[f32], out: &mut Int8Matrix)
 
 /// Vectorized quantization of a single row — also the serving engine's
 /// cache-writer hot path (new K/V rows are quantized host-side).
+///
+/// chunks_exact slices instead of manual indexing: the bounds checks
+/// vanish and the chunk body autovectorizes; quantize_one's zero-scale
+/// guard compiles to a select. Bit-identical to the pre-rewrite loop
+/// (same `quantize_one` call per element).
 #[inline]
 pub fn quantize_row_into(row: &[f32], scales: &[f32], out: &mut [i8]) {
     let n = row.len();
-    let chunks = n / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        // Array temporaries keep this branch-light; quantize_one's
-        // zero-scale guard compiles to a select.
-        let vals = [row[i], row[i + 1], row[i + 2], row[i + 3]];
-        let ss = [scales[i], scales[i + 1], scales[i + 2], scales[i + 3]];
-        out[i] = quantize_one(vals[0], ss[0]);
-        out[i + 1] = quantize_one(vals[1], ss[1]);
-        out[i + 2] = quantize_one(vals[2], ss[2]);
-        out[i + 3] = quantize_one(vals[3], ss[3]);
+    // Hard assert (one compare per row): the chunks_exact walk would
+    // silently truncate on a short `out` where indexing used to panic.
+    assert_eq!(out.len(), n, "row/out length mismatch");
+    debug_assert_eq!(scales.len(), n, "row/scales length mismatch");
+    let tail = n / 4 * 4;
+    for ((o4, r4), s4) in out
+        .chunks_exact_mut(4)
+        .zip(row.chunks_exact(4))
+        .zip(scales.chunks_exact(4))
+    {
+        o4[0] = quantize_one(r4[0], s4[0]);
+        o4[1] = quantize_one(r4[1], s4[1]);
+        o4[2] = quantize_one(r4[2], s4[2]);
+        o4[3] = quantize_one(r4[3], s4[3]);
     }
-    for i in chunks * 4..n {
-        out[i] = quantize_one(row[i], scales[i]);
+    for ((o, &r), &s) in out[tail..].iter_mut().zip(&row[tail..]).zip(&scales[tail..]) {
+        *o = quantize_one(r, s);
     }
 }
 

@@ -1,0 +1,276 @@
+//! AVX2 (x86_64, 256-bit) kernels behind the [`super`] dispatch layer.
+//!
+//! Safety contract (every `unsafe fn` here): the caller must have
+//! verified AVX2 support — [`super::detect`] returning [`super::Isa::Avx2`]
+//! — before calling. The dispatchers in [`super`] re-check the cached
+//! detection on every call, so these bodies never execute on hosts
+//! without the feature.
+//!
+//! Numeric contract (see the module docs of [`super`]):
+//!
+//! * encode / decode / accumulate perform the scalar kernels' exact
+//!   per-element IEEE operation sequence (no FMA contraction — products
+//!   and sums stay separately rounded), so they are **bit-identical** to
+//!   the scalar backend;
+//! * the dot kernels accumulate channels in 8-wide lanes (two
+//!   independent accumulators), reassociating the sum — covered by the
+//!   f64-reference tolerance, never bit-compared against scalar.
+//!
+//! Encode vectorizes the division (IEEE-exact, so quotients match the
+//! scalar writer bit for bit) and finishes round/clamp through the
+//! shared scalar finisher [`super::code_i8`] / [`super::code_i4`] —
+//! sidestepping the subtle mismatch between packed round-to-nearest-even
+//! and `f32::round`'s ties-away semantics.
+
+#![allow(clippy::missing_safety_doc)] // module-level safety contract above
+
+use core::arch::x86_64::*;
+
+/// Dequantize 8 consecutive int8 channels: `(i8 as f32) * scale`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant8(row: *const i8, scales: *const f32) -> __m256 {
+    let raw = _mm_loadl_epi64(row as *const __m128i);
+    let wide = _mm256_cvtepi8_epi32(raw);
+    _mm256_mul_ps(_mm256_cvtepi32_ps(wide), _mm256_loadu_ps(scales))
+}
+
+/// Horizontal sum of 8 lanes in a fixed (deterministic) reduction order.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+    _mm_cvtss_f32(s)
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_rows_i8(q: &[f32], blk: &[i8], scales: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    let main = d / 16 * 16;
+    let mid = d / 8 * 8;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut ch = 0;
+        while ch < main {
+            let d0 = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+            let d1 = dequant8(row.as_ptr().add(ch + 8), scales.as_ptr().add(ch + 8));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch)), d0));
+            acc1 =
+                _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch + 8)), d1));
+            ch += 16;
+        }
+        if ch < mid {
+            let d0 = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch)), d0));
+            ch += 8;
+        }
+        let mut sum = hsum8(_mm256_add_ps(acc0, acc1));
+        while ch < d {
+            sum += q[ch] * (row[ch] as f32 * scales[ch]);
+            ch += 1;
+        }
+        *o = sum;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn accumulate_rows_i8(w: &[f32], blk: &[i8], scales: &[f32], acc: &mut [f32]) {
+    let d = acc.len();
+    debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    let mid = d / 8 * 8;
+    for (r, &wr) in w.iter().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let wv = _mm256_set1_ps(wr);
+        let mut ch = 0;
+        while ch < mid {
+            let deq = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+            let a = _mm256_loadu_ps(acc.as_ptr().add(ch));
+            // mul + add (not FMA): per-channel arithmetic — convert, ·s,
+            // ·w, + — stays bit-identical to the scalar kernels.
+            let sum = _mm256_add_ps(a, _mm256_mul_ps(wv, deq));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(ch), sum);
+            ch += 8;
+        }
+        while ch < d {
+            acc[ch] += wr * (row[ch] as f32 * scales[ch]);
+            ch += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_rows_f32(q: &[f32], blk: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
+    let main = d / 16 * 16;
+    let mid = d / 8 * 8;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut ch = 0;
+        while ch < main {
+            let v0 = _mm256_loadu_ps(row.as_ptr().add(ch));
+            let v1 = _mm256_loadu_ps(row.as_ptr().add(ch + 8));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch)), v0));
+            acc1 =
+                _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch + 8)), v1));
+            ch += 16;
+        }
+        if ch < mid {
+            let v0 = _mm256_loadu_ps(row.as_ptr().add(ch));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(q.as_ptr().add(ch)), v0));
+            ch += 8;
+        }
+        let mut sum = hsum8(_mm256_add_ps(acc0, acc1));
+        while ch < d {
+            sum += q[ch] * row[ch];
+            ch += 1;
+        }
+        *o = sum;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn accumulate_rows_f32(w: &[f32], blk: &[f32], acc: &mut [f32]) {
+    let d = acc.len();
+    debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");
+    let mid = d / 8 * 8;
+    for (r, &wr) in w.iter().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let wv = _mm256_set1_ps(wr);
+        let mut ch = 0;
+        while ch < mid {
+            let v = _mm256_loadu_ps(row.as_ptr().add(ch));
+            let a = _mm256_loadu_ps(acc.as_ptr().add(ch));
+            let sum = _mm256_add_ps(a, _mm256_mul_ps(wv, v));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(ch), sum);
+            ch += 8;
+        }
+        while ch < d {
+            acc[ch] += wr * row[ch];
+            ch += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize_row_into(row: &[f32], scales: &[f32], out: &mut [i8]) {
+    debug_assert_eq!(row.len(), scales.len());
+    debug_assert_eq!(row.len(), out.len());
+    let n = row.len();
+    let mid = n / 8 * 8;
+    let mut qbuf = [0.0f32; 8];
+    let mut ch = 0;
+    while ch < mid {
+        // Vectorized division (IEEE-exact — quotients match the scalar
+        // writer bit for bit); round/clamp/pack finish scalar through the
+        // shared code_i8 so the ties-away rounding is pinned.
+        let v = _mm256_loadu_ps(row.as_ptr().add(ch));
+        let s = _mm256_loadu_ps(scales.as_ptr().add(ch));
+        _mm256_storeu_ps(qbuf.as_mut_ptr(), _mm256_div_ps(v, s));
+        for (i, &q) in qbuf.iter().enumerate() {
+            out[ch + i] = super::code_i8(q, scales[ch + i]);
+        }
+        ch += 8;
+    }
+    while ch < n {
+        out[ch] = crate::quant::quantize::quantize_one(row[ch], scales[ch]);
+        ch += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequantize_row_into(row: &[i8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(row.len(), out.len());
+    debug_assert_eq!(scales.len(), out.len());
+    let n = out.len();
+    let mid = n / 8 * 8;
+    let mut ch = 0;
+    while ch < mid {
+        let deq = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+        _mm256_storeu_ps(out.as_mut_ptr().add(ch), deq);
+        ch += 8;
+    }
+    while ch < n {
+        out[ch] = row[ch] as f32 * scales[ch];
+        ch += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn quantize4_row_into(row: &[f32], scales: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(row.len() % 2, 0, "int4 rows must have even length");
+    debug_assert_eq!(row.len(), scales.len());
+    debug_assert_eq!(out.len() * 2, row.len());
+    let n = row.len();
+    let mid = n / 8 * 8;
+    let mut qbuf = [0.0f32; 8];
+    let mut ch = 0;
+    while ch < mid {
+        let v = _mm256_loadu_ps(row.as_ptr().add(ch));
+        let s = _mm256_loadu_ps(scales.as_ptr().add(ch));
+        _mm256_storeu_ps(qbuf.as_mut_ptr(), _mm256_div_ps(v, s));
+        for i in (0..8).step_by(2) {
+            let lo = super::code_i4(qbuf[i], scales[ch + i]) as u8 & 0x0F;
+            let hi = super::code_i4(qbuf[i + 1], scales[ch + i + 1]) as u8 & 0x0F;
+            out[(ch + i) / 2] = lo | (hi << 4);
+        }
+        ch += 8;
+    }
+    while ch < n {
+        let lo = crate::quant::int4::quantize_one4(row[ch], scales[ch]) as u8 & 0x0F;
+        let hi = crate::quant::int4::quantize_one4(row[ch + 1], scales[ch + 1]) as u8 & 0x0F;
+        out[ch / 2] = lo | (hi << 4);
+        ch += 2;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dequantize4_row_into(bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    debug_assert_eq!(scales.len(), out.len());
+    let nb = bytes.len();
+    let main_b = nb / 8 * 8;
+    let mut b = 0;
+    while b < main_b {
+        // 8 packed bytes -> 16 channels: split nibbles, sign-extend each
+        // 4-bit value via (v ^ 8) - 8, interleave back to channel order.
+        let raw = _mm_loadl_epi64(bytes.as_ptr().add(b) as *const __m128i);
+        let maskf = _mm_set1_epi8(0x0F);
+        let lo4 = _mm_and_si128(raw, maskf);
+        let hi4 = _mm_and_si128(_mm_srli_epi16::<4>(raw), maskf);
+        let k8 = _mm_set1_epi8(8);
+        let lo = _mm_sub_epi8(_mm_xor_si128(lo4, k8), k8);
+        let hi = _mm_sub_epi8(_mm_xor_si128(hi4, k8), k8);
+        let inter = _mm_unpacklo_epi8(lo, hi); // lo0 hi0 lo1 hi1 ...
+        let w0 = _mm256_cvtepi8_epi32(inter);
+        let w1 = _mm256_cvtepi8_epi32(_mm_srli_si128::<8>(inter));
+        let ch = b * 2;
+        let d0 =
+            _mm256_mul_ps(_mm256_cvtepi32_ps(w0), _mm256_loadu_ps(scales.as_ptr().add(ch)));
+        let d1 =
+            _mm256_mul_ps(_mm256_cvtepi32_ps(w1), _mm256_loadu_ps(scales.as_ptr().add(ch + 8)));
+        _mm256_storeu_ps(out.as_mut_ptr().add(ch), d0);
+        _mm256_storeu_ps(out.as_mut_ptr().add(ch + 8), d1);
+        b += 8;
+    }
+    while b < nb {
+        let byte = bytes[b];
+        let lo = ((byte << 4) as i8) >> 4;
+        let hi = (byte as i8) >> 4;
+        let ch = 2 * b;
+        out[ch] = lo as f32 * scales[ch];
+        out[ch + 1] = hi as f32 * scales[ch + 1];
+        b += 1;
+    }
+}

@@ -1,0 +1,713 @@
+//! Runtime-dispatched SIMD kernel backend for the fused attention and
+//! quantization hot paths.
+//!
+//! The paper's headline result is its *vectorized* kernel; the four
+//! scalar [`Variant`]s mirror its loop structures but rely entirely on
+//! autovectorization — and the bit-stability contract (serial adds in a
+//! pinned order) actively blocks the compiler from using packed sums in
+//! the decode score pass. This module adds **explicit** SIMD
+//! implementations behind runtime CPU-feature dispatch:
+//!
+//! * [`KernelBackend`] — the config knob (`auto | scalar | simd`,
+//!   `--kernel-backend`, `"kernel_backend"`, `KVQ_KERNEL_BACKEND` env
+//!   override for CI), resolved once at engine/cache init into an
+//! * [`Isa`] — the concrete instruction set the hot loops run on:
+//!   AVX2 on x86_64 (runtime `cpuid` detection), NEON on aarch64
+//!   (architecturally mandatory), or the scalar fallback. `simd` on a
+//!   host without SIMD degrades to scalar.
+//!
+//! Every dispatcher here takes the resolved [`Isa`] and falls back to
+//! the scalar kernels ([`super::attn`], [`super::quantize`],
+//! [`super::dequantize`], [`super::int4`]) — which stay bit-identical to
+//! the pre-backend code — so `kernel_backend=scalar` reproduces legacy
+//! bytes exactly.
+//!
+//! **Per-backend bit-stability contract.**
+//!
+//! * *Encode / decode / softmax·V accumulation are bit-identical across
+//!   backends.* The SIMD paths perform the same IEEE-exact operations in
+//!   the same per-element order as the scalar kernels (convert, `·s`,
+//!   `·w`, `+` — no FMA contraction, division vectorized but IEEE-exact,
+//!   integer rounding delegated to the scalar finisher on AVX2 and to
+//!   `FRINTA` — ties-away, `f32::round` semantics — on NEON). Stored
+//!   cache bytes therefore never depend on the backend.
+//! * *The score-pass dot reassociates.* [`dot_rows_i8`] (and the f32 /
+//!   int4 twins) accumulate channels in vector lanes, so SIMD scores
+//!   differ from scalar within f32 accumulation error — compared against
+//!   the f64 reference with a pinned tolerance by `tests/proptests.rs`.
+//!   Consequently tokens may differ *between* backends, but **same
+//!   backend + same threads ⇒ byte-identical tokens**, and staged vs
+//!   paged decode remain bit-identical to each other under any single
+//!   backend (per-row dots and row-ascending accumulation are partition
+//!   invariant).
+//!
+//! Dispatch is safe: each arm re-checks [`detect`] (a cached lookup)
+//! before entering a `target_feature` function, so a hand-constructed
+//! [`Isa`] can never execute unsupported instructions.
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use super::attn;
+use super::dequantize;
+use super::int4;
+use super::quantize;
+use super::Variant;
+use crate::QMAX;
+use std::sync::OnceLock;
+
+/// The `kernel_backend` config knob (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelBackend {
+    /// Best available ISA on this host (the default).
+    Auto,
+    /// Force the scalar fallback (bit-identical to the pre-backend code).
+    Scalar,
+    /// Request SIMD; degrades to scalar when the host has none.
+    Simd,
+}
+
+impl KernelBackend {
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        Some(match s {
+            "auto" => KernelBackend::Auto,
+            "scalar" => KernelBackend::Scalar,
+            "simd" => KernelBackend::Simd,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Auto => "auto",
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+
+    /// Resolve the knob to a concrete ISA. The `KVQ_KERNEL_BACKEND` env
+    /// var overrides the configured value (the CI scalar-fallback job
+    /// forces `scalar` this way); an unparseable value is ignored with a
+    /// one-time warning so a typo (`Scalar`, `avx2`, …) cannot silently
+    /// serve the wrong backend.
+    pub fn resolve(self) -> Isa {
+        let env = std::env::var("KVQ_KERNEL_BACKEND").ok();
+        if let Some(v) = env.as_deref() {
+            if KernelBackend::parse(v).is_none() {
+                static WARNED: OnceLock<()> = OnceLock::new();
+                WARNED.get_or_init(|| {
+                    crate::warn!(
+                        "ignoring unparseable KVQ_KERNEL_BACKEND={v:?} \
+                         (expected auto|scalar|simd); using configured {}",
+                        self.name()
+                    );
+                });
+            }
+        }
+        self.resolve_with(env.as_deref())
+    }
+
+    /// [`Self::resolve`] with an explicit env override (testable without
+    /// mutating process env, which races across test threads).
+    pub fn resolve_with(self, env: Option<&str>) -> Isa {
+        let requested = env.and_then(KernelBackend::parse).unwrap_or(self);
+        match requested {
+            KernelBackend::Scalar => Isa::Scalar,
+            KernelBackend::Auto | KernelBackend::Simd => detect(),
+        }
+    }
+}
+
+/// A concrete instruction set the kernels dispatch on. Obtain via
+/// [`KernelBackend::resolve`] / [`detect`]; the dispatchers guard every
+/// SIMD arm against the detected ISA, so a mismatched value silently
+/// falls back to scalar instead of faulting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    Scalar,
+    /// x86_64 AVX2 (256-bit; runtime-detected).
+    Avx2,
+    /// aarch64 NEON/ASIMD (128-bit; mandatory on aarch64).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn is_simd(self) -> bool {
+        self != Isa::Scalar
+    }
+}
+
+/// Best ISA available on this host (cached after the first call).
+pub fn detect() -> Isa {
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(detect_uncached)
+}
+
+fn detect_uncached() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Isa::Avx2;
+        }
+    }
+    // NEON/ASIMD is architecturally mandatory on aarch64; everything
+    // else falls back to the scalar kernels.
+    if cfg!(target_arch = "aarch64") {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// The session default: `KernelBackend::Auto` resolved through the env
+/// override — what components use when no engine config reaches them
+/// (direct cache-manager construction, model-level tests).
+pub fn default_isa() -> Isa {
+    KernelBackend::Auto.resolve()
+}
+
+/// Finish a precomputed quotient `q = val / scale` exactly as
+/// [`quantize::quantize_one`] would (the AVX2 encode path vectorizes the
+/// division — IEEE-exact, so quotients match the scalar writer bit for
+/// bit — and finishes round/clamp here).
+#[inline(always)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+pub(crate) fn code_i8(q: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let r = q.round();
+    if r.is_nan() {
+        return 0;
+    }
+    r.clamp(-QMAX, QMAX) as i8
+}
+
+/// INT4 twin of [`code_i8`] (grid bound ±7, [`int4::quantize_one4`]
+/// semantics).
+#[inline(always)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+pub(crate) fn code_i4(q: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let r = q.round();
+    if r.is_nan() {
+        return 0;
+    }
+    r.clamp(-int4::Q4MAX, int4::Q4MAX) as i8
+}
+
+// ---------------------------------------------------------------------------
+// Fused attention dispatchers.
+// ---------------------------------------------------------------------------
+
+/// Fused dequant·dot over an INT8 slab through the selected backend.
+/// Scalar delegates to the paper-variant kernels ([`attn::dot_rows_i8`]);
+/// SIMD has a single access pattern (`variant` only shapes the scalar
+/// fallback). SIMD sums reassociate into vector lanes (module docs).
+#[inline]
+pub fn dot_rows_i8(
+    isa: Isa,
+    variant: Variant,
+    q: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    out: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: guard re-checks the cached detection, so the AVX2 body
+        // only ever runs on a host that reported the feature.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe { avx2::dot_rows_i8(q, blk, scales, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above for NEON.
+        Isa::Neon if detect() == Isa::Neon => unsafe { neon::dot_rows_i8(q, blk, scales, out) },
+        _ => attn::dot_rows_i8(variant, q, blk, scales, out),
+    }
+}
+
+/// Fused softmax·V accumulation over an INT8 slab. Bit-identical across
+/// backends (same per-channel op sequence, rows ascending — module docs).
+#[inline]
+pub fn accumulate_rows_i8(
+    isa: Isa,
+    variant: Variant,
+    w: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    acc: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            avx2::accumulate_rows_i8(w, blk, scales, acc)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            neon::accumulate_rows_i8(w, blk, scales, acc)
+        },
+        _ => attn::accumulate_rows_i8(variant, w, blk, scales, acc),
+    }
+}
+
+/// FP32 twin of [`dot_rows_i8`] (no scales — nothing to fuse).
+#[inline]
+pub fn dot_rows_f32(isa: Isa, q: &[f32], blk: &[f32], out: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe { avx2::dot_rows_f32(q, blk, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe { neon::dot_rows_f32(q, blk, out) },
+        _ => attn::dot_rows_f32(q, blk, out),
+    }
+}
+
+/// FP32 twin of [`accumulate_rows_i8`]; bit-identical across backends.
+#[inline]
+pub fn accumulate_rows_f32(isa: Isa, w: &[f32], blk: &[f32], acc: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe { avx2::accumulate_rows_f32(w, blk, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe { neon::accumulate_rows_f32(w, blk, acc) },
+        _ => attn::accumulate_rows_f32(w, blk, acc),
+    }
+}
+
+#[inline]
+fn ensure_scratch(scratch: &mut Vec<f32>, d: usize) {
+    if scratch.len() < d {
+        scratch.resize(d, 0.0);
+    }
+}
+
+/// Fused dequant·dot over a nibble-packed INT4 slab. Each row is
+/// unpacked into the O(d) `scratch` and dotted. The scalar arm is the
+/// pre-backend `Int4Codec::dot_rows` loop, bit for bit; the SIMD arm is
+/// the *composition* of the SIMD nibble unpack and the SIMD f32 dot —
+/// there is no extra fusion to hand-write per arch, so it lives here
+/// once instead of twice in avx2.rs/neon.rs.
+pub fn dot_rows_i4(
+    isa: Isa,
+    q: &[f32],
+    blk: &[u8],
+    scales: &[f32],
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    let d = q.len();
+    let bpr = d.div_ceil(2);
+    debug_assert_eq!(blk.len(), out.len() * bpr, "slab shape mismatch");
+    ensure_scratch(scratch, d);
+    match isa {
+        Isa::Scalar => {
+            for (r, o) in out.iter_mut().enumerate() {
+                int4::dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+                let mut dot = 0.0f32;
+                for ch in 0..d {
+                    dot += q[ch] * scratch[ch];
+                }
+                *o = dot;
+            }
+        }
+        _ => {
+            for (r, o) in out.iter_mut().enumerate() {
+                dequantize4_row_into(isa, &blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+                let mut one = [0.0f32];
+                dot_rows_f32(isa, q, &scratch[..d], &mut one);
+                *o = one[0];
+            }
+        }
+    }
+}
+
+/// Fused softmax·V accumulation over a nibble-packed INT4 slab;
+/// bit-identical across backends (unpack and per-channel multiply-add
+/// are exact in the scalar order). SIMD arm composed from the SIMD
+/// unpack + f32 accumulate, like [`dot_rows_i4`].
+pub fn accumulate_rows_i4(
+    isa: Isa,
+    w: &[f32],
+    blk: &[u8],
+    scales: &[f32],
+    scratch: &mut Vec<f32>,
+    acc: &mut [f32],
+) {
+    let d = acc.len();
+    let bpr = d.div_ceil(2);
+    debug_assert_eq!(blk.len(), w.len() * bpr, "slab shape mismatch");
+    ensure_scratch(scratch, d);
+    match isa {
+        Isa::Scalar => {
+            for (r, &wr) in w.iter().enumerate() {
+                int4::dequantize4_row_into(&blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+                for ch in 0..d {
+                    acc[ch] += wr * scratch[ch];
+                }
+            }
+        }
+        _ => {
+            for (r, &wr) in w.iter().enumerate() {
+                dequantize4_row_into(isa, &blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+                accumulate_rows_f32(isa, &[wr], &scratch[..d], acc);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row encode / decode dispatchers (the cache-writer and unpack paths).
+// ---------------------------------------------------------------------------
+
+/// INT8 row encode through the selected backend — bit-identical to
+/// [`quantize::quantize_row_into`] on every backend (module docs).
+#[inline]
+pub fn quantize_row_into(isa: Isa, row: &[f32], scales: &[f32], out: &mut [i8]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            avx2::quantize_row_into(row, scales, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            neon::quantize_row_into(row, scales, out)
+        },
+        _ => quantize::quantize_row_into(row, scales, out),
+    }
+}
+
+/// INT8 row decode — bit-identical across backends.
+#[inline]
+pub fn dequantize_row_into(isa: Isa, row: &[i8], scales: &[f32], out: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            avx2::dequantize_row_into(row, scales, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            neon::dequantize_row_into(row, scales, out)
+        },
+        _ => dequantize::dequantize_row_into(row, scales, out),
+    }
+}
+
+/// INT4 row encode (packed nibbles) — bit-identical to
+/// [`int4::quantize4_row_into`] on every backend.
+#[inline]
+pub fn quantize4_row_into(isa: Isa, row: &[f32], scales: &[f32], out: &mut [u8]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            avx2::quantize4_row_into(row, scales, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            neon::quantize4_row_into(row, scales, out)
+        },
+        _ => int4::quantize4_row_into(row, scales, out),
+    }
+}
+
+/// INT4 row decode (nibble unpack + dequantize) — bit-identical across
+/// backends.
+#[inline]
+pub fn dequantize4_row_into(isa: Isa, bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            avx2::dequantize4_row_into(bytes, scales, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            neon::dequantize4_row_into(bytes, scales, out)
+        },
+        _ => int4::dequantize4_row_into(bytes, scales, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::matrix::Fp32Matrix;
+    use crate::quant::quantize::quantize_fused;
+    use crate::quant::scales::compute_scales;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn backend_parse_and_name_roundtrip() {
+        for kb in [KernelBackend::Auto, KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(KernelBackend::parse(kb.name()), Some(kb));
+        }
+        assert_eq!(KernelBackend::parse("avx512"), None);
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert!(!isa.name().is_empty());
+        }
+        assert!(!Isa::Scalar.is_simd());
+        assert!(Isa::Avx2.is_simd() && Isa::Neon.is_simd());
+    }
+
+    #[test]
+    fn resolution_rules() {
+        // scalar always resolves to the scalar ISA; auto/simd resolve to
+        // whatever this host detects; the env override wins.
+        assert_eq!(KernelBackend::Scalar.resolve_with(None), Isa::Scalar);
+        assert_eq!(KernelBackend::Auto.resolve_with(None), detect());
+        assert_eq!(KernelBackend::Simd.resolve_with(None), detect());
+        assert_eq!(KernelBackend::Auto.resolve_with(Some("scalar")), Isa::Scalar);
+        assert_eq!(KernelBackend::Scalar.resolve_with(Some("simd")), detect());
+        // Unparseable env values are ignored.
+        assert_eq!(KernelBackend::Scalar.resolve_with(Some("warp")), Isa::Scalar);
+        // The detected ISA matches this build's architecture.
+        match detect() {
+            Isa::Avx2 => assert!(cfg!(target_arch = "x86_64")),
+            Isa::Neon => assert!(cfg!(target_arch = "aarch64")),
+            Isa::Scalar => {}
+        }
+    }
+
+    #[test]
+    fn scalar_dispatch_is_the_scalar_kernel() {
+        // Isa::Scalar must route to the exact legacy code paths.
+        let k = Fp32Matrix::random_normal(5, 19, 1.0, 0x5CA);
+        let q8 = quantize_fused(&k);
+        let mut rng = Rng::new(1);
+        let mut q = vec![0.0f32; 19];
+        rng.fill_uniform(&mut q, -1.0, 1.0);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        let mut want = vec![0.0f32; 5];
+        attn::dot_rows_i8(Variant::Vectorized, &q, &q8.data, &q8.scales, &mut want);
+        let mut got = vec![0.0f32; 5];
+        dot_rows_i8(Isa::Scalar, Variant::Vectorized, &q, &q8.data, &q8.scales, &mut got);
+        assert_eq!(bits(&got), bits(&want));
+
+        let mut out_a = vec![0i8; 19];
+        let mut out_b = vec![0i8; 19];
+        quantize::quantize_row_into(k.row(2), &q8.scales, &mut out_a);
+        quantize_row_into(Isa::Scalar, k.row(2), &q8.scales, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    /// A misreported ISA (e.g. `Isa::Neon` on x86_64) silently falls
+    /// back to scalar instead of executing unsupported instructions.
+    #[test]
+    fn mismatched_isa_falls_back_to_scalar() {
+        let wrong = if cfg!(target_arch = "x86_64") { Isa::Neon } else { Isa::Avx2 };
+        let row = [0.5f32, -1.5, 2.0, 0.25, -0.125];
+        let scales = [0.01f32; 5];
+        let mut a = vec![0i8; 5];
+        let mut b = vec![0i8; 5];
+        quantize_row_into(wrong, &row, &scales, &mut a);
+        quantize::quantize_row_into(&row, &scales, &mut b);
+        assert_eq!(a, b);
+    }
+
+    /// The cross-backend contract on this host's detected SIMD ISA:
+    /// encode/decode/accumulate bit-identical to scalar, dot within the
+    /// f64-reference tolerance. Degenerates to scalar-vs-scalar (still a
+    /// valid dispatch check) on hosts without SIMD.
+    #[test]
+    fn simd_matches_scalar_per_contract() {
+        let isa = detect();
+        for (rows, d) in [(1usize, 1usize), (3, 3), (2, 7), (5, 8), (4, 9), (7, 16), (3, 64)] {
+            let k = Fp32Matrix::random_normal(rows, d, 1.0, (rows * 37 + d) as u64);
+            let s = compute_scales(&k);
+            let q8 = quantize_fused(&k);
+            let mut rng = Rng::new((rows + d) as u64);
+            let mut q = vec![0.0f32; d];
+            let mut w = vec![0.0f32; rows];
+            rng.fill_uniform(&mut q, -1.0, 1.0);
+            rng.fill_uniform(&mut w, 0.0, 1.0);
+
+            // Encode: bit-identical codes.
+            for t in 0..rows {
+                let mut scalar = vec![0i8; d];
+                let mut simd = vec![0i8; d];
+                quantize::quantize_row_into(k.row(t), &s, &mut scalar);
+                quantize_row_into(isa, k.row(t), &s, &mut simd);
+                assert_eq!(scalar, simd, "encode {rows}x{d} row {t} on {}", isa.name());
+            }
+
+            // Decode: bit-identical floats.
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let mut scalar_dec = vec![0.0f32; d];
+            let mut simd_dec = vec![0.0f32; d];
+            dequantize::dequantize_row_into(&q8.data[..d], &q8.scales, &mut scalar_dec);
+            dequantize_row_into(isa, &q8.data[..d], &q8.scales, &mut simd_dec);
+            assert_eq!(bits(&scalar_dec), bits(&simd_dec), "decode {rows}x{d}");
+
+            // Accumulate: bit-identical (same op order per channel).
+            let mut scalar_acc = vec![0.1f32; d];
+            let mut simd_acc = vec![0.1f32; d];
+            attn::accumulate_rows_i8(Variant::Naive, &w, &q8.data, &q8.scales, &mut scalar_acc);
+            accumulate_rows_i8(isa, Variant::Naive, &w, &q8.data, &q8.scales, &mut simd_acc);
+            assert_eq!(bits(&scalar_acc), bits(&simd_acc), "accumulate {rows}x{d}");
+
+            // Dot: f64-reference tolerance (lane sums reassociate).
+            let mut got = vec![0.0f32; rows];
+            dot_rows_i8(isa, Variant::Vectorized, &q, &q8.data, &q8.scales, &mut got);
+            for r in 0..rows {
+                let mut reference = 0.0f64;
+                let mut magnitude = 0.0f64;
+                for ch in 0..d {
+                    let term =
+                        q[ch] as f64 * (q8.data[r * d + ch] as f64 * q8.scales[ch] as f64);
+                    reference += term;
+                    magnitude += term.abs();
+                }
+                let tol = 1e-5 * (d as f64) * magnitude + 1e-6;
+                assert!(
+                    (got[r] as f64 - reference).abs() <= tol,
+                    "dot {rows}x{d} row {r}: {} vs {reference} on {}",
+                    got[r],
+                    isa.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_encode_matches_scalar_on_edge_values() {
+        // Ties, NaN, infinities, zero/negative scales — the pinned
+        // quantize_one semantics must survive every backend.
+        let isa = detect();
+        let row = [
+            0.5f32,
+            -0.5,
+            1.5,
+            -1.5,
+            0.49999997,
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            1e9,
+            -1e9,
+            0.0,
+            -0.0,
+        ];
+        for scale in [1.0f32, 0.25, 0.0, -1.0, f32::NAN] {
+            let scales = vec![scale; row.len()];
+            let mut scalar = vec![0i8; row.len()];
+            let mut simd = vec![0i8; row.len()];
+            quantize::quantize_row_into(&row, &scales, &mut scalar);
+            quantize_row_into(isa, &row, &scales, &mut simd);
+            assert_eq!(scalar, simd, "scale {scale} on {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn int4_paths_match_scalar_per_contract() {
+        let isa = detect();
+        for (rows, d) in [(1usize, 2usize), (3, 8), (5, 10), (2, 16), (4, 64)] {
+            let k = Fp32Matrix::random_uniform(rows, d, -2.0, 2.0, (rows * 7 + d) as u64);
+            let q4 = int4::quantize4(&k);
+            let bpr = d / 2;
+
+            // Encode: bit-identical packed bytes.
+            for t in 0..rows {
+                let mut scalar = vec![0u8; bpr];
+                let mut simd = vec![0u8; bpr];
+                int4::quantize4_row_into(k.row(t), &q4.scales, &mut scalar);
+                quantize4_row_into(isa, k.row(t), &q4.scales, &mut simd);
+                assert_eq!(scalar, simd, "int4 encode {rows}x{d} row {t}");
+            }
+
+            // Decode: bit-identical floats.
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            let mut scalar_dec = vec![0.0f32; d];
+            let mut simd_dec = vec![0.0f32; d];
+            int4::dequantize4_row_into(&q4.data[..bpr], &q4.scales, &mut scalar_dec);
+            dequantize4_row_into(isa, &q4.data[..bpr], &q4.scales, &mut simd_dec);
+            assert_eq!(bits(&scalar_dec), bits(&simd_dec), "int4 decode {rows}x{d}");
+
+            // Fused dot/accumulate vs the scalar arm.
+            let mut rng = Rng::new(d as u64);
+            let mut q = vec![0.0f32; d];
+            let mut w = vec![0.0f32; rows];
+            rng.fill_uniform(&mut q, -1.0, 1.0);
+            rng.fill_uniform(&mut w, 0.0, 1.0);
+            let mut scratch = Vec::new();
+            let mut scalar_out = vec![0.0f32; rows];
+            dot_rows_i4(Isa::Scalar, &q, &q4.data, &q4.scales, &mut scratch, &mut scalar_out);
+            let mut simd_out = vec![0.0f32; rows];
+            dot_rows_i4(isa, &q, &q4.data, &q4.scales, &mut scratch, &mut simd_out);
+            for r in 0..rows {
+                assert!(
+                    (scalar_out[r] - simd_out[r]).abs()
+                        <= 1e-5 * scalar_out[r].abs().max(1.0) * d as f32,
+                    "int4 dot {rows}x{d} row {r}"
+                );
+            }
+            let mut scalar_acc = vec![0.25f32; d];
+            let mut simd_acc = vec![0.25f32; d];
+            accumulate_rows_i4(
+                Isa::Scalar,
+                &w,
+                &q4.data,
+                &q4.scales,
+                &mut scratch,
+                &mut scalar_acc,
+            );
+            accumulate_rows_i4(isa, &w, &q4.data, &q4.scales, &mut scratch, &mut simd_acc);
+            assert_eq!(bits(&scalar_acc), bits(&simd_acc), "int4 accumulate {rows}x{d}");
+        }
+    }
+
+    #[test]
+    fn f32_twins_match_scalar_per_contract() {
+        let isa = detect();
+        for (rows, d) in [(1usize, 3usize), (4, 8), (3, 21), (2, 64)] {
+            let k = Fp32Matrix::random_normal(rows, d, 1.0, (rows + d) as u64);
+            let mut rng = Rng::new(9);
+            let mut q = vec![0.0f32; d];
+            let mut w = vec![0.0f32; rows];
+            rng.fill_uniform(&mut q, -1.0, 1.0);
+            rng.fill_uniform(&mut w, 0.0, 1.0);
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+            let mut scalar_acc = vec![0.5f32; d];
+            let mut simd_acc = vec![0.5f32; d];
+            attn::accumulate_rows_f32(&w, &k.data, &mut scalar_acc);
+            accumulate_rows_f32(isa, &w, &k.data, &mut simd_acc);
+            assert_eq!(bits(&scalar_acc), bits(&simd_acc), "f32 accumulate {rows}x{d}");
+
+            let mut scalar_out = vec![0.0f32; rows];
+            let mut simd_out = vec![0.0f32; rows];
+            attn::dot_rows_f32(&q, &k.data, &mut scalar_out);
+            dot_rows_f32(isa, &q, &k.data, &mut simd_out);
+            for r in 0..rows {
+                assert!(
+                    (scalar_out[r] - simd_out[r]).abs()
+                        <= 1e-5 * scalar_out[r].abs().max(1.0) * d as f32,
+                    "f32 dot {rows}x{d} row {r}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! NEON/ASIMD (aarch64, 128-bit) kernels behind the [`super`] dispatch
+//! layer.
+//!
+//! Safety contract (every `unsafe fn` here): NEON must be available —
+//! guaranteed on aarch64, where ASIMD is architecturally mandatory; the
+//! dispatchers in [`super`] still re-check the cached [`super::detect`]
+//! before calling.
+//!
+//! Numeric contract: identical to the AVX2 module — encode / decode /
+//! accumulate are bit-identical to the scalar kernels (no FMA, exact
+//! IEEE ops in the scalar order; `FRINTA` rounds ties away from zero,
+//! exactly `f32::round`), while the dot kernels reassociate channel sums
+//! into 4-wide lanes (f64-reference tolerance).
+
+#![allow(clippy::missing_safety_doc)] // module-level safety contract above
+
+use core::arch::aarch64::*;
+
+/// Dequantize 8 consecutive int8 channels into two 4-lane vectors.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn dequant8(row: *const i8, scales: *const f32) -> (float32x4_t, float32x4_t) {
+    let w16 = vmovl_s8(vld1_s8(row));
+    let f0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+    let f1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+    (vmulq_f32(f0, vld1q_f32(scales)), vmulq_f32(f1, vld1q_f32(scales.add(4))))
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_rows_i8(q: &[f32], blk: &[i8], scales: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    let mid = d / 8 * 8;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut ch = 0;
+        while ch < mid {
+            let (d0, d1) = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(q.as_ptr().add(ch)), d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(vld1q_f32(q.as_ptr().add(ch + 4)), d1));
+            ch += 8;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while ch < d {
+            sum += q[ch] * (row[ch] as f32 * scales[ch]);
+            ch += 1;
+        }
+        *o = sum;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn accumulate_rows_i8(w: &[f32], blk: &[i8], scales: &[f32], acc: &mut [f32]) {
+    let d = acc.len();
+    debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    let mid = d / 8 * 8;
+    for (r, &wr) in w.iter().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let wv = vdupq_n_f32(wr);
+        let mut ch = 0;
+        while ch < mid {
+            let (d0, d1) = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+            // mul + add (not FMA) keeps the per-channel op sequence
+            // bit-identical to the scalar kernels.
+            let a0 = vaddq_f32(vld1q_f32(acc.as_ptr().add(ch)), vmulq_f32(wv, d0));
+            let a1 = vaddq_f32(vld1q_f32(acc.as_ptr().add(ch + 4)), vmulq_f32(wv, d1));
+            vst1q_f32(acc.as_mut_ptr().add(ch), a0);
+            vst1q_f32(acc.as_mut_ptr().add(ch + 4), a1);
+            ch += 8;
+        }
+        while ch < d {
+            acc[ch] += wr * (row[ch] as f32 * scales[ch]);
+            ch += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_rows_f32(q: &[f32], blk: &[f32], out: &mut [f32]) {
+    let d = q.len();
+    debug_assert_eq!(blk.len(), out.len() * d, "slab shape mismatch");
+    let mid = d / 4 * 4;
+    for (r, o) in out.iter_mut().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let mut acc = vdupq_n_f32(0.0);
+        let mut ch = 0;
+        while ch < mid {
+            let v = vld1q_f32(row.as_ptr().add(ch));
+            acc = vaddq_f32(acc, vmulq_f32(vld1q_f32(q.as_ptr().add(ch)), v));
+            ch += 4;
+        }
+        let mut sum = vaddvq_f32(acc);
+        while ch < d {
+            sum += q[ch] * row[ch];
+            ch += 1;
+        }
+        *o = sum;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn accumulate_rows_f32(w: &[f32], blk: &[f32], acc: &mut [f32]) {
+    let d = acc.len();
+    debug_assert_eq!(blk.len(), w.len() * d, "slab shape mismatch");
+    let mid = d / 4 * 4;
+    for (r, &wr) in w.iter().enumerate() {
+        let row = &blk[r * d..(r + 1) * d];
+        let wv = vdupq_n_f32(wr);
+        let mut ch = 0;
+        while ch < mid {
+            let v = vld1q_f32(row.as_ptr().add(ch));
+            let a = vaddq_f32(vld1q_f32(acc.as_ptr().add(ch)), vmulq_f32(wv, v));
+            vst1q_f32(acc.as_mut_ptr().add(ch), a);
+            ch += 4;
+        }
+        while ch < d {
+            acc[ch] += wr * row[ch];
+            ch += 1;
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize_row_into(row: &[f32], scales: &[f32], out: &mut [i8]) {
+    debug_assert_eq!(row.len(), scales.len());
+    debug_assert_eq!(row.len(), out.len());
+    let n = row.len();
+    let mid = n / 4 * 4;
+    let qmax = vdupq_n_f32(crate::QMAX);
+    let nqmax = vdupq_n_f32(-crate::QMAX);
+    let zero = vdupq_n_f32(0.0);
+    let mut ibuf = [0i32; 4];
+    let mut ch = 0;
+    while ch < mid {
+        let v = vld1q_f32(row.as_ptr().add(ch));
+        let s = vld1q_f32(scales.as_ptr().add(ch));
+        let q = vdivq_f32(v, s);
+        // FRINTA rounds ties away from zero — exactly f32::round.
+        let r = vrndaq_f32(q);
+        let r = vbslq_f32(vceqq_f32(r, r), r, zero); // NaN -> 0
+        let r = vminq_f32(vmaxq_f32(r, nqmax), qmax);
+        let r = vbslq_f32(vcgtq_f32(s, zero), r, zero); // scale <= 0 -> 0
+        vst1q_s32(ibuf.as_mut_ptr(), vcvtq_s32_f32(r));
+        out[ch] = ibuf[0] as i8;
+        out[ch + 1] = ibuf[1] as i8;
+        out[ch + 2] = ibuf[2] as i8;
+        out[ch + 3] = ibuf[3] as i8;
+        ch += 4;
+    }
+    while ch < n {
+        out[ch] = crate::quant::quantize::quantize_one(row[ch], scales[ch]);
+        ch += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dequantize_row_into(row: &[i8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(row.len(), out.len());
+    debug_assert_eq!(scales.len(), out.len());
+    let n = out.len();
+    let mid = n / 8 * 8;
+    let mut ch = 0;
+    while ch < mid {
+        let (d0, d1) = dequant8(row.as_ptr().add(ch), scales.as_ptr().add(ch));
+        vst1q_f32(out.as_mut_ptr().add(ch), d0);
+        vst1q_f32(out.as_mut_ptr().add(ch + 4), d1);
+        ch += 8;
+    }
+    while ch < n {
+        out[ch] = row[ch] as f32 * scales[ch];
+        ch += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn quantize4_row_into(row: &[f32], scales: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(row.len() % 2, 0, "int4 rows must have even length");
+    debug_assert_eq!(row.len(), scales.len());
+    debug_assert_eq!(out.len() * 2, row.len());
+    let n = row.len();
+    let mid = n / 4 * 4;
+    let mut qbuf = [0.0f32; 4];
+    let mut ch = 0;
+    while ch < mid {
+        let v = vld1q_f32(row.as_ptr().add(ch));
+        let s = vld1q_f32(scales.as_ptr().add(ch));
+        vst1q_f32(qbuf.as_mut_ptr(), vdivq_f32(v, s));
+        for i in (0..4).step_by(2) {
+            let lo = super::code_i4(qbuf[i], scales[ch + i]) as u8 & 0x0F;
+            let hi = super::code_i4(qbuf[i + 1], scales[ch + i + 1]) as u8 & 0x0F;
+            out[(ch + i) / 2] = lo | (hi << 4);
+        }
+        ch += 4;
+    }
+    while ch < n {
+        let lo = crate::quant::int4::quantize_one4(row[ch], scales[ch]) as u8 & 0x0F;
+        let hi = crate::quant::int4::quantize_one4(row[ch + 1], scales[ch + 1]) as u8 & 0x0F;
+        out[ch / 2] = lo | (hi << 4);
+        ch += 2;
+    }
+}
+
+/// Widen 8 signed nibble values (already sign-extended to i8) and store
+/// `v[i] * scales[i]` to `out[0..8]`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn widen_mul_store(v: int8x8_t, scales: *const f32, out: *mut f32) {
+    let w16 = vmovl_s8(v);
+    let f0 = vcvtq_f32_s32(vmovl_s16(vget_low_s16(w16)));
+    let f1 = vcvtq_f32_s32(vmovl_s16(vget_high_s16(w16)));
+    vst1q_f32(out, vmulq_f32(f0, vld1q_f32(scales)));
+    vst1q_f32(out.add(4), vmulq_f32(f1, vld1q_f32(scales.add(4))));
+}
+
+#[target_feature(enable = "neon")]
+pub unsafe fn dequantize4_row_into(bytes: &[u8], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len() * 2, out.len());
+    debug_assert_eq!(scales.len(), out.len());
+    let nb = bytes.len();
+    let main_b = nb / 8 * 8;
+    let mut b = 0;
+    while b < main_b {
+        // 8 packed bytes -> 16 channels: split nibbles, sign-extend each
+        // 4-bit value via (v ^ 8) - 8, interleave back to channel order.
+        let raw = vld1_u8(bytes.as_ptr().add(b));
+        let lo4 = vand_u8(raw, vdup_n_u8(0x0F));
+        let hi4 = vshr_n_u8::<4>(raw);
+        let k8 = vdup_n_u8(8);
+        let sk8 = vreinterpret_s8_u8(k8);
+        let lo = vsub_s8(vreinterpret_s8_u8(veor_u8(lo4, k8)), sk8);
+        let hi = vsub_s8(vreinterpret_s8_u8(veor_u8(hi4, k8)), sk8);
+        let ch = b * 2;
+        widen_mul_store(vzip1_s8(lo, hi), scales.as_ptr().add(ch), out.as_mut_ptr().add(ch));
+        widen_mul_store(
+            vzip2_s8(lo, hi),
+            scales.as_ptr().add(ch + 8),
+            out.as_mut_ptr().add(ch + 8),
+        );
+        b += 8;
+    }
+    while b < nb {
+        let byte = bytes[b];
+        let lo = ((byte << 4) as i8) >> 4;
+        let hi = (byte as i8) >> 4;
+        let ch = 2 * b;
+        out[ch] = lo as f32 * scales[ch];
+        out[ch + 1] = hi as f32 * scales[ch + 1];
+        b += 1;
+    }
+}

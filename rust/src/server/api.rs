@@ -67,8 +67,10 @@ pub fn error_response(msg: &str) -> Json {
 /// shorthand: the uniform precision name, or "mixed"), the resolved
 /// `parallelism` worker count of the quantization runtime, the
 /// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`),
-/// and the decode data path (`attention_kernel` fused-kernel variant +
-/// whether zero-copy `paged_decode` is active).
+/// and the decode data path (`attention_kernel` fused-kernel variant,
+/// whether zero-copy `paged_decode` is active, and the `kernel_backend`
+/// knob — the ISA it resolved to is served at `GET /metrics` as
+/// `kernel_isa`).
 #[allow(clippy::too_many_arguments)]
 pub fn config_response(
     model: &str,
@@ -80,6 +82,7 @@ pub fn config_response(
     prefix_cache_blocks: usize,
     attention_kernel: &str,
     paged_decode: bool,
+    kernel_backend: &str,
     port: u16,
 ) -> Json {
     obj([
@@ -92,6 +95,7 @@ pub fn config_response(
         ("prefix_cache_blocks", prefix_cache_blocks.into()),
         ("attention_kernel", attention_kernel.into()),
         ("paged_decode", Json::Bool(paged_decode)),
+        ("kernel_backend", kernel_backend.into()),
         ("port", (port as usize).into()),
     ])
 }
@@ -140,6 +144,7 @@ mod tests {
             512,
             "vectorized",
             true,
+            "auto",
             8080,
         );
         assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
@@ -150,6 +155,7 @@ mod tests {
         assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(512));
         assert_eq!(j.get("attention_kernel").as_str(), Some("vectorized"));
         assert_eq!(j.get("paged_decode").as_bool(), Some(true));
+        assert_eq!(j.get("kernel_backend").as_str(), Some("auto"));
         assert_eq!(j.get("port").as_usize(), Some(8080));
     }
 

@@ -176,6 +176,7 @@ mod tests {
             0,
             "vectorized",
             true,
+            "auto",
             0,
         );
         let resp = get(&svc, "/config");

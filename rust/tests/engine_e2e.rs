@@ -105,8 +105,9 @@ fn int8_decode_matches_cpu_oracle() {
         vs[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 1).unwrap());
     }
 
-    let a = pjrt.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
-    let b = cpu.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let isa = kvq::quant::simd::default_isa();
+    let a = pjrt.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs, isa).unwrap();
+    let b = cpu.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs, isa).unwrap();
     let dl = max_abs_diff(&a.logits, &b.logits);
     assert!(dl < 5e-3, "decode logits diverge: {dl}");
     assert_eq!(argmax(&a.logits), argmax(&b.logits));
@@ -159,8 +160,9 @@ fn pallas_decode_matches_plain_xla_decode() {
         }
     }
 
-    let a = plain.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
-    let b = pallas.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs).unwrap();
+    let isa = kvq::quant::simd::default_isa();
+    let a = plain.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs, isa).unwrap();
+    let b = pallas.decode_i8(tokens[n], n, &kq, &ks, &vq, &vs, isa).unwrap();
     let dl = max_abs_diff(&a.logits, &b.logits);
     assert!(dl < 1e-3, "pallas vs plain decode: {dl}");
 }
@@ -187,8 +189,9 @@ fn fp32_decode_baseline_matches_cpu() {
             v[dst..dst + d].copy_from_slice(&pre.v[src..src + d]);
         }
     }
-    let a = pjrt.decode_f32(tokens[n], n, &k, &v).unwrap();
-    let b = cpu.decode_f32(tokens[n], n, &k, &v).unwrap();
+    let isa = kvq::quant::simd::default_isa();
+    let a = pjrt.decode_f32(tokens[n], n, &k, &v, isa).unwrap();
+    let b = cpu.decode_f32(tokens[n], n, &k, &v, isa).unwrap();
     let dl = max_abs_diff(&a.logits, &b.logits);
     assert!(dl < 5e-3, "fp32 decode diverges: {dl}");
 }
@@ -235,7 +238,9 @@ fn greedy_generation_trajectories_agree() {
                 ks[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 0).unwrap());
                 vs[li * h * d..(li + 1) * h * d].copy_from_slice(mgr.scales(id, li, 1).unwrap());
             }
-            let dec = backend.decode_i8(token, pos, &kq, &ks, &vq, &vs).unwrap();
+            let dec = backend
+                .decode_i8(token, pos, &kq, &ks, &vq, &vs, kvq::quant::simd::default_isa())
+                .unwrap();
             mgr.append_row(id, &dec.k_new, &dec.v_new).unwrap();
             token = argmax(&dec.logits) as i32;
             out.push(token);

@@ -405,3 +405,208 @@ fn prop_per_channel_bound_dominates_per_tensor_bound() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_simd_backend_matches_scalar_within_tolerance() {
+    // The kernel_backend contract, property-tested on whatever ISA this
+    // host detects (falls back to a scalar-vs-scalar dispatch check on
+    // hosts without SIMD): encode and decode emit bit-identical bytes,
+    // softmax-V accumulation is bit-identical, and the score-pass dot —
+    // the one kernel allowed to reassociate — stays within 1e-5-grade
+    // relative error of the f64 dequantize-then-dot reference.
+    use kvq::quant::simd::{self, Isa};
+    let isa = simd::KernelBackend::Simd.resolve_with(None);
+    check("simd vs scalar", 120, |g| {
+        let k = matrix_from(g);
+        let (rows, d) = (k.rows, k.cols);
+        let q8 = quant::quantize_fused(&k);
+        let mut qrow = vec![0.0f32; d];
+        let mut w = vec![0.0f32; rows];
+        for v in qrow.iter_mut() {
+            *v = g.f32_in(-1.0..1.0);
+        }
+        for v in w.iter_mut() {
+            *v = g.f32_in(0.0..1.0);
+        }
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+        // Encode: byte-identical on every backend.
+        let scales = quant::compute_scales(&k);
+        for t in 0..rows {
+            let mut scalar = vec![0i8; d];
+            let mut simd_out = vec![0i8; d];
+            quant::quantize_row_into(k.row(t), &scales, &mut scalar);
+            simd::quantize_row_into(isa, k.row(t), &scales, &mut simd_out);
+            ensure(scalar == simd_out, format!("encode diverged at row {t} ({rows}x{d})"))?;
+        }
+
+        // Decode: bit-identical.
+        let mut scalar_dec = vec![0.0f32; d];
+        let mut simd_dec = vec![0.0f32; d];
+        quant::dequantize::dequantize_row_into(&q8.data[..d], &q8.scales, &mut scalar_dec);
+        simd::dequantize_row_into(isa, &q8.data[..d], &q8.scales, &mut simd_dec);
+        ensure(bits(&scalar_dec) == bits(&simd_dec), "decode diverged")?;
+
+        // Accumulate: bit-identical (same per-channel op order).
+        let mut scalar_acc = vec![0.0f32; d];
+        let mut simd_acc = vec![0.0f32; d];
+        quant::attn::accumulate_rows_i8(Variant::Naive, &w, &q8.data, &q8.scales, &mut scalar_acc);
+        simd::accumulate_rows_i8(isa, Variant::Naive, &w, &q8.data, &q8.scales, &mut simd_acc);
+        ensure(bits(&scalar_acc) == bits(&simd_acc), "accumulate diverged")?;
+
+        // Dot: f64 reference within the serial-f32-sum style bound.
+        let mut got = vec![0.0f32; rows];
+        simd::dot_rows_i8(isa, Variant::Vectorized, &qrow, &q8.data, &q8.scales, &mut got);
+        for r in 0..rows {
+            let mut reference = 0.0f64;
+            let mut magnitude = 0.0f64;
+            for ch in 0..d {
+                let term =
+                    qrow[ch] as f64 * (q8.data[r * d + ch] as f64 * q8.scales[ch] as f64);
+                reference += term;
+                magnitude += term.abs();
+            }
+            let tol = 1e-5 * (d as f64) * magnitude + 1e-6;
+            ensure(
+                (got[r] as f64 - reference).abs() <= tol,
+                format!("row {r}: simd dot {} vs f64 ref {reference}", got[r]),
+            )?;
+        }
+
+        // INT4 (even d only): encode/decode bit-identical, fused dot in
+        // tolerance vs the scalar arm.
+        if d % 2 == 0 {
+            let q4 = quant::int4::quantize4(&k);
+            let bpr = d / 2;
+            let mut scalar_pack = vec![0u8; bpr];
+            let mut simd_pack = vec![0u8; bpr];
+            quant::int4::quantize4_row_into(k.row(0), &q4.scales, &mut scalar_pack);
+            simd::quantize4_row_into(isa, k.row(0), &q4.scales, &mut simd_pack);
+            ensure(scalar_pack == simd_pack, "int4 encode diverged")?;
+            let mut scalar_un = vec![0.0f32; d];
+            let mut simd_un = vec![0.0f32; d];
+            quant::int4::dequantize4_row_into(&q4.data[..bpr], &q4.scales, &mut scalar_un);
+            simd::dequantize4_row_into(isa, &q4.data[..bpr], &q4.scales, &mut simd_un);
+            ensure(bits(&scalar_un) == bits(&simd_un), "int4 decode diverged")?;
+            let mut scratch = Vec::new();
+            let mut scalar_dot = vec![0.0f32; rows];
+            let mut simd_dot = vec![0.0f32; rows];
+            simd::dot_rows_i4(
+                Isa::Scalar,
+                &qrow,
+                &q4.data,
+                &q4.scales,
+                &mut scratch,
+                &mut scalar_dot,
+            );
+            simd::dot_rows_i4(isa, &qrow, &q4.data, &q4.scales, &mut scratch, &mut simd_dot);
+            for r in 0..rows {
+                let tol = 1e-5 * scalar_dot[r].abs().max(1.0) * d as f32;
+                ensure(
+                    (scalar_dot[r] - simd_dot[r]).abs() <= tol,
+                    format!("int4 dot row {r} diverged beyond tolerance"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn simd_backend_pinned_head_dims() {
+    // The decode-relevant head_dim set from the issue: 1 and 3 (odd,
+    // below any vector width), 64 and 128 (the serving shapes), and 129
+    // (odd remainder past the widest chunk). Every codec path must agree
+    // with scalar per the contract at each shape.
+    use kvq::quant::simd::{self, Isa};
+    let isa = simd::detect();
+    for d in [1usize, 3, 64, 128, 129] {
+        for rows in [1usize, 7] {
+            let k = Fp32Matrix::random_normal(rows, d, 1.0, (d * 31 + rows) as u64);
+            let q8 = quant::quantize_fused(&k);
+            let scales = quant::compute_scales(&k);
+            let mut rng = kvq::util::rng::Rng::new(d as u64);
+            let mut q = vec![0.0f32; d];
+            let mut w = vec![0.0f32; rows];
+            rng.fill_uniform(&mut q, -1.0, 1.0);
+            rng.fill_uniform(&mut w, 0.0, 1.0);
+            let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+
+            for t in 0..rows {
+                let mut a = vec![0i8; d];
+                let mut b = vec![0i8; d];
+                quant::quantize_row_into(k.row(t), &scales, &mut a);
+                simd::quantize_row_into(isa, k.row(t), &scales, &mut b);
+                assert_eq!(a, b, "encode d={d} rows={rows} t={t}");
+            }
+            let mut a = vec![0.0f32; d];
+            let mut b = vec![0.0f32; d];
+            quant::dequantize::dequantize_row_into(&q8.data[..d], &q8.scales, &mut a);
+            simd::dequantize_row_into(isa, &q8.data[..d], &q8.scales, &mut b);
+            assert_eq!(bits(&a), bits(&b), "decode d={d}");
+
+            let mut acc_a = vec![0.5f32; d];
+            let mut acc_b = vec![0.5f32; d];
+            quant::attn::accumulate_rows_i8(
+                Variant::Vectorized,
+                &w,
+                &q8.data,
+                &q8.scales,
+                &mut acc_a,
+            );
+            simd::accumulate_rows_i8(
+                isa,
+                Variant::Vectorized,
+                &w,
+                &q8.data,
+                &q8.scales,
+                &mut acc_b,
+            );
+            assert_eq!(bits(&acc_a), bits(&acc_b), "accumulate d={d} rows={rows}");
+
+            let mut dot_b = vec![0.0f32; rows];
+            simd::dot_rows_i8(isa, Variant::Vectorized, &q, &q8.data, &q8.scales, &mut dot_b);
+            for r in 0..rows {
+                let mut reference = 0.0f64;
+                let mut magnitude = 0.0f64;
+                for ch in 0..d {
+                    let term =
+                        q[ch] as f64 * (q8.data[r * d + ch] as f64 * q8.scales[ch] as f64);
+                    reference += term;
+                    magnitude += term.abs();
+                }
+                let tol = 1e-5 * (d as f64) * magnitude + 1e-6;
+                assert!(
+                    (dot_b[r] as f64 - reference).abs() <= tol,
+                    "dot d={d} rows={rows} r={r}: {} vs {reference}",
+                    dot_b[r]
+                );
+            }
+
+            // INT4 at the even dims (policy forbids odd head_dim).
+            if d % 2 == 0 {
+                let q4 = quant::int4::quantize4(&k);
+                let mut scratch = Vec::new();
+                let mut acc4_a = vec![0.25f32; d];
+                let mut acc4_b = vec![0.25f32; d];
+                simd::accumulate_rows_i4(
+                    Isa::Scalar,
+                    &w,
+                    &q4.data,
+                    &q4.scales,
+                    &mut scratch,
+                    &mut acc4_a,
+                );
+                simd::accumulate_rows_i4(
+                    isa,
+                    &w,
+                    &q4.data,
+                    &q4.scales,
+                    &mut scratch,
+                    &mut acc4_b,
+                );
+                assert_eq!(bits(&acc4_a), bits(&acc4_b), "int4 accumulate d={d}");
+            }
+        }
+    }
+}

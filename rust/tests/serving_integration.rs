@@ -189,7 +189,8 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
     let tokens: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3];
     let n = 8;
     let pre = model.prefill(&tokens, n);
-    let (l32, ..) = model.decode_f32(tokens[n], n, &pre.k, &pre.v);
+    let isa = kvq::quant::simd::default_isa();
+    let (l32, ..) = model.decode_f32(tokens[n], n, &pre.k, &pre.v, isa);
 
     let decode_at = |policy: PolicySpec| -> Vec<f32> {
         let cfg = CacheConfig {
@@ -206,7 +207,8 @@ fn int4_decode_error_tracks_fp32_within_paper_bound() {
         let id = mgr.new_sequence();
         mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
         let view = mgr.view(id).unwrap();
-        let (logits, ..) = model.decode_paged(tokens[n], n, &view, Variant::Vectorized).unwrap();
+        let (logits, ..) =
+            model.decode_paged(tokens[n], n, &view, Variant::Vectorized, isa).unwrap();
         logits
     };
     let max_diff = |a: &[f32], b: &[f32]| {
