@@ -1,0 +1,446 @@
+//! Trace-driven load harness for the sharded serving front door.
+//!
+//! Replays a seed-deterministic [`Trace`] (bursty or Poisson arrivals,
+//! heavy-tailed prompt/output lengths, sessions, priority classes)
+//! against N engine shards behind the affine router, in two client
+//! models:
+//!
+//! - **open loop**: a dispatcher thread submits each request at its
+//!   trace timestamp regardless of completions (arrival-driven — the
+//!   model that actually exposes queueing delay under overload);
+//! - **closed loop**: W workers submit the next request only when their
+//!   previous one finishes (concurrency-driven).
+//!
+//! Latency is *client-observed*: TTFT runs from the submit call to the
+//! `First` event (so router overflow queueing counts), inter-token
+//! latency from each token event to the next. Reports p50/p99/p999 for
+//! both, plus throughput, preemption/spillover/overflow counts, and
+//! typed-rejection totals under overload.
+//!
+//! Flags: --smoke (CPU oracle, undersized pool, bursty overload trace,
+//!                 ≥2 shards; the CI load-smoke job runs this and emits
+//!                 BENCH_load_smoke.json)
+//!        --mode open|closed|both (default both)
+//!        --shards N --requests N --rate R --sessions N --workers N
+//!        --queue-depth N --overflow-depth N --seed N
+//!
+//! Emits `bench_results/BENCH_load_smoke.json` (smoke) or
+//! `BENCH_load.json` (full), schema kvq-bench-v1. Exits non-zero if any
+//! request is dropped or stuck: every submission must reach a terminal
+//! state (finished or typed-rejected) with zero transport errors.
+
+use kvq::bench::workload::{Arrivals, LengthDist, Trace, TraceConfig, TraceRequest};
+use kvq::bench::BenchReport;
+use kvq::coordinator::admission::AdmissionConfig;
+use kvq::coordinator::batcher::BatcherConfig;
+use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::request::{EventRx, FinishReason, TokenEvent};
+use kvq::coordinator::router::{
+    Affinity, RoutePolicy, Router, RouterConfig, SubmitError, SubmitOptions,
+};
+use kvq::kvcache::{PolicySpec, Precision};
+use kvq::model::runner::CpuBackend;
+use kvq::model::sample::SamplingParams;
+use kvq::model::weights::Weights;
+use kvq::model::ModelSpec;
+use kvq::util::args::Args;
+use kvq::util::json::Json;
+use kvq::util::stats::Summary;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How one request's stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Terminal {
+    /// Length/stop/capacity: the request ran and terminated normally.
+    Finished,
+    /// Typed admission rejection (`FinishReason::Rejected` → HTTP 429).
+    Rejected,
+    /// Typed saturation at submit (`SubmitError::Saturated` → HTTP 503).
+    Saturated,
+    /// Engine error or a dropped stream — always a harness failure.
+    Error,
+}
+
+/// Client-side record for one request.
+struct Outcome {
+    terminal: Terminal,
+    ttft_s: Option<f64>,
+    /// Gaps between consecutive token events (inter-token latency).
+    gaps: Vec<f64>,
+    tokens: usize,
+}
+
+/// Drain one stream, timing events as the client sees them.
+fn drive_stream(rx: &EventRx, submitted: Instant) -> Outcome {
+    let mut out =
+        Outcome { terminal: Terminal::Error, ttft_s: None, gaps: Vec::new(), tokens: 0 };
+    let mut last = submitted;
+    loop {
+        match rx.recv() {
+            Ok(TokenEvent::First { .. }) => {
+                // Client-observed TTFT: includes router overflow queueing
+                // and engine waiting time, not just prefill.
+                out.ttft_s = Some(submitted.elapsed().as_secs_f64());
+                last = Instant::now();
+                out.tokens += 1;
+            }
+            Ok(TokenEvent::Token(_)) => {
+                let now = Instant::now();
+                out.gaps.push((now - last).as_secs_f64());
+                last = now;
+                out.tokens += 1;
+            }
+            Ok(TokenEvent::Finished { reason, .. }) => {
+                out.terminal = match reason {
+                    FinishReason::Rejected(_) => Terminal::Rejected,
+                    FinishReason::Error(_) => Terminal::Error,
+                    _ => Terminal::Finished,
+                };
+                return out;
+            }
+            // Sender dropped without a Finished event: a lost stream.
+            Err(_) => return out,
+        }
+    }
+}
+
+fn submit_trace_req(
+    router: &Router,
+    tr: &TraceRequest,
+) -> Result<EventRx, SubmitError> {
+    let sampling = SamplingParams { temperature: 0.0, top_k: 0, seed: tr.seed };
+    router
+        .submit_with(
+            tr.prompt.clone(),
+            tr.max_new_tokens,
+            sampling,
+            SubmitOptions {
+                session: Some(tr.session.clone()),
+                priority: Some(tr.priority),
+                ..Default::default()
+            },
+        )
+        .map(|(_, rx)| rx)
+}
+
+/// Open loop: submit at trace timestamps, collect on per-request threads.
+fn run_open(router: &Arc<Router>, trace: &Trace) -> Vec<Outcome> {
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    let mut outcomes = Vec::new();
+    for tr in &trace.requests {
+        let wait = tr.at_s - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait));
+        }
+        let submitted = Instant::now();
+        match submit_trace_req(router, tr) {
+            Ok(rx) => {
+                joins.push(std::thread::spawn(move || drive_stream(&rx, submitted)))
+            }
+            Err(SubmitError::Saturated { .. }) => outcomes.push(Outcome {
+                terminal: Terminal::Saturated,
+                ttft_s: None,
+                gaps: Vec::new(),
+                tokens: 0,
+            }),
+            Err(e) => panic!("unexpected submit error in open loop: {e}"),
+        }
+    }
+    for j in joins {
+        outcomes.push(j.join().expect("collector thread panicked"));
+    }
+    outcomes
+}
+
+/// Closed loop: `workers` clients each submit-then-wait over a shared
+/// trace cursor; a saturated submit backs off and retries (closed-loop
+/// clients wait rather than walk away), bounded so the run cannot hang.
+fn run_closed(router: &Arc<Router>, trace: &Trace, workers: usize) -> Vec<Outcome> {
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let trace = Arc::new(trace.clone());
+    let joins: Vec<_> = (0..workers.max(1))
+        .map(|_| {
+            let router = Arc::clone(router);
+            let cursor = Arc::clone(&cursor);
+            let trace = Arc::clone(&trace);
+            std::thread::spawn(move || {
+                let mut outcomes = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= trace.requests.len() {
+                        return outcomes;
+                    }
+                    let tr = &trace.requests[i];
+                    let mut attempts = 0;
+                    let outcome = loop {
+                        let submitted = Instant::now();
+                        match submit_trace_req(&router, tr) {
+                            Ok(rx) => break drive_stream(&rx, submitted),
+                            Err(SubmitError::Saturated { retry_after_ms }) => {
+                                attempts += 1;
+                                if attempts >= 50 {
+                                    break Outcome {
+                                        terminal: Terminal::Saturated,
+                                        ttft_s: None,
+                                        gaps: Vec::new(),
+                                        tokens: 0,
+                                    };
+                                }
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_after_ms.min(20),
+                                ));
+                            }
+                            Err(e) => panic!("unexpected submit error in closed loop: {e}"),
+                        }
+                    };
+                    outcomes.push(outcome);
+                }
+            })
+        })
+        .collect();
+    joins
+        .into_iter()
+        .flat_map(|j| j.join().expect("worker thread panicked"))
+        .collect()
+}
+
+/// One shard fleet: engines + router + overflow pump.
+struct Fleet {
+    router: Arc<Router>,
+    handles: Vec<kvq::coordinator::EngineHandle>,
+    engine_joins: Vec<std::thread::JoinHandle<()>>,
+    pump: std::thread::JoinHandle<()>,
+}
+
+fn spawn_fleet(shards: usize, queue_depth: usize, overflow_depth: usize) -> Fleet {
+    // Deliberately undersized pool per shard (~2 worst-case sequences on
+    // test-tiny) with a small running cap: the overload shape that forces
+    // preemption inside shards and spillover/overflow between them.
+    let spec = ModelSpec::test_tiny();
+    let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
+    let num_blocks = blocks_per_seq * 2;
+    let mut router = Router::with_config(RouterConfig {
+        policy: RoutePolicy::LeastLoaded,
+        affinity: Affinity::Session,
+        queue_depth,
+        overflow_depth,
+    });
+    let mut handles = Vec::new();
+    let mut engine_joins = Vec::new();
+    for i in 0..shards {
+        let ecfg = EngineConfig {
+            quant_policy: PolicySpec::uniform(Precision::Int8),
+            num_blocks: Some(num_blocks),
+            seed: 0xA11CE, // identical shards: placement never changes tokens
+            batcher: BatcherConfig {
+                max_prefills_per_step: 2,
+                admission: AdmissionConfig { max_running: 4, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(ecfg, || {
+            let spec = ModelSpec::test_tiny();
+            let w = Weights::synthetic(&spec, 7);
+            Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+        });
+        router.add_engine(&format!("shard{i}"), h.clone());
+        handles.push(h);
+        engine_joins.push(join);
+    }
+    let router = Arc::new(router);
+    let pump = router.spawn_pump();
+    Fleet { router, handles, engine_joins, pump }
+}
+
+impl Fleet {
+    /// Drain engines and stop the pump; returns when every thread exits.
+    fn shutdown(self) {
+        self.router.stop_pump();
+        self.pump.join().expect("pump thread panicked");
+        for h in &self.handles {
+            h.drain();
+        }
+        for j in self.engine_joins {
+            j.join().expect("engine thread panicked");
+        }
+    }
+}
+
+/// Aggregate one scenario's outcomes into the report; returns
+/// (completed, rejected, saturated, errors).
+#[allow(clippy::too_many_arguments)]
+fn record_scenario(
+    report: &mut BenchReport,
+    label: &str,
+    trace_len: usize,
+    outcomes: &[Outcome],
+    fleet: &Fleet,
+    wall_s: f64,
+    shards: usize,
+) -> (usize, usize, usize, usize) {
+    let mut ttft = Summary::new();
+    let mut itl = Summary::new();
+    let mut tokens = 0usize;
+    let (mut completed, mut rejected, mut saturated, mut errors) = (0, 0, 0, 0);
+    for o in outcomes {
+        match o.terminal {
+            Terminal::Finished => completed += 1,
+            Terminal::Rejected => rejected += 1,
+            Terminal::Saturated => saturated += 1,
+            Terminal::Error => errors += 1,
+        }
+        if let Some(t) = o.ttft_s {
+            ttft.add(t);
+        }
+        for &g in &o.gaps {
+            itl.add(g);
+        }
+        tokens += o.tokens;
+    }
+    let stats = fleet.router.stats();
+    let (mut preemptions, mut resumes) = (0u64, 0u64);
+    for (_, h) in fleet.router.shards() {
+        let snap = h.metrics.snapshot();
+        preemptions += snap.preemptions;
+        resumes += snap.resumes;
+    }
+    report.add(
+        "load",
+        label,
+        None,
+        &[
+            ("requests", Json::Num(trace_len as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("wall_s", Json::Num(wall_s)),
+            ("tok_per_s", Json::Num(tokens as f64 / wall_s.max(1e-9))),
+            ("tokens", Json::Num(tokens as f64)),
+            ("completed", Json::Num(completed as f64)),
+            ("rejected_admission", Json::Num(rejected as f64)),
+            ("rejected_saturated", Json::Num(saturated as f64)),
+            ("errors", Json::Num(errors as f64)),
+            ("ttft_p50_s", Json::Num(ttft.percentile(50.0))),
+            ("ttft_p99_s", Json::Num(ttft.percentile(99.0))),
+            ("ttft_p999_s", Json::Num(ttft.percentile(99.9))),
+            ("itl_p50_s", Json::Num(itl.percentile(50.0))),
+            ("itl_p99_s", Json::Num(itl.percentile(99.0))),
+            ("itl_p999_s", Json::Num(itl.percentile(99.9))),
+            ("preemptions", Json::Num(preemptions as f64)),
+            ("resumes", Json::Num(resumes as f64)),
+            ("spillovers", Json::Num(stats.spillovers as f64)),
+            ("overflow_enqueued", Json::Num(stats.overflow_enqueued as f64)),
+            ("overflow_dispatched", Json::Num(stats.overflow_dispatched as f64)),
+            ("overflow_peak", Json::Num(stats.overflow_peak as f64)),
+            ("router_rejected_saturated", Json::Num(stats.rejected_saturated as f64)),
+        ],
+    );
+    println!(
+        "[{label}] {completed} completed / {rejected} rejected(429) / {saturated} \
+         saturated(503) / {errors} errors | ttft p50 {:.1}ms p99 {:.1}ms p999 {:.1}ms | \
+         itl p50 {:.2}ms p99 {:.2}ms | {} spillovers, {} overflowed, {preemptions} preemptions",
+        ttft.percentile(50.0) * 1e3,
+        ttft.percentile(99.0) * 1e3,
+        ttft.percentile(99.9) * 1e3,
+        itl.percentile(50.0) * 1e3,
+        itl.percentile(99.0) * 1e3,
+        stats.spillovers,
+        stats.overflow_enqueued,
+    );
+    (completed, rejected, saturated, errors)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let smoke = args.has("smoke");
+    let shards = args.usize_or("shards", 2).max(1);
+    let requests = args.usize_or("requests", if smoke { 48 } else { 256 });
+    let rate = args.f64_or("rate", 300.0);
+    let sessions = args.usize_or("sessions", 6);
+    let workers = args.usize_or("workers", 8);
+    let queue_depth = args.usize_or("queue-depth", 6);
+    let overflow_depth = args.usize_or("overflow-depth", 16);
+    let seed = args.u64_or("seed", 0x10AD);
+    let mode = args.str_or("mode", "both");
+
+    // Heavy-tailed lengths bounded so the largest prompt plus the
+    // largest output budget stays strictly inside the oracle model's
+    // max_seq (the cache bails at the exact boundary).
+    let spec = ModelSpec::test_tiny();
+    let prompt_hi = spec.max_seq * 5 / 8;
+    let out_hi = (spec.max_seq - prompt_hi) / 2;
+    let tcfg = TraceConfig {
+        requests,
+        arrivals: Arrivals::Bursty { rate, on_s: 0.05, off_s: 0.05 },
+        prompt_len: LengthDist::Pareto { lo: 4, hi: prompt_hi, alpha: 1.2 },
+        output_len: LengthDist::Uniform(2, out_hi),
+        sessions,
+        vocab: spec.vocab,
+        seed,
+        ..Default::default()
+    };
+    let trace = Trace::generate(&tcfg);
+
+    let mut report = BenchReport::new(if smoke { "load_smoke" } else { "load" });
+    report.env("smoke", Json::Bool(smoke));
+    report.env("shards", Json::Num(shards as f64));
+    report.env("requests", Json::Num(requests as f64));
+    report.env("rate_per_s", Json::Num(rate));
+    report.env("queue_depth", Json::Num(queue_depth as f64));
+    report.env("overflow_depth", Json::Num(overflow_depth as f64));
+    report.env("seed", Json::Num(seed as f64));
+    report.env("trace_duration_s", Json::Num(trace.duration_s()));
+
+    let mut totals = (0usize, 0usize, 0usize, 0usize);
+    let mut ran = 0usize;
+    for m in ["open", "closed"] {
+        if mode != "both" && mode != m {
+            continue;
+        }
+        ran += 1;
+        let fleet = spawn_fleet(shards, queue_depth, overflow_depth);
+        let t0 = Instant::now();
+        let outcomes = if m == "open" {
+            run_open(&fleet.router, &trace)
+        } else {
+            run_closed(&fleet.router, &trace, workers)
+        };
+        let wall = t0.elapsed().as_secs_f64();
+        let (c, r, s, e) =
+            record_scenario(&mut report, m, trace.len(), &outcomes, &fleet, wall, shards);
+        // The zero-dropped/zero-stuck contract the CI load-smoke job
+        // relies on: every submission reached a terminal state, typed.
+        anyhow::ensure!(
+            outcomes.len() == trace.len(),
+            "[{m}] lost requests: {} outcomes for {} submissions",
+            outcomes.len(),
+            trace.len()
+        );
+        anyhow::ensure!(e == 0, "[{m}] {e} requests errored or lost their stream");
+        anyhow::ensure!(
+            c + r + s == trace.len(),
+            "[{m}] terminal states don't cover the trace: {c}+{r}+{s} != {}",
+            trace.len()
+        );
+        let stats = fleet.router.stats();
+        anyhow::ensure!(
+            stats.overflow_len == 0,
+            "[{m}] overflow queue still holds {} parked requests",
+            stats.overflow_len
+        );
+        fleet.shutdown();
+        totals = (totals.0 + c, totals.1 + r, totals.2 + s, totals.3 + e);
+    }
+    anyhow::ensure!(ran > 0, "--mode must be open, closed, or both");
+
+    let path = report.write()?;
+    println!("[json] {path}");
+    println!(
+        "[load_harness] ok: {} completed, {} rejected(429), {} saturated(503), 0 dropped/stuck \
+         across {ran} scenario(s) on {shards} shards",
+        totals.0, totals.1, totals.2
+    );
+    Ok(())
+}

@@ -1,6 +1,11 @@
-//! Workload generation for the kernel benches and the serving bench.
+//! Workload generation for the kernel benches and the serving bench:
+//! kernel matrices, the legacy Poisson prompt stream, and the
+//! trace-driven load model ([`Trace`]) the sharded load harness replays
+//! — bursty arrivals, heavy-tailed lengths, sessions, priority classes,
+//! all seed-deterministic.
 
 use crate::config::shapes::BenchShape;
+use crate::coordinator::request::Priority;
 use crate::quant::Fp32Matrix;
 use crate::util::rng::Rng;
 
@@ -64,6 +69,179 @@ impl ServingWorkload {
     }
 }
 
+/// Arrival process for the trace generator.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Memoryless arrivals at `rate` req/s.
+    Poisson { rate: f64 },
+    /// On/off bursts: Poisson at `rate` during `on_s`-second windows,
+    /// silence for `off_s` between them — the overload shape that
+    /// actually exercises spillover and the overflow queue.
+    Bursty { rate: f64, on_s: f64, off_s: f64 },
+}
+
+impl Arrivals {
+    /// Map cumulative *active* seconds onto wall-clock seconds: bursty
+    /// traffic is a Poisson process on the active timeline with the off
+    /// windows spliced in.
+    fn wall_clock(&self, active_s: f64) -> f64 {
+        match *self {
+            Arrivals::Poisson { .. } => active_s,
+            Arrivals::Bursty { on_s, off_s, .. } => {
+                let cycles = (active_s / on_s).floor();
+                cycles * (on_s + off_s) + (active_s - cycles * on_s)
+            }
+        }
+    }
+
+    fn rate(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } | Arrivals::Bursty { rate, .. } => rate,
+        }
+    }
+}
+
+/// Token-length distribution for prompts and output budgets.
+#[derive(Debug, Clone, Copy)]
+pub enum LengthDist {
+    Fixed(usize),
+    /// Inclusive uniform range.
+    Uniform(usize, usize),
+    /// Bounded Pareto on `[lo, hi]` with tail index `alpha` — the
+    /// heavy-tailed shape of real prompt/output lengths (many short, a
+    /// fat tail of huge ones). Smaller `alpha` = heavier tail.
+    Pareto { lo: usize, hi: usize, alpha: f64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Uniform(lo, hi) => rng.range(lo as i64, hi as i64) as usize,
+            LengthDist::Pareto { lo, hi, alpha } => {
+                // Inverse-CDF of the bounded Pareto.
+                let (l, h) = (lo.max(1) as f64, hi.max(lo.max(1)) as f64);
+                let u = rng.next_f64().min(1.0 - 1e-12);
+                let x = l / (1.0 - u * (1.0 - (l / h).powf(alpha))).powf(1.0 / alpha);
+                (x as usize).clamp(lo.max(1), hi)
+            }
+        }
+    }
+}
+
+/// One request in a load trace.
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    /// Arrival offset in seconds from trace start.
+    pub at_s: f64,
+    /// Session key (affinity routing groups these onto one shard).
+    pub session: String,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub priority: Priority,
+    /// Per-request sampling seed.
+    pub seed: u64,
+}
+
+/// Trace generator configuration.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub requests: usize,
+    pub arrivals: Arrivals,
+    pub prompt_len: LengthDist,
+    pub output_len: LengthDist,
+    /// Distinct session keys; requests draw a session uniformly, so
+    /// expected per-session request count is `requests / sessions`.
+    pub sessions: usize,
+    /// Priority classes with relative weights (empty = all Normal).
+    pub priorities: Vec<(Priority, f64)>,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            requests: 64,
+            arrivals: Arrivals::Poisson { rate: 50.0 },
+            prompt_len: LengthDist::Pareto { lo: 4, hi: 64, alpha: 1.5 },
+            output_len: LengthDist::Uniform(4, 16),
+            sessions: 8,
+            priorities: vec![
+                (Priority::Interactive, 0.3),
+                (Priority::Normal, 0.5),
+                (Priority::Batch, 0.2),
+            ],
+            vocab: 64,
+            seed: 0x7ACE,
+        }
+    }
+}
+
+/// A fully materialized, seed-deterministic load trace.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub requests: Vec<TraceRequest>,
+}
+
+impl Trace {
+    pub fn generate(cfg: &TraceConfig) -> Trace {
+        let mut rng = Rng::new(cfg.seed ^ 0x7ACE_D00D);
+        let total_w: f64 = cfg.priorities.iter().map(|(_, w)| w.max(0.0)).sum();
+        let mut active = 0.0;
+        let mut requests = Vec::with_capacity(cfg.requests);
+        for i in 0..cfg.requests {
+            active += rng.exponential(cfg.arrivals.rate());
+            let at_s = cfg.arrivals.wall_clock(active);
+            let session = format!("s{}", rng.below(cfg.sessions.max(1) as u64));
+            let plen = cfg.prompt_len.sample(&mut rng).max(1);
+            let prompt =
+                (0..plen).map(|_| rng.below(cfg.vocab as u64) as i32).collect::<Vec<_>>();
+            let max_new_tokens = cfg.output_len.sample(&mut rng).max(1);
+            let priority = if total_w <= 0.0 {
+                Priority::Normal
+            } else {
+                let mut draw = rng.next_f64() * total_w;
+                let mut picked = Priority::Normal;
+                for (p, w) in &cfg.priorities {
+                    draw -= w.max(0.0);
+                    if draw <= 0.0 {
+                        picked = *p;
+                        break;
+                    }
+                }
+                picked
+            };
+            requests.push(TraceRequest {
+                at_s,
+                session,
+                prompt,
+                max_new_tokens,
+                priority,
+                seed: cfg.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            });
+        }
+        Trace { requests }
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Wall-clock span of the trace (arrival of the last request).
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.at_s).unwrap_or(0.0)
+    }
+
+    pub fn truncate(&mut self, n: usize) {
+        self.requests.truncate(n);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +272,85 @@ mod tests {
         // Mean inter-arrival ≈ 1/rate.
         let mean = w.arrivals.last().unwrap() / 50.0;
         assert!((mean - 0.1).abs() < 0.05, "mean gap {mean}");
+    }
+
+    #[test]
+    fn traces_are_seed_deterministic() {
+        let cfg = TraceConfig::default();
+        let a = Trace::generate(&cfg);
+        let b = Trace::generate(&cfg);
+        assert_eq!(a.len(), cfg.requests);
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.session, y.session);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.seed, y.seed);
+        }
+        let c = Trace::generate(&TraceConfig { seed: 99, ..cfg });
+        assert!(a.requests.iter().zip(&c.requests).any(|(x, y)| x.prompt != y.prompt));
+    }
+
+    #[test]
+    fn trace_arrivals_monotone_and_sessions_bounded() {
+        let t = Trace::generate(&TraceConfig {
+            requests: 200,
+            sessions: 4,
+            ..Default::default()
+        });
+        assert!(t.requests.windows(2).all(|p| p[0].at_s <= p[1].at_s));
+        for r in &t.requests {
+            assert!(["s0", "s1", "s2", "s3"].contains(&r.session.as_str()), "{}", r.session);
+            assert!(!r.prompt.is_empty());
+            assert!(r.max_new_tokens >= 1);
+        }
+        assert!(t.duration_s() > 0.0);
+    }
+
+    #[test]
+    fn bursty_arrivals_have_gaps() {
+        // 50 req/s over 0.1s-on / 0.5s-off cycles: arrivals cluster in
+        // the on-windows, so some consecutive gap spans an off period.
+        let t = Trace::generate(&TraceConfig {
+            requests: 50,
+            arrivals: Arrivals::Bursty { rate: 50.0, on_s: 0.1, off_s: 0.5 },
+            seed: 11,
+            ..Default::default()
+        });
+        let max_gap = t
+            .requests
+            .windows(2)
+            .map(|p| p[1].at_s - p[0].at_s)
+            .fold(0.0f64, f64::max);
+        assert!(max_gap >= 0.5, "expected an off-window gap, max {max_gap}");
+        // And the wall-clock mapping keeps ordering.
+        assert!(t.requests.windows(2).all(|p| p[0].at_s <= p[1].at_s));
+    }
+
+    #[test]
+    fn pareto_lengths_are_bounded_and_heavy_tailed() {
+        let mut rng = Rng::new(5);
+        let d = LengthDist::Pareto { lo: 4, hi: 512, alpha: 1.2 };
+        let samples: Vec<usize> = (0..2000).map(|_| d.sample(&mut rng)).collect();
+        assert!(samples.iter().all(|&n| (4..=512).contains(&n)));
+        let short = samples.iter().filter(|&&n| n <= 16).count();
+        let long = samples.iter().filter(|&&n| n >= 128).count();
+        assert!(short > samples.len() / 2, "mass concentrates low: {short}");
+        assert!(long > 0, "but the tail reaches high");
+    }
+
+    #[test]
+    fn priority_mix_follows_weights() {
+        let t = Trace::generate(&TraceConfig {
+            requests: 500,
+            priorities: vec![(Priority::Interactive, 0.8), (Priority::Batch, 0.2)],
+            ..Default::default()
+        });
+        let inter =
+            t.requests.iter().filter(|r| r.priority == Priority::Interactive).count();
+        let batch = t.requests.iter().filter(|r| r.priority == Priority::Batch).count();
+        assert_eq!(inter + batch, 500, "only the configured classes appear");
+        assert!(inter > 300 && batch > 40, "≈80/20 split, got {inter}/{batch}");
     }
 }

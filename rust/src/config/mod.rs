@@ -2,16 +2,25 @@
 //!
 //! Two config surfaces:
 //! * [`ServeConfig`] — everything the `kvq serve`/`serve_demo` path needs
-//!   (model, precision, cache sizing, batching, HTTP port). Loadable from
-//!   a JSON file (`--config path`) with CLI flags taking precedence.
+//!   (model, precision, cache sizing, batching, sharding, HTTP port).
+//!   Loadable from a JSON file (`--config path`) with CLI flags taking
+//!   precedence.
 //! * [`shapes`] — the shared bench-shape registry
 //!   (`configs/bench_shapes.json`), the same file aot.py lowers from, so
 //!   Rust benches and Python artifacts can never drift apart.
+//!
+//! Every knob has exactly one home: [`ServeConfig::set`] is the single
+//! edit site that knows a key's spelling, coercion, and validation. JSON
+//! files, CLI flags (via the [`CLI_FLAGS`] alias table), and the
+//! [`ServeConfigBuilder`] all funnel through it, and `GET /config`
+//! renders from the struct — adding a knob is one `set` arm + one flag
+//! alias + one line in the response, instead of four hand-kept sites.
 
 pub mod shapes;
 
 use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
+use crate::coordinator::router::{Affinity, RoutePolicy, RouterConfig};
 use crate::kvcache::{PolicySpec, Precision};
 use crate::model::runner::DecodeKernel;
 use crate::quant::simd::KernelBackend;
@@ -36,6 +45,13 @@ impl Backend {
             "cpu" | "cpu-ref" => Backend::CpuRef,
             _ => return None,
         })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::CpuRef => "cpu",
+        }
     }
 }
 
@@ -80,6 +96,20 @@ pub struct ServeConfig {
     /// reproduces legacy bytes exactly. The selected ISA shows up at
     /// `GET /metrics` as `kernel_isa`.
     pub kernel_backend: KernelBackend,
+    /// Engine shard count. Each shard owns its own block pool, prefix
+    /// cache, and engine thread; the router front door spreads sessions
+    /// across them (`--shards`).
+    pub shards: usize,
+    /// Home-shard selection: `session` (default; hash of the client
+    /// session key, prompt-prefix fallback), `prefix`, or `none`
+    /// (pure least-loaded dispatch).
+    pub affinity: Affinity,
+    /// Per-shard admission bound: live depth at which a shard stops
+    /// taking new requests (spillover, then overflow). 0 = unbounded.
+    pub queue_depth: usize,
+    /// Router overflow queue capacity once every shard is saturated;
+    /// beyond it, submissions get a typed 503.
+    pub overflow_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -101,11 +131,53 @@ impl Default for ServeConfig {
             attention_kernel: Variant::Vectorized,
             paged_decode: true,
             kernel_backend: KernelBackend::Auto,
+            shards: 1,
+            affinity: Affinity::Session,
+            queue_depth: 0,
+            overflow_depth: 256,
         }
     }
 }
 
+/// CLI flag → config key aliases, applied in order (so `--quant-policy`
+/// beats `--precision` regardless of argv order, matching the JSON
+/// later-key-wins rule). Legacy spellings (`--threads`, `--concurrency`,
+/// `--artifacts`, `--max-prefills`) keep working here.
+pub const CLI_FLAGS: &[(&str, &str)] = &[
+    ("model", "model"),
+    ("backend", "backend"),
+    ("precision", "precision"),
+    ("quant-policy", "quant_policy"),
+    ("decode-kernel", "decode_kernel"),
+    ("artifacts", "artifact_dir"),
+    ("artifact-dir", "artifact_dir"),
+    ("weight-seed", "weight_seed"),
+    ("num-blocks", "num_blocks"),
+    ("concurrency", "expected_concurrency"),
+    ("scale-margin", "scale_margin"),
+    ("port", "port"),
+    ("threads", "parallelism"),
+    ("admission-mode", "admission_mode"),
+    ("prefix-cache-blocks", "prefix_cache_blocks"),
+    ("attention-kernel", "attention_kernel"),
+    ("paged-decode", "paged_decode"),
+    ("kernel-backend", "kernel_backend"),
+    ("max-running", "max_running"),
+    ("max-waiting", "max_waiting"),
+    ("watermark", "watermark"),
+    ("max-prefills", "max_prefills_per_step"),
+    ("max-decode-batch", "max_decode_batch"),
+    ("shards", "shards"),
+    ("affinity", "affinity"),
+    ("queue-depth", "queue_depth"),
+    ("overflow-depth", "overflow_depth"),
+];
+
 impl ServeConfig {
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder { cfg: ServeConfig::default() }
+    }
+
     /// Load from a JSON file (missing keys keep defaults).
     pub fn from_file(path: &str) -> Result<ServeConfig> {
         let text =
@@ -116,151 +188,104 @@ impl ServeConfig {
         Ok(c)
     }
 
+    /// Set one knob by its JSON key. Returns `Ok(false)` for unknown
+    /// keys (the caller decides whether that's an error); bad values
+    /// error. String values are coerced for numeric/bool knobs so the
+    /// CLI path reuses the same arms.
+    pub fn set(&mut self, key: &str, v: &Json) -> Result<bool> {
+        match key {
+            "model" => self.model = str_val(key, v)?.to_string(),
+            "backend" => {
+                let s = str_val(key, v)?;
+                self.backend = Backend::parse(s).ok_or_else(|| anyhow!("bad backend {s:?}"))?;
+            }
+            "precision" => {
+                let s = str_val(key, v)?;
+                let p = Precision::parse(s).ok_or_else(|| anyhow!("bad precision {s:?}"))?;
+                self.quant_policy = PolicySpec::uniform(p);
+            }
+            "quant_policy" => {
+                let s = str_val(key, v)?;
+                self.quant_policy =
+                    PolicySpec::parse(s).with_context(|| format!("bad quant_policy {s:?}"))?;
+            }
+            "decode_kernel" => {
+                self.decode_kernel = match str_val(key, v)? {
+                    "plain" | "xla" => DecodeKernel::PlainXla,
+                    "pallas" => DecodeKernel::Pallas,
+                    s => return Err(anyhow!("bad decode_kernel {s:?}")),
+                };
+            }
+            "artifact_dir" => self.artifact_dir = str_val(key, v)?.to_string(),
+            "weight_seed" => self.weight_seed = usize_val(key, v)? as u64,
+            "num_blocks" => self.num_blocks = Some(usize_val(key, v)?),
+            "expected_concurrency" => self.expected_concurrency = usize_val(key, v)?,
+            "scale_margin" => self.scale_margin = f64_val(key, v)? as f32,
+            "port" => self.port = usize_val(key, v)? as u16,
+            "parallelism" => self.parallelism = usize_val(key, v)?,
+            "admission_mode" => {
+                let s = str_val(key, v)?;
+                self.batcher.admission.mode =
+                    AdmissionMode::parse(s).ok_or_else(|| anyhow!("bad admission_mode {s:?}"))?;
+            }
+            "prefix_cache_blocks" => self.prefix_cache_blocks = usize_val(key, v)?,
+            "attention_kernel" => {
+                let s = str_val(key, v)?;
+                self.attention_kernel =
+                    Variant::from_name(s).ok_or_else(|| anyhow!("bad attention_kernel {s:?}"))?;
+            }
+            "paged_decode" => self.paged_decode = bool_val(key, v)?,
+            "kernel_backend" => {
+                let s = str_val(key, v)?;
+                self.kernel_backend = KernelBackend::parse(s)
+                    .ok_or_else(|| anyhow!("bad kernel_backend {s:?} (auto|scalar|simd)"))?;
+            }
+            "max_running" => self.batcher.admission.max_running = usize_val(key, v)?,
+            "max_waiting" => self.batcher.admission.max_waiting = usize_val(key, v)?,
+            "watermark" => self.batcher.admission.watermark = f64_val(key, v)?,
+            "max_prefills_per_step" => self.batcher.max_prefills_per_step = usize_val(key, v)?,
+            "max_decode_batch" => self.batcher.max_decode_batch = usize_val(key, v)?,
+            "shards" => self.shards = usize_val(key, v)?.max(1),
+            "affinity" => {
+                let s = str_val(key, v)?;
+                self.affinity = Affinity::parse(s)
+                    .ok_or_else(|| anyhow!("bad affinity {s:?} (session|prefix|none)"))?;
+            }
+            "queue_depth" => self.queue_depth = usize_val(key, v)?,
+            "overflow_depth" => self.overflow_depth = usize_val(key, v)?,
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// Apply a JSON document. Unknown keys are ignored (configs are
+    /// shared with Python tooling); known keys with bad values error.
+    /// Keys apply in document (alphabetical) order, so `quant_policy`
+    /// wins over the legacy `precision` shorthand.
     pub fn apply_json(&mut self, j: &Json) -> Result<()> {
-        if let Some(v) = j.get("model").as_str() {
-            self.model = v.to_string();
-        }
-        if let Some(v) = j.get("backend").as_str() {
-            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad backend {v:?}"))?;
-        }
-        if let Some(v) = j.get("precision").as_str() {
-            let p = Precision::parse(v).ok_or_else(|| anyhow!("bad precision {v:?}"))?;
-            self.quant_policy = PolicySpec::uniform(p);
-        }
-        if let Some(v) = j.get("quant_policy").as_str() {
-            self.quant_policy =
-                PolicySpec::parse(v).with_context(|| format!("bad quant_policy {v:?}"))?;
-        }
-        if let Some(v) = j.get("decode_kernel").as_str() {
-            self.decode_kernel = match v {
-                "plain" | "xla" => DecodeKernel::PlainXla,
-                "pallas" => DecodeKernel::Pallas,
-                _ => return Err(anyhow!("bad decode_kernel {v:?}")),
-            };
-        }
-        if let Some(v) = j.get("artifact_dir").as_str() {
-            self.artifact_dir = v.to_string();
-        }
-        if let Some(v) = j.get("weight_seed").as_usize() {
-            self.weight_seed = v as u64;
-        }
-        if let Some(v) = j.get("num_blocks").as_usize() {
-            self.num_blocks = Some(v);
-        }
-        if let Some(v) = j.get("expected_concurrency").as_usize() {
-            self.expected_concurrency = v;
-        }
-        if let Some(v) = j.get("scale_margin").as_f64() {
-            self.scale_margin = v as f32;
-        }
-        if let Some(v) = j.get("port").as_usize() {
-            self.port = v as u16;
-        }
-        if let Some(v) = j.get("parallelism").as_usize() {
-            self.parallelism = v;
-        }
-        if let Some(v) = j.get("admission_mode").as_str() {
-            self.batcher.admission.mode =
-                AdmissionMode::parse(v).ok_or_else(|| anyhow!("bad admission_mode {v:?}"))?;
-        }
-        if let Some(v) = j.get("prefix_cache_blocks").as_usize() {
-            self.prefix_cache_blocks = v;
-        }
-        if let Some(v) = j.get("attention_kernel").as_str() {
-            self.attention_kernel =
-                Variant::from_name(v).ok_or_else(|| anyhow!("bad attention_kernel {v:?}"))?;
-        }
-        if let Some(v) = j.get("paged_decode").as_bool() {
-            self.paged_decode = v;
-        }
-        if let Some(v) = j.get("kernel_backend").as_str() {
-            self.kernel_backend = KernelBackend::parse(v)
-                .ok_or_else(|| anyhow!("bad kernel_backend {v:?} (auto|scalar|simd)"))?;
-        }
-        if let Some(v) = j.get("max_running").as_usize() {
-            self.batcher.admission.max_running = v;
-        }
-        if let Some(v) = j.get("max_waiting").as_usize() {
-            self.batcher.admission.max_waiting = v;
-        }
-        if let Some(v) = j.get("watermark").as_f64() {
-            self.batcher.admission.watermark = v;
-        }
-        if let Some(v) = j.get("max_prefills_per_step").as_usize() {
-            self.batcher.max_prefills_per_step = v;
-        }
-        if let Some(v) = j.get("max_decode_batch").as_usize() {
-            self.batcher.max_decode_batch = v;
+        let Json::Obj(map) = j else { return Ok(()) };
+        for (k, v) in map {
+            if matches!(v, Json::Null) {
+                continue;
+            }
+            self.set(k, v)?;
         }
         Ok(())
     }
 
-    /// Apply CLI overrides (flags win over file values).
+    /// Apply CLI overrides (flags win over file values) via the
+    /// [`CLI_FLAGS`] alias table.
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
-        if let Some(v) = args.get("model") {
-            self.model = v.to_string();
+        for &(flag, key) in CLI_FLAGS {
+            if let Some(v) = args.get(flag) {
+                let jv = Json::Str(v.to_string());
+                self.set(key, &jv).with_context(|| format!("--{flag}"))?;
+            }
         }
-        if let Some(v) = args.get("backend") {
-            self.backend = Backend::parse(v).ok_or_else(|| anyhow!("bad --backend {v:?}"))?;
-        }
-        if let Some(v) = args.get("precision") {
-            let p = Precision::parse(v).ok_or_else(|| anyhow!("bad --precision {v:?}"))?;
-            self.quant_policy = PolicySpec::uniform(p);
-        }
-        if let Some(v) = args.get("quant-policy") {
-            self.quant_policy =
-                PolicySpec::parse(v).with_context(|| format!("bad --quant-policy {v:?}"))?;
-        }
-        if let Some(v) = args.get("decode-kernel") {
-            self.decode_kernel = match v {
-                "plain" | "xla" => DecodeKernel::PlainXla,
-                "pallas" => DecodeKernel::Pallas,
-                _ => return Err(anyhow!("bad --decode-kernel {v:?}")),
-            };
-        }
-        if let Some(v) = args.get("artifacts") {
-            self.artifact_dir = v.to_string();
-        }
-        if args.has("num-blocks") {
-            self.num_blocks = Some(args.usize_or("num-blocks", 0));
-        }
-        self.weight_seed = args.u64_or("weight-seed", self.weight_seed);
-        self.expected_concurrency =
-            args.usize_or("concurrency", self.expected_concurrency);
-        self.scale_margin = args.f64_or("scale-margin", self.scale_margin as f64) as f32;
-        self.port = args.usize_or("port", self.port as usize) as u16;
-        self.parallelism = args.usize_or("threads", self.parallelism);
-        if let Some(v) = args.get("admission-mode") {
-            self.batcher.admission.mode =
-                AdmissionMode::parse(v).ok_or_else(|| anyhow!("bad --admission-mode {v:?}"))?;
-        }
-        self.prefix_cache_blocks =
-            args.usize_or("prefix-cache-blocks", self.prefix_cache_blocks);
-        if let Some(v) = args.get("attention-kernel") {
-            self.attention_kernel =
-                Variant::from_name(v).ok_or_else(|| anyhow!("bad --attention-kernel {v:?}"))?;
-        }
-        if let Some(v) = args.get("paged-decode") {
-            self.paged_decode = match v {
-                "true" | "1" | "on" => true,
-                "false" | "0" | "off" => false,
-                _ => return Err(anyhow!("bad --paged-decode {v:?} (true|false)")),
-            };
-        }
-        if let Some(v) = args.get("kernel-backend") {
-            self.kernel_backend = KernelBackend::parse(v)
-                .ok_or_else(|| anyhow!("bad --kernel-backend {v:?} (auto|scalar|simd)"))?;
-        }
-        self.batcher.admission.max_running =
-            args.usize_or("max-running", self.batcher.admission.max_running);
-        self.batcher.max_prefills_per_step =
-            args.usize_or("max-prefills", self.batcher.max_prefills_per_step);
-        self.batcher.max_decode_batch =
-            args.usize_or("max-decode-batch", self.batcher.max_decode_batch);
         Ok(())
     }
 
-    /// Engine config slice of this serve config.
+    /// Engine config slice of this serve config (one per shard).
     pub fn engine_config(&self) -> crate::coordinator::EngineConfig {
         crate::coordinator::EngineConfig {
             quant_policy: self.quant_policy.clone(),
@@ -277,8 +302,123 @@ impl ServeConfig {
         }
     }
 
+    /// Router config slice of this serve config: least-loaded dispatch
+    /// under the configured affinity and queue bounds.
+    pub fn router_config(&self) -> RouterConfig {
+        RouterConfig {
+            policy: RoutePolicy::LeastLoaded,
+            affinity: self.affinity,
+            queue_depth: self.queue_depth,
+            overflow_depth: self.overflow_depth,
+        }
+    }
+
     pub fn admission(&self) -> &AdmissionConfig {
         &self.batcher.admission
+    }
+
+    /// Legacy `precision` shorthand for the wire schema: the uniform
+    /// precision name, or `"mixed"`.
+    pub fn precision_label(&self) -> &'static str {
+        match self.quant_policy {
+            PolicySpec::Uniform(p) => p.name(),
+            _ => "mixed",
+        }
+    }
+}
+
+/// Chainable builder over [`ServeConfig::set`] — the programmatic way to
+/// assemble a config (benches, tests) without touching JSON or argv.
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    pub fn backend(mut self, b: Backend) -> Self {
+        self.cfg.backend = b;
+        self
+    }
+
+    pub fn quant_policy(mut self, p: PolicySpec) -> Self {
+        self.cfg.quant_policy = p;
+        self
+    }
+
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n.max(1);
+        self
+    }
+
+    pub fn affinity(mut self, a: Affinity) -> Self {
+        self.cfg.affinity = a;
+        self
+    }
+
+    pub fn queue_depth(mut self, n: usize) -> Self {
+        self.cfg.queue_depth = n;
+        self
+    }
+
+    pub fn overflow_depth(mut self, n: usize) -> Self {
+        self.cfg.overflow_depth = n;
+        self
+    }
+
+    pub fn num_blocks(mut self, n: usize) -> Self {
+        self.cfg.num_blocks = Some(n);
+        self
+    }
+
+    pub fn port(mut self, p: u16) -> Self {
+        self.cfg.port = p;
+        self
+    }
+
+    /// Escape hatch: any knob by its JSON key.
+    pub fn set(mut self, key: &str, v: &Json) -> Result<Self> {
+        if !self.cfg.set(key, v)? {
+            return Err(anyhow!("unknown config key {key:?}"));
+        }
+        Ok(self)
+    }
+
+    pub fn build(self) -> ServeConfig {
+        self.cfg
+    }
+}
+
+fn str_val<'a>(key: &str, v: &'a Json) -> Result<&'a str> {
+    v.as_str().ok_or_else(|| anyhow!("{key}: expected a string"))
+}
+
+fn usize_val(key: &str, v: &Json) -> Result<usize> {
+    if let Some(n) = v.as_usize() {
+        return Ok(n);
+    }
+    if let Some(s) = v.as_str() {
+        return s.trim().parse::<usize>().map_err(|_| anyhow!("{key}: bad count {s:?}"));
+    }
+    Err(anyhow!("{key}: expected a non-negative integer"))
+}
+
+fn f64_val(key: &str, v: &Json) -> Result<f64> {
+    if let Some(n) = v.as_f64() {
+        return Ok(n);
+    }
+    if let Some(s) = v.as_str() {
+        return s.trim().parse::<f64>().map_err(|_| anyhow!("{key}: bad number {s:?}"));
+    }
+    Err(anyhow!("{key}: expected a number"))
+}
+
+fn bool_val(key: &str, v: &Json) -> Result<bool> {
+    if let Some(b) = v.as_bool() {
+        return Ok(b);
+    }
+    match v.as_str() {
+        Some("true") | Some("1") | Some("on") => Ok(true),
+        Some("false") | Some("0") | Some("off") => Ok(false),
+        _ => Err(anyhow!("{key}: expected a bool (true|false)")),
     }
 }
 
@@ -292,6 +432,9 @@ mod tests {
         assert_eq!(c.quant_policy, PolicySpec::Uniform(Precision::Int8));
         assert_eq!(c.backend, Backend::Pjrt);
         assert_eq!(c.port, 8080);
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.affinity, Affinity::Session);
+        assert_eq!(c.queue_depth, 0);
     }
 
     #[test]
@@ -386,6 +529,8 @@ mod tests {
         assert!(c.apply_json(&Json::parse(r#"{"admission_mode":"psychic"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"attention_kernel":"warp"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"kernel_backend":"warp"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"affinity":"sticky"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"shards":"many"}"#).unwrap()).is_err());
     }
 
     #[test]
@@ -447,5 +592,70 @@ mod tests {
         assert_eq!(c.parallelism, 2);
         assert_eq!(c.batcher.admission.mode, AdmissionMode::WorstCase);
         assert_eq!(c.prefix_cache_blocks, 128);
+    }
+
+    #[test]
+    fn shard_knobs_round_trip() {
+        let mut c = ServeConfig::default();
+        c.apply_json(
+            &Json::parse(r#"{"shards":4,"affinity":"prefix","queue_depth":8,"overflow_depth":32}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.affinity, Affinity::Prefix);
+        assert_eq!(c.queue_depth, 8);
+        assert_eq!(c.overflow_depth, 32);
+        let rc = c.router_config();
+        assert_eq!(rc.policy, RoutePolicy::LeastLoaded);
+        assert_eq!(rc.affinity, Affinity::Prefix);
+        assert_eq!(rc.queue_depth, 8);
+        assert_eq!(rc.overflow_depth, 32);
+        // CLI wins over the file; shards clamps to >= 1.
+        let args = Args::parse_from(
+            ["--shards", "0", "--affinity", "none", "--queue-depth", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.affinity, Affinity::None);
+        assert_eq!(c.queue_depth, 2);
+    }
+
+    #[test]
+    fn builder_assembles_configs() {
+        let c = ServeConfig::builder()
+            .backend(Backend::CpuRef)
+            .shards(2)
+            .affinity(Affinity::Session)
+            .queue_depth(4)
+            .overflow_depth(16)
+            .num_blocks(64)
+            .port(0)
+            .set("model", &Json::Str("test-tiny".into()))
+            .unwrap()
+            .build();
+        assert_eq!(c.backend, Backend::CpuRef);
+        assert_eq!(c.shards, 2);
+        assert_eq!(c.queue_depth, 4);
+        assert_eq!(c.num_blocks, Some(64));
+        assert_eq!(c.model, "test-tiny");
+        assert!(ServeConfig::builder().set("warp_factor", &Json::Num(9.0)).is_err());
+    }
+
+    #[test]
+    fn string_coercion_serves_the_cli_path() {
+        // The CLI funnels through set() with string values: numerics and
+        // bools coerce, garbage errors.
+        let mut c = ServeConfig::default();
+        assert!(c.set("port", &Json::Str("9100".into())).unwrap());
+        assert_eq!(c.port, 9100);
+        assert!(c.set("watermark", &Json::Str("0.5".into())).unwrap());
+        assert!((c.batcher.admission.watermark - 0.5).abs() < 1e-12);
+        assert!(c.set("paged_decode", &Json::Str("off".into())).unwrap());
+        assert!(!c.paged_decode);
+        assert!(c.set("port", &Json::Str("a lot".into())).is_err());
+        assert!(!c.set("unknown_knob", &Json::Num(1.0)).unwrap(), "unknown keys report false");
     }
 }

@@ -143,9 +143,18 @@ pub struct EngineHandle {
 impl EngineHandle {
     pub fn submit(&self, req: Request, events: EventTx) -> Result<()> {
         self.metrics.on_submit();
-        self.tx
-            .send(EngineCmd::Submit(req, events))
-            .map_err(|_| anyhow::anyhow!("engine is down"))
+        self.tx.send(EngineCmd::Submit(req, events)).map_err(|_| {
+            // Balance the submit so depth() doesn't count a request the
+            // engine will never see.
+            self.metrics.on_reject();
+            anyhow::anyhow!("engine is down")
+        })
+    }
+
+    /// Live request depth: submissions not yet terminated, including
+    /// work still queued in the command channel (see [`Metrics::depth`]).
+    pub fn depth(&self) -> usize {
+        self.metrics.depth()
     }
 
     /// Stop accepting and finish all queued/running work.
@@ -200,6 +209,7 @@ where
                     // Reject everything that arrives.
                     while let Ok(cmd) = rx.recv() {
                         if let EngineCmd::Submit(_req, events) = cmd {
+                            m2.on_reject();
                             let _ = events.send(TokenEvent::Finished {
                                 reason: FinishReason::Rejected(format!(
                                     "backend init failed: {e}"
@@ -311,7 +321,23 @@ struct Engine {
     /// Resolved kernel ISA (`cfg.kernel_backend` + `KVQ_KERNEL_BACKEND`
     /// env override against the host's CPU features).
     isa: Isa,
-    rng: Rng,
+}
+
+/// Per-request sampling RNG, derived statelessly from the engine seed,
+/// the request's sampling seed, and the prompt tokens — never from
+/// mutable engine RNG state, the request id, or arrival order. This is
+/// the cross-shard determinism contract: the same (engine seed, prompt,
+/// sampling) produces the same token stream on any shard of any shard
+/// count, so 1-shard and N-shard runs of an affinity-pinned trace are
+/// byte-identical (pinned by tests/routing.rs).
+fn request_rng(engine_seed: u64, req: &Request) -> Rng {
+    // FNV-1a over the prompt, then mix in the sampling seed.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in &req.prompt {
+        h = (h ^ (t as u32 as u64)).wrapping_mul(0x100_0000_01b3);
+    }
+    h = (h ^ req.sampling.seed).wrapping_mul(0x100_0000_01b3);
+    Rng::new(engine_seed ^ 0xE46 ^ h)
 }
 
 impl Engine {
@@ -377,7 +403,6 @@ impl Engine {
             prefix: PrefixCache::new(cfg.prefix_cache_blocks),
             sched: Scheduler::new(),
             batcher: Batcher::new(),
-            rng: Rng::new(cfg.seed ^ 0xE46),
             metrics,
             threads,
             // Paged decode reads blocks in place; only the staged path
@@ -551,7 +576,7 @@ impl Engine {
         let len = req.prompt.len();
         let prompt = req.prompt.clone();
         let (seq, logits, hit) = self.materialize_prompt(&prompt)?;
-        let mut rng = self.rng.fork(req.id ^ req.sampling.seed);
+        let mut rng = request_rng(self.cfg.seed, &req);
         let token = sample::sample(&logits, &req.sampling, &mut rng);
         let ttft = req.arrival.elapsed().as_secs_f64();
         // prefill_tokens counts backend prefill work; a prefix hit did none.
@@ -740,11 +765,13 @@ impl Engine {
         }
     }
 
-    /// Tear down a request whose decode step errored.
+    /// Tear down a request whose decode step errored. Books the terminal
+    /// error so depth accounting (`Metrics::depth`) stays balanced.
     fn fail_decode(&mut self, id: RequestId, e: anyhow::Error) {
         crate::error!("decode failed for {id}: {e:#}");
         if let Some(run) = self.sched.finish(id) {
             self.cache.free(run.seq);
+            self.metrics.on_error();
             let _ = run.events.send(TokenEvent::Finished {
                 reason: FinishReason::Error(format!("{e}")),
                 tokens: run.generated,

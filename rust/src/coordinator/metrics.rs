@@ -44,6 +44,11 @@ struct Inner {
     requests_submitted: u64,
     requests_finished: u64,
     requests_rejected: u64,
+    /// Requests torn down by an engine error (decode failure, dead
+    /// engine). Terminal like finished/rejected — [`Metrics::depth`]
+    /// stays balanced only if every submission books exactly one of the
+    /// three.
+    requests_errored: u64,
     tokens_generated: u64,
     prefill_tokens: u64,
     engine_steps: u64,
@@ -93,6 +98,7 @@ impl Metrics {
             requests_submitted: 0,
             requests_finished: 0,
             requests_rejected: 0,
+            requests_errored: 0,
             tokens_generated: 0,
             prefill_tokens: 0,
             engine_steps: 0,
@@ -132,6 +138,24 @@ impl Metrics {
 
     pub fn on_reject(&self) {
         self.0.lock().unwrap().requests_rejected += 1;
+    }
+
+    /// A request terminated on an engine error (no finish/reject booked).
+    pub fn on_error(&self) {
+        self.0.lock().unwrap().requests_errored += 1;
+    }
+
+    /// Live request depth observed through the counters: submissions not
+    /// yet terminated (finished, rejected, or errored). Unlike the step
+    /// gauges this also counts work still queued in the engine's command
+    /// channel, which is exactly what the router's per-shard admission
+    /// bound needs. Saturating: termination of an in-flight submit may be
+    /// booked a hair before the submit itself is visible.
+    pub fn depth(&self) -> usize {
+        let m = self.0.lock().unwrap();
+        m.requests_submitted
+            .saturating_sub(m.requests_finished + m.requests_rejected + m.requests_errored)
+            as usize
     }
 
     pub fn on_first_token(&self, ttft: f64, prefill_tokens: usize) {
@@ -194,6 +218,7 @@ impl Metrics {
             requests_submitted: m.requests_submitted,
             requests_finished: m.requests_finished,
             requests_rejected: m.requests_rejected,
+            requests_errored: m.requests_errored,
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
             engine_steps: m.engine_steps,
@@ -237,6 +262,7 @@ pub struct MetricsSnapshot {
     pub requests_submitted: u64,
     pub requests_finished: u64,
     pub requests_rejected: u64,
+    pub requests_errored: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub engine_steps: u64,
@@ -304,6 +330,7 @@ impl MetricsSnapshot {
             ("requests_submitted", (self.requests_submitted as usize).into()),
             ("requests_finished", (self.requests_finished as usize).into()),
             ("requests_rejected", (self.requests_rejected as usize).into()),
+            ("requests_errored", (self.requests_errored as usize).into()),
             ("tokens_generated", (self.tokens_generated as usize).into()),
             ("prefill_tokens", (self.prefill_tokens as usize).into()),
             ("engine_steps", (self.engine_steps as usize).into()),
@@ -456,6 +483,24 @@ mod tests {
         assert_eq!(j.get("running_peak").as_usize(), Some(2));
         assert!(j.get("cache_utilization").as_f64().unwrap() > 0.39);
         assert!(j.get("prefix_hit_rate").as_f64().is_some());
+    }
+
+    #[test]
+    fn depth_balances_over_all_terminations() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.on_submit();
+        }
+        assert_eq!(m.depth(), 5);
+        m.on_finish(0.1);
+        m.on_reject();
+        m.on_error();
+        assert_eq!(m.depth(), 2);
+        assert_eq!(m.snapshot().requests_errored, 1);
+        // Termination booked before its submit is visible: saturate to 0.
+        let m2 = Metrics::new();
+        m2.on_finish(0.1);
+        assert_eq!(m2.depth(), 0);
     }
 
     #[test]

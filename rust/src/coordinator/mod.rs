@@ -24,7 +24,9 @@
 //! The PJRT runtime is not `Send`, so each engine owns its backend on a
 //! dedicated thread; the router holds only channel handles and is freely
 //! shareable. Multiple engines (e.g. INT8 + FP32 side-by-side) can run
-//! under one router for A/B serving.
+//! under one router for A/B serving — or N identical shards for
+//! session-affine sharded serving (see `router` for the admission plane:
+//! bounded per-shard queues, load-aware spillover, overflow pump).
 
 pub mod admission;
 pub mod batcher;
@@ -37,5 +39,7 @@ pub mod scheduler;
 pub use admission::AdmissionMode;
 pub use engine::{EngineConfig, EngineHandle};
 pub use metrics::MetricsSnapshot;
-pub use request::{FinishReason, Request, RequestId, TokenEvent};
-pub use router::Router;
+pub use request::{FinishReason, Priority, Request, RequestId, TokenEvent};
+pub use router::{
+    Affinity, RoutePolicy, Router, RouterConfig, RouterStatsSnapshot, SubmitError, SubmitOptions,
+};

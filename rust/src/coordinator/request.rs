@@ -14,6 +14,26 @@ pub enum Priority {
     Interactive = 2,
 }
 
+impl Priority {
+    /// Wire spelling used by the HTTP API and trace configs.
+    pub fn parse(s: &str) -> Option<Priority> {
+        Some(match s {
+            "batch" => Priority::Batch,
+            "normal" => Priority::Normal,
+            "interactive" => Priority::Interactive,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Normal => "normal",
+            Priority::Interactive => "interactive",
+        }
+    }
+}
+
 /// A generation request as submitted to the router.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -112,6 +132,14 @@ mod tests {
     fn priority_ordering() {
         assert!(Priority::Interactive > Priority::Normal);
         assert!(Priority::Normal > Priority::Batch);
+    }
+
+    #[test]
+    fn priority_names_round_trip() {
+        for p in [Priority::Batch, Priority::Normal, Priority::Interactive] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("vip"), None);
     }
 
     #[test]

@@ -1,19 +1,45 @@
-//! Request router: the shared front door.
+//! The sharded serving front door.
 //!
-//! Assigns request ids, validates basic shape, and dispatches to one of
-//! the registered engines. Routing policies: round-robin or
-//! least-loaded (by running+waiting depth from the engine's metrics).
-//! With one engine it degenerates to a validator + id allocator; the
-//! multi-engine path serves the INT8-vs-FP32 A/B configuration of the e2e
-//! bench.
+//! N engine shards — each owning its own `BlockPool`, prefix cache, and
+//! thread set — behind session-affine routing with load-aware spillover
+//! and a bounded async admission plane:
+//!
+//! ```text
+//! submit ──▶ home shard = hash(session | prompt prefix) % N
+//!              │ depth < queue_depth?          ──▶ dispatch (home)
+//!              │ else least-loaded shard open? ──▶ dispatch (spillover)
+//!              │ else overflow queue has room? ──▶ park; pump thread
+//!              │                                   dispatches FIFO when
+//!              │                                   any shard drains
+//!              └ else ──▶ SubmitError::Saturated (typed 503 upstream)
+//! ```
+//!
+//! Shard load is the live request depth from the engine's own metrics
+//! (submitted − terminated), which counts work still queued in the
+//! engine's command channel — so the bound applies to true backlog, not
+//! just the running set. Because each shard runs its own continuous
+//! batcher on its own thread, prefill admission, decode waves, and
+//! streaming on different shards overlap; nothing in the router blocks
+//! on engine work.
+//!
+//! Determinism: routing never changes tokens. Per-request sampling RNG is
+//! derived from (engine seed, prompt, sampling seed) only — see
+//! `engine::request_rng` — so an affinity-pinned trace produces
+//! byte-identical streams on 1 shard or N (pinned by tests/routing.rs).
+//!
+//! The legacy single/dual-engine API (`new` + `add_engine` + `submit` /
+//! `submit_to`) is preserved for the A/B bench and examples: a default
+//! `RouterConfig` has no affinity and an unbounded queue, which reduces
+//! to the old round-robin/least-loaded validator + id allocator.
 
 use super::engine::EngineHandle;
-use super::request::{EventRx, Request, RequestId, TokenEvent};
+use super::request::{EventRx, EventTx, FinishReason, Priority, Request, RequestId, TokenEvent};
 use crate::model::sample::SamplingParams;
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -21,16 +47,174 @@ pub enum RoutePolicy {
     LeastLoaded,
 }
 
+/// How a request's home shard is chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Affinity {
+    /// Hash the session key; requests without one fall back to the
+    /// prompt-prefix hash. Keeps a session's prompts on one shard so its
+    /// prefix-cache entries stay hot.
+    Session,
+    /// Hash the first [`AFFINITY_PREFIX_TOKENS`] prompt tokens.
+    Prefix,
+    /// No affinity: pure policy pick (legacy round-robin/least-loaded).
+    None,
+}
+
+impl Affinity {
+    pub fn parse(s: &str) -> Option<Affinity> {
+        Some(match s {
+            "session" => Affinity::Session,
+            "prefix" => Affinity::Prefix,
+            "none" => Affinity::None,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Affinity::Session => "session",
+            Affinity::Prefix => "prefix",
+            Affinity::None => "none",
+        }
+    }
+}
+
+/// Prompt tokens hashed for prefix affinity (and the session fallback).
+pub const AFFINITY_PREFIX_TOKENS: usize = 16;
+
+/// Router configuration. The default reproduces the legacy behavior
+/// exactly: no affinity, unbounded per-shard queues (never spills, never
+/// overflows), round-robin dispatch.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Dispatch policy when affinity is `None` (and the tie-break order
+    /// for spillover).
+    pub policy: RoutePolicy,
+    pub affinity: Affinity,
+    /// Per-shard admission bound: a shard whose live depth reaches this
+    /// is saturated (spillover, then overflow). 0 = unbounded.
+    pub queue_depth: usize,
+    /// Router-level overflow queue capacity; parked submissions wait here
+    /// when every shard is saturated. Beyond it, submits fail typed.
+    pub overflow_depth: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: RoutePolicy::RoundRobin,
+            affinity: Affinity::None,
+            queue_depth: 0,
+            overflow_depth: 256,
+        }
+    }
+}
+
+/// Per-submit routing options.
+#[derive(Debug, Clone, Default)]
+pub struct SubmitOptions {
+    /// Session key for affinity routing (None = prompt-prefix fallback).
+    pub session: Option<String>,
+    pub priority: Option<Priority>,
+    pub stop_token: Option<i32>,
+    /// Pin to a shard index, bypassing affinity and saturation (A/B
+    /// harnesses and tests).
+    pub shard: Option<usize>,
+}
+
+/// Typed submission failure — the HTTP layer maps these onto honest
+/// status codes (400 / 503) instead of stringly errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Malformed request: empty prompt, zero token budget, bad shard.
+    Invalid(String),
+    /// Every shard is at `queue_depth` and the overflow queue is full.
+    Saturated { retry_after_ms: u64 },
+    /// No shards registered, or the target engine's channel is closed.
+    Unavailable(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(m) => write!(f, "invalid request: {m}"),
+            SubmitError::Saturated { retry_after_ms } => {
+                write!(f, "all shards saturated (retry in {retry_after_ms} ms)")
+            }
+            SubmitError::Unavailable(m) => write!(f, "service unavailable: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Router counters (atomics: written on the submit path, read by
+/// `/metrics`).
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    pub submitted: AtomicU64,
+    /// Requests handed to a shard (directly or via the pump).
+    pub dispatched: AtomicU64,
+    /// Dispatches that left a saturated home shard for the least-loaded.
+    pub spillovers: AtomicU64,
+    pub overflow_enqueued: AtomicU64,
+    pub overflow_dispatched: AtomicU64,
+    /// High-water mark of the overflow queue.
+    pub overflow_peak: AtomicU64,
+    /// Submits refused with `SubmitError::Saturated`.
+    pub rejected_saturated: AtomicU64,
+}
+
+/// Plain-value snapshot of [`RouterStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouterStatsSnapshot {
+    pub submitted: u64,
+    pub dispatched: u64,
+    pub spillovers: u64,
+    pub overflow_enqueued: u64,
+    pub overflow_dispatched: u64,
+    pub overflow_peak: u64,
+    pub rejected_saturated: u64,
+    /// Current overflow queue length.
+    pub overflow_len: usize,
+}
+
+/// A submission parked in the overflow queue (its `EventTx` keeps the
+/// client stream alive; the pump either dispatches or rejects it — a
+/// parked stream is never silently dropped).
+struct Pending {
+    req: Request,
+    events: EventTx,
+    home: usize,
+}
+
 pub struct Router {
     engines: Vec<(String, EngineHandle)>,
     next_id: AtomicU64,
     rr: Mutex<usize>,
-    policy: RoutePolicy,
+    cfg: RouterConfig,
+    overflow: Mutex<VecDeque<Pending>>,
+    overflow_cv: Condvar,
+    pump_stop: AtomicBool,
+    stats: RouterStats,
 }
 
 impl Router {
     pub fn new(policy: RoutePolicy) -> Router {
-        Router { engines: Vec::new(), next_id: AtomicU64::new(1), rr: Mutex::new(0), policy }
+        Router::with_config(RouterConfig { policy, ..Default::default() })
+    }
+
+    pub fn with_config(cfg: RouterConfig) -> Router {
+        Router {
+            engines: Vec::new(),
+            next_id: AtomicU64::new(1),
+            rr: Mutex::new(0),
+            cfg,
+            overflow: Mutex::new(VecDeque::new()),
+            overflow_cv: Condvar::new(),
+            pump_stop: AtomicBool::new(false),
+            stats: RouterStats::default(),
+        }
     }
 
     pub fn add_engine(&mut self, name: &str, handle: EngineHandle) {
@@ -45,59 +229,190 @@ impl Router {
         self.engines.iter().find(|(n, _)| n == name).map(|(_, h)| h)
     }
 
+    /// All shards in index order (shard i = i-th `add_engine`).
+    pub fn shards(&self) -> &[(String, EngineHandle)] {
+        &self.engines
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> RouterStatsSnapshot {
+        let s = &self.stats;
+        RouterStatsSnapshot {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            dispatched: s.dispatched.load(Ordering::Relaxed),
+            spillovers: s.spillovers.load(Ordering::Relaxed),
+            overflow_enqueued: s.overflow_enqueued.load(Ordering::Relaxed),
+            overflow_dispatched: s.overflow_dispatched.load(Ordering::Relaxed),
+            overflow_peak: s.overflow_peak.load(Ordering::Relaxed),
+            rejected_saturated: s.rejected_saturated.load(Ordering::Relaxed),
+            overflow_len: self.overflow.lock().unwrap().len(),
+        }
+    }
+
     pub fn alloc_id(&self) -> RequestId {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    fn pick(&self) -> Result<&EngineHandle> {
-        if self.engines.is_empty() {
-            bail!("no engines registered");
-        }
-        match self.policy {
-            RoutePolicy::RoundRobin => {
-                let mut rr = self.rr.lock().unwrap();
-                let idx = *rr % self.engines.len();
-                *rr += 1;
-                Ok(&self.engines[idx].1)
-            }
-            RoutePolicy::LeastLoaded => {
-                // Min current depth; ties broken round-robin so idle
-                // engines share load instead of engine 0 absorbing it.
-                let mut rr = self.rr.lock().unwrap();
-                let n = self.engines.len();
-                let start = *rr % n;
-                *rr += 1;
-                let h = (0..n)
-                    .map(|i| &self.engines[(start + i) % n].1)
-                    .min_by_key(|h| {
-                        let s = h.metrics.snapshot();
-                        s.running + s.waiting
-                    })
-                    .unwrap();
-                Ok(h)
-            }
+    fn depth(&self, idx: usize) -> usize {
+        self.engines[idx].1.depth()
+    }
+
+    fn saturated(&self, idx: usize) -> bool {
+        self.cfg.queue_depth > 0 && self.depth(idx) >= self.cfg.queue_depth
+    }
+
+    /// Policy pick over all shards (the legacy no-affinity path).
+    fn pick_index(&self) -> usize {
+        let n = self.engines.len();
+        let mut rr = self.rr.lock().unwrap();
+        let start = *rr % n;
+        *rr += 1;
+        match self.cfg.policy {
+            RoutePolicy::RoundRobin => start,
+            // Min current depth; ties broken round-robin so idle shards
+            // share load instead of shard 0 absorbing it.
+            RoutePolicy::LeastLoaded => (0..n)
+                .map(|i| (start + i) % n)
+                .min_by_key(|&i| self.depth(i))
+                .unwrap_or(start),
         }
     }
 
-    /// Submit a generation request; returns (id, event stream).
+    /// Least-loaded shard strictly below `queue_depth` (rotating
+    /// tie-break), or None when every shard is saturated.
+    fn least_loaded_open(&self) -> Option<usize> {
+        let n = self.engines.len();
+        let mut rr = self.rr.lock().unwrap();
+        let start = *rr % n;
+        *rr += 1;
+        (0..n)
+            .map(|i| (start + i) % n)
+            .filter(|&i| !self.saturated(i))
+            .min_by_key(|&i| self.depth(i))
+    }
+
+    /// Home shard for a (session, prompt) pair under the configured
+    /// affinity. Stable across calls and shard-count-independent hashing
+    /// (modulo N at the end): the routing contract affinity tests pin.
+    pub fn home_shard(&self, session: Option<&str>, prompt: &[i32]) -> usize {
+        let n = self.engines.len().max(1);
+        let h = match (self.cfg.affinity, session) {
+            (Affinity::None, _) => return self.pick_index(),
+            (Affinity::Session, Some(s)) => fnv1a(s.as_bytes()),
+            // Session affinity without a key, or prefix affinity: hash
+            // the prompt prefix.
+            _ => {
+                let take = prompt.len().min(AFFINITY_PREFIX_TOKENS);
+                let mut h = 0xcbf2_9ce4_8422_2325u64;
+                for &t in &prompt[..take] {
+                    h = (h ^ (t as u32 as u64)).wrapping_mul(0x100_0000_01b3);
+                }
+                h
+            }
+        };
+        (h % n as u64) as usize
+    }
+
+    fn dispatch(&self, idx: usize, req: Request, events: EventTx) -> Result<(), SubmitError> {
+        self.engines[idx]
+            .1
+            .submit(req, events)
+            .map_err(|e| SubmitError::Unavailable(format!("{e}")))?;
+        self.stats.dispatched.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Submit with routing options: affinity, spillover, and the bounded
+    /// overflow queue. The returned stream always terminates — dispatched
+    /// requests finish or are rejected by the engine; parked requests are
+    /// dispatched or rejected by the pump.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        sampling: SamplingParams,
+        opts: SubmitOptions,
+    ) -> Result<(RequestId, EventRx), SubmitError> {
+        if prompt.is_empty() {
+            return Err(SubmitError::Invalid("empty prompt".into()));
+        }
+        if max_new_tokens == 0 {
+            return Err(SubmitError::Invalid("max_new_tokens must be >= 1".into()));
+        }
+        let n = self.engines.len();
+        if n == 0 {
+            return Err(SubmitError::Unavailable("no engines registered".into()));
+        }
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let id = self.alloc_id();
+        let mut req = Request::new(id, prompt, max_new_tokens);
+        req.sampling = sampling;
+        if let Some(p) = opts.priority {
+            req.priority = p;
+        }
+        req.stop_token = opts.stop_token;
+        let (tx, rx) = mpsc::channel::<TokenEvent>();
+
+        if let Some(s) = opts.shard {
+            if s >= n {
+                return Err(SubmitError::Invalid(format!("shard {s} >= shard count {n}")));
+            }
+            self.dispatch(s, req, tx)?;
+            return Ok((id, rx));
+        }
+
+        let home = self.home_shard(opts.session.as_deref(), &req.prompt);
+        if !self.saturated(home) {
+            self.dispatch(home, req, tx)?;
+            return Ok((id, rx));
+        }
+        // Home saturated: spill to the least-loaded open shard.
+        if let Some(alt) = self.least_loaded_open() {
+            self.stats.spillovers.fetch_add(1, Ordering::Relaxed);
+            self.dispatch(alt, req, tx)?;
+            return Ok((id, rx));
+        }
+        // Every shard saturated: park in the bounded overflow queue.
+        // `req.arrival` was stamped above, so queueing delay counts
+        // toward the client-observed TTFT.
+        let mut q = self.overflow.lock().unwrap();
+        if q.len() >= self.cfg.overflow_depth {
+            self.stats.rejected_saturated.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Saturated {
+                retry_after_ms: self.retry_after_ms(q.len()),
+            });
+        }
+        q.push_back(Pending { req, events: tx, home });
+        let len = q.len() as u64;
+        self.stats.overflow_enqueued.fetch_add(1, Ordering::Relaxed);
+        self.stats.overflow_peak.fetch_max(len, Ordering::Relaxed);
+        drop(q);
+        self.overflow_cv.notify_one();
+        Ok((id, rx))
+    }
+
+    /// Crude backpressure hint: deeper backlog, longer suggested retry.
+    fn retry_after_ms(&self, backlog: usize) -> u64 {
+        50 * (backlog as u64 + 1)
+    }
+
+    /// Legacy submit: routes via `submit_with` with default options and
+    /// adapts the typed error into `anyhow` for existing callers.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_new_tokens: usize,
         sampling: SamplingParams,
     ) -> Result<(RequestId, EventRx)> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
-        }
-        if max_new_tokens == 0 {
-            bail!("max_new_tokens must be >= 1");
-        }
-        let id = self.alloc_id();
-        let mut req = Request::new(id, prompt, max_new_tokens);
-        req.sampling = sampling;
-        let (tx, rx) = mpsc::channel::<TokenEvent>();
-        self.pick()?.submit(req, tx)?;
-        Ok((id, rx))
+        self.submit_with(prompt, max_new_tokens, sampling, SubmitOptions::default())
+            .map_err(|e| anyhow::anyhow!("{e}"))
     }
 
     /// Submit to a specific engine by name (A/B harness).
@@ -108,14 +423,101 @@ impl Router {
         max_new_tokens: usize,
         sampling: SamplingParams,
     ) -> Result<(RequestId, EventRx)> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        if max_new_tokens == 0 {
+            bail!("max_new_tokens must be >= 1");
+        }
         let h = self.engine(engine).ok_or_else(|| anyhow::anyhow!("no engine {engine:?}"))?;
         let id = self.alloc_id();
         let mut req = Request::new(id, prompt, max_new_tokens);
         req.sampling = sampling;
         let (tx, rx) = mpsc::channel::<TokenEvent>();
         h.submit(req, tx)?;
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.dispatched.fetch_add(1, Ordering::Relaxed);
         Ok((id, rx))
     }
+
+    /// Spawn the overflow pump: a background thread that drains the
+    /// overflow queue FIFO into whichever shard frees capacity first
+    /// (preferring a request's home shard when open). Required whenever
+    /// `queue_depth > 0`; call [`Router::stop_pump`] before dropping the
+    /// router so parked streams are rejected, not leaked.
+    pub fn spawn_pump(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let r = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("kvq-router-pump".into())
+            .spawn(move || r.pump_loop())
+            .expect("spawn router pump thread")
+    }
+
+    /// Stop the pump; it rejects any still-parked submissions on exit
+    /// (their streams terminate with `FinishReason::Rejected`).
+    pub fn stop_pump(&self) {
+        self.pump_stop.store(true, Ordering::Relaxed);
+        self.overflow_cv.notify_all();
+    }
+
+    fn pump_loop(&self) {
+        let mut q = self.overflow.lock().unwrap();
+        loop {
+            if self.pump_stop.load(Ordering::Relaxed) {
+                break;
+            }
+            if q.is_empty() {
+                let (guard, _) = self
+                    .overflow_cv
+                    .wait_timeout(q, Duration::from_millis(5))
+                    .unwrap();
+                q = guard;
+                continue;
+            }
+            // FIFO head-of-line: home shard if open, else least-loaded
+            // open shard; no shard open → poll again shortly.
+            let home = q.front().map(|p| p.home).unwrap_or(0);
+            let target = if !self.saturated(home) { Some(home) } else { self.least_loaded_open() };
+            match target {
+                Some(idx) => {
+                    let p = q.pop_front().unwrap();
+                    drop(q);
+                    self.stats.overflow_dispatched.fetch_add(1, Ordering::Relaxed);
+                    if let Err(e) = self.dispatch(idx, p.req, p.events.clone()) {
+                        // Engine died under us: terminate the stream.
+                        let _ = p.events.send(TokenEvent::Finished {
+                            reason: FinishReason::Rejected(format!("{e}")),
+                            tokens: 0,
+                            elapsed: 0.0,
+                        });
+                    }
+                    q = self.overflow.lock().unwrap();
+                }
+                None => {
+                    drop(q);
+                    std::thread::sleep(Duration::from_millis(1));
+                    q = self.overflow.lock().unwrap();
+                }
+            }
+        }
+        // No lost streams: reject everything still parked.
+        for p in q.drain(..) {
+            let _ = p.events.send(TokenEvent::Finished {
+                reason: FinishReason::Rejected("router shutting down".into()),
+                tokens: 0,
+                elapsed: p.req.arrival.elapsed().as_secs_f64(),
+            });
+        }
+    }
+}
+
+/// FNV-1a over bytes (session keys).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -132,6 +534,19 @@ mod tests {
     }
 
     #[test]
+    fn typed_errors_for_bad_submissions() {
+        let r = Router::new(RoutePolicy::RoundRobin);
+        let e = r
+            .submit_with(vec![], 4, SamplingParams::default(), SubmitOptions::default())
+            .unwrap_err();
+        assert!(matches!(e, SubmitError::Invalid(_)));
+        let e = r
+            .submit_with(vec![1], 1, SamplingParams::default(), SubmitOptions::default())
+            .unwrap_err();
+        assert!(matches!(e, SubmitError::Unavailable(_)));
+    }
+
+    #[test]
     fn ids_are_unique_and_monotone() {
         let r = Router::new(RoutePolicy::RoundRobin);
         let a = r.alloc_id();
@@ -139,6 +554,26 @@ mod tests {
         assert!(b > a);
     }
 
-    // Round-robin and least-loaded dispatch are exercised with live
-    // engines in rust/tests/serving_integration.rs.
+    #[test]
+    fn affinity_hash_is_stable_and_session_keyed() {
+        let cfg = RouterConfig { affinity: Affinity::Session, ..Default::default() };
+        let r = Router::with_config(cfg);
+        // The hash never dereferences engine handles; with no shards the
+        // modulo clamps to a single slot, and repeated calls are stable.
+        assert_eq!(r.home_shard(Some("s"), &[1, 2]), 0);
+        assert_eq!(r.home_shard(Some("s"), &[9, 9]), r.home_shard(Some("s"), &[1, 2]));
+        assert_eq!(r.home_shard(None, &[1, 2, 3]), r.home_shard(None, &[1, 2, 3]));
+    }
+
+    #[test]
+    fn affinity_parse_round_trips() {
+        for a in [Affinity::Session, Affinity::Prefix, Affinity::None] {
+            assert_eq!(Affinity::parse(a.name()), Some(a));
+        }
+        assert_eq!(Affinity::parse("sticky"), None);
+    }
+
+    // Sharded dispatch, spillover, overflow, and determinism are
+    // exercised with live engines in rust/tests/routing.rs; round-robin
+    // and least-loaded dispatch in rust/tests/serving_integration.rs.
 }

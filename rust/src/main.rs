@@ -79,6 +79,15 @@ COMMANDS:
                AVX2/NEON at runtime, scalar reproduces legacy bytes.
                KVQ_KERNEL_BACKEND env overrides; selected ISA at
                GET /metrics \"kernel_isa\")
+             --shards N (engine shards, each with its own block pool +
+               prefix cache + thread; default 1)
+             --affinity session|prefix|none (home-shard routing; default
+               session: hash of the session key, prompt-prefix fallback)
+             --queue-depth N (per-shard admission bound; 0 = unbounded.
+               Saturated home shards spill to the least-loaded shard,
+               then to the router overflow queue)
+             --overflow-depth N (router overflow capacity; beyond it,
+               submissions get a typed 503; default 256)
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -149,41 +158,39 @@ fn load_spec(dir: &str, model: &str) -> Result<ModelSpec> {
 fn serve(args: Args) -> Result<()> {
     let cfg = build_serve_config(&args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
-    let (handle, _join) = spawn_engine(&cfg);
-    let mut router = Router::new(RoutePolicy::RoundRobin);
-    router.add_engine(&cfg.quant_policy.engine_label(), handle.clone());
+    // One engine per shard, each owning its own block pool, prefix
+    // cache, and thread; the router front door spreads sessions across
+    // them and parks overflow for the pump thread.
+    let mut router = Router::with_config(cfg.router_config());
+    for i in 0..cfg.shards.max(1) {
+        let (handle, _join) = spawn_engine(&cfg);
+        let name = if cfg.shards <= 1 {
+            cfg.quant_policy.engine_label()
+        } else {
+            format!("shard{i}")
+        };
+        router.add_engine(&name, handle);
+    }
+    let router = Arc::new(router);
+    let _pump = router.spawn_pump();
     let threads = kvq::parallel::resolve(cfg.parallelism);
     let server = HttpServer::bind(cfg.port)?;
     // Build the /config payload after bind so it reports the actually
     // bound port (cfg.port may be 0 = ephemeral).
-    let precision_label = match &cfg.quant_policy {
-        kvq::kvcache::PolicySpec::Uniform(p) => p.name().to_string(),
-        _ => "mixed".to_string(),
-    };
-    let info = kvq::server::api::config_response(
-        &cfg.model,
-        &cfg.quant_policy.name(),
-        &precision_label,
-        if cfg.backend == Backend::Pjrt { "pjrt" } else { "cpu" },
-        threads,
-        cfg.batcher.admission.mode.name(),
-        cfg.prefix_cache_blocks,
-        cfg.attention_kernel.name(),
-        cfg.paged_decode,
-        cfg.kernel_backend.name(),
-        server.local_port(),
-    );
-    let service = Arc::new(KvqService::with_info(Arc::new(router), info));
+    let info = kvq::server::api::config_response(&cfg, server.local_port(), threads);
+    let service = Arc::new(KvqService::with_info(router.clone(), info));
     println!(
-        "kvq serving on http://127.0.0.1:{} (model={} policy={} backend={:?} threads={})",
+        "kvq serving on http://127.0.0.1:{} (model={} policy={} backend={:?} shards={} threads={})",
         server.local_port(),
         cfg.model,
         cfg.quant_policy.name(),
         cfg.backend,
+        router.shard_count(),
         threads
     );
     let svc = service.clone();
     server.serve(move |req| svc.handle(req));
+    router.stop_pump();
     Ok(())
 }
 

@@ -1,8 +1,24 @@
 //! JSON API shapes for the HTTP endpoints.
+//!
+//! Versioning: `GET /config` and `GET /metrics` carry
+//! `schema_version` = [`SCHEMA_VERSION`]. v1 was the single-engine shape
+//! (flat `engines` array, stringly `{"error": "..."}` bodies); v2 adds
+//! per-shard namespacing (`shards[i].*` with aggregated top-level
+//! totals; `engines` kept as a legacy alias), router counters, and typed
+//! [`ApiError`] bodies (`error.code` / `error.message` /
+//! `error.retry_after_ms`).
 
+use crate::config::ServeConfig;
+use crate::coordinator::router::{Router, SubmitError};
 use crate::model::sample::SamplingParams;
 use crate::util::json::{obj, Json};
 use anyhow::{anyhow, Result};
+
+use super::http::HttpResponse;
+use crate::coordinator::request::Priority;
+
+/// Wire-schema version served on every structured GET payload.
+pub const SCHEMA_VERSION: u64 = 2;
 
 /// POST /generate body.
 #[derive(Debug, Clone, PartialEq)]
@@ -14,6 +30,11 @@ pub struct GenerateRequest {
     pub seed: u64,
     /// Optional engine name (A/B routing); None = router policy.
     pub engine: Option<String>,
+    /// Session key for shard affinity (keeps a session's prefix-cache
+    /// entries on one shard).
+    pub session: Option<String>,
+    /// Priority class (`batch|normal|interactive`); None = normal.
+    pub priority: Option<Priority>,
 }
 
 impl GenerateRequest {
@@ -24,6 +45,13 @@ impl GenerateRequest {
             .as_str()
             .ok_or_else(|| anyhow!("missing 'prompt' (string)"))?
             .to_string();
+        let priority = match j.get("priority").as_str() {
+            Some(s) => Some(
+                Priority::parse(s)
+                    .ok_or_else(|| anyhow!("bad priority {s:?} (batch|normal|interactive)"))?,
+            ),
+            None => None,
+        };
         Ok(GenerateRequest {
             prompt,
             max_new_tokens: j.get("max_new_tokens").as_usize().unwrap_or(16),
@@ -31,6 +59,8 @@ impl GenerateRequest {
             top_k: j.get("top_k").as_usize().unwrap_or(0),
             seed: j.get("seed").as_usize().unwrap_or(0) as u64,
             engine: j.get("engine").as_str().map(String::from),
+            session: j.get("session").as_str().map(String::from),
+            priority,
         })
     }
 
@@ -58,46 +88,184 @@ pub fn generate_response(
     ])
 }
 
-pub fn error_response(msg: &str) -> Json {
-    obj([("error", msg.into())])
+/// Typed API error: machine-readable `code`, human `message`, and an
+/// optional backpressure hint — replaces the v1 stringly bodies so
+/// clients can branch on `error.code` instead of parsing prose.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+    pub retry_after_ms: Option<u64>,
 }
 
-/// `GET /config` body: the effective serving configuration — the cache
-/// quantization policy (`quant_policy`; `precision` keeps the legacy
-/// shorthand: the uniform precision name, or "mixed"), the resolved
-/// `parallelism` worker count of the quantization runtime, the
-/// scheduler's memory policy (`admission_mode`, `prefix_cache_blocks`),
-/// and the decode data path (`attention_kernel` fused-kernel variant,
-/// whether zero-copy `paged_decode` is active, and the `kernel_backend`
-/// knob — the ISA it resolved to is served at `GET /metrics` as
-/// `kernel_isa`).
-#[allow(clippy::too_many_arguments)]
-pub fn config_response(
-    model: &str,
-    quant_policy: &str,
-    precision: &str,
-    backend: &str,
-    parallelism: usize,
-    admission_mode: &str,
-    prefix_cache_blocks: usize,
-    attention_kernel: &str,
-    paged_decode: bool,
-    kernel_backend: &str,
-    port: u16,
-) -> Json {
+impl ApiError {
+    pub fn bad_request(msg: impl Into<String>) -> ApiError {
+        ApiError { status: 400, code: "bad_request", message: msg.into(), retry_after_ms: None }
+    }
+
+    pub fn not_found(msg: impl Into<String>) -> ApiError {
+        ApiError { status: 404, code: "not_found", message: msg.into(), retry_after_ms: None }
+    }
+
+    pub fn method_not_allowed() -> ApiError {
+        ApiError {
+            status: 405,
+            code: "method_not_allowed",
+            message: "method not allowed".into(),
+            retry_after_ms: None,
+        }
+    }
+
+    /// 429: the engine's admission control rejected the request under
+    /// overload (it cannot ever fit, or queues are past the watermark).
+    pub fn admission_rejected(cause: impl Into<String>, retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 429,
+            code: "admission_rejected",
+            message: cause.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// 503: every shard queue and the overflow queue are full.
+    pub fn saturated(retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 503,
+            code: "shard_saturated",
+            message: "all shards saturated".into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    pub fn unavailable(msg: impl Into<String>) -> ApiError {
+        ApiError { status: 503, code: "unavailable", message: msg.into(), retry_after_ms: None }
+    }
+
+    pub fn internal(msg: impl Into<String>) -> ApiError {
+        ApiError { status: 500, code: "internal", message: msg.into(), retry_after_ms: None }
+    }
+
+    pub fn from_submit(e: SubmitError) -> ApiError {
+        match e {
+            SubmitError::Invalid(m) => ApiError::bad_request(m),
+            SubmitError::Saturated { retry_after_ms } => ApiError::saturated(retry_after_ms),
+            SubmitError::Unavailable(m) => ApiError::unavailable(m),
+        }
+    }
+
+    /// `{"error": {"code", "message", "retry_after_ms"?}}`.
+    pub fn body(&self) -> Json {
+        let mut fields = vec![
+            ("code", self.code.into()),
+            ("message", self.message.as_str().into()),
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", (ms as usize).into()));
+        }
+        obj([("error", obj(fields))])
+    }
+
+    pub fn to_response(&self) -> HttpResponse {
+        HttpResponse::json(self.status, &self.body())
+    }
+}
+
+/// `GET /config` body, rendered straight from the [`ServeConfig`] — the
+/// effective serving configuration: the cache quantization policy
+/// (`quant_policy`; `precision` keeps the legacy shorthand), the
+/// resolved `parallelism` worker count, the scheduler's memory policy
+/// (`admission_mode`, `prefix_cache_blocks`), the decode data path
+/// (`attention_kernel`, `paged_decode`, `kernel_backend` — the resolved
+/// ISA is served at `GET /metrics` as `kernel_isa`), and the sharded
+/// front door (`shards`, `affinity`, `queue_depth`, `overflow_depth`).
+pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
     obj([
-        ("model", model.into()),
-        ("quant_policy", quant_policy.into()),
-        ("precision", precision.into()),
-        ("backend", backend.into()),
-        ("parallelism", parallelism.into()),
-        ("admission_mode", admission_mode.into()),
-        ("prefix_cache_blocks", prefix_cache_blocks.into()),
-        ("attention_kernel", attention_kernel.into()),
-        ("paged_decode", Json::Bool(paged_decode)),
-        ("kernel_backend", kernel_backend.into()),
+        ("schema_version", (SCHEMA_VERSION as usize).into()),
+        ("model", cfg.model.as_str().into()),
+        ("quant_policy", cfg.quant_policy.name().as_str().into()),
+        ("precision", cfg.precision_label().into()),
+        ("backend", cfg.backend.name().into()),
+        ("parallelism", threads.into()),
+        ("admission_mode", cfg.batcher.admission.mode.name().into()),
+        ("prefix_cache_blocks", cfg.prefix_cache_blocks.into()),
+        ("attention_kernel", cfg.attention_kernel.name().into()),
+        ("paged_decode", Json::Bool(cfg.paged_decode)),
+        ("kernel_backend", cfg.kernel_backend.name().into()),
+        ("shards", cfg.shards.into()),
+        ("affinity", cfg.affinity.name().into()),
+        ("queue_depth", cfg.queue_depth.into()),
+        ("overflow_depth", cfg.overflow_depth.into()),
         ("port", (port as usize).into()),
     ])
+}
+
+/// `GET /metrics` body: `shards[i].*` per-shard gauges (each shard's
+/// pool, prefix-cache, preemption, and kernel gauges under its own
+/// object, tagged with `shard` index and `engine` name), aggregated
+/// top-level totals (so v1 single-engine consumers keep reading the
+/// same keys), `router` dispatch counters, and the legacy `engines`
+/// alias.
+pub fn metrics_response(router: &Router) -> Json {
+    use std::collections::BTreeMap;
+    let mut shards = Vec::new();
+    let mut totals: BTreeMap<String, f64> = BTreeMap::new();
+    let mut kernel_isa = String::new();
+    for (i, (name, handle)) in router.shards().iter().enumerate() {
+        let snap = handle.metrics.snapshot();
+        let mut j = snap.to_json();
+        if let Json::Obj(ref mut o) = j {
+            o.insert("engine".into(), Json::Str(name.clone()));
+            o.insert("shard".into(), Json::Num(i as f64));
+        }
+        // Every numeric gauge sums into a same-named top-level total;
+        // the ISA string stands for all shards (one process, one CPU).
+        if let Json::Obj(ref o) = j {
+            for (k, v) in o {
+                match v {
+                    Json::Num(n) if k != "shard" => {
+                        *totals.entry(k.clone()).or_insert(0.0) += n;
+                    }
+                    Json::Str(s) if k == "kernel_isa" => kernel_isa = s.clone(),
+                    _ => {}
+                }
+            }
+        }
+        shards.push(j);
+    }
+    let stats = router.stats();
+    let rcfg = router.config();
+    let router_j = obj([
+        (
+            "policy",
+            match rcfg.policy {
+                crate::coordinator::router::RoutePolicy::RoundRobin => "round_robin".into(),
+                crate::coordinator::router::RoutePolicy::LeastLoaded => "least_loaded".into(),
+            },
+        ),
+        ("affinity", rcfg.affinity.name().into()),
+        ("queue_depth", rcfg.queue_depth.into()),
+        ("overflow_depth", rcfg.overflow_depth.into()),
+        ("shards", router.shard_count().into()),
+        ("submitted", (stats.submitted as usize).into()),
+        ("dispatched", (stats.dispatched as usize).into()),
+        ("spillovers", (stats.spillovers as usize).into()),
+        ("overflow_enqueued", (stats.overflow_enqueued as usize).into()),
+        ("overflow_dispatched", (stats.overflow_dispatched as usize).into()),
+        ("overflow_peak", (stats.overflow_peak as usize).into()),
+        ("overflow_len", stats.overflow_len.into()),
+        ("rejected_saturated", (stats.rejected_saturated as usize).into()),
+    ]);
+    let mut top: BTreeMap<String, Json> =
+        totals.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
+    top.insert("schema_version".into(), Json::Num(SCHEMA_VERSION as f64));
+    top.insert("shards".into(), Json::Arr(shards.clone()));
+    top.insert("engines".into(), Json::Arr(shards));
+    top.insert("router".into(), router_j);
+    if !kernel_isa.is_empty() {
+        top.insert("kernel_isa".into(), Json::Str(kernel_isa));
+    }
+    Json::Obj(top)
 }
 
 #[cfg(test)]
@@ -111,18 +279,23 @@ mod tests {
         assert_eq!(r.max_new_tokens, 16);
         assert_eq!(r.temperature, 0.0);
         assert!(r.engine.is_none());
+        assert!(r.session.is_none());
+        assert!(r.priority.is_none());
     }
 
     #[test]
     fn parses_full_request() {
         let r = GenerateRequest::parse(
             r#"{"prompt":"x","max_new_tokens":4,"temperature":0.7,
-                "top_k":40,"seed":9,"engine":"fp32"}"#,
+                "top_k":40,"seed":9,"engine":"fp32",
+                "session":"user-17","priority":"interactive"}"#,
         )
         .unwrap();
         assert_eq!(r.max_new_tokens, 4);
         assert_eq!(r.top_k, 40);
         assert_eq!(r.engine.as_deref(), Some("fp32"));
+        assert_eq!(r.session.as_deref(), Some("user-17"));
+        assert_eq!(r.priority, Some(Priority::Interactive));
         assert_eq!(r.sampling().seed, 9);
     }
 
@@ -133,30 +306,63 @@ mod tests {
     }
 
     #[test]
+    fn rejects_bad_priority() {
+        assert!(GenerateRequest::parse(r#"{"prompt":"x","priority":"vip"}"#).is_err());
+    }
+
+    #[test]
     fn config_response_shape() {
-        let j = config_response(
-            "kvq-3m",
-            "k8v4",
-            "mixed",
-            "cpu",
-            4,
-            "optimistic",
-            512,
-            "vectorized",
-            true,
-            "auto",
-            8080,
-        );
+        let cfg = ServeConfig::builder()
+            .set("model", &Json::Str("kvq-3m".into()))
+            .unwrap()
+            .set("quant_policy", &Json::Str("k8v4".into()))
+            .unwrap()
+            .set("backend", &Json::Str("cpu".into()))
+            .unwrap()
+            .set("prefix_cache_blocks", &Json::Num(512.0))
+            .unwrap()
+            .shards(2)
+            .queue_depth(8)
+            .build();
+        let j = config_response(&cfg, 8080, 4);
+        assert_eq!(j.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
         assert_eq!(j.get("model").as_str(), Some("kvq-3m"));
         assert_eq!(j.get("quant_policy").as_str(), Some("k8v4"));
         assert_eq!(j.get("precision").as_str(), Some("mixed"));
+        assert_eq!(j.get("backend").as_str(), Some("cpu"));
         assert_eq!(j.get("parallelism").as_usize(), Some(4));
         assert_eq!(j.get("admission_mode").as_str(), Some("optimistic"));
         assert_eq!(j.get("prefix_cache_blocks").as_usize(), Some(512));
         assert_eq!(j.get("attention_kernel").as_str(), Some("vectorized"));
         assert_eq!(j.get("paged_decode").as_bool(), Some(true));
         assert_eq!(j.get("kernel_backend").as_str(), Some("auto"));
+        assert_eq!(j.get("shards").as_usize(), Some(2));
+        assert_eq!(j.get("affinity").as_str(), Some("session"));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(8));
         assert_eq!(j.get("port").as_usize(), Some(8080));
+    }
+
+    #[test]
+    fn error_bodies_are_typed() {
+        let e = ApiError::admission_rejected("would never fit", 100);
+        assert_eq!(e.status, 429);
+        let j = e.body();
+        assert_eq!(j.get("error").get("code").as_str(), Some("admission_rejected"));
+        assert_eq!(j.get("error").get("message").as_str(), Some("would never fit"));
+        assert_eq!(j.get("error").get("retry_after_ms").as_usize(), Some(100));
+
+        let e = ApiError::from_submit(SubmitError::Saturated { retry_after_ms: 250 });
+        assert_eq!(e.status, 503);
+        assert_eq!(e.code, "shard_saturated");
+        assert_eq!(e.retry_after_ms, Some(250));
+
+        let e = ApiError::from_submit(SubmitError::Invalid("empty prompt".into()));
+        assert_eq!(e.status, 400);
+        assert_eq!(e.body().get("error").get("code").as_str(), Some("bad_request"));
+        assert!(e.body().get("error").get("retry_after_ms").as_usize().is_none());
+
+        let r = ApiError::not_found("unknown endpoint").to_response();
+        assert_eq!(r.status, 404);
     }
 
     #[test]

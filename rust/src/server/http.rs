@@ -155,7 +155,8 @@ impl HttpServer {
                 Ok((mut stream, _addr)) => {
                     stream.set_nonblocking(false).ok();
                     if live.load(Ordering::Relaxed) >= self.max_connections {
-                        let _ = HttpResponse::text(503, "overloaded").write_to(&mut stream);
+                        let e = super::api::ApiError::unavailable("connection limit reached");
+                        let _ = e.to_response().write_to(&mut stream);
                         continue;
                     }
                     let h = handler.clone();
@@ -165,7 +166,10 @@ impl HttpServer {
                     std::thread::spawn(move || {
                         let resp = match parse_request(&mut stream, max_body) {
                             Ok(req) => h(req),
-                            Err(e) => HttpResponse::text(400, &format!("bad request: {e}")),
+                            Err(e) => {
+                                super::api::ApiError::bad_request(format!("bad request: {e}"))
+                                    .to_response()
+                            }
                         };
                         let _ = resp.write_to(&mut stream);
                         live2.fetch_sub(1, Ordering::Relaxed);
@@ -257,6 +261,8 @@ mod tests {
         let mut buf = String::new();
         BufReader::new(stream).read_to_string(&mut buf).unwrap();
         assert!(buf.starts_with("HTTP/1.1 400"), "{buf}");
+        // Typed error body, not prose.
+        assert!(buf.contains("bad_request"), "{buf}");
         stop.store(true, Ordering::Relaxed);
         join.join().unwrap();
     }

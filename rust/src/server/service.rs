@@ -1,12 +1,16 @@
 //! The HTTP service: router + tokenizer behind request handlers.
 
-use super::api::{error_response, generate_response, GenerateRequest};
+use super::api::{generate_response, metrics_response, ApiError, GenerateRequest};
 use super::http::{HttpRequest, HttpResponse};
 use crate::coordinator::request::{collect_response, FinishReason};
+use crate::coordinator::router::SubmitOptions;
 use crate::coordinator::Router;
 use crate::model::ByteTokenizer;
 use crate::util::json::{obj, Json};
 use std::sync::Arc;
+
+/// Suggested client retry delay on a 429 admission rejection.
+const ADMISSION_RETRY_MS: u64 = 250;
 
 /// Shareable service state.
 pub struct KvqService {
@@ -31,63 +35,60 @@ impl KvqService {
     pub fn handle(&self, req: HttpRequest) -> HttpResponse {
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/health") => HttpResponse::json(200, &obj([("status", "ok".into())])),
-            ("GET", "/metrics") => self.metrics(),
+            ("GET", "/metrics") => HttpResponse::json(200, &metrics_response(&self.router)),
             ("GET", "/config") => HttpResponse::json(200, &self.info),
             ("POST", "/generate") => self.generate(&req),
-            ("GET", _) | ("POST", _) => {
-                HttpResponse::json(404, &error_response("unknown endpoint"))
-            }
-            _ => HttpResponse::json(405, &error_response("method not allowed")),
+            ("GET", _) | ("POST", _) => ApiError::not_found("unknown endpoint").to_response(),
+            _ => ApiError::method_not_allowed().to_response(),
         }
-    }
-
-    fn metrics(&self) -> HttpResponse {
-        let mut engines = Vec::new();
-        for name in self.router.engine_names() {
-            let snap = self.router.engine(name).unwrap().metrics.snapshot();
-            let mut j = snap.to_json();
-            if let Json::Obj(ref mut o) = j {
-                o.insert("engine".into(), Json::Str(name.to_string()));
-            }
-            engines.push(j);
-        }
-        HttpResponse::json(200, &obj([("engines", Json::Arr(engines))]))
     }
 
     fn generate(&self, req: &HttpRequest) -> HttpResponse {
         let body = match req.body_str() {
             Ok(b) => b,
-            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+            Err(e) => return ApiError::bad_request(format!("{e}")).to_response(),
         };
         let greq = match GenerateRequest::parse(body) {
             Ok(r) => r,
-            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+            Err(e) => return ApiError::bad_request(format!("{e}")).to_response(),
         };
         let prompt = self.tokenizer.encode(&greq.prompt);
         let submit = match &greq.engine {
-            Some(name) => self.router.submit_to(
-                name,
-                prompt,
-                greq.max_new_tokens,
-                greq.sampling(),
-            ),
-            None => self.router.submit(prompt, greq.max_new_tokens, greq.sampling()),
+            Some(name) => self
+                .router
+                .submit_to(name, prompt, greq.max_new_tokens, greq.sampling())
+                .map_err(|e| ApiError::bad_request(format!("{e}"))),
+            None => self
+                .router
+                .submit_with(
+                    prompt,
+                    greq.max_new_tokens,
+                    greq.sampling(),
+                    SubmitOptions {
+                        session: greq.session.clone(),
+                        priority: greq.priority,
+                        ..Default::default()
+                    },
+                )
+                .map_err(ApiError::from_submit),
         };
         let (id, rx) = match submit {
             Ok(x) => x,
-            Err(e) => return HttpResponse::json(400, &error_response(&format!("{e}"))),
+            Err(e) => return e.to_response(),
         };
         let (tokens, reason, ttft, elapsed) = collect_response(&rx);
-        let (status, reason_str) = match &reason {
-            FinishReason::Length => (200, "length".to_string()),
-            FinishReason::Stop => (200, "stop".to_string()),
-            FinishReason::CapacityExhausted => (200, "capacity".to_string()),
-            FinishReason::Rejected(c) => (429, format!("rejected: {c}")),
-            FinishReason::Error(c) => (500, format!("error: {c}")),
+        let reason_str = match &reason {
+            FinishReason::Length => "length".to_string(),
+            FinishReason::Stop => "stop".to_string(),
+            FinishReason::CapacityExhausted => "capacity".to_string(),
+            FinishReason::Rejected(c) => {
+                return ApiError::admission_rejected(c.clone(), ADMISSION_RETRY_MS).to_response()
+            }
+            FinishReason::Error(c) => return ApiError::internal(c.clone()).to_response(),
         };
         let text = self.tokenizer.decode(&tokens);
         HttpResponse::json(
-            status,
+            200,
             &generate_response(id, &text, &tokens, &reason_str, ttft, elapsed),
         )
     }
@@ -96,12 +97,14 @@ impl KvqService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::{Backend, ServeConfig};
     use crate::coordinator::engine::{self, EngineConfig};
-    use crate::coordinator::router::RoutePolicy;
+    use crate::coordinator::router::{Affinity, RoutePolicy, RouterConfig};
     use crate::kvcache::{PolicySpec, Precision};
     use crate::model::runner::CpuBackend;
     use crate::model::weights::Weights;
     use crate::model::ModelSpec;
+    use crate::server::api::SCHEMA_VERSION;
 
     fn service() -> (KvqService, crate::coordinator::EngineHandle, std::thread::JoinHandle<()>) {
         let (h, join) = engine::spawn(
@@ -145,7 +148,14 @@ mod tests {
         let m = get(&svc, "/metrics");
         assert_eq!(m.status, 200);
         let j = Json::parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(j.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
+        // Per-shard namespacing + the legacy alias point at the same shape.
+        assert_eq!(j.get("shards").at(0).get("engine").as_str(), Some("int8"));
+        assert_eq!(j.get("shards").at(0).get("shard").as_usize(), Some(0));
         assert_eq!(j.get("engines").at(0).get("engine").as_str(), Some("int8"));
+        // Aggregated totals surface at the top level for v1 consumers.
+        assert!(j.get("requests_submitted").as_f64().is_some());
+        assert_eq!(j.get("router").get("shards").as_usize(), Some(1));
         h.drain();
         join.join().unwrap();
     }
@@ -154,7 +164,7 @@ mod tests {
     fn generate_roundtrip() {
         let (svc, h, join) = service();
         // vocab is 64 in test-tiny: use low-byte prompt chars (so ids < 64).
-        let resp = post(&svc, "/generate", r#"{"prompt":"","max_new_tokens":3}"#);
+        let resp = post(&svc, "/generate", r#"{"prompt":"","max_new_tokens":3}"#);
         assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
         assert_eq!(j.get("finish_reason").as_str(), Some("length"));
@@ -164,25 +174,31 @@ mod tests {
     }
 
     #[test]
+    fn generate_accepts_session_and_priority() {
+        let (svc, h, join) = service();
+        let resp = post(
+            &svc,
+            "/generate",
+            r#"{"prompt":"","max_new_tokens":2,"session":"u1","priority":"interactive"}"#,
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let bad = post(&svc, "/generate", r#"{"prompt":"","priority":"vip"}"#);
+        assert_eq!(bad.status, 400);
+        h.drain();
+        join.join().unwrap();
+    }
+
+    #[test]
     fn config_endpoint_serves_info() {
         let (mut svc, h, join) = service();
-        svc.info = crate::server::api::config_response(
-            "test-tiny",
-            "uniform:int8",
-            "int8",
-            "cpu",
-            2,
-            "optimistic",
-            0,
-            "vectorized",
-            true,
-            "auto",
-            0,
-        );
+        let cfg = ServeConfig::builder().backend(Backend::CpuRef).build();
+        svc.info = crate::server::api::config_response(&cfg, 0, 2);
         let resp = get(&svc, "/config");
         assert_eq!(resp.status, 200);
         let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("schema_version").as_usize(), Some(SCHEMA_VERSION as usize));
         assert_eq!(j.get("parallelism").as_usize(), Some(2));
+        assert_eq!(j.get("shards").as_usize(), Some(1));
         h.drain();
         join.join().unwrap();
     }
@@ -190,9 +206,15 @@ mod tests {
     #[test]
     fn bad_requests_are_4xx() {
         let (svc, h, join) = service();
-        assert_eq!(post(&svc, "/generate", "not json").status, 400);
+        let r = post(&svc, "/generate", "not json");
+        assert_eq!(r.status, 400);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("error").get("code").as_str(), Some("bad_request"));
         assert_eq!(post(&svc, "/generate", r#"{"nope":1}"#).status, 400);
-        assert_eq!(get(&svc, "/bogus").status, 404);
+        let r = get(&svc, "/bogus");
+        assert_eq!(r.status, 404);
+        let j = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(j.get("error").get("code").as_str(), Some("not_found"));
         h.drain();
         join.join().unwrap();
     }
@@ -207,7 +229,61 @@ mod tests {
             &format!(r#"{{"prompt":"{long}","max_new_tokens":30}}"#),
         );
         assert_eq!(resp.status, 429);
+        let j = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        assert_eq!(j.get("error").get("code").as_str(), Some("admission_rejected"));
+        assert!(j.get("error").get("retry_after_ms").as_usize().is_some());
         h.drain();
         join.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_shape_is_sharded_with_config() {
+        // Two shards behind an affine router: per-shard gauges are
+        // namespaced, totals aggregate, router counters present.
+        let mk = || {
+            engine::spawn(
+                EngineConfig {
+                    quant_policy: PolicySpec::uniform(Precision::Int8),
+                    ..Default::default()
+                },
+                || {
+                    let spec = ModelSpec::test_tiny();
+                    let w = Weights::synthetic(&spec, 7);
+                    Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn crate::model::LmBackend>)
+                },
+            )
+        };
+        let (h0, j0) = mk();
+        let (h1, j1) = mk();
+        let mut router = Router::with_config(RouterConfig {
+            policy: RoutePolicy::LeastLoaded,
+            affinity: Affinity::Session,
+            queue_depth: 4,
+            overflow_depth: 8,
+        });
+        router.add_engine("shard0", h0.clone());
+        router.add_engine("shard1", h1.clone());
+        let svc = KvqService::new(Arc::new(router));
+        let resp = post(
+            &svc,
+            "/generate",
+            r#"{"prompt":"","max_new_tokens":2,"session":"pin"}"#,
+        );
+        assert_eq!(resp.status, 200, "{}", String::from_utf8_lossy(&resp.body));
+        let m = get(&svc, "/metrics");
+        let j = Json::parse(std::str::from_utf8(&m.body).unwrap()).unwrap();
+        assert_eq!(j.get("shards").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("shards").at(1).get("shard").as_usize(), Some(1));
+        assert!(j.get("shards").at(0).get("pool_total_blocks").as_f64().is_some());
+        assert!(j.get("shards").at(0).get("kernel_isa").as_str().is_some());
+        assert_eq!(j.get("router").get("affinity").as_str(), Some("session"));
+        assert_eq!(j.get("router").get("queue_depth").as_usize(), Some(4));
+        assert_eq!(j.get("router").get("submitted").as_usize(), Some(1));
+        // The one finished request shows in the aggregated totals.
+        assert_eq!(j.get("requests_finished").as_f64(), Some(1.0));
+        h0.drain();
+        h1.drain();
+        j0.join().unwrap();
+        j1.join().unwrap();
     }
 }
