@@ -18,6 +18,11 @@
 //!     vs the four scalar variants on the fused INT8 dot + softmax·V
 //!     accumulation at d ∈ {64, 128, 4096} (runs in --smoke — the perf
 //!     trajectory records real numbers per push)
+//! A11. decode_batching: fused multi-query batched decode vs W
+//!     independent per-sequence calls, wave widths {1, 4, 16} × shared
+//!     COW-prefix fraction {0, 0.5, 1.0} — records
+//!     `speedup_vs_unbatched` plus the amortized cache-byte footprint
+//!     (runs in --smoke)
 //!
 //! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
 //! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
@@ -422,6 +427,125 @@ fn main() -> anyhow::Result<()> {
             );
         }
         kvq::bench::figures::emit(&t10, "ablation_a10_kernel_backend");
+    }
+
+    // A11: decode_batching — the fused multi-query batched decode path
+    // (wave_view + *_rows_mq kernels) vs W independent per-sequence
+    // decode_paged calls on the same cache. Waves are built the way the
+    // engine builds them: shared COW-prefix blocks come from fork(), so
+    // the batched path dequantizes each shared physical block once per
+    // (wave, layer, head) while the per-sequence path pays once per
+    // member. Outputs are bit-identical; only the traversal is measured.
+    {
+        use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
+        use kvq::kvcache::{Precision, QuantPolicy};
+        use kvq::model::weights::Weights;
+        use kvq::model::{BatchScratch, CpuModel, ModelSpec};
+        use kvq::quant::simd::KernelBackend;
+
+        let spec = ModelSpec::test_tiny();
+        let mdl = CpuModel::new(spec.clone(), Weights::synthetic(&spec, 0xA11));
+        let isa = KernelBackend::Auto.resolve();
+        let cache_cfg = CacheConfig {
+            layers: spec.layers,
+            heads: spec.heads,
+            head_dim: spec.head_dim,
+            max_seq: spec.max_seq,
+            block_size: 4,
+            num_blocks: 4096,
+            scale_margin: 1.0,
+        };
+        let ctx = 16usize; // decode position; shared_len must stay block-aligned
+        let mut rng = kvq::util::rng::Rng::new(0x11A);
+        let tokens: Vec<i32> = (0..ctx + 1).map(|_| rng.below(spec.vocab as u64) as i32).collect();
+        let mut t11 = Table::new(
+            "A11 — decode_batching: fused multi-query wave vs per-sequence decode (INT8)",
+            &["width", "shared", "unbatched", "batched", "speedup", "deduped", "bytes saved"],
+        );
+        for width in [1usize, 4, 16] {
+            for shared_frac in [0.0f64, 0.5, 1.0] {
+                let shared_len = (ctx as f64 * shared_frac) as usize;
+                let mut mgr = KvCacheManager::new(
+                    cache_cfg,
+                    QuantPolicy::uniform(Precision::Int8, cache_cfg.layers, cache_cfg.heads),
+                );
+                // Shared prefix via fork (COW blocks), per-member tail via
+                // append; shared_frac 0 prefills each member independently.
+                let ids: Vec<_> = if shared_len == 0 {
+                    let pre = mdl.prefill(&tokens, ctx);
+                    (0..width)
+                        .map(|_| {
+                            let id = mgr.new_sequence();
+                            mgr.set_prefill(id, &pre.k, &pre.v, ctx).unwrap();
+                            id
+                        })
+                        .collect()
+                } else {
+                    let pre = mdl.prefill(&tokens, shared_len);
+                    let parent = mgr.new_sequence();
+                    mgr.set_prefill(parent, &pre.k, &pre.v, shared_len).unwrap();
+                    let ids: Vec<_> = (0..width).map(|_| mgr.fork(parent).unwrap()).collect();
+                    mgr.free(parent);
+                    for &id in &ids {
+                        for pos in shared_len..ctx {
+                            let (_, kn, vn) = {
+                                let view = mgr.view(id).unwrap();
+                                mdl.decode_paged(tokens[pos], pos, &view, Variant::Vectorized, isa)
+                                    .unwrap()
+                            };
+                            mgr.append_row(id, &kn, &vn).unwrap();
+                        }
+                    }
+                    ids
+                };
+                let queries: Vec<(i32, usize)> = ids.iter().map(|_| (tokens[ctx], ctx)).collect();
+                let mu = bencher.measure("unbatched", || {
+                    for (&id, &(tok, pos)) in ids.iter().zip(&queries) {
+                        let view = mgr.view(id).unwrap();
+                        mdl.decode_paged(tok, pos, &view, Variant::Vectorized, isa).unwrap();
+                    }
+                });
+                let mut scratch = BatchScratch::new();
+                let mb = bencher.measure("batched", || {
+                    let wave = mgr.wave_view(&ids).unwrap();
+                    mdl.decode_paged_batch(&queries, &wave, Variant::Vectorized, isa, &mut scratch)
+                        .unwrap();
+                });
+                let wave = mgr.wave_view(&ids).unwrap();
+                let deduped = wave.blocks_deduped();
+                let batched_bytes = wave.attention_bytes();
+                let unbatched_bytes: usize =
+                    ids.iter().map(|&id| mgr.view(id).unwrap().attention_bytes()).sum();
+                let speedup = mu.median() / mb.median();
+                t11.row(&[
+                    width.to_string(),
+                    format!("{shared_frac:.1}"),
+                    cell_time(mu.median()),
+                    cell_time(mb.median()),
+                    format!("{speedup:.2}x"),
+                    deduped.to_string(),
+                    (unbatched_bytes - batched_bytes).to_string(),
+                ]);
+                report.add(
+                    "a11_decode_batching",
+                    &format!("w{width}_shared{}", (shared_frac * 100.0) as usize),
+                    Some(mb.median()),
+                    &[
+                        ("width", Json::Num(width as f64)),
+                        ("shared_frac", Json::Num(shared_frac)),
+                        ("unbatched_median_s", Json::Num(mu.median())),
+                        ("speedup_vs_unbatched", Json::Num(speedup)),
+                        ("blocks_deduped", Json::Num(deduped as f64)),
+                        ("cache_bytes_batched", Json::Num(batched_bytes as f64)),
+                        ("cache_bytes_unbatched", Json::Num(unbatched_bytes as f64)),
+                    ],
+                );
+                for id in ids {
+                    mgr.free(id);
+                }
+            }
+        }
+        kvq::bench::figures::emit(&t11, "ablation_a11_decode_batching");
     }
 
     // A5 + A7 need the runtime.

@@ -11,7 +11,11 @@
 //! and prefix hit rate — plus the **decode-path scenario** (section
 //! `decode_path`): staged gather-into-staging vs zero-copy block-native
 //! fused attention, reporting decode ns/token and cache bytes/token and
-//! asserting the two paths emit identical tokens.
+//! asserting the two paths emit identical tokens — and the
+//! **decode_batching scenario**: fused multi-query batched decode (auto)
+//! vs the per-sequence path (off) on a shared-prefix wave, reporting
+//! `speedup_vs_unbatched`, `mq_passes`, `blocks_deduped`, and cache
+//! bytes/token, again with identical-token assertions.
 //!
 //! Flags: --model kvq-3m|kvq-25m --requests N --max-new N --concurrency N
 //!        --threads N (skip the sweep, run one worker count)
@@ -24,7 +28,7 @@ use kvq::bench::workload::ServingWorkload;
 use kvq::bench::BenchReport;
 use kvq::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use kvq::coordinator::batcher::BatcherConfig;
-use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::engine::{self, DecodeBatching, EngineConfig};
 use kvq::coordinator::request::collect_response;
 use kvq::coordinator::router::{RoutePolicy, Router};
 use kvq::kvcache::{PolicySpec, Precision};
@@ -277,6 +281,98 @@ fn decode_path_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::
     Ok(())
 }
 
+/// Fused multi-query batched decode vs the per-sequence path on a wave
+/// of requests sharing a COW prefix (duplicate prompts + prefix cache,
+/// so decode waves reference shared physical blocks). `off` pins the
+/// baseline; `auto` must emit byte-identical tokens while reading fewer
+/// cache bytes per token (shared blocks decoded once per wave). Records
+/// `speedup_vs_unbatched` from decode ns/token plus the new `mq_passes`
+/// and `blocks_deduped` gauges; runs in `--smoke` so CI's
+/// `BENCH_e2e_smoke.json` carries a `decode_batching` section.
+fn decode_batching_scenario(report: &mut BenchReport, n_requests: usize) -> anyhow::Result<()> {
+    let spec = ModelSpec::test_tiny();
+    let prompt_len = spec.block_size;
+    let max_new = (spec.max_seq - prompt_len) / 2;
+    let n_prompts = 2usize;
+    let prompt_blocks = 2 * spec.layers * prompt_len.div_ceil(spec.block_size);
+    let wl = ServingWorkload::poisson(
+        n_prompts,
+        1000.0,
+        (prompt_len, prompt_len),
+        max_new,
+        spec.vocab.min(256),
+        17,
+    );
+    // Duplicate prompts: repeats fork the prefix cache entry, so the
+    // decode wave shares physical prefix blocks across members.
+    let prompts: Vec<Vec<i32>> =
+        (0..n_requests).map(|i| wl.prompts[i % n_prompts].clone()).collect();
+    let mut results: Vec<(Vec<Vec<i32>>, kvq::coordinator::MetricsSnapshot)> = Vec::new();
+    for mode in [DecodeBatching::Off, DecodeBatching::Auto] {
+        let ecfg = EngineConfig {
+            quant_policy: PolicySpec::uniform(Precision::Int8),
+            prefix_cache_blocks: prompt_blocks * n_prompts,
+            decode_batching: mode,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("int8", h.clone());
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        let tokens: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+        h.drain();
+        join.join().ok();
+        results.push((tokens, h.metrics.snapshot()));
+    }
+    let (off_tokens, off_snap) = &results[0];
+    let (auto_tokens, auto_snap) = &results[1];
+    assert_eq!(
+        off_tokens, auto_tokens,
+        "batched decode must emit byte-identical tokens to the per-sequence path"
+    );
+    let speedup = off_snap.decode_ns_per_token() / auto_snap.decode_ns_per_token();
+    for (label, snap) in [("off", off_snap), ("auto", auto_snap)] {
+        report.add(
+            "decode_batching",
+            label,
+            None,
+            &[
+                (
+                    "speedup_vs_unbatched",
+                    Json::Num(if label == "auto" { speedup } else { 1.0 }),
+                ),
+                ("decode_ns_per_token", Json::Num(snap.decode_ns_per_token())),
+                ("mq_passes", Json::Num(snap.mq_passes as f64)),
+                ("blocks_deduped", Json::Num(snap.blocks_deduped as f64)),
+                ("cache_bytes_per_token", Json::Num(snap.cache_bytes_per_token())),
+                ("prefix_hits", Json::Num(snap.prefix_hits as f64)),
+                ("tokens", Json::Num(snap.tokens_generated as f64)),
+            ],
+        );
+    }
+    assert!(
+        auto_snap.mq_passes > 0,
+        "auto run must take the fused multi-query path on a concurrent wave"
+    );
+    assert!(
+        auto_snap.cache_bytes_read <= off_snap.cache_bytes_read,
+        "shared-prefix wave must not read more cache bytes batched than per-sequence"
+    );
+    println!(
+        "[decode_batching] tokens identical ✓  {:.2}x vs unbatched, {} mq passes, \
+         {} blocks deduped, {:.0} vs {:.0} cache bytes/token",
+        speedup,
+        auto_snap.mq_passes,
+        auto_snap.blocks_deduped,
+        auto_snap.cache_bytes_per_token(),
+        off_snap.cache_bytes_per_token()
+    );
+    Ok(())
+}
+
 /// Policy sweep on the CPU oracle: serve the same workload under each
 /// named quantization policy (`uniform:int8`, `uniform:int4`, `k8v4`,
 /// `sink8`) and record throughput, decode ns/token, cache bytes/token,
@@ -490,6 +586,10 @@ fn main() -> anyhow::Result<()> {
     // Decode data-path contrast: staged copies vs zero-copy block-native
     // fused attention (CPU backend; runs in --smoke for the CI artifact).
     decode_path_scenario(&mut report, args.usize_or("decode-path-requests", 6))?;
+
+    // Fused multi-query batched decode vs per-sequence on a shared-prefix
+    // wave (CPU backend; runs in --smoke for the CI artifact).
+    decode_batching_scenario(&mut report, args.usize_or("decode-batching-requests", 6))?;
 
     // Quantization-policy sweep (CPU backend; runs in --smoke too).
     policy_sweep_scenario(&mut report, args.usize_or("policy-sweep-requests", 4))?;

@@ -21,6 +21,7 @@ pub mod shapes;
 use crate::coordinator::admission::{AdmissionConfig, AdmissionMode};
 use crate::coordinator::batcher::BatcherConfig;
 use crate::coordinator::router::{Affinity, RoutePolicy, RouterConfig};
+use crate::coordinator::DecodeBatching;
 use crate::kvcache::{PolicySpec, Precision};
 use crate::model::runner::DecodeKernel;
 use crate::quant::simd::KernelBackend;
@@ -96,6 +97,12 @@ pub struct ServeConfig {
     /// reproduces legacy bytes exactly. The selected ISA shows up at
     /// `GET /metrics` as `kernel_isa`.
     pub kernel_backend: KernelBackend,
+    /// Fused multi-query batched decode (`auto|off`,
+    /// `KVQ_DECODE_BATCHING` env override). `auto` regroups each decode
+    /// wave into per-(layer, head) passes that dequantize every physical
+    /// cache block at most once per wave; `off` forces the per-sequence
+    /// path. Outputs are bit-identical either way.
+    pub decode_batching: DecodeBatching,
     /// Engine shard count. Each shard owns its own block pool, prefix
     /// cache, and engine thread; the router front door spreads sessions
     /// across them (`--shards`).
@@ -131,6 +138,7 @@ impl Default for ServeConfig {
             attention_kernel: Variant::Vectorized,
             paged_decode: true,
             kernel_backend: KernelBackend::Auto,
+            decode_batching: DecodeBatching::Auto,
             shards: 1,
             affinity: Affinity::Session,
             queue_depth: 0,
@@ -162,6 +170,7 @@ pub const CLI_FLAGS: &[(&str, &str)] = &[
     ("attention-kernel", "attention_kernel"),
     ("paged-decode", "paged_decode"),
     ("kernel-backend", "kernel_backend"),
+    ("decode-batching", "decode_batching"),
     ("max-running", "max_running"),
     ("max-waiting", "max_waiting"),
     ("watermark", "watermark"),
@@ -240,6 +249,11 @@ impl ServeConfig {
                 self.kernel_backend = KernelBackend::parse(s)
                     .ok_or_else(|| anyhow!("bad kernel_backend {s:?} (auto|scalar|simd)"))?;
             }
+            "decode_batching" => {
+                let s = str_val(key, v)?;
+                self.decode_batching = DecodeBatching::parse(s)
+                    .ok_or_else(|| anyhow!("bad decode_batching {s:?} (auto|off)"))?;
+            }
             "max_running" => self.batcher.admission.max_running = usize_val(key, v)?,
             "max_waiting" => self.batcher.admission.max_waiting = usize_val(key, v)?,
             "watermark" => self.batcher.admission.watermark = f64_val(key, v)?,
@@ -299,6 +313,7 @@ impl ServeConfig {
             attention_kernel: self.attention_kernel,
             paged_decode: self.paged_decode,
             kernel_backend: self.kernel_backend,
+            decode_batching: self.decode_batching,
         }
     }
 
@@ -529,6 +544,7 @@ mod tests {
         assert!(c.apply_json(&Json::parse(r#"{"admission_mode":"psychic"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"attention_kernel":"warp"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"kernel_backend":"warp"}"#).unwrap()).is_err());
+        assert!(c.apply_json(&Json::parse(r#"{"decode_batching":"turbo"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"affinity":"sticky"}"#).unwrap()).is_err());
         assert!(c.apply_json(&Json::parse(r#"{"shards":"many"}"#).unwrap()).is_err());
     }
@@ -545,6 +561,21 @@ mod tests {
         c.apply_args(&args).unwrap();
         assert_eq!(c.kernel_backend, KernelBackend::Simd);
         let bad = Args::parse_from(["--kernel-backend", "avx9"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn decode_batching_knob_round_trips() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.decode_batching, DecodeBatching::Auto, "auto is the default");
+        c.apply_json(&Json::parse(r#"{"decode_batching":"off"}"#).unwrap()).unwrap();
+        assert_eq!(c.decode_batching, DecodeBatching::Off);
+        assert_eq!(c.engine_config().decode_batching, DecodeBatching::Off);
+        // CLI wins over the file.
+        let args = Args::parse_from(["--decode-batching", "auto"].iter().map(|s| s.to_string()));
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.decode_batching, DecodeBatching::Auto);
+        let bad = Args::parse_from(["--decode-batching", "turbo"].iter().map(|s| s.to_string()));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

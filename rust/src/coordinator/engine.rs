@@ -52,8 +52,9 @@ use super::request::{EventTx, FinishReason, Request, RequestId, TokenEvent};
 use super::scheduler::{Running, Scheduler};
 use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
 use crate::kvcache::{PolicySpec, PrefixCache, QuantPolicy, StagedKind};
+use crate::model::runner::DecodeResult;
 use crate::model::sample;
-use crate::model::LmBackend;
+use crate::model::{BatchScratch, LmBackend};
 use crate::parallel;
 use crate::quant::simd::{Isa, KernelBackend};
 use crate::quant::Variant;
@@ -105,6 +106,66 @@ pub struct EngineConfig {
     /// SIMD may differ within f32 accumulation error (score-pass sum
     /// order — see `quant::simd`).
     pub kernel_backend: KernelBackend,
+    /// Fused multi-query batched decode: `auto` (default) regroups every
+    /// paged decode wave wider than one sequence into per-(layer, head)
+    /// passes over the wave's deduped physical blocks — a COW-shared
+    /// prefix block is dequantized once per wave. `off` keeps the legacy
+    /// per-sequence walk. Never changes outputs: batched decode is
+    /// byte-identical to the per-sequence path (same backend, same
+    /// threads) — pinned by `tests/parallel_consistency.rs`. The
+    /// `KVQ_DECODE_BATCHING` env var overrides the configured value.
+    pub decode_batching: DecodeBatching,
+}
+
+/// The `decode_batching` knob (see [`EngineConfig::decode_batching`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeBatching {
+    /// Batch paged decode waves through the fused multi-query path
+    /// whenever the backend supports it and the wave has ≥ 2 members.
+    Auto,
+    /// Always walk the wave per sequence (the legacy path).
+    Off,
+}
+
+impl DecodeBatching {
+    pub fn parse(s: &str) -> Option<DecodeBatching> {
+        match s {
+            "auto" => Some(DecodeBatching::Auto),
+            "off" => Some(DecodeBatching::Off),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DecodeBatching::Auto => "auto",
+            DecodeBatching::Off => "off",
+        }
+    }
+
+    /// Resolve the knob against the `KVQ_DECODE_BATCHING` env override
+    /// (the CI legacy-path job forces `off` this way); an unparseable
+    /// value is ignored with a one-time warning, mirroring
+    /// [`KernelBackend::resolve`].
+    pub fn resolve(self) -> DecodeBatching {
+        let env = std::env::var("KVQ_DECODE_BATCHING").ok();
+        if let Some(v) = env.as_deref() {
+            match DecodeBatching::parse(v) {
+                Some(b) => return b,
+                None => {
+                    static WARNED: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+                    WARNED.get_or_init(|| {
+                        crate::warn!(
+                            "ignoring unparseable KVQ_DECODE_BATCHING={v:?} \
+                             (expected auto|off); using configured {}",
+                            self.name()
+                        );
+                    });
+                }
+            }
+        }
+        self
+    }
 }
 
 impl Default for EngineConfig {
@@ -121,6 +182,7 @@ impl Default for EngineConfig {
             attention_kernel: Variant::Vectorized,
             paged_decode: true,
             kernel_backend: KernelBackend::Auto,
+            decode_batching: DecodeBatching::Auto,
         }
     }
 }
@@ -321,6 +383,14 @@ struct Engine {
     /// Resolved kernel ISA (`cfg.kernel_backend` + `KVQ_KERNEL_BACKEND`
     /// env override against the host's CPU features).
     isa: Isa,
+    /// Fused multi-query batched decode resolved against the knob
+    /// (`cfg.decode_batching` + `KVQ_DECODE_BATCHING` env override) and
+    /// the backend's capability. Engages on paged waves of ≥ 2 members.
+    batching: bool,
+    /// Reusable wave-level arenas for the batched path — the multi-query
+    /// analog of the staging-slot reuse above: grown once, then no
+    /// allocation per (layer, head) pass on the decode hot path.
+    batch_scratch: BatchScratch,
 }
 
 /// Per-request sampling RNG, derived statelessly from the engine seed,
@@ -379,11 +449,15 @@ impl Engine {
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
         let ns = spec.layers * spec.heads * spec.head_dim;
         let paged = cfg.paged_decode && backend.supports_paged_decode();
+        let batching = cfg.decode_batching.resolve() == DecodeBatching::Auto
+            && paged
+            && backend.supports_batched_decode();
         metrics.set_policy(&policy_name);
         metrics.set_kernel_isa(isa.name());
         crate::info!(
             "engine up: model={} policy={} blocks={} cache={:.1} MiB threads={} \
-             admission={} prefix_cache_blocks={} decode={} kernel={} backend={} isa={}",
+             admission={} prefix_cache_blocks={} decode={} kernel={} backend={} isa={} \
+             batching={}",
             spec.name,
             policy_name,
             num_blocks,
@@ -394,7 +468,8 @@ impl Engine {
             if paged { "paged" } else { "staged" },
             cfg.attention_kernel.name(),
             cfg.kernel_backend.name(),
-            isa.name()
+            isa.name(),
+            if batching { "mq" } else { "off" }
         );
         Engine {
             backend,
@@ -415,6 +490,8 @@ impl Engine {
             paged,
             staged_cache_bytes,
             isa,
+            batching,
+            batch_scratch: BatchScratch::new(),
             cfg,
         }
     }
@@ -725,6 +802,14 @@ impl Engine {
             return;
         }
         if self.paged {
+            if self.batching && metas.len() >= 2 {
+                match self.decode_wave_batched(&metas) {
+                    Ok(()) => return,
+                    // The batch call mutates nothing until it succeeds,
+                    // so the per-sequence walk below is a clean retry.
+                    Err(e) => crate::debug!("batched decode fell back to per-sequence: {e:#}"),
+                }
+            }
             for &(id, seq, token, pos) in &metas {
                 if let Err(e) = self.decode_one(id, seq, token, pos, None) {
                     self.fail_decode(id, e);
@@ -838,6 +923,70 @@ impl Engine {
             }
         };
         self.metrics.on_decode(gather_secs, attend_t0.elapsed().as_secs_f64(), cache_bytes);
+        self.apply_decode(id, seq, &dec, gather_secs, t0)
+    }
+
+    /// Fused multi-query decode of a whole paged wave: one wave-level
+    /// view (physical blocks deduped per (layer, head)), one batched
+    /// backend call, then the same per-query tail as [`Self::decode_one`]
+    /// (append with reclaim fallback, sample, events). Bit-identity: per
+    /// member the batched backend call returns exactly the bytes the
+    /// per-sequence call would, and member decodes are data-independent
+    /// (each reads only its own sequence's rows), so regrouping the wave
+    /// never changes tokens. Errors before any mutation — the caller
+    /// falls back to the per-sequence walk.
+    fn decode_wave_batched(&mut self, metas: &[(u64, SeqId, i32, usize)]) -> Result<()> {
+        let t0 = Instant::now();
+        let ids: Vec<SeqId> = metas.iter().map(|&(_, seq, _, _)| seq).collect();
+        let queries: Vec<(i32, usize)> = metas.iter().map(|&(_, _, tok, pos)| (tok, pos)).collect();
+        let attend_t0 = Instant::now();
+        let (decs, wave_bytes, deduped) = {
+            let wave = self.cache.wave_view(&ids)?;
+            let bytes = wave.attention_bytes();
+            let deduped = wave.blocks_deduped();
+            let decs = self.backend.decode_paged_batch(
+                &queries,
+                &wave,
+                self.cfg.attention_kernel,
+                self.isa,
+                &mut self.batch_scratch,
+            )?;
+            (decs, bytes, deduped)
+        };
+        let attend_each = attend_t0.elapsed().as_secs_f64() / metas.len() as f64;
+        // Wave-level accounting: 2·L·H fused passes (K and V per head per
+        // layer), dedup count, and the amortized wave bytes — booked once.
+        // Per-member on_decode keeps decode_steps per token correct while
+        // contributing 0 bytes (the wave already carried them).
+        let spec = self.backend.spec();
+        self.metrics.on_mq_wave(2 * spec.layers * spec.heads, deduped, wave_bytes);
+
+        for (&(id, seq, _, _), dec) in metas.iter().zip(&decs) {
+            // A reclaim by an earlier member of this wave may have
+            // preempted this one: its state is parked, the result is
+            // dropped (readmission replays it deterministically).
+            if !self.sched.running.iter().any(|r| r.req.id == id) {
+                continue;
+            }
+            self.metrics.on_decode(0.0, attend_each, 0);
+            if let Err(e) = self.apply_decode(id, seq, dec, 0.0, t0) {
+                self.fail_decode(id, e);
+            }
+        }
+        Ok(())
+    }
+
+    /// The post-backend tail of one decode step, shared by the
+    /// per-sequence and batched paths: append the new K/V row (with
+    /// reclaim / self-preempt fallback), sample, stream, finish.
+    fn apply_decode(
+        &mut self,
+        id: u64,
+        seq: SeqId,
+        dec: &DecodeResult,
+        gather_secs: f64,
+        t0: Instant,
+    ) -> Result<()> {
         if self.cache.append_row(seq, &dec.k_new, &dec.v_new).is_err() {
             // The plan's accounting raced reality (another sequence's COW,
             // a resume, an unevictable prefix entry). Reclaim and retry;

@@ -65,8 +65,16 @@ struct Inner {
     attend_secs: f64,
     /// Cumulative cache payload+scale bytes a decode step touched: the
     /// staging copy volume (O(max_seq)) on the legacy path, the valid
-    /// rows actually read in place (O(len)) on the paged path.
+    /// rows actually read in place (O(len)) on the paged path. Batched
+    /// multi-query waves book their (dedup-amortized) wave bytes here
+    /// once via [`Metrics::on_mq_wave`] instead of per member.
     cache_bytes_read: u64,
+    /// Fused multi-query kernel passes executed by batched decode waves
+    /// (one per (wave, layer, K|V, head)).
+    mq_passes: u64,
+    /// Physical blocks dequantized once on behalf of >1 wave member
+    /// (Σ over wave groups of members−1) — the COW-sharing dedup win.
+    blocks_deduped: u64,
     ttft: LogHistogram,
     tpot: LogHistogram,
     e2e: LogHistogram,
@@ -109,6 +117,8 @@ impl Metrics {
             gather_secs: 0.0,
             attend_secs: 0.0,
             cache_bytes_read: 0,
+            mq_passes: 0,
+            blocks_deduped: 0,
             ttft: LogHistogram::latency(),
             tpot: LogHistogram::latency(),
             e2e: LogHistogram::latency(),
@@ -189,6 +199,18 @@ impl Metrics {
         m.cache_bytes_read += cache_bytes as u64;
     }
 
+    /// Wave-level accounting for one batched multi-query decode wave:
+    /// fused kernel passes, physical blocks deduplicated across members,
+    /// and the wave's amortized cache traffic (each deduped block's
+    /// payload counted once — booked here exactly once per wave, while
+    /// the per-member [`Metrics::on_decode`] calls book 0 bytes).
+    pub fn on_mq_wave(&self, passes: usize, deduped: usize, wave_bytes: usize) {
+        let mut m = self.0.lock().unwrap();
+        m.mq_passes += passes as u64;
+        m.blocks_deduped += deduped as u64;
+        m.cache_bytes_read += wave_bytes as u64;
+    }
+
     /// A running request was preempted (blocks freed, state parked).
     pub fn on_preempt(&self) {
         self.0.lock().unwrap().preemptions += 1;
@@ -229,6 +251,8 @@ impl Metrics {
             gather_secs: m.gather_secs,
             attend_secs: m.attend_secs,
             cache_bytes_read: m.cache_bytes_read,
+            mq_passes: m.mq_passes,
+            blocks_deduped: m.blocks_deduped,
             prefix_lookups: m.gauges.prefix_lookups,
             prefix_hits: m.gauges.prefix_hits,
             tokens_per_sec: m.tokens_generated as f64 / uptime.max(1e-9),
@@ -276,8 +300,14 @@ pub struct MetricsSnapshot {
     pub attend_secs: f64,
     /// Cumulative cache bytes a decode step touched: O(max_seq) staging
     /// copies on the legacy path vs O(len) in-place reads on the paged
-    /// path — the zero-copy win, numerically.
+    /// path — the zero-copy win, numerically. Batched waves contribute
+    /// their amortized wave bytes (deduped blocks counted once).
     pub cache_bytes_read: u64,
+    /// Fused multi-query kernel passes from batched decode waves.
+    pub mq_passes: u64,
+    /// Physical blocks whose dequantization was shared across wave
+    /// members by batched decode.
+    pub blocks_deduped: u64,
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
     pub tokens_per_sec: f64,
@@ -341,6 +371,8 @@ impl MetricsSnapshot {
             ("gather_secs", self.gather_secs.into()),
             ("attend_secs", self.attend_secs.into()),
             ("cache_bytes_read", (self.cache_bytes_read as usize).into()),
+            ("mq_passes", (self.mq_passes as usize).into()),
+            ("blocks_deduped", (self.blocks_deduped as usize).into()),
             ("cache_bytes_per_token", self.cache_bytes_per_token().into()),
             ("decode_ns_per_token", self.decode_ns_per_token().into()),
             ("prefix_lookups", (self.prefix_lookups as usize).into()),
@@ -427,6 +459,16 @@ mod tests {
         assert!((s.attend_secs - 0.006).abs() < 1e-12);
         assert_eq!(s.cache_bytes_read, 1500);
         assert!((s.cache_bytes_per_token() - 750.0).abs() < 1e-9);
+        // Batched-wave accounting: bytes amortized into the same
+        // cache_bytes_read stream, passes/dedup as their own gauges.
+        m.on_mq_wave(8, 3, 250);
+        let s2 = m.snapshot();
+        assert_eq!(s2.mq_passes, 8);
+        assert_eq!(s2.blocks_deduped, 3);
+        assert_eq!(s2.cache_bytes_read, 1750);
+        let j2 = s2.to_json();
+        assert_eq!(j2.get("mq_passes").as_usize(), Some(8));
+        assert_eq!(j2.get("blocks_deduped").as_usize(), Some(3));
         assert!((s.decode_ns_per_token() - 8e6).abs() < 1.0);
         let j = s.to_json();
         assert_eq!(j.get("decode_steps").as_usize(), Some(2));

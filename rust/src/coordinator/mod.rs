@@ -37,7 +37,7 @@ pub mod router;
 pub mod scheduler;
 
 pub use admission::AdmissionMode;
-pub use engine::{EngineConfig, EngineHandle};
+pub use engine::{DecodeBatching, EngineConfig, EngineHandle};
 pub use metrics::MetricsSnapshot;
 pub use request::{FinishReason, Priority, Request, RequestId, TokenEvent};
 pub use router::{

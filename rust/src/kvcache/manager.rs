@@ -741,6 +741,76 @@ impl KvCacheManager {
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         Ok(CacheView { pool: &self.pool, seq, cfg: &self.cfg, layouts: &self.layouts })
     }
+
+    /// Wave-level view over a decode wave's sequences, for the fused
+    /// multi-query decode path. Per (layer, K|V) stream the wave's blocks
+    /// are grouped by (logical block index, physical block id, valid
+    /// rows): a COW-shared prefix block appears in ONE [`WaveGroup`]
+    /// listing every wave member that references it, so the batched
+    /// kernels dequantize it once and fan scores/accumulations out to all
+    /// members. Members only join a group when their frozen stream scales
+    /// are bit-equal (always true for fork-derived sharing — fork clones
+    /// scales — but checked, so dedup can never change dequantized
+    /// values). Groups are ordered ascending by logical block index,
+    /// which keeps each member's V-accumulation order identical to its
+    /// per-sequence block walk — load-bearing for bit-identity.
+    ///
+    /// Member indices in the groups refer to positions in `ids`.
+    pub fn wave_view(&self, ids: &[SeqId]) -> Result<WaveView<'_>> {
+        let mut seqs = Vec::with_capacity(ids.len());
+        for &id in ids {
+            seqs.push(self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?);
+        }
+        let bs = self.cfg.block_size;
+        let mut groups: Vec<[Vec<WaveGroup>; 2]> = Vec::with_capacity(self.cfg.layers);
+        let mut deduped = 0usize;
+        for layer in 0..self.cfg.layers {
+            let mut pair: [Vec<WaveGroup>; 2] = [Vec::new(), Vec::new()];
+            for (kv, out) in pair.iter_mut().enumerate() {
+                let max_blocks = seqs
+                    .iter()
+                    .map(|s| {
+                        BlockTable::blocks_for(s.len, bs).min(s.tables[layer][kv].len())
+                    })
+                    .max()
+                    .unwrap_or(0);
+                for bi in 0..max_blocks {
+                    let first_at_bi = out.len();
+                    for (m, seq) in seqs.iter().enumerate() {
+                        let table = &seq.tables[layer][kv];
+                        let used = BlockTable::blocks_for(seq.len, bs).min(table.len());
+                        if bi >= used {
+                            continue;
+                        }
+                        let rows = bs.min(seq.len - bi * bs);
+                        let block = table.blocks()[bi];
+                        let joined = out[first_at_bi..].iter_mut().find(|g| {
+                            g.block == block
+                                && g.rows == rows
+                                && seqs[g.members[0]].scales[layer][kv]
+                                    == seq.scales[layer][kv]
+                        });
+                        match joined {
+                            Some(g) => {
+                                g.members.push(m);
+                                deduped += 1;
+                            }
+                            None => out.push(WaveGroup { bi, rows, block, members: vec![m] }),
+                        }
+                    }
+                }
+            }
+            groups.push(pair);
+        }
+        Ok(WaveView {
+            pool: &self.pool,
+            cfg: &self.cfg,
+            layouts: &self.layouts,
+            seqs,
+            groups,
+            deduped,
+        })
+    }
 }
 
 /// Borrow-based, read-only view of one sequence's paged cache (see
@@ -897,6 +967,148 @@ impl<'a> StreamView<'a> {
     pub fn head_rows_i4(&self, bi: usize, head: usize) -> &'a [u8] {
         debug_assert_eq!(self.head_codec(head).name(), "int4");
         self.head_rows_raw(bi, head)
+    }
+}
+
+/// One deduped physical block in a wave's (layer, K|V) pass: every wave
+/// member in `members` reads this block at the same logical index with
+/// the same valid rows and bit-equal scales, so one dequantization
+/// serves them all (see [`KvCacheManager::wave_view`]).
+#[derive(Debug, Clone)]
+pub struct WaveGroup {
+    /// Logical block index — identical for every member by COW
+    /// construction (prefix sharing aligns blocks positionally).
+    pub bi: usize,
+    /// Valid token rows in the block (the tail block may be partial).
+    pub rows: usize,
+    /// Physical pool block backing the group.
+    pub block: BlockId,
+    /// Wave member indices (positions in the `ids` slice passed to
+    /// `wave_view`) referencing this block. Never empty.
+    pub members: Vec<usize>,
+}
+
+/// Read-only view of a whole decode wave with physical blocks deduped
+/// per (layer, K|V) stream. Borrows the manager immutably, so appends
+/// and frees cannot invalidate it mid-read. Built by
+/// [`KvCacheManager::wave_view`].
+pub struct WaveView<'a> {
+    pool: &'a BlockPool,
+    cfg: &'a CacheConfig,
+    layouts: &'a [[StreamLayout; 2]],
+    seqs: Vec<&'a SequenceCache>,
+    /// groups[layer][kv], ascending by logical block index.
+    groups: Vec<[Vec<WaveGroup>; 2]>,
+    deduped: usize,
+}
+
+impl<'a> WaveView<'a> {
+    /// Number of wave members (queries).
+    pub fn width(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Valid token rows (the decode `pos`) of member `m`.
+    pub fn len(&self, m: usize) -> usize {
+        self.seqs[m].len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn layers(&self) -> usize {
+        self.cfg.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.cfg.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.cfg.head_dim
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.cfg.block_size
+    }
+
+    /// Longest member length in the wave (sizes per-head score scratch).
+    pub fn max_len(&self) -> usize {
+        self.seqs.iter().map(|s| s.len).max().unwrap_or(0)
+    }
+
+    /// Physical blocks dequantized once on behalf of several members:
+    /// Σ over groups of (members − 1). Surfaced at `GET /metrics` as
+    /// `blocks_deduped`.
+    pub fn blocks_deduped(&self) -> usize {
+        self.deduped
+    }
+
+    /// Deduped block groups of one (layer, K|V) stream, ascending by
+    /// logical block index.
+    pub fn groups(&self, layer: usize, kv: usize) -> &[WaveGroup] {
+        &self.groups[layer][kv]
+    }
+
+    /// Frozen scales of one head of one member's (layer, K|V) stream
+    /// (length `head_dim`). For dequantizing a [`WaveGroup`], pass any
+    /// member of the group — the grouping guarantees they are bit-equal.
+    pub fn head_scales(&self, m: usize, layer: usize, kv: usize, head: usize) -> &'a [f32] {
+        let d = self.cfg.head_dim;
+        &self.seqs[m].scales[layer][kv][head * d..(head + 1) * d]
+    }
+
+    /// Storage codec of one head of a (layer, K|V) stream — policy
+    /// geometry, identical across members.
+    pub fn head_codec(
+        &self,
+        layer: usize,
+        kv: usize,
+        head: usize,
+    ) -> &'static dyn crate::quant::Codec {
+        self.layouts[layer][kv].head_codec(head)
+    }
+
+    /// The valid rows of `head` in a group's physical block as raw page
+    /// bytes — `group.rows × bytes_per_row(head_dim)` bytes, in place in
+    /// the pool. Feed straight into the codec's fused multi-query
+    /// kernels.
+    pub fn head_rows_raw(&self, layer: usize, kv: usize, g: &WaveGroup, head: usize) -> &'a [u8] {
+        let blk = self.pool.block_raw(g.block);
+        &blk[self.layouts[layer][kv].head_slab(head, g.rows)]
+    }
+
+    /// Payload + scale bytes one batched attention pass over this wave
+    /// reads, with dedup amortization: each group's payload is counted
+    /// once regardless of member count, and each distinct scales slice
+    /// is counted once per stream. For a wave of width 1 this equals
+    /// [`CacheView::attention_bytes`]; for shared-prefix waves it is
+    /// smaller than the sum of per-member views — the bandwidth saving
+    /// surfaced at `GET /metrics` as `cache_bytes_read`.
+    pub fn attention_bytes(&self) -> usize {
+        let scale_bytes = self.cfg.heads * self.cfg.head_dim * 4;
+        let mut total = 0usize;
+        for layer in 0..self.cfg.layers {
+            for kv in 0..2 {
+                let layout = &self.layouts[layer][kv];
+                total += self.groups[layer][kv]
+                    .iter()
+                    .map(|g| layout.payload_bytes(g.rows))
+                    .sum::<usize>();
+                // Distinct scale slices across the wave for this stream
+                // (wave widths are small; linear compare).
+                let mut distinct: Vec<&[f32]> = Vec::new();
+                for s in &self.seqs {
+                    let sc: &[f32] = &s.scales[layer][kv];
+                    if !distinct.iter().any(|&d| d == sc) {
+                        distinct.push(sc);
+                    }
+                }
+                total += distinct.len() * scale_bytes;
+            }
+        }
+        total
     }
 }
 
@@ -1194,6 +1406,104 @@ mod tests {
         m.free(a);
         assert_eq!(m.free_blocks(), c.num_blocks);
         m.assert_refcounts_consistent(); // and again via Drop
+    }
+
+    #[test]
+    fn wave_view_dedups_cow_shared_blocks() {
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let a = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 6, 31); // blocks: [4 rows, 2 rows] per stream
+        m.set_prefill(a, &k, &v, 6).unwrap();
+        let b = m.fork(a).unwrap();
+
+        // Fully shared fork: every physical block serves both members
+        // through a single group.
+        let w = m.wave_view(&[a, b]).unwrap();
+        assert_eq!(w.width(), 2);
+        assert_eq!((w.len(0), w.len(1), w.max_len()), (6, 6, 6));
+        let streams = 2 * c.layers;
+        assert_eq!(w.blocks_deduped(), streams * 2, "2 shared blocks per stream");
+        for layer in 0..c.layers {
+            for kv in 0..2 {
+                let gs = w.groups(layer, kv);
+                assert_eq!(gs.len(), 2);
+                assert_eq!((gs[0].bi, gs[0].rows), (0, 4));
+                assert_eq!((gs[1].bi, gs[1].rows), (1, 2));
+                for g in gs {
+                    assert_eq!(g.members, vec![0, 1]);
+                    assert_eq!(m.pool.refcount(g.block), 2, "shared block refcount");
+                }
+            }
+        }
+        // Group slabs and scales address exactly what the per-sequence
+        // stream view reads.
+        let sv = m.view(a).unwrap();
+        let st = sv.stream(0, 0);
+        for (gi, g) in w.groups(0, 0).iter().enumerate() {
+            for h in 0..c.heads {
+                assert_eq!(w.head_rows_raw(0, 0, g, h), st.head_rows_raw(gi, h));
+                assert_eq!(w.head_scales(0, 0, 0, h), st.head_scales(h));
+                assert_eq!(w.head_codec(0, 0, h).name(), st.head_codec(h).name());
+            }
+        }
+        // Amortized traffic: the fully shared wave reads each block and
+        // each distinct scales slice once — one sequence's worth.
+        assert_eq!(w.attention_bytes(), sv.attention_bytes());
+        drop(st);
+        drop(sv);
+        drop(w);
+        m.free(a);
+        m.free(b);
+    }
+
+    #[test]
+    fn wave_view_tracks_cow_divergence_and_refcounts() {
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let a = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 6, 32);
+        m.set_prefill(a, &k, &v, 6).unwrap();
+        let b = m.fork(a).unwrap();
+        let hd = c.layers * c.heads * c.head_dim;
+        // Appending to the fork COWs its tail blocks: the prefix keeps
+        // deduping, the diverged tails must not.
+        m.append_row(b, &vec![0.3; hd], &vec![0.3; hd]).unwrap();
+
+        let w = m.wave_view(&[a, b]).unwrap();
+        assert_eq!((w.len(0), w.len(1)), (6, 7));
+        let streams = 2 * c.layers;
+        assert_eq!(w.blocks_deduped(), streams, "only the full prefix block dedups");
+        for layer in 0..c.layers {
+            for kv in 0..2 {
+                let gs = w.groups(layer, kv);
+                assert_eq!(gs.len(), 3, "shared prefix + two diverged tails");
+                assert_eq!(gs[0].bi, 0);
+                assert_eq!(gs[0].members, vec![0, 1]);
+                assert_eq!(m.pool.refcount(gs[0].block), 2);
+                // Ascending bi; diverged tails are singleton groups with
+                // distinct physical blocks and member-specific rows.
+                assert_eq!((gs[1].bi, gs[2].bi), (1, 1));
+                assert_ne!(gs[1].block, gs[2].block);
+                for g in &gs[1..] {
+                    assert_eq!(g.members.len(), 1);
+                    assert_eq!(m.pool.refcount(g.block), 1, "diverged tail is unique");
+                    let expect_rows = if g.members[0] == 0 { 2 } else { 3 };
+                    assert_eq!(g.rows, expect_rows);
+                }
+            }
+        }
+        drop(w);
+
+        // Width-1 waves reduce to the per-sequence view byte-for-byte.
+        let w1 = m.wave_view(&[a]).unwrap();
+        assert_eq!(w1.blocks_deduped(), 0);
+        assert_eq!(w1.attention_bytes(), m.view(a).unwrap().attention_bytes());
+        drop(w1);
+
+        assert!(m.wave_view(&[a, 999]).is_err(), "unknown member id");
+        m.free(a);
+        m.free(b);
     }
 
     #[test]

@@ -35,7 +35,7 @@ pub mod pool;
 pub mod prefix;
 pub mod table;
 
-pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView};
+pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView, WaveGroup, WaveView};
 pub use memory_model::{MemoryModel, PolicyMemory};
 pub use policy::{PolicySpec, PolicyTable, QuantPolicy, StagedKind};
 pub use pool::{BlockId, BlockPool};

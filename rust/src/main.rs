@@ -79,6 +79,11 @@ COMMANDS:
                AVX2/NEON at runtime, scalar reproduces legacy bytes.
                KVQ_KERNEL_BACKEND env overrides; selected ISA at
                GET /metrics \"kernel_isa\")
+             --decode-batching auto|off (fused multi-query batched
+               decode: dequantize each physical cache block once per
+               wave and fan results to every query sharing it; outputs
+               bit-identical to per-sequence. KVQ_DECODE_BATCHING env
+               overrides)
              --shards N (engine shards, each with its own block pool +
                prefix cache + thread; default 1)
              --affinity session|prefix|none (home-shard routing; default

@@ -23,8 +23,8 @@
 
 use super::spec::ModelSpec;
 use super::weights::Weights;
-use crate::kvcache::manager::CacheView;
-use crate::quant::simd::{self, Isa};
+use crate::kvcache::manager::{CacheView, WaveView};
+use crate::quant::simd::{self, Isa, MqMember};
 use crate::quant::Variant;
 
 /// y += x @ w, where x: (m,), w: (m, n) row-major, y: (n,).
@@ -279,6 +279,226 @@ impl CpuModel {
         Ok(self.decode_cached(token, pos, &PagedCache::new(view, variant, isa)))
     }
 
+    /// Fused multi-query decode over a whole wave — the batched serving
+    /// path. One transformer step for every `(token, pos)` query in
+    /// `queries` (aligned with the wave view's member indices), with
+    /// attention restructured into per-(layer, head) passes over the
+    /// wave's deduped block groups: each physical block is dequantized
+    /// **once** per (wave, layer, head) via the fused multi-query codec
+    /// kernels, scores/accumulations fanned out to every member.
+    ///
+    /// Bit-identity contract: per member, every expression and its
+    /// accumulation order match [`Self::decode_paged`] exactly — the mq
+    /// kernels are per-member bit-identical to their single-query twins
+    /// (same backend), and groups are walked ascending by logical block
+    /// index, preserving each member's V-accumulation order. Batched
+    /// decode therefore returns byte-identical (logits, k_new, v_new)
+    /// tuples to W independent per-sequence calls (same `isa`, same
+    /// threads) — pinned by `tests/parallel_consistency.rs`.
+    ///
+    /// All wave-level attention buffers (queries, score/weight rows,
+    /// accumulators, member lists, codec scratch) live in the
+    /// caller-owned [`BatchScratch`] (engine-owned, reused across waves),
+    /// so the fused per-(layer, head) hot loop allocates nothing after
+    /// warm-up; per-query outputs are allocated exactly as the
+    /// per-sequence path allocates them.
+    pub fn decode_paged_batch(
+        &self,
+        queries: &[(i32, usize)],
+        wave: &WaveView,
+        variant: Variant,
+        isa: Isa,
+        scratch: &mut BatchScratch,
+    ) -> anyhow::Result<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>> {
+        let sp = &self.spec;
+        anyhow::ensure!(
+            queries.len() == wave.width(),
+            "batch width {} != wave width {}",
+            queries.len(),
+            wave.width()
+        );
+        anyhow::ensure!(
+            wave.layers() == sp.layers
+                && wave.heads() == sp.heads
+                && wave.head_dim() == sp.head_dim,
+            "cache geometry does not match model spec"
+        );
+        for (m, &(_, pos)) in queries.iter().enumerate() {
+            anyhow::ensure!(
+                wave.len(m) == pos,
+                "batched decode pos {pos} != cache len {} for member {m}",
+                wave.len(m)
+            );
+        }
+        let (l, h, d, mdl) = (sp.layers, sp.heads, sp.head_dim, sp.d_model());
+        let width = queries.len();
+        let bs = wave.block_size();
+        let stride = wave.max_len();
+        scratch.ensure(width, d, stride);
+        let emb = self.weights.param("embedding");
+        let sqrt_d = (d as f32).sqrt();
+
+        // Per-query state (O(width) small vectors, same shapes the
+        // per-sequence path allocates per call).
+        let mut xs: Vec<Vec<f32>> = queries
+            .iter()
+            .map(|&(tok, _)| emb[tok as usize * mdl..(tok as usize + 1) * mdl].to_vec())
+            .collect();
+        let mut k_news = vec![vec![0.0f32; l * h * d]; width];
+        let mut v_news = vec![vec![0.0f32; l * h * d]; width];
+
+        for layer in 0..l {
+            let (wq, wk, wv, wo) = (
+                self.layer_param(layer, "wq"),
+                self.layer_param(layer, "wk"),
+                self.layer_param(layer, "wv"),
+                self.layer_param(layer, "wo"),
+            );
+            let (ln1, ln2) = (self.layer_param(layer, "ln1"), self.layer_param(layer, "ln2"));
+            let (w1, w2) = (self.layer_param(layer, "w1"), self.layer_param(layer, "w2"));
+
+            // Per-query projections — same expressions as the
+            // per-sequence path.
+            let mut qs: Vec<Vec<f32>> = Vec::with_capacity(width);
+            let mut ks: Vec<Vec<f32>> = Vec::with_capacity(width);
+            let mut vs: Vec<Vec<f32>> = Vec::with_capacity(width);
+            for x in &xs {
+                let xn = rmsnorm(x, ln1);
+                qs.push(matvec(&xn, wq, mdl));
+                ks.push(matvec(&xn, wk, mdl));
+                vs.push(matvec(&xn, wv, mdl));
+            }
+
+            let mut attn_outs: Vec<Vec<f32>> = (0..width).map(|_| vec![0.0f32; mdl]).collect();
+            for head in 0..h {
+                // Rope each member's query into the shared arena and
+                // stash its new K/V row (per-member expressions identical
+                // to the per-sequence path).
+                let mut khs: Vec<Vec<f32>> = Vec::with_capacity(width);
+                for (m, &(_, pos)) in queries.iter().enumerate() {
+                    let mut qh = qs[m][head * d..(head + 1) * d].to_vec();
+                    let mut kh = ks[m][head * d..(head + 1) * d].to_vec();
+                    rope(&mut qh, pos);
+                    rope(&mut kh, pos);
+                    let vh = &vs[m][head * d..(head + 1) * d];
+                    k_news[m][(layer * h + head) * d..(layer * h + head + 1) * d]
+                        .copy_from_slice(&kh);
+                    v_news[m][(layer * h + head) * d..(layer * h + head + 1) * d]
+                        .copy_from_slice(vh);
+                    scratch.q[m * d..(m + 1) * d].copy_from_slice(&qh);
+                    khs.push(kh);
+                }
+
+                // Grouped K score passes: one dequantization per deduped
+                // physical block, fanned to every referencing member.
+                // Member score offsets are `m·stride + bi·block_size` —
+                // every block before the tail is full, so the offset is
+                // exactly the member's per-sequence `t0` for that block.
+                let codec_k = wave.head_codec(layer, 0, head);
+                for g in wave.groups(layer, 0) {
+                    let slab = wave.head_rows_raw(layer, 0, g, head);
+                    let sc = wave.head_scales(g.members[0], layer, 0, head);
+                    scratch.members.clear();
+                    scratch.members.extend(g.members.iter().map(|&m| MqMember {
+                        inp: m * d,
+                        out: m * stride + g.bi * bs,
+                    }));
+                    codec_k.dot_rows_mq(
+                        isa,
+                        variant,
+                        d,
+                        &scratch.q,
+                        slab,
+                        sc,
+                        &scratch.members,
+                        &mut scratch.codec,
+                        &mut scratch.scores,
+                    );
+                }
+
+                // Per-member softmax bookkeeping — identical expressions
+                // and order to the per-sequence path.
+                for (m, &(_, pos)) in queries.iter().enumerate() {
+                    let scores = &mut scratch.scores[m * stride..m * stride + pos];
+                    let mut mx = f32::NEG_INFINITY;
+                    for sc in scores.iter_mut() {
+                        *sc /= sqrt_d;
+                        mx = mx.max(*sc);
+                    }
+                    let qh = &scratch.q[m * d..(m + 1) * d];
+                    let s_cur: f32 =
+                        qh.iter().zip(&khs[m]).map(|(a, b)| a * b).sum::<f32>() / sqrt_d;
+                    mx = mx.max(s_cur);
+                    let mut denom = 0.0f32;
+                    let weights = &mut scratch.weights[m * stride..m * stride + pos];
+                    for (w, &sc) in weights.iter_mut().zip(scores.iter()) {
+                        let e = (sc - mx).exp();
+                        denom += e;
+                        *w = e;
+                    }
+                    scratch.stats[m] = (denom, (s_cur - mx).exp());
+                }
+
+                // Grouped V accumulation passes, ascending logical block
+                // index — each member's blocks arrive in the same order
+                // its per-sequence walk would visit them.
+                scratch.acc[..width * d].fill(0.0);
+                let codec_v = wave.head_codec(layer, 1, head);
+                for g in wave.groups(layer, 1) {
+                    let slab = wave.head_rows_raw(layer, 1, g, head);
+                    let sc = wave.head_scales(g.members[0], layer, 1, head);
+                    scratch.members.clear();
+                    scratch.members.extend(g.members.iter().map(|&m| MqMember {
+                        inp: m * stride + g.bi * bs,
+                        out: m * d,
+                    }));
+                    codec_v.accumulate_rows_mq(
+                        isa,
+                        variant,
+                        d,
+                        &scratch.weights,
+                        slab,
+                        sc,
+                        &scratch.members,
+                        &mut scratch.codec,
+                        &mut scratch.acc,
+                    );
+                }
+
+                for m in 0..width {
+                    let (denom_hist, w_cur) = scratch.stats[m];
+                    let denom = denom_hist + w_cur;
+                    let vh = &vs[m][head * d..(head + 1) * d];
+                    let acc = &mut scratch.acc[m * d..(m + 1) * d];
+                    for (a, b) in acc.iter_mut().zip(vh) {
+                        *a += w_cur * b;
+                    }
+                    for (o, a) in attn_outs[m][head * d..(head + 1) * d].iter_mut().zip(acc.iter())
+                    {
+                        *o = a / denom;
+                    }
+                }
+            }
+
+            for (m, x) in xs.iter_mut().enumerate() {
+                matvec_acc(&attn_outs[m], wo, mdl, x);
+                let xn = rmsnorm(x, ln2);
+                let hidden: Vec<f32> = matvec(&xn, w1, sp.d_ff).into_iter().map(gelu).collect();
+                matvec_acc(&hidden, w2, mdl, x);
+            }
+        }
+
+        Ok(xs
+            .into_iter()
+            .zip(k_news)
+            .zip(v_news)
+            .map(|((x, kn), vn)| {
+                let xf = rmsnorm(&x, self.weights.param("ln_f"));
+                (self.lm_head(&xf), kn, vn)
+            })
+            .collect())
+    }
+
     /// The decode core: one transformer step whose attention reads K/V
     /// history through a [`CacheAccess`] — dense staging and the paged
     /// pool run the *same* math here (same expressions, same order), so
@@ -363,6 +583,56 @@ impl CpuModel {
 
         let xf = rmsnorm(&x, self.weights.param("ln_f"));
         (self.lm_head(&xf), k_news, v_news)
+    }
+}
+
+/// Reusable wave-level arenas for [`CpuModel::decode_paged_batch`]. Owned
+/// by the caller (the engine keeps one per its staging-slot reuse
+/// pattern) and grown monotonically on first use, so steady-state batched
+/// decode allocates nothing per (layer, head) pass.
+///
+/// Layout: `q`/`acc` hold one `head_dim` row per member; `scores`/
+/// `weights` hold one `max_len`-strided score row per member (member
+/// `m`'s score for history token `t` lives at `m·stride + t`, so a block
+/// group at logical index `bi` writes at `m·stride + bi·block_size`).
+#[derive(Default)]
+pub struct BatchScratch {
+    /// Roped per-member queries of the current (layer, head): `width·d`.
+    q: Vec<f32>,
+    /// Per-member raw/scaled score rows: `width·stride`.
+    scores: Vec<f32>,
+    /// Per-member softmax weight rows: `width·stride`.
+    weights: Vec<f32>,
+    /// Per-member V accumulators: `width·d`.
+    acc: Vec<f32>,
+    /// Per-member (history denom, current-token weight) of one head.
+    stats: Vec<(f32, f32)>,
+    /// Member list rebuilt per block group (offsets into the arenas).
+    members: Vec<MqMember>,
+    /// Row/slab scratch for the mq codec kernels (INT4 unpack, AVX2
+    /// slab dequantization).
+    codec: Vec<f32>,
+}
+
+impl BatchScratch {
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    /// Grow every arena to the wave's requirements (never shrinks).
+    fn ensure(&mut self, width: usize, d: usize, stride: usize) {
+        let grow = |v: &mut Vec<f32>, n: usize| {
+            if v.len() < n {
+                v.resize(n, 0.0);
+            }
+        };
+        grow(&mut self.q, width * d);
+        grow(&mut self.scores, width * stride);
+        grow(&mut self.weights, width * stride);
+        grow(&mut self.acc, width * d);
+        if self.stats.len() < width {
+            self.stats.resize(width, (0.0, 0.0));
+        }
     }
 }
 
@@ -641,6 +911,81 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 2e-4, "fp32 decode should be near-exact, diff {max_diff}");
+    }
+
+    #[test]
+    fn batched_decode_bit_identical_to_per_sequence_paged() {
+        // The fused multi-query path vs W independent per-sequence calls,
+        // over a COW-forked wave with mixed lengths, all four kernel
+        // variants, scalar and the detected SIMD backend.
+        use crate::kvcache::manager::{CacheConfig, KvCacheManager};
+        use crate::kvcache::{Precision, QuantPolicy};
+        let mdl = model();
+        let sp = mdl.spec.clone();
+        let c = CacheConfig {
+            layers: sp.layers,
+            heads: sp.heads,
+            head_dim: sp.head_dim,
+            max_seq: sp.max_seq,
+            block_size: 4,
+            num_blocks: 512,
+            scale_margin: 1.0,
+        };
+        for precision in [Precision::Int8, Precision::Fp32, Precision::Int4] {
+            let mut mgr =
+                KvCacheManager::new(c, QuantPolicy::uniform(precision, c.layers, c.heads));
+            let mut rng = Rng::new(11);
+            let tokens: Vec<i32> = (0..10).map(|_| rng.below(64) as i32).collect();
+            let n = 6; // 2 blocks per stream: one full, one partial
+            let pre = mdl.prefill(&tokens, n);
+            let a = mgr.new_sequence();
+            mgr.set_prefill(a, &pre.k, &pre.v, n).unwrap();
+            let b = mgr.fork(a).unwrap();
+            // Diverge the fork by one appended row so the wave mixes
+            // lengths and COWs the shared tail.
+            let (_, kn, vn) = {
+                let vb = mgr.view(b).unwrap();
+                mdl.decode_paged(tokens[n], n, &vb, Variant::Naive, Isa::Scalar).unwrap()
+            };
+            mgr.append_row(b, &kn, &vn).unwrap();
+
+            let queries = [(tokens[n], n), (tokens[n + 1], n + 1)];
+            let ids = [a, b];
+            let mut isas = vec![Isa::Scalar];
+            if simd::detect() != Isa::Scalar {
+                isas.push(simd::detect());
+            }
+            for isa in isas {
+                for variant in Variant::ALL {
+                    let expected: Vec<_> = ids
+                        .iter()
+                        .zip(&queries)
+                        .map(|(&id, &(tok, pos))| {
+                            let view = mgr.view(id).unwrap();
+                            mdl.decode_paged(tok, pos, &view, variant, isa).unwrap()
+                        })
+                        .collect();
+                    let wave = mgr.wave_view(&ids).unwrap();
+                    assert!(wave.blocks_deduped() > 0, "wave must share the prefix block");
+                    let mut scratch = BatchScratch::new();
+                    let got = mdl
+                        .decode_paged_batch(&queries, &wave, variant, isa, &mut scratch)
+                        .unwrap();
+                    let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                    for (m, (g, e)) in got.iter().zip(&expected).enumerate() {
+                        assert_eq!(
+                            bits(&g.0),
+                            bits(&e.0),
+                            "logits diverged: member {m} {precision:?} {variant:?} {isa:?}"
+                        );
+                        assert_eq!(bits(&g.1), bits(&e.1), "k_new diverged: member {m}");
+                        assert_eq!(bits(&g.2), bits(&e.2), "v_new diverged: member {m}");
+                    }
+                }
+            }
+            mgr.free(a);
+            mgr.free(b);
+        }
     }
 
     #[test]

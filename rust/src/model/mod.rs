@@ -20,7 +20,7 @@ pub mod spec;
 pub mod tokenizer;
 pub mod weights;
 
-pub use cpu_ref::{CacheAccess, CpuModel, PagedCache, StagedF32Cache, StagedI8Cache};
+pub use cpu_ref::{BatchScratch, CacheAccess, CpuModel, PagedCache, StagedF32Cache, StagedI8Cache};
 pub use runner::{DecodeResult, LmBackend, PjrtBackend, PrefillResult};
 pub use spec::ModelSpec;
 pub use tokenizer::ByteTokenizer;

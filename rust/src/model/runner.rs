@@ -7,10 +7,10 @@
 //! * [`CpuBackend`] — the pure-Rust oracle ([`super::cpu_ref::CpuModel`])
 //!   behind the same trait, used for tests and PJRT-free operation.
 
-use super::cpu_ref::CpuModel;
+use super::cpu_ref::{BatchScratch, CpuModel};
 use super::spec::ModelSpec;
 use super::weights::Weights;
-use crate::kvcache::manager::CacheView;
+use crate::kvcache::manager::{CacheView, WaveView};
 use crate::quant::simd::Isa;
 use crate::quant::Variant;
 use crate::runtime::{HostTensor, Runtime};
@@ -85,6 +85,30 @@ pub trait LmBackend {
     ) -> Result<DecodeResult> {
         bail!("backend does not support paged decode")
     }
+
+    /// Can this backend decode a whole wave through the fused multi-query
+    /// path ([`Self::decode_paged_batch`])? Requires
+    /// [`Self::supports_paged_decode`]; device backends (PJRT) keep the
+    /// per-sequence artifact loop.
+    fn supports_batched_decode(&self) -> bool {
+        false
+    }
+
+    /// Fused multi-query decode over a wave-level [`WaveView`]: one
+    /// result per `(token, pos)` query, byte-identical to per-query
+    /// [`Self::decode_paged`] calls (same kernel variant, same `isa`).
+    /// Only called when [`Self::supports_batched_decode`]. `scratch` is
+    /// the caller-owned arena set, reused across waves.
+    fn decode_paged_batch(
+        &self,
+        _queries: &[(i32, usize)],
+        _wave: &WaveView,
+        _kernel: Variant,
+        _isa: Isa,
+        _scratch: &mut BatchScratch,
+    ) -> Result<Vec<DecodeResult>> {
+        bail!("backend does not support batched decode")
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -152,6 +176,26 @@ impl LmBackend for CpuBackend {
     ) -> Result<DecodeResult> {
         let (logits, k_new, v_new) = self.model.decode_paged(token, pos, view, kernel, isa)?;
         Ok(DecodeResult { logits, k_new, v_new })
+    }
+
+    fn supports_batched_decode(&self) -> bool {
+        true
+    }
+
+    fn decode_paged_batch(
+        &self,
+        queries: &[(i32, usize)],
+        wave: &WaveView,
+        kernel: Variant,
+        isa: Isa,
+        scratch: &mut BatchScratch,
+    ) -> Result<Vec<DecodeResult>> {
+        Ok(self
+            .model
+            .decode_paged_batch(queries, wave, kernel, isa, scratch)?
+            .into_iter()
+            .map(|(logits, k_new, v_new)| DecodeResult { logits, k_new, v_new })
+            .collect())
     }
 }
 

@@ -212,6 +212,257 @@ pub fn accumulate_rows_i8(
     }
 }
 
+/// One query's slot in a fused **multi-query** pass over a shared slab.
+///
+/// Multi-query kernels take flat offsets into caller-owned arenas instead
+/// of per-query slices, so one call can fan a single dequantization out
+/// to W queries without W `&mut` borrows. For dots, `inp` locates the
+/// member's `d`-channel query in the input arena and `out` its `rows`
+/// scores in the output arena; for accumulations, `inp` locates the
+/// member's `rows` softmax weights and `out` its `d`-channel accumulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MqMember {
+    /// Offset of this member's input vector in the input arena.
+    pub inp: usize,
+    /// Offset of this member's output region in the output arena.
+    pub out: usize,
+}
+
+/// Fused multi-query dequant·dot: every member's query is dotted against
+/// the **same** quantized slab in one pass, so each `row[ch]·s[ch]`
+/// dequantization is computed once and fanned out to all W queries
+/// (W× arithmetic amortization on top of the slab staying L1-hot).
+///
+/// **Bit-stability.** For every member this computes the identical float
+/// expression in the identical order as a per-member [`dot_rows_i8`]
+/// call: the fanned-out product `row[ch] as f32 · s[ch]` is rounded once
+/// either way, and each member's score still accumulates channels
+/// ascending. Batched decode therefore emits the same bits as the
+/// per-sequence walk (asserted by this module's tests and
+/// `tests/parallel_consistency.rs`).
+pub fn dot_rows_i8_mq(
+    variant: Variant,
+    d: usize,
+    q_arena: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    members: &[MqMember],
+    out_arena: &mut [f32],
+) {
+    assert_eq!(blk.len() % d, 0, "slab shape mismatch");
+    let rows = blk.len() / d;
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    match variant {
+        Variant::Naive => {
+            for m in members {
+                let q = &q_arena[m.inp..m.inp + d];
+                for (r, row) in blk.chunks_exact(d).enumerate() {
+                    let mut acc = 0.0f32;
+                    for ch in 0..d {
+                        acc += q[ch] * (row[ch] as f32 * scales[ch]);
+                    }
+                    out_arena[m.out + r] = acc;
+                }
+            }
+        }
+        Variant::Tiled => {
+            for m in members {
+                out_arena[m.out..m.out + rows].fill(0.0);
+            }
+            let mut s_tile = [0.0f32; TILE_DIM];
+            let mut d0 = 0;
+            while d0 < d {
+                let w = TILE_DIM.min(d - d0);
+                s_tile[..w].copy_from_slice(&scales[d0..d0 + w]);
+                for m in members {
+                    let q = &q_arena[m.inp..m.inp + d];
+                    for r in 0..rows {
+                        let row = &blk[r * d + d0..r * d + d0 + w];
+                        let mut acc = out_arena[m.out + r];
+                        for i in 0..w {
+                            acc += q[d0 + i] * (row[i] as f32 * s_tile[i]);
+                        }
+                        out_arena[m.out + r] = acc;
+                    }
+                }
+                d0 += w;
+            }
+        }
+        Variant::Coarsened => {
+            // The fully amortized form: one dequantization per (row, ch),
+            // fanned to every member while it sits in a register.
+            for m in members {
+                out_arena[m.out..m.out + rows].fill(0.0);
+            }
+            for ch in 0..d {
+                let s = scales[ch];
+                for r in 0..rows {
+                    let dq = blk[r * d + ch] as f32 * s;
+                    for m in members {
+                        out_arena[m.out + r] += q_arena[m.inp + ch] * dq;
+                    }
+                }
+            }
+        }
+        Variant::Vectorized => {
+            for m in members {
+                out_arena[m.out..m.out + rows].fill(0.0);
+            }
+            let tail = d / 4 * 4;
+            for (r, row) in blk.chunks_exact(d).enumerate() {
+                let mut c0 = 0;
+                for (r4, s4) in row.chunks_exact(4).zip(scales.chunks_exact(4)) {
+                    let dq = [
+                        r4[0] as f32 * s4[0],
+                        r4[1] as f32 * s4[1],
+                        r4[2] as f32 * s4[2],
+                        r4[3] as f32 * s4[3],
+                    ];
+                    for m in members {
+                        let q0 = m.inp + c0;
+                        let mut acc = out_arena[m.out + r];
+                        acc += q_arena[q0] * dq[0];
+                        acc += q_arena[q0 + 1] * dq[1];
+                        acc += q_arena[q0 + 2] * dq[2];
+                        acc += q_arena[q0 + 3] * dq[3];
+                        out_arena[m.out + r] = acc;
+                    }
+                    c0 += 4;
+                }
+                for ch in tail..d {
+                    let dq = row[ch] as f32 * scales[ch];
+                    for m in members {
+                        out_arena[m.out + r] += q_arena[m.inp + ch] * dq;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused multi-query softmax·V accumulation: every member's weights are
+/// applied to the **same** quantized slab in one pass, dequantizing each
+/// `(row, ch)` element once. Per member the accumulation order is
+/// unchanged — rows ascending per channel — so the result is
+/// bit-identical to a per-member [`accumulate_rows_i8`] call.
+pub fn accumulate_rows_i8_mq(
+    variant: Variant,
+    d: usize,
+    w_arena: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    members: &[MqMember],
+    acc_arena: &mut [f32],
+) {
+    assert_eq!(blk.len() % d, 0, "slab shape mismatch");
+    debug_assert_eq!(scales.len(), d, "scales shape mismatch");
+    match variant {
+        Variant::Naive => {
+            for (r, row) in blk.chunks_exact(d).enumerate() {
+                for ch in 0..d {
+                    let dq = row[ch] as f32 * scales[ch];
+                    for m in members {
+                        acc_arena[m.out + ch] += w_arena[m.inp + r] * dq;
+                    }
+                }
+            }
+        }
+        Variant::Tiled => {
+            let rows = blk.len() / d;
+            let mut s_tile = [0.0f32; TILE_DIM];
+            let mut d0 = 0;
+            while d0 < d {
+                let width = TILE_DIM.min(d - d0);
+                s_tile[..width].copy_from_slice(&scales[d0..d0 + width]);
+                for r in 0..rows {
+                    let row = &blk[r * d + d0..r * d + d0 + width];
+                    for i in 0..width {
+                        let dq = row[i] as f32 * s_tile[i];
+                        for m in members {
+                            acc_arena[m.out + d0 + i] += w_arena[m.inp + r] * dq;
+                        }
+                    }
+                }
+                d0 += width;
+            }
+        }
+        Variant::Coarsened => {
+            let rows = blk.len() / d;
+            for ch in 0..d {
+                let s = scales[ch];
+                for r in 0..rows {
+                    let dq = blk[r * d + ch] as f32 * s;
+                    for m in members {
+                        acc_arena[m.out + ch] += w_arena[m.inp + r] * dq;
+                    }
+                }
+            }
+        }
+        Variant::Vectorized => {
+            let tail = d / 4 * 4;
+            for (r, row) in blk.chunks_exact(d).enumerate() {
+                let mut c0 = 0;
+                for (r4, s4) in row.chunks_exact(4).zip(scales.chunks_exact(4)) {
+                    let dq = [
+                        r4[0] as f32 * s4[0],
+                        r4[1] as f32 * s4[1],
+                        r4[2] as f32 * s4[2],
+                        r4[3] as f32 * s4[3],
+                    ];
+                    for m in members {
+                        let wr = w_arena[m.inp + r];
+                        let a0 = m.out + c0;
+                        acc_arena[a0] += wr * dq[0];
+                        acc_arena[a0 + 1] += wr * dq[1];
+                        acc_arena[a0 + 2] += wr * dq[2];
+                        acc_arena[a0 + 3] += wr * dq[3];
+                    }
+                    c0 += 4;
+                }
+                for ch in tail..d {
+                    let dq = row[ch] as f32 * scales[ch];
+                    for m in members {
+                        acc_arena[m.out + ch] += w_arena[m.inp + r] * dq;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// FP32 twin of [`dot_rows_i8_mq`]: no dequantization to amortize, so
+/// the win is just the slab staying hot across the member loop.
+pub fn dot_rows_f32_mq(
+    d: usize,
+    q_arena: &[f32],
+    blk: &[f32],
+    members: &[MqMember],
+    out_arena: &mut [f32],
+) {
+    debug_assert_eq!(blk.len() % d, 0, "slab shape mismatch");
+    let rows = blk.len() / d;
+    for m in members {
+        let (q, out) = (&q_arena[m.inp..m.inp + d], &mut out_arena[m.out..m.out + rows]);
+        dot_rows_f32(q, blk, out);
+    }
+}
+
+/// FP32 twin of [`accumulate_rows_i8_mq`].
+pub fn accumulate_rows_f32_mq(
+    d: usize,
+    w_arena: &[f32],
+    blk: &[f32],
+    members: &[MqMember],
+    acc_arena: &mut [f32],
+) {
+    debug_assert_eq!(blk.len() % d, 0, "slab shape mismatch");
+    let rows = blk.len() / d;
+    for m in members {
+        let (w, acc) = (&w_arena[m.inp..m.inp + rows], &mut acc_arena[m.out..m.out + d]);
+        accumulate_rows_f32(w, blk, acc);
+    }
+}
+
 /// FP32 twin of [`dot_rows_i8`] (baseline cache precision — no scales,
 /// no variants: there is nothing to fuse).
 #[inline]
@@ -312,6 +563,101 @@ mod tests {
             fused.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
             dense.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn mq_dot_bit_identical_to_per_member_calls() {
+        // Every variant of the multi-query dot must produce, for every
+        // member, exactly the bits of a per-member single-query call.
+        for (rows, d, n_members) in [(1usize, 1usize, 1usize), (3, 5, 2), (7, 16, 4), (9, 33, 3)] {
+            let (blk, scales, _) = slab(rows, d, (rows * 7 + d) as u64);
+            let mut rng = Rng::new((rows + d + n_members) as u64);
+            let mut q_arena = vec![0.0f32; n_members * d];
+            rng.fill_uniform(&mut q_arena, -1.0, 1.0);
+            let members: Vec<MqMember> =
+                (0..n_members).map(|i| MqMember { inp: i * d, out: i * rows }).collect();
+            let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            for v in Variant::ALL {
+                let mut out_arena = vec![7.7f32; n_members * rows]; // poisoned
+                dot_rows_i8_mq(v, d, &q_arena, &blk, &scales, &members, &mut out_arena);
+                for (i, m) in members.iter().enumerate() {
+                    let mut want = vec![0.0f32; rows];
+                    dot_rows_i8(v, &q_arena[m.inp..m.inp + d], &blk, &scales, &mut want);
+                    assert_eq!(
+                        bits(&out_arena[m.out..m.out + rows]),
+                        bits(&want),
+                        "{v:?} member {i} diverged at {rows}x{d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mq_accumulate_bit_identical_to_per_member_calls() {
+        for (rows, d, n_members) in [(1usize, 4usize, 1usize), (5, 9, 3), (11, 32, 4)] {
+            let (blk, scales, _) = slab(rows, d, (rows * 31 + d) as u64);
+            let mut rng = Rng::new((rows * d + n_members) as u64);
+            let mut w_arena = vec![0.0f32; n_members * rows];
+            rng.fill_uniform(&mut w_arena, 0.0, 1.0);
+            let mut init = vec![0.0f32; n_members * d];
+            rng.fill_uniform(&mut init, -0.5, 0.5);
+            let members: Vec<MqMember> =
+                (0..n_members).map(|i| MqMember { inp: i * rows, out: i * d }).collect();
+            let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            for v in Variant::ALL {
+                let mut acc_arena = init.clone();
+                accumulate_rows_i8_mq(v, d, &w_arena, &blk, &scales, &members, &mut acc_arena);
+                for (i, m) in members.iter().enumerate() {
+                    let mut want = init[m.out..m.out + d].to_vec();
+                    accumulate_rows_i8(
+                        v,
+                        &w_arena[m.inp..m.inp + rows],
+                        &blk,
+                        &scales,
+                        &mut want,
+                    );
+                    assert_eq!(
+                        bits(&acc_arena[m.out..m.out + d]),
+                        bits(&want),
+                        "{v:?} member {i} diverged at {rows}x{d}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mq_f32_twins_bit_identical_to_per_member_calls() {
+        let (rows, d, n) = (6usize, 12usize, 3usize);
+        let mut rng = Rng::new(0xF32);
+        let mut blk = vec![0.0f32; rows * d];
+        let mut q_arena = vec![0.0f32; n * d];
+        let mut w_arena = vec![0.0f32; n * rows];
+        rng.fill_uniform(&mut blk, -1.0, 1.0);
+        rng.fill_uniform(&mut q_arena, -1.0, 1.0);
+        rng.fill_uniform(&mut w_arena, 0.0, 1.0);
+        let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+
+        let dot_members: Vec<MqMember> =
+            (0..n).map(|i| MqMember { inp: i * d, out: i * rows }).collect();
+        let mut out_arena = vec![0.0f32; n * rows];
+        dot_rows_f32_mq(d, &q_arena, &blk, &dot_members, &mut out_arena);
+        for m in &dot_members {
+            let mut want = vec![0.0f32; rows];
+            dot_rows_f32(&q_arena[m.inp..m.inp + d], &blk, &mut want);
+            assert_eq!(bits(&out_arena[m.out..m.out + rows]), bits(&want));
+        }
+
+        let acc_members: Vec<MqMember> =
+            (0..n).map(|i| MqMember { inp: i * rows, out: i * d }).collect();
+        let mut acc_arena = vec![0.25f32; n * d];
+        accumulate_rows_f32_mq(d, &w_arena, &blk, &acc_members, &mut acc_arena);
+        for m in &acc_members {
+            let mut want = vec![0.25f32; d];
+            accumulate_rows_f32(&w_arena[m.inp..m.inp + rows], &blk, &mut want);
+            assert_eq!(bits(&acc_arena[m.out..m.out + d]), bits(&want));
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@
 //! layers, …) a table lookup instead of a cross-cutting refactor.
 
 use super::int4::Q4MAX;
-use super::simd::{self, Isa};
+use super::simd::{self, Isa, MqMember};
 use super::Variant;
 use crate::QMAX;
 
@@ -117,6 +117,44 @@ pub trait Codec: Sync {
         scales: &[f32],
         scratch: &mut Vec<f32>,
         acc: &mut [f32],
+    );
+
+    /// Fused **multi-query** dequant·dot: every member's `d`-channel
+    /// query (at `q_arena[m.inp..]`) is dotted against the same raw slab
+    /// in one pass, scores landing at `out_arena[m.out..]`. The slab is
+    /// read (and for integer codecs dequantized) once for the whole
+    /// wave; per member the result is bit-identical to a
+    /// [`Codec::dot_rows`] call on the same `isa` (the batched-decode
+    /// contract — see the [`super::simd`] mq dispatcher docs).
+    fn dot_rows_mq(
+        &self,
+        isa: Isa,
+        variant: Variant,
+        d: usize,
+        q_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        out_arena: &mut [f32],
+    );
+
+    /// Fused **multi-query** softmax·V accumulation: every member's
+    /// `rows` weights (at `w_arena[m.inp..]`) accumulate the same raw
+    /// slab into its accumulator (at `acc_arena[m.out..]`), rows
+    /// ascending per member. Bit-identical per member to
+    /// [`Codec::accumulate_rows`] on the same `isa`.
+    fn accumulate_rows_mq(
+        &self,
+        isa: Isa,
+        variant: Variant,
+        d: usize,
+        w_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        acc_arena: &mut [f32],
     );
 }
 
@@ -216,6 +254,36 @@ impl Codec for Fp32Codec {
     ) {
         simd::accumulate_rows_f32(isa, w, as_f32(blk), acc);
     }
+
+    fn dot_rows_mq(
+        &self,
+        isa: Isa,
+        _variant: Variant,
+        d: usize,
+        q_arena: &[f32],
+        blk: &[u8],
+        _scales: &[f32],
+        members: &[MqMember],
+        _scratch: &mut Vec<f32>,
+        out_arena: &mut [f32],
+    ) {
+        simd::dot_rows_f32_mq(isa, d, q_arena, as_f32(blk), members, out_arena);
+    }
+
+    fn accumulate_rows_mq(
+        &self,
+        isa: Isa,
+        _variant: Variant,
+        d: usize,
+        w_arena: &[f32],
+        blk: &[u8],
+        _scales: &[f32],
+        members: &[MqMember],
+        _scratch: &mut Vec<f32>,
+        acc_arena: &mut [f32],
+    ) {
+        simd::accumulate_rows_f32_mq(isa, d, w_arena, as_f32(blk), members, acc_arena);
+    }
 }
 
 impl Codec for Int8Codec {
@@ -263,6 +331,56 @@ impl Codec for Int8Codec {
         acc: &mut [f32],
     ) {
         simd::accumulate_rows_i8(isa, variant, w, as_i8(blk), scales, acc);
+    }
+
+    fn dot_rows_mq(
+        &self,
+        isa: Isa,
+        variant: Variant,
+        d: usize,
+        q_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        out_arena: &mut [f32],
+    ) {
+        simd::dot_rows_i8_mq(
+            isa,
+            variant,
+            d,
+            q_arena,
+            as_i8(blk),
+            scales,
+            members,
+            scratch,
+            out_arena,
+        );
+    }
+
+    fn accumulate_rows_mq(
+        &self,
+        isa: Isa,
+        variant: Variant,
+        d: usize,
+        w_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        acc_arena: &mut [f32],
+    ) {
+        simd::accumulate_rows_i8_mq(
+            isa,
+            variant,
+            d,
+            w_arena,
+            as_i8(blk),
+            scales,
+            members,
+            scratch,
+            acc_arena,
+        );
     }
 }
 
@@ -315,6 +433,36 @@ impl Codec for Int4Codec {
         acc: &mut [f32],
     ) {
         simd::accumulate_rows_i4(isa, w, blk, scales, scratch, acc);
+    }
+
+    fn dot_rows_mq(
+        &self,
+        isa: Isa,
+        _variant: Variant,
+        d: usize,
+        q_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        out_arena: &mut [f32],
+    ) {
+        simd::dot_rows_i4_mq(isa, d, q_arena, blk, scales, members, scratch, out_arena);
+    }
+
+    fn accumulate_rows_mq(
+        &self,
+        isa: Isa,
+        _variant: Variant,
+        d: usize,
+        w_arena: &[f32],
+        blk: &[u8],
+        scales: &[f32],
+        members: &[MqMember],
+        scratch: &mut Vec<f32>,
+        acc_arena: &mut [f32],
+    ) {
+        simd::accumulate_rows_i4_mq(isa, d, w_arena, blk, scales, members, scratch, acc_arena);
     }
 }
 
@@ -456,6 +604,95 @@ mod tests {
                 dot += q[ch] * row[ch];
             }
             assert_eq!(got4[r].to_bits(), dot.to_bits(), "int4 row {r}");
+        }
+    }
+
+    #[test]
+    fn codec_mq_bit_identical_to_per_member_dispatch() {
+        // Every codec's multi-query methods must give each member exactly
+        // the bits of its own single-query dot_rows/accumulate_rows call.
+        let (rows, d, n) = (5usize, 8usize, 3usize);
+        let k = Fp32Matrix::random_normal(rows, d, 1.0, 0x3A);
+        let q8 = quantize_fused(&k);
+        let q4 = int4::quantize4(&k);
+        let raw8: Vec<u8> = q8.data.iter().map(|&v| v as u8).collect();
+        let raw32: Vec<u8> = k.data.iter().flat_map(|v| v.to_ne_bytes()).collect();
+        let mut rng = Rng::new(0x3B);
+        let mut q_arena = vec![0.0f32; n * d];
+        let mut w_arena = vec![0.0f32; n * rows];
+        rng.fill_uniform(&mut q_arena, -1.0, 1.0);
+        rng.fill_uniform(&mut w_arena, 0.0, 1.0);
+        let dot_members: Vec<MqMember> =
+            (0..n).map(|i| MqMember { inp: i * d, out: i * rows }).collect();
+        let acc_members: Vec<MqMember> =
+            (0..n).map(|i| MqMember { inp: i * rows, out: i * d }).collect();
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let mut scratch = Vec::new();
+        for (codec, raw, scales) in [
+            (&INT8 as &dyn Codec, &raw8, &q8.scales),
+            (&FP32 as &dyn Codec, &raw32, &q8.scales),
+            (&INT4 as &dyn Codec, &q4.data, &q4.scales),
+        ] {
+            for v in Variant::ALL {
+                let mut out_arena = vec![0.0f32; n * rows];
+                codec.dot_rows_mq(
+                    Isa::Scalar,
+                    v,
+                    d,
+                    &q_arena,
+                    raw,
+                    scales,
+                    &dot_members,
+                    &mut scratch,
+                    &mut out_arena,
+                );
+                let mut acc_arena = vec![0.5f32; n * d];
+                codec.accumulate_rows_mq(
+                    Isa::Scalar,
+                    v,
+                    d,
+                    &w_arena,
+                    raw,
+                    scales,
+                    &acc_members,
+                    &mut scratch,
+                    &mut acc_arena,
+                );
+                for i in 0..n {
+                    let mut want = vec![0.0f32; rows];
+                    codec.dot_rows(
+                        Isa::Scalar,
+                        v,
+                        &q_arena[i * d..(i + 1) * d],
+                        raw,
+                        scales,
+                        &mut scratch,
+                        &mut want,
+                    );
+                    assert_eq!(
+                        bits(&out_arena[i * rows..(i + 1) * rows]),
+                        bits(&want),
+                        "{} mq dot member {i} {v:?}",
+                        codec.name()
+                    );
+                    let mut want_acc = vec![0.5f32; d];
+                    codec.accumulate_rows(
+                        Isa::Scalar,
+                        v,
+                        &w_arena[i * rows..(i + 1) * rows],
+                        raw,
+                        scales,
+                        &mut scratch,
+                        &mut want_acc,
+                    );
+                    assert_eq!(
+                        bits(&acc_arena[i * d..(i + 1) * d]),
+                        bits(&want_acc),
+                        "{} mq accumulate member {i} {v:?}",
+                        codec.name()
+                    );
+                }
+            }
         }
     }
 

@@ -298,6 +298,256 @@ fn ensure_scratch(scratch: &mut Vec<f32>, d: usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fused multi-query dispatchers (batched decode).
+// ---------------------------------------------------------------------------
+
+pub use super::attn::MqMember;
+
+/// Fused multi-query dequant·dot over an INT8 slab: one slab read for W
+/// queries. **Per-backend bit-identity**: for every member the result is
+/// bit-identical to a per-member [`dot_rows_i8`] call on the same `isa`.
+///
+/// * Scalar delegates to [`attn::dot_rows_i8_mq`] (fans each single-
+///   rounded `row·s` product out to every member, contract bits).
+/// * AVX2 dequantizes the slab **once** into `scratch` and runs the f32
+///   dot per member — bit-identical to the fused AVX2 i8 dot because the
+///   two share the exact lane structure and the fused path's internal
+///   products are exactly [`dequantize_row_into`]'s outputs.
+/// * NEON's i8 and f32 dots group lanes differently, so composition
+///   would change bits; the NEON arm instead runs the fused i8 dot per
+///   member over the (now L1-hot) slab — bandwidth amortized, the
+///   per-member expression untouched.
+#[allow(unused_variables)] // rows/scratch idle on arms that don't compose
+pub fn dot_rows_i8_mq(
+    isa: Isa,
+    variant: Variant,
+    d: usize,
+    q_arena: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    members: &[MqMember],
+    scratch: &mut Vec<f32>,
+    out_arena: &mut [f32],
+) {
+    let rows = blk.len() / d;
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            ensure_scratch(scratch, rows * d);
+            for r in 0..rows {
+                avx2::dequantize_row_into(
+                    &blk[r * d..(r + 1) * d],
+                    scales,
+                    &mut scratch[r * d..(r + 1) * d],
+                );
+            }
+            for m in members {
+                avx2::dot_rows_f32(
+                    &q_arena[m.inp..m.inp + d],
+                    &scratch[..rows * d],
+                    &mut out_arena[m.out..m.out + rows],
+                );
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            for m in members {
+                neon::dot_rows_i8(
+                    &q_arena[m.inp..m.inp + d],
+                    blk,
+                    scales,
+                    &mut out_arena[m.out..m.out + rows],
+                );
+            }
+        },
+        _ => attn::dot_rows_i8_mq(variant, d, q_arena, blk, scales, members, out_arena),
+    }
+}
+
+/// Fused multi-query softmax·V accumulation over an INT8 slab. The
+/// accumulate kernels have no cross-channel sums on any backend, so
+/// dequantize-once composition is bit-safe everywhere: AVX2 and NEON
+/// unpack the slab once into `scratch` and run the f32 accumulate per
+/// member; scalar fans the products out directly
+/// ([`attn::accumulate_rows_i8_mq`]). Bit-identical to per-member
+/// [`accumulate_rows_i8`] calls on every backend.
+#[allow(unused_variables)]
+pub fn accumulate_rows_i8_mq(
+    isa: Isa,
+    variant: Variant,
+    d: usize,
+    w_arena: &[f32],
+    blk: &[i8],
+    scales: &[f32],
+    members: &[MqMember],
+    scratch: &mut Vec<f32>,
+    acc_arena: &mut [f32],
+) {
+    let rows = blk.len() / d;
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Avx2 if detect() == Isa::Avx2 => unsafe {
+            ensure_scratch(scratch, rows * d);
+            for r in 0..rows {
+                avx2::dequantize_row_into(
+                    &blk[r * d..(r + 1) * d],
+                    scales,
+                    &mut scratch[r * d..(r + 1) * d],
+                );
+            }
+            for m in members {
+                avx2::accumulate_rows_f32(
+                    &w_arena[m.inp..m.inp + rows],
+                    &scratch[..rows * d],
+                    &mut acc_arena[m.out..m.out + d],
+                );
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see dot_rows_i8.
+        Isa::Neon if detect() == Isa::Neon => unsafe {
+            ensure_scratch(scratch, rows * d);
+            for r in 0..rows {
+                neon::dequantize_row_into(
+                    &blk[r * d..(r + 1) * d],
+                    scales,
+                    &mut scratch[r * d..(r + 1) * d],
+                );
+            }
+            for m in members {
+                neon::accumulate_rows_f32(
+                    &w_arena[m.inp..m.inp + rows],
+                    &scratch[..rows * d],
+                    &mut acc_arena[m.out..m.out + d],
+                );
+            }
+        },
+        _ => attn::accumulate_rows_i8_mq(variant, d, w_arena, blk, scales, members, acc_arena),
+    }
+}
+
+/// FP32 multi-query dot: nothing to dequantize, so every backend loops
+/// members over the shared slab (bandwidth amortization only).
+/// Bit-identical to per-member [`dot_rows_f32`] calls on the same `isa`.
+pub fn dot_rows_f32_mq(
+    isa: Isa,
+    d: usize,
+    q_arena: &[f32],
+    blk: &[f32],
+    members: &[MqMember],
+    out_arena: &mut [f32],
+) {
+    if isa == Isa::Scalar {
+        attn::dot_rows_f32_mq(d, q_arena, blk, members, out_arena);
+        return;
+    }
+    let rows = blk.len() / d;
+    for m in members {
+        dot_rows_f32(isa, &q_arena[m.inp..m.inp + d], blk, &mut out_arena[m.out..m.out + rows]);
+    }
+}
+
+/// FP32 multi-query accumulate; see [`dot_rows_f32_mq`].
+pub fn accumulate_rows_f32_mq(
+    isa: Isa,
+    d: usize,
+    w_arena: &[f32],
+    blk: &[f32],
+    members: &[MqMember],
+    acc_arena: &mut [f32],
+) {
+    if isa == Isa::Scalar {
+        attn::accumulate_rows_f32_mq(d, w_arena, blk, members, acc_arena);
+        return;
+    }
+    let rows = blk.len() / d;
+    for m in members {
+        accumulate_rows_f32(
+            isa,
+            &w_arena[m.inp..m.inp + rows],
+            blk,
+            &mut acc_arena[m.out..m.out + d],
+        );
+    }
+}
+
+/// Multi-query dot over a nibble-packed INT4 slab: each row is unpacked
+/// into `scratch` **once** and dotted for every member before moving on
+/// (the single-query path unpacks per (query, row)). Unpack values and
+/// the per-member one-row dot are identical to the single-query path,
+/// so this is bit-identical to per-member [`dot_rows_i4`] calls on
+/// every backend.
+pub fn dot_rows_i4_mq(
+    isa: Isa,
+    d: usize,
+    q_arena: &[f32],
+    blk: &[u8],
+    scales: &[f32],
+    members: &[MqMember],
+    scratch: &mut Vec<f32>,
+    out_arena: &mut [f32],
+) {
+    let bpr = d.div_ceil(2);
+    debug_assert_eq!(blk.len() % bpr, 0, "slab shape mismatch");
+    let rows = blk.len() / bpr;
+    ensure_scratch(scratch, d);
+    for r in 0..rows {
+        dequantize4_row_into(isa, &blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+        for m in members {
+            let q = &q_arena[m.inp..m.inp + d];
+            if isa == Isa::Scalar {
+                let mut dot = 0.0f32;
+                for ch in 0..d {
+                    dot += q[ch] * scratch[ch];
+                }
+                out_arena[m.out + r] = dot;
+            } else {
+                let mut one = [0.0f32];
+                dot_rows_f32(isa, q, &scratch[..d], &mut one);
+                out_arena[m.out + r] = one[0];
+            }
+        }
+    }
+}
+
+/// Multi-query softmax·V accumulation over a nibble-packed INT4 slab;
+/// rows outer (each unpacked once), members inner — every member still
+/// sees rows in ascending order, so this is bit-identical to per-member
+/// [`accumulate_rows_i4`] calls on every backend.
+pub fn accumulate_rows_i4_mq(
+    isa: Isa,
+    d: usize,
+    w_arena: &[f32],
+    blk: &[u8],
+    scales: &[f32],
+    members: &[MqMember],
+    scratch: &mut Vec<f32>,
+    acc_arena: &mut [f32],
+) {
+    let bpr = d.div_ceil(2);
+    debug_assert_eq!(blk.len() % bpr, 0, "slab shape mismatch");
+    let rows = blk.len() / bpr;
+    ensure_scratch(scratch, d);
+    for r in 0..rows {
+        dequantize4_row_into(isa, &blk[r * bpr..(r + 1) * bpr], scales, &mut scratch[..d]);
+        for m in members {
+            let wr = w_arena[m.inp + r];
+            let acc = &mut acc_arena[m.out..m.out + d];
+            if isa == Isa::Scalar {
+                for ch in 0..d {
+                    acc[ch] += wr * scratch[ch];
+                }
+            } else {
+                accumulate_rows_f32(isa, &[wr], &scratch[..d], acc);
+            }
+        }
+    }
+}
+
 /// Fused dequant·dot over a nibble-packed INT4 slab. Each row is
 /// unpacked into the O(d) `scratch` and dotted. The scalar arm is the
 /// pre-backend `Int4Codec::dot_rows` loop, bit for bit; the SIMD arm is
@@ -676,6 +926,179 @@ mod tests {
             );
             accumulate_rows_i4(isa, &w, &q4.data, &q4.scales, &mut scratch, &mut simd_acc);
             assert_eq!(bits(&scalar_acc), bits(&simd_acc), "int4 accumulate {rows}x{d}");
+        }
+    }
+
+    /// The multi-query contract: on EVERY backend (scalar and whatever
+    /// this host detects), each member of an mq call gets exactly the
+    /// bits of a per-member single-query call on the same backend — the
+    /// amortized slab read can never change a score or an accumulation.
+    #[test]
+    fn mq_dispatchers_bit_identical_to_per_member_single_query() {
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for isa in [Isa::Scalar, detect()] {
+            for (rows, d, n) in [(1usize, 1usize, 1usize), (4, 8, 3), (7, 16, 4), (3, 9, 2)] {
+                let k = Fp32Matrix::random_normal(rows, d, 1.0, (rows * 13 + d + n) as u64);
+                let q8 = quantize_fused(&k);
+                let mut rng = Rng::new((rows + d * n) as u64);
+                let mut q_arena = vec![0.0f32; n * d];
+                let mut w_arena = vec![0.0f32; n * rows];
+                rng.fill_uniform(&mut q_arena, -1.0, 1.0);
+                rng.fill_uniform(&mut w_arena, 0.0, 1.0);
+                let dot_members: Vec<MqMember> =
+                    (0..n).map(|i| MqMember { inp: i * d, out: i * rows }).collect();
+                let acc_members: Vec<MqMember> =
+                    (0..n).map(|i| MqMember { inp: i * rows, out: i * d }).collect();
+                let mut scratch = Vec::new();
+
+                // INT8 dot + accumulate.
+                for variant in Variant::ALL {
+                    let mut out_arena = vec![0.0f32; n * rows];
+                    dot_rows_i8_mq(
+                        isa,
+                        variant,
+                        d,
+                        &q_arena,
+                        &q8.data,
+                        &q8.scales,
+                        &dot_members,
+                        &mut scratch,
+                        &mut out_arena,
+                    );
+                    let mut acc_arena = vec![0.5f32; n * d];
+                    accumulate_rows_i8_mq(
+                        isa,
+                        variant,
+                        d,
+                        &w_arena,
+                        &q8.data,
+                        &q8.scales,
+                        &acc_members,
+                        &mut scratch,
+                        &mut acc_arena,
+                    );
+                    for i in 0..n {
+                        let mut want = vec![0.0f32; rows];
+                        dot_rows_i8(
+                            isa,
+                            variant,
+                            &q_arena[i * d..(i + 1) * d],
+                            &q8.data,
+                            &q8.scales,
+                            &mut want,
+                        );
+                        assert_eq!(
+                            bits(&out_arena[i * rows..(i + 1) * rows]),
+                            bits(&want),
+                            "i8 mq dot {rows}x{d} member {i} on {} {variant:?}",
+                            isa.name()
+                        );
+                        let mut want_acc = vec![0.5f32; d];
+                        accumulate_rows_i8(
+                            isa,
+                            variant,
+                            &w_arena[i * rows..(i + 1) * rows],
+                            &q8.data,
+                            &q8.scales,
+                            &mut want_acc,
+                        );
+                        assert_eq!(
+                            bits(&acc_arena[i * d..(i + 1) * d]),
+                            bits(&want_acc),
+                            "i8 mq accumulate {rows}x{d} member {i} on {} {variant:?}",
+                            isa.name()
+                        );
+                    }
+                }
+
+                // FP32 twins.
+                let mut out_arena = vec![0.0f32; n * rows];
+                dot_rows_f32_mq(isa, d, &q_arena, &k.data, &dot_members, &mut out_arena);
+                let mut acc_arena = vec![0.25f32; n * d];
+                accumulate_rows_f32_mq(isa, d, &w_arena, &k.data, &acc_members, &mut acc_arena);
+                for i in 0..n {
+                    let mut want = vec![0.0f32; rows];
+                    dot_rows_f32(isa, &q_arena[i * d..(i + 1) * d], &k.data, &mut want);
+                    assert_eq!(
+                        bits(&out_arena[i * rows..(i + 1) * rows]),
+                        bits(&want),
+                        "f32 mq dot member {i} on {}",
+                        isa.name()
+                    );
+                    let mut want_acc = vec![0.25f32; d];
+                    accumulate_rows_f32(
+                        isa,
+                        &w_arena[i * rows..(i + 1) * rows],
+                        &k.data,
+                        &mut want_acc,
+                    );
+                    assert_eq!(
+                        bits(&acc_arena[i * d..(i + 1) * d]),
+                        bits(&want_acc),
+                        "f32 mq accumulate member {i} on {}",
+                        isa.name()
+                    );
+                }
+
+                // INT4 (even d only: nibble rows).
+                if d % 2 == 0 {
+                    let q4 = int4::quantize4(&k);
+                    let mut out_arena = vec![0.0f32; n * rows];
+                    dot_rows_i4_mq(
+                        isa,
+                        d,
+                        &q_arena,
+                        &q4.data,
+                        &q4.scales,
+                        &dot_members,
+                        &mut scratch,
+                        &mut out_arena,
+                    );
+                    let mut acc_arena = vec![0.125f32; n * d];
+                    accumulate_rows_i4_mq(
+                        isa,
+                        d,
+                        &w_arena,
+                        &q4.data,
+                        &q4.scales,
+                        &acc_members,
+                        &mut scratch,
+                        &mut acc_arena,
+                    );
+                    for i in 0..n {
+                        let mut want = vec![0.0f32; rows];
+                        dot_rows_i4(
+                            isa,
+                            &q_arena[i * d..(i + 1) * d],
+                            &q4.data,
+                            &q4.scales,
+                            &mut scratch,
+                            &mut want,
+                        );
+                        assert_eq!(
+                            bits(&out_arena[i * rows..(i + 1) * rows]),
+                            bits(&want),
+                            "i4 mq dot {rows}x{d} member {i} on {}",
+                            isa.name()
+                        );
+                        let mut want_acc = vec![0.125f32; d];
+                        accumulate_rows_i4(
+                            isa,
+                            &w_arena[i * rows..(i + 1) * rows],
+                            &q4.data,
+                            &q4.scales,
+                            &mut scratch,
+                            &mut want_acc,
+                        );
+                        assert_eq!(
+                            bits(&acc_arena[i * d..(i + 1) * d]),
+                            bits(&want_acc),
+                            "i4 mq accumulate {rows}x{d} member {i} on {}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -176,7 +176,8 @@ impl ApiError {
 /// (`quant_policy`; `precision` keeps the legacy shorthand), the
 /// resolved `parallelism` worker count, the scheduler's memory policy
 /// (`admission_mode`, `prefix_cache_blocks`), the decode data path
-/// (`attention_kernel`, `paged_decode`, `kernel_backend` — the resolved
+/// (`attention_kernel`, `paged_decode`, `kernel_backend`,
+/// `decode_batching` — the resolved
 /// ISA is served at `GET /metrics` as `kernel_isa`), and the sharded
 /// front door (`shards`, `affinity`, `queue_depth`, `overflow_depth`).
 pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
@@ -192,6 +193,7 @@ pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
         ("attention_kernel", cfg.attention_kernel.name().into()),
         ("paged_decode", Json::Bool(cfg.paged_decode)),
         ("kernel_backend", cfg.kernel_backend.name().into()),
+        ("decode_batching", cfg.decode_batching.name().into()),
         ("shards", cfg.shards.into()),
         ("affinity", cfg.affinity.name().into()),
         ("queue_depth", cfg.queue_depth.into()),
@@ -336,6 +338,7 @@ mod tests {
         assert_eq!(j.get("attention_kernel").as_str(), Some("vectorized"));
         assert_eq!(j.get("paged_decode").as_bool(), Some(true));
         assert_eq!(j.get("kernel_backend").as_str(), Some("auto"));
+        assert_eq!(j.get("decode_batching").as_str(), Some("auto"));
         assert_eq!(j.get("shards").as_usize(), Some(2));
         assert_eq!(j.get("affinity").as_str(), Some("session"));
         assert_eq!(j.get("queue_depth").as_usize(), Some(8));

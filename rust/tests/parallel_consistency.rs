@@ -11,9 +11,13 @@
 //! * Paged fused decode: bit-identical to the staged `decode_i8` path
 //!   across all four attention-kernel variants and thread counts 1/2/8
 //!   (the §7.5 cross-kernel consistency check, extended to the zero-copy
-//!   serving path).
+//!   serving path);
+//! * Batched decode: `decode_batching=auto` (fused multi-query waves,
+//!   COW-shared prefix blocks dequantized once per wave) emits exactly
+//!   the per-sequence token streams, across all four variants, both
+//!   kernel backends, threads {1, 2, 8}, paged and staged.
 
-use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::engine::{self, DecodeBatching, EngineConfig};
 use kvq::coordinator::request::collect_response;
 use kvq::coordinator::router::{RoutePolicy, Router};
 use kvq::kvcache::manager::{CacheConfig, KvCacheManager};
@@ -510,6 +514,130 @@ fn staged_and_paged_agree_under_forced_simd_backend() {
         out
     };
     assert_eq!(run(false), run(true), "staged vs paged diverged under the simd backend");
+}
+
+/// Spawn one engine with the given decode-batching knob and serve a
+/// COW-shared-prefix wave: two distinct one-block prompts, each
+/// submitted twice, with the prefix cache on — repeats fork the cached
+/// prefill, so decode waves reference shared physical prefix blocks.
+/// Returns the token streams and the end-of-run metrics snapshot.
+fn batched_wave_run(
+    batching: DecodeBatching,
+    paged: bool,
+    kernel: Variant,
+    kb: KernelBackend,
+    threads: usize,
+) -> (Vec<Vec<i32>>, kvq::coordinator::MetricsSnapshot) {
+    let cfg = EngineConfig {
+        quant_policy: PolicySpec::uniform(Precision::Int8),
+        decode_batching: batching,
+        paged_decode: paged,
+        attention_kernel: kernel,
+        kernel_backend: kb,
+        parallelism: threads,
+        prefix_cache_blocks: 64,
+        ..Default::default()
+    };
+    let (h, join) = engine::spawn(cfg, cpu_factory());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("eng", h.clone());
+    // Full-block prompts (len == block_size) so forked prefix blocks stay
+    // physically shared through decode (appends COW only the tail block).
+    let spec = ModelSpec::test_tiny();
+    let base: Vec<Vec<i32>> = (0..2)
+        .map(|p| (0..spec.block_size).map(|t| (p * 13 + t + 1) as i32).collect())
+        .collect();
+    let streams: Vec<_> = (0..4)
+        .map(|i| {
+            router.submit(base[i % 2].clone(), 6, SamplingParams::default()).unwrap().1
+        })
+        .collect();
+    let out: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+    h.drain();
+    join.join().unwrap();
+    (out, h.metrics.snapshot())
+}
+
+#[test]
+fn batched_decode_tokens_identical_to_per_sequence() {
+    // The tentpole contract: regrouping a decode wave into fused
+    // multi-query per-(layer, head) passes never changes a single token,
+    // for every attention-kernel variant, both kernel backends, and
+    // every thread count — on a wave whose members share COW prefix
+    // blocks (the case the dedup actually fires on).
+    // KVQ_DECODE_BATCHING=off (the CI forced-off job) downgrades `auto`
+    // to the per-sequence path; the equality still must hold, the
+    // mq-engagement assertions are skipped.
+    let env_off = std::env::var("KVQ_DECODE_BATCHING").as_deref() == Ok("off");
+    for kb in [KernelBackend::Scalar, KernelBackend::Simd] {
+        for threads in SWEEP {
+            for kernel in Variant::ALL {
+                let (off, off_snap) =
+                    batched_wave_run(DecodeBatching::Off, true, kernel, kb, threads);
+                let (auto, auto_snap) =
+                    batched_wave_run(DecodeBatching::Auto, true, kernel, kb, threads);
+                assert_eq!(
+                    off, auto,
+                    "batched decode changed tokens ({kernel:?} {kb:?} x{threads})"
+                );
+                assert_eq!(off_snap.mq_passes, 0, "off must never take the mq path");
+                if !env_off {
+                    assert!(
+                        auto_snap.mq_passes > 0,
+                        "auto must take the mq path on a concurrent wave \
+                         ({kernel:?} {kb:?} x{threads})"
+                    );
+                    assert!(
+                        auto_snap.cache_bytes_read <= off_snap.cache_bytes_read,
+                        "shared-prefix wave must not read more bytes batched \
+                         ({kernel:?} {kb:?} x{threads})"
+                    );
+                }
+                assert!(off.iter().all(|t| t.len() == 6));
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_decode_dedups_shared_prefix_blocks() {
+    // Duplicate prompts fork the prefix cache, so the wave's members
+    // reference the same physical prefix block — the batched path must
+    // report dedup (each shared block decoded once per wave) and a
+    // strictly smaller cache read volume than per-sequence.
+    if std::env::var("KVQ_DECODE_BATCHING").as_deref() == Ok("off") {
+        return; // forced-off CI job: the mq path is intentionally disabled
+    }
+    let (_, off) =
+        batched_wave_run(DecodeBatching::Off, true, Variant::Vectorized, KernelBackend::Scalar, 1);
+    let (_, auto) =
+        batched_wave_run(DecodeBatching::Auto, true, Variant::Vectorized, KernelBackend::Scalar, 1);
+    assert!(auto.blocks_deduped > 0, "COW-shared prefix blocks must dedup in the wave");
+    assert!(
+        auto.cache_bytes_read < off.cache_bytes_read,
+        "deduped waves must read strictly fewer cache bytes \
+         ({} vs {})",
+        auto.cache_bytes_read,
+        off.cache_bytes_read
+    );
+    assert_eq!(off.blocks_deduped, 0);
+}
+
+#[test]
+fn batched_decode_knob_is_inert_on_the_staged_path() {
+    // Staged decode has no wave view; `auto` must quietly stay on the
+    // legacy path (no mq passes) and emit identical tokens.
+    let (off, _) =
+        batched_wave_run(DecodeBatching::Off, false, Variant::Vectorized, KernelBackend::Scalar, 1);
+    let (auto, snap) = batched_wave_run(
+        DecodeBatching::Auto,
+        false,
+        Variant::Vectorized,
+        KernelBackend::Scalar,
+        1,
+    );
+    assert_eq!(off, auto, "staged path must ignore decode_batching");
+    assert_eq!(snap.mq_passes, 0, "staged path must never take the mq path");
 }
 
 #[test]
