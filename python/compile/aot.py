@@ -170,7 +170,12 @@ def build_model_entries(b: Builder, spec: model_mod.ModelSpec):
             {**meta, "bucket": bucket},
         )
         bucket *= 2
-    cache = [i8(l_, h, s, dh), f32(l_, h, dh), i8(l_, h, s, dh), f32(l_, h, dh)]
+    # Per-block scale grids: B = ceil(S / block_size), matching what the
+    # Rust runner stages for decode (rust/src/model/runner.rs).
+    bcnt = -(-s // spec.block_size)
+    meta = {**meta, "scale_blocks": bcnt}
+    cache = [i8(l_, h, s, dh), f32(l_, h, bcnt, dh),
+             i8(l_, h, s, dh), f32(l_, h, bcnt, dh)]
     b.add(
         f"decode_{spec.name}",
         lambda *a: model_mod.decode_step(spec, a[:-6], a[-6], a[-5],

@@ -343,23 +343,38 @@ def quantize_fused(k, *, col_parts=8):
 # ---------------------------------------------------------------------------
 
 
-def dequant_attention_decode(q, kq, k_scales, vq, v_scales, length):
+def dequant_attention_decode(q, kq, k_scales, vq, v_scales, length, *,
+                             block_size=None):
     """Single-token attention over a quantized (H, T, d) cache.
 
-    q: (H, d) f32; kq/vq: (H, T, d) int8; *_scales: (H, d) f32;
+    q: (H, d) f32; kq/vq: (H, T, d) int8; *_scales: (H, B, d) f32 frozen
+    per-block grids, B = ceil(T / block_size) — cache row t dequantizes
+    through block ``t // block_size``'s grid, the same block-granular
+    freeze the Rust cache manager stages for decode
+    (rust/src/kvcache/policy.rs). ``block_size`` defaults to ceil(T / B);
+    a legacy (H, d) single grid per head is accepted as B = 1.
     length: int32 scalar — number of valid cache rows. Returns (H, d).
 
     Grid over heads; each step stages one head's INT8 K and V strips plus
-    its scales, dequantizes in VMEM, computes masked softmax(qKᵀ/√d)·V.
-    INT8 staging means the HBM traffic is 4× smaller than an FP32 cache —
-    the end-to-end benefit the paper's §8.2 integration asks for.
+    its B scale grids, expands them to per-row factors and dequantizes in
+    VMEM, then computes masked softmax(qKᵀ/√d)·V. INT8 staging means the
+    HBM traffic is 4× smaller than an FP32 cache — the end-to-end benefit
+    the paper's §8.2 integration asks for.
     """
     h, t, d = kq.shape
+    if k_scales.ndim == 2:
+        k_scales = k_scales[:, None, :]
+        v_scales = v_scales[:, None, :]
+    b = k_scales.shape[1]
+    bs = block_size if block_size is not None else -(-t // b)
+    assert b * bs >= t, "per-block grids must cover every cache row"
 
     def kernel(len_ref, q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref):
         n = len_ref[0]
-        k = kq_ref[0].astype(jnp.float32) * ks_ref[...]  # (T, d)
-        v = vq_ref[0].astype(jnp.float32) * vs_ref[...]
+        ks = jnp.repeat(ks_ref[0], bs, axis=0)[:t]  # (T, d) row factors
+        vs = jnp.repeat(vs_ref[0], bs, axis=0)[:t]
+        k = kq_ref[0].astype(jnp.float32) * ks  # (T, d)
+        v = vq_ref[0].astype(jnp.float32) * vs
         qv = q_ref[...]  # (1, d)
         scores = (qv @ k.T) / jnp.sqrt(jnp.float32(d))  # (1, T)
         idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
@@ -376,9 +391,9 @@ def dequant_attention_decode(q, kq, k_scales, vq, v_scales, length):
             pl.BlockSpec((1,), lambda i: (0,)),
             pl.BlockSpec((1, d), lambda i: (i, 0)),
             pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),

@@ -108,16 +108,36 @@ def softmax(x, axis=-1):
     return e / jnp.sum(e, axis=axis, keepdims=True)
 
 
-def attention_decode(q, kq, k_scales, vq, v_scales, length=None):
+def expand_block_scales(scales, t, block_size):
+    """Per-block frozen grids -> per-row dequant factors.
+
+    scales: (H, B, d) with B = ceil(t / block_size); cache row r
+    dequantizes through block ``r // block_size``'s grid — the same
+    block-granular freeze the Rust cache manager stages for decode
+    (rust/src/kvcache/policy.rs). Returns (H, t, d).
+    """
+    return jnp.repeat(scales, block_size, axis=1)[:, :t, :]
+
+
+def attention_decode(q, kq, k_scales, vq, v_scales, length=None,
+                     block_size=None):
     """Single-token decode attention over a quantized cache.
 
-    q: (H, d) one query per head; kq/vq: (H, T, d) int8; scales: (H, d).
+    q: (H, d) one query per head; kq/vq: (H, T, d) int8; scales: (H, d)
+    for a single frozen grid per head, or (H, B, d) per-block grids
+    (``block_size`` rows each, defaulting to ceil(T / B)).
     ``length``: optional valid-prefix length (int scalar); positions >= length
     are masked out (the cache is allocated to capacity T but only partially
     filled during generation). Returns (H, d) attention output.
     """
-    k = kq.astype(jnp.float32) * k_scales[:, None, :]
-    v = vq.astype(jnp.float32) * v_scales[:, None, :]
+    if k_scales.ndim == 3:
+        t = kq.shape[1]
+        bs = block_size if block_size is not None else -(-t // k_scales.shape[1])
+        k = kq.astype(jnp.float32) * expand_block_scales(k_scales, t, bs)
+        v = vq.astype(jnp.float32) * expand_block_scales(v_scales, t, bs)
+    else:
+        k = kq.astype(jnp.float32) * k_scales[:, None, :]
+        v = vq.astype(jnp.float32) * v_scales[:, None, :]
     d = q.shape[-1]
     scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(d))
     if length is not None:

@@ -6,14 +6,18 @@ AOT-lowered per model config (see aot.py):
 * ``prefill``     — full-sequence forward over a padded prompt. Emits the
   next-token logits at the last valid position plus the FP32 K/V tensors for
   every layer; the Rust side quantizes them (per-channel, per head) into its
-  paged INT8 cache and freezes the resulting scales for decode.
+  paged INT8 cache, freezing one eq.-6 grid **per block** over that block's
+  own rows.
 * ``decode_step`` — single-token forward over the quantized cache. Attention
   runs over the INT8 history (dequantize-in-graph — never materializing an
   FP32 cache in HBM), which is the integration the paper's future-work
-  section calls for. A ``decode_step_pallas`` variant routes the history
-  attention through the fused Pallas dequant-attention kernel.
-  Both emit next-token logits and the new token's FP32 K/V rows for the
-  Rust side to quantize and append.
+  section calls for; scales arrive as ``(L, H, B, d)`` per-block grids
+  (``B = ceil(max_seq / block_size)``) and row ``t`` dequantizes through
+  block ``t // block_size``'s grid — the exact layout the Rust runner
+  stages (rust/src/model/runner.rs). A ``decode_step_pallas`` variant
+  routes the history attention through the fused Pallas dequant-attention
+  kernel. Both emit next-token logits and the new token's FP32 K/V rows
+  for the Rust side to quantize and append.
 
 Weights are *runtime inputs* (the Rust side generates seeded synthetic
 weights with the same layout — see rust/src/model/weights.rs and the
@@ -158,11 +162,12 @@ def prefill(spec: ModelSpec, flat_params, tokens, length):
     return logits, k_cache, v_cache
 
 
-def _attended_history(q, kq, k_scales, vq, v_scales, length):
+def _attended_history(q, kq, k_scales, vq, v_scales, length, block_size):
     """Masked attention over the quantized history, returning the pieces
     needed for a streaming-softmax merge with the current token.
 
-    q: (H, d); kq/vq: (H, S, d) int8; scales (H, d); length () int32.
+    q: (H, d); kq/vq: (H, S, d) int8; scales (H, B, d) per-block grids
+    (row t uses grid t // block_size); length () int32.
     Returns (attn (H, d) — softmax-normalized over history only,
              denom (H,) — softmax partition over history,
              mx (H,) — max score over history, floored at -1e29).
@@ -170,8 +175,8 @@ def _attended_history(q, kq, k_scales, vq, v_scales, length):
     current token alone.
     """
     h, s, d = kq.shape
-    k = kq.astype(jnp.float32) * k_scales[:, None, :]
-    v = vq.astype(jnp.float32) * v_scales[:, None, :]
+    k = kq.astype(jnp.float32) * ref.expand_block_scales(k_scales, s, block_size)
+    v = vq.astype(jnp.float32) * ref.expand_block_scales(v_scales, s, block_size)
     scores = jnp.einsum("hd,htd->ht", q, k) / jnp.sqrt(jnp.float32(d))
     idx = jax.lax.broadcasted_iota(jnp.int32, (h, s), 1)
     scores = jnp.where(idx < length, scores, jnp.float32(-1e30))
@@ -234,15 +239,24 @@ def decode_step(spec: ModelSpec, flat_params, token, pos,
     """Single-token forward over the INT8 cache (plain-XLA history attn).
 
     token: () int32; pos: () int32 — index this token will occupy (== number
-    of valid cache rows). kq/vq: (L, H, S, d) int8; scales: (L, H, d) f32.
+    of valid cache rows). kq/vq: (L, H, S, d) int8; scales: (L, H, B, d)
+    f32 per-block grids, B = ceil(S / block_size) — row t dequantizes
+    through block t // block_size's grid (the Rust staged decode ABI,
+    rust/src/kvcache/policy.rs).
     Returns (logits (V,), k_new (L, H, d) f32, v_new (L, H, d) f32).
 
     The cache is *not* updated here: quantize-and-append is owned by the
-    Rust cache manager (frozen prefill scales, clamped), keeping this
-    artifact free of scatter ops and the paged layout opaque to XLA.
+    Rust cache manager (frozen per-block grids, clamped appends into the
+    last block's grid), keeping this artifact free of scatter ops and the
+    paged layout opaque to XLA.
     """
+
+    def hist(qh, kqi, ksi, vqi, vsi, length):
+        return _attended_history(qh, kqi, ksi, vqi, vsi, length,
+                                 spec.block_size)
+
     return _decode_core(spec, flat_params, token, pos,
-                        kq, k_scales, vq, v_scales, _attended_history)
+                        kq, k_scales, vq, v_scales, hist)
 
 
 def decode_step_pallas(spec: ModelSpec, flat_params, token, pos,
@@ -253,8 +267,10 @@ def decode_step_pallas(spec: ModelSpec, flat_params, token, pos,
     score row, which XLA CSEs with the kernel's own computation."""
 
     def hist(qh, kqi, ksi, vqi, vsi, length):
-        attn = kernels.dequant_attention_decode(qh, kqi, ksi, vqi, vsi, length)
-        _, denom, mx = _attended_history(qh, kqi, ksi, vqi, vsi, length)
+        attn = kernels.dequant_attention_decode(
+            qh, kqi, ksi, vqi, vsi, length, block_size=spec.block_size)
+        _, denom, mx = _attended_history(qh, kqi, ksi, vqi, vsi, length,
+                                         spec.block_size)
         return attn, denom, mx
 
     return _decode_core(spec, flat_params, token, pos,

@@ -55,9 +55,12 @@ class TestManifest:
         l_, h, s, d = meta["layers"], meta["heads"], meta["max_seq"], meta["head_dim"]
         n_params = len(meta["params"])
         assert len(e["inputs"]) == n_params + 2 + 4
-        # Cache tensors come last: kq, ks, vq, vs.
+        # Cache tensors come last: kq, ks, vq, vs. Scales are per-block
+        # grids (B = ceil(S / block_size), the staged decode ABI).
+        b = -(-s // meta["block_size"])
+        assert meta["scale_blocks"] == b
         assert e["inputs"][-4] == {"dtype": "int8", "shape": [l_, h, s, d]}
-        assert e["inputs"][-3] == {"dtype": "float32", "shape": [l_, h, d]}
+        assert e["inputs"][-3] == {"dtype": "float32", "shape": [l_, h, b, d]}
         assert e["outputs"][0] == {"dtype": "float32", "shape": [meta["vocab"]]}
         assert e["outputs"][1] == {"dtype": "float32", "shape": [l_, h, d]}
 

@@ -4,19 +4,38 @@ paper's error-law claims (§7.2/§7.3, Fig 4)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property sweeps skip where absent
+    given = settings = st = None
 
 from compile.kernels import quant, ref
 
 
-def _cache(h, t, d, seed=0):
+def _cache(h, t, d, seed=0, block_size=None):
+    """Quantized (H, T, d) cache with per-block frozen grids.
+
+    ``block_size=None`` uses one grid per head (B = 1 — the legacy
+    whole-prompt freeze); otherwise each block's grid is computed over its
+    own rows, mirroring the Rust cache manager's block-granular freeze.
+    Scales come back as (H, B, d)."""
+    bs = block_size or t
+    b = -(-t // bs)
     rng = np.random.default_rng(seed)
     k = rng.normal(size=(h, t, d)).astype(np.float32)
     v = rng.normal(size=(h, t, d)).astype(np.float32)
-    ks = np.stack([np.asarray(ref.compute_scales(k[i])) for i in range(h)])
-    vs = np.stack([np.asarray(ref.compute_scales(v[i])) for i in range(h)])
-    k8 = np.stack([np.asarray(ref.quantize(k[i], ks[i])) for i in range(h)])
-    v8 = np.stack([np.asarray(ref.quantize(v[i], vs[i])) for i in range(h)])
+    ks = np.zeros((h, b, d), dtype=np.float32)
+    vs = np.zeros((h, b, d), dtype=np.float32)
+    k8 = np.zeros((h, t, d), dtype=np.int8)
+    v8 = np.zeros((h, t, d), dtype=np.int8)
+    for i in range(h):
+        for bi in range(b):
+            lo, hi = bi * bs, min((bi + 1) * bs, t)
+            ks[i, bi] = np.asarray(ref.compute_scales(k[i, lo:hi]))
+            vs[i, bi] = np.asarray(ref.compute_scales(v[i, lo:hi]))
+            k8[i, lo:hi] = np.asarray(ref.quantize(k[i, lo:hi], ks[i, bi]))
+            v8[i, lo:hi] = np.asarray(ref.quantize(v[i, lo:hi], vs[i, bi]))
     q = rng.normal(size=(h, d)).astype(np.float32)
     return q, k, v, k8, ks, v8, vs
 
@@ -57,19 +76,53 @@ class TestDequantAttention:
             jnp.asarray(v8b), jnp.asarray(vs), jnp.asarray(np.int32(8))))
         np.testing.assert_allclose(out1, out2, atol=1e-6)
 
-    @settings(max_examples=15, deadline=None)
-    @given(h=st.integers(1, 4), t=st.integers(2, 24), d=st.integers(2, 48),
-           seed=st.integers(0, 10_000))
-    def test_matches_ref_hypothesis(self, h, t, d, seed):
-        q, _, _, k8, ks, v8, vs = _cache(h, t, d, seed=seed)
-        length = 1 + seed % t
+    @pytest.mark.parametrize("length", [1, 5, 8, 19, 32])
+    def test_per_block_scales_match_ref(self, length):
+        """Frozen per-block grids (B=4, block_size=8): each row must
+        dequantize through its own block's grid in kernel and reference."""
+        q, _, _, k8, ks, v8, vs = _cache(2, 32, 16, seed=length, block_size=8)
+        assert ks.shape == (2, 4, 16)
         got = np.asarray(quant.dequant_attention_decode(
             jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
-            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(length))))
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(length)),
+            block_size=8))
         want = np.asarray(ref.attention_decode(
             jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
-            jnp.asarray(v8), jnp.asarray(vs), length=length))
-        np.testing.assert_allclose(got, want, atol=2e-5)
+            jnp.asarray(v8), jnp.asarray(vs), length=length, block_size=8))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    def test_per_block_partial_tail_block(self):
+        """T not a multiple of block_size: the last (short) block's grid
+        still maps onto exactly its own rows."""
+        q, _, _, k8, ks, v8, vs = _cache(2, 21, 16, seed=3, block_size=8)
+        assert ks.shape == (2, 3, 16)
+        got = np.asarray(quant.dequant_attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), jnp.asarray(np.int32(21)),
+            block_size=8))
+        want = np.asarray(ref.attention_decode(
+            jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+            jnp.asarray(v8), jnp.asarray(vs), length=21, block_size=8))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+    if st is not None:
+
+        @settings(max_examples=15, deadline=None)
+        @given(h=st.integers(1, 4), t=st.integers(2, 24), d=st.integers(2, 48),
+               seed=st.integers(0, 10_000))
+        def test_matches_ref_hypothesis(self, h, t, d, seed):
+            bs = 1 + seed % 8  # sweep block granularities too
+            q, _, _, k8, ks, v8, vs = _cache(h, t, d, seed=seed, block_size=bs)
+            length = 1 + seed % t
+            got = np.asarray(quant.dequant_attention_decode(
+                jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+                jnp.asarray(v8), jnp.asarray(vs),
+                jnp.asarray(np.int32(length)), block_size=bs))
+            want = np.asarray(ref.attention_decode(
+                jnp.asarray(q), jnp.asarray(k8), jnp.asarray(ks),
+                jnp.asarray(v8), jnp.asarray(vs), length=length,
+                block_size=bs))
+            np.testing.assert_allclose(got, want, atol=2e-5)
 
 
 class TestErrorLaws:
@@ -128,3 +181,25 @@ class TestErrorLaws:
         err_pc = np.abs(k - pc)[:, 1:].max()  # error on the normal columns
         err_pt = np.abs(k - pt)[:, 1:].max()
         assert err_pc < err_pt / 10.0
+
+    def test_per_block_beats_per_prompt_under_drift(self):
+        """Why scales freeze per block (A12 ablation): when magnitudes
+        drift across the sequence, a whole-prompt grid wastes resolution
+        on early rows; per-block grids fit each block's own range."""
+        rng = np.random.default_rng(6)
+        t, d, bs = 64, 32, 8
+        drift = (0.25 + 1.75 * np.arange(t) / t).astype(np.float32)
+        k = rng.normal(size=(t, d)).astype(np.float32) * drift[:, None]
+
+        s_all = np.asarray(ref.compute_scales(k))
+        hat_all = np.asarray(ref.dequantize(
+            np.asarray(ref.quantize(k, s_all)), s_all))
+
+        hat_blk = np.zeros_like(k)
+        for lo in range(0, t, bs):
+            blk = k[lo:lo + bs]
+            s = np.asarray(ref.compute_scales(blk))
+            hat_blk[lo:lo + bs] = np.asarray(ref.dequantize(
+                np.asarray(ref.quantize(blk, s)), s))
+
+        assert np.abs(k - hat_blk).mean() < np.abs(k - hat_all).mean()

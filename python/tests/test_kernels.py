@@ -9,7 +9,11 @@ standardize the rounding mode instead and demand bit equality.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dep: property sweeps skip where absent
+    given = settings = st = None
 
 from compile.kernels import quant, ref
 
@@ -186,39 +190,39 @@ class TestEdgeCases:
 # ---------------------------------------------------------------------------
 
 
-@st.composite
-def matrices(draw):
-    t = draw(st.integers(min_value=1, max_value=96))
-    d = draw(st.integers(min_value=1, max_value=96))
-    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
-    dist = draw(st.sampled_from(["uniform", "normal", "outliers"]))
-    scale = draw(st.sampled_from([1e-6, 1.0, 1e6]))
-    return _rand(t, d, seed=seed, dist=dist, scale=scale)
+if st is not None:
 
+    @st.composite
+    def matrices(draw):
+        t = draw(st.integers(min_value=1, max_value=96))
+        d = draw(st.integers(min_value=1, max_value=96))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        dist = draw(st.sampled_from(["uniform", "normal", "outliers"]))
+        scale = draw(st.sampled_from([1e-6, 1.0, 1e6]))
+        return _rand(t, d, seed=seed, dist=dist, scale=scale)
 
-@settings(max_examples=25, deadline=None)
-@given(k=matrices(), variant=st.sampled_from(VARIANTS))
-def test_quantize_matches_ref_anywhere(k, variant):
-    s = np.asarray(ref.compute_scales(k))
-    got = np.asarray(quant.VARIANTS[variant][0](jnp.asarray(k), jnp.asarray(s)))
-    np.testing.assert_array_equal(got, np.asarray(ref.quantize(k, s)))
+    @settings(max_examples=25, deadline=None)
+    @given(k=matrices(), variant=st.sampled_from(VARIANTS))
+    def test_quantize_matches_ref_anywhere(k, variant):
+        s = np.asarray(ref.compute_scales(k))
+        got = np.asarray(quant.VARIANTS[variant][0](jnp.asarray(k), jnp.asarray(s)))
+        np.testing.assert_array_equal(got, np.asarray(ref.quantize(k, s)))
 
+    @settings(max_examples=25, deadline=None)
+    @given(k=matrices())
+    def test_roundtrip_error_bound(k):
+        """|x - x̂| <= s_d / 2 per element — eq. (9)."""
+        kq, s = quant.quantize_fused(jnp.asarray(k))
+        deq = np.asarray(ref.dequantize(np.asarray(kq), np.asarray(s)))
+        bound = np.asarray(s)[None, :] / 2.0
+        err = np.abs(k - deq)
+        # Elements beyond ±127·s are clamped; for abs-max scaling none
+        # exceed it, so the bound holds everywhere (plus float slack).
+        assert (err <= bound * (1 + 1e-5) + 1e-12).all()
 
-@settings(max_examples=25, deadline=None)
-@given(k=matrices())
-def test_roundtrip_error_bound(k):
-    """|x - x̂| <= s_d / 2 per element — eq. (9)."""
-    kq, s = quant.quantize_fused(jnp.asarray(k))
-    deq = np.asarray(ref.dequantize(np.asarray(kq), np.asarray(s)))
-    bound = np.asarray(s)[None, :] / 2.0
-    err = np.abs(k - deq)
-    # Elements beyond ±127·s are clamped; for abs-max scaling none exceed it,
-    # so the bound holds everywhere (plus float slack).
-    assert (err <= bound * (1 + 1e-5) + 1e-12).all()
-
-
-@settings(max_examples=15, deadline=None)
-@given(k=matrices())
-def test_scales_match_ref_anywhere(k):
-    got = np.asarray(quant.compute_scales(jnp.asarray(k)))
-    np.testing.assert_allclose(got, np.asarray(ref.compute_scales(k)), rtol=1e-6)
+    @settings(max_examples=15, deadline=None)
+    @given(k=matrices())
+    def test_scales_match_ref_anywhere(k):
+        got = np.asarray(quant.compute_scales(jnp.asarray(k)))
+        np.testing.assert_allclose(
+            got, np.asarray(ref.compute_scales(k)), rtol=1e-6)

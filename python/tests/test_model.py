@@ -29,20 +29,30 @@ def _params(spec, seed=0):
     return [jnp.asarray(p) for p in out]
 
 
-def _quantize_cache(k_cache, v_cache, n):
-    """Per-(layer, head) per-channel quantization of the first n rows,
-    mirroring what the Rust cache manager does after prefill."""
+def _quantize_cache(k_cache, v_cache, n, block_size=SPEC.block_size):
+    """Per-(layer, head) per-channel quantization of the first n rows with
+    block-granular frozen scales, mirroring what the Rust cache manager
+    does after prefill: each block's eq.-6 grid is computed over that
+    block's own rows only. Scales come back as (L, H, B, d) with
+    B = ceil(S / block_size) — the staged decode ABI."""
     l, h, s, d = k_cache.shape
+    b = -(-s // block_size)
     kq = np.zeros((l, h, s, d), dtype=np.int8)
     vq = np.zeros((l, h, s, d), dtype=np.int8)
-    ks = np.zeros((l, h, d), dtype=np.float32)
-    vs = np.zeros((l, h, d), dtype=np.float32)
+    ks = np.zeros((l, h, b, d), dtype=np.float32)
+    vs = np.zeros((l, h, b, d), dtype=np.float32)
     for li in range(l):
-        for hi in range(h):
-            ks[li, hi] = np.asarray(ref.compute_scales(k_cache[li, hi, :n]))
-            vs[li, hi] = np.asarray(ref.compute_scales(v_cache[li, hi, :n]))
-            kq[li, hi, :n] = np.asarray(ref.quantize(k_cache[li, hi, :n], ks[li, hi]))
-            vq[li, hi, :n] = np.asarray(ref.quantize(v_cache[li, hi, :n], vs[li, hi]))
+        for hd in range(h):
+            for bi in range(b):
+                lo, hi = bi * block_size, min((bi + 1) * block_size, n)
+                if lo >= hi:
+                    break  # blocks past the valid prefix stay zeroed
+                ks[li, hd, bi] = np.asarray(ref.compute_scales(k_cache[li, hd, lo:hi]))
+                vs[li, hd, bi] = np.asarray(ref.compute_scales(v_cache[li, hd, lo:hi]))
+                kq[li, hd, lo:hi] = np.asarray(
+                    ref.quantize(k_cache[li, hd, lo:hi], ks[li, hd, bi]))
+                vq[li, hd, lo:hi] = np.asarray(
+                    ref.quantize(v_cache[li, hd, lo:hi], vs[li, hd, bi]))
     return kq, ks, vq, vs
 
 
@@ -119,6 +129,20 @@ class TestDecodeConsistency:
         np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref_logits),
                                    atol=0.15, rtol=0.1)
         assert int(np.argmax(dec_logits)) == int(np.argmax(ref_logits))
+
+    def test_scales_are_per_block(self):
+        """n=9 rows span two blocks; each freezes its own eq.-6 grid."""
+        flat = _params(SPEC)
+        rng = np.random.default_rng(12)
+        tokens = rng.integers(0, SPEC.vocab, size=SPEC.max_seq).astype(np.int32)
+        _, kc, vc = model_mod.prefill(SPEC, flat, jnp.asarray(tokens), jnp.int32(9))
+        _, ks, _, _ = _quantize_cache(np.asarray(kc), np.asarray(vc), 9)
+        b = SPEC.max_seq // SPEC.block_size
+        assert ks.shape == (SPEC.layers, SPEC.heads, b, SPEC.head_dim)
+        # Block 1 covers a single row, so its grid differs from block 0's.
+        assert not np.array_equal(ks[:, :, 0, :], ks[:, :, 1, :])
+        # Blocks beyond the valid prefix carry no grid.
+        assert (ks[:, :, 2:, :] == 0).all()
 
     def test_new_kv_matches_prefill_row(self):
         """The decode step's emitted K/V row == prefill's row at that pos."""

@@ -23,6 +23,11 @@
 //!     COW-prefix fraction {0, 0.5, 1.0} — records
 //!     `speedup_vs_unbatched` plus the amortized cache-byte footprint
 //!     (runs in --smoke)
+//! A12. scale granularity: one eq.-6 grid frozen over the whole prompt
+//!     (pre-refactor serving policy) vs per-block grids frozen over each
+//!     block's own rows with decode rows clamping into the last block's
+//!     grid (the paged cache's policy) — fig4-style key / attention /
+//!     value-output error plus the encode overhead (runs in --smoke)
 //!
 //! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
 //! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
@@ -546,6 +551,90 @@ fn main() -> anyhow::Result<()> {
             }
         }
         kvq::bench::figures::emit(&t11, "ablation_a11_decode_batching");
+    }
+
+    // A12: scale granularity — one grid frozen over the whole prompt vs
+    // per-block grids. The per-block encode freezes an eq.-6 grid over
+    // each block's own rows; the generated span clamps into the last
+    // block's grid either way (frozen-scale serving: decode rows never
+    // refreeze). Keys drift in magnitude across the sequence, the regime
+    // where a whole-prompt grid over-ranges the early blocks.
+    {
+        let (t_rows, d, bs) = if smoke { (256usize, 64usize, 32usize) } else { (2048, 128, 64) };
+        let prompt_rows = t_rows / 2;
+        let mut k = Fp32Matrix::random_normal(t_rows, d, 1.0, 0xA12);
+        for t in 0..t_rows {
+            let g = 0.25 + 1.75 * t as f32 / t_rows as f32;
+            for c in 0..d {
+                k.data[t * d + c] *= g;
+            }
+        }
+        let slice = |lo: usize, hi: usize| {
+            Fp32Matrix::from_vec(hi - lo, d, k.data[lo * d..hi * d].to_vec())
+        };
+        // Encode the sequence through grids frozen per `grain` prompt
+        // rows (grain == prompt_rows is the pre-refactor policy; grain ==
+        // block_size is the paged cache's), writing the dequantized
+        // reconstruction into `out`.
+        let encode = |grain: usize, out: &mut Fp32Matrix| {
+            let mut grid = vec![0.0f32; d];
+            let mut at = 0usize;
+            while at < prompt_rows {
+                let hi = (at + grain).min(prompt_rows);
+                let seg = slice(at, hi);
+                quant::scales::compute_scales_rowsweep(&seg, &mut grid);
+                let mut q = Int8Matrix::zeros(seg.rows, d);
+                quant::quantize::quantize_vectorized(&seg, &grid, &mut q);
+                out.data[at * d..hi * d].copy_from_slice(&quant::dequantize(&q).data);
+                at = hi;
+            }
+            let seg = slice(prompt_rows, t_rows);
+            let mut q = Int8Matrix::zeros(seg.rows, d);
+            quant::quantize::quantize_vectorized(&seg, &grid, &mut q);
+            out.data[prompt_rows * d..].copy_from_slice(&quant::dequantize(&q).data);
+        };
+        let queries = Fp32Matrix::random_normal(32, d, 1.0, 0x12A);
+        let mut probs = Fp32Matrix::random_uniform(32, t_rows, 0.0, 1.0, 0x12B);
+        for r in 0..probs.rows {
+            let row = &mut probs.data[r * t_rows..(r + 1) * t_rows];
+            let sum: f32 = row.iter().sum();
+            row.iter_mut().for_each(|w| *w /= sum);
+        }
+        let mut t12 = Table::new(
+            &format!(
+                "A12 — scale granularity over {t_rows}x{d} (prompt {prompt_rows}, block {bs})"
+            ),
+            &["granularity", "encode median", "key max_abs_err", "key l2_err", "attn_err",
+              "value_out_err"],
+        );
+        for (name, grain) in [("per_prompt", prompt_rows), ("per_block", bs)] {
+            let mut rec = Fp32Matrix::zeros(t_rows, d);
+            let m = bencher.measure(name, || encode(grain, &mut rec));
+            let (max_err, l2) = (quant::max_abs_error(&k, &rec), quant::l2_error(&k, &rec));
+            let attn = quant::attention_score_error(&queries, &k, &rec);
+            let vout = quant::value_output_error(&probs, &k, &rec);
+            t12.row(&[
+                name.into(),
+                cell_time(m.median()),
+                cell_f(max_err, 5),
+                cell_f(l2, 3),
+                cell_f(attn, 5),
+                cell_f(vout, 5),
+            ]);
+            report.add(
+                "a12_scale_granularity",
+                name,
+                Some(m.median()),
+                &[
+                    ("grain_rows", Json::Num(grain as f64)),
+                    ("key_max_abs_err", Json::Num(max_err)),
+                    ("key_l2_err", Json::Num(l2)),
+                    ("attn_err", Json::Num(attn)),
+                    ("value_out_err", Json::Num(vout)),
+                ],
+            );
+        }
+        kvq::bench::figures::emit(&t12, "ablation_a12_scale_granularity");
     }
 
     // A5 + A7 need the runtime.

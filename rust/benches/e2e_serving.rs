@@ -15,7 +15,11 @@
 //! **decode_batching scenario**: fused multi-query batched decode (auto)
 //! vs the per-sequence path (off) on a shared-prefix wave, reporting
 //! `speedup_vs_unbatched`, `mq_passes`, `blocks_deduped`, and cache
-//! bytes/token, again with identical-token assertions.
+//! bytes/token, again with identical-token assertions — and the
+//! **prefix_trie scenario**: a RAG-style workload (8 system prompts ×
+//! several distinct suffixes + exact repeats) reporting the trie's
+//! hit-rate and prefill-tokens-saved against the exact-match baseline
+//! (full hits only), with byte-identical tokens vs a cache-disabled run.
 //!
 //! Flags: --model kvq-3m|kvq-25m --requests N --max-new N --concurrency N
 //!        --threads N (skip the sweep, run one worker count)
@@ -373,6 +377,117 @@ fn decode_batching_scenario(report: &mut BenchReport, n_requests: usize) -> anyh
     Ok(())
 }
 
+/// Radix-trie prefix cache on a RAG-style workload: `n_sys` distinct
+/// two-block system prompts, each followed by several distinct suffixes
+/// plus one exact repeat. An exact-match cache only saves the repeats
+/// (the trie's full hits reproduce exactly that set); the trie also
+/// serves every shared system prefix from forked cached blocks, running
+/// suffix prefill for the rest. Reports saved prefill tokens and
+/// hit-rate for both, asserting the trie lands strictly above the
+/// exact-match baseline with tokens byte-identical to a cache-disabled
+/// run. Runs in `--smoke` so CI's `BENCH_e2e_smoke.json` carries a
+/// `prefix_trie` section.
+fn prefix_trie_scenario(report: &mut BenchReport) -> anyhow::Result<()> {
+    let spec = ModelSpec::test_tiny();
+    let bs = spec.block_size;
+    let (sys_len, suffix_len) = (2 * bs, bs);
+    let max_new = (spec.max_seq - sys_len - suffix_len).min(6);
+    let (n_sys, n_suffix) = (8usize, 3usize);
+    let vocab = spec.vocab;
+    let mut prompts: Vec<Vec<i32>> = Vec::new();
+    for i in 0..n_sys {
+        let sys: Vec<i32> =
+            (0..sys_len).map(|t| ((i * 31 + t * 7 + 5) % vocab) as i32).collect();
+        for j in 0..n_suffix {
+            let mut p = sys.clone();
+            p.extend(
+                (0..suffix_len).map(|t| ((i * 13 + j * 17 + t * 3 + 11) % vocab) as i32),
+            );
+            prompts.push(p);
+        }
+        // Exact repeat of this system prompt's first suffix: the one
+        // request an exact-match cache would also have served.
+        prompts.push(prompts[prompts.len() - n_suffix].clone());
+    }
+    let prompt_tokens: usize = prompts.iter().map(|p| p.len()).sum();
+
+    let run = |budget: usize| {
+        let ecfg = EngineConfig {
+            quant_policy: PolicySpec::uniform(Precision::Int8),
+            // Roomy pool: the contrast here is cache policy, not pool
+            // pressure (trie entries pin ~20 blocks per system prompt).
+            num_blocks: Some(1024),
+            prefix_cache_blocks: budget,
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("trie", h.clone());
+        let t0 = Instant::now();
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        let tokens: Vec<Vec<i32>> = streams.iter().map(|rx| collect_response(rx).0).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        h.drain();
+        join.join().ok();
+        (tokens, h.metrics.snapshot(), wall)
+    };
+
+    let (base_tokens, _, base_wall) = run(0);
+    let (trie_tokens, snap, trie_wall) = run(512);
+    assert_eq!(
+        base_tokens, trie_tokens,
+        "trie-cached generations must be byte-identical to the uncached run"
+    );
+    assert!(snap.prefix_partial_hits > 0, "shared system prefixes must partially hit");
+    // Full hits are exactly what an exact-match cache would have served.
+    let exact_saved = snap.prefix_hits * (sys_len + suffix_len) as u64;
+    let trie_rate = snap.prefix_saved_tokens as f64 / prompt_tokens as f64;
+    let exact_rate = exact_saved as f64 / prompt_tokens as f64;
+    assert!(
+        snap.prefix_saved_tokens > exact_saved,
+        "trie must save strictly more prefill tokens than exact matching \
+         ({} vs {})",
+        snap.prefix_saved_tokens,
+        exact_saved
+    );
+    for (label, saved, rate, partial) in [
+        ("exact_match_baseline", exact_saved, exact_rate, 0u64),
+        ("trie", snap.prefix_saved_tokens, trie_rate, snap.prefix_partial_hits),
+    ] {
+        report.add(
+            "prefix_trie",
+            label,
+            None,
+            &[
+                ("requests", Json::Num(prompts.len() as f64)),
+                ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                ("prefill_tokens_saved", Json::Num(saved as f64)),
+                ("hit_rate_token_share", Json::Num(rate)),
+                ("full_hits", Json::Num(snap.prefix_hits as f64)),
+                ("partial_hits", Json::Num(partial as f64)),
+                ("trie_nodes", Json::Num(snap.prefix_trie_nodes as f64)),
+                ("uncached_wall_s", Json::Num(base_wall)),
+                ("wall_s", Json::Num(trie_wall)),
+            ],
+        );
+    }
+    println!(
+        "[prefix_trie] tokens identical ✓  trie saved {}/{} prompt tokens \
+         ({:.2} rate) vs {} exact-match ({:.2}); {} partial hits, {} trie nodes",
+        snap.prefix_saved_tokens,
+        prompt_tokens,
+        trie_rate,
+        exact_saved,
+        exact_rate,
+        snap.prefix_partial_hits,
+        snap.prefix_trie_nodes
+    );
+    Ok(())
+}
+
 /// Policy sweep on the CPU oracle: serve the same workload under each
 /// named quantization policy (`uniform:int8`, `uniform:int4`, `k8v4`,
 /// `sink8`) and record throughput, decode ns/token, cache bytes/token,
@@ -590,6 +705,10 @@ fn main() -> anyhow::Result<()> {
     // Fused multi-query batched decode vs per-sequence on a shared-prefix
     // wave (CPU backend; runs in --smoke for the CI artifact).
     decode_batching_scenario(&mut report, args.usize_or("decode-batching-requests", 6))?;
+
+    // Radix-trie prefix cache vs exact matching on a RAG workload (CPU
+    // backend; runs in --smoke for the CI artifact).
+    prefix_trie_scenario(&mut report)?;
 
     // Quantization-policy sweep (CPU backend; runs in --smoke too).
     policy_sweep_scenario(&mut report, args.usize_or("policy-sweep-requests", 4))?;

@@ -42,16 +42,23 @@
 //! preempt a victim, finally preempt the appending sequence itself.
 //!
 //! **Prefix cache.** With `prefix_cache_blocks > 0`, finished prefills
-//! are registered in a [`PrefixCache`]; an identical prompt later forks
-//! the cached blocks (refcount bump, no re-quantization, no backend
-//! prefill) and decodes from the stored first-token logits.
+//! are registered in a block-granular token trie ([`PrefixCache`]). An
+//! identical prompt later forks the cached blocks (refcount bump, no
+//! re-quantization, no backend prefill) and decodes from the stored
+//! first-token logits; a prompt sharing only a block-aligned *prefix*
+//! forks the shared span and runs suffix prefill from the first uncached
+//! block. Chunk-capable backends (CPU) always prefill block-by-block
+//! through [`LmBackend::prefill_chunk`] — cache hit or not — so cached
+//! and uncached runs of the same prompt are byte-identical (asserted by
+//! `tests/preemption.rs`); PJRT keeps whole-prompt prefill and
+//! exact-match-only reuse.
 
 use super::batcher::{Batcher, BatcherConfig, StepPlan};
 use super::metrics::{Metrics, StepGauges};
 use super::request::{EventTx, FinishReason, Request, RequestId, TokenEvent};
 use super::scheduler::{Running, Scheduler};
 use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
-use crate::kvcache::{PolicySpec, PrefixCache, QuantPolicy, StagedKind};
+use crate::kvcache::{PolicySpec, PrefixCache, PrefixHit, QuantPolicy, StagedKind};
 use crate::model::runner::DecodeResult;
 use crate::model::sample;
 use crate::model::{BatchScratch, LmBackend};
@@ -84,8 +91,10 @@ pub struct EngineConfig {
     /// gathers + cache prefill/gather fan-out). 0 = auto
     /// (`available_parallelism`, `KVQ_THREADS` override).
     pub parallelism: usize,
-    /// Logical block budget of the cross-request prefix cache
-    /// (`0` disables prompt sharing — the default).
+    /// Logical block budget of the cross-request prefix-cache trie
+    /// (`0` disables prompt sharing — the default). The
+    /// `KVQ_PREFIX_CACHE_BLOCKS` env var overrides the configured value
+    /// (the CI cache-off job forces `0` this way).
     pub prefix_cache_blocks: usize,
     /// Fused dequant-attention kernel for the paged decode path
     /// (naive|tiled|coarsened|vectorized). Never changes outputs — all
@@ -185,6 +194,30 @@ impl Default for EngineConfig {
             decode_batching: DecodeBatching::Auto,
         }
     }
+}
+
+/// Resolve the prefix-cache block budget against the
+/// `KVQ_PREFIX_CACHE_BLOCKS` env override (the CI cache-off job forces
+/// `0` this way to rerun the sharing suites without reuse); an
+/// unparseable value is ignored with a one-time warning, mirroring
+/// [`DecodeBatching::resolve`].
+fn resolve_prefix_budget(cfg_blocks: usize) -> usize {
+    let env = std::env::var("KVQ_PREFIX_CACHE_BLOCKS").ok();
+    if let Some(v) = env.as_deref() {
+        match v.parse::<usize>() {
+            Ok(b) => return b,
+            Err(_) => {
+                static WARNED: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+                WARNED.get_or_init(|| {
+                    crate::warn!(
+                        "ignoring unparseable KVQ_PREFIX_CACHE_BLOCKS={v:?} \
+                         (expected a block count); using configured {cfg_blocks}"
+                    );
+                });
+            }
+        }
+    }
+    cfg_blocks
 }
 
 enum EngineCmd {
@@ -338,13 +371,27 @@ fn gather_sequence(
     let (l, h, s, d) = (c.layers, c.heads, c.max_seq, c.head_dim);
     match kind {
         StagedKind::I8 => {
+            let b = s.div_ceil(c.block_size);
             for li in 0..l {
                 let span = li * h * s * d..(li + 1) * h * s * d;
                 cache.gather_i8_with(seq, li, 0, &mut slot.kq[span.clone()], inner_threads)?;
                 cache.gather_i8_with(seq, li, 1, &mut slot.vq[span], inner_threads)?;
-                let sspan = li * h * d..(li + 1) * h * d;
-                slot.ks[sspan.clone()].copy_from_slice(cache.scales(seq, li, 0)?);
-                slot.vs[sspan].copy_from_slice(cache.scales(seq, li, 1)?);
+                // Transpose the manager's block-major per-block scales
+                // ([bi][head][ch]) into the staged ABI (L, H, B, d);
+                // blocks past the sequence's length stay zero.
+                let lbase = li * h * b * d;
+                for (kv, dst) in [(0usize, &mut slot.ks), (1, &mut slot.vs)] {
+                    let dst = &mut dst[lbase..lbase + h * b * d];
+                    dst.fill(0.0);
+                    let src = cache.scales(seq, li, kv)?;
+                    for bi in 0..src.len() / (h * d) {
+                        for head in 0..h {
+                            let so = (bi * h + head) * d;
+                            let go = (head * b + bi) * d;
+                            dst[go..go + d].copy_from_slice(&src[so..so + d]);
+                        }
+                    }
+                }
             }
         }
         StagedKind::F32 => {
@@ -423,11 +470,13 @@ impl Engine {
             cfg.num_blocks.unwrap_or(blocks_per_seq * cfg.expected_concurrency.max(1));
         let staged_kind = policy.staged();
         // Bytes one staged decode step copies: both K and V payloads at
-        // full max_seq stride plus both scale tensors (per-row accounting
-        // through the policy — identical to the legacy per-precision
-        // formula for the uniform staging-capable policies).
+        // full max_seq stride plus both per-block scale tensors
+        // (L, H, B, d) — per-row accounting through the policy, identical
+        // to the legacy per-precision formula for the uniform
+        // staging-capable policies.
+        let scale_blocks = spec.max_seq.div_ceil(spec.block_size);
         let staged_cache_bytes = (policy.payload_bytes(spec.head_dim, spec.max_seq)
-            + 2 * (spec.layers * spec.heads * spec.head_dim * 4) as u64)
+            + 2 * (spec.layers * spec.heads * scale_blocks * spec.head_dim * 4) as u64)
             as usize;
         let policy_name = policy.name().to_string();
         let mut cache = KvCacheManager::new(
@@ -447,7 +496,7 @@ impl Engine {
         let isa = cfg.kernel_backend.resolve();
         cache.set_kernel_isa(isa);
         let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
-        let ns = spec.layers * spec.heads * spec.head_dim;
+        let ns = spec.layers * spec.heads * scale_blocks * spec.head_dim;
         let paged = cfg.paged_decode && backend.supports_paged_decode();
         let batching = cfg.decode_batching.resolve() == DecodeBatching::Auto
             && paged
@@ -471,11 +520,15 @@ impl Engine {
             isa.name(),
             if batching { "mq" } else { "off" }
         );
+        let mut prefix = PrefixCache::new(resolve_prefix_budget(cfg.prefix_cache_blocks));
+        // Partial hits require a suffix prefill; backends that can only
+        // run whole-prompt prefill (PJRT) keep exact-match-only reuse.
+        prefix.set_allow_partial(backend.supports_chunked_prefill());
         Engine {
             backend,
             cache,
             staged_kind,
-            prefix: PrefixCache::new(cfg.prefix_cache_blocks),
+            prefix,
             sched: Scheduler::new(),
             batcher: Batcher::new(),
             metrics,
@@ -613,21 +666,57 @@ impl Engine {
                 prefix_cache_blocks: self.prefix.pinned_blocks(),
                 prefix_lookups: pstats.lookups,
                 prefix_hits: pstats.hits,
+                prefix_partial_hits: pstats.partial_hits,
+                prefix_saved_tokens: pstats.saved_tokens,
+                prefix_trie_nodes: self.prefix.trie_nodes() as u64,
                 cache_payload_bytes: self.cache.payload_bytes_by_precision(),
             },
         );
     }
 
-    /// Materialize a prompt in the cache: prefix-cache hit (fork shared
-    /// blocks, no backend compute) or full prefill + cache registration.
-    /// Returns the sequence, the last-position logits, and whether the
-    /// prompt was served from the prefix cache (hits cost the backend
-    /// nothing — callers must not book prefill/recompute work for them).
-    fn materialize_prompt(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>, bool)> {
-        if let Some((seq, logits)) = self.prefix.lookup(&mut self.cache, prompt) {
-            return Ok((seq, logits, true));
-        }
+    /// Materialize a prompt in the cache: full prefix-cache hit (fork
+    /// shared blocks, no backend compute), partial hit (fork the shared
+    /// block-aligned span, suffix-prefill the rest), or full prefill +
+    /// cache registration. Returns the sequence, the prompt's
+    /// last-position logits, and how many prompt tokens the backend
+    /// actually computed (0 for a full hit) — callers book
+    /// prefill/recompute work from that count, never the prompt length.
+    fn materialize_prompt(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>, usize)> {
         let len = prompt.len();
+        match self.prefix.lookup(&mut self.cache, prompt) {
+            Some(PrefixHit::Full { seq, logits }) => return Ok((seq, logits, 0)),
+            Some(PrefixHit::Partial { seq, matched_tokens }) => {
+                // Suffix prefill over the adopted span. Partial hits are
+                // only returned when the backend can chunk (see new()).
+                return match self.prefill_chunks(seq, prompt, matched_tokens) {
+                    Ok(logits) => {
+                        self.prefix.insert(&mut self.cache, seq, prompt, &logits);
+                        Ok((seq, logits, len - matched_tokens))
+                    }
+                    Err(e) => {
+                        self.cache.free(seq);
+                        Err(e)
+                    }
+                };
+            }
+            None => {}
+        }
+        if self.backend.supports_chunked_prefill() {
+            // Chunk-capable backends ALWAYS prefill block-by-block, cache
+            // hit or not, so partial-hit runs are byte-identical to
+            // uncached runs of the same prompt.
+            let seq = self.cache.new_sequence();
+            return match self.prefill_chunks(seq, prompt, 0) {
+                Ok(logits) => {
+                    self.prefix.insert(&mut self.cache, seq, prompt, &logits);
+                    Ok((seq, logits, len))
+                }
+                Err(e) => {
+                    self.cache.free(seq);
+                    Err(e)
+                }
+            };
+        }
         let pre = self.backend.prefill(prompt, len)?;
         let seq = self.cache.new_sequence();
         if let Err(e) = self.cache.set_prefill(seq, &pre.k, &pre.v, len) {
@@ -635,7 +724,37 @@ impl Engine {
             return Err(e);
         }
         self.prefix.insert(&mut self.cache, seq, prompt, &pre.logits);
-        Ok((seq, pre.logits, false))
+        Ok((seq, pre.logits, len))
+    }
+
+    /// Block-sized chunked prefill of `prompt[start..]` into `seq` (rows
+    /// `0..start` must already be cached; `start` must be block-aligned).
+    /// Each chunk attends over the quantized history through a cache
+    /// view, then its quantize-and-append freezes the chunk's own
+    /// per-block scale grids — identical expressions to `set_prefill`.
+    /// Returns the last chunk's last-position logits.
+    fn prefill_chunks(&mut self, seq: SeqId, prompt: &[i32], start: usize) -> Result<Vec<f32>> {
+        let bs = self.cache.config().block_size;
+        debug_assert_eq!(start % bs, 0, "suffix prefill must start on a block boundary");
+        let mut logits = Vec::new();
+        let mut at = start;
+        while at < prompt.len() {
+            let end = prompt.len().min(at + bs);
+            let res = {
+                let view = self.cache.view(seq)?;
+                self.backend.prefill_chunk(
+                    &prompt[at..end],
+                    at,
+                    &view,
+                    self.cfg.attention_kernel,
+                    self.isa,
+                )?
+            };
+            self.cache.append_prefill_chunk(seq, &res.k, &res.v, end - at)?;
+            logits = res.logits;
+            at = end;
+        }
+        Ok(logits)
     }
 
     fn prefill(&mut self, req: Request, events: EventTx) -> Result<()> {
@@ -650,14 +769,14 @@ impl Engine {
             });
             return Ok(());
         }
-        let len = req.prompt.len();
         let prompt = req.prompt.clone();
-        let (seq, logits, hit) = self.materialize_prompt(&prompt)?;
+        let (seq, logits, computed) = self.materialize_prompt(&prompt)?;
         let mut rng = request_rng(self.cfg.seed, &req);
         let token = sample::sample(&logits, &req.sampling, &mut rng);
         let ttft = req.arrival.elapsed().as_secs_f64();
-        // prefill_tokens counts backend prefill work; a prefix hit did none.
-        self.metrics.on_first_token(ttft, if hit { 0 } else { len });
+        // prefill_tokens counts backend prefill work; prefix-cache hits
+        // (full or the matched span of a partial) did none.
+        self.metrics.on_first_token(ttft, computed);
         let _ = events.send(TokenEvent::First { token, ttft });
 
         let admitted_seq = self.sched.next_admission_stamp();
@@ -705,7 +824,7 @@ impl Engine {
     /// discarded (those tokens were already sampled and streamed).
     fn resume(&mut self, mut run: Running) {
         let prompt = run.req.prompt.clone();
-        let (seq, _logits, hit) = match self.materialize_prompt(&prompt) {
+        let (seq, _logits, computed) = match self.materialize_prompt(&prompt) {
             Ok(x) => x,
             Err(e) => {
                 crate::error!("resume prefill failed for {}: {e:#}", run.req.id);
@@ -726,8 +845,9 @@ impl Engine {
             }
         }
         // recompute_tokens = rows actually re-materialized by the backend:
-        // a prefix-hit prompt cost nothing, replayed rows always do.
-        self.metrics.on_resume(if hit { 0 } else { prompt.len() } + replay.len());
+        // prefix-cache-served prompt spans cost nothing, replayed rows
+        // always do.
+        self.metrics.on_resume(computed + replay.len());
         run.seq = seq;
         run.admitted_seq = self.sched.next_admission_stamp();
         self.sched.start(run);
@@ -821,7 +941,10 @@ impl Engine {
         {
             let spec = self.backend.spec();
             let n = spec.layers * spec.heads * spec.max_seq * spec.head_dim;
-            let ns = spec.layers * spec.heads * spec.head_dim;
+            let ns = spec.layers
+                * spec.heads
+                * spec.max_seq.div_ceil(spec.block_size)
+                * spec.head_dim;
             while self.staging.len() < metas.len() {
                 self.staging.push(StagingSlot::new(kind, n, ns));
             }

@@ -31,6 +31,12 @@ pub struct StepGauges {
     /// single source of truth (no parallel bookkeeping to drift).
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
+    /// Block-aligned partial hits (suffix prefill only).
+    pub prefix_partial_hits: u64,
+    /// Prompt tokens served from cached blocks (full + partial hits).
+    pub prefix_saved_tokens: u64,
+    /// Trie nodes (block-aligned cached chunks) currently held.
+    pub prefix_trie_nodes: u64,
     /// Logical payload bytes of live sequences' valid cache rows, broken
     /// down by storage precision (`[fp32, int8, int4]`) — the policy-aware
     /// occupancy view from
@@ -255,6 +261,9 @@ impl Metrics {
             blocks_deduped: m.blocks_deduped,
             prefix_lookups: m.gauges.prefix_lookups,
             prefix_hits: m.gauges.prefix_hits,
+            prefix_partial_hits: m.gauges.prefix_partial_hits,
+            prefix_saved_tokens: m.gauges.prefix_saved_tokens,
+            prefix_trie_nodes: m.gauges.prefix_trie_nodes,
             tokens_per_sec: m.tokens_generated as f64 / uptime.max(1e-9),
             ttft_p50: m.ttft.quantile(0.5),
             ttft_p99: m.ttft.quantile(0.99),
@@ -310,6 +319,12 @@ pub struct MetricsSnapshot {
     pub blocks_deduped: u64,
     pub prefix_lookups: u64,
     pub prefix_hits: u64,
+    /// Block-aligned partial prefix-cache hits (suffix prefill only).
+    pub prefix_partial_hits: u64,
+    /// Prompt tokens served from cached prefix blocks.
+    pub prefix_saved_tokens: u64,
+    /// Current prefix-trie node count.
+    pub prefix_trie_nodes: u64,
     pub tokens_per_sec: f64,
     pub ttft_p50: f64,
     pub ttft_p99: f64,
@@ -377,6 +392,9 @@ impl MetricsSnapshot {
             ("decode_ns_per_token", self.decode_ns_per_token().into()),
             ("prefix_lookups", (self.prefix_lookups as usize).into()),
             ("prefix_hits", (self.prefix_hits as usize).into()),
+            ("prefix_partial_hits", (self.prefix_partial_hits as usize).into()),
+            ("prefix_saved_tokens", (self.prefix_saved_tokens as usize).into()),
+            ("prefix_trie_nodes", (self.prefix_trie_nodes as usize).into()),
             ("prefix_hit_rate", self.prefix_hit_rate().into()),
             ("tokens_per_sec", self.tokens_per_sec.into()),
             ("ttft_p50_s", self.ttft_p50.into()),
@@ -437,7 +455,14 @@ mod tests {
         // cumulative stats are the single source of truth).
         m.on_step(
             0.01,
-            StepGauges { prefix_lookups: 3, prefix_hits: 2, ..Default::default() },
+            StepGauges {
+                prefix_lookups: 3,
+                prefix_hits: 2,
+                prefix_partial_hits: 1,
+                prefix_saved_tokens: 24,
+                prefix_trie_nodes: 5,
+                ..Default::default()
+            },
         );
         let s = m.snapshot();
         assert_eq!(s.preemptions, 2);
@@ -445,7 +470,14 @@ mod tests {
         assert_eq!(s.recompute_tokens, 12);
         assert_eq!(s.prefix_lookups, 3);
         assert_eq!(s.prefix_hits, 2);
+        assert_eq!(s.prefix_partial_hits, 1);
+        assert_eq!(s.prefix_saved_tokens, 24);
+        assert_eq!(s.prefix_trie_nodes, 5);
         assert!((s.prefix_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let j = s.to_json();
+        assert_eq!(j.get("prefix_partial_hits").as_usize(), Some(1));
+        assert_eq!(j.get("prefix_saved_tokens").as_usize(), Some(24));
+        assert_eq!(j.get("prefix_trie_nodes").as_usize(), Some(5));
     }
 
     #[test]

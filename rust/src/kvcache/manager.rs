@@ -2,9 +2,13 @@
 //!
 //! Owns one [`BlockPool`] shared by all sequences and all layers. Each
 //! sequence has 2·L block tables (K and V per layer) plus frozen
-//! per-channel scales computed at prefill time (one f32 per layer × head
-//! × channel × {K,V}; FP32 streams carry them too — on the same grid the
-//! legacy paths froze — but never read them).
+//! per-channel scales computed at prefill time — **per block**: one f32
+//! per layer × head × channel × {K,V} × block, frozen over each block's
+//! own rows (FP32 streams carry them too — on the same grid the
+//! integer paths freeze — but never read them). Scales travel with
+//! blocks: a block's payload plus its scale grid is self-contained, which
+//! is what makes token-aligned prefix sharing across *different* prompts
+//! bit-identical by construction (see [`super::prefix`]).
 //!
 //! **Quantization policy.** Storage precision is a per-cache
 //! [`QuantPolicy`] mapping `(layer, head, K|V side) → Precision`; every
@@ -100,6 +104,12 @@ impl CacheConfig {
     pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
         BlockTable::blocks_for(tokens, self.block_size) * 2 * self.layers
     }
+
+    /// Scale-grid slots per (layer, K|V) stream in the dense staged ABI:
+    /// one `heads·head_dim` grid per block position up to `max_seq`.
+    pub fn max_blocks_per_stream(&self) -> usize {
+        self.max_seq.div_ceil(self.block_size)
+    }
 }
 
 /// Per-sequence cache state.
@@ -108,7 +118,12 @@ pub struct SequenceCache {
     pub len: usize,
     /// tables[layer][0]=K, tables[layer][1]=V.
     tables: Vec<[BlockTable; 2]>,
-    /// Frozen per-channel scales, `[layer][kv][heads*head_dim]`.
+    /// Frozen per-channel, per-block scales:
+    /// `[layer][kv][block·heads·head_dim + head·head_dim + ch]` — one
+    /// `heads·head_dim` grid per allocated block, frozen over that
+    /// block's own rows (eq. 6 at block granularity). Grows in lockstep
+    /// with the block tables; appended decode rows at a block boundary
+    /// inherit the previous block's grid.
     scales: Vec<[Vec<f32>; 2]>,
 }
 
@@ -123,6 +138,11 @@ pub struct KvCacheManager {
     token_bytes_by_precision: [u64; 3],
     pool: BlockPool,
     seqs: HashMap<SeqId, SequenceCache>,
+    /// External holds per block (prefix-cache trie pins): references the
+    /// pool refcounts carry beyond the live block tables. Lets
+    /// [`Self::assert_refcounts_consistent`] verify exact accounting
+    /// while the trie holds blocks that belong to no sequence.
+    extern_pins: Vec<u32>,
     next_id: SeqId,
     /// Worker count for the batched prefill-quantize and gather paths
     /// (1 = serial; the default). Parallelism never changes output bits.
@@ -163,6 +183,7 @@ impl KvCacheManager {
             layouts,
             token_bytes_by_precision,
             seqs: HashMap::new(),
+            extern_pins: vec![0; cfg.num_blocks],
             next_id: 1,
             threads: 1,
             par_min: PAR_MIN_ELEMS,
@@ -285,12 +306,11 @@ impl KvCacheManager {
     pub fn new_sequence(&mut self) -> SeqId {
         let id = self.next_id;
         self.next_id += 1;
-        let hd = self.cfg.heads * self.cfg.head_dim;
         let seq = SequenceCache {
             id,
             len: 0,
             tables: (0..self.cfg.layers).map(|_| [BlockTable::new(), BlockTable::new()]).collect(),
-            scales: (0..self.cfg.layers).map(|_| [vec![0.0; hd], vec![0.0; hd]]).collect(),
+            scales: (0..self.cfg.layers).map(|_| [Vec::new(), Vec::new()]).collect(),
         };
         self.seqs.insert(id, seq);
         id
@@ -387,11 +407,12 @@ impl KvCacheManager {
             .count()
     }
 
-    /// Verify pool refcounts exactly match the live block tables: every
-    /// used block is reachable, every reference is counted once, and
-    /// nothing is leaked. O(blocks); debug/test aid, also run on drop.
+    /// Verify pool refcounts exactly match the live block tables plus
+    /// external pins: every used block is reachable, every reference is
+    /// counted once, and nothing is leaked. O(blocks); debug/test aid,
+    /// also run on drop.
     pub fn assert_refcounts_consistent(&self) {
-        let mut counted = vec![0u32; self.cfg.num_blocks];
+        let mut counted = self.extern_pins.clone();
         for seq in self.seqs.values() {
             for pair in &seq.tables {
                 for t in pair {
@@ -405,12 +426,90 @@ impl KvCacheManager {
             let rc = self.pool.refcount(i as BlockId);
             assert_eq!(
                 c, rc,
-                "block {i}: {rc} pool refs vs {c} table refs (leak or double-hold)"
+                "block {i}: {rc} pool refs vs {c} table+pin refs (leak or double-hold)"
             );
         }
     }
 
-    /// Frozen scales of one (layer, K|V) stream, length heads·head_dim.
+    /// Take an external hold on a block (prefix-cache trie ownership —
+    /// the block belongs to no sequence while pinned). Balanced by
+    /// [`Self::unpin_block`].
+    pub fn pin_block(&mut self, id: BlockId) {
+        self.pool.retain(id);
+        self.extern_pins[id as usize] += 1;
+    }
+
+    /// Release an external hold taken by [`Self::pin_block`].
+    pub fn unpin_block(&mut self, id: BlockId) {
+        assert!(self.extern_pins[id as usize] > 0, "unpin of unpinned block {id}");
+        self.extern_pins[id as usize] -= 1;
+        self.pool.release(id);
+    }
+
+    /// Pool refcount of a block (pins + table holds).
+    pub fn block_refcount(&self, id: BlockId) -> u32 {
+        self.pool.refcount(id)
+    }
+
+    /// Ordered blocks of one (layer, K|V) stream of a sequence.
+    pub fn seq_stream_blocks(&self, id: SeqId, layer: usize, kv: usize) -> Result<&[BlockId]> {
+        Ok(self
+            .seqs
+            .get(&id)
+            .ok_or_else(|| anyhow!("unknown seq {id}"))?
+            .tables[layer][kv]
+            .blocks())
+    }
+
+    /// Build a sequence from externally-held blocks (prefix-cache
+    /// adoption): per (layer, K|V) an ordered block list plus the
+    /// matching per-block scale grids, exactly as
+    /// [`SequenceCache::scales`] lays them out. Every block is retained —
+    /// the caller keeps its own holds (trie pins) and the new sequence
+    /// shares the payload copy-on-write, so a later append COWs the tail
+    /// instead of mutating the cached bytes.
+    pub fn adopt_sequence(
+        &mut self,
+        tables: Vec<[Vec<BlockId>; 2]>,
+        scales: Vec<[Vec<f32>; 2]>,
+        len: usize,
+    ) -> Result<SeqId> {
+        let (l, hd, bs) = (self.cfg.layers, self.cfg.heads * self.cfg.head_dim, self.cfg.block_size);
+        if tables.len() != l || scales.len() != l {
+            bail!("adopt_sequence: {} layer tables for {l}-layer cache", tables.len());
+        }
+        let nblocks = BlockTable::blocks_for(len, bs);
+        for (pair_t, pair_s) in tables.iter().zip(&scales) {
+            for kv in 0..2 {
+                if pair_t[kv].len() != nblocks || pair_s[kv].len() != nblocks * hd {
+                    bail!(
+                        "adopt_sequence: stream has {} blocks / {} scales for len {len}",
+                        pair_t[kv].len(),
+                        pair_s[kv].len()
+                    );
+                }
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut seq_tables = Vec::with_capacity(l);
+        for pair in &tables {
+            let mut bt = [BlockTable::new(), BlockTable::new()];
+            for kv in 0..2 {
+                for &b in &pair[kv] {
+                    self.pool.retain(b);
+                    bt[kv].push(b);
+                }
+            }
+            seq_tables.push(bt);
+        }
+        self.seqs.insert(id, SequenceCache { id, len, tables: seq_tables, scales });
+        Ok(id)
+    }
+
+    /// Frozen per-block scales of one (layer, K|V) stream, length
+    /// `allocated_blocks · heads · head_dim` (block-major; block `b`'s
+    /// grid at `b·H·d..(b+1)·H·d`).
     pub fn scales(&self, id: SeqId, layer: usize, kv: usize) -> Result<&[f32]> {
         Ok(&self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?.scales[layer][kv])
     }
@@ -444,11 +543,16 @@ impl KvCacheManager {
                 bail!("set_prefill on non-empty sequence {id}");
             }
         }
-        // Freeze scales: per (layer, kv, head, channel) abs-max over rows
-        // 0..len, divided by each head codec's symmetric bound (127 for
-        // FP32/INT8, 7 for INT4 — `Codec::qmax` owns the grid), inflated
-        // by the margin. One worker per (layer, K|V) stream.
+        // Freeze scales per block: for every block, per (layer, kv, head,
+        // channel) abs-max over the block's OWN rows, divided by each head
+        // codec's symmetric bound (127 for FP32/INT8, 7 for INT4 —
+        // `Codec::qmax` owns the grid), inflated by the margin. One worker
+        // per (layer, K|V) stream. Identical expressions to the chunked
+        // [`Self::append_prefill_chunk`] freeze, so a whole-prompt prefill
+        // and a block-chunked one store bit-identical grids.
         let margin = self.cfg.scale_margin;
+        let bs = self.cfg.block_size;
+        let nblocks = BlockTable::blocks_for(len, bs);
         let threads = self.threads_for(2 * l * h * d * len);
         let streams: Vec<(usize, usize)> =
             (0..l).flat_map(|layer| [(layer, 0), (layer, 1)]).collect();
@@ -456,19 +560,22 @@ impl KvCacheManager {
         let frozen: Vec<Vec<f32>> = parallel::parallel_map(&streams, threads, |&(layer, kv)| {
             let data = if kv == 0 { k } else { v };
             let layout = &layouts[layer][kv];
-            let mut sc = vec![0.0f32; h * d];
-            for head in 0..h {
-                let qdiv = layout.head_codec(head).qmax();
-                let base = ((layer * h) + head) * s * d;
-                for ch in 0..d {
-                    let mut m = 0.0f32;
-                    for t in 0..len {
-                        let val = data[base + t * d + ch].abs();
-                        if val > m {
-                            m = val;
+            let mut sc = vec![0.0f32; nblocks * h * d];
+            for bi in 0..nblocks {
+                let rows_here = bs.min(len - bi * bs);
+                for head in 0..h {
+                    let qdiv = layout.head_codec(head).qmax();
+                    let base = ((layer * h) + head) * s * d;
+                    for ch in 0..d {
+                        let mut m = 0.0f32;
+                        for r in 0..rows_here {
+                            let val = data[base + (bi * bs + r) * d + ch].abs();
+                            if val > m {
+                                m = val;
+                            }
                         }
+                        sc[bi * h * d + head * d + ch] = m * margin / qdiv;
                     }
-                    sc[head * d + ch] = m * margin / qdiv;
                 }
             }
             sc
@@ -480,10 +587,9 @@ impl KvCacheManager {
             }
         }
         // Allocate blocks and write the rows, one worker per block.
-        let need = BlockTable::blocks_for(len, self.cfg.block_size);
         for layer in 0..l {
             for kv in 0..2 {
-                for _ in 0..need {
+                for _ in 0..nblocks {
                     let b = self.pool.alloc()?;
                     self.seqs.get_mut(&id).unwrap().tables[layer][kv].push(b);
                 }
@@ -526,10 +632,11 @@ impl KvCacheManager {
                         // SAFETY: distinct block ids → disjoint payloads.
                         let blk =
                             unsafe { std::slice::from_raw_parts_mut(ptrs[bi].add(0), payload) };
+                        let block_sc = &scales[bi * h * d..(bi + 1) * h * d];
                         for head in 0..h {
                             let codec = layout.head_codec(head);
                             let base = ((layer * h) + head) * s * d;
-                            let sc = &scales[head * d..(head + 1) * d];
+                            let sc = &block_sc[head * d..(head + 1) * d];
                             for r in 0..rows_here {
                                 let pos = bi * bs + r;
                                 let src = &data[base + pos * d..base + (pos + 1) * d];
@@ -540,6 +647,92 @@ impl KvCacheManager {
                 });
             }
         }
+    }
+
+    /// Append one prefill chunk of at most `block_size` rows starting at
+    /// the sequence's current (block-aligned) length: freezes the new
+    /// block's scale grid over the chunk's own rows and encodes them —
+    /// the chunked twin of [`Self::set_prefill`], used by the engine's
+    /// block-granular prefill so a suffix prefill after a partial prefix
+    /// hit stores exactly the bytes a from-scratch prefill would.
+    ///
+    /// `k`/`v` are chunk tensors, layout `(L, H, C, d)` flattened with the
+    /// first `chunk_len` rows valid (C inferred from the tensor size).
+    /// Atomic: allocates 2·L blocks up front or fails without mutating
+    /// the sequence.
+    pub fn append_prefill_chunk(
+        &mut self,
+        id: SeqId,
+        k: &[f32],
+        v: &[f32],
+        chunk_len: usize,
+    ) -> Result<()> {
+        let (l, h, d, bs) =
+            (self.cfg.layers, self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
+        if k.len() % (l * h * d) != 0 || v.len() != k.len() {
+            bail!("chunk tensor size mismatch: {} not a multiple of {}", k.len(), l * h * d);
+        }
+        let c = k.len() / (l * h * d); // chunk row stride
+        if chunk_len == 0 || chunk_len > c || chunk_len > bs {
+            bail!("chunk len {chunk_len} out of range (stride {c}, block_size {bs})");
+        }
+        let start = {
+            let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
+            if seq.len % bs != 0 {
+                bail!("append_prefill_chunk at non-aligned len {}", seq.len);
+            }
+            if seq.len + chunk_len > self.cfg.max_seq {
+                bail!("chunk overflows max_seq {}", self.cfg.max_seq);
+            }
+            seq.len
+        };
+        if 2 * l > self.pool.free_blocks() {
+            bail!(
+                "block pool exhausted: chunk needs {} blocks, {} free",
+                2 * l,
+                self.pool.free_blocks()
+            );
+        }
+        let margin = self.cfg.scale_margin;
+        for layer in 0..l {
+            for (kv, data) in [k, v].into_iter().enumerate() {
+                let layout = self.layouts[layer][kv].clone();
+                // Freeze this block's grid over the chunk rows — the same
+                // expressions as the whole-prompt freeze restricted to one
+                // block, so both paths store identical grids.
+                let mut sc = vec![0.0f32; h * d];
+                for head in 0..h {
+                    let qdiv = layout.head_codec(head).qmax();
+                    let base = ((layer * h) + head) * c * d;
+                    for ch in 0..d {
+                        let mut m = 0.0f32;
+                        for r in 0..chunk_len {
+                            let val = data[base + r * d + ch].abs();
+                            if val > m {
+                                m = val;
+                            }
+                        }
+                        sc[head * d + ch] = m * margin / qdiv;
+                    }
+                }
+                let b = self.pool.alloc()?;
+                let blk = self.pool.block_mut_raw(b);
+                for head in 0..h {
+                    let codec = layout.head_codec(head);
+                    let base = ((layer * h) + head) * c * d;
+                    let hsc = &sc[head * d..(head + 1) * d];
+                    for r in 0..chunk_len {
+                        let src = &data[base + r * d..base + (r + 1) * d];
+                        codec.encode_row(self.isa, src, hsc, &mut blk[layout.row_range(head, r)]);
+                    }
+                }
+                let seq = self.seqs.get_mut(&id).unwrap();
+                seq.tables[layer][kv].push(b);
+                seq.scales[layer][kv].extend_from_slice(&sc);
+            }
+        }
+        self.seqs.get_mut(&id).unwrap().len = start + chunk_len;
+        Ok(())
     }
 
     /// Append one decode-step K/V row (layout `(L, H, d)` flattened).
@@ -567,10 +760,25 @@ impl KvCacheManager {
             );
         }
         if need_block {
+            // Opening a block mid-generation: inherit the previous
+            // block's frozen grid (deterministic — no decode-time rows
+            // are ever consulted, so replay after preemption refreezes
+            // identically). The very first block of a never-prefilled
+            // sequence gets a zero grid, matching the legacy
+            // initial-scale state.
+            let hd = h * d;
             for layer in 0..l {
                 for kv in 0..2 {
                     let b = self.pool.alloc()?;
-                    self.seqs.get_mut(&id).unwrap().tables[layer][kv].push(b);
+                    let seq = self.seqs.get_mut(&id).unwrap();
+                    seq.tables[layer][kv].push(b);
+                    let sc = &mut seq.scales[layer][kv];
+                    if sc.is_empty() {
+                        sc.extend(std::iter::repeat(0.0).take(hd));
+                    } else {
+                        let tail = sc[sc.len() - hd..].to_vec();
+                        sc.extend_from_slice(&tail);
+                    }
                 }
             }
         }
@@ -608,7 +816,10 @@ impl KvCacheManager {
         let (h, d, bs) = (self.cfg.heads, self.cfg.head_dim, self.cfg.block_size);
         let seq = self.seqs.get(&id).ok_or_else(|| anyhow!("unknown seq {id}"))?;
         let (block, in_row) = seq.tables[layer][kv].locate(pos, bs);
-        let scales = &seq.scales[layer][kv];
+        // Clamp into the row's own block grid (the last block's — decode
+        // appends only ever write the tail).
+        let bi = pos / bs;
+        let scales = &seq.scales[layer][kv][bi * h * d..(bi + 1) * h * d];
         let layout = &self.layouts[layer][kv];
         let blk = self.pool.block_mut_raw(block);
         for head in 0..h {
@@ -784,11 +995,17 @@ impl KvCacheManager {
                         }
                         let rows = bs.min(seq.len - bi * bs);
                         let block = table.blocks()[bi];
+                        // Per-block scale grids: members join on bit-equal
+                        // scales of THIS block only — a diverged tail no
+                        // longer un-shares the whole stream's prefix.
+                        let hd = self.cfg.heads * self.cfg.head_dim;
+                        let sc = &seq.scales[layer][kv][bi * hd..(bi + 1) * hd];
                         let joined = out[first_at_bi..].iter_mut().find(|g| {
                             g.block == block
                                 && g.rows == rows
                                 && seqs[g.members[0]].scales[layer][kv]
-                                    == seq.scales[layer][kv]
+                                    [bi * hd..(bi + 1) * hd]
+                                    == *sc
                         });
                         match joined {
                             Some(g) => {
@@ -849,7 +1066,9 @@ impl<'a> CacheView<'a> {
         self.cfg.block_size
     }
 
-    /// Frozen scales of one (layer, K|V) stream, length `heads·head_dim`.
+    /// Frozen per-block scales of one (layer, K|V) stream, block-major
+    /// (`allocated_blocks · heads · head_dim`; see
+    /// [`KvCacheManager::scales`]).
     pub fn scales(&self, layer: usize, kv: usize) -> &'a [f32] {
         &self.seq.scales[layer][kv]
     }
@@ -866,6 +1085,7 @@ impl<'a> CacheView<'a> {
             layout: &self.layouts[layer][kv],
             len: self.seq.len,
             block_size: self.cfg.block_size,
+            heads: self.cfg.heads,
             head_dim: self.cfg.head_dim,
         }
     }
@@ -883,9 +1103,13 @@ impl<'a> CacheView<'a> {
     /// memory-footprint accounting ([`QuantPolicy::scale_overhead_bytes`])
     /// uses the opposite convention (fp32 streams store no *useful*
     /// scales); the two measure different things — traffic vs footprint.
+    ///
+    /// With per-block grids the scale traffic is one `H·d` f32 grid per
+    /// *touched block* per stream — still O(len), never O(max_seq).
     pub fn attention_bytes(&self) -> usize {
         let c = self.cfg;
-        let scale_bytes = c.heads * c.head_dim * 4;
+        let nblocks = BlockTable::blocks_for(self.seq.len, c.block_size);
+        let scale_bytes = nblocks * c.heads * c.head_dim * 4;
         self.layouts
             .iter()
             .flat_map(|pair| pair.iter())
@@ -906,6 +1130,7 @@ pub struct StreamView<'a> {
     layout: &'a StreamLayout,
     len: usize,
     block_size: usize,
+    heads: usize,
     head_dim: usize,
 }
 
@@ -929,9 +1154,12 @@ impl<'a> StreamView<'a> {
         self.block_size.min(self.len.saturating_sub(bi * self.block_size))
     }
 
-    /// Frozen scales of one head (length `head_dim`).
-    pub fn head_scales(&self, head: usize) -> &'a [f32] {
-        &self.scales[head * self.head_dim..(head + 1) * self.head_dim]
+    /// Frozen scales of one head in block `bi` (length `head_dim`) —
+    /// the grid block `bi`'s rows were encoded with.
+    pub fn head_scales(&self, bi: usize, head: usize) -> &'a [f32] {
+        let hd = self.heads * self.head_dim;
+        let base = bi * hd + head * self.head_dim;
+        &self.scales[base..base + self.head_dim]
     }
 
     /// This head's storage codec under the cache's policy.
@@ -1051,12 +1279,21 @@ impl<'a> WaveView<'a> {
         &self.groups[layer][kv]
     }
 
-    /// Frozen scales of one head of one member's (layer, K|V) stream
-    /// (length `head_dim`). For dequantizing a [`WaveGroup`], pass any
-    /// member of the group — the grouping guarantees they are bit-equal.
-    pub fn head_scales(&self, m: usize, layer: usize, kv: usize, head: usize) -> &'a [f32] {
+    /// Frozen scales of one head of one member's (layer, K|V) stream in
+    /// block `bi` (length `head_dim`). For dequantizing a [`WaveGroup`],
+    /// pass any member of the group and the group's `bi` — the grouping
+    /// guarantees the block grids are bit-equal across members.
+    pub fn head_scales(
+        &self,
+        m: usize,
+        layer: usize,
+        kv: usize,
+        bi: usize,
+        head: usize,
+    ) -> &'a [f32] {
         let d = self.cfg.head_dim;
-        &self.seqs[m].scales[layer][kv][head * d..(head + 1) * d]
+        let base = bi * self.cfg.heads * d + head * d;
+        &self.seqs[m].scales[layer][kv][base..base + d]
     }
 
     /// Storage codec of one head of a (layer, K|V) stream — policy
@@ -1080,12 +1317,13 @@ impl<'a> WaveView<'a> {
     }
 
     /// Payload + scale bytes one batched attention pass over this wave
-    /// reads, with dedup amortization: each group's payload is counted
-    /// once regardless of member count, and each distinct scales slice
-    /// is counted once per stream. For a wave of width 1 this equals
-    /// [`CacheView::attention_bytes`]; for shared-prefix waves it is
-    /// smaller than the sum of per-member views — the bandwidth saving
-    /// surfaced at `GET /metrics` as `cache_bytes_read`.
+    /// reads, with dedup amortization: each group's payload AND its
+    /// block scale grid are counted once regardless of member count (the
+    /// grouping guarantees bit-equal grids within a group). For a wave of
+    /// width 1 this equals [`CacheView::attention_bytes`]; for
+    /// shared-prefix waves it is smaller than the sum of per-member views
+    /// — the bandwidth saving surfaced at `GET /metrics` as
+    /// `cache_bytes_read`.
     pub fn attention_bytes(&self) -> usize {
         let scale_bytes = self.cfg.heads * self.cfg.head_dim * 4;
         let mut total = 0usize;
@@ -1094,18 +1332,8 @@ impl<'a> WaveView<'a> {
                 let layout = &self.layouts[layer][kv];
                 total += self.groups[layer][kv]
                     .iter()
-                    .map(|g| layout.payload_bytes(g.rows))
+                    .map(|g| layout.payload_bytes(g.rows) + scale_bytes)
                     .sum::<usize>();
-                // Distinct scale slices across the wave for this stream
-                // (wave widths are small; linear compare).
-                let mut distinct: Vec<&[f32]> = Vec::new();
-                for s in &self.seqs {
-                    let sc: &[f32] = &s.scales[layer][kv];
-                    if !distinct.iter().any(|&d| d == sc) {
-                        distinct.push(sc);
-                    }
-                }
-                total += distinct.len() * scale_bytes;
             }
         }
         total
@@ -1186,12 +1414,15 @@ mod tests {
         let n = m.gather_i8(id, 1, 0, &mut staging).unwrap();
         assert_eq!(n, len);
         let scales = m.scales(id, 1, 0).unwrap().to_vec();
-        // Dequantize and compare against the original K rows of layer 1.
+        let hd = c.heads * c.head_dim;
+        assert_eq!(scales.len(), len.div_ceil(c.block_size) * hd, "one grid per block");
+        // Dequantize and compare against the original K rows of layer 1,
+        // each row through its own block's grid.
         for head in 0..c.heads {
             for t in 0..len {
                 for ch in 0..c.head_dim {
                     let q = staging[(head * c.max_seq + t) * c.head_dim + ch];
-                    let s = scales[head * c.head_dim + ch];
+                    let s = scales[(t / c.block_size) * hd + head * c.head_dim + ch];
                     let got = q as f32 * s;
                     let want = k[((1 * c.heads + head) * c.max_seq + t) * c.head_dim + ch];
                     assert!(
@@ -1223,10 +1454,12 @@ mod tests {
         let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
         m.gather_i8(id, 0, 1, &mut staging).unwrap(); // layer 0, V
         let scales = m.scales(id, 0, 1).unwrap();
+        // Row 4 opened block 1, whose grid inherits block 0's frozen scales.
         for head in 0..c.heads {
             for ch in 0..c.head_dim {
                 let q = staging[(head * c.max_seq + 4) * c.head_dim + ch];
-                let s = scales[head * c.head_dim + ch];
+                let s = scales[c.heads * c.head_dim + head * c.head_dim + ch];
+                assert_eq!(s, scales[head * c.head_dim + ch], "inherited grid");
                 let want = v_new[head * c.head_dim + ch]; // layer 0
                 assert!((q as f32 * s - want).abs() <= s / 2.0 + 1e-6);
             }
@@ -1443,7 +1676,7 @@ mod tests {
         for (gi, g) in w.groups(0, 0).iter().enumerate() {
             for h in 0..c.heads {
                 assert_eq!(w.head_rows_raw(0, 0, g, h), st.head_rows_raw(gi, h));
-                assert_eq!(w.head_scales(0, 0, 0, h), st.head_scales(h));
+                assert_eq!(w.head_scales(0, 0, 0, g.bi, h), st.head_scales(gi, h));
                 assert_eq!(w.head_codec(0, 0, h).name(), st.head_codec(h).name());
             }
         }
@@ -1606,11 +1839,16 @@ mod tests {
         let (k, v) = prefill_tensors(&c, 4, 33);
         m.set_prefill(id, &k, &v, 4).unwrap();
         let per_row = 2 * c.layers * c.heads * c.head_dim; // K+V payload/row (i8)
-        let scale_bytes = 2 * c.layers * c.heads * c.head_dim * 4;
-        assert_eq!(m.view(id).unwrap().attention_bytes(), 4 * per_row + scale_bytes);
+        // Per-block grids: one H·d f32 grid per touched block per stream.
+        let per_block_scales = 2 * c.layers * c.heads * c.head_dim * 4;
+        assert_eq!(m.view(id).unwrap().attention_bytes(), 4 * per_row + per_block_scales);
         let hd = c.layers * c.heads * c.head_dim;
         m.append_row(id, &vec![0.1; hd], &vec![0.1; hd]).unwrap();
-        assert_eq!(m.view(id).unwrap().attention_bytes(), 5 * per_row + scale_bytes);
+        // The append opened block 1: scale traffic doubles with it.
+        assert_eq!(
+            m.view(id).unwrap().attention_bytes(),
+            5 * per_row + 2 * per_block_scales
+        );
     }
 
     #[test]
@@ -1624,13 +1862,10 @@ mod tests {
         m.set_prefill(id, &k, &v, len).unwrap();
         // Append one row (exercises the nibble-packed writer mid-block).
         let hd = c.layers * c.heads * c.head_dim;
-        let mut rng = Rng::new(35);
-        let mut k_new = vec![0.0f32; hd];
-        let mut v_new = vec![0.0f32; hd];
-        // Keep the appended row well inside every frozen per-channel range
-        // so the tight (un-clamped) bound applies below.
-        rng.fill_uniform(&mut k_new, -0.05, 0.05);
-        rng.fill_uniform(&mut v_new, -0.05, 0.05);
+        // Zero rows quantize exactly on any grid, so the tight (un-clamped)
+        // bound below applies even to the tail block's narrower frozen range.
+        let k_new = vec![0.0f32; hd];
+        let v_new = vec![0.0f32; hd];
         m.append_row(id, &k_new, &v_new).unwrap();
 
         let view = m.view(id).unwrap();
@@ -1642,7 +1877,7 @@ mod tests {
             let rows = stream.rows_in_block(bi);
             for head in 0..c.heads {
                 let slab = stream.head_rows_i4(bi, head);
-                let sc = stream.head_scales(head);
+                let sc = stream.head_scales(bi, head);
                 for r in 0..rows {
                     let t = t0 + r;
                     dequantize4_row_into(
@@ -1727,11 +1962,12 @@ mod tests {
         let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
         m.gather_i8(id, 0, 0, &mut staging).unwrap();
         let ks = m.scales(id, 0, 0).unwrap().to_vec();
+        let grid = c.heads * c.head_dim;
         for head in 0..c.heads {
             for t in 0..len {
                 for ch in 0..c.head_dim {
                     let q = staging[(head * c.max_seq + t) * c.head_dim + ch];
-                    let s = ks[head * c.head_dim + ch];
+                    let s = ks[(t / c.block_size) * grid + head * c.head_dim + ch];
                     let want = k[((head) * c.max_seq + t) * c.head_dim + ch]; // layer 0
                     assert!((q as f32 * s - want).abs() <= s / 2.0 + 1e-6);
                 }
@@ -1745,7 +1981,7 @@ mod tests {
         let stream = view.stream(0, 1);
         assert_eq!(stream.head_codec(0).name(), "int4");
         let mut row = vec![0.0f32; c.head_dim];
-        let sc = stream.head_scales(0);
+        let sc = stream.head_scales(0, 0);
         let slab = stream.head_rows_i4(0, 0);
         dequantize4_row_into(&slab[..c.head_dim / 2], sc, &mut row);
         for ch in 0..c.head_dim {
@@ -1755,7 +1991,9 @@ mod tests {
         // Byte accounting: K rows cost d bytes, V rows d/2, per head.
         let view = m.view(id).unwrap();
         let payload = 2 * c.heads * len * c.head_dim + 2 * c.heads * len * (c.head_dim / 2);
-        let scale_bytes = 2 * c.layers * c.heads * c.head_dim * 4;
+        // len 6 spans 2 blocks: one H·d grid per touched block per stream.
+        let nblocks = len.div_ceil(c.block_size);
+        let scale_bytes = 2 * c.layers * nblocks * c.heads * c.head_dim * 4;
         assert_eq!(view.attention_bytes(), payload + scale_bytes);
         let by = m.payload_bytes_by_precision();
         assert_eq!(by[Precision::Int8 as usize], (2 * c.heads * len * c.head_dim) as u64);
@@ -1807,5 +2045,177 @@ mod tests {
         m.set_prefill(id, &k, &v, 4).unwrap();
         let hd = c.layers * c.heads * c.head_dim;
         assert!(m.append_row(id, &vec![0.0; hd], &vec![0.0; hd]).is_err());
+    }
+
+    #[test]
+    fn per_block_scales_freeze_on_each_blocks_rows() {
+        // Two full blocks: each block's grid is the abs-max of its *own*
+        // rows over the /127 grid, not one prompt-wide freeze.
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let id = m.new_sequence();
+        let len = 8;
+        let (k, v) = prefill_tensors(&c, len, 61);
+        m.set_prefill(id, &k, &v, len).unwrap();
+        let sc = m.scales(id, 0, 0).unwrap();
+        let grid = c.heads * c.head_dim;
+        assert_eq!(sc.len(), 2 * grid);
+        for head in 0..c.heads {
+            for ch in 0..c.head_dim {
+                for bi in 0..2 {
+                    let mut mx = 0.0f32;
+                    for t in bi * c.block_size..(bi + 1) * c.block_size {
+                        // layer 0, K side
+                        mx = mx.max(k[(head * c.max_seq + t) * c.head_dim + ch].abs());
+                    }
+                    let s = sc[bi * grid + head * c.head_dim + ch];
+                    assert!(
+                        (s * 127.0 - mx).abs() <= 1e-5,
+                        "block {bi} grid must be its own rows' abs-max"
+                    );
+                }
+                // Distinct random rows ⇒ distinct grids: the refactor must
+                // not smear one prompt-wide scale across blocks.
+                assert_ne!(sc[head * c.head_dim + ch], sc[grid + head * c.head_dim + ch]);
+            }
+        }
+        let _ = v;
+    }
+
+    #[test]
+    fn boundary_append_inherits_last_block_grid() {
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 8, 63); // two full blocks
+        m.set_prefill(id, &k, &v, 8).unwrap();
+        let grid = c.heads * c.head_dim;
+        let before = m.scales(id, 1, 1).unwrap().to_vec();
+        assert_eq!(before.len(), 2 * grid);
+        let hd = c.layers * c.heads * c.head_dim;
+        m.append_row(id, &vec![0.2; hd], &vec![0.2; hd]).unwrap();
+        let after = m.scales(id, 1, 1).unwrap();
+        // The boundary append opened block 2 with block 1's frozen grid.
+        assert_eq!(after.len(), 3 * grid);
+        assert_eq!(&after[..2 * grid], &before[..]);
+        assert_eq!(&after[2 * grid..], &before[grid..]);
+    }
+
+    #[test]
+    fn pin_adopt_sequence_shares_blocks_and_keeps_refcounts() {
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let a = m.new_sequence();
+        let len = 6;
+        let (k, v) = prefill_tensors(&c, len, 62);
+        m.set_prefill(a, &k, &v, len).unwrap();
+
+        // Externally pin every block of `a` (what the prefix trie does on
+        // insert), snapshot tables + per-block scales, then free the
+        // sequence: the pins keep the payload alive.
+        let mut tables = Vec::new();
+        let mut scales = Vec::new();
+        for layer in 0..c.layers {
+            let mut t2 = [Vec::new(), Vec::new()];
+            let mut s2 = [Vec::new(), Vec::new()];
+            for kv in 0..2 {
+                let blocks = m.seq_stream_blocks(a, layer, kv).unwrap().to_vec();
+                for &b in &blocks {
+                    m.pin_block(b);
+                }
+                s2[kv] = m.scales(a, layer, kv).unwrap().to_vec();
+                t2[kv] = blocks;
+            }
+            tables.push(t2);
+            scales.push(s2);
+        }
+        m.assert_refcounts_consistent();
+        let used = m.used_blocks();
+        m.free(a);
+        assert_eq!(m.used_blocks(), used, "pins keep blocks resident");
+        m.assert_refcounts_consistent();
+
+        // Adopt the pinned blocks as a new sequence (a partial-hit fork):
+        // gathers must see the original bytes through block 0's grid.
+        let b = m.adopt_sequence(tables.clone(), scales.clone(), len).unwrap();
+        assert_eq!(m.seq_len(b), Some(len));
+        let mut staging = vec![0i8; c.heads * c.max_seq * c.head_dim];
+        m.gather_i8(b, 0, 0, &mut staging).unwrap();
+        let sc = m.scales(b, 0, 0).unwrap();
+        for ch in 0..c.head_dim {
+            let q = staging[ch];
+            let s = sc[ch];
+            let want = k[ch]; // layer 0, head 0, t 0
+            assert!((q as f32 * s - want).abs() <= s / 2.0 + 1e-6);
+        }
+        m.assert_refcounts_consistent();
+        m.free(b);
+        // Unpin everything: the pool drains back to empty.
+        for t2 in &tables {
+            for kvb in t2 {
+                for &blk in kvb {
+                    m.unpin_block(blk);
+                }
+            }
+        }
+        assert_eq!(m.free_blocks(), c.num_blocks);
+        m.assert_refcounts_consistent();
+        let _ = v;
+    }
+
+    #[test]
+    fn append_prefill_chunk_matches_whole_prompt_prefill() {
+        // Chunked prefill (the suffix-prefill write path) must produce the
+        // same payload bytes and the same per-block grids as one-shot
+        // set_prefill of the full prompt.
+        let c = cfg();
+        let len = 8; // two full blocks
+        let (k, v) = prefill_tensors(&c, len, 64);
+
+        let mut whole = mgr(c, Precision::Int8);
+        let wid = whole.new_sequence();
+        whole.set_prefill(wid, &k, &v, len).unwrap();
+
+        let mut chunked = mgr(c, Precision::Int8);
+        let cid = chunked.new_sequence();
+        // Feed block-sized (L, H, C, d) chunks sliced from the same tensors.
+        let bs = c.block_size;
+        for start in (0..len).step_by(bs) {
+            let rows = bs.min(len - start);
+            let n = c.layers * c.heads * rows * c.head_dim;
+            let mut kc = vec![0.0f32; n];
+            let mut vc = vec![0.0f32; n];
+            for layer in 0..c.layers {
+                for head in 0..c.heads {
+                    for r in 0..rows {
+                        for ch in 0..c.head_dim {
+                            let src =
+                                ((layer * c.heads + head) * c.max_seq + start + r) * c.head_dim + ch;
+                            let dst = ((layer * c.heads + head) * rows + r) * c.head_dim + ch;
+                            kc[dst] = k[src];
+                            vc[dst] = v[src];
+                        }
+                    }
+                }
+            }
+            chunked.append_prefill_chunk(cid, &kc, &vc, rows).unwrap();
+        }
+        assert_eq!(chunked.seq_len(cid), Some(len));
+
+        let n = c.heads * c.max_seq * c.head_dim;
+        for layer in 0..c.layers {
+            for kv in 0..2 {
+                assert_eq!(
+                    whole.scales(wid, layer, kv).unwrap(),
+                    chunked.scales(cid, layer, kv).unwrap(),
+                    "per-block grids diverged at layer {layer} kv {kv}"
+                );
+                let mut a = vec![0i8; n];
+                let mut b = vec![0i8; n];
+                whole.gather_i8(wid, layer, kv, &mut a).unwrap();
+                chunked.gather_i8(cid, layer, kv, &mut b).unwrap();
+                assert_eq!(a, b, "payload diverged at layer {layer} kv {kv}");
+            }
+        }
     }
 }

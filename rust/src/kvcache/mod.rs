@@ -39,7 +39,7 @@ pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView, WaveGrou
 pub use memory_model::{MemoryModel, PolicyMemory};
 pub use policy::{PolicySpec, PolicyTable, QuantPolicy, StagedKind};
 pub use pool::{BlockId, BlockPool};
-pub use prefix::{PrefixCache, PrefixStats};
+pub use prefix::{PrefixCache, PrefixHit, PrefixStats};
 
 /// Storage precision of cache pages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -37,7 +37,9 @@ use anyhow::{anyhow, bail, Context, Result};
 /// path and the PJRT artifacts consume these).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StagedKind {
-    /// `(L, H, S, d)` i8 payloads + `(L, H, d)` f32 scales.
+    /// `(L, H, S, d)` i8 payloads + `(L, H, B, d)` f32 per-block scales,
+    /// `B = ceil(max_seq / block_size)` (row `t` decodes through block
+    /// `t / block_size`'s grid — the same grids the paged layout froze).
     I8,
     /// `(L, H, S, d)` f32 payloads.
     F32,

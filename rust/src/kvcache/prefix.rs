@@ -1,71 +1,155 @@
-//! Cross-request prefix cache over the COW block pool.
+//! Cross-request prefix cache: a token trie over the COW block pool.
 //!
 //! Serving traffic repeats prompts — system preambles, few-shot headers,
-//! retry storms. This cache keeps the quantized prompt blocks of recently
-//! prefilled sequences alive (as cache-owned forks inside the
-//! [`KvCacheManager`]) so an identical prompt is admitted by
-//! reference-bumping those blocks instead of re-running prefill and
-//! re-quantizing: the hit path is a [`KvCacheManager::fork`] plus a clone
-//! of the stored last-position logits (for first-token sampling), zero
-//! backend compute.
+//! RAG templates, retry storms — and usually repeats *prefixes* rather
+//! than whole prompts. This cache stores the quantized prompt blocks of
+//! recently prefilled sequences in a radix-style trie keyed at block
+//! granularity: each trie edge is one block's worth of tokens, each node
+//! pins that block's K/V payload (per layer, per stream) together with
+//! its frozen per-block scale grids. A lookup walks the query's
+//! block-aligned chunks as far as they match and adopts every matched
+//! block by reference bump — zero copy, zero re-quantization, zero
+//! backend compute for the shared span. Full matches also reuse the
+//! stored last-position logits; partial matches hand the engine a
+//! sequence covering the matched span so it runs *suffix* prefill only.
 //!
-//! **Bit-exactness policy.** Matching is at block granularity over prompt
-//! tokens, but a *usable* hit requires the stored prompt to equal the
-//! query prompt exactly. INT8 scales are frozen per sequence over its
-//! whole prompt (eq. 6 applied at prefill), so a partial-prefix reuse
-//! would inherit scales frozen over a *different* token set and the
-//! decode trajectory could diverge from an uncontended run. Exact-match
-//! sharing inherits exactly the scales the query's own prefill would have
-//! frozen — shared blocks, scales, and therefore generated tokens are
-//! bit-identical to the unshared baseline (asserted by
-//! `tests/preemption.rs`). Partial-prefix reuse stays future work gated
-//! on per-block scale storage.
+//! **Bit-exactness policy.** Scales are frozen per block over that
+//! block's own rows (eq. 6 applied block-wise at prefill), so a block's
+//! quantized payload and grid depend only on the tokens that produced it
+//! — they travel with the block. Any token-aligned shared prefix
+//! therefore inherits exactly the bytes and grids the query's own
+//! prefill would have produced, and the decode trajectory is
+//! bit-identical to an uncached run (asserted by `tests/preemption.rs`).
+//! What still cannot be shared: non-block-aligned tails. A partial tail
+//! block's grid freezes over a sub-block row set that the next prompt's
+//! tail generally does not reproduce, so tail blocks are reused only on
+//! an exact full-prompt match (stored per node as `Tail` entries, which
+//! also preserves the legacy zero-compute hit for identical prompts).
 //!
-//! **Budget + eviction.** The cache pins at most `capacity_blocks`
-//! logical blocks (`0` disables it, the default). Insertion and the
-//! coordinator's pool-pressure path evict LRU entries; freeing an entry
-//! releases its fork, which returns only last-holder blocks to the pool —
-//! entries whose blocks are still shared with running sequences cost
-//! nothing extra to keep and nothing to drop.
+//! **Budget + eviction.** The trie pins at most `capacity_blocks`
+//! logical blocks (`0` disables the cache). Eviction removes leaf units
+//! LRU-first — a tail, or a childless node together with its tails — so
+//! hot interior prefixes survive even when their extensions rotate out.
+//! Pool-pressure eviction ([`PrefixCache::evict_for`]) only removes
+//! units whose blocks would actually return to the pool (refcount-1
+//! holders); units fully shared with running sequences are skipped —
+//! freeing them returns nothing and keeping them costs the pool nothing.
 
 use super::manager::{KvCacheManager, SeqId};
+use super::pool::BlockId;
 use std::collections::HashMap;
 
-/// One cached prompt: a manager-owned fork of the sequence that prefilled
-/// it, plus everything needed to skip that prefill next time.
-struct Entry {
-    /// Cache-owned sequence holding the prompt blocks alive.
-    seq: SeqId,
+/// One trie node: a block-aligned chunk of some cached prompt. Owns (via
+/// manager pins) one block per (layer, K|V) stream plus that block's
+/// frozen scale grids.
+struct Node {
+    /// Children keyed by the *next* block's `block_size` tokens.
+    children: HashMap<Vec<i32>, Node>,
+    /// Exact-prompt completions ending at this node, keyed by the
+    /// (possibly empty) sub-block tail tokens.
+    tails: HashMap<Vec<i32>, Tail>,
+    /// Per layer: the pinned [K, V] block of this chunk. Empty for root.
+    blocks: Vec<[BlockId; 2]>,
+    /// Per layer: each stream's frozen `heads · head_dim` scale grid.
+    scales: Vec<[Vec<f32>; 2]>,
+    last_used: u64,
+}
+
+impl Node {
+    fn empty() -> Node {
+        Node {
+            children: HashMap::new(),
+            tails: HashMap::new(),
+            blocks: Vec::new(),
+            scales: Vec::new(),
+            last_used: 0,
+        }
+    }
+}
+
+/// A full-prompt completion: the stored first-token logits plus, for
+/// prompts that do not end on a block boundary, the pinned partial tail
+/// block per stream (reusable only on an exact match — see the module
+/// bit-exactness policy).
+struct Tail {
+    /// Per layer: the pinned [K, V] tail block. Empty when the prompt is
+    /// block-aligned (the trie nodes already cover every row).
+    blocks: Vec<[BlockId; 2]>,
+    /// Per layer: the tail block's frozen scale grids (empty iff
+    /// `blocks` is).
+    scales: Vec<[Vec<f32>; 2]>,
     /// Last-position prefill logits (first-token sampling input).
     logits: Vec<f32>,
-    /// Logical blocks this entry pins (budget accounting).
-    blocks: usize,
-    /// LRU tick of the last hit/insert.
     last_used: u64,
+}
+
+/// Lookup outcome. `Full` carries everything needed to skip prefill
+/// entirely; `Partial` carries a sequence covering the matched
+/// block-aligned span — the caller must prefill `prompt[matched_tokens..]`
+/// (at least one token: a partial hit never consumes the whole prompt,
+/// so the suffix prefill always produces fresh last-position logits).
+pub enum PrefixHit {
+    Full { seq: SeqId, logits: Vec<f32> },
+    Partial { seq: SeqId, matched_tokens: usize },
 }
 
 /// Counters for `/metrics` and the bench report.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PrefixStats {
     pub lookups: u64,
+    /// Exact full-prompt hits (zero backend compute).
     pub hits: u64,
+    /// Block-aligned partial hits (suffix prefill only).
+    pub partial_hits: u64,
+    /// Prompt tokens served from cached blocks (full span on a full
+    /// hit, matched span on a partial hit).
+    pub saved_tokens: u64,
+    /// Total prompt tokens presented to `lookup` (hit-rate denominator).
+    pub prompt_tokens: u64,
     pub insertions: u64,
+    /// Evicted cached prompts (tail entries). Interior node removals are
+    /// bookkeeping, not entry evictions.
     pub evictions: u64,
 }
 
 impl PrefixStats {
+    /// Fraction of looked-up prompt tokens served from the cache. Full
+    /// hits count 1.0 for their prompt; partial hits count fractionally
+    /// by saved-token share.
     pub fn hit_rate(&self) -> f64 {
-        self.hits as f64 / (self.lookups.max(1)) as f64
+        self.saved_tokens as f64 / (self.prompt_tokens.max(1)) as f64
     }
 }
 
+/// An evictable leaf unit: one tail, or one childless node together with
+/// its tails.
+struct Unit {
+    /// Chunk keys from the root to the owning node.
+    path: Vec<Vec<i32>>,
+    /// `Some(tail key)` evicts just that tail; `None` evicts the node at
+    /// `path` (which must be childless) and everything it holds.
+    tail: Option<Vec<i32>>,
+    last_used: u64,
+    /// Pool blocks an eviction would return right now (refcount-1 pins).
+    reclaimable: usize,
+}
+
 /// The cache. Owned by the engine next to its [`KvCacheManager`]; every
-/// mutating call takes the manager so entry lifetimes and pool refcounts
-/// move together.
+/// mutating call takes the manager so trie pins and pool refcounts move
+/// together.
 pub struct PrefixCache {
     /// Max logical blocks pinned; 0 disables the cache entirely.
     capacity_blocks: usize,
-    entries: HashMap<Vec<i32>, Entry>,
+    /// Partial (block-aligned prefix) hits enabled. The engine turns
+    /// this off for backends without chunked prefill (PJRT): they
+    /// cannot run a suffix prefill, so only exact full-prompt reuse is
+    /// sound there.
+    allow_partial: bool,
+    root: Node,
+    /// Cached prompts (tail entries across the whole trie).
+    entries: usize,
+    /// Trie nodes excluding the root.
+    nodes: usize,
     pinned: usize,
     tick: u64,
     stats: PrefixStats,
@@ -75,11 +159,19 @@ impl PrefixCache {
     pub fn new(capacity_blocks: usize) -> PrefixCache {
         PrefixCache {
             capacity_blocks,
-            entries: HashMap::new(),
+            allow_partial: true,
+            root: Node::empty(),
+            entries: 0,
+            nodes: 0,
             pinned: 0,
             tick: 0,
             stats: PrefixStats::default(),
         }
+    }
+
+    /// Enable/disable partial hits (see the field docs).
+    pub fn set_allow_partial(&mut self, on: bool) {
+        self.allow_partial = on;
     }
 
     pub fn enabled(&self) -> bool {
@@ -90,51 +182,129 @@ impl PrefixCache {
         self.capacity_blocks
     }
 
-    /// Logical blocks currently pinned by cache entries.
+    /// Logical blocks currently pinned by the trie.
     pub fn pinned_blocks(&self) -> usize {
         self.pinned
     }
 
+    /// Cached prompts (exact-completion entries).
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.entries
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.entries == 0
+    }
+
+    /// Trie nodes (block-aligned chunks) currently held, excluding the
+    /// root. The `/metrics` `prefix_trie_nodes` gauge.
+    pub fn trie_nodes(&self) -> usize {
+        self.nodes
     }
 
     pub fn stats(&self) -> PrefixStats {
         self.stats
     }
 
-    /// Look up a prompt. On a hit, returns a **fresh fork** of the cached
-    /// sequence (caller owns it) and the stored first-token logits; the
-    /// shared prompt blocks are reference-bumped, never copied or
-    /// re-quantized.
-    pub fn lookup(
-        &mut self,
-        mgr: &mut KvCacheManager,
-        prompt: &[i32],
-    ) -> Option<(SeqId, Vec<f32>)> {
+    /// Look up a prompt. Walks the trie over the prompt's block-aligned
+    /// chunks; on any match the cached blocks are adopted into a fresh
+    /// caller-owned sequence by reference bump (never copied or
+    /// re-quantized). See [`PrefixHit`] for the two hit shapes.
+    pub fn lookup(&mut self, mgr: &mut KvCacheManager, prompt: &[i32]) -> Option<PrefixHit> {
         if !self.enabled() {
             return None;
         }
         self.stats.lookups += 1;
+        self.stats.prompt_tokens += prompt.len() as u64;
         self.tick += 1;
-        let entry = self.entries.get_mut(prompt)?;
-        let fork = match mgr.fork(entry.seq) {
-            Ok(id) => id,
-            Err(_) => return None, // cached seq vanished — treat as miss
-        };
-        entry.last_used = self.tick;
-        self.stats.hits += 1;
-        Some((fork, entry.logits.clone()))
+        let tick = self.tick;
+        let bs = mgr.config().block_size;
+        let full = prompt.len() / bs;
+
+        // Walk matched chunks, snapshotting each node's blocks + grids.
+        let mut chain: Vec<(Vec<[BlockId; 2]>, Vec<[Vec<f32>; 2]>)> = Vec::new();
+        let mut cur = &mut self.root;
+        while chain.len() < full {
+            let key = &prompt[chain.len() * bs..(chain.len() + 1) * bs];
+            if !cur.children.contains_key(key) {
+                break;
+            }
+            let next = cur.children.get_mut(key).unwrap();
+            next.last_used = tick;
+            chain.push((next.blocks.clone(), next.scales.clone()));
+            cur = next;
+        }
+
+        // Exact completion at the deepest matched node?
+        if chain.len() == full {
+            if let Some(tail) = cur.tails.get_mut(&prompt[full * bs..]) {
+                tail.last_used = tick;
+                let logits = tail.logits.clone();
+                let (tb, ts) = (tail.blocks.clone(), tail.scales.clone());
+                let seq = self.adopt(mgr, &chain, Some((&tb, &ts)), prompt.len())?;
+                self.stats.hits += 1;
+                self.stats.saved_tokens += prompt.len() as u64;
+                return Some(PrefixHit::Full { seq, logits });
+            }
+        }
+
+        // Partial hit: adopt matched chunks, but always leave at least
+        // one suffix token so the caller's prefill produces the
+        // first-token logits (no stale-logit reuse).
+        if !self.allow_partial {
+            return None;
+        }
+        let mut adopt = chain.len();
+        if adopt * bs == prompt.len() && adopt > 0 {
+            adopt -= 1;
+        }
+        if adopt == 0 {
+            return None;
+        }
+        let seq = self.adopt(mgr, &chain[..adopt], None, adopt * bs)?;
+        self.stats.partial_hits += 1;
+        self.stats.saved_tokens += (adopt * bs) as u64;
+        Some(PrefixHit::Partial { seq, matched_tokens: adopt * bs })
     }
 
-    /// Cache a freshly prefilled sequence: forks `src` (the live request's
-    /// sequence) into a cache-owned sequence, evicting LRU entries to
-    /// respect the block budget. No-ops when disabled, when the prompt is
-    /// already cached, or when the entry alone exceeds the whole budget.
+    /// Assemble per-stream tables + scale grids from a matched chain
+    /// (plus an optional tail block) and adopt them as a new sequence.
+    fn adopt(
+        &self,
+        mgr: &mut KvCacheManager,
+        chain: &[(Vec<[BlockId; 2]>, Vec<[Vec<f32>; 2]>)],
+        tail: Option<(&Vec<[BlockId; 2]>, &Vec<[Vec<f32>; 2]>)>,
+        len: usize,
+    ) -> Option<SeqId> {
+        let layers = mgr.config().layers;
+        let mut tables: Vec<[Vec<BlockId>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
+        let mut scales: Vec<[Vec<f32>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
+        for (blocks, grids) in chain {
+            for layer in 0..layers {
+                for kv in 0..2 {
+                    tables[layer][kv].push(blocks[layer][kv]);
+                    scales[layer][kv].extend_from_slice(&grids[layer][kv]);
+                }
+            }
+        }
+        if let Some((tb, ts)) = tail {
+            for layer in 0..layers {
+                for kv in 0..2 {
+                    if !tb.is_empty() {
+                        tables[layer][kv].push(tb[layer][kv]);
+                        scales[layer][kv].extend_from_slice(&ts[layer][kv]);
+                    }
+                }
+            }
+        }
+        mgr.adopt_sequence(tables, scales, len).ok()
+    }
+
+    /// Cache a freshly prefilled sequence: pins `src`'s prompt blocks
+    /// into the trie (reusing any chunks already cached), evicting LRU
+    /// leaf units to respect the block budget. No-ops when disabled,
+    /// when the prompt is already fully cached, or when the new pins
+    /// alone exceed the whole budget.
     pub fn insert(
         &mut self,
         mgr: &mut KvCacheManager,
@@ -142,77 +312,269 @@ impl PrefixCache {
         prompt: &[i32],
         logits: &[f32],
     ) {
-        if !self.enabled() || self.entries.contains_key(prompt) {
+        if !self.enabled() {
             return;
         }
-        let blocks = mgr.config().blocks_for_tokens(prompt.len());
-        if blocks > self.capacity_blocks {
-            return;
-        }
-        while self.pinned + blocks > self.capacity_blocks {
+        let c = *mgr.config();
+        let (bs, layers) = (c.block_size, c.layers);
+        let full = prompt.len() / bs;
+        let tail_tokens = &prompt[full * bs..];
+        // Respect the budget before touching the trie; eviction can
+        // remove chunks we would have reused, so recount each round.
+        loop {
+            let need = self.new_blocks_needed(prompt, bs, layers);
+            if need == 0 {
+                return; // already fully cached
+            }
+            if need > self.capacity_blocks {
+                return; // cannot fit even an empty cache
+            }
+            if self.pinned + need <= self.capacity_blocks {
+                break;
+            }
             if !self.evict_lru(mgr) {
                 return; // nothing left to evict, budget still blown
             }
         }
-        let Ok(seq) = mgr.fork(src) else { return };
         self.tick += 1;
-        self.pinned += blocks;
-        self.stats.insertions += 1;
-        self.entries.insert(
-            prompt.to_vec(),
-            Entry { seq, logits: logits.to_vec(), blocks, last_used: self.tick },
-        );
+        let tick = self.tick;
+        // Grab what we need from the source sequence up front (the
+        // node-creation walk holds `self.root` mutably).
+        let grab = |mgr: &KvCacheManager, bi: usize| -> (Vec<[BlockId; 2]>, Vec<[Vec<f32>; 2]>) {
+            let hd = c.heads * c.head_dim;
+            let mut blocks = Vec::with_capacity(layers);
+            let mut scales = Vec::with_capacity(layers);
+            for layer in 0..layers {
+                let mut b2 = [0, 0];
+                let mut s2 = [Vec::new(), Vec::new()];
+                for kv in 0..2 {
+                    b2[kv] = mgr.seq_stream_blocks(src, layer, kv).unwrap()[bi];
+                    s2[kv] =
+                        mgr.scales(src, layer, kv).unwrap()[bi * hd..(bi + 1) * hd].to_vec();
+                }
+                blocks.push(b2);
+                scales.push(s2);
+            }
+            (blocks, scales)
+        };
+        let mut new_nodes = 0;
+        let mut pinned_delta = 0;
+        let mut inserted_tail = false;
+        let mut cur = &mut self.root;
+        for bi in 0..full {
+            let key = prompt[bi * bs..(bi + 1) * bs].to_vec();
+            if !cur.children.contains_key(&key) {
+                let (blocks, scales) = grab(mgr, bi);
+                for pair in &blocks {
+                    mgr.pin_block(pair[0]);
+                    mgr.pin_block(pair[1]);
+                }
+                pinned_delta += 2 * layers;
+                new_nodes += 1;
+                cur.children.insert(
+                    key.clone(),
+                    Node { blocks, scales, last_used: tick, ..Node::empty() },
+                );
+            }
+            cur = cur.children.get_mut(&key).unwrap();
+            cur.last_used = tick;
+        }
+        if !cur.tails.contains_key(tail_tokens) {
+            let (blocks, scales) = if tail_tokens.is_empty() {
+                (Vec::new(), Vec::new())
+            } else {
+                let t = grab(mgr, full);
+                for pair in &t.0 {
+                    mgr.pin_block(pair[0]);
+                    mgr.pin_block(pair[1]);
+                }
+                pinned_delta += 2 * layers;
+                t
+            };
+            cur.tails.insert(
+                tail_tokens.to_vec(),
+                Tail { blocks, scales, logits: logits.to_vec(), last_used: tick },
+            );
+            inserted_tail = true;
+        }
+        self.nodes += new_nodes;
+        self.pinned += pinned_delta;
+        if inserted_tail {
+            self.entries += 1;
+            self.stats.insertions += 1;
+        }
     }
 
-    /// Remove one entry and release its fork.
-    fn evict_entry(&mut self, key: &[i32], mgr: &mut KvCacheManager) {
-        let entry = self.entries.remove(key).unwrap();
-        self.pinned -= entry.blocks;
-        self.stats.evictions += 1;
-        mgr.free(entry.seq);
+    /// Logical blocks an insert of `prompt` would newly pin (chunks and
+    /// tail not already in the trie).
+    fn new_blocks_needed(&self, prompt: &[i32], bs: usize, layers: usize) -> usize {
+        let full = prompt.len() / bs;
+        let mut cur = &self.root;
+        let mut matched = 0;
+        while matched < full {
+            match cur.children.get(&prompt[matched * bs..(matched + 1) * bs]) {
+                Some(next) => {
+                    cur = next;
+                    matched += 1;
+                }
+                None => break,
+            }
+        }
+        let mut need = (full - matched) * 2 * layers;
+        let tail_tokens = &prompt[full * bs..];
+        if matched == full && cur.tails.contains_key(tail_tokens) {
+            return 0; // fully cached (need == 0 by construction here)
+        }
+        if !tail_tokens.is_empty() {
+            need += 2 * layers;
+        }
+        need
     }
 
-    /// Drop the least-recently-used entry; returns false when empty.
-    /// Budget-driven eviction: every entry counts against the logical
-    /// pin budget, shared or not, so plain LRU order is correct here.
+    /// Enumerate evictable leaf units with their LRU stamps and
+    /// currently-reclaimable block counts.
+    fn units(&self, mgr: &KvCacheManager) -> Vec<Unit> {
+        fn reclaimable(mgr: &KvCacheManager, blocks: &[[BlockId; 2]]) -> usize {
+            blocks
+                .iter()
+                .flat_map(|p| p.iter())
+                .filter(|&&b| mgr.block_refcount(b) == 1)
+                .count()
+        }
+        fn walk(node: &Node, path: &mut Vec<Vec<i32>>, out: &mut Vec<Unit>, mgr: &KvCacheManager) {
+            for (key, tail) in &node.tails {
+                out.push(Unit {
+                    path: path.clone(),
+                    tail: Some(key.clone()),
+                    last_used: tail.last_used,
+                    reclaimable: reclaimable(mgr, &tail.blocks),
+                });
+            }
+            if !path.is_empty() && node.children.is_empty() {
+                let mut r = reclaimable(mgr, &node.blocks);
+                for tail in node.tails.values() {
+                    r += reclaimable(mgr, &tail.blocks);
+                }
+                out.push(Unit {
+                    path: path.clone(),
+                    tail: None,
+                    last_used: node.last_used,
+                    reclaimable: r,
+                });
+            }
+            for (key, child) in &node.children {
+                path.push(key.clone());
+                walk(child, path, out, mgr);
+                path.pop();
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.root, &mut Vec::new(), &mut out, mgr);
+        out
+    }
+
+    /// Remove one unit, releasing its pins. Deterministic given the unit.
+    fn evict_unit(&mut self, mgr: &mut KvCacheManager, unit: &Unit) {
+        let mut release = |mgr: &mut KvCacheManager,
+                           pinned: &mut usize,
+                           blocks: &[[BlockId; 2]]| {
+            for pair in blocks {
+                mgr.unpin_block(pair[0]);
+                mgr.unpin_block(pair[1]);
+            }
+            *pinned -= 2 * blocks.len();
+        };
+        // Navigate to the unit's parent node.
+        let (last, parents) = match unit.tail {
+            Some(_) => (None, unit.path.as_slice()),
+            None => unit.path.split_last().map(|(l, p)| (Some(l), p)).unwrap(),
+        };
+        let mut cur = &mut self.root;
+        for key in parents {
+            cur = cur.children.get_mut(key).unwrap();
+        }
+        match (&unit.tail, last) {
+            (Some(key), _) => {
+                let tail = cur.tails.remove(key).unwrap();
+                release(mgr, &mut self.pinned, &tail.blocks);
+                self.entries -= 1;
+                self.stats.evictions += 1;
+            }
+            (None, Some(key)) => {
+                let node = cur.children.remove(key).unwrap();
+                debug_assert!(node.children.is_empty(), "evicting a non-leaf node");
+                for tail in node.tails.values() {
+                    release(mgr, &mut self.pinned, &tail.blocks);
+                    self.entries -= 1;
+                    self.stats.evictions += 1;
+                }
+                release(mgr, &mut self.pinned, &node.blocks);
+                self.nodes -= 1;
+            }
+            (None, None) => unreachable!("node unit with empty path"),
+        }
+    }
+
+    /// Deterministic LRU order among units: oldest first, deepest first
+    /// on ties (peel leaves before their parents), tails before their
+    /// own node, then by key tokens.
+    fn pick_lru<'a>(units: &'a [Unit], filter_reclaimable: bool) -> Option<&'a Unit> {
+        units
+            .iter()
+            .filter(|u| !filter_reclaimable || u.reclaimable > 0)
+            .min_by(|a, b| {
+                a.last_used
+                    .cmp(&b.last_used)
+                    .then(b.path.len().cmp(&a.path.len()))
+                    .then(b.tail.is_some().cmp(&a.tail.is_some()))
+                    .then(a.path.cmp(&b.path))
+                    .then(a.tail.cmp(&b.tail))
+            })
+    }
+
+    /// Drop the least-recently-used leaf unit; returns false when the
+    /// trie is empty. Budget-driven eviction: every pinned block counts
+    /// against the logical budget, shared or not, so plain LRU order is
+    /// correct here.
     pub fn evict_lru(&mut self, mgr: &mut KvCacheManager) -> bool {
-        let Some(key) = self
-            .entries
-            .iter()
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(k, _)| k.clone())
-        else {
+        let units = self.units(mgr);
+        let Some(unit) = Self::pick_lru(&units, false) else {
             return false;
         };
-        self.evict_entry(&key, mgr);
+        let unit = Unit {
+            path: unit.path.clone(),
+            tail: unit.tail.clone(),
+            last_used: unit.last_used,
+            reclaimable: unit.reclaimable,
+        };
+        self.evict_unit(mgr, &unit);
         true
     }
 
-    /// Drop the LRU entry **among those whose eviction returns blocks to
-    /// the pool right now** (refcount-1 holders); returns false when no
-    /// entry can reclaim anything. Pool-pressure eviction must use this,
-    /// not plain LRU: dropping a fully-shared entry frees nothing yet
-    /// forfeits its future hits.
+    /// Drop the LRU leaf unit **among those whose eviction returns
+    /// blocks to the pool right now** (refcount-1 pins); returns false
+    /// when no unit can reclaim anything. Pool-pressure eviction must
+    /// use this, not plain LRU: dropping a fully-shared unit frees
+    /// nothing yet forfeits its future hits.
     pub fn evict_reclaimable_lru(&mut self, mgr: &mut KvCacheManager) -> bool {
-        let Some(key) = self
-            .entries
-            .iter()
-            .filter(|(_, e)| mgr.seq_reclaimable_blocks(e.seq) > 0)
-            .min_by_key(|(_, e)| e.last_used)
-            .map(|(k, _)| k.clone())
-        else {
+        let units = self.units(mgr);
+        let Some(unit) = Self::pick_lru(&units, true) else {
             return false;
         };
-        self.evict_entry(&key, mgr);
+        let unit = Unit {
+            path: unit.path.clone(),
+            tail: unit.tail.clone(),
+            last_used: unit.last_used,
+            reclaimable: unit.reclaimable,
+        };
+        self.evict_unit(mgr, &unit);
         true
     }
 
-    /// Evict reclaimable entries (LRU-first) until at least `want_free`
+    /// Evict reclaimable units (LRU-first) until at least `want_free`
     /// pool blocks are free or nothing evictable remains. The
-    /// pool-pressure valve: the coordinator drains cached prefixes before
-    /// preempting running requests. Entries fully shared with live
-    /// sequences are skipped — freeing them returns nothing and keeping
-    /// them costs the pool nothing.
+    /// pool-pressure valve: the coordinator drains cached prefixes
+    /// before preempting running requests.
     pub fn evict_for(&mut self, mgr: &mut KvCacheManager, want_free: usize) {
         while mgr.free_blocks() < want_free && self.evict_reclaimable_lru(mgr) {}
     }
@@ -220,12 +582,32 @@ impl PrefixCache {
     /// Drop everything (engine shutdown / reconfiguration).
     pub fn clear(&mut self, mgr: &mut KvCacheManager) {
         while self.evict_lru(mgr) {}
+        debug_assert_eq!(self.pinned, 0, "clear left pins behind");
+        debug_assert_eq!(self.nodes, 0);
+        debug_assert_eq!(self.entries, 0);
     }
 
     /// Upper bound on pool blocks an eviction sweep could return right
-    /// now: the pinned blocks that are *not* shared with anyone else.
+    /// now: pinned blocks that are *not* shared with anyone else.
     pub fn evictable_blocks(&self, mgr: &KvCacheManager) -> usize {
-        self.entries.values().map(|e| mgr.seq_reclaimable_blocks(e.seq)).sum()
+        fn walk(node: &Node, mgr: &KvCacheManager) -> usize {
+            let count = |blocks: &[[BlockId; 2]]| {
+                blocks
+                    .iter()
+                    .flat_map(|p| p.iter())
+                    .filter(|&&b| mgr.block_refcount(b) == 1)
+                    .count()
+            };
+            let mut n = count(&node.blocks);
+            for tail in node.tails.values() {
+                n += count(&tail.blocks);
+            }
+            for child in node.children.values() {
+                n += walk(child, mgr);
+            }
+            n
+        }
+        walk(&self.root, mgr)
     }
 }
 
@@ -265,28 +647,37 @@ mod tests {
         id
     }
 
+    fn full_hit(hit: PrefixHit) -> (SeqId, Vec<f32>) {
+        match hit {
+            PrefixHit::Full { seq, logits } => (seq, logits),
+            PrefixHit::Partial { .. } => panic!("expected full hit"),
+        }
+    }
+
     #[test]
     fn disabled_cache_never_hits_or_pins() {
         let mut mgr = manager(64);
         let mut pc = PrefixCache::new(0);
         let src = prefill(&mut mgr, 8, 1);
-        pc.insert(&mut mgr, src, &[1, 2, 3], &[0.0; 4]);
-        assert!(pc.lookup(&mut mgr, &[1, 2, 3]).is_none());
+        pc.insert(&mut mgr, src, &[1, 2, 3, 9, 9, 9, 9, 9], &[0.0; 4]);
+        assert!(pc.lookup(&mut mgr, &[1, 2, 3, 9, 9, 9, 9, 9]).is_none());
         assert_eq!(pc.pinned_blocks(), 0);
+        assert_eq!(pc.trie_nodes(), 0);
         assert_eq!(pc.stats(), PrefixStats::default());
         mgr.free(src);
     }
 
     #[test]
-    fn hit_forks_without_allocating() {
+    fn hit_adopts_without_allocating() {
         let mut mgr = manager(64);
         let mut pc = PrefixCache::new(64);
         let prompt = vec![5i32; 8];
         let src = prefill(&mut mgr, 8, 2);
         pc.insert(&mut mgr, src, &prompt, &[1.0, 2.0]);
+        assert_eq!(pc.trie_nodes(), 2, "two block-aligned chunks");
         mgr.free(src); // request finished; cache keeps the blocks alive
         let used = mgr.used_blocks();
-        let (fork, logits) = pc.lookup(&mut mgr, &prompt).unwrap();
+        let (fork, logits) = full_hit(pc.lookup(&mut mgr, &prompt).unwrap());
         assert_eq!(logits, vec![1.0, 2.0]);
         assert_eq!(mgr.used_blocks(), used, "hit reference-bumps, allocates nothing");
         assert_eq!(mgr.seq_len(fork), Some(8));
@@ -299,16 +690,110 @@ mod tests {
     }
 
     #[test]
-    fn exact_match_only() {
+    fn partial_hit_adopts_shared_blocks_only() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        // Cache a 10-token prompt: 2 full chunks + a 2-token tail.
+        let mut prompt = vec![7i32; 8];
+        prompt.extend([1, 2]);
+        let src = prefill(&mut mgr, 10, 3);
+        pc.insert(&mut mgr, src, &prompt, &[0.5]);
+        assert_eq!(pc.trie_nodes(), 2);
+        // 2 chunk nodes + 1 tail, each 2 layers x {K,V}.
+        assert_eq!(pc.pinned_blocks(), 12);
+        mgr.free(src);
+
+        // Same first 8 tokens, different continuation: partial hit over
+        // exactly the 2 shared chunks.
+        let mut query = vec![7i32; 8];
+        query.extend([3, 4, 5]);
+        let used = mgr.used_blocks();
+        match pc.lookup(&mut mgr, &query).unwrap() {
+            PrefixHit::Partial { seq, matched_tokens } => {
+                assert_eq!(matched_tokens, 8);
+                assert_eq!(mgr.seq_len(seq), Some(8));
+                assert_eq!(mgr.used_blocks(), used, "adoption allocates nothing");
+                mgr.free(seq);
+            }
+            PrefixHit::Full { .. } => panic!("tail differs — must not be a full hit"),
+        }
+        let s = pc.stats();
+        assert_eq!((s.hits, s.partial_hits), (0, 1));
+        assert_eq!(s.saved_tokens, 8);
+        assert!((s.hit_rate() - 8.0 / 11.0).abs() < 1e-12, "fractional by saved share");
+
+        // A 4-token query shares one chunk; a 3-token one shares none.
+        match pc.lookup(&mut mgr, &[7i32; 5]).unwrap() {
+            PrefixHit::Partial { seq, matched_tokens } => {
+                assert_eq!(matched_tokens, 4);
+                mgr.free(seq);
+            }
+            _ => panic!("expected partial"),
+        }
+        assert!(pc.lookup(&mut mgr, &[7i32; 3]).is_none(), "sub-block prefix never shares");
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+    }
+
+    #[test]
+    fn block_aligned_partial_hit_leaves_one_suffix_token() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let src = prefill(&mut mgr, 12, 4);
+        let long = vec![9i32; 12];
+        pc.insert(&mut mgr, src, &long, &[0.1]);
+        mgr.free(src);
+        // An 8-token query matches 2 chunks exactly but was never cached
+        // as a completion: the hit must hold back the last chunk so the
+        // caller's suffix prefill regenerates the first-token logits.
+        match pc.lookup(&mut mgr, &[9i32; 8]).unwrap() {
+            PrefixHit::Partial { seq, matched_tokens } => {
+                assert_eq!(matched_tokens, 4, "one chunk held back for logits");
+                mgr.free(seq);
+            }
+            _ => panic!("expected partial"),
+        }
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn shared_chunks_are_stored_once() {
+        let mut mgr = manager(128);
+        let mut pc = PrefixCache::new(128);
+        // Two prompts sharing their first chunk: the trie stores 3 chunk
+        // nodes, not 4, and the shared chunk pins one block per stream.
+        let a = prefill(&mut mgr, 8, 5);
+        let mut pa = vec![1i32; 4];
+        pa.extend(vec![2i32; 4]);
+        pc.insert(&mut mgr, a, &pa, &[0.0]);
+        let pinned_one = pc.pinned_blocks();
+        let b = prefill(&mut mgr, 8, 6);
+        let mut pb = vec![1i32; 4];
+        pb.extend(vec![3i32; 4]);
+        pc.insert(&mut mgr, b, &pb, &[0.0]);
+        assert_eq!(pc.trie_nodes(), 3, "first chunk deduped");
+        assert_eq!(pc.pinned_blocks(), pinned_one + 4, "only the new chunk pinned");
+        mgr.free(a);
+        mgr.free(b);
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks, "no leaks");
+    }
+
+    #[test]
+    fn exact_match_required_for_full_hit() {
         let mut mgr = manager(64);
         let mut pc = PrefixCache::new(64);
         let src = prefill(&mut mgr, 8, 3);
         pc.insert(&mut mgr, src, &[7i32; 8], &[0.0]);
-        // Same leading blocks, longer prompt: not bit-exact to reuse.
-        assert!(pc.lookup(&mut mgr, &[7i32; 12]).is_none());
-        assert!(pc.lookup(&mut mgr, &[7i32; 4]).is_none());
+        // Longer prompt: partial hit over the stored chunks, not full.
+        match pc.lookup(&mut mgr, &[7i32; 12]).unwrap() {
+            PrefixHit::Partial { seq, matched_tokens } => {
+                assert_eq!(matched_tokens, 8);
+                mgr.free(seq);
+            }
+            _ => panic!("longer prompt must not be a full hit"),
+        }
         assert_eq!(pc.stats().hits, 0);
-        assert_eq!(pc.stats().lookups, 2);
         mgr.free(src);
         pc.clear(&mut mgr);
     }
@@ -316,7 +801,7 @@ mod tests {
     #[test]
     fn lru_eviction_respects_budget() {
         let mut mgr = manager(128);
-        // 8 tokens -> 2 blocks x 4 streams = 8 logical blocks per entry.
+        // 8 tokens -> 2 chunks x 4 streams = 8 logical blocks per prompt.
         let mut pc = PrefixCache::new(16);
         let a = prefill(&mut mgr, 8, 4);
         let b = prefill(&mut mgr, 8, 5);
@@ -325,13 +810,13 @@ mod tests {
         pc.insert(&mut mgr, b, &[2i32; 8], &[0.0]);
         assert_eq!(pc.pinned_blocks(), 16);
         // Touch entry 1 so entry 2 is LRU.
-        let touch = pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 cached");
+        let touch = full_hit(pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 cached"));
         mgr.free(touch.0);
         pc.insert(&mut mgr, c, &[3i32; 8], &[0.0]);
         assert_eq!(pc.len(), 2);
-        assert_eq!(pc.stats().evictions, 1);
+        assert_eq!(pc.stats().evictions, 1, "one cached prompt dropped");
         assert!(pc.lookup(&mut mgr, &[2i32; 8]).is_none(), "LRU entry evicted");
-        let again = pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 survived");
+        let again = full_hit(pc.lookup(&mut mgr, &[1i32; 8]).expect("entry 1 survived"));
         mgr.free(again.0);
         for s in [a, b, c] {
             mgr.free(s);
@@ -343,10 +828,11 @@ mod tests {
     #[test]
     fn oversized_entry_is_not_cached() {
         let mut mgr = manager(64);
-        let mut pc = PrefixCache::new(4); // one 8-token entry needs 8
+        let mut pc = PrefixCache::new(4); // one 8-token prompt needs 8
         let src = prefill(&mut mgr, 8, 7);
         pc.insert(&mut mgr, src, &[9i32; 8], &[0.0]);
         assert!(pc.is_empty());
+        assert_eq!(pc.pinned_blocks(), 0);
         assert_eq!(pc.stats().insertions, 0);
         mgr.free(src);
     }
@@ -358,7 +844,7 @@ mod tests {
         // Entry A (older) stays shared with a live sequence; entry B
         // (newer) is the only holder of its blocks.
         let a = prefill(&mut mgr, 8, 11);
-        pc.insert(&mut mgr, a, &[1i32; 8], &[0.0]); // a keeps its fork alive
+        pc.insert(&mut mgr, a, &[1i32; 8], &[0.0]); // a keeps its blocks alive
         let b = prefill(&mut mgr, 8, 12);
         pc.insert(&mut mgr, b, &[2i32; 8], &[0.0]);
         mgr.free(b); // only the cache holds B's blocks now
@@ -369,7 +855,7 @@ mod tests {
             pc.lookup(&mut mgr, &[2i32; 8]).is_none(),
             "reclaimable entry B evicted"
         );
-        let hit = pc.lookup(&mut mgr, &[1i32; 8]).expect("shared entry A survives");
+        let hit = full_hit(pc.lookup(&mut mgr, &[1i32; 8]).expect("shared entry A survives"));
         mgr.free(hit.0);
         mgr.free(a);
         pc.clear(&mut mgr);
@@ -387,5 +873,70 @@ mod tests {
         pc.evict_for(&mut mgr, 12);
         assert!(mgr.free_blocks() >= 12);
         assert!(pc.is_empty());
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), 16);
+    }
+
+    #[test]
+    fn interior_nodes_survive_leaf_eviction() {
+        let mut mgr = manager(128);
+        let mut pc = PrefixCache::new(128);
+        // Shared 4-token system prefix with two 8-token completions.
+        let a = prefill(&mut mgr, 8, 13);
+        let mut pa = vec![5i32; 4];
+        pa.extend(vec![6i32; 4]);
+        pc.insert(&mut mgr, a, &pa, &[0.0]);
+        let b = prefill(&mut mgr, 8, 14);
+        let mut pb = vec![5i32; 4];
+        pb.extend(vec![7i32; 4]);
+        pc.insert(&mut mgr, b, &pb, &[0.0]);
+        mgr.free(a);
+        mgr.free(b);
+        // Touch prompt A so B's leaf is LRU, then evict one unit: the
+        // interior (shared) chunk must survive for A's next hit.
+        let t = full_hit(pc.lookup(&mut mgr, &pa).unwrap());
+        mgr.free(t.0);
+        assert!(pc.evict_lru(&mut mgr));
+        // B's completion is gone (its tail went with the leaf unit), A
+        // still fully hits through the shared interior chunk.
+        assert_eq!(pc.stats().evictions, 1);
+        let t = full_hit(pc.lookup(&mut mgr, &pa).expect("A survives"));
+        mgr.free(t.0);
+        match pc.lookup(&mut mgr, &pb) {
+            None => {}
+            Some(PrefixHit::Partial { seq, matched_tokens }) => {
+                assert_eq!(matched_tokens, 4, "only the shared interior chunk remains");
+                mgr.free(seq);
+            }
+            Some(PrefixHit::Full { .. }) => panic!("B's completion was evicted"),
+        }
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+    }
+
+    #[test]
+    fn misaligned_tail_reused_only_on_exact_match() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let src = prefill(&mut mgr, 6, 15); // 1 full chunk + 2-token tail
+        let prompt = vec![8i32; 6];
+        pc.insert(&mut mgr, src, &prompt, &[0.3]);
+        mgr.free(src);
+        // Exact prompt: full hit including the tail block.
+        let (seq, logits) = full_hit(pc.lookup(&mut mgr, &prompt).unwrap());
+        assert_eq!(logits, vec![0.3]);
+        assert_eq!(mgr.seq_len(seq), Some(6));
+        mgr.free(seq);
+        // Same 6 leading tokens, longer prompt: the sub-block tail must
+        // NOT be reused — only the aligned chunk shares.
+        match pc.lookup(&mut mgr, &[8i32; 9]).unwrap() {
+            PrefixHit::Partial { seq, matched_tokens } => {
+                assert_eq!(matched_tokens, 4);
+                mgr.free(seq);
+            }
+            _ => panic!("expected partial over the aligned chunk only"),
+        }
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
     }
 }

@@ -9,8 +9,10 @@
 //!    (rust/tests/engine_e2e.rs asserts logits agreement),
 //! 3. the serving benches have a host-compute baseline.
 //!
-//! Layouts match the artifacts: caches `(L, H, S, d)`, scales `(L, H, d)`,
-//! new rows `(L, H, d)`, all flattened row-major.
+//! Layouts match the artifacts: caches `(L, H, S, d)`, scales
+//! `(L, H, B, d)` with one frozen grid per `block_size`-row block
+//! (B = ceil(max_seq / block_size)), new rows `(L, H, d)`, all flattened
+//! row-major.
 //!
 //! Decode reads its K/V history through the [`CacheAccess`] strategy
 //! trait: [`StagedI8Cache`]/[`StagedF32Cache`] walk the dense artifact
@@ -77,6 +79,16 @@ fn rope(row: &mut [f32], pos: usize) {
 pub struct CpuPrefill {
     pub logits: Vec<f32>,
     /// (L, H, S, d) with rows >= len zeroed.
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+/// Outputs of one chunk of an incremental prefill: logits at the chunk's
+/// last position plus the chunk's FP32 K/V rows, `(L, H, C, d)` where
+/// `C = chunk.len()` — the shape `KvCacheManager::append_prefill_chunk`
+/// consumes.
+pub struct CpuPrefillChunk {
+    pub logits: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
 }
@@ -187,6 +199,145 @@ impl CpuModel {
         CpuPrefill { logits, k: k_cache, v: v_cache }
     }
 
+    /// Incremental prefill of one token-aligned chunk: a forward pass
+    /// over positions `start..start + chunk.len()` that attends over the
+    /// *quantized* history rows `0..start` through `view` (fused codec
+    /// kernels, exactly the paged-decode access pattern) plus FP32 causal
+    /// attention within the chunk itself.
+    ///
+    /// The canonical CPU serving prefill is the block-sized chunked
+    /// composition of these calls (the engine always chunks, cache hit or
+    /// not), so a suffix prefill over adopted prefix-cache blocks is
+    /// byte-identical to an uncached run of the same prompt: the shared
+    /// span's quantized bytes and scales are identical by construction,
+    /// and this pass only ever reads history through that representation.
+    ///
+    /// Softmax per (position, head) is non-streaming and deterministic:
+    /// one max over history + in-chunk scores, history weights/V first
+    /// (ascending t, via the codec kernels), then in-chunk rows ascending.
+    pub fn prefill_chunk(
+        &self,
+        chunk: &[i32],
+        start: usize,
+        view: &CacheView,
+        variant: Variant,
+        isa: Isa,
+    ) -> anyhow::Result<CpuPrefillChunk> {
+        let sp = &self.spec;
+        let (l, h, d, m) = (sp.layers, sp.heads, sp.head_dim, sp.d_model());
+        let cnt = chunk.len();
+        anyhow::ensure!(cnt >= 1, "empty prefill chunk");
+        anyhow::ensure!(
+            start + cnt <= sp.max_seq,
+            "chunk {start}..{} exceeds max_seq {}",
+            start + cnt,
+            sp.max_seq
+        );
+        anyhow::ensure!(
+            view.len() == start,
+            "chunk start {start} != cache len {}",
+            view.len()
+        );
+        anyhow::ensure!(
+            view.layers() == l && view.heads() == h && view.head_dim() == d,
+            "cache geometry does not match model spec"
+        );
+        let emb = self.weights.param("embedding");
+        let cache = PagedCache::new(view, variant, isa);
+        let sqrt_d = (d as f32).sqrt();
+
+        let mut xs: Vec<Vec<f32>> = chunk
+            .iter()
+            .map(|&t| emb[t as usize * m..(t as usize + 1) * m].to_vec())
+            .collect();
+        let mut k_out = vec![0.0f32; l * h * cnt * d];
+        let mut v_out = vec![0.0f32; l * h * cnt * d];
+        // O(start) history score/weight rows, reused across positions.
+        let mut hist = vec![0.0f32; start];
+        let mut wbuf = vec![0.0f32; start];
+
+        for layer in 0..l {
+            let (wq, wk, wv, wo) = (
+                self.layer_param(layer, "wq"),
+                self.layer_param(layer, "wk"),
+                self.layer_param(layer, "wv"),
+                self.layer_param(layer, "wo"),
+            );
+            let (ln1, ln2) = (self.layer_param(layer, "ln1"), self.layer_param(layer, "ln2"));
+            let (w1, w2) = (self.layer_param(layer, "w1"), self.layer_param(layer, "w2"));
+
+            // Projections for every chunk position (RoPE at absolute
+            // positions start + t) — K rows stored roped, like prefill.
+            let mut qs = vec![vec![0.0f32; m]; cnt];
+            for t in 0..cnt {
+                let xn = rmsnorm(&xs[t], ln1);
+                let q = matvec(&xn, wq, m);
+                let k = matvec(&xn, wk, m);
+                let v = matvec(&xn, wv, m);
+                for head in 0..h {
+                    let mut qh = q[head * d..(head + 1) * d].to_vec();
+                    let mut kh = k[head * d..(head + 1) * d].to_vec();
+                    rope(&mut qh, start + t);
+                    rope(&mut kh, start + t);
+                    qs[t][head * d..(head + 1) * d].copy_from_slice(&qh);
+                    let base = ((layer * h + head) * cnt + t) * d;
+                    k_out[base..base + d].copy_from_slice(&kh);
+                    v_out[base..base + d].copy_from_slice(&v[head * d..(head + 1) * d]);
+                }
+            }
+
+            for t in 0..cnt {
+                let mut attn_out = vec![0.0f32; m];
+                for head in 0..h {
+                    let qh = &qs[t][head * d..(head + 1) * d];
+                    // Quantized history scores (rows 0..start).
+                    cache.key_dots(layer, head, qh, &mut hist);
+                    let mut mx = f32::NEG_INFINITY;
+                    for sc in hist.iter_mut() {
+                        *sc /= sqrt_d;
+                        mx = mx.max(*sc);
+                    }
+                    // FP32 in-chunk causal scores (chunk rows 0..=t).
+                    let mut loc = Vec::with_capacity(t + 1);
+                    for u in 0..=t {
+                        let base = ((layer * h + head) * cnt + u) * d;
+                        let kh = &k_out[base..base + d];
+                        let dot: f32 = qh.iter().zip(kh).map(|(a, b)| a * b).sum();
+                        let sc = dot / sqrt_d;
+                        mx = mx.max(sc);
+                        loc.push(sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for (w, &sc) in wbuf.iter_mut().zip(hist.iter()) {
+                        let e = (sc - mx).exp();
+                        denom += e;
+                        *w = e;
+                    }
+                    let mut acc = vec![0.0f32; d];
+                    cache.value_accumulate(layer, head, &wbuf, &mut acc);
+                    for (u, &sc) in loc.iter().enumerate() {
+                        let w = (sc - mx).exp();
+                        denom += w;
+                        let base = ((layer * h + head) * cnt + u) * d;
+                        for (a, b) in acc.iter_mut().zip(&v_out[base..base + d]) {
+                            *a += w * b;
+                        }
+                    }
+                    for (o, a) in attn_out[head * d..(head + 1) * d].iter_mut().zip(&acc) {
+                        *o = a / denom;
+                    }
+                }
+                matvec_acc(&attn_out, wo, m, &mut xs[t]);
+                let xn = rmsnorm(&xs[t], ln2);
+                let hidden: Vec<f32> = matvec(&xn, w1, sp.d_ff).into_iter().map(gelu).collect();
+                matvec_acc(&hidden, w2, m, &mut xs[t]);
+            }
+        }
+
+        let xf = rmsnorm(&xs[cnt - 1], self.weights.param("ln_f"));
+        Ok(CpuPrefillChunk { logits: self.lm_head(&xf), k: k_out, v: v_out })
+    }
+
     fn lm_head(&self, x: &[f32]) -> Vec<f32> {
         let sp = &self.spec;
         let m = sp.d_model();
@@ -224,6 +375,7 @@ impl CpuModel {
             heads: sp.heads,
             max_seq: sp.max_seq,
             head_dim: sp.head_dim,
+            block_size: sp.block_size,
             variant: Variant::Naive,
             isa,
         };
@@ -397,7 +549,7 @@ impl CpuModel {
                 let codec_k = wave.head_codec(layer, 0, head);
                 for g in wave.groups(layer, 0) {
                     let slab = wave.head_rows_raw(layer, 0, g, head);
-                    let sc = wave.head_scales(g.members[0], layer, 0, head);
+                    let sc = wave.head_scales(g.members[0], layer, 0, g.bi, head);
                     scratch.members.clear();
                     scratch.members.extend(g.members.iter().map(|&m| MqMember {
                         inp: m * d,
@@ -446,7 +598,7 @@ impl CpuModel {
                 let codec_v = wave.head_codec(layer, 1, head);
                 for g in wave.groups(layer, 1) {
                     let slab = wave.head_rows_raw(layer, 1, g, head);
-                    let sc = wave.head_scales(g.members[0], layer, 1, head);
+                    let sc = wave.head_scales(g.members[0], layer, 1, g.bi, head);
                     scratch.members.clear();
                     scratch.members.extend(g.members.iter().map(|&m| MqMember {
                         inp: m * stride + g.bi * bs,
@@ -659,8 +811,11 @@ pub trait CacheAccess {
 }
 
 /// Dense staged INT8 cache in artifact layout: `kq`/`vq` are `(L, H, S,
-/// d)`, scales `(L, H, d)` — what the gather path materializes and the
-/// PJRT decode artifacts consume.
+/// d)`, scales `(L, H, B, d)` with one grid per `block_size`-row block —
+/// what the gather path materializes and the PJRT decode artifacts
+/// consume. Attention walks the slab in block-sized row chunks so each
+/// chunk dequantizes through its own grid; the per-row kernel math is
+/// unchanged, so the walk is bit-identical to the paged path's.
 pub struct StagedI8Cache<'a> {
     pub kq: &'a [i8],
     pub k_scales: &'a [f32],
@@ -669,37 +824,45 @@ pub struct StagedI8Cache<'a> {
     pub heads: usize,
     pub max_seq: usize,
     pub head_dim: usize,
+    pub block_size: usize,
     pub variant: Variant,
     /// Resolved kernel backend (scalar variants or explicit SIMD).
     pub isa: Isa,
 }
 
 impl StagedI8Cache<'_> {
+    /// Scale blocks per stream in the staged ABI.
     #[inline]
-    fn slab<'b>(&self, data: &'b [i8], layer: usize, head: usize, rows: usize) -> &'b [i8] {
-        let (h, s, d) = (self.heads, self.max_seq, self.head_dim);
-        let base = (layer * h + head) * s * d;
-        &data[base..base + rows * d]
-    }
-
-    #[inline]
-    fn head_scales<'b>(&self, scales: &'b [f32], layer: usize, head: usize) -> &'b [f32] {
-        let (h, d) = (self.heads, self.head_dim);
-        &scales[(layer * h + head) * d..(layer * h + head + 1) * d]
+    fn scale_blocks(&self) -> usize {
+        self.max_seq.div_ceil(self.block_size)
     }
 }
 
 impl CacheAccess for StagedI8Cache<'_> {
     fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
-        let slab = self.slab(self.kq, layer, head, scores.len());
-        let sc = self.head_scales(self.k_scales, layer, head);
-        simd::dot_rows_i8(self.isa, self.variant, q, slab, sc, scores);
+        let (h, s, d, bs) = (self.heads, self.max_seq, self.head_dim, self.block_size);
+        let (base, sbase) = ((layer * h + head) * s * d, (layer * h + head) * self.scale_blocks() * d);
+        let mut t0 = 0;
+        while t0 < scores.len() {
+            let rows = bs.min(scores.len() - t0);
+            let slab = &self.kq[base + t0 * d..base + (t0 + rows) * d];
+            let sc = &self.k_scales[sbase + (t0 / bs) * d..sbase + (t0 / bs + 1) * d];
+            simd::dot_rows_i8(self.isa, self.variant, q, slab, sc, &mut scores[t0..t0 + rows]);
+            t0 += rows;
+        }
     }
 
     fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
-        let slab = self.slab(self.vq, layer, head, w.len());
-        let sc = self.head_scales(self.v_scales, layer, head);
-        simd::accumulate_rows_i8(self.isa, self.variant, w, slab, sc, acc);
+        let (h, s, d, bs) = (self.heads, self.max_seq, self.head_dim, self.block_size);
+        let (base, sbase) = ((layer * h + head) * s * d, (layer * h + head) * self.scale_blocks() * d);
+        let mut t0 = 0;
+        while t0 < w.len() {
+            let rows = bs.min(w.len() - t0);
+            let slab = &self.vq[base + t0 * d..base + (t0 + rows) * d];
+            let sc = &self.v_scales[sbase + (t0 / bs) * d..sbase + (t0 / bs + 1) * d];
+            simd::accumulate_rows_i8(self.isa, self.variant, &w[t0..t0 + rows], slab, sc, acc);
+            t0 += rows;
+        }
     }
 }
 
@@ -757,7 +920,6 @@ impl CacheAccess for PagedCache<'_> {
     fn key_dots(&self, layer: usize, head: usize, q: &[f32], scores: &mut [f32]) {
         let stream = self.view.stream(layer, 0);
         debug_assert_eq!(scores.len(), stream.len(), "score buffer vs history len");
-        let sc = stream.head_scales(head);
         let codec = stream.head_codec(head);
         let mut scratch = self.scratch.borrow_mut();
         let mut t0 = 0;
@@ -769,7 +931,7 @@ impl CacheAccess for PagedCache<'_> {
                 self.variant,
                 q,
                 slab,
-                sc,
+                stream.head_scales(bi, head),
                 &mut scratch,
                 &mut scores[t0..t0 + rows],
             );
@@ -779,7 +941,6 @@ impl CacheAccess for PagedCache<'_> {
 
     fn value_accumulate(&self, layer: usize, head: usize, w: &[f32], acc: &mut [f32]) {
         let stream = self.view.stream(layer, 1);
-        let sc = stream.head_scales(head);
         let codec = stream.head_codec(head);
         let mut scratch = self.scratch.borrow_mut();
         let mut t0 = 0;
@@ -791,7 +952,7 @@ impl CacheAccess for PagedCache<'_> {
                 self.variant,
                 &w[t0..t0 + rows],
                 slab,
-                sc,
+                stream.head_scales(bi, head),
                 &mut scratch,
                 acc,
             );
@@ -812,27 +973,34 @@ mod tests {
         CpuModel::new(spec, w)
     }
 
+    /// Quantize a dense (L, H, S, d) cache into the staged ABI: per-block
+    /// (L, H, B, d) scales, each grid frozen over its own block's rows —
+    /// the same layout `KvCacheManager::set_prefill` + gather produce.
     fn quantize_cache(
         spec: &ModelSpec,
         cache: &[f32],
         len: usize,
     ) -> (Vec<i8>, Vec<f32>) {
-        let (l, h, s, d) = (spec.layers, spec.heads, spec.max_seq, spec.head_dim);
+        let (l, h, s, d, bs) =
+            (spec.layers, spec.heads, spec.max_seq, spec.head_dim, spec.block_size);
+        let nb = s.div_ceil(bs);
         let mut q = vec![0i8; l * h * s * d];
-        let mut scales = vec![0.0f32; l * h * d];
+        let mut scales = vec![0.0f32; l * h * nb * d];
         for li in 0..l {
             for hi in 0..h {
-                for ch in 0..d {
-                    let mut m = 0.0f32;
-                    for t in 0..len {
-                        m = m.max(cache[((li * h + hi) * s + t) * d + ch].abs());
-                    }
-                    scales[(li * h + hi) * d + ch] = m / crate::QMAX;
-                }
-                for t in 0..len {
+                for bi in 0..nb {
+                    let rows = (bi * bs)..len.min((bi + 1) * bs);
                     for ch in 0..d {
-                        let i = ((li * h + hi) * s + t) * d + ch;
-                        q[i] = quantize_one(cache[i], scales[(li * h + hi) * d + ch]);
+                        let mut m = 0.0f32;
+                        for t in rows.clone() {
+                            m = m.max(cache[((li * h + hi) * s + t) * d + ch].abs());
+                        }
+                        let sc = m / crate::QMAX;
+                        scales[((li * h + hi) * nb + bi) * d + ch] = sc;
+                        for t in rows.clone() {
+                            let i = ((li * h + hi) * s + t) * d + ch;
+                            q[i] = quantize_one(cache[i], sc);
+                        }
                     }
                 }
             }
@@ -986,6 +1154,72 @@ mod tests {
             mgr.free(a);
             mgr.free(b);
         }
+    }
+
+    #[test]
+    fn chunked_prefill_tracks_whole_prompt_and_is_deterministic() {
+        // Chunked prefill attends over the *quantized* history, so its
+        // logits differ from the FP32 whole-prompt pass only within
+        // quantization noise; and two chunked runs are bit-identical
+        // (the byte-determinism the prefix cache's suffix prefill needs).
+        use crate::kvcache::manager::{CacheConfig, KvCacheManager};
+        use crate::kvcache::{Precision, QuantPolicy};
+        let mdl = model();
+        let sp = mdl.spec.clone();
+        let c = CacheConfig {
+            layers: sp.layers,
+            heads: sp.heads,
+            head_dim: sp.head_dim,
+            max_seq: sp.max_seq,
+            block_size: sp.block_size,
+            num_blocks: 64,
+            scale_margin: 1.0,
+        };
+        let mut rng = Rng::new(17);
+        let tokens: Vec<i32> = (0..12).map(|_| rng.below(64) as i32).collect();
+        let bs = c.block_size;
+        let run = |mgr: &mut KvCacheManager| {
+            let seq = mgr.new_sequence();
+            let mut logits = Vec::new();
+            let mut start = 0;
+            while start < tokens.len() {
+                let end = tokens.len().min(start + bs);
+                let res = {
+                    let view = mgr.view(seq).unwrap();
+                    mdl.prefill_chunk(
+                        &tokens[start..end],
+                        start,
+                        &view,
+                        Variant::Naive,
+                        Isa::Scalar,
+                    )
+                    .unwrap()
+                };
+                mgr.append_prefill_chunk(seq, &res.k, &res.v, end - start).unwrap();
+                logits = res.logits;
+                start = end;
+            }
+            (seq, logits)
+        };
+        let mut mgr =
+            KvCacheManager::new(c, QuantPolicy::uniform(Precision::Int8, c.layers, c.heads));
+        let (a, la) = run(&mut mgr);
+        let (b, lb) = run(&mut mgr);
+        let bits = |x: &[f32]| x.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&la), bits(&lb), "chunked prefill must be deterministic");
+        let full = mdl.prefill(&tokens, tokens.len());
+        let argmax = |x: &[f32]| {
+            x.iter().enumerate().max_by(|p, q| p.1.total_cmp(q.1)).unwrap().0
+        };
+        assert_eq!(argmax(&la), argmax(&full.logits), "greedy token diverged");
+        let max_diff = la
+            .iter()
+            .zip(&full.logits)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 0.2, "chunked-vs-whole logits diff {max_diff}");
+        mgr.free(a);
+        mgr.free(b);
     }
 
     #[test]

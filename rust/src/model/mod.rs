@@ -21,6 +21,6 @@ pub mod tokenizer;
 pub mod weights;
 
 pub use cpu_ref::{BatchScratch, CacheAccess, CpuModel, PagedCache, StagedF32Cache, StagedI8Cache};
-pub use runner::{DecodeResult, LmBackend, PjrtBackend, PrefillResult};
+pub use runner::{DecodeResult, LmBackend, PjrtBackend, PrefillChunkResult, PrefillResult};
 pub use spec::ModelSpec;
 pub use tokenizer::ByteTokenizer;

@@ -31,6 +31,14 @@ pub struct DecodeResult {
     pub v_new: Vec<f32>,
 }
 
+/// Output of one chunk of an incremental prefill: logits at the chunk's
+/// last position + the chunk's K/V rows `(L, H, C, d)`.
+pub struct PrefillChunkResult {
+    pub logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
 /// What the engine needs from a model implementation.
 pub trait LmBackend {
     fn spec(&self) -> &ModelSpec;
@@ -39,9 +47,36 @@ pub trait LmBackend {
     /// implementations pad).
     fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult>;
 
-    /// Single-token decode over the INT8 cache (artifact layouts).
-    /// `isa` is the resolved kernel backend for host-side attention
-    /// kernels; device backends (PJRT) ignore it.
+    /// Can this backend prefill one block-sized chunk at a time
+    /// ([`Self::prefill_chunk`]), attending over the quantized paged
+    /// history? Required for partial prefix-cache hits (suffix prefill);
+    /// backends without it fall back to whole-prompt prefill and
+    /// exact-match-only prefix reuse.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+
+    /// Forward over one prompt chunk at positions `start..start +
+    /// chunk.len()`, attending over the already-cached quantized rows
+    /// `0..start` through `view` plus FP32 causal attention within the
+    /// chunk. Logits are at the chunk's last position; K/V rows come back
+    /// `(L, H, C, d)` for `KvCacheManager::append_prefill_chunk`. Only
+    /// called when [`Self::supports_chunked_prefill`].
+    fn prefill_chunk(
+        &self,
+        _chunk: &[i32],
+        _start: usize,
+        _view: &CacheView,
+        _kernel: Variant,
+        _isa: Isa,
+    ) -> Result<PrefillChunkResult> {
+        bail!("backend does not support chunked prefill")
+    }
+
+    /// Single-token decode over the INT8 cache (artifact layouts: `(L, H,
+    /// S, d)` payloads, `(L, H, B, d)` per-block scales with `B =
+    /// ceil(max_seq / block_size)`). `isa` is the resolved kernel backend
+    /// for host-side attention kernels; device backends (PJRT) ignore it.
     #[allow(clippy::too_many_arguments)]
     fn decode_i8(
         &self,
@@ -133,6 +168,22 @@ impl LmBackend for CpuBackend {
     fn prefill(&self, tokens: &[i32], len: usize) -> Result<PrefillResult> {
         let out = self.model.prefill(tokens, len);
         Ok(PrefillResult { logits: out.logits, k: out.k, v: out.v })
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn prefill_chunk(
+        &self,
+        chunk: &[i32],
+        start: usize,
+        view: &CacheView,
+        kernel: Variant,
+        isa: Isa,
+    ) -> Result<PrefillChunkResult> {
+        let out = self.model.prefill_chunk(chunk, start, view, kernel, isa)?;
+        Ok(PrefillChunkResult { logits: out.logits, k: out.k, v: out.v })
     }
 
     fn decode_i8(
@@ -325,13 +376,14 @@ impl LmBackend for PjrtBackend {
     ) -> Result<DecodeResult> {
         let sp = &self.spec;
         let (l, h, s, d) = (sp.layers, sp.heads, sp.max_seq, sp.head_dim);
+        let b = s.div_ceil(sp.block_size);
         let extra = vec![
             self.rt.stage_i32(&[token], &[])?,
             self.rt.stage_i32(&[pos as i32], &[])?,
             self.rt.stage_i8(kq, &[l, h, s, d])?,
-            self.rt.stage_f32(k_scales, &[l, h, d])?,
+            self.rt.stage_f32(k_scales, &[l, h, b, d])?,
             self.rt.stage_i8(vq, &[l, h, s, d])?,
-            self.rt.stage_f32(v_scales, &[l, h, d])?,
+            self.rt.stage_f32(v_scales, &[l, h, b, d])?,
         ];
         let name = match self.decode_kernel {
             DecodeKernel::PlainXla => format!("decode_{}", sp.name),

@@ -6,7 +6,10 @@
 //! per-shard namespacing (`shards[i].*` with aggregated top-level
 //! totals; `engines` kept as a legacy alias), router counters, and typed
 //! [`ApiError`] bodies (`error.code` / `error.message` /
-//! `error.retry_after_ms`).
+//! `error.retry_after_ms`); v3 adds the prefix-trie gauges
+//! (`prefix_partial_hits`, `prefix_saved_tokens`, `prefix_trie_nodes`),
+//! per shard and summed into the top-level totals like every other
+//! numeric gauge.
 
 use crate::config::ServeConfig;
 use crate::coordinator::router::{Router, SubmitError};
@@ -18,7 +21,7 @@ use super::http::HttpResponse;
 use crate::coordinator::request::Priority;
 
 /// Wire-schema version served on every structured GET payload.
-pub const SCHEMA_VERSION: u64 = 2;
+pub const SCHEMA_VERSION: u64 = 3;
 
 /// POST /generate body.
 #[derive(Debug, Clone, PartialEq)]

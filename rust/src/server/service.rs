@@ -155,6 +155,10 @@ mod tests {
         assert_eq!(j.get("engines").at(0).get("engine").as_str(), Some("int8"));
         // Aggregated totals surface at the top level for v1 consumers.
         assert!(j.get("requests_submitted").as_f64().is_some());
+        // v3 prefix-trie gauges aggregate like every other numeric gauge.
+        assert!(j.get("prefix_partial_hits").as_f64().is_some());
+        assert!(j.get("prefix_saved_tokens").as_f64().is_some());
+        assert!(j.get("prefix_trie_nodes").as_f64().is_some());
         assert_eq!(j.get("router").get("shards").as_usize(), Some(1));
         h.drain();
         join.join().unwrap();

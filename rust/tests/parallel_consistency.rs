@@ -248,18 +248,31 @@ fn paged_decode_bit_identical_to_staged_across_variants_and_threads() {
             let id = mgr.new_sequence();
             mgr.set_prefill(id, &pre.k, &pre.v, n).unwrap();
 
-            // Staged path: gather the full dense staging + scales.
+            // Staged path: gather the full dense staging + per-block
+            // scales. The manager stores scales block-major
+            // `[bi][head][ch]`; the staged ABI wants `(L, H, B, d)` with
+            // B derived from max_seq — transpose the allocated blocks
+            // and leave never-allocated block grids zero.
+            let nb = s.div_ceil(spec.block_size);
             let mut kq = vec![0i8; l * h * s * d];
             let mut vq = vec![0i8; l * h * s * d];
-            let mut ks = vec![0.0f32; l * h * d];
-            let mut vs = vec![0.0f32; l * h * d];
+            let mut ks = vec![0.0f32; l * h * nb * d];
+            let mut vs = vec![0.0f32; l * h * nb * d];
             for layer in 0..l {
                 let span = layer * h * s * d..(layer + 1) * h * s * d;
                 mgr.gather_i8(id, layer, 0, &mut kq[span.clone()]).unwrap();
                 mgr.gather_i8(id, layer, 1, &mut vq[span]).unwrap();
-                let sspan = layer * h * d..(layer + 1) * h * d;
-                ks[sspan.clone()].copy_from_slice(mgr.scales(id, layer, 0).unwrap());
-                vs[sspan].copy_from_slice(mgr.scales(id, layer, 1).unwrap());
+                for (kv, dst) in [(0usize, &mut ks), (1, &mut vs)] {
+                    let src = mgr.scales(id, layer, kv).unwrap();
+                    let lbase = layer * h * nb * d;
+                    for bi in 0..src.len() / (h * d) {
+                        for head in 0..h {
+                            let to = lbase + (head * nb + bi) * d;
+                            let from = (bi * h + head) * d;
+                            dst[to..to + d].copy_from_slice(&src[from..from + d]);
+                        }
+                    }
+                }
             }
             // Staged and paged must agree under whichever backend the
             // session resolves (per-backend bit-stability: both paths run
@@ -377,12 +390,15 @@ fn uniform_policy_presets_bit_identical_across_kernels_and_threads() {
 #[test]
 fn uniform_policy_metrics_pin_the_legacy_cache_byte_formulas() {
     // `GET /metrics` cache byte counts for the uniform presets must equal
-    // the pre-refactor closed forms: a staged decode step books
-    // 2·bytes(L·H·S·d) payload + 2·L·H·d·4 scale bytes; a paged step
-    // books the O(len) in-place read volume. One deterministic request
-    // (prompt 3, max_new 4 → decode steps at pos 3, 4, 5) pins both.
+    // the closed forms under per-block scale grids: a staged decode step
+    // books 2·bytes(L·H·S·d) payload + 2·L·H·B·d·4 scale bytes
+    // (B = ceil(max_seq / block_size) staged grid blocks); a paged step
+    // books the O(len) in-place read volume with one H·d·4 grid per
+    // *touched* block per stream. One deterministic request (prompt 3,
+    // max_new 4 → decode steps at pos 3, 4, 5) pins both.
     let spec = ModelSpec::test_tiny();
     let (l, h, d, s) = (spec.layers, spec.heads, spec.head_dim, spec.max_seq);
+    let bs = spec.block_size;
     let run = |paged: bool| {
         let cfg = EngineConfig {
             quant_policy: PolicySpec::uniform(Precision::Int8),
@@ -402,13 +418,13 @@ fn uniform_policy_metrics_pin_the_legacy_cache_byte_formulas() {
 
     let staged = run(false);
     assert_eq!(staged.decode_steps, 3);
-    let staged_step = 2 * (l * h * s * d) + 2 * (l * h * d * 4);
+    let staged_step = 2 * (l * h * s * d) + 2 * (l * h * s.div_ceil(bs) * d * 4);
     assert_eq!(staged.cache_bytes_read, (3 * staged_step) as u64, "staged formula");
 
     let paged = run(true);
     assert_eq!(paged.decode_steps, 3);
     assert_eq!(paged.policy, "uniform:int8", "policy name surfaces in metrics");
-    let per_pos = |pos: usize| 2 * l * (h * pos * d + h * d * 4);
+    let per_pos = |pos: usize| 2 * l * (h * pos * d + pos.div_ceil(bs) * h * d * 4);
     let want: usize = [3usize, 4, 5].iter().map(|&p| per_pos(p)).sum();
     assert_eq!(paged.cache_bytes_read, want as u64, "paged O(len) formula");
 }
@@ -517,9 +533,12 @@ fn staged_and_paged_agree_under_forced_simd_backend() {
 }
 
 /// Spawn one engine with the given decode-batching knob and serve a
-/// COW-shared-prefix wave: two distinct one-block prompts, each
-/// submitted twice, with the prefix cache on — repeats fork the cached
-/// prefill, so decode waves reference shared physical prefix blocks.
+/// COW-shared-prefix wave: two distinct two-block prompts that share
+/// their first block, each submitted twice, with the prefix cache on.
+/// The repeats are exact trie hits; the cross-prompt shared first block
+/// is a *partial* hit (suffix prefill over the second block only), so
+/// decode waves reference physical prefix blocks shared across all four
+/// members — each carrying its own frozen per-block scale grid.
 /// Returns the token streams and the end-of-run metrics snapshot.
 fn batched_wave_run(
     batching: DecodeBatching,
@@ -541,11 +560,17 @@ fn batched_wave_run(
     let (h, join) = engine::spawn(cfg, cpu_factory());
     let mut router = Router::new(RoutePolicy::RoundRobin);
     router.add_engine("eng", h.clone());
-    // Full-block prompts (len == block_size) so forked prefix blocks stay
-    // physically shared through decode (appends COW only the tail block).
+    // Block-multiple prompts (len == 2·block_size) so forked prefix
+    // blocks stay physically shared through decode (appends COW only the
+    // tail block). Block 0 is common to both prompts; block 1 differs —
+    // the second prompt partially hits the first one's trie entry.
     let spec = ModelSpec::test_tiny();
     let base: Vec<Vec<i32>> = (0..2)
-        .map(|p| (0..spec.block_size).map(|t| (p * 13 + t + 1) as i32).collect())
+        .map(|p| {
+            let shared = (0..spec.block_size).map(|t| t as i32 + 1);
+            let own = (0..spec.block_size).map(|t| (p * 13 + t + 2) as i32);
+            shared.chain(own).collect()
+        })
         .collect();
     let streams: Vec<_> = (0..4)
         .map(|i| {
@@ -607,6 +632,9 @@ fn batched_decode_dedups_shared_prefix_blocks() {
     // strictly smaller cache read volume than per-sequence.
     if std::env::var("KVQ_DECODE_BATCHING").as_deref() == Ok("off") {
         return; // forced-off CI job: the mq path is intentionally disabled
+    }
+    if std::env::var("KVQ_PREFIX_CACHE_BLOCKS").as_deref() == Ok("0") {
+        return; // cache-off CI job: no COW sharing, nothing to dedup
     }
     let (_, off) =
         batched_wave_run(DecodeBatching::Off, true, Variant::Vectorized, KernelBackend::Scalar, 1);
