@@ -28,6 +28,14 @@
 //!     block's own rows with decode rows clamping into the last block's
 //!     grid (the paged cache's policy) — fig4-style key / attention /
 //!     value-output error plus the encode overhead (runs in --smoke)
+//! A13. tier_sweep: tiered KV cache on the serving engine — hot-pool
+//!     fraction {1.0, 0.5, 0.25} × cold tier {off, on} on a warm →
+//!     pressure-burst → repeat workload (k8v4 policy, so the physical
+//!     sub-pool footprint is also asserted strictly below the padded
+//!     widest-stream baseline). Records preemptions, preemptions
+//!     avoided (reclaims absorbed by demotion), demotions, promotions,
+//!     compression ratio, and promote latency; every cell's tokens must
+//!     be byte-identical to the unconstrained run (runs in --smoke)
 //!
 //! Emits `bench_results/BENCH_ablations.json` (schema kvq-bench-v1; see
 //! rust/README.md). `--smoke` runs a tiny subset on the smallest CI shape
@@ -635,6 +643,170 @@ fn main() -> anyhow::Result<()> {
             );
         }
         kvq::bench::figures::emit(&t12, "ablation_a12_scale_granularity");
+    }
+
+    // A13: tiered KV cache — hot-pool fraction × cold tier off/on on the
+    // serving engine (CPU oracle backend, so it runs in --smoke). Three
+    // deterministic phases per cell: warm two prompts into the prefix
+    // trie (sequential), pressure-burst four fresh prompts concurrently
+    // on a constrained pool (forces demotion with the tier on, eviction
+    // with it off), then repeat the warm prompts (promotions with the
+    // tier on). k8v4 keeps V streams at half the K width, so the cell
+    // also checks the sub-pool acceptance bar: physical pool footprint
+    // strictly below a single pool padded to the widest stream.
+    {
+        use kvq::coordinator::batcher::BatcherConfig;
+        use kvq::coordinator::engine::{self, EngineConfig};
+        use kvq::coordinator::request::collect_response;
+        use kvq::coordinator::router::{RoutePolicy, Router};
+        use kvq::kvcache::PolicySpec;
+        use kvq::model::runner::CpuBackend;
+        use kvq::model::sample::SamplingParams;
+        use kvq::model::weights::Weights;
+        use kvq::model::ModelSpec;
+
+        let spec = ModelSpec::test_tiny();
+        let resolved = PolicySpec::K8V4.resolve(spec.layers, spec.heads, spec.head_dim)?;
+        let padded_block_bytes = resolved.max_block_bytes(spec.block_size, spec.head_dim);
+        let prompt_len = 2 * spec.block_size; // 2 blocks per stream
+        let max_new = spec.block_size; // +1 block per stream of decode growth
+        let blocks_per_seq = 2 * spec.layers * (prompt_len + max_new).div_ceil(spec.block_size);
+        let base_blocks = blocks_per_seq * 8; // room for every sequence at once
+        let vocab = spec.vocab;
+        let prompt = |tag: usize| -> Vec<i32> {
+            (0..prompt_len).map(|j| ((tag * 7 + j * 3 + 5) % vocab) as i32).collect()
+        };
+        let warm: Vec<Vec<i32>> = vec![prompt(1), prompt(2)];
+        let fresh: Vec<Vec<i32>> = (3..7).map(prompt).collect();
+
+        let run_cell = |num_blocks: usize, cold_blocks: usize| {
+            let ecfg = EngineConfig {
+                quant_policy: PolicySpec::K8V4,
+                num_blocks: Some(num_blocks),
+                prefix_cache_blocks: 64,
+                cold_tier_blocks: Some(cold_blocks),
+                prefetch_depth: 2,
+                batcher: BatcherConfig { max_prefills_per_step: 4, ..Default::default() },
+                ..Default::default()
+            };
+            let (h, join) = engine::spawn(ecfg, || {
+                let spec = ModelSpec::test_tiny();
+                let w = Weights::synthetic(&spec, 7);
+                Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+            });
+            let mut router = Router::new(RoutePolicy::RoundRobin);
+            router.add_engine("tier", h.clone());
+            let mut outputs: Vec<Vec<i32>> = Vec::new();
+            // Phase 1 (warm): sequential, populates the prefix trie.
+            for p in &warm {
+                let (_, rx) =
+                    router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+                outputs.push(collect_response(&rx).0);
+            }
+            // Phase 2 (pressure): concurrent burst of fresh prompts.
+            let streams: Vec<_> = fresh
+                .iter()
+                .map(|p| {
+                    router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1
+                })
+                .collect();
+            for rx in &streams {
+                outputs.push(collect_response(rx).0);
+            }
+            // Phase 3 (repeat): the warm prompts again — promotions when
+            // the cold tier holds what phase 2 demoted.
+            for p in &warm {
+                let (_, rx) =
+                    router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+                outputs.push(collect_response(&rx).0);
+            }
+            h.drain();
+            join.join().ok();
+            (outputs, h.metrics.snapshot())
+        };
+
+        let mut t13 = Table::new(
+            "A13 — tier_sweep: hot-pool fraction x cold tier (k8v4, warm/burst/repeat)",
+            &["hot", "cold", "preempt", "avoided", "demote", "promote", "ratio", "p50"],
+        );
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for frac in [1.0f64, 0.5, 0.25] {
+            let num_blocks = (base_blocks as f64 * frac) as usize;
+            for cold_on in [false, true] {
+                let cold_blocks = if cold_on { num_blocks } else { 0 };
+                let (outputs, snap) = run_cell(num_blocks, cold_blocks);
+                match &reference {
+                    None => reference = Some(outputs),
+                    Some(expect) => assert_eq!(
+                        &outputs,
+                        expect,
+                        "tier cell hot={frac} cold={cold_on} must be byte-identical \
+                         to the unconstrained run"
+                    ),
+                }
+                assert!(
+                    (snap.pool_physical_bytes as usize) < padded_block_bytes * num_blocks,
+                    "k8v4 sub-pools must sit strictly below the padded widest-stream \
+                     pool ({} vs {})",
+                    snap.pool_physical_bytes,
+                    padded_block_bytes * num_blocks
+                );
+                if cold_on && frac < 1.0 {
+                    assert!(
+                        snap.tier.preemptions_avoided > 0,
+                        "constrained pool with the tier on must absorb reclaims by \
+                         demotion (hot frac {frac})"
+                    );
+                    assert!(snap.tier.promotions > 0, "repeats must promote from cold");
+                }
+                let label = format!(
+                    "hot{}_{}",
+                    (frac * 100.0) as usize,
+                    if cold_on { "on" } else { "off" }
+                );
+                let promote_latency = if snap.tier.promotions > 0 {
+                    snap.tier.promote_secs / snap.tier.promotions as f64
+                } else {
+                    0.0
+                };
+                t13.row(&[
+                    format!("{frac:.2}"),
+                    if cold_on { "on" } else { "off" }.into(),
+                    snap.preemptions.to_string(),
+                    snap.tier.preemptions_avoided.to_string(),
+                    snap.tier.demotions.to_string(),
+                    snap.tier.promotions.to_string(),
+                    format!("{:.2}x", snap.tier.compression_ratio()),
+                    cell_time(promote_latency),
+                ]);
+                report.add(
+                    "a13_tier_sweep",
+                    &label,
+                    None,
+                    &[
+                        ("hot_pool_fraction", Json::Num(frac)),
+                        ("pool_blocks", Json::Num(num_blocks as f64)),
+                        ("cold_tier_blocks", Json::Num(cold_blocks as f64)),
+                        ("preemptions", Json::Num(snap.preemptions as f64)),
+                        ("preemptions_avoided", Json::Num(snap.tier.preemptions_avoided as f64)),
+                        ("demotions", Json::Num(snap.tier.demotions as f64)),
+                        ("promotions", Json::Num(snap.tier.promotions as f64)),
+                        ("prefetch_hits", Json::Num(snap.tier.prefetch_hits as f64)),
+                        ("prefetch_misses", Json::Num(snap.tier.prefetch_misses as f64)),
+                        ("compression_ratio", Json::Num(snap.tier.compression_ratio())),
+                        ("promote_latency_s", Json::Num(promote_latency)),
+                        ("pool_physical_bytes", Json::Num(snap.pool_physical_bytes as f64)),
+                        ("padded_pool_bytes", Json::Num((padded_block_bytes * num_blocks) as f64)),
+                        ("prefix_saved_tokens", Json::Num(snap.prefix_saved_tokens as f64)),
+                    ],
+                );
+            }
+        }
+        println!(
+            "[a13_tier_sweep] tokens identical across all cells ✓  (k8v4 physical pool \
+             strictly below padded baseline)"
+        );
+        kvq::bench::figures::emit(&t13, "ablation_a13_tier_sweep");
     }
 
     // A5 + A7 need the runtime.

@@ -19,7 +19,11 @@
 //! **prefix_trie scenario**: a RAG-style workload (8 system prompts ×
 //! several distinct suffixes + exact repeats) reporting the trie's
 //! hit-rate and prefill-tokens-saved against the exact-match baseline
-//! (full hits only), with byte-identical tokens vs a cache-disabled run.
+//! (full hits only), with byte-identical tokens vs a cache-disabled run
+//! — and the **tiered_cache scenario**: long-context prompts on an
+//! undersized pool with the compressed cold tier off vs on, asserting
+//! byte-identical tokens while the tier-on run demotes, promotes, and
+//! absorbs pool pressure without destroying cached prefixes.
 //!
 //! Flags: --model kvq-3m|kvq-25m --requests N --max-new N --concurrency N
 //!        --threads N (skip the sweep, run one worker count)
@@ -488,6 +492,113 @@ fn prefix_trie_scenario(report: &mut BenchReport) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Tiered-cache scenario: long-context prompts (3 of the 4 blocks
+/// test-tiny's max_seq allows) on a deliberately undersized pool, cold
+/// tier off vs on. Three phases — warm two prompts into the trie,
+/// pressure-burst two fresh prompts concurrently (forces the warm
+/// entries out of the hot pool: destroyed with the tier off, demoted to
+/// the compressed cold tier with it on), then repeat the warm prompts
+/// (promotions). The two runs must emit byte-identical tokens; the
+/// tier-on run reports demotions / promotions / compression ratio /
+/// promote latency. Runs in `--smoke` so CI's `BENCH_e2e_smoke.json`
+/// carries a `tiered_cache` section.
+fn tiered_cache_scenario(report: &mut BenchReport) -> anyhow::Result<()> {
+    let spec = ModelSpec::test_tiny();
+    let bs = spec.block_size;
+    let prompt_len = 3 * bs; // long context: 3 of the 4 blocks available
+    let max_new = spec.max_seq - prompt_len;
+    let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(bs);
+    let num_blocks = blocks_per_seq * 5 / 2; // ~2.5 sequences: undersized
+    let vocab = spec.vocab;
+    let prompt = |tag: usize| -> Vec<i32> {
+        (0..prompt_len).map(|j| ((tag * 11 + j * 5 + 3) % vocab) as i32).collect()
+    };
+    let warm: Vec<Vec<i32>> = vec![prompt(1), prompt(2)];
+    let fresh: Vec<Vec<i32>> = vec![prompt(3), prompt(4)];
+
+    let run = |cold_blocks: usize| {
+        let ecfg = EngineConfig {
+            quant_policy: PolicySpec::uniform(Precision::Int8),
+            num_blocks: Some(num_blocks),
+            prefix_cache_blocks: 64,
+            cold_tier_blocks: Some(cold_blocks),
+            prefetch_depth: 2,
+            batcher: BatcherConfig { max_prefills_per_step: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let (h, join) = engine::spawn(ecfg, backend_factory(true, "test-tiny"));
+        let mut router = Router::new(RoutePolicy::RoundRobin);
+        router.add_engine("tier", h.clone());
+        let mut outputs: Vec<Vec<i32>> = Vec::new();
+        for p in &warm {
+            let (_, rx) = router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+            outputs.push(collect_response(&rx).0);
+        }
+        let streams: Vec<_> = fresh
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        for rx in &streams {
+            outputs.push(collect_response(rx).0);
+        }
+        for p in &warm {
+            let (_, rx) = router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+            outputs.push(collect_response(&rx).0);
+        }
+        h.drain();
+        join.join().ok();
+        (outputs, h.metrics.snapshot())
+    };
+
+    let (off_tokens, off_snap) = run(0);
+    let (on_tokens, on_snap) = run(num_blocks);
+    assert_eq!(
+        off_tokens,
+        on_tokens,
+        "tiered run must emit byte-identical tokens to the tier-off run"
+    );
+    assert!(on_snap.tier.demotions > 0, "undersized pool must demote the warm prefixes");
+    assert!(on_snap.tier.promotions > 0, "repeated long prompts must promote from cold");
+    assert!(
+        on_snap.tier.preemptions_avoided > 0,
+        "pool pressure must be absorbed by demotion, not preemption or eviction"
+    );
+    for (label, snap) in [("off", &off_snap), ("on", &on_snap)] {
+        let promote_latency = if snap.tier.promotions > 0 {
+            snap.tier.promote_secs / snap.tier.promotions as f64
+        } else {
+            0.0
+        };
+        report.add(
+            "tiered_cache",
+            label,
+            None,
+            &[
+                ("pool_blocks", Json::Num(num_blocks as f64)),
+                ("prompt_len", Json::Num(prompt_len as f64)),
+                ("preemptions", Json::Num(snap.preemptions as f64)),
+                ("preemptions_avoided", Json::Num(snap.tier.preemptions_avoided as f64)),
+                ("demotions", Json::Num(snap.tier.demotions as f64)),
+                ("promotions", Json::Num(snap.tier.promotions as f64)),
+                ("prefetch_hits", Json::Num(snap.tier.prefetch_hits as f64)),
+                ("prefetch_misses", Json::Num(snap.tier.prefetch_misses as f64)),
+                ("compression_ratio", Json::Num(snap.tier.compression_ratio())),
+                ("promote_latency_s", Json::Num(promote_latency)),
+                ("prefix_saved_tokens", Json::Num(snap.prefix_saved_tokens as f64)),
+            ],
+        );
+    }
+    println!(
+        "[tiered_cache] tokens identical ✓  {} demotions, {} promotions, {:.2}x cold \
+         compression, {} reclaims absorbed without preemption",
+        on_snap.tier.demotions,
+        on_snap.tier.promotions,
+        on_snap.tier.compression_ratio(),
+        on_snap.tier.preemptions_avoided
+    );
+    Ok(())
+}
+
 /// Policy sweep on the CPU oracle: serve the same workload under each
 /// named quantization policy (`uniform:int8`, `uniform:int4`, `k8v4`,
 /// `sink8`) and record throughput, decode ns/token, cache bytes/token,
@@ -709,6 +820,10 @@ fn main() -> anyhow::Result<()> {
     // Radix-trie prefix cache vs exact matching on a RAG workload (CPU
     // backend; runs in --smoke for the CI artifact).
     prefix_trie_scenario(&mut report)?;
+
+    // Tiered cache: long-context prompts on an undersized pool, cold
+    // tier off vs on (CPU backend; runs in --smoke for the CI artifact).
+    tiered_cache_scenario(&mut report)?;
 
     // Quantization-policy sweep (CPU backend; runs in --smoke too).
     policy_sweep_scenario(&mut report, args.usize_or("policy-sweep-requests", 4))?;

@@ -441,14 +441,19 @@ pub fn fig4_policy_table() -> Table {
 
 /// Table 1 policy sweep: the closed-form memory model under each named
 /// policy on the paper's Table-1 geometry. `k8v4` must land between the
-/// uniform int8 (4x) and int4 (8x) caches (≈5.3x).
+/// uniform int8 (4x) and int4 (8x) caches (≈5.3x). The physical columns
+/// report the pooled footprint per span (one block in every stream,
+/// block_size 16): width-aware sub-pools vs a single pool padded to the
+/// widest stream, and the bytes that padding would have wasted.
 pub fn table1_policies() -> Table {
     use crate::kvcache::{MemoryModel, PolicyMemory};
     use crate::util::stats::fmt_bytes;
     let base = MemoryModel::table1_example();
+    let block_size = 16usize;
     let mut t = Table::new(
         "Table 1b — KV cache memory by quantization policy (L=32 H=32 d=128 T=131072)",
-        &["policy", "payload", "scales", "total", "vs fp32"],
+        &["policy", "payload", "scales", "total", "vs fp32", "span (sub-pools)",
+          "span (padded)", "reclaimed/span"],
     );
     for spec in sweep_policies() {
         let policy = spec
@@ -461,6 +466,9 @@ pub fn table1_policies() -> Table {
             fmt_bytes(m.scale_overhead_bytes() as f64),
             fmt_bytes(m.total_bytes() as f64),
             format!("{:.2}x", m.compression_vs_fp32()),
+            fmt_bytes(m.subpool_span_bytes(block_size) as f64),
+            fmt_bytes(m.padded_span_bytes(block_size) as f64),
+            fmt_bytes(m.reclaimed_span_bytes(block_size) as f64),
         ]);
     }
     t

@@ -117,6 +117,18 @@ pub struct ServeConfig {
     /// Router overflow queue capacity once every shard is saturated;
     /// beyond it, submissions get a typed 503.
     pub overflow_depth: usize,
+    /// Compressed cold-tier capacity in blocks (`--cold-tier-blocks`).
+    /// Unset = auto-size to the hot pool; `0` disables the tier. Only
+    /// engages when the prefix cache is on; `KVQ_COLD_TIER` env
+    /// overrides.
+    pub cold_tier_blocks: Option<usize>,
+    /// Persistent prefix snapshot path (`--snapshot-path`): the cold
+    /// tier (plus the trie, demoted at drain) is written here on engine
+    /// exit and reloaded at startup. Unset = no persistence.
+    pub snapshot_path: Option<String>,
+    /// Cold-tier async prefetch ready-map depth (`--prefetch-depth`);
+    /// 0 = synchronous decompression only.
+    pub prefetch_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -143,6 +155,9 @@ impl Default for ServeConfig {
             affinity: Affinity::Session,
             queue_depth: 0,
             overflow_depth: 256,
+            cold_tier_blocks: None,
+            snapshot_path: None,
+            prefetch_depth: 2,
         }
     }
 }
@@ -180,6 +195,9 @@ pub const CLI_FLAGS: &[(&str, &str)] = &[
     ("affinity", "affinity"),
     ("queue-depth", "queue_depth"),
     ("overflow-depth", "overflow_depth"),
+    ("cold-tier-blocks", "cold_tier_blocks"),
+    ("snapshot-path", "snapshot_path"),
+    ("prefetch-depth", "prefetch_depth"),
 ];
 
 impl ServeConfig {
@@ -267,6 +285,12 @@ impl ServeConfig {
             }
             "queue_depth" => self.queue_depth = usize_val(key, v)?,
             "overflow_depth" => self.overflow_depth = usize_val(key, v)?,
+            "cold_tier_blocks" => self.cold_tier_blocks = Some(usize_val(key, v)?),
+            "snapshot_path" => {
+                let s = str_val(key, v)?;
+                self.snapshot_path = if s.is_empty() { None } else { Some(s.to_string()) };
+            }
+            "prefetch_depth" => self.prefetch_depth = usize_val(key, v)?,
             _ => return Ok(false),
         }
         Ok(true)
@@ -314,6 +338,9 @@ impl ServeConfig {
             paged_decode: self.paged_decode,
             kernel_backend: self.kernel_backend,
             decode_batching: self.decode_batching,
+            cold_tier_blocks: self.cold_tier_blocks,
+            snapshot_path: self.snapshot_path.clone(),
+            prefetch_depth: self.prefetch_depth,
         }
     }
 
@@ -652,6 +679,41 @@ mod tests {
         assert_eq!(c.shards, 1);
         assert_eq!(c.affinity, Affinity::None);
         assert_eq!(c.queue_depth, 2);
+    }
+
+    #[test]
+    fn tier_knobs_round_trip() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.cold_tier_blocks, None, "auto-size is the default");
+        assert_eq!(c.snapshot_path, None);
+        assert_eq!(c.prefetch_depth, 2);
+        c.apply_json(
+            &Json::parse(
+                r#"{"cold_tier_blocks":128,"snapshot_path":"/tmp/kvq.snap","prefetch_depth":4}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.cold_tier_blocks, Some(128));
+        assert_eq!(c.snapshot_path.as_deref(), Some("/tmp/kvq.snap"));
+        assert_eq!(c.prefetch_depth, 4);
+        let ec = c.engine_config();
+        assert_eq!(ec.cold_tier_blocks, Some(128));
+        assert_eq!(ec.snapshot_path.as_deref(), Some("/tmp/kvq.snap"));
+        assert_eq!(ec.prefetch_depth, 4);
+        // CLI wins over the file; 0 means "tier off"; empty path clears.
+        let args = Args::parse_from(
+            ["--cold-tier-blocks", "0", "--snapshot-path", "", "--prefetch-depth", "0"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.cold_tier_blocks, Some(0));
+        assert_eq!(c.snapshot_path, None);
+        assert_eq!(c.prefetch_depth, 0);
+        let bad =
+            Args::parse_from(["--cold-tier-blocks", "icy"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

@@ -55,9 +55,10 @@ pub struct AdmissionConfig {
     pub max_running: usize,
     /// Max queued (not yet admitted) requests before hard rejection.
     pub max_waiting: usize,
-    /// Keep this fraction of cache blocks free as headroom (watermark);
-    /// admission pretends the pool is smaller by this factor. Under
-    /// optimistic admission this is the preemption trigger margin.
+    /// Keep this fraction of cache capacity free as headroom
+    /// (watermark); admission pretends the pool is smaller by this
+    /// factor. Applied in bytes ([`KvCacheManager::headroom_bytes`]).
+    /// Under optimistic admission this is the preemption trigger margin.
     pub watermark: f64,
     /// Optimistic (prompt-fits) vs worst-case (full-footprint) policy.
     pub mode: AdmissionMode,
@@ -84,17 +85,23 @@ pub enum Verdict {
     Reject(String),
 }
 
-/// Check one waiting request. `reserved` is blocks already spoken for by
-/// this step's earlier plan decisions (resumes and prefills planned ahead
-/// of this request, plus — in worst-case mode — the unrealized growth of
-/// the running set); admission sees `free_blocks - reserved`.
+/// Check one waiting request. All accounting is in **physical bytes** at
+/// sub-pool widths ([`KvCacheManager::bytes_for_tokens`]) — under a
+/// mixed policy a narrow INT4 stream no longer charges the widest
+/// stream's padding, and the binding constraint is whichever width class
+/// drains first. For uniform policies every quantity is a whole multiple
+/// of the legacy block size, so the decisions reduce to the block-count
+/// arithmetic exactly. `reserved` is bytes already spoken for by this
+/// step's earlier plan decisions (resumes and prefills planned ahead of
+/// this request, plus — in worst-case mode — the unrealized growth of
+/// the running set); admission sees `free_bytes - reserved`.
 pub fn check(
     cfg: &AdmissionConfig,
     req: &Request,
     cache: &KvCacheManager,
     running: usize,
     waiting: usize,
-    reserved: usize,
+    reserved: u64,
 ) -> Verdict {
     let total = req.max_total_tokens();
     let cache_cfg = cache.config();
@@ -107,33 +114,33 @@ pub fn check(
             cache_cfg.max_seq
         ));
     }
-    let pool = cache_cfg.num_blocks;
-    let headroom = (pool as f64 * cfg.watermark) as usize;
+    let pool = cache.pool_capacity_bytes();
+    let headroom = cache.headroom_bytes(cfg.watermark);
     let usable = pool - headroom;
     // "Can it ever fit" gate: reject now rather than deadlock the queue.
     // Worst-case mode demands the full footprint inside the watermarked
     // pool; optimistic mode only needs the whole pool to cover the
     // worst case when the request eventually runs alone (preemption can
     // clear everything else, but not grow the pool).
-    let need_total = cache_cfg.blocks_for_tokens(total);
+    let need_total = cache.bytes_for_tokens(total);
     match cfg.mode {
         AdmissionMode::WorstCase => {
             if need_total > usable {
                 return Verdict::Reject(format!(
-                    "needs {need_total} blocks, pool has {usable} usable"
+                    "needs {need_total} bytes, pool has {usable} usable"
                 ));
             }
         }
         AdmissionMode::Optimistic => {
             if need_total > pool {
                 return Verdict::Reject(format!(
-                    "worst case {need_total} blocks exceeds whole pool {pool}"
+                    "worst case {need_total} bytes exceeds whole pool {pool}"
                 ));
             }
-            let need_prompt = cache_cfg.blocks_for_tokens(req.prompt.len());
+            let need_prompt = cache.bytes_for_tokens(req.prompt.len());
             if need_prompt > usable {
                 return Verdict::Reject(format!(
-                    "prompt alone needs {need_prompt} blocks, pool has {usable} usable"
+                    "prompt alone needs {need_prompt} bytes, pool has {usable} usable"
                 ));
             }
         }
@@ -147,9 +154,9 @@ pub fn check(
     // Current free-space check (+ watermark headroom).
     let need = match cfg.mode {
         AdmissionMode::WorstCase => need_total,
-        AdmissionMode::Optimistic => cache_cfg.blocks_for_tokens(req.prompt.len()),
+        AdmissionMode::Optimistic => cache.bytes_for_tokens(req.prompt.len()),
     };
-    if need + headroom > cache.free_blocks().saturating_sub(reserved) {
+    if need + headroom > cache.free_bytes().saturating_sub(reserved) {
         return Verdict::Defer;
     }
     Verdict::Admit
@@ -159,22 +166,22 @@ pub fn check(
 /// cache must be rematerialized (prompt + already-generated tokens). No
 /// watermark here — preempted requests hold live client streams and beat
 /// fresh work back into the pool; the absolute-fit gate already ran at
-/// first admission. `reclaimable` is credit the caller can free on
-/// demand (prefix-cache evictions): cached prefixes never starve a
-/// preempted request's readmission.
+/// first admission. `reclaimable` is byte credit the caller can free on
+/// demand (prefix-cache evictions or cold-tier demotions): cached
+/// prefixes never starve a preempted request's readmission.
 pub fn check_resume(
     cfg: &AdmissionConfig,
     rebuild_tokens: usize,
     cache: &KvCacheManager,
     running: usize,
-    reserved: usize,
-    reclaimable: usize,
+    reserved: u64,
+    reclaimable: u64,
 ) -> Verdict {
     if running >= cfg.max_running {
         return Verdict::Defer;
     }
-    let need = cache.config().blocks_for_tokens(rebuild_tokens);
-    if need > (cache.free_blocks() + reclaimable).saturating_sub(reserved) {
+    let need = cache.bytes_for_tokens(rebuild_tokens);
+    if need > (cache.free_bytes() + reclaimable).saturating_sub(reserved) {
         return Verdict::Defer;
     }
     Verdict::Admit
@@ -254,8 +261,10 @@ mod tests {
         let opt = AdmissionConfig::default();
         let wc = worst_case();
         assert_eq!(check(&opt, &req(4, 12), &c, 2, 0, 0), Verdict::Admit);
-        // Worst-case with 28 blocks reserved for running growth: defer.
-        assert_eq!(check(&wc, &req(4, 12), &c, 2, 0, 28), Verdict::Defer);
+        // Worst-case with 28 blocks (7 spans) of running growth
+        // reserved: defer.
+        let reserved = 7 * c.span_bytes() as u64;
+        assert_eq!(check(&wc, &req(4, 12), &c, 2, 0, reserved), Verdict::Defer);
     }
 
     #[test]
@@ -283,12 +292,13 @@ mod tests {
     }
 
     #[test]
-    fn reserved_blocks_shrink_effective_free() {
+    fn reserved_bytes_shrink_effective_free() {
         let c = cache(32);
         let cfg = AdmissionConfig::default();
-        // Prompt 8 -> 8 blocks (+1 headroom); free 32.
+        // Prompt 8 -> 2 spans (+1 block of headroom); pool is 8 spans.
         assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 0), Verdict::Admit);
-        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 24), Verdict::Defer);
+        let reserved = 6 * c.span_bytes() as u64; // 24 blocks
+        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, reserved), Verdict::Defer);
     }
 
     #[test]
@@ -302,14 +312,44 @@ mod tests {
     fn resume_skips_watermark_but_respects_free() {
         let c = cache(16);
         let cfg = AdmissionConfig::default();
-        // Rebuild 16 tokens -> 16 blocks == whole pool: admissible only
+        // Rebuild 16 tokens -> 4 spans == whole pool: admissible only
         // because resume ignores the watermark.
+        let span = c.span_bytes() as u64;
         assert_eq!(check_resume(&cfg, 16, &c, 0, 0, 0), Verdict::Admit);
-        assert_eq!(check_resume(&cfg, 16, &c, 0, 4, 0), Verdict::Defer);
+        assert_eq!(check_resume(&cfg, 16, &c, 0, span, 0), Verdict::Defer);
         // Prefix-cache reclaim credit closes the same gap.
-        assert_eq!(check_resume(&cfg, 16, &c, 0, 4, 4), Verdict::Admit);
+        assert_eq!(check_resume(&cfg, 16, &c, 0, span, span), Verdict::Admit);
         let capped = AdmissionConfig { max_running: 1, ..Default::default() };
         assert_eq!(check_resume(&capped, 4, &c, 1, 0, 0), Verdict::Defer);
+    }
+
+    #[test]
+    fn mixed_policy_budgets_use_subpool_widths() {
+        use crate::kvcache::PolicySpec;
+        let c = KvCacheManager::new(
+            CacheConfig {
+                layers: 2,
+                heads: 2,
+                head_dim: 8,
+                max_seq: 64,
+                block_size: 4,
+                num_blocks: 32,
+                scale_margin: 1.0,
+            },
+            PolicySpec::K8V4.resolve(2, 2, 8).unwrap(),
+        );
+        // k8v4 spans are 2·(64 + 32) = 192 B against the 256 B padded
+        // width: same span count, 25% less physical footprint, and every
+        // admission quantity is priced at the real sub-pool widths.
+        assert_eq!(c.span_bytes(), 192);
+        assert_eq!(c.pool_capacity_bytes(), 8 * 192);
+        assert!(c.pool_physical_bytes() < c.padded_pool_bytes());
+        let cfg = AdmissionConfig::default();
+        // Prompt 8 -> 2 spans = 384 B of an 8-span pool; reserving 6
+        // spans' worth of k8v4 bytes defers, exactly as span arithmetic
+        // predicts.
+        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 0), Verdict::Admit);
+        assert_eq!(check(&cfg, &req(8, 8), &c, 0, 0, 6 * 192), Verdict::Defer);
     }
 
     #[test]

@@ -11,14 +11,18 @@
 //! * `max_decode_batch` — cap the decode set per iteration; the rest run
 //!   next iteration (round-robin fairness via rotation).
 //!
-//! **Memory planning.** The plan tracks the blocks each decision commits
-//! (resume rebuilds, prefill prompts, decode appends including COW
-//! copies) against the pool's free list. When this step's decode appends
-//! cannot be covered, the plan first budgets prefix-cache evictions
-//! (`want_free`), then names preemption victims — lowest priority class,
-//! most-recently-admitted first — whose refcount-aware reclaimable
-//! blocks close the gap. Victims drop out of the decode set and re-enter
-//! via the preempted queue.
+//! **Memory planning.** The plan tracks the **physical bytes** each
+//! decision commits (resume rebuilds, prefill prompts, decode appends
+//! including COW copies) against the pool's span-allocatable free bytes
+//! ([`KvCacheManager::free_bytes`]). Byte budgets price every stream at
+//! its sub-pool width — under a mixed policy an INT4 append charges half
+//! an INT8 one, and the binding constraint is whichever width class
+//! drains first (block counts can't see that). When this step's decode
+//! appends cannot be covered, the plan first budgets prefix-cache
+//! evictions / cold-tier demotions (`want_free`, bytes), then names
+//! preemption victims — lowest priority class, most-recently-admitted
+//! first — whose refcount-aware reclaimable bytes close the gap. Victims
+//! drop out of the decode set and re-enter via the preempted queue.
 
 use super::admission::{self, AdmissionConfig, AdmissionMode, Verdict};
 use super::request::{Request, RequestId};
@@ -45,9 +49,10 @@ impl Default for BatcherConfig {
 /// What one engine iteration should do, in execution order.
 #[derive(Debug, Default)]
 pub struct StepPlan {
-    /// Free-block target the engine should reach by evicting prefix-cache
-    /// entries before anything else runs (0 = no eviction needed).
-    pub want_free: usize,
+    /// Free-byte target ([`KvCacheManager::free_bytes`]) the engine
+    /// should reach by demoting/evicting prefix-cache entries before
+    /// anything else runs (0 = no eviction needed).
+    pub want_free: u64,
     /// Victims to preempt before decoding: free their blocks, park them.
     pub preemptions: Vec<RequestId>,
     /// Preempted requests to readmit (rebuild cache + replay) this step.
@@ -71,36 +76,36 @@ impl Batcher {
         Batcher::default()
     }
 
-    /// Plan one iteration. `prefix_evictable` is the pool-block credit
-    /// the engine's prefix cache could free on demand (its reclaimable
-    /// blocks); the plan spends it — via `want_free` — before naming
-    /// preemption victims, and resumes may draw on it too (cached
-    /// prefixes never starve in-flight requests).
+    /// Plan one iteration. `prefix_evictable` is the physical-byte
+    /// credit the engine's prefix cache could free on demand (its
+    /// reclaimable blocks at sub-pool widths); the plan spends it — via
+    /// `want_free` — before naming preemption victims, and resumes may
+    /// draw on it too (cached prefixes never starve in-flight requests).
     pub fn plan(
         &mut self,
         cfg: &BatcherConfig,
         sched: &mut Scheduler,
         cache: &KvCacheManager,
-        prefix_evictable: usize,
+        prefix_evictable: u64,
     ) -> StepPlan {
         let mut plan = StepPlan::default();
-        let ccfg = *cache.config();
-        let free = cache.free_blocks();
-        // Blocks committed to planned resumes + prefills this step. All
+        let free = cache.free_bytes();
+        // Bytes committed to planned resumes + prefills this step. All
         // spending draws on one pot — `free + prefix_evictable` — so the
         // credit cannot be double-counted across decisions.
-        let mut committed = 0usize;
+        let mut committed = 0u64;
 
         // Worst-case mode reserves every running request's unrealized
         // growth so admission never overcommits (and preemption is never
         // needed). Optimistic mode reserves nothing — that is the point.
-        let outstanding: usize = match cfg.admission.mode {
+        let outstanding: u64 = match cfg.admission.mode {
             AdmissionMode::WorstCase => sched
                 .running
                 .iter()
                 .map(|r| {
-                    ccfg.blocks_for_tokens(r.req.max_total_tokens())
-                        .saturating_sub(cache.seq_blocks(r.seq))
+                    cache
+                        .bytes_for_tokens(r.req.max_total_tokens())
+                        .saturating_sub(cache.seq_bytes(r.seq))
                 })
                 .sum(),
             AdmissionMode::Optimistic => 0,
@@ -133,7 +138,7 @@ impl Batcher {
             );
             match verdict {
                 Verdict::Admit => {
-                    committed += ccfg.blocks_for_tokens(rebuild_tokens);
+                    committed += cache.bytes_for_tokens(rebuild_tokens);
                     plan.resumes.push(sched.preempted.pop_front().unwrap());
                 }
                 _ => break, // FCFS head-of-line within the preempted queue
@@ -155,9 +160,9 @@ impl Batcher {
                 Verdict::Admit => {
                     let (req, tx) = sched.pop_waiting().unwrap();
                     committed += match cfg.admission.mode {
-                        AdmissionMode::Optimistic => ccfg.blocks_for_tokens(req.prompt.len()),
+                        AdmissionMode::Optimistic => cache.bytes_for_tokens(req.prompt.len()),
                         AdmissionMode::WorstCase => {
-                            ccfg.blocks_for_tokens(req.max_total_tokens())
+                            cache.bytes_for_tokens(req.max_total_tokens())
                         }
                     };
                     plan.prefills.push((req, tx));
@@ -185,11 +190,11 @@ impl Batcher {
         // Pool-pressure resolution for this step's decode appends: spend
         // the prefix-cache credit first, then preempt victims until the
         // remaining appends are covered (or nobody is left to evict).
-        let mut decode_need: usize = plan
+        let mut decode_need: u64 = plan
             .decodes
             .iter()
             .filter_map(|id| sched.running.iter().find(|r| r.req.id == *id))
-            .map(|r| cache.append_need_blocks(r.seq))
+            .map(|r| cache.append_need_bytes(r.seq))
             .sum();
         let total_need = committed + decode_need;
         if total_need > free {
@@ -199,9 +204,9 @@ impl Batcher {
         while decode_need > avail {
             let Some(vid) = sched.select_victim(&plan.preemptions) else { break };
             let victim = sched.running.iter().find(|r| r.req.id == vid).unwrap();
-            avail += cache.seq_reclaimable_blocks(victim.seq);
+            avail += cache.seq_reclaimable_bytes(victim.seq);
             if let Some(pos) = plan.decodes.iter().position(|&d| d == vid) {
-                decode_need -= cache.append_need_blocks(victim.seq);
+                decode_need -= cache.append_need_bytes(victim.seq);
                 plan.decodes.remove(pos);
             }
             plan.preemptions.push(vid);
@@ -220,11 +225,11 @@ impl Batcher {
             && prefix_evictable > 0
         {
             if let Some(head) = sched.peek_waiting() {
-                let headroom = (ccfg.num_blocks as f64 * cfg.admission.watermark) as usize;
+                let headroom = cache.headroom_bytes(cfg.admission.watermark);
                 let need = match cfg.admission.mode {
-                    AdmissionMode::Optimistic => ccfg.blocks_for_tokens(head.prompt.len()),
+                    AdmissionMode::Optimistic => cache.bytes_for_tokens(head.prompt.len()),
                     AdmissionMode::WorstCase => {
-                        ccfg.blocks_for_tokens(head.max_total_tokens())
+                        cache.bytes_for_tokens(head.max_total_tokens())
                     }
                 };
                 plan.want_free =
@@ -393,17 +398,19 @@ mod tests {
 
     #[test]
     fn prefix_credit_spends_before_preempting() {
-        // Same pressure as above, but 8 evictable prefix blocks cover the
-        // two appends (4 + 4): no victims, want_free demands the eviction.
+        // Same pressure as above, but two spans of evictable prefix
+        // bytes cover the two appends (one span each): no victims,
+        // want_free demands the eviction.
         let mut s = Scheduler::new();
         let mut c = cache_with(16);
         start_running(&mut s, &mut c, 1, 8);
         start_running(&mut s, &mut c, 2, 8);
+        let credit = 2 * c.span_bytes() as u64; // 8 blocks at width
         let mut b = Batcher::new();
-        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, 8);
+        let plan = b.plan(&BatcherConfig::default(), &mut s, &c, credit);
         assert!(plan.preemptions.is_empty(), "prefix eviction covers the step");
         assert_eq!(plan.decodes, vec![1, 2]);
-        assert_eq!(plan.want_free, 8);
+        assert_eq!(plan.want_free, credit);
     }
 
     #[test]

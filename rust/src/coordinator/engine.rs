@@ -58,7 +58,7 @@ use super::metrics::{Metrics, StepGauges};
 use super::request::{EventTx, FinishReason, Request, RequestId, TokenEvent};
 use super::scheduler::{Running, Scheduler};
 use crate::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
-use crate::kvcache::{PolicySpec, PrefixCache, PrefixHit, QuantPolicy, StagedKind};
+use crate::kvcache::{ColdTier, PolicySpec, PrefixCache, PrefixHit, QuantPolicy, StagedKind};
 use crate::model::runner::DecodeResult;
 use crate::model::sample;
 use crate::model::{BatchScratch, LmBackend};
@@ -124,6 +124,26 @@ pub struct EngineConfig {
     /// threads) — pinned by `tests/parallel_consistency.rs`. The
     /// `KVQ_DECODE_BATCHING` env var overrides the configured value.
     pub decode_batching: DecodeBatching,
+    /// Compressed cold-tier capacity in blocks: `None` auto-sizes to the
+    /// hot pool (`num_blocks`), `Some(0)` disables the tier. The tier is
+    /// the prefix trie's second chance — LRU-cold cached prompts demote
+    /// into a byte-shuffle + RLE compressed store instead of being
+    /// destroyed, and promote back bit-identically — so it only engages
+    /// when the prefix cache itself is enabled. The `KVQ_COLD_TIER` env
+    /// var overrides (`off`/`0` forces it off for the CI tier-off
+    /// reruns).
+    pub cold_tier_blocks: Option<usize>,
+    /// Persistent prefix snapshot path: on engine exit the hot trie is
+    /// demoted into the cold tier and the whole tier is written here
+    /// (versioned, checksummed); at startup the file is reloaded so the
+    /// warmed corpus survives restarts. A missing, stale, or corrupt
+    /// file is skipped with a warning, never an error.
+    pub snapshot_path: Option<String>,
+    /// Async prefetch ready-map depth: cold entries for the head of the
+    /// waiting queue are decompressed on a background thread ahead of
+    /// their prefill step. 0 disables the thread — promotions fall back
+    /// to synchronous decompression.
+    pub prefetch_depth: usize,
 }
 
 /// The `decode_batching` knob (see [`EngineConfig::decode_batching`]).
@@ -192,6 +212,9 @@ impl Default for EngineConfig {
             paged_decode: true,
             kernel_backend: KernelBackend::Auto,
             decode_batching: DecodeBatching::Auto,
+            cold_tier_blocks: None,
+            snapshot_path: None,
+            prefetch_depth: 2,
         }
     }
 }
@@ -215,6 +238,34 @@ fn resolve_prefix_budget(cfg_blocks: usize) -> usize {
                     );
                 });
             }
+        }
+    }
+    cfg_blocks
+}
+
+/// Resolve the cold-tier block capacity against the `KVQ_COLD_TIER` env
+/// override (the CI tier-off reruns force `off` this way): `off`/`0`
+/// disables the tier, `on` keeps the configured capacity, a number sets
+/// it. An unparseable value is ignored with a one-time warning,
+/// mirroring [`resolve_prefix_budget`].
+fn resolve_cold_tier(cfg_blocks: usize) -> usize {
+    let env = std::env::var("KVQ_COLD_TIER").ok();
+    if let Some(v) = env.as_deref() {
+        match v {
+            "off" => return 0,
+            "on" => return cfg_blocks,
+            _ => match v.parse::<usize>() {
+                Ok(b) => return b,
+                Err(_) => {
+                    static WARNED: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+                    WARNED.get_or_init(|| {
+                        crate::warn!(
+                            "ignoring unparseable KVQ_COLD_TIER={v:?} \
+                             (expected on|off|<blocks>); using configured {cfg_blocks}"
+                        );
+                    });
+                }
+            },
         }
     }
     cfg_blocks
@@ -413,6 +464,9 @@ struct Engine {
     /// a paged-capable backend in that case).
     staged_kind: Option<StagedKind>,
     prefix: PrefixCache,
+    /// Compressed cold tier: demotion sink for LRU-cold prefix entries,
+    /// promotion source for repeat prompts, snapshot persistence.
+    tier: ColdTier,
     sched: Scheduler,
     batcher: Batcher,
     cfg: EngineConfig,
@@ -503,10 +557,18 @@ impl Engine {
             && backend.supports_batched_decode();
         metrics.set_policy(&policy_name);
         metrics.set_kernel_isa(isa.name());
+        let prefix_budget = resolve_prefix_budget(cfg.prefix_cache_blocks);
+        // The cold tier backstops the prefix trie — without prompt
+        // sharing there is nothing to demote, so it stays off.
+        let cold_blocks = if prefix_budget == 0 {
+            0
+        } else {
+            resolve_cold_tier(cfg.cold_tier_blocks.unwrap_or(num_blocks))
+        };
         crate::info!(
             "engine up: model={} policy={} blocks={} cache={:.1} MiB threads={} \
-             admission={} prefix_cache_blocks={} decode={} kernel={} backend={} isa={} \
-             batching={}",
+             admission={} prefix_cache_blocks={} cold_tier_blocks={} decode={} kernel={} \
+             backend={} isa={} batching={}",
             spec.name,
             policy_name,
             num_blocks,
@@ -514,21 +576,31 @@ impl Engine {
             threads,
             cfg.batcher.admission.mode.name(),
             cfg.prefix_cache_blocks,
+            cold_blocks,
             if paged { "paged" } else { "staged" },
             cfg.attention_kernel.name(),
             cfg.kernel_backend.name(),
             isa.name(),
             if batching { "mq" } else { "off" }
         );
-        let mut prefix = PrefixCache::new(resolve_prefix_budget(cfg.prefix_cache_blocks));
+        let mut prefix = PrefixCache::new(prefix_budget);
         // Partial hits require a suffix prefill; backends that can only
         // run whole-prompt prefill (PJRT) keep exact-match-only reuse.
         prefix.set_allow_partial(backend.supports_chunked_prefill());
+        let mut tier = ColdTier::new(cold_blocks, cfg.prefetch_depth);
+        if let Some(path) = cfg.snapshot_path.as_deref() {
+            match tier.load_snapshot(std::path::Path::new(path), &cache) {
+                Ok(0) => {}
+                Ok(n) => crate::info!("snapshot: restored {n} cold prefix entries from {path}"),
+                Err(e) => crate::warn!("snapshot load failed ({path}): {e:#}"),
+            }
+        }
         Engine {
             backend,
             cache,
             staged_kind,
             prefix,
+            tier,
             sched: Scheduler::new(),
             batcher: Batcher::new(),
             metrics,
@@ -581,7 +653,26 @@ impl Engine {
                 self.step();
             }
         }
+        self.save_snapshot();
         crate::info!("engine exiting ({} steps)", self.metrics.snapshot().engine_steps);
+    }
+
+    /// Persist the warmed prefix corpus at exit: demote the entire hot
+    /// trie into the cold tier, then write the versioned snapshot. A
+    /// failed write warns and exits anyway — snapshots are a warm-start
+    /// optimization, never a durability contract.
+    fn save_snapshot(&mut self) {
+        let Some(path) = self.cfg.snapshot_path.clone() else { return };
+        if !self.tier.enabled() {
+            return;
+        }
+        for cap in self.prefix.capture_all(&self.cache) {
+            self.tier.admit(&cap, &self.cache);
+        }
+        match self.tier.save_snapshot(std::path::Path::new(&path), &self.cache) {
+            Ok(n) => crate::info!("snapshot: wrote {n} prefix entries to {path}"),
+            Err(e) => crate::warn!("snapshot save failed ({path}): {e:#}"),
+        }
     }
 
     /// Returns true on hard shutdown.
@@ -610,7 +701,15 @@ impl Engine {
 
     fn step(&mut self) {
         let t0 = Instant::now();
-        let prefix_evictable = self.prefix.evictable_blocks(&self.cache);
+        // Stage likely-next promotions: ask the prefetch thread to
+        // decompress cold entries for the head of the waiting queue
+        // before their prefill step arrives.
+        if self.tier.enabled() {
+            for req in self.sched.iter_waiting().take(self.tier.prefetch_depth()) {
+                self.tier.request_prefetch(&req.prompt);
+            }
+        }
+        let prefix_evictable = self.prefix.evictable_bytes(&self.cache);
         let plan: StepPlan =
             self.batcher.plan(&self.cfg.batcher, &mut self.sched, &self.cache, prefix_evictable);
 
@@ -624,10 +723,14 @@ impl Engine {
             });
         }
 
-        // Reclaim in plan order: prefix-cache evictions are cheap (no
-        // recompute), preemptions cost their victims a replay.
+        // Reclaim in plan order: cold-tier demotions first (cached
+        // prompts survive compressed, promotable without recompute),
+        // plain prefix evictions as the fallback when the tier is off or
+        // full coverage wasn't reached, preemptions last (they cost
+        // their victims a replay).
         if plan.want_free > 0 {
-            self.prefix.evict_for(&mut self.cache, plan.want_free);
+            self.tier.demote_for(&mut self.prefix, &mut self.cache, plan.want_free);
+            self.prefix.evict_for_bytes(&mut self.cache, plan.want_free);
         }
         for id in plan.preemptions {
             self.preempt_request(id);
@@ -670,6 +773,10 @@ impl Engine {
                 prefix_saved_tokens: pstats.saved_tokens,
                 prefix_trie_nodes: self.prefix.trie_nodes() as u64,
                 cache_payload_bytes: self.cache.payload_bytes_by_precision(),
+                cache_physical_bytes: self.cache.physical_bytes_by_precision(),
+                pool_physical_bytes: self.cache.pool_physical_bytes(),
+                pool_fragmentation_bytes: self.cache.fragmentation_bytes(),
+                tier: self.tier.stats(),
             },
         );
     }
@@ -686,6 +793,17 @@ impl Engine {
         match self.prefix.lookup(&mut self.cache, prompt) {
             Some(PrefixHit::Full { seq, logits }) => return Ok((seq, logits, 0)),
             Some(PrefixHit::Partial { seq, matched_tokens }) => {
+                // An exact cold-tier entry beats the suffix prefill: zero
+                // backend compute instead of `len - matched`. Promote it
+                // (bit-identical blocks), release the partial fork, and
+                // re-pin the promoted sequence in the trie.
+                if self.tier.contains(prompt) {
+                    if let Some((pseq, logits)) = self.tier.promote(&mut self.cache, prompt) {
+                        self.cache.free(seq);
+                        self.prefix.insert(&mut self.cache, pseq, prompt, &logits);
+                        return Ok((pseq, logits, 0));
+                    }
+                }
                 // Suffix prefill over the adopted span. Partial hits are
                 // only returned when the backend can chunk (see new()).
                 return match self.prefill_chunks(seq, prompt, matched_tokens) {
@@ -699,7 +817,16 @@ impl Engine {
                     }
                 };
             }
-            None => {}
+            None => {
+                // Full trie miss: an exact-match cold entry restores the
+                // whole prompt without backend compute. Re-pinning it in
+                // the trie also revives partial-hit coverage for its
+                // descendants.
+                if let Some((seq, logits)) = self.tier.promote(&mut self.cache, prompt) {
+                    self.prefix.insert(&mut self.cache, seq, prompt, &logits);
+                    return Ok((seq, logits, 0));
+                }
+            }
         }
         if self.backend.supports_chunked_prefill() {
             // Chunk-capable backends ALWAYS prefill block-by-block, cache
@@ -1142,14 +1269,20 @@ impl Engine {
         Ok(())
     }
 
-    /// Free blocks until `seq` can append one row: prefix-cache evictions
-    /// first, then preemption victims (never `exclude` itself). Returns
-    /// false when the pool still cannot cover the append.
+    /// Free bytes until `seq` can append one row: cold-tier demotions
+    /// first (cached prompts survive compressed), plain prefix-cache
+    /// evictions next, then preemption victims (never `exclude` itself).
+    /// The check is span-quantized (`free_bytes`), so a `true` return
+    /// guarantees every sub-pool class can supply its share of the
+    /// append. Returns false when the pool still cannot cover it.
     fn reclaim_for_append(&mut self, seq: SeqId, exclude: RequestId) -> bool {
         loop {
-            let need = self.cache.append_need_blocks(seq);
-            if need <= self.cache.free_blocks() {
+            let need = self.cache.append_need_bytes(seq);
+            if need <= self.cache.free_bytes() {
                 return true;
+            }
+            if self.tier.demote_for(&mut self.prefix, &mut self.cache, need) > 0 {
+                continue;
             }
             if self.prefix.evict_reclaimable_lru(&mut self.cache) {
                 continue;

@@ -7,6 +7,7 @@
 //! `GET /metrics` answers "how full is the pool really and what did
 //! optimistic admission cost us" directly.
 
+use crate::kvcache::TierStats;
 use crate::util::stats::LogHistogram;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -41,7 +42,23 @@ pub struct StepGauges {
     /// down by storage precision (`[fp32, int8, int4]`) — the policy-aware
     /// occupancy view from
     /// [`crate::kvcache::KvCacheManager::payload_bytes_by_precision`].
+    /// Pinned alongside the physical gauges below for continuity.
     pub cache_payload_bytes: [u64; 3],
+    /// Physical bytes of the blocks live sequences hold, at sub-pool
+    /// widths, shared blocks counted once (`[fp32, int8, int4]`) — from
+    /// [`crate::kvcache::KvCacheManager::physical_bytes_by_precision`].
+    pub cache_physical_bytes: [u64; 3],
+    /// Physical bytes the pool's per-precision sub-pool slabs occupy
+    /// (Σ per-class `num_blocks × width`). Mixed policies keep this
+    /// strictly below the widest-stream padded baseline.
+    pub pool_physical_bytes: u64,
+    /// Free bytes not allocatable as whole spans right now (sub-pool
+    /// class imbalance plus the sub-span remainder).
+    pub pool_fragmentation_bytes: u64,
+    /// Cold-tier counters, read straight from
+    /// [`crate::kvcache::TierStats`] — the tier's own counters are the
+    /// single source of truth (no parallel bookkeeping to drift).
+    pub tier: TierStats,
 }
 
 #[derive(Debug)]
@@ -282,6 +299,10 @@ impl Metrics {
             waiting: m.gauges.waiting,
             preempted: m.gauges.preempted,
             cache_payload_bytes: m.gauges.cache_payload_bytes,
+            cache_physical_bytes: m.gauges.cache_physical_bytes,
+            pool_physical_bytes: m.gauges.pool_physical_bytes,
+            pool_fragmentation_bytes: m.gauges.pool_fragmentation_bytes,
+            tier: m.gauges.tier,
             policy: m.policy.clone(),
             kernel_isa: m.kernel_isa.clone(),
         }
@@ -342,8 +363,19 @@ pub struct MetricsSnapshot {
     pub running_peak: usize,
     pub waiting: usize,
     pub preempted: usize,
-    /// Live cache payload bytes by precision (`[fp32, int8, int4]`).
+    /// Live cache payload bytes by precision (`[fp32, int8, int4]`) —
+    /// the legacy logical view, pinned for dashboard continuity.
     pub cache_payload_bytes: [u64; 3],
+    /// Live physical bytes by precision at sub-pool widths, shared
+    /// blocks counted once (`[fp32, int8, int4]`).
+    pub cache_physical_bytes: [u64; 3],
+    /// Physical bytes the per-precision sub-pool slabs occupy.
+    pub pool_physical_bytes: u64,
+    /// Free bytes not allocatable as whole spans (class imbalance +
+    /// sub-span remainder).
+    pub pool_fragmentation_bytes: u64,
+    /// Cold-tier counters (schema v4 `tier_*` keys).
+    pub tier: TierStats,
     /// Active quantization policy name.
     pub policy: String,
     /// Resolved kernel ISA name (`scalar` | `avx2` | `neon`).
@@ -418,6 +450,30 @@ impl MetricsSnapshot {
             ("cache_bytes_fp32", (self.cache_payload_bytes[0] as usize).into()),
             ("cache_bytes_int8", (self.cache_payload_bytes[1] as usize).into()),
             ("cache_bytes_int4", (self.cache_payload_bytes[2] as usize).into()),
+            ("cache_physical_bytes_fp32", (self.cache_physical_bytes[0] as usize).into()),
+            ("cache_physical_bytes_int8", (self.cache_physical_bytes[1] as usize).into()),
+            ("cache_physical_bytes_int4", (self.cache_physical_bytes[2] as usize).into()),
+            ("pool_physical_bytes", (self.pool_physical_bytes as usize).into()),
+            ("pool_fragmentation_bytes", (self.pool_fragmentation_bytes as usize).into()),
+            ("tier_hot_blocks", self.pool_used_blocks.into()),
+            ("tier_cold_blocks", (self.tier.cold_blocks as usize).into()),
+            ("tier_cold_entries", (self.tier.cold_entries as usize).into()),
+            ("tier_demotions", (self.tier.demotions as usize).into()),
+            ("tier_promotions", (self.tier.promotions as usize).into()),
+            ("tier_prefetch_hits", (self.tier.prefetch_hits as usize).into()),
+            ("tier_prefetch_misses", (self.tier.prefetch_misses as usize).into()),
+            ("tier_cold_evictions", (self.tier.cold_evictions as usize).into()),
+            (
+                "tier_preemptions_avoided",
+                (self.tier.preemptions_avoided as usize).into(),
+            ),
+            ("tier_snapshot_loaded", (self.tier.snapshot_loaded as usize).into()),
+            ("tier_cold_raw_bytes", (self.tier.cold_raw_bytes as usize).into()),
+            ("tier_cold_comp_bytes", (self.tier.cold_comp_bytes as usize).into()),
+            ("tier_compression_ratio", self.tier.compression_ratio().into()),
+            ("tier_demote_secs", self.tier.demote_secs.into()),
+            ("tier_promote_secs", self.tier.promote_secs.into()),
+            ("tier_decompress_secs", self.tier.decompress_secs.into()),
         ])
     }
 }
@@ -557,6 +613,59 @@ mod tests {
         assert_eq!(j.get("running_peak").as_usize(), Some(2));
         assert!(j.get("cache_utilization").as_f64().unwrap() > 0.39);
         assert!(j.get("prefix_hit_rate").as_f64().is_some());
+    }
+
+    #[test]
+    fn tier_and_physical_gauges_serialize() {
+        let m = Metrics::new();
+        m.on_step(
+            0.01,
+            StepGauges {
+                pool_used_blocks: 12,
+                cache_payload_bytes: [0, 4096, 0],
+                cache_physical_bytes: [0, 3072, 512],
+                pool_physical_bytes: 6144,
+                pool_fragmentation_bytes: 128,
+                tier: TierStats {
+                    demotions: 4,
+                    promotions: 3,
+                    prefetch_hits: 2,
+                    prefetch_misses: 1,
+                    cold_evictions: 1,
+                    preemptions_avoided: 6,
+                    snapshot_loaded: 5,
+                    cold_entries: 2,
+                    cold_blocks: 8,
+                    cold_raw_bytes: 2048,
+                    cold_comp_bytes: 512,
+                    demote_secs: 0.001,
+                    promote_secs: 0.002,
+                    decompress_secs: 0.0005,
+                },
+                ..Default::default()
+            },
+        );
+        let j = m.snapshot().to_json();
+        // Legacy logical gauges stay pinned next to the physical view.
+        assert_eq!(j.get("cache_bytes_int8").as_usize(), Some(4096));
+        assert_eq!(j.get("cache_physical_bytes_int8").as_usize(), Some(3072));
+        assert_eq!(j.get("cache_physical_bytes_int4").as_usize(), Some(512));
+        assert_eq!(j.get("pool_physical_bytes").as_usize(), Some(6144));
+        assert_eq!(j.get("pool_fragmentation_bytes").as_usize(), Some(128));
+        assert_eq!(j.get("tier_hot_blocks").as_usize(), Some(12));
+        assert_eq!(j.get("tier_cold_blocks").as_usize(), Some(8));
+        assert_eq!(j.get("tier_cold_entries").as_usize(), Some(2));
+        assert_eq!(j.get("tier_demotions").as_usize(), Some(4));
+        assert_eq!(j.get("tier_promotions").as_usize(), Some(3));
+        assert_eq!(j.get("tier_prefetch_hits").as_usize(), Some(2));
+        assert_eq!(j.get("tier_prefetch_misses").as_usize(), Some(1));
+        assert_eq!(j.get("tier_cold_evictions").as_usize(), Some(1));
+        assert_eq!(j.get("tier_preemptions_avoided").as_usize(), Some(6));
+        assert_eq!(j.get("tier_snapshot_loaded").as_usize(), Some(5));
+        assert!((j.get("tier_compression_ratio").as_f64().unwrap() - 4.0).abs() < 1e-12);
+        assert!(j.get("tier_demote_secs").as_f64().unwrap() > 0.0);
+        assert!(j.get("tier_promote_secs").as_f64().unwrap() > 0.0);
+        assert!(j.get("tier_decompress_secs").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -86,6 +86,15 @@ impl Scheduler {
         None
     }
 
+    /// Waiting requests in scheduling order (highest class first, FCFS
+    /// within class) — read-only; cold-tier prefetch planning peeks the
+    /// queue head to stage likely-next promotions.
+    pub fn iter_waiting(&self) -> impl Iterator<Item = &Request> {
+        [Priority::Interactive, Priority::Normal, Priority::Batch]
+            .into_iter()
+            .flat_map(|class| self.waiting[class as usize].iter().map(|(req, _)| req))
+    }
+
     /// Pop the request returned by `peek_waiting`.
     pub fn pop_waiting(&mut self) -> Option<(Request, super::request::EventTx)> {
         for class in [Priority::Interactive, Priority::Normal, Priority::Batch] {

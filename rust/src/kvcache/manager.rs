@@ -16,12 +16,18 @@
 //! [`crate::quant::Codec`]. The uniform policies are bit-identical to
 //! the old single-`Precision` paths (same codecs, same scale grids, same
 //! block layouts); mixed policies (`k8v4`, `sink8`, JSON tables) differ
-//! only in which codec each stream uses. Blocks stay fungible: the pool's
-//! byte width is sized for the policy's widest stream, so the
-//! scheduler's block accounting is policy-independent, while the byte
-//! accounting ([`CacheView::attention_bytes`],
+//! only in which codec each stream uses. The pool is segmented into
+//! per-width **sub-pools**: each (layer, K|V) stream allocates from the
+//! class matching its own padded block width, so an INT4 value stream no
+//! longer pads to the FP32/INT8 width. Scheduler accounting moves from
+//! flat block counts to spans ([`KvCacheManager::spans_free`] — one
+//! block in every stream) and width-aware byte budgets
+//! ([`KvCacheManager::bytes_for_tokens`], [`KvCacheManager::free_bytes`]),
+//! while the byte accounting ([`CacheView::attention_bytes`],
 //! [`KvCacheManager::payload_bytes_by_precision`]) reports true per-row
-//! per-codec footprints.
+//! per-codec footprints and
+//! [`KvCacheManager::physical_bytes_by_precision`] the block-granular
+//! sub-pool bytes.
 //!
 //! **Mid-flight lifecycle.** Sequences are first-class preemption
 //! citizens: [`KvCacheManager::free`] releases a sequence's blocks at any
@@ -64,7 +70,7 @@
 //! staging ABIs).
 
 use super::policy::{QuantPolicy, StreamLayout};
-use super::pool::{BlockId, BlockPool, BlockShape};
+use super::pool::{self, BlockId, BlockPool, BlockShape};
 use super::table::BlockTable;
 use super::Precision;
 use crate::parallel::{self, SendPtr};
@@ -136,6 +142,19 @@ pub struct KvCacheManager {
     /// Per-token payload bytes by precision (`[fp32, int8, int4]`),
     /// precomputed — sequence-independent under a fixed policy.
     token_bytes_by_precision: [u64; 3],
+    /// Pool width class of each (layer, K|V) stream — every allocation
+    /// for a stream comes from its class's sub-pool.
+    stream_class: Vec<[usize; 2]>,
+    /// Streams per width class (`n_c`); converts per-class free blocks
+    /// into whole-sequence spans (one span = one block in every stream).
+    class_streams: Vec<usize>,
+    /// Physical bytes of one span — Σ over streams of the stream's
+    /// padded block width. The byte cost of `block_size` tokens.
+    span_bytes: usize,
+    /// The pre-sub-pool block width (widest stream, alignment-padded):
+    /// `num_blocks × legacy_block_bytes` is the padded baseline the
+    /// sub-pools are measured against.
+    legacy_block_bytes: usize,
     pool: BlockPool,
     seqs: HashMap<SeqId, SequenceCache>,
     /// External holds per block (prefix-cache trie pins): references the
@@ -170,18 +189,62 @@ impl KvCacheManager {
                 ]
             })
             .collect();
-        // Blocks stay fungible across streams: size them for the widest
-        // stream the policy produces (uniform policies get exactly the
-        // legacy per-precision width), alignment-padded so every block
-        // base supports in-place fp32 reads.
-        let block_bytes = policy.max_block_bytes(cfg.block_size, cfg.head_dim);
+        // Per-precision sub-pools: group streams by their own padded
+        // block width instead of padding everything to the widest stream.
+        // Each class gets a share of `num_blocks` proportional to its
+        // stream count (sequences consume blocks uniformly across
+        // streams), remainder distributed in class order. Uniform
+        // policies collapse to a single class of exactly `num_blocks`
+        // legacy-width blocks — bit-for-bit the old flat pool.
+        let legacy_block_bytes = policy.max_block_bytes(cfg.block_size, cfg.head_dim);
+        let mut class_widths: Vec<usize> = Vec::new();
+        let mut class_streams: Vec<usize> = Vec::new();
+        let mut stream_class = vec![[0usize; 2]; cfg.layers];
+        for (l, pair) in layouts.iter().enumerate() {
+            for (kv, layout) in pair.iter().enumerate() {
+                let w = layout.padded_block_bytes();
+                let c = match class_widths.iter().position(|&cw| cw == w) {
+                    Some(c) => {
+                        class_streams[c] += 1;
+                        c
+                    }
+                    None => {
+                        class_widths.push(w);
+                        class_streams.push(1);
+                        class_widths.len() - 1
+                    }
+                };
+                stream_class[l][kv] = c;
+            }
+        }
+        let total_streams = 2 * cfg.layers;
+        let mut counts: Vec<usize> =
+            class_streams.iter().map(|&n| cfg.num_blocks * n / total_streams).collect();
+        let mut leftover = cfg.num_blocks - counts.iter().sum::<usize>();
+        let mut rr = 0;
+        while leftover > 0 {
+            counts[rr] += 1;
+            leftover -= 1;
+            rr = (rr + 1) % counts.len();
+        }
+        let specs: Vec<(usize, usize)> =
+            counts.into_iter().zip(class_widths.iter().copied()).collect();
+        let span_bytes = layouts
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .map(|l| l.padded_block_bytes())
+            .sum();
         let token_bytes_by_precision = policy.payload_bytes_by_precision(cfg.head_dim, 1);
         KvCacheManager {
-            pool: BlockPool::new(cfg.num_blocks, shape, block_bytes),
+            pool: BlockPool::with_classes(shape, &specs),
             cfg,
             policy,
             layouts,
             token_bytes_by_precision,
+            stream_class,
+            class_streams,
+            span_bytes,
+            legacy_block_bytes,
             seqs: HashMap::new(),
             extern_pins: vec![0; cfg.num_blocks],
             next_id: 1,
@@ -294,13 +357,146 @@ impl KvCacheManager {
         out
     }
 
+    /// Physical payload bytes of live sequences' **blocks**, broken down
+    /// by storage precision (`[fp32, int8, int4]`) — sub-pool bytes with
+    /// shared blocks counted **once** (block-granular, per-stream codec
+    /// widths; per-block alignment padding is not attributed to any
+    /// precision). This is what the pool physically holds; the logical
+    /// per-holder row-granular gauge [`Self::payload_bytes_by_precision`]
+    /// is pinned unchanged so dashboards don't silently shift.
+    pub fn physical_bytes_by_precision(&self) -> [u64; 3] {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = [0u64; 3];
+        for seq in self.seqs.values() {
+            for (layer, pair) in seq.tables.iter().enumerate() {
+                for (kv, t) in pair.iter().enumerate() {
+                    let by = self.layouts[layer][kv].block_bytes_by_precision();
+                    for &b in t.blocks() {
+                        if seen.insert(b) {
+                            for (o, v) in out.iter_mut().zip(by) {
+                                *o += v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     pub fn live_sequences(&self) -> usize {
         self.seqs.len()
     }
 
+    /// Whole spans allocatable right now: one span = one block in every
+    /// (layer, K|V) stream — `block_size` tokens of whole-sequence
+    /// capacity. The admission unit under sub-pools: the binding class is
+    /// whichever runs out first. Single-class pools reduce to
+    /// `free_blocks / (2·layers)`, matching the legacy block arithmetic
+    /// exactly.
+    pub fn spans_free(&self) -> usize {
+        (0..self.pool.num_classes())
+            .map(|c| self.pool.class_free_blocks(c) / self.class_streams[c])
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Physical bytes of one span (one block in every stream, padded
+    /// sub-pool widths) — the byte cost of `block_size` tokens.
+    pub fn span_bytes(&self) -> usize {
+        self.span_bytes
+    }
+
+    /// Physical bytes a sequence of `tokens` total length occupies —
+    /// the byte-budget analogue of [`CacheConfig::blocks_for_tokens`].
+    pub fn bytes_for_tokens(&self, tokens: usize) -> u64 {
+        (BlockTable::blocks_for(tokens, self.cfg.block_size) * self.span_bytes) as u64
+    }
+
+    /// Bytes allocatable as whole spans right now (the usable free
+    /// budget admission planning should compare against).
+    pub fn free_bytes(&self) -> u64 {
+        (self.spans_free() * self.span_bytes) as u64
+    }
+
+    /// Bytes sitting on free lists at their class widths, whether or not
+    /// a whole span can be formed from them.
+    pub fn raw_free_bytes(&self) -> u64 {
+        self.pool.free_bytes_raw()
+    }
+
+    /// Free bytes not allocatable as whole spans: class imbalance (one
+    /// sub-pool drained while others have room) plus the sub-span
+    /// remainder. Surfaced at `GET /metrics` as
+    /// `pool_fragmentation_bytes`.
+    pub fn fragmentation_bytes(&self) -> u64 {
+        self.raw_free_bytes() - self.free_bytes()
+    }
+
+    /// Physical bytes the pool's slabs occupy — Σ per-class
+    /// `num_blocks × width`. Mixed policies keep this strictly below
+    /// [`Self::padded_pool_bytes`].
+    pub fn pool_physical_bytes(&self) -> u64 {
+        self.pool.storage_bytes() as u64
+    }
+
+    /// The pre-sub-pool baseline: every block padded to the widest
+    /// stream (`num_blocks × max_block_bytes`).
+    pub fn padded_pool_bytes(&self) -> u64 {
+        (self.cfg.num_blocks * self.legacy_block_bytes) as u64
+    }
+
+    /// Physical bytes of one block (its class width).
+    pub fn block_bytes_of(&self, id: BlockId) -> usize {
+        self.pool.block_bytes_of(id)
+    }
+
+    /// Width classes in the pool (1 under uniform policies).
+    pub fn num_width_classes(&self) -> usize {
+        self.pool.num_classes()
+    }
+
     /// Can a sequence of `tokens` total length be admitted right now?
+    /// Span-based: every class must be able to supply its share.
     pub fn can_admit(&self, tokens: usize) -> bool {
-        self.cfg.blocks_for_tokens(tokens) <= self.pool.free_blocks()
+        BlockTable::blocks_for(tokens, self.cfg.block_size) <= self.spans_free()
+    }
+
+    /// Whole spans the empty pool can supply (the binding class bounds
+    /// it; single-class pools reduce to `num_blocks / (2·layers)`).
+    pub fn total_spans(&self) -> usize {
+        (0..self.pool.num_classes())
+            .map(|c| self.pool.class_num_blocks(c) / self.class_streams[c])
+            .min()
+            .unwrap_or(0)
+    }
+
+    /// Span-allocatable byte capacity of the whole pool — what admission
+    /// planning treats as "the pool" under byte budgets.
+    pub fn pool_capacity_bytes(&self) -> u64 {
+        (self.total_spans() * self.span_bytes) as u64
+    }
+
+    /// Watermark headroom of `frac` of the pool, in bytes. Quantized to
+    /// legacy block units (`num_blocks · frac` blocks at the average
+    /// stream width) so uniform policies reproduce the block-count era's
+    /// admission decisions bit-for-bit.
+    pub fn headroom_bytes(&self, frac: f64) -> u64 {
+        let blocks = (self.cfg.num_blocks as f64 * frac) as u64;
+        blocks * self.span_bytes as u64 / (2 * self.cfg.layers) as u64
+    }
+
+    /// Physical bytes a sequence currently holds across every stream, at
+    /// sub-pool widths (shared blocks counted at full cost — this is the
+    /// holder's footprint, not its exclusive reclaim).
+    pub fn seq_bytes(&self, id: SeqId) -> u64 {
+        let Some(seq) = self.seqs.get(&id) else { return 0 };
+        seq.tables
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .flat_map(|t| t.blocks())
+            .map(|&b| self.pool.block_bytes_of(b) as u64)
+            .sum()
     }
 
     pub fn new_sequence(&mut self) -> SeqId {
@@ -407,6 +603,67 @@ impl KvCacheManager {
             .count()
     }
 
+    /// Byte analogue of [`Self::seq_reclaimable_blocks`]: physical bytes
+    /// freeing this sequence returns to the pool (refcount-1 blocks at
+    /// their class widths).
+    pub fn seq_reclaimable_bytes(&self, id: SeqId) -> u64 {
+        self.seqs
+            .get(&id)
+            .map(|s| {
+                s.tables
+                    .iter()
+                    .flat_map(|pair| pair.iter())
+                    .flat_map(|t| t.blocks())
+                    .filter(|&&b| self.pool.refcount(b) == 1)
+                    .map(|&b| self.pool.block_bytes_of(b) as u64)
+                    .sum()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Byte analogue of [`Self::append_need_blocks`]: a boundary append
+    /// opens one block per stream (a full span); mid-block it pays only
+    /// for COW copies of shared tails, at their class widths.
+    pub fn append_need_bytes(&self, id: SeqId) -> u64 {
+        let Some(seq) = self.seqs.get(&id) else { return 0 };
+        if seq.len % self.cfg.block_size == 0 {
+            return self.span_bytes as u64;
+        }
+        let tail_idx = (seq.len - 1) / self.cfg.block_size;
+        seq.tables
+            .iter()
+            .flat_map(|pair| pair.iter())
+            .map(|t| t.blocks()[tail_idx])
+            .filter(|&b| self.pool.refcount(b) > 1)
+            .map(|b| self.pool.block_bytes_of(b) as u64)
+            .sum()
+    }
+
+    /// Per-class block demand of a one-row append (fresh span at a
+    /// boundary, COW copies of shared tails mid-block) — the atomicity
+    /// precheck must clear every class, not just the pool total.
+    fn append_need_by_class(&self, id: SeqId) -> Vec<usize> {
+        let mut need = vec![0usize; self.pool.num_classes()];
+        let Some(seq) = self.seqs.get(&id) else { return need };
+        if seq.len % self.cfg.block_size == 0 {
+            for pair in &self.stream_class {
+                need[pair[0]] += 1;
+                need[pair[1]] += 1;
+            }
+            return need;
+        }
+        let tail_idx = (seq.len - 1) / self.cfg.block_size;
+        for pair in &seq.tables {
+            for t in pair {
+                let b = t.blocks()[tail_idx];
+                if self.pool.refcount(b) > 1 {
+                    need[pool::class_of(b)] += 1;
+                }
+            }
+        }
+        need
+    }
+
     /// Verify pool refcounts exactly match the live block tables plus
     /// external pins: every used block is reachable, every reference is
     /// counted once, and nothing is leaked. O(blocks); debug/test aid,
@@ -417,16 +674,17 @@ impl KvCacheManager {
             for pair in &seq.tables {
                 for t in pair {
                     for &b in t.blocks() {
-                        counted[b as usize] += 1;
+                        counted[self.pool.dense_index(b)] += 1;
                     }
                 }
             }
         }
-        for (i, &c) in counted.iter().enumerate() {
-            let rc = self.pool.refcount(i as BlockId);
+        for (i, id) in self.pool.all_ids().enumerate() {
+            let rc = self.pool.refcount(id);
+            let c = counted[i];
             assert_eq!(
                 c, rc,
-                "block {i}: {rc} pool refs vs {c} table+pin refs (leak or double-hold)"
+                "block {id}: {rc} pool refs vs {c} table+pin refs (leak or double-hold)"
             );
         }
     }
@@ -436,13 +694,14 @@ impl KvCacheManager {
     /// [`Self::unpin_block`].
     pub fn pin_block(&mut self, id: BlockId) {
         self.pool.retain(id);
-        self.extern_pins[id as usize] += 1;
+        self.extern_pins[self.pool.dense_index(id)] += 1;
     }
 
     /// Release an external hold taken by [`Self::pin_block`].
     pub fn unpin_block(&mut self, id: BlockId) {
-        assert!(self.extern_pins[id as usize] > 0, "unpin of unpinned block {id}");
-        self.extern_pins[id as usize] -= 1;
+        let di = self.pool.dense_index(id);
+        assert!(self.extern_pins[di] > 0, "unpin of unpinned block {id}");
+        self.extern_pins[di] -= 1;
         self.pool.release(id);
     }
 
@@ -474,7 +733,8 @@ impl KvCacheManager {
         scales: Vec<[Vec<f32>; 2]>,
         len: usize,
     ) -> Result<SeqId> {
-        let (l, hd, bs) = (self.cfg.layers, self.cfg.heads * self.cfg.head_dim, self.cfg.block_size);
+        let (l, hd, bs) =
+            (self.cfg.layers, self.cfg.heads * self.cfg.head_dim, self.cfg.block_size);
         if tables.len() != l || scales.len() != l {
             bail!("adopt_sequence: {} layer tables for {l}-layer cache", tables.len());
         }
@@ -505,6 +765,80 @@ impl KvCacheManager {
         }
         self.seqs.insert(id, SequenceCache { id, len, tables: seq_tables, scales });
         Ok(id)
+    }
+
+    /// Like [`Self::adopt_sequence`] but the new sequence **takes over**
+    /// the caller's existing hold on every block instead of adding one —
+    /// the cold-tier promotion path, whose freshly restored blocks carry
+    /// refcount 1 with no other owner. Validation is identical; on error
+    /// the caller still owns the blocks.
+    pub fn adopt_owned_sequence(
+        &mut self,
+        tables: Vec<[Vec<BlockId>; 2]>,
+        scales: Vec<[Vec<f32>; 2]>,
+        len: usize,
+    ) -> Result<SeqId> {
+        let (l, hd, bs) =
+            (self.cfg.layers, self.cfg.heads * self.cfg.head_dim, self.cfg.block_size);
+        if tables.len() != l || scales.len() != l {
+            bail!("adopt_owned_sequence: {} layer tables for {l}-layer cache", tables.len());
+        }
+        let nblocks = BlockTable::blocks_for(len, bs);
+        for (pair_t, pair_s) in tables.iter().zip(&scales) {
+            for kv in 0..2 {
+                if pair_t[kv].len() != nblocks || pair_s[kv].len() != nblocks * hd {
+                    bail!(
+                        "adopt_owned_sequence: stream has {} blocks / {} scales for len {len}",
+                        pair_t[kv].len(),
+                        pair_s[kv].len()
+                    );
+                }
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut seq_tables = Vec::with_capacity(l);
+        for pair in &tables {
+            let mut bt = [BlockTable::new(), BlockTable::new()];
+            for kv in 0..2 {
+                for &b in &pair[kv] {
+                    bt[kv].push(b);
+                }
+            }
+            seq_tables.push(bt);
+        }
+        self.seqs.insert(id, SequenceCache { id, len, tables: seq_tables, scales });
+        Ok(id)
+    }
+
+    /// Raw payload bytes of one pool block (cold-tier demotion capture).
+    pub fn block_payload(&self, id: BlockId) -> &[u8] {
+        self.pool.block_raw(id)
+    }
+
+    /// Allocate a block in stream `(layer, kv)`'s width class and fill
+    /// it with `bytes` (cold-tier promotion restore). The returned block
+    /// carries refcount 1 owned by the caller.
+    pub fn restore_block(&mut self, layer: usize, kv: usize, bytes: &[u8]) -> Result<BlockId> {
+        let class = self.stream_class[layer][kv];
+        let width = self.pool.class_block_bytes(class);
+        if width != bytes.len() {
+            bail!("restore_block: {} bytes for a {width}-byte class", bytes.len());
+        }
+        let b = self.pool.alloc_in(class)?;
+        self.pool.block_mut_raw(b).copy_from_slice(bytes);
+        Ok(b)
+    }
+
+    /// Release a caller-owned block hold (undoes [`Self::restore_block`]
+    /// when a promotion aborts midway).
+    pub fn release_block(&mut self, id: BlockId) {
+        self.pool.release(id);
+    }
+
+    /// Byte layout of one (layer, K|V) stream under the cache's policy.
+    pub fn stream_layout(&self, layer: usize, kv: usize) -> &StreamLayout {
+        &self.layouts[layer][kv]
     }
 
     /// Frozen per-block scales of one (layer, K|V) stream, length
@@ -586,11 +920,13 @@ impl KvCacheManager {
                 seq.scales[layer][kv] = sc;
             }
         }
-        // Allocate blocks and write the rows, one worker per block.
+        // Allocate blocks (each stream from its width class) and write
+        // the rows, one worker per block.
         for layer in 0..l {
             for kv in 0..2 {
+                let class = self.stream_class[layer][kv];
                 for _ in 0..nblocks {
-                    let b = self.pool.alloc()?;
+                    let b = self.pool.alloc_in(class)?;
                     self.seqs.get_mut(&id).unwrap().tables[layer][kv].push(b);
                 }
             }
@@ -686,7 +1022,10 @@ impl KvCacheManager {
             }
             seq.len
         };
-        if 2 * l > self.pool.free_blocks() {
+        // Span-aware precheck: one fresh block per stream, each from its
+        // own class (a drained class fails the chunk even if other
+        // classes have room).
+        if self.spans_free() == 0 {
             bail!(
                 "block pool exhausted: chunk needs {} blocks, {} free",
                 2 * l,
@@ -715,7 +1054,7 @@ impl KvCacheManager {
                         sc[head * d + ch] = m * margin / qdiv;
                     }
                 }
-                let b = self.pool.alloc()?;
+                let b = self.pool.alloc_in(self.stream_class[layer][kv])?;
                 let blk = self.pool.block_mut_raw(b);
                 for head in 0..h {
                     let codec = layout.head_codec(head);
@@ -752,10 +1091,15 @@ impl KvCacheManager {
         // cover this append (fresh blocks and/or COW copies), so a caller
         // can reclaim blocks (evict prefix cache, preempt a victim) and
         // retry without leaking half-allocated streams.
-        let need = self.append_need_blocks(id);
-        if need > self.pool.free_blocks() {
+        let need_by_class = self.append_need_by_class(id);
+        if need_by_class
+            .iter()
+            .enumerate()
+            .any(|(c, &n)| n > self.pool.class_free_blocks(c))
+        {
             bail!(
-                "block pool exhausted: append needs {need} blocks, {} free",
+                "block pool exhausted: append needs {} blocks, {} free",
+                need_by_class.iter().sum::<usize>(),
                 self.pool.free_blocks()
             );
         }
@@ -769,7 +1113,7 @@ impl KvCacheManager {
             let hd = h * d;
             for layer in 0..l {
                 for kv in 0..2 {
-                    let b = self.pool.alloc()?;
+                    let b = self.pool.alloc_in(self.stream_class[layer][kv])?;
                     let seq = self.seqs.get_mut(&id).unwrap();
                     seq.tables[layer][kv].push(b);
                     let sc = &mut seq.scales[layer][kv];
@@ -2217,5 +2561,135 @@ mod tests {
                 assert_eq!(a, b, "payload diverged at layer {layer} kv {kv}");
             }
         }
+    }
+
+    #[test]
+    fn uniform_policy_collapses_to_single_class() {
+        let c = cfg();
+        let m = mgr(c, Precision::Int8);
+        assert_eq!(m.num_width_classes(), 1);
+        // int8 at this geometry: 4·2·8 = 64 B per block.
+        assert_eq!(m.pool_physical_bytes(), (128 * 64) as u64);
+        assert_eq!(m.pool_physical_bytes(), m.padded_pool_bytes(), "no padding to reclaim");
+        // One span = one block in each of the 2L·2 = 4 streams.
+        assert_eq!(m.span_bytes(), 4 * 64);
+        assert_eq!(m.spans_free(), 128 / 4);
+        assert_eq!(m.free_bytes(), m.raw_free_bytes());
+        assert_eq!(m.fragmentation_bytes(), 0);
+        assert_eq!(m.bytes_for_tokens(4), 4 * 64);
+        assert_eq!(m.bytes_for_tokens(5), 2 * 4 * 64);
+    }
+
+    #[test]
+    fn mixed_policy_sub_pools_shrink_physical_footprint() {
+        let c = cfg();
+        let policy = PolicySpec::K8V4.resolve(c.layers, c.heads, c.head_dim).unwrap();
+        let mut m = KvCacheManager::new(c, policy);
+        // K streams: int8, 64 B blocks; V streams: int4, 32 B. Two
+        // classes, 2 streams each → 64 blocks per class.
+        assert_eq!(m.num_width_classes(), 2);
+        assert_eq!(m.pool_physical_bytes(), (64 * 64 + 64 * 32) as u64);
+        assert_eq!(m.padded_pool_bytes(), (128 * 64) as u64);
+        assert!(m.pool_physical_bytes() < m.padded_pool_bytes(), "padding reclaimed");
+        assert_eq!(m.span_bytes(), 2 * 64 + 2 * 32);
+        assert_eq!(m.spans_free(), 32);
+        // Admission converts spans to tokens: 32 spans × 4 tokens.
+        assert!(m.can_admit(128));
+        assert!(!m.can_admit(129));
+        assert_eq!(m.fragmentation_bytes(), 0);
+
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 4, 71);
+        m.set_prefill(id, &k, &v, 4).unwrap();
+        // One block per stream: 2 K blocks (64 B int8) + 2 V (32 B int4).
+        let phys = m.physical_bytes_by_precision();
+        assert_eq!(phys[Precision::Int8 as usize], 2 * 64);
+        assert_eq!(phys[Precision::Int4 as usize], 2 * 32);
+        assert_eq!(phys[Precision::Fp32 as usize], 0);
+        // The logical (row-granular, per-holder) gauge is pinned: 4 rows
+        // of 2 heads × 8 ch per stream, int8 1 B/elem, int4 ½ B/elem.
+        let by = m.payload_bytes_by_precision();
+        assert_eq!(by[Precision::Int8 as usize], (2 * c.heads * 4 * c.head_dim) as u64);
+        assert_eq!(by[Precision::Int4 as usize], (c.heads * 4 * c.head_dim) as u64);
+        // Boundary append costs one full span; all blocks are unshared so
+        // freeing reclaims exactly one span.
+        assert_eq!(m.append_need_bytes(id), m.span_bytes() as u64);
+        assert_eq!(m.seq_reclaimable_bytes(id), m.span_bytes() as u64);
+        m.free(id);
+    }
+
+    #[test]
+    fn class_exhaustion_binds_admission() {
+        // 8 blocks over k8v4 → 4 wide + 4 narrow; two spans' worth.
+        let c = CacheConfig { num_blocks: 8, ..cfg() };
+        let policy = PolicySpec::K8V4.resolve(c.layers, c.heads, c.head_dim).unwrap();
+        let mut m = KvCacheManager::new(c, policy);
+        assert_eq!(m.spans_free(), 2);
+        assert!(m.can_admit(8));
+        assert!(!m.can_admit(9));
+        let id = m.new_sequence();
+        let (k, v) = prefill_tensors(&c, 8, 72);
+        m.set_prefill(id, &k, &v, 8).unwrap();
+        assert_eq!(m.spans_free(), 0);
+        // Both classes drained evenly — nothing stranded.
+        assert_eq!(m.fragmentation_bytes(), 0);
+        let hd = c.layers * c.heads * c.head_dim;
+        assert!(m.append_row(id, &vec![0.1; hd], &vec![0.1; hd]).is_err());
+        m.free(id);
+        assert_eq!(m.spans_free(), 2);
+    }
+
+    #[test]
+    fn restore_block_and_adopt_owned_roundtrip() {
+        // The cold-tier promote primitive: captured payload + scales come
+        // back byte-identical through restore_block + adopt_owned_sequence.
+        let c = cfg();
+        let mut m = mgr(c, Precision::Int8);
+        let a = m.new_sequence();
+        let len = 6;
+        let (k, v) = prefill_tensors(&c, len, 73);
+        m.set_prefill(a, &k, &v, len).unwrap();
+        let n = c.heads * c.max_seq * c.head_dim;
+        let mut want = vec![0i8; n];
+        m.gather_i8(a, 0, 0, &mut want).unwrap();
+        // Capture raw block payloads + scales, then free the original.
+        let mut payloads: Vec<[Vec<Vec<u8>>; 2]> = Vec::new();
+        let mut scales: Vec<[Vec<f32>; 2]> = Vec::new();
+        for layer in 0..c.layers {
+            let mut p2: [Vec<Vec<u8>>; 2] = [Vec::new(), Vec::new()];
+            let mut s2: [Vec<f32>; 2] = [Vec::new(), Vec::new()];
+            for kv in 0..2 {
+                for &b in m.seq_stream_blocks(a, layer, kv).unwrap() {
+                    p2[kv].push(m.block_payload(b).to_vec());
+                }
+                s2[kv] = m.scales(a, layer, kv).unwrap().to_vec();
+            }
+            payloads.push(p2);
+            scales.push(s2);
+        }
+        m.free(a);
+        assert_eq!(m.free_blocks(), c.num_blocks);
+        // Restore into fresh blocks and adopt without extra retains.
+        let mut tables: Vec<[Vec<BlockId>; 2]> = Vec::new();
+        for (layer, p2) in payloads.iter().enumerate() {
+            let mut t2: [Vec<BlockId>; 2] = [Vec::new(), Vec::new()];
+            for kv in 0..2 {
+                for bytes in &p2[kv] {
+                    t2[kv].push(m.restore_block(layer, kv, bytes).unwrap());
+                }
+            }
+            tables.push(t2);
+        }
+        let b = m.adopt_owned_sequence(tables, scales, len).unwrap();
+        m.assert_refcounts_consistent();
+        let mut got = vec![0i8; n];
+        m.gather_i8(b, 0, 0, &mut got).unwrap();
+        assert_eq!(got, want, "restored payload diverged");
+        m.free(b);
+        assert_eq!(m.free_blocks(), c.num_blocks, "owned adoption holds exactly once");
+        // Width mismatch is rejected without leaking.
+        assert!(m.restore_block(0, 0, &[0u8; 3]).is_err());
+        m.assert_refcounts_consistent();
+        let _ = v;
     }
 }

@@ -145,6 +145,34 @@ impl<'a> PolicyMemory<'a> {
         };
         fp32.total_bytes() as f64 / self.total_bytes() as f64
     }
+
+    /// Physical bytes of one *span* — one block in every `(layer, K|V)`
+    /// stream — under per-precision sub-pools, where each stream's block
+    /// is padded only to its own codec alignment.
+    pub fn subpool_span_bytes(&self, block_size: usize) -> u64 {
+        (0..self.policy.layers())
+            .flat_map(|l| (0..2).map(move |kv| (l, kv)))
+            .map(|(l, kv)| {
+                self.policy
+                    .stream_layout(l, kv, block_size, self.head_dim)
+                    .padded_block_bytes() as u64
+            })
+            .sum()
+    }
+
+    /// The same span under a legacy single-width pool: every block padded
+    /// to the widest stream's block bytes.
+    pub fn padded_span_bytes(&self, block_size: usize) -> u64 {
+        2 * self.policy.layers() as u64
+            * self.policy.max_block_bytes(block_size, self.head_dim) as u64
+    }
+
+    /// Physical bytes reclaimed per span by width-aware sub-pools. Zero
+    /// for uniform policies (no stream narrower than the widest); strictly
+    /// positive for mixed policies such as `k8v4`.
+    pub fn reclaimed_span_bytes(&self, block_size: usize) -> u64 {
+        self.padded_span_bytes(block_size) - self.subpool_span_bytes(block_size)
+    }
 }
 
 #[cfg(test)]
@@ -248,6 +276,28 @@ mod tests {
         assert!((c - 16.0 / 3.0).abs() < 0.01, "≈5.33x expected, got {c}");
         let by = pm.payload_by_precision();
         assert_eq!(by[Precision::Int8 as usize], 2 * by[Precision::Int4 as usize]);
+    }
+
+    #[test]
+    fn subpool_spans_reclaim_mixed_policy_padding() {
+        // Width-aware sub-pools: k8v4's V blocks take half the bytes of
+        // its K blocks, so the physical span footprint sits strictly
+        // below the padded widest-stream baseline. Uniform policies have
+        // nothing to reclaim.
+        let (l, h, d, bs) = (2usize, 2usize, 8usize, 4usize);
+        let k8v4 = PolicySpec::K8V4.resolve(l, h, d).unwrap();
+        let pm = PolicyMemory::new(&k8v4, d, 0);
+        // K stream block: 2 heads × 4 tokens × 8 ch × 1 B = 64 B;
+        // V stream block: same rows at half a byte per channel = 32 B.
+        assert_eq!(pm.subpool_span_bytes(bs), (l * (64 + 32)) as u64);
+        assert_eq!(pm.padded_span_bytes(bs), (2 * l * 64) as u64);
+        assert_eq!(pm.reclaimed_span_bytes(bs), (l * 32) as u64);
+        assert!(pm.subpool_span_bytes(bs) < pm.padded_span_bytes(bs));
+
+        let int8 = PolicySpec::Uniform(Precision::Int8).resolve(l, h, d).unwrap();
+        let pm8 = PolicyMemory::new(&int8, d, 0);
+        assert_eq!(pm8.subpool_span_bytes(bs), pm8.padded_span_bytes(bs));
+        assert_eq!(pm8.reclaimed_span_bytes(bs), 0);
     }
 
     #[test]

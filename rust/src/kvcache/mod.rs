@@ -20,6 +20,11 @@
 //! * [`policy`]: quantization policies — `(layer, head, K|V side) →
 //!   Precision` maps (uniform presets, `k8v4`, `sink8`, JSON per-layer
 //!   tables) resolved into per-stream [`policy::StreamLayout`]s.
+//! * [`tier`]: the compressed cold tier — LRU-cold prefix entries demote
+//!   out of the hot pool into a byte-shuffle + RLE compressed in-memory
+//!   store (async prefetch, bit-identical promotion) with versioned,
+//!   checksummed on-disk snapshots that persist the warmed corpus across
+//!   restarts.
 //! * [`memory_model`]: the closed-form Table-1 calculator (policy-aware).
 //!
 //! Storage precision is a [`QuantPolicy`] (the legacy single
@@ -34,12 +39,14 @@ pub mod policy;
 pub mod pool;
 pub mod prefix;
 pub mod table;
+pub mod tier;
 
 pub use manager::{CacheView, KvCacheManager, SequenceCache, StreamView, WaveGroup, WaveView};
 pub use memory_model::{MemoryModel, PolicyMemory};
 pub use policy::{PolicySpec, PolicyTable, QuantPolicy, StagedKind};
 pub use pool::{BlockId, BlockPool};
-pub use prefix::{PrefixCache, PrefixHit, PrefixStats};
+pub use prefix::{CapturedPrompt, PrefixCache, PrefixHit, PrefixStats};
+pub use tier::{ColdTier, TierStats};
 
 /// Storage precision of cache pages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -575,6 +575,33 @@ impl StreamLayout {
     pub fn payload_bytes(&self, len: usize) -> usize {
         self.row_bytes.iter().map(|rb| rb * len).sum()
     }
+
+    /// Strictest row alignment any head codec in this stream requires.
+    pub fn align(&self) -> usize {
+        self.codecs.iter().map(|c| c.row_align()).max().unwrap_or(1)
+    }
+
+    /// Byte width one pool block of this stream occupies in its
+    /// sub-pool: the raw payload rounded up to the stream's own
+    /// alignment, so every block base in a same-width sub-pool stays
+    /// aligned for in-place fp32 reads (align-1 codecs never pad — the
+    /// legacy widths are preserved bit-for-bit).
+    pub fn padded_block_bytes(&self) -> usize {
+        self.block_bytes.next_multiple_of(self.align())
+    }
+
+    /// One full block's payload bytes broken down by storage precision,
+    /// indexed `[fp32, int8, int4]` (alignment padding unattributed) —
+    /// the physical-occupancy breakdown for `GET /metrics`.
+    pub fn block_bytes_by_precision(&self) -> [u64; 3] {
+        let mut out = [0u64; 3];
+        for (c, &rb) in self.codecs.iter().zip(&self.row_bytes) {
+            if let Some(p) = Precision::parse(c.name()) {
+                out[p as usize] += (self.block_size * rb) as u64;
+            }
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -802,6 +829,26 @@ mod tests {
         let int4 = QuantPolicy::uniform(Precision::Int4, 2, 2);
         assert!(k8v4.payload_bytes(8, 10) < int8.payload_bytes(8, 10));
         assert!(k8v4.payload_bytes(8, 10) > int4.payload_bytes(8, 10));
+    }
+
+    #[test]
+    fn padded_block_bytes_and_precision_split_per_stream() {
+        // k8v4 at bs=4, d=8, 2 heads: K stream 64 B (int8), V stream
+        // 32 B (int4) — no padding (align 1), and the per-precision
+        // split attributes each stream's full block to its own codec.
+        let k8v4 = PolicySpec::K8V4.resolve(2, 2, 8).unwrap();
+        let kl = k8v4.stream_layout(0, 0, 4, 8);
+        let vl = k8v4.stream_layout(0, 1, 4, 8);
+        assert_eq!((kl.padded_block_bytes(), vl.padded_block_bytes()), (64, 32));
+        assert_eq!(kl.block_bytes_by_precision(), [0, 64, 0]);
+        assert_eq!(vl.block_bytes_by_precision(), [0, 0, 32]);
+        // Mixed-head stream with an fp32 head pads to 4-byte alignment:
+        // 2×24 fp32 + 2×3 int4 = 54 raw bytes → 56 padded.
+        let m = StreamLayout::new(&[Precision::Fp32, Precision::Int4], 2, 6);
+        assert_eq!(m.align(), 4);
+        assert_eq!(m.block_bytes, 54);
+        assert_eq!(m.padded_block_bytes(), 56);
+        assert_eq!(m.block_bytes_by_precision(), [48, 0, 6]);
     }
 
     #[test]

@@ -1,23 +1,36 @@
-//! Block pool: a preallocated slab of fixed-size pages with a free list
-//! and reference counts.
+//! Block pool: preallocated slabs of fixed-size pages with free lists
+//! and reference counts, split into per-width **sub-pools**.
 //!
 //! One pool backs every sequence's K and V streams across all layers.
 //! A block holds `block_size` token rows of one (layer, K|V) stream; the
 //! *byte* layout of those rows is owned by the stream's
 //! [`crate::kvcache::policy::StreamLayout`] (head-major slabs whose row
 //! width comes from each head's [`crate::quant::Codec`]). The pool itself
-//! is precision-agnostic: it deals in raw bytes, sized at construction
-//! for the widest stream the active policy produces, so one pool can back
-//! mixed-precision caches with fungible blocks (the scheduler's block
-//! accounting never needs to know which stream a block serves).
+//! is precision-agnostic: it deals in raw bytes.
+//!
+//! Mixed policies produce streams of different block widths (an INT4
+//! value stream's block is half an INT8 key stream's). Padding every
+//! block to the widest stream would forfeit most of the quantization
+//! win, so the pool is segmented into **width classes**: each class is
+//! its own slab + free list + refcounts, sized for exactly one block
+//! width. A [`BlockId`] encodes `(class, slot)` so everything downstream
+//! (tables, COW refcounts, the prefix trie) keeps treating blocks as
+//! opaque `u32` handles. Uniform policies collapse to a single class and
+//! behave bit-for-bit like the old flat pool.
 //!
 //! Refcounts implement copy-on-write prefix sharing: `fork` bumps counts;
-//! writers call `ensure_unique` (copy-on-write) before mutating.
+//! writers call `ensure_unique` (copy-on-write) before mutating — the
+//! copy always lands in the source block's own class.
 
 use anyhow::{bail, Result};
 
-/// Index of a block in the pool.
+/// Handle of a block in the pool: `class << CLASS_SHIFT | slot`.
 pub type BlockId = u32;
+
+/// Bits reserved for the slot index within a class (16M blocks/class,
+/// 256 classes — far beyond any real pool).
+const CLASS_SHIFT: u32 = 24;
+const SLOT_MASK: u32 = (1 << CLASS_SHIFT) - 1;
 
 /// Geometry of one block (rows × heads × channels; bytes come from the
 /// per-stream codecs).
@@ -34,25 +47,79 @@ impl BlockShape {
     }
 }
 
-/// Fixed-capacity page allocator over raw bytes.
-pub struct BlockPool {
-    shape: BlockShape,
+/// One width class: a slab of equally sized pages with its own free
+/// list and refcounts.
+struct SubPool {
     block_bytes: usize,
     storage: Vec<u8>,
     refcounts: Vec<u32>,
-    free: Vec<BlockId>,
+    /// Free slot indices (not full [`BlockId`]s).
+    free: Vec<u32>,
     num_blocks: usize,
 }
 
-impl BlockPool {
-    pub fn new(num_blocks: usize, shape: BlockShape, block_bytes: usize) -> BlockPool {
-        BlockPool {
-            shape,
+impl SubPool {
+    fn new(num_blocks: usize, block_bytes: usize) -> SubPool {
+        SubPool {
             block_bytes,
             storage: vec![0u8; num_blocks * block_bytes],
             refcounts: vec![0; num_blocks],
-            free: (0..num_blocks as BlockId).rev().collect(),
+            free: (0..num_blocks as u32).rev().collect(),
             num_blocks,
+        }
+    }
+
+    fn range(&self, slot: u32) -> std::ops::Range<usize> {
+        let s = slot as usize * self.block_bytes;
+        s..s + self.block_bytes
+    }
+}
+
+/// Fixed-capacity page allocator over raw bytes, one sub-pool per block
+/// width.
+pub struct BlockPool {
+    shape: BlockShape,
+    classes: Vec<SubPool>,
+}
+
+/// Width class of a block id.
+#[inline]
+pub fn class_of(id: BlockId) -> usize {
+    (id >> CLASS_SHIFT) as usize
+}
+
+/// Slot of a block id within its class.
+#[inline]
+pub fn slot_of(id: BlockId) -> u32 {
+    id & SLOT_MASK
+}
+
+/// Compose a block id from a class and a slot.
+#[inline]
+pub fn make_id(class: usize, slot: u32) -> BlockId {
+    debug_assert!(class < (1 << (32 - CLASS_SHIFT)));
+    debug_assert_eq!(slot & !SLOT_MASK, 0);
+    (class as u32) << CLASS_SHIFT | slot
+}
+
+impl BlockPool {
+    /// Single-class pool: every block `block_bytes` wide — the uniform-
+    /// policy (and legacy) shape.
+    pub fn new(num_blocks: usize, shape: BlockShape, block_bytes: usize) -> BlockPool {
+        Self::with_classes(shape, &[(num_blocks, block_bytes)])
+    }
+
+    /// Multi-class pool: one sub-pool per `(num_blocks, block_bytes)`
+    /// spec. Class indices follow spec order.
+    pub fn with_classes(shape: BlockShape, specs: &[(usize, usize)]) -> BlockPool {
+        assert!(!specs.is_empty(), "pool needs at least one width class");
+        assert!(specs.len() <= 1 << (32 - CLASS_SHIFT), "too many width classes");
+        for &(n, _) in specs {
+            assert!(n <= SLOT_MASK as usize + 1, "class too large for slot encoding");
+        }
+        BlockPool {
+            shape,
+            classes: specs.iter().map(|&(n, w)| SubPool::new(n, w)).collect(),
         }
     }
 
@@ -60,124 +127,216 @@ impl BlockPool {
         self.shape
     }
 
-    /// Payload bytes of one block.
+    /// Width classes in this pool (1 for uniform policies).
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Payload bytes of one block of `class`.
+    pub fn class_block_bytes(&self, class: usize) -> usize {
+        self.classes[class].block_bytes
+    }
+
+    /// Payload bytes of the block behind `id`.
+    pub fn block_bytes_of(&self, id: BlockId) -> usize {
+        self.classes[class_of(id)].block_bytes
+    }
+
+    /// Payload bytes of one block, valid only for single-class pools
+    /// (the legacy accessor — multi-class pools have no single width).
     pub fn block_bytes(&self) -> usize {
-        self.block_bytes
+        debug_assert_eq!(self.classes.len(), 1, "block_bytes() on a multi-class pool");
+        self.classes[0].block_bytes
     }
 
+    /// Total blocks across all classes.
     pub fn num_blocks(&self) -> usize {
-        self.num_blocks
+        self.classes.iter().map(|c| c.num_blocks).sum()
     }
 
+    /// Blocks in one class.
+    pub fn class_num_blocks(&self, class: usize) -> usize {
+        self.classes[class].num_blocks
+    }
+
+    /// Free blocks across all classes.
     pub fn free_blocks(&self) -> usize {
-        self.free.len()
+        self.classes.iter().map(|c| c.free.len()).sum()
+    }
+
+    /// Free blocks in one class.
+    pub fn class_free_blocks(&self, class: usize) -> usize {
+        self.classes[class].free.len()
     }
 
     /// Physically occupied blocks. A block shared by N sequences (COW /
     /// prefix sharing) is counted **once** — this is true pool pressure,
     /// not the sum of per-sequence footprints.
     pub fn used_blocks(&self) -> usize {
-        self.num_blocks - self.free.len()
+        self.classes.iter().map(|c| c.num_blocks - c.free.len()).sum()
     }
 
     /// Sum of refcounts: the per-sequence ("logical") footprint. With
     /// prefix sharing this exceeds [`Self::used_blocks`]; the difference
     /// is memory the COW machinery is saving.
     pub fn logical_used_blocks(&self) -> usize {
-        self.refcounts.iter().map(|&rc| rc as usize).sum()
+        self.classes
+            .iter()
+            .map(|c| c.refcounts.iter().map(|&rc| rc as usize).sum::<usize>())
+            .sum()
     }
 
     /// Blocks held by more than one sequence (refcount > 1).
     pub fn shared_blocks(&self) -> usize {
-        self.refcounts.iter().filter(|&&rc| rc > 1).count()
+        self.classes
+            .iter()
+            .map(|c| c.refcounts.iter().filter(|&&rc| rc > 1).count())
+            .sum()
     }
 
     /// True physical utilization (shared blocks counted once).
     pub fn utilization(&self) -> f64 {
-        self.used_blocks() as f64 / self.num_blocks.max(1) as f64
+        self.used_blocks() as f64 / self.num_blocks().max(1) as f64
     }
 
-    /// Bytes of payload memory held by this pool.
+    /// Bytes of payload memory held by this pool — the **physical**
+    /// footprint (Σ per-class `num_blocks × block_bytes`), which mixed
+    /// policies keep strictly below the padded widest-stream baseline.
     pub fn storage_bytes(&self) -> usize {
-        self.storage.len()
+        self.classes.iter().map(|c| c.storage.len()).sum()
     }
 
-    /// Allocate one block (refcount 1, zeroed).
+    /// Bytes currently on free lists, per-class widths respected.
+    pub fn free_bytes_raw(&self) -> u64 {
+        self.classes.iter().map(|c| (c.free.len() * c.block_bytes) as u64).sum()
+    }
+
+    /// Bytes currently occupied (used blocks × their class width).
+    pub fn used_bytes(&self) -> u64 {
+        self.classes
+            .iter()
+            .map(|c| ((c.num_blocks - c.free.len()) * c.block_bytes) as u64)
+            .sum()
+    }
+
+    /// Allocate one block of class 0 (single-class pools' shorthand).
     pub fn alloc(&mut self) -> Result<BlockId> {
-        let Some(id) = self.free.pop() else {
-            bail!("block pool exhausted ({} blocks)", self.num_blocks)
+        self.alloc_in(0)
+    }
+
+    /// Allocate one block in `class` (refcount 1, zeroed).
+    pub fn alloc_in(&mut self, class: usize) -> Result<BlockId> {
+        let c = &mut self.classes[class];
+        let Some(slot) = c.free.pop() else {
+            bail!(
+                "block pool exhausted (class {class}: {} blocks of {} bytes)",
+                c.num_blocks,
+                c.block_bytes
+            )
         };
-        debug_assert_eq!(self.refcounts[id as usize], 0);
-        self.refcounts[id as usize] = 1;
-        self.block_mut_raw(id).fill(0);
-        Ok(id)
+        debug_assert_eq!(c.refcounts[slot as usize], 0);
+        c.refcounts[slot as usize] = 1;
+        let r = c.range(slot);
+        c.storage[r].fill(0);
+        Ok(make_id(class, slot))
     }
 
     /// Increment a block's refcount (prefix sharing).
     pub fn retain(&mut self, id: BlockId) {
-        assert!(self.refcounts[id as usize] > 0, "retain of free block {id}");
-        self.refcounts[id as usize] += 1;
+        let c = &mut self.classes[class_of(id)];
+        let rc = &mut c.refcounts[slot_of(id) as usize];
+        assert!(*rc > 0, "retain of free block {id}");
+        *rc += 1;
     }
 
-    /// Decrement; returns the block to the free list at zero.
+    /// Decrement; returns the block to its class free list at zero.
     pub fn release(&mut self, id: BlockId) {
-        let rc = &mut self.refcounts[id as usize];
+        let c = &mut self.classes[class_of(id)];
+        let slot = slot_of(id);
+        let rc = &mut c.refcounts[slot as usize];
         assert!(*rc > 0, "release of free block {id}");
         *rc -= 1;
         if *rc == 0 {
-            self.free.push(id);
+            c.free.push(slot);
         }
     }
 
     pub fn refcount(&self, id: BlockId) -> u32 {
-        self.refcounts[id as usize]
+        self.classes[class_of(id)].refcounts[slot_of(id) as usize]
     }
 
     /// Copy-on-write: if `id` is shared, copy its payload into a fresh
-    /// block, release the original, and return the new id; otherwise
-    /// return `id` unchanged.
+    /// block **of the same class**, release the original, and return the
+    /// new id; otherwise return `id` unchanged.
     pub fn ensure_unique(&mut self, id: BlockId) -> Result<BlockId> {
-        if self.refcounts[id as usize] <= 1 {
+        let class = class_of(id);
+        if self.refcount(id) <= 1 {
             return Ok(id);
         }
-        let new = self.alloc()?;
-        let (src_range, dst_range) = (self.range(id), self.range(new));
-        // Split borrows: ranges are disjoint (different blocks).
+        let new = self.alloc_in(class)?;
+        let c = &mut self.classes[class];
+        let (src_range, dst_range) = (c.range(slot_of(id)), c.range(slot_of(new)));
+        // Split borrows: ranges are disjoint (different blocks of one
+        // class slab).
+        let w = c.block_bytes;
         let (a, b) = if src_range.start < dst_range.start {
-            let (lo, hi) = self.storage.split_at_mut(dst_range.start);
-            (&lo[src_range.clone()], &mut hi[..self.block_bytes])
+            let (lo, hi) = c.storage.split_at_mut(dst_range.start);
+            (&lo[src_range.clone()], &mut hi[..w])
         } else {
-            let (lo, hi) = self.storage.split_at_mut(src_range.start);
-            (&hi[..self.block_bytes], &mut lo[dst_range.clone()])
+            let (lo, hi) = c.storage.split_at_mut(src_range.start);
+            (&hi[..w], &mut lo[dst_range.clone()])
         };
         b.copy_from_slice(a);
         self.release(id);
         Ok(new)
     }
 
-    fn range(&self, id: BlockId) -> std::ops::Range<usize> {
-        let s = id as usize * self.block_bytes;
-        s..s + self.block_bytes
-    }
-
     /// Raw byte view of a block's payload.
     pub fn block_raw(&self, id: BlockId) -> &[u8] {
-        &self.storage[self.range(id)]
+        let c = &self.classes[class_of(id)];
+        &c.storage[c.range(slot_of(id))]
     }
 
     pub fn block_mut_raw(&mut self, id: BlockId) -> &mut [u8] {
-        let r = self.range(id);
-        &mut self.storage[r]
+        let c = &mut self.classes[class_of(id)];
+        let r = c.range(slot_of(id));
+        &mut c.storage[r]
+    }
+
+    /// Dense `0..num_blocks` index of a block (class-major order), for
+    /// side tables indexed per block (the manager's external pins).
+    pub fn dense_index(&self, id: BlockId) -> usize {
+        let class = class_of(id);
+        let off: usize = self.classes[..class].iter().map(|c| c.num_blocks).sum();
+        off + slot_of(id) as usize
+    }
+
+    /// Every block id in the pool, in dense (class-major) order —
+    /// pairs with [`Self::dense_index`].
+    pub fn all_ids(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.classes
+            .iter()
+            .enumerate()
+            .flat_map(|(c, sp)| (0..sp.num_blocks as u32).map(move |s| make_id(c, s)))
     }
 
     /// Raw payload pointers for a set of blocks, all derived from one
-    /// mutable borrow of the storage (clean provenance for parallel
+    /// mutable borrow of the pool (clean provenance for parallel
     /// writers). Callers guarantee the ids are distinct and own the
     /// disjointness of concurrent writes.
     pub fn block_raw_ptrs(&mut self, ids: &[BlockId]) -> Vec<*mut u8> {
-        let base = self.storage.as_mut_ptr();
-        // SAFETY: every id indexes a whole block inside `storage`.
-        ids.iter().map(|&id| unsafe { base.add(id as usize * self.block_bytes) }).collect()
+        let bases: Vec<(*mut u8, usize)> = self
+            .classes
+            .iter_mut()
+            .map(|c| (c.storage.as_mut_ptr(), c.block_bytes))
+            .collect();
+        // SAFETY: every id indexes a whole block inside its class slab.
+        ids.iter()
+            .map(|&id| {
+                let (base, w) = bases[class_of(id)];
+                unsafe { base.add(slot_of(id) as usize * w) }
+            })
+            .collect()
     }
 }
 
@@ -302,5 +461,60 @@ mod tests {
         }
         assert_eq!(p.block_raw(a)[0], 11);
         assert_eq!(p.block_raw(b)[0], 22);
+    }
+
+    #[test]
+    fn sub_pools_allocate_per_width() {
+        // Two classes: 4 wide blocks (64 B) + 4 narrow (32 B) — the k8v4
+        // shape at this geometry.
+        let mut p = BlockPool::with_classes(shape(), &[(4, 64), (4, 32)]);
+        assert_eq!(p.num_classes(), 2);
+        assert_eq!(p.num_blocks(), 8);
+        assert_eq!(p.storage_bytes(), 4 * 64 + 4 * 32);
+        let wide = p.alloc_in(0).unwrap();
+        let narrow = p.alloc_in(1).unwrap();
+        assert_eq!(p.block_raw(wide).len(), 64);
+        assert_eq!(p.block_raw(narrow).len(), 32);
+        assert_eq!(p.block_bytes_of(wide), 64);
+        assert_eq!(p.block_bytes_of(narrow), 32);
+        assert_ne!(wide, narrow, "ids are class-disambiguated");
+        assert_eq!(p.class_free_blocks(0), 3);
+        assert_eq!(p.class_free_blocks(1), 3);
+        assert_eq!(p.used_bytes(), 64 + 32);
+        assert_eq!(p.free_bytes_raw(), (3 * 64 + 3 * 32) as u64);
+        // Exhausting the narrow class leaves the wide class allocatable.
+        for _ in 0..3 {
+            p.alloc_in(1).unwrap();
+        }
+        assert!(p.alloc_in(1).is_err());
+        assert!(p.alloc_in(0).is_ok());
+    }
+
+    #[test]
+    fn cow_stays_in_class() {
+        let mut p = BlockPool::with_classes(shape(), &[(2, 64), (2, 32)]);
+        let a = p.alloc_in(1).unwrap();
+        p.block_mut_raw(a)[0] = 9;
+        p.retain(a);
+        let b = p.ensure_unique(a).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.block_bytes_of(b), 32, "copy lands in the source class");
+        assert_eq!(p.block_raw(b)[0], 9);
+        assert_eq!(p.refcount(a), 1);
+    }
+
+    #[test]
+    fn raw_ptrs_span_classes() {
+        let mut p = BlockPool::with_classes(shape(), &[(2, 64), (2, 32)]);
+        let a = p.alloc_in(0).unwrap();
+        let b = p.alloc_in(1).unwrap();
+        let ptrs = p.block_raw_ptrs(&[a, b]);
+        // SAFETY: test-only — distinct blocks in distinct slabs.
+        unsafe {
+            *ptrs[0] = 5;
+            *ptrs[1] = 6;
+        }
+        assert_eq!(p.block_raw(a)[0], 5);
+        assert_eq!(p.block_raw(b)[0], 6);
     }
 }

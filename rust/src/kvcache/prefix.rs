@@ -121,6 +121,25 @@ impl PrefixStats {
     }
 }
 
+/// A complete cached prompt captured out of the trie — the cold-tier
+/// demotion payload and the snapshot record. Self-contained: it carries
+/// the **entire** chain of block payloads root→tail (even chunks that
+/// stay hot because other prompts share them), so a later promotion
+/// never depends on trie state, and the restored bytes are the exact
+/// bytes the trie pinned (bit-identical by construction — the blocks
+/// were never mutated while pinned).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapturedPrompt {
+    /// The full prompt tokens (block-aligned chunks + sub-block tail).
+    pub tokens: Vec<i32>,
+    /// `[layer][kv]` → per-block raw payload bytes, prompt block order.
+    pub payloads: Vec<[Vec<Vec<u8>>; 2]>,
+    /// `[layer][kv]` → concatenated per-block frozen scale grids.
+    pub scales: Vec<[Vec<f32>; 2]>,
+    /// Stored last-position prefill logits (first-token sampling input).
+    pub logits: Vec<f32>,
+}
+
 /// An evictable leaf unit: one tail, or one childless node together with
 /// its tails.
 struct Unit {
@@ -579,12 +598,146 @@ impl PrefixCache {
         while mgr.free_blocks() < want_free && self.evict_reclaimable_lru(mgr) {}
     }
 
+    /// Byte-budget twin of [`Self::evict_for`]: evict reclaimable units
+    /// until at least `want_free` usable bytes
+    /// ([`KvCacheManager::free_bytes`]) are free. Under sub-pools the
+    /// binding constraint is the drained width class, which block counts
+    /// can't see — the engine's pressure valve uses this form.
+    pub fn evict_for_bytes(&mut self, mgr: &mut KvCacheManager, want_free: u64) {
+        while mgr.free_bytes() < want_free && self.evict_reclaimable_lru(mgr) {}
+    }
+
+    /// Capture one complete cached prompt: walk `path` from the root
+    /// snapshotting every chunk's raw block payloads + grids, then the
+    /// tail entry at `tail_key`. Read-only — pins and trie state are
+    /// untouched.
+    fn capture_prompt(
+        &self,
+        mgr: &KvCacheManager,
+        path: &[Vec<i32>],
+        tail_key: &[i32],
+    ) -> CapturedPrompt {
+        let layers = mgr.config().layers;
+        let mut tokens: Vec<i32> = path.iter().flatten().copied().collect();
+        tokens.extend_from_slice(tail_key);
+        let mut payloads: Vec<[Vec<Vec<u8>>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
+        let mut scales: Vec<[Vec<f32>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
+        let mut grab = |blocks: &[[BlockId; 2]], grids: &[[Vec<f32>; 2]]| {
+            for layer in 0..layers {
+                for kv in 0..2 {
+                    payloads[layer][kv].push(mgr.block_payload(blocks[layer][kv]).to_vec());
+                    scales[layer][kv].extend_from_slice(&grids[layer][kv]);
+                }
+            }
+        };
+        let mut cur = &self.root;
+        for key in path {
+            cur = cur.children.get(key).expect("capture path diverged from trie");
+            grab(&cur.blocks, &cur.scales);
+        }
+        let tail = cur.tails.get(tail_key).expect("capture tail missing");
+        if !tail.blocks.is_empty() {
+            grab(&tail.blocks, &tail.scales);
+        }
+        CapturedPrompt { tokens, payloads, scales, logits: tail.logits.clone() }
+    }
+
+    /// Demote the LRU reclaimable leaf unit: capture every complete
+    /// prompt the unit holds (a tail unit holds one; a childless-node
+    /// unit holds one per tail), then evict it. The pool effect is
+    /// **identical** to [`Self::evict_reclaimable_lru`] — same unit
+    /// order, same releases — so running the cold tier never changes
+    /// scheduling outcomes; it only preserves what eviction would have
+    /// destroyed. Returns `None` when nothing is evictable; the captured
+    /// list may be empty (an interior chunk whose completions were
+    /// already demoted separately). Prompts still shared with live
+    /// sequences stay hot (the reclaimable filter), so a shared span is
+    /// never demoted out from under a writer.
+    pub fn demote_reclaimable_lru(
+        &mut self,
+        mgr: &mut KvCacheManager,
+    ) -> Option<Vec<CapturedPrompt>> {
+        let units = self.units(mgr);
+        let unit = Self::pick_lru(&units, true)?;
+        let unit = Unit {
+            path: unit.path.clone(),
+            tail: unit.tail.clone(),
+            last_used: unit.last_used,
+            reclaimable: unit.reclaimable,
+        };
+        let mut captured = Vec::new();
+        match &unit.tail {
+            Some(key) => captured.push(self.capture_prompt(mgr, &unit.path, key)),
+            None => {
+                let mut cur = &self.root;
+                for key in &unit.path {
+                    cur = cur.children.get(key).unwrap();
+                }
+                let mut keys: Vec<Vec<i32>> = cur.tails.keys().cloned().collect();
+                keys.sort();
+                for key in &keys {
+                    captured.push(self.capture_prompt(mgr, &unit.path, key));
+                }
+            }
+        }
+        self.evict_unit(mgr, &unit);
+        Some(captured)
+    }
+
+    /// Capture every complete cached prompt without touching the trie —
+    /// the persistent-snapshot writer. Deterministic order (sorted by
+    /// chunk path, then tail key).
+    pub fn capture_all(&self, mgr: &KvCacheManager) -> Vec<CapturedPrompt> {
+        type Found = Vec<(Vec<Vec<i32>>, Vec<i32>)>;
+        fn collect(node: &Node, path: &mut Vec<Vec<i32>>, out: &mut Found) {
+            for key in node.tails.keys() {
+                out.push((path.clone(), key.clone()));
+            }
+            for (key, child) in &node.children {
+                path.push(key.clone());
+                collect(child, path, out);
+                path.pop();
+            }
+        }
+        let mut prompts = Vec::new();
+        collect(&self.root, &mut Vec::new(), &mut prompts);
+        prompts.sort();
+        prompts
+            .iter()
+            .map(|(path, key)| self.capture_prompt(mgr, path, key))
+            .collect()
+    }
+
     /// Drop everything (engine shutdown / reconfiguration).
     pub fn clear(&mut self, mgr: &mut KvCacheManager) {
         while self.evict_lru(mgr) {}
         debug_assert_eq!(self.pinned, 0, "clear left pins behind");
         debug_assert_eq!(self.nodes, 0);
         debug_assert_eq!(self.entries, 0);
+    }
+
+    /// Byte twin of [`Self::evictable_blocks`]: physical bytes (class
+    /// widths) an eviction sweep could return right now.
+    pub fn evictable_bytes(&self, mgr: &KvCacheManager) -> u64 {
+        fn walk(node: &Node, mgr: &KvCacheManager) -> u64 {
+            let count = |blocks: &[[BlockId; 2]]| -> u64 {
+                blocks
+                    .iter()
+                    .flat_map(|p| p.iter())
+                    .filter(|&&b| mgr.block_refcount(b) == 1)
+                    .map(|&b| mgr.block_bytes_of(b) as u64)
+                    .sum()
+            };
+            let mut n = count(&node.blocks);
+            for tail in node.tails.values() {
+                n += count(&tail.blocks);
+            }
+            for child in node.children.values() {
+                n += walk(child, mgr);
+            }
+            n
+        }
+        walk(&self.root, mgr)
     }
 
     /// Upper bound on pool blocks an eviction sweep could return right
@@ -938,5 +1091,111 @@ mod tests {
         }
         pc.clear(&mut mgr);
         assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+    }
+
+    #[test]
+    fn demote_captures_the_full_prompt_and_matches_plain_eviction() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let src = prefill(&mut mgr, 10, 41); // 2 chunks + 2-token tail
+        let mut prompt = vec![3i32; 8];
+        prompt.extend([7, 9]);
+        pc.insert(&mut mgr, src, &prompt, &[0.25, 0.75]);
+        mgr.free(src); // cache is now the only holder
+        let free_before = mgr.free_blocks();
+
+        // LRU reclaimable unit is the tail entry: the capture must carry
+        // the WHOLE prompt (both interior chunks + the tail block), while
+        // the eviction releases only the tail unit's pins — the same pool
+        // effect evict_reclaimable_lru would have had.
+        let captured = pc.demote_reclaimable_lru(&mut mgr).expect("something evictable");
+        assert_eq!(captured.len(), 1);
+        let cap = &captured[0];
+        assert_eq!(cap.tokens, prompt);
+        assert_eq!(cap.logits, vec![0.25, 0.75]);
+        let layers = mgr.config().layers;
+        let hd = mgr.config().heads * mgr.config().head_dim;
+        for layer in 0..layers {
+            for kv in 0..2 {
+                assert_eq!(cap.payloads[layer][kv].len(), 3, "2 chunks + tail");
+                assert_eq!(cap.scales[layer][kv].len(), 3 * hd, "one grid per block");
+                for p in &cap.payloads[layer][kv] {
+                    assert_eq!(p.len(), mgr.stream_layout(layer, kv).padded_block_bytes());
+                }
+            }
+        }
+        // Only the tail unit's blocks were released (1 block per stream).
+        assert_eq!(mgr.free_blocks(), free_before + 2 * layers);
+        assert_eq!(pc.len(), 0, "the completion left the hot trie");
+        assert!(pc.trie_nodes() > 0, "interior chunks stay for other extensions");
+
+        // Draining the rest captures nothing new (no completions remain).
+        while let Some(more) = pc.demote_reclaimable_lru(&mut mgr) {
+            assert!(more.is_empty(), "interior chunks carry no completions");
+        }
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn demote_skips_blocks_shared_with_live_sequences() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let src = prefill(&mut mgr, 8, 42);
+        pc.insert(&mut mgr, src, &[5i32; 8], &[0.0]);
+        // `src` still lives: every pinned block is shared → nothing may
+        // demote (a demotion would otherwise race the live writer).
+        assert!(pc.demote_reclaimable_lru(&mut mgr).is_none());
+        mgr.free(src);
+        assert!(pc.demote_reclaimable_lru(&mut mgr).is_some());
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn capture_all_is_nondestructive_and_complete() {
+        let mut mgr = manager(128);
+        let mut pc = PrefixCache::new(128);
+        let a = prefill(&mut mgr, 8, 43);
+        let mut pa = vec![1i32; 4];
+        pa.extend(vec![2i32; 4]);
+        pc.insert(&mut mgr, a, &pa, &[0.1]);
+        let b = prefill(&mut mgr, 6, 44);
+        let pb = vec![1i32; 6]; // shares the first chunk, sub-block tail
+        pc.insert(&mut mgr, b, &pb, &[0.2]);
+        mgr.free(a);
+        mgr.free(b);
+
+        let pinned = pc.pinned_blocks();
+        let caps = pc.capture_all(&mgr);
+        assert_eq!(caps.len(), 2);
+        let mut tokens: Vec<&Vec<i32>> = caps.iter().map(|c| &c.tokens).collect();
+        tokens.sort();
+        assert_eq!(tokens, vec![&pb, &pa]);
+        assert_eq!(pc.pinned_blocks(), pinned, "capture_all leaves the trie untouched");
+        assert_eq!(pc.len(), 2);
+        // Both captures carry the shared first chunk's bytes — each
+        // record restores independently.
+        for c in &caps {
+            let nblocks = c.tokens.len().div_ceil(mgr.config().block_size);
+            assert_eq!(c.payloads[0][0].len(), nblocks);
+        }
+        pc.clear(&mut mgr);
+        assert_eq!(mgr.free_blocks(), mgr.config().num_blocks);
+    }
+
+    #[test]
+    fn evict_for_bytes_frees_byte_pressure() {
+        let mut mgr = manager(16);
+        let mut pc = PrefixCache::new(16);
+        let src = prefill(&mut mgr, 8, 45); // 8 of 16 blocks
+        pc.insert(&mut mgr, src, &[4i32; 8], &[0.0]);
+        mgr.free(src);
+        let bb = mgr.span_bytes() as u64 / (2 * mgr.config().layers as u64); // 64 B
+        assert_eq!(pc.evictable_bytes(&mgr), 8 * bb);
+        assert_eq!(mgr.free_bytes(), 8 * bb);
+        pc.evict_for_bytes(&mut mgr, 12 * bb);
+        assert!(mgr.free_bytes() >= 12 * bb);
+        assert!(pc.is_empty());
+        pc.clear(&mut mgr);
     }
 }

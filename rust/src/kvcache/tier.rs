@@ -1,0 +1,1138 @@
+//! Compressed cold tier and persistent prefix snapshots.
+//!
+//! The hot [`super::pool::BlockPool`] holds every block a decode wave can
+//! touch; under capacity pressure the prefix trie used to *destroy* cold
+//! cached prompts to make room. This module adds a second chance: the
+//! engine **demotes** the same LRU-reclaimable units the trie would have
+//! evicted, but captures their payloads first ([`CapturedPrompt`]) and
+//! parks them in a compressed in-memory store. A later request for the
+//! same prompt **promotes** the entry back into the hot pool —
+//! bit-identical, because quantized payload bytes and frozen eq.-6 scale
+//! grids round-trip losslessly through the codec below.
+//!
+//! - **Compression** — per block: byte-shuffle with the stream's row
+//!   width as stride (groups each channel's bytes, which vary slowly
+//!   across rows after quantization) followed by run-length coding, with
+//!   a raw fallback when RLE would expand. Scale grids are kept as exact
+//!   `f32`. Everything is lossless and deterministic.
+//! - **Prefetch** — a background thread decompresses requested entries
+//!   into a bounded ready map ahead of the decode window;
+//!   [`ColdTier::promote`] falls back to synchronous decompression (a
+//!   `prefetch_miss`) when a wave outruns it.
+//! - **Snapshots** — the store serializes to a versioned, checksummed
+//!   on-disk image (`KVQSNAP1`) loaded at engine start, so restarts keep
+//!   their warmed prefix corpus. Geometry/policy mismatches and checksum
+//!   failures are ignored with a warning — a snapshot is a cache, never
+//!   a source of truth.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manager::{KvCacheManager, SeqId};
+use super::pool::BlockId;
+use super::prefix::{CapturedPrompt, PrefixCache};
+
+/// Compressed-block method byte: payload stored verbatim.
+const METHOD_RAW: u8 = 0;
+/// Compressed-block method byte: byte-shuffle + run-length pairs.
+const METHOD_SHUFFLE_RLE: u8 = 1;
+/// Bytes of `[method u8][raw_len u32][stride u32]` before the body.
+const BLOCK_HEADER: usize = 9;
+
+const SNAP_MAGIC: &[u8; 8] = b"KVQSNAP1";
+const SNAP_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Block codec: shuffle + RLE with raw fallback, self-describing header
+// ---------------------------------------------------------------------------
+
+/// Transpose `data` viewed as rows of `stride` bytes into lane-major
+/// order (lane 0 of every row, then lane 1, ...). A trailing partial row
+/// is appended untouched.
+fn shuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let rows = data.len() / stride;
+    let mut out = Vec::with_capacity(data.len());
+    for lane in 0..stride {
+        for row in 0..rows {
+            out.push(data[row * stride + lane]);
+        }
+    }
+    out.extend_from_slice(&data[rows * stride..]);
+    out
+}
+
+/// Inverse of [`shuffle`].
+fn unshuffle(data: &[u8], stride: usize) -> Vec<u8> {
+    let rows = data.len() / stride;
+    let mut out = vec![0u8; data.len()];
+    let mut i = 0;
+    for lane in 0..stride {
+        for row in 0..rows {
+            out[row * stride + lane] = data[i];
+            i += 1;
+        }
+    }
+    out[rows * stride..].copy_from_slice(&data[i..]);
+    out
+}
+
+/// Run-length coding as `(count u8 in 1..=255, value u8)` pairs.
+fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let v = data[i];
+        let mut run = 1usize;
+        while run < 255 && i + run < data.len() && data[i + run] == v {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(v);
+        i += run;
+    }
+    out
+}
+
+fn rle_decode(data: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    if data.len() % 2 != 0 {
+        bail!("rle stream has odd length {}", data.len());
+    }
+    let mut out = Vec::with_capacity(raw_len);
+    for pair in data.chunks_exact(2) {
+        let (run, v) = (pair[0] as usize, pair[1]);
+        if run == 0 || out.len() + run > raw_len {
+            bail!("rle stream decodes past {raw_len} bytes");
+        }
+        out.resize(out.len() + run, v);
+    }
+    if out.len() != raw_len {
+        bail!("rle stream decodes to {} of {raw_len} bytes", out.len());
+    }
+    Ok(out)
+}
+
+/// Compress one raw block payload. The output is self-describing
+/// (`[method][raw_len][stride][body]`) so [`decompress_block`] needs no
+/// side channel — the prefetch thread and the snapshot loader both rely
+/// on that. `stride` should be the stream's quantized row width; any
+/// value is correct, it only changes the ratio.
+pub fn compress_block(data: &[u8], stride: usize) -> Vec<u8> {
+    let stride = stride.max(1);
+    let rle = rle_encode(&shuffle(data, stride));
+    let (method, body) = if rle.len() < data.len() {
+        (METHOD_SHUFFLE_RLE, rle.as_slice())
+    } else {
+        (METHOD_RAW, data)
+    };
+    let mut out = Vec::with_capacity(BLOCK_HEADER + body.len());
+    out.push(method);
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(stride as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Recover the exact bytes passed to [`compress_block`].
+pub fn decompress_block(comp: &[u8]) -> Result<Vec<u8>> {
+    if comp.len() < BLOCK_HEADER {
+        bail!("compressed block shorter than its {BLOCK_HEADER}-byte header");
+    }
+    let raw_len = u32::from_le_bytes(comp[1..5].try_into().unwrap()) as usize;
+    let stride = (u32::from_le_bytes(comp[5..9].try_into().unwrap()) as usize).max(1);
+    let body = &comp[BLOCK_HEADER..];
+    match comp[0] {
+        METHOD_RAW => {
+            if body.len() != raw_len {
+                bail!("raw block body is {} of {raw_len} bytes", body.len());
+            }
+            Ok(body.to_vec())
+        }
+        METHOD_SHUFFLE_RLE => Ok(unshuffle(&rle_decode(body, raw_len)?, stride)),
+        m => bail!("unknown compression method {m}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cold store
+// ---------------------------------------------------------------------------
+
+/// One demoted prompt, compressed. Mirrors [`CapturedPrompt`] with every
+/// block payload run through [`compress_block`]; scales and logits stay
+/// exact.
+#[derive(Debug, Clone)]
+struct ColdEntry {
+    /// `[layer][kv]` → per-block compressed payloads, prompt block order.
+    blocks: Vec<[Vec<Vec<u8>>; 2]>,
+    /// `[layer][kv]` → concatenated frozen scale grids (exact).
+    scales: Vec<[Vec<f32>; 2]>,
+    /// Stored last-position prefill logits.
+    logits: Vec<f32>,
+    /// Total blocks across all streams (capacity accounting).
+    nblocks: usize,
+    /// Uncompressed payload bytes.
+    raw_bytes: u64,
+    /// Compressed payload bytes (headers included).
+    comp_bytes: u64,
+    /// LRU tick of the owning store.
+    last_used: u64,
+}
+
+impl ColdEntry {
+    fn from_capture(cap: &CapturedPrompt, mgr: &KvCacheManager) -> ColdEntry {
+        let layers = mgr.config().layers;
+        let mut blocks: Vec<[Vec<Vec<u8>>; 2]> = Vec::with_capacity(layers);
+        let (mut nblocks, mut raw, mut comp) = (0usize, 0u64, 0u64);
+        for layer in 0..layers {
+            let mut pair = [Vec::new(), Vec::new()];
+            for kv in 0..2 {
+                let stride = mgr.stream_layout(layer, kv).head_row_bytes(0);
+                for payload in &cap.payloads[layer][kv] {
+                    raw += payload.len() as u64;
+                    let c = compress_block(payload, stride);
+                    comp += c.len() as u64;
+                    pair[kv].push(c);
+                    nblocks += 1;
+                }
+            }
+            blocks.push(pair);
+        }
+        ColdEntry {
+            blocks,
+            scales: cap.scales.clone(),
+            logits: cap.logits.clone(),
+            nblocks,
+            raw_bytes: raw,
+            comp_bytes: comp,
+            last_used: 0,
+        }
+    }
+
+    /// Rehydrate into the exact capture that produced this entry.
+    fn decompress(&self, tokens: Vec<i32>) -> Result<CapturedPrompt> {
+        let mut payloads: Vec<[Vec<Vec<u8>>; 2]> = Vec::with_capacity(self.blocks.len());
+        for pair in &self.blocks {
+            let mut out = [Vec::new(), Vec::new()];
+            for kv in 0..2 {
+                for comp in &pair[kv] {
+                    out[kv].push(decompress_block(comp)?);
+                }
+            }
+            payloads.push(out);
+        }
+        Ok(CapturedPrompt {
+            tokens,
+            payloads,
+            scales: self.scales.clone(),
+            logits: self.logits.clone(),
+        })
+    }
+}
+
+/// Keyed by the full prompt token vector — promotion is exact-match;
+/// partial-prefix reuse returns once a promoted prompt is re-inserted
+/// into the hot trie at finalize.
+#[derive(Debug, Default)]
+struct ColdStore {
+    entries: HashMap<Vec<i32>, ColdEntry>,
+    /// Σ entry `nblocks` (capacity accounting).
+    blocks: usize,
+    tick: u64,
+}
+
+impl ColdStore {
+    fn insert(&mut self, tokens: Vec<i32>, mut entry: ColdEntry) {
+        self.tick += 1;
+        entry.last_used = self.tick;
+        if let Some(old) = self.entries.remove(&tokens) {
+            self.blocks -= old.nblocks;
+        }
+        self.blocks += entry.nblocks;
+        self.entries.insert(tokens, entry);
+    }
+
+    fn remove(&mut self, tokens: &[i32]) -> Option<ColdEntry> {
+        let e = self.entries.remove(tokens)?;
+        self.blocks -= e.nblocks;
+        Some(e)
+    }
+
+    fn touch(&mut self, tokens: &[i32]) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.get_mut(tokens) {
+            e.last_used = tick;
+        }
+    }
+
+    /// Evict least-recently-used entries until `blocks <= capacity`.
+    /// Ties break on key order so eviction is deterministic.
+    fn evict_lru_to(&mut self, capacity: usize) -> u64 {
+        let mut evicted = 0;
+        while self.blocks > capacity {
+            let key = self
+                .entries
+                .iter()
+                .min_by(|a, b| a.1.last_used.cmp(&b.1.last_used).then_with(|| a.0.cmp(b.0)))
+                .map(|(k, _)| k.clone());
+            match key {
+                Some(k) => {
+                    self.remove(&k);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    fn raw_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.raw_bytes).sum()
+    }
+
+    fn comp_bytes(&self) -> u64 {
+        self.entries.values().map(|e| e.comp_bytes).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tier counters
+// ---------------------------------------------------------------------------
+
+/// Point-in-time tier counters, surfaced in `GET /metrics` (schema v4).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TierStats {
+    /// Prompts demoted hot → cold.
+    pub demotions: u64,
+    /// Prompts promoted cold → hot.
+    pub promotions: u64,
+    /// Promotions served from the async prefetch ready map.
+    pub prefetch_hits: u64,
+    /// Promotions that decompressed synchronously (wave outran prefetch).
+    pub prefetch_misses: u64,
+    /// Cold entries dropped by the store's own LRU capacity bound.
+    pub cold_evictions: u64,
+    /// Pool-pressure events absorbed by demotion: each `demote_for` call
+    /// that freed hot bytes is one reclaim the engine satisfied without
+    /// destroying the cached prefix or preempting a running sequence
+    /// (with the tier off the same pressure evicts, and preempts once
+    /// nothing reclaimable remains).
+    pub preemptions_avoided: u64,
+    /// Entries restored from an on-disk snapshot at startup.
+    pub snapshot_loaded: u64,
+    /// Current cold entries / blocks / bytes.
+    pub cold_entries: u64,
+    pub cold_blocks: u64,
+    pub cold_raw_bytes: u64,
+    pub cold_comp_bytes: u64,
+    /// Cumulative wall-clock seconds in each phase.
+    pub demote_secs: f64,
+    pub promote_secs: f64,
+    pub decompress_secs: f64,
+}
+
+impl TierStats {
+    /// Uncompressed / compressed bytes currently resident (1.0 when
+    /// empty).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.cold_comp_bytes == 0 {
+            1.0
+        } else {
+            self.cold_raw_bytes as f64 / self.cold_comp_bytes as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ColdTier
+// ---------------------------------------------------------------------------
+
+/// The compressed cold tier: demotion sink, promotion source, prefetch
+/// front-end, and snapshot reader/writer. A `capacity_blocks` of 0
+/// disables the tier entirely (every operation is a no-op) — the
+/// `KVQ_COLD_TIER=off` escape hatch resolves to that.
+pub struct ColdTier {
+    capacity_blocks: usize,
+    prefetch_depth: usize,
+    store: Arc<Mutex<ColdStore>>,
+    /// Decompressed entries staged by the prefetch thread, bounded by
+    /// `prefetch_depth`.
+    ready: Arc<Mutex<HashMap<Vec<i32>, CapturedPrompt>>>,
+    tx: Option<mpsc::Sender<Vec<i32>>>,
+    worker: Option<JoinHandle<()>>,
+    demotions: u64,
+    promotions: u64,
+    prefetch_hits: u64,
+    prefetch_misses: u64,
+    cold_evictions: u64,
+    preemptions_avoided: u64,
+    snapshot_loaded: u64,
+    demote_secs: f64,
+    promote_secs: f64,
+    decompress_secs: f64,
+}
+
+impl ColdTier {
+    /// `capacity_blocks` bounds resident cold blocks (0 disables the
+    /// tier); `prefetch_depth` bounds the staged ready map (0 disables
+    /// the background thread — promotions all decompress synchronously).
+    pub fn new(capacity_blocks: usize, prefetch_depth: usize) -> ColdTier {
+        let store = Arc::new(Mutex::new(ColdStore::default()));
+        let ready = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, worker) = if capacity_blocks > 0 && prefetch_depth > 0 {
+            let (tx, rx) = mpsc::channel::<Vec<i32>>();
+            let (store, ready) = (Arc::clone(&store), Arc::clone(&ready));
+            let handle = std::thread::Builder::new()
+                .name("kvq-prefetch".into())
+                .spawn(move || {
+                    while let Ok(tokens) = rx.recv() {
+                        if ready.lock().unwrap().len() >= prefetch_depth {
+                            continue;
+                        }
+                        let entry = store.lock().unwrap().entries.get(&tokens).cloned();
+                        if let Some(e) = entry {
+                            if let Ok(cap) = e.decompress(tokens.clone()) {
+                                let mut r = ready.lock().unwrap();
+                                if r.len() < prefetch_depth {
+                                    r.insert(tokens, cap);
+                                }
+                            }
+                        }
+                    }
+                })
+                .expect("spawn prefetch thread");
+            (Some(tx), Some(handle))
+        } else {
+            (None, None)
+        };
+        ColdTier {
+            capacity_blocks,
+            prefetch_depth,
+            store,
+            ready,
+            tx,
+            worker,
+            demotions: 0,
+            promotions: 0,
+            prefetch_hits: 0,
+            prefetch_misses: 0,
+            cold_evictions: 0,
+            preemptions_avoided: 0,
+            snapshot_loaded: 0,
+            demote_secs: 0.0,
+            promote_secs: 0.0,
+            decompress_secs: 0.0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_blocks > 0
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch_depth
+    }
+
+    /// Whether an exact-match promotion for `prompt` is available.
+    pub fn contains(&self, prompt: &[i32]) -> bool {
+        self.store.lock().unwrap().entries.contains_key(prompt)
+    }
+
+    /// Whether the prefetch thread has `prompt` decompressed and staged.
+    pub fn prefetch_ready(&self, prompt: &[i32]) -> bool {
+        self.ready.lock().unwrap().contains_key(prompt)
+    }
+
+    pub fn cold_entries(&self) -> usize {
+        self.store.lock().unwrap().entries.len()
+    }
+
+    pub fn cold_blocks(&self) -> usize {
+        self.store.lock().unwrap().blocks
+    }
+
+    /// Compress `cap` into the store, evicting LRU cold entries over
+    /// capacity. No hot-pool interaction — the caller already owns the
+    /// capture.
+    pub fn admit(&mut self, cap: &CapturedPrompt, mgr: &KvCacheManager) {
+        if !self.enabled() {
+            return;
+        }
+        let entry = ColdEntry::from_capture(cap, mgr);
+        let mut store = self.store.lock().unwrap();
+        store.insert(cap.tokens.clone(), entry);
+        self.cold_evictions += store.evict_lru_to(self.capacity_blocks);
+        drop(store);
+        // A staged decompression for the same key is byte-identical by
+        // construction, but drop it anyway: the store is authoritative.
+        self.ready.lock().unwrap().remove(&cap.tokens);
+    }
+
+    /// Demote LRU-reclaimable prefix units until the hot pool has
+    /// `want_free` usable bytes ([`KvCacheManager::free_bytes`]) or
+    /// nothing reclaimable remains. Frees exactly the blocks
+    /// [`PrefixCache::evict_for_bytes`] would have destroyed — with the
+    /// tier disabled the engine falls back to that — and returns the
+    /// number of prompts demoted.
+    pub fn demote_for(
+        &mut self,
+        pc: &mut PrefixCache,
+        mgr: &mut KvCacheManager,
+        want_free: u64,
+    ) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let t0 = Instant::now();
+        let mut demoted = 0;
+        while mgr.free_bytes() < want_free {
+            match pc.demote_reclaimable_lru(mgr) {
+                Some(caps) => {
+                    for cap in caps {
+                        self.admit(&cap, mgr);
+                        demoted += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        self.demotions += demoted;
+        if demoted > 0 {
+            self.preemptions_avoided += 1;
+        }
+        self.demote_secs += t0.elapsed().as_secs_f64();
+        demoted
+    }
+
+    /// Ask the background thread to decompress `prompt` ahead of need.
+    /// Cheap and non-blocking; a no-op when the thread is disabled, the
+    /// prompt is not cold, or it is already staged.
+    pub fn request_prefetch(&self, prompt: &[i32]) {
+        let Some(tx) = &self.tx else { return };
+        if self.prefetch_ready(prompt) {
+            return;
+        }
+        let mut store = self.store.lock().unwrap();
+        if !store.entries.contains_key(prompt) {
+            return;
+        }
+        store.touch(prompt);
+        drop(store);
+        let _ = tx.send(prompt.to_vec());
+    }
+
+    /// Promote an exact-match cold entry back into the hot pool:
+    /// decompress (staged or synchronous), restore every block at its
+    /// original width class, and adopt the result as a live sequence
+    /// whose blocks/scales are bit-identical to the demoted ones. The
+    /// entry leaves the store on success and is restored untouched if
+    /// the pool can't hold it.
+    pub fn promote(
+        &mut self,
+        mgr: &mut KvCacheManager,
+        prompt: &[i32],
+    ) -> Option<(SeqId, Vec<f32>)> {
+        if !self.enabled() {
+            return None;
+        }
+        let entry = self.store.lock().unwrap().remove(prompt)?;
+        let staged = self.ready.lock().unwrap().remove(prompt);
+        let t0 = Instant::now();
+        let cap = match staged {
+            Some(cap) => {
+                self.prefetch_hits += 1;
+                cap
+            }
+            None => {
+                let td = Instant::now();
+                let cap = match entry.decompress(prompt.to_vec()) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        self.store.lock().unwrap().insert(prompt.to_vec(), entry);
+                        return None;
+                    }
+                };
+                self.decompress_secs += td.elapsed().as_secs_f64();
+                self.prefetch_misses += 1;
+                cap
+            }
+        };
+        let layers = mgr.config().layers;
+        let mut tables: Vec<[Vec<BlockId>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
+        let mut ok = true;
+        'restore: for layer in 0..layers {
+            for kv in 0..2 {
+                for bytes in &cap.payloads[layer][kv] {
+                    match mgr.restore_block(layer, kv, bytes) {
+                        Ok(b) => tables[layer][kv].push(b),
+                        Err(_) => {
+                            ok = false;
+                            break 'restore;
+                        }
+                    }
+                }
+            }
+        }
+        if ok {
+            match mgr.adopt_owned_sequence(tables.clone(), cap.scales.clone(), cap.tokens.len()) {
+                Ok(seq) => {
+                    self.promotions += 1;
+                    self.promote_secs += t0.elapsed().as_secs_f64();
+                    return Some((seq, cap.logits));
+                }
+                Err(_) => ok = false,
+            }
+        }
+        let _ = ok;
+        for pair in &tables {
+            for stream in pair {
+                for &b in stream {
+                    mgr.release_block(b);
+                }
+            }
+        }
+        self.store.lock().unwrap().insert(prompt.to_vec(), entry);
+        self.promote_secs += t0.elapsed().as_secs_f64();
+        None
+    }
+
+    /// Counter snapshot plus current store occupancy.
+    pub fn stats(&self) -> TierStats {
+        let store = self.store.lock().unwrap();
+        TierStats {
+            demotions: self.demotions,
+            promotions: self.promotions,
+            prefetch_hits: self.prefetch_hits,
+            prefetch_misses: self.prefetch_misses,
+            cold_evictions: self.cold_evictions,
+            preemptions_avoided: self.preemptions_avoided,
+            snapshot_loaded: self.snapshot_loaded,
+            cold_entries: store.entries.len() as u64,
+            cold_blocks: store.blocks as u64,
+            cold_raw_bytes: store.raw_bytes(),
+            cold_comp_bytes: store.comp_bytes(),
+            demote_secs: self.demote_secs,
+            promote_secs: self.promote_secs,
+            decompress_secs: self.decompress_secs,
+        }
+    }
+
+    // -- snapshots ----------------------------------------------------------
+
+    /// Serialize the cold store to `path` (temp file + rename). Entries
+    /// are written in key order so identical stores produce identical
+    /// files. Returns the entry count written.
+    pub fn save_snapshot(&self, path: &Path, mgr: &KvCacheManager) -> Result<u64> {
+        let store = self.store.lock().unwrap();
+        let cfg = mgr.config();
+        let mut buf = Vec::new();
+        buf.extend_from_slice(SNAP_MAGIC);
+        put_u32(&mut buf, SNAP_VERSION);
+        put_u32(&mut buf, cfg.layers as u32);
+        put_u32(&mut buf, cfg.heads as u32);
+        put_u32(&mut buf, cfg.head_dim as u32);
+        put_u32(&mut buf, cfg.block_size as u32);
+        let policy = mgr.policy().name();
+        put_u32(&mut buf, policy.len() as u32);
+        buf.extend_from_slice(policy.as_bytes());
+        let mut keys: Vec<&Vec<i32>> = store.entries.keys().collect();
+        keys.sort();
+        put_u32(&mut buf, keys.len() as u32);
+        for key in &keys {
+            let entry = &store.entries[*key];
+            put_u32(&mut buf, key.len() as u32);
+            for &t in key.iter() {
+                buf.extend_from_slice(&t.to_le_bytes());
+            }
+            put_u32(&mut buf, entry.logits.len() as u32);
+            for &f in &entry.logits {
+                put_u32(&mut buf, f.to_bits());
+            }
+            for pair in &entry.blocks {
+                for kv in 0..2 {
+                    put_u32(&mut buf, pair[kv].len() as u32);
+                    for block in &pair[kv] {
+                        put_u32(&mut buf, block.len() as u32);
+                        buf.extend_from_slice(block);
+                    }
+                }
+            }
+            for pair in &entry.scales {
+                for kv in 0..2 {
+                    put_u32(&mut buf, pair[kv].len() as u32);
+                    for &f in &pair[kv] {
+                        put_u32(&mut buf, f.to_bits());
+                    }
+                }
+            }
+        }
+        let checksum = fnv1a64(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &buf)
+            .with_context(|| format!("write snapshot {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename snapshot into {}", path.display()))?;
+        Ok(keys.len() as u64)
+    }
+
+    /// Load a snapshot written by [`Self::save_snapshot`] into the cold
+    /// store. A missing file, corrupt image, or geometry/policy mismatch
+    /// loads nothing (`Ok(0)`, with a warning on stderr) — the snapshot
+    /// is advisory. Returns the entry count loaded.
+    pub fn load_snapshot(&mut self, path: &Path, mgr: &KvCacheManager) -> Result<u64> {
+        if !self.enabled() || !path.exists() {
+            return Ok(0);
+        }
+        let buf = std::fs::read(path)
+            .with_context(|| format!("read snapshot {}", path.display()))?;
+        match self.parse_snapshot(&buf, mgr) {
+            Ok(n) => {
+                self.snapshot_loaded += n;
+                Ok(n)
+            }
+            Err(e) => {
+                eprintln!("warning: ignoring snapshot {}: {e}", path.display());
+                Ok(0)
+            }
+        }
+    }
+
+    fn parse_snapshot(&mut self, buf: &[u8], mgr: &KvCacheManager) -> Result<u64> {
+        if buf.len() < SNAP_MAGIC.len() + 8 {
+            bail!("truncated snapshot ({} bytes)", buf.len());
+        }
+        let (body, tail) = buf.split_at(buf.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let computed = fnv1a64(body);
+        if stored != computed {
+            bail!("checksum mismatch (stored {stored:#x}, computed {computed:#x})");
+        }
+        let mut cur = Cursor { buf: body, pos: 0 };
+        if cur.take(SNAP_MAGIC.len())? != SNAP_MAGIC {
+            bail!("bad magic");
+        }
+        let version = cur.u32()?;
+        if version != SNAP_VERSION {
+            bail!("unsupported snapshot version {version}");
+        }
+        let cfg = mgr.config();
+        let geom =
+            [cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize, cur.u32()? as usize];
+        if geom != [cfg.layers, cfg.heads, cfg.head_dim, cfg.block_size] {
+            bail!(
+                "geometry mismatch: snapshot {geom:?} vs cache [{}, {}, {}, {}]",
+                cfg.layers,
+                cfg.heads,
+                cfg.head_dim,
+                cfg.block_size
+            );
+        }
+        let name_len = cur.u32()? as usize;
+        let name = std::str::from_utf8(cur.take(name_len)?).context("policy name")?;
+        if name != mgr.policy().name() {
+            bail!("policy mismatch: snapshot '{name}' vs cache '{}'", mgr.policy().name());
+        }
+        let entries = cur.u32()? as usize;
+        let mut loaded = 0u64;
+        for _ in 0..entries {
+            let ntok = cur.u32()? as usize;
+            let mut tokens = Vec::with_capacity(ntok);
+            for _ in 0..ntok {
+                tokens.push(cur.i32()?);
+            }
+            let nlogits = cur.u32()? as usize;
+            let mut logits = Vec::with_capacity(nlogits);
+            for _ in 0..nlogits {
+                logits.push(f32::from_bits(cur.u32()?));
+            }
+            let mut blocks = Vec::with_capacity(cfg.layers);
+            let (mut nblocks, mut raw, mut comp) = (0usize, 0u64, 0u64);
+            for _ in 0..cfg.layers {
+                let mut pair = [Vec::new(), Vec::new()];
+                for kv in 0..2 {
+                    let nb = cur.u32()? as usize;
+                    for _ in 0..nb {
+                        let len = cur.u32()? as usize;
+                        let block = cur.take(len)?.to_vec();
+                        if block.len() < BLOCK_HEADER {
+                            bail!("snapshot block shorter than its header");
+                        }
+                        raw += u32::from_le_bytes(block[1..5].try_into().unwrap()) as u64;
+                        comp += block.len() as u64;
+                        pair[kv].push(block);
+                        nblocks += 1;
+                    }
+                }
+                blocks.push(pair);
+            }
+            let mut scales = Vec::with_capacity(cfg.layers);
+            for _ in 0..cfg.layers {
+                let mut pair = [Vec::new(), Vec::new()];
+                for kv in 0..2 {
+                    let ns = cur.u32()? as usize;
+                    let mut s = Vec::with_capacity(ns);
+                    for _ in 0..ns {
+                        s.push(f32::from_bits(cur.u32()?));
+                    }
+                    pair[kv] = s;
+                }
+                scales.push(pair);
+            }
+            let entry = ColdEntry {
+                blocks,
+                scales,
+                logits,
+                nblocks,
+                raw_bytes: raw,
+                comp_bytes: comp,
+                last_used: 0,
+            };
+            let mut store = self.store.lock().unwrap();
+            store.insert(tokens, entry);
+            self.cold_evictions += store.evict_lru_to(self.capacity_blocks);
+            loaded += 1;
+        }
+        if cur.pos != cur.buf.len() {
+            bail!("{} trailing bytes after last entry", cur.buf.len() - cur.pos);
+        }
+        Ok(loaded)
+    }
+}
+
+impl Drop for ColdTier {
+    fn drop(&mut self) {
+        // Dropping the sender ends the worker's recv loop.
+        self.tx.take();
+        if let Some(handle) = self.worker.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serialization helpers
+// ---------------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// FNV-1a 64-bit (the snapshot checksum — fast, dependency-free, and
+/// plenty for corruption detection; snapshots are not a trust boundary).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("snapshot truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::super::manager::{CacheConfig, KvCacheManager};
+    use super::super::policy::{Precision, QuantPolicy};
+    use super::super::prefix::PrefixCache;
+    use super::*;
+
+    fn cfg(num_blocks: usize) -> CacheConfig {
+        CacheConfig {
+            layers: 2,
+            heads: 2,
+            head_dim: 8,
+            max_seq: 32,
+            block_size: 4,
+            num_blocks,
+            scale_margin: 1.0,
+        }
+    }
+
+    fn manager(num_blocks: usize) -> KvCacheManager {
+        let c = cfg(num_blocks);
+        KvCacheManager::new(c, QuantPolicy::uniform(Precision::Int8, c.layers, c.heads))
+    }
+
+    fn prefill(mgr: &mut KvCacheManager, len: usize, seed: u64) -> u64 {
+        let c = *mgr.config();
+        let n = c.layers * c.heads * c.max_seq * c.head_dim;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        rng.fill_uniform(&mut k, -1.0, 1.0);
+        rng.fill_uniform(&mut v, -1.0, 1.0);
+        let id = mgr.new_sequence();
+        mgr.set_prefill(id, &k, &v, len).unwrap();
+        id
+    }
+
+    fn prompt(len: usize, seed: i32) -> Vec<i32> {
+        (0..len as i32).map(|i| i * 7 + seed).collect()
+    }
+
+    /// Insert a freshly prefilled prompt into the trie and release the
+    /// source sequence, leaving only the trie's pins.
+    fn cache_prompt(
+        pc: &mut PrefixCache,
+        mgr: &mut KvCacheManager,
+        len: usize,
+        seed: i32,
+    ) -> Vec<i32> {
+        let toks = prompt(len, seed);
+        let src = prefill(mgr, len, seed as u64);
+        let logits: Vec<f32> = (0..4).map(|i| seed as f32 + i as f32).collect();
+        pc.insert(mgr, src, &toks, &logits);
+        mgr.free(src);
+        toks
+    }
+
+    #[test]
+    fn codec_round_trips_bit_identical() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut noise = vec![0.0f32; 257];
+        rng.fill_uniform(&mut noise, 0.0, 255.0);
+        let cases: Vec<Vec<u8>> = vec![
+            Vec::new(),
+            vec![7u8; 1000],
+            (0..=255u8).collect(),
+            noise.iter().map(|&f| f as u8).collect(),
+            vec![1, 2, 3],
+        ];
+        for data in &cases {
+            for stride in [1usize, 3, 16, 64, 1000] {
+                let comp = compress_block(data, stride);
+                assert_eq!(&decompress_block(&comp).unwrap(), data, "stride {stride}");
+            }
+        }
+        // A constant slab must actually compress; incompressible input
+        // must fall back to raw (method 0) and never expand past the
+        // header.
+        let constant = compress_block(&vec![7u8; 1000], 16);
+        assert!(constant.len() < 100, "constant slab stayed {} bytes", constant.len());
+        let hostile: Vec<u8> = (0..1000u32).map(|i| (i * 2654435761 >> 13) as u8).collect();
+        let comp = compress_block(&hostile, 16);
+        assert_eq!(comp[0], METHOD_RAW);
+        assert_eq!(comp.len(), hostile.len() + BLOCK_HEADER);
+    }
+
+    #[test]
+    fn rle_handles_runs_past_255() {
+        let data = vec![42u8; 700];
+        let enc = rle_encode(&data);
+        assert_eq!(enc.len(), 6); // ceil(700/255) = 3 pairs
+        assert_eq!(rle_decode(&enc, 700).unwrap(), data);
+        assert!(rle_decode(&enc, 699).is_err());
+        assert!(rle_decode(&enc[..5], 700).is_err());
+    }
+
+    #[test]
+    fn demote_promote_round_trip_is_bit_identical() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        let toks = cache_prompt(&mut pc, &mut mgr, 10, 3);
+
+        let before = pc.capture_all(&mgr);
+        assert_eq!(before.len(), 1);
+        let before = before.into_iter().next().unwrap();
+        assert_eq!(before.tokens, toks);
+
+        // Demote everything: the hot pool must end fully free and the
+        // store must hold the one prompt.
+        let total =
+            mgr.free_bytes() + (pc.pinned_blocks() / (2 * 2)) as u64 * mgr.span_bytes() as u64;
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+        assert_eq!(pc.pinned_blocks(), 0);
+        assert_eq!(mgr.free_bytes(), total);
+        assert!(tier.contains(&toks));
+        assert_eq!(tier.cold_entries(), 1);
+        let stats = tier.stats();
+        assert_eq!(stats.demotions, 1);
+        assert!(stats.cold_raw_bytes > 0);
+        assert!(stats.cold_comp_bytes > 0);
+
+        // Promote and compare every byte by re-capturing from the pool.
+        let (seq, logits) = tier.promote(&mut mgr, &toks).expect("promotion");
+        assert_eq!(logits, before.logits);
+        assert!(!tier.contains(&toks));
+        let mut pc2 = PrefixCache::new(64);
+        pc2.insert(&mut mgr, seq, &toks, &logits);
+        mgr.free(seq);
+        let after = pc2.capture_all(&mgr);
+        assert_eq!(after.len(), 1);
+        assert_eq!(before, after[0], "restored blocks/scales differ from demoted ones");
+
+        let stats = tier.stats();
+        assert_eq!(stats.promotions, 1);
+        assert_eq!(stats.prefetch_misses, 1); // no prefetch thread
+        assert_eq!(stats.cold_entries, 0);
+        pc2.clear(&mut mgr);
+        assert_eq!(mgr.free_bytes(), total);
+        mgr.assert_refcounts_consistent();
+    }
+
+    #[test]
+    fn disabled_tier_is_inert() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(0, 4);
+        assert!(!tier.enabled());
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 1);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 0);
+        assert!(pc.pinned_blocks() > 0, "disabled tier must not touch the trie");
+        tier.request_prefetch(&toks);
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert_eq!(tier.stats(), TierStats::default());
+        pc.clear(&mut mgr);
+    }
+
+    #[test]
+    fn store_capacity_evicts_lru_entries() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        // A 4-token prompt is one block per stream = 4 blocks; capacity 6
+        // holds one prompt but not two.
+        let mut tier = ColdTier::new(6, 0);
+        let a = cache_prompt(&mut pc, &mut mgr, 4, 1);
+        let b = cache_prompt(&mut pc, &mut mgr, 4, 100);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 2);
+        assert_eq!(tier.cold_entries(), 1);
+        assert_eq!(tier.cold_blocks(), 4);
+        assert_eq!(tier.stats().cold_evictions, 1);
+        // Exactly one of the two survives (the later demotion).
+        assert!(tier.contains(&a) != tier.contains(&b));
+    }
+
+    #[test]
+    fn promote_rolls_back_when_pool_is_full() {
+        let mut mgr = manager(8); // 2 spans
+        let mut pc = PrefixCache::new(8);
+        let mut tier = ColdTier::new(64, 0);
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 5); // both spans
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+        // Refill the pool with a live sequence so promotion can't fit.
+        let live = prefill(&mut mgr, 8, 9);
+        assert_eq!(mgr.spans_free(), 0);
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert!(tier.contains(&toks), "failed promotion must keep the cold entry");
+        mgr.assert_refcounts_consistent();
+        // With room back, the same promotion succeeds.
+        mgr.free(live);
+        let (seq, _) = tier.promote(&mut mgr, &toks).expect("promotion after free");
+        mgr.free(seq);
+    }
+
+    #[test]
+    fn prefetch_thread_stages_entries_for_hit_promotion() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 2);
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 2);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+        tier.request_prefetch(&toks);
+        for _ in 0..500 {
+            if tier.prefetch_ready(&toks) {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(tier.prefetch_ready(&toks), "prefetch thread never staged the entry");
+        let (seq, _) = tier.promote(&mut mgr, &toks).expect("promotion");
+        let stats = tier.stats();
+        assert_eq!(stats.prefetch_hits, 1);
+        assert_eq!(stats.prefetch_misses, 0);
+        mgr.free(seq);
+    }
+
+    #[test]
+    fn snapshot_round_trips_and_rejects_corruption() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("kvq_snap_test_{}.bin", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        let a = cache_prompt(&mut pc, &mut mgr, 10, 3);
+        let b = cache_prompt(&mut pc, &mut mgr, 4, 50);
+        let before = pc.capture_all(&mgr);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 2);
+        assert_eq!(tier.save_snapshot(&path, &mgr).unwrap(), 2);
+
+        // A fresh engine instance loads the snapshot and promotes
+        // bit-identically.
+        let mut mgr2 = manager(64);
+        let mut tier2 = ColdTier::new(64, 0);
+        assert_eq!(tier2.load_snapshot(&path, &mgr2).unwrap(), 2);
+        assert_eq!(tier2.stats().snapshot_loaded, 2);
+        assert!(tier2.contains(&a) && tier2.contains(&b));
+        for cap in &before {
+            let (seq, logits) = tier2.promote(&mut mgr2, &cap.tokens).expect("promotion");
+            assert_eq!(logits, cap.logits);
+            let mut pc2 = PrefixCache::new(64);
+            pc2.insert(&mut mgr2, seq, &cap.tokens, &logits);
+            mgr2.free(seq);
+            let restored = pc2.capture_all(&mgr2);
+            assert_eq!(restored.len(), 1);
+            assert_eq!(&restored[0], cap);
+            pc2.clear(&mut mgr2);
+        }
+
+        // Corruption: flip one payload byte -> checksum rejects, loads 0.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut tier3 = ColdTier::new(64, 0);
+        assert_eq!(tier3.load_snapshot(&path, &mgr2).unwrap(), 0);
+
+        // Policy mismatch: a valid file written under int8 must not load
+        // into an int4 cache.
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let c = cfg(64);
+        let mgr4 = KvCacheManager::new(c, QuantPolicy::uniform(Precision::Int4, c.layers, c.heads));
+        let mut tier4 = ColdTier::new(64, 0);
+        assert_eq!(tier4.load_snapshot(&path, &mgr4).unwrap(), 0);
+
+        // Missing file is silent.
+        let _ = std::fs::remove_file(&path);
+        let mut tier5 = ColdTier::new(64, 0);
+        assert_eq!(tier5.load_snapshot(&path, &mgr2).unwrap(), 0);
+    }
+}

@@ -9,7 +9,15 @@
 //! `error.retry_after_ms`); v3 adds the prefix-trie gauges
 //! (`prefix_partial_hits`, `prefix_saved_tokens`, `prefix_trie_nodes`),
 //! per shard and summed into the top-level totals like every other
-//! numeric gauge.
+//! numeric gauge; v4 adds the tiered-cache surface — physical sub-pool
+//! gauges (`pool_physical_bytes`, `pool_fragmentation_bytes`,
+//! `cache_physical_bytes_{fp32,int8,int4}`; the logical `cache_bytes_*`
+//! keys stay pinned), the cold-tier `tier_*` counters
+//! (`tier_{hot,cold}_blocks`, `tier_{demotions,promotions}`,
+//! `tier_prefetch_{hits,misses}`, timings, compression ratio), and the
+//! `cold_tier_blocks` / `snapshot_path` / `prefetch_depth` knobs on
+//! `GET /config`. Strictly additive over v3 — every v3 key keeps its
+//! meaning (pinned by the v3→v4 compat test).
 
 use crate::config::ServeConfig;
 use crate::coordinator::router::{Router, SubmitError};
@@ -21,7 +29,7 @@ use super::http::HttpResponse;
 use crate::coordinator::request::Priority;
 
 /// Wire-schema version served on every structured GET payload.
-pub const SCHEMA_VERSION: u64 = 3;
+pub const SCHEMA_VERSION: u64 = 4;
 
 /// POST /generate body.
 #[derive(Debug, Clone, PartialEq)]
@@ -181,8 +189,11 @@ impl ApiError {
 /// (`admission_mode`, `prefix_cache_blocks`), the decode data path
 /// (`attention_kernel`, `paged_decode`, `kernel_backend`,
 /// `decode_batching` — the resolved
-/// ISA is served at `GET /metrics` as `kernel_isa`), and the sharded
-/// front door (`shards`, `affinity`, `queue_depth`, `overflow_depth`).
+/// ISA is served at `GET /metrics` as `kernel_isa`), the sharded
+/// front door (`shards`, `affinity`, `queue_depth`, `overflow_depth`),
+/// and the tiered-cache knobs (`cold_tier_blocks` — `null` means
+/// auto-sized to the hot pool; `snapshot_path` — `null` means no
+/// persistence; `prefetch_depth`).
 pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
     obj([
         ("schema_version", (SCHEMA_VERSION as usize).into()),
@@ -201,6 +212,9 @@ pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
         ("affinity", cfg.affinity.name().into()),
         ("queue_depth", cfg.queue_depth.into()),
         ("overflow_depth", cfg.overflow_depth.into()),
+        ("cold_tier_blocks", cfg.cold_tier_blocks.map_or(Json::Null, |n| n.into())),
+        ("snapshot_path", cfg.snapshot_path.as_deref().map_or(Json::Null, Json::from)),
+        ("prefetch_depth", cfg.prefetch_depth.into()),
         ("port", (port as usize).into()),
     ])
 }
@@ -346,6 +360,60 @@ mod tests {
         assert_eq!(j.get("affinity").as_str(), Some("session"));
         assert_eq!(j.get("queue_depth").as_usize(), Some(8));
         assert_eq!(j.get("port").as_usize(), Some(8080));
+        // v4 tier knobs: unset capacity/path serve as null, depth always.
+        assert!(matches!(j.get("cold_tier_blocks"), Json::Null));
+        assert!(matches!(j.get("snapshot_path"), Json::Null));
+        assert_eq!(j.get("prefetch_depth").as_usize(), Some(2));
+        let cfg2 = ServeConfig::builder()
+            .set("cold_tier_blocks", &Json::Num(64.0))
+            .unwrap()
+            .set("snapshot_path", &Json::Str("/tmp/kvq.snap".into()))
+            .unwrap()
+            .build();
+        let j2 = config_response(&cfg2, 8080, 1);
+        assert_eq!(j2.get("cold_tier_blocks").as_usize(), Some(64));
+        assert_eq!(j2.get("snapshot_path").as_str(), Some("/tmp/kvq.snap"));
+    }
+
+    #[test]
+    fn schema_v4_is_additive_over_v3() {
+        // The v4 bump is strictly additive: every v3 metrics key keeps
+        // its name and numeric type, the tier/physical keys ride along.
+        // A v3 consumer reading a v4 payload sees exactly what it saw
+        // before (plus keys it ignores).
+        assert_eq!(SCHEMA_VERSION, 4);
+        let j = crate::coordinator::metrics::Metrics::new().snapshot().to_json();
+        let v3_keys = [
+            "uptime_s", "requests_submitted", "requests_finished", "requests_rejected",
+            "requests_errored", "tokens_generated", "prefill_tokens", "engine_steps",
+            "preemptions", "resumes", "recompute_tokens", "decode_steps", "gather_secs",
+            "attend_secs", "cache_bytes_read", "mq_passes", "blocks_deduped",
+            "cache_bytes_per_token", "decode_ns_per_token", "prefix_lookups", "prefix_hits",
+            "prefix_partial_hits", "prefix_saved_tokens", "prefix_trie_nodes",
+            "prefix_hit_rate", "tokens_per_sec", "ttft_p50_s", "ttft_p99_s", "tpot_p50_s",
+            "tpot_p99_s", "e2e_p50_s", "e2e_p99_s", "step_p50_s", "cache_utilization",
+            "pool_used_blocks", "pool_total_blocks", "pool_logical_blocks",
+            "prefix_cache_blocks", "running", "running_peak", "waiting", "preempted",
+            "cache_bytes_fp32", "cache_bytes_int8", "cache_bytes_int4",
+        ];
+        for k in v3_keys {
+            assert!(j.get(k).as_f64().is_some(), "v3 numeric key {k} must survive v4");
+        }
+        assert!(j.get("quant_policy").as_str().is_some());
+        assert!(j.get("kernel_isa").as_str().is_some());
+        let v4_keys = [
+            "pool_physical_bytes", "pool_fragmentation_bytes", "cache_physical_bytes_fp32",
+            "cache_physical_bytes_int8", "cache_physical_bytes_int4", "tier_hot_blocks",
+            "tier_cold_blocks", "tier_cold_entries", "tier_demotions", "tier_promotions",
+            "tier_prefetch_hits", "tier_prefetch_misses", "tier_cold_evictions",
+            "tier_preemptions_avoided",
+            "tier_snapshot_loaded", "tier_cold_raw_bytes", "tier_cold_comp_bytes",
+            "tier_compression_ratio", "tier_demote_secs", "tier_promote_secs",
+            "tier_decompress_secs",
+        ];
+        for k in v4_keys {
+            assert!(j.get(k).as_f64().is_some(), "v4 key {k} must be present and numeric");
+        }
     }
 
     #[test]

@@ -159,6 +159,16 @@ mod tests {
         assert!(j.get("prefix_partial_hits").as_f64().is_some());
         assert!(j.get("prefix_saved_tokens").as_f64().is_some());
         assert!(j.get("prefix_trie_nodes").as_f64().is_some());
+        // v4 physical/tier gauges do too, per shard and in the totals.
+        assert!(j.get("pool_physical_bytes").as_f64().is_some());
+        assert!(j.get("pool_fragmentation_bytes").as_f64().is_some());
+        assert!(j.get("cache_physical_bytes_int8").as_f64().is_some());
+        assert!(j.get("tier_hot_blocks").as_f64().is_some());
+        assert!(j.get("tier_cold_blocks").as_f64().is_some());
+        assert!(j.get("tier_demotions").as_f64().is_some());
+        assert!(j.get("tier_promotions").as_f64().is_some());
+        assert!(j.get("tier_prefetch_misses").as_f64().is_some());
+        assert!(j.get("shards").at(0).get("tier_cold_blocks").as_f64().is_some());
         assert_eq!(j.get("router").get("shards").as_usize(), Some(1));
         h.drain();
         join.join().unwrap();

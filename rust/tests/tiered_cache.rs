@@ -1,0 +1,378 @@
+//! Tiered-cache invariants the compressed cold tier must hold:
+//!
+//! 1. demote → promote is bit-identical — the restored blocks feed every
+//!    fused kernel variant (naive/tiled/coarsened/vectorized) × ISA
+//!    (scalar, SIMD) and produce exactly the pre-demotion outputs, for
+//!    both uniform INT8 and the mixed k8v4 policy (sub-pool widths).
+//! 2. a prompt whose blocks are shared with a live sequence is never
+//!    demoted out from under the writer: demotion refuses while the span
+//!    is shared, and once the writer COW-appends, the captured bytes are
+//!    the original rows, not the writer's mutation.
+//! 3. the persistent snapshot round-trips across an engine restart:
+//!    a second engine on the same `snapshot_path` serves repeat prompts
+//!    token-identically, restoring entries from disk and promoting them
+//!    instead of re-prefilling blind.
+//! 4. a constrained pool with the tier on produces exactly the tokens of
+//!    the tier-off and unconstrained runs — demotion only changes *where*
+//!    cached bytes live, never *what* gets computed.
+//!
+//! The CI tier-off job reruns this binary with `KVQ_COLD_TIER=off`
+//! (and the cache-off job with `KVQ_PREFIX_CACHE_BLOCKS=0`, which also
+//! disables the tier): byte-identity assertions still hold there, the
+//! tier-counter expectations are skipped.
+
+use kvq::coordinator::admission::{AdmissionConfig, AdmissionMode};
+use kvq::coordinator::batcher::BatcherConfig;
+use kvq::coordinator::engine::{self, EngineConfig};
+use kvq::coordinator::request::{collect_response, FinishReason};
+use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::coordinator::{EngineHandle, MetricsSnapshot};
+use kvq::kvcache::manager::{CacheConfig, KvCacheManager, SeqId};
+use kvq::kvcache::{ColdTier, PolicySpec, Precision, PrefixCache, QuantPolicy};
+use kvq::model::runner::CpuBackend;
+use kvq::model::sample::SamplingParams;
+use kvq::model::weights::Weights;
+use kvq::model::{CpuModel, ModelSpec};
+use kvq::quant::simd::{Isa, KernelBackend};
+use kvq::quant::Variant;
+
+// ---------------------------------------------------------------------------
+// Manager-level: demote → promote bit-identity and COW protection
+// ---------------------------------------------------------------------------
+
+/// Decode one token through every kernel variant × {scalar, SIMD} and
+/// return the raw f32 bit patterns of (logits, k_new, v_new) per pair —
+/// the strictest equality the serving path can express.
+fn decode_bits(
+    mdl: &CpuModel,
+    mgr: &KvCacheManager,
+    id: SeqId,
+    tok: i32,
+    pos: usize,
+) -> Vec<(String, Vec<u32>)> {
+    let simd = KernelBackend::Simd.resolve();
+    let mut out = Vec::new();
+    for v in Variant::ALL {
+        for isa in [Isa::Scalar, simd] {
+            let view = mgr.view(id).unwrap();
+            let (logits, kn, vn) = mdl.decode_paged(tok, pos, &view, v, isa).unwrap();
+            let bits: Vec<u32> =
+                logits.iter().chain(&kn).chain(&vn).map(|f| f.to_bits()).collect();
+            out.push((format!("{v:?}/{isa:?}"), bits));
+        }
+    }
+    out
+}
+
+fn tiny_cache_cfg(spec: &ModelSpec) -> CacheConfig {
+    CacheConfig {
+        layers: spec.layers,
+        heads: spec.heads,
+        head_dim: spec.head_dim,
+        max_seq: spec.max_seq,
+        block_size: 4,
+        num_blocks: 256,
+        scale_margin: 1.0,
+    }
+}
+
+#[test]
+fn demote_promote_is_bit_identical_across_variants_and_isas() {
+    let spec = ModelSpec::test_tiny();
+    let mdl = CpuModel::new(spec.clone(), Weights::synthetic(&spec, 0x7E1));
+    let cfg = tiny_cache_cfg(&spec);
+    let policies: [(&str, QuantPolicy); 2] = [
+        (
+            "int8",
+            PolicySpec::uniform(Precision::Int8)
+                .resolve(spec.layers, spec.heads, spec.head_dim)
+                .unwrap(),
+        ),
+        ("k8v4", PolicySpec::K8V4.resolve(spec.layers, spec.heads, spec.head_dim).unwrap()),
+    ];
+    for (name, policy) in policies {
+        let mut mgr = KvCacheManager::new(cfg, policy);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(256, 0); // 0 = no thread: promotion decompresses synchronously
+        let ctx = 8usize; // two full 4-token blocks, empty tail
+        let prompt: Vec<i32> = (0..ctx as i32).map(|j| (j * 5 + 11) % 64).collect();
+        let tok = (ctx as i32 * 5 + 11) % 64;
+
+        let pre = mdl.prefill(&prompt, ctx);
+        let seq = mgr.new_sequence();
+        mgr.set_prefill(seq, &pre.k, &pre.v, ctx).unwrap();
+        pc.insert(&mut mgr, seq, &prompt, &pre.logits);
+        let expect = decode_bits(&mdl, &mgr, seq, tok, ctx);
+        mgr.free(seq);
+
+        let demoted = tier.demote_for(&mut pc, &mut mgr, u64::MAX);
+        assert!(demoted > 0, "{name}: reclaimable trie entry must demote");
+        assert!(tier.contains(&prompt), "{name}: demoted prompt must be cold");
+
+        let (back, logits) = tier.promote(&mut mgr, &prompt).expect("promotion must fit");
+        let want: Vec<u32> = pre.logits.iter().map(|f| f.to_bits()).collect();
+        let got: Vec<u32> = logits.iter().map(|f| f.to_bits()).collect();
+        assert_eq!(got, want, "{name}: captured tail logits must round-trip bit-exactly");
+        assert!(!tier.contains(&prompt), "{name}: promotion removes the cold entry");
+
+        let after = decode_bits(&mdl, &mgr, back, tok, ctx);
+        for ((label, want), (_, got)) in expect.iter().zip(after) {
+            assert_eq!(
+                got,
+                *want,
+                "{name}/{label}: decode over promoted blocks must be bit-identical"
+            );
+        }
+        let s = tier.stats();
+        assert_eq!(s.demotions, demoted);
+        assert_eq!(s.promotions, 1);
+        assert_eq!(s.prefetch_misses, 1, "no prefetch thread: promotion is synchronous");
+        assert_eq!(s.cold_entries, 0);
+    }
+}
+
+#[test]
+fn shared_live_blocks_are_never_demoted_out_from_under_a_writer() {
+    let spec = ModelSpec::test_tiny();
+    let mdl = CpuModel::new(spec.clone(), Weights::synthetic(&spec, 0xC0));
+    let cfg = tiny_cache_cfg(&spec);
+    let policy = PolicySpec::uniform(Precision::Int8)
+        .resolve(spec.layers, spec.heads, spec.head_dim)
+        .unwrap();
+    let mut mgr = KvCacheManager::new(cfg, policy);
+    let mut pc = PrefixCache::new(64);
+    let mut tier = ColdTier::new(256, 0);
+
+    // 10 tokens at block_size 4: two full chunks plus a 2-row partial
+    // tail block — the trie pins the tail block too, and a forked writer
+    // appending into it is exactly the demote-then-mutate hazard.
+    let plen = 10usize;
+    let prompt: Vec<i32> = (0..plen as i32).map(|j| (j * 7 + 3) % 64).collect();
+    let tok = |pos: usize| (pos as i32 * 7 + 3) % 64;
+
+    let pre = mdl.prefill(&prompt, plen);
+    let a = mgr.new_sequence();
+    mgr.set_prefill(a, &pre.k, &pre.v, plen).unwrap();
+    pc.insert(&mut mgr, a, &prompt, &pre.logits);
+    let b = mgr.fork(a).unwrap();
+    mgr.free(a);
+    let expect = decode_bits(&mdl, &mgr, b, tok(plen), plen);
+
+    // Every trie block is shared with the live fork: nothing is
+    // reclaimable, so demotion must refuse outright.
+    assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 0);
+    assert!(!tier.contains(&prompt), "shared span must stay hot");
+
+    // The writer appends through the shared partial block. COW gives it
+    // a private copy; the trie's pinned original must never see the new
+    // rows.
+    let simd = KernelBackend::Simd.resolve();
+    for pos in plen..plen + 3 {
+        let (_, kn, vn) = {
+            let view = mgr.view(b).unwrap();
+            mdl.decode_paged(tok(pos), pos, &view, Variant::Vectorized, simd).unwrap()
+        };
+        mgr.append_row(b, &kn, &vn).unwrap();
+    }
+    // The COW copy dropped the original tail block to pin-only refcount,
+    // so the prompt may demote now — capturing the *original* rows.
+    let demoted = tier.demote_for(&mut pc, &mut mgr, u64::MAX);
+    assert!(demoted >= 1, "post-COW tail is reclaimable and must demote");
+    assert!(tier.contains(&prompt));
+
+    // Writer is completely unaffected by the demotion.
+    let view = mgr.view(b).unwrap();
+    mdl.decode_paged(tok(plen + 3), plen + 3, &view, Variant::Vectorized, simd).unwrap();
+    drop(view);
+    mgr.free(b);
+    tier.demote_for(&mut pc, &mut mgr, u64::MAX); // drain the remaining chunks
+
+    // The promoted copy restores the prompt exactly as captured — the
+    // writer's appended rows never leaked into the cold bytes.
+    let (c, _) = tier.promote(&mut mgr, &prompt).expect("promotion must fit");
+    let after = decode_bits(&mdl, &mgr, c, tok(plen), plen);
+    for ((label, want), (_, got)) in expect.iter().zip(after) {
+        assert_eq!(got, *want, "{label}: promoted prompt must predate the writer's mutation");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level: serving identity under pressure + snapshot round-trip
+// ---------------------------------------------------------------------------
+
+fn cpu_factory() -> impl FnOnce() -> anyhow::Result<Box<dyn kvq::model::LmBackend>> + Send {
+    || {
+        let spec = ModelSpec::test_tiny();
+        let w = Weights::synthetic(&spec, 7);
+        Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+    }
+}
+
+/// True when an env override forces the tier off: the CI tier-off job
+/// sets `KVQ_COLD_TIER=off`, and the cache-off job's
+/// `KVQ_PREFIX_CACHE_BLOCKS=0` disables the tier transitively (it only
+/// engages when the prefix cache is enabled). Identity assertions still
+/// hold; tier-counter expectations are skipped.
+fn tier_forced_off() -> bool {
+    matches!(std::env::var("KVQ_COLD_TIER").as_deref(), Ok("off") | Ok("0"))
+        || std::env::var("KVQ_PREFIX_CACHE_BLOCKS").as_deref() == Ok("0")
+}
+
+fn tier_engine(
+    num_blocks: Option<usize>,
+    prefix_blocks: usize,
+    cold_blocks: usize,
+    snapshot: Option<String>,
+    max_prefills: usize,
+) -> (EngineHandle, std::thread::JoinHandle<()>) {
+    let cfg = EngineConfig {
+        quant_policy: PolicySpec::uniform(Precision::Int8),
+        num_blocks,
+        prefix_cache_blocks: prefix_blocks,
+        cold_tier_blocks: Some(cold_blocks),
+        snapshot_path: snapshot,
+        prefetch_depth: 2,
+        batcher: BatcherConfig {
+            max_prefills_per_step: max_prefills,
+            admission: AdmissionConfig {
+                mode: AdmissionMode::Optimistic,
+                max_running: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    engine::spawn(cfg, cpu_factory())
+}
+
+fn run_requests(
+    h: &EngineHandle,
+    prompts: &[Vec<i32>],
+    max_new: usize,
+    concurrent: bool,
+) -> Vec<Vec<i32>> {
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("e", h.clone());
+    if concurrent {
+        let streams: Vec<_> = prompts
+            .iter()
+            .map(|p| router.submit(p.clone(), max_new, SamplingParams::default()).unwrap().1)
+            .collect();
+        streams
+            .iter()
+            .map(|rx| {
+                let (tokens, reason, ..) = collect_response(rx);
+                assert_eq!(reason, FinishReason::Length, "request must finish");
+                tokens
+            })
+            .collect()
+    } else {
+        prompts
+            .iter()
+            .map(|p| {
+                let (_, rx) =
+                    router.submit(p.clone(), max_new, SamplingParams::default()).unwrap();
+                let (tokens, reason, ..) = collect_response(&rx);
+                assert_eq!(reason, FinishReason::Length);
+                tokens
+            })
+            .collect()
+    }
+}
+
+fn drain(h: EngineHandle, join: std::thread::JoinHandle<()>) -> MetricsSnapshot {
+    h.drain();
+    join.join().unwrap();
+    h.metrics.snapshot()
+}
+
+#[test]
+fn constrained_pool_with_tier_on_is_token_identical_and_absorbs_pressure() {
+    // test-tiny: block=8, max_seq=32. 24-token prompts + 8 new tokens
+    // fill a sequence (16 blocks); two warm prompts pin 24 of the
+    // 40-block pool, so a concurrent pair of fresh prompts forces the
+    // pressure valve through the warm trie in every interleaving.
+    let spec = ModelSpec::test_tiny();
+    let prompt_len = 3 * spec.block_size;
+    let max_new = spec.max_seq - prompt_len;
+    let num_blocks = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size) * 5 / 2;
+    let mk = |tag: i32| -> Vec<i32> {
+        (0..prompt_len as i32).map(|j| (tag * 13 + j * 5 + 2) % spec.vocab as i32).collect()
+    };
+    let warm = vec![mk(1), mk(2)];
+    let fresh = vec![mk(3), mk(4)];
+
+    let run = |blocks: Option<usize>, prefix: usize, cold: usize| {
+        let (h, join) = tier_engine(blocks, prefix, cold, None, 2);
+        let mut out = run_requests(&h, &warm, max_new, false);
+        out.extend(run_requests(&h, &fresh, max_new, true));
+        out.extend(run_requests(&h, &warm, max_new, false));
+        (out, drain(h, join))
+    };
+
+    let (expect, m) = run(None, 0, 0); // unconstrained, no caching at all
+    assert_eq!(m.preemptions, 0, "reference must be uncontended");
+    let (got_off, m_off) = run(Some(num_blocks), 64, 0);
+    let (got_on, m_on) = run(Some(num_blocks), 64, num_blocks);
+
+    assert_eq!(got_off, expect, "constrained tier-off run must be token-identical");
+    assert_eq!(got_on, expect, "constrained tier-on run must be token-identical");
+
+    let env = std::env::var("KVQ_COLD_TIER").ok();
+    if env.is_none() || matches!(env.as_deref(), Some("off") | Some("0")) {
+        assert_eq!(m_off.tier.demotions, 0, "cold_tier_blocks=0 must never demote");
+    }
+    if !tier_forced_off() {
+        assert!(m_on.tier.demotions > 0, "warm trie must demote under pressure");
+        assert!(
+            m_on.tier.preemptions_avoided > 0,
+            "demotion must absorb at least one pool-pressure reclaim"
+        );
+        assert!(m_on.tier.promotions > 0, "warm repeats must promote from the cold tier");
+    }
+}
+
+#[test]
+fn snapshot_round_trips_across_engine_restart() {
+    let path = std::env::temp_dir()
+        .join(format!("kvq_tiered_cache_snapshot_{}.snap", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let path_str = path.to_string_lossy().into_owned();
+
+    let prompts: Vec<Vec<i32>> = (5..7i32)
+        .map(|tag| (0..16).map(|j| (tag * 9 + j * 5 + 1) % 64).collect())
+        .collect();
+    let max_new = 8;
+
+    // First engine: serve the corpus, then drain — exit demotes the hot
+    // trie into the tier and writes the snapshot.
+    let (h, join) = tier_engine(None, 64, 64, Some(path_str.clone()), 1);
+    let first = run_requests(&h, &prompts, max_new, false);
+    drain(h, join);
+    if !tier_forced_off() {
+        assert!(path.exists(), "drain must write the snapshot file");
+    }
+
+    // Second engine, same path: repeats are token-identical, and come
+    // from restored-then-promoted entries rather than blind prefill.
+    let (h, join) = tier_engine(None, 64, 64, Some(path_str), 1);
+    let second = run_requests(&h, &prompts, max_new, false);
+    let m = drain(h, join);
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(second, first, "restart must not change a single token");
+    if !tier_forced_off() {
+        assert_eq!(
+            m.tier.snapshot_loaded,
+            prompts.len() as u64,
+            "every persisted prompt must restore at startup"
+        );
+        assert_eq!(
+            m.tier.promotions,
+            prompts.len() as u64,
+            "every repeat must be served by promotion"
+        );
+        assert_eq!(m.prefill_tokens, 0, "promoted prompts run zero backend prefill");
+    }
+}
