@@ -227,6 +227,7 @@ fn spawn_fleet(shards: usize, queue_depth: usize, overflow_depth: usize) -> Flee
         affinity: Affinity::Session,
         queue_depth,
         overflow_depth,
+        default_deadline_ms: 0,
     });
     let mut handles = Vec::new();
     let mut engine_joins = Vec::new();

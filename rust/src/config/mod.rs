@@ -129,6 +129,18 @@ pub struct ServeConfig {
     /// Cold-tier async prefetch ready-map depth (`--prefetch-depth`);
     /// 0 = synchronous decompression only.
     pub prefetch_depth: usize,
+    /// Default per-request deadline in milliseconds
+    /// (`--default-deadline-ms`); applied to requests that don't carry
+    /// their own `deadline_ms`. 0 = no default deadline.
+    pub default_deadline_ms: u64,
+    /// Watchdog threshold (`--stall-timeout-ms`): a running stream that
+    /// makes no token progress for this long is flagged, then cancelled
+    /// with `FinishReason::Stalled` at 2x. 0 = watchdog off.
+    pub stall_timeout_ms: u64,
+    /// Deterministic fault-injection spec (`--fault-spec`): inline JSON
+    /// rule array or a path to one, same grammar as the `KVQ_FAULT` env
+    /// var (see `util::fault`). Empty string clears; unset = no faults.
+    pub fault_spec: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -158,6 +170,9 @@ impl Default for ServeConfig {
             cold_tier_blocks: None,
             snapshot_path: None,
             prefetch_depth: 2,
+            default_deadline_ms: 0,
+            stall_timeout_ms: 0,
+            fault_spec: None,
         }
     }
 }
@@ -198,6 +213,9 @@ pub const CLI_FLAGS: &[(&str, &str)] = &[
     ("cold-tier-blocks", "cold_tier_blocks"),
     ("snapshot-path", "snapshot_path"),
     ("prefetch-depth", "prefetch_depth"),
+    ("default-deadline-ms", "default_deadline_ms"),
+    ("stall-timeout-ms", "stall_timeout_ms"),
+    ("fault-spec", "fault_spec"),
 ];
 
 impl ServeConfig {
@@ -291,6 +309,12 @@ impl ServeConfig {
                 self.snapshot_path = if s.is_empty() { None } else { Some(s.to_string()) };
             }
             "prefetch_depth" => self.prefetch_depth = usize_val(key, v)?,
+            "default_deadline_ms" => self.default_deadline_ms = usize_val(key, v)? as u64,
+            "stall_timeout_ms" => self.stall_timeout_ms = usize_val(key, v)? as u64,
+            "fault_spec" => {
+                let s = str_val(key, v)?;
+                self.fault_spec = if s.is_empty() { None } else { Some(s.to_string()) };
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -341,6 +365,7 @@ impl ServeConfig {
             cold_tier_blocks: self.cold_tier_blocks,
             snapshot_path: self.snapshot_path.clone(),
             prefetch_depth: self.prefetch_depth,
+            stall_timeout_ms: self.stall_timeout_ms,
         }
     }
 
@@ -352,6 +377,7 @@ impl ServeConfig {
             affinity: self.affinity,
             queue_depth: self.queue_depth,
             overflow_depth: self.overflow_depth,
+            default_deadline_ms: self.default_deadline_ms,
         }
     }
 
@@ -713,6 +739,43 @@ mod tests {
         assert_eq!(c.prefetch_depth, 0);
         let bad =
             Args::parse_from(["--cold-tier-blocks", "icy"].iter().map(|s| s.to_string()));
+        assert!(ServeConfig::default().apply_args(&bad).is_err());
+    }
+
+    #[test]
+    fn robustness_knobs_round_trip() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.default_deadline_ms, 0, "no default deadline");
+        assert_eq!(c.stall_timeout_ms, 0, "watchdog off by default");
+        assert_eq!(c.fault_spec, None);
+        c.apply_json(
+            &Json::parse(
+                r#"{"default_deadline_ms":2500,"stall_timeout_ms":400,
+                    "fault_spec":"[{\"site\":\"prefill\",\"action\":\"panic\"}]"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.default_deadline_ms, 2500);
+        assert_eq!(c.stall_timeout_ms, 400);
+        assert!(c.fault_spec.as_deref().unwrap().contains("prefill"));
+        assert_eq!(c.router_config().default_deadline_ms, 2500);
+        assert_eq!(c.engine_config().stall_timeout_ms, 400);
+        // CLI wins over the file; an empty fault spec clears it.
+        let args = Args::parse_from(
+            [
+                "--default-deadline-ms", "100", "--stall-timeout-ms", "0",
+                "--fault-spec", "",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.default_deadline_ms, 100);
+        assert_eq!(c.stall_timeout_ms, 0);
+        assert_eq!(c.fault_spec, None);
+        let bad =
+            Args::parse_from(["--default-deadline-ms", "soon"].iter().map(|s| s.to_string()));
         assert!(ServeConfig::default().apply_args(&bad).is_err());
     }
 

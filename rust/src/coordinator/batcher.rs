@@ -290,6 +290,8 @@ mod tests {
             rng: crate::util::rng::Rng::new(id),
             first_token_at: None,
             admitted_seq,
+            last_progress: std::time::Instant::now(),
+            stall_warned: false,
             events: tx,
         });
     }

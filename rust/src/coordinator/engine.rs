@@ -67,7 +67,9 @@ use crate::quant::simd::{Isa, KernelBackend};
 use crate::quant::Variant;
 use crate::util::rng::Rng;
 use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Engine configuration (cache + batching policy).
@@ -144,6 +146,11 @@ pub struct EngineConfig {
     /// their prefill step. 0 disables the thread — promotions fall back
     /// to synchronous decompression.
     pub prefetch_depth: usize,
+    /// Watchdog stall timeout in milliseconds (0 disables). A stream
+    /// with no token progress past the timeout is logged once and the
+    /// shard health flag flips to `stalled`; past 2× the timeout the
+    /// stream is cancelled with [`FinishReason::Stalled`].
+    pub stall_timeout_ms: u64,
 }
 
 /// The `decode_batching` knob (see [`EngineConfig::decode_batching`]).
@@ -215,6 +222,7 @@ impl Default for EngineConfig {
             cold_tier_blocks: None,
             snapshot_path: None,
             prefetch_depth: 2,
+            stall_timeout_ms: 0,
         }
     }
 }
@@ -273,10 +281,82 @@ fn resolve_cold_tier(cfg_blocks: usize) -> usize {
 
 enum EngineCmd {
     Submit(Request, EventTx),
+    /// Consistency probe: verify cache refcounts and reply with an empty
+    /// string (consistent) or the failure message.
+    Check(mpsc::Sender<String>),
     /// Stop accepting, drain all work, then exit.
     Drain,
     /// Exit immediately after the current step.
     Shutdown,
+}
+
+/// In-flight client streams of one engine, shared between the step loop
+/// and the panic handler wrapped around it: every accepted submission is
+/// registered here and deregistered at its terminal event, so after a
+/// panic the supervisor path can fail every survivor with a typed
+/// [`FinishReason::ShardFailed`] instead of letting streams hang.
+type StreamRegistry =
+    std::sync::Arc<std::sync::Mutex<std::collections::HashMap<RequestId, EventTx>>>;
+
+/// Lock a registry even when the panic that killed the engine poisoned it.
+fn lock_registry(
+    reg: &StreamRegistry,
+) -> std::sync::MutexGuard<'_, std::collections::HashMap<RequestId, EventTx>> {
+    reg.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shard lifecycle state, written by the engine (ok/stalled), its panic
+/// handler (dead), and the router's supervisor (restarting → ok).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    Ok = 0,
+    Stalled = 1,
+    Dead = 2,
+    Restarting = 3,
+}
+
+impl ShardState {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardState::Ok => "ok",
+            ShardState::Stalled => "stalled",
+            ShardState::Dead => "dead",
+            ShardState::Restarting => "restarting",
+        }
+    }
+
+    fn from_u8(v: u8) -> ShardState {
+        match v {
+            1 => ShardState::Stalled,
+            2 => ShardState::Dead,
+            3 => ShardState::Restarting,
+            _ => ShardState::Ok,
+        }
+    }
+}
+
+/// Lock-free shard health flag shared by the engine thread, the router,
+/// and the supervisor. Survives engine respawns (the supervisor hands
+/// the same `Arc` to every incarnation).
+#[derive(Debug, Default)]
+pub struct ShardHealth {
+    state: std::sync::atomic::AtomicU8,
+    /// Times the supervisor respawned this shard's engine.
+    pub restarts: AtomicU64,
+}
+
+impl ShardHealth {
+    pub fn new() -> ShardHealth {
+        ShardHealth::default()
+    }
+
+    pub fn set(&self, s: ShardState) {
+        self.state.store(s as u8, Ordering::SeqCst);
+    }
+
+    pub fn get(&self) -> ShardState {
+        ShardState::from_u8(self.state.load(Ordering::SeqCst))
+    }
 }
 
 /// Cloneable handle to a running engine.
@@ -311,6 +391,26 @@ impl EngineHandle {
     pub fn shutdown(&self) {
         let _ = self.tx.send(EngineCmd::Shutdown);
     }
+
+    /// Synchronous consistency probe: ask the engine thread to verify
+    /// cache refcounts (pool refs vs block tables + pins). Errors when
+    /// the engine is down, unresponsive, or the verification fails —
+    /// the chaos suite runs this after cancellation churn to prove
+    /// cancelled streams leak nothing.
+    pub fn check(&self) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(EngineCmd::Check(tx))
+            .map_err(|_| anyhow::anyhow!("engine is down"))?;
+        let msg = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .map_err(|_| anyhow::anyhow!("engine did not answer consistency check"))?;
+        if msg.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("refcount check failed: {msg}")
+        }
+    }
 }
 
 /// Spawn an engine thread. `backend_factory` runs on the engine thread
@@ -322,12 +422,45 @@ pub fn spawn<F>(
 where
     F: FnOnce() -> Result<Box<dyn LmBackend>> + Send + 'static,
 {
+    // Adapt the one-shot factory to the reusable-factory entry point
+    // (`spawn` call sites build exactly one engine from it).
+    let cell = std::sync::Mutex::new(Some(backend_factory));
+    spawn_with(
+        cfg,
+        move || (cell.lock().unwrap().take().expect("backend factory already consumed"))(),
+        Metrics::new(),
+        Arc::new(ShardHealth::new()),
+    )
+}
+
+/// [`spawn`] with caller-provided metrics and health state, the shard
+/// supervisor's entry point: the factory is reusable (`Fn`) so the same
+/// spawner can build every respawned incarnation, and metrics/health
+/// survive across them (restart counts and terminal-event accounting
+/// stay monotone).
+///
+/// The step loop runs under `catch_unwind`. On a panic — a backend bug,
+/// a cache invariant trip, or an injected `panic` fault — the thread
+/// fails every registered in-flight stream plus everything still queued
+/// in the command channel with [`FinishReason::ShardFailed`], books them
+/// as `streams_failed`, flips `health` to [`ShardState::Dead`], and
+/// exits. No stream ever hangs on a dead shard.
+pub fn spawn_with<F>(
+    cfg: EngineConfig,
+    backend_factory: F,
+    metrics: Metrics,
+    health: Arc<ShardHealth>,
+) -> (EngineHandle, std::thread::JoinHandle<()>)
+where
+    F: Fn() -> Result<Box<dyn LmBackend>> + Send + 'static,
+{
     let (tx, rx) = mpsc::channel();
-    let metrics = Metrics::new();
     let m2 = metrics.clone();
     let join = std::thread::Builder::new()
         .name("kvq-engine".into())
         .spawn(move || {
+            health.set(ShardState::Ok);
+            let registry: StreamRegistry = Arc::default();
             // Fail fast: resolve the quantization policy against the
             // model spec and reject impossible configurations here instead
             // of failing every request at its first decode step. Only the
@@ -349,22 +482,73 @@ where
                 Ok((b, policy))
             });
             match init {
-                Ok((backend, policy)) => Engine::new(cfg, policy, backend, m2).run(rx),
+                Ok((backend, policy)) => {
+                    let reg = Arc::clone(&registry);
+                    let hlth = Arc::clone(&health);
+                    let mtr = m2.clone();
+                    // Borrow (not move) the receiver: after a panic the
+                    // recovery path below still drains queued commands.
+                    let rx_ref = &rx;
+                    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                        Engine::new(cfg, policy, backend, mtr, reg, hlth).run(rx_ref)
+                    }));
+                    if run.is_err() {
+                        health.set(ShardState::Dead);
+                        let survivors: Vec<(RequestId, EventTx)> =
+                            lock_registry(&registry).drain().collect();
+                        let mut failed = survivors.len();
+                        for (id, events) in survivors {
+                            crate::debug!("failing in-flight stream {id}: shard died");
+                            let _ = events.send(TokenEvent::Finished {
+                                reason: FinishReason::ShardFailed,
+                                tokens: 0,
+                                elapsed: 0.0,
+                            });
+                        }
+                        // Work still queued in the command channel was
+                        // submitted (and counted) but never registered.
+                        while let Ok(cmd) = rx.try_recv() {
+                            match cmd {
+                                EngineCmd::Submit(_req, events) => {
+                                    failed += 1;
+                                    let _ = events.send(TokenEvent::Finished {
+                                        reason: FinishReason::ShardFailed,
+                                        tokens: 0,
+                                        elapsed: 0.0,
+                                    });
+                                }
+                                EngineCmd::Check(reply) => {
+                                    let _ = reply.send("shard died".into());
+                                }
+                                EngineCmd::Drain | EngineCmd::Shutdown => {}
+                            }
+                        }
+                        m2.on_shard_failure(failed);
+                        crate::error!(
+                            "engine thread panicked; failed {failed} in-flight stream(s) \
+                             with shard_failed"
+                        );
+                    }
+                }
                 Err(e) => {
                     crate::error!("engine backend init failed: {e:#}");
                     // Reject everything that arrives.
                     while let Ok(cmd) = rx.recv() {
-                        if let EngineCmd::Submit(_req, events) = cmd {
-                            m2.on_reject();
-                            let _ = events.send(TokenEvent::Finished {
-                                reason: FinishReason::Rejected(format!(
-                                    "backend init failed: {e}"
-                                )),
-                                tokens: 0,
-                                elapsed: 0.0,
-                            });
-                        } else {
-                            break;
+                        match cmd {
+                            EngineCmd::Submit(_req, events) => {
+                                m2.on_reject();
+                                let _ = events.send(TokenEvent::Finished {
+                                    reason: FinishReason::Rejected(format!(
+                                        "backend init failed: {e}"
+                                    )),
+                                    tokens: 0,
+                                    elapsed: 0.0,
+                                });
+                            }
+                            EngineCmd::Check(reply) => {
+                                let _ = reply.send(format!("backend init failed: {e}"));
+                            }
+                            _ => break,
                         }
                     }
                 }
@@ -492,6 +676,13 @@ struct Engine {
     /// analog of the staging-slot reuse above: grown once, then no
     /// allocation per (layer, head) pass on the decode hot path.
     batch_scratch: BatchScratch,
+    /// In-flight client streams, shared with the panic handler in
+    /// [`spawn_with`]: registered at submit, removed at every terminal
+    /// event, drained (→ `ShardFailed`) after a panic.
+    registry: StreamRegistry,
+    /// Shard health flag (ok/stalled here; dead/restarting are written
+    /// by the panic handler and the supervisor).
+    health: Arc<ShardHealth>,
 }
 
 /// Per-request sampling RNG, derived statelessly from the engine seed,
@@ -517,6 +708,8 @@ impl Engine {
         policy: QuantPolicy,
         backend: Box<dyn LmBackend>,
         metrics: Metrics,
+        registry: StreamRegistry,
+        health: Arc<ShardHealth>,
     ) -> Engine {
         let spec = backend.spec().clone();
         let blocks_per_seq = 2 * spec.layers * spec.max_seq.div_ceil(spec.block_size);
@@ -617,11 +810,13 @@ impl Engine {
             isa,
             batching,
             batch_scratch: BatchScratch::new(),
+            registry,
+            health,
             cfg,
         }
     }
 
-    fn run(mut self, rx: mpsc::Receiver<EngineCmd>) {
+    fn run(mut self, rx: &mpsc::Receiver<EngineCmd>) {
         let mut draining = false;
         loop {
             // Ingest commands: block when idle (nothing to step), else drain
@@ -687,8 +882,27 @@ impl Engine {
                         elapsed: 0.0,
                     });
                 } else {
+                    lock_registry(&self.registry).insert(req.id, events.clone());
                     self.sched.enqueue(req, events);
                 }
+                false
+            }
+            EngineCmd::Check(reply) => {
+                // The assert panics on inconsistency; answer the probe
+                // with the message instead of dying (a failed probe is a
+                // finding, not a fault).
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.cache.assert_refcounts_consistent()
+                }));
+                let msg = match res {
+                    Ok(()) => String::new(),
+                    Err(p) => p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "refcount assertion failed".into()),
+                };
+                let _ = reply.send(msg);
                 false
             }
             EngineCmd::Drain => {
@@ -699,8 +913,116 @@ impl Engine {
         }
     }
 
+    /// Deregister a stream and send its terminal event. Every terminal
+    /// path must route through this (or remove from the registry itself)
+    /// so the panic handler never double-finishes a stream.
+    fn finish_stream(
+        &self,
+        id: RequestId,
+        events: &EventTx,
+        reason: FinishReason,
+        tokens: usize,
+        elapsed: f64,
+    ) {
+        lock_registry(&self.registry).remove(&id);
+        let _ = events.send(TokenEvent::Finished { reason, tokens, elapsed });
+    }
+
+    /// Cancel every expired request — waiting, preempted, or running —
+    /// freeing cache blocks and booking `deadline_cancels`. Runs at the
+    /// top of each step so an expired stream never gets another token.
+    fn expire_deadlines(&mut self) {
+        let now = Instant::now();
+        for (req, events) in self.sched.take_expired_waiting(now) {
+            self.metrics.on_deadline_cancel();
+            let elapsed = req.arrival.elapsed().as_secs_f64();
+            self.finish_stream(req.id, &events, FinishReason::DeadlineExceeded, 0, elapsed);
+        }
+        let expired: Vec<RequestId> = self
+            .sched
+            .preempted
+            .iter()
+            .chain(self.sched.running.iter())
+            .filter(|r| r.req.deadline_expired(now))
+            .map(|r| r.req.id)
+            .collect();
+        for id in expired {
+            self.cancel_request(id, FinishReason::DeadlineExceeded);
+            self.metrics.on_deadline_cancel();
+        }
+    }
+
+    /// Remove a running or preempted request mid-flight, free its cache
+    /// blocks, and send `reason`. The cancellation paths (deadline,
+    /// stall, client drop) all land here; metrics are booked by the
+    /// caller (each path has its own counter).
+    fn cancel_request(&mut self, id: RequestId, reason: FinishReason) {
+        let run = match self.sched.finish(id) {
+            Some(run) => {
+                self.cache.free(run.seq);
+                run
+            }
+            None => {
+                let Some(idx) = self.sched.preempted.iter().position(|r| r.req.id == id)
+                else {
+                    return;
+                };
+                // Preempted state holds no cache blocks (seq is stale).
+                self.sched.preempted.remove(idx).unwrap()
+            }
+        };
+        crate::debug!("cancel {} ({}): generated {}", id, reason.label(), run.generated);
+        let elapsed = run.req.arrival.elapsed().as_secs_f64();
+        self.finish_stream(id, &run.events, reason, run.generated, elapsed);
+    }
+
+    /// Watchdog: escalate streams with no token progress past the stall
+    /// timeout — warn once and flip shard health to `stalled`, then past
+    /// 2× the timeout cancel with [`FinishReason::Stalled`]. Watches
+    /// running *and* preempted streams (a readmission livelock is
+    /// exactly the stall this exists to catch).
+    fn watchdog(&mut self) {
+        let timeout = self.cfg.stall_timeout_ms;
+        if timeout == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let mut cancels: Vec<RequestId> = Vec::new();
+        let mut any_stalled = false;
+        for run in self.sched.running.iter_mut().chain(self.sched.preempted.iter_mut()) {
+            let stalled_ms =
+                now.saturating_duration_since(run.last_progress).as_millis() as u64;
+            if stalled_ms >= 2 * timeout {
+                cancels.push(run.req.id);
+            } else if stalled_ms >= timeout {
+                any_stalled = true;
+                if !run.stall_warned {
+                    run.stall_warned = true;
+                    crate::warn!(
+                        "watchdog: stream {} has made no progress for {stalled_ms}ms",
+                        run.req.id
+                    );
+                }
+            }
+        }
+        for id in cancels {
+            crate::warn!("watchdog: cancelling stalled stream {id}");
+            self.cancel_request(id, FinishReason::Stalled);
+            self.metrics.on_stall_cancel();
+        }
+        match (any_stalled, self.health.get()) {
+            (true, ShardState::Ok) => self.health.set(ShardState::Stalled),
+            (false, ShardState::Stalled) => self.health.set(ShardState::Ok),
+            _ => {}
+        }
+    }
+
     fn step(&mut self) {
         let t0 = Instant::now();
+        // Cancellation sweep first: an expired or stalled stream must
+        // not receive another token or hold blocks through the plan.
+        self.expire_deadlines();
+        self.watchdog();
         // Stage likely-next promotions: ask the prefetch thread to
         // decompress cold entries for the head of the waiting queue
         // before their prefill step arrives.
@@ -716,11 +1038,8 @@ impl Engine {
         for (req, events, cause) in plan.rejections {
             self.metrics.on_reject();
             crate::debug!("reject {}: {}", req.id, cause);
-            let _ = events.send(TokenEvent::Finished {
-                reason: FinishReason::Rejected(cause),
-                tokens: 0,
-                elapsed: req.arrival.elapsed().as_secs_f64(),
-            });
+            let elapsed = req.arrival.elapsed().as_secs_f64();
+            self.finish_stream(req.id, &events, FinishReason::Rejected(cause), 0, elapsed);
         }
 
         // Reclaim in plan order: cold-tier demotions first (cached
@@ -889,22 +1208,51 @@ impl Engine {
         let vocab = self.backend.spec().vocab as i32;
         if let Some(&bad) = req.prompt.iter().find(|&&t| t < 0 || t >= vocab) {
             self.metrics.on_reject();
-            let _ = events.send(TokenEvent::Finished {
-                reason: FinishReason::Rejected(format!("token {bad} outside vocab {vocab}")),
-                tokens: 0,
-                elapsed: req.arrival.elapsed().as_secs_f64(),
-            });
+            let elapsed = req.arrival.elapsed().as_secs_f64();
+            self.finish_stream(
+                req.id,
+                &events,
+                FinishReason::Rejected(format!("token {bad} outside vocab {vocab}")),
+                0,
+                elapsed,
+            );
             return Ok(());
         }
         let prompt = req.prompt.clone();
-        let (seq, logits, computed) = self.materialize_prompt(&prompt)?;
+        let materialized = crate::util::fault::hit("prefill")
+            .and_then(|()| self.materialize_prompt(&prompt));
+        let (seq, logits, computed) = match materialized {
+            Ok(x) => x,
+            Err(e) => {
+                // A failed prefill is a terminal, typed event — the
+                // stream must never hang waiting for a first token.
+                self.metrics.on_error();
+                let elapsed = req.arrival.elapsed().as_secs_f64();
+                self.finish_stream(
+                    req.id,
+                    &events,
+                    FinishReason::Error(format!("prefill failed: {e}")),
+                    0,
+                    elapsed,
+                );
+                return Err(e);
+            }
+        };
         let mut rng = request_rng(self.cfg.seed, &req);
         let token = sample::sample(&logits, &req.sampling, &mut rng);
         let ttft = req.arrival.elapsed().as_secs_f64();
         // prefill_tokens counts backend prefill work; prefix-cache hits
         // (full or the matched span of a partial) did none.
         self.metrics.on_first_token(ttft, computed);
-        let _ = events.send(TokenEvent::First { token, ttft });
+        if events.send(TokenEvent::First { token, ttft }).is_err() {
+            // Client receiver dropped before its first token: cancel
+            // instead of decoding into the void.
+            crate::debug!("client dropped stream {} before first token", req.id);
+            self.metrics.on_client_cancel();
+            lock_registry(&self.registry).remove(&req.id);
+            self.cache.free(seq);
+            return Ok(());
+        }
 
         let admitted_seq = self.sched.next_admission_stamp();
         let mut running = Running {
@@ -916,6 +1264,8 @@ impl Engine {
             rng,
             first_token_at: Some(Instant::now()),
             admitted_seq,
+            last_progress: Instant::now(),
+            stall_warned: false,
             events,
         };
         if let Some(reason) = finish_reason(&running, self.cache.config().max_seq) {
@@ -977,6 +1327,8 @@ impl Engine {
         self.metrics.on_resume(computed + replay.len());
         run.seq = seq;
         run.admitted_seq = self.sched.next_admission_stamp();
+        run.last_progress = Instant::now();
+        run.stall_warned = false;
         self.sched.start(run);
     }
 
@@ -1048,6 +1400,16 @@ impl Engine {
         if metas.is_empty() {
             return;
         }
+        // Injected wave fault: `error` fails every member typed (a
+        // backend-wide decode failure), `delay` slows the wave (the
+        // deadline/watchdog path), `panic` kills the shard (the
+        // supervisor path).
+        if let Err(e) = crate::util::fault::hit("decode_wave") {
+            for &(id, _, _, _) in &metas {
+                self.fail_decode(id, anyhow::anyhow!("{e}"));
+            }
+            return;
+        }
         if self.paged {
             if self.batching && metas.len() >= 2 {
                 match self.decode_wave_batched(&metas) {
@@ -1107,11 +1469,14 @@ impl Engine {
         if let Some(run) = self.sched.finish(id) {
             self.cache.free(run.seq);
             self.metrics.on_error();
-            let _ = run.events.send(TokenEvent::Finished {
-                reason: FinishReason::Error(format!("{e}")),
-                tokens: run.generated,
-                elapsed: run.req.arrival.elapsed().as_secs_f64(),
-            });
+            let elapsed = run.req.arrival.elapsed().as_secs_f64();
+            self.finish_stream(
+                id,
+                &run.events,
+                FinishReason::Error(format!("{e}")),
+                run.generated,
+                elapsed,
+            );
         }
     }
 
@@ -1256,10 +1621,19 @@ impl Engine {
         run.last_token = next;
         run.generated += 1;
         run.tokens.push(next);
+        run.last_progress = Instant::now();
+        run.stall_warned = false;
         // TPOT includes this sequence's own gather cost (measured in the
         // parallel phase) — same semantics as the pre-wave serial path.
         self.metrics.on_token(gather_secs + t0.elapsed().as_secs_f64());
-        let _ = run.events.send(TokenEvent::Token(next));
+        if run.events.send(TokenEvent::Token(next)).is_err() {
+            // Client receiver dropped mid-decode: stop generating, free
+            // the blocks, book the cancellation.
+            crate::debug!("client dropped stream {id} mid-decode; cancelling");
+            self.metrics.on_client_cancel();
+            self.cancel_request(id, FinishReason::Cancelled);
+            return Ok(());
+        }
 
         if let Some(reason) = finish_reason(run, max_seq) {
             let mut run = self.sched.finish(id).unwrap();
@@ -1297,11 +1671,7 @@ impl Engine {
     fn finalize(&self, run: &mut Running, reason: FinishReason) {
         let elapsed = run.req.arrival.elapsed().as_secs_f64();
         self.metrics.on_finish(elapsed);
-        let _ = run.events.send(TokenEvent::Finished {
-            reason,
-            tokens: run.generated,
-            elapsed,
-        });
+        self.finish_stream(run.req.id, &run.events, reason, run.generated, elapsed);
     }
 }
 

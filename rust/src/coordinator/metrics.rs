@@ -69,9 +69,19 @@ struct Inner {
     requests_rejected: u64,
     /// Requests torn down by an engine error (decode failure, dead
     /// engine). Terminal like finished/rejected — [`Metrics::depth`]
-    /// stays balanced only if every submission books exactly one of the
-    /// three.
+    /// stays balanced only if every submission books exactly one
+    /// terminal event.
     requests_errored: u64,
+    /// Streams cancelled because their deadline expired. Terminal.
+    deadline_cancels: u64,
+    /// Streams cancelled by the no-progress watchdog. Terminal.
+    stall_cancels: u64,
+    /// Streams cancelled because the client dropped its receiver
+    /// mid-generation. Terminal.
+    client_cancels: u64,
+    /// In-flight streams failed by a shard panic
+    /// (`FinishReason::ShardFailed`). Terminal.
+    streams_failed: u64,
     tokens_generated: u64,
     prefill_tokens: u64,
     engine_steps: u64,
@@ -130,6 +140,10 @@ impl Metrics {
             requests_finished: 0,
             requests_rejected: 0,
             requests_errored: 0,
+            deadline_cancels: 0,
+            stall_cancels: 0,
+            client_cancels: 0,
+            streams_failed: 0,
             tokens_generated: 0,
             prefill_tokens: 0,
             engine_steps: 0,
@@ -178,17 +192,45 @@ impl Metrics {
         self.0.lock().unwrap().requests_errored += 1;
     }
 
+    /// A stream was cancelled because its deadline expired. Terminal.
+    pub fn on_deadline_cancel(&self) {
+        self.0.lock().unwrap().deadline_cancels += 1;
+    }
+
+    /// A stream was cancelled by the no-progress watchdog. Terminal.
+    pub fn on_stall_cancel(&self) {
+        self.0.lock().unwrap().stall_cancels += 1;
+    }
+
+    /// A stream was cancelled because its client receiver dropped.
+    /// Terminal.
+    pub fn on_client_cancel(&self) {
+        self.0.lock().unwrap().client_cancels += 1;
+    }
+
+    /// `n` in-flight streams were failed by a shard panic. Terminal for
+    /// each of them.
+    pub fn on_shard_failure(&self, n: usize) {
+        self.0.lock().unwrap().streams_failed += n as u64;
+    }
+
     /// Live request depth observed through the counters: submissions not
-    /// yet terminated (finished, rejected, or errored). Unlike the step
-    /// gauges this also counts work still queued in the engine's command
-    /// channel, which is exactly what the router's per-shard admission
-    /// bound needs. Saturating: termination of an in-flight submit may be
-    /// booked a hair before the submit itself is visible.
+    /// yet terminated (finished, rejected, errored, cancelled, or failed
+    /// with the shard). Unlike the step gauges this also counts work
+    /// still queued in the engine's command channel, which is exactly
+    /// what the router's per-shard admission bound needs. Saturating:
+    /// termination of an in-flight submit may be booked a hair before
+    /// the submit itself is visible.
     pub fn depth(&self) -> usize {
         let m = self.0.lock().unwrap();
-        m.requests_submitted
-            .saturating_sub(m.requests_finished + m.requests_rejected + m.requests_errored)
-            as usize
+        let terminal = m.requests_finished
+            + m.requests_rejected
+            + m.requests_errored
+            + m.deadline_cancels
+            + m.stall_cancels
+            + m.client_cancels
+            + m.streams_failed;
+        m.requests_submitted.saturating_sub(terminal) as usize
     }
 
     pub fn on_first_token(&self, ttft: f64, prefill_tokens: usize) {
@@ -264,6 +306,10 @@ impl Metrics {
             requests_finished: m.requests_finished,
             requests_rejected: m.requests_rejected,
             requests_errored: m.requests_errored,
+            deadline_cancels: m.deadline_cancels,
+            stall_cancels: m.stall_cancels,
+            client_cancels: m.client_cancels,
+            streams_failed: m.streams_failed,
             tokens_generated: m.tokens_generated,
             prefill_tokens: m.prefill_tokens,
             engine_steps: m.engine_steps,
@@ -317,6 +363,14 @@ pub struct MetricsSnapshot {
     pub requests_finished: u64,
     pub requests_rejected: u64,
     pub requests_errored: u64,
+    /// Streams cancelled by deadline expiry (schema v5).
+    pub deadline_cancels: u64,
+    /// Streams cancelled by the no-progress watchdog (schema v5).
+    pub stall_cancels: u64,
+    /// Streams cancelled by client receiver drop (schema v5).
+    pub client_cancels: u64,
+    /// In-flight streams failed by a shard panic (schema v5).
+    pub streams_failed: u64,
     pub tokens_generated: u64,
     pub prefill_tokens: u64,
     pub engine_steps: u64,
@@ -408,6 +462,10 @@ impl MetricsSnapshot {
             ("requests_finished", (self.requests_finished as usize).into()),
             ("requests_rejected", (self.requests_rejected as usize).into()),
             ("requests_errored", (self.requests_errored as usize).into()),
+            ("deadline_cancels", (self.deadline_cancels as usize).into()),
+            ("stall_cancels", (self.stall_cancels as usize).into()),
+            ("client_cancels", (self.client_cancels as usize).into()),
+            ("streams_failed", (self.streams_failed as usize).into()),
             ("tokens_generated", (self.tokens_generated as usize).into()),
             ("prefill_tokens", (self.prefill_tokens as usize).into()),
             ("engine_steps", (self.engine_steps as usize).into()),
@@ -468,6 +526,8 @@ impl MetricsSnapshot {
                 (self.tier.preemptions_avoided as usize).into(),
             ),
             ("tier_snapshot_loaded", (self.tier.snapshot_loaded as usize).into()),
+            ("tier_snapshot_rejected", (self.tier.snapshot_rejected as usize).into()),
+            ("tier_decompress_errors", (self.tier.decompress_errors as usize).into()),
             ("tier_cold_raw_bytes", (self.tier.cold_raw_bytes as usize).into()),
             ("tier_cold_comp_bytes", (self.tier.cold_comp_bytes as usize).into()),
             ("tier_compression_ratio", self.tier.compression_ratio().into()),
@@ -634,6 +694,8 @@ mod tests {
                     cold_evictions: 1,
                     preemptions_avoided: 6,
                     snapshot_loaded: 5,
+                    snapshot_rejected: 7,
+                    decompress_errors: 9,
                     cold_entries: 2,
                     cold_blocks: 8,
                     cold_raw_bytes: 2048,
@@ -662,6 +724,8 @@ mod tests {
         assert_eq!(j.get("tier_cold_evictions").as_usize(), Some(1));
         assert_eq!(j.get("tier_preemptions_avoided").as_usize(), Some(6));
         assert_eq!(j.get("tier_snapshot_loaded").as_usize(), Some(5));
+        assert_eq!(j.get("tier_snapshot_rejected").as_usize(), Some(7));
+        assert_eq!(j.get("tier_decompress_errors").as_usize(), Some(9));
         assert!((j.get("tier_compression_ratio").as_f64().unwrap() - 4.0).abs() < 1e-12);
         assert!(j.get("tier_demote_secs").as_f64().unwrap() > 0.0);
         assert!(j.get("tier_promote_secs").as_f64().unwrap() > 0.0);
@@ -671,15 +735,32 @@ mod tests {
     #[test]
     fn depth_balances_over_all_terminations() {
         let m = Metrics::new();
-        for _ in 0..5 {
+        for _ in 0..9 {
             m.on_submit();
         }
-        assert_eq!(m.depth(), 5);
+        assert_eq!(m.depth(), 9);
         m.on_finish(0.1);
         m.on_reject();
         m.on_error();
-        assert_eq!(m.depth(), 2);
-        assert_eq!(m.snapshot().requests_errored, 1);
+        assert_eq!(m.depth(), 6);
+        // Cancellations and shard failures are terminal too — every
+        // submission books exactly one terminal event, whatever kind.
+        m.on_deadline_cancel();
+        m.on_stall_cancel();
+        m.on_client_cancel();
+        m.on_shard_failure(2);
+        assert_eq!(m.depth(), 1);
+        let s = m.snapshot();
+        assert_eq!(s.requests_errored, 1);
+        assert_eq!(s.deadline_cancels, 1);
+        assert_eq!(s.stall_cancels, 1);
+        assert_eq!(s.client_cancels, 1);
+        assert_eq!(s.streams_failed, 2);
+        let j = s.to_json();
+        assert_eq!(j.get("deadline_cancels").as_usize(), Some(1));
+        assert_eq!(j.get("stall_cancels").as_usize(), Some(1));
+        assert_eq!(j.get("client_cancels").as_usize(), Some(1));
+        assert_eq!(j.get("streams_failed").as_usize(), Some(2));
         // Termination booked before its submit is visible: saturate to 0.
         let m2 = Metrics::new();
         m2.on_finish(0.1);

@@ -46,6 +46,11 @@ pub struct Request {
     /// to max_new_tokens.
     pub stop_token: Option<i32>,
     pub arrival: Instant,
+    /// Absolute wall-clock deadline. Once past it the request is
+    /// cancelled wherever it sits (waiting, preempted, or mid-decode)
+    /// and its stream finishes with [`FinishReason::DeadlineExceeded`].
+    /// None = no deadline.
+    pub deadline: Option<Instant>,
 }
 
 impl Request {
@@ -58,12 +63,18 @@ impl Request {
             priority: Priority::Normal,
             stop_token: None,
             arrival: Instant::now(),
+            deadline: None,
         }
     }
 
     /// Total tokens this request may occupy in the cache.
     pub fn max_total_tokens(&self) -> usize {
         self.prompt.len() + self.max_new_tokens
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 }
 
@@ -80,6 +91,36 @@ pub enum FinishReason {
     Rejected(String),
     /// Engine error mid-generation.
     Error(String),
+    /// The engine shard serving this stream panicked. The request is
+    /// safe to re-drive: no partial state survives the shard death, and
+    /// determinism guarantees a byte-identical replay.
+    ShardFailed,
+    /// The request's deadline passed before it finished (per-request
+    /// `deadline_ms` or the `--default-deadline-ms` serve knob).
+    DeadlineExceeded,
+    /// The client dropped its stream receiver mid-generation; the engine
+    /// cancelled the sequence and freed its blocks.
+    Cancelled,
+    /// The watchdog cancelled the stream after no token progress for
+    /// twice `--stall-timeout-ms`.
+    Stalled,
+}
+
+impl FinishReason {
+    /// Wire label for metrics / HTTP payloads.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Stop => "stop",
+            FinishReason::CapacityExhausted => "capacity",
+            FinishReason::Rejected(_) => "rejected",
+            FinishReason::Error(_) => "error",
+            FinishReason::ShardFailed => "shard_failed",
+            FinishReason::DeadlineExceeded => "deadline_exceeded",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Stalled => "stalled",
+        }
+    }
 }
 
 /// Streamed events for one request.
@@ -126,6 +167,27 @@ mod tests {
     fn request_token_budget() {
         let r = Request::new(1, vec![1, 2, 3], 10);
         assert_eq!(r.max_total_tokens(), 13);
+    }
+
+    #[test]
+    fn deadline_expiry_is_edge_inclusive() {
+        let mut r = Request::new(1, vec![1], 4);
+        let now = Instant::now();
+        assert!(!r.deadline_expired(now), "no deadline never expires");
+        r.deadline = Some(now);
+        assert!(r.deadline_expired(now), "at the deadline counts as expired");
+        r.deadline = Some(now + std::time::Duration::from_secs(3600));
+        assert!(!r.deadline_expired(now));
+    }
+
+    #[test]
+    fn finish_reason_labels_are_stable() {
+        assert_eq!(FinishReason::Length.label(), "length");
+        assert_eq!(FinishReason::ShardFailed.label(), "shard_failed");
+        assert_eq!(FinishReason::DeadlineExceeded.label(), "deadline_exceeded");
+        assert_eq!(FinishReason::Cancelled.label(), "cancelled");
+        assert_eq!(FinishReason::Stalled.label(), "stalled");
+        assert_eq!(FinishReason::Rejected("x".into()).label(), "rejected");
     }
 
     #[test]

@@ -31,15 +31,28 @@
 //! `submit_to`) is preserved for the A/B bench and examples: a default
 //! `RouterConfig` has no affinity and an unbounded queue, which reduces
 //! to the old round-robin/least-loaded validator + id allocator.
+//!
+//! **Shard supervision.** Shards registered via [`Router::add_supervised`]
+//! carry a respawn factory. The engine thread runs under `catch_unwind`
+//! (see `engine::spawn_with`): on panic it fails every in-flight stream
+//! typed (`FinishReason::ShardFailed`) and flips its [`ShardHealth`] to
+//! `Dead`. The supervisor thread ([`Router::spawn_supervisor`]) notices,
+//! waits out a bounded exponential backoff (with deterministic jitter),
+//! respawns the shard through its factory — which re-runs snapshot
+//! restore when `--snapshot-path` is set — and swaps the fresh handle in.
+//! Dead/restarting shards read as saturated, so session-affine traffic
+//! re-homes through the existing spillover path while the other shards
+//! keep serving; nothing waits on the restart.
 
-use super::engine::EngineHandle;
+use super::engine::{EngineHandle, ShardHealth, ShardState};
+use super::metrics::Metrics;
 use super::request::{EventRx, EventTx, FinishReason, Priority, Request, RequestId, TokenEvent};
 use crate::model::sample::SamplingParams;
 use anyhow::{bail, Result};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -97,6 +110,9 @@ pub struct RouterConfig {
     /// Router-level overflow queue capacity; parked submissions wait here
     /// when every shard is saturated. Beyond it, submits fail typed.
     pub overflow_depth: usize,
+    /// Deadline stamped on every submission that doesn't carry its own
+    /// (`SubmitOptions::deadline_ms`). 0 = no default deadline.
+    pub default_deadline_ms: u64,
 }
 
 impl Default for RouterConfig {
@@ -106,6 +122,7 @@ impl Default for RouterConfig {
             affinity: Affinity::None,
             queue_depth: 0,
             overflow_depth: 256,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -120,6 +137,9 @@ pub struct SubmitOptions {
     /// Pin to a shard index, bypassing affinity and saturation (A/B
     /// harnesses and tests).
     pub shard: Option<usize>,
+    /// Per-request deadline override. `Some(0)` explicitly disables the
+    /// router default; `None` inherits `RouterConfig::default_deadline_ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Typed submission failure — the HTTP layer maps these onto honest
@@ -163,6 +183,8 @@ pub struct RouterStats {
     pub overflow_peak: AtomicU64,
     /// Submits refused with `SubmitError::Saturated`.
     pub rejected_saturated: AtomicU64,
+    /// Supervised shard respawns (across all shards).
+    pub shard_restarts: AtomicU64,
 }
 
 /// Plain-value snapshot of [`RouterStats`].
@@ -175,6 +197,7 @@ pub struct RouterStatsSnapshot {
     pub overflow_dispatched: u64,
     pub overflow_peak: u64,
     pub rejected_saturated: u64,
+    pub shard_restarts: u64,
     /// Current overflow queue length.
     pub overflow_len: usize,
 }
@@ -186,16 +209,49 @@ struct Pending {
     req: Request,
     events: EventTx,
     home: usize,
+    /// Home-shard re-checks made by the pump before spilling elsewhere.
+    attempts: u32,
 }
 
+/// Factory that (re)spawns an engine shard. It receives the shard's
+/// long-lived [`Metrics`] and [`ShardHealth`] — both outlive any single
+/// engine thread, so counters and restart counts accumulate across
+/// respawns — and returns the fresh handle plus the engine thread's join
+/// handle. Factories built over `--snapshot-path` re-run snapshot restore
+/// on every (re)spawn, so a respawned shard comes back with its warm
+/// prefix set.
+pub type SpawnedShard = (EngineHandle, std::thread::JoinHandle<()>);
+
+pub type ShardSpawner = Box<dyn Fn(Metrics, Arc<ShardHealth>) -> SpawnedShard + Send + Sync>;
+
+/// One shard slot. The handle is behind a mutex only because the
+/// supervisor swaps it on respawn; every reader takes a short lock and
+/// clones (an `EngineHandle` is an mpsc sender + metrics handle).
+struct Shard {
+    name: String,
+    handle: Mutex<EngineHandle>,
+    /// Shard-lifetime metrics, shared with every engine incarnation.
+    metrics: Metrics,
+    health: Arc<ShardHealth>,
+    /// Present only for supervised shards.
+    spawner: Option<ShardSpawner>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Respawn backoff: `RESPAWN_BASE_MS << attempt` (capped) plus up to 25%
+/// deterministic jitter.
+const RESPAWN_BASE_MS: u64 = 10;
+const RESPAWN_CAP_MS: u64 = 2_000;
+
 pub struct Router {
-    engines: Vec<(String, EngineHandle)>,
+    shards: Vec<Shard>,
     next_id: AtomicU64,
     rr: Mutex<usize>,
     cfg: RouterConfig,
     overflow: Mutex<VecDeque<Pending>>,
     overflow_cv: Condvar,
     pump_stop: AtomicBool,
+    supervisor_stop: AtomicBool,
     stats: RouterStats,
 }
 
@@ -206,36 +262,83 @@ impl Router {
 
     pub fn with_config(cfg: RouterConfig) -> Router {
         Router {
-            engines: Vec::new(),
+            shards: Vec::new(),
             next_id: AtomicU64::new(1),
             rr: Mutex::new(0),
             cfg,
             overflow: Mutex::new(VecDeque::new()),
             overflow_cv: Condvar::new(),
             pump_stop: AtomicBool::new(false),
+            supervisor_stop: AtomicBool::new(false),
             stats: RouterStats::default(),
         }
     }
 
+    /// Register an unsupervised shard (legacy path). Its health slot is a
+    /// placeholder that always reads `Ok` — engines spawned through
+    /// `engine::spawn` keep their own health Arc — so there is no respawn
+    /// and no dead-shard traffic gating; use [`Router::add_supervised`]
+    /// for both.
     pub fn add_engine(&mut self, name: &str, handle: EngineHandle) {
-        self.engines.push((name.to_string(), handle));
+        let metrics = handle.metrics.clone();
+        self.shards.push(Shard {
+            name: name.to_string(),
+            handle: Mutex::new(handle),
+            metrics,
+            health: Arc::new(ShardHealth::new()),
+            spawner: None,
+            join: Mutex::new(None),
+        });
+    }
+
+    /// Register a supervised shard: the factory is invoked once now and
+    /// again by the supervisor after every panic-death.
+    pub fn add_supervised(&mut self, name: &str, spawner: ShardSpawner) {
+        let metrics = Metrics::new();
+        let health = Arc::new(ShardHealth::new());
+        let (handle, join) = spawner(metrics.clone(), Arc::clone(&health));
+        self.shards.push(Shard {
+            name: name.to_string(),
+            handle: Mutex::new(handle),
+            metrics,
+            health,
+            spawner: Some(spawner),
+            join: Mutex::new(Some(join)),
+        });
     }
 
     pub fn engine_names(&self) -> Vec<&str> {
-        self.engines.iter().map(|(n, _)| n.as_str()).collect()
+        self.shards.iter().map(|s| s.name.as_str()).collect()
     }
 
-    pub fn engine(&self, name: &str) -> Option<&EngineHandle> {
-        self.engines.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    pub fn engine(&self, name: &str) -> Option<EngineHandle> {
+        self.shards
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| s.handle.lock().unwrap().clone())
     }
 
-    /// All shards in index order (shard i = i-th `add_engine`).
-    pub fn shards(&self) -> &[(String, EngineHandle)] {
-        &self.engines
+    /// All shards in index order (shard i = i-th registration). Returns
+    /// clones: handles can be swapped underneath by the supervisor, so
+    /// callers get a point-in-time view.
+    pub fn shards(&self) -> Vec<(String, EngineHandle)> {
+        self.shards
+            .iter()
+            .map(|s| (s.name.clone(), s.handle.lock().unwrap().clone()))
+            .collect()
+    }
+
+    /// Per-shard supervision view for `/metrics`:
+    /// (name, watchdog/health state, respawn count).
+    pub fn shard_states(&self) -> Vec<(String, ShardState, u64)> {
+        self.shards
+            .iter()
+            .map(|s| (s.name.clone(), s.health.get(), s.health.restarts.load(Ordering::Relaxed)))
+            .collect()
     }
 
     pub fn shard_count(&self) -> usize {
-        self.engines.len()
+        self.shards.len()
     }
 
     pub fn config(&self) -> &RouterConfig {
@@ -252,6 +355,7 @@ impl Router {
             overflow_dispatched: s.overflow_dispatched.load(Ordering::Relaxed),
             overflow_peak: s.overflow_peak.load(Ordering::Relaxed),
             rejected_saturated: s.rejected_saturated.load(Ordering::Relaxed),
+            shard_restarts: s.shard_restarts.load(Ordering::Relaxed),
             overflow_len: self.overflow.lock().unwrap().len(),
         }
     }
@@ -261,16 +365,25 @@ impl Router {
     }
 
     fn depth(&self, idx: usize) -> usize {
-        self.engines[idx].1.depth()
+        // Shard-lifetime metrics, not the (swappable) handle: depth stays
+        // meaningful across a respawn.
+        self.shards[idx].metrics.depth()
     }
 
+    /// A shard takes no new traffic while at its depth bound *or* while
+    /// dead/restarting — the latter is how affinity-pinned sessions
+    /// re-home through the spillover path during a respawn.
     fn saturated(&self, idx: usize) -> bool {
+        match self.shards[idx].health.get() {
+            ShardState::Dead | ShardState::Restarting => return true,
+            ShardState::Ok | ShardState::Stalled => {}
+        }
         self.cfg.queue_depth > 0 && self.depth(idx) >= self.cfg.queue_depth
     }
 
     /// Policy pick over all shards (the legacy no-affinity path).
     fn pick_index(&self) -> usize {
-        let n = self.engines.len();
+        let n = self.shards.len();
         let mut rr = self.rr.lock().unwrap();
         let start = *rr % n;
         *rr += 1;
@@ -288,7 +401,7 @@ impl Router {
     /// Least-loaded shard strictly below `queue_depth` (rotating
     /// tie-break), or None when every shard is saturated.
     fn least_loaded_open(&self) -> Option<usize> {
-        let n = self.engines.len();
+        let n = self.shards.len();
         let mut rr = self.rr.lock().unwrap();
         let start = *rr % n;
         *rr += 1;
@@ -302,7 +415,7 @@ impl Router {
     /// affinity. Stable across calls and shard-count-independent hashing
     /// (modulo N at the end): the routing contract affinity tests pin.
     pub fn home_shard(&self, session: Option<&str>, prompt: &[i32]) -> usize {
-        let n = self.engines.len().max(1);
+        let n = self.shards.len().max(1);
         let h = match (self.cfg.affinity, session) {
             (Affinity::None, _) => return self.pick_index(),
             (Affinity::Session, Some(s)) => fnv1a(s.as_bytes()),
@@ -321,10 +434,8 @@ impl Router {
     }
 
     fn dispatch(&self, idx: usize, req: Request, events: EventTx) -> Result<(), SubmitError> {
-        self.engines[idx]
-            .1
-            .submit(req, events)
-            .map_err(|e| SubmitError::Unavailable(format!("{e}")))?;
+        let h = self.shards[idx].handle.lock().unwrap().clone();
+        h.submit(req, events).map_err(|e| SubmitError::Unavailable(format!("{e}")))?;
         self.stats.dispatched.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -346,7 +457,7 @@ impl Router {
         if max_new_tokens == 0 {
             return Err(SubmitError::Invalid("max_new_tokens must be >= 1".into()));
         }
-        let n = self.engines.len();
+        let n = self.shards.len();
         if n == 0 {
             return Err(SubmitError::Unavailable("no engines registered".into()));
         }
@@ -358,6 +469,10 @@ impl Router {
             req.priority = p;
         }
         req.stop_token = opts.stop_token;
+        let deadline_ms = opts.deadline_ms.unwrap_or(self.cfg.default_deadline_ms);
+        if deadline_ms > 0 {
+            req.deadline = Some(Instant::now() + Duration::from_millis(deadline_ms));
+        }
         let (tx, rx) = mpsc::channel::<TokenEvent>();
 
         if let Some(s) = opts.shard {
@@ -389,7 +504,7 @@ impl Router {
                 retry_after_ms: self.retry_after_ms(q.len()),
             });
         }
-        q.push_back(Pending { req, events: tx, home });
+        q.push_back(Pending { req, events: tx, home, attempts: 0 });
         let len = q.len() as u64;
         self.stats.overflow_enqueued.fetch_add(1, Ordering::Relaxed);
         self.stats.overflow_peak.fetch_max(len, Ordering::Relaxed);
@@ -398,9 +513,17 @@ impl Router {
         Ok((id, rx))
     }
 
-    /// Crude backpressure hint: deeper backlog, longer suggested retry.
+    /// Load-derived backpressure hint: estimate how long the cluster
+    /// needs to drain what's ahead of a retry, from live depths and the
+    /// slowest shard's observed inter-token p50.
     fn retry_after_ms(&self, backlog: usize) -> u64 {
-        50 * (backlog as u64 + 1)
+        let depth_sum: usize = (0..self.shards.len()).map(|i| self.depth(i)).sum();
+        let tpot_p50_s = self
+            .shards
+            .iter()
+            .map(|s| s.metrics.snapshot().tpot_p50)
+            .fold(0.0f64, f64::max);
+        retry_hint_ms(backlog, depth_sum, tpot_p50_s)
     }
 
     /// Legacy submit: routes via `submit_with` with default options and
@@ -474,15 +597,32 @@ impl Router {
                 q = guard;
                 continue;
             }
-            // FIFO head-of-line: home shard if open, else least-loaded
-            // open shard; no shard open → poll again shortly.
-            let home = q.front().map(|p| p.home).unwrap_or(0);
-            let target = if !self.saturated(home) { Some(home) } else { self.least_loaded_open() };
+            // FIFO head-of-line: prefer the home shard (its prefix cache
+            // is warm for the session), re-checking it a few times with a
+            // capped-doubling backoff before giving up and spilling to
+            // the least-loaded open shard.
+            let (home, attempts) = q.front().map(|p| (p.home, p.attempts)).unwrap_or((0, 0));
+            let target = if !self.saturated(home) {
+                Some(home)
+            } else if attempts < PUMP_HOME_RETRIES {
+                if let Some(p) = q.front_mut() {
+                    p.attempts += 1;
+                }
+                drop(q);
+                std::thread::sleep(Duration::from_millis(pump_backoff_ms(attempts)));
+                q = self.overflow.lock().unwrap();
+                continue;
+            } else {
+                self.least_loaded_open()
+            };
             match target {
                 Some(idx) => {
                     let p = q.pop_front().unwrap();
                     drop(q);
                     self.stats.overflow_dispatched.fetch_add(1, Ordering::Relaxed);
+                    if idx != p.home {
+                        self.stats.spillovers.fetch_add(1, Ordering::Relaxed);
+                    }
                     if let Err(e) = self.dispatch(idx, p.req, p.events.clone()) {
                         // Engine died under us: terminate the stream.
                         let _ = p.events.send(TokenEvent::Finished {
@@ -509,7 +649,140 @@ impl Router {
             });
         }
     }
+
+    /// Spawn the shard supervisor: a background thread that watches every
+    /// supervised shard's health and respawns dead ones under bounded
+    /// exponential backoff. Call [`Router::stop_supervisor`] before
+    /// tearing the router down (otherwise a deliberately drained shard
+    /// is left alone — normal exit keeps health `Ok` — but the thread
+    /// itself never stops).
+    pub fn spawn_supervisor(self: &Arc<Self>) -> std::thread::JoinHandle<()> {
+        let r = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("kvq-router-supervisor".into())
+            .spawn(move || r.supervisor_loop())
+            .expect("spawn router supervisor thread")
+    }
+
+    pub fn stop_supervisor(&self) {
+        self.supervisor_stop.store(true, Ordering::Relaxed);
+    }
+
+    fn supervisor_loop(&self) {
+        struct RespawnState {
+            attempt: u32,
+            due: Option<Instant>,
+            last_respawn: Option<Instant>,
+        }
+        let mut state: Vec<RespawnState> = self
+            .shards
+            .iter()
+            .map(|_| RespawnState { attempt: 0, due: None, last_respawn: None })
+            .collect();
+        // Fixed seed: jitter decorrelates simultaneous respawns without
+        // making supervision schedules nondeterministic across runs.
+        let mut rng = crate::util::rng::Rng::new(0x5AFE_C0DE);
+        while !self.supervisor_stop.load(Ordering::Relaxed) {
+            for (i, shard) in self.shards.iter().enumerate() {
+                if shard.spawner.is_none() {
+                    continue;
+                }
+                let st = &mut state[i];
+                match shard.health.get() {
+                    ShardState::Dead => {
+                        let now = Instant::now();
+                        match st.due {
+                            None => {
+                                let backoff = RESPAWN_BASE_MS
+                                    .checked_shl(st.attempt.min(8))
+                                    .unwrap_or(RESPAWN_CAP_MS)
+                                    .min(RESPAWN_CAP_MS);
+                                let wait = backoff + rng.below(backoff / 4 + 1);
+                                st.due = Some(now + Duration::from_millis(wait));
+                                crate::warn!(
+                                    "shard {} dead; respawning in {}ms (attempt {})",
+                                    shard.name,
+                                    wait,
+                                    st.attempt + 1
+                                );
+                            }
+                            Some(due) if now >= due => {
+                                st.due = None;
+                                st.attempt = st.attempt.saturating_add(1);
+                                st.last_respawn = Some(now);
+                                self.respawn(shard);
+                            }
+                            Some(_) => {}
+                        }
+                    }
+                    ShardState::Ok => {
+                        // Healthy for a while after a respawn: reset the
+                        // backoff (a fresh engine flips to Ok instantly,
+                        // so a crash loop must keep escalating — only
+                        // sustained health earns a reset).
+                        let settled = match st.last_respawn {
+                            Some(t) => t.elapsed() >= Duration::from_secs(1),
+                            None => true,
+                        };
+                        if st.attempt > 0 && settled {
+                            st.attempt = 0;
+                        }
+                    }
+                    ShardState::Stalled | ShardState::Restarting => {}
+                }
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn respawn(&self, shard: &Shard) {
+        shard.health.set(ShardState::Restarting);
+        let spawner = shard.spawner.as_ref().expect("respawn requires a spawner");
+        // Same Metrics and ShardHealth as every prior incarnation: depth
+        // and restart accounting survive the swap. The factory re-runs
+        // snapshot restore if the engine config carries a snapshot path.
+        let (handle, join) = spawner(shard.metrics.clone(), Arc::clone(&shard.health));
+        *shard.handle.lock().unwrap() = handle;
+        if let Some(old) = shard.join.lock().unwrap().replace(join) {
+            // The dead incarnation already unwound; join returns fast.
+            let _ = old.join();
+        }
+        shard.health.restarts.fetch_add(1, Ordering::Relaxed);
+        self.stats.shard_restarts.fetch_add(1, Ordering::Relaxed);
+        crate::info!(
+            "shard {} respawned (restart #{})",
+            shard.name,
+            shard.health.restarts.load(Ordering::Relaxed)
+        );
+    }
 }
+
+/// Home-shard re-checks before the pump spills a parked request.
+const PUMP_HOME_RETRIES: u32 = 4;
+
+/// Capped-doubling wait between the pump's home-shard re-checks:
+/// 1, 2, 4, 8, 16 ms — a busy home shard delays a parked request by at
+/// most ~31ms total before it spills to another shard.
+fn pump_backoff_ms(attempt: u32) -> u64 {
+    1u64 << attempt.min(4)
+}
+
+/// Load-derived retry hint for `SubmitError::Saturated`: estimated time
+/// to drain `backlog` parked submissions plus `depth_sum` in-flight
+/// requests, costing each ~[`RETRY_STEPS_PER_REQUEST`] decode steps at
+/// the observed inter-token p50 (50ms assumed before any token has been
+/// timed). Clamped to [10ms, 30s]: never zero (clients must not
+/// busy-spin), never absurd.
+fn retry_hint_ms(backlog: usize, depth_sum: usize, tpot_p50_s: f64) -> u64 {
+    const FALLBACK_TPOT_S: f64 = 0.05;
+    let per_token_s = if tpot_p50_s > 0.0 { tpot_p50_s } else { FALLBACK_TPOT_S };
+    let outstanding = (backlog + depth_sum) as f64;
+    let est_ms = outstanding * RETRY_STEPS_PER_REQUEST * per_token_s * 1000.0;
+    (est_ms as u64).clamp(10, 30_000)
+}
+
+/// Decode steps a queued request is assumed to cost in the retry hint.
+const RETRY_STEPS_PER_REQUEST: f64 = 8.0;
 
 /// FNV-1a over bytes (session keys).
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -573,7 +846,45 @@ mod tests {
         assert_eq!(Affinity::parse("sticky"), None);
     }
 
+    #[test]
+    fn retry_hint_scales_with_load_and_stays_bounded() {
+        // Never zero, even with nothing outstanding and no tpot sample:
+        // clients must not busy-spin on a Saturated response.
+        assert!(retry_hint_ms(0, 0, 0.0) >= 10);
+        // Monotone in backlog and in in-flight depth.
+        assert!(retry_hint_ms(10, 0, 0.05) > retry_hint_ms(1, 0, 0.05));
+        assert!(retry_hint_ms(4, 40, 0.05) > retry_hint_ms(4, 4, 0.05));
+        // Slower shards (higher observed tpot) stretch the hint.
+        assert!(retry_hint_ms(4, 4, 0.2) > retry_hint_ms(4, 4, 0.01));
+        // Hard cap at 30s regardless of load.
+        assert_eq!(retry_hint_ms(usize::MAX / 2, 0, 100.0), 30_000);
+    }
+
+    #[test]
+    fn pump_backoff_doubles_then_caps() {
+        assert_eq!(pump_backoff_ms(0), 1);
+        assert_eq!(pump_backoff_ms(1), 2);
+        assert_eq!(pump_backoff_ms(2), 4);
+        assert_eq!(pump_backoff_ms(3), 8);
+        assert_eq!(pump_backoff_ms(4), 16);
+        assert_eq!(pump_backoff_ms(31), 16, "capped, no overflow");
+        // Worst-case home-shard dwell before spilling stays small.
+        let total: u64 = (0..PUMP_HOME_RETRIES).map(pump_backoff_ms).sum();
+        assert!(total <= 31);
+    }
+
+    #[test]
+    fn default_deadline_config_round_trips() {
+        let cfg = RouterConfig { default_deadline_ms: 250, ..Default::default() };
+        let r = Router::with_config(cfg);
+        assert_eq!(r.config().default_deadline_ms, 250);
+        // Default config stamps no deadline.
+        assert_eq!(RouterConfig::default().default_deadline_ms, 0);
+    }
+
     // Sharded dispatch, spillover, overflow, and determinism are
     // exercised with live engines in rust/tests/routing.rs; round-robin
-    // and least-loaded dispatch in rust/tests/serving_integration.rs.
+    // and least-loaded dispatch in rust/tests/serving_integration.rs;
+    // supervised respawn + typed shard-failure streams in
+    // rust/tests/chaos.rs.
 }

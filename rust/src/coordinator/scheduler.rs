@@ -34,6 +34,12 @@ pub struct Running {
     /// Monotone admission stamp (victim tie-break: highest = most
     /// recently admitted; refreshed on readmission).
     pub admitted_seq: u64,
+    /// Last time this stream made token progress (prefill or decode).
+    /// The watchdog cancels streams stuck past the stall timeout.
+    pub last_progress: std::time::Instant,
+    /// Watchdog escalation state: a stalled stream is logged once before
+    /// cancellation.
+    pub stall_warned: bool,
     pub events: super::request::EventTx,
 }
 
@@ -93,6 +99,29 @@ impl Scheduler {
         [Priority::Interactive, Priority::Normal, Priority::Batch]
             .into_iter()
             .flat_map(|class| self.waiting[class as usize].iter().map(|(req, _)| req))
+    }
+
+    /// Remove and return every waiting request whose deadline has passed
+    /// (relative order within each class is preserved). The engine
+    /// cancels these before planning a step — an expired request must
+    /// never reach prefill.
+    pub fn take_expired_waiting(
+        &mut self,
+        now: std::time::Instant,
+    ) -> Vec<(Request, super::request::EventTx)> {
+        let mut expired = Vec::new();
+        for q in &mut self.waiting {
+            let mut keep = VecDeque::with_capacity(q.len());
+            while let Some((req, events)) = q.pop_front() {
+                if req.deadline_expired(now) {
+                    expired.push((req, events));
+                } else {
+                    keep.push_back((req, events));
+                }
+            }
+            *q = keep;
+        }
+        expired
     }
 
     /// Pop the request returned by `peek_waiting`.
@@ -166,6 +195,8 @@ mod tests {
             rng: crate::util::rng::Rng::new(id),
             first_token_at: None,
             admitted_seq: s.next_admission_stamp(),
+            last_progress: std::time::Instant::now(),
+            stall_warned: false,
             events: tx,
         }
     }
@@ -235,6 +266,28 @@ mod tests {
         assert_eq!(s.select_victim(&[4, 2]), Some(3), "then normal");
         assert_eq!(s.select_victim(&[4, 2, 3]), Some(1));
         assert_eq!(s.select_victim(&[4, 2, 3, 1]), None);
+    }
+
+    #[test]
+    fn expired_waiting_requests_are_drained() {
+        let mut s = Scheduler::new();
+        let (mut r1, t1) = req(1, Priority::Normal);
+        let (r2, t2) = req(2, Priority::Normal);
+        let (mut r3, t3) = req(3, Priority::Interactive);
+        let now = std::time::Instant::now();
+        r1.deadline = Some(now);
+        r3.deadline = Some(now);
+        s.enqueue(r1, t1);
+        s.enqueue(r2, t2);
+        s.enqueue(r3, t3);
+        let expired: Vec<_> =
+            s.take_expired_waiting(now).into_iter().map(|(r, _)| r.id).collect();
+        assert_eq!(expired.len(), 2);
+        assert!(expired.contains(&1) && expired.contains(&3));
+        assert_eq!(s.waiting_len(), 1);
+        assert_eq!(s.pop_waiting().unwrap().0.id, 2);
+        // Idempotent: nothing left to expire.
+        assert!(s.take_expired_waiting(std::time::Instant::now()).is_empty());
     }
 
     #[test]

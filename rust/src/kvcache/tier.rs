@@ -304,7 +304,8 @@ impl ColdStore {
 // Tier counters
 // ---------------------------------------------------------------------------
 
-/// Point-in-time tier counters, surfaced in `GET /metrics` (schema v4).
+/// Point-in-time tier counters, surfaced in `GET /metrics` (schema v4;
+/// `snapshot_rejected` / `decompress_errors` added in v5).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct TierStats {
     /// Prompts demoted hot → cold.
@@ -325,6 +326,14 @@ pub struct TierStats {
     pub preemptions_avoided: u64,
     /// Entries restored from an on-disk snapshot at startup.
     pub snapshot_loaded: u64,
+    /// Snapshot images rejected (corrupt, truncated, or mismatched
+    /// geometry/policy) — warn-and-skip, never fatal.
+    pub snapshot_rejected: u64,
+    /// Cold entries dropped because decompression failed or the
+    /// decompressed block violated the declared slab geometry. The
+    /// affected request falls back to backend prefill (bit-identical by
+    /// the determinism contract); the bad entry never serves again.
+    pub decompress_errors: u64,
     /// Current cold entries / blocks / bytes.
     pub cold_entries: u64,
     pub cold_blocks: u64,
@@ -372,6 +381,8 @@ pub struct ColdTier {
     cold_evictions: u64,
     preemptions_avoided: u64,
     snapshot_loaded: u64,
+    snapshot_rejected: u64,
+    decompress_errors: u64,
     demote_secs: f64,
     promote_secs: f64,
     decompress_secs: f64,
@@ -424,6 +435,8 @@ impl ColdTier {
             cold_evictions: 0,
             preemptions_avoided: 0,
             snapshot_loaded: 0,
+            snapshot_rejected: 0,
+            decompress_errors: 0,
             demote_secs: 0.0,
             promote_secs: 0.0,
             decompress_secs: 0.0,
@@ -492,6 +505,11 @@ impl ColdTier {
         if !self.enabled() {
             return 0;
         }
+        // Injected demotion failure: skip this reclaim round — the engine
+        // falls back to trie eviction / preemption, which stays correct.
+        if crate::util::fault::hit("tier_demote").is_err() {
+            return 0;
+        }
         let t0 = Instant::now();
         let mut demoted = 0;
         while mgr.free_bytes() < want_free {
@@ -535,7 +553,11 @@ impl ColdTier {
     /// original width class, and adopt the result as a live sequence
     /// whose blocks/scales are bit-identical to the demoted ones. The
     /// entry leaves the store on success and is restored untouched if
-    /// the pool can't hold it.
+    /// the pool can't hold it. An entry whose payload fails to
+    /// decompress — or decompresses to the wrong slab width — is
+    /// **dropped** (counted in [`TierStats::decompress_errors`]) so the
+    /// request falls back to backend prefill instead of retrying a
+    /// poisoned entry forever.
     pub fn promote(
         &mut self,
         mgr: &mut KvCacheManager,
@@ -544,7 +566,12 @@ impl ColdTier {
         if !self.enabled() {
             return None;
         }
-        let entry = self.store.lock().unwrap().remove(prompt)?;
+        // Injected promotion failure: the entry stays cold and the
+        // request is served by backend prefill.
+        if crate::util::fault::hit("tier_promote").is_err() {
+            return None;
+        }
+        let mut entry = self.store.lock().unwrap().remove(prompt)?;
         let staged = self.ready.lock().unwrap().remove(prompt);
         let t0 = Instant::now();
         let cap = match staged {
@@ -553,11 +580,28 @@ impl ColdTier {
                 cap
             }
             None => {
+                // Injected corruption flips compressed payload bytes —
+                // the decode path below must reject them, never panic.
+                if let Some(block) = entry
+                    .blocks
+                    .iter_mut()
+                    .flat_map(|pair| pair.iter_mut())
+                    .flat_map(|stream| stream.iter_mut())
+                    .next()
+                {
+                    crate::util::fault::corrupt("tier_decompress", block);
+                }
                 let td = Instant::now();
-                let cap = match entry.decompress(prompt.to_vec()) {
+                let cap = crate::util::fault::hit("tier_decompress")
+                    .and_then(|()| entry.decompress(prompt.to_vec()));
+                let cap = match cap {
                     Ok(c) => c,
-                    Err(_) => {
-                        self.store.lock().unwrap().insert(prompt.to_vec(), entry);
+                    Err(e) => {
+                        self.decompress_errors += 1;
+                        crate::warn!(
+                            "dropping cold entry ({} tokens): {e}",
+                            prompt.len()
+                        );
                         return None;
                     }
                 };
@@ -566,7 +610,27 @@ impl ColdTier {
                 cap
             }
         };
+        // Validate decompressed blocks against the declared slab
+        // geometry before touching the pool: a lying `raw_len` header
+        // must become a typed drop, not a restore-time surprise.
         let layers = mgr.config().layers;
+        for layer in 0..layers {
+            for kv in 0..2 {
+                let want = mgr.stream_layout(layer, kv).block_bytes;
+                for bytes in &cap.payloads[layer][kv] {
+                    if bytes.len() != want {
+                        self.decompress_errors += 1;
+                        crate::warn!(
+                            "dropping cold entry ({} tokens): block is {} of {want} bytes \
+                             for stream ({layer}, {kv})",
+                            prompt.len(),
+                            bytes.len()
+                        );
+                        return None;
+                    }
+                }
+            }
+        }
         let mut tables: Vec<[Vec<BlockId>; 2]> = vec![[Vec::new(), Vec::new()]; layers];
         let mut ok = true;
         'restore: for layer in 0..layers {
@@ -616,6 +680,8 @@ impl ColdTier {
             cold_evictions: self.cold_evictions,
             preemptions_avoided: self.preemptions_avoided,
             snapshot_loaded: self.snapshot_loaded,
+            snapshot_rejected: self.snapshot_rejected,
+            decompress_errors: self.decompress_errors,
             cold_entries: store.entries.len() as u64,
             cold_blocks: store.blocks as u64,
             cold_raw_bytes: store.raw_bytes(),
@@ -693,14 +759,20 @@ impl ColdTier {
         if !self.enabled() || !path.exists() {
             return Ok(0);
         }
-        let buf = std::fs::read(path)
+        let mut buf = std::fs::read(path)
             .with_context(|| format!("read snapshot {}", path.display()))?;
-        match self.parse_snapshot(&buf, mgr) {
+        // Injected corruption flips image bytes; the checksum below must
+        // reject them (counted, warned, never fatal).
+        crate::util::fault::corrupt("snapshot_load", &mut buf);
+        let parsed = crate::util::fault::hit("snapshot_load")
+            .and_then(|()| self.parse_snapshot(&buf, mgr));
+        match parsed {
             Ok(n) => {
                 self.snapshot_loaded += n;
                 Ok(n)
             }
             Err(e) => {
+                self.snapshot_rejected += 1;
                 eprintln!("warning: ignoring snapshot {}: {e}", path.display());
                 Ok(0)
             }
@@ -1120,6 +1192,7 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let mut tier3 = ColdTier::new(64, 0);
         assert_eq!(tier3.load_snapshot(&path, &mgr2).unwrap(), 0);
+        assert_eq!(tier3.stats().snapshot_rejected, 1);
 
         // Policy mismatch: a valid file written under int8 must not load
         // into an int4 cache.
@@ -1129,10 +1202,164 @@ mod tests {
         let mgr4 = KvCacheManager::new(c, QuantPolicy::uniform(Precision::Int4, c.layers, c.heads));
         let mut tier4 = ColdTier::new(64, 0);
         assert_eq!(tier4.load_snapshot(&path, &mgr4).unwrap(), 0);
+        assert_eq!(tier4.stats().snapshot_rejected, 1);
 
-        // Missing file is silent.
+        // Missing file is silent (and not a rejection).
         let _ = std::fs::remove_file(&path);
         let mut tier5 = ColdTier::new(64, 0);
         assert_eq!(tier5.load_snapshot(&path, &mgr2).unwrap(), 0);
+        assert_eq!(tier5.stats().snapshot_rejected, 0);
+    }
+
+    #[test]
+    fn truncated_snapshot_is_rejected_with_counter() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("kvq_snap_trunc_{}.bin", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        cache_prompt(&mut pc, &mut mgr, 10, 3);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+        assert_eq!(tier.save_snapshot(&path, &mgr).unwrap(), 1);
+
+        // Every truncation point must warn-and-skip, never panic or err.
+        let bytes = std::fs::read(&path).unwrap();
+        for keep in [0usize, 4, SNAP_MAGIC.len(), bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            let mut t = ColdTier::new(64, 0);
+            assert_eq!(t.load_snapshot(&path, &mgr).unwrap(), 0, "keep={keep}");
+            assert_eq!(t.stats().snapshot_rejected, 1, "keep={keep}");
+            assert_eq!(t.cold_entries(), 0);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn undecompressable_entry_is_dropped_not_retried() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 4);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+
+        // Truncate one stored compressed block below its header: the
+        // promotion must fail typed, drop the entry, and leave the pool
+        // untouched — a poisoned entry must not be retried forever.
+        tier.store
+            .lock()
+            .unwrap()
+            .entries
+            .get_mut(&toks)
+            .unwrap()
+            .blocks[0][0][0]
+            .truncate(BLOCK_HEADER - 1);
+        let free_before = mgr.free_bytes();
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert!(!tier.contains(&toks), "poisoned entry must be dropped");
+        assert_eq!(tier.stats().decompress_errors, 1);
+        assert_eq!(mgr.free_bytes(), free_before);
+        mgr.assert_refcounts_consistent();
+        // Gone means gone: the retry is a plain miss.
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert_eq!(tier.stats().decompress_errors, 1);
+    }
+
+    #[test]
+    fn wrong_geometry_block_is_dropped_before_restore() {
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 6);
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+
+        // A block that decompresses fine but to the wrong slab width (a
+        // lying raw_len header) must be a typed drop, not a restore-time
+        // surprise.
+        let bogus = compress_block(&vec![0u8; 3], 1);
+        tier.store.lock().unwrap().entries.get_mut(&toks).unwrap().blocks[0][1][0] = bogus;
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert!(!tier.contains(&toks));
+        assert_eq!(tier.stats().decompress_errors, 1);
+        mgr.assert_refcounts_consistent();
+    }
+
+    #[test]
+    fn fault_sites_gate_demote_and_promote() {
+        let _g = crate::util::fault::install(
+            r#"[{"site":"tier_demote","action":"error","nth":1,"count":1},
+                {"site":"tier_promote","action":"error","nth":1,"count":1}]"#,
+        )
+        .unwrap();
+        let mut mgr = manager(64);
+        let mut pc = PrefixCache::new(64);
+        let mut tier = ColdTier::new(64, 0);
+        let toks = cache_prompt(&mut pc, &mut mgr, 8, 9);
+
+        // First demote_for hits the injected error: nothing demoted, the
+        // trie still owns the prompt.
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 0);
+        assert!(pc.pinned_blocks() > 0);
+        // Budget spent: the retry succeeds.
+        assert_eq!(tier.demote_for(&mut pc, &mut mgr, u64::MAX), 1);
+
+        // First promote hits the injected error: entry stays cold.
+        assert!(tier.promote(&mut mgr, &toks).is_none());
+        assert!(tier.contains(&toks), "failed promote must keep the entry");
+        assert_eq!(tier.stats().decompress_errors, 0);
+        let (seq, _) = tier.promote(&mut mgr, &toks).expect("retry promotes");
+        mgr.free(seq);
+        mgr.assert_refcounts_consistent();
+    }
+
+    #[test]
+    fn prop_mutated_compressed_blocks_never_panic() {
+        use crate::util::prop::{check, ensure};
+        // Satellite of the decompress-hardening work: arbitrary byte
+        // mutations and truncations of a compressed block must yield
+        // either a typed error or a successful decode — never a panic or
+        // an out-of-bounds slice.
+        check("mutated compressed block decompress is total", 300, |g| {
+            let len = g.usize_in(1..2048);
+            let stride = *g.choice(&[1usize, 3, 16, 64, 257]);
+            let mut data = vec![0u8; len];
+            for b in data.iter_mut() {
+                *b = g.rng.below(256) as u8;
+            }
+            if g.bool() {
+                // Compressible shape: long runs survive RLE.
+                let v = g.rng.below(256) as u8;
+                data.fill(v);
+            }
+            let mut comp = compress_block(&data, stride);
+            ensure(
+                decompress_block(&comp).map_err(|e| e.to_string())? == data,
+                "clean round trip",
+            )?;
+            // Mutate: flip a few bytes, maybe truncate, maybe extend.
+            for _ in 0..g.usize_in(1..6) {
+                let i = g.rng.below(comp.len() as u64) as usize;
+                comp[i] ^= (1 + g.rng.below(255)) as u8;
+            }
+            match g.rng.below(3) {
+                0 => comp.truncate(g.rng.below(comp.len() as u64 + 1) as usize),
+                1 => {
+                    let n = comp.len() + g.usize_in(1..32);
+                    comp.resize(n, 0xAB);
+                }
+                _ => {}
+            }
+            // Must not panic; a decode that still succeeds must stay in
+            // bounds of what the header declared.
+            if let Ok(out) = decompress_block(&comp) {
+                if comp.len() >= BLOCK_HEADER {
+                    let raw_len =
+                        u32::from_le_bytes(comp[1..5].try_into().unwrap()) as usize;
+                    ensure(out.len() == raw_len, "decoded length matches header")?;
+                }
+            }
+            Ok(())
+        });
     }
 }

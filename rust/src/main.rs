@@ -11,7 +11,7 @@
 use anyhow::{bail, Result};
 use kvq::config::{Backend, ServeConfig};
 use kvq::coordinator::engine;
-use kvq::coordinator::router::{RoutePolicy, Router};
+use kvq::coordinator::router::{RoutePolicy, Router, ShardSpawner};
 use kvq::model::runner::{CpuBackend, PjrtBackend};
 use kvq::model::weights::Weights;
 use kvq::model::{ByteTokenizer, ModelSpec};
@@ -93,6 +93,18 @@ COMMANDS:
                then to the router overflow queue)
              --overflow-depth N (router overflow capacity; beyond it,
                submissions get a typed 503; default 256)
+             --default-deadline-ms N (default per-request deadline for
+               requests that don't carry their own deadline_ms; expired
+               streams finish with a typed 408 deadline_exceeded. 0 =
+               no default)
+             --stall-timeout-ms N (watchdog: a stream with no token
+               progress for N ms is flagged, then cancelled with a
+               typed stall error at 2N; 0 = off)
+             --fault-spec json|file (deterministic fault injection for
+               chaos testing, same rule grammar as the KVQ_FAULT env
+               var; see util::fault. Injected shard panics are survived:
+               the supervisor fails in-flight streams typed, respawns
+               the shard, and keeps serving)
              --config file.json (flags override file)
   generate   one-shot generation
              --prompt 'text' --max-new 32 --temperature 0 --model kvq-3m
@@ -144,6 +156,45 @@ fn spawn_engine(
     }
 }
 
+/// Reusable shard spawner for supervised serving: the router calls it
+/// once at startup and again for every respawn after a shard death, so
+/// it rebuilds backend state from cloned config on each incarnation
+/// (including reloading `--snapshot-path` prefix snapshots, which
+/// restores the warm prefix cache the dead incarnation persisted).
+fn shard_spawner(cfg: &ServeConfig) -> ShardSpawner {
+    let ecfg = cfg.engine_config();
+    let model = cfg.model.clone();
+    let dir = cfg.artifact_dir.clone();
+    let seed = cfg.weight_seed;
+    let kernel = cfg.decode_kernel;
+    let backend = cfg.backend;
+    Box::new(move |metrics, health| {
+        let (model, dir) = (model.clone(), dir.clone());
+        match backend {
+            Backend::Pjrt => engine::spawn_with(
+                ecfg.clone(),
+                move || {
+                    let rt = Rc::new(Runtime::new(&dir)?);
+                    Ok(Box::new(PjrtBackend::new(rt, &model, seed, kernel)?)
+                        as Box<dyn kvq::model::LmBackend>)
+                },
+                metrics,
+                health,
+            ),
+            Backend::CpuRef => engine::spawn_with(
+                ecfg.clone(),
+                move || {
+                    let spec = load_spec(&dir, &model)?;
+                    let w = Weights::synthetic(&spec, seed);
+                    Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn kvq::model::LmBackend>)
+                },
+                metrics,
+                health,
+            ),
+        }
+    })
+}
+
 /// Model spec from the manifest (so CPU mode matches artifact geometry),
 /// falling back to test_tiny when artifacts are absent.
 fn load_spec(dir: &str, model: &str) -> Result<ModelSpec> {
@@ -163,21 +214,26 @@ fn load_spec(dir: &str, model: &str) -> Result<ModelSpec> {
 fn serve(args: Args) -> Result<()> {
     let cfg = build_serve_config(&args)?;
     args.finish().map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(spec) = &cfg.fault_spec {
+        kvq::util::fault::install_spec(spec)?;
+        println!("fault injection armed: {spec}");
+    }
     // One engine per shard, each owning its own block pool, prefix
     // cache, and thread; the router front door spreads sessions across
-    // them and parks overflow for the pump thread.
+    // them, parks overflow for the pump thread, and respawns any shard
+    // whose engine thread dies (supervisor thread).
     let mut router = Router::with_config(cfg.router_config());
     for i in 0..cfg.shards.max(1) {
-        let (handle, _join) = spawn_engine(&cfg);
         let name = if cfg.shards <= 1 {
             cfg.quant_policy.engine_label()
         } else {
             format!("shard{i}")
         };
-        router.add_engine(&name, handle);
+        router.add_supervised(&name, shard_spawner(&cfg));
     }
     let router = Arc::new(router);
     let _pump = router.spawn_pump();
+    let _supervisor = router.spawn_supervisor();
     let threads = kvq::parallel::resolve(cfg.parallelism);
     let server = HttpServer::bind(cfg.port)?;
     // Build the /config payload after bind so it reports the actually
@@ -195,6 +251,7 @@ fn serve(args: Args) -> Result<()> {
     );
     let svc = service.clone();
     server.serve(move |req| svc.handle(req));
+    router.stop_supervisor();
     router.stop_pump();
     Ok(())
 }

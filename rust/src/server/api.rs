@@ -17,7 +17,16 @@
 //! `tier_prefetch_{hits,misses}`, timings, compression ratio), and the
 //! `cold_tier_blocks` / `snapshot_path` / `prefetch_depth` knobs on
 //! `GET /config`. Strictly additive over v3 — every v3 key keeps its
-//! meaning (pinned by the v3→v4 compat test).
+//! meaning (pinned by the v3→v4 compat test); v5 adds the fault-tolerance
+//! surface — per-shard `watchdog_state` / `shard_restarts` and the
+//! cancellation counters (`deadline_cancels`, `stall_cancels`,
+//! `client_cancels`, `streams_failed`), top-level `shard_restarts` /
+//! `watchdog_state` (worst shard) / `fault_injections`, the tier
+//! hardening counters (`tier_snapshot_rejected`,
+//! `tier_decompress_errors`), router `shard_restarts`, and the
+//! `default_deadline_ms` / `stall_timeout_ms` / `fault_spec` knobs on
+//! `GET /config`. Strictly additive over v4 (pinned by the v4→v5 compat
+//! test).
 
 use crate::config::ServeConfig;
 use crate::coordinator::router::{Router, SubmitError};
@@ -29,7 +38,7 @@ use super::http::HttpResponse;
 use crate::coordinator::request::Priority;
 
 /// Wire-schema version served on every structured GET payload.
-pub const SCHEMA_VERSION: u64 = 4;
+pub const SCHEMA_VERSION: u64 = 5;
 
 /// POST /generate body.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,6 +55,10 @@ pub struct GenerateRequest {
     pub session: Option<String>,
     /// Priority class (`batch|normal|interactive`); None = normal.
     pub priority: Option<Priority>,
+    /// Per-request deadline in milliseconds; expired requests are
+    /// cancelled mid-flight with a 408. `0` explicitly disables the
+    /// server default; absent inherits `--default-deadline-ms`.
+    pub deadline_ms: Option<u64>,
 }
 
 impl GenerateRequest {
@@ -72,6 +85,7 @@ impl GenerateRequest {
             engine: j.get("engine").as_str().map(String::from),
             session: j.get("session").as_str().map(String::from),
             priority,
+            deadline_ms: j.get("deadline_ms").as_usize().map(|ms| ms as u64),
         })
     }
 
@@ -135,6 +149,29 @@ impl ApiError {
             status: 429,
             code: "admission_rejected",
             message: cause.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// 408: the request's deadline expired before generation finished
+    /// (queued past it, or cancelled mid-decode by the engine).
+    pub fn deadline_exceeded(msg: impl Into<String>) -> ApiError {
+        ApiError {
+            status: 408,
+            code: "deadline_exceeded",
+            message: msg.into(),
+            retry_after_ms: None,
+        }
+    }
+
+    /// 503: the request's home shard died mid-flight (its stream was
+    /// failed typed while the supervisor respawns the shard). Safe to
+    /// retry: re-driven requests are byte-identical by construction.
+    pub fn shard_failed(retry_after_ms: u64) -> ApiError {
+        ApiError {
+            status: 503,
+            code: "shard_failed",
+            message: "shard failed mid-request; retry".into(),
             retry_after_ms: Some(retry_after_ms),
         }
     }
@@ -215,6 +252,9 @@ pub fn config_response(cfg: &ServeConfig, port: u16, threads: usize) -> Json {
         ("cold_tier_blocks", cfg.cold_tier_blocks.map_or(Json::Null, |n| n.into())),
         ("snapshot_path", cfg.snapshot_path.as_deref().map_or(Json::Null, Json::from)),
         ("prefetch_depth", cfg.prefetch_depth.into()),
+        ("default_deadline_ms", (cfg.default_deadline_ms as usize).into()),
+        ("stall_timeout_ms", (cfg.stall_timeout_ms as usize).into()),
+        ("fault_spec", cfg.fault_spec.as_deref().map_or(Json::Null, Json::from)),
         ("port", (port as usize).into()),
     ])
 }
@@ -230,12 +270,22 @@ pub fn metrics_response(router: &Router) -> Json {
     let mut shards = Vec::new();
     let mut totals: BTreeMap<String, f64> = BTreeMap::new();
     let mut kernel_isa = String::new();
+    let states = router.shard_states();
+    let mut worst_state = crate::coordinator::engine::ShardState::Ok;
     for (i, (name, handle)) in router.shards().iter().enumerate() {
         let snap = handle.metrics.snapshot();
         let mut j = snap.to_json();
         if let Json::Obj(ref mut o) = j {
             o.insert("engine".into(), Json::Str(name.clone()));
             o.insert("shard".into(), Json::Num(i as f64));
+            if let Some((_, state, restarts)) = states.get(i) {
+                o.insert("watchdog_state".into(), Json::Str(state.name().into()));
+                // Num: sums into the top-level `shard_restarts` total.
+                o.insert("shard_restarts".into(), Json::Num(*restarts as f64));
+                if severity(*state) > severity(worst_state) {
+                    worst_state = *state;
+                }
+            }
         }
         // Every numeric gauge sums into a same-named top-level total;
         // the ISA string stands for all shards (one process, one CPU).
@@ -274,6 +324,7 @@ pub fn metrics_response(router: &Router) -> Json {
         ("overflow_peak", (stats.overflow_peak as usize).into()),
         ("overflow_len", stats.overflow_len.into()),
         ("rejected_saturated", (stats.rejected_saturated as usize).into()),
+        ("shard_restarts", (stats.shard_restarts as usize).into()),
     ]);
     let mut top: BTreeMap<String, Json> =
         totals.into_iter().map(|(k, v)| (k, Json::Num(v))).collect();
@@ -281,10 +332,29 @@ pub fn metrics_response(router: &Router) -> Json {
     top.insert("shards".into(), Json::Arr(shards.clone()));
     top.insert("engines".into(), Json::Arr(shards));
     top.insert("router".into(), router_j);
+    // Worst shard health (dead > restarting > stalled > ok) and the
+    // process-wide fault-injection gauge (0 when no spec is armed).
+    top.insert("watchdog_state".into(), Json::Str(worst_state.name().into()));
+    top.insert("fault_injections".into(), Json::Num(crate::util::fault::injections() as f64));
+    // A shardless router still serves the key (totals only sum what the
+    // shard loop inserted).
+    top.entry("shard_restarts".into()).or_insert(Json::Num(0.0));
     if !kernel_isa.is_empty() {
         top.insert("kernel_isa".into(), Json::Str(kernel_isa));
     }
     Json::Obj(top)
+}
+
+/// Health-state severity for the worst-of rollup: a dead shard outranks
+/// one mid-restart, which outranks a stalled-but-serving one.
+fn severity(s: crate::coordinator::engine::ShardState) -> u8 {
+    use crate::coordinator::engine::ShardState;
+    match s {
+        ShardState::Ok => 0,
+        ShardState::Stalled => 1,
+        ShardState::Restarting => 2,
+        ShardState::Dead => 3,
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +370,7 @@ mod tests {
         assert!(r.engine.is_none());
         assert!(r.session.is_none());
         assert!(r.priority.is_none());
+        assert!(r.deadline_ms.is_none());
     }
 
     #[test]
@@ -307,7 +378,8 @@ mod tests {
         let r = GenerateRequest::parse(
             r#"{"prompt":"x","max_new_tokens":4,"temperature":0.7,
                 "top_k":40,"seed":9,"engine":"fp32",
-                "session":"user-17","priority":"interactive"}"#,
+                "session":"user-17","priority":"interactive",
+                "deadline_ms":1500}"#,
         )
         .unwrap();
         assert_eq!(r.max_new_tokens, 4);
@@ -316,6 +388,10 @@ mod tests {
         assert_eq!(r.session.as_deref(), Some("user-17"));
         assert_eq!(r.priority, Some(Priority::Interactive));
         assert_eq!(r.sampling().seed, 9);
+        assert_eq!(r.deadline_ms, Some(1500));
+        // Explicit 0 = "no deadline", distinct from absent = inherit.
+        let r0 = GenerateRequest::parse(r#"{"prompt":"x","deadline_ms":0}"#).unwrap();
+        assert_eq!(r0.deadline_ms, Some(0));
     }
 
     #[test]
@@ -364,6 +440,10 @@ mod tests {
         assert!(matches!(j.get("cold_tier_blocks"), Json::Null));
         assert!(matches!(j.get("snapshot_path"), Json::Null));
         assert_eq!(j.get("prefetch_depth").as_usize(), Some(2));
+        // v5 fault-tolerance knobs: defaults are off/null.
+        assert_eq!(j.get("default_deadline_ms").as_usize(), Some(0));
+        assert_eq!(j.get("stall_timeout_ms").as_usize(), Some(0));
+        assert!(matches!(j.get("fault_spec"), Json::Null));
         let cfg2 = ServeConfig::builder()
             .set("cold_tier_blocks", &Json::Num(64.0))
             .unwrap()
@@ -376,12 +456,12 @@ mod tests {
     }
 
     #[test]
-    fn schema_v4_is_additive_over_v3() {
-        // The v4 bump is strictly additive: every v3 metrics key keeps
-        // its name and numeric type, the tier/physical keys ride along.
-        // A v3 consumer reading a v4 payload sees exactly what it saw
-        // before (plus keys it ignores).
-        assert_eq!(SCHEMA_VERSION, 4);
+    fn schema_v5_is_additive_over_v4() {
+        // Every bump is strictly additive: each prior version's metrics
+        // keys keep their names and numeric types; new keys ride along.
+        // A v3 or v4 consumer reading a v5 payload sees exactly what it
+        // saw before (plus keys it ignores).
+        assert_eq!(SCHEMA_VERSION, 5);
         let j = crate::coordinator::metrics::Metrics::new().snapshot().to_json();
         let v3_keys = [
             "uptime_s", "requests_submitted", "requests_finished", "requests_rejected",
@@ -414,6 +494,27 @@ mod tests {
         for k in v4_keys {
             assert!(j.get(k).as_f64().is_some(), "v4 key {k} must be present and numeric");
         }
+        let v5_keys = [
+            "deadline_cancels", "stall_cancels", "client_cancels", "streams_failed",
+            "tier_snapshot_rejected", "tier_decompress_errors",
+        ];
+        for k in v5_keys {
+            assert!(j.get(k).as_f64().is_some(), "v5 key {k} must be present and numeric");
+        }
+    }
+
+    #[test]
+    fn supervision_metrics_are_served() {
+        // Even a shardless router serves the v5 supervision keys: the
+        // worst-of health rollup defaults to "ok", restarts to 0, and the
+        // fault gauge reads the process-wide counter.
+        let router = Router::new(crate::coordinator::router::RoutePolicy::RoundRobin);
+        let j = metrics_response(&router);
+        assert_eq!(j.get("schema_version").as_usize(), Some(5));
+        assert_eq!(j.get("watchdog_state").as_str(), Some("ok"));
+        assert_eq!(j.get("shard_restarts").as_usize(), Some(0));
+        assert!(j.get("fault_injections").as_f64().is_some());
+        assert_eq!(j.get("router").get("shard_restarts").as_usize(), Some(0));
     }
 
     #[test]
@@ -437,6 +538,15 @@ mod tests {
 
         let r = ApiError::not_found("unknown endpoint").to_response();
         assert_eq!(r.status, 404);
+
+        let e = ApiError::deadline_exceeded("deadline expired after 3 tokens");
+        assert_eq!(e.status, 408);
+        assert_eq!(e.body().get("error").get("code").as_str(), Some("deadline_exceeded"));
+
+        let e = ApiError::shard_failed(120);
+        assert_eq!(e.status, 503);
+        assert_eq!(e.code, "shard_failed");
+        assert_eq!(e.retry_after_ms, Some(120));
     }
 
     #[test]

@@ -53,6 +53,7 @@ impl HttpResponse {
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            408 => "Request Timeout",
             429 => "Too Many Requests",
             500 => "Internal Server Error",
             503 => "Service Unavailable",

@@ -12,6 +12,11 @@ use std::sync::Arc;
 /// Suggested client retry delay on a 429 admission rejection.
 const ADMISSION_RETRY_MS: u64 = 250;
 
+/// Suggested client retry delay after a mid-request shard failure — a
+/// little past the supervisor's first respawn backoff, so an immediate
+/// retry usually lands on the respawned (or a surviving) shard.
+const SHARD_FAILED_RETRY_MS: u64 = 100;
+
 /// Shareable service state.
 pub struct KvqService {
     pub router: Arc<Router>,
@@ -67,6 +72,7 @@ impl KvqService {
                     SubmitOptions {
                         session: greq.session.clone(),
                         priority: greq.priority,
+                        deadline_ms: greq.deadline_ms,
                         ..Default::default()
                     },
                 )
@@ -83,6 +89,25 @@ impl KvqService {
             FinishReason::CapacityExhausted => "capacity".to_string(),
             FinishReason::Rejected(c) => {
                 return ApiError::admission_rejected(c.clone(), ADMISSION_RETRY_MS).to_response()
+            }
+            FinishReason::DeadlineExceeded => {
+                return ApiError::deadline_exceeded(format!(
+                    "deadline expired after {} token(s)",
+                    tokens.len()
+                ))
+                .to_response()
+            }
+            FinishReason::ShardFailed => {
+                return ApiError::shard_failed(SHARD_FAILED_RETRY_MS).to_response()
+            }
+            FinishReason::Stalled => {
+                return ApiError::internal("stream stalled past the watchdog timeout")
+                    .to_response()
+            }
+            // The engine saw our stream drop; for this synchronous path
+            // that only happens on teardown races — report it honestly.
+            FinishReason::Cancelled => {
+                return ApiError::internal("stream cancelled").to_response()
             }
             FinishReason::Error(c) => return ApiError::internal(c.clone()).to_response(),
         };
@@ -274,6 +299,7 @@ mod tests {
             affinity: Affinity::Session,
             queue_depth: 4,
             overflow_depth: 8,
+            default_deadline_ms: 0,
         });
         router.add_engine("shard0", h0.clone());
         router.add_engine("shard1", h1.clone());

@@ -1,0 +1,350 @@
+//! Deterministic fault injection for chaos testing.
+//!
+//! A fault spec is a JSON array of rules, installed either from the
+//! `KVQ_FAULT` env var / `--fault-spec` flag (inline JSON or a file
+//! path) or programmatically in tests — [`install`] for same-thread
+//! sites, [`install_global`] when the sites run on spawned engine
+//! threads:
+//!
+//! ```json
+//! [{"site":"decode_wave","action":"panic","nth":3,"count":1}]
+//! ```
+//!
+//! * `site`   — named instrumentation point. Current sites: `prefill`,
+//!   `decode_wave`, `tier_demote`, `tier_promote`, `tier_decompress`,
+//!   `snapshot_load`.
+//! * `action` — `panic` (kills the engine thread; the supervisor path),
+//!   `error` (typed failure), `delay` (sleep `delay_ms`, default 50 —
+//!   the deadline/watchdog path), or `corrupt` (deterministically flip
+//!   bytes at [`corrupt`] call sites).
+//! * `nth`    — fire on the Nth hit of the site (1-based; default 1).
+//! * `count`  — how many consecutive hits fire once armed (default 1;
+//!   0 = unlimited).
+//!
+//! Everything is counter-driven — no clocks, no randomness — so a given
+//! spec against a given workload fires at exactly the same operation
+//! every run. That is what lets `tests/chaos.rs` re-drive failed
+//! requests and demand byte-identical tokens.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    Panic,
+    Error,
+    Delay,
+    Corrupt,
+}
+
+impl FaultAction {
+    fn parse(s: &str) -> Option<FaultAction> {
+        Some(match s {
+            "panic" => FaultAction::Panic,
+            "error" => FaultAction::Error,
+            "delay" => FaultAction::Delay,
+            "corrupt" => FaultAction::Corrupt,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    site: String,
+    action: FaultAction,
+    /// Fire on the nth hit (1-based).
+    nth: u64,
+    /// Consecutive hits that fire once armed (0 = unlimited).
+    count: u64,
+    delay_ms: u64,
+}
+
+#[derive(Debug)]
+struct RuleState {
+    rule: Rule,
+    hits: u64,
+    fired: u64,
+}
+
+impl RuleState {
+    /// Counter bookkeeping for one hit of this rule's site: returns the
+    /// action to apply, if the rule fires on this hit.
+    fn on_hit(&mut self) -> Option<FaultAction> {
+        self.hits += 1;
+        if self.hits < self.rule.nth {
+            return None;
+        }
+        if self.rule.count != 0 && self.fired >= self.rule.count {
+            return None;
+        }
+        self.fired += 1;
+        Some(self.rule.action)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Plan {
+    rules: Vec<RuleState>,
+    /// When set, only hits from this thread fire (test-scoped plans from
+    /// [`install`]). Serving-path plans (`KVQ_FAULT` / `--fault-spec` /
+    /// [`install_global`]) fire process-wide — engine threads included.
+    thread: Option<std::thread::ThreadId>,
+}
+
+/// Active plan. `None` until something installs a spec; cleared when a
+/// test's [`FaultGuard`] drops.
+static PLAN: Mutex<Option<Plan>> = Mutex::new(None);
+/// Total injected faults across all sites (the `fault_injections` gauge).
+static INJECTIONS: AtomicU64 = AtomicU64::new(0);
+/// Serializes programmatic installs so concurrent chaos tests can't see
+/// each other's faults.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn parse_rules(spec: &Json) -> Result<Vec<Rule>> {
+    let Json::Arr(items) = spec else { bail!("fault spec must be a JSON array of rules") };
+    let mut rules = Vec::new();
+    for item in items {
+        let Json::Obj(map) = item else { bail!("fault rule must be an object") };
+        let get = |k: &str| map.get(k);
+        let site = get("site")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("fault rule missing \"site\""))?
+            .to_string();
+        let action_s = get("action")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("fault rule missing \"action\""))?;
+        let action = FaultAction::parse(action_s)
+            .ok_or_else(|| anyhow!("bad fault action {action_s:?} (panic|error|delay|corrupt)"))?;
+        let nth = get("nth").and_then(|v| v.as_usize()).unwrap_or(1).max(1) as u64;
+        let count = get("count").and_then(|v| v.as_usize()).unwrap_or(1) as u64;
+        let delay_ms = get("delay_ms").and_then(|v| v.as_usize()).unwrap_or(50) as u64;
+        rules.push(Rule { site, action, nth, count, delay_ms });
+    }
+    Ok(rules)
+}
+
+/// Parse a spec string: inline JSON (starts with `[`) or a file path.
+pub fn parse_spec(spec: &str) -> Result<Json> {
+    let text = spec.trim();
+    if text.starts_with('[') {
+        Json::parse(text).map_err(|e| anyhow!("bad fault spec: {e}"))
+    } else {
+        let body = std::fs::read_to_string(text)
+            .map_err(|e| anyhow!("reading fault spec {text:?}: {e}"))?;
+        Json::parse(&body).map_err(|e| anyhow!("bad fault spec file {text:?}: {e}"))
+    }
+}
+
+/// Install a fault plan from a spec string (inline JSON or file path).
+/// Replaces any previous plan. Serving-path entry (`--fault-spec`):
+/// fires on every thread.
+pub fn install_spec(spec: &str) -> Result<()> {
+    install_rules(parse_rules(&parse_spec(spec)?)?, None);
+    Ok(())
+}
+
+fn install_rules(rules: Vec<Rule>, thread: Option<std::thread::ThreadId>) {
+    let n = rules.len();
+    *PLAN.lock().unwrap() = Some(Plan {
+        rules: rules.into_iter().map(|rule| RuleState { rule, hits: 0, fired: 0 }).collect(),
+        thread,
+    });
+    crate::warn!("fault injection armed: {n} rule(s)");
+}
+
+/// Unit-test entry: install a plan that fires **only on the calling
+/// thread**, and get a guard that clears it on drop. The thread scoping
+/// is what lets fault-installing unit tests run inside a parallel test
+/// binary without injecting faults into (or having their trigger budget
+/// consumed by) unrelated tests on sibling threads. The guard also holds
+/// the global fault lock, serializing installers against each other.
+pub fn install(spec: &str) -> Result<FaultGuard> {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    install_rules(parse_rules(&parse_spec(spec)?)?, Some(std::thread::current().id()));
+    Ok(FaultGuard { _lock: lock })
+}
+
+/// Chaos-test entry: like [`install`] but the plan fires on **every**
+/// thread — required when the faulted sites run on engine threads the
+/// test spawns. Callers must not run concurrently with tests that hit
+/// real fault sites; the chaos suite guarantees this by having every
+/// test take a guard (the shared lock serializes them) for its entire
+/// active phase.
+pub fn install_global(spec: &str) -> Result<FaultGuard> {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    install_spec(spec)?;
+    Ok(FaultGuard { _lock: lock })
+}
+
+/// Clears the installed plan on drop.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        *PLAN.lock().unwrap() = None;
+    }
+}
+
+/// Lazily pick up `KVQ_FAULT` once (env-only path for CI reruns of
+/// suites that never call [`install`]).
+fn env_install_once() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if let Ok(spec) = std::env::var("KVQ_FAULT") {
+            if !spec.trim().is_empty() {
+                if let Err(e) = install_spec(&spec) {
+                    crate::warn!("ignoring KVQ_FAULT: {e}");
+                }
+            }
+        }
+    });
+}
+
+/// True when any fault plan is armed.
+pub fn active() -> bool {
+    env_install_once();
+    PLAN.lock().unwrap().is_some()
+}
+
+/// Total faults injected so far (process-wide).
+pub fn injections() -> u64 {
+    INJECTIONS.load(Ordering::Relaxed)
+}
+
+fn fire(site: &str) -> Option<(FaultAction, u64)> {
+    env_install_once();
+    let mut plan = PLAN.lock().unwrap();
+    let plan = plan.as_mut()?;
+    if let Some(tid) = plan.thread {
+        if std::thread::current().id() != tid {
+            return None;
+        }
+    }
+    for st in &mut plan.rules {
+        if st.rule.site == site {
+            if let Some(action) = st.on_hit() {
+                return Some((action, st.rule.delay_ms));
+            }
+        }
+    }
+    None
+}
+
+/// Hit a named site. May sleep (`delay`), return a typed error
+/// (`error`), or panic (`panic` — the shard-supervisor path). `corrupt`
+/// rules are ignored here; they only fire at [`corrupt`] call sites.
+pub fn hit(site: &str) -> Result<()> {
+    let Some((action, delay_ms)) = fire(site) else { return Ok(()) };
+    match action {
+        FaultAction::Panic => {
+            INJECTIONS.fetch_add(1, Ordering::Relaxed);
+            crate::warn!("fault injection: panic at {site}");
+            panic!("injected fault at {site}");
+        }
+        FaultAction::Error => {
+            INJECTIONS.fetch_add(1, Ordering::Relaxed);
+            crate::warn!("fault injection: error at {site}");
+            bail!("injected fault at {site}")
+        }
+        FaultAction::Delay => {
+            INJECTIONS.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+            Ok(())
+        }
+        // A corrupt rule at a hit-only site does nothing (and doesn't
+        // burn its trigger budget — on_hit already counted it, which is
+        // the documented semantics: counters are per-site-hit).
+        FaultAction::Corrupt => Ok(()),
+    }
+}
+
+/// Deterministically corrupt a byte buffer if a `corrupt` rule fires at
+/// this site. Flips a fixed bit pattern at positions derived from the
+/// buffer length — same buffer, same corruption, every run. Returns
+/// true when the buffer was mutated.
+pub fn corrupt(site: &str, bytes: &mut [u8]) -> bool {
+    let Some((action, _)) = fire(site) else { return false };
+    if action != FaultAction::Corrupt || bytes.is_empty() {
+        return false;
+    }
+    INJECTIONS.fetch_add(1, Ordering::Relaxed);
+    let n = bytes.len();
+    for k in 0..3usize {
+        let idx = (n / 2 + k * 7) % n;
+        bytes[idx] ^= 0xA5;
+    }
+    crate::warn!("fault injection: corrupted {n}-byte buffer at {site}");
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nth_and_count_gate_firing() {
+        let _g =
+            install(r#"[{"site":"t_site","action":"error","nth":2,"count":2}]"#).unwrap();
+        assert!(hit("t_site").is_ok(), "first hit is before nth");
+        assert!(hit("t_site").is_err(), "second hit fires");
+        assert!(hit("t_site").is_err(), "count=2: third hit fires too");
+        assert!(hit("t_site").is_ok(), "budget exhausted");
+        assert!(hit("other_site").is_ok(), "other sites unaffected");
+    }
+
+    #[test]
+    fn corrupt_is_deterministic_and_site_scoped() {
+        let _g = install(
+            r#"[{"site":"t_corrupt","action":"corrupt","nth":1,"count":0}]"#,
+        )
+        .unwrap();
+        let mut a = vec![0u8; 32];
+        let mut b = vec![0u8; 32];
+        assert!(corrupt("t_corrupt", &mut a));
+        assert!(corrupt("t_corrupt", &mut b));
+        assert_eq!(a, b, "same buffer shape corrupts identically");
+        assert_ne!(a, vec![0u8; 32], "bytes actually changed");
+        let mut c = vec![0u8; 32];
+        assert!(!corrupt("t_other", &mut c), "other sites untouched");
+        assert_eq!(c, vec![0u8; 32]);
+        // hit() never applies corrupt rules.
+        assert!(hit("t_corrupt").is_ok());
+    }
+
+    #[test]
+    fn guard_clears_plan_and_injections_count() {
+        let before = injections();
+        {
+            let _g = install(r#"[{"site":"t_gone","action":"error"}]"#).unwrap();
+            assert!(hit("t_gone").is_err());
+        }
+        assert!(hit("t_gone").is_ok(), "guard drop must clear the plan");
+        assert!(injections() > before, "injection counter advanced");
+    }
+
+    #[test]
+    fn test_install_is_thread_scoped() {
+        let _g = install(r#"[{"site":"t_scoped","action":"error","count":0}]"#).unwrap();
+        assert!(hit("t_scoped").is_err(), "installing thread fires");
+        let other = std::thread::spawn(|| hit("t_scoped").is_ok());
+        assert!(other.join().unwrap(), "sibling threads never see a test-scoped plan");
+        // install_global lifts the scoping (new guard replaces the plan).
+        drop(_g);
+        let _g = install_global(r#"[{"site":"t_scoped","action":"error","count":0}]"#).unwrap();
+        let other = std::thread::spawn(|| hit("t_scoped").is_err());
+        assert!(other.join().unwrap(), "global plans fire on any thread");
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        assert!(install(r#"{"site":"x"}"#).is_err(), "must be an array");
+        assert!(install(r#"[{"action":"panic"}]"#).is_err(), "site required");
+        assert!(install(r#"[{"site":"x","action":"meltdown"}]"#).is_err());
+        assert!(install("/nonexistent/fault.json").is_err(), "missing file errors");
+    }
+}

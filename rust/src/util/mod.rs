@@ -9,6 +9,7 @@
 //! [`crate::parallel`].
 
 pub mod args;
+pub mod fault;
 pub mod harness;
 pub mod json;
 pub mod log;

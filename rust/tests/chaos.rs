@@ -1,0 +1,500 @@
+//! Chaos suite: deterministic fault injection (`util::fault`) driven
+//! end-to-end through the serving stack. The contract under test:
+//!
+//! 1. **Zero lost streams.** Whatever dies — an engine thread panics, a
+//!    deadline expires, a client walks away, a cold-tier entry fails to
+//!    decompress — every submitted stream terminates with a typed
+//!    `FinishReason`. Nothing hangs (every collect in this file runs
+//!    under a hard timeout).
+//! 2. **Byte-identical re-drives.** Per-request determinism (engine
+//!    seed, prompt, sampling seed — never request ids or timing) means a
+//!    failed request replayed after recovery produces exactly the tokens
+//!    the uninjected run would have; a shard death costs latency, never
+//!    different bytes.
+//! 3. **Supervised recovery.** The router's supervisor respawns dead
+//!    shards and the fleet serves again, while healthy shards keep
+//!    serving throughout.
+//! 4. **Balanced accounting.** After cancellation churn the engine's
+//!    block-pool refcounts check out (`EngineHandle::check`) and depth
+//!    drains to zero.
+//!
+//! Every test installs its fault plan with `fault::install_global` and
+//! holds the returned guard for its whole active phase: the guard owns
+//! the global fault lock, so chaos tests serialize against each other
+//! (and against fault-using unit tests) even under parallel libtest.
+//! Rules are count-limited so post-injection phases run fault-free under
+//! the same guard. CI additionally runs this binary with
+//! `--test-threads=1`.
+
+use kvq::coordinator::admission::{AdmissionConfig, AdmissionMode};
+use kvq::coordinator::batcher::BatcherConfig;
+use kvq::coordinator::engine::{self, EngineConfig, ShardState};
+use kvq::coordinator::request::{EventRx, FinishReason, TokenEvent};
+use kvq::coordinator::router::{Affinity, RoutePolicy, Router, RouterConfig, SubmitOptions};
+use kvq::coordinator::EngineHandle;
+use kvq::kvcache::{PolicySpec, Precision};
+use kvq::model::runner::CpuBackend;
+use kvq::model::sample::SamplingParams;
+use kvq::model::weights::Weights;
+use kvq::model::{LmBackend, ModelSpec};
+use kvq::server::http::HttpRequest;
+use kvq::server::KvqService;
+use kvq::util::fault;
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+fn cpu_backend() -> anyhow::Result<Box<dyn LmBackend>> {
+    let spec = ModelSpec::test_tiny();
+    let w = Weights::synthetic(&spec, 7);
+    Ok(Box::new(CpuBackend::new(spec, w)) as Box<dyn LmBackend>)
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        quant_policy: PolicySpec::uniform(Precision::Int8),
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+/// Distinct, vocab-safe 8-token prompts (test-tiny vocab = 64;
+/// max_seq = 32, so max_new stays <= 24 everywhere in this file).
+fn mk_prompt(i: usize) -> Vec<i32> {
+    (0..8).map(|j| ((i as i32 + 3) * 7 + j) % 64).collect()
+}
+
+/// Submit through the router with options, panicking on rejection —
+/// chaos tests never expect saturation.
+fn go(router: &Router, prompt: &[i32], max_new: usize, opts: SubmitOptions) -> EventRx {
+    router.submit_with(prompt.to_vec(), max_new, SamplingParams::default(), opts).unwrap().1
+}
+
+/// Collect a stream under a hard timeout: a hang is a test failure, not
+/// a CI timeout. Dropped-without-Finished is a lost stream — also fatal.
+fn collect_timeout(rx: &EventRx, cap: Duration) -> (Vec<i32>, FinishReason) {
+    let deadline = Instant::now() + cap;
+    let mut tokens = Vec::new();
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(TokenEvent::First { token, .. }) => tokens.push(token),
+            Ok(TokenEvent::Token(t)) => tokens.push(t),
+            Ok(TokenEvent::Finished { reason, .. }) => return (tokens, reason),
+            Err(RecvTimeoutError::Timeout) => {
+                panic!("stream hung: no event within {cap:?} (lost-stream bug)")
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("stream dropped without a Finished event (lost-stream bug)")
+            }
+        }
+    }
+}
+
+/// A router over `n` supervised shards (identical seed-42 engines, so
+/// placement never changes tokens), with its supervisor thread running.
+fn supervised_fleet(n: usize) -> (Arc<Router>, std::thread::JoinHandle<()>) {
+    let mut router = Router::with_config(RouterConfig {
+        policy: RoutePolicy::LeastLoaded,
+        affinity: Affinity::None,
+        ..Default::default()
+    });
+    for i in 0..n {
+        router.add_supervised(
+            &format!("shard{i}"),
+            Box::new(|metrics, health| {
+                engine::spawn_with(engine_cfg(), || cpu_backend(), metrics, health)
+            }),
+        );
+    }
+    let router = Arc::new(router);
+    let sup = router.spawn_supervisor();
+    (router, sup)
+}
+
+fn shutdown_fleet(router: Arc<Router>, sup: std::thread::JoinHandle<()>) {
+    router.stop_supervisor();
+    sup.join().unwrap();
+    for (_, h) in router.shards() {
+        h.drain();
+    }
+}
+
+fn single_engine() -> (Router, EngineHandle, std::thread::JoinHandle<()>) {
+    let (h, join) = engine::spawn(engine_cfg(), || cpu_backend());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("e", h.clone());
+    (router, h, join)
+}
+
+fn default_opts() -> SubmitOptions {
+    SubmitOptions::default()
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole: shard death -> typed failures -> respawn -> identical re-drives
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_panic_fails_streams_typed_then_respawns_and_redrives_identically() {
+    // One-shot panic on the 4th decode wave across the fleet: whichever
+    // shard reaches it dies mid-trace with live and queued streams.
+    let spec = r#"[{"site":"decode_wave","action":"panic","nth":4,"count":1}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..9).map(mk_prompt).collect();
+    let max_new = 12;
+
+    let (router, sup) = supervised_fleet(3);
+    let mut streams = Vec::new();
+    for p in &prompts {
+        streams.push(go(&router, p, max_new, default_opts()));
+    }
+
+    // Zero hangs, zero lost streams: every submission terminates typed.
+    let mut failed: Vec<usize> = Vec::new();
+    let mut survived: Vec<(usize, Vec<i32>)> = Vec::new();
+    for (i, rx) in streams.iter().enumerate() {
+        let (tokens, reason) = collect_timeout(rx, Duration::from_secs(30));
+        match reason {
+            FinishReason::Length => survived.push((i, tokens)),
+            FinishReason::ShardFailed => failed.push(i),
+            other => panic!("stream {i}: want Length or ShardFailed, got {other:?}"),
+        }
+    }
+    assert!(!failed.is_empty(), "the injected panic must fail at least one stream");
+    assert!(!survived.is_empty(), "healthy shards must keep serving through the death");
+    let mut streams_failed = 0;
+    for (_, h) in router.shards() {
+        streams_failed += h.metrics.snapshot().streams_failed as usize;
+    }
+    assert_eq!(streams_failed, failed.len(), "failure accounting must balance");
+
+    // The supervisor respawns the dead shard and books the restart.
+    let t0 = Instant::now();
+    loop {
+        let states = router.shard_states();
+        let all_ok = states.iter().all(|(_, s, _)| *s == ShardState::Ok);
+        let restarts: u64 = states.iter().map(|(_, _, r)| r).sum();
+        if all_ok && restarts >= 1 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "supervisor must respawn the dead shard; states: {states:?}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(router.stats().shard_restarts >= 1);
+
+    // Reference bytes: the one-shot rule is exhausted, so a fresh
+    // uninjected engine (same seed) is the canonical run.
+    let (ref_router, ref_h, ref_join) = single_engine();
+    let mut reference = Vec::new();
+    for p in &prompts {
+        let rx = go(&ref_router, p, max_new, default_opts());
+        let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+        assert_eq!(reason, FinishReason::Length);
+        reference.push(tokens);
+    }
+    ref_h.drain();
+    ref_join.join().unwrap();
+
+    for (i, tokens) in &survived {
+        assert_eq!(tokens, &reference[*i], "surviving stream {i} must match uninjected run");
+    }
+
+    // Re-drive every failed stream through the healed fleet: determinism
+    // makes the replay byte-identical — the failure cost latency only.
+    for &i in &failed {
+        let rx = go(&router, &prompts[i], max_new, default_opts());
+        let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+        assert_eq!(reason, FinishReason::Length, "re-drive {i} must finish");
+        assert_eq!(tokens, reference[i], "re-drive {i} must be byte-identical");
+    }
+
+    // Every shard — including the respawned one — serves again.
+    for s in 0..3 {
+        let opts = SubmitOptions { shard: Some(s), ..Default::default() };
+        let rx = go(&router, &prompts[0], max_new, opts);
+        let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+        assert_eq!(reason, FinishReason::Length, "shard {s} must serve after recovery");
+        assert_eq!(tokens, reference[0]);
+    }
+    shutdown_fleet(router, sup);
+}
+
+// ---------------------------------------------------------------------------
+// Deadlines and client cancellation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn deadline_expires_as_typed_cancel_and_frees_state() {
+    // An 80ms injected prefill delay guarantees the 1ms deadline is long
+    // gone by the first post-prefill sweep, whichever path (expired in
+    // waiting, or cancelled mid-decode) catches it first.
+    let spec = r#"[{"site":"prefill","action":"delay","delay_ms":80,"nth":1,"count":1}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let (router, h, join) = single_engine();
+    let opts = SubmitOptions { deadline_ms: Some(1), ..Default::default() };
+    let rx = go(&router, &mk_prompt(0), 24, opts);
+    let (_, reason) = collect_timeout(&rx, Duration::from_secs(30));
+    assert_eq!(reason, FinishReason::DeadlineExceeded);
+
+    // The engine is healthy and balanced afterwards: a clean request
+    // (no deadline) runs to completion on the same shard.
+    let rx = go(&router, &mk_prompt(1), 8, default_opts());
+    let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+    assert_eq!(reason, FinishReason::Length);
+    assert_eq!(tokens.len(), 8);
+    h.check().expect("refcounts must balance after a deadline cancel");
+    h.drain();
+    join.join().unwrap();
+    assert_eq!(h.metrics.snapshot().deadline_cancels, 1);
+}
+
+#[test]
+fn client_drop_cancels_stream_and_frees_blocks() {
+    // Slowed waves keep the stream alive long enough to observe the
+    // cancel; the client receives its first token, then walks away.
+    let spec = r#"[{"site":"decode_wave","action":"delay","delay_ms":5,"nth":1,"count":0}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let (router, h, join) = single_engine();
+    let rx = go(&router, &mk_prompt(0), 16, default_opts());
+    match rx.recv_timeout(Duration::from_secs(30)) {
+        Ok(TokenEvent::First { .. }) => {}
+        other => panic!("expected a first token, got {other:?}"),
+    }
+    drop(rx);
+
+    let t0 = Instant::now();
+    while h.metrics.snapshot().client_cancels == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "engine must notice the dropped receiver and cancel"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.check().expect("refcounts must balance after a client cancel");
+    h.drain();
+    join.join().unwrap();
+    let m = h.metrics.snapshot();
+    assert_eq!(m.client_cancels, 1);
+    assert_eq!(m.running, 0);
+    assert_eq!(m.preempted, 0);
+}
+
+#[test]
+fn churned_cancellations_keep_refcounts_balanced() {
+    // Alternating deadline expiries and client drops under slowed waves:
+    // after the churn the pool must be fully reclaimed, refcounts
+    // consistent, and the shard still serving.
+    let spec = r#"[{"site":"decode_wave","action":"delay","delay_ms":5,"nth":1,"count":0}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let (router, h, join) = single_engine();
+    let mut held = Vec::new();
+    for i in 0..8 {
+        let opts = SubmitOptions {
+            deadline_ms: if i % 2 == 0 { Some(1) } else { None },
+            ..Default::default()
+        };
+        let rx = go(&router, &mk_prompt(i), 16, opts);
+        if i % 2 == 0 {
+            held.push(rx); // deadline path: collect the typed cancel
+        } else {
+            drop(rx); // client-drop path: server-side cancel
+        }
+    }
+    for rx in &held {
+        let (_, reason) = collect_timeout(rx, Duration::from_secs(30));
+        assert_eq!(reason, FinishReason::DeadlineExceeded);
+    }
+    let t0 = Instant::now();
+    while h.metrics.depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "depth must drain to zero");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    h.check().expect("refcounts must balance after cancellation churn");
+
+    let rx = go(&router, &mk_prompt(9), 8, default_opts());
+    let (_, reason) = collect_timeout(&rx, Duration::from_secs(30));
+    assert_eq!(reason, FinishReason::Length, "shard must still serve after churn");
+    h.drain();
+    join.join().unwrap();
+    let m = h.metrics.snapshot();
+    assert_eq!(m.deadline_cancels, 4);
+    assert!(m.client_cancels >= 1, "dropped receivers must be booked (got 0)");
+}
+
+// ---------------------------------------------------------------------------
+// Watchdog
+// ---------------------------------------------------------------------------
+
+#[test]
+fn watchdog_cancels_stalled_preempted_stream() {
+    // A 16-block pool fits exactly one full-length sequence. Two growing
+    // sequences collide: the loser is preempted and can never resume
+    // while the winner holds the blocks (its replay needs 12, at most 4
+    // are free). Slowed waves keep the winner running far past 2x the
+    // stall timeout, so the watchdog must cancel the parked stream typed
+    // instead of letting it wait forever.
+    let spec = r#"[{"site":"decode_wave","action":"delay","delay_ms":25,"nth":1,"count":0}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let cfg = EngineConfig {
+        num_blocks: Some(16),
+        stall_timeout_ms: 60,
+        batcher: BatcherConfig {
+            max_prefills_per_step: 2,
+            admission: AdmissionConfig {
+                mode: AdmissionMode::Optimistic,
+                max_running: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..engine_cfg()
+    };
+    let (h, join) = engine::spawn(cfg, || cpu_backend());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("w", h.clone());
+    let rx_a = go(&router, &mk_prompt(0), 20, default_opts());
+    let rx_b = go(&router, &mk_prompt(1), 20, default_opts());
+    let (ta, ra) = collect_timeout(&rx_a, Duration::from_secs(60));
+    let (tb, rb) = collect_timeout(&rx_b, Duration::from_secs(60));
+
+    let reasons = [ra.clone(), rb.clone()];
+    assert!(
+        reasons.contains(&FinishReason::Stalled),
+        "one stream must be watchdog-cancelled (got {ra:?} / {rb:?})"
+    );
+    assert!(
+        reasons.contains(&FinishReason::Length),
+        "the winner must finish normally (got {ra:?} / {rb:?})"
+    );
+    assert_eq!(ta.len().max(tb.len()), 20, "the winner streams every token");
+    h.check().expect("refcounts must balance after a stall cancel");
+    h.drain();
+    join.join().unwrap();
+    let m = h.metrics.snapshot();
+    assert_eq!(m.stall_cancels, 1);
+    assert!(m.preemptions >= 1, "the collision must preempt the loser");
+    assert_eq!(m.preempted, 0, "the cancel must remove the parked stream");
+}
+
+// ---------------------------------------------------------------------------
+// Cold-tier decompression failure through the serving path
+// ---------------------------------------------------------------------------
+
+/// CI tier-off / cache-off env jobs force the tier disabled; identity
+/// assertions still hold, tier-counter expectations are skipped.
+fn tier_forced_off() -> bool {
+    matches!(std::env::var("KVQ_COLD_TIER").as_deref(), Ok("off") | Ok("0"))
+        || std::env::var("KVQ_PREFIX_CACHE_BLOCKS").as_deref() == Ok("0")
+}
+
+#[test]
+fn tier_decompress_failure_falls_back_to_prefill_bit_identically() {
+    // Every cold-tier decompression fails (injected). Serving four
+    // prompts through a 16-block pool demotes the LRU prompt to the
+    // tier; resubmitting it promotes -> decompress fails typed -> the
+    // entry is dropped and the request re-prefills. The bytes must be
+    // exactly the first run's.
+    let spec = r#"[{"site":"tier_decompress","action":"error","nth":1,"count":0}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let cfg = EngineConfig {
+        num_blocks: Some(16),
+        prefix_cache_blocks: 64,
+        cold_tier_blocks: Some(64),
+        prefetch_depth: 0, // synchronous promotion: the fault path is deterministic
+        batcher: BatcherConfig {
+            max_prefills_per_step: 1,
+            admission: AdmissionConfig {
+                mode: AdmissionMode::Optimistic,
+                max_running: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..engine_cfg()
+    };
+    let (h, join) = engine::spawn(cfg, || cpu_backend());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("t", h.clone());
+
+    let prompts: Vec<Vec<i32>> = (0..4).map(mk_prompt).collect();
+    let mut first = Vec::new();
+    for p in &prompts {
+        let rx = go(&router, p, 8, default_opts());
+        let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+        assert_eq!(reason, FinishReason::Length);
+        first.push(tokens);
+    }
+
+    let rx = go(&router, &prompts[0], 8, default_opts());
+    let (tokens, reason) = collect_timeout(&rx, Duration::from_secs(30));
+    assert_eq!(reason, FinishReason::Length, "decompress failure must not fail the stream");
+    assert_eq!(tokens, first[0], "prefill fallback must be byte-identical");
+    h.check().expect("refcounts must balance after a dropped cold entry");
+    h.drain();
+    join.join().unwrap();
+    if !tier_forced_off() {
+        let m = h.metrics.snapshot();
+        assert!(
+            m.tier.decompress_errors >= 1,
+            "the resubmit must have promoted and failed (demotions={}, errors={})",
+            m.tier.demotions,
+            m.tier.decompress_errors
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Service layer: typed HTTP mapping of the new terminal reasons
+// ---------------------------------------------------------------------------
+
+fn post(svc: &KvqService, path: &str, body: &str) -> (u16, String) {
+    let resp = svc.handle(HttpRequest {
+        method: "POST".into(),
+        path: path.into(),
+        headers: Default::default(),
+        body: body.as_bytes().to_vec(),
+    });
+    (resp.status, String::from_utf8(resp.body).unwrap())
+}
+
+#[test]
+fn service_maps_deadline_expiry_to_408() {
+    let spec = r#"[{"site":"prefill","action":"delay","delay_ms":80,"nth":1,"count":1}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let (h, join) = engine::spawn(engine_cfg(), || cpu_backend());
+    let mut router = Router::with_config(RouterConfig {
+        default_deadline_ms: 1, // every request inherits a 1ms deadline
+        ..Default::default()
+    });
+    router.add_engine("d", h.clone());
+    let svc = KvqService::new(Arc::new(router));
+    let (status, body) = post(&svc, "/generate", r#"{"prompt":"hello","max_new_tokens":16}"#);
+    assert_eq!(status, 408, "expired deadline must map to 408 (body: {body})");
+    assert!(body.contains("deadline_exceeded"), "typed code expected, got: {body}");
+    h.drain();
+    join.join().unwrap();
+}
+
+#[test]
+fn service_maps_shard_death_to_503_with_retry_hint() {
+    let spec = r#"[{"site":"prefill","action":"panic","nth":1,"count":1}]"#;
+    let _guard = fault::install_global(spec).unwrap();
+    let (h, join) = engine::spawn(engine_cfg(), || cpu_backend());
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("s", h.clone());
+    let svc = KvqService::new(Arc::new(router));
+    let (status, body) = post(&svc, "/generate", r#"{"prompt":"hello","max_new_tokens":8}"#);
+    assert_eq!(status, 503, "a mid-request shard death must map to 503 (body: {body})");
+    assert!(body.contains("shard_failed"), "typed code expected, got: {body}");
+    assert!(body.contains("retry_after_ms"), "retry hint expected, got: {body}");
+    join.join().unwrap(); // the engine thread exited through its panic recovery
+    drop(h);
+}

@@ -140,6 +140,35 @@ fn opts(session: &str) -> SubmitOptions {
 }
 
 // ---------------------------------------------------------------------------
+// Fault warmup (must sort alphabetically first).
+// ---------------------------------------------------------------------------
+
+/// Runs first (libtest executes tests in name order; CI passes
+/// `--test-threads=1` for fault reruns). When CI re-runs this binary with
+/// `KVQ_FAULT` injecting a one-shot shard panic (`count: 1`), this test
+/// absorbs the fault — proving the stream still terminates typed — and
+/// the rest of the suite then runs on clean engines, keeping its
+/// deterministic assertions intact. Without `KVQ_FAULT` it is a plain
+/// smoke test.
+#[test]
+fn a_fault_warmup_absorbs_injected_shard_panic() {
+    let (h, j) = spawn_shard(None);
+    let mut router = Router::new(RoutePolicy::RoundRobin);
+    router.add_engine("warmup", h.clone());
+    let (_, rx) = router.submit(vec![1, 2, 3], 2, SamplingParams::default()).unwrap();
+    let (_, reason, ..) = collect_response(&rx);
+    assert!(
+        matches!(
+            reason,
+            FinishReason::Length | FinishReason::ShardFailed | FinishReason::Error(_)
+        ),
+        "stream must terminate typed, got {reason:?}"
+    );
+    h.drain();
+    let _ = j.join();
+}
+
+// ---------------------------------------------------------------------------
 // Affinity stickiness.
 // ---------------------------------------------------------------------------
 
@@ -152,6 +181,7 @@ fn session_affinity_pins_sessions_to_their_home_shard() {
         affinity: Affinity::Session,
         queue_depth: 0, // unbounded: home shard always wins
         overflow_depth: 4,
+        default_deadline_ms: 0,
     });
     router.add_engine("shard0", h0.clone());
     router.add_engine("shard1", h1.clone());
@@ -196,6 +226,7 @@ fn saturated_home_shard_spills_to_least_loaded() {
         affinity: Affinity::Session,
         queue_depth: 1,
         overflow_depth: 4,
+        default_deadline_ms: 0,
     });
     router.add_engine("shard0", h0.clone());
     router.add_engine("shard1", h1.clone());
@@ -240,6 +271,7 @@ fn full_queues_reject_typed_and_parked_requests_still_finish() {
         affinity: Affinity::Session,
         queue_depth: 1,
         overflow_depth: 1,
+        default_deadline_ms: 0,
     });
     router.add_engine("shard0", h0.clone());
     router.add_engine("shard1", h1.clone());
@@ -294,6 +326,7 @@ fn pump_shutdown_rejects_parked_streams_instead_of_leaking() {
         affinity: Affinity::Session,
         queue_depth: 1,
         overflow_depth: 4,
+        default_deadline_ms: 0,
     });
     router.add_engine("shard0", h0.clone());
     let router = Arc::new(router);
@@ -335,6 +368,7 @@ fn run_trace(trace: &Trace, shards: usize) -> Vec<Vec<i32>> {
         affinity: Affinity::Session,
         queue_depth: 0, // pure affinity placement, no load dependence
         overflow_depth: 4,
+        default_deadline_ms: 0,
     });
     let mut handles = Vec::new();
     let mut joins = Vec::new();

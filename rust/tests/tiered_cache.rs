@@ -76,6 +76,51 @@ fn tiny_cache_cfg(spec: &ModelSpec) -> CacheConfig {
     }
 }
 
+/// Runs first (libtest executes tests alphabetically): when CI reruns
+/// this binary with a `KVQ_FAULT` tier_decompress error rule, this test
+/// deterministically absorbs the one-shot fault so the bit-identity
+/// tests below see a clean tier. Either branch is a pass: with the
+/// fault armed the corrupted entry must be dropped typed (never served,
+/// never panicking); without it the round-trip must succeed.
+#[test]
+fn a_fault_warmup_absorbs_injected_decompress_error() {
+    let spec = ModelSpec::test_tiny();
+    let mdl = CpuModel::new(spec.clone(), Weights::synthetic(&spec, 0xAB5));
+    let cfg = tiny_cache_cfg(&spec);
+    let policy = PolicySpec::uniform(Precision::Int8)
+        .resolve(spec.layers, spec.heads, spec.head_dim)
+        .unwrap();
+    let mut mgr = KvCacheManager::new(cfg, policy);
+    let mut pc = PrefixCache::new(64);
+    let mut tier = ColdTier::new(256, 0); // 0 = no thread: promotion is synchronous
+    let ctx = 8usize;
+    let prompt: Vec<i32> = (0..ctx as i32).map(|j| (j * 5 + 11) % 64).collect();
+
+    let pre = mdl.prefill(&prompt, ctx);
+    let seq = mgr.new_sequence();
+    mgr.set_prefill(seq, &pre.k, &pre.v, ctx).unwrap();
+    pc.insert(&mut mgr, seq, &prompt, &pre.logits);
+    mgr.free(seq);
+    assert!(tier.demote_for(&mut pc, &mut mgr, u64::MAX) > 0, "entry must demote");
+
+    match tier.promote(&mut mgr, &prompt) {
+        Some((back, _logits)) => {
+            // No fault armed: normal round-trip; promotion consumed the entry.
+            assert!(!tier.contains(&prompt));
+            mgr.free(back);
+        }
+        None => {
+            // Injected decompress failure: the entry must be dropped
+            // typed, never retried, never served corrupted.
+            assert!(!tier.contains(&prompt), "failed entry must be dropped, not retried");
+            assert!(
+                tier.stats().decompress_errors >= 1,
+                "a refused promotion must book a decompress error"
+            );
+        }
+    }
+}
+
 #[test]
 fn demote_promote_is_bit_identical_across_variants_and_isas() {
     let spec = ModelSpec::test_tiny();
